@@ -1,0 +1,52 @@
+//! Ablation: collapse strategy accuracy — UDDSketch's uniform collapse
+//! (§3.2) vs DDSketch's collapse-first-two (§3.1) at equal budgets.
+//!
+//! This regenerates the paper's core qualitative claim (UDDSketch is
+//! α-accurate over the whole (0,1) range, DDSketch only near q=1) as a
+//! measured table, plus the wall-clock cost of each strategy.
+
+use duddsketch::metrics::relative_error;
+use duddsketch::rng::{default_rng, Rng};
+use duddsketch::sketch::{DdSketch, ExactQuantiles, UddSketch};
+use duddsketch::util::bench::{black_box, Bencher};
+
+fn main() {
+    let mut b = Bencher::new();
+    let mut r = default_rng(21);
+    // Eight decades -> heavy collapsing at m=128.
+    let data: Vec<f64> = (0..500_000)
+        .map(|_| 10f64.powf(r.next_f64() * 8.0 - 2.0))
+        .collect();
+    let exact = ExactQuantiles::new(&data);
+
+    let mut udd: UddSketch = UddSketch::new(0.01, 128).unwrap();
+    let mut dd: DdSketch = DdSketch::new(0.01, 128).unwrap();
+    udd.extend(&data);
+    dd.extend(&data);
+
+    println!("accuracy at equal budget (m=128, alpha=0.01, 8-decade input):");
+    println!("  q      udd rel.err    dd rel.err");
+    for q in [0.01, 0.1, 0.25, 0.5, 0.75, 0.9, 0.99] {
+        let tru = exact.quantile(q).unwrap();
+        let ue = relative_error(udd.quantile(q).unwrap(), tru);
+        let de = relative_error(dd.quantile(q).unwrap(), tru);
+        println!("  {q:<5}  {ue:<12.4e}  {de:<12.4e}");
+    }
+    println!(
+        "  (udd final alpha: {:.4}; dd keeps alpha {:.4} but only near q=1)\n",
+        udd.alpha(),
+        dd.alpha()
+    );
+
+    b.case("udd build 500k (uniform collapse)", 500_000, || {
+        let mut s: UddSketch = UddSketch::new(0.01, 128).unwrap();
+        s.extend(&data);
+        black_box(s.count());
+    });
+    b.case("dd build 500k (first-two collapse)", 500_000, || {
+        let mut s: DdSketch = DdSketch::new(0.01, 128).unwrap();
+        s.extend(&data);
+        black_box(s.count());
+    });
+    b.finish("ablation_collapse");
+}

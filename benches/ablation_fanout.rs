@@ -1,0 +1,64 @@
+//! Ablation: fan-out (§4 — "each peer the option to gossip with a
+//! user-defined number of neighbours"). Measures rounds-to-convergence
+//! and per-round cost for fan-out ∈ {1, 2, 4}.
+
+use duddsketch::config::ExperimentConfig;
+use duddsketch::data::DatasetKind;
+use duddsketch::experiments::run_with_snapshots;
+use duddsketch::util::bench::Bencher;
+
+fn main() {
+    let mut b = Bencher::new();
+
+    println!("convergence vs fan-out (adversarial input, P=300):");
+    println!("  fan-out | worst ARE @R5 | @R10 | @R15 | wall");
+    for fan_out in [1usize, 2, 4] {
+        let mut cfg = ExperimentConfig::default();
+        cfg.dataset = DatasetKind::Adversarial;
+        cfg.peers = 300;
+        cfg.items_per_peer = 500;
+        cfg.fan_out = fan_out;
+        let out = run_with_snapshots(&cfg, &[5, 10, 15]).unwrap();
+        let worst = |i: usize| -> f64 {
+            out.snapshots[i]
+                .quantiles
+                .iter()
+                .map(|q| q.are)
+                .fold(0.0f64, f64::max)
+        };
+        println!(
+            "  {:<7} | {:<13.3e} | {:<8.1e} | {:<8.1e} | {:.2}s",
+            fan_out,
+            worst(0),
+            worst(1),
+            worst(2),
+            out.wall_s
+        );
+    }
+    println!();
+
+    for fan_out in [1usize, 2, 4] {
+        let mut cfg = ExperimentConfig::default();
+        cfg.dataset = DatasetKind::Uniform;
+        cfg.peers = 512;
+        cfg.items_per_peer = 200;
+        cfg.fan_out = fan_out;
+        let master = duddsketch::rng::default_rng(cfg.seed);
+        let datasets = duddsketch::data::all_peer_datasets(
+            cfg.dataset,
+            cfg.peers,
+            cfg.items_per_peer,
+            &master,
+        );
+        let mut grng = master.derive(0x6EA4);
+        let graph = duddsketch::graph::paper_ba(cfg.peers, &mut grng);
+        let mut proto =
+            duddsketch::gossip::Protocol::new(&cfg, graph, &datasets, &master).unwrap();
+        b.case(
+            &format!("round cost fan-out={fan_out} P=512"),
+            cfg.peers as u64,
+            || proto.run(1),
+        );
+    }
+    b.finish("ablation_fanout");
+}

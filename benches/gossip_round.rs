@@ -1,0 +1,66 @@
+//! Whole-network round cost: sequential vs matched mode, native vs PJRT
+//! executor (the Layer-1/2 artifact on the request path), across network
+//! sizes — the simulator's end-to-end hot loop.
+
+use duddsketch::config::{ExecutorKind, ExperimentConfig};
+use duddsketch::data::{all_peer_datasets, DatasetKind};
+use duddsketch::gossip::{Protocol, RoundMode};
+use duddsketch::graph::paper_ba;
+use duddsketch::rng::default_rng;
+use duddsketch::util::bench::Bencher;
+
+fn proto(peers: usize, executor: ExecutorKind, mode: RoundMode) -> Option<Protocol> {
+    let mut cfg = ExperimentConfig::default();
+    cfg.peers = peers;
+    cfg.items_per_peer = 200;
+    cfg.dataset = DatasetKind::Uniform;
+    cfg.alpha = 0.01;
+    cfg.max_buckets = 128;
+    cfg.executor = executor;
+    let master = default_rng(42);
+    let datasets = all_peer_datasets(cfg.dataset, peers, cfg.items_per_peer, &master);
+    let mut grng = master.derive(0x6EA4);
+    let graph = paper_ba(peers, &mut grng);
+    match Protocol::new(&cfg, graph, &datasets, &master) {
+        Ok(mut p) => {
+            p.set_mode(mode);
+            Some(p)
+        }
+        Err(e) => {
+            eprintln!("skipping {executor:?} (peers={peers}): {e:#}");
+            None
+        }
+    }
+}
+
+fn main() {
+    let mut b = Bencher::new();
+
+    for peers in [256usize, 1024, 4096] {
+        if let Some(mut p) = proto(peers, ExecutorKind::Native, RoundMode::Sequential) {
+            b.case(
+                &format!("round/sequential/native P={peers}"),
+                peers as u64,
+                || p.run(1),
+            );
+        }
+        if let Some(mut p) = proto(peers, ExecutorKind::Native, RoundMode::Matched) {
+            b.case(
+                &format!("round/matched/native P={peers}"),
+                peers as u64,
+                || p.run(1),
+            );
+        }
+    }
+    // PJRT path: only shapes with artifacts (see python/compile/aot.py).
+    for peers in [256usize, 1024] {
+        if let Some(mut p) = proto(peers, ExecutorKind::Pjrt, RoundMode::Matched) {
+            b.case(
+                &format!("round/matched/pjrt P={peers}"),
+                peers as u64,
+                || p.run(1),
+            );
+        }
+    }
+    b.finish("gossip_round");
+}

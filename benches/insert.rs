@@ -1,0 +1,60 @@
+//! Insert-path throughput: the L3 ingestion hot loop.
+//!
+//! Paper context: the streaming model requires O(1) worst-case per-item
+//! processing (§1); this bench verifies the constant is small. Ablation:
+//! dense vs sparse store, UDDSketch vs DDSketch baseline, collapse-heavy
+//! vs collapse-free inputs.
+
+use duddsketch::rng::{default_rng, Rng};
+use duddsketch::sketch::{DdSketch, DenseStore, SparseStore, UddSketch};
+use duddsketch::util::bench::{black_box, Bencher};
+
+const N: usize = 1_000_000;
+
+fn narrow_data() -> Vec<f64> {
+    // Two decades: no collapses at m=1024.
+    let mut r = default_rng(1);
+    (0..N).map(|_| 1.0 + 99.0 * r.next_f64()).collect()
+}
+
+fn wide_data() -> Vec<f64> {
+    // Nine decades: forces collapses at m=1024, alpha=0.001.
+    let mut r = default_rng(2);
+    (0..N).map(|_| 10f64.powf(r.next_f64() * 9.0 - 3.0)).collect()
+}
+
+fn main() {
+    let mut b = Bencher::new();
+    let narrow = narrow_data();
+    let wide = wide_data();
+
+    b.case("udd/dense/narrow 1M inserts", N as u64, || {
+        let mut s: UddSketch<DenseStore> = UddSketch::new(0.001, 1024).unwrap();
+        s.extend(&narrow);
+        black_box(s.count());
+    });
+    b.case("udd/dense/wide 1M inserts (collapsing)", N as u64, || {
+        let mut s: UddSketch<DenseStore> = UddSketch::new(0.001, 1024).unwrap();
+        s.extend(&wide);
+        black_box(s.count());
+    });
+    b.case("udd/sparse/narrow 1M inserts", N as u64, || {
+        let mut s: UddSketch<SparseStore> = UddSketch::new(0.001, 1024).unwrap();
+        s.extend(&narrow);
+        black_box(s.count());
+    });
+    b.case("dd/dense/narrow 1M inserts (baseline)", N as u64, || {
+        let mut s: DdSketch<DenseStore> = DdSketch::new(0.001, 1024).unwrap();
+        s.extend(&narrow);
+        black_box(s.count());
+    });
+    b.case("udd/dense/narrow insert+delete 1M", 2 * N as u64, || {
+        let mut s: UddSketch<DenseStore> = UddSketch::new(0.001, 1024).unwrap();
+        s.extend(&narrow);
+        for &x in &narrow {
+            s.delete(x);
+        }
+        black_box(s.count());
+    });
+    b.finish("insert");
+}

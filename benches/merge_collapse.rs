@@ -1,0 +1,66 @@
+//! Merge and collapse costs: the per-exchange work of the gossip protocol
+//! (Algorithm 5) — the simulator's O(1)-per-round assumption (§4) holds
+//! when this is independent of the stream length, which the bench shows.
+
+use duddsketch::gossip::PeerState;
+use duddsketch::rng::{default_rng, Rng};
+use duddsketch::sketch::{SparseStore, Store, UddSketch};
+use duddsketch::util::bench::{black_box, Bencher};
+
+fn peer(seed: u64, items: usize, decades: f64) -> PeerState {
+    let mut r = default_rng(seed);
+    let data: Vec<f64> = (0..items)
+        .map(|_| 10f64.powf(r.next_f64() * decades))
+        .collect();
+    PeerState::init(seed as usize, &data, 0.001, 1024).unwrap()
+}
+
+fn main() {
+    let mut b = Bencher::new();
+
+    // Per-exchange cost is independent of stream length (sketch-size
+    // bound): same bucket budget, 100x the items.
+    for items in [1_000usize, 100_000] {
+        let a = peer(1, items, 3.0);
+        let c = peer(2, items, 3.0);
+        b.case(
+            &format!("gossip exchange (UPDATE) items/peer={items}"),
+            1,
+            || {
+                black_box(PeerState::averaged(&a, &c).unwrap());
+            },
+        );
+    }
+
+    // Merge with collapse-depth alignment (worst case: disjoint ranges).
+    let lo = peer(3, 10_000, 2.0);
+    let hi = {
+        let mut r = default_rng(4);
+        let data: Vec<f64> = (0..10_000)
+            .map(|_| 1e6 * 10f64.powf(r.next_f64() * 2.0))
+            .collect();
+        PeerState::init(4, &data, 0.001, 1024).unwrap()
+    };
+    b.case("merge disjoint ranges (align+collapse)", 1, || {
+        let mut s = lo.sketch.clone();
+        s.merge_weighted(&hi.sketch, 0.5, 0.5).unwrap();
+        black_box(s.bucket_count());
+    });
+
+    // Pure uniform collapse on a full sparse store.
+    let full = {
+        let mut s: UddSketch<SparseStore> = UddSketch::new(0.001, usize::MAX >> 1).unwrap();
+        let mut r = default_rng(5);
+        for _ in 0..100_000 {
+            s.insert(10f64.powf(r.next_f64() * 6.0));
+        }
+        s
+    };
+    b.case("uniform collapse (sparse, ~7k buckets)", 1, || {
+        let mut s = full.clone();
+        s.force_collapse();
+        black_box(s.positive_store().nonzero());
+    });
+
+    b.finish("merge_collapse");
+}

@@ -1,0 +1,41 @@
+//! Quantile-query latency: sequential sketch queries and the distributed
+//! Algorithm-6 reconstruction.
+
+use duddsketch::data::{peer_dataset, DatasetKind};
+use duddsketch::gossip::PeerState;
+use duddsketch::rng::default_rng;
+use duddsketch::sketch::{ExactQuantiles, UddSketch};
+use duddsketch::util::bench::{black_box, Bencher};
+
+fn main() {
+    let mut b = Bencher::new();
+    let master = default_rng(9);
+    let data = peer_dataset(DatasetKind::Power, 0, 500_000, &master);
+
+    let mut sketch: UddSketch = UddSketch::new(0.001, 1024).unwrap();
+    sketch.extend(&data);
+    let qs: Vec<f64> = (1..100).map(|i| i as f64 / 100.0).collect();
+
+    b.case("sequential quantile x99", 99, || {
+        for &q in &qs {
+            black_box(sketch.quantile(q).unwrap());
+        }
+    });
+
+    let mut state = PeerState::init(0, &data, 0.001, 1024).unwrap();
+    state.q_tilde = 1.0 / 1000.0; // converged 1000-peer network
+    b.case("algorithm-6 distributed query x99", 99, || {
+        for &q in &qs {
+            black_box(state.query(q).unwrap());
+        }
+    });
+
+    let exact = ExactQuantiles::new(&data);
+    b.case("exact oracle quantile x99 (500k sorted)", 99, || {
+        for &q in &qs {
+            black_box(exact.quantile(q).unwrap());
+        }
+    });
+
+    b.finish("query");
+}

@@ -1,0 +1,128 @@
+//! END-TO-END DRIVER (EXPERIMENTS.md §E2E): exercises the full three-layer
+//! stack on a real small workload and reports the paper's headline metric.
+//!
+//! Pipeline:
+//!   1. generate the paper's four synthetic workloads + the power dataset
+//!      (Table 1 / §7.3) across a 1000-peer Barabási–Albert overlay;
+//!   2. build per-peer UDDSketch summaries (Layer-3 Rust hot path);
+//!   3. run the gossip protocol — natively, and where artifacts are
+//!      available also through the AOT-compiled JAX/Pallas `avg_pairs`
+//!      artifact on the PJRT CPU client (Layers 1+2, `make artifacts`);
+//!   4. answer the Table-2 quantile set from an arbitrary peer and report
+//!      relative error vs the sequential algorithm — the paper's headline
+//!      "distributed == sequential" claim — plus wall-clock and round
+//!      telemetry.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example e2e_distributed
+//! ```
+
+use duddsketch::config::{ExecutorKind, ExperimentConfig, PAPER_QUANTILES};
+use duddsketch::data::{all_peer_datasets, DatasetKind};
+use duddsketch::experiments::run_with_snapshots;
+use duddsketch::gossip::{PjrtExecutor, Protocol, RoundMode};
+use duddsketch::graph::paper_ba;
+use duddsketch::metrics::relative_error;
+use duddsketch::rng::default_rng;
+use duddsketch::sketch::UddSketch;
+use duddsketch::util::Stopwatch;
+
+fn main() -> anyhow::Result<()> {
+    println!("=== DUDDSketch end-to-end driver ===\n");
+
+    // ---- full protocol over every workload (native executor) ----------
+    let mut grand_worst: f64 = 0.0;
+    for dataset in [
+        DatasetKind::Adversarial,
+        DatasetKind::Uniform,
+        DatasetKind::Exponential,
+        DatasetKind::Normal,
+        DatasetKind::Power,
+    ] {
+        let mut cfg = ExperimentConfig::default();
+        cfg.dataset = dataset;
+        cfg.peers = 1000;
+        cfg.items_per_peer = 2_000;
+        cfg.rounds = 25;
+        let sw = Stopwatch::start();
+        let out = run_with_snapshots(&cfg, &[5, 10, 15, 20, 25])?;
+        let wall = sw.secs();
+        print!("{:<12}", dataset.name());
+        for snap in &out.snapshots {
+            let worst = snap
+                .quantiles
+                .iter()
+                .map(|q| q.are)
+                .fold(0.0f64, f64::max);
+            print!(" R{:<2}:{:<9.2e}", snap.rounds, worst);
+        }
+        let final_worst = out
+            .snapshots
+            .last()
+            .unwrap()
+            .quantiles
+            .iter()
+            .map(|q| q.are)
+            .fold(0.0f64, f64::max);
+        grand_worst = grand_worst.max(final_worst);
+        println!("  [{wall:.1}s total]");
+    }
+    println!(
+        "\nheadline: worst ARE across all workloads/quantiles at R=25: {grand_worst:.2e}"
+    );
+    println!("(paper: relative errors 'go to zero' by 15–25 rounds — Figs. 1–4, 11)");
+
+    // ---- PJRT-accelerated round (Layers 1+2 on the request path) ------
+    println!("\n--- PJRT executor (AOT JAX/Pallas artifact) ---");
+    match PjrtExecutor::discover(1000) {
+        Err(e) => println!("artifacts not available ({e:#}); skipping PJRT leg"),
+        Ok(_) => {
+            let mut cfg = ExperimentConfig::default();
+            cfg.dataset = DatasetKind::Uniform;
+            cfg.peers = 1000;
+            cfg.items_per_peer = 1_000;
+            cfg.executor = ExecutorKind::Pjrt;
+            let master = default_rng(cfg.seed);
+            let datasets =
+                all_peer_datasets(cfg.dataset, cfg.peers, cfg.items_per_peer, &master);
+            let mut seq: UddSketch =
+                UddSketch::new(cfg.alpha, cfg.max_buckets).map_err(anyhow::Error::msg)?;
+            for d in &datasets {
+                seq.extend(d);
+            }
+            let mut grng = master.derive(0x6EA4);
+            let graph = paper_ba(cfg.peers, &mut grng);
+
+            let sw = Stopwatch::start();
+            let mut proto = Protocol::new(&cfg, graph.clone(), &datasets, &master)?;
+            proto.run(60); // matched mode needs more rounds than sequential
+            let pjrt_wall = sw.secs();
+
+            let mut cfg_native = cfg.clone();
+            cfg_native.executor = ExecutorKind::Native;
+            let sw = Stopwatch::start();
+            let mut native = Protocol::new(&cfg_native, graph, &datasets, &master)?;
+            native.set_mode(RoundMode::Matched);
+            native.run(60);
+            let native_wall = sw.secs();
+
+            let mut worst: f64 = 0.0;
+            for &q in PAPER_QUANTILES.iter() {
+                let truth = seq.quantile(q).map_err(anyhow::Error::msg)?;
+                let est = proto.states()[123].query(q).map_err(anyhow::Error::msg)?;
+                worst = worst.max(relative_error(est, truth));
+            }
+            println!(
+                "pjrt 60 matched rounds: {pjrt_wall:.2}s | native same: {native_wall:.2}s | worst RE vs sequential: {worst:.2e}"
+            );
+            let h = proto.history().last().unwrap();
+            println!(
+                "last round: {} exchanges, {} online (P={})",
+                h.exchanges, h.online, cfg.peers
+            );
+        }
+    }
+
+    println!("\nE2E driver complete.");
+    Ok(())
+}

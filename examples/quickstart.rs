@@ -1,0 +1,69 @@
+//! Quickstart: the sequential UDDSketch API in two minutes.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use duddsketch::rng::{default_rng, Rng};
+use duddsketch::sketch::{ExactQuantiles, UddSketch};
+
+fn main() -> anyhow::Result<()> {
+    // 1. Create a sketch: 0.1% relative value error, at most 1024 buckets.
+    let mut sketch: UddSketch = UddSketch::new(0.001, 1024).map_err(anyhow::Error::msg)?;
+
+    // 2. Stream data through it — here one million log-uniform values
+    //    spanning five decades, the kind of heavy-tailed input where
+    //    rank-error sketches lose relative accuracy.
+    let mut rng = default_rng(7);
+    let data: Vec<f64> = (0..1_000_000)
+        .map(|_| 10f64.powf(rng.next_f64() * 5.0 - 1.0))
+        .collect();
+    sketch.extend(&data);
+    println!(
+        "ingested {} values -> {} buckets, {} collapses, alpha = {:.5}",
+        data.len(),
+        sketch.bucket_count(),
+        sketch.collapses(),
+        sketch.alpha()
+    );
+
+    // 3. Query any quantile; compare against the exact oracle.
+    let exact = ExactQuantiles::new(&data);
+    println!("\n  q      estimate        exact           rel.err");
+    for q in [0.01, 0.25, 0.5, 0.75, 0.95, 0.99, 0.999] {
+        let est = sketch.quantile(q).map_err(anyhow::Error::msg)?;
+        let tru = exact.quantile(q).map_err(anyhow::Error::msg)?;
+        println!(
+            "  {:<5}  {:<14.6e}  {:<14.6e}  {:.2e}",
+            q,
+            est,
+            tru,
+            (est - tru).abs() / tru
+        );
+    }
+
+    // 4. Sketches merge losslessly (Definition 7) — the property the whole
+    //    distributed protocol rests on.
+    let (left, right) = data.split_at(data.len() / 2);
+    let mut a: UddSketch = UddSketch::new(0.001, 1024).map_err(anyhow::Error::msg)?;
+    let mut b: UddSketch = UddSketch::new(0.001, 1024).map_err(anyhow::Error::msg)?;
+    a.extend(left);
+    b.extend(right);
+    a.merge(&b).map_err(anyhow::Error::msg)?;
+    let merged_p99 = a.quantile(0.99).map_err(anyhow::Error::msg)?;
+    let direct_p99 = sketch.quantile(0.99).map_err(anyhow::Error::msg)?;
+    println!("\nmerge(S(D1), S(D2)) p99 = {merged_p99:.6e} == S(D1 u D2) p99 = {direct_p99:.6e}");
+    assert_eq!(merged_p99, direct_p99);
+
+    // 5. Deletions work too (turnstile model).
+    let mut t: UddSketch = UddSketch::new(0.01, 256).map_err(anyhow::Error::msg)?;
+    for x in [10.0, 20.0, 30.0] {
+        t.insert(x);
+    }
+    t.delete(30.0);
+    println!(
+        "turnstile: after insert {{10,20,30}} / delete {{30}}: median = {:.3}",
+        t.quantile(0.5).map_err(anyhow::Error::msg)?
+    );
+    Ok(())
+}

@@ -1,0 +1,75 @@
+"""AOT compilation: lower the Layer-2 entry points to HLO text artifacts.
+
+HLO *text* (not a serialized ``HloModuleProto``) is the interchange
+format: jax >= 0.5 emits protos with 64-bit instruction ids which the
+`xla` crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the
+text parser reassigns ids, so text round-trips cleanly (see
+/opt/xla-example/README.md and gen_hlo.py there).
+
+Usage::
+
+    python -m compile.aot --out-dir ../artifacts
+
+Shapes are static in XLA, so a small ladder of network sizes is emitted;
+the Rust `PjrtExecutor` picks the smallest artifact fitting the configured
+network and pads idle rows.
+"""
+
+import argparse
+import pathlib
+
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+# (peers, bucket-window) ladder for the averaging round.
+AVG_PAIRS_SHAPES = [(64, 128), (256, 512), (1024, 1024)]
+# (batch, window) for bulk ingestion.
+BUCKETIZE_SHAPES = [(4096, 512)]
+# window widths for the collapse step.
+COLLAPSE_WIDTHS = [512]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def emit(out_dir: pathlib.Path) -> list:
+    """Lower and write every artifact; returns the written paths."""
+    out_dir.mkdir(parents=True, exist_ok=True)
+    written = []
+
+    def write(name: str, lowered):
+        path = out_dir / f"{name}.hlo.txt"
+        text = to_hlo_text(lowered)
+        path.write_text(text)
+        written.append(path)
+        print(f"wrote {path} ({len(text)} chars)")
+
+    for p, w in AVG_PAIRS_SHAPES:
+        write(f"avg_pairs_p{p}_w{w}", model.lower_gossip_round(p, w + 2))
+    for b, w in BUCKETIZE_SHAPES:
+        write(f"bucketize_p{b}_w{w}", model.lower_ingest(b, w))
+    for w in COLLAPSE_WIDTHS:
+        write(f"collapse_p1_w{w}", model.lower_collapse(w))
+    return written
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument(
+        "--out-dir",
+        default="../artifacts",
+        help="artifact directory (default: ../artifacts)",
+    )
+    args = parser.parse_args()
+    emit(pathlib.Path(args.out_dir))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""Pallas kernel: one distributed-averaging gossip round.
+
+The whole-network round is a gather + elementwise average over the dense
+peer-state matrix ``[P, C]`` (C = bucket window + 2 scalar columns). On a
+real TPU the matrix tiles into VMEM row-blocks (a 256x1026 f32 block is
+~1 MB, comfortably under VMEM) and each block streams HBM->VMEM once per
+round — see DESIGN.md §Hardware-Adaptation. The partner gather crosses row
+blocks, so the kernel keeps the full state resident (grid=1) and relies on
+BlockSpec only for the documented tiling estimate; ``interpret=True`` is
+mandatory on CPU (real TPU lowering emits a Mosaic custom-call the CPU
+PJRT client cannot run).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _avg_pairs_kernel(states_ref, partner_ref, out_ref):
+    states = states_ref[...]
+    partner = partner_ref[...]
+    p = states.shape[0]
+    gathered = jnp.take(states, partner, axis=0)
+    active = (partner != jnp.arange(p, dtype=partner.dtype))[:, None]
+    out_ref[...] = jnp.where(active, 0.5 * (states + gathered), states)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def avg_pairs(states, partner):
+    """Average paired rows of the peer-state matrix.
+
+    Args:
+      states: f32[P, C].
+      partner: i32[P] involution; ``partner[l] == l`` marks idle rows.
+
+    Returns:
+      f32[P, C] averaged states.
+    """
+    return pl.pallas_call(
+        _avg_pairs_kernel,
+        out_shape=jax.ShapeDtypeStruct(states.shape, states.dtype),
+        interpret=True,
+    )(states, partner)

@@ -1,0 +1,64 @@
+"""Pallas kernel: bulk stream ingestion (bucketize + histogram).
+
+The UDDSketch insert hot-spot is ``i = ceil(log_gamma x)`` followed by a
+counter increment. For TPU the scalar scatter-add becomes a one-hot
+reduction per value block (``onehot(idx)`` summed over the block maps onto
+the MXU/VPU rather than serial scatter) with the grid streaming value
+blocks through VMEM while the W-slot histogram stays resident as the
+accumulator — the BlockSpec below expresses exactly that HBM<->VMEM
+schedule. ``interpret=True`` for CPU-PJRT execution.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Values per grid step: one VMEM-friendly streaming block.
+BLOCK = 1024
+
+
+def _bucketize_kernel(xs_ref, params_ref, out_ref, *, width):
+    pid = pl.program_id(0)
+
+    @pl.when(pid == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    xs = xs_ref[...]
+    inv_ln_gamma = params_ref[0]
+    offset = params_ref[1]
+    idx = jnp.ceil(jnp.log(xs) * inv_ln_gamma) - offset
+    idx = jnp.clip(idx, 0, width - 1).astype(jnp.int32)
+    onehot = (idx[:, None] == jnp.arange(width, dtype=jnp.int32)[None, :])
+    out_ref[...] += onehot.astype(jnp.float32).sum(axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("width",))
+def bucketize(xs, params, *, width):
+    """Histogram of logarithmic bucket indices over a dense window.
+
+    Args:
+      xs: f32[B] strictly positive values; B must be a multiple of
+        :data:`BLOCK`.
+      params: f32[2] = (inv_ln_gamma, offset).
+      width: static window width W.
+
+    Returns:
+      f32[W] counts (out-of-window indices clamp to the edges).
+    """
+    b = xs.shape[0]
+    assert b % BLOCK == 0, f"batch {b} must be a multiple of {BLOCK}"
+    grid = b // BLOCK
+    return pl.pallas_call(
+        functools.partial(_bucketize_kernel, width=width),
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),  # stream value blocks
+            pl.BlockSpec((2,), lambda i: (0,)),      # params resident
+        ],
+        out_specs=pl.BlockSpec((width,), lambda i: (0,)),  # accumulator
+        out_shape=jax.ShapeDtypeStruct((width,), jnp.float32),
+        interpret=True,
+    )(xs, params)

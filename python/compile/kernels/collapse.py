@@ -1,0 +1,45 @@
+"""Pallas kernel: uniform collapse (Algorithm 2) on a dense window.
+
+Pure data movement: pairs ``(2j-1, 2j)`` of logarithmic indices fuse into
+``j``. A single resident block (the window is at most a few thousand f32)
+with a dynamic one-slot shift selected by the window-offset parity.
+``interpret=True`` for CPU-PJRT execution.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _collapse_kernel(hist_ref, phase_ref, out_ref):
+    hist = hist_ref[...]
+    w = hist.shape[0]
+    padded = jnp.concatenate(
+        [jnp.zeros(1, hist.dtype), hist, jnp.zeros(1, hist.dtype)]
+    )
+    start = jnp.where(phase_ref[0] > 0.5, 0, 1)
+    window = jax.lax.dynamic_slice(padded, (start,), (w + 1,))
+    pairs = window[:w].reshape(-1, 2).sum(axis=1)
+    out_ref[...] = jnp.concatenate([pairs, window[w:]])
+
+
+@functools.partial(jax.jit, static_argnames=())
+def collapse(hist, phase):
+    """Collapse a dense counter window one level (gamma -> gamma^2).
+
+    Args:
+      hist: f32[W] with W even; slot k holds the counter of index o + k.
+      phase: f32[1] — 1.0 if the window offset o is even, else 0.0.
+
+    Returns:
+      f32[W//2 + 1]; slot j holds the counter of index ceil(o/2) + j.
+    """
+    w = hist.shape[0]
+    assert w % 2 == 0, "collapse window must be even"
+    return pl.pallas_call(
+        _collapse_kernel,
+        out_shape=jax.ShapeDtypeStruct((w // 2 + 1,), hist.dtype),
+        interpret=True,
+    )(hist, phase)

@@ -1,0 +1,78 @@
+"""Pure-jnp oracles for the Pallas kernels (the correctness reference).
+
+Every kernel in this package has an exact jnp twin here; pytest (with
+hypothesis sweeps over shapes/values) asserts allclose between the two, and
+the AOT artifacts are lowered from the Pallas versions only after this
+signal is green.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def ref_avg_pairs(states, partner):
+    """Averaging round oracle.
+
+    Args:
+      states: f32[P, C] peer-state matrix (bucket window + N~ + q~ columns).
+      partner: i32[P] exchange partner per row; ``partner[l] == l`` means
+        idle. Must be an involution (``partner[partner[l]] == l``).
+
+    Returns:
+      f32[P, C]: rows of paired peers replaced by the pair average, idle
+      rows untouched.
+    """
+    p = states.shape[0]
+    gathered = jnp.take(states, partner, axis=0)
+    active = (partner != jnp.arange(p, dtype=partner.dtype))[:, None]
+    return jnp.where(active, 0.5 * (states + gathered), states)
+
+
+def ref_bucketize(xs, params, width):
+    """Bulk-ingest oracle: histogram of logarithmic bucket indices.
+
+    Args:
+      xs: f32[B] strictly positive values.
+      params: f32[2] = (inv_ln_gamma, offset): the UDDSketch mapping
+        ``i = ceil(ln x * inv_ln_gamma)`` shifted by the window offset.
+      width: static window width W.
+
+    Returns:
+      f32[W]: counts per window slot; indices falling outside the window
+      are clamped to the edge slots (the Rust caller sizes the window to
+      cover the data, so clamping is a belt-and-braces guard).
+    """
+    inv_ln_gamma = params[0]
+    offset = params[1]
+    idx = jnp.ceil(jnp.log(xs) * inv_ln_gamma) - offset
+    idx = jnp.clip(idx, 0, width - 1).astype(jnp.int32)
+    return jnp.zeros(width, dtype=jnp.float32).at[idx].add(1.0)
+
+
+def ref_collapse(hist, phase):
+    """Uniform-collapse oracle (Algorithm 2) on a dense window.
+
+    Window slot k holds the counter of logarithmic index ``o + k`` where
+    ``o`` is the window offset. The collapse fuses indices ``(2j-1, 2j)``
+    into ``j``; whether slot 0 starts a pair depends on the parity of
+    ``o``.
+
+    Args:
+      hist: f32[W] dense counters (W even).
+      phase: f32[1] — 1.0 when ``o`` is even (slot 0 pairs with the
+        out-of-window index ``o-1``, so a zero pad is prepended), 0.0 when
+        ``o`` is odd (slot 0 starts a pair).
+
+    Returns:
+      f32[W//2 + 1]: collapsed counters; entry j holds the counter of
+      collapsed index ``ceil(o/2) + j``.
+    """
+    w = hist.shape[0]
+    assert w % 2 == 0, "collapse window must be even"
+    padded = jnp.concatenate(
+        [jnp.zeros(1, hist.dtype), hist, jnp.zeros(1, hist.dtype)]
+    )
+    start = jnp.where(phase[0] > 0.5, 0, 1)
+    window = jax.lax.dynamic_slice(padded, (start,), (w + 1,))
+    pairs = window[:w].reshape(-1, 2).sum(axis=1)
+    return jnp.concatenate([pairs, window[w:]])

@@ -1,0 +1,66 @@
+"""Layer 2 — the JAX compute graph the Rust coordinator executes via PJRT.
+
+Three entry points, each a thin jitted wrapper over the corresponding
+Layer-1 Pallas kernel so that lowering produces one fused HLO module per
+artifact:
+
+* :func:`gossip_round` — the per-round hot path (dense distributed
+  averaging, Algorithm 4/5 in matrix form).
+* :func:`ingest` — bulk stream ingestion (bucketize + histogram).
+* :func:`collapse_step` — uniform collapse on a dense window.
+
+Build-time only: nothing in this package is imported at runtime; the AOT
+artifacts produced by :mod:`compile.aot` are the runtime interface.
+"""
+
+import jax
+
+from compile.kernels.avg_pairs import avg_pairs
+from compile.kernels.bucketize import bucketize
+from compile.kernels.collapse import collapse
+
+
+def gossip_round(states, partner):
+    """One matched gossip round over the dense peer-state matrix.
+
+    Args:
+      states: f32[P, C] — C = bucket window + 2 (N~ and q~ columns).
+      partner: i32[P] involution (partner[l] == l -> idle row).
+
+    Returns:
+      f32[P, C] averaged states.
+    """
+    return avg_pairs(states, partner)
+
+
+def ingest(xs, params, *, width):
+    """Bucketize a batch of values into a dense counter window."""
+    return bucketize(xs, params, width=width)
+
+
+def collapse_step(hist, phase):
+    """Collapse a dense window one level (gamma -> gamma^2)."""
+    return collapse(hist, phase)
+
+
+def lower_gossip_round(p, cols):
+    """Lower :func:`gossip_round` for static shape [p, cols]."""
+    states = jax.ShapeDtypeStruct((p, cols), jax.numpy.float32)
+    partner = jax.ShapeDtypeStruct((p,), jax.numpy.int32)
+    return jax.jit(lambda s, q: (gossip_round(s, q),)).lower(states, partner)
+
+
+def lower_ingest(batch, width):
+    """Lower :func:`ingest` for static batch/window sizes."""
+    xs = jax.ShapeDtypeStruct((batch,), jax.numpy.float32)
+    params = jax.ShapeDtypeStruct((2,), jax.numpy.float32)
+    return jax.jit(
+        lambda x, p: (ingest(x, p, width=width),)
+    ).lower(xs, params)
+
+
+def lower_collapse(width):
+    """Lower :func:`collapse_step` for a static window size."""
+    hist = jax.ShapeDtypeStruct((width,), jax.numpy.float32)
+    phase = jax.ShapeDtypeStruct((1,), jax.numpy.float32)
+    return jax.jit(lambda h, p: (collapse_step(h, p),)).lower(hist, phase)

@@ -1,0 +1,54 @@
+"""AOT path: HLO text emission round-trips through the XLA text parser."""
+
+import pathlib
+
+import pytest
+
+from compile import aot, model
+
+
+def test_to_hlo_text_contains_module():
+    lowered = model.lower_gossip_round(8, 6)
+    text = aot.to_hlo_text(lowered)
+    assert text.startswith("HloModule") or "HloModule" in text
+    # return_tuple=True: root is a tuple.
+    assert "tuple" in text
+
+
+def test_emit_writes_all_artifacts(tmp_path: pathlib.Path):
+    # Shrink the shape ladders so the test stays fast.
+    old_avg, old_bkt, old_col = (
+        aot.AVG_PAIRS_SHAPES,
+        aot.BUCKETIZE_SHAPES,
+        aot.COLLAPSE_WIDTHS,
+    )
+    aot.AVG_PAIRS_SHAPES = [(8, 16)]
+    aot.BUCKETIZE_SHAPES = [(1024, 32)]
+    aot.COLLAPSE_WIDTHS = [16]
+    try:
+        written = aot.emit(tmp_path)
+    finally:
+        aot.AVG_PAIRS_SHAPES = old_avg
+        aot.BUCKETIZE_SHAPES = old_bkt
+        aot.COLLAPSE_WIDTHS = old_col
+    names = sorted(p.name for p in written)
+    assert names == [
+        "avg_pairs_p8_w16.hlo.txt",
+        "bucketize_p1024_w32.hlo.txt",
+        "collapse_p1_w16.hlo.txt",
+    ]
+    for p in written:
+        assert p.stat().st_size > 100
+
+
+@pytest.mark.parametrize("p,w", [(8, 16)])
+def test_artifact_text_parses_back(p, w, tmp_path):
+    """The HLO text must be parseable by XLA's text parser (the exact
+    entry point the Rust runtime uses)."""
+    from jax._src.lib import xla_client as xc
+
+    lowered = model.lower_gossip_round(p, w + 2)
+    text = aot.to_hlo_text(lowered)
+    # xla_client exposes the same HLO-text parser the xla crate binds.
+    comp = xc._xla.hlo_module_from_text(text)
+    assert comp is not None

@@ -1,0 +1,178 @@
+"""Pallas kernels vs pure-jnp oracles — the core L1 correctness signal.
+
+Hypothesis sweeps shapes and values; every property asserts allclose
+between the interpret-mode Pallas kernel and its ref.py twin.
+"""
+
+import math
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.avg_pairs import avg_pairs
+from compile.kernels.bucketize import BLOCK, bucketize
+from compile.kernels.collapse import collapse
+from compile.kernels.ref import ref_avg_pairs, ref_bucketize, ref_collapse
+
+settings.register_profile("ci", deadline=None, max_examples=25)
+settings.load_profile("ci")
+
+
+def random_involution(rng, p):
+    """A random partner vector: involution with idle fixed points."""
+    partner = np.arange(p, dtype=np.int32)
+    order = rng.permutation(p)
+    for a, b in zip(order[0::2], order[1::2]):
+        if rng.random() < 0.8:  # leave some peers idle
+            partner[a] = b
+            partner[b] = a
+    return partner
+
+
+# ---------------------------------------------------------------------------
+# avg_pairs
+# ---------------------------------------------------------------------------
+
+
+@given(
+    p=st.integers(min_value=2, max_value=48),
+    c=st.integers(min_value=1, max_value=40),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_avg_pairs_matches_ref(p, c, seed):
+    rng = np.random.default_rng(seed)
+    states = jnp.asarray(rng.normal(size=(p, c)).astype(np.float32))
+    partner = jnp.asarray(random_involution(rng, p))
+    got = avg_pairs(states, partner)
+    want = ref_avg_pairs(states, partner)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=0, atol=0)
+
+
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_avg_pairs_conserves_column_sums(seed):
+    rng = np.random.default_rng(seed)
+    p, c = 32, 10
+    states = jnp.asarray(rng.uniform(0, 100, size=(p, c)).astype(np.float32))
+    partner = jnp.asarray(random_involution(rng, p))
+    out = np.asarray(avg_pairs(states, partner))
+    np.testing.assert_allclose(
+        out.sum(axis=0), np.asarray(states).sum(axis=0), rtol=1e-5
+    )
+
+
+def test_avg_pairs_identity_when_all_idle():
+    states = jnp.arange(12, dtype=jnp.float32).reshape(4, 3)
+    partner = jnp.arange(4, dtype=jnp.int32)
+    out = avg_pairs(states, partner)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(states))
+
+
+def test_avg_pairs_pairs_become_identical():
+    states = jnp.asarray([[0.0, 2.0], [4.0, 6.0], [1.0, 1.0]], dtype=jnp.float32)
+    partner = jnp.asarray([1, 0, 2], dtype=jnp.int32)
+    out = np.asarray(avg_pairs(states, partner))
+    np.testing.assert_array_equal(out[0], out[1])
+    np.testing.assert_array_equal(out[0], [2.0, 4.0])
+    np.testing.assert_array_equal(out[2], [1.0, 1.0])
+
+
+# ---------------------------------------------------------------------------
+# bucketize
+# ---------------------------------------------------------------------------
+
+
+@given(
+    blocks=st.integers(min_value=1, max_value=3),
+    width=st.integers(min_value=8, max_value=256),
+    lo_exp=st.floats(min_value=-3.0, max_value=2.0),
+    decades=st.floats(min_value=0.5, max_value=6.0),
+    alpha=st.sampled_from([0.001, 0.01, 0.05]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_bucketize_matches_ref(blocks, width, lo_exp, decades, alpha, seed):
+    rng = np.random.default_rng(seed)
+    b = blocks * BLOCK
+    xs = 10.0 ** rng.uniform(lo_exp, lo_exp + decades, size=b)
+    xs = jnp.asarray(xs.astype(np.float32))
+    gamma = (1 + alpha) / (1 - alpha)
+    inv_ln_gamma = 1.0 / math.log(gamma)
+    # Window anchored at the data's min index.
+    offset = math.ceil(math.log(float(xs.min())) * inv_ln_gamma) - 1
+    params = jnp.asarray([inv_ln_gamma, float(offset)], dtype=jnp.float32)
+    got = bucketize(xs, params, width=width)
+    want = ref_bucketize(xs, params, width)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_bucketize_total_equals_batch():
+    rng = np.random.default_rng(0)
+    xs = jnp.asarray(rng.uniform(1.0, 100.0, size=2 * BLOCK).astype(np.float32))
+    params = jnp.asarray([1.0 / math.log(1.02), 0.0], dtype=jnp.float32)
+    hist = np.asarray(bucketize(xs, params, width=512))
+    assert hist.sum() == 2 * BLOCK
+
+
+def test_bucketize_rejects_ragged_batch():
+    xs = jnp.ones(BLOCK + 1, dtype=jnp.float32)
+    params = jnp.asarray([1.0, 0.0], dtype=jnp.float32)
+    with pytest.raises(AssertionError):
+        bucketize(xs, params, width=16)
+
+
+def test_bucketize_clamps_out_of_window():
+    # Values far below/above the window end up in the edge slots.
+    xs = np.full(BLOCK, 1e-30, dtype=np.float32)
+    xs[: BLOCK // 2] = 1e30
+    params = jnp.asarray([1.0 / math.log(1.02), 0.0], dtype=jnp.float32)
+    hist = np.asarray(bucketize(jnp.asarray(xs), params, width=64))
+    assert hist[0] == BLOCK // 2
+    assert hist[-1] == BLOCK // 2
+    assert hist[1:-1].sum() == 0
+
+
+# ---------------------------------------------------------------------------
+# collapse
+# ---------------------------------------------------------------------------
+
+
+@given(
+    half=st.integers(min_value=2, max_value=128),
+    phase=st.sampled_from([0.0, 1.0]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_collapse_matches_ref(half, phase, seed):
+    rng = np.random.default_rng(seed)
+    w = 2 * half
+    hist = jnp.asarray(rng.integers(0, 50, size=w).astype(np.float32))
+    ph = jnp.asarray([phase], dtype=jnp.float32)
+    got = collapse(hist, ph)
+    want = ref_collapse(hist, ph)
+    assert got.shape == (w // 2 + 1,)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@given(
+    half=st.integers(min_value=2, max_value=64),
+    phase=st.sampled_from([0.0, 1.0]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_collapse_conserves_mass(half, phase, seed):
+    rng = np.random.default_rng(seed)
+    hist = jnp.asarray(rng.uniform(0, 9, size=2 * half).astype(np.float32))
+    out = np.asarray(collapse(hist, jnp.asarray([phase], dtype=jnp.float32)))
+    np.testing.assert_allclose(out.sum(), np.asarray(hist).sum(), rtol=1e-6)
+
+
+def test_collapse_matches_sketch_semantics():
+    # Window offset o=1 (odd -> phase 0): indices 1..8 with counter == index.
+    # ceil pairing: (1,2)->1, (3,4)->2, (5,6)->3, (7,8)->4 — the same case
+    # the Rust store test exercises.
+    hist = jnp.asarray([1, 2, 3, 4, 5, 6, 7, 8], dtype=jnp.float32)
+    out = np.asarray(collapse(hist, jnp.asarray([0.0], dtype=jnp.float32)))
+    np.testing.assert_array_equal(out, [3.0, 7.0, 11.0, 15.0, 0.0])
+    # Offset o=2 (even -> phase 1): indices 2..9.
+    # (2)->1, (3,4)->2, (5,6)->3, (7,8)->4, (9)->5.
+    out = np.asarray(collapse(hist, jnp.asarray([1.0], dtype=jnp.float32)))
+    np.testing.assert_array_equal(out, [1.0, 5.0, 9.0, 13.0, 8.0])

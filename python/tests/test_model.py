@@ -1,0 +1,55 @@
+"""Layer-2 model: shapes, lowering, and end-to-end averaging semantics."""
+
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model
+
+
+def test_gossip_round_shape_and_fixed_point():
+    p, cols = 8, 6
+    states = jnp.asarray(np.random.default_rng(1).uniform(size=(p, cols)),
+                         dtype=jnp.float32)
+    partner = jnp.arange(p, dtype=jnp.int32)
+    out = model.gossip_round(states, partner)
+    assert out.shape == (p, cols)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(states))
+
+
+def test_gossip_round_converges_to_mean():
+    # Repeated random matchings drive every row to the global mean — the
+    # distributed-averaging fixed point the protocol relies on.
+    rng = np.random.default_rng(2)
+    p, cols = 16, 4
+    states = jnp.asarray(rng.uniform(0, 10, size=(p, cols)), dtype=jnp.float32)
+    target = np.asarray(states).mean(axis=0)
+    for _ in range(200):
+        partner = np.arange(p, dtype=np.int32)
+        order = rng.permutation(p)
+        for a, b in zip(order[0::2], order[1::2]):
+            partner[a] = b
+            partner[b] = a
+        states = model.gossip_round(states, jnp.asarray(partner))
+    np.testing.assert_allclose(np.asarray(states), np.tile(target, (p, 1)),
+                               rtol=1e-3)
+
+
+def test_ingest_counts_and_window():
+    xs = jnp.asarray(np.linspace(1.0, 99.0, 1024), dtype=jnp.float32)
+    import math
+    alpha = 0.01
+    gamma = (1 + alpha) / (1 - alpha)
+    params = jnp.asarray([1.0 / math.log(gamma), 0.0], dtype=jnp.float32)
+    hist = model.ingest(xs, params, width=512)
+    assert hist.shape == (512,)
+    assert float(hist.sum()) == 1024.0
+
+
+def test_lowering_produces_stablehlo():
+    lowered = model.lower_gossip_round(8, 10)
+    text = str(lowered.compiler_ir("stablehlo"))
+    assert "func" in text
+    lowered = model.lower_ingest(1024, 64)
+    assert "func" in str(lowered.compiler_ir("stablehlo"))
+    lowered = model.lower_collapse(64)
+    assert "func" in str(lowered.compiler_ir("stablehlo"))

@@ -1,0 +1,311 @@
+//! Churn models of §7.2.
+//!
+//! * **Fail & Stop** — every online peer fails each round with probability
+//!   `p` (paper: 0.01) and never returns; the overlay can disconnect,
+//!   which is what stalls convergence on the adversarial input.
+//! * **Yao** (two variants) — the heterogeneous churn model of Yao et
+//!   al. [28]: every peer `i` draws an average lifetime `l_i` from
+//!   ShiftedPareto(α=3, β=1, μ=1.01) and an average off-time `d_i` from
+//!   ShiftedPareto(α=3, β=2, μ=1.01). Whenever peer `i` changes state, the
+//!   duration of the new state is drawn from the peer's own distribution:
+//!   on-line durations from a shifted Pareto with mean `l_i`; off-line
+//!   durations either from a shifted Pareto with mean `d_i`
+//!   ([`ChurnKind::YaoPareto`]) or from an exponential with rate `1/l_i`
+//!   ([`ChurnKind::YaoExponential`]).
+//!
+//! Durations are measured in rounds (the protocol's only clock).
+
+use crate::rng::{Exponential, Rng, Sample, ShiftedPareto, Xoshiro256pp};
+
+/// Which churn model a run uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ChurnKind {
+    /// No churn (§7.1 experiments).
+    None,
+    /// Fail & Stop with per-round failure probability 0.01.
+    FailStop,
+    /// Yao model, shifted-Pareto rejoin.
+    YaoPareto,
+    /// Yao model, exponential rejoin.
+    YaoExponential,
+}
+
+impl ChurnKind {
+    /// CSV/CLI name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            ChurnKind::None => "none",
+            ChurnKind::FailStop => "failstop",
+            ChurnKind::YaoPareto => "yao",
+            ChurnKind::YaoExponential => "yaoexp",
+        }
+    }
+}
+
+impl std::str::FromStr for ChurnKind {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "none" | "off" => Ok(ChurnKind::None),
+            "failstop" | "fail-stop" | "fail_stop" => Ok(ChurnKind::FailStop),
+            "yao" | "yao-pareto" | "yaopareto" => Ok(ChurnKind::YaoPareto),
+            "yaoexp" | "yao-exp" | "yao-exponential" => Ok(ChurnKind::YaoExponential),
+            other => Err(format!(
+                "unknown churn '{other}' (expected none|failstop|yao|yaoexp)"
+            )),
+        }
+    }
+}
+
+/// Default Fail&Stop per-round failure probability (§7.2).
+pub const FAILSTOP_P: f64 = 0.01;
+
+/// Yao lifetime distribution parameters (§7.2).
+pub const YAO_LIFETIME: ShiftedPareto = ShiftedPareto {
+    alpha: 3.0,
+    beta: 1.0,
+    mu: 1.01,
+};
+
+/// Yao off-time distribution parameters (§7.2).
+pub const YAO_OFFTIME: ShiftedPareto = ShiftedPareto {
+    alpha: 3.0,
+    beta: 2.0,
+    mu: 1.01,
+};
+
+#[derive(Debug, Clone)]
+enum ModelState {
+    None,
+    FailStop {
+        alive: Vec<bool>,
+        p: f64,
+    },
+    Yao {
+        online: Vec<bool>,
+        /// Rounds remaining in the current state.
+        remaining: Vec<f64>,
+        /// Per-peer mean lifetime `l_i`.
+        lifetime: Vec<f64>,
+        /// Per-peer mean off-time `d_i`.
+        offtime: Vec<f64>,
+        exponential_rejoin: bool,
+    },
+}
+
+/// Per-round churn driver: tracks each peer's online/offline status.
+#[derive(Debug, Clone)]
+pub struct ChurnModel {
+    kind: ChurnKind,
+    rng: Xoshiro256pp,
+    state: ModelState,
+}
+
+impl ChurnModel {
+    /// Instantiate for `peers` peers; RNG stream derived from `master`.
+    pub fn new(kind: ChurnKind, peers: usize, master: &Xoshiro256pp) -> Self {
+        let mut rng = master.derive(0xC4A2_0000);
+        let state = match kind {
+            ChurnKind::None => ModelState::None,
+            ChurnKind::FailStop => ModelState::FailStop {
+                alive: vec![true; peers],
+                p: FAILSTOP_P,
+            },
+            ChurnKind::YaoPareto | ChurnKind::YaoExponential => {
+                let lifetime: Vec<f64> =
+                    (0..peers).map(|_| YAO_LIFETIME.sample(&mut rng)).collect();
+                let offtime: Vec<f64> =
+                    (0..peers).map(|_| YAO_OFFTIME.sample(&mut rng)).collect();
+                // All peers start online with a fresh lifetime draw.
+                let remaining: Vec<f64> = lifetime
+                    .iter()
+                    .map(|&l| Self::draw_online(&mut rng, l))
+                    .collect();
+                ModelState::Yao {
+                    online: vec![true; peers],
+                    remaining,
+                    lifetime,
+                    offtime,
+                    exponential_rejoin: kind == ChurnKind::YaoExponential,
+                }
+            }
+        };
+        Self { kind, rng, state }
+    }
+
+    /// Online-duration draw: shifted Pareto with the peer's mean `l_i`
+    /// (α = 3 kept, β matched so the mean equals `l_i`).
+    fn draw_online<R: Rng>(rng: &mut R, l_i: f64) -> f64 {
+        let beta = ((l_i - YAO_LIFETIME.mu) * (YAO_LIFETIME.alpha - 1.0)).max(1e-6);
+        ShiftedPareto::new(YAO_LIFETIME.alpha, beta, YAO_LIFETIME.mu).sample(rng)
+    }
+
+    /// Off-duration draw for the two Yao variants.
+    fn draw_offline<R: Rng>(rng: &mut R, d_i: f64, l_i: f64, exponential: bool) -> f64 {
+        if exponential {
+            Exponential::new(1.0 / l_i).sample(rng)
+        } else {
+            let beta = ((d_i - YAO_OFFTIME.mu) * (YAO_OFFTIME.alpha - 1.0)).max(1e-6);
+            ShiftedPareto::new(YAO_OFFTIME.alpha, beta, YAO_OFFTIME.mu).sample(rng)
+        }
+    }
+
+    /// The configured model.
+    pub fn kind(&self) -> ChurnKind {
+        self.kind
+    }
+
+    /// Advance one round: apply failures/rejoins.
+    pub fn step(&mut self) {
+        match &mut self.state {
+            ModelState::None => {}
+            ModelState::FailStop { alive, p } => {
+                for a in alive.iter_mut() {
+                    if *a && self.rng.chance(*p) {
+                        *a = false;
+                    }
+                }
+            }
+            ModelState::Yao {
+                online,
+                remaining,
+                lifetime,
+                offtime,
+                exponential_rejoin,
+            } => {
+                for i in 0..online.len() {
+                    remaining[i] -= 1.0;
+                    if remaining[i] <= 0.0 {
+                        online[i] = !online[i];
+                        remaining[i] = if online[i] {
+                            Self::draw_online(&mut self.rng, lifetime[i])
+                        } else {
+                            Self::draw_offline(
+                                &mut self.rng,
+                                offtime[i],
+                                lifetime[i],
+                                *exponential_rejoin,
+                            )
+                        };
+                    }
+                }
+            }
+        }
+    }
+
+    /// Is peer `l` currently online?
+    pub fn is_online(&self, l: usize) -> bool {
+        match &self.state {
+            ModelState::None => true,
+            ModelState::FailStop { alive, .. } => alive[l],
+            ModelState::Yao { online, .. } => online[l],
+        }
+    }
+
+    /// Online mask over all peers.
+    pub fn online_mask(&self, peers: usize) -> Vec<bool> {
+        (0..peers).map(|l| self.is_online(l)).collect()
+    }
+
+    /// Number of online peers.
+    pub fn online_count(&self, peers: usize) -> usize {
+        (0..peers).filter(|&l| self.is_online(l)).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::default_rng;
+
+    #[test]
+    fn none_never_fails() {
+        let m = default_rng(1);
+        let mut c = ChurnModel::new(ChurnKind::None, 100, &m);
+        for _ in 0..50 {
+            c.step();
+        }
+        assert_eq!(c.online_count(100), 100);
+    }
+
+    #[test]
+    fn failstop_monotone_decay() {
+        let m = default_rng(2);
+        let mut c = ChurnModel::new(ChurnKind::FailStop, 2000, &m);
+        let mut last = 2000;
+        for _ in 0..25 {
+            c.step();
+            let now = c.online_count(2000);
+            assert!(now <= last, "fail&stop peers never rejoin");
+            last = now;
+        }
+        // E[survival over 25 rounds] = 0.99^25 ≈ 0.778.
+        let frac = last as f64 / 2000.0;
+        assert!((0.70..0.85).contains(&frac), "survivors {frac}");
+    }
+
+    #[test]
+    fn yao_peers_rejoin() {
+        let m = default_rng(3);
+        let mut c = ChurnModel::new(ChurnKind::YaoPareto, 500, &m);
+        let mut went_down_and_up = false;
+        let mut was_offline = vec![false; 500];
+        for _ in 0..60 {
+            c.step();
+            for l in 0..500 {
+                if !c.is_online(l) {
+                    was_offline[l] = true;
+                } else if was_offline[l] {
+                    went_down_and_up = true;
+                }
+            }
+        }
+        assert!(went_down_and_up, "yao churn must allow rejoin");
+        // Network never collapses: most peers remain online on average
+        // (mean lifetime 1.51 vs off-time 2.01 rounds -> minority offline
+        //  at any instant is possible; just require non-trivial presence).
+        assert!(c.online_count(500) > 50);
+    }
+
+    #[test]
+    fn yao_exponential_variant_differs_from_pareto() {
+        let m = default_rng(4);
+        let mut a = ChurnModel::new(ChurnKind::YaoPareto, 300, &m);
+        let mut b = ChurnModel::new(ChurnKind::YaoExponential, 300, &m);
+        let mut diverged = false;
+        for _ in 0..40 {
+            a.step();
+            b.step();
+            if a.online_mask(300) != b.online_mask(300) {
+                diverged = true;
+            }
+        }
+        assert!(diverged);
+    }
+
+    #[test]
+    fn kind_parse_round_trip() {
+        for k in [
+            ChurnKind::None,
+            ChurnKind::FailStop,
+            ChurnKind::YaoPareto,
+            ChurnKind::YaoExponential,
+        ] {
+            assert_eq!(k.name().parse::<ChurnKind>().unwrap(), k);
+        }
+        assert!("bogus".parse::<ChurnKind>().is_err());
+    }
+
+    #[test]
+    fn deterministic_given_master_seed() {
+        let m = default_rng(5);
+        let mut a = ChurnModel::new(ChurnKind::YaoPareto, 100, &m);
+        let mut b = ChurnModel::new(ChurnKind::YaoPareto, 100, &m);
+        for _ in 0..20 {
+            a.step();
+            b.step();
+            assert_eq!(a.online_mask(100), b.online_mask(100));
+        }
+    }
+}

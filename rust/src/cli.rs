@@ -1,0 +1,386 @@
+//! Hand-rolled command-line interface (clap is unavailable offline —
+//! DESIGN.md §6).
+//!
+//! Subcommands:
+//!
+//! * `run` — one distributed experiment, ARE table per quantile.
+//! * `figure` — regenerate a paper figure/table (`--list`, `--all`).
+//! * `quantiles` — sequential UDDSketch over a file or generated data.
+//! * `info` — build/runtime/artifact diagnostics.
+
+use crate::config::ExperimentConfig;
+use crate::data::DatasetKind;
+use crate::experiments::{figure_ids, run_figure, run_with_snapshots};
+use crate::runtime::{artifacts_dir, list_shaped_artifacts};
+use crate::sketch::UddSketch;
+use anyhow::{bail, Context, Result};
+use std::path::PathBuf;
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    /// Subcommand name.
+    pub command: String,
+    /// `--flag value` pairs (flags without values map to "true").
+    pub flags: Vec<(String, String)>,
+    /// Free `key=value` config overrides.
+    pub overrides: Vec<(String, String)>,
+}
+
+impl Args {
+    /// Parse raw args (excluding argv[0]).
+    pub fn parse(raw: &[String]) -> Result<Self> {
+        let mut out = Args::default();
+        let mut it = raw.iter().peekable();
+        match it.next() {
+            Some(cmd) if !cmd.starts_with('-') => out.command = cmd.clone(),
+            Some(cmd) => bail!("expected a subcommand before '{cmd}'"),
+            None => {
+                out.command = "help".into();
+                return Ok(out);
+            }
+        }
+        while let Some(a) = it.next() {
+            if let Some(flag) = a.strip_prefix("--") {
+                let takes_value = it
+                    .peek()
+                    .map(|n| !n.starts_with("--") && !n.contains('='))
+                    .unwrap_or(false);
+                if takes_value {
+                    out.flags.push((flag.to_string(), it.next().unwrap().clone()));
+                } else {
+                    out.flags.push((flag.to_string(), "true".to_string()));
+                }
+            } else if let Some((k, v)) = a.split_once('=') {
+                out.overrides.push((k.to_string(), v.to_string()));
+            } else {
+                bail!("unexpected argument '{a}' (flags are --name, overrides key=value)");
+            }
+        }
+        Ok(out)
+    }
+
+    /// Last value of a flag.
+    pub fn flag(&self, name: &str) -> Option<&str> {
+        self.flags
+            .iter()
+            .rev()
+            .find(|(k, _)| k == name)
+            .map(|(_, v)| v.as_str())
+    }
+
+    /// Boolean flag presence.
+    pub fn has(&self, name: &str) -> bool {
+        self.flag(name).is_some()
+    }
+}
+
+/// Usage text.
+pub const USAGE: &str = "\
+duddsketch — distributed P2P quantile tracking with relative value error
+
+USAGE:
+  duddsketch run [--config FILE] [--paper-scale] [key=value ...]
+      keys: dataset peers rounds fan_out alpha m items graph churn seed
+            executor quantiles
+  duddsketch figure (--id ID | --all | --list) [--paper-scale] [--out DIR]
+      regenerate the paper's tables/figures (CSV + ASCII panels)
+  duddsketch sweep --key KEY --values V1,V2,... [key=value ...]
+      run one experiment per value of KEY; print worst-ARE per run
+  duddsketch quantiles (--input FILE | --dataset NAME --items N)
+            [--q Q1,Q2,...] [--alpha A] [--m M]
+      sequential UDDSketch over a newline-separated value file
+  duddsketch info
+      platform, artifact inventory, defaults
+
+EXAMPLES:
+  duddsketch run dataset=adversarial peers=500 rounds=25
+  duddsketch figure --id fig3
+  duddsketch quantiles --dataset power --items 100000 --q 0.5,0.95,0.99
+";
+
+/// Build an experiment config from flags/overrides.
+fn config_from(args: &Args) -> Result<ExperimentConfig> {
+    let mut cfg = match args.flag("config") {
+        Some(path) => ExperimentConfig::from_file(std::path::Path::new(path))
+            .map_err(anyhow::Error::msg)?,
+        None => ExperimentConfig::default(),
+    };
+    if args.has("paper-scale") {
+        cfg = cfg.paper_scale();
+    }
+    for (k, v) in &args.overrides {
+        cfg.set(k, v).map_err(anyhow::Error::msg)?;
+    }
+    cfg.validate().map_err(anyhow::Error::msg)?;
+    Ok(cfg)
+}
+
+fn cmd_run(args: &Args) -> Result<String> {
+    let cfg = config_from(args)?;
+    let mut out = format!("run: {}\n", cfg.summary());
+    let result = run_with_snapshots(&cfg, &[cfg.rounds])?;
+    let snap = result
+        .snapshots
+        .last()
+        .context("no snapshot produced")?;
+    out.push_str(&format!(
+        "rounds={} online={}/{} seq_alpha={:.6} wall={:.2}s\n",
+        snap.rounds, snap.online, cfg.peers, result.seq_alpha, result.wall_s
+    ));
+    out.push_str("  q       seq-estimate      ARE          median-RE\n");
+    for qs in &snap.quantiles {
+        out.push_str(&format!(
+            "  {:<6}  {:<16.8e}  {:<11.4e}  {:<11.4e}\n",
+            qs.q, qs.truth, qs.are, qs.box_summary.median
+        ));
+    }
+    Ok(out)
+}
+
+fn cmd_sweep(args: &Args) -> Result<String> {
+    let key = args.flag("key").context("sweep: need --key")?.to_string();
+    let values: Vec<String> = args
+        .flag("values")
+        .context("sweep: need --values v1,v2,...")?
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .collect();
+    let base = config_from(args)?;
+    let mut out = format!("sweep over {key}: base {}\n", base.summary());
+    out.push_str(&format!(
+        "  {key:<12}  worst-ARE     mean-ARE      exchanges  MiB-traffic  wall\n"
+    ));
+    for v in values {
+        let mut cfg = base.clone();
+        cfg.set(&key, &v).map_err(anyhow::Error::msg)?;
+        cfg.validate().map_err(anyhow::Error::msg)?;
+        let result = run_with_snapshots(&cfg, &[cfg.rounds])?;
+        let snap = result.snapshots.last().context("no snapshot")?;
+        let worst = snap.quantiles.iter().map(|q| q.are).fold(0.0f64, f64::max);
+        let mean = snap.quantiles.iter().map(|q| q.are).sum::<f64>()
+            / snap.quantiles.len().max(1) as f64;
+        out.push_str(&format!(
+            "  {v:<12}  {worst:<12.4e}  {mean:<12.4e}  {:<9}  {:<11.2}  {:.2}s\n",
+            result.exchanges,
+            result.bytes as f64 / (1024.0 * 1024.0),
+            result.wall_s
+        ));
+    }
+    Ok(out)
+}
+
+fn cmd_figure(args: &Args) -> Result<String> {
+    if args.has("list") {
+        return Ok(format!("available ids: {}\n", figure_ids().join(" ")));
+    }
+    let out_dir = PathBuf::from(args.flag("out").unwrap_or("results"));
+    let paper = args.has("paper-scale");
+    let ids: Vec<String> = if args.has("all") {
+        figure_ids().iter().map(|s| s.to_string()).collect()
+    } else {
+        vec![args
+            .flag("id")
+            .context("figure: need --id <id>, --all or --list")?
+            .to_string()]
+    };
+    let mut out = String::new();
+    for id in ids {
+        let report = run_figure(&id, paper, &out_dir)?;
+        out.push_str(&format!("=== {} ===\n{}", report.id, report.text));
+        if !report.csv_path.is_empty() {
+            out.push_str(&format!("csv: {}\n", report.csv_path));
+        }
+    }
+    Ok(out)
+}
+
+fn cmd_quantiles(args: &Args) -> Result<String> {
+    let alpha: f64 = args.flag("alpha").unwrap_or("0.001").parse()?;
+    let m: usize = args.flag("m").unwrap_or("1024").parse()?;
+    let qs: Vec<f64> = args
+        .flag("q")
+        .unwrap_or("0.5,0.9,0.95,0.99")
+        .split(',')
+        .map(|s| s.trim().parse::<f64>())
+        .collect::<Result<_, _>>()?;
+    let data: Vec<f64> = if let Some(path) = args.flag("input") {
+        std::fs::read_to_string(path)
+            .with_context(|| format!("reading {path}"))?
+            .split_whitespace()
+            .map(|t| t.parse::<f64>())
+            .collect::<Result<_, _>>()?
+    } else {
+        let kind: DatasetKind = args
+            .flag("dataset")
+            .context("quantiles: need --input FILE or --dataset NAME")?
+            .parse()
+            .map_err(anyhow::Error::msg)?;
+        let items: usize = args.flag("items").unwrap_or("100000").parse()?;
+        let master = crate::rng::default_rng(
+            args.flag("seed").unwrap_or("42").parse()?,
+        );
+        crate::data::peer_dataset(kind, 0, items, &master)
+    };
+    if data.is_empty() {
+        bail!("no input values");
+    }
+    let mut sketch: UddSketch = UddSketch::new(alpha, m).map_err(anyhow::Error::msg)?;
+    sketch.extend(&data);
+    let mut out = format!(
+        "n={} buckets={} collapses={} alpha={:.6}\n",
+        data.len(),
+        sketch.bucket_count(),
+        sketch.collapses(),
+        sketch.alpha()
+    );
+    for q in qs {
+        out.push_str(&format!(
+            "  q={:<5} -> {:.8e}\n",
+            q,
+            sketch.quantile(q).map_err(anyhow::Error::msg)?
+        ));
+    }
+    Ok(out)
+}
+
+fn cmd_info() -> Result<String> {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "duddsketch {} — {}\n",
+        env!("CARGO_PKG_VERSION"),
+        env!("CARGO_PKG_DESCRIPTION")
+    ));
+    out.push_str(&format!("artifacts dir: {}\n", artifacts_dir().display()));
+    let avg = list_shaped_artifacts("avg_pairs");
+    let bkt = list_shaped_artifacts("bucketize");
+    out.push_str(&format!(
+        "avg_pairs artifacts: {:?}\n",
+        avg.iter().map(|(p, w, _)| (*p, *w)).collect::<Vec<_>>()
+    ));
+    out.push_str(&format!(
+        "bucketize artifacts: {:?}\n",
+        bkt.iter().map(|(p, w, _)| (*p, *w)).collect::<Vec<_>>()
+    ));
+    match crate::runtime::Runtime::cpu() {
+        Ok(rt) => out.push_str(&format!("pjrt platform: {}\n", rt.platform())),
+        Err(e) => out.push_str(&format!("pjrt unavailable: {e}\n")),
+    }
+    out.push_str(&format!(
+        "defaults: {}\n",
+        ExperimentConfig::default().summary()
+    ));
+    Ok(out)
+}
+
+/// Dispatch a parsed command; returns the text to print.
+pub fn dispatch(args: &Args) -> Result<String> {
+    match args.command.as_str() {
+        "run" => cmd_run(args),
+        "sweep" => cmd_sweep(args),
+        "figure" | "figures" => cmd_figure(args),
+        "quantiles" => cmd_quantiles(args),
+        "info" => cmd_info(),
+        "help" | "--help" | "-h" => Ok(USAGE.to_string()),
+        other => bail!("unknown command '{other}'\n{USAGE}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(v: &[&str]) -> Args {
+        Args::parse(&v.iter().map(|s| s.to_string()).collect::<Vec<_>>()).unwrap()
+    }
+
+    #[test]
+    fn parse_flags_and_overrides() {
+        let a = args(&["run", "--paper-scale", "peers=500", "--out", "dir"]);
+        assert_eq!(a.command, "run");
+        assert!(a.has("paper-scale"));
+        assert_eq!(a.flag("out"), Some("dir"));
+        assert_eq!(a.overrides, vec![("peers".into(), "500".into())]);
+    }
+
+    #[test]
+    fn no_command_means_help() {
+        let a = args(&[]);
+        assert_eq!(a.command, "help");
+        assert!(dispatch(&a).unwrap().contains("USAGE"));
+    }
+
+    #[test]
+    fn unknown_command_errors() {
+        let a = args(&["frobnicate"]);
+        assert!(dispatch(&a).is_err());
+    }
+
+    #[test]
+    fn run_small_experiment_via_cli() {
+        let a = args(&[
+            "run",
+            "peers=40",
+            "items=100",
+            "rounds=8",
+            "dataset=exponential",
+            "quantiles=0.5,0.9",
+        ]);
+        let out = dispatch(&a).unwrap();
+        assert!(out.contains("ARE"), "{out}");
+        assert!(out.contains("q=0.5") || out.contains("0.5"), "{out}");
+    }
+
+    #[test]
+    fn quantiles_on_generated_dataset() {
+        let a = args(&[
+            "quantiles",
+            "--dataset",
+            "power",
+            "--items",
+            "5000",
+            "--q",
+            "0.5,0.99",
+        ]);
+        let out = dispatch(&a).unwrap();
+        assert!(out.contains("q=0.5"), "{out}");
+    }
+
+    #[test]
+    fn quantiles_from_file() {
+        let dir = std::env::temp_dir().join("duddsketch_cli_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("vals.txt");
+        std::fs::write(&p, "1.0\n2.0\n3.0\n4.0\n5.0\n").unwrap();
+        let a = args(&["quantiles", "--input", p.to_str().unwrap(), "--q", "0.5"]);
+        let out = dispatch(&a).unwrap();
+        assert!(out.contains("n=5"), "{out}");
+    }
+
+    #[test]
+    fn sweep_over_fanout() {
+        let a = args(&[
+            "sweep",
+            "--key",
+            "fan_out",
+            "--values",
+            "1,2",
+            "peers=40",
+            "items=100",
+            "rounds=6",
+            "dataset=uniform",
+            "quantiles=0.5",
+        ]);
+        let out = dispatch(&a).unwrap();
+        assert!(out.contains("sweep over fan_out"), "{out}");
+        // one row per value + header lines
+        assert!(out.lines().count() >= 4, "{out}");
+    }
+
+    #[test]
+    fn figure_list() {
+        let a = args(&["figure", "--list"]);
+        let out = dispatch(&a).unwrap();
+        assert!(out.contains("fig12"));
+    }
+}

@@ -1,0 +1,283 @@
+//! Experiment configuration: the paper's Table 2 parameters plus runtime
+//! knobs, with a small `key=value` config-file parser and CLI overrides.
+
+use crate::churn::ChurnKind;
+use crate::data::DatasetKind;
+use std::path::Path;
+
+/// Overlay topology models of §7.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GraphKind {
+    /// Barabási–Albert, 5 edges/vertex (the paper's reported plots).
+    BarabasiAlbert,
+    /// Erdős–Rényi, p = 10/n.
+    ErdosRenyi,
+    /// Watts–Strogatz small world (k=5, β=0.1) — topology ablation.
+    WattsStrogatz,
+    /// Ring lattice (k=5) — high-diameter worst case for the ablation.
+    Ring,
+}
+
+impl GraphKind {
+    /// CSV/CLI name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            GraphKind::BarabasiAlbert => "ba",
+            GraphKind::ErdosRenyi => "er",
+            GraphKind::WattsStrogatz => "ws",
+            GraphKind::Ring => "ring",
+        }
+    }
+}
+
+impl std::str::FromStr for GraphKind {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "ba" | "barabasi-albert" | "barabasialbert" => Ok(GraphKind::BarabasiAlbert),
+            "er" | "erdos-renyi" | "erdosrenyi" => Ok(GraphKind::ErdosRenyi),
+            "ws" | "watts-strogatz" | "smallworld" => Ok(GraphKind::WattsStrogatz),
+            "ring" | "lattice" => Ok(GraphKind::Ring),
+            other => Err(format!("unknown graph '{other}' (expected ba|er|ws|ring)")),
+        }
+    }
+}
+
+/// Which executor runs the averaging round.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExecutorKind {
+    /// Pure-Rust averaging (reference path).
+    Native,
+    /// AOT-compiled XLA artifact on the PJRT CPU client.
+    Pjrt,
+}
+
+impl std::str::FromStr for ExecutorKind {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "native" => Ok(ExecutorKind::Native),
+            "pjrt" | "xla" => Ok(ExecutorKind::Pjrt),
+            other => Err(format!("unknown executor '{other}' (expected native|pjrt)")),
+        }
+    }
+}
+
+/// Full configuration of one distributed run.
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    /// Input workload.
+    pub dataset: DatasetKind,
+    /// Network size `p`.
+    pub peers: usize,
+    /// Gossip rounds `R`.
+    pub rounds: usize,
+    /// Neighbours contacted per round (paper default 1).
+    pub fan_out: usize,
+    /// Sketch accuracy α (paper default 0.001).
+    pub alpha: f64,
+    /// Sketch budget m (paper default 1024).
+    pub max_buckets: usize,
+    /// Stream length per peer (paper default 100000).
+    pub items_per_peer: usize,
+    /// Overlay model.
+    pub graph: GraphKind,
+    /// Churn model (None reproduces §7.1).
+    pub churn: ChurnKind,
+    /// Master seed for data, topology and protocol randomness.
+    pub seed: u64,
+    /// Quantiles evaluated (paper Table 2 set).
+    pub quantiles: Vec<f64>,
+    /// Averaging-round executor.
+    pub executor: ExecutorKind,
+}
+
+/// The paper's quantile set (Table 2).
+pub const PAPER_QUANTILES: [f64; 11] = [
+    0.01, 0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8, 0.9, 0.99,
+];
+
+impl Default for ExperimentConfig {
+    /// Scaled defaults: Table 2 parameters with a CI-friendly network
+    /// (1000 peers) and stream length (2000 items/peer). Convergence
+    /// behaviour per round is scale-free (Prop. 4); `paper_scale()`
+    /// restores the full-size parameters.
+    fn default() -> Self {
+        Self {
+            dataset: DatasetKind::Adversarial,
+            peers: 1000,
+            rounds: 25,
+            fan_out: 1,
+            alpha: 0.001,
+            max_buckets: 1024,
+            items_per_peer: 2000,
+            graph: GraphKind::BarabasiAlbert,
+            churn: ChurnKind::None,
+            seed: 42,
+            quantiles: PAPER_QUANTILES.to_vec(),
+            executor: ExecutorKind::Native,
+        }
+    }
+}
+
+impl ExperimentConfig {
+    /// Table 2 exactly: 100000 items/peer.
+    pub fn paper_scale(mut self) -> Self {
+        self.items_per_peer = 100_000;
+        self
+    }
+
+    /// Apply one `key=value` assignment.
+    pub fn set(&mut self, key: &str, value: &str) -> Result<(), String> {
+        let parse_err = |k: &str, v: &str| format!("bad value '{v}' for key '{k}'");
+        match key {
+            "dataset" => self.dataset = value.parse()?,
+            "peers" => self.peers = value.parse().map_err(|_| parse_err(key, value))?,
+            "rounds" => self.rounds = value.parse().map_err(|_| parse_err(key, value))?,
+            "fan_out" | "fanout" => {
+                self.fan_out = value.parse().map_err(|_| parse_err(key, value))?
+            }
+            "alpha" => self.alpha = value.parse().map_err(|_| parse_err(key, value))?,
+            "max_buckets" | "buckets" | "m" => {
+                self.max_buckets = value.parse().map_err(|_| parse_err(key, value))?
+            }
+            "items_per_peer" | "items" => {
+                self.items_per_peer = value.parse().map_err(|_| parse_err(key, value))?
+            }
+            "graph" => self.graph = value.parse()?,
+            "churn" => self.churn = value.parse()?,
+            "seed" => self.seed = value.parse().map_err(|_| parse_err(key, value))?,
+            "executor" => self.executor = value.parse()?,
+            "quantiles" => {
+                let qs: Result<Vec<f64>, _> =
+                    value.split(',').map(|s| s.trim().parse::<f64>()).collect();
+                self.quantiles = qs.map_err(|_| parse_err(key, value))?;
+            }
+            other => return Err(format!("unknown config key '{other}'")),
+        }
+        Ok(())
+    }
+
+    /// Parse a config file of `key = value` lines (`#` comments allowed).
+    pub fn from_file(path: &Path) -> Result<Self, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("cannot read {}: {e}", path.display()))?;
+        let mut cfg = Self::default();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (key, value) = line
+                .split_once('=')
+                .ok_or_else(|| format!("line {}: expected key=value", lineno + 1))?;
+            cfg.set(key.trim(), value.trim())
+                .map_err(|e| format!("line {}: {e}", lineno + 1))?;
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Sanity-check parameter ranges.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.peers < 2 {
+            return Err("peers must be >= 2".into());
+        }
+        if !(self.alpha > 0.0 && self.alpha < 1.0) {
+            return Err(format!("alpha must be in (0,1), got {}", self.alpha));
+        }
+        if self.max_buckets < 2 {
+            return Err("max_buckets must be >= 2".into());
+        }
+        if self.fan_out < 1 {
+            return Err("fan_out must be >= 1".into());
+        }
+        if self.quantiles.iter().any(|q| !(0.0..=1.0).contains(q)) {
+            return Err("quantiles must lie in [0,1]".into());
+        }
+        Ok(())
+    }
+
+    /// One-line human summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "dataset={} peers={} rounds={} fan_out={} alpha={} m={} items/peer={} graph={:?} churn={:?} seed={} executor={:?}",
+            self.dataset.name(),
+            self.peers,
+            self.rounds,
+            self.fan_out,
+            self.alpha,
+            self.max_buckets,
+            self.items_per_peer,
+            self.graph,
+            self.churn,
+            self.seed,
+            self.executor,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_table2() {
+        let c = ExperimentConfig::default();
+        assert_eq!(c.alpha, 0.001);
+        assert_eq!(c.max_buckets, 1024);
+        assert_eq!(c.fan_out, 1);
+        assert_eq!(c.quantiles.len(), 11);
+        c.validate().unwrap();
+        assert_eq!(c.paper_scale().items_per_peer, 100_000);
+    }
+
+    #[test]
+    fn set_and_parse_values() {
+        let mut c = ExperimentConfig::default();
+        c.set("dataset", "normal").unwrap();
+        c.set("peers", "5000").unwrap();
+        c.set("graph", "er").unwrap();
+        c.set("churn", "failstop").unwrap();
+        c.set("executor", "pjrt").unwrap();
+        c.set("quantiles", "0.5, 0.9").unwrap();
+        assert_eq!(c.dataset, DatasetKind::Normal);
+        assert_eq!(c.peers, 5000);
+        assert_eq!(c.graph, GraphKind::ErdosRenyi);
+        assert_eq!(c.executor, ExecutorKind::Pjrt);
+        assert_eq!(c.quantiles, vec![0.5, 0.9]);
+        assert!(c.set("bogus", "1").is_err());
+        assert!(c.set("peers", "not-a-number").is_err());
+    }
+
+    #[test]
+    fn config_file_round_trip() {
+        let dir = std::env::temp_dir().join("duddsketch_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("exp.cfg");
+        std::fs::write(
+            &path,
+            "# paper fig-3 style\ndataset = exponential\npeers = 500\nrounds=10 # trailing comment\n",
+        )
+        .unwrap();
+        let c = ExperimentConfig::from_file(&path).unwrap();
+        assert_eq!(c.dataset, DatasetKind::Exponential);
+        assert_eq!(c.peers, 500);
+        assert_eq!(c.rounds, 10);
+    }
+
+    #[test]
+    fn validation_rejects_bad_ranges() {
+        let mut c = ExperimentConfig::default();
+        c.peers = 1;
+        assert!(c.validate().is_err());
+        let mut c = ExperimentConfig::default();
+        c.alpha = 1.5;
+        assert!(c.validate().is_err());
+        let mut c = ExperimentConfig::default();
+        c.quantiles = vec![1.2];
+        assert!(c.validate().is_err());
+    }
+}

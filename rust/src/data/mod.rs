@@ -1,0 +1,204 @@
+//! Input workloads: the four synthetic datasets of Table 1 (§7.1) and the
+//! real *power* dataset of §7.3 (UCI Individual Household Electric Power
+//! Consumption — loader for the real file plus a documented surrogate, see
+//! DESIGN.md §6).
+
+mod power;
+mod synthetic;
+
+pub use power::{load_power_file, PowerSurrogate};
+pub use synthetic::{adversarial_interval, AdversarialSpec};
+
+use crate::rng::{Exponential, Normal, Sample, Uniform, Xoshiro256pp};
+
+/// Number of peers per adversarial group (§7.1: "groups of at most one
+/// hundred peers").
+pub const ADVERSARIAL_GROUP: usize = 100;
+
+/// The workloads of the paper's evaluation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DatasetKind {
+    /// §7.1 worst case: per-group disjoint value intervals so local
+    /// sketches share no buckets.
+    Adversarial,
+    /// `Uniform(lo, hi)` with per-peer `lo ∈ [1, 1e5]`, `hi ∈ [1e6, 1e7]`.
+    Uniform,
+    /// `Exp(λ)` with per-peer `λ ∈ [0.1, 3.5]`.
+    Exponential,
+    /// `N(μ, σ)` with per-peer `μ ∈ [1e6, 1e7]`, `σ ∈ [1e5, 1e6]`,
+    /// truncated to ℝ>0 (the sketches' domain, Theorem 2).
+    Normal,
+    /// §7.3 real dataset (global active power), surrogate-backed when the
+    /// UCI file is absent.
+    Power,
+}
+
+impl DatasetKind {
+    /// All synthetic kinds, in the paper's presentation order.
+    pub const SYNTHETIC: [DatasetKind; 4] = [
+        DatasetKind::Adversarial,
+        DatasetKind::Uniform,
+        DatasetKind::Exponential,
+        DatasetKind::Normal,
+    ];
+
+    /// Lower-case name used by the CLI and CSV output.
+    pub fn name(&self) -> &'static str {
+        match self {
+            DatasetKind::Adversarial => "adversarial",
+            DatasetKind::Uniform => "uniform",
+            DatasetKind::Exponential => "exponential",
+            DatasetKind::Normal => "normal",
+            DatasetKind::Power => "power",
+        }
+    }
+}
+
+impl std::str::FromStr for DatasetKind {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "adversarial" => Ok(DatasetKind::Adversarial),
+            "uniform" => Ok(DatasetKind::Uniform),
+            "exponential" | "exp" => Ok(DatasetKind::Exponential),
+            "normal" | "gaussian" => Ok(DatasetKind::Normal),
+            "power" => Ok(DatasetKind::Power),
+            other => Err(format!(
+                "unknown dataset '{other}' (expected adversarial|uniform|exponential|normal|power)"
+            )),
+        }
+    }
+}
+
+/// Generate peer `peer_id`'s local dataset of `items` values.
+///
+/// Per §7.1, the per-peer distribution parameters are drawn "independently
+/// and uniformly at random by each peer": each peer derives an independent
+/// RNG stream from the master generator, so datasets are reproducible given
+/// the experiment seed and independent across peers.
+pub fn peer_dataset(
+    kind: DatasetKind,
+    peer_id: usize,
+    items: usize,
+    master: &Xoshiro256pp,
+) -> Vec<f64> {
+    let mut rng = master.derive(0x5EED_0000 + peer_id as u64);
+    match kind {
+        DatasetKind::Adversarial => {
+            let spec = AdversarialSpec::for_peer(peer_id);
+            spec.sample_n(&mut rng, items)
+        }
+        DatasetKind::Uniform => {
+            let lo = Uniform::new(1.0, 1e5).sample(&mut rng);
+            let hi = Uniform::new(1e6, 1e7).sample(&mut rng);
+            Uniform::new(lo, hi).sample_n(&mut rng, items)
+        }
+        DatasetKind::Exponential => {
+            let lambda = Uniform::new(0.1, 3.5).sample(&mut rng);
+            Exponential::new(lambda).sample_n(&mut rng, items)
+        }
+        DatasetKind::Normal => {
+            let mean = Uniform::new(1e6, 1e7).sample(&mut rng);
+            let sd = Uniform::new(1e5, 1e6).sample(&mut rng);
+            let d = Normal::new(mean, sd);
+            // Truncate to the sketches' ℝ>0 domain by rejection; with
+            // μ ≥ 10σ this virtually never loops.
+            (0..items)
+                .map(|_| loop {
+                    let x = d.sample(&mut rng);
+                    if x > 0.0 {
+                        break x;
+                    }
+                })
+                .collect()
+        }
+        DatasetKind::Power => {
+            // Real UCI file when supplied (POWER_DATASET env or
+            // data/household_power_consumption.txt): deterministic
+            // per-peer slice with wrap-around; surrogate otherwise.
+            let pool = power::power_dataset_or_surrogate(0, &mut rng);
+            if pool.is_empty() {
+                PowerSurrogate::default().sample_n(&mut rng, items)
+            } else {
+                (0..items)
+                    .map(|k| pool[(peer_id * items + k) % pool.len()])
+                    .collect()
+            }
+        }
+    }
+}
+
+/// Generate all peers' datasets (convenience used by the experiment
+/// harness); row `l` is peer `l`'s local stream.
+pub fn all_peer_datasets(
+    kind: DatasetKind,
+    peers: usize,
+    items: usize,
+    master: &Xoshiro256pp,
+) -> Vec<Vec<f64>> {
+    (0..peers)
+        .map(|l| peer_dataset(kind, l, items, master))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::default_rng;
+
+    #[test]
+    fn kinds_parse_round_trip() {
+        for k in [
+            DatasetKind::Adversarial,
+            DatasetKind::Uniform,
+            DatasetKind::Exponential,
+            DatasetKind::Normal,
+            DatasetKind::Power,
+        ] {
+            let parsed: DatasetKind = k.name().parse().unwrap();
+            assert_eq!(parsed, k);
+        }
+        assert!("nope".parse::<DatasetKind>().is_err());
+    }
+
+    #[test]
+    fn datasets_are_deterministic_per_seed_and_peer() {
+        let m = default_rng(42);
+        let a = peer_dataset(DatasetKind::Uniform, 3, 100, &m);
+        let b = peer_dataset(DatasetKind::Uniform, 3, 100, &m);
+        let c = peer_dataset(DatasetKind::Uniform, 4, 100, &m);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn all_kinds_positive_and_sized() {
+        let m = default_rng(7);
+        for kind in [
+            DatasetKind::Adversarial,
+            DatasetKind::Uniform,
+            DatasetKind::Exponential,
+            DatasetKind::Normal,
+            DatasetKind::Power,
+        ] {
+            let xs = peer_dataset(kind, 0, 500, &m);
+            assert_eq!(xs.len(), 500);
+            assert!(
+                xs.iter().all(|&x| x > 0.0 && x.is_finite()),
+                "{kind:?} produced non-positive values"
+            );
+        }
+    }
+
+    #[test]
+    fn uniform_peers_have_distinct_params() {
+        let m = default_rng(8);
+        let a = peer_dataset(DatasetKind::Uniform, 0, 2000, &m);
+        let b = peer_dataset(DatasetKind::Uniform, 1, 2000, &m);
+        let max_a = a.iter().cloned().fold(f64::MIN, f64::max);
+        let max_b = b.iter().cloned().fold(f64::MIN, f64::max);
+        // Per-peer hi parameters differ with overwhelming probability.
+        assert!((max_a - max_b).abs() > 1.0);
+    }
+}

@@ -1,0 +1,115 @@
+//! The adversarial workload construction of §7.1.
+//!
+//! Base values are uniform in (1, 10²). Peers are partitioned into groups
+//! of at most [`super::ADVERSARIAL_GROUP`] peers; peers in different groups
+//! receive values from **disjoint intervals** chosen so the intervals also
+//! occupy disjoint sets of sketch buckets. Following the authors'
+//! simulator, group `g`'s interval is the base interval scaled by `100^g`:
+//! `(100^g, 100^(g+1))` — consecutive groups share no bucket because the
+//! intervals are separated at the value 100^(g+1) itself.
+//!
+//! This is the distributed-averaging worst case: at round 0 the sketches of
+//! different groups have no bucket in common, so every counter must
+//! propagate across the whole overlay rather than just equalize.
+
+use super::ADVERSARIAL_GROUP;
+use crate::rng::{Rng, Sample, Uniform};
+
+/// Per-peer description of the adversarial input interval.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AdversarialSpec {
+    /// The peer's group `g = peer_id / 100`.
+    pub group: usize,
+    /// Interval lower bound `100^g`.
+    pub lo: f64,
+    /// Interval upper bound `100^(g+1)`.
+    pub hi: f64,
+}
+
+impl AdversarialSpec {
+    /// The spec for a given peer id.
+    ///
+    /// f64 overflows past ~154 groups (100^154 ≈ 1e308); the group index
+    /// therefore wraps at 150 — irrelevant below 15 000 peers, which is the
+    /// paper's maximum network size.
+    pub fn for_peer(peer_id: usize) -> Self {
+        let group = (peer_id / ADVERSARIAL_GROUP) % 150;
+        let lo = 100f64.powi(group as i32);
+        let hi = 100f64.powi(group as i32 + 1);
+        Self { group, lo, hi }
+    }
+
+    /// Draw `n` values: `u · 100^g` with `u` uniform in (1, 100).
+    pub fn sample_n<R: Rng>(&self, rng: &mut R, n: usize) -> Vec<f64> {
+        let base = Uniform::new(1.0, 100.0);
+        (0..n)
+            .map(|_| {
+                // Exclude the exact lower edge so the interval is open as
+                // in the paper ((1,100) scaled).
+                let mut u = base.sample(rng);
+                while u <= 1.0 {
+                    u = base.sample(rng);
+                }
+                u * self.lo
+            })
+            .collect()
+    }
+}
+
+/// The value interval assigned to adversarial group `g` (for tests and
+/// documentation).
+pub fn adversarial_interval(group: usize) -> (f64, f64) {
+    let s = AdversarialSpec::for_peer(group * ADVERSARIAL_GROUP);
+    (s.lo, s.hi)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::default_rng;
+    use crate::sketch::LogMapping;
+
+    #[test]
+    fn groups_of_one_hundred() {
+        assert_eq!(AdversarialSpec::for_peer(0).group, 0);
+        assert_eq!(AdversarialSpec::for_peer(99).group, 0);
+        assert_eq!(AdversarialSpec::for_peer(100).group, 1);
+        assert_eq!(AdversarialSpec::for_peer(14_999).group, 149);
+    }
+
+    #[test]
+    fn values_fall_in_group_interval() {
+        let mut r = default_rng(1);
+        for peer in [0, 150, 742] {
+            let spec = AdversarialSpec::for_peer(peer);
+            let xs = spec.sample_n(&mut r, 1000);
+            assert!(xs.iter().all(|&x| x > spec.lo && x < spec.hi));
+        }
+    }
+
+    #[test]
+    fn different_groups_hit_disjoint_buckets() {
+        // The defining property: with the paper's alpha=0.001, sketch
+        // bucket sets of different groups must not intersect.
+        let mut r = default_rng(2);
+        let map = LogMapping::new(0.001).unwrap();
+        let idx = |peer: usize, r: &mut crate::rng::Xoshiro256pp| {
+            let xs = AdversarialSpec::for_peer(peer).sample_n(r, 2000);
+            let mut is: Vec<i64> = xs.iter().map(|&x| map.index(x)).collect();
+            is.sort_unstable();
+            is.dedup();
+            is
+        };
+        let g0 = idx(0, &mut r);
+        let g1 = idx(100, &mut r);
+        let g2 = idx(200, &mut r);
+        assert!(g0.last().unwrap() < g1.first().unwrap());
+        assert!(g1.last().unwrap() < g2.first().unwrap());
+    }
+
+    #[test]
+    fn interval_helper_matches_spec() {
+        assert_eq!(adversarial_interval(0), (1.0, 100.0));
+        assert_eq!(adversarial_interval(2), (1e4, 1e6));
+    }
+}

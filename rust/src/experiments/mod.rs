@@ -1,0 +1,9 @@
+//! Evaluation harness: re-runs every experiment behind the paper's tables
+//! and figures (§7) and emits the same rows/series (CSV + ASCII box
+//! plots).
+
+mod figures;
+mod runner;
+
+pub use figures::{figure_ids, run_figure, FigureReport};
+pub use runner::{run_with_snapshots, QuantileSnapshot, RunOutcome, Snapshot};

@@ -1,0 +1,206 @@
+//! One distributed run with per-round-count measurement snapshots.
+
+use crate::config::{ExperimentConfig, GraphKind};
+use crate::data::all_peer_datasets;
+use crate::gossip::Protocol;
+use crate::graph::{paper_ba, paper_er, ring_lattice, watts_strogatz, Graph};
+use crate::metrics::{average_relative_error, relative_error, BoxSummary};
+use crate::rng::default_rng;
+use crate::sketch::UddSketch;
+use crate::util::Stopwatch;
+use anyhow::{Context, Result};
+
+/// Per-quantile measurement at one snapshot.
+#[derive(Debug, Clone)]
+pub struct QuantileSnapshot {
+    /// The quantile q.
+    pub q: f64,
+    /// The sequential algorithm's estimate `x̂_q` (the comparison target,
+    /// exactly as in §7: distributed vs sequential, not vs exact).
+    pub truth: f64,
+    /// Average Relative Error across online peers (Eq. 10).
+    pub are: f64,
+    /// Distribution of per-peer relative errors (the paper's boxes).
+    pub box_summary: BoxSummary,
+}
+
+/// Measurements after a given number of rounds.
+#[derive(Debug, Clone)]
+pub struct Snapshot {
+    /// Rounds executed when measured.
+    pub rounds: usize,
+    /// Peers online at measurement time.
+    pub online: usize,
+    /// Per-quantile errors.
+    pub quantiles: Vec<QuantileSnapshot>,
+}
+
+/// A full run: configuration + snapshots + timing.
+#[derive(Debug, Clone)]
+pub struct RunOutcome {
+    /// The configuration executed.
+    pub cfg: ExperimentConfig,
+    /// One entry per requested snapshot round count (ascending).
+    pub snapshots: Vec<Snapshot>,
+    /// Error bound α of the sequential reference after its collapses.
+    pub seq_alpha: f64,
+    /// Wall-clock seconds for the whole run.
+    pub wall_s: f64,
+    /// Total completed push–pull exchanges across all rounds.
+    pub exchanges: usize,
+    /// Total wire traffic in bytes (codec-exact, push + pull frames).
+    pub bytes: usize,
+}
+
+/// Build the overlay prescribed by the config.
+pub fn build_graph(cfg: &ExperimentConfig, master: &crate::rng::Xoshiro256pp) -> Graph {
+    let mut grng = master.derive(0x6EA4);
+    match cfg.graph {
+        GraphKind::BarabasiAlbert => paper_ba(cfg.peers, &mut grng),
+        GraphKind::ErdosRenyi => paper_er(cfg.peers, &mut grng),
+        GraphKind::WattsStrogatz => watts_strogatz(cfg.peers, 5, 0.1, &mut grng),
+        GraphKind::Ring => ring_lattice(cfg.peers, 5),
+    }
+}
+
+/// Run the distributed protocol, measuring at each round count in
+/// `snapshot_rounds` (ascending; deduplicated). The protocol instance is
+/// shared across snapshots — exactly like observing one execution at
+/// several times, which is what the paper's per-round plots depict.
+pub fn run_with_snapshots(
+    cfg: &ExperimentConfig,
+    snapshot_rounds: &[usize],
+) -> Result<RunOutcome> {
+    cfg.validate().map_err(anyhow::Error::msg)?;
+    let sw = Stopwatch::start();
+    let master = default_rng(cfg.seed);
+    let datasets = all_peer_datasets(cfg.dataset, cfg.peers, cfg.items_per_peer, &master);
+
+    // Sequential reference over the union of the local streams.
+    let mut seq: UddSketch = UddSketch::new(cfg.alpha, cfg.max_buckets)
+        .map_err(|e| anyhow::anyhow!(e.to_string()))?;
+    for d in &datasets {
+        seq.extend(d);
+    }
+
+    let graph = build_graph(cfg, &master);
+    let mut proto = Protocol::new(cfg, graph, &datasets, &master)
+        .context("initializing protocol")?;
+
+    let mut points: Vec<usize> = snapshot_rounds.to_vec();
+    points.sort_unstable();
+    points.dedup();
+
+    let mut snapshots = Vec::with_capacity(points.len());
+    for &target in &points {
+        let todo = target.saturating_sub(proto.round());
+        proto.run(todo);
+        snapshots.push(measure(&proto, &seq, &cfg.quantiles));
+    }
+
+    Ok(RunOutcome {
+        cfg: cfg.clone(),
+        snapshots,
+        seq_alpha: seq.alpha(),
+        wall_s: sw.secs(),
+        exchanges: proto.history().iter().map(|h| h.exchanges).sum(),
+        bytes: proto.history().iter().map(|h| h.bytes).sum(),
+    })
+}
+
+/// Measure the current protocol state against the sequential reference.
+fn measure(proto: &Protocol, seq: &UddSketch, quantiles: &[f64]) -> Snapshot {
+    let p = proto.states().len();
+    let online: Vec<usize> = (0..p).filter(|&l| proto.is_online(l)).collect();
+    let quantile_snaps = quantiles
+        .iter()
+        .map(|&q| {
+            let truth = seq.quantile(q).expect("non-empty sequential sketch");
+            let errors: Vec<f64> = online
+                .iter()
+                .map(|&l| {
+                    let est = proto.states()[l].query(q).expect("valid query");
+                    relative_error(est, truth)
+                })
+                .collect();
+            let estimates: Vec<f64> = online
+                .iter()
+                .map(|&l| proto.states()[l].query(q).expect("valid query"))
+                .collect();
+            QuantileSnapshot {
+                q,
+                truth,
+                are: average_relative_error(&estimates, truth),
+                box_summary: BoxSummary::from_data(&errors)
+                    .unwrap_or(BoxSummary {
+                        whisker_lo: 0.0,
+                        q1: 0.0,
+                        median: 0.0,
+                        q3: 0.0,
+                        whisker_hi: 0.0,
+                        min: 0.0,
+                        max: 0.0,
+                        outliers: 0,
+                    }),
+            }
+        })
+        .collect();
+    Snapshot {
+        rounds: proto.round(),
+        online: online.len(),
+        quantiles: quantile_snaps,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::DatasetKind;
+
+    fn tiny_cfg() -> ExperimentConfig {
+        let mut cfg = ExperimentConfig::default();
+        cfg.peers = 48;
+        cfg.items_per_peer = 200;
+        cfg.dataset = DatasetKind::Exponential;
+        cfg.quantiles = vec![0.1, 0.5, 0.9];
+        cfg
+    }
+
+    #[test]
+    fn snapshots_are_measured_at_requested_rounds() {
+        let cfg = tiny_cfg();
+        let out = run_with_snapshots(&cfg, &[2, 5, 10]).unwrap();
+        let rounds: Vec<usize> = out.snapshots.iter().map(|s| s.rounds).collect();
+        assert_eq!(rounds, vec![2, 5, 10]);
+        assert_eq!(out.snapshots[0].quantiles.len(), 3);
+        assert!(out.wall_s > 0.0);
+    }
+
+    #[test]
+    fn errors_decrease_with_rounds() {
+        let cfg = tiny_cfg();
+        let out = run_with_snapshots(&cfg, &[1, 20]).unwrap();
+        let are_early: f64 = out.snapshots[0].quantiles.iter().map(|q| q.are).sum();
+        let are_late: f64 = out.snapshots[1].quantiles.iter().map(|q| q.are).sum();
+        assert!(
+            are_late <= are_early,
+            "ARE should not grow: {are_early} -> {are_late}"
+        );
+        assert!(are_late < 1e-3, "late total ARE {are_late}");
+    }
+
+    #[test]
+    fn er_graph_variant_runs() {
+        let mut cfg = tiny_cfg();
+        cfg.graph = GraphKind::ErdosRenyi;
+        let out = run_with_snapshots(&cfg, &[5]).unwrap();
+        assert_eq!(out.snapshots.len(), 1);
+    }
+
+    #[test]
+    fn duplicate_snapshot_rounds_deduped() {
+        let cfg = tiny_cfg();
+        let out = run_with_snapshots(&cfg, &[3, 3, 3]).unwrap();
+        assert_eq!(out.snapshots.len(), 1);
+    }
+}

@@ -1,0 +1,477 @@
+//! The synchronous gossip round engine (Algorithm 4).
+//!
+//! Two round modes are provided:
+//!
+//! * [`RoundMode::Sequential`] — Jelasity et al.'s simulation method, the
+//!   one the paper's analysis assumes (§4.1): a random permutation of the
+//!   peers is drawn and each peer in turn initiates an atomic push–pull
+//!   with `fan-out` random online neighbours. A peer may be *contacted*
+//!   several times per round; every exchange is atomic (the sequential
+//!   simulation interleaves nothing), giving the convergence factor
+//!   `E[2^{-ψ}] = 1/(2√e)` of Theorem 3.
+//! * [`RoundMode::Matched`] — the simultaneous variant of Definition 9:
+//!   a random matching of noninteracting pairs is drawn and all pairs
+//!   exchange at once. This is the dense, batchable formulation the PJRT
+//!   executor accelerates; it converges with factor ≈ matching-coverage/2
+//!   per round (slower per round, identical fixed point).
+//!
+//! Churn semantics (§7.2): peers offline this round neither initiate nor
+//! respond; an exchange with a peer that fails mid-exchange is cancelled
+//! with both endpoints keeping (restoring) their pre-exchange state —
+//! modelled by [`Protocol::set_exchange_drop`] failure injection.
+
+use super::executor::{DenseRound, NativeExecutor, RoundExecutor};
+use super::state::PeerState;
+use crate::churn::ChurnModel;
+use crate::config::{ExecutorKind, ExperimentConfig};
+use crate::graph::Graph;
+use crate::rng::{Rng, Xoshiro256pp};
+use anyhow::{bail, Context};
+
+/// Exchange scheduling discipline for a round.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RoundMode {
+    /// Permutation-ordered atomic push–pull (paper/Jelasity model).
+    Sequential,
+    /// Simultaneous noninteracting pairs (dense/batched model).
+    Matched,
+}
+
+/// Telemetry for one executed round.
+#[derive(Debug, Clone, Copy)]
+pub struct RoundStats {
+    /// Round number (0-based).
+    pub round: usize,
+    /// Completed push–pull exchanges.
+    pub exchanges: usize,
+    /// Exchanges cancelled by failure injection.
+    pub dropped: usize,
+    /// Peers online during the round.
+    pub online: usize,
+    /// Wire traffic this round (push + pull frames, codec byte-exact).
+    pub bytes: usize,
+}
+
+/// The distributed protocol over one overlay.
+pub struct Protocol {
+    graph: Graph,
+    states: Vec<PeerState>,
+    churn: ChurnModel,
+    rng: Xoshiro256pp,
+    fan_out: usize,
+    mode: RoundMode,
+    executor: Box<dyn RoundExecutor>,
+    round: usize,
+    exchange_drop: f64,
+    history: Vec<RoundStats>,
+}
+
+impl Protocol {
+    /// Initialize all peers (Algorithm 3) over `graph` with one local
+    /// dataset per peer.
+    pub fn new(
+        cfg: &ExperimentConfig,
+        graph: Graph,
+        datasets: &[Vec<f64>],
+        master: &Xoshiro256pp,
+    ) -> anyhow::Result<Self> {
+        if graph.len() != datasets.len() {
+            bail!(
+                "graph has {} vertices but {} datasets supplied",
+                graph.len(),
+                datasets.len()
+            );
+        }
+        cfg.validate().map_err(anyhow::Error::msg)?;
+        let states = init_states(datasets, cfg.alpha, cfg.max_buckets)?;
+        let churn = ChurnModel::new(cfg.churn, graph.len(), master);
+        let (executor, mode): (Box<dyn RoundExecutor>, RoundMode) = match cfg.executor {
+            ExecutorKind::Native => (Box::new(NativeExecutor), RoundMode::Sequential),
+            ExecutorKind::Pjrt => (
+                Box::new(
+                    super::executor::PjrtExecutor::discover(cfg.peers)
+                        .context("PJRT executor init (run `make artifacts`?)")?,
+                ),
+                RoundMode::Matched,
+            ),
+        };
+        Ok(Self {
+            graph,
+            states,
+            churn,
+            rng: master.derive(0x905C),
+            fan_out: cfg.fan_out,
+            mode,
+            executor,
+            round: 0,
+            exchange_drop: 0.0,
+            history: Vec::new(),
+        })
+    }
+
+    /// Override the round mode (e.g. `Matched` with the native executor,
+    /// used by the Native≡PJRT integration tests).
+    pub fn set_mode(&mut self, mode: RoundMode) {
+        self.mode = mode;
+    }
+
+    /// Failure injection: probability that any single exchange is
+    /// cancelled mid-flight (both endpoints restore their state, §7.2).
+    pub fn set_exchange_drop(&mut self, p: f64) {
+        assert!((0.0..=1.0).contains(&p));
+        self.exchange_drop = p;
+    }
+
+    /// Peer states (peer `l` at index `l`).
+    pub fn states(&self) -> &[PeerState] {
+        &self.states
+    }
+
+    /// The overlay.
+    pub fn graph(&self) -> &Graph {
+        &self.graph
+    }
+
+    /// Rounds executed so far.
+    pub fn round(&self) -> usize {
+        self.round
+    }
+
+    /// Per-round telemetry.
+    pub fn history(&self) -> &[RoundStats] {
+        &self.history
+    }
+
+    /// Online status of peer `l` (after the last `churn` step).
+    pub fn is_online(&self, l: usize) -> bool {
+        self.churn.is_online(l)
+    }
+
+    /// Execute `rounds` more gossip rounds.
+    pub fn run(&mut self, rounds: usize) {
+        for _ in 0..rounds {
+            self.run_round();
+        }
+    }
+
+    /// Execute a single round (Algorithm 4's outer loop body).
+    pub fn run_round(&mut self) {
+        self.churn.step();
+        let p = self.states.len();
+        let online = self.churn.online_mask(p);
+        let stats = match self.mode {
+            RoundMode::Sequential => self.round_sequential(&online),
+            RoundMode::Matched => self.round_matched(&online),
+        };
+        self.history.push(stats);
+        self.round += 1;
+    }
+
+    fn round_sequential(&mut self, online: &[bool]) -> RoundStats {
+        let p = self.states.len();
+        let mut exchanges = 0;
+        let mut dropped = 0;
+        let mut bytes = 0usize;
+        let order = self.rng.permutation(p);
+        let mut scratch: Vec<usize> = Vec::new();
+        for &l in &order {
+            if !online[l] {
+                continue;
+            }
+            // Select `fan_out` distinct online neighbours of l.
+            scratch.clear();
+            scratch.extend(
+                self.graph
+                    .neighbours(l)
+                    .iter()
+                    .copied()
+                    .filter(|&j| online[j]),
+            );
+            if scratch.is_empty() {
+                continue;
+            }
+            let k = self.fan_out.min(scratch.len());
+            // Partial Fisher–Yates: first k entries become the selection.
+            for i in 0..k {
+                let j = i + self.rng.index(scratch.len() - i);
+                scratch.swap(i, j);
+            }
+            for idx in 0..k {
+                let j = scratch[idx];
+                if self.exchange_drop > 0.0 && self.rng.chance(self.exchange_drop) {
+                    dropped += 1;
+                    continue; // §7.2: cancelled exchange, both states kept
+                }
+                // Push carries the sender's pre-exchange state; the pull
+                // reply carries the merged one (sizes computed around the
+                // in-place exchange).
+                bytes += crate::sketch::codec::peer_state_wire_size(&self.states[l]);
+                {
+                    let (lo, hi) = self.states.split_at_mut(l.max(j));
+                    let (a, b) = if l < j {
+                        (&mut lo[l], &mut hi[0])
+                    } else {
+                        (&mut hi[0], &mut lo[j])
+                    };
+                    PeerState::exchange(a, b)
+                        .expect("same alpha0 lineage by construction");
+                }
+                bytes += crate::sketch::codec::peer_state_wire_size(&self.states[j]);
+                exchanges += 1;
+            }
+        }
+        RoundStats {
+            round: self.round,
+            exchanges,
+            dropped,
+            online: online.iter().filter(|&&b| b).count(),
+            bytes,
+        }
+    }
+
+    fn round_matched(&mut self, online: &[bool]) -> RoundStats {
+        let p = self.states.len();
+        let mut partner: Vec<usize> = (0..p).collect();
+        let order = self.rng.permutation(p);
+        let mut exchanges = 0;
+        let mut dropped = 0;
+        for &l in &order {
+            if !online[l] || partner[l] != l {
+                continue;
+            }
+            let candidates: Vec<usize> = self
+                .graph
+                .neighbours(l)
+                .iter()
+                .copied()
+                .filter(|&j| online[j] && partner[j] == j && j != l)
+                .collect();
+            if candidates.is_empty() {
+                continue;
+            }
+            let j = candidates[self.rng.index(candidates.len())];
+            if self.exchange_drop > 0.0 && self.rng.chance(self.exchange_drop) {
+                dropped += 1;
+                continue;
+            }
+            partner[l] = j;
+            partner[j] = l;
+            exchanges += 1;
+        }
+        // Dense batched averaging over the noninteracting pairs.
+        let width = self.executor.preferred_width();
+        let max_peers = self.executor.max_peers();
+        if let Some(cap) = max_peers {
+            assert!(
+                p <= cap,
+                "executor supports at most {cap} peers, got {p}"
+            );
+        }
+        let mut dense = DenseRound::build(&mut self.states, &partner, width)
+            .expect("dense build (positive-domain data)");
+        self.executor
+            .average(&mut dense)
+            .expect("executor round failure");
+        dense.write_back(&mut self.states);
+        let bytes: usize = (0..p)
+            .filter(|&l| partner[l] > l)
+            .map(|l| {
+                crate::sketch::codec::peer_state_wire_size(&self.states[l])
+                    + crate::sketch::codec::peer_state_wire_size(&self.states[partner[l]])
+            })
+            .sum();
+        RoundStats {
+            round: self.round,
+            exchanges,
+            dropped,
+            online: online.iter().filter(|&&b| b).count(),
+            bytes,
+        }
+    }
+
+    /// Query every peer for quantile `q` (the experiments' measurement).
+    pub fn query_all(&self, q: f64) -> Vec<f64> {
+        self.states
+            .iter()
+            .map(|s| s.query(q).expect("valid q, non-empty sketches"))
+            .collect()
+    }
+}
+
+/// Build all peers' initial states, in parallel across available cores
+/// (local stream processing is embarrassingly parallel).
+fn init_states(
+    datasets: &[Vec<f64>],
+    alpha: f64,
+    max_buckets: usize,
+) -> anyhow::Result<Vec<PeerState>> {
+    let n = datasets.len();
+    let threads = std::thread::available_parallelism()
+        .map(|c| c.get())
+        .unwrap_or(1)
+        .min(n.max(1));
+    if threads <= 1 || n < 64 {
+        return (0..n)
+            .map(|l| {
+                PeerState::init(l, &datasets[l], alpha, max_buckets)
+                    .map_err(anyhow::Error::from)
+            })
+            .collect();
+    }
+    let chunk = n.div_ceil(threads);
+    let mut out: Vec<Option<PeerState>> = vec![None; n];
+    std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for (t, slots) in out.chunks_mut(chunk).enumerate() {
+            let lo = t * chunk;
+            let data = &datasets[lo..(lo + slots.len())];
+            handles.push(scope.spawn(move || {
+                for (k, slot) in slots.iter_mut().enumerate() {
+                    *slot = Some(
+                        PeerState::init(lo + k, &data[k], alpha, max_buckets)
+                            .expect("valid sketch params"),
+                    );
+                }
+            }));
+        }
+        for h in handles {
+            h.join().expect("init worker panicked");
+        }
+    });
+    Ok(out.into_iter().map(|s| s.expect("filled")).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ExperimentConfig;
+    use crate::data::{all_peer_datasets, DatasetKind};
+    use crate::graph::paper_ba;
+    use crate::metrics::{mean, variance_around};
+    use crate::rng::default_rng;
+
+    fn small_proto(peers: usize, seed: u64) -> Protocol {
+        let mut cfg = ExperimentConfig::default();
+        cfg.peers = peers;
+        cfg.items_per_peer = 100;
+        cfg.seed = seed;
+        cfg.dataset = DatasetKind::Exponential;
+        let master = default_rng(seed);
+        let datasets =
+            all_peer_datasets(cfg.dataset, peers, cfg.items_per_peer, &master);
+        let mut grng = master.derive(0x6EA4);
+        let graph = paper_ba(peers, &mut grng);
+        Protocol::new(&cfg, graph, &datasets, &master).unwrap()
+    }
+
+    #[test]
+    fn mass_conservation_without_churn() {
+        // Invariant 5 (DESIGN.md): the sum (equivalently mean) of every
+        // averaged quantity is invariant under exchanges.
+        let mut p = small_proto(50, 1);
+        let sum_n: f64 = p.states().iter().map(|s| s.n_tilde).sum();
+        let sum_q: f64 = p.states().iter().map(|s| s.q_tilde).sum();
+        let sum_c: f64 = p.states().iter().map(|s| s.sketch.count()).sum();
+        p.run(10);
+        let sum_n2: f64 = p.states().iter().map(|s| s.n_tilde).sum();
+        let sum_q2: f64 = p.states().iter().map(|s| s.q_tilde).sum();
+        let sum_c2: f64 = p.states().iter().map(|s| s.sketch.count()).sum();
+        assert!((sum_n - sum_n2).abs() < 1e-6 * sum_n.abs());
+        assert!((sum_q - sum_q2).abs() < 1e-9, "q mass {sum_q} -> {sum_q2}");
+        assert!((sum_c - sum_c2).abs() < 1e-6 * sum_c.abs());
+    }
+
+    #[test]
+    fn variance_contracts_near_jelasity_factor() {
+        // Theorem 3 / §4.1: per-round variance reduction ≈ 1/(2√e) ≈ 0.303
+        // for the permutation-based pair selection. Measured on q̃ (the
+        // only scalar with non-zero initial variance: 1 at peer 0, else 0).
+        // Loose band: the neighbour restriction on a BA overlay slows
+        // mixing slightly.
+        let mut p = small_proto(400, 2);
+        let true_mean = 1.0 / 400.0;
+        let mut factors = Vec::new();
+        let mut prev = {
+            let v: Vec<f64> = p.states().iter().map(|s| s.q_tilde).collect();
+            variance_around(&v, true_mean)
+        };
+        for _ in 0..8 {
+            p.run(1);
+            let v: Vec<f64> = p.states().iter().map(|s| s.q_tilde).collect();
+            let var = variance_around(&v, true_mean);
+            if prev > 1e-30 {
+                factors.push(var / prev);
+            }
+            prev = var;
+        }
+        let avg_factor = mean(&factors);
+        assert!(
+            (0.15..0.55).contains(&avg_factor),
+            "mean contraction {avg_factor}, factors {factors:?}"
+        );
+    }
+
+    #[test]
+    fn matched_mode_also_converges() {
+        let mut p = small_proto(80, 3);
+        p.set_mode(RoundMode::Matched);
+        let true_mean = mean(
+            &p.states()
+                .iter()
+                .map(|s| s.n_tilde)
+                .collect::<Vec<_>>(),
+        );
+        p.run(40);
+        for s in p.states() {
+            assert!(
+                (s.n_tilde - true_mean).abs() < 1e-6 * true_mean.max(1.0),
+                "peer {} n_tilde {} vs {}",
+                s.id,
+                s.n_tilde,
+                true_mean
+            );
+        }
+    }
+
+    #[test]
+    fn exchange_drop_slows_but_preserves_mass() {
+        let mut p = small_proto(60, 4);
+        p.set_exchange_drop(0.5);
+        let sum_q: f64 = p.states().iter().map(|s| s.q_tilde).sum();
+        p.run(10);
+        let sum_q2: f64 = p.states().iter().map(|s| s.q_tilde).sum();
+        assert!((sum_q - sum_q2).abs() < 1e-9);
+        let dropped: usize = p.history().iter().map(|h| h.dropped).sum();
+        assert!(dropped > 0, "injection should cancel some exchanges");
+    }
+
+    #[test]
+    fn history_records_rounds() {
+        let mut p = small_proto(30, 5);
+        p.run(7);
+        assert_eq!(p.history().len(), 7);
+        assert_eq!(p.round(), 7);
+        assert!(p.history().iter().all(|h| h.online == 30));
+        assert!(p.history().iter().all(|h| h.exchanges > 0));
+    }
+
+    #[test]
+    fn offline_peers_do_not_exchange() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.peers = 40;
+        cfg.items_per_peer = 50;
+        cfg.churn = crate::churn::ChurnKind::FailStop;
+        let master = default_rng(6);
+        let datasets =
+            all_peer_datasets(DatasetKind::Uniform, 40, 50, &master);
+        let mut grng = master.derive(0x6EA4);
+        let graph = paper_ba(40, &mut grng);
+        let mut p = Protocol::new(&cfg, graph, &datasets, &master).unwrap();
+        p.run(30);
+        let h = p.history();
+        // With fail&stop, online count is non-increasing.
+        for w in h.windows(2) {
+            assert!(w[1].online <= w[0].online);
+        }
+    }
+}

@@ -1,0 +1,387 @@
+//! Batched averaging-round executors.
+//!
+//! [`RoundMode::Matched`](super::RoundMode) rounds operate on a **dense
+//! network state matrix**: row `l` is peer `l`'s state `[bucket counters
+//! (window W) | Ñ | q̃]`, all rows sharing one γ lineage and one index
+//! window. The matrix plus a partner vector feed a [`RoundExecutor`]:
+//!
+//! * [`NativeExecutor`] — pure-Rust pairwise averaging (reference).
+//! * [`PjrtExecutor`] — the AOT-compiled JAX/Pallas `avg_pairs` artifact
+//!   executed on the PJRT CPU client; numerics are f32, everything else is
+//!   identical (asserted by `rust/tests/integration_runtime.rs`).
+
+use super::state::PeerState;
+use crate::runtime::{list_shaped_artifacts, Executable, Runtime};
+use crate::sketch::Store;
+use anyhow::{bail, Context, Result};
+
+/// Dense formulation of one matched gossip round.
+#[derive(Debug)]
+pub struct DenseRound {
+    /// Live peers (rows 0..peers; executors may pad beyond).
+    pub peers: usize,
+    /// Bucket window width W (columns 0..W are counters).
+    pub width: usize,
+    /// Logarithmic index of column 0.
+    pub offset: i64,
+    /// Row-major `[peers × (width + 2)]`: counters, then Ñ, then q̃.
+    pub matrix: Vec<f64>,
+    /// `partner[l]` = exchange partner of `l` (== `l` when idle). The
+    /// vector is an involution with no fixed-point violations: pairs are
+    /// noninteracting (Definition 9).
+    pub partner: Vec<usize>,
+}
+
+impl DenseRound {
+    /// Columns per row.
+    pub fn cols(&self) -> usize {
+        self.width + 2
+    }
+
+    /// Build the dense matrix from peer states:
+    ///
+    /// 1. align every sketch to the deepest collapse lineage present;
+    /// 2. compute the global index window; if `max_width` is given,
+    ///    collapse **all** peers until the window fits (this may collapse
+    ///    earlier than the sequential path would — the fixed point is
+    ///    unchanged, resolution is what a global merge would settle to);
+    /// 3. write counters + scalars row-major.
+    ///
+    /// Fails if any sketch holds zero/negative-domain weight: the dense
+    /// path (like Algorithm 6 and the paper's experiments) covers ℝ>0.
+    pub fn build(
+        states: &mut [PeerState],
+        partner: &[usize],
+        max_width: Option<usize>,
+    ) -> Result<Self> {
+        assert_eq!(states.len(), partner.len());
+        for (l, s) in states.iter().enumerate() {
+            if s.sketch.zero_weight() != 0.0 || !s.sketch.negative_store().is_empty() {
+                bail!("dense round: peer {l} holds non-positive-domain weight");
+            }
+            if partner[l] != l {
+                assert_eq!(partner[partner[l]], l, "partner vector not an involution");
+            }
+        }
+        let deepest = states
+            .iter()
+            .map(|s| s.sketch.collapses())
+            .max()
+            .unwrap_or(0);
+        for s in states.iter_mut() {
+            s.sketch.align_to_collapses(deepest);
+        }
+        let window = |states: &[PeerState]| -> Option<(i64, i64)> {
+            let mut lo = i64::MAX;
+            let mut hi = i64::MIN;
+            for s in states {
+                if let (Some(a), Some(b)) = (
+                    s.sketch.positive_store().min_index(),
+                    s.sketch.positive_store().max_index(),
+                ) {
+                    lo = lo.min(a);
+                    hi = hi.max(b);
+                }
+            }
+            (lo <= hi).then_some((lo, hi))
+        };
+        let (mut lo, mut hi) = window(states)
+            .ok_or_else(|| anyhow::anyhow!("dense round: all sketches empty"))?;
+        if let Some(w) = max_width {
+            while (hi - lo + 1) as usize > w {
+                for s in states.iter_mut() {
+                    s.sketch.force_collapse();
+                }
+                let (l2, h2) = window(states).expect("non-empty");
+                lo = l2;
+                hi = h2;
+            }
+        }
+        let width = max_width.unwrap_or((hi - lo + 1) as usize);
+        let peers = states.len();
+        let cols = width + 2;
+        let mut matrix = vec![0.0; peers * cols];
+        for (l, s) in states.iter().enumerate() {
+            let row = &mut matrix[l * cols..(l + 1) * cols];
+            s.sketch.positive_store().for_each(|i, c| {
+                let k = (i - lo) as usize;
+                debug_assert!(k < width);
+                row[k] = c;
+            });
+            row[width] = s.n_tilde;
+            row[width + 1] = s.q_tilde;
+        }
+        Ok(Self {
+            peers,
+            width,
+            offset: lo,
+            matrix,
+            partner: partner.to_vec(),
+        })
+    }
+
+    /// Write the (averaged) matrix back into the peer states.
+    pub fn write_back(&self, states: &mut [PeerState]) {
+        let cols = self.cols();
+        for (l, s) in states.iter_mut().enumerate() {
+            let row = &self.matrix[l * cols..(l + 1) * cols];
+            s.sketch.set_positive_dense(self.offset, &row[..self.width]);
+            s.n_tilde = row[self.width];
+            s.q_tilde = row[self.width + 1];
+        }
+    }
+}
+
+/// Strategy executing the dense averaging of one matched round.
+pub trait RoundExecutor {
+    /// Human-readable name for logs/benches.
+    fn name(&self) -> &'static str;
+
+    /// Fixed bucket-window width this executor needs (None = any width).
+    fn preferred_width(&self) -> Option<usize>;
+
+    /// Maximum number of peers supported (None = unbounded).
+    fn max_peers(&self) -> Option<usize>;
+
+    /// Average all paired rows in place: for every pair `(l, j)`,
+    /// rows l and j both become `(row_l + row_j) / 2`.
+    fn average(&mut self, round: &mut DenseRound) -> Result<()>;
+}
+
+/// Pure-Rust reference executor.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct NativeExecutor;
+
+impl RoundExecutor for NativeExecutor {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn preferred_width(&self) -> Option<usize> {
+        None
+    }
+
+    fn max_peers(&self) -> Option<usize> {
+        None
+    }
+
+    fn average(&mut self, round: &mut DenseRound) -> Result<()> {
+        let cols = round.cols();
+        for l in 0..round.peers {
+            let j = round.partner[l];
+            if j <= l {
+                continue; // idle (j == l) or already handled (j < l)
+            }
+            let (a, b) = round.matrix.split_at_mut(j * cols);
+            let row_l = &mut a[l * cols..(l + 1) * cols];
+            let row_j = &mut b[..cols];
+            for (x, y) in row_l.iter_mut().zip(row_j.iter_mut()) {
+                let avg = 0.5 * (*x + *y);
+                *x = avg;
+                *y = avg;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// PJRT executor: runs the `avg_pairs_p<P>_w<W>` artifact.
+pub struct PjrtExecutor {
+    runtime: Runtime,
+    exe: std::rc::Rc<Executable>,
+    /// Artifact's static peer capacity.
+    p_cap: usize,
+    /// Artifact's static bucket window.
+    w_cap: usize,
+}
+
+impl std::fmt::Debug for PjrtExecutor {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "PjrtExecutor(p={}, w={})", self.p_cap, self.w_cap)
+    }
+}
+
+impl PjrtExecutor {
+    /// Pick the smallest `avg_pairs` artifact that fits `peers`, compile
+    /// it, and return the executor.
+    pub fn discover(peers: usize) -> Result<Self> {
+        let shapes = list_shaped_artifacts("avg_pairs");
+        let (p_cap, w_cap, path) = shapes
+            .into_iter()
+            .find(|(p, _, _)| *p >= peers)
+            .with_context(|| {
+                format!(
+                    "no avg_pairs artifact with P >= {peers} in {} (run `make artifacts`)",
+                    crate::runtime::artifacts_dir().display()
+                )
+            })?;
+        let mut runtime = Runtime::cpu()?;
+        let exe = runtime.load_path(&path)?;
+        Ok(Self {
+            runtime,
+            exe,
+            p_cap,
+            w_cap,
+        })
+    }
+
+    /// Build directly from a known artifact (tests).
+    pub fn from_artifact(name: &str, p_cap: usize, w_cap: usize) -> Result<Self> {
+        let mut runtime = Runtime::cpu()?;
+        let exe = runtime.load(name)?;
+        Ok(Self {
+            runtime,
+            exe,
+            p_cap,
+            w_cap,
+        })
+    }
+
+    /// The underlying runtime (for diagnostics).
+    pub fn runtime(&self) -> &Runtime {
+        &self.runtime
+    }
+}
+
+impl RoundExecutor for PjrtExecutor {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn preferred_width(&self) -> Option<usize> {
+        Some(self.w_cap)
+    }
+
+    fn max_peers(&self) -> Option<usize> {
+        Some(self.p_cap)
+    }
+
+    fn average(&mut self, round: &mut DenseRound) -> Result<()> {
+        if round.width != self.w_cap {
+            bail!(
+                "dense width {} != artifact window {}",
+                round.width,
+                self.w_cap
+            );
+        }
+        if round.peers > self.p_cap {
+            bail!("{} peers > artifact capacity {}", round.peers, self.p_cap);
+        }
+        let cols = round.cols();
+        // Pad rows to the artifact's static P; padded rows self-pair.
+        let mut states_f32 = vec![0f32; self.p_cap * cols];
+        for (dst, src) in states_f32
+            .chunks_mut(cols)
+            .zip(round.matrix.chunks(cols))
+        {
+            for (d, s) in dst.iter_mut().zip(src.iter()) {
+                *d = *s as f32;
+            }
+        }
+        let mut partner_i32: Vec<i32> = (0..self.p_cap as i32).collect();
+        for (l, &j) in round.partner.iter().enumerate() {
+            partner_i32[l] = j as i32;
+        }
+        let states_lit = xla::Literal::vec1(&states_f32)
+            .reshape(&[self.p_cap as i64, cols as i64])?;
+        let partner_lit = xla::Literal::vec1(&partner_i32);
+        let out = self.exe.run1(&[states_lit, partner_lit])?;
+        let flat: Vec<f32> = out.to_vec()?;
+        if flat.len() != self.p_cap * cols {
+            bail!(
+                "artifact returned {} elements, expected {}",
+                flat.len(),
+                self.p_cap * cols
+            );
+        }
+        for (dst, src) in round
+            .matrix
+            .chunks_mut(cols)
+            .zip(flat.chunks(cols))
+        {
+            for (d, s) in dst.iter_mut().zip(src.iter()) {
+                *d = *s as f64;
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gossip::PeerState;
+
+    fn mk_states() -> Vec<PeerState> {
+        vec![
+            PeerState::init(0, &[1.0, 2.0, 4.0], 0.01, 64).unwrap(),
+            PeerState::init(1, &[8.0, 16.0], 0.01, 64).unwrap(),
+            PeerState::init(2, &[32.0], 0.01, 64).unwrap(),
+            PeerState::init(3, &[64.0, 128.0], 0.01, 64).unwrap(),
+        ]
+    }
+
+    #[test]
+    fn dense_round_trip_is_lossless() {
+        let mut states = mk_states();
+        let before: Vec<_> = states
+            .iter()
+            .map(|s| (s.sketch.positive_store().entries(), s.n_tilde, s.q_tilde))
+            .collect();
+        let partner = vec![0, 1, 2, 3];
+        let dense = DenseRound::build(&mut states, &partner, None).unwrap();
+        dense.write_back(&mut states);
+        for (s, (e, n, q)) in states.iter().zip(&before) {
+            assert_eq!(&s.sketch.positive_store().entries(), e);
+            assert_eq!(s.n_tilde, *n);
+            assert_eq!(s.q_tilde, *q);
+        }
+    }
+
+    #[test]
+    fn native_average_pairs_rows() {
+        let mut states = mk_states();
+        let n_before: Vec<f64> = states.iter().map(|s| s.n_tilde).collect();
+        let partner = vec![1, 0, 3, 2];
+        let mut dense = DenseRound::build(&mut states, &partner, None).unwrap();
+        NativeExecutor.average(&mut dense).unwrap();
+        dense.write_back(&mut states);
+        assert_eq!(states[0].n_tilde, 0.5 * (n_before[0] + n_before[1]));
+        assert_eq!(states[0].n_tilde, states[1].n_tilde);
+        assert_eq!(states[2].n_tilde, 0.5 * (n_before[2] + n_before[3]));
+        // q mass conserved.
+        let q_sum: f64 = states.iter().map(|s| s.q_tilde).sum();
+        assert!((q_sum - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn dense_respects_max_width_by_collapsing() {
+        let mut states = mk_states();
+        // Natural window for values 1..128 at alpha=0.01 spans ~350
+        // indices; cap at 64 must trigger collapses.
+        let partner = vec![0, 1, 2, 3];
+        let dense = DenseRound::build(&mut states, &partner, Some(64)).unwrap();
+        assert_eq!(dense.width, 64);
+        assert!(states.iter().all(|s| s.sketch.collapses() > 0));
+        // Total count preserved through collapse + round trip.
+        dense.write_back(&mut states);
+        let total: f64 = states.iter().map(|s| s.sketch.count()).sum();
+        assert!((total - 8.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn dense_rejects_non_positive_domain() {
+        let mut states = mk_states();
+        states[1].sketch.insert(-5.0);
+        let partner = vec![0, 1, 2, 3];
+        assert!(DenseRound::build(&mut states, &partner, None).is_err());
+    }
+
+    #[test]
+    #[should_panic(expected = "involution")]
+    fn dense_rejects_non_involution_partner() {
+        let mut states = mk_states();
+        let partner = vec![1, 2, 0, 3];
+        let _ = DenseRound::build(&mut states, &partner, None);
+    }
+}

@@ -1,0 +1,105 @@
+//! Distributed UDDSketch — the paper's gossip protocol (§5).
+//!
+//! Every peer holds a [`PeerState`] `(S_l, Ñ_l, q̃_l)` (Algorithm 3). Each
+//! synchronous round, peers engage in atomic push–pull exchanges with
+//! random neighbours (Algorithm 4); an exchange replaces both states with
+//! their average: sketches merge bucket-wise with weight ½ (Algorithm 5),
+//! `Ñ` and `q̃` average arithmetically. Distributed averaging drives every
+//! peer to the average of the round-0 states (Prop. 4), from which
+//! Algorithm 6 reconstructs the *global* sketch via the network-size
+//! estimate `p̃ = ⌈1/q̃⌉` and answers quantile queries.
+
+mod engine;
+mod executor;
+mod state;
+
+pub use engine::{Protocol, RoundMode, RoundStats};
+pub use executor::{DenseRound, NativeExecutor, PjrtExecutor, RoundExecutor};
+pub use state::{GossipSketch, PeerState};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ExperimentConfig;
+    use crate::data::{all_peer_datasets, DatasetKind};
+    use crate::graph::paper_ba;
+    use crate::metrics::relative_error;
+    use crate::rng::default_rng;
+    use crate::sketch::UddSketch;
+
+    /// Full-protocol convergence: after enough rounds every peer answers
+    /// quantile queries with (near-)zero relative error vs the sequential
+    /// sketch over the union of the local streams — the paper's headline
+    /// claim (§6, §7).
+    #[test]
+    fn protocol_converges_to_sequential() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.peers = 64;
+        cfg.items_per_peer = 500;
+        cfg.rounds = 30;
+        cfg.dataset = DatasetKind::Uniform;
+        cfg.alpha = 0.001;
+        let master = default_rng(cfg.seed);
+        let datasets = all_peer_datasets(cfg.dataset, cfg.peers, cfg.items_per_peer, &master);
+
+        let mut seq: UddSketch = UddSketch::new(cfg.alpha, cfg.max_buckets).unwrap();
+        for d in &datasets {
+            seq.extend(d);
+        }
+
+        let mut graph_rng = master.derive(0x6EA4);
+        let graph = paper_ba(cfg.peers, &mut graph_rng);
+        let mut proto = Protocol::new(&cfg, graph, &datasets, &master).unwrap();
+        proto.run(cfg.rounds);
+
+        for &q in &[0.01, 0.5, 0.99] {
+            let truth = seq.quantile(q).unwrap();
+            for l in 0..cfg.peers {
+                let est = proto.states()[l].query(q).unwrap();
+                let re = relative_error(est, truth);
+                assert!(
+                    re < 1e-6,
+                    "peer {l} q={q}: est {est} vs seq {truth} (re={re})"
+                );
+            }
+        }
+    }
+
+    /// The adversarial construction needs more rounds but still converges
+    /// (paper Figs. 1–2).
+    #[test]
+    fn adversarial_converges_slower_but_converges() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.peers = 300; // 3 disjoint-bucket groups
+        cfg.items_per_peer = 200;
+        cfg.dataset = DatasetKind::Adversarial;
+        let master = default_rng(7);
+        let datasets = all_peer_datasets(cfg.dataset, cfg.peers, cfg.items_per_peer, &master);
+        let mut seq: UddSketch = UddSketch::new(cfg.alpha, cfg.max_buckets).unwrap();
+        for d in &datasets {
+            seq.extend(d);
+        }
+        let mut graph_rng = master.derive(0x6EA4);
+        let graph = paper_ba(cfg.peers, &mut graph_rng);
+        let mut proto = Protocol::new(&cfg, graph, &datasets, &master).unwrap();
+
+        proto.run(5);
+        let truth = seq.quantile(0.5).unwrap();
+        let early: f64 = (0..cfg.peers)
+            .map(|l| relative_error(proto.states()[l].query(0.5).unwrap(), truth))
+            .sum::<f64>()
+            / cfg.peers as f64;
+
+        proto.run(30);
+        let late: f64 = (0..cfg.peers)
+            .map(|l| relative_error(proto.states()[l].query(0.5).unwrap(), truth))
+            .sum::<f64>()
+            / cfg.peers as f64;
+
+        assert!(
+            late < early / 10.0 || late < 1e-9,
+            "ARE should collapse: early {early} late {late}"
+        );
+        assert!(late < 1e-3, "late ARE {late}");
+    }
+}

@@ -1,0 +1,274 @@
+//! Per-peer protocol state (Algorithm 3) and the distributed quantile
+//! query (Algorithm 6).
+
+use crate::sketch::{DenseStore, SketchError, Store, UddSketch, VecStore};
+
+/// Sketch type carried by gossip peers: sorted-vector backed, so memory is
+/// proportional to live buckets (≤ m) rather than to the index span —
+/// essential on the adversarial workload, where a cross-group merge spans
+/// hundreds of thousands of indices before collapses catch up — and the
+/// per-exchange merge is a linear two-pointer pass (§Perf in
+/// EXPERIMENTS.md: ~14× over the BTreeMap store it replaced).
+pub type GossipSketch = UddSketch<VecStore>;
+
+/// The state `(S_l, Ñ_l, q̃_l)` a peer carries through the protocol.
+#[derive(Debug, Clone)]
+pub struct PeerState {
+    /// Peer identifier `l` (1-based in the paper; 0-based here).
+    pub id: usize,
+    /// The local UDDSketch summary (bucket counters become fractional as
+    /// averaging proceeds).
+    pub sketch: GossipSketch,
+    /// Estimate of the average local stream length `N̄ = (1/p) Σ N_l`;
+    /// initialized to the local `N_l`.
+    pub n_tilde: f64,
+    /// Estimate of `1/p`; peer 0 starts at 1, everyone else at 0
+    /// (Algorithm 3 lines 3–6 — no leader election needed since ids are
+    /// distinct).
+    pub q_tilde: f64,
+}
+
+impl PeerState {
+    /// Algorithm 3: process the local dataset with sequential UDDSketch
+    /// and initialize the averaging scalars.
+    pub fn init(
+        id: usize,
+        dataset: &[f64],
+        alpha: f64,
+        max_buckets: usize,
+    ) -> Result<Self, SketchError> {
+        // Bulk ingestion runs on the dense store (fast hot path), the
+        // result converts to the sparse gossip representation once.
+        let mut dense: UddSketch<DenseStore> = UddSketch::new(alpha, max_buckets)?;
+        dense.extend(dataset);
+        Ok(Self {
+            id,
+            sketch: dense.convert_store(),
+            n_tilde: dataset.len() as f64,
+            q_tilde: if id == 0 { 1.0 } else { 0.0 },
+        })
+    }
+
+    /// Algorithm 4's UPDATE: the averaged state both exchange partners
+    /// adopt. Sketches merge with weight ½ each (Algorithm 5; collapse
+    /// alignment happens inside the merge), scalars average.
+    pub fn averaged(a: &PeerState, b: &PeerState) -> Result<PeerState, SketchError> {
+        let mut sketch = a.sketch.clone();
+        sketch.merge_weighted(&b.sketch, 0.5, 0.5)?;
+        Ok(PeerState {
+            id: a.id,
+            sketch,
+            n_tilde: 0.5 * (a.n_tilde + b.n_tilde),
+            q_tilde: 0.5 * (a.q_tilde + b.q_tilde),
+        })
+    }
+
+    /// In-place UPDATE for the engine's hot loop: averages `a` and `b`
+    /// directly into both slots with a single merge and a single clone
+    /// (the two peers must end up with equal but independent states).
+    pub fn exchange(a: &mut PeerState, b: &mut PeerState) -> Result<(), SketchError> {
+        a.sketch.merge_weighted(&b.sketch, 0.5, 0.5)?;
+        b.sketch = a.sketch.clone();
+        let n = 0.5 * (a.n_tilde + b.n_tilde);
+        let q = 0.5 * (a.q_tilde + b.q_tilde);
+        a.n_tilde = n;
+        b.n_tilde = n;
+        a.q_tilde = q;
+        b.q_tilde = q;
+        Ok(())
+    }
+
+    /// Estimated network size `p̃ = round(1/q̃)` (∞ while `q̃` is still 0,
+    /// i.e. before any information from peer 0 reached this peer).
+    ///
+    /// Algorithm 6 writes `⌈1/q̃⌉`, but `q̃` converges to `1/p`
+    /// *oscillating from both sides*: whenever it sits a hair below, the
+    /// ceiling reports `p + 1` and the query's target rank inflates by a
+    /// factor `(p+1)/p` that the per-bucket integer rounding of small
+    /// counters does not follow — a persistent one-bucket bias. Rounding
+    /// agrees with the ceiling at the fixed point (`1/q̃ = p` exactly) and
+    /// converges from both sides.
+    pub fn estimated_peers(&self) -> f64 {
+        if self.q_tilde <= 0.0 {
+            f64::INFINITY
+        } else {
+            (1.0 / self.q_tilde).round().max(1.0)
+        }
+    }
+
+    /// Estimated global stream length `Ñ = round(p̃ · Ñ_l)`.
+    pub fn estimated_total(&self) -> f64 {
+        let p = self.estimated_peers();
+        if p.is_finite() {
+            (p * self.n_tilde).round()
+        } else {
+            f64::INFINITY
+        }
+    }
+
+    /// Algorithm 6: estimate the q-quantile of the *global* dataset from
+    /// this peer's averaged state.
+    ///
+    /// Counters scale back to global counts by rounding `B̃_i · p̃` to the
+    /// nearest integer, and the walk uses the same `cumulative ≥
+    /// target-rank` convention as the sequential query, so that a fully
+    /// converged peer returns *exactly* the sequential estimate. Two
+    /// deliberate deviations from Algorithm 6's pseudocode, both of which
+    /// only tighten convergence: (i) the paper writes `⌈B̃_i · p̃⌉`, but a
+    /// ceiling turns any positive floating-point residual left by
+    /// finitely many averaging rounds into a +1 per bucket, which biases
+    /// low quantiles when the stream/bucket ratio is small — rounding
+    /// recovers the exact integer global counts at the fixed point;
+    /// (ii) the paper advances while `count ≤ target`, which skips to the
+    /// next bucket when the target rank lands exactly on a bucket
+    /// boundary — we keep Definition 2's inferior-quantile convention, as
+    /// the sequential algorithm does.
+    pub fn query(&self, q: f64) -> Result<f64, SketchError> {
+        if !(0.0..=1.0).contains(&q) || q.is_nan() {
+            return Err(SketchError::InvalidQuantile(q));
+        }
+        let p_hat = self.estimated_peers();
+        if !p_hat.is_finite() {
+            // No global information yet: answer from the local sketch
+            // (p̃ = 1) — this is what a peer can honestly report and what
+            // makes early-round relative errors large but finite, as in
+            // the paper's round-5 plots.
+            return self.sketch.quantile(q);
+        }
+        let n_hat = (p_hat * self.n_tilde).round();
+        if n_hat <= 0.0 {
+            return Err(SketchError::Empty);
+        }
+        let target = (1.0 + q * (n_hat - 1.0)).floor().max(1.0);
+        let mapping = self.sketch.mapping();
+        let mut acc = 0.0;
+        let mut result: Option<f64> = None;
+
+        // Negative store (most negative value first), then zeros, then the
+        // positive store — mirrors the sequential walk with scaled counts.
+        let mut neg = self.sketch.negative_store().entries();
+        neg.reverse();
+        for (i, c) in neg {
+            acc += (c * p_hat).round();
+            if acc >= target && result.is_none() {
+                result = Some(-mapping.value(i));
+            }
+        }
+        if result.is_none() && self.sketch.zero_weight() > 0.0 {
+            acc += (self.sketch.zero_weight() * p_hat).round();
+            if acc >= target {
+                result = Some(0.0);
+            }
+        }
+        if result.is_none() {
+            self.sketch.positive_store().for_each(|i, c| {
+                acc += (c * p_hat).round();
+                if acc >= target && result.is_none() {
+                    result = Some(mapping.value(i));
+                }
+            });
+        }
+        result
+            .or_else(|| {
+                self.sketch
+                    .positive_store()
+                    .max_index()
+                    .map(|i| mapping.value(i))
+            })
+            .ok_or(SketchError::Empty)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::{default_rng, Rng};
+    use crate::sketch::UddSketch;
+
+    #[test]
+    fn init_sets_scalars_per_algorithm3() {
+        let d = vec![1.0, 2.0, 3.0];
+        let s0 = PeerState::init(0, &d, 0.01, 64).unwrap();
+        let s1 = PeerState::init(1, &d, 0.01, 64).unwrap();
+        assert_eq!(s0.q_tilde, 1.0);
+        assert_eq!(s1.q_tilde, 0.0);
+        assert_eq!(s0.n_tilde, 3.0);
+        assert_eq!(s0.sketch.count(), 3.0);
+    }
+
+    #[test]
+    fn averaged_preserves_sum() {
+        let a = PeerState::init(0, &[1.0, 2.0, 3.0, 4.0], 0.01, 64).unwrap();
+        let b = PeerState::init(1, &[10.0, 20.0], 0.01, 64).unwrap();
+        let m = PeerState::averaged(&a, &b).unwrap();
+        assert_eq!(m.n_tilde, 3.0);
+        assert_eq!(m.q_tilde, 0.5);
+        assert!((m.sketch.count() - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn estimated_peers_recovers_p() {
+        let mut s = PeerState::init(0, &[1.0], 0.01, 64).unwrap();
+        s.q_tilde = 1.0 / 8.0;
+        assert_eq!(s.estimated_peers(), 8.0);
+        s.q_tilde = 0.126; // round(1/0.126) = round(7.94) = 8
+        assert_eq!(s.estimated_peers(), 8.0);
+        s.q_tilde = 0.0;
+        assert!(s.estimated_peers().is_infinite());
+    }
+
+    #[test]
+    fn converged_state_queries_match_sequential() {
+        // Build the exact average state of p=4 peers and check the
+        // reconstruction equals the sequential sketch's answers.
+        let mut r = default_rng(1);
+        let datasets: Vec<Vec<f64>> = (0..4)
+            .map(|_| (0..1000).map(|_| 1.0 + 99.0 * r.next_f64()).collect())
+            .collect();
+        let mut seq: UddSketch = UddSketch::new(0.001, 1024).unwrap();
+        for d in &datasets {
+            seq.extend(d);
+        }
+        // Perfectly averaged state (what r -> ∞ gossip yields).
+        let states: Vec<PeerState> = datasets
+            .iter()
+            .enumerate()
+            .map(|(i, d)| PeerState::init(i, d, 0.001, 1024).unwrap())
+            .collect();
+        let mut avg = states[0].clone();
+        for s in &states[1..] {
+            avg.sketch.merge(&s.sketch).unwrap();
+            avg.n_tilde += s.n_tilde;
+            avg.q_tilde += s.q_tilde;
+        }
+        let p = states.len() as f64;
+        avg.sketch = {
+            let mut sk = UddSketch::new(0.001, 1024).unwrap();
+            sk.merge_weighted(&avg.sketch, 0.0, 1.0 / p).unwrap();
+            sk
+        };
+        avg.n_tilde /= p;
+        avg.q_tilde /= p;
+
+        for q in [0.0, 0.01, 0.25, 0.5, 0.75, 0.99, 1.0] {
+            let est = avg.query(q).unwrap();
+            let tru = seq.quantile(q).unwrap();
+            assert_eq!(est, tru, "q={q}");
+        }
+    }
+
+    #[test]
+    fn query_without_global_info_falls_back_to_local() {
+        let s = PeerState::init(3, &[5.0, 6.0, 7.0], 0.01, 64).unwrap();
+        assert_eq!(s.q_tilde, 0.0);
+        let est = s.query(0.5).unwrap();
+        assert!((est - 6.0).abs() <= 0.01 * 6.0 + 1e-9);
+    }
+
+    #[test]
+    fn query_rejects_bad_q() {
+        let s = PeerState::init(0, &[1.0], 0.01, 64).unwrap();
+        assert!(s.query(-0.1).is_err());
+        assert!(s.query(1.1).is_err());
+    }
+}

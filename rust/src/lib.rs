@@ -1,0 +1,55 @@
+//! # DUDDSketch — distributed P2P quantile tracking with relative value error
+//!
+//! Production-oriented reproduction of *"Distributed P2P quantile tracking
+//! with relative value error"* (Pulimeno, Epicoco, Cafaro — CS.DC 2025).
+//!
+//! The crate provides:
+//!
+//! * [`sketch`] — the sequential [`sketch::UddSketch`] (uniform collapse,
+//!   turnstile model) and its predecessor baseline [`sketch::DdSketch`]
+//!   (collapse-first-two), both α-relative-value-error quantile summaries,
+//!   plus an exact oracle for validation.
+//! * [`gossip`] — the paper's contribution: a synchronous, fully
+//!   decentralized gossip protocol (atomic push–pull distributed averaging,
+//!   Algorithms 3–6) that drives every peer's local sketch to the global
+//!   sketch over an unstructured P2P overlay.
+//! * [`graph`] — Barabási–Albert and Erdős–Rényi overlay generators.
+//! * [`churn`] — Fail&Stop and Yao (shifted-Pareto / exponential rejoin)
+//!   churn models of §7.2.
+//! * [`data`] — the four synthetic workloads of Table 1 and the *power*
+//!   dataset (UCI household power surrogate/loader).
+//! * [`runtime`] — PJRT execution of AOT-compiled JAX/Pallas artifacts; the
+//!   dense averaging round can run through XLA (`gossip::PjrtExecutor`).
+//! * [`experiments`] — regeneration harness for every table and figure in
+//!   the paper's evaluation (§7).
+//! * [`rng`], [`metrics`], [`util`] — in-tree substrates (PRNG +
+//!   distributions, error metrics, CSV/JSON/bench/property-test kits).
+//!
+//! ## Quickstart
+//!
+//! ```
+//! use duddsketch::sketch::UddSketch;
+//!
+//! let mut s: UddSketch = UddSketch::new(0.001, 1024).unwrap();
+//! for i in 1..=10_000 { s.insert(i as f64); }
+//! let p99 = s.quantile(0.99).unwrap();
+//! assert!((p99 - 9_900.0).abs() / 9_900.0 < 0.01);
+//! ```
+//!
+//! See `examples/` for the distributed protocol end-to-end.
+
+pub mod churn;
+pub mod cli;
+pub mod config;
+pub mod data;
+pub mod experiments;
+pub mod gossip;
+pub mod graph;
+pub mod metrics;
+pub mod rng;
+pub mod runtime;
+pub mod sketch;
+pub mod util;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,23 @@
+//! `duddsketch` binary — the Layer-3 coordinator entry point.
+//!
+//! See `duddsketch help` (or [`duddsketch::cli::USAGE`]) for subcommands.
+
+use duddsketch::cli;
+
+fn main() {
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    let args = match cli::Args::parse(&raw) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n{}", cli::USAGE);
+            std::process::exit(2);
+        }
+    };
+    match cli::dispatch(&args) {
+        Ok(text) => print!("{text}"),
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}

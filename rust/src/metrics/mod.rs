@@ -1,0 +1,177 @@
+//! Error metrics and summary statistics used by the evaluation (§7).
+
+/// Relative error `|est − truth| / |truth|` (Eq. 10's per-peer term).
+#[inline]
+pub fn relative_error(est: f64, truth: f64) -> f64 {
+    if truth == 0.0 {
+        if est == 0.0 {
+            0.0
+        } else {
+            f64::INFINITY
+        }
+    } else {
+        (est - truth).abs() / truth.abs()
+    }
+}
+
+/// Average Relative Error across peers (Eq. 10):
+/// `ARE_q = (1/p) Σ_i |x̃_{q,i} − x̂_q| / x̂_q`.
+pub fn average_relative_error(estimates: &[f64], truth: f64) -> f64 {
+    if estimates.is_empty() {
+        return 0.0;
+    }
+    estimates
+        .iter()
+        .map(|&e| relative_error(e, truth))
+        .sum::<f64>()
+        / estimates.len() as f64
+}
+
+/// Sample variance of Jelasity's variance-reduction analysis (Eq. 5):
+/// `σ² = 1/(p−1) Σ (w_l − w̄)²` around the supplied true mean `w̄`.
+pub fn variance_around(values: &[f64], mean: f64) -> f64 {
+    if values.len() < 2 {
+        return 0.0;
+    }
+    values.iter().map(|&w| (w - mean) * (w - mean)).sum::<f64>()
+        / (values.len() - 1) as f64
+}
+
+/// Mean of a slice (0 for empty).
+pub fn mean(values: &[f64]) -> f64 {
+    if values.is_empty() {
+        0.0
+    } else {
+        values.iter().sum::<f64>() / values.len() as f64
+    }
+}
+
+/// Box-and-whisker summary matching the paper's plots: quartiles plus
+/// whiskers at the most extreme points within 1.5·IQR (Tukey), and the
+/// count of outliers beyond them.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BoxSummary {
+    /// Lower whisker (min point ≥ Q1 − 1.5 IQR).
+    pub whisker_lo: f64,
+    /// First quartile.
+    pub q1: f64,
+    /// Median.
+    pub median: f64,
+    /// Third quartile.
+    pub q3: f64,
+    /// Upper whisker (max point ≤ Q3 + 1.5 IQR).
+    pub whisker_hi: f64,
+    /// Minimum observation.
+    pub min: f64,
+    /// Maximum observation.
+    pub max: f64,
+    /// Observations outside the whiskers.
+    pub outliers: usize,
+}
+
+impl BoxSummary {
+    /// Compute from unsorted data; returns `None` on empty input.
+    pub fn from_data(data: &[f64]) -> Option<Self> {
+        if data.is_empty() {
+            return None;
+        }
+        let mut s = data.to_vec();
+        s.sort_by(|a, b| a.partial_cmp(b).expect("NaN in BoxSummary input"));
+        let q = |p: f64| -> f64 {
+            // Linear interpolation between closest ranks (type-7, the
+            // matplotlib/numpy default used by the paper's plots).
+            let h = p * (s.len() as f64 - 1.0);
+            let lo = h.floor() as usize;
+            let hi = h.ceil() as usize;
+            s[lo] + (h - h.floor()) * (s[hi] - s[lo])
+        };
+        let (q1, median, q3) = (q(0.25), q(0.5), q(0.75));
+        let iqr = q3 - q1;
+        let lo_fence = q1 - 1.5 * iqr;
+        let hi_fence = q3 + 1.5 * iqr;
+        let whisker_lo = s
+            .iter()
+            .copied()
+            .find(|&x| x >= lo_fence)
+            .unwrap_or(s[0]);
+        let whisker_hi = s
+            .iter()
+            .rev()
+            .copied()
+            .find(|&x| x <= hi_fence)
+            .unwrap_or(s[s.len() - 1]);
+        let outliers =
+            s.iter().filter(|&&x| x < whisker_lo || x > whisker_hi).count();
+        Some(Self {
+            whisker_lo,
+            q1,
+            median,
+            q3,
+            whisker_hi,
+            min: s[0],
+            max: s[s.len() - 1],
+            outliers,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn relative_error_basics() {
+        assert_eq!(relative_error(110.0, 100.0), 0.1);
+        assert_eq!(relative_error(90.0, 100.0), 0.1);
+        assert_eq!(relative_error(0.0, 0.0), 0.0);
+        assert!(relative_error(1.0, 0.0).is_infinite());
+    }
+
+    #[test]
+    fn are_eq10() {
+        // Three peers estimating truth=100 with 90, 100, 120:
+        // ARE = (0.1 + 0 + 0.2)/3 = 0.1
+        let are = average_relative_error(&[90.0, 100.0, 120.0], 100.0);
+        assert!((are - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn variance_eq5() {
+        // values {1,2,3}, mean 2 -> (1+0+1)/2 = 1
+        assert_eq!(variance_around(&[1.0, 2.0, 3.0], 2.0), 1.0);
+        assert_eq!(variance_around(&[5.0], 5.0), 0.0);
+    }
+
+    #[test]
+    fn box_summary_quartiles() {
+        let data: Vec<f64> = (1..=9).map(|x| x as f64).collect();
+        let b = BoxSummary::from_data(&data).unwrap();
+        assert_eq!(b.median, 5.0);
+        assert_eq!(b.q1, 3.0);
+        assert_eq!(b.q3, 7.0);
+        assert_eq!(b.min, 1.0);
+        assert_eq!(b.max, 9.0);
+        assert_eq!(b.outliers, 0);
+        assert_eq!(b.whisker_lo, 1.0);
+        assert_eq!(b.whisker_hi, 9.0);
+    }
+
+    #[test]
+    fn box_summary_flags_outliers() {
+        let mut data: Vec<f64> = (1..=20).map(|x| x as f64).collect();
+        data.push(1000.0);
+        let b = BoxSummary::from_data(&data).unwrap();
+        assert_eq!(b.outliers, 1);
+        assert!(b.whisker_hi <= 20.0);
+        assert_eq!(b.max, 1000.0);
+    }
+
+    #[test]
+    fn box_summary_empty_and_singleton() {
+        assert!(BoxSummary::from_data(&[]).is_none());
+        let b = BoxSummary::from_data(&[7.0]).unwrap();
+        assert_eq!(b.median, 7.0);
+        assert_eq!(b.q1, 7.0);
+        assert_eq!(b.whisker_hi, 7.0);
+    }
+}

@@ -1,0 +1,209 @@
+//! Distribution samplers for the paper's workloads and churn models.
+//!
+//! * [`Uniform`] — Table 1 `uniform` / `adversarial` inputs.
+//! * [`Exponential`] — Table 1 `exponential` input and the Yao-exponential
+//!   rejoin times (§7.2).
+//! * [`Normal`] — Table 1 `normal` input (Box–Muller).
+//! * [`ShiftedPareto`] — Yao churn lifetimes/off-times (§7.2): the
+//!   three-parameter Pareto with shape `alpha`, scale `beta`, shift `mu`.
+
+use super::Rng;
+
+/// Common sampling interface.
+pub trait Sample {
+    /// Draw one variate.
+    fn sample<R: Rng>(&self, rng: &mut R) -> f64;
+
+    /// Draw `n` variates.
+    fn sample_n<R: Rng>(&self, rng: &mut R, n: usize) -> Vec<f64> {
+        (0..n).map(|_| self.sample(rng)).collect()
+    }
+}
+
+/// Continuous uniform on `[lo, hi)`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Uniform {
+    /// Inclusive lower bound.
+    pub lo: f64,
+    /// Exclusive upper bound.
+    pub hi: f64,
+}
+
+impl Uniform {
+    /// New uniform distribution; panics if `hi <= lo`.
+    pub fn new(lo: f64, hi: f64) -> Self {
+        assert!(hi > lo, "Uniform: hi ({hi}) must exceed lo ({lo})");
+        Self { lo, hi }
+    }
+}
+
+impl Sample for Uniform {
+    #[inline]
+    fn sample<R: Rng>(&self, rng: &mut R) -> f64 {
+        self.lo + (self.hi - self.lo) * rng.next_f64()
+    }
+}
+
+/// Exponential with rate `lambda` (mean `1/lambda`), via inversion.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Exponential {
+    /// Rate parameter λ > 0.
+    pub lambda: f64,
+}
+
+impl Exponential {
+    /// New exponential distribution; panics unless `lambda > 0`.
+    pub fn new(lambda: f64) -> Self {
+        assert!(lambda > 0.0, "Exponential: lambda must be positive");
+        Self { lambda }
+    }
+}
+
+impl Sample for Exponential {
+    #[inline]
+    fn sample<R: Rng>(&self, rng: &mut R) -> f64 {
+        // Inversion on (0,1]: -ln(U)/λ.
+        -rng.next_f64_open().ln() / self.lambda
+    }
+}
+
+/// Normal(mean, sd) via Box–Muller (the cached second variate is dropped to
+/// keep the sampler stateless; throughput is not a concern for data gen).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Normal {
+    /// Mean μ.
+    pub mean: f64,
+    /// Standard deviation σ > 0.
+    pub sd: f64,
+}
+
+impl Normal {
+    /// New normal distribution; panics unless `sd > 0`.
+    pub fn new(mean: f64, sd: f64) -> Self {
+        assert!(sd > 0.0, "Normal: sd must be positive");
+        Self { mean, sd }
+    }
+}
+
+impl Sample for Normal {
+    #[inline]
+    fn sample<R: Rng>(&self, rng: &mut R) -> f64 {
+        let u1 = rng.next_f64_open();
+        let u2 = rng.next_f64();
+        let r = (-2.0 * u1.ln()).sqrt();
+        let theta = 2.0 * std::f64::consts::PI * u2;
+        self.mean + self.sd * r * theta.cos()
+    }
+}
+
+/// Shifted (three-parameter) Pareto used by the Yao churn model [28]:
+///
+/// CDF `F(x) = 1 − (1 + (x − μ)/β)^(−α)` for `x ≥ μ`.
+///
+/// The paper uses α=3, μ=1.01 with β=1 for lifetimes and β=2 for off-times.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ShiftedPareto {
+    /// Shape α > 0.
+    pub alpha: f64,
+    /// Scale β > 0.
+    pub beta: f64,
+    /// Shift μ (minimum value).
+    pub mu: f64,
+}
+
+impl ShiftedPareto {
+    /// New shifted Pareto; panics unless `alpha > 0 && beta > 0`.
+    pub fn new(alpha: f64, beta: f64, mu: f64) -> Self {
+        assert!(alpha > 0.0 && beta > 0.0, "ShiftedPareto: alpha, beta > 0");
+        Self { alpha, beta, mu }
+    }
+
+    /// Mean `μ + β/(α−1)` (finite for α > 1).
+    pub fn mean(&self) -> f64 {
+        assert!(self.alpha > 1.0, "mean undefined for alpha <= 1");
+        self.mu + self.beta / (self.alpha - 1.0)
+    }
+}
+
+impl Sample for ShiftedPareto {
+    #[inline]
+    fn sample<R: Rng>(&self, rng: &mut R) -> f64 {
+        // Inversion: x = μ + β((1−U)^(−1/α) − 1), U uniform in [0,1).
+        let u = rng.next_f64();
+        self.mu + self.beta * ((1.0 - u).powf(-1.0 / self.alpha) - 1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::default_rng;
+
+    fn mean_sd(xs: &[f64]) -> (f64, f64) {
+        let n = xs.len() as f64;
+        let m = xs.iter().sum::<f64>() / n;
+        let v = xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (n - 1.0);
+        (m, v.sqrt())
+    }
+
+    #[test]
+    fn uniform_bounds_and_mean() {
+        let mut r = default_rng(1);
+        let d = Uniform::new(10.0, 20.0);
+        let xs = d.sample_n(&mut r, 50_000);
+        assert!(xs.iter().all(|&x| (10.0..20.0).contains(&x)));
+        let (m, _) = mean_sd(&xs);
+        assert!((m - 15.0).abs() < 0.05, "mean {m}");
+    }
+
+    #[test]
+    fn exponential_mean_matches_rate() {
+        let mut r = default_rng(2);
+        let d = Exponential::new(0.5);
+        let xs = d.sample_n(&mut r, 100_000);
+        assert!(xs.iter().all(|&x| x >= 0.0));
+        let (m, _) = mean_sd(&xs);
+        assert!((m - 2.0).abs() < 0.05, "mean {m}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = default_rng(3);
+        let d = Normal::new(100.0, 15.0);
+        let xs = d.sample_n(&mut r, 100_000);
+        let (m, s) = mean_sd(&xs);
+        assert!((m - 100.0).abs() < 0.3, "mean {m}");
+        assert!((s - 15.0).abs() < 0.3, "sd {s}");
+    }
+
+    #[test]
+    fn shifted_pareto_support_and_mean() {
+        let mut r = default_rng(4);
+        // Paper's lifetime parameters.
+        let d = ShiftedPareto::new(3.0, 1.0, 1.01);
+        let xs = d.sample_n(&mut r, 200_000);
+        assert!(xs.iter().all(|&x| x >= 1.01));
+        let (m, _) = mean_sd(&xs);
+        // mean = 1.01 + 1/(3-1) = 1.51
+        assert!((m - d.mean()).abs() < 0.02, "mean {m} vs {}", d.mean());
+    }
+
+    #[test]
+    fn pareto_tail_heavier_than_exponential() {
+        // Sanity on the heavy tail: P(X > mu + 5*beta) should exceed the
+        // exponential (same mean) tail by a wide margin.
+        let mut r = default_rng(5);
+        let p = ShiftedPareto::new(3.0, 1.0, 1.01);
+        let e = Exponential::new(1.0 / (p.mean() - 1.01));
+        let n = 200_000;
+        let pt = (0..n).filter(|_| p.sample(&mut r) > 6.01).count() as f64;
+        let et = (0..n).filter(|_| 1.01 + e.sample(&mut r) > 6.01).count() as f64;
+        assert!(pt > et, "pareto tail {pt} <= exp tail {et}");
+    }
+
+    #[test]
+    #[should_panic]
+    fn uniform_rejects_empty_interval() {
+        let _ = Uniform::new(5.0, 5.0);
+    }
+}

@@ -1,0 +1,249 @@
+//! Deterministic pseudo-random number generation and the samplers used by
+//! the paper's workloads (§7.1, Table 1) and churn models (§7.2).
+//!
+//! The offline crate registry does not carry `rand`, so this module is a
+//! self-contained substrate: a [`SplitMix64`] seeder, the [`Xoshiro256pp`]
+//! generator (Blackman–Vigna xoshiro256++, period 2^256−1), and the
+//! distribution samplers the experiments need. Everything is deterministic
+//! given a seed, which the experiment harness relies on for reproducible
+//! figures.
+
+mod distributions;
+
+pub use distributions::{Exponential, Normal, Sample, ShiftedPareto, Uniform};
+
+/// Minimal RNG interface: a source of uniform `u64`s plus derived helpers.
+pub trait Rng {
+    /// Next uniformly distributed 64-bit value.
+    fn next_u64(&mut self) -> u64;
+
+    /// Uniform `f64` in `[0, 1)` using the top 53 bits.
+    #[inline]
+    fn next_f64(&mut self) -> f64 {
+        // 53 random mantissa bits / 2^53 — the standard unbiased construction.
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform `f64` in the open interval `(0, 1]` (safe for `ln`).
+    #[inline]
+    fn next_f64_open(&mut self) -> f64 {
+        1.0 - self.next_f64()
+    }
+
+    /// Uniform integer in `[0, bound)` via Lemire's multiply-shift rejection.
+    #[inline]
+    fn next_below(&mut self, bound: u64) -> u64 {
+        debug_assert!(bound > 0, "next_below: bound must be positive");
+        // Unbiased bounded sampling (Lemire 2019).
+        let mut x = self.next_u64();
+        let mut m = (x as u128) * (bound as u128);
+        let mut lo = m as u64;
+        if lo < bound {
+            let threshold = bound.wrapping_neg() % bound;
+            while lo < threshold {
+                x = self.next_u64();
+                m = (x as u128) * (bound as u128);
+                lo = m as u64;
+            }
+        }
+        (m >> 64) as u64
+    }
+
+    /// Uniform `usize` index in `[0, bound)`.
+    #[inline]
+    fn index(&mut self, bound: usize) -> usize {
+        self.next_below(bound as u64) as usize
+    }
+
+    /// Bernoulli trial with probability `p`.
+    #[inline]
+    fn chance(&mut self, p: f64) -> bool {
+        self.next_f64() < p
+    }
+
+    /// Fisher–Yates shuffle.
+    fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.index(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// A random permutation of `0..n`.
+    fn permutation(&mut self, n: usize) -> Vec<usize> {
+        let mut p: Vec<usize> = (0..n).collect();
+        self.shuffle(&mut p);
+        p
+    }
+}
+
+/// SplitMix64 — used to expand a single `u64` seed into generator state.
+///
+/// Passes BigCrush on its own; here it only seeds [`Xoshiro256pp`], the
+/// construction recommended by the xoshiro authors.
+#[derive(Debug, Clone)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    /// Create from a seed.
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+}
+
+impl Rng for SplitMix64 {
+    #[inline]
+    fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+}
+
+/// xoshiro256++ — the crate's default generator.
+#[derive(Debug, Clone)]
+pub struct Xoshiro256pp {
+    s: [u64; 4],
+}
+
+impl Xoshiro256pp {
+    /// Seed via SplitMix64 expansion (never yields the all-zero state).
+    pub fn seed_from_u64(seed: u64) -> Self {
+        let mut sm = SplitMix64::new(seed);
+        Self {
+            s: [sm.next_u64(), sm.next_u64(), sm.next_u64(), sm.next_u64()],
+        }
+    }
+
+    /// Derive an independent stream for subcomponent `tag` (peer id,
+    /// dataset id, …). Streams from distinct tags are effectively
+    /// uncorrelated because the tag passes through SplitMix64 diffusion.
+    pub fn derive(&self, tag: u64) -> Self {
+        let mut sm = SplitMix64::new(
+            self.s[0] ^ tag.wrapping_mul(0xA24BAED4963EE407),
+        );
+        Self {
+            s: [sm.next_u64(), sm.next_u64(), sm.next_u64(), sm.next_u64()],
+        }
+    }
+}
+
+impl Rng for Xoshiro256pp {
+    #[inline]
+    fn next_u64(&mut self) -> u64 {
+        let s = &mut self.s;
+        let result = s[0]
+            .wrapping_add(s[3])
+            .rotate_left(23)
+            .wrapping_add(s[0]);
+        let t = s[1] << 17;
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = s[3].rotate_left(45);
+        result
+    }
+}
+
+/// Default seeded generator used across the crate.
+pub fn default_rng(seed: u64) -> Xoshiro256pp {
+    Xoshiro256pp::seed_from_u64(seed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitmix_reference_vector() {
+        // Reference values for seed 1234567 from the public-domain
+        // splitmix64.c by Sebastiano Vigna.
+        let mut sm = SplitMix64::new(1234567);
+        let got: Vec<u64> = (0..3).map(|_| sm.next_u64()).collect();
+        assert_eq!(got[0], 6457827717110365317);
+        assert_eq!(got[1], 3203168211198807973);
+        assert_eq!(got[2], 9817491932198370423);
+    }
+
+    #[test]
+    fn xoshiro_deterministic_and_seed_sensitive() {
+        let mut a = Xoshiro256pp::seed_from_u64(42);
+        let mut b = Xoshiro256pp::seed_from_u64(42);
+        let mut c = Xoshiro256pp::seed_from_u64(43);
+        let va: Vec<u64> = (0..8).map(|_| a.next_u64()).collect();
+        let vb: Vec<u64> = (0..8).map(|_| b.next_u64()).collect();
+        let vc: Vec<u64> = (0..8).map(|_| c.next_u64()).collect();
+        assert_eq!(va, vb);
+        assert_ne!(va, vc);
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = default_rng(7);
+        for _ in 0..10_000 {
+            let x = r.next_f64();
+            assert!((0.0..1.0).contains(&x));
+            let y = r.next_f64_open();
+            assert!(y > 0.0 && y <= 1.0);
+        }
+    }
+
+    #[test]
+    fn next_below_is_in_range_and_roughly_uniform() {
+        let mut r = default_rng(11);
+        let bound = 10u64;
+        let mut counts = [0usize; 10];
+        let n = 100_000;
+        for _ in 0..n {
+            let v = r.next_below(bound);
+            assert!(v < bound);
+            counts[v as usize] += 1;
+        }
+        // Each bin expects n/10 = 10_000; allow ±5% (well beyond 6σ).
+        for (i, &c) in counts.iter().enumerate() {
+            assert!(
+                (9_500..=10_500).contains(&c),
+                "bin {i} count {c} out of tolerance"
+            );
+        }
+    }
+
+    #[test]
+    fn permutation_is_a_permutation() {
+        let mut r = default_rng(3);
+        let p = r.permutation(257);
+        let mut seen = vec![false; 257];
+        for &i in &p {
+            assert!(!seen[i]);
+            seen[i] = true;
+        }
+        assert!(seen.iter().all(|&b| b));
+    }
+
+    #[test]
+    fn derived_streams_differ() {
+        let base = Xoshiro256pp::seed_from_u64(5);
+        let mut d1 = base.derive(1);
+        let mut d2 = base.derive(2);
+        let v1: Vec<u64> = (0..4).map(|_| d1.next_u64()).collect();
+        let v2: Vec<u64> = (0..4).map(|_| d2.next_u64()).collect();
+        assert_ne!(v1, v2);
+    }
+
+    #[test]
+    fn shuffle_preserves_multiset() {
+        let mut r = default_rng(9);
+        let mut xs: Vec<u32> = (0..100).map(|i| i % 7).collect();
+        let mut sorted_before = xs.clone();
+        sorted_before.sort_unstable();
+        r.shuffle(&mut xs);
+        xs.sort_unstable();
+        assert_eq!(xs, sorted_before);
+    }
+}

@@ -1,0 +1,194 @@
+//! PJRT runtime: loads AOT-compiled XLA artifacts (HLO text produced by
+//! `python/compile/aot.py`) and executes them on the CPU PJRT client.
+//!
+//! Python runs only at build time (`make artifacts`); this module is the
+//! entire request-path interface to the compiled kernels. The interchange
+//! format is HLO **text** — the image's xla_extension 0.5.1 rejects
+//! jax≥0.5 serialized protos (64-bit instruction ids), while the text
+//! parser reassigns ids (see /opt/xla-example/README.md).
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// Directory holding `*.hlo.txt` artifacts (env `DUDD_ARTIFACTS` wins,
+/// default `artifacts/` relative to the working directory).
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var("DUDD_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+/// A loaded, compiled artifact ready to execute.
+pub struct Executable {
+    name: String,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl std::fmt::Debug for Executable {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Executable({})", self.name)
+    }
+}
+
+impl Executable {
+    /// Artifact name (file stem).
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Execute with the given inputs; returns the outputs of the lowered
+    /// function (the AOT path lowers with `return_tuple=True`, so the
+    /// single device output tuple is decomposed).
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let buffers = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .with_context(|| format!("executing artifact {}", self.name))?;
+        let lit = buffers
+            .first()
+            .and_then(|d| d.first())
+            .ok_or_else(|| anyhow!("artifact {} returned no buffers", self.name))?
+            .to_literal_sync()?;
+        Ok(lit.to_tuple()?)
+    }
+
+    /// Execute and expect exactly one output.
+    pub fn run1(&self, inputs: &[xla::Literal]) -> Result<xla::Literal> {
+        let mut outs = self.run(inputs)?;
+        if outs.len() != 1 {
+            bail!(
+                "artifact {} returned {} outputs, expected 1",
+                self.name,
+                outs.len()
+            );
+        }
+        Ok(outs.remove(0))
+    }
+}
+
+/// PJRT CPU client wrapper with an artifact compile cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    cache: HashMap<String, std::rc::Rc<Executable>>,
+}
+
+impl std::fmt::Debug for Runtime {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "Runtime(platform={}, cached={})",
+            self.client.platform_name(),
+            self.cache.len()
+        )
+    }
+}
+
+impl Runtime {
+    /// Create the CPU PJRT client.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self {
+            client,
+            cache: HashMap::new(),
+        })
+    }
+
+    /// PJRT platform name (e.g. "cpu").
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load and compile an HLO-text artifact file (memoized by stem).
+    pub fn load_path(&mut self, path: &Path) -> Result<std::rc::Rc<Executable>> {
+        let name = path
+            .file_stem()
+            .and_then(|s| s.to_str())
+            .unwrap_or("artifact")
+            .trim_end_matches(".hlo") // file_stem of x.hlo.txt is x.hlo
+            .to_string();
+        if let Some(e) = self.cache.get(&name) {
+            return Ok(e.clone());
+        }
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        let e = std::rc::Rc::new(Executable {
+            name: name.clone(),
+            exe,
+        });
+        self.cache.insert(name, e.clone());
+        Ok(e)
+    }
+
+    /// Load `<artifacts_dir>/<name>.hlo.txt`.
+    pub fn load(&mut self, name: &str) -> Result<std::rc::Rc<Executable>> {
+        let path = artifacts_dir().join(format!("{name}.hlo.txt"));
+        if !path.exists() {
+            bail!(
+                "artifact {} not found (run `make artifacts`)",
+                path.display()
+            );
+        }
+        self.load_path(&path)
+    }
+}
+
+/// Parse `<prefix>_p<P>_w<W>` style artifact names.
+pub fn parse_shape_suffix(stem: &str, prefix: &str) -> Option<(usize, usize)> {
+    let rest = stem.strip_prefix(prefix)?.strip_prefix("_p")?;
+    let (p, w) = rest.split_once("_w")?;
+    Some((p.parse().ok()?, w.parse().ok()?))
+}
+
+/// List `(P, W, path)` for artifacts named `<prefix>_p<P>_w<W>.hlo.txt`,
+/// sorted by P then W.
+pub fn list_shaped_artifacts(prefix: &str) -> Vec<(usize, usize, PathBuf)> {
+    let dir = artifacts_dir();
+    let mut out = Vec::new();
+    if let Ok(entries) = std::fs::read_dir(&dir) {
+        for e in entries.flatten() {
+            let path = e.path();
+            let stem = match path.file_name().and_then(|s| s.to_str()) {
+                Some(s) if s.ends_with(".hlo.txt") => {
+                    s.trim_end_matches(".hlo.txt").to_string()
+                }
+                _ => continue,
+            };
+            if let Some((p, w)) = parse_shape_suffix(&stem, prefix) {
+                out.push((p, w, path));
+            }
+        }
+    }
+    out.sort();
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_shape_suffix_works() {
+        assert_eq!(
+            parse_shape_suffix("avg_pairs_p256_w1024", "avg_pairs"),
+            Some((256, 1024))
+        );
+        assert_eq!(parse_shape_suffix("avg_pairs_p256", "avg_pairs"), None);
+        assert_eq!(parse_shape_suffix("other_p1_w2", "avg_pairs"), None);
+    }
+
+    #[test]
+    fn missing_artifact_is_a_clean_error() {
+        let mut rt = match Runtime::cpu() {
+            Ok(rt) => rt,
+            Err(_) => return, // no PJRT plugin in this environment
+        };
+        let err = rt.load("definitely_not_there").unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+}

@@ -1,0 +1,266 @@
+//! Binary wire format for sketches and peer states.
+//!
+//! A real P2P deployment ships the gossip state over the network; this
+//! codec defines that frame (and gives the simulator exact per-message
+//! byte accounting, reported in `RoundStats`). Hand-rolled little-endian
+//! layout (serde is unavailable offline — DESIGN.md §6):
+//!
+//! ```text
+//! magic "UDDS" | version u8 | alpha0 f64 | collapses u32 | max_buckets u64
+//! zero_weight f64
+//! pos_len u64 | (index i64, count f64) * pos_len
+//! neg_len u64 | (index i64, count f64) * neg_len
+//! ```
+//!
+//! Peer-state frames append `id u64 | n_tilde f64 | q_tilde f64`.
+
+use super::{SketchError, Store, UddSketch};
+use crate::gossip::PeerState;
+
+const MAGIC: &[u8; 4] = b"UDDS";
+const VERSION: u8 = 1;
+
+/// Encoding/decoding errors.
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum CodecError {
+    /// Frame too short or structurally invalid.
+    #[error("truncated frame at byte {0}")]
+    Truncated(usize),
+    /// Bad magic bytes.
+    #[error("bad magic (not a DUDDSketch frame)")]
+    BadMagic,
+    /// Unsupported version byte.
+    #[error("unsupported frame version {0}")]
+    BadVersion(u8),
+    /// Decoded parameters failed sketch validation.
+    #[error("invalid sketch parameters: {0}")]
+    BadParams(String),
+}
+
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], CodecError> {
+        if self.pos + n > self.buf.len() {
+            return Err(CodecError::Truncated(self.pos));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, CodecError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32, CodecError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64, CodecError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn i64(&mut self) -> Result<i64, CodecError> {
+        Ok(i64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> Result<f64, CodecError> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+}
+
+fn encode_sketch_into<S: Store>(s: &UddSketch<S>, out: &mut Vec<u8>) {
+    out.extend_from_slice(MAGIC);
+    out.push(VERSION);
+    out.extend_from_slice(&s.mapping().alpha0().to_le_bytes());
+    out.extend_from_slice(&s.mapping().collapses().to_le_bytes());
+    out.extend_from_slice(&(s.max_buckets() as u64).to_le_bytes());
+    out.extend_from_slice(&s.zero_weight().to_le_bytes());
+    for store in [s.positive_store(), s.negative_store()] {
+        let entries = store.entries();
+        out.extend_from_slice(&(entries.len() as u64).to_le_bytes());
+        for (i, c) in entries {
+            out.extend_from_slice(&i.to_le_bytes());
+            out.extend_from_slice(&c.to_le_bytes());
+        }
+    }
+}
+
+fn decode_sketch_from<S: Store>(
+    r: &mut Reader<'_>,
+) -> Result<UddSketch<S>, CodecError> {
+    if r.take(4)? != MAGIC {
+        return Err(CodecError::BadMagic);
+    }
+    let version = r.u8()?;
+    if version != VERSION {
+        return Err(CodecError::BadVersion(version));
+    }
+    let alpha0 = r.f64()?;
+    let collapses = r.u32()?;
+    let max_buckets = r.u64()? as usize;
+    let zero_weight = r.f64()?;
+    let mut sketch: UddSketch<S> = UddSketch::new(alpha0, max_buckets)
+        .map_err(|e: SketchError| CodecError::BadParams(e.to_string()))?;
+    sketch.align_to_collapses(collapses);
+    let pos_len = r.u64()? as usize;
+    let mut pos = Vec::with_capacity(pos_len);
+    for _ in 0..pos_len {
+        pos.push((r.i64()?, r.f64()?));
+    }
+    let neg_len = r.u64()? as usize;
+    let mut neg = Vec::with_capacity(neg_len);
+    for _ in 0..neg_len {
+        neg.push((r.i64()?, r.f64()?));
+    }
+    sketch.load_raw(zero_weight, &pos, &neg);
+    Ok(sketch)
+}
+
+/// Encode a sketch to its wire frame.
+pub fn encode_sketch<S: Store>(s: &UddSketch<S>) -> Vec<u8> {
+    let mut out = Vec::with_capacity(32 + 16 * s.bucket_count());
+    encode_sketch_into(s, &mut out);
+    out
+}
+
+/// Decode a sketch frame.
+pub fn decode_sketch<S: Store>(buf: &[u8]) -> Result<UddSketch<S>, CodecError> {
+    decode_sketch_from(&mut Reader::new(buf))
+}
+
+/// Encode a full peer state (gossip message payload).
+pub fn encode_peer_state(s: &PeerState) -> Vec<u8> {
+    let mut out = encode_sketch(&s.sketch);
+    out.extend_from_slice(&(s.id as u64).to_le_bytes());
+    out.extend_from_slice(&s.n_tilde.to_le_bytes());
+    out.extend_from_slice(&s.q_tilde.to_le_bytes());
+    out
+}
+
+/// Decode a peer-state frame.
+pub fn decode_peer_state(buf: &[u8]) -> Result<PeerState, CodecError> {
+    let mut r = Reader::new(buf);
+    let sketch = decode_sketch_from(&mut r)?;
+    let id = r.u64()? as usize;
+    let n_tilde = r.f64()?;
+    let q_tilde = r.f64()?;
+    Ok(PeerState {
+        id,
+        sketch,
+        n_tilde,
+        q_tilde,
+    })
+}
+
+/// Wire size of a peer state without materializing the frame (used for
+/// the simulator's traffic accounting).
+pub fn peer_state_wire_size(s: &PeerState) -> usize {
+    // header(4+1) + alpha(8) + collapses(4) + m(8) + zero(8) = 33
+    // + 2 * len(8) + 16/bucket + id(8) + n(8) + q(8)
+    33 + 16 + 16 * s.sketch.bucket_count() + 24
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::{default_rng, Rng};
+    use crate::sketch::{DenseStore, SparseStore};
+
+    fn sample_sketch() -> UddSketch<SparseStore> {
+        let mut s: UddSketch<SparseStore> = UddSketch::new(0.001, 64).unwrap();
+        let mut r = default_rng(1);
+        for _ in 0..5_000 {
+            s.insert(10f64.powf(r.next_f64() * 5.0 - 1.0));
+        }
+        s.insert(-3.5);
+        s.insert(0.0);
+        s
+    }
+
+    #[test]
+    fn sketch_roundtrip_is_exact() {
+        let s = sample_sketch();
+        let buf = encode_sketch(&s);
+        let d: UddSketch<SparseStore> = decode_sketch(&buf).unwrap();
+        assert_eq!(d.collapses(), s.collapses());
+        assert_eq!(d.count(), s.count());
+        assert_eq!(d.zero_weight(), s.zero_weight());
+        assert_eq!(
+            d.positive_store().entries(),
+            s.positive_store().entries()
+        );
+        assert_eq!(
+            d.negative_store().entries(),
+            s.negative_store().entries()
+        );
+        for q in [0.01, 0.5, 0.99] {
+            assert_eq!(d.quantile(q).unwrap(), s.quantile(q).unwrap());
+        }
+    }
+
+    #[test]
+    fn cross_store_roundtrip() {
+        // Encode sparse, decode dense: same answers.
+        let s = sample_sketch();
+        let buf = encode_sketch(&s);
+        let d: UddSketch<DenseStore> = decode_sketch(&buf).unwrap();
+        assert_eq!(d.quantile(0.9).unwrap(), s.quantile(0.9).unwrap());
+    }
+
+    #[test]
+    fn peer_state_roundtrip() {
+        let st = PeerState::init(7, &[1.0, 2.0, 3.0], 0.01, 32).unwrap();
+        let buf = encode_peer_state(&st);
+        assert_eq!(buf.len(), peer_state_wire_size(&st));
+        let d = decode_peer_state(&buf).unwrap();
+        assert_eq!(d.id, 7);
+        assert_eq!(d.n_tilde, 3.0);
+        assert_eq!(d.q_tilde, 0.0);
+        assert_eq!(
+            d.sketch.positive_store().entries(),
+            st.sketch.positive_store().entries()
+        );
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert_eq!(
+            decode_sketch::<SparseStore>(b"np").unwrap_err(),
+            CodecError::Truncated(0)
+        );
+        assert_eq!(
+            decode_sketch::<SparseStore>(b"nope").unwrap_err(),
+            CodecError::BadMagic
+        );
+        assert_eq!(
+            decode_sketch::<SparseStore>(b"XXXX\x01aaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaa")
+                .unwrap_err(),
+            CodecError::BadMagic
+        );
+        let mut ok = encode_sketch(&sample_sketch());
+        ok[4] = 99; // version byte
+        assert_eq!(
+            decode_sketch::<SparseStore>(&ok).unwrap_err(),
+            CodecError::BadVersion(99)
+        );
+    }
+
+    #[test]
+    fn truncation_detected_everywhere() {
+        let buf = encode_peer_state(&PeerState::init(0, &[5.0, 6.0], 0.01, 32).unwrap());
+        for cut in 0..buf.len() {
+            let r = decode_peer_state(&buf[..cut]);
+            assert!(r.is_err(), "cut at {cut} should fail");
+        }
+        assert!(decode_peer_state(&buf).is_ok());
+    }
+}

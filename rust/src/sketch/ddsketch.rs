@@ -1,0 +1,200 @@
+//! DDSketch — the predecessor baseline (§3.1, [17]).
+//!
+//! Identical logarithmic bucketing, but when the budget is exceeded the
+//! **two lowest buckets collapse into one** (Algorithm 1). γ never changes,
+//! so high quantiles keep the initial α forever while low quantiles can
+//! degrade arbitrarily (Proposition 1) — exactly the weakness UDDSketch's
+//! uniform collapse removes. Implemented for the accuracy ablation
+//! (`benches/ablation_collapse.rs`).
+
+use super::{quantile_rank, DenseStore, LogMapping, SketchError, Store};
+
+/// Sequential DDSketch over store `S` (positive values only, matching the
+/// original paper's primary store; the experiments' inputs are ℝ>0).
+#[derive(Debug, Clone)]
+pub struct DdSketch<S: Store = DenseStore> {
+    mapping: LogMapping,
+    max_buckets: usize,
+    store: S,
+}
+
+impl<S: Store> DdSketch<S> {
+    /// Create a sketch with accuracy `alpha` and at most `max_buckets`
+    /// buckets.
+    pub fn new(alpha: f64, max_buckets: usize) -> Result<Self, SketchError> {
+        if max_buckets < 2 {
+            return Err(SketchError::InvalidBuckets(max_buckets));
+        }
+        Ok(Self {
+            mapping: LogMapping::new(alpha)?,
+            max_buckets,
+            store: S::empty(),
+        })
+    }
+
+    /// Insert a positive value.
+    pub fn insert(&mut self, x: f64) {
+        self.update(x, 1.0);
+    }
+
+    /// Remove a previously inserted value.
+    pub fn delete(&mut self, x: f64) {
+        self.update(x, -1.0);
+    }
+
+    /// Add weight `w` for value `x > 0`.
+    pub fn update(&mut self, x: f64, w: f64) {
+        assert!(x > 0.0 && x.is_finite(), "DdSketch supports x > 0, got {x}");
+        self.store.add(self.mapping.index(x), w);
+        while self.store.nonzero() > self.max_buckets {
+            self.store.collapse_lowest_pair();
+        }
+    }
+
+    /// Insert a slice.
+    pub fn extend(&mut self, xs: &[f64]) {
+        for &x in xs {
+            self.insert(x);
+        }
+    }
+
+    /// Total weight.
+    pub fn count(&self) -> f64 {
+        self.store.total()
+    }
+
+    /// Non-zero buckets.
+    pub fn bucket_count(&self) -> usize {
+        self.store.nonzero()
+    }
+
+    /// The (constant) error parameter α.
+    pub fn alpha(&self) -> f64 {
+        self.mapping.alpha()
+    }
+
+    /// The index mapping.
+    pub fn mapping(&self) -> &LogMapping {
+        &self.mapping
+    }
+
+    /// Estimate the inferior q-quantile.
+    pub fn quantile(&self, q: f64) -> Result<f64, SketchError> {
+        if !(0.0..=1.0).contains(&q) || q.is_nan() {
+            return Err(SketchError::InvalidQuantile(q));
+        }
+        let n = self.count();
+        if n <= 0.0 {
+            return Err(SketchError::Empty);
+        }
+        let target = quantile_rank(q, n).max(1.0);
+        let mut acc = 0.0;
+        let mut result = None;
+        let mapping = &self.mapping;
+        self.store.for_each(|i, c| {
+            acc += c;
+            if acc >= target && result.is_none() {
+                result = Some(mapping.value(i));
+            }
+        });
+        Ok(result.unwrap_or_else(|| {
+            mapping.value(self.store.max_index().expect("non-empty"))
+        }))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::{default_rng, Rng};
+    use crate::sketch::{ExactQuantiles, UddSketch};
+
+    #[test]
+    fn accurate_when_no_collapse() {
+        let mut r = default_rng(1);
+        let xs: Vec<f64> = (0..10_000).map(|_| 1.0 + 99.0 * r.next_f64()).collect();
+        let mut s: DdSketch = DdSketch::new(0.01, 4096).unwrap();
+        s.extend(&xs);
+        let exact = ExactQuantiles::new(&xs);
+        for q in [0.01, 0.25, 0.5, 0.75, 0.99] {
+            let est = s.quantile(q).unwrap();
+            let tru = exact.quantile(q).unwrap();
+            assert!((est - tru).abs() / tru <= 0.01 + 1e-9);
+        }
+    }
+
+    #[test]
+    fn high_quantiles_survive_collapse_low_quantiles_degrade() {
+        // The documented DDSketch failure mode: with a small budget over a
+        // wide span, q->1 stays alpha-accurate but q->0 does not.
+        let mut r = default_rng(2);
+        let xs: Vec<f64> = (0..50_000)
+            .map(|_| 10f64.powf(r.next_f64() * 8.0 - 2.0))
+            .collect();
+        let mut s: DdSketch = DdSketch::new(0.01, 32).unwrap();
+        s.extend(&xs);
+        assert!(s.bucket_count() <= 32);
+        let exact = ExactQuantiles::new(&xs);
+        let est99 = s.quantile(0.99).unwrap();
+        let tru99 = exact.quantile(0.99).unwrap();
+        assert!(
+            (est99 - tru99).abs() / tru99 <= 0.01 + 1e-9,
+            "p99 must keep alpha accuracy"
+        );
+        let est01 = s.quantile(0.01).unwrap();
+        let tru01 = exact.quantile(0.01).unwrap();
+        let re01 = (est01 - tru01).abs() / tru01;
+        assert!(
+            re01 > 0.5,
+            "p01 should be badly degraded by first-two collapse, re={re01}"
+        );
+    }
+
+    #[test]
+    fn udd_beats_dd_on_low_quantiles_same_budget() {
+        // The paper's §3.2 claim, quantified: same alpha, same budget, wide
+        // input -> UDDSketch's worst-quantile error is far below DDSketch's.
+        let mut r = default_rng(3);
+        let xs: Vec<f64> = (0..50_000)
+            .map(|_| 10f64.powf(r.next_f64() * 8.0 - 2.0))
+            .collect();
+        let mut dd: DdSketch = DdSketch::new(0.01, 32).unwrap();
+        let mut udd: UddSketch = UddSketch::new(0.01, 32).unwrap();
+        dd.extend(&xs);
+        udd.extend(&xs);
+        let exact = ExactQuantiles::new(&xs);
+        let worst = |est: &dyn Fn(f64) -> f64| {
+            [0.01, 0.1, 0.25, 0.5, 0.75, 0.9, 0.99]
+                .iter()
+                .map(|&q| {
+                    let t = exact.quantile(q).unwrap();
+                    (est(q) - t).abs() / t
+                })
+                .fold(0.0f64, f64::max)
+        };
+        let dd_worst = worst(&|q| dd.quantile(q).unwrap());
+        let udd_worst = worst(&|q| udd.quantile(q).unwrap());
+        assert!(
+            udd_worst < dd_worst / 5.0,
+            "udd {udd_worst} should be << dd {dd_worst}"
+        );
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_nonpositive() {
+        let mut s: DdSketch = DdSketch::new(0.01, 32).unwrap();
+        s.insert(0.0);
+    }
+
+    #[test]
+    fn turnstile_roundtrip() {
+        let mut s: DdSketch = DdSketch::new(0.01, 128).unwrap();
+        s.insert(5.0);
+        s.insert(7.0);
+        s.delete(7.0);
+        assert_eq!(s.count(), 1.0);
+        let est = s.quantile(0.5).unwrap();
+        assert!((est - 5.0).abs() <= 0.05 + 0.01 * 5.0);
+    }
+}

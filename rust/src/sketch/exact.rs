@@ -1,0 +1,98 @@
+//! Exact quantile oracle (Definition 2) used to validate the sketches and
+//! to compute the experiments' relative errors against ground truth.
+
+use super::SketchError;
+
+/// Holds a sorted copy of the data and answers exact inferior q-quantile
+/// queries.
+#[derive(Debug, Clone)]
+pub struct ExactQuantiles {
+    sorted: Vec<f64>,
+}
+
+impl ExactQuantiles {
+    /// Sort (a copy of) the dataset. NaNs are rejected.
+    pub fn new(data: &[f64]) -> Self {
+        assert!(
+            data.iter().all(|x| !x.is_nan()),
+            "ExactQuantiles: NaN in input"
+        );
+        let mut sorted = data.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Self { sorted }
+    }
+
+    /// Build from an already-sorted vector (asserts order in debug).
+    pub fn from_sorted(sorted: Vec<f64>) -> Self {
+        debug_assert!(sorted.windows(2).all(|w| w[0] <= w[1]));
+        Self { sorted }
+    }
+
+    /// Number of items.
+    pub fn len(&self) -> usize {
+        self.sorted.len()
+    }
+
+    /// True when the dataset is empty.
+    pub fn is_empty(&self) -> bool {
+        self.sorted.is_empty()
+    }
+
+    /// The inferior q-quantile: element of rank `⌊1 + q(n−1)⌋`.
+    pub fn quantile(&self, q: f64) -> Result<f64, SketchError> {
+        if !(0.0..=1.0).contains(&q) || q.is_nan() {
+            return Err(SketchError::InvalidQuantile(q));
+        }
+        let n = self.sorted.len();
+        if n == 0 {
+            return Err(SketchError::Empty);
+        }
+        let rank = (1.0 + q * (n as f64 - 1.0)).floor() as usize;
+        Ok(self.sorted[rank.clamp(1, n) - 1])
+    }
+
+    /// Rank of `x`: number of elements ≤ x (Definition 1).
+    pub fn rank(&self, x: f64) -> usize {
+        self.sorted.partition_point(|&v| v <= x)
+    }
+
+    /// Batch queries.
+    pub fn quantiles(&self, qs: &[f64]) -> Result<Vec<f64>, SketchError> {
+        qs.iter().map(|&q| self.quantile(q)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn definition2_on_small_set() {
+        // S = {10, 20, 30, 40, 50}; n = 5.
+        let e = ExactQuantiles::new(&[30.0, 10.0, 50.0, 20.0, 40.0]);
+        assert_eq!(e.quantile(0.0).unwrap(), 10.0); // rank 1 = min
+        assert_eq!(e.quantile(1.0).unwrap(), 50.0); // rank 5 = max
+        assert_eq!(e.quantile(0.5).unwrap(), 30.0); // rank floor(3) = 3
+        assert_eq!(e.quantile(0.24).unwrap(), 10.0); // rank floor(1.96)=1
+        assert_eq!(e.quantile(0.25).unwrap(), 20.0); // rank floor(2)=2
+    }
+
+    #[test]
+    fn rank_definition1() {
+        let e = ExactQuantiles::new(&[1.0, 2.0, 2.0, 3.0]);
+        assert_eq!(e.rank(0.5), 0);
+        assert_eq!(e.rank(2.0), 3);
+        assert_eq!(e.rank(10.0), 4);
+    }
+
+    #[test]
+    fn empty_and_invalid() {
+        let e = ExactQuantiles::new(&[]);
+        assert_eq!(e.quantile(0.5), Err(SketchError::Empty));
+        let e = ExactQuantiles::new(&[1.0]);
+        assert!(matches!(
+            e.quantile(-0.1),
+            Err(SketchError::InvalidQuantile(_))
+        ));
+    }
+}

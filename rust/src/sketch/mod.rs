@@ -1,0 +1,247 @@
+//! Quantile sketches with relative value error.
+//!
+//! * [`UddSketch`] — the paper's sequential algorithm [11]: DDSketch's
+//!   logarithmic bucketing plus the **uniform collapse** (Algorithm 2),
+//!   giving an α-accurate (0,1)-sketch in the turnstile model.
+//! * [`DdSketch`] — the predecessor baseline [17] with the
+//!   collapse-first-two strategy (α-accurate only for (q₀,1)).
+//! * [`ExactQuantiles`] — exact oracle (Definition 2) for validation.
+//! * [`LogMapping`] — the shared index map `i = ⌈log_γ x⌉`.
+//!
+//! Counters are `f64`: the gossip protocol averages sketches, so counts
+//! become fractional; the turnstile model admits transiently negative
+//! weights.
+
+pub mod codec;
+mod ddsketch;
+mod exact;
+mod store;
+mod uddsketch;
+
+pub use codec::{decode_peer_state, decode_sketch, encode_peer_state, encode_sketch, CodecError};
+pub use ddsketch::DdSketch;
+pub use exact::ExactQuantiles;
+pub use store::{collapsed_index, DenseStore, SparseStore, Store, VecStore};
+pub use uddsketch::UddSketch;
+
+/// Errors surfaced by sketch construction and queries.
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum SketchError {
+    /// α must lie in (0, 1).
+    #[error("alpha must be in (0,1), got {0}")]
+    InvalidAlpha(f64),
+    /// The bucket budget must allow at least one collapse pair.
+    #[error("max buckets must be >= 2, got {0}")]
+    InvalidBuckets(usize),
+    /// Quantile parameter out of [0, 1].
+    #[error("quantile q must be in [0,1], got {0}")]
+    InvalidQuantile(f64),
+    /// Query on an empty sketch.
+    #[error("sketch is empty")]
+    Empty,
+    /// Merging sketches with different initial α lineages.
+    #[error("incompatible sketches: alpha0 {0} vs {1}")]
+    IncompatibleAlpha(f64, f64),
+    /// Value outside the sketch's supported domain.
+    #[error("value {0} not representable (supported domain: finite reals)")]
+    UnsupportedValue(f64),
+}
+
+/// The logarithmic bucket mapping shared by DDSketch and UDDSketch.
+///
+/// With `γ = (1+α)/(1−α)`, bucket `i` covers `(γ^(i−1), γ^i]` and the
+/// mid-point estimate `2γ^i/(γ+1)` is within relative error α of every
+/// value in the bucket (Definition 4).
+#[derive(Debug, Clone, Copy)]
+pub struct LogMapping {
+    alpha0: f64,
+    /// Number of uniform collapses applied: `γ = γ₀^(2^k)`.
+    collapses: u32,
+    gamma: f64,
+    ln_gamma: f64,
+    inv_ln_gamma: f64,
+}
+
+impl LogMapping {
+    /// Build from the user accuracy parameter α₀ ∈ (0, 1).
+    pub fn new(alpha0: f64) -> Result<Self, SketchError> {
+        if !(alpha0 > 0.0 && alpha0 < 1.0) || !alpha0.is_finite() {
+            return Err(SketchError::InvalidAlpha(alpha0));
+        }
+        let gamma = (1.0 + alpha0) / (1.0 - alpha0);
+        let ln_gamma = gamma.ln();
+        Ok(Self {
+            alpha0,
+            collapses: 0,
+            gamma,
+            ln_gamma,
+            inv_ln_gamma: 1.0 / ln_gamma,
+        })
+    }
+
+    /// The initial accuracy parameter α₀.
+    pub fn alpha0(&self) -> f64 {
+        self.alpha0
+    }
+
+    /// Current γ (grows as γ ← γ² on every uniform collapse).
+    pub fn gamma(&self) -> f64 {
+        self.gamma
+    }
+
+    /// Current error bound `α = (γ−1)/(γ+1)` (equals
+    /// `2α/(1+α²)` applied `collapses` times to α₀, per Lemma 1).
+    pub fn alpha(&self) -> f64 {
+        (self.gamma - 1.0) / (self.gamma + 1.0)
+    }
+
+    /// Number of uniform collapses applied so far.
+    pub fn collapses(&self) -> u32 {
+        self.collapses
+    }
+
+    /// Bucket index for a positive value: `i = ⌈log_γ x⌉`.
+    #[inline]
+    pub fn index(&self, x: f64) -> i64 {
+        debug_assert!(x > 0.0);
+        (x.ln() * self.inv_ln_gamma).ceil() as i64
+    }
+
+    /// Representative value of bucket `i`: `2γ^i/(γ+1)` (Algorithm 6).
+    #[inline]
+    pub fn value(&self, i: i64) -> f64 {
+        2.0 * (i as f64 * self.ln_gamma).exp() / (self.gamma + 1.0)
+    }
+
+    /// Lower edge `γ^(i−1)` of bucket `i`.
+    pub fn lower_bound(&self, i: i64) -> f64 {
+        ((i - 1) as f64 * self.ln_gamma).exp()
+    }
+
+    /// Upper edge `γ^i` of bucket `i`.
+    pub fn upper_bound(&self, i: i64) -> f64 {
+        (i as f64 * self.ln_gamma).exp()
+    }
+
+    /// Register one uniform collapse: γ ← γ².
+    pub fn on_collapse(&mut self) {
+        self.collapses += 1;
+        self.gamma = self.gamma * self.gamma;
+        self.ln_gamma = 2.0 * self.ln_gamma;
+        self.inv_ln_gamma = 1.0 / self.ln_gamma;
+    }
+
+    /// True when two mappings originate from the same α₀ (mergeable after
+    /// collapse alignment).
+    pub fn same_lineage(&self, other: &Self) -> bool {
+        self.alpha0.to_bits() == other.alpha0.to_bits()
+    }
+}
+
+/// Theorem 2: the worst-case accuracy UDDSketch can degrade to when
+/// summarizing values in `[x_min, x_max]` with `m` buckets:
+/// `α̂ = (γ̃²−1)/(γ̃²+1)`, `γ̃ = (x_max/x_min)^(1/(m−1))`.
+pub fn theorem2_bound(x_min: f64, x_max: f64, m: usize) -> f64 {
+    assert!(x_min > 0.0 && x_max >= x_min && m >= 2);
+    let gamma_tilde = (x_max / x_min).powf(1.0 / (m as f64 - 1.0));
+    let g2 = gamma_tilde * gamma_tilde;
+    (g2 - 1.0) / (g2 + 1.0)
+}
+
+/// Lemma 1: one uniform collapse maps accuracy α to `2α/(1+α²)`.
+pub fn alpha_after_collapse(alpha: f64) -> f64 {
+    2.0 * alpha / (1.0 + alpha * alpha)
+}
+
+/// The rank targeted by the inferior q-quantile (Definition 2):
+/// `⌊1 + q(n−1)⌋` for a dataset of (possibly fractional, under gossip
+/// averaging) size `n`.
+#[inline]
+pub fn quantile_rank(q: f64, n: f64) -> f64 {
+    (1.0 + q * (n - 1.0)).floor()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mapping_bucket_bounds() {
+        let m = LogMapping::new(0.01).unwrap();
+        // Bucket i covers (γ^(i-1), γ^i]: the index of any x in the open
+        // interval must be i, and the representative is inside the bucket.
+        for i in [-50i64, -3, 0, 1, 7, 42] {
+            let lo = m.lower_bound(i);
+            let hi = m.upper_bound(i);
+            let mid = (lo + hi) / 2.0;
+            assert_eq!(m.index(mid), i, "i={i}");
+            assert_eq!(m.index(hi * (1.0 - 1e-12)), i);
+            let v = m.value(i);
+            assert!(v > lo && v <= hi * (1.0 + 1e-12));
+        }
+    }
+
+    #[test]
+    fn mapping_relative_error_within_alpha() {
+        let m = LogMapping::new(0.02).unwrap();
+        // For any x, |value(index(x)) - x| <= alpha * x.
+        let mut x = 1e-6;
+        while x < 1e9 {
+            let est = m.value(m.index(x));
+            assert!(
+                (est - x).abs() <= m.alpha() * x * (1.0 + 1e-9),
+                "x={x} est={est}"
+            );
+            x *= 1.37;
+        }
+    }
+
+    #[test]
+    fn collapse_updates_gamma_and_alpha() {
+        let mut m = LogMapping::new(0.001).unwrap();
+        let a0 = m.alpha();
+        let g0 = m.gamma();
+        m.on_collapse();
+        assert!((m.gamma() - g0 * g0).abs() < 1e-12);
+        let expect = alpha_after_collapse(a0);
+        assert!((m.alpha() - expect).abs() < 1e-12);
+        assert_eq!(m.collapses(), 1);
+    }
+
+    #[test]
+    fn lemma1_index_map_consistency() {
+        // After a collapse (γ'=γ²), an item x in bucket i of the old
+        // mapping falls in bucket ⌈i/2⌉ of the new mapping.
+        let mut m = LogMapping::new(0.01).unwrap();
+        let xs = [0.001, 0.5, 1.0, 3.7, 1e6];
+        let before: Vec<i64> = xs.iter().map(|&x| m.index(x)).collect();
+        m.on_collapse();
+        for (&x, &i) in xs.iter().zip(&before) {
+            assert_eq!(m.index(x), collapsed_index(i), "x={x}");
+        }
+    }
+
+    #[test]
+    fn theorem2_monotone_in_span() {
+        let b1 = theorem2_bound(1.0, 1e3, 1024);
+        let b2 = theorem2_bound(1.0, 1e9, 1024);
+        assert!(b1 < b2);
+        assert!(b1 > 0.0 && b2 < 1.0);
+    }
+
+    #[test]
+    fn invalid_alpha_rejected() {
+        assert!(LogMapping::new(0.0).is_err());
+        assert!(LogMapping::new(1.0).is_err());
+        assert!(LogMapping::new(-0.5).is_err());
+        assert!(LogMapping::new(f64::NAN).is_err());
+    }
+
+    #[test]
+    fn quantile_rank_definition2() {
+        // n=10: q=0 -> 1, q=1 -> 10, q=0.5 -> floor(1+4.5)=5
+        assert_eq!(quantile_rank(0.0, 10.0), 1.0);
+        assert_eq!(quantile_rank(1.0, 10.0), 10.0);
+        assert_eq!(quantile_rank(0.5, 10.0), 5.0);
+    }
+}

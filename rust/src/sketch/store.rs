@@ -1,0 +1,731 @@
+//! Bucket stores backing the sketches.
+//!
+//! A store maps logarithmic bucket indices `i ∈ ℤ` to real-valued counters
+//! (fractional under gossip averaging, negative transiently in the
+//! turnstile model). Two implementations are provided and ablated in
+//! `benches/ablation_collapse.rs`:
+//!
+//! * [`DenseStore`] — contiguous `Vec<f64>` window with an index offset;
+//!   O(1) insert, cache-friendly scans. The default and the hot-path
+//!   choice.
+//! * [`SparseStore`] — `BTreeMap<i64, f64>`; compact for pathological index
+//!   spans (e.g. inputs straddling hundreds of orders of magnitude).
+
+use std::collections::BTreeMap;
+
+/// Counter storage for logarithmic bucket indices.
+pub trait Store: Clone + std::fmt::Debug {
+    /// Create an empty store.
+    fn empty() -> Self;
+
+    /// Add weight `w` (may be negative — turnstile model) to bucket `i`.
+    /// Counters that reach exactly zero are dropped.
+    fn add(&mut self, i: i64, w: f64);
+
+    /// Counter value at `i` (0.0 when absent).
+    fn get(&self, i: i64) -> f64;
+
+    /// Total weight across buckets.
+    fn total(&self) -> f64;
+
+    /// Number of buckets with non-zero counters (the paper's `|S|`).
+    fn nonzero(&self) -> usize;
+
+    /// Smallest index with a non-zero counter.
+    fn min_index(&self) -> Option<i64>;
+
+    /// Largest index with a non-zero counter.
+    fn max_index(&self) -> Option<i64>;
+
+    /// Visit `(index, counter)` for non-zero buckets in ascending index
+    /// order.
+    fn for_each(&self, f: impl FnMut(i64, f64));
+
+    /// Uniform collapse (Algorithm 2): every bucket `i` moves to
+    /// `⌈i/2⌉`; pairs `(2j−1, 2j)` fuse into `j`.
+    fn uniform_collapse(&mut self);
+
+    /// Collapse the two lowest non-zero buckets into the higher of the two
+    /// (DDSketch's strategy, Algorithm 1).
+    fn collapse_lowest_pair(&mut self);
+
+    /// Multiply every counter by `f` (gossip averaging support).
+    /// `f = 0` clears the store.
+    fn scale(&mut self, f: f64);
+
+    /// Remove all buckets.
+    fn clear(&mut self);
+
+    /// Merge `other`'s counters scaled by `w` into `self`
+    /// (`self[i] += w * other[i]`). Stores may specialize this (the
+    /// gossip hot path — [`VecStore`] does a linear two-pointer merge).
+    fn merge_scaled(&mut self, other: &Self, w: f64) {
+        other.for_each(|i, c| self.add(i, c * w));
+    }
+
+    /// Non-zero entries in ascending index order (convenience).
+    fn entries(&self) -> Vec<(i64, f64)> {
+        let mut out = Vec::with_capacity(self.nonzero());
+        self.for_each(|i, c| out.push((i, c)));
+        out
+    }
+
+    /// True when no bucket holds weight.
+    fn is_empty(&self) -> bool {
+        self.nonzero() == 0
+    }
+}
+
+/// Ceiling of `i/2` over integers (uniform-collapse index map, Lemma 1).
+#[inline]
+pub fn collapsed_index(i: i64) -> i64 {
+    (i + 1).div_euclid(2)
+}
+
+// ---------------------------------------------------------------------------
+// DenseStore
+// ---------------------------------------------------------------------------
+
+/// Contiguous window store: `counts[k]` is the counter of index
+/// `offset + k`. The window grows geometrically on demand and re-anchors on
+/// collapse.
+#[derive(Debug, Clone, Default)]
+pub struct DenseStore {
+    counts: Vec<f64>,
+    offset: i64,
+    nonzero: usize,
+    total: f64,
+}
+
+impl DenseStore {
+    fn slot(&self, i: i64) -> Option<usize> {
+        let k = i - self.offset;
+        if k >= 0 && (k as usize) < self.counts.len() {
+            Some(k as usize)
+        } else {
+            None
+        }
+    }
+
+    /// Grow the window so that index `i` is addressable.
+    fn ensure(&mut self, i: i64) -> usize {
+        if self.counts.is_empty() {
+            // Anchor the window at i with a little slack on both sides.
+            self.offset = i - 4;
+            self.counts = vec![0.0; 16];
+            return (i - self.offset) as usize;
+        }
+        if i < self.offset {
+            // Prepend, growing at least 2x to amortize.
+            let needed = (self.offset - i) as usize;
+            let grow = needed.max(self.counts.len());
+            let mut next = vec![0.0; grow + self.counts.len()];
+            next[grow..].copy_from_slice(&self.counts);
+            self.counts = next;
+            self.offset -= grow as i64;
+        }
+        let k = (i - self.offset) as usize;
+        if k >= self.counts.len() {
+            let target = (k + 1).max(self.counts.len() * 2);
+            self.counts.resize(target, 0.0);
+        }
+        k
+    }
+
+    /// Direct read-only view `(offset, counts)` for the dense gossip path.
+    pub fn raw(&self) -> (i64, &[f64]) {
+        (self.offset, &self.counts)
+    }
+}
+
+impl Store for DenseStore {
+    fn empty() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    fn add(&mut self, i: i64, w: f64) {
+        if w == 0.0 {
+            return;
+        }
+        let k = match self.slot(i) {
+            Some(k) => k,
+            None => self.ensure(i),
+        };
+        let before = self.counts[k];
+        let after = before + w;
+        // Treat tiny residues from float cancellation as zero so turnstile
+        // deletes actually free buckets.
+        let after = if after.abs() < 1e-12 { 0.0 } else { after };
+        self.counts[k] = after;
+        self.total += after - before;
+        match (before != 0.0, after != 0.0) {
+            (false, true) => self.nonzero += 1,
+            (true, false) => self.nonzero -= 1,
+            _ => {}
+        }
+    }
+
+    #[inline]
+    fn get(&self, i: i64) -> f64 {
+        self.slot(i).map_or(0.0, |k| self.counts[k])
+    }
+
+    fn total(&self) -> f64 {
+        self.total
+    }
+
+    fn nonzero(&self) -> usize {
+        self.nonzero
+    }
+
+    fn min_index(&self) -> Option<i64> {
+        self.counts
+            .iter()
+            .position(|&c| c != 0.0)
+            .map(|k| self.offset + k as i64)
+    }
+
+    fn max_index(&self) -> Option<i64> {
+        self.counts
+            .iter()
+            .rposition(|&c| c != 0.0)
+            .map(|k| self.offset + k as i64)
+    }
+
+    fn for_each(&self, mut f: impl FnMut(i64, f64)) {
+        for (k, &c) in self.counts.iter().enumerate() {
+            if c != 0.0 {
+                f(self.offset + k as i64, c);
+            }
+        }
+    }
+
+    fn uniform_collapse(&mut self) {
+        if self.nonzero == 0 {
+            return;
+        }
+        let lo = self.min_index().unwrap();
+        let hi = self.max_index().unwrap();
+        let new_lo = collapsed_index(lo);
+        let new_hi = collapsed_index(hi);
+        let mut next = vec![0.0; (new_hi - new_lo + 1) as usize + 8];
+        let next_offset = new_lo - 4;
+        let mut nonzero = 0usize;
+        self.for_each(|i, c| {
+            let j = collapsed_index(i);
+            let k = (j - next_offset) as usize;
+            if next[k] == 0.0 {
+                nonzero += 1;
+            }
+            next[k] += c;
+            if next[k] == 0.0 {
+                nonzero -= 1; // exact cancellation (negative weights)
+            }
+        });
+        self.counts = next;
+        self.offset = next_offset;
+        self.nonzero = nonzero;
+        // total unchanged by construction
+    }
+
+    fn scale(&mut self, f: f64) {
+        if f == 0.0 {
+            self.clear();
+            return;
+        }
+        for c in &mut self.counts {
+            *c *= f;
+        }
+        self.total *= f;
+    }
+
+    fn collapse_lowest_pair(&mut self) {
+        if self.nonzero < 2 {
+            return;
+        }
+        let lo = self.min_index().unwrap();
+        let c = self.get(lo);
+        // Find the next non-zero above lo.
+        let mut next_i = None;
+        let start = (lo - self.offset) as usize + 1;
+        for k in start..self.counts.len() {
+            if self.counts[k] != 0.0 {
+                next_i = Some(self.offset + k as i64);
+                break;
+            }
+        }
+        let z = next_i.expect("nonzero >= 2 guarantees a second bucket");
+        self.add(lo, -c);
+        self.add(z, c);
+    }
+
+    fn clear(&mut self) {
+        self.counts.clear();
+        self.offset = 0;
+        self.nonzero = 0;
+        self.total = 0.0;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// SparseStore
+// ---------------------------------------------------------------------------
+
+/// Ordered-map store; memory proportional to the number of live buckets.
+#[derive(Debug, Clone, Default)]
+pub struct SparseStore {
+    map: BTreeMap<i64, f64>,
+    total: f64,
+}
+
+impl Store for SparseStore {
+    fn empty() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    fn add(&mut self, i: i64, w: f64) {
+        if w == 0.0 {
+            return;
+        }
+        self.total += w;
+        let e = self.map.entry(i).or_insert(0.0);
+        *e += w;
+        if e.abs() < 1e-12 {
+            self.total -= *e;
+            self.map.remove(&i);
+        }
+    }
+
+    #[inline]
+    fn get(&self, i: i64) -> f64 {
+        self.map.get(&i).copied().unwrap_or(0.0)
+    }
+
+    fn total(&self) -> f64 {
+        self.total
+    }
+
+    fn nonzero(&self) -> usize {
+        self.map.len()
+    }
+
+    fn min_index(&self) -> Option<i64> {
+        self.map.keys().next().copied()
+    }
+
+    fn max_index(&self) -> Option<i64> {
+        self.map.keys().next_back().copied()
+    }
+
+    fn for_each(&self, mut f: impl FnMut(i64, f64)) {
+        for (&i, &c) in &self.map {
+            f(i, c);
+        }
+    }
+
+    fn uniform_collapse(&mut self) {
+        let mut next = BTreeMap::new();
+        for (&i, &c) in &self.map {
+            *next.entry(collapsed_index(i)).or_insert(0.0) += c;
+        }
+        next.retain(|_, c: &mut f64| *c != 0.0);
+        self.map = next;
+    }
+
+    fn scale(&mut self, f: f64) {
+        if f == 0.0 {
+            self.clear();
+            return;
+        }
+        for c in self.map.values_mut() {
+            *c *= f;
+        }
+        self.total *= f;
+    }
+
+    fn collapse_lowest_pair(&mut self) {
+        if self.map.len() < 2 {
+            return;
+        }
+        let (&lo, &c) = self.map.iter().next().unwrap();
+        let (&z, _) = self.map.iter().nth(1).unwrap();
+        self.map.remove(&lo);
+        *self.map.entry(z).or_insert(0.0) += c;
+    }
+
+    fn clear(&mut self) {
+        self.map.clear();
+        self.total = 0.0;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// VecStore
+// ---------------------------------------------------------------------------
+
+/// Sorted-vector store: entries `(index, counter)` kept in ascending index
+/// order. The gossip hot-path representation — bucket merges become linear
+/// two-pointer merges over contiguous memory (see `merge_scaled`), clones
+/// are single memcpys, and uniform collapse is one in-place pass. Point
+/// inserts are O(m) worst case, so bulk ingestion still uses
+/// [`DenseStore`] and converts once.
+#[derive(Debug, Clone, Default)]
+pub struct VecStore {
+    entries: Vec<(i64, f64)>,
+    total: f64,
+}
+
+impl VecStore {
+    #[inline]
+    fn drop_if_zero(&mut self, pos: usize) {
+        if self.entries[pos].1.abs() < 1e-12 {
+            self.total -= self.entries[pos].1;
+            self.entries.remove(pos);
+        }
+    }
+}
+
+impl Store for VecStore {
+    fn empty() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    fn add(&mut self, i: i64, w: f64) {
+        if w == 0.0 {
+            return;
+        }
+        self.total += w;
+        // Fast path: append in ascending order (dense write-back, decode).
+        if self.entries.last().map_or(true, |&(j, _)| j < i) {
+            self.entries.push((i, w));
+            self.drop_if_zero(self.entries.len() - 1);
+            return;
+        }
+        match self.entries.binary_search_by_key(&i, |&(j, _)| j) {
+            Ok(pos) => {
+                self.entries[pos].1 += w;
+                self.drop_if_zero(pos);
+            }
+            Err(pos) => self.entries.insert(pos, (i, w)),
+        }
+    }
+
+    #[inline]
+    fn get(&self, i: i64) -> f64 {
+        self.entries
+            .binary_search_by_key(&i, |&(j, _)| j)
+            .map(|pos| self.entries[pos].1)
+            .unwrap_or(0.0)
+    }
+
+    fn total(&self) -> f64 {
+        self.total
+    }
+
+    fn nonzero(&self) -> usize {
+        self.entries.len()
+    }
+
+    fn min_index(&self) -> Option<i64> {
+        self.entries.first().map(|&(i, _)| i)
+    }
+
+    fn max_index(&self) -> Option<i64> {
+        self.entries.last().map(|&(i, _)| i)
+    }
+
+    fn for_each(&self, mut f: impl FnMut(i64, f64)) {
+        for &(i, c) in &self.entries {
+            f(i, c);
+        }
+    }
+
+    fn uniform_collapse(&mut self) {
+        // ceil(i/2) is monotone, so one in-place pass keeps the order.
+        let mut out = 0usize;
+        for k in 0..self.entries.len() {
+            let (i, c) = self.entries[k];
+            let j = collapsed_index(i);
+            if out > 0 && self.entries[out - 1].0 == j {
+                self.entries[out - 1].1 += c;
+                if self.entries[out - 1].1 == 0.0 {
+                    out -= 1; // exact cancellation under negative weights
+                }
+            } else {
+                self.entries[out] = (j, c);
+                out += 1;
+            }
+        }
+        self.entries.truncate(out);
+    }
+
+    fn collapse_lowest_pair(&mut self) {
+        if self.entries.len() < 2 {
+            return;
+        }
+        let (_, c) = self.entries.remove(0);
+        self.entries[0].1 += c;
+    }
+
+    fn scale(&mut self, f: f64) {
+        if f == 0.0 {
+            self.clear();
+            return;
+        }
+        for e in &mut self.entries {
+            e.1 *= f;
+        }
+        self.total *= f;
+    }
+
+    fn merge_scaled(&mut self, other: &Self, w: f64) {
+        if other.entries.is_empty() || w == 0.0 {
+            return;
+        }
+        // Linear two-pointer merge of two sorted entry lists.
+        let mut out = Vec::with_capacity(self.entries.len() + other.entries.len());
+        let (a, b) = (&self.entries, &other.entries);
+        let (mut x, mut y) = (0usize, 0usize);
+        while x < a.len() && y < b.len() {
+            match a[x].0.cmp(&b[y].0) {
+                std::cmp::Ordering::Less => {
+                    out.push(a[x]);
+                    x += 1;
+                }
+                std::cmp::Ordering::Greater => {
+                    out.push((b[y].0, b[y].1 * w));
+                    y += 1;
+                }
+                std::cmp::Ordering::Equal => {
+                    let c = a[x].1 + b[y].1 * w;
+                    if c.abs() >= 1e-12 {
+                        out.push((a[x].0, c));
+                    }
+                    x += 1;
+                    y += 1;
+                }
+            }
+        }
+        out.extend_from_slice(&a[x..]);
+        out.extend(b[y..].iter().map(|&(i, c)| (i, c * w)));
+        self.entries = out;
+        self.total += other.total * w;
+    }
+
+    fn clear(&mut self) {
+        self.entries.clear();
+        self.total = 0.0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn collapsed_index_matches_ceil_halving() {
+        for i in -20i64..=20 {
+            let expect = (i as f64 / 2.0).ceil() as i64;
+            assert_eq!(collapsed_index(i), expect, "i={i}");
+        }
+    }
+
+    fn exercise<S: Store>() {
+        let mut s = S::empty();
+        assert!(s.is_empty());
+        assert_eq!(s.min_index(), None);
+        s.add(5, 2.0);
+        s.add(-3, 1.0);
+        s.add(100, 4.0);
+        assert_eq!(s.nonzero(), 3);
+        assert_eq!(s.total(), 7.0);
+        assert_eq!(s.min_index(), Some(-3));
+        assert_eq!(s.max_index(), Some(100));
+        assert_eq!(s.get(5), 2.0);
+        assert_eq!(s.get(6), 0.0);
+        // Turnstile: deleting to zero frees the bucket.
+        s.add(5, -2.0);
+        assert_eq!(s.nonzero(), 2);
+        assert_eq!(s.get(5), 0.0);
+        // Entries ascend.
+        let e = s.entries();
+        assert_eq!(e, vec![(-3, 1.0), (100, 4.0)]);
+    }
+
+    #[test]
+    fn dense_basic() {
+        exercise::<DenseStore>();
+    }
+
+    #[test]
+    fn sparse_basic() {
+        exercise::<SparseStore>();
+    }
+
+    #[test]
+    fn vec_basic() {
+        exercise::<VecStore>();
+    }
+
+    #[test]
+    fn vec_uniform_collapse() {
+        exercise_uniform_collapse::<VecStore>();
+    }
+
+    #[test]
+    fn vec_collapse_negative() {
+        exercise_collapse_negative_indices::<VecStore>();
+    }
+
+    #[test]
+    fn vec_lowest_pair() {
+        exercise_lowest_pair::<VecStore>();
+    }
+
+    #[test]
+    fn vec_merge_scaled_matches_default() {
+        use crate::rng::{default_rng, Rng};
+        let mut r = default_rng(123);
+        for _ in 0..50 {
+            let mut a = VecStore::empty();
+            let mut b = VecStore::empty();
+            let mut sp_a = SparseStore::empty();
+            let mut sp_b = SparseStore::empty();
+            for _ in 0..200 {
+                let i = r.next_below(80) as i64 - 40;
+                let w = 1.0 + r.next_f64();
+                if r.chance(0.5) {
+                    a.add(i, w);
+                    sp_a.add(i, w);
+                } else {
+                    b.add(i, w);
+                    sp_b.add(i, w);
+                }
+            }
+            let w = 0.5;
+            a.merge_scaled(&b, w);
+            sp_a.merge_scaled(&sp_b, w); // default trait impl
+            let ea = a.entries();
+            let eb = sp_a.entries();
+            assert_eq!(ea.len(), eb.len());
+            for ((i, c), (j, d)) in ea.iter().zip(&eb) {
+                assert_eq!(i, j);
+                assert!((c - d).abs() < 1e-12);
+            }
+            assert!((a.total() - sp_a.total()).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn vec_merge_scaled_exact_cancellation() {
+        let mut a = VecStore::empty();
+        a.add(5, 2.0);
+        a.add(7, 1.0);
+        let mut b = VecStore::empty();
+        b.add(5, -4.0);
+        a.merge_scaled(&b, 0.5); // 2.0 + 0.5*(-4.0) = 0 -> bucket freed
+        assert_eq!(a.entries(), vec![(7, 1.0)]);
+    }
+
+    fn exercise_uniform_collapse<S: Store>() {
+        let mut s = S::empty();
+        // indices 1..=8, counter = index value for traceability
+        for i in 1..=8i64 {
+            s.add(i, i as f64);
+        }
+        let before = s.total();
+        s.uniform_collapse();
+        assert_eq!(s.total(), before);
+        // (1,2)->1, (3,4)->2, (5,6)->3, (7,8)->4
+        assert_eq!(
+            s.entries(),
+            vec![(1, 3.0), (2, 7.0), (3, 11.0), (4, 15.0)]
+        );
+    }
+
+    #[test]
+    fn dense_uniform_collapse() {
+        exercise_uniform_collapse::<DenseStore>();
+    }
+
+    #[test]
+    fn sparse_uniform_collapse() {
+        exercise_uniform_collapse::<SparseStore>();
+    }
+
+    fn exercise_collapse_negative_indices<S: Store>() {
+        let mut s = S::empty();
+        s.add(-5, 1.0);
+        s.add(-4, 2.0);
+        s.add(0, 3.0);
+        s.uniform_collapse();
+        // -5 -> -2, -4 -> -2, 0 -> 0
+        assert_eq!(s.entries(), vec![(-2, 3.0), (0, 3.0)]);
+    }
+
+    #[test]
+    fn dense_collapse_negative() {
+        exercise_collapse_negative_indices::<DenseStore>();
+    }
+
+    #[test]
+    fn sparse_collapse_negative() {
+        exercise_collapse_negative_indices::<SparseStore>();
+    }
+
+    fn exercise_lowest_pair<S: Store>() {
+        let mut s = S::empty();
+        s.add(2, 5.0);
+        s.add(7, 1.0);
+        s.add(9, 2.0);
+        s.collapse_lowest_pair();
+        assert_eq!(s.entries(), vec![(7, 6.0), (9, 2.0)]);
+        assert_eq!(s.total(), 8.0);
+    }
+
+    #[test]
+    fn dense_lowest_pair() {
+        exercise_lowest_pair::<DenseStore>();
+    }
+
+    #[test]
+    fn sparse_lowest_pair() {
+        exercise_lowest_pair::<SparseStore>();
+    }
+
+    #[test]
+    fn dense_window_growth_both_directions() {
+        let mut s = DenseStore::empty();
+        s.add(0, 1.0);
+        s.add(1000, 1.0);
+        s.add(-1000, 1.0);
+        assert_eq!(s.nonzero(), 3);
+        assert_eq!(s.min_index(), Some(-1000));
+        assert_eq!(s.max_index(), Some(1000));
+        assert_eq!(s.get(0), 1.0);
+    }
+
+    #[test]
+    fn stores_agree_randomized() {
+        use crate::rng::{default_rng, Rng};
+        let mut r = default_rng(99);
+        let mut d = DenseStore::empty();
+        let mut sp = SparseStore::empty();
+        for _ in 0..5000 {
+            let i = r.next_below(200) as i64 - 100;
+            let w = if r.chance(0.2) { -1.0 } else { 1.0 };
+            d.add(i, w);
+            sp.add(i, w);
+        }
+        for _ in 0..3 {
+            assert_eq!(d.entries(), sp.entries());
+            assert!((d.total() - sp.total()).abs() < 1e-9);
+            assert_eq!(d.nonzero(), sp.nonzero());
+            d.uniform_collapse();
+            sp.uniform_collapse();
+        }
+    }
+}

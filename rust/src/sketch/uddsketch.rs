@@ -1,0 +1,617 @@
+//! UDDSketch — the paper's sequential quantile sketch (§3.2, [11]).
+//!
+//! DDSketch's logarithmic bucketing with the **uniform collapse**
+//! (Algorithm 2): when the summary exceeds `m` buckets every bucket pair
+//! `(2j−1, 2j)` fuses into bucket `j` and `γ ← γ²`. Unlike DDSketch's
+//! collapse-first-two, the resulting sketch stays α-accurate over the whole
+//! quantile range (q₀ = 0, q₁ = 1), with α growing per Lemma 1 and bounded
+//! overall by Theorem 2.
+
+use super::{
+    quantile_rank, DenseStore, LogMapping, SketchError, Store,
+};
+
+/// Sequential UDDSketch over store `S` (default [`DenseStore`]).
+///
+/// Handles the full real line like DDSketch: positive values map to the
+/// positive store, negatives to a mirrored store, zeros to a dedicated
+/// counter. Works in the turnstile model ([`UddSketch::delete`]).
+///
+/// ```
+/// use duddsketch::sketch::UddSketch;
+/// let mut s: UddSketch = UddSketch::new(0.01, 256).unwrap();
+/// for x in [1.0, 2.0, 3.0, 4.0, 5.0] { s.insert(x); }
+/// assert!((s.quantile(0.5).unwrap() - 3.0).abs() <= 0.01 * 3.0);
+/// ```
+#[derive(Debug, Clone)]
+pub struct UddSketch<S: Store = DenseStore> {
+    mapping: LogMapping,
+    max_buckets: usize,
+    pos: S,
+    neg: S,
+    zero_weight: f64,
+}
+
+impl<S: Store> UddSketch<S> {
+    /// Create a sketch with target accuracy `alpha` and at most
+    /// `max_buckets` buckets (the paper's `m`, counted across the positive
+    /// and negative stores).
+    pub fn new(alpha: f64, max_buckets: usize) -> Result<Self, SketchError> {
+        if max_buckets < 2 {
+            return Err(SketchError::InvalidBuckets(max_buckets));
+        }
+        Ok(Self {
+            mapping: LogMapping::new(alpha)?,
+            max_buckets,
+            pos: S::empty(),
+            neg: S::empty(),
+            zero_weight: 0.0,
+        })
+    }
+
+    /// Insert one item.
+    pub fn insert(&mut self, x: f64) {
+        self.update(x, 1.0);
+    }
+
+    /// Delete one previously inserted item (turnstile model).
+    pub fn delete(&mut self, x: f64) {
+        self.update(x, -1.0);
+    }
+
+    /// Add weight `w` (possibly negative or fractional) for value `x`.
+    pub fn update(&mut self, x: f64, w: f64) {
+        assert!(x.is_finite(), "update: non-finite value {x}");
+        if x > 0.0 {
+            self.pos.add(self.mapping.index(x), w);
+        } else if x < 0.0 {
+            self.neg.add(self.mapping.index(-x), w);
+        } else {
+            self.zero_weight += w;
+        }
+        self.collapse_to_budget();
+    }
+
+    /// Insert a slice of items.
+    pub fn extend(&mut self, xs: &[f64]) {
+        for &x in xs {
+            self.insert(x);
+        }
+    }
+
+    /// Number of non-zero buckets (the paper's `|S|`, across both stores).
+    pub fn bucket_count(&self) -> usize {
+        self.pos.nonzero() + self.neg.nonzero()
+    }
+
+    /// Total inserted weight (stream length for insert-only streams).
+    pub fn count(&self) -> f64 {
+        self.pos.total() + self.neg.total() + self.zero_weight
+    }
+
+    /// True when the sketch holds no weight.
+    pub fn is_empty(&self) -> bool {
+        self.count() <= 0.0 && self.bucket_count() == 0 && self.zero_weight == 0.0
+    }
+
+    /// Current error bound α (≥ the construction-time α after collapses).
+    pub fn alpha(&self) -> f64 {
+        self.mapping.alpha()
+    }
+
+    /// Current γ.
+    pub fn gamma(&self) -> f64 {
+        self.mapping.gamma()
+    }
+
+    /// Number of uniform collapses performed.
+    pub fn collapses(&self) -> u32 {
+        self.mapping.collapses()
+    }
+
+    /// The bucket budget `m`.
+    pub fn max_buckets(&self) -> usize {
+        self.max_buckets
+    }
+
+    /// The index mapping (γ, α, bucket edges).
+    pub fn mapping(&self) -> &LogMapping {
+        &self.mapping
+    }
+
+    /// Read-only positive store.
+    pub fn positive_store(&self) -> &S {
+        &self.pos
+    }
+
+    /// Read-only negative store (indices refer to magnitudes).
+    pub fn negative_store(&self) -> &S {
+        &self.neg
+    }
+
+    /// Weight at zero.
+    pub fn zero_weight(&self) -> f64 {
+        self.zero_weight
+    }
+
+    /// Apply one uniform collapse unconditionally (γ ← γ²).
+    pub fn force_collapse(&mut self) {
+        self.pos.uniform_collapse();
+        self.neg.uniform_collapse();
+        self.mapping.on_collapse();
+    }
+
+    fn collapse_to_budget(&mut self) {
+        while self.bucket_count() > self.max_buckets {
+            self.force_collapse();
+        }
+    }
+
+    /// Collapse until the sketch's γ lineage matches `collapses` rounds
+    /// (no-op if already past it).
+    pub fn align_to_collapses(&mut self, collapses: u32) {
+        while self.mapping.collapses() < collapses {
+            self.force_collapse();
+        }
+    }
+
+    /// Bulk-load raw store contents (wire-format decode path). Entries are
+    /// `(logarithmic index, counter)` in the sketch's *current* γ lineage;
+    /// the budget is re-enforced afterwards.
+    pub fn load_raw(&mut self, zero_weight: f64, pos: &[(i64, f64)], neg: &[(i64, f64)]) {
+        self.pos.clear();
+        self.neg.clear();
+        self.zero_weight = zero_weight;
+        for &(i, c) in pos {
+            self.pos.add(i, c);
+        }
+        for &(i, c) in neg {
+            self.neg.add(i, c);
+        }
+        self.collapse_to_budget();
+    }
+
+    /// Estimated rank of `x` (Definition 1): the number of summarized
+    /// items ≤ x, counting every bucket whose representative is ≤ x.
+    pub fn rank(&self, x: f64) -> f64 {
+        let mut acc = 0.0;
+        let mapping = &self.mapping;
+        self.neg.for_each(|i, c| {
+            if -mapping.value(i) <= x {
+                acc += c;
+            }
+        });
+        if x >= 0.0 {
+            acc += self.zero_weight;
+        }
+        self.pos.for_each(|i, c| {
+            if mapping.value(i) <= x {
+                acc += c;
+            }
+        });
+        acc
+    }
+
+    /// Estimated CDF at `x`: `rank(x) / n`.
+    pub fn cdf(&self, x: f64) -> Result<f64, SketchError> {
+        let n = self.count();
+        if n <= 0.0 {
+            return Err(SketchError::Empty);
+        }
+        Ok((self.rank(x) / n).clamp(0.0, 1.0))
+    }
+
+    /// Copy into a sketch backed by a different store type (same mapping,
+    /// same counters). The gossip layer keeps [`SparseStore`]-backed peer
+    /// states — memory ∝ live buckets, which matters on the adversarial
+    /// workload where merged index spans are huge — while bulk local
+    /// ingestion uses the faster [`DenseStore`].
+    ///
+    /// [`SparseStore`]: crate::sketch::SparseStore
+    /// [`DenseStore`]: crate::sketch::DenseStore
+    pub fn convert_store<T: Store>(&self) -> UddSketch<T> {
+        let mut pos = T::empty();
+        self.pos.for_each(|i, c| pos.add(i, c));
+        let mut neg = T::empty();
+        self.neg.for_each(|i, c| neg.add(i, c));
+        UddSketch {
+            mapping: self.mapping,
+            max_buckets: self.max_buckets,
+            pos,
+            neg,
+            zero_weight: self.zero_weight,
+        }
+    }
+
+    /// Replace the positive store from a dense counter window (used by the
+    /// batched gossip executors to write an averaged round back). `counts[k]`
+    /// holds the counter of logarithmic index `offset + k`; the mapping
+    /// (γ, collapse depth) is left untouched, then the budget is re-enforced.
+    pub fn set_positive_dense(&mut self, offset: i64, counts: &[f64]) {
+        self.pos.clear();
+        for (k, &c) in counts.iter().enumerate() {
+            if c != 0.0 {
+                self.pos.add(offset + k as i64, c);
+            }
+        }
+        self.collapse_to_budget();
+    }
+
+    /// Merge `other` into `self` with weights: counters become
+    /// `w_self·self + w_other·other` bucketwise. `(1, 1)` is the standard
+    /// mergeability sum; `(0.5, 0.5)` is the gossip averaging of
+    /// Algorithm 5.
+    ///
+    /// Sketches must share the initial α₀; the one with fewer collapses is
+    /// collapsed until γ matches (paper §5). The result is re-collapsed to
+    /// the bucket budget.
+    pub fn merge_weighted(
+        &mut self,
+        other: &Self,
+        w_self: f64,
+        w_other: f64,
+    ) -> Result<(), SketchError> {
+        if !self.mapping.same_lineage(&other.mapping) {
+            return Err(SketchError::IncompatibleAlpha(
+                self.mapping.alpha0(),
+                other.mapping.alpha0(),
+            ));
+        }
+        // Align collapse depth. `other` is logically collapsed by mapping
+        // its indices through `collapsed_index` the needed number of times.
+        let k_self = self.mapping.collapses();
+        let k_other = other.mapping.collapses();
+        self.align_to_collapses(k_other);
+        let shift = self.mapping.collapses() - k_other;
+
+        self.pos.scale(w_self);
+        self.neg.scale(w_self);
+        self.zero_weight =
+            self.zero_weight * w_self + other.zero_weight * w_other;
+
+        if shift == 0 {
+            // Same lineage depth: the store's specialized merge (linear
+            // two-pointer for VecStore — the gossip hot path).
+            self.pos.merge_scaled(&other.pos, w_other);
+            self.neg.merge_scaled(&other.neg, w_other);
+        } else {
+            let fold = |i: i64| {
+                let mut j = i;
+                for _ in 0..shift {
+                    j = super::collapsed_index(j);
+                }
+                j
+            };
+            let pos = &mut self.pos;
+            other.pos.for_each(|i, c| pos.add(fold(i), c * w_other));
+            let neg = &mut self.neg;
+            other.neg.for_each(|i, c| neg.add(fold(i), c * w_other));
+        }
+
+        let _ = k_self; // self's depth is subsumed by align_to_collapses
+        self.collapse_to_budget();
+        Ok(())
+    }
+
+    /// Standard merge (Definition 7): `self ← self ⊎ other`.
+    pub fn merge(&mut self, other: &Self) -> Result<(), SketchError> {
+        self.merge_weighted(other, 1.0, 1.0)
+    }
+
+    /// Estimate the inferior q-quantile (Definition 2) of the summarized
+    /// multiset.
+    pub fn quantile(&self, q: f64) -> Result<f64, SketchError> {
+        if !(0.0..=1.0).contains(&q) || q.is_nan() {
+            return Err(SketchError::InvalidQuantile(q));
+        }
+        let n = self.count();
+        if n <= 0.0 {
+            return Err(SketchError::Empty);
+        }
+        let target = quantile_rank(q, n).max(1.0);
+        let mut acc = 0.0;
+        let mut result: Option<f64> = None;
+        // Negative store: most negative first = descending bucket index.
+        let mut neg_entries = self.neg.entries();
+        neg_entries.reverse();
+        for (i, c) in neg_entries {
+            acc += c;
+            if acc >= target && result.is_none() {
+                result = Some(-self.mapping.value(i));
+            }
+        }
+        if result.is_none() && self.zero_weight > 0.0 {
+            acc += self.zero_weight;
+            if acc >= target {
+                result = Some(0.0);
+            }
+        }
+        if result.is_none() {
+            let mapping = &self.mapping;
+            self.pos.for_each(|i, c| {
+                acc += c;
+                if acc >= target && result.is_none() {
+                    result = Some(mapping.value(i));
+                }
+            });
+        }
+        // Fractional/averaged counters can leave acc slightly below target
+        // at the end; clamp to the maximum bucket.
+        Ok(result.unwrap_or_else(|| {
+            if let Some(i) = self.pos.max_index() {
+                self.mapping.value(i)
+            } else if self.zero_weight > 0.0 {
+                0.0
+            } else {
+                let i = self.neg.min_index().expect("non-empty sketch");
+                -self.mapping.value(i)
+            }
+        }))
+    }
+
+    /// Batch quantile queries.
+    pub fn quantiles(&self, qs: &[f64]) -> Result<Vec<f64>, SketchError> {
+        qs.iter().map(|&q| self.quantile(q)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::{default_rng, Rng};
+    use crate::sketch::{theorem2_bound, ExactQuantiles, SparseStore};
+
+    const QS: [f64; 11] = [
+        0.01, 0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8, 0.9, 0.99,
+    ];
+
+    #[test]
+    fn alpha_accuracy_without_collapse() {
+        // With a large budget no collapse occurs: every quantile must be
+        // within the configured alpha of the exact value.
+        let mut r = default_rng(1);
+        let xs: Vec<f64> =
+            (0..20_000).map(|_| 1.0 + 99.0 * r.next_f64()).collect();
+        let mut s: UddSketch = UddSketch::new(0.01, 4096).unwrap();
+        s.extend(&xs);
+        assert_eq!(s.collapses(), 0);
+        let exact = ExactQuantiles::new(&xs);
+        for q in QS {
+            let est = s.quantile(q).unwrap();
+            let tru = exact.quantile(q).unwrap();
+            let re = (est - tru).abs() / tru;
+            assert!(re <= 0.01 + 1e-9, "q={q} est={est} true={tru} re={re}");
+        }
+    }
+
+    #[test]
+    fn collapse_keeps_theorem2_bound() {
+        // Force collapses with a tiny budget; errors stay within the
+        // Theorem 2 bound for the observed span.
+        let mut r = default_rng(2);
+        // Log-uniform over nine decades [1e-3, 1e6] to force collapses.
+        let xs: Vec<f64> = (0..50_000)
+            .map(|_| 10f64.powf(r.next_f64() * 9.0 - 3.0))
+            .collect();
+        let mut s: UddSketch = UddSketch::new(0.001, 64).unwrap();
+        s.extend(&xs);
+        assert!(s.collapses() > 0, "test should exercise collapses");
+        assert!(s.bucket_count() <= 64);
+        let (mn, mx) = xs
+            .iter()
+            .fold((f64::MAX, f64::MIN), |(a, b), &x| (a.min(x), b.max(x)));
+        let bound = theorem2_bound(mn, mx, 64);
+        assert!(s.alpha() <= bound + 1e-9, "alpha {} bound {bound}", s.alpha());
+        let exact = ExactQuantiles::new(&xs);
+        for q in QS {
+            let est = s.quantile(q).unwrap();
+            let tru = exact.quantile(q).unwrap();
+            let re = (est - tru).abs() / tru;
+            assert!(re <= s.alpha() + 1e-9, "q={q} re={re} alpha={}", s.alpha());
+        }
+    }
+
+    #[test]
+    fn count_and_bucket_budget() {
+        let mut s: UddSketch = UddSketch::new(0.001, 32).unwrap();
+        let mut r = default_rng(3);
+        for _ in 0..10_000 {
+            s.insert(1.0 + 1e6 * r.next_f64());
+        }
+        assert_eq!(s.count(), 10_000.0);
+        assert!(s.bucket_count() <= 32);
+    }
+
+    #[test]
+    fn permutation_invariance() {
+        // Lemma 1 of [13]: same multiset, any order -> identical sketch.
+        let mut r = default_rng(4);
+        let xs: Vec<f64> = (0..5_000).map(|_| (10.0 * r.next_f64()).exp()).collect();
+        let mut shuffled = xs.clone();
+        r.shuffle(&mut shuffled);
+        let mut a: UddSketch = UddSketch::new(0.01, 64).unwrap();
+        let mut b: UddSketch = UddSketch::new(0.01, 64).unwrap();
+        a.extend(&xs);
+        b.extend(&shuffled);
+        assert_eq!(a.collapses(), b.collapses());
+        assert_eq!(a.positive_store().entries(), b.positive_store().entries());
+    }
+
+    #[test]
+    fn merge_equals_union_processing() {
+        // Mergeability (Definition 7): merge(S(D1), S(D2)) == S(D1 ⊎ D2).
+        let mut r = default_rng(5);
+        let d1: Vec<f64> = (0..3_000).map(|_| 1.0 + r.next_f64() * 50.0).collect();
+        let d2: Vec<f64> = (0..7_000).map(|_| 100.0 + r.next_f64() * 1e5).collect();
+        let mut s1: UddSketch = UddSketch::new(0.001, 128).unwrap();
+        let mut s2: UddSketch = UddSketch::new(0.001, 128).unwrap();
+        s1.extend(&d1);
+        s2.extend(&d2);
+        s1.merge(&s2).unwrap();
+
+        let mut su: UddSketch = UddSketch::new(0.001, 128).unwrap();
+        su.extend(&d1);
+        su.extend(&d2);
+
+        assert_eq!(s1.count(), 10_000.0);
+        assert_eq!(s1.collapses(), su.collapses());
+        let e1 = s1.positive_store().entries();
+        let eu = su.positive_store().entries();
+        assert_eq!(e1.len(), eu.len());
+        for ((i1, c1), (iu, cu)) in e1.iter().zip(&eu) {
+            assert_eq!(i1, iu);
+            assert!((c1 - cu).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn merge_is_commutative() {
+        let mut r = default_rng(6);
+        let d1: Vec<f64> = (0..2_000).map(|_| 1.0 + r.next_f64() * 1e4).collect();
+        let d2: Vec<f64> = (0..2_000).map(|_| 1e-3 + r.next_f64()).collect();
+        let build = |d: &[f64]| {
+            let mut s: UddSketch = UddSketch::new(0.01, 64).unwrap();
+            s.extend(d);
+            s
+        };
+        let mut ab = build(&d1);
+        ab.merge(&build(&d2)).unwrap();
+        let mut ba = build(&d2);
+        ba.merge(&build(&d1)).unwrap();
+        for q in QS {
+            assert_eq!(ab.quantile(q).unwrap(), ba.quantile(q).unwrap());
+        }
+    }
+
+    #[test]
+    fn merge_rejects_different_alpha0() {
+        let a: UddSketch = UddSketch::new(0.01, 64).unwrap();
+        let b: UddSketch = UddSketch::new(0.02, 64).unwrap();
+        let mut a2 = a.clone();
+        assert!(matches!(
+            a2.merge(&b),
+            Err(SketchError::IncompatibleAlpha(_, _))
+        ));
+    }
+
+    #[test]
+    fn merge_aligns_different_collapse_depths() {
+        // s1 is forced to collapse, s2 is not; merge must align lineages
+        // and remain exact on counts.
+        let mut s1: UddSketch = UddSketch::new(0.001, 16).unwrap();
+        let mut s2: UddSketch = UddSketch::new(0.001, 16).unwrap();
+        let mut r = default_rng(7);
+        for _ in 0..5_000 {
+            s1.insert(1e-3 + 1e6 * r.next_f64()); // wide span -> collapses
+        }
+        for _ in 0..1_000 {
+            s2.insert(5.0 + r.next_f64()); // narrow span -> none
+        }
+        assert!(s1.collapses() > s2.collapses());
+        let total = s1.count() + s2.count();
+        let mut merged = s2.clone();
+        merged.merge(&s1).unwrap();
+        assert!((merged.count() - total).abs() < 1e-6);
+        assert!(merged.bucket_count() <= 16);
+        assert!(merged.collapses() >= s1.collapses());
+    }
+
+    #[test]
+    fn turnstile_delete_restores_state() {
+        let mut s: UddSketch = UddSketch::new(0.01, 128).unwrap();
+        s.insert(10.0);
+        s.insert(20.0);
+        s.insert(30.0);
+        let before = s.positive_store().entries();
+        s.insert(400.0);
+        s.delete(400.0);
+        assert_eq!(s.positive_store().entries(), before);
+        assert_eq!(s.count(), 3.0);
+    }
+
+    #[test]
+    fn negative_and_zero_values() {
+        let mut s: UddSketch = UddSketch::new(0.01, 128).unwrap();
+        for x in [-100.0, -10.0, -1.0, 0.0, 1.0, 10.0, 100.0] {
+            s.insert(x);
+        }
+        assert_eq!(s.count(), 7.0);
+        let med = s.quantile(0.5).unwrap();
+        assert_eq!(med, 0.0);
+        let lo = s.quantile(0.0).unwrap();
+        assert!((lo + 100.0).abs() <= 1.0, "min est {lo}");
+        let hi = s.quantile(1.0).unwrap();
+        assert!((hi - 100.0).abs() <= 1.0, "max est {hi}");
+    }
+
+    #[test]
+    fn quantile_edge_cases() {
+        let mut s: UddSketch = UddSketch::new(0.01, 64).unwrap();
+        assert_eq!(s.quantile(0.5), Err(SketchError::Empty));
+        s.insert(42.0);
+        for q in [0.0, 0.5, 1.0] {
+            let est = s.quantile(q).unwrap();
+            assert!((est - 42.0).abs() <= 0.01 * 42.0);
+        }
+        assert!(matches!(
+            s.quantile(1.5),
+            Err(SketchError::InvalidQuantile(_))
+        ));
+        assert!(matches!(
+            s.quantile(f64::NAN),
+            Err(SketchError::InvalidQuantile(_))
+        ));
+    }
+
+    #[test]
+    fn sparse_store_variant_agrees() {
+        let mut r = default_rng(8);
+        let xs: Vec<f64> = (0..10_000).map(|_| (8.0 * r.next_f64()).exp()).collect();
+        let mut d: UddSketch<DenseStore> = UddSketch::new(0.005, 64).unwrap();
+        let mut sp: UddSketch<SparseStore> = UddSketch::new(0.005, 64).unwrap();
+        d.extend(&xs);
+        sp.extend(&xs);
+        assert_eq!(d.collapses(), sp.collapses());
+        for q in QS {
+            assert_eq!(d.quantile(q).unwrap(), sp.quantile(q).unwrap());
+        }
+    }
+
+    #[test]
+    fn rank_and_cdf() {
+        let mut s: UddSketch = UddSketch::new(0.001, 1024).unwrap();
+        for i in 1..=1000 {
+            s.insert(i as f64);
+        }
+        // rank within alpha-blur of truth: value x=500 has true rank 500.
+        let r = s.rank(500.0);
+        assert!((r - 500.0).abs() <= 2.0, "rank {r}");
+        assert_eq!(s.rank(0.5), 0.0);
+        assert_eq!(s.rank(2000.0), 1000.0);
+        let c = s.cdf(250.0).unwrap();
+        assert!((c - 0.25).abs() < 0.01, "cdf {c}");
+        // CDF is monotone.
+        let mut prev = 0.0;
+        for x in [1.0, 10.0, 100.0, 500.0, 999.0] {
+            let c = s.cdf(x).unwrap();
+            assert!(c >= prev);
+            prev = c;
+        }
+    }
+
+    #[test]
+    fn weighted_merge_halves_counts() {
+        // Gossip-style averaging: (0.5, 0.5) preserves bucket support and
+        // halves the total.
+        let mut a: UddSketch = UddSketch::new(0.01, 64).unwrap();
+        let mut b: UddSketch = UddSketch::new(0.01, 64).unwrap();
+        a.insert(10.0);
+        a.insert(10.0);
+        b.insert(10.0);
+        let mut avg = a.clone();
+        avg.merge_weighted(&b, 0.5, 0.5).unwrap();
+        assert!((avg.count() - 1.5).abs() < 1e-12);
+        let i = avg.mapping().index(10.0);
+        assert!((avg.positive_store().get(i) - 1.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,216 @@
+//! Micro-benchmark harness (criterion is unavailable offline — DESIGN.md
+//! §6). Used by every target in `benches/` with `harness = false`.
+//!
+//! Methodology: warmup runs, then `samples` timed batches; reports median,
+//! mean, and p10/p90 spread plus derived throughput. Deterministic target
+//! selection via `--bench-filter <substr>` on the command line.
+
+use std::time::Instant;
+
+/// Result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    /// Case name.
+    pub name: String,
+    /// Median seconds per iteration.
+    pub median_s: f64,
+    /// Mean seconds per iteration.
+    pub mean_s: f64,
+    /// 10th percentile seconds.
+    pub p10_s: f64,
+    /// 90th percentile seconds.
+    pub p90_s: f64,
+    /// Items processed per iteration (for throughput lines; 0 = skip).
+    pub items_per_iter: u64,
+}
+
+impl BenchResult {
+    /// Items/second at the median.
+    pub fn throughput(&self) -> Option<f64> {
+        if self.items_per_iter > 0 && self.median_s > 0.0 {
+            Some(self.items_per_iter as f64 / self.median_s)
+        } else {
+            None
+        }
+    }
+}
+
+fn fmt_time(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1} ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2} µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2} ms", s * 1e3)
+    } else {
+        format!("{s:.3} s")
+    }
+}
+
+fn fmt_rate(r: f64) -> String {
+    if r >= 1e9 {
+        format!("{:.2} G/s", r / 1e9)
+    } else if r >= 1e6 {
+        format!("{:.2} M/s", r / 1e6)
+    } else if r >= 1e3 {
+        format!("{:.2} K/s", r / 1e3)
+    } else {
+        format!("{r:.1} /s")
+    }
+}
+
+/// Bench runner: collects cases, honours `--bench-filter`, prints a table.
+pub struct Bencher {
+    filter: Option<String>,
+    warmup: usize,
+    samples: usize,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Bencher {
+    /// Construct from env/args. Honours `DUDD_BENCH_SAMPLES` and
+    /// `--bench-filter <substr>` (cargo bench passes unknown args through).
+    pub fn new() -> Self {
+        let args: Vec<String> = std::env::args().collect();
+        let filter = args
+            .iter()
+            .position(|a| a == "--bench-filter")
+            .and_then(|i| args.get(i + 1).cloned())
+            .or_else(|| {
+                // `cargo bench -- substring` convention: first free arg.
+                args.iter()
+                    .skip(1)
+                    .find(|a| !a.starts_with('-') && *a != "--bench")
+                    .cloned()
+            });
+        let samples = std::env::var("DUDD_BENCH_SAMPLES")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(15);
+        Self {
+            filter,
+            warmup: 3,
+            samples,
+            results: Vec::new(),
+        }
+    }
+
+    /// Time `f` (whole-batch closure); `items` is the per-iteration work
+    /// amount for throughput reporting.
+    pub fn case(&mut self, name: &str, items: u64, mut f: impl FnMut()) {
+        if let Some(flt) = &self.filter {
+            if !name.contains(flt.as_str()) {
+                return;
+            }
+        }
+        for _ in 0..self.warmup {
+            f();
+        }
+        let mut times = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t = Instant::now();
+            f();
+            times.push(t.elapsed().as_secs_f64());
+        }
+        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let pct = |p: f64| times[((p * (times.len() - 1) as f64).round()) as usize];
+        let result = BenchResult {
+            name: name.to_string(),
+            median_s: pct(0.5),
+            mean_s: times.iter().sum::<f64>() / times.len() as f64,
+            p10_s: pct(0.1),
+            p90_s: pct(0.9),
+            items_per_iter: items,
+        };
+        let tp = result
+            .throughput()
+            .map(|r| format!("  ({})", fmt_rate(r)))
+            .unwrap_or_default();
+        println!(
+            "bench {:<44} median {:>10}  p10 {:>10}  p90 {:>10}{}",
+            result.name,
+            fmt_time(result.median_s),
+            fmt_time(result.p10_s),
+            fmt_time(result.p90_s),
+            tp
+        );
+        self.results.push(result);
+    }
+
+    /// All collected results.
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+
+    /// Print the closing summary line expected in bench logs.
+    pub fn finish(&self, suite: &str) {
+        println!(
+            "suite {suite}: {} case(s), samples={} (set DUDD_BENCH_SAMPLES to change)",
+            self.results.len(),
+            self.samples
+        );
+    }
+}
+
+/// Prevent the optimizer from discarding a computed value
+/// (std::hint::black_box is stable since 1.66 — thin wrapper for clarity).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_case_records_result() {
+        let mut b = Bencher {
+            filter: None,
+            warmup: 1,
+            samples: 5,
+            results: Vec::new(),
+        };
+        let mut acc = 0u64;
+        b.case("smoke", 100, || {
+            for i in 0..100u64 {
+                acc = black_box(acc.wrapping_add(i));
+            }
+        });
+        assert_eq!(b.results().len(), 1);
+        let r = &b.results()[0];
+        assert!(r.median_s >= 0.0);
+        assert!(r.throughput().unwrap() > 0.0);
+        assert!(r.p10_s <= r.p90_s);
+    }
+
+    #[test]
+    fn filter_skips_nonmatching() {
+        let mut b = Bencher {
+            filter: Some("match-me".into()),
+            warmup: 0,
+            samples: 1,
+            results: Vec::new(),
+        };
+        b.case("other", 0, || {});
+        assert!(b.results().is_empty());
+        b.case("does-match-me", 0, || {});
+        assert_eq!(b.results().len(), 1);
+    }
+
+    #[test]
+    fn formatting() {
+        assert!(fmt_time(5e-9).ends_with("ns"));
+        assert!(fmt_time(5e-5).ends_with("µs"));
+        assert!(fmt_time(5e-2).ends_with("ms"));
+        assert!(fmt_time(5.0).ends_with('s'));
+        assert!(fmt_rate(2e9).ends_with("G/s"));
+        assert!(fmt_rate(2e6).ends_with("M/s"));
+    }
+}

@@ -1,0 +1,124 @@
+//! Minimal CSV writer for the experiment harness output.
+
+use std::io::Write;
+use std::path::Path;
+
+/// Accumulates rows and writes RFC-4180-ish CSV (quotes fields containing
+/// separators/quotes/newlines).
+#[derive(Debug, Default)]
+pub struct CsvWriter {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl CsvWriter {
+    /// New writer with a header row.
+    pub fn new(header: &[&str]) -> Self {
+        Self {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Append a row; panics if the width differs from the header.
+    pub fn row(&mut self, fields: &[String]) {
+        assert_eq!(
+            fields.len(),
+            self.header.len(),
+            "CSV row width {} != header width {}",
+            fields.len(),
+            self.header.len()
+        );
+        self.rows.push(fields.to_vec());
+    }
+
+    /// Convenience: append a row of display-able values.
+    pub fn row_display<T: std::fmt::Display>(&mut self, fields: &[T]) {
+        let v: Vec<String> = fields.iter().map(|f| f.to_string()).collect();
+        self.row(&v);
+    }
+
+    /// Number of data rows.
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// True when no rows were added.
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    fn escape(field: &str) -> String {
+        if field.contains(',') || field.contains('"') || field.contains('\n') {
+            format!("\"{}\"", field.replace('"', "\"\""))
+        } else {
+            field.to_string()
+        }
+    }
+
+    /// Render to a CSV string.
+    pub fn to_string(&self) -> String {
+        let mut out = String::new();
+        let line = |fields: &[String]| -> String {
+            fields
+                .iter()
+                .map(|f| Self::escape(f))
+                .collect::<Vec<_>>()
+                .join(",")
+        };
+        out.push_str(&line(&self.header));
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&line(r));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Write to a file, creating parent directories.
+    pub fn write_to(&self, path: &Path) -> std::io::Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(self.to_string().as_bytes())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_header_and_rows() {
+        let mut w = CsvWriter::new(&["a", "b"]);
+        w.row(&["1".into(), "2".into()]);
+        w.row_display(&[3.5, 4.5]);
+        assert_eq!(w.len(), 2);
+        assert_eq!(w.to_string(), "a,b\n1,2\n3.5,4.5\n");
+    }
+
+    #[test]
+    fn escapes_specials() {
+        let mut w = CsvWriter::new(&["x"]);
+        w.row(&["hello, \"world\"".into()]);
+        assert_eq!(w.to_string(), "x\n\"hello, \"\"world\"\"\"\n");
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_ragged_rows() {
+        let mut w = CsvWriter::new(&["a", "b"]);
+        w.row(&["only-one".into()]);
+    }
+
+    #[test]
+    fn writes_file() {
+        let dir = std::env::temp_dir().join("duddsketch_csv_test");
+        let path = dir.join("out.csv");
+        let mut w = CsvWriter::new(&["n"]);
+        w.row_display(&[1]);
+        w.write_to(&path).unwrap();
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), "n\n1\n");
+    }
+}

@@ -1,0 +1,76 @@
+//! In-tree utility substrates (the offline registry carries none of the
+//! usual helper crates — DESIGN.md §6).
+
+pub mod bench;
+pub mod csv;
+pub mod plot;
+pub mod testkit;
+
+use std::time::Instant;
+
+/// Wall-clock stopwatch with split support.
+#[derive(Debug)]
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    /// Start timing.
+    pub fn start() -> Self {
+        Self {
+            start: Instant::now(),
+        }
+    }
+
+    /// Seconds elapsed.
+    pub fn secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    /// Milliseconds elapsed.
+    pub fn millis(&self) -> f64 {
+        self.secs() * 1e3
+    }
+
+    /// Restart and return the elapsed seconds of the previous lap.
+    pub fn lap(&mut self) -> f64 {
+        let s = self.secs();
+        self.start = Instant::now();
+        s
+    }
+}
+
+/// Format a float compactly for tables (`1.234e-5` / `0.01234` style).
+pub fn fmt_g(x: f64) -> String {
+    if x == 0.0 {
+        "0".to_string()
+    } else if x.abs() >= 1e-3 && x.abs() < 1e6 {
+        let s = format!("{x:.6}");
+        s.trim_end_matches('0').trim_end_matches('.').to_string()
+    } else {
+        format!("{x:.3e}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stopwatch_measures_time() {
+        let mut sw = Stopwatch::start();
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        assert!(sw.millis() >= 9.0);
+        let lap = sw.lap();
+        assert!(lap >= 0.009);
+        assert!(sw.millis() < 10.0);
+    }
+
+    #[test]
+    fn fmt_g_shapes() {
+        assert_eq!(fmt_g(0.0), "0");
+        assert_eq!(fmt_g(0.5), "0.5");
+        assert_eq!(fmt_g(1.0), "1");
+        assert!(fmt_g(1.23e-9).contains('e'));
+    }
+}

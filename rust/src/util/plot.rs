@@ -1,0 +1,118 @@
+//! ASCII rendering of the paper's box-and-whisker figures.
+//!
+//! The harness prints each figure panel as rows of box plots over a
+//! log-scaled error axis, which makes "errors collapse to zero as rounds
+//! grow" visible directly in the terminal / EXPERIMENTS.md.
+
+use crate::metrics::BoxSummary;
+
+/// One labelled box in a panel.
+#[derive(Debug, Clone)]
+pub struct BoxRow {
+    /// Row label (e.g. the quantile "q=0.50").
+    pub label: String,
+    /// The summary to draw.
+    pub summary: BoxSummary,
+}
+
+/// Render rows of box plots on a shared log10 axis.
+///
+/// `floor` clamps zero/subnormal errors for the log axis (the paper's
+/// figures bottom out similarly); a value entirely at the floor renders as
+/// a single `|` at the left edge.
+pub fn render_boxes(title: &str, rows: &[BoxRow], width: usize, floor: f64) -> String {
+    let mut out = String::new();
+    out.push_str(title);
+    out.push('\n');
+    if rows.is_empty() {
+        out.push_str("  (no data)\n");
+        return out;
+    }
+    let lx = |v: f64| v.max(floor).log10();
+    let lo = rows
+        .iter()
+        .map(|r| lx(r.summary.min))
+        .fold(f64::MAX, f64::min);
+    let hi = rows
+        .iter()
+        .map(|r| lx(r.summary.max))
+        .fold(f64::MIN, f64::max);
+    let span = (hi - lo).max(1e-9);
+    let col = |v: f64| -> usize {
+        (((lx(v) - lo) / span) * (width.saturating_sub(1)) as f64).round() as usize
+    };
+    let label_w = rows.iter().map(|r| r.label.len()).max().unwrap_or(0);
+    for r in rows {
+        let s = &r.summary;
+        let mut line = vec![b' '; width];
+        let (wl, q1, md, q3, wh) =
+            (col(s.whisker_lo), col(s.q1), col(s.median), col(s.q3), col(s.whisker_hi));
+        for c in line.iter_mut().take(q1).skip(wl) {
+            *c = b'-';
+        }
+        for c in line.iter_mut().take(wh + 1).skip(q3) {
+            *c = b'-';
+        }
+        for c in line.iter_mut().take(q3 + 1).skip(q1) {
+            *c = b'=';
+        }
+        line[wl] = b'|';
+        line[wh.min(width - 1)] = b'|';
+        line[md.min(width - 1)] = b'#';
+        out.push_str(&format!(
+            "  {:label_w$} [{}] med={:.2e}\n",
+            r.label,
+            String::from_utf8(line).expect("ascii"),
+            s.median,
+        ));
+    }
+    out.push_str(&format!(
+        "  {:label_w$} axis: log10 err in [{:.1}, {:.1}]\n",
+        "", lo, hi
+    ));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn summary(vals: &[f64]) -> BoxSummary {
+        BoxSummary::from_data(vals).unwrap()
+    }
+
+    #[test]
+    fn renders_rows_with_markers() {
+        let rows = vec![
+            BoxRow {
+                label: "q=0.5".into(),
+                summary: summary(&[1e-6, 1e-5, 1e-4, 1e-3]),
+            },
+            BoxRow {
+                label: "q=0.99".into(),
+                summary: summary(&[1e-4, 1e-3, 1e-2]),
+            },
+        ];
+        let s = render_boxes("demo", &rows, 60, 1e-12);
+        assert!(s.contains("demo"));
+        assert!(s.contains('#'));
+        assert!(s.contains("q=0.99"));
+        assert!(s.lines().count() >= 4);
+    }
+
+    #[test]
+    fn empty_rows_safe() {
+        let s = render_boxes("none", &[], 40, 1e-12);
+        assert!(s.contains("(no data)"));
+    }
+
+    #[test]
+    fn degenerate_all_zero_errors() {
+        let rows = vec![BoxRow {
+            label: "q".into(),
+            summary: summary(&[0.0, 0.0, 0.0]),
+        }];
+        let s = render_boxes("zeros", &rows, 40, 1e-12);
+        assert!(s.contains('#'));
+    }
+}

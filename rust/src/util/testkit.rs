@@ -1,0 +1,188 @@
+//! Mini property-testing kit (proptest is unavailable offline — DESIGN.md
+//! §6). Deterministic: every case derives from a fixed master seed, so
+//! failures are reproducible; on failure the kit reports the failing case
+//! seed and a rerun hint, and performs a simple input-halving shrink for
+//! vector generators.
+
+use crate::rng::{default_rng, Xoshiro256pp};
+
+/// Number of cases per property (override with `DUDD_PROP_CASES`).
+pub fn default_cases() -> usize {
+    std::env::var("DUDD_PROP_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(64)
+}
+
+/// Run `prop` over `cases` generated inputs. `gen` builds an input from a
+/// per-case RNG; `prop` returns `Err(msg)` to signal failure.
+///
+/// Panics with the case seed on the first failure.
+pub fn forall<T: std::fmt::Debug>(
+    name: &str,
+    master_seed: u64,
+    cases: usize,
+    mut gen: impl FnMut(&mut Xoshiro256pp) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    let master = default_rng(master_seed);
+    for case in 0..cases {
+        let mut rng = master.derive(case as u64);
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property '{name}' failed at case {case} (master_seed={master_seed}): {msg}\n\
+                 input: {input:?}\n\
+                 rerun: seed the generator with derive({case})"
+            );
+        }
+    }
+}
+
+/// Like [`forall`] for `Vec<f64>` inputs, with halving shrink: on failure
+/// the kit tries successively smaller prefixes/suffixes and reports the
+/// smallest failing input found.
+pub fn forall_vec(
+    name: &str,
+    master_seed: u64,
+    cases: usize,
+    mut gen: impl FnMut(&mut Xoshiro256pp) -> Vec<f64>,
+    mut prop: impl FnMut(&[f64]) -> Result<(), String>,
+) {
+    let master = default_rng(master_seed);
+    for case in 0..cases {
+        let mut rng = master.derive(case as u64);
+        let input = gen(&mut rng);
+        if let Err(first_msg) = prop(&input) {
+            // Shrink: binary chop from both ends while still failing.
+            let mut best = input.clone();
+            let mut msg = first_msg;
+            loop {
+                let mut shrunk = false;
+                for candidate in [
+                    best[..best.len() / 2].to_vec(),
+                    best[best.len() / 2..].to_vec(),
+                    best[..best.len().saturating_sub(1)].to_vec(),
+                ] {
+                    if candidate.len() < best.len() && !candidate.is_empty() {
+                        if let Err(m) = prop(&candidate) {
+                            best = candidate;
+                            msg = m;
+                            shrunk = true;
+                            break;
+                        }
+                    }
+                }
+                if !shrunk {
+                    break;
+                }
+            }
+            panic!(
+                "property '{name}' failed at case {case} (master_seed={master_seed}): {msg}\n\
+                 shrunk input ({} items): {:?}",
+                best.len(),
+                &best[..best.len().min(32)]
+            );
+        }
+    }
+}
+
+/// Generator helpers.
+pub mod gen {
+    use crate::rng::{Rng, Xoshiro256pp};
+
+    /// Vector of positive log-uniform values across `decades` decades
+    /// ending at 10^`hi_exp`.
+    pub fn log_uniform_vec(
+        rng: &mut Xoshiro256pp,
+        max_len: usize,
+        decades: f64,
+        hi_exp: f64,
+    ) -> Vec<f64> {
+        let len = 1 + rng.index(max_len.max(1));
+        (0..len)
+            .map(|_| 10f64.powf(hi_exp - decades * rng.next_f64()))
+            .collect()
+    }
+
+    /// Vector of uniform values in [lo, hi).
+    pub fn uniform_vec(
+        rng: &mut Xoshiro256pp,
+        max_len: usize,
+        lo: f64,
+        hi: f64,
+    ) -> Vec<f64> {
+        let len = 1 + rng.index(max_len.max(1));
+        (0..len).map(|_| lo + (hi - lo) * rng.next_f64()).collect()
+    }
+
+    /// A quantile parameter in [0, 1].
+    pub fn quantile(rng: &mut Xoshiro256pp) -> f64 {
+        rng.next_f64()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn passing_property_completes() {
+        forall(
+            "sum-commutes",
+            1,
+            32,
+            |r| (r.next_f64(), r.next_f64()),
+            |&(a, b)| {
+                if a + b == b + a {
+                    Ok(())
+                } else {
+                    Err("non-commutative".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails'")]
+    fn failing_property_panics_with_context() {
+        forall(
+            "always-fails",
+            2,
+            8,
+            |r| r.next_f64(),
+            |_| Err("nope".into()),
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "shrunk input (1 items)")]
+    fn vec_property_shrinks() {
+        // Fails whenever the input contains a value > 0.5; shrinker should
+        // get down to a single offending element.
+        forall_vec(
+            "has-large-element",
+            3,
+            16,
+            |r| super::gen::uniform_vec(r, 64, 0.0, 1.0),
+            |xs| {
+                if xs.iter().any(|&x| x > 0.5) {
+                    Err("large".into())
+                } else {
+                    Ok(())
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn generators_in_bounds() {
+        let mut r = default_rng(4);
+        let v = gen::log_uniform_vec(&mut r, 50, 3.0, 2.0);
+        assert!(!v.is_empty() && v.len() <= 50);
+        assert!(v.iter().all(|&x| x > 0.099 && x <= 100.0 * 1.001));
+        let u = gen::uniform_vec(&mut r, 10, 5.0, 6.0);
+        assert!(u.iter().all(|&x| (5.0..6.0).contains(&x)));
+    }
+}

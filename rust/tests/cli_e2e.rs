@@ -1,0 +1,94 @@
+//! End-to-end CLI tests: drive the actual `duddsketch` binary.
+
+use std::process::Command;
+
+fn bin() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_duddsketch"))
+}
+
+#[test]
+fn help_prints_usage() {
+    let out = bin().arg("help").output().unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("USAGE"));
+    assert!(text.contains("figure"));
+}
+
+#[test]
+fn unknown_command_fails_with_usage() {
+    let out = bin().arg("bogus").output().unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown command"));
+}
+
+#[test]
+fn run_small_experiment() {
+    let out = bin()
+        .args([
+            "run",
+            "peers=40",
+            "items=100",
+            "rounds=10",
+            "dataset=uniform",
+            "quantiles=0.5,0.99",
+        ])
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "stderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("ARE"), "{text}");
+    assert!(text.contains("rounds=10"), "{text}");
+}
+
+#[test]
+fn figure_list_and_table2() {
+    let out = bin().args(["figure", "--list"]).output().unwrap();
+    assert!(out.status.success());
+    assert!(String::from_utf8_lossy(&out.stdout).contains("fig11"));
+
+    let out = bin().args(["figure", "--id", "table2"]).output().unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("alpha"), "{text}");
+    assert!(text.contains("1024"), "{text}");
+}
+
+#[test]
+fn quantiles_subcommand_generated_data() {
+    let out = bin()
+        .args([
+            "quantiles",
+            "--dataset",
+            "exponential",
+            "--items",
+            "5000",
+            "--q",
+            "0.5,0.95",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("n=5000"), "{text}");
+    assert!(text.contains("q=0.95"), "{text}");
+}
+
+#[test]
+fn info_reports_defaults() {
+    let out = bin().arg("info").output().unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("artifacts dir"), "{text}");
+    assert!(text.contains("defaults"), "{text}");
+}
+
+#[test]
+fn invalid_config_value_is_rejected() {
+    let out = bin().args(["run", "alpha=2.0"]).output().unwrap();
+    assert!(!out.status.success());
+}

@@ -1,0 +1,273 @@
+//! Integration: the PJRT runtime path (AOT JAX/Pallas artifacts) against
+//! the native Rust implementations.
+//!
+//! Requires `make artifacts` (skipped gracefully when the PJRT plugin or
+//! the artifacts are unavailable so `cargo test` works pre-`make`).
+
+use duddsketch::config::{ExecutorKind, ExperimentConfig};
+use duddsketch::data::{all_peer_datasets, DatasetKind};
+use duddsketch::gossip::{
+    DenseRound, NativeExecutor, PeerState, PjrtExecutor, Protocol, RoundExecutor, RoundMode,
+};
+use duddsketch::graph::paper_ba;
+use duddsketch::rng::{default_rng, Rng};
+use duddsketch::runtime::Runtime;
+use duddsketch::sketch::{LogMapping, Store, UddSketch};
+
+fn have_artifacts() -> bool {
+    duddsketch::runtime::artifacts_dir()
+        .join("avg_pairs_p64_w128.hlo.txt")
+        .exists()
+}
+
+fn pjrt_or_skip(peers: usize) -> Option<PjrtExecutor> {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    match PjrtExecutor::discover(peers) {
+        Ok(e) => Some(e),
+        Err(e) => {
+            eprintln!("skipping: PJRT unavailable: {e:#}");
+            None
+        }
+    }
+}
+
+fn mk_states(n: usize, seed: u64) -> Vec<PeerState> {
+    let mut r = default_rng(seed);
+    (0..n)
+        .map(|l| {
+            let data: Vec<f64> =
+                (0..200).map(|_| 1.0 + 80.0 * r.next_f64()).collect();
+            PeerState::init(l, &data, 0.01, 256).unwrap()
+        })
+        .collect()
+}
+
+fn matching(n: usize, seed: u64) -> Vec<usize> {
+    let mut r = default_rng(seed);
+    let mut partner: Vec<usize> = (0..n).collect();
+    let order = r.permutation(n);
+    for pair in order.chunks(2) {
+        if let [a, b] = *pair {
+            partner[a] = b;
+            partner[b] = a;
+        }
+    }
+    partner
+}
+
+#[test]
+fn pjrt_average_matches_native_within_f32() {
+    let Some(mut pjrt) = pjrt_or_skip(48) else { return };
+    let mut states_a = mk_states(48, 1);
+    let mut states_b = states_a.clone();
+    let partner = matching(48, 2);
+
+    let mut native_round =
+        DenseRound::build(&mut states_a, &partner, pjrt.preferred_width()).unwrap();
+    NativeExecutor.average(&mut native_round).unwrap();
+
+    let mut pjrt_round =
+        DenseRound::build(&mut states_b, &partner, pjrt.preferred_width()).unwrap();
+    pjrt.average(&mut pjrt_round).unwrap();
+
+    assert_eq!(native_round.matrix.len(), pjrt_round.matrix.len());
+    for (i, (n, p)) in native_round
+        .matrix
+        .iter()
+        .zip(pjrt_round.matrix.iter())
+        .enumerate()
+    {
+        let tol = 1e-6 * n.abs().max(1.0);
+        assert!((n - p).abs() <= tol, "elem {i}: native {n} pjrt {p}");
+    }
+}
+
+#[test]
+fn full_protocol_pjrt_vs_native_matched_mode() {
+    if pjrt_or_skip(60).is_none() {
+        return;
+    }
+    let mut cfg = ExperimentConfig::default();
+    cfg.peers = 60;
+    cfg.items_per_peer = 300;
+    cfg.dataset = DatasetKind::Uniform;
+    cfg.alpha = 0.01;
+    cfg.max_buckets = 128;
+    let master = default_rng(cfg.seed);
+    let datasets = all_peer_datasets(cfg.dataset, cfg.peers, cfg.items_per_peer, &master);
+    let mut grng = master.derive(0x6EA4);
+    let graph = paper_ba(cfg.peers, &mut grng);
+
+    // Native matched-mode reference.
+    let mut cfg_native = cfg.clone();
+    cfg_native.executor = ExecutorKind::Native;
+    let mut native = Protocol::new(&cfg_native, graph.clone(), &datasets, &master).unwrap();
+    native.set_mode(RoundMode::Matched);
+    native.run(40);
+
+    // PJRT matched mode (same seed -> same matchings).
+    let mut cfg_pjrt = cfg.clone();
+    cfg_pjrt.executor = ExecutorKind::Pjrt;
+    let mut pjrt = Protocol::new(&cfg_pjrt, graph, &datasets, &master).unwrap();
+    pjrt.run(40);
+
+    for &q in &[0.01, 0.5, 0.99] {
+        for l in 0..cfg.peers {
+            let a = native.states()[l].query(q).unwrap();
+            let b = pjrt.states()[l].query(q).unwrap();
+            let re = (a - b).abs() / a.abs().max(1e-12);
+            assert!(re < 1e-3, "peer {l} q={q}: native {a} pjrt {b}");
+        }
+    }
+}
+
+#[test]
+fn bucketize_artifact_matches_native_ingest() {
+    if !have_artifacts() {
+        return;
+    }
+    let Ok(mut rt) = Runtime::cpu() else { return };
+    let exe = match rt.load("bucketize_p4096_w512") {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("skipping: {e:#}");
+            return;
+        }
+    };
+    let mut r = default_rng(3);
+    let xs: Vec<f64> = (0..4096).map(|_| 1.0 + 99.0 * r.next_f64()).collect();
+    let mapping = LogMapping::new(0.01).unwrap();
+    // Native histogram over a window anchored one slot below the min index.
+    let offset = xs.iter().map(|&x| mapping.index(x)).min().unwrap() - 1;
+    let mut native_hist = vec![0f64; 512];
+    for &x in &xs {
+        let k = (mapping.index(x) - offset).clamp(0, 511) as usize;
+        native_hist[k] += 1.0;
+    }
+
+    let xs_f32: Vec<f32> = xs.iter().map(|&x| x as f32).collect();
+    let params: Vec<f32> = vec![(1.0 / mapping.gamma().ln()) as f32, offset as f32];
+    let out = exe
+        .run1(&[xla::Literal::vec1(&xs_f32), xla::Literal::vec1(&params)])
+        .unwrap();
+    let hist: Vec<f32> = out.to_vec().unwrap();
+
+    assert_eq!(hist.len(), 512);
+    let total: f32 = hist.iter().sum();
+    assert_eq!(total, 4096.0);
+    // f32 log vs f64 log can flip values sitting exactly on a bucket edge;
+    // allow a tiny count of edge flips between adjacent buckets.
+    let mut moved = 0.0;
+    for (k, (&h, &n)) in hist.iter().zip(native_hist.iter()).enumerate() {
+        let d = (h as f64 - n).abs();
+        if d != 0.0 {
+            assert!(d <= 3.0, "slot {k}: pjrt {h} native {n}");
+            moved += d;
+        }
+    }
+    assert!(moved <= 16.0, "too many edge flips: {moved}");
+}
+
+#[test]
+fn collapse_artifact_matches_store_collapse() {
+    if !have_artifacts() {
+        return;
+    }
+    let Ok(mut rt) = Runtime::cpu() else { return };
+    let exe = match rt.load("collapse_p1_w512") {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("skipping: {e:#}");
+            return;
+        }
+    };
+    for offset in [6i64, 7] {
+        // Build a sparse store with indices offset..offset+512.
+        let mut store = duddsketch::sketch::SparseStore::empty();
+        let mut hist = vec![0f32; 512];
+        let mut r = default_rng(4 + offset as u64);
+        for k in 0..512i64 {
+            let c = r.next_below(5) as f64;
+            if c > 0.0 {
+                store.add(offset + k, c);
+                hist[k as usize] = c as f32;
+            }
+        }
+        store.uniform_collapse();
+
+        let phase = if offset % 2 == 0 { 1.0f32 } else { 0.0 };
+        let out = exe
+            .run1(&[xla::Literal::vec1(&hist), xla::Literal::vec1(&[phase])])
+            .unwrap();
+        let collapsed: Vec<f32> = out.to_vec().unwrap();
+        assert_eq!(collapsed.len(), 257);
+        let out_offset = (offset + 1).div_euclid(2);
+        for (j, &c) in collapsed.iter().enumerate() {
+            let want = store.get(out_offset + j as i64);
+            assert_eq!(
+                c as f64, want,
+                "offset {offset} slot {j} (index {})",
+                out_offset + j as i64
+            );
+        }
+    }
+}
+
+#[test]
+fn avg_pairs_artifact_handles_padding() {
+    // Fewer live peers than the artifact's static P: padded rows must
+    // stay untouched and live rows average correctly.
+    let Some(mut pjrt) = pjrt_or_skip(10) else { return };
+    let mut states = mk_states(10, 5);
+    let n_before: Vec<f64> = states.iter().map(|s| s.n_tilde).collect();
+    let mut partner: Vec<usize> = (0..10).collect();
+    partner[0] = 9;
+    partner[9] = 0;
+    let mut round =
+        DenseRound::build(&mut states, &partner, pjrt.preferred_width()).unwrap();
+    pjrt.average(&mut round).unwrap();
+    round.write_back(&mut states);
+    let avg = 0.5 * (n_before[0] + n_before[9]);
+    assert!((states[0].n_tilde - avg).abs() < 1e-3);
+    assert!((states[9].n_tilde - avg).abs() < 1e-3);
+    for l in 1..9 {
+        assert!((states[l].n_tilde - n_before[l]).abs() < 1e-6);
+    }
+}
+
+#[test]
+fn sequential_vs_matched_same_fixed_point() {
+    // Mode ablation: both round disciplines converge to the same global
+    // sketch (the paper's fixed point) — matched just needs more rounds.
+    let mut cfg = ExperimentConfig::default();
+    cfg.peers = 50;
+    cfg.items_per_peer = 200;
+    cfg.dataset = DatasetKind::Exponential;
+    let master = default_rng(cfg.seed);
+    let datasets = all_peer_datasets(cfg.dataset, cfg.peers, cfg.items_per_peer, &master);
+    let mut seq: UddSketch = UddSketch::new(cfg.alpha, cfg.max_buckets).unwrap();
+    for d in &datasets {
+        seq.extend(d);
+    }
+    let mut grng = master.derive(0x6EA4);
+    let graph = paper_ba(cfg.peers, &mut grng);
+
+    let mut a = Protocol::new(&cfg, graph.clone(), &datasets, &master).unwrap();
+    a.run(30);
+    let mut b = Protocol::new(&cfg, graph, &datasets, &master).unwrap();
+    b.set_mode(RoundMode::Matched);
+    b.run(80);
+
+    for &q in &[0.1, 0.5, 0.9] {
+        let truth = seq.quantile(q).unwrap();
+        for l in 0..cfg.peers {
+            let ea = a.states()[l].query(q).unwrap();
+            let eb = b.states()[l].query(q).unwrap();
+            assert!((ea - truth).abs() / truth < 1e-6, "seq-mode q={q}");
+            assert!((eb - truth).abs() / truth < 1e-6, "matched-mode q={q}");
+        }
+    }
+}

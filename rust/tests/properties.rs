@@ -1,0 +1,279 @@
+//! Property-based tests on the coordinator's invariants (DESIGN.md §7),
+//! via the in-tree testkit (proptest is unavailable offline).
+
+use duddsketch::gossip::PeerState;
+use duddsketch::metrics::relative_error;
+use duddsketch::rng::Rng;
+use duddsketch::sketch::{
+    theorem2_bound, DdSketch, ExactQuantiles, Store, UddSketch,
+};
+use duddsketch::util::testkit::{forall, forall_vec, gen};
+
+const SEED: u64 = 0xD0DD;
+
+/// Invariant 1: every quantile of every dataset is answered within the
+/// sketch's *current* α (which accounts for collapses).
+#[test]
+fn prop_relative_accuracy_all_quantiles() {
+    forall_vec(
+        "udd-relative-accuracy",
+        SEED,
+        48,
+        |r| gen::log_uniform_vec(r, 4000, 6.0, 4.0),
+        |xs| {
+            let mut s: UddSketch = UddSketch::new(0.01, 128).unwrap();
+            s.extend(xs);
+            let exact = ExactQuantiles::new(xs);
+            for q in [0.0, 0.01, 0.1, 0.5, 0.9, 0.99, 1.0] {
+                let est = s.quantile(q).map_err(|e| e.to_string())?;
+                let tru = exact.quantile(q).map_err(|e| e.to_string())?;
+                let re = relative_error(est, tru);
+                if re > s.alpha() + 1e-9 {
+                    return Err(format!(
+                        "q={q}: re {re} > alpha {} (collapses {})",
+                        s.alpha(),
+                        s.collapses()
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Invariant 3: the post-collapse α never exceeds the Theorem 2 bound for
+/// the observed span.
+#[test]
+fn prop_theorem2_bound_holds() {
+    forall_vec(
+        "theorem2",
+        SEED + 1,
+        48,
+        |r| gen::log_uniform_vec(r, 3000, 8.0, 5.0),
+        |xs| {
+            let mut s: UddSketch = UddSketch::new(0.001, 64).unwrap();
+            s.extend(xs);
+            let (mn, mx) = xs
+                .iter()
+                .fold((f64::MAX, f64::MIN), |(a, b), &x| (a.min(x), b.max(x)));
+            let bound = theorem2_bound(mn, mx, 64);
+            if s.alpha() > bound + 1e-9 {
+                return Err(format!("alpha {} > bound {bound}", s.alpha()));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Invariant 4: permutation invariance — insertion order never changes the
+/// resulting sketch.
+#[test]
+fn prop_permutation_invariance() {
+    forall(
+        "permutation-invariance",
+        SEED + 2,
+        32,
+        |r| {
+            let xs = gen::log_uniform_vec(r, 1500, 5.0, 3.0);
+            let mut ys = xs.clone();
+            r.shuffle(&mut ys);
+            (xs, ys)
+        },
+        |(xs, ys)| {
+            let mut a: UddSketch = UddSketch::new(0.005, 64).unwrap();
+            let mut b: UddSketch = UddSketch::new(0.005, 64).unwrap();
+            a.extend(xs);
+            b.extend(ys);
+            if a.collapses() != b.collapses() {
+                return Err(format!(
+                    "collapse depth differs: {} vs {}",
+                    a.collapses(),
+                    b.collapses()
+                ));
+            }
+            let ea = a.positive_store().entries();
+            let eb = b.positive_store().entries();
+            if ea.len() != eb.len()
+                || ea
+                    .iter()
+                    .zip(&eb)
+                    .any(|((i, c), (j, d))| i != j || (c - d).abs() > 1e-9)
+            {
+                return Err("stores differ".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Invariant: mergeability — merge(S(D1), S(D2)) answers exactly like
+/// S(D1 ⊎ D2) for every quantile.
+#[test]
+fn prop_merge_equals_union() {
+    forall(
+        "merge-union",
+        SEED + 3,
+        32,
+        |r| {
+            (
+                gen::log_uniform_vec(r, 1200, 4.0, 2.0),
+                gen::log_uniform_vec(r, 1200, 4.0, 5.0),
+                gen::quantile(r),
+            )
+        },
+        |(d1, d2, q)| {
+            let mut s1: UddSketch = UddSketch::new(0.01, 64).unwrap();
+            let mut s2: UddSketch = UddSketch::new(0.01, 64).unwrap();
+            s1.extend(d1);
+            s2.extend(d2);
+            s1.merge(&s2).map_err(|e| e.to_string())?;
+            let mut su: UddSketch = UddSketch::new(0.01, 64).unwrap();
+            su.extend(d1);
+            su.extend(d2);
+            let a = s1.quantile(*q).map_err(|e| e.to_string())?;
+            let b = su.quantile(*q).map_err(|e| e.to_string())?;
+            if a != b {
+                return Err(format!("q={q}: merged {a} != union {b}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Invariant: the turnstile model — inserting then deleting a batch
+/// restores the prior answers exactly.
+#[test]
+fn prop_turnstile_roundtrip() {
+    forall(
+        "turnstile",
+        SEED + 4,
+        32,
+        |r| {
+            (
+                gen::uniform_vec(r, 800, 1.0, 1e4),
+                gen::uniform_vec(r, 200, 1.0, 1e4),
+            )
+        },
+        |(base, extra)| {
+            let mut s: UddSketch = UddSketch::new(0.01, 4096).unwrap();
+            s.extend(base);
+            let before: Vec<(i64, f64)> = s.positive_store().entries();
+            for &x in extra {
+                s.insert(x);
+            }
+            for &x in extra {
+                s.delete(x);
+            }
+            if s.positive_store().entries() != before {
+                return Err("store not restored after delete".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Invariant 5: gossip averaging conserves the per-bucket mass and the
+/// scalar masses for any exchange sequence.
+#[test]
+fn prop_gossip_exchange_conserves_mass() {
+    forall(
+        "gossip-mass",
+        SEED + 5,
+        24,
+        |r| {
+            let peers = 2 + r.index(6);
+            let data: Vec<Vec<f64>> = (0..peers)
+                .map(|_| gen::uniform_vec(r, 300, 1.0, 1e3))
+                .collect();
+            let exchanges: Vec<(usize, usize)> = (0..10)
+                .map(|_| {
+                    let a = r.index(peers);
+                    let mut b = r.index(peers);
+                    while b == a {
+                        b = r.index(peers);
+                    }
+                    (a, b)
+                })
+                .collect();
+            (data, exchanges)
+        },
+        |(data, exchanges)| {
+            let mut states: Vec<PeerState> = data
+                .iter()
+                .enumerate()
+                .map(|(i, d)| PeerState::init(i, d, 0.01, 64).unwrap())
+                .collect();
+            let total_c: f64 = states.iter().map(|s| s.sketch.count()).sum();
+            let total_q: f64 = states.iter().map(|s| s.q_tilde).sum();
+            for &(a, b) in exchanges {
+                let merged =
+                    PeerState::averaged(&states[a], &states[b]).map_err(|e| e.to_string())?;
+                states[a] = PeerState {
+                    id: a,
+                    sketch: merged.sketch.clone(),
+                    n_tilde: merged.n_tilde,
+                    q_tilde: merged.q_tilde,
+                };
+                states[b] = PeerState { id: b, ..merged };
+            }
+            let after_c: f64 = states.iter().map(|s| s.sketch.count()).sum();
+            let after_q: f64 = states.iter().map(|s| s.q_tilde).sum();
+            if (total_c - after_c).abs() > 1e-6 * total_c.max(1.0) {
+                return Err(format!("count mass {total_c} -> {after_c}"));
+            }
+            if (total_q - after_q).abs() > 1e-9 {
+                return Err(format!("q mass {total_q} -> {after_q}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Invariant: quantile answers are monotone in q.
+#[test]
+fn prop_quantile_monotone() {
+    forall_vec(
+        "monotone",
+        SEED + 6,
+        32,
+        |r| gen::log_uniform_vec(r, 2000, 5.0, 3.0),
+        |xs| {
+            let mut s: UddSketch = UddSketch::new(0.01, 64).unwrap();
+            s.extend(xs);
+            let mut prev = f64::MIN;
+            for i in 0..=20 {
+                let q = i as f64 / 20.0;
+                let est = s.quantile(q).map_err(|e| e.to_string())?;
+                if est < prev {
+                    return Err(format!("q={q}: {est} < prev {prev}"));
+                }
+                prev = est;
+            }
+            Ok(())
+        },
+    );
+}
+
+/// DDSketch (the baseline) keeps its α guarantee on the top quantile even
+/// under collapse — the property UDDSketch extends to the whole range.
+#[test]
+fn prop_ddsketch_high_quantile_guarantee() {
+    forall_vec(
+        "dd-high-q",
+        SEED + 7,
+        32,
+        |r| gen::log_uniform_vec(r, 3000, 6.0, 4.0),
+        |xs| {
+            let mut s: DdSketch = DdSketch::new(0.01, 64).unwrap();
+            s.extend(xs);
+            let exact = ExactQuantiles::new(xs);
+            let est = s.quantile(1.0).map_err(|e| e.to_string())?;
+            let tru = exact.quantile(1.0).map_err(|e| e.to_string())?;
+            let re = relative_error(est, tru);
+            if re > 0.01 + 1e-9 {
+                return Err(format!("max-quantile re {re}"));
+            }
+            Ok(())
+        },
+    );
+}
