@@ -1,0 +1,115 @@
+//! Sharded service ingest throughput vs the single-threaded baseline.
+//!
+//! Acceptance: multi-shard ingest scales with shard count over the
+//! sequential `benches/insert.rs` hot loop (same narrow workload, same
+//! sketch parameters). Each service case covers the full lifecycle —
+//! spawn, concurrent writers, epoch fold, shutdown — so the numbers are
+//! end-to-end, not just the shard inner loop.
+
+use duddsketch::config::ServiceConfig;
+use duddsketch::rng::{default_rng, Rng};
+use duddsketch::service::QuantileService;
+use duddsketch::sketch::{DenseStore, UddSketch};
+use duddsketch::util::bench::{black_box, Bencher};
+
+const N: usize = 1_000_000;
+
+fn narrow_data() -> Vec<f64> {
+    // Two decades: no collapses at m=1024 (mirrors insert.rs).
+    let mut r = default_rng(1);
+    (0..N).map(|_| 1.0 + 99.0 * r.next_f64()).collect()
+}
+
+/// Full service lifecycle over `data`: returns the snapshot count so the
+/// optimizer cannot elide the fold.
+fn run_service(data: &[f64], shards: usize, window_slots: usize) -> f64 {
+    let mut cfg = ServiceConfig::default();
+    cfg.shards = shards;
+    cfg.batch_size = 4096;
+    cfg.window_slots = window_slots;
+    let svc = QuantileService::start(cfg).unwrap();
+    let chunk = data.len().div_ceil(shards);
+    std::thread::scope(|scope| {
+        for part in data.chunks(chunk) {
+            let mut w = svc.writer();
+            scope.spawn(move || {
+                w.insert_batch(part);
+                w.flush();
+            });
+        }
+    });
+    let snap = svc.flush();
+    assert_eq!(snap.count(), data.len() as f64);
+    let c = snap.count();
+    svc.shutdown();
+    c
+}
+
+fn main() {
+    let mut b = Bencher::new();
+    let narrow = narrow_data();
+
+    b.case("seq/dense/narrow 1M inserts (baseline)", N as u64, || {
+        let mut s: UddSketch<DenseStore> = UddSketch::new(0.001, 1024).unwrap();
+        s.extend(&narrow);
+        black_box(s.count());
+    });
+
+    let cores = std::thread::available_parallelism()
+        .map(|c| c.get())
+        .unwrap_or(1);
+    for shards in [1usize, 2, 4, 8] {
+        if shards > cores {
+            eprintln!("skipping {shards} shards ({cores} cores available)");
+            continue;
+        }
+        b.case(
+            &format!("service/{shards}-shard narrow 1M inserts"),
+            N as u64,
+            || {
+                black_box(run_service(&narrow, shards, 0));
+            },
+        );
+    }
+
+    let shards = 4.min(cores);
+    b.case(
+        &format!("service/{shards}-shard windowed(8) 1M inserts"),
+        N as u64,
+        || {
+            black_box(run_service(&narrow, shards, 8));
+        },
+    );
+
+    // Epoch fold + publish cost at steady state (ingest done, drain all
+    // shards, merge, publish).
+    {
+        let mut cfg = ServiceConfig::default();
+        cfg.shards = shards;
+        cfg.batch_size = 4096;
+        let svc = QuantileService::start(cfg).unwrap();
+        let mut w = svc.writer();
+        w.insert_batch(&narrow);
+        w.flush();
+        // Ship fresh data each iteration: idle cumulative epochs
+        // short-circuit without folding, which is not what we're timing.
+        b.case("service/epoch fold+publish (1k new items)", 1_000, || {
+            let mut w = svc.writer();
+            w.insert_batch(&narrow[..1_000]);
+            w.flush();
+            drop(w);
+            black_box(svc.flush().epoch());
+        });
+        // Lock-free snapshot reads.
+        svc.flush();
+        b.case("service/snapshot load + p50 query x1000", 1000, || {
+            for _ in 0..1000 {
+                let snap = svc.snapshot();
+                black_box(snap.quantile(0.5).unwrap());
+            }
+        });
+        svc.shutdown();
+    }
+
+    b.finish("service_ingest");
+}

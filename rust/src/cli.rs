@@ -90,6 +90,12 @@ USAGE:
   duddsketch quantiles (--input FILE | --dataset NAME --items N)
             [--q Q1,Q2,...] [--alpha A] [--m M]
       sequential UDDSketch over a newline-separated value file
+  duddsketch serve-bench [--dataset NAME] [--items N] [--shards S1,S2,...]
+            [--q Q1,Q2,...] [--seed X] [key=value ...]
+      drive a workload through the sharded ingest service at each shard
+      count; report throughput vs the sequential baseline and verify the
+      snapshot quantiles against it
+      keys: alpha m shards batch queue epoch_ms window
   duddsketch info
       platform, artifact inventory, defaults
 
@@ -244,6 +250,112 @@ fn cmd_quantiles(args: &Args) -> Result<String> {
     Ok(out)
 }
 
+fn cmd_serve_bench(args: &Args) -> Result<String> {
+    let kind: DatasetKind = args
+        .flag("dataset")
+        .unwrap_or("uniform")
+        .parse()
+        .map_err(anyhow::Error::msg)?;
+    let items: usize = args.flag("items").unwrap_or("200000").parse()?;
+    let seed: u64 = args.flag("seed").unwrap_or("42").parse()?;
+    let qs: Vec<f64> = args
+        .flag("q")
+        .unwrap_or("0.01,0.5,0.99")
+        .split(',')
+        .map(|s| s.trim().parse::<f64>())
+        .collect::<Result<_, _>>()?;
+    let shard_list: Vec<usize> = args
+        .flag("shards")
+        .unwrap_or("1,2,4")
+        .split(',')
+        .map(|s| s.trim().parse::<usize>())
+        .collect::<Result<_, _>>()?;
+    let mut base = crate::config::ServiceConfig::default();
+    for (k, v) in &args.overrides {
+        base.set(k, v).map_err(anyhow::Error::msg)?;
+    }
+    base.validate().map_err(anyhow::Error::msg)?;
+    if items == 0 {
+        bail!("serve-bench: need --items >= 1");
+    }
+
+    let master = crate::rng::default_rng(seed);
+    let data = crate::data::peer_dataset(kind, 0, items, &master);
+
+    let sw = crate::util::Stopwatch::start();
+    let mut seq: UddSketch =
+        UddSketch::new(base.alpha, base.max_buckets).map_err(anyhow::Error::msg)?;
+    seq.extend(&data);
+    let seq_secs = sw.secs();
+
+    let mut out = format!(
+        "serve-bench: dataset={} items={} {}\n",
+        kind.name(),
+        items,
+        base.summary()
+    );
+    out.push_str(&format!(
+        "  sequential baseline: {:.3}s  ({:.2} Mitems/s)\n",
+        seq_secs,
+        items as f64 / seq_secs.max(1e-12) / 1e6
+    ));
+    out.push_str("  shards  writers  wall-s   Mitems/s  speedup  worst-rel-diff\n");
+    for &shards in &shard_list {
+        let shards = shards.max(1);
+        let mut cfg = base.clone();
+        cfg.shards = shards;
+        let svc = crate::service::QuantileService::start(cfg)?;
+        let writers = shards;
+        let chunk = items.div_ceil(writers);
+        let sw = crate::util::Stopwatch::start();
+        std::thread::scope(|scope| {
+            for part in data.chunks(chunk) {
+                let mut w = svc.writer();
+                scope.spawn(move || {
+                    w.insert_batch(part);
+                    w.flush();
+                });
+            }
+        });
+        let snap = svc.flush();
+        let secs = sw.secs();
+        // Snapshot-vs-sequential verification only makes sense in
+        // cumulative mode: a windowed run (window=K, possibly with a
+        // background ticker) legitimately evicts older epochs, so the
+        // snapshot is not the whole stream.
+        let windowed = base.window_slots > 0;
+        let diff_col = if windowed {
+            "n/a (windowed)".to_string()
+        } else {
+            let mut worst = 0.0f64;
+            for &q in &qs {
+                let est = snap.quantile(q).map_err(anyhow::Error::msg)?;
+                let truth = seq.quantile(q).map_err(anyhow::Error::msg)?;
+                worst = worst.max(crate::metrics::relative_error(est, truth));
+            }
+            if snap.count() != items as f64 {
+                bail!(
+                    "service snapshot holds {} items, expected {items}",
+                    snap.count()
+                );
+            }
+            format!("{worst:.3e}")
+        };
+        svc.shutdown();
+        out.push_str(&format!(
+            "  {shards:<6}  {writers:<7}  {:<7.3}  {:<8.2}  {:<7.2}  {diff_col}\n",
+            secs,
+            items as f64 / secs.max(1e-12) / 1e6,
+            seq_secs / secs.max(1e-12),
+        ));
+    }
+    out.push_str(
+        "(worst-rel-diff compares snapshot quantiles to the sequential \
+         sketch; 0 = identical, n/a under windowed eviction)\n",
+    );
+    Ok(out)
+}
+
 fn cmd_info() -> Result<String> {
     let mut out = String::new();
     out.push_str(&format!(
@@ -280,6 +392,7 @@ pub fn dispatch(args: &Args) -> Result<String> {
         "sweep" => cmd_sweep(args),
         "figure" | "figures" => cmd_figure(args),
         "quantiles" => cmd_quantiles(args),
+        "serve-bench" => cmd_serve_bench(args),
         "info" => cmd_info(),
         "help" | "--help" | "-h" => Ok(USAGE.to_string()),
         other => bail!("unknown command '{other}'\n{USAGE}"),
@@ -375,6 +488,33 @@ mod tests {
         assert!(out.contains("sweep over fan_out"), "{out}");
         // one row per value + header lines
         assert!(out.lines().count() >= 4, "{out}");
+    }
+
+    #[test]
+    fn serve_bench_verifies_against_sequential() {
+        let a = args(&[
+            "serve-bench",
+            "--dataset",
+            "uniform",
+            "--items",
+            "20000",
+            "--shards",
+            "1,2",
+            "--q",
+            "0.5,0.99",
+            "batch=256",
+        ]);
+        let out = dispatch(&a).unwrap();
+        assert!(out.contains("sequential baseline"), "{out}");
+        assert!(out.contains("worst-rel-diff"), "{out}");
+        // One row per shard count + headers/footer.
+        assert!(out.lines().count() >= 6, "{out}");
+    }
+
+    #[test]
+    fn serve_bench_rejects_bad_overrides() {
+        let a = args(&["serve-bench", "--items", "100", "bogus_key=1"]);
+        assert!(dispatch(&a).is_err());
     }
 
     #[test]

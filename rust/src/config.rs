@@ -219,6 +219,115 @@ impl ExperimentConfig {
     }
 }
 
+/// Configuration of the sharded ingest/snapshot service
+/// ([`crate::service`]).
+#[derive(Debug, Clone)]
+pub struct ServiceConfig {
+    /// Sketch accuracy α (every shard shares one α₀ lineage so epoch
+    /// folds merge exactly).
+    pub alpha: f64,
+    /// Bucket budget m per sketch.
+    pub max_buckets: usize,
+    /// Ingest shards (worker threads); 0 = one per available core.
+    pub shards: usize,
+    /// Values per ingest message (writer-side batching).
+    pub batch_size: usize,
+    /// Bounded queue depth per shard, in batches (backpressure).
+    pub queue_depth: usize,
+    /// Background epoch interval in milliseconds; 0 disables the ticker
+    /// (epochs then run only via `QuantileService::flush`).
+    pub epoch_interval_ms: u64,
+    /// Sliding-window ring slots, one epoch interval each; 0 serves the
+    /// cumulative all-time sketch instead.
+    pub window_slots: usize,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        Self {
+            alpha: 0.001,
+            max_buckets: 1024,
+            shards: 0,
+            batch_size: 1024,
+            queue_depth: 64,
+            epoch_interval_ms: 0,
+            window_slots: 0,
+        }
+    }
+}
+
+impl ServiceConfig {
+    /// Shard count with the `0 = all cores` default resolved.
+    pub fn effective_shards(&self) -> usize {
+        if self.shards > 0 {
+            self.shards
+        } else {
+            std::thread::available_parallelism()
+                .map(|c| c.get())
+                .unwrap_or(1)
+        }
+    }
+
+    /// Apply one `key=value` assignment (CLI overrides).
+    pub fn set(&mut self, key: &str, value: &str) -> Result<(), String> {
+        let parse_err = |k: &str, v: &str| format!("bad value '{v}' for key '{k}'");
+        match key {
+            "alpha" => self.alpha = value.parse().map_err(|_| parse_err(key, value))?,
+            "max_buckets" | "buckets" | "m" => {
+                self.max_buckets = value.parse().map_err(|_| parse_err(key, value))?
+            }
+            "shards" => self.shards = value.parse().map_err(|_| parse_err(key, value))?,
+            "batch_size" | "batch" => {
+                self.batch_size = value.parse().map_err(|_| parse_err(key, value))?
+            }
+            "queue_depth" | "queue" => {
+                self.queue_depth = value.parse().map_err(|_| parse_err(key, value))?
+            }
+            "epoch_interval_ms" | "epoch_ms" => {
+                self.epoch_interval_ms =
+                    value.parse().map_err(|_| parse_err(key, value))?
+            }
+            "window_slots" | "window" => {
+                self.window_slots = value.parse().map_err(|_| parse_err(key, value))?
+            }
+            other => return Err(format!("unknown service config key '{other}'")),
+        }
+        Ok(())
+    }
+
+    /// Sanity-check parameter ranges.
+    pub fn validate(&self) -> Result<(), String> {
+        if !(self.alpha > 0.0 && self.alpha < 1.0) {
+            return Err(format!("alpha must be in (0,1), got {}", self.alpha));
+        }
+        if self.max_buckets < 2 {
+            return Err("max_buckets must be >= 2".into());
+        }
+        if self.batch_size < 1 {
+            return Err("batch_size must be >= 1".into());
+        }
+        if self.queue_depth < 1 {
+            return Err("queue_depth must be >= 1".into());
+        }
+        Ok(())
+    }
+
+    /// One-line human summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "alpha={} m={} shards={} (effective {}) batch={} queue={} epoch_ms={} window={}",
+            self.alpha,
+            self.max_buckets,
+            self.shards,
+            self.effective_shards(),
+            self.batch_size,
+            self.queue_depth,
+            self.epoch_interval_ms,
+            self.window_slots,
+        )
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -266,6 +375,35 @@ mod tests {
         assert_eq!(c.dataset, DatasetKind::Exponential);
         assert_eq!(c.peers, 500);
         assert_eq!(c.rounds, 10);
+    }
+
+    #[test]
+    fn service_config_defaults_validate() {
+        let c = ServiceConfig::default();
+        c.validate().unwrap();
+        assert!(c.effective_shards() >= 1);
+        assert!(c.summary().contains("shards=0"));
+    }
+
+    #[test]
+    fn service_config_set_and_validate() {
+        let mut c = ServiceConfig::default();
+        c.set("shards", "4").unwrap();
+        c.set("batch", "512").unwrap();
+        c.set("window", "8").unwrap();
+        c.set("epoch_ms", "250").unwrap();
+        assert_eq!(c.shards, 4);
+        assert_eq!(c.effective_shards(), 4);
+        assert_eq!(c.batch_size, 512);
+        assert_eq!(c.window_slots, 8);
+        assert_eq!(c.epoch_interval_ms, 250);
+        assert!(c.set("bogus", "1").is_err());
+        assert!(c.set("shards", "many").is_err());
+        c.batch_size = 0;
+        assert!(c.validate().is_err());
+        c.batch_size = 1;
+        c.alpha = 1.0;
+        assert!(c.validate().is_err());
     }
 
     #[test]

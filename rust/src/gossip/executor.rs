@@ -11,9 +11,8 @@
 //!   identical (asserted by `rust/tests/integration_runtime.rs`).
 
 use super::state::PeerState;
-use crate::runtime::{list_shaped_artifacts, Executable, Runtime};
 use crate::sketch::Store;
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, Result};
 
 /// Dense formulation of one matched gossip round.
 #[derive(Debug)]
@@ -185,127 +184,180 @@ impl RoundExecutor for NativeExecutor {
     }
 }
 
-/// PJRT executor: runs the `avg_pairs_p<P>_w<W>` artifact.
+#[cfg(feature = "pjrt")]
+pub use pjrt_executor::PjrtExecutor;
+
+/// PJRT executor stub: the `pjrt` feature is off, so discovery always
+/// fails with a clear message and callers degrade to the native path.
+#[cfg(not(feature = "pjrt"))]
+#[derive(Debug)]
 pub struct PjrtExecutor {
-    runtime: Runtime,
-    exe: std::rc::Rc<Executable>,
-    /// Artifact's static peer capacity.
-    p_cap: usize,
-    /// Artifact's static bucket window.
-    w_cap: usize,
+    _never: std::convert::Infallible,
 }
 
-impl std::fmt::Debug for PjrtExecutor {
-    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        write!(f, "PjrtExecutor(p={}, w={})", self.p_cap, self.w_cap)
-    }
-}
-
+#[cfg(not(feature = "pjrt"))]
 impl PjrtExecutor {
-    /// Pick the smallest `avg_pairs` artifact that fits `peers`, compile
-    /// it, and return the executor.
-    pub fn discover(peers: usize) -> Result<Self> {
-        let shapes = list_shaped_artifacts("avg_pairs");
-        let (p_cap, w_cap, path) = shapes
-            .into_iter()
-            .find(|(p, _, _)| *p >= peers)
-            .with_context(|| {
-                format!(
-                    "no avg_pairs artifact with P >= {peers} in {} (run `make artifacts`)",
-                    crate::runtime::artifacts_dir().display()
-                )
-            })?;
-        let mut runtime = Runtime::cpu()?;
-        let exe = runtime.load_path(&path)?;
-        Ok(Self {
-            runtime,
-            exe,
-            p_cap,
-            w_cap,
-        })
+    /// Always fails: PJRT support is not compiled into this build.
+    pub fn discover(_peers: usize) -> Result<Self> {
+        bail!(
+            "PJRT executor unavailable: support not compiled in (rebuild \
+             with `--features pjrt` and an `xla` path dependency)"
+        )
     }
 
-    /// Build directly from a known artifact (tests).
-    pub fn from_artifact(name: &str, p_cap: usize, w_cap: usize) -> Result<Self> {
-        let mut runtime = Runtime::cpu()?;
-        let exe = runtime.load(name)?;
-        Ok(Self {
-            runtime,
-            exe,
-            p_cap,
-            w_cap,
-        })
-    }
-
-    /// The underlying runtime (for diagnostics).
-    pub fn runtime(&self) -> &Runtime {
-        &self.runtime
+    /// Always fails: PJRT support is not compiled into this build.
+    pub fn from_artifact(_name: &str, _p_cap: usize, _w_cap: usize) -> Result<Self> {
+        Self::discover(0)
     }
 }
 
+#[cfg(not(feature = "pjrt"))]
 impl RoundExecutor for PjrtExecutor {
     fn name(&self) -> &'static str {
-        "pjrt"
+        match self._never {}
     }
 
     fn preferred_width(&self) -> Option<usize> {
-        Some(self.w_cap)
+        match self._never {}
     }
 
     fn max_peers(&self) -> Option<usize> {
-        Some(self.p_cap)
+        match self._never {}
     }
 
-    fn average(&mut self, round: &mut DenseRound) -> Result<()> {
-        if round.width != self.w_cap {
-            bail!(
-                "dense width {} != artifact window {}",
-                round.width,
-                self.w_cap
-            );
-        }
-        if round.peers > self.p_cap {
-            bail!("{} peers > artifact capacity {}", round.peers, self.p_cap);
-        }
-        let cols = round.cols();
-        // Pad rows to the artifact's static P; padded rows self-pair.
-        let mut states_f32 = vec![0f32; self.p_cap * cols];
-        for (dst, src) in states_f32
-            .chunks_mut(cols)
-            .zip(round.matrix.chunks(cols))
-        {
-            for (d, s) in dst.iter_mut().zip(src.iter()) {
-                *d = *s as f32;
-            }
-        }
-        let mut partner_i32: Vec<i32> = (0..self.p_cap as i32).collect();
-        for (l, &j) in round.partner.iter().enumerate() {
-            partner_i32[l] = j as i32;
-        }
-        let states_lit = xla::Literal::vec1(&states_f32)
-            .reshape(&[self.p_cap as i64, cols as i64])?;
-        let partner_lit = xla::Literal::vec1(&partner_i32);
-        let out = self.exe.run1(&[states_lit, partner_lit])?;
-        let flat: Vec<f32> = out.to_vec()?;
-        if flat.len() != self.p_cap * cols {
-            bail!(
-                "artifact returned {} elements, expected {}",
-                flat.len(),
-                self.p_cap * cols
-            );
-        }
-        for (dst, src) in round
-            .matrix
-            .chunks_mut(cols)
-            .zip(flat.chunks(cols))
-        {
-            for (d, s) in dst.iter_mut().zip(src.iter()) {
-                *d = *s as f64;
-            }
-        }
-        Ok(())
+    fn average(&mut self, _round: &mut DenseRound) -> Result<()> {
+        match self._never {}
     }
 }
+
+#[cfg(feature = "pjrt")]
+mod pjrt_executor {
+    use super::{DenseRound, RoundExecutor};
+    use crate::runtime::{list_shaped_artifacts, Executable, Runtime};
+    use anyhow::{bail, Context, Result};
+
+    /// PJRT executor: runs the `avg_pairs_p<P>_w<W>` artifact.
+    pub struct PjrtExecutor {
+        runtime: Runtime,
+        exe: std::rc::Rc<Executable>,
+        /// Artifact's static peer capacity.
+        p_cap: usize,
+        /// Artifact's static bucket window.
+        w_cap: usize,
+    }
+
+    impl std::fmt::Debug for PjrtExecutor {
+        fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+            write!(f, "PjrtExecutor(p={}, w={})", self.p_cap, self.w_cap)
+        }
+    }
+
+    impl PjrtExecutor {
+        /// Pick the smallest `avg_pairs` artifact that fits `peers`, compile
+        /// it, and return the executor.
+        pub fn discover(peers: usize) -> Result<Self> {
+            let shapes = list_shaped_artifacts("avg_pairs");
+            let (p_cap, w_cap, path) = shapes
+                .into_iter()
+                .find(|(p, _, _)| *p >= peers)
+                .with_context(|| {
+                    format!(
+                        "no avg_pairs artifact with P >= {peers} in {} (run `make artifacts`)",
+                        crate::runtime::artifacts_dir().display()
+                    )
+                })?;
+            let mut runtime = Runtime::cpu()?;
+            let exe = runtime.load_path(&path)?;
+            Ok(Self {
+                runtime,
+                exe,
+                p_cap,
+                w_cap,
+            })
+        }
+
+        /// Build directly from a known artifact (tests).
+        pub fn from_artifact(name: &str, p_cap: usize, w_cap: usize) -> Result<Self> {
+            let mut runtime = Runtime::cpu()?;
+            let exe = runtime.load(name)?;
+            Ok(Self {
+                runtime,
+                exe,
+                p_cap,
+                w_cap,
+            })
+        }
+
+        /// The underlying runtime (for diagnostics).
+        pub fn runtime(&self) -> &Runtime {
+            &self.runtime
+        }
+    }
+
+    impl RoundExecutor for PjrtExecutor {
+        fn name(&self) -> &'static str {
+            "pjrt"
+        }
+
+        fn preferred_width(&self) -> Option<usize> {
+            Some(self.w_cap)
+        }
+
+        fn max_peers(&self) -> Option<usize> {
+            Some(self.p_cap)
+        }
+
+        fn average(&mut self, round: &mut DenseRound) -> Result<()> {
+            if round.width != self.w_cap {
+                bail!(
+                    "dense width {} != artifact window {}",
+                    round.width,
+                    self.w_cap
+                );
+            }
+            if round.peers > self.p_cap {
+                bail!("{} peers > artifact capacity {}", round.peers, self.p_cap);
+            }
+            let cols = round.cols();
+            // Pad rows to the artifact's static P; padded rows self-pair.
+            let mut states_f32 = vec![0f32; self.p_cap * cols];
+            for (dst, src) in states_f32
+                .chunks_mut(cols)
+                .zip(round.matrix.chunks(cols))
+            {
+                for (d, s) in dst.iter_mut().zip(src.iter()) {
+                    *d = *s as f32;
+                }
+            }
+            let mut partner_i32: Vec<i32> = (0..self.p_cap as i32).collect();
+            for (l, &j) in round.partner.iter().enumerate() {
+                partner_i32[l] = j as i32;
+            }
+            let states_lit = xla::Literal::vec1(&states_f32)
+                .reshape(&[self.p_cap as i64, cols as i64])?;
+            let partner_lit = xla::Literal::vec1(&partner_i32);
+            let out = self.exe.run1(&[states_lit, partner_lit])?;
+            let flat: Vec<f32> = out.to_vec()?;
+            if flat.len() != self.p_cap * cols {
+                bail!(
+                    "artifact returned {} elements, expected {}",
+                    flat.len(),
+                    self.p_cap * cols
+                );
+            }
+            for (dst, src) in round
+                .matrix
+                .chunks_mut(cols)
+                .zip(flat.chunks(cols))
+            {
+                for (d, s) in dst.iter_mut().zip(src.iter()) {
+                    *d = *s as f64;
+                }
+            }
+            Ok(())
+        }
+    }
+} // mod pjrt_executor
 
 #[cfg(test)]
 mod tests {

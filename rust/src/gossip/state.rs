@@ -39,14 +39,25 @@ impl PeerState {
     ) -> Result<Self, SketchError> {
         // Bulk ingestion runs on the dense store (fast hot path), the
         // result converts to the sparse gossip representation once.
+        // Scalar initialization is shared with `from_sketch`
+        // (`count()` == dataset.len() exactly for unit-weight inserts).
         let mut dense: UddSketch<DenseStore> = UddSketch::new(alpha, max_buckets)?;
         dense.extend(dataset);
-        Ok(Self {
+        Ok(Self::from_sketch(id, &dense))
+    }
+
+    /// Front an already-built local summary as a gossip peer: Algorithm
+    /// 3's scalar initialization with the sketch supplied instead of
+    /// re-processed from the raw stream. This is how a
+    /// [`service`](crate::service) snapshot becomes a live peer — the
+    /// serving path maintains the local UDDSketch, gossip averages it.
+    pub fn from_sketch<S: Store>(id: usize, sketch: &UddSketch<S>) -> Self {
+        Self {
             id,
-            sketch: dense.convert_store(),
-            n_tilde: dataset.len() as f64,
+            sketch: sketch.convert_store(),
+            n_tilde: sketch.count(),
             q_tilde: if id == 0 { 1.0 } else { 0.0 },
-        })
+        }
     }
 
     /// Algorithm 4's UPDATE: the averaged state both exchange partners

@@ -18,8 +18,17 @@
 //!   churn models of §7.2.
 //! * [`data`] — the four synthetic workloads of Table 1 and the *power*
 //!   dataset (UCI household power surrogate/loader).
+//! * [`service`] — the production ingest path: a multi-threaded
+//!   quantile-tracking service with N sharded ingest workers (bounded
+//!   mpsc batching, a private `UddSketch` per shard), exact epoch folds
+//!   via sketch mergeability, lock-free epoch-stamped snapshot
+//!   publication for `quantile`/`quantiles`/`cdf` queries that never
+//!   block ingest, an optional sliding-window mode (ring of per-interval
+//!   sub-sketches merged on demand), and adapters fronting a gossip peer
+//!   with the live snapshot.
 //! * [`runtime`] — PJRT execution of AOT-compiled JAX/Pallas artifacts; the
-//!   dense averaging round can run through XLA (`gossip::PjrtExecutor`).
+//!   dense averaging round can run through XLA (`gossip::PjrtExecutor`),
+//!   gated behind the `pjrt` cargo feature.
 //! * [`experiments`] — regeneration harness for every table and figure in
 //!   the paper's evaluation (§7).
 //! * [`rng`], [`metrics`], [`util`] — in-tree substrates (PRNG +
@@ -48,6 +57,7 @@ pub mod graph;
 pub mod metrics;
 pub mod rng;
 pub mod runtime;
+pub mod service;
 pub mod sketch;
 pub mod util;
 

@@ -6,10 +6,15 @@
 //! format is HLO **text** — the image's xla_extension 0.5.1 rejects
 //! jax≥0.5 serialized protos (64-bit instruction ids), while the text
 //! parser reassigns ids (see /opt/xla-example/README.md).
+//!
+//! The `xla` binding crate is not in the offline registry, so the whole
+//! execution path is gated behind the `pjrt` cargo feature. Without it,
+//! [`Runtime::cpu`] returns a clean error and everything that would run an
+//! artifact (the PJRT executor, `figure` legs, benches) degrades to the
+//! native path; artifact *inventory* ([`artifacts_dir`],
+//! [`list_shaped_artifacts`]) works in every build.
 
-use anyhow::{anyhow, bail, Context, Result};
-use std::collections::HashMap;
-use std::path::{Path, PathBuf};
+use std::path::PathBuf;
 
 /// Directory holding `*.hlo.txt` artifacts (env `DUDD_ARTIFACTS` wins,
 /// default `artifacts/` relative to the working directory).
@@ -19,124 +24,186 @@ pub fn artifacts_dir() -> PathBuf {
         .unwrap_or_else(|_| PathBuf::from("artifacts"))
 }
 
-/// A loaded, compiled artifact ready to execute.
-pub struct Executable {
-    name: String,
-    exe: xla::PjRtLoadedExecutable,
-}
+#[cfg(feature = "pjrt")]
+mod pjrt_impl {
+    use super::artifacts_dir;
+    use anyhow::{anyhow, bail, Context, Result};
+    use std::collections::HashMap;
+    use std::path::Path;
 
-impl std::fmt::Debug for Executable {
-    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        write!(f, "Executable({})", self.name)
+    /// A loaded, compiled artifact ready to execute.
+    pub struct Executable {
+        name: String,
+        exe: xla::PjRtLoadedExecutable,
+    }
+
+    impl std::fmt::Debug for Executable {
+        fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+            write!(f, "Executable({})", self.name)
+        }
+    }
+
+    impl Executable {
+        /// Artifact name (file stem).
+        pub fn name(&self) -> &str {
+            &self.name
+        }
+
+        /// Execute with the given inputs; returns the outputs of the lowered
+        /// function (the AOT path lowers with `return_tuple=True`, so the
+        /// single device output tuple is decomposed).
+        pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+            let buffers = self
+                .exe
+                .execute::<xla::Literal>(inputs)
+                .with_context(|| format!("executing artifact {}", self.name))?;
+            let lit = buffers
+                .first()
+                .and_then(|d| d.first())
+                .ok_or_else(|| anyhow!("artifact {} returned no buffers", self.name))?
+                .to_literal_sync()?;
+            Ok(lit.to_tuple()?)
+        }
+
+        /// Execute and expect exactly one output.
+        pub fn run1(&self, inputs: &[xla::Literal]) -> Result<xla::Literal> {
+            let mut outs = self.run(inputs)?;
+            if outs.len() != 1 {
+                bail!(
+                    "artifact {} returned {} outputs, expected 1",
+                    self.name,
+                    outs.len()
+                );
+            }
+            Ok(outs.remove(0))
+        }
+    }
+
+    /// PJRT CPU client wrapper with an artifact compile cache.
+    pub struct Runtime {
+        client: xla::PjRtClient,
+        cache: HashMap<String, std::rc::Rc<Executable>>,
+    }
+
+    impl std::fmt::Debug for Runtime {
+        fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+            write!(
+                f,
+                "Runtime(platform={}, cached={})",
+                self.client.platform_name(),
+                self.cache.len()
+            )
+        }
+    }
+
+    impl Runtime {
+        /// Create the CPU PJRT client.
+        pub fn cpu() -> Result<Self> {
+            let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+            Ok(Self {
+                client,
+                cache: HashMap::new(),
+            })
+        }
+
+        /// PJRT platform name (e.g. "cpu").
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        /// Load and compile an HLO-text artifact file (memoized by stem).
+        pub fn load_path(&mut self, path: &Path) -> Result<std::rc::Rc<Executable>> {
+            let name = path
+                .file_stem()
+                .and_then(|s| s.to_str())
+                .unwrap_or("artifact")
+                .trim_end_matches(".hlo") // file_stem of x.hlo.txt is x.hlo
+                .to_string();
+            if let Some(e) = self.cache.get(&name) {
+                return Ok(e.clone());
+            }
+            let proto = xla::HloModuleProto::from_text_file(path)
+                .with_context(|| format!("parsing HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling {}", path.display()))?;
+            let e = std::rc::Rc::new(Executable {
+                name: name.clone(),
+                exe,
+            });
+            self.cache.insert(name, e.clone());
+            Ok(e)
+        }
+
+        /// Load `<artifacts_dir>/<name>.hlo.txt`.
+        pub fn load(&mut self, name: &str) -> Result<std::rc::Rc<Executable>> {
+            let path = artifacts_dir().join(format!("{name}.hlo.txt"));
+            if !path.exists() {
+                bail!(
+                    "artifact {} not found (run `make artifacts`)",
+                    path.display()
+                );
+            }
+            self.load_path(&path)
+        }
     }
 }
 
-impl Executable {
-    /// Artifact name (file stem).
-    pub fn name(&self) -> &str {
-        &self.name
+#[cfg(not(feature = "pjrt"))]
+mod pjrt_impl {
+    use anyhow::{bail, Result};
+    use std::path::Path;
+
+    /// Stub for the compiled-artifact handle: the `pjrt` feature is off, so
+    /// no value of this type can ever be constructed.
+    #[derive(Debug)]
+    pub struct Executable {
+        _never: std::convert::Infallible,
     }
 
-    /// Execute with the given inputs; returns the outputs of the lowered
-    /// function (the AOT path lowers with `return_tuple=True`, so the
-    /// single device output tuple is decomposed).
-    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
-        let buffers = self
-            .exe
-            .execute::<xla::Literal>(inputs)
-            .with_context(|| format!("executing artifact {}", self.name))?;
-        let lit = buffers
-            .first()
-            .and_then(|d| d.first())
-            .ok_or_else(|| anyhow!("artifact {} returned no buffers", self.name))?
-            .to_literal_sync()?;
-        Ok(lit.to_tuple()?)
+    impl Executable {
+        /// Artifact name (file stem).
+        pub fn name(&self) -> &str {
+            match self._never {}
+        }
     }
 
-    /// Execute and expect exactly one output.
-    pub fn run1(&self, inputs: &[xla::Literal]) -> Result<xla::Literal> {
-        let mut outs = self.run(inputs)?;
-        if outs.len() != 1 {
+    /// Stub PJRT client: construction always fails with a clear message, so
+    /// every caller degrades along its normal "PJRT unavailable" path.
+    #[derive(Debug)]
+    pub struct Runtime {
+        _never: std::convert::Infallible,
+    }
+
+    impl Runtime {
+        /// Always fails: PJRT support is not compiled into this build.
+        pub fn cpu() -> Result<Self> {
             bail!(
-                "artifact {} returned {} outputs, expected 1",
-                self.name,
-                outs.len()
-            );
+                "PJRT support not compiled in (rebuild with `--features pjrt` \
+                 and an `xla` path dependency)"
+            )
         }
-        Ok(outs.remove(0))
-    }
-}
 
-/// PJRT CPU client wrapper with an artifact compile cache.
-pub struct Runtime {
-    client: xla::PjRtClient,
-    cache: HashMap<String, std::rc::Rc<Executable>>,
-}
-
-impl std::fmt::Debug for Runtime {
-    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        write!(
-            f,
-            "Runtime(platform={}, cached={})",
-            self.client.platform_name(),
-            self.cache.len()
-        )
-    }
-}
-
-impl Runtime {
-    /// Create the CPU PJRT client.
-    pub fn cpu() -> Result<Self> {
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Self {
-            client,
-            cache: HashMap::new(),
-        })
-    }
-
-    /// PJRT platform name (e.g. "cpu").
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Load and compile an HLO-text artifact file (memoized by stem).
-    pub fn load_path(&mut self, path: &Path) -> Result<std::rc::Rc<Executable>> {
-        let name = path
-            .file_stem()
-            .and_then(|s| s.to_str())
-            .unwrap_or("artifact")
-            .trim_end_matches(".hlo") // file_stem of x.hlo.txt is x.hlo
-            .to_string();
-        if let Some(e) = self.cache.get(&name) {
-            return Ok(e.clone());
+        /// PJRT platform name (unreachable — see [`Runtime::cpu`]).
+        pub fn platform(&self) -> String {
+            match self._never {}
         }
-        let proto = xla::HloModuleProto::from_text_file(path)
-            .with_context(|| format!("parsing HLO text {}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("compiling {}", path.display()))?;
-        let e = std::rc::Rc::new(Executable {
-            name: name.clone(),
-            exe,
-        });
-        self.cache.insert(name, e.clone());
-        Ok(e)
-    }
 
-    /// Load `<artifacts_dir>/<name>.hlo.txt`.
-    pub fn load(&mut self, name: &str) -> Result<std::rc::Rc<Executable>> {
-        let path = artifacts_dir().join(format!("{name}.hlo.txt"));
-        if !path.exists() {
-            bail!(
-                "artifact {} not found (run `make artifacts`)",
-                path.display()
-            );
+        /// Load an artifact file (unreachable — see [`Runtime::cpu`]).
+        pub fn load_path(&mut self, _path: &Path) -> Result<std::rc::Rc<Executable>> {
+            match self._never {}
         }
-        self.load_path(&path)
+
+        /// Load a named artifact (unreachable — see [`Runtime::cpu`]).
+        pub fn load(&mut self, _name: &str) -> Result<std::rc::Rc<Executable>> {
+            match self._never {}
+        }
     }
 }
+
+pub use pjrt_impl::{Executable, Runtime};
 
 /// Parse `<prefix>_p<P>_w<W>` style artifact names.
 pub fn parse_shape_suffix(stem: &str, prefix: &str) -> Option<(usize, usize)> {
@@ -186,7 +253,7 @@ mod tests {
     fn missing_artifact_is_a_clean_error() {
         let mut rt = match Runtime::cpu() {
             Ok(rt) => rt,
-            Err(_) => return, // no PJRT plugin in this environment
+            Err(_) => return, // no PJRT plugin (or feature) in this build
         };
         let err = rt.load("definitely_not_there").unwrap_err();
         assert!(err.to_string().contains("make artifacts"));

@@ -1,0 +1,545 @@
+//! The service coordinator: epoch drains, snapshot publication, writers.
+//!
+//! [`QuantileService::start`] spawns N ingest shards; producers obtain
+//! batching [`ServiceWriter`]s and push values with no shared state.
+//! Periodically (background ticker) or on demand ([`QuantileService::flush`])
+//! the coordinator runs an **epoch**: it drains every shard's delta
+//! sketch, folds the deltas into the accumulator (`merge_weighted`
+//! aligns collapse lineages, so shards that collapsed at different
+//! depths still fold exactly), and publishes a fresh epoch-stamped
+//! [`Snapshot`] through an [`ArcSwapCell`] — queries never block ingest
+//! and never take a lock.
+
+use super::shard::{spawn_shard, ShardDelta, ShardHandle, ShardMsg};
+use super::snapshot::Snapshot;
+use super::swap::ArcSwapCell;
+use super::window::WindowRing;
+use crate::config::ServiceConfig;
+use crate::gossip::PeerState;
+use crate::sketch::{DenseStore, UddSketch};
+use anyhow::{Context, Result};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{self, SyncSender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Coordinator state shared with the background ticker.
+struct Inner {
+    /// The published snapshot (lock-free read path).
+    current: ArcSwapCell<Snapshot>,
+    /// Epoch accumulator; the lock serializes concurrent epochs
+    /// (ticker vs. `flush`), never readers.
+    accum: Mutex<Accum>,
+}
+
+struct Accum {
+    alpha: f64,
+    max_buckets: usize,
+    /// Cumulative global sketch (cumulative mode only).
+    global: UddSketch<DenseStore>,
+    /// Sliding-window ring (windowed mode only).
+    ring: Option<WindowRing>,
+    /// Epochs completed.
+    epoch: u64,
+    /// Lifetime operations folded in.
+    ops: u64,
+}
+
+/// A multi-threaded quantile-tracking service over sharded UDDSketches.
+///
+/// ```
+/// use duddsketch::config::ServiceConfig;
+/// use duddsketch::service::QuantileService;
+///
+/// let mut cfg = ServiceConfig::default();
+/// cfg.shards = 2;
+/// let svc = QuantileService::start(cfg).unwrap();
+/// let mut w = svc.writer();
+/// for i in 1..=1000 {
+///     w.insert(i as f64);
+/// }
+/// w.flush();
+/// let snap = svc.flush();
+/// assert_eq!(snap.count(), 1000.0);
+/// let p50 = snap.quantile(0.5).unwrap();
+/// assert!((p50 - 500.0).abs() / 500.0 < 0.01);
+/// svc.shutdown();
+/// ```
+pub struct QuantileService {
+    cfg: ServiceConfig,
+    shards: Vec<ShardHandle>,
+    inner: Arc<Inner>,
+    stop: Arc<AtomicBool>,
+    ticker: Option<JoinHandle<()>>,
+}
+
+impl std::fmt::Debug for QuantileService {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "QuantileService(shards={}, epoch={})",
+            self.shards.len(),
+            self.snapshot().epoch()
+        )
+    }
+}
+
+impl QuantileService {
+    /// Validate the configuration, spawn the ingest shards, and (when an
+    /// epoch interval is configured) the background epoch ticker.
+    pub fn start(cfg: ServiceConfig) -> Result<Self> {
+        cfg.validate().map_err(anyhow::Error::msg)?;
+        let n = cfg.effective_shards();
+        let mut shards = Vec::with_capacity(n);
+        for id in 0..n {
+            shards.push(spawn_shard(id, cfg.alpha, cfg.max_buckets, cfg.queue_depth)?);
+        }
+        let ring = if cfg.window_slots > 0 {
+            Some(
+                WindowRing::new(cfg.window_slots, cfg.alpha, cfg.max_buckets)
+                    .context("building window ring")?,
+            )
+        } else {
+            None
+        };
+        let inner = Arc::new(Inner {
+            current: ArcSwapCell::new(Arc::new(
+                Snapshot::empty(cfg.alpha, cfg.max_buckets).context("initial snapshot")?,
+            )),
+            accum: Mutex::new(Accum {
+                alpha: cfg.alpha,
+                max_buckets: cfg.max_buckets,
+                global: UddSketch::new(cfg.alpha, cfg.max_buckets)
+                    .context("global accumulator")?,
+                ring,
+                epoch: 0,
+                ops: 0,
+            }),
+        });
+        let stop = Arc::new(AtomicBool::new(false));
+        let ticker = if cfg.epoch_interval_ms > 0 {
+            let senders: Vec<SyncSender<ShardMsg>> =
+                shards.iter().map(|s| s.tx.clone()).collect();
+            let inner = inner.clone();
+            let stop = stop.clone();
+            let interval = Duration::from_millis(cfg.epoch_interval_ms);
+            Some(
+                std::thread::Builder::new()
+                    .name("dudd-epoch".into())
+                    .spawn(move || ticker_loop(&senders, &inner, &stop, interval))
+                    .context("spawning epoch ticker")?,
+            )
+        } else {
+            None
+        };
+        Ok(Self {
+            cfg,
+            shards,
+            inner,
+            stop,
+            ticker,
+        })
+    }
+
+    /// The service configuration.
+    pub fn config(&self) -> &ServiceConfig {
+        &self.cfg
+    }
+
+    /// Number of ingest shards running.
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// A new batching ingest handle. Writers are independent — create one
+    /// per producer thread; each buffers locally and ships full batches
+    /// round-robin across the shards (bounded queues give backpressure).
+    pub fn writer(&self) -> ServiceWriter {
+        ServiceWriter {
+            senders: self.shards.iter().map(|s| s.tx.clone()).collect(),
+            batch: self.cfg.batch_size.max(1),
+            inserts: Vec::with_capacity(self.cfg.batch_size.max(1)),
+            updates: Vec::new(),
+            next: 0,
+        }
+    }
+
+    /// The latest published snapshot. Lock-free; never blocks ingest or
+    /// epochs, and the returned handle stays consistent forever.
+    pub fn snapshot(&self) -> Arc<Snapshot> {
+        self.inner.current.load()
+    }
+
+    /// Run one epoch synchronously: drain every shard, fold the deltas,
+    /// publish, and return the fresh snapshot. Batches already enqueued
+    /// to the shards are included (FIFO queues); values still buffered in
+    /// un-flushed [`ServiceWriter`]s are not — flush writers first.
+    pub fn flush(&self) -> Arc<Snapshot> {
+        let senders: Vec<SyncSender<ShardMsg>> =
+            self.shards.iter().map(|s| s.tx.clone()).collect();
+        run_epoch(&senders, &self.inner)
+    }
+
+    /// A gossip peer state fronted by the latest snapshot: the local
+    /// sketch of Algorithm 3 is the service's live summary instead of a
+    /// replayed raw stream (see also [`super::ServicePeer`]).
+    pub fn peer_state(&self, id: usize) -> PeerState {
+        PeerState::from_sketch(id, self.snapshot().sketch())
+    }
+
+    /// Stop the ticker, run a final epoch, retire the shards, and return
+    /// the final snapshot. Outstanding [`ServiceWriter`]s may still be
+    /// alive — shards retire via an explicit stop message, so shutdown
+    /// never blocks on writer lifetimes; later writer batches are
+    /// dropped against the disconnected queues.
+    pub fn shutdown(mut self) -> Arc<Snapshot> {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(t) = self.ticker.take() {
+            let _ = t.join();
+        }
+        let snap = self.flush();
+        retire_shards(&mut self.shards);
+        snap
+    }
+}
+
+impl Drop for QuantileService {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(t) = self.ticker.take() {
+            let _ = t.join();
+        }
+        retire_shards(&mut self.shards);
+    }
+}
+
+/// Send every shard a stop message and join it. The explicit message —
+/// rather than waiting for all sender clones to drop — means teardown
+/// cannot deadlock on a `ServiceWriter` that outlives the service.
+fn retire_shards(shards: &mut Vec<ShardHandle>) {
+    for s in shards.iter() {
+        let _ = s.tx.send(ShardMsg::Stop);
+    }
+    for s in shards.drain(..) {
+        drop(s.tx);
+        let _ = s.join.join();
+    }
+}
+
+/// Background ticker: one epoch per interval, stop-aware in ≤10 ms steps
+/// so shutdown never waits out a long interval.
+fn ticker_loop(
+    senders: &[SyncSender<ShardMsg>],
+    inner: &Inner,
+    stop: &AtomicBool,
+    interval: Duration,
+) {
+    let step = Duration::from_millis(10).min(interval);
+    'outer: loop {
+        let mut slept = Duration::ZERO;
+        while slept < interval {
+            if stop.load(Ordering::SeqCst) {
+                break 'outer;
+            }
+            let d = step.min(interval - slept);
+            std::thread::sleep(d);
+            slept += d;
+        }
+        if stop.load(Ordering::SeqCst) {
+            break;
+        }
+        run_epoch(senders, inner);
+    }
+}
+
+/// Drain every shard into the accumulator and publish a fresh snapshot.
+fn run_epoch(senders: &[SyncSender<ShardMsg>], inner: &Inner) -> Arc<Snapshot> {
+    // The accumulator lock serializes concurrent epochs end to end.
+    let mut guard = inner.accum.lock().expect("accumulator poisoned");
+    let accum: &mut Accum = &mut guard;
+    let (tx, rx) = mpsc::channel::<ShardDelta>();
+    let mut expected = 0usize;
+    for s in senders {
+        if s.send(ShardMsg::Drain(tx.clone())).is_ok() {
+            expected += 1;
+        }
+    }
+    drop(tx);
+
+    let mut epoch_delta: UddSketch<DenseStore> =
+        UddSketch::new(accum.alpha, accum.max_buckets).expect("validated parameters");
+    let mut ops = 0u64;
+    for _ in 0..expected {
+        match rx.recv() {
+            Ok(delta) => {
+                ops += delta.ops;
+                epoch_delta
+                    .merge(&delta.sketch)
+                    .expect("shards share one alpha0 lineage");
+            }
+            Err(_) => break, // a shard died mid-drain; fold what arrived
+        }
+    }
+
+    // Idle tick in cumulative mode: nothing arrived, so the published
+    // snapshot is already exact — skip the global clone + republish a
+    // frequent ticker would otherwise burn every interval. Windowed mode
+    // must always push (empty epochs still age out old intervals).
+    if ops == 0 && accum.ring.is_none() && accum.epoch > 0 {
+        return inner.current.load();
+    }
+
+    accum.ops += ops;
+    accum.epoch += 1;
+    let (sketch, window) = match &mut accum.ring {
+        Some(ring) => {
+            ring.push_epoch(epoch_delta);
+            (
+                ring.merged().expect("ring shares one alpha0 lineage"),
+                ring.coverage(),
+            )
+        }
+        None => {
+            accum
+                .global
+                .merge(&epoch_delta)
+                .expect("global shares one alpha0 lineage");
+            (accum.global.clone(), None)
+        }
+    };
+    let snap = Arc::new(Snapshot::new(accum.epoch, sketch, accum.ops, window));
+    inner.current.store(snap.clone());
+    snap
+}
+
+/// Batching ingest handle bound to one producer.
+///
+/// Values accumulate in a local buffer and ship to the shards
+/// round-robin as full batches; [`ServiceWriter::flush`] (also run on
+/// `Drop`) pushes partial batches. Turnstile updates
+/// ([`ServiceWriter::delete`] / [`ServiceWriter::update`]) batch
+/// separately; weights add commutatively, so the relative order of the
+/// two buffers never changes the folded result. Non-finite values are
+/// dropped at the shard (a live stream must not panic a worker).
+pub struct ServiceWriter {
+    senders: Vec<SyncSender<ShardMsg>>,
+    batch: usize,
+    inserts: Vec<f64>,
+    updates: Vec<(f64, f64)>,
+    next: usize,
+}
+
+impl ServiceWriter {
+    /// Insert one value.
+    #[inline]
+    pub fn insert(&mut self, x: f64) {
+        self.inserts.push(x);
+        if self.inserts.len() >= self.batch {
+            self.ship_inserts();
+        }
+    }
+
+    /// Insert a slice of values.
+    pub fn insert_batch(&mut self, xs: &[f64]) {
+        for &x in xs {
+            self.insert(x);
+        }
+    }
+
+    /// Delete one previously inserted value (turnstile model).
+    #[inline]
+    pub fn delete(&mut self, x: f64) {
+        self.update(x, -1.0);
+    }
+
+    /// Add weight `w` (possibly negative or fractional) for value `x`.
+    #[inline]
+    pub fn update(&mut self, x: f64, w: f64) {
+        self.updates.push((x, w));
+        if self.updates.len() >= self.batch {
+            self.ship_updates();
+        }
+    }
+
+    /// Ship all locally buffered values to the shards. Blocks while shard
+    /// queues are full (backpressure).
+    pub fn flush(&mut self) {
+        self.ship_inserts();
+        self.ship_updates();
+    }
+
+    fn ship_inserts(&mut self) {
+        if self.inserts.is_empty() {
+            return;
+        }
+        let batch = std::mem::replace(&mut self.inserts, Vec::with_capacity(self.batch));
+        self.ship(ShardMsg::Ingest(batch));
+    }
+
+    fn ship_updates(&mut self) {
+        if self.updates.is_empty() {
+            return;
+        }
+        let batch = std::mem::take(&mut self.updates);
+        self.ship(ShardMsg::Update(batch));
+    }
+
+    fn ship(&mut self, msg: ShardMsg) {
+        let n = self.senders.len();
+        let mut msg = msg;
+        // Round-robin; skip retired shards (disconnected channels). If
+        // every shard is gone the service shut down and the batch drops.
+        for _ in 0..n {
+            let k = self.next % n;
+            self.next = self.next.wrapping_add(1);
+            msg = match self.senders[k].send(msg) {
+                Ok(()) => return,
+                Err(e) => e.0,
+            };
+        }
+    }
+}
+
+impl Drop for ServiceWriter {
+    fn drop(&mut self) {
+        self.flush();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(shards: usize) -> ServiceConfig {
+        let mut c = ServiceConfig::default();
+        c.shards = shards;
+        c.batch_size = 64;
+        c
+    }
+
+    #[test]
+    fn epochs_accumulate_and_stamp_snapshots() {
+        let svc = QuantileService::start(cfg(3)).unwrap();
+        assert_eq!(svc.shard_count(), 3);
+        assert_eq!(svc.snapshot().epoch(), 0);
+
+        let mut w = svc.writer();
+        w.insert_batch(&[1.0, 2.0, 3.0, 4.0]);
+        w.flush();
+        let s1 = svc.flush();
+        assert_eq!(s1.epoch(), 1);
+        assert_eq!(s1.count(), 4.0);
+        assert_eq!(s1.ops(), 4);
+
+        w.insert_batch(&[5.0, 6.0]);
+        w.flush();
+        let s2 = svc.flush();
+        assert_eq!(s2.epoch(), 2);
+        assert_eq!(s2.count(), 6.0);
+        // The earlier handle is immutable.
+        assert_eq!(s1.count(), 4.0);
+        drop(w);
+        let fin = svc.shutdown();
+        assert_eq!(fin.count(), 6.0);
+    }
+
+    #[test]
+    fn turnstile_updates_fold_across_shards() {
+        let svc = QuantileService::start(cfg(4)).unwrap();
+        let mut w = svc.writer();
+        for i in 1..=100 {
+            w.insert(i as f64);
+        }
+        for i in 51..=100 {
+            w.delete(i as f64);
+        }
+        w.flush();
+        let snap = svc.flush();
+        assert_eq!(snap.count(), 50.0);
+        let hi = snap.quantile(1.0).unwrap();
+        assert!((hi - 50.0).abs() <= 0.001 * 50.0 + 1e-9, "max {hi}");
+        drop(w);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn writer_drop_flushes_partial_batches() {
+        let svc = QuantileService::start(cfg(2)).unwrap();
+        {
+            let mut w = svc.writer();
+            w.insert(42.0); // far below batch_size
+        }
+        let snap = svc.flush();
+        assert_eq!(snap.count(), 1.0);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn windowed_mode_serves_last_k_epochs() {
+        let mut c = cfg(2);
+        c.window_slots = 2;
+        let svc = QuantileService::start(c).unwrap();
+        let mut w = svc.writer();
+        for chunk in [&[1.0f64; 8][..], &[2.0; 8], &[3.0; 8]] {
+            w.insert_batch(chunk);
+            w.flush();
+            svc.flush();
+        }
+        let snap = svc.snapshot();
+        assert_eq!(snap.epoch(), 3);
+        assert_eq!(snap.window(), Some((2, 3)));
+        // Epoch 1 (all 1.0) evicted: 16 items left, min ≈ 2.
+        assert_eq!(snap.count(), 16.0);
+        let lo = snap.quantile(0.0).unwrap();
+        assert!((lo - 2.0).abs() <= 0.001 * 2.0 + 1e-9, "evicted epoch leaked: {lo}");
+        // Lifetime ops still counts evicted epochs.
+        assert_eq!(snap.ops(), 24);
+        drop(w);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn background_ticker_publishes_without_flush() {
+        let mut c = cfg(2);
+        c.epoch_interval_ms = 5;
+        let svc = QuantileService::start(c).unwrap();
+        let mut w = svc.writer();
+        w.insert_batch(&[1.0, 2.0, 3.0]);
+        w.flush();
+        let deadline = std::time::Instant::now() + Duration::from_secs(5);
+        loop {
+            let snap = svc.snapshot();
+            if snap.count() == 3.0 {
+                assert!(snap.epoch() >= 1);
+                break;
+            }
+            assert!(
+                std::time::Instant::now() < deadline,
+                "ticker never published (epoch {})",
+                snap.epoch()
+            );
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        drop(w);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn peer_state_fronts_snapshot() {
+        let svc = QuantileService::start(cfg(2)).unwrap();
+        let mut w = svc.writer();
+        for i in 1..=1000 {
+            w.insert(i as f64);
+        }
+        w.flush();
+        svc.flush();
+        let peer = svc.peer_state(0);
+        assert_eq!(peer.id, 0);
+        assert_eq!(peer.q_tilde, 1.0);
+        assert_eq!(peer.n_tilde, 1000.0);
+        let est = peer.query(0.5).unwrap();
+        assert!((est - 500.0).abs() / 500.0 <= 0.001 + 1e-9);
+        svc.shutdown();
+    }
+}

@@ -1,0 +1,58 @@
+//! Sharded concurrent ingest + windowed snapshot-query service.
+//!
+//! The production ingest path in front of a gossip peer: where the rest
+//! of the crate *simulates* the paper's protocol, this module *serves* a
+//! live stream at hardware speed.
+//!
+//! ```text
+//!  writers (any #)          shards (N threads)         coordinator
+//!  ┌──────────────┐  mpsc   ┌──────────────────┐  drain ┌─────────────┐
+//!  │ batch buffer ├────────▶│ UddSketch<Dense> ├───────▶│ merge epoch │
+//!  │ round-robin  │ bounded │  (private, no    │ deltas │ fold + ring │
+//!  └──────────────┘ queues  │   locks at all)  │        └──────┬──────┘
+//!                           └──────────────────┘               │ publish
+//!                                              ArcSwapCell<Snapshot>
+//!                                             (lock-free query reads)
+//! ```
+//!
+//! * **Sharded ingest** — [`QuantileService::writer`] hands out batching
+//!   [`ServiceWriter`]s; values ship round-robin over bounded mpsc
+//!   queues to N worker threads, each folding into a private
+//!   [`UddSketch`](crate::sketch::UddSketch). No shared state on the hot
+//!   path, so throughput scales with shard count
+//!   (`benches/service_ingest.rs`).
+//! * **Exact epochs** — the coordinator periodically (or on
+//!   [`QuantileService::flush`]) drains every shard's *delta* sketch and
+//!   folds them with [`merge_weighted`](crate::sketch::UddSketch::merge_weighted)
+//!   semantics (collapse lineages align automatically). Mergeability
+//!   (Definition 7) makes the fold exact: a snapshot answers quantiles
+//!   **identically** to one sequential sketch fed the same stream, with
+//!   the same α guarantee (`rust/tests/integration_service.rs`).
+//! * **Non-blocking queries** — snapshots publish through an
+//!   [`ArcSwapCell`]; readers never take a lock and never block ingest.
+//! * **Sliding windows** — with `window_slots > 0` a [`WindowRing`] keeps
+//!   one sub-sketch per epoch interval and merges the most recent `k` on
+//!   demand (time-bucketed-aggregate style), for "last N intervals"
+//!   serving instead of all-time.
+//! * **Gossip fronting** — [`ServicePeer`] /
+//!   [`QuantileService::peer_state`] turn the live snapshot into the
+//!   local state of Algorithm 3, connecting the service to the
+//!   distributed protocol in [`crate::gossip`].
+//!
+//! Configuration lives in [`crate::config::ServiceConfig`]; the
+//! `serve-bench` CLI subcommand drives the `data` workloads through a
+//! service end to end.
+
+mod coordinator;
+mod peer;
+mod shard;
+mod snapshot;
+mod swap;
+mod window;
+
+pub use coordinator::{QuantileService, ServiceWriter};
+pub use peer::ServicePeer;
+pub use shard::ShardDelta;
+pub use snapshot::Snapshot;
+pub use swap::ArcSwapCell;
+pub use window::WindowRing;

@@ -1,0 +1,130 @@
+//! Fronting a gossip peer with a live service.
+//!
+//! The paper assumes every peer "already maintains a local UDDSketch over
+//! its own stream" (Algorithm 3). In production that local summary is
+//! exactly what [`QuantileService`](super::QuantileService) maintains:
+//! [`ServicePeer`] adapts the service's latest snapshot into a
+//! [`PeerState`] the gossip engine can exchange, and re-seeds it whenever
+//! a newer epoch is published. Distributed averaging re-converges from
+//! any initial states (Prop. 4), so refresh-then-gossip is sound.
+
+use super::coordinator::QuantileService;
+use crate::gossip::PeerState;
+
+/// A gossip peer whose local sketch tracks a service's snapshots.
+#[derive(Debug)]
+pub struct ServicePeer {
+    epoch: u64,
+    state: PeerState,
+}
+
+impl ServicePeer {
+    /// Front `svc` as gossip peer `id`, seeded from the current snapshot.
+    pub fn new(id: usize, svc: &QuantileService) -> Self {
+        let snap = svc.snapshot();
+        Self {
+            epoch: snap.epoch(),
+            state: PeerState::from_sketch(id, snap.sketch()),
+        }
+    }
+
+    /// Snapshot epoch the peer state was last seeded from.
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Re-seed from the latest snapshot if a newer epoch was published;
+    /// returns `true` when the local state was rebuilt. Averaged scalar
+    /// state restarts alongside the sketch — the protocol re-converges.
+    pub fn refresh(&mut self, svc: &QuantileService) -> bool {
+        let snap = svc.snapshot();
+        if snap.epoch() == self.epoch {
+            return false;
+        }
+        self.epoch = snap.epoch();
+        self.state = PeerState::from_sketch(self.state.id, snap.sketch());
+        true
+    }
+
+    /// The gossip-facing peer state.
+    pub fn state(&self) -> &PeerState {
+        &self.state
+    }
+
+    /// Mutable access for exchanges ([`PeerState::exchange`]).
+    pub fn state_mut(&mut self) -> &mut PeerState {
+        &mut self.state
+    }
+
+    /// Unwrap into the underlying peer state.
+    pub fn into_state(self) -> PeerState {
+        self.state
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ServiceConfig;
+
+    fn service_with(values: &[f64], shards: usize) -> QuantileService {
+        let mut cfg = ServiceConfig::default();
+        cfg.shards = shards;
+        let svc = QuantileService::start(cfg).unwrap();
+        let mut w = svc.writer();
+        w.insert_batch(values);
+        w.flush();
+        svc.flush();
+        svc
+    }
+
+    #[test]
+    fn refresh_tracks_new_epochs() {
+        let svc = service_with(&[1.0, 2.0, 3.0], 2);
+        let mut peer = ServicePeer::new(5, &svc);
+        assert_eq!(peer.epoch(), 1);
+        assert_eq!(peer.state().id, 5);
+        assert_eq!(peer.state().n_tilde, 3.0);
+        assert!(!peer.refresh(&svc), "no new epoch yet");
+
+        let mut w = svc.writer();
+        w.insert(4.0);
+        w.flush();
+        svc.flush();
+        assert!(peer.refresh(&svc));
+        assert_eq!(peer.epoch(), 2);
+        assert_eq!(peer.state().n_tilde, 4.0);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn two_service_peers_converge_via_exchange() {
+        // Two services front two gossip peers; one atomic push–pull
+        // exchange fully averages a 2-peer network, after which both
+        // reconstruct the *global* quantiles exactly (Algorithm 6 at the
+        // fixed point).
+        let xs: Vec<f64> = (1..=600).map(|i| i as f64).collect();
+        let ys: Vec<f64> = (601..=1000).map(|i| i as f64).collect();
+        let svc_a = service_with(&xs, 2);
+        let svc_b = service_with(&ys, 3);
+
+        let mut seq = crate::sketch::UddSketch::<crate::sketch::DenseStore>::new(
+            0.001, 1024,
+        )
+        .unwrap();
+        seq.extend(&xs);
+        seq.extend(&ys);
+
+        let mut a = ServicePeer::new(0, &svc_a);
+        let mut b = ServicePeer::new(1, &svc_b);
+        PeerState::exchange(a.state_mut(), b.state_mut()).unwrap();
+
+        for q in [0.01, 0.5, 0.99] {
+            let truth = seq.quantile(q).unwrap();
+            assert_eq!(a.state().query(q).unwrap(), truth, "peer a q={q}");
+            assert_eq!(b.state().query(q).unwrap(), truth, "peer b q={q}");
+        }
+        svc_a.shutdown();
+        svc_b.shutdown();
+    }
+}

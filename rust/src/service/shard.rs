@@ -1,0 +1,180 @@
+//! Ingest shards: worker threads each owning a private sketch.
+//!
+//! A shard is a `std::thread` plus a **bounded** mpsc queue of batches
+//! (backpressure: producers block when a shard falls behind instead of
+//! growing memory without bound). Each worker folds its batches into a
+//! private [`UddSketch<DenseStore>`] — the fast bulk-ingest
+//! representation — with zero synchronization on the hot path; the only
+//! cross-thread traffic is whole batches in and epoch drains out.
+//!
+//! A drain hands the accumulated *delta* sketch to the coordinator and
+//! resets the shard, so mergeability (Definition 7) makes the epoch fold
+//! exact: the merged deltas equal one sequential sketch over the union
+//! of everything the shards consumed.
+
+use crate::sketch::{DenseStore, UddSketch};
+use anyhow::{Context, Result};
+use std::sync::mpsc::{Receiver, Sender, SyncSender};
+use std::thread::JoinHandle;
+
+/// Messages a shard worker consumes, in FIFO order. `Drain` therefore
+/// observes every batch enqueued before it.
+pub(crate) enum ShardMsg {
+    /// Insert a batch of values (weight +1 each).
+    Ingest(Vec<f64>),
+    /// Apply weighted updates (turnstile: weight −1 deletes).
+    Update(Vec<(f64, f64)>),
+    /// Hand the delta sketch accumulated since the last drain to the
+    /// coordinator and reset.
+    Drain(Sender<ShardDelta>),
+    /// Retire the worker. Sent by service shutdown/teardown so joining
+    /// never depends on every outstanding `ServiceWriter` (each holds a
+    /// sender clone) having been dropped first.
+    Stop,
+}
+
+/// One shard's contribution to an epoch.
+#[derive(Debug)]
+pub struct ShardDelta {
+    /// Shard index (0-based).
+    pub shard: usize,
+    /// Everything this shard ingested since its previous drain.
+    pub sketch: UddSketch<DenseStore>,
+    /// Operations (inserts + updates) folded into `sketch`.
+    pub ops: u64,
+}
+
+/// A running shard: its queue plus the worker's join handle.
+pub(crate) struct ShardHandle {
+    pub tx: SyncSender<ShardMsg>,
+    pub join: JoinHandle<()>,
+}
+
+/// Spawn shard `id`. Sketch parameters are validated here so service
+/// startup fails fast instead of panicking a worker.
+pub(crate) fn spawn_shard(
+    id: usize,
+    alpha: f64,
+    max_buckets: usize,
+    queue_depth: usize,
+) -> Result<ShardHandle> {
+    let sketch: UddSketch<DenseStore> = UddSketch::new(alpha, max_buckets)
+        .with_context(|| format!("shard {id}: invalid sketch parameters"))?;
+    let (tx, rx) = std::sync::mpsc::sync_channel(queue_depth.max(1));
+    let join = std::thread::Builder::new()
+        .name(format!("dudd-shard-{id}"))
+        .spawn(move || shard_loop(id, alpha, max_buckets, sketch, rx))
+        .with_context(|| format!("spawning shard {id}"))?;
+    Ok(ShardHandle { tx, join })
+}
+
+fn shard_loop(
+    id: usize,
+    alpha: f64,
+    max_buckets: usize,
+    mut sketch: UddSketch<DenseStore>,
+    rx: Receiver<ShardMsg>,
+) {
+    let mut ops: u64 = 0;
+    while let Ok(msg) = rx.recv() {
+        match msg {
+            // Non-finite values are dropped here rather than inherited as
+            // the sequential path's assert: a production stream must not
+            // be able to panic a worker and silently lose the shard's
+            // un-drained data.
+            ShardMsg::Ingest(xs) => {
+                for &x in &xs {
+                    if x.is_finite() {
+                        sketch.insert(x);
+                        ops += 1;
+                    }
+                }
+            }
+            ShardMsg::Update(us) => {
+                for (x, w) in us {
+                    if x.is_finite() && w.is_finite() {
+                        sketch.update(x, w);
+                        ops += 1;
+                    }
+                }
+            }
+            ShardMsg::Drain(reply) => {
+                let drained = std::mem::replace(
+                    &mut sketch,
+                    UddSketch::new(alpha, max_buckets)
+                        .expect("parameters validated at spawn"),
+                );
+                // A vanished coordinator just means the delta is dropped
+                // along with the service; nothing to do.
+                let _ = reply.send(ShardDelta {
+                    shard: id,
+                    sketch: drained,
+                    ops,
+                });
+                ops = 0;
+            }
+            ShardMsg::Stop => break,
+        }
+    }
+    // Stop received (graceful shutdown drained us first) or every sender
+    // dropped. Writers still alive see a disconnected channel and skip
+    // this shard from here on.
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc;
+
+    #[test]
+    fn shard_folds_batches_and_drains_delta() {
+        let h = spawn_shard(3, 0.01, 256, 8).unwrap();
+        h.tx.send(ShardMsg::Ingest(vec![1.0, 2.0, 3.0])).unwrap();
+        h.tx.send(ShardMsg::Update(vec![(4.0, 1.0), (4.0, -1.0)]))
+            .unwrap();
+        let (tx, rx) = mpsc::channel();
+        h.tx.send(ShardMsg::Drain(tx)).unwrap();
+        let delta = rx.recv().unwrap();
+        assert_eq!(delta.shard, 3);
+        assert_eq!(delta.ops, 5);
+        assert_eq!(delta.sketch.count(), 3.0);
+
+        // Drain resets: the next delta only holds newer data.
+        h.tx.send(ShardMsg::Ingest(vec![10.0])).unwrap();
+        let (tx, rx) = mpsc::channel();
+        h.tx.send(ShardMsg::Drain(tx)).unwrap();
+        let delta = rx.recv().unwrap();
+        assert_eq!(delta.ops, 1);
+        assert_eq!(delta.sketch.count(), 1.0);
+
+        drop(h.tx);
+        h.join.join().unwrap();
+    }
+
+    #[test]
+    fn non_finite_values_are_dropped_not_fatal() {
+        let h = spawn_shard(0, 0.01, 256, 8).unwrap();
+        h.tx.send(ShardMsg::Ingest(vec![1.0, f64::NAN, f64::INFINITY, 2.0]))
+            .unwrap();
+        h.tx.send(ShardMsg::Update(vec![
+            (3.0, 1.0),
+            (f64::NEG_INFINITY, 1.0),
+            (4.0, f64::NAN),
+        ]))
+        .unwrap();
+        let (tx, rx) = mpsc::channel();
+        h.tx.send(ShardMsg::Drain(tx)).unwrap();
+        let delta = rx.recv().unwrap();
+        // Only {1.0, 2.0, 3.0} applied; the worker survived.
+        assert_eq!(delta.ops, 3);
+        assert_eq!(delta.sketch.count(), 3.0);
+        drop(h.tx);
+        h.join.join().unwrap();
+    }
+
+    #[test]
+    fn spawn_rejects_bad_parameters() {
+        assert!(spawn_shard(0, 2.0, 256, 8).is_err());
+        assert!(spawn_shard(0, 0.01, 1, 8).is_err());
+    }
+}

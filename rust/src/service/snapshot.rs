@@ -1,0 +1,142 @@
+//! Epoch-stamped immutable query views.
+//!
+//! A [`Snapshot`] is what the coordinator publishes after every epoch and
+//! what every query reads: a merged sketch plus provenance (epoch number,
+//! lifetime operation count, window coverage). Snapshots are immutable —
+//! queries on one are plain reads with no synchronization, and a handle
+//! stays valid (and answers consistently) no matter how far the service
+//! advances underneath it.
+
+use crate::sketch::{DenseStore, SketchError, UddSketch};
+
+/// An immutable service snapshot: the merged sketch as of one epoch.
+#[derive(Debug, Clone)]
+pub struct Snapshot {
+    epoch: u64,
+    sketch: UddSketch<DenseStore>,
+    ops: u64,
+    window: Option<(u64, u64)>,
+}
+
+impl Snapshot {
+    /// Build a snapshot (coordinator only).
+    pub(crate) fn new(
+        epoch: u64,
+        sketch: UddSketch<DenseStore>,
+        ops: u64,
+        window: Option<(u64, u64)>,
+    ) -> Self {
+        Self {
+            epoch,
+            sketch,
+            ops,
+            window,
+        }
+    }
+
+    /// The pre-first-epoch snapshot.
+    pub(crate) fn empty(alpha: f64, max_buckets: usize) -> Result<Self, SketchError> {
+        Ok(Self {
+            epoch: 0,
+            sketch: UddSketch::new(alpha, max_buckets)?,
+            ops: 0,
+            window: None,
+        })
+    }
+
+    /// Epoch this snapshot was published at (0 = before any epoch).
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Operations (inserts + weighted updates) the service had applied
+    /// when this snapshot was published — lifetime total, even in
+    /// windowed mode.
+    pub fn ops(&self) -> u64 {
+        self.ops
+    }
+
+    /// Inclusive (1-based) epoch range a windowed snapshot covers;
+    /// `None` in cumulative mode or before the first epoch.
+    pub fn window(&self) -> Option<(u64, u64)> {
+        self.window
+    }
+
+    /// The underlying merged sketch.
+    pub fn sketch(&self) -> &UddSketch<DenseStore> {
+        &self.sketch
+    }
+
+    /// Summarized weight (stream length for insert-only workloads).
+    pub fn count(&self) -> f64 {
+        self.sketch.count()
+    }
+
+    /// True when no weight is summarized.
+    pub fn is_empty(&self) -> bool {
+        self.sketch.is_empty()
+    }
+
+    /// Current relative-error bound α (accounts for collapses).
+    pub fn alpha(&self) -> f64 {
+        self.sketch.alpha()
+    }
+
+    /// Non-zero buckets in the merged sketch.
+    pub fn bucket_count(&self) -> usize {
+        self.sketch.bucket_count()
+    }
+
+    /// Estimate the inferior q-quantile (Definition 2).
+    pub fn quantile(&self, q: f64) -> Result<f64, SketchError> {
+        self.sketch.quantile(q)
+    }
+
+    /// Batch quantile queries.
+    pub fn quantiles(&self, qs: &[f64]) -> Result<Vec<f64>, SketchError> {
+        self.sketch.quantiles(qs)
+    }
+
+    /// Estimated CDF at `x`.
+    pub fn cdf(&self, x: f64) -> Result<f64, SketchError> {
+        self.sketch.cdf(x)
+    }
+
+    /// Estimated rank of `x` (items ≤ x).
+    pub fn rank(&self, x: f64) -> f64 {
+        self.sketch.rank(x)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_snapshot_reports_empty() {
+        let s = Snapshot::empty(0.01, 64).unwrap();
+        assert_eq!(s.epoch(), 0);
+        assert_eq!(s.ops(), 0);
+        assert!(s.is_empty());
+        assert_eq!(s.window(), None);
+        assert_eq!(s.quantile(0.5), Err(SketchError::Empty));
+    }
+
+    #[test]
+    fn snapshot_delegates_queries_to_sketch() {
+        let mut sk: UddSketch<DenseStore> = UddSketch::new(0.01, 256).unwrap();
+        for i in 1..=100 {
+            sk.insert(i as f64);
+        }
+        let reference = sk.clone();
+        let snap = Snapshot::new(3, sk, 100, Some((1, 3)));
+        assert_eq!(snap.epoch(), 3);
+        assert_eq!(snap.count(), 100.0);
+        assert_eq!(snap.window(), Some((1, 3)));
+        for q in [0.01, 0.5, 0.99] {
+            assert_eq!(snap.quantile(q).unwrap(), reference.quantile(q).unwrap());
+        }
+        assert_eq!(snap.cdf(50.0).unwrap(), reference.cdf(50.0).unwrap());
+        assert_eq!(snap.rank(50.0), reference.rank(50.0));
+    }
+}

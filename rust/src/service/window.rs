@@ -1,0 +1,152 @@
+//! Sliding-window mode: a ring of per-epoch sub-sketches.
+//!
+//! Inspired by time-bucketed aggregates (timescaledb-toolkit style): each
+//! coordinator epoch produces one immutable sub-sketch; the ring keeps the
+//! most recent `k` of them and merges on demand, so a windowed snapshot
+//! summarizes exactly the last `k` epoch intervals. Eviction is O(1)
+//! (slot overwrite) and the merge cost is bounded by `k · m` buckets.
+
+use crate::sketch::{DenseStore, SketchError, UddSketch};
+
+/// Ring of per-epoch sub-sketches; epoch `e` (0-based) lands in slot
+/// `e % k`.
+#[derive(Debug, Clone)]
+pub struct WindowRing {
+    alpha: f64,
+    max_buckets: usize,
+    slots: Vec<UddSketch<DenseStore>>,
+    /// Epochs absorbed so far.
+    epochs: u64,
+}
+
+impl WindowRing {
+    /// A ring of `slots` intervals with the service's sketch parameters.
+    pub fn new(slots: usize, alpha: f64, max_buckets: usize) -> Result<Self, SketchError> {
+        assert!(slots > 0, "window ring needs at least one slot");
+        let mut v = Vec::with_capacity(slots);
+        for _ in 0..slots {
+            v.push(UddSketch::new(alpha, max_buckets)?);
+        }
+        Ok(Self {
+            alpha,
+            max_buckets,
+            slots: v,
+            epochs: 0,
+        })
+    }
+
+    /// Ring capacity in epochs.
+    pub fn slots(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Epochs absorbed so far.
+    pub fn epochs(&self) -> u64 {
+        self.epochs
+    }
+
+    /// Slots currently holding live epochs (`min(epochs, k)`).
+    pub fn live(&self) -> usize {
+        self.slots.len().min(self.epochs as usize)
+    }
+
+    /// Inclusive range of (1-based) epochs the ring covers, or `None`
+    /// before the first epoch.
+    pub fn coverage(&self) -> Option<(u64, u64)> {
+        if self.epochs == 0 {
+            None
+        } else {
+            let hi = self.epochs;
+            let lo = hi - (self.live() as u64 - 1);
+            Some((lo, hi))
+        }
+    }
+
+    /// Record one epoch's merged delta, evicting whatever the target slot
+    /// held `k` epochs ago.
+    pub fn push_epoch(&mut self, delta: UddSketch<DenseStore>) {
+        let k = (self.epochs as usize) % self.slots.len();
+        self.slots[k] = delta;
+        self.epochs += 1;
+    }
+
+    /// Merge the live slots into one window aggregate (on demand; the
+    /// slots themselves stay untouched).
+    pub fn merged(&self) -> Result<UddSketch<DenseStore>, SketchError> {
+        let mut out = UddSketch::new(self.alpha, self.max_buckets)?;
+        for s in self.slots.iter().take(self.live()) {
+            out.merge(s)?;
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn delta(values: &[f64]) -> UddSketch<DenseStore> {
+        let mut s = UddSketch::new(0.01, 256).unwrap();
+        s.extend(values);
+        s
+    }
+
+    #[test]
+    fn ring_covers_last_k_epochs() {
+        let mut ring = WindowRing::new(3, 0.01, 256).unwrap();
+        assert_eq!(ring.coverage(), None);
+        assert!(ring.merged().unwrap().is_empty());
+
+        for e in 1..=5u64 {
+            ring.push_epoch(delta(&[e as f64; 10]));
+        }
+        assert_eq!(ring.epochs(), 5);
+        assert_eq!(ring.live(), 3);
+        assert_eq!(ring.coverage(), Some((3, 5)));
+
+        // Window holds epochs 3..=5: 30 items, values {3,4,5}.
+        let w = ring.merged().unwrap();
+        assert_eq!(w.count(), 30.0);
+        let lo = w.quantile(0.0).unwrap();
+        assert!((lo - 3.0).abs() <= 0.01 * 3.0 + 1e-9, "oldest live epoch evicted wrongly: {lo}");
+        let hi = w.quantile(1.0).unwrap();
+        assert!((hi - 5.0).abs() <= 0.01 * 5.0 + 1e-9);
+    }
+
+    #[test]
+    fn partial_ring_merges_only_live_slots() {
+        let mut ring = WindowRing::new(4, 0.01, 256).unwrap();
+        ring.push_epoch(delta(&[1.0, 2.0]));
+        ring.push_epoch(delta(&[3.0]));
+        assert_eq!(ring.live(), 2);
+        assert_eq!(ring.coverage(), Some((1, 2)));
+        assert_eq!(ring.merged().unwrap().count(), 3.0);
+    }
+
+    #[test]
+    fn merged_equals_sequential_over_window() {
+        let mut ring = WindowRing::new(2, 0.001, 512).unwrap();
+        let a: Vec<f64> = (1..=500).map(|i| i as f64).collect();
+        let b: Vec<f64> = (501..=900).map(|i| i as f64).collect();
+        let c: Vec<f64> = (901..=1000).map(|i| i as f64).collect();
+        ring.push_epoch(delta_with(&a));
+        ring.push_epoch(delta_with(&b));
+        ring.push_epoch(delta_with(&c));
+
+        let mut seq: UddSketch<DenseStore> = UddSketch::new(0.001, 512).unwrap();
+        seq.extend(&b);
+        seq.extend(&c);
+
+        let w = ring.merged().unwrap();
+        assert_eq!(w.count(), seq.count());
+        for q in [0.01, 0.5, 0.99] {
+            assert_eq!(w.quantile(q).unwrap(), seq.quantile(q).unwrap(), "q={q}");
+        }
+    }
+
+    fn delta_with(values: &[f64]) -> UddSketch<DenseStore> {
+        let mut s = UddSketch::new(0.001, 512).unwrap();
+        s.extend(values);
+        s
+    }
+}

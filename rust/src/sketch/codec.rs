@@ -21,21 +21,33 @@ const MAGIC: &[u8; 4] = b"UDDS";
 const VERSION: u8 = 1;
 
 /// Encoding/decoding errors.
-#[derive(Debug, thiserror::Error, PartialEq)]
+///
+/// (`Display` is hand-written — thiserror is unavailable offline,
+/// DESIGN.md §6.)
+#[derive(Debug, Clone, PartialEq)]
 pub enum CodecError {
     /// Frame too short or structurally invalid.
-    #[error("truncated frame at byte {0}")]
     Truncated(usize),
     /// Bad magic bytes.
-    #[error("bad magic (not a DUDDSketch frame)")]
     BadMagic,
     /// Unsupported version byte.
-    #[error("unsupported frame version {0}")]
     BadVersion(u8),
     /// Decoded parameters failed sketch validation.
-    #[error("invalid sketch parameters: {0}")]
     BadParams(String),
 }
+
+impl std::fmt::Display for CodecError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CodecError::Truncated(pos) => write!(f, "truncated frame at byte {pos}"),
+            CodecError::BadMagic => write!(f, "bad magic (not a DUDDSketch frame)"),
+            CodecError::BadVersion(v) => write!(f, "unsupported frame version {v}"),
+            CodecError::BadParams(msg) => write!(f, "invalid sketch parameters: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for CodecError {}
 
 struct Reader<'a> {
     buf: &'a [u8],

@@ -25,27 +25,50 @@ pub use store::{collapsed_index, DenseStore, SparseStore, Store, VecStore};
 pub use uddsketch::UddSketch;
 
 /// Errors surfaced by sketch construction and queries.
-#[derive(Debug, thiserror::Error, PartialEq)]
+///
+/// (`Display` is hand-written — thiserror is unavailable offline,
+/// DESIGN.md §6.)
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub enum SketchError {
     /// α must lie in (0, 1).
-    #[error("alpha must be in (0,1), got {0}")]
     InvalidAlpha(f64),
     /// The bucket budget must allow at least one collapse pair.
-    #[error("max buckets must be >= 2, got {0}")]
     InvalidBuckets(usize),
     /// Quantile parameter out of [0, 1].
-    #[error("quantile q must be in [0,1], got {0}")]
     InvalidQuantile(f64),
     /// Query on an empty sketch.
-    #[error("sketch is empty")]
     Empty,
     /// Merging sketches with different initial α lineages.
-    #[error("incompatible sketches: alpha0 {0} vs {1}")]
     IncompatibleAlpha(f64, f64),
     /// Value outside the sketch's supported domain.
-    #[error("value {0} not representable (supported domain: finite reals)")]
     UnsupportedValue(f64),
 }
+
+impl std::fmt::Display for SketchError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SketchError::InvalidAlpha(a) => {
+                write!(f, "alpha must be in (0,1), got {a}")
+            }
+            SketchError::InvalidBuckets(m) => {
+                write!(f, "max buckets must be >= 2, got {m}")
+            }
+            SketchError::InvalidQuantile(q) => {
+                write!(f, "quantile q must be in [0,1], got {q}")
+            }
+            SketchError::Empty => write!(f, "sketch is empty"),
+            SketchError::IncompatibleAlpha(a, b) => {
+                write!(f, "incompatible sketches: alpha0 {a} vs {b}")
+            }
+            SketchError::UnsupportedValue(x) => write!(
+                f,
+                "value {x} not representable (supported domain: finite reals)"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for SketchError {}
 
 /// The logarithmic bucket mapping shared by DDSketch and UDDSketch.
 ///

@@ -95,7 +95,18 @@ pub struct DenseStore {
     offset: i64,
     nonzero: usize,
     total: f64,
+    /// Deletes that zeroed a bucket since the last compaction check;
+    /// every [`COMPACT_CHECK_PERIOD`] such events the window is
+    /// re-anchored if the live span occupies a small fraction of it.
+    shrink_ticks: usize,
 }
+
+/// Freed-bucket events between automatic compaction checks (amortizes the
+/// O(window) span scan).
+const COMPACT_CHECK_PERIOD: usize = 64;
+
+/// Windows smaller than this are never worth re-anchoring.
+const COMPACT_MIN_LEN: usize = 64;
 
 impl DenseStore {
     fn slot(&self, i: i64) -> Option<usize> {
@@ -136,6 +147,45 @@ impl DenseStore {
     pub fn raw(&self) -> (i64, &[f64]) {
         (self.offset, &self.counts)
     }
+
+    #[inline]
+    fn note_freed_bucket(&mut self) {
+        self.shrink_ticks += 1;
+        if self.shrink_ticks >= COMPACT_CHECK_PERIOD {
+            self.shrink_ticks = 0;
+            self.compact();
+        }
+    }
+
+    /// Re-anchor the contiguous window onto the live index span when the
+    /// allocation has grown far past it. Long-lived turnstile shards
+    /// (service ingest, churn rejoin) would otherwise hold a
+    /// monotonically grown `Vec<f64>` after collapses/deletes drive the
+    /// edge buckets to zero. No-op while the window is small or at least
+    /// a quarter full; runs automatically every
+    /// [`COMPACT_CHECK_PERIOD`] freed buckets.
+    pub fn compact(&mut self) {
+        if self.counts.len() < COMPACT_MIN_LEN {
+            return;
+        }
+        if self.nonzero == 0 {
+            self.counts = Vec::new();
+            self.offset = 0;
+            return;
+        }
+        let lo = self.min_index().expect("nonzero > 0");
+        let hi = self.max_index().expect("nonzero > 0");
+        let span = (hi - lo + 1) as usize;
+        if self.counts.len() < 4 * span + 16 {
+            return;
+        }
+        let mut next = vec![0.0; span + 8];
+        for (k, slot) in next[4..4 + span].iter_mut().enumerate() {
+            *slot = self.get(lo + k as i64);
+        }
+        self.counts = next;
+        self.offset = lo - 4;
+    }
 }
 
 impl Store for DenseStore {
@@ -161,7 +211,10 @@ impl Store for DenseStore {
         self.total += after - before;
         match (before != 0.0, after != 0.0) {
             (false, true) => self.nonzero += 1,
-            (true, false) => self.nonzero -= 1,
+            (true, false) => {
+                self.nonzero -= 1;
+                self.note_freed_bucket();
+            }
             _ => {}
         }
     }
@@ -265,6 +318,7 @@ impl Store for DenseStore {
         self.offset = 0;
         self.nonzero = 0;
         self.total = 0.0;
+        self.shrink_ticks = 0;
     }
 }
 
@@ -706,6 +760,80 @@ mod tests {
         assert_eq!(s.min_index(), Some(-1000));
         assert_eq!(s.max_index(), Some(1000));
         assert_eq!(s.get(0), 1.0);
+    }
+
+    #[test]
+    fn dense_compact_reanchors_window() {
+        let mut s = DenseStore::empty();
+        for i in 0..4096i64 {
+            s.add(i, 1.0);
+        }
+        let grown = s.raw().1.len();
+        assert!(grown >= 4096);
+        for i in 0..4096i64 {
+            if !(2000..2010).contains(&i) {
+                s.add(i, -1.0);
+            }
+        }
+        assert_eq!(s.nonzero(), 10);
+        s.compact();
+        let (offset, counts) = s.raw();
+        assert!(
+            counts.len() <= 10 + 8,
+            "window not re-anchored: len {}",
+            counts.len()
+        );
+        assert!(offset <= 2000);
+        for i in 2000..2010i64 {
+            assert_eq!(s.get(i), 1.0);
+        }
+        assert_eq!(s.total(), 10.0);
+        assert_eq!(s.min_index(), Some(2000));
+        assert_eq!(s.max_index(), Some(2009));
+        // Still fully usable after re-anchoring.
+        s.add(-500, 2.0);
+        s.add(9000, 3.0);
+        assert_eq!(s.nonzero(), 12);
+        assert_eq!(s.total(), 15.0);
+    }
+
+    #[test]
+    fn dense_compacts_automatically_under_turnstile_churn() {
+        let mut s = DenseStore::empty();
+        for i in 0..4096i64 {
+            s.add(i, 1.0);
+        }
+        let grown = s.raw().1.len();
+        // Retire the stream from the top down (sliding-low-watermark
+        // pattern); the periodic check must shrink the allocation without
+        // any explicit compact() call.
+        for i in (64..4096i64).rev() {
+            s.add(i, -1.0);
+        }
+        assert_eq!(s.nonzero(), 64);
+        let len = s.raw().1.len();
+        assert!(
+            len < grown / 4,
+            "automatic compaction missing: len {len} vs grown {grown}"
+        );
+        assert_eq!(s.total(), 64.0);
+        assert_eq!(s.entries().len(), 64);
+    }
+
+    #[test]
+    fn dense_compact_on_empty_store_resets_allocation() {
+        let mut s = DenseStore::empty();
+        for i in 0..1024i64 {
+            s.add(i, 1.0);
+        }
+        for i in 0..1024i64 {
+            s.add(i, -1.0);
+        }
+        s.compact();
+        assert_eq!(s.raw().1.len(), 0);
+        assert!(s.is_empty());
+        s.add(7, 1.0);
+        assert_eq!(s.get(7), 1.0);
     }
 
     #[test]

@@ -79,6 +79,31 @@ fn quantiles_subcommand_generated_data() {
 }
 
 #[test]
+fn serve_bench_runs_end_to_end() {
+    let out = bin()
+        .args([
+            "serve-bench",
+            "--dataset",
+            "exponential",
+            "--items",
+            "20000",
+            "--shards",
+            "2",
+            "batch=512",
+        ])
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "stderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("serve-bench: dataset=exponential"), "{text}");
+    assert!(text.contains("worst-rel-diff"), "{text}");
+}
+
+#[test]
 fn info_reports_defaults() {
     let out = bin().arg("info").output().unwrap();
     assert!(out.status.success());

@@ -1,0 +1,235 @@
+//! Integration: the sharded ingest + snapshot-query service against the
+//! sequential reference.
+//!
+//! The load-bearing guarantee (mergeability, Definition 7): a service
+//! snapshot answers quantile queries **identically** to one sequential
+//! `UddSketch` fed the same stream — sharding, batching, epoch folds,
+//! and collapse-lineage alignment change nothing — and therefore carries
+//! the same α relative-value-error guarantee.
+
+use duddsketch::config::ServiceConfig;
+use duddsketch::data::{peer_dataset, DatasetKind};
+use duddsketch::metrics::relative_error;
+use duddsketch::rng::default_rng;
+use duddsketch::service::QuantileService;
+use duddsketch::sketch::{ExactQuantiles, UddSketch};
+use std::time::Duration;
+
+const ACCEPT_QS: [f64; 3] = [0.01, 0.5, 0.99];
+
+fn cfg(shards: usize) -> ServiceConfig {
+    let mut c = ServiceConfig::default();
+    c.shards = shards;
+    c.batch_size = 512;
+    c
+}
+
+/// Acceptance: for each data workload, ingest through 4 shards across
+/// several epochs; the final snapshot's quantiles equal the sequential
+/// sketch's at q ∈ {0.01, 0.5, 0.99}, and both honour the α bound vs the
+/// exact oracle.
+#[test]
+fn snapshot_quantiles_equal_sequential_sketch() {
+    for kind in [
+        DatasetKind::Uniform,
+        DatasetKind::Exponential,
+        DatasetKind::Adversarial,
+        DatasetKind::Normal,
+    ] {
+        let master = default_rng(42);
+        let data = peer_dataset(kind, 0, 40_000, &master);
+
+        let mut seq: UddSketch = UddSketch::new(0.001, 1024).unwrap();
+        seq.extend(&data);
+
+        let svc = QuantileService::start(cfg(4)).unwrap();
+        let mut w = svc.writer();
+        // Several epochs: flush mid-stream so the fold path (delta merge +
+        // accumulator) is exercised, not just one big drain.
+        for chunk in data.chunks(9_000) {
+            w.insert_batch(chunk);
+            w.flush();
+            svc.flush();
+        }
+        drop(w);
+        let snap = svc.shutdown();
+
+        assert_eq!(snap.count(), data.len() as f64, "{kind:?}: lost items");
+        assert_eq!(
+            snap.alpha(),
+            seq.alpha(),
+            "{kind:?}: collapse lineages diverged"
+        );
+        let exact = ExactQuantiles::new(&data);
+        for q in ACCEPT_QS {
+            let s = snap.quantile(q).unwrap();
+            let t = seq.quantile(q).unwrap();
+            assert_eq!(s, t, "{kind:?} q={q}: service {s} vs sequential {t}");
+            // Same α guarantee as the sequential algorithm.
+            let truth = exact.quantile(q).unwrap();
+            let re = relative_error(s, truth);
+            assert!(
+                re <= snap.alpha() + 1e-9,
+                "{kind:?} q={q}: re {re} > alpha {}",
+                snap.alpha()
+            );
+        }
+    }
+}
+
+/// Concurrent producers: the union stream is what the snapshot
+/// summarizes, independent of interleaving (permutation invariance).
+#[test]
+fn concurrent_writers_fold_exactly() {
+    let master = default_rng(7);
+    let parts: Vec<Vec<f64>> = (0..6)
+        .map(|k| peer_dataset(DatasetKind::Exponential, k, 10_000, &master))
+        .collect();
+
+    let mut seq: UddSketch = UddSketch::new(0.001, 1024).unwrap();
+    for p in &parts {
+        seq.extend(p);
+    }
+
+    let svc = QuantileService::start(cfg(3)).unwrap();
+    std::thread::scope(|scope| {
+        for p in &parts {
+            let mut w = svc.writer();
+            scope.spawn(move || {
+                w.insert_batch(p);
+                w.flush();
+            });
+        }
+    });
+    let snap = svc.flush();
+    assert_eq!(snap.count(), 60_000.0);
+    for q in ACCEPT_QS {
+        assert_eq!(snap.quantile(q).unwrap(), seq.quantile(q).unwrap(), "q={q}");
+    }
+    svc.shutdown();
+}
+
+/// Turnstile deletes through the sharded path: a delete may land on a
+/// different shard than its insert; weights still cancel exactly in the
+/// epoch fold.
+#[test]
+fn turnstile_deletes_match_sequential() {
+    let master = default_rng(11);
+    let data = peer_dataset(DatasetKind::Uniform, 0, 20_000, &master);
+    let (keep, gone) = data.split_at(12_000);
+
+    let mut seq: UddSketch = UddSketch::new(0.001, 4096).unwrap();
+    seq.extend(&data);
+    for &x in gone {
+        seq.delete(x);
+    }
+
+    let mut c = cfg(4);
+    c.max_buckets = 4096;
+    let svc = QuantileService::start(c).unwrap();
+    let mut w = svc.writer();
+    w.insert_batch(&data);
+    w.flush();
+    svc.flush(); // epoch boundary between inserts and deletes
+    for &x in gone {
+        w.delete(x);
+    }
+    w.flush();
+    drop(w);
+    let snap = svc.shutdown();
+
+    assert_eq!(snap.count(), keep.len() as f64);
+    for q in ACCEPT_QS {
+        assert_eq!(snap.quantile(q).unwrap(), seq.quantile(q).unwrap(), "q={q}");
+    }
+}
+
+/// Sliding-window mode serves exactly the last `k` epoch intervals.
+#[test]
+fn windowed_snapshot_covers_recent_epochs_only() {
+    let master = default_rng(13);
+    let data = peer_dataset(DatasetKind::Exponential, 0, 25_000, &master);
+    let chunks: Vec<&[f64]> = data.chunks(5_000).collect();
+    assert_eq!(chunks.len(), 5);
+
+    let mut c = cfg(2);
+    c.window_slots = 3;
+    let svc = QuantileService::start(c).unwrap();
+    let mut w = svc.writer();
+    for chunk in &chunks {
+        w.insert_batch(chunk);
+        w.flush();
+        svc.flush();
+    }
+    drop(w);
+    let snap = svc.snapshot();
+
+    // Window = epochs 3..=5 = chunks[2..5].
+    assert_eq!(snap.window(), Some((3, 5)));
+    let mut seq: UddSketch = UddSketch::new(0.001, 1024).unwrap();
+    for chunk in &chunks[2..] {
+        seq.extend(chunk);
+    }
+    assert_eq!(snap.count(), 15_000.0);
+    for q in ACCEPT_QS {
+        assert_eq!(snap.quantile(q).unwrap(), seq.quantile(q).unwrap(), "q={q}");
+    }
+    // Lifetime ops still counts evicted epochs.
+    assert_eq!(snap.ops(), 25_000);
+    svc.shutdown();
+}
+
+/// End-to-end concurrency: background epochs publish while readers query
+/// and writers ingest; epochs advance monotonically and every snapshot
+/// is internally consistent.
+#[test]
+fn readers_never_block_and_epochs_advance() {
+    let mut c = cfg(2);
+    c.epoch_interval_ms = 5;
+    let svc = QuantileService::start(c).unwrap();
+
+    let master = default_rng(17);
+    let data = peer_dataset(DatasetKind::Uniform, 0, 50_000, &master);
+
+    std::thread::scope(|scope| {
+        let svc_ref = &svc;
+        // Readers: epoch must never go backwards; counts never negative.
+        let mut readers = Vec::new();
+        for _ in 0..3 {
+            readers.push(scope.spawn(move || {
+                let mut last_epoch = 0u64;
+                for _ in 0..2_000 {
+                    let snap = svc_ref.snapshot();
+                    assert!(snap.epoch() >= last_epoch, "epoch went backwards");
+                    last_epoch = snap.epoch();
+                    if !snap.is_empty() {
+                        let p50 = snap.quantile(0.5).unwrap();
+                        assert!(p50.is_finite() && p50 > 0.0);
+                    }
+                }
+                last_epoch
+            }));
+        }
+        // Writer alongside.
+        let mut w = svc_ref.writer();
+        w.insert_batch(&data);
+        w.flush();
+        drop(w);
+        for r in readers {
+            r.join().unwrap();
+        }
+    });
+
+    // Wait (bounded) for the ticker to fold everything.
+    let deadline = std::time::Instant::now() + Duration::from_secs(10);
+    while svc.snapshot().count() < 50_000.0 {
+        assert!(
+            std::time::Instant::now() < deadline,
+            "ticker never folded the stream (count {})",
+            svc.snapshot().count()
+        );
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    let fin = svc.shutdown();
+    assert_eq!(fin.count(), 50_000.0);
+}

@@ -5,7 +5,8 @@ use duddsketch::gossip::PeerState;
 use duddsketch::metrics::relative_error;
 use duddsketch::rng::Rng;
 use duddsketch::sketch::{
-    theorem2_bound, DdSketch, ExactQuantiles, Store, UddSketch,
+    decode_sketch, encode_sketch, theorem2_bound, DdSketch, ExactQuantiles,
+    SparseStore, Store, UddSketch,
 };
 use duddsketch::util::testkit::{forall, forall_vec, gen};
 
@@ -248,6 +249,153 @@ fn prop_quantile_monotone() {
                     return Err(format!("q={q}: {est} < prev {prev}"));
                 }
                 prev = est;
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Invariant: the wire codec roundtrips any turnstile history bit-exactly
+/// — inserts, deletes, negatives, zeros, and collapse lineages. The
+/// service snapshot path (and every gossip frame) leans on this.
+#[test]
+fn prop_codec_roundtrip_turnstile() {
+    forall(
+        "codec-turnstile",
+        SEED + 8,
+        32,
+        |r| {
+            let xs = gen::log_uniform_vec(r, 2000, 6.0, 3.0);
+            let n_del = r.index(xs.len());
+            (xs, n_del)
+        },
+        |(xs, n_del)| {
+            let mut s: UddSketch<SparseStore> = UddSketch::new(0.001, 64).unwrap();
+            s.extend(xs);
+            s.insert(0.0);
+            s.insert(-7.25);
+            for &x in &xs[..*n_del] {
+                s.delete(x);
+            }
+            let buf = encode_sketch(&s);
+            let d: UddSketch<SparseStore> =
+                decode_sketch(&buf).map_err(|e| e.to_string())?;
+            if d.collapses() != s.collapses() {
+                return Err(format!(
+                    "collapse depth {} != {}",
+                    d.collapses(),
+                    s.collapses()
+                ));
+            }
+            if d.zero_weight() != s.zero_weight() {
+                return Err("zero weight differs".into());
+            }
+            if d.positive_store().entries() != s.positive_store().entries() {
+                return Err("positive entries differ".into());
+            }
+            if d.negative_store().entries() != s.negative_store().entries() {
+                return Err("negative entries differ".into());
+            }
+            for q in [0.01, 0.5, 0.99] {
+                let a = d.quantile(q).map_err(|e| e.to_string())?;
+                let b = s.quantile(q).map_err(|e| e.to_string())?;
+                if a != b {
+                    return Err(format!("q={q}: decoded {a} != original {b}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Invariant: merging remains exact in the turnstile model — sketches
+/// carrying deletes merge (plain and gossip-weighted) to exactly the
+/// union-processed state. The service's epoch fold is this operation.
+#[test]
+fn prop_merge_weighted_under_turnstile() {
+    forall(
+        "merge-turnstile",
+        SEED + 9,
+        24,
+        |r| {
+            let d1 = gen::uniform_vec(r, 1000, 1.0, 1e4);
+            let d2 = gen::uniform_vec(r, 1000, 1.0, 1e4);
+            let k1 = r.index(d1.len());
+            let k2 = r.index(d2.len());
+            (d1, d2, k1, k2)
+        },
+        |(d1, d2, k1, k2)| {
+            // Budget large enough that no collapse occurs: exact equality
+            // is the contract here (collapse-timing differences are
+            // covered by the insert-only merge property above).
+            let build = |data: &[f64], dels: usize| {
+                let mut s: UddSketch = UddSketch::new(0.01, 4096).unwrap();
+                s.extend(data);
+                for &x in &data[..dels] {
+                    s.delete(x);
+                }
+                s
+            };
+            let s1 = build(d1, *k1);
+            let s2 = build(d2, *k2);
+
+            let mut merged = s1.clone();
+            merged.merge(&s2).map_err(|e| e.to_string())?;
+
+            let mut union: UddSketch = UddSketch::new(0.01, 4096).unwrap();
+            union.extend(d1);
+            union.extend(d2);
+            for &x in &d1[..*k1] {
+                union.delete(x);
+            }
+            for &x in &d2[..*k2] {
+                union.delete(x);
+            }
+
+            if (merged.count() - union.count()).abs() > 1e-9 {
+                return Err(format!(
+                    "count {} != union {}",
+                    merged.count(),
+                    union.count()
+                ));
+            }
+            let em = merged.positive_store().entries();
+            let eu = union.positive_store().entries();
+            if em.len() != eu.len()
+                || em
+                    .iter()
+                    .zip(&eu)
+                    .any(|((i, c), (j, d))| i != j || (c - d).abs() > 1e-9)
+            {
+                return Err("merged entries differ from union".into());
+            }
+            for q in [0.01, 0.5, 0.99] {
+                let a = merged.quantile(q).map_err(|e| e.to_string())?;
+                let b = union.quantile(q).map_err(|e| e.to_string())?;
+                if a != b {
+                    return Err(format!("q={q}: merged {a} != union {b}"));
+                }
+            }
+
+            // Gossip averaging on turnstile state: (0.5, 0.5) halves every
+            // bucket of the union exactly.
+            let mut avg = s1.clone();
+            avg.merge_weighted(&s2, 0.5, 0.5).map_err(|e| e.to_string())?;
+            if (avg.count() - 0.5 * union.count()).abs() > 1e-9 {
+                return Err(format!(
+                    "avg count {} != half union {}",
+                    avg.count(),
+                    0.5 * union.count()
+                ));
+            }
+            let ea = avg.positive_store().entries();
+            if ea.len() != eu.len()
+                || ea
+                    .iter()
+                    .zip(&eu)
+                    .any(|((i, c), (j, d))| i != j || (c - 0.5 * d).abs() > 1e-9)
+            {
+                return Err("averaged entries are not half the union".into());
             }
             Ok(())
         },
