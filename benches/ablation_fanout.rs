@@ -2,6 +2,9 @@
 //! user-defined number of neighbours"). Measures rounds-to-convergence
 //! and per-round cost for fan-out ∈ {1, 2, 4}.
 
+// Plain-data configs are mutated after `default()` on purpose (see lib.rs).
+#![allow(clippy::field_reassign_with_default)]
+
 use duddsketch::config::ExperimentConfig;
 use duddsketch::data::DatasetKind;
 use duddsketch::experiments::run_with_snapshots;

@@ -1,0 +1,74 @@
+//! Per-round cost of the continuous service gossip loop: the refresh
+//! check + fan-out exchange + per-member view publication, across fleet
+//! sizes — the steady-state overhead a serving fleet pays per epoch tick.
+//!
+//! Also isolates the reseed path (new epoch → rebuild every PeerState
+//! from snapshots), which bounds how fast the loop can track a
+//! fast-epoching service.
+
+// Plain-data configs are mutated after `default()` on purpose (see lib.rs).
+#![allow(clippy::field_reassign_with_default)]
+
+use duddsketch::config::{GossipLoopConfig, ServiceConfig};
+use duddsketch::data::{peer_dataset, DatasetKind};
+use duddsketch::rng::default_rng;
+use duddsketch::service::{GossipLoop, GossipMember, QuantileService};
+use duddsketch::util::bench::{black_box, Bencher};
+use std::sync::Arc;
+
+const ITEMS: usize = 20_000;
+
+/// A fleet of one live service plus `nodes - 1` static peers, seeded and
+/// ready to step.
+fn fleet(nodes: usize) -> (GossipLoop, Arc<QuantileService>) {
+    let master = default_rng(42);
+    let mut cfg = ServiceConfig::default();
+    cfg.shards = 2;
+    let svc = QuantileService::start_shared(cfg).unwrap();
+    let mut w = svc.writer();
+    w.insert_batch(&peer_dataset(DatasetKind::Exponential, 0, ITEMS, &master));
+    w.flush();
+    svc.flush();
+    let mut members = vec![GossipMember::service(svc.clone())];
+    for i in 1..nodes {
+        let data = peer_dataset(DatasetKind::Exponential, i, ITEMS, &master);
+        members.push(GossipMember::from_dataset(&data, 0.001, 1024).unwrap());
+    }
+    let gl = GossipLoop::start(GossipLoopConfig::default(), members).unwrap();
+    (gl, svc)
+}
+
+fn main() {
+    let mut b = Bencher::new();
+
+    for nodes in [4usize, 16, 64] {
+        let (gl, svc) = fleet(nodes);
+        b.case(&format!("loop/steady-round nodes={nodes}"), nodes as u64, || {
+            black_box(gl.step());
+        });
+        drop(gl);
+        if let Ok(s) = Arc::try_unwrap(svc) {
+            s.shutdown();
+        }
+    }
+
+    // Reseed path: every case iteration publishes a fresh epoch first, so
+    // each step pays the full snapshot → PeerState rebuild for the fleet.
+    for nodes in [4usize, 16] {
+        let (gl, svc) = fleet(nodes);
+        let mut w = svc.writer();
+        b.case(&format!("loop/reseed-round nodes={nodes}"), nodes as u64, || {
+            w.insert(1.0);
+            w.flush();
+            svc.flush();
+            black_box(gl.step());
+        });
+        drop(w);
+        drop(gl);
+        if let Ok(s) = Arc::try_unwrap(svc) {
+            s.shutdown();
+        }
+    }
+
+    b.finish("gossip_loop");
+}

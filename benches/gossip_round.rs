@@ -2,6 +2,9 @@
 //! executor (the Layer-1/2 artifact on the request path), across network
 //! sizes — the simulator's end-to-end hot loop.
 
+// Plain-data configs are mutated after `default()` on purpose (see lib.rs).
+#![allow(clippy::field_reassign_with_default)]
+
 use duddsketch::config::{ExecutorKind, ExperimentConfig};
 use duddsketch::data::{all_peer_datasets, DatasetKind};
 use duddsketch::gossip::{Protocol, RoundMode};

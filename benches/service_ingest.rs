@@ -6,6 +6,9 @@
 //! spawn, concurrent writers, epoch fold, shutdown — so the numbers are
 //! end-to-end, not just the shard inner loop.
 
+// Plain-data configs are mutated after `default()` on purpose (see lib.rs).
+#![allow(clippy::field_reassign_with_default)]
+
 use duddsketch::config::ServiceConfig;
 use duddsketch::rng::{default_rng, Rng};
 use duddsketch::service::QuantileService;

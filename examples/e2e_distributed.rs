@@ -17,6 +17,9 @@
 //! make artifacts && cargo run --release --example e2e_distributed
 //! ```
 
+// Plain-data configs are mutated after `default()` on purpose (see lib.rs).
+#![allow(clippy::field_reassign_with_default)]
+
 use duddsketch::config::{ExecutorKind, ExperimentConfig, PAPER_QUANTILES};
 use duddsketch::data::{all_peer_datasets, DatasetKind};
 use duddsketch::experiments::run_with_snapshots;

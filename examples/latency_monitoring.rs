@@ -12,6 +12,9 @@
 //! cargo run --release --example latency_monitoring
 //! ```
 
+// Plain-data configs are mutated after `default()` on purpose (see lib.rs).
+#![allow(clippy::field_reassign_with_default)]
+
 use duddsketch::config::ExperimentConfig;
 use duddsketch::data::DatasetKind;
 use duddsketch::gossip::Protocol;

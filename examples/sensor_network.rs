@@ -7,6 +7,9 @@
 //! cargo run --release --example sensor_network
 //! ```
 
+// Plain-data configs are mutated after `default()` on purpose (see lib.rs).
+#![allow(clippy::field_reassign_with_default)]
+
 use duddsketch::churn::ChurnKind;
 use duddsketch::config::ExperimentConfig;
 use duddsketch::data::DatasetKind;

@@ -5,10 +5,13 @@
 //! cargo run --release --example service_quickstart
 //! ```
 
-use duddsketch::config::ServiceConfig;
+// Plain-data configs are mutated after `default()` on purpose (see lib.rs).
+#![allow(clippy::field_reassign_with_default)]
+
+use duddsketch::config::{GossipLoopConfig, ServiceConfig};
 use duddsketch::gossip::PeerState;
 use duddsketch::rng::{default_rng, Rng};
-use duddsketch::service::{QuantileService, ServicePeer};
+use duddsketch::service::{GossipLoop, GossipMember, QuantileService, ServicePeer};
 use duddsketch::sketch::UddSketch;
 use duddsketch::util::Stopwatch;
 
@@ -87,5 +90,36 @@ fn main() -> anyhow::Result<()> {
 
     svc.shutdown();
     println!("service shut down cleanly");
+
+    // 6. Or let the continuous gossip loop do all of that: a fleet of
+    //    services (here: one live service + two simulated peers) keeps a
+    //    network-converged global view published next to each local
+    //    snapshot — refresh → exchange → serve, every round.
+    let mut cfg = ServiceConfig::default();
+    cfg.shards = 2;
+    let svc = QuantileService::start_shared(cfg)?;
+    let mut w = svc.writer();
+    w.insert_batch(&(1..=4000).map(f64::from).collect::<Vec<_>>());
+    w.flush();
+    svc.flush();
+    let members = vec![
+        GossipMember::service(svc.clone()),
+        GossipMember::from_dataset(&(4001..=8000).map(f64::from).collect::<Vec<_>>(), 0.001, 1024)?,
+        GossipMember::from_dataset(&(8001..=12000).map(f64::from).collect::<Vec<_>>(), 0.001, 1024)?,
+    ];
+    let gl = GossipLoop::start(GossipLoopConfig::default(), members)?;
+    let mut rounds = 0;
+    while !gl.step().converged && rounds < 100 {
+        rounds += 1;
+    }
+    let view = gl.view();
+    println!(
+        "\ngossip loop: {} rounds -> fleet size {}, union length {}, global p50 = {:.6e}",
+        view.round(),
+        view.estimated_peers(),
+        view.estimated_total(),
+        view.query(0.5).map_err(anyhow::Error::msg)?
+    );
+    gl.shutdown();
     Ok(())
 }

@@ -6,6 +6,9 @@
 //! * `run` — one distributed experiment, ARE table per quantile.
 //! * `figure` — regenerate a paper figure/table (`--list`, `--all`).
 //! * `quantiles` — sequential UDDSketch over a file or generated data.
+//! * `serve-bench` — sharded ingest service throughput vs sequential.
+//! * `serve-gossip` — live ingest + continuous gossip loop, per-round
+//!   convergence metrics, global view verified against the union stream.
 //! * `info` — build/runtime/artifact diagnostics.
 
 use crate::config::ExperimentConfig;
@@ -96,6 +99,15 @@ USAGE:
       count; report throughput vs the sequential baseline and verify the
       snapshot quantiles against it
       keys: alpha m shards batch queue epoch_ms window
+  duddsketch serve-gossip [--dataset NAME] [--items N] [--nodes P]
+            [--rounds R] [--q Q1,Q2,...] [--seed X] [key=value ...]
+      run one live ingest service plus P-1 simulated peers through the
+      continuous gossip loop: ingest lands in chunks between rounds, each
+      round reports exchanges/drift/estimated fleet size, and the final
+      global-view quantiles are verified against a sequential UDDSketch
+      over the union stream
+      keys: serve-bench keys plus gossip_fanout gossip_graph gossip_drift
+            gossip_probes gossip_seed
   duddsketch info
       platform, artifact inventory, defaults
 
@@ -356,6 +368,175 @@ fn cmd_serve_bench(args: &Args) -> Result<String> {
     Ok(out)
 }
 
+fn cmd_serve_gossip(args: &Args) -> Result<String> {
+    let kind: DatasetKind = args
+        .flag("dataset")
+        .unwrap_or("exponential")
+        .parse()
+        .map_err(anyhow::Error::msg)?;
+    let items: usize = args.flag("items").unwrap_or("20000").parse()?;
+    let nodes: usize = args.flag("nodes").unwrap_or("8").parse()?;
+    let rounds: usize = args.flag("rounds").unwrap_or("30").parse()?;
+    let seed: u64 = args.flag("seed").unwrap_or("42").parse()?;
+    let qs: Vec<f64> = args
+        .flag("q")
+        .unwrap_or("0.5,0.9,0.99")
+        .split(',')
+        .map(|s| s.trim().parse::<f64>())
+        .collect::<Result<_, _>>()?;
+    let mut cfg = crate::config::ServiceConfig::default();
+    for (k, v) in &args.overrides {
+        cfg.set(k, v).map_err(anyhow::Error::msg)?;
+    }
+    cfg.validate().map_err(anyhow::Error::msg)?;
+    if nodes < 2 {
+        bail!("serve-gossip: need --nodes >= 2");
+    }
+    if items == 0 {
+        bail!("serve-gossip: need --items >= 1");
+    }
+    if rounds == 0 {
+        bail!("serve-gossip: need --rounds >= 1");
+    }
+    if cfg.window_slots > 0 {
+        bail!(
+            "serve-gossip: windowed mode evicts epochs, so the union-stream \
+             verification is undefined — use window=0"
+        );
+    }
+
+    // One local stream per node, as in the paper's per-peer workloads.
+    let master = crate::rng::default_rng(seed);
+    let datasets: Vec<Vec<f64>> = (0..nodes)
+        .map(|i| crate::data::peer_dataset(kind, i, items, &master))
+        .collect();
+
+    // Sequential reference over the union stream — the convergence target.
+    let mut seq: UddSketch =
+        UddSketch::new(cfg.alpha, cfg.max_buckets).map_err(anyhow::Error::msg)?;
+    for d in &datasets {
+        seq.extend(d);
+    }
+
+    // Node 0 is a live ingest service; nodes 1..P are simulated remote
+    // peers with their streams pre-summarized.
+    let svc = crate::service::QuantileService::start_shared(cfg.clone())?;
+    let mut members = vec![crate::service::GossipMember::service(svc.clone())];
+    for d in &datasets[1..] {
+        members.push(crate::service::GossipMember::from_dataset(
+            d,
+            cfg.alpha,
+            cfg.max_buckets,
+        )?);
+    }
+    let mut gcfg = cfg.gossip.clone();
+    gcfg.round_interval_ms = 0; // the CLI is the clock: one step per row
+    if args.has("q") {
+        // An explicit --q list drives the drift metric too; otherwise a
+        // gossip_probes= override (or the default) stays in charge.
+        gcfg.probe_quantiles = qs.clone();
+    }
+    let gl = crate::service::GossipLoop::start(gcfg.clone(), members)?;
+
+    let mut out = format!(
+        "serve-gossip: dataset={} items/node={} nodes={} rounds<={} {}\n",
+        kind.name(),
+        items,
+        nodes,
+        rounds,
+        gcfg.summary()
+    );
+    out.push_str(&format!("  service: {}\n", cfg.summary()));
+    out.push_str("  round  gen  reseed  exchanges  KiB     drift       p-est\n");
+
+    // Live ingest: node 0's stream lands in chunks between rounds, so the
+    // loop reseeds mid-run exactly as a production fleet would.
+    let chunks: Vec<&[f64]> = datasets[0].chunks(items.div_ceil(4).max(1)).collect();
+    let mut chunk_iter = chunks.iter();
+    {
+        let mut w = svc.writer();
+        for _ in 1..=rounds {
+            if let Some(chunk) = chunk_iter.next() {
+                w.insert_batch(chunk);
+                w.flush();
+                svc.flush();
+            }
+            let r = gl.step();
+            let v = gl.view();
+            out.push_str(&format!(
+                "  {:<5}  {:<3}  {:<6}  {:<9}  {:<6.1}  {:<10.3e}  {}\n",
+                r.round,
+                r.generation,
+                if r.reseeded { "yes" } else { "-" },
+                r.exchanges,
+                r.bytes as f64 / 1024.0,
+                r.drift,
+                v.estimated_peers(),
+            ));
+            if r.converged && chunk_iter.as_slice().is_empty() {
+                break;
+            }
+        }
+        // Rounds exhausted before the stream: finish ingest, then let the
+        // verification phase below reseed and re-converge.
+        for chunk in chunk_iter {
+            w.insert_batch(chunk);
+            w.flush();
+        }
+    }
+    svc.flush();
+
+    // Converge on the final epoch (bounded), then verify the global view
+    // against the sequential union sketch. Three consecutive converged
+    // rounds guard against probe estimates that merely paused in one
+    // bucket while counters were still settling.
+    let mut verify_rounds = 0usize;
+    let mut streak = 0usize;
+    let converged = loop {
+        let r = gl.step();
+        verify_rounds += 1;
+        streak = if r.converged { streak + 1 } else { 0 };
+        if streak >= 3 {
+            break true;
+        }
+        if verify_rounds >= 300 {
+            break false;
+        }
+    };
+    let v = gl.view();
+    out.push_str(&format!(
+        "  final: +{verify_rounds} verify rounds, converged={converged}, \
+         epoch={}, p-est={}, N-est={}\n",
+        v.epoch(),
+        v.estimated_peers(),
+        v.estimated_total(),
+    ));
+    out.push_str("  q       global-view       sequential        rel-diff\n");
+    let alpha_bound = seq.alpha();
+    let mut worst = 0.0f64;
+    for &q in &qs {
+        let est = v.query(q).map_err(anyhow::Error::msg)?;
+        let truth = seq.quantile(q).map_err(anyhow::Error::msg)?;
+        let re = crate::metrics::relative_error(est, truth);
+        worst = worst.max(re);
+        out.push_str(&format!("  {q:<6}  {est:<16.8e}  {truth:<16.8e}  {re:.3e}\n"));
+    }
+    gl.shutdown();
+    if let Ok(svc) = std::sync::Arc::try_unwrap(svc) {
+        svc.shutdown();
+    }
+    if worst > alpha_bound + 1e-9 {
+        bail!(
+            "global view did not converge to the sequential union sketch: \
+             worst rel-diff {worst:.3e} > alpha {alpha_bound:.3e}"
+        );
+    }
+    out.push_str(&format!(
+        "  OK: worst rel-diff {worst:.3e} <= alpha {alpha_bound:.3e}\n"
+    ));
+    Ok(out)
+}
+
 fn cmd_info() -> Result<String> {
     let mut out = String::new();
     out.push_str(&format!(
@@ -393,6 +574,7 @@ pub fn dispatch(args: &Args) -> Result<String> {
         "figure" | "figures" => cmd_figure(args),
         "quantiles" => cmd_quantiles(args),
         "serve-bench" => cmd_serve_bench(args),
+        "serve-gossip" => cmd_serve_gossip(args),
         "info" => cmd_info(),
         "help" | "--help" | "-h" => Ok(USAGE.to_string()),
         other => bail!("unknown command '{other}'\n{USAGE}"),
@@ -509,6 +691,41 @@ mod tests {
         assert!(out.contains("worst-rel-diff"), "{out}");
         // One row per shard count + headers/footer.
         assert!(out.lines().count() >= 6, "{out}");
+    }
+
+    #[test]
+    fn serve_gossip_converges_and_verifies() {
+        let a = args(&[
+            "serve-gossip",
+            "--dataset",
+            "uniform",
+            "--items",
+            "2000",
+            "--nodes",
+            "3",
+            "--rounds",
+            "12",
+            "--q",
+            "0.5,0.99",
+            "batch=256",
+            "shards=2",
+        ]);
+        let out = dispatch(&a).unwrap();
+        assert!(out.contains("serve-gossip"), "{out}");
+        assert!(out.contains("global-view"), "{out}");
+        assert!(out.contains("OK: worst rel-diff"), "{out}");
+        // Live ingest reseeds the fleet at least once mid-run.
+        assert!(out.contains("yes"), "no reseed observed:\n{out}");
+    }
+
+    #[test]
+    fn serve_gossip_rejects_bad_inputs() {
+        let a = args(&["serve-gossip", "--nodes", "1"]);
+        assert!(dispatch(&a).is_err());
+        let a = args(&["serve-gossip", "--items", "100", "window=2"]);
+        assert!(dispatch(&a).is_err());
+        let a = args(&["serve-gossip", "--items", "100", "bogus=1"]);
+        assert!(dispatch(&a).is_err());
     }
 
     #[test]

@@ -16,6 +16,10 @@ pub enum GraphKind {
     WattsStrogatz,
     /// Ring lattice (k=5) — high-diameter worst case for the ablation.
     Ring,
+    /// Complete graph — the natural overlay for small service fleets
+    /// (every peer reachable in one hop; quadratic in edges, so only for
+    /// small n).
+    Complete,
 }
 
 impl GraphKind {
@@ -26,6 +30,7 @@ impl GraphKind {
             GraphKind::ErdosRenyi => "er",
             GraphKind::WattsStrogatz => "ws",
             GraphKind::Ring => "ring",
+            GraphKind::Complete => "complete",
         }
     }
 }
@@ -39,7 +44,10 @@ impl std::str::FromStr for GraphKind {
             "er" | "erdos-renyi" | "erdosrenyi" => Ok(GraphKind::ErdosRenyi),
             "ws" | "watts-strogatz" | "smallworld" => Ok(GraphKind::WattsStrogatz),
             "ring" | "lattice" => Ok(GraphKind::Ring),
-            other => Err(format!("unknown graph '{other}' (expected ba|er|ws|ring)")),
+            "complete" | "full" => Ok(GraphKind::Complete),
+            other => Err(format!(
+                "unknown graph '{other}' (expected ba|er|ws|ring|complete)"
+            )),
         }
     }
 }
@@ -240,6 +248,9 @@ pub struct ServiceConfig {
     /// Sliding-window ring slots, one epoch interval each; 0 serves the
     /// cumulative all-time sketch instead.
     pub window_slots: usize,
+    /// Continuous gossip-loop knobs (used when the service fronts a
+    /// [`GossipLoop`](crate::service::GossipLoop)).
+    pub gossip: GossipLoopConfig,
 }
 
 impl Default for ServiceConfig {
@@ -252,6 +263,7 @@ impl Default for ServiceConfig {
             queue_depth: 64,
             epoch_interval_ms: 0,
             window_slots: 0,
+            gossip: GossipLoopConfig::default(),
         }
     }
 }
@@ -290,6 +302,9 @@ impl ServiceConfig {
             "window_slots" | "window" => {
                 self.window_slots = value.parse().map_err(|_| parse_err(key, value))?
             }
+            _ if key.starts_with("gossip_") => {
+                self.gossip.set(&key["gossip_".len()..], value)?
+            }
             other => return Err(format!("unknown service config key '{other}'")),
         }
         Ok(())
@@ -309,7 +324,7 @@ impl ServiceConfig {
         if self.queue_depth < 1 {
             return Err("queue_depth must be >= 1".into());
         }
-        Ok(())
+        self.gossip.validate()
     }
 
     /// One-line human summary.
@@ -324,6 +339,106 @@ impl ServiceConfig {
             self.queue_depth,
             self.epoch_interval_ms,
             self.window_slots,
+        )
+    }
+}
+
+/// Configuration of the continuous service-driven gossip loop
+/// ([`crate::service::GossipLoop`]): the refresh → exchange → serve cycle
+/// that keeps a fleet of ingest services converged on one global view.
+#[derive(Debug, Clone)]
+pub struct GossipLoopConfig {
+    /// Background round interval in milliseconds; 0 disables the loop
+    /// thread (rounds then run only via `GossipLoop::step`).
+    pub round_interval_ms: u64,
+    /// Neighbours each peer contacts per round (paper default 1).
+    pub fan_out: usize,
+    /// Overlay connecting the loop's members. Service fleets are small,
+    /// so the default is [`GraphKind::Complete`]; the simulation
+    /// topologies work too.
+    pub graph: GraphKind,
+    /// Convergence threshold: the loop reports converged once the
+    /// largest relative drift of the probe-quantile estimates between
+    /// consecutive rounds falls to this value or below.
+    pub convergence_rel: f64,
+    /// Quantiles probed for the drift metric.
+    pub probe_quantiles: Vec<f64>,
+    /// Seed for overlay generation and exchange-partner randomness.
+    pub seed: u64,
+}
+
+impl Default for GossipLoopConfig {
+    fn default() -> Self {
+        Self {
+            round_interval_ms: 0,
+            fan_out: 1,
+            graph: GraphKind::Complete,
+            convergence_rel: 1e-9,
+            probe_quantiles: vec![0.5, 0.9, 0.99],
+            seed: 42,
+        }
+    }
+}
+
+impl GossipLoopConfig {
+    /// Apply one `key=value` assignment (keys as in `serve-gossip`
+    /// overrides, without the `gossip_` prefix).
+    pub fn set(&mut self, key: &str, value: &str) -> Result<(), String> {
+        let parse_err = |k: &str, v: &str| format!("bad value '{v}' for gossip key '{k}'");
+        match key {
+            "round_interval_ms" | "ms" => {
+                self.round_interval_ms =
+                    value.parse().map_err(|_| parse_err(key, value))?
+            }
+            "fan_out" | "fanout" => {
+                self.fan_out = value.parse().map_err(|_| parse_err(key, value))?
+            }
+            "graph" => self.graph = value.parse()?,
+            "convergence_rel" | "drift" => {
+                self.convergence_rel =
+                    value.parse().map_err(|_| parse_err(key, value))?
+            }
+            "probes" | "probe_quantiles" => {
+                let qs: Result<Vec<f64>, _> =
+                    value.split(',').map(|s| s.trim().parse::<f64>()).collect();
+                self.probe_quantiles = qs.map_err(|_| parse_err(key, value))?;
+            }
+            "seed" => self.seed = value.parse().map_err(|_| parse_err(key, value))?,
+            other => return Err(format!("unknown gossip config key '{other}'")),
+        }
+        Ok(())
+    }
+
+    /// Sanity-check parameter ranges.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.fan_out < 1 {
+            return Err("gossip fan_out must be >= 1".into());
+        }
+        if self.convergence_rel.is_nan() || self.convergence_rel < 0.0 {
+            return Err(format!(
+                "gossip convergence_rel must be >= 0, got {}",
+                self.convergence_rel
+            ));
+        }
+        if self.probe_quantiles.is_empty() {
+            return Err("gossip probe_quantiles must be non-empty".into());
+        }
+        if self.probe_quantiles.iter().any(|q| !(0.0..=1.0).contains(q)) {
+            return Err("gossip probe_quantiles must lie in [0,1]".into());
+        }
+        Ok(())
+    }
+
+    /// One-line human summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "round_ms={} fan_out={} graph={} drift<={:e} probes={:?} seed={}",
+            self.round_interval_ms,
+            self.fan_out,
+            self.graph.name(),
+            self.convergence_rel,
+            self.probe_quantiles,
+            self.seed,
         )
     }
 }
@@ -404,6 +519,43 @@ mod tests {
         c.batch_size = 1;
         c.alpha = 1.0;
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn gossip_config_set_and_validate() {
+        let mut c = ServiceConfig::default();
+        c.set("gossip_ms", "25").unwrap();
+        c.set("gossip_fanout", "2").unwrap();
+        c.set("gossip_graph", "complete").unwrap();
+        c.set("gossip_drift", "1e-6").unwrap();
+        c.set("gossip_probes", "0.5, 0.99").unwrap();
+        c.set("gossip_seed", "7").unwrap();
+        assert_eq!(c.gossip.round_interval_ms, 25);
+        assert_eq!(c.gossip.fan_out, 2);
+        assert_eq!(c.gossip.graph, GraphKind::Complete);
+        assert_eq!(c.gossip.convergence_rel, 1e-6);
+        assert_eq!(c.gossip.probe_quantiles, vec![0.5, 0.99]);
+        assert_eq!(c.gossip.seed, 7);
+        c.validate().unwrap();
+        assert!(c.set("gossip_bogus", "1").is_err());
+
+        let mut g = GossipLoopConfig::default();
+        g.fan_out = 0;
+        assert!(g.validate().is_err());
+        let mut g = GossipLoopConfig::default();
+        g.probe_quantiles = vec![1.5];
+        assert!(g.validate().is_err());
+        let mut g = GossipLoopConfig::default();
+        g.probe_quantiles.clear();
+        assert!(g.validate().is_err());
+        assert!(GossipLoopConfig::default().summary().contains("fan_out=1"));
+    }
+
+    #[test]
+    fn graph_kind_complete_parses() {
+        assert_eq!("complete".parse::<GraphKind>().unwrap(), GraphKind::Complete);
+        assert_eq!("full".parse::<GraphKind>().unwrap(), GraphKind::Complete);
+        assert_eq!(GraphKind::Complete.name(), "complete");
     }
 
     #[test]

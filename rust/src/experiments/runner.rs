@@ -1,9 +1,9 @@
 //! One distributed run with per-round-count measurement snapshots.
 
-use crate::config::{ExperimentConfig, GraphKind};
+use crate::config::ExperimentConfig;
 use crate::data::all_peer_datasets;
 use crate::gossip::Protocol;
-use crate::graph::{paper_ba, paper_er, ring_lattice, watts_strogatz, Graph};
+use crate::graph::Graph;
 use crate::metrics::{average_relative_error, relative_error, BoxSummary};
 use crate::rng::default_rng;
 use crate::sketch::UddSketch;
@@ -55,12 +55,7 @@ pub struct RunOutcome {
 /// Build the overlay prescribed by the config.
 pub fn build_graph(cfg: &ExperimentConfig, master: &crate::rng::Xoshiro256pp) -> Graph {
     let mut grng = master.derive(0x6EA4);
-    match cfg.graph {
-        GraphKind::BarabasiAlbert => paper_ba(cfg.peers, &mut grng),
-        GraphKind::ErdosRenyi => paper_er(cfg.peers, &mut grng),
-        GraphKind::WattsStrogatz => watts_strogatz(cfg.peers, 5, 0.1, &mut grng),
-        GraphKind::Ring => ring_lattice(cfg.peers, 5),
-    }
+    crate::graph::from_kind(cfg.graph, cfg.peers, &mut grng)
 }
 
 /// Run the distributed protocol, measuring at each round count in
@@ -155,6 +150,7 @@ fn measure(proto: &Protocol, seq: &UddSketch, quantiles: &[f64]) -> Snapshot {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::GraphKind;
     use crate::data::DatasetKind;
 
     fn tiny_cfg() -> ExperimentConfig {

@@ -168,58 +168,14 @@ impl Protocol {
     }
 
     fn round_sequential(&mut self, online: &[bool]) -> RoundStats {
-        let p = self.states.len();
-        let mut exchanges = 0;
-        let mut dropped = 0;
-        let mut bytes = 0usize;
-        let order = self.rng.permutation(p);
-        let mut scratch: Vec<usize> = Vec::new();
-        for &l in &order {
-            if !online[l] {
-                continue;
-            }
-            // Select `fan_out` distinct online neighbours of l.
-            scratch.clear();
-            scratch.extend(
-                self.graph
-                    .neighbours(l)
-                    .iter()
-                    .copied()
-                    .filter(|&j| online[j]),
-            );
-            if scratch.is_empty() {
-                continue;
-            }
-            let k = self.fan_out.min(scratch.len());
-            // Partial Fisher–Yates: first k entries become the selection.
-            for i in 0..k {
-                let j = i + self.rng.index(scratch.len() - i);
-                scratch.swap(i, j);
-            }
-            for idx in 0..k {
-                let j = scratch[idx];
-                if self.exchange_drop > 0.0 && self.rng.chance(self.exchange_drop) {
-                    dropped += 1;
-                    continue; // §7.2: cancelled exchange, both states kept
-                }
-                // Push carries the sender's pre-exchange state; the pull
-                // reply carries the merged one (sizes computed around the
-                // in-place exchange).
-                bytes += crate::sketch::codec::peer_state_wire_size(&self.states[l]);
-                {
-                    let (lo, hi) = self.states.split_at_mut(l.max(j));
-                    let (a, b) = if l < j {
-                        (&mut lo[l], &mut hi[0])
-                    } else {
-                        (&mut hi[0], &mut lo[j])
-                    };
-                    PeerState::exchange(a, b)
-                        .expect("same alpha0 lineage by construction");
-                }
-                bytes += crate::sketch::codec::peer_state_wire_size(&self.states[j]);
-                exchanges += 1;
-            }
-        }
+        let (exchanges, dropped, bytes) = fan_out_round(
+            &mut self.states,
+            &self.graph,
+            online,
+            self.fan_out,
+            self.exchange_drop,
+            &mut self.rng,
+        );
         RoundStats {
             round: self.round,
             exchanges,
@@ -296,6 +252,81 @@ impl Protocol {
             .map(|s| s.query(q).expect("valid q, non-empty sketches"))
             .collect()
     }
+}
+
+/// One permutation-ordered atomic push–pull round over `states`
+/// (Algorithm 4's inner loop) — the exchange discipline shared by the
+/// simulation [`Protocol`] and the service layer's continuous
+/// [`GossipLoop`](crate::service::GossipLoop).
+///
+/// Every peer with `online[l]` initiates exchanges with up to `fan_out`
+/// distinct online neighbours in `graph`; each exchange is atomic
+/// ([`PeerState::exchange`]) and may be cancelled with probability
+/// `exchange_drop` (§7.2 failure injection, both endpoints keep their
+/// state). Returns `(exchanges, dropped, bytes)` where `bytes` is the
+/// codec-exact wire traffic of the push + pull frames.
+pub fn fan_out_round<R: Rng>(
+    states: &mut [PeerState],
+    graph: &Graph,
+    online: &[bool],
+    fan_out: usize,
+    exchange_drop: f64,
+    rng: &mut R,
+) -> (usize, usize, usize) {
+    let p = states.len();
+    assert_eq!(graph.len(), p, "graph/state size mismatch");
+    assert_eq!(online.len(), p, "online mask size mismatch");
+    let mut exchanges = 0;
+    let mut dropped = 0;
+    let mut bytes = 0usize;
+    let order = rng.permutation(p);
+    let mut scratch: Vec<usize> = Vec::new();
+    for &l in &order {
+        if !online[l] {
+            continue;
+        }
+        // Select `fan_out` distinct online neighbours of l.
+        scratch.clear();
+        scratch.extend(
+            graph
+                .neighbours(l)
+                .iter()
+                .copied()
+                .filter(|&j| online[j]),
+        );
+        if scratch.is_empty() {
+            continue;
+        }
+        let k = fan_out.min(scratch.len());
+        // Partial Fisher–Yates: first k entries become the selection.
+        for i in 0..k {
+            let j = i + rng.index(scratch.len() - i);
+            scratch.swap(i, j);
+        }
+        for &j in scratch.iter().take(k) {
+            if exchange_drop > 0.0 && rng.chance(exchange_drop) {
+                dropped += 1;
+                continue; // §7.2: cancelled exchange, both states kept
+            }
+            // Push carries the sender's pre-exchange state; the pull
+            // reply carries the merged one (sizes computed around the
+            // in-place exchange).
+            bytes += crate::sketch::codec::peer_state_wire_size(&states[l]);
+            {
+                let (lo, hi) = states.split_at_mut(l.max(j));
+                let (a, b) = if l < j {
+                    (&mut lo[l], &mut hi[0])
+                } else {
+                    (&mut hi[0], &mut lo[j])
+                };
+                PeerState::exchange(a, b)
+                    .expect("same alpha0 lineage by construction");
+            }
+            bytes += crate::sketch::codec::peer_state_wire_size(&states[j]);
+            exchanges += 1;
+        }
+    }
+    (exchanges, dropped, bytes)
 }
 
 /// Build all peers' initial states, in parallel across available cores

@@ -51,6 +51,19 @@ impl PeerState {
     /// re-processed from the raw stream. This is how a
     /// [`service`](crate::service) snapshot becomes a live peer — the
     /// serving path maintains the local UDDSketch, gossip averages it.
+    ///
+    /// ```
+    /// use duddsketch::gossip::PeerState;
+    /// use duddsketch::sketch::UddSketch;
+    ///
+    /// let mut local: UddSketch = UddSketch::new(0.001, 1024).unwrap();
+    /// local.extend(&[1.0, 2.0, 3.0]);
+    /// // Peer 0 plays Algorithm 3's distinguished role: q̃ = 1.
+    /// let peer = PeerState::from_sketch(0, &local);
+    /// assert_eq!(peer.n_tilde, 3.0);
+    /// assert_eq!(peer.q_tilde, 1.0);
+    /// assert_eq!(PeerState::from_sketch(3, &local).q_tilde, 0.0);
+    /// ```
     pub fn from_sketch<S: Store>(id: usize, sketch: &UddSketch<S>) -> Self {
         Self {
             id,

@@ -264,6 +264,24 @@ pub fn watts_strogatz<R: Rng>(n: usize, k: usize, beta: f64, rng: &mut R) -> Gra
     Graph::from_edges(n, &edges)
 }
 
+/// Complete graph K_n: every pair of vertices adjacent.
+///
+/// The natural overlay for *small* gossip fleets (a handful of service
+/// nodes fronted by [`crate::service`]'s gossip loop): every exchange
+/// partner is reachable, convergence is as fast as distributed averaging
+/// allows, and no generator randomness is involved. Edge count is
+/// n(n−1)/2 — do not use for the paper-scale simulations.
+pub fn complete(n: usize) -> Graph {
+    assert!(n >= 2, "complete: need n >= 2");
+    let mut edges = Vec::with_capacity(n * (n - 1) / 2);
+    for u in 0..n {
+        for v in (u + 1)..n {
+            edges.push((u, v));
+        }
+    }
+    Graph::from_edges(n, &edges)
+}
+
 /// Convenience: the paper's default overlay for `n` peers.
 pub fn paper_ba<R: Rng>(n: usize, rng: &mut R) -> Graph {
     barabasi_albert(n, 5, rng)
@@ -272,6 +290,21 @@ pub fn paper_ba<R: Rng>(n: usize, rng: &mut R) -> Graph {
 /// Convenience: the paper's ER overlay for `n` peers (p = 10/n).
 pub fn paper_er<R: Rng>(n: usize, rng: &mut R) -> Graph {
     erdos_renyi(n, (10.0 / n as f64).min(1.0), rng)
+}
+
+/// Build the overlay prescribed by `kind` over `n` vertices, with the
+/// generation parameters fixed throughout the evaluation (BA m=5,
+/// ER p=10/n, WS k=5 β=0.1, ring k=5) — the single construction point
+/// shared by the experiment runner and the service gossip loop.
+pub fn from_kind<R: Rng>(kind: crate::config::GraphKind, n: usize, rng: &mut R) -> Graph {
+    use crate::config::GraphKind;
+    match kind {
+        GraphKind::BarabasiAlbert => paper_ba(n, rng),
+        GraphKind::ErdosRenyi => paper_er(n, rng),
+        GraphKind::WattsStrogatz => watts_strogatz(n, 5, 0.1, rng),
+        GraphKind::Ring => ring_lattice(n, 5),
+        GraphKind::Complete => complete(n),
+    }
 }
 
 #[cfg(test)]
@@ -398,6 +431,27 @@ mod tests {
             let sum: usize = (0..g.len()).map(|v| g.degree(v)).sum();
             assert_eq!(sum, 2 * g.edge_count());
         }
+    }
+
+    #[test]
+    fn complete_graph_structure() {
+        let g = complete(6);
+        assert_eq!(g.len(), 6);
+        assert_eq!(g.edge_count(), 15);
+        assert!(g.is_connected());
+        for v in 0..6 {
+            assert_eq!(g.degree(v), 5);
+        }
+        // The smallest legal fleet.
+        let g2 = complete(2);
+        assert_eq!(g2.edge_count(), 1);
+        assert_eq!(g2.neighbours(0), &[1]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn complete_rejects_singleton() {
+        let _ = complete(1);
     }
 
     #[test]

@@ -24,8 +24,10 @@
 //!   via sketch mergeability, lock-free epoch-stamped snapshot
 //!   publication for `quantile`/`quantiles`/`cdf` queries that never
 //!   block ingest, an optional sliding-window mode (ring of per-interval
-//!   sub-sketches merged on demand), and adapters fronting a gossip peer
-//!   with the live snapshot.
+//!   sub-sketches merged on demand), adapters fronting a gossip peer
+//!   with the live snapshot, and the continuous gossip loop
+//!   ([`service::GossipLoop`]) that keeps a fleet of services converged
+//!   on a network-wide [`service::GlobalView`] while ingest continues.
 //! * [`runtime`] — PJRT execution of AOT-compiled JAX/Pallas artifacts; the
 //!   dense averaging round can run through XLA (`gossip::PjrtExecutor`),
 //!   gated behind the `pjrt` cargo feature.
@@ -45,7 +47,16 @@
 //! assert!((p99 - 9_900.0).abs() / 9_900.0 < 0.01);
 //! ```
 //!
-//! See `examples/` for the distributed protocol end-to-end.
+//! See `examples/` for the distributed protocol end-to-end, `README.md`
+//! for the architecture diagram and crate-layout table.
+
+// Every public item carries rustdoc; the CI docs lane builds with
+// `RUSTDOCFLAGS="-D warnings"`, so a missing doc fails the build.
+#![warn(missing_docs)]
+// Config structs are plain data mutated after `Default::default()`
+// throughout tests, benches and examples; the lint's struct-literal
+// update suggestion would obscure which knobs a given site turns.
+#![allow(clippy::field_reassign_with_default)]
 
 pub mod churn;
 pub mod cli;

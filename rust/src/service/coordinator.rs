@@ -142,6 +142,13 @@ impl QuantileService {
         })
     }
 
+    /// [`QuantileService::start`], wrapped in an [`Arc`] — the form a
+    /// [`GossipLoop`](super::GossipLoop) member and concurrent query
+    /// threads share.
+    pub fn start_shared(cfg: ServiceConfig) -> Result<Arc<Self>> {
+        Ok(Arc::new(Self::start(cfg)?))
+    }
+
     /// The service configuration.
     pub fn config(&self) -> &ServiceConfig {
         &self.cfg

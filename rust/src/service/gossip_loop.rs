@@ -1,0 +1,689 @@
+//! The continuous service-driven gossip loop: refresh → exchange → serve.
+//!
+//! PR 1 connected a [`QuantileService`] to the protocol one shot at a
+//! time ([`ServicePeer`](super::ServicePeer)); this module closes the
+//! paper's full production loop. A [`GossipLoop`] owns a small fleet of
+//! **members** — live services and/or simulated remote peers — and runs
+//! the cycle continuously while ingest keeps flowing:
+//!
+//! ```text
+//!        ┌────────────────────────── every round ─────────────────────────┐
+//!        │ refresh: any service published a newer epoch?                  │
+//!        │   └─ yes → reseed every member's PeerState (protocol restart,  │
+//!        │            Prop. 4: averaging re-converges from any states)    │
+//!        │ exchange: one fan-out push–pull round over the overlay         │
+//!        │            (the same Algorithm 4 loop the simulation runs)     │
+//!        │ serve: publish one GlobalView per member through an            │
+//!        │        ArcSwapCell — reads never block, never see a torn state │
+//!        └────────────────────────────────────────────────────────────────┘
+//! ```
+//!
+//! Queries can therefore read **two** estimates: the service's own
+//! [`Snapshot`](super::Snapshot) (local stream only, exact fold) and the
+//! loop's [`GlobalView`] (network-converged estimate of the *union*
+//! stream, Algorithm 6). Convergence is observable: each round the loop
+//! probes a configured quantile set and reports the largest relative
+//! drift since the previous round; once the drift falls below
+//! [`GossipLoopConfig::convergence_rel`] the view is flagged converged.
+//!
+//! The reseed-all policy is load-bearing: `q̃` mass must stay exactly 1
+//! across the fleet for the network-size estimate `p̃ = 1/q̃` to be
+//! unbiased, so a newer epoch anywhere restarts *every* member from its
+//! current local summary (the fusion-model restart of the stream-fusion
+//! line of work) rather than patching one peer in place.
+//!
+//! Members are in-process today; the codec (`sketch::codec`) already
+//! frames `PeerState`s byte-exactly, so a remote-peer transport can slot
+//! in behind [`GossipMember`] without touching the loop.
+
+use super::coordinator::QuantileService;
+use super::swap::ArcSwapCell;
+use crate::config::GossipLoopConfig;
+use crate::gossip::{fan_out_round, GossipSketch, PeerState};
+use crate::graph::Graph;
+use crate::metrics::relative_error;
+use crate::rng::{default_rng, Xoshiro256pp};
+use crate::sketch::{SketchError, Store, UddSketch};
+use anyhow::{bail, Context, Result};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// One participant in a [`GossipLoop`].
+#[derive(Debug)]
+pub enum GossipMember {
+    /// A live ingest service: reseeded from its latest published
+    /// snapshot whenever a newer epoch appears.
+    Service(Arc<QuantileService>),
+    /// A simulated remote peer with a fixed local summary (stands in for
+    /// a codec-framed network peer until a transport lands).
+    Static(GossipSketch),
+}
+
+impl GossipMember {
+    /// A member fronting a live service.
+    pub fn service(svc: Arc<QuantileService>) -> Self {
+        GossipMember::Service(svc)
+    }
+
+    /// A simulated peer summarizing `data` with the given sketch
+    /// parameters.
+    pub fn from_dataset(data: &[f64], alpha: f64, max_buckets: usize) -> Result<Self> {
+        let mut s: UddSketch = UddSketch::new(alpha, max_buckets)
+            .map_err(anyhow::Error::msg)
+            .context("static member sketch")?;
+        s.extend(data);
+        Ok(GossipMember::Static(s.convert_store()))
+    }
+
+    /// A simulated peer fronting an already-built local summary.
+    pub fn from_sketch<S: Store>(sketch: &UddSketch<S>) -> Self {
+        GossipMember::Static(sketch.convert_store())
+    }
+}
+
+/// The network-converged estimate one member serves after a round.
+///
+/// Immutable, like [`Snapshot`](super::Snapshot): a handle keeps
+/// answering consistently no matter how far the loop advances.
+#[derive(Debug, Clone)]
+pub struct GlobalView {
+    round: u64,
+    generation: u64,
+    epoch: u64,
+    drift: f64,
+    converged: bool,
+    state: PeerState,
+}
+
+impl GlobalView {
+    /// Gossip rounds executed when this view was published.
+    pub fn round(&self) -> u64 {
+        self.round
+    }
+
+    /// Reseed generations so far (bumped whenever a service published a
+    /// newer epoch and the protocol restarted).
+    pub fn generation(&self) -> u64 {
+        self.generation
+    }
+
+    /// Service epoch this member's local state was seeded from (0 for
+    /// static members and before the first epoch).
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Largest relative drift of the probe-quantile estimates between
+    /// the last two rounds (∞ until two comparable rounds exist).
+    pub fn drift(&self) -> f64 {
+        self.drift
+    }
+
+    /// True once the drift fell to the configured threshold or below
+    /// without an intervening reseed.
+    pub fn converged(&self) -> bool {
+        self.converged
+    }
+
+    /// The member's averaged protocol state.
+    pub fn state(&self) -> &PeerState {
+        &self.state
+    }
+
+    /// Estimated fleet size `p̃ = round(1/q̃)` (Algorithm 6).
+    pub fn estimated_peers(&self) -> f64 {
+        self.state.estimated_peers()
+    }
+
+    /// Estimated union-stream length `Ñ = round(p̃ · Ñ_l)`.
+    pub fn estimated_total(&self) -> f64 {
+        self.state.estimated_total()
+    }
+
+    /// Estimate the q-quantile of the **union** stream (Algorithm 6).
+    pub fn query(&self, q: f64) -> Result<f64, SketchError> {
+        self.state.query(q)
+    }
+
+    /// Batch union-stream quantile queries.
+    pub fn quantiles(&self, qs: &[f64]) -> Result<Vec<f64>, SketchError> {
+        qs.iter().map(|&q| self.state.query(q)).collect()
+    }
+}
+
+/// Telemetry for one executed loop round.
+#[derive(Debug, Clone, Copy)]
+pub struct GossipRoundReport {
+    /// Rounds executed so far (this one included).
+    pub round: u64,
+    /// Current reseed generation.
+    pub generation: u64,
+    /// True when this round reseeded the fleet from fresh snapshots.
+    pub reseeded: bool,
+    /// Completed push–pull exchanges this round.
+    pub exchanges: usize,
+    /// Wire traffic this round (push + pull frames, codec byte-exact).
+    pub bytes: usize,
+    /// Largest relative probe drift vs the previous round (∞ if not yet
+    /// comparable).
+    pub drift: f64,
+    /// Whether the drift is at or below the configured threshold.
+    pub converged: bool,
+}
+
+/// Shared read side: one view cell per member.
+struct Shared {
+    views: Vec<ArcSwapCell<GlobalView>>,
+}
+
+/// Mutable loop state, owned by whichever thread runs the next round.
+struct Worker {
+    cfg: GossipLoopConfig,
+    members: Vec<GossipMember>,
+    states: Vec<PeerState>,
+    /// Snapshot epoch each member was last seeded from (0 for static).
+    epochs: Vec<u64>,
+    /// Member indices whose probe estimates drive the drift metric:
+    /// every service member, or member 0 in an all-static fleet.
+    probe_members: Vec<usize>,
+    graph: Graph,
+    rng: Xoshiro256pp,
+    online: Vec<bool>,
+    round: u64,
+    generation: u64,
+    prev_probes: Option<Vec<f64>>,
+    drift: f64,
+    converged: bool,
+}
+
+/// A background gossip task over a fleet of services and simulated peers.
+///
+/// With `round_interval_ms > 0` a thread runs one round per interval;
+/// [`GossipLoop::step`] additionally (or, at interval 0, exclusively)
+/// runs rounds on demand — handy for deterministic tests and for the
+/// `serve-gossip` CLI's per-round reporting.
+///
+/// ```
+/// use duddsketch::config::GossipLoopConfig;
+/// use duddsketch::service::{GossipLoop, GossipMember};
+///
+/// // Two simulated peers, each holding half of 1..=1000.
+/// let lo: Vec<f64> = (1..=500).map(f64::from).collect();
+/// let hi: Vec<f64> = (501..=1000).map(f64::from).collect();
+/// let members = vec![
+///     GossipMember::from_dataset(&lo, 0.001, 1024).unwrap(),
+///     GossipMember::from_dataset(&hi, 0.001, 1024).unwrap(),
+/// ];
+/// let gl = GossipLoop::start(GossipLoopConfig::default(), members).unwrap();
+/// gl.step(); // one exchange fully averages a 2-peer fleet
+/// let view = gl.view();
+/// let p50 = view.query(0.5).unwrap();
+/// assert!((p50 - 500.0).abs() / 500.0 <= 0.001 + 1e-9);
+/// assert_eq!(view.estimated_peers(), 2.0);
+/// gl.shutdown();
+/// ```
+pub struct GossipLoop {
+    shared: Arc<Shared>,
+    worker: Arc<Mutex<Worker>>,
+    stop: Arc<AtomicBool>,
+    thread: Option<JoinHandle<()>>,
+}
+
+impl std::fmt::Debug for GossipLoop {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let v = self.view();
+        write!(
+            f,
+            "GossipLoop(members={}, round={}, generation={}, converged={})",
+            self.shared.views.len(),
+            v.round(),
+            v.generation(),
+            v.converged()
+        )
+    }
+}
+
+impl GossipLoop {
+    /// Validate, seed every member from its current local summary, build
+    /// the overlay, publish the round-0 views, and (when an interval is
+    /// configured) spawn the background round thread.
+    ///
+    /// Member index is the peer id: member 0 plays Algorithm 3's
+    /// distinguished role (`q̃ = 1`). Small fleets should keep the
+    /// default [`GraphKind::Complete`](crate::config::GraphKind::Complete)
+    /// overlay; the simulation
+    /// topologies carry their own minimum-size requirements.
+    pub fn start(cfg: GossipLoopConfig, members: Vec<GossipMember>) -> Result<Self> {
+        cfg.validate().map_err(anyhow::Error::msg)?;
+        if members.len() < 2 {
+            bail!("gossip loop needs at least 2 members, got {}", members.len());
+        }
+        // Exchanges merge sketches, and merges require one shared α₀
+        // lineage — catch a mismatched fleet here instead of panicking
+        // mid-round (possibly inside the background thread).
+        let mut alpha0: Option<f64> = None;
+        for (i, m) in members.iter().enumerate() {
+            let a = match m {
+                GossipMember::Service(svc) => svc.config().alpha,
+                GossipMember::Static(sketch) => sketch.mapping().alpha0(),
+            };
+            match alpha0 {
+                None => alpha0 = Some(a),
+                Some(first) if first.to_bits() != a.to_bits() => bail!(
+                    "gossip members must share one alpha0 lineage: \
+                     member 0 has {first}, member {i} has {a}"
+                ),
+                Some(_) => {}
+            }
+        }
+        let n = members.len();
+        let master = default_rng(cfg.seed);
+        let mut grng = master.derive(0x6EA4);
+        let graph = crate::graph::from_kind(cfg.graph, n, &mut grng);
+        let interval_ms = cfg.round_interval_ms;
+        let probe_members: Vec<usize> = {
+            let svc: Vec<usize> = members
+                .iter()
+                .enumerate()
+                .filter(|(_, m)| matches!(m, GossipMember::Service(_)))
+                .map(|(i, _)| i)
+                .collect();
+            if svc.is_empty() {
+                vec![0]
+            } else {
+                svc
+            }
+        };
+        let mut worker = Worker {
+            rng: master.derive(0x1005),
+            cfg,
+            members,
+            states: Vec::new(),
+            epochs: vec![0; n],
+            probe_members,
+            graph,
+            online: vec![true; n],
+            round: 0,
+            generation: 0,
+            prev_probes: None,
+            drift: f64::INFINITY,
+            converged: false,
+        };
+        worker.reseed();
+        let shared = Arc::new(Shared {
+            views: (0..n)
+                .map(|i| ArcSwapCell::new(Arc::new(worker.view_of(i))))
+                .collect(),
+        });
+        let worker = Arc::new(Mutex::new(worker));
+        let stop = Arc::new(AtomicBool::new(false));
+        let thread = if interval_ms > 0 {
+            let worker = worker.clone();
+            let shared = shared.clone();
+            let stop = stop.clone();
+            let interval = Duration::from_millis(interval_ms);
+            Some(
+                std::thread::Builder::new()
+                    .name("dudd-gossip".into())
+                    .spawn(move || round_loop(&worker, &shared, &stop, interval))
+                    .context("spawning gossip loop thread")?,
+            )
+        } else {
+            None
+        };
+        Ok(Self {
+            shared,
+            worker,
+            stop,
+            thread,
+        })
+    }
+
+    /// Number of members in the fleet.
+    pub fn members(&self) -> usize {
+        self.shared.views.len()
+    }
+
+    /// Run one refresh → exchange → serve round synchronously and return
+    /// its telemetry. Safe alongside the background thread (rounds
+    /// serialize on the worker lock).
+    pub fn step(&self) -> GossipRoundReport {
+        let mut w = self.worker.lock().expect("gossip worker poisoned");
+        let report = w.run_round();
+        w.publish(&self.shared);
+        report
+    }
+
+    /// The latest global view of member 0. Lock-free.
+    pub fn view(&self) -> Arc<GlobalView> {
+        self.member_view(0)
+    }
+
+    /// The latest global view of member `i` (panics when out of range).
+    pub fn member_view(&self, i: usize) -> Arc<GlobalView> {
+        self.shared.views[i].load()
+    }
+
+    /// Stop the background thread (if any) and return the final view of
+    /// member 0.
+    pub fn shutdown(mut self) -> Arc<GlobalView> {
+        self.stop_thread();
+        self.view()
+    }
+
+    fn stop_thread(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for GossipLoop {
+    fn drop(&mut self) {
+        self.stop_thread();
+    }
+}
+
+/// Background driver: one round per interval, stop-aware in ≤10 ms
+/// steps so shutdown never waits out a long interval.
+fn round_loop(
+    worker: &Mutex<Worker>,
+    shared: &Shared,
+    stop: &AtomicBool,
+    interval: Duration,
+) {
+    let step = Duration::from_millis(10).min(interval);
+    'outer: loop {
+        let mut slept = Duration::ZERO;
+        while slept < interval {
+            if stop.load(Ordering::SeqCst) {
+                break 'outer;
+            }
+            let d = step.min(interval - slept);
+            std::thread::sleep(d);
+            slept += d;
+        }
+        if stop.load(Ordering::SeqCst) {
+            break;
+        }
+        let mut w = worker.lock().expect("gossip worker poisoned");
+        w.run_round();
+        w.publish(shared);
+    }
+}
+
+impl Worker {
+    /// Seed every member's `PeerState` from its current local summary
+    /// and start a new generation. Restarting *all* members keeps the
+    /// averaged `q̃` mass at exactly 1 (see the module docs).
+    fn reseed(&mut self) {
+        let mut states = Vec::with_capacity(self.members.len());
+        for (i, m) in self.members.iter().enumerate() {
+            let state = match m {
+                GossipMember::Service(svc) => {
+                    let snap = svc.snapshot();
+                    self.epochs[i] = snap.epoch();
+                    PeerState::from_sketch(i, snap.sketch())
+                }
+                GossipMember::Static(sketch) => PeerState::from_sketch(i, sketch),
+            };
+            states.push(state);
+        }
+        self.states = states;
+        self.generation += 1;
+        self.prev_probes = None;
+        self.drift = f64::INFINITY;
+        self.converged = false;
+    }
+
+    /// True when any service member has published an epoch newer than
+    /// the one its state was seeded from.
+    fn stale(&self) -> bool {
+        self.members.iter().enumerate().any(|(i, m)| match m {
+            GossipMember::Service(svc) => svc.snapshot().epoch() != self.epochs[i],
+            GossipMember::Static(_) => false,
+        })
+    }
+
+    /// Probe-quantile estimates across the probe members, or `None`
+    /// while any probe member cannot answer yet (empty sketch).
+    fn probes(&self) -> Option<Vec<f64>> {
+        let mut out =
+            Vec::with_capacity(self.probe_members.len() * self.cfg.probe_quantiles.len());
+        for &i in &self.probe_members {
+            for &q in &self.cfg.probe_quantiles {
+                match self.states[i].query(q) {
+                    Ok(v) => out.push(v),
+                    Err(_) => return None,
+                }
+            }
+        }
+        Some(out)
+    }
+
+    /// One full refresh → exchange cycle (the serve half is
+    /// [`Worker::publish`]).
+    fn run_round(&mut self) -> GossipRoundReport {
+        let reseeded = self.stale();
+        if reseeded {
+            self.reseed();
+        }
+        self.round += 1;
+        let (exchanges, _dropped, bytes) = fan_out_round(
+            &mut self.states,
+            &self.graph,
+            &self.online,
+            self.cfg.fan_out,
+            0.0,
+            &mut self.rng,
+        );
+        let cur = self.probes();
+        self.drift = match (&self.prev_probes, &cur) {
+            (Some(prev), Some(cur)) => prev
+                .iter()
+                .zip(cur)
+                .map(|(&p, &c)| relative_error(c, p))
+                .fold(0.0, f64::max),
+            _ => f64::INFINITY,
+        };
+        self.converged = self.drift <= self.cfg.convergence_rel;
+        self.prev_probes = cur;
+        GossipRoundReport {
+            round: self.round,
+            generation: self.generation,
+            reseeded,
+            exchanges,
+            bytes,
+            drift: self.drift,
+            converged: self.converged,
+        }
+    }
+
+    /// Build the view a round publishes for member `i`.
+    fn view_of(&self, i: usize) -> GlobalView {
+        GlobalView {
+            round: self.round,
+            generation: self.generation,
+            epoch: self.epochs[i],
+            drift: self.drift,
+            converged: self.converged,
+            state: self.states[i].clone(),
+        }
+    }
+
+    /// Serve: publish every member's fresh view.
+    fn publish(&self, shared: &Shared) {
+        for (i, cell) in shared.views.iter().enumerate() {
+            cell.store(Arc::new(self.view_of(i)));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ServiceConfig;
+
+    fn static_member(values: &[f64]) -> GossipMember {
+        GossipMember::from_dataset(values, 0.001, 1024).unwrap()
+    }
+
+    fn service_with(values: &[f64]) -> Arc<QuantileService> {
+        let mut cfg = ServiceConfig::default();
+        cfg.shards = 2;
+        let svc = QuantileService::start(cfg).unwrap();
+        let mut w = svc.writer();
+        w.insert_batch(values);
+        w.flush();
+        svc.flush();
+        Arc::new(svc)
+    }
+
+    #[test]
+    fn loop_requires_two_members() {
+        let cfg = GossipLoopConfig::default();
+        let err = GossipLoop::start(cfg, vec![static_member(&[1.0])]).unwrap_err();
+        assert!(err.to_string().contains("at least 2"));
+    }
+
+    #[test]
+    fn loop_rejects_mismatched_alpha_lineages() {
+        let a = GossipMember::from_dataset(&[1.0, 2.0], 0.001, 1024).unwrap();
+        let b = GossipMember::from_dataset(&[3.0, 4.0], 0.01, 1024).unwrap();
+        let err = GossipLoop::start(GossipLoopConfig::default(), vec![a, b]).unwrap_err();
+        assert!(err.to_string().contains("alpha0 lineage"), "{err}");
+    }
+
+    #[test]
+    fn two_static_members_average_in_one_round() {
+        let xs: Vec<f64> = (1..=600).map(|i| i as f64).collect();
+        let ys: Vec<f64> = (601..=1000).map(|i| i as f64).collect();
+        let gl = GossipLoop::start(
+            GossipLoopConfig::default(),
+            vec![static_member(&xs), static_member(&ys)],
+        )
+        .unwrap();
+
+        // Round 0: seeded but unexchanged — member 0 only knows itself.
+        let v0 = gl.view();
+        assert_eq!(v0.round(), 0);
+        assert_eq!(v0.generation(), 1);
+        assert!(!v0.converged());
+        assert_eq!(v0.estimated_peers(), 1.0);
+
+        let r1 = gl.step();
+        assert_eq!(r1.round, 1);
+        assert!(r1.exchanges >= 1);
+        assert!(r1.bytes > 0);
+        assert!(!r1.reseeded);
+
+        let mut seq: UddSketch = UddSketch::new(0.001, 1024).unwrap();
+        seq.extend(&xs);
+        seq.extend(&ys);
+        for i in 0..2 {
+            let v = gl.member_view(i);
+            assert_eq!(v.estimated_peers(), 2.0);
+            assert_eq!(v.estimated_total(), 1000.0);
+            for q in [0.01, 0.5, 0.99] {
+                assert_eq!(
+                    v.query(q).unwrap(),
+                    seq.quantile(q).unwrap(),
+                    "member {i} q={q}"
+                );
+            }
+        }
+
+        // A second identical round changes nothing: drift hits 0.
+        let r2 = gl.step();
+        assert_eq!(r2.drift, 0.0);
+        assert!(r2.converged);
+        assert!(gl.view().converged());
+        gl.shutdown();
+    }
+
+    #[test]
+    fn service_epoch_advance_triggers_reseed() {
+        let svc = service_with(&[1.0, 2.0, 3.0, 4.0]);
+        let gl = GossipLoop::start(
+            GossipLoopConfig::default(),
+            vec![
+                GossipMember::service(svc.clone()),
+                static_member(&[10.0, 20.0]),
+            ],
+        )
+        .unwrap();
+        assert_eq!(gl.view().epoch(), 1);
+        let r1 = gl.step();
+        assert!(!r1.reseeded);
+        let r2 = gl.step();
+        assert!(r2.converged, "tiny fleet converges immediately");
+        assert_eq!(r2.generation, 1);
+
+        // New data, new epoch: the next round restarts the protocol.
+        let mut w = svc.writer();
+        w.insert(5.0);
+        w.flush();
+        svc.flush();
+        let r3 = gl.step();
+        assert!(r3.reseeded);
+        assert_eq!(r3.generation, 2);
+        assert!(!r3.converged, "drift resets on reseed");
+        let v = gl.view();
+        assert_eq!(v.epoch(), 2);
+        assert_eq!(v.generation(), 2);
+
+        // Steps without new epochs re-converge on the union of 5+2 items.
+        gl.step();
+        let v = gl.view();
+        assert_eq!(v.estimated_total(), 7.0);
+        gl.shutdown();
+        Arc::try_unwrap(svc).unwrap().shutdown();
+    }
+
+    #[test]
+    fn empty_members_step_without_panicking() {
+        let empty: UddSketch = UddSketch::new(0.001, 1024).unwrap();
+        let gl = GossipLoop::start(
+            GossipLoopConfig::default(),
+            vec![
+                GossipMember::from_sketch(&empty),
+                GossipMember::from_sketch(&empty),
+            ],
+        )
+        .unwrap();
+        let r = gl.step();
+        assert!(!r.converged, "no probes on empty sketches");
+        assert!(r.drift.is_infinite());
+        assert!(matches!(gl.view().query(0.5), Err(SketchError::Empty)));
+        gl.shutdown();
+    }
+
+    #[test]
+    fn background_thread_runs_rounds() {
+        let mut cfg = GossipLoopConfig::default();
+        cfg.round_interval_ms = 2;
+        let gl = GossipLoop::start(
+            cfg,
+            vec![static_member(&[1.0, 2.0]), static_member(&[3.0, 4.0])],
+        )
+        .unwrap();
+        let deadline = std::time::Instant::now() + Duration::from_secs(10);
+        loop {
+            let v = gl.view();
+            if v.round() >= 3 && v.converged() {
+                break;
+            }
+            assert!(
+                std::time::Instant::now() < deadline,
+                "background loop never converged (round {})",
+                v.round()
+            );
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        let v = gl.shutdown();
+        assert_eq!(v.estimated_total(), 4.0);
+    }
+}

@@ -38,12 +38,19 @@
 //!   [`QuantileService::peer_state`] turn the live snapshot into the
 //!   local state of Algorithm 3, connecting the service to the
 //!   distributed protocol in [`crate::gossip`].
+//! * **Continuous gossip loop** — [`GossipLoop`] runs the paper's
+//!   refresh → exchange → serve cycle as a background task over a fleet
+//!   of services and simulated peers, publishing a network-converged
+//!   [`GlobalView`] (union-stream quantiles, Algorithm 6) through a
+//!   second [`ArcSwapCell`] next to the local snapshot.
 //!
-//! Configuration lives in [`crate::config::ServiceConfig`]; the
-//! `serve-bench` CLI subcommand drives the `data` workloads through a
+//! Configuration lives in [`crate::config::ServiceConfig`] (gossip knobs
+//! in [`crate::config::GossipLoopConfig`]); the `serve-bench` and
+//! `serve-gossip` CLI subcommands drive the `data` workloads through a
 //! service end to end.
 
 mod coordinator;
+mod gossip_loop;
 mod peer;
 mod shard;
 mod snapshot;
@@ -51,6 +58,7 @@ mod swap;
 mod window;
 
 pub use coordinator::{QuantileService, ServiceWriter};
+pub use gossip_loop::{GlobalView, GossipLoop, GossipMember, GossipRoundReport};
 pub use peer::ServicePeer;
 pub use shard::ShardDelta;
 pub use snapshot::Snapshot;

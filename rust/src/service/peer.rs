@@ -7,6 +7,10 @@
 //! [`PeerState`] the gossip engine can exchange, and re-seeds it whenever
 //! a newer epoch is published. Distributed averaging re-converges from
 //! any initial states (Prop. 4), so refresh-then-gossip is sound.
+//!
+//! `ServicePeer` is the one-shot bridge; the *continuous* refresh →
+//! exchange → serve cycle over a whole fleet lives in
+//! [`GossipLoop`](super::GossipLoop).
 
 use super::coordinator::QuantileService;
 use crate::gossip::PeerState;

@@ -10,6 +10,21 @@ use crate::sketch::{DenseStore, SketchError, UddSketch};
 
 /// Ring of per-epoch sub-sketches; epoch `e` (0-based) lands in slot
 /// `e % k`.
+///
+/// ```
+/// use duddsketch::service::WindowRing;
+/// use duddsketch::sketch::UddSketch;
+///
+/// let mut ring = WindowRing::new(2, 0.01, 256).unwrap();
+/// for v in [10.0, 20.0, 30.0] {
+///     let mut epoch = UddSketch::new(0.01, 256).unwrap();
+///     epoch.insert(v);
+///     ring.push_epoch(epoch);
+/// }
+/// // Only the last 2 epochs are live; epoch 1 (value 10) was evicted.
+/// assert_eq!(ring.coverage(), Some((2, 3)));
+/// assert_eq!(ring.merged().unwrap().count(), 2.0);
+/// ```
 #[derive(Debug, Clone)]
 pub struct WindowRing {
     alpha: f64,
@@ -148,5 +163,52 @@ mod tests {
         let mut s = UddSketch::new(0.001, 512).unwrap();
         s.extend(values);
         s
+    }
+
+    #[test]
+    fn many_wraps_keep_exactly_last_k() {
+        // The ring wraps many times over (25 epochs through 3 slots);
+        // coverage and contents must always be exactly the last k epochs,
+        // with no stale slot ever leaking through a wrap boundary.
+        let mut ring = WindowRing::new(3, 0.01, 256).unwrap();
+        for e in 1..=25u64 {
+            ring.push_epoch(delta(&[e as f64; 4]));
+            assert_eq!(ring.epochs(), e);
+            let live = 3.min(e as usize);
+            assert_eq!(ring.live(), live);
+            let lo_epoch = e - (live as u64 - 1);
+            assert_eq!(ring.coverage(), Some((lo_epoch, e)));
+            let w = ring.merged().unwrap();
+            assert_eq!(w.count(), (4 * live) as f64);
+            let lo = w.quantile(0.0).unwrap();
+            let hi = w.quantile(1.0).unwrap();
+            let lo_expect = lo_epoch as f64;
+            let hi_expect = e as f64;
+            assert!(
+                (lo - lo_expect).abs() <= 0.01 * lo_expect + 1e-9,
+                "epoch {e}: stale value leaked, min {lo} vs {lo_expect}"
+            );
+            assert!(
+                (hi - hi_expect).abs() <= 0.01 * hi_expect + 1e-9,
+                "epoch {e}: max {hi} vs {hi_expect}"
+            );
+        }
+    }
+
+    #[test]
+    fn empty_epochs_age_out_data() {
+        // Idle intervals are real epochs: after k empty pushes the window
+        // must be empty again (the service's windowed mode publishes on
+        // idle ticks for exactly this reason).
+        let mut ring = WindowRing::new(2, 0.01, 256).unwrap();
+        ring.push_epoch(delta(&[5.0; 6]));
+        assert_eq!(ring.merged().unwrap().count(), 6.0);
+        ring.push_epoch(UddSketch::new(0.01, 256).unwrap());
+        assert_eq!(ring.merged().unwrap().count(), 6.0, "still in window");
+        ring.push_epoch(UddSketch::new(0.01, 256).unwrap());
+        let w = ring.merged().unwrap();
+        assert!(w.is_empty(), "data older than k epochs survived");
+        assert!(w.quantile(0.5).is_err(), "empty window must refuse queries");
+        assert_eq!(ring.coverage(), Some((2, 3)));
     }
 }

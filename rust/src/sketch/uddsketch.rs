@@ -299,7 +299,22 @@ impl<S: Store> UddSketch<S> {
     }
 
     /// Estimate the inferior q-quantile (Definition 2) of the summarized
-    /// multiset.
+    /// multiset: the estimate is within relative error [`UddSketch::alpha`]
+    /// of the true inferior quantile for every q ∈ [0, 1].
+    ///
+    /// ```
+    /// use duddsketch::sketch::UddSketch;
+    ///
+    /// let mut s: UddSketch = UddSketch::new(0.001, 1024).unwrap();
+    /// for i in 1..=10_000 {
+    ///     s.insert(i as f64);
+    /// }
+    /// // 1..=10000 spans more than 1024 buckets at alpha0 = 0.001, so
+    /// // uniform collapses ran and the live bound is s.alpha() > 0.001.
+    /// let p90 = s.quantile(0.9).unwrap();
+    /// assert!((p90 - 9_000.0).abs() <= s.alpha() * 9_000.0 + 1e-9);
+    /// assert!(s.quantile(2.0).is_err());
+    /// ```
     pub fn quantile(&self, q: f64) -> Result<f64, SketchError> {
         if !(0.0..=1.0).contains(&q) || q.is_nan() {
             return Err(SketchError::InvalidQuantile(q));

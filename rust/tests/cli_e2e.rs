@@ -104,6 +104,34 @@ fn serve_bench_runs_end_to_end() {
 }
 
 #[test]
+fn serve_gossip_runs_end_to_end() {
+    let out = bin()
+        .args([
+            "serve-gossip",
+            "--dataset",
+            "uniform",
+            "--items",
+            "2000",
+            "--nodes",
+            "3",
+            "--rounds",
+            "10",
+            "batch=256",
+            "shards=2",
+        ])
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "stderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("serve-gossip: dataset=uniform"), "{text}");
+    assert!(text.contains("OK: worst rel-diff"), "{text}");
+}
+
+#[test]
 fn info_reports_defaults() {
     let out = bin().arg("info").output().unwrap();
     assert!(out.status.success());

@@ -1,6 +1,9 @@
 //! Integration: the full distributed protocol across modules — datasets,
 //! overlays, churn models, and the experiment runner.
 
+// Plain-data configs are mutated after `default()` on purpose (see lib.rs).
+#![allow(clippy::field_reassign_with_default)]
+
 use duddsketch::churn::ChurnKind;
 use duddsketch::config::{ExperimentConfig, GraphKind};
 use duddsketch::data::{all_peer_datasets, DatasetKind};

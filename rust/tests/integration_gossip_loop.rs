@@ -1,0 +1,235 @@
+//! Integration: the continuous service-driven gossip loop.
+//!
+//! Acceptance (ISSUE 2): with ingest live, the global-view quantiles at
+//! q ∈ {0.5, 0.9, 0.99} converge to within the configured α
+//! relative-error bound of a sequential UDDSketch over the **union**
+//! stream — for a fleet of real services gossiping while their writers
+//! are still inserting, in both manual-stepping and background-thread
+//! modes.
+
+// Plain-data configs are mutated after `default()` on purpose (see lib.rs).
+#![allow(clippy::field_reassign_with_default)]
+
+use duddsketch::config::{GossipLoopConfig, ServiceConfig};
+use duddsketch::data::{peer_dataset, DatasetKind};
+use duddsketch::metrics::relative_error;
+use duddsketch::service::{GossipLoop, GossipMember, QuantileService};
+use duddsketch::sketch::UddSketch;
+use std::sync::Arc;
+use std::time::Duration;
+
+const ACCEPT_QS: [f64; 3] = [0.5, 0.9, 0.99];
+
+fn service_cfg(shards: usize) -> ServiceConfig {
+    let mut c = ServiceConfig::default();
+    c.shards = shards;
+    c.batch_size = 512;
+    c
+}
+
+/// Step until the loop reports `streak` consecutive converged rounds
+/// (bounded); returns the rounds it took.
+fn step_to_convergence(gl: &GossipLoop, streak: usize, max_rounds: usize) -> usize {
+    let mut ok = 0usize;
+    for k in 1..=max_rounds {
+        let r = gl.step();
+        ok = if r.converged { ok + 1 } else { 0 };
+        if ok >= streak {
+            return k;
+        }
+    }
+    panic!("loop did not converge within {max_rounds} rounds");
+}
+
+/// The acceptance test: three live services ingest concurrently while
+/// the fleet gossips; after the streams end the global view of *every*
+/// service converges to the sequential union sketch within α.
+#[test]
+fn global_view_converges_to_union_while_ingest_continues() {
+    let nodes = 3;
+    let items = 12_000;
+    let master = duddsketch::rng::default_rng(42);
+    let datasets: Vec<Vec<f64>> = (0..nodes)
+        .map(|i| peer_dataset(DatasetKind::Exponential, i, items, &master))
+        .collect();
+
+    let mut seq: UddSketch = UddSketch::new(0.001, 1024).unwrap();
+    for d in &datasets {
+        seq.extend(d);
+    }
+
+    let services: Vec<Arc<QuantileService>> = (0..nodes)
+        .map(|_| QuantileService::start_shared(service_cfg(2)).unwrap())
+        .collect();
+    let members: Vec<GossipMember> = services
+        .iter()
+        .map(|s| GossipMember::service(s.clone()))
+        .collect();
+    let gl = GossipLoop::start(GossipLoopConfig::default(), members).unwrap();
+
+    // Live ingest: every service consumes its stream in chunks, with
+    // gossip rounds interleaved — the loop keeps reseeding and gossiping
+    // on partial data, exactly the paper's "tracking while ingesting".
+    let chunks: Vec<Vec<&[f64]>> = datasets.iter().map(|d| d.chunks(3_000).collect()).collect();
+    let mut reseeds = 0usize;
+    for step in 0..4 {
+        for (svc, chunks) in services.iter().zip(&chunks) {
+            let mut w = svc.writer();
+            w.insert_batch(chunks[step]);
+            w.flush();
+            svc.flush();
+        }
+        let r = gl.step();
+        if r.reseeded {
+            reseeds += 1;
+        }
+        gl.step();
+    }
+    assert!(reseeds >= 3, "live ingest must keep reseeding ({reseeds})");
+
+    // Streams done: converge on the final epochs and verify every
+    // service member's view against the union.
+    step_to_convergence(&gl, 3, 400);
+    for i in 0..nodes {
+        let v = gl.member_view(i);
+        assert_eq!(v.epoch(), 4, "member {i} seeded from a stale epoch");
+        assert_eq!(v.estimated_peers(), nodes as f64, "member {i} fleet size");
+        assert_eq!(
+            v.estimated_total(),
+            (nodes * items) as f64,
+            "member {i} union length"
+        );
+        for q in ACCEPT_QS {
+            let est = v.query(q).unwrap();
+            let truth = seq.quantile(q).unwrap();
+            let re = relative_error(est, truth);
+            assert!(
+                re <= seq.alpha() + 1e-9,
+                "member {i} q={q}: global view {est} vs sequential {truth} \
+                 (re {re} > alpha {})",
+                seq.alpha()
+            );
+        }
+    }
+    drop(gl);
+    for svc in services {
+        Arc::try_unwrap(svc).unwrap().shutdown();
+    }
+}
+
+/// Fully background mode: service epoch ticker + gossip loop thread,
+/// writers on their own threads — no manual stepping anywhere. The view
+/// must converge to the union within a bounded wall-clock window.
+#[test]
+fn background_loop_converges_with_live_tickers() {
+    let items = 20_000;
+    let master = duddsketch::rng::default_rng(7);
+    let data_a = peer_dataset(DatasetKind::Uniform, 0, items, &master);
+    let data_b = peer_dataset(DatasetKind::Uniform, 1, items, &master);
+
+    let mut seq: UddSketch = UddSketch::new(0.001, 1024).unwrap();
+    seq.extend(&data_a);
+    seq.extend(&data_b);
+
+    let mut cfg = service_cfg(2);
+    cfg.epoch_interval_ms = 10;
+    let svc_a = QuantileService::start_shared(cfg.clone()).unwrap();
+    let svc_b = QuantileService::start_shared(cfg).unwrap();
+
+    let mut gcfg = GossipLoopConfig::default();
+    gcfg.round_interval_ms = 5;
+    let gl = GossipLoop::start(
+        gcfg,
+        vec![
+            GossipMember::service(svc_a.clone()),
+            GossipMember::service(svc_b.clone()),
+        ],
+    )
+    .unwrap();
+
+    std::thread::scope(|scope| {
+        for (svc, data) in [(&svc_a, &data_a), (&svc_b, &data_b)] {
+            let mut w = svc.writer();
+            scope.spawn(move || {
+                for chunk in data.chunks(2_000) {
+                    w.insert_batch(chunk);
+                    w.flush();
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+            });
+        }
+    });
+
+    // Writers are done; tickers fold the tails, the loop reseeds and
+    // converges — all in the background.
+    let deadline = std::time::Instant::now() + Duration::from_secs(30);
+    loop {
+        let v = gl.view();
+        if v.converged() && v.estimated_total() == (2 * items) as f64 {
+            for q in ACCEPT_QS {
+                let est = v.query(q).unwrap();
+                let truth = seq.quantile(q).unwrap();
+                let re = relative_error(est, truth);
+                assert!(
+                    re <= seq.alpha() + 1e-9,
+                    "q={q}: {est} vs {truth} (re {re})"
+                );
+            }
+            break;
+        }
+        assert!(
+            std::time::Instant::now() < deadline,
+            "background loop never converged on the full union \
+             (round {}, total {})",
+            v.round(),
+            v.estimated_total()
+        );
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    let final_view = gl.shutdown();
+    assert!(final_view.round() > 0);
+    Arc::try_unwrap(svc_a).unwrap().shutdown();
+    Arc::try_unwrap(svc_b).unwrap().shutdown();
+}
+
+/// One live service among simulated remote peers: the fleet-size and
+/// union estimates still come out right, and the converged view answers
+/// exactly like the sequential union sketch.
+#[test]
+fn live_service_among_static_peers() {
+    let nodes = 8;
+    let items = 4_000;
+    let master = duddsketch::rng::default_rng(11);
+    let datasets: Vec<Vec<f64>> = (0..nodes)
+        .map(|i| peer_dataset(DatasetKind::Normal, i, items, &master))
+        .collect();
+
+    let mut seq: UddSketch = UddSketch::new(0.001, 1024).unwrap();
+    for d in &datasets {
+        seq.extend(d);
+    }
+
+    let svc = QuantileService::start_shared(service_cfg(2)).unwrap();
+    let mut w = svc.writer();
+    w.insert_batch(&datasets[0]);
+    w.flush();
+    svc.flush();
+
+    let mut members = vec![GossipMember::service(svc.clone())];
+    for d in &datasets[1..] {
+        members.push(GossipMember::from_dataset(d, 0.001, 1024).unwrap());
+    }
+    let gl = GossipLoop::start(GossipLoopConfig::default(), members).unwrap();
+    let rounds = step_to_convergence(&gl, 3, 400);
+    let v = gl.view();
+    assert_eq!(v.estimated_peers(), nodes as f64);
+    assert_eq!(v.estimated_total(), (nodes * items) as f64);
+    for q in ACCEPT_QS {
+        let est = v.query(q).unwrap();
+        let truth = seq.quantile(q).unwrap();
+        let re = relative_error(est, truth);
+        assert!(re <= seq.alpha() + 1e-9, "q={q} after {rounds} rounds: re {re}");
+    }
+    drop(gl);
+    Arc::try_unwrap(svc).unwrap().shutdown();
+}

@@ -4,6 +4,9 @@
 //! Requires `make artifacts` (skipped gracefully when the PJRT plugin or
 //! the artifacts are unavailable so `cargo test` works pre-`make`).
 
+// Plain-data configs are mutated after `default()` on purpose (see lib.rs).
+#![allow(clippy::field_reassign_with_default)]
+
 use duddsketch::config::{ExecutorKind, ExperimentConfig};
 use duddsketch::data::{all_peer_datasets, DatasetKind};
 use duddsketch::gossip::{

@@ -7,6 +7,9 @@
 //! and collapse-lineage alignment change nothing — and therefore carries
 //! the same α relative-value-error guarantee.
 
+// Plain-data configs are mutated after `default()` on purpose (see lib.rs).
+#![allow(clippy::field_reassign_with_default)]
+
 use duddsketch::config::ServiceConfig;
 use duddsketch::data::{peer_dataset, DatasetKind};
 use duddsketch::metrics::relative_error;
@@ -176,6 +179,87 @@ fn windowed_snapshot_covers_recent_epochs_only() {
     }
     // Lifetime ops still counts evicted epochs.
     assert_eq!(snap.ops(), 25_000);
+    svc.shutdown();
+}
+
+/// Windowed-mode edge cases at the service level: queries on an empty
+/// window (before any epoch, and again after idle epochs aged all data
+/// out) must refuse cleanly, and idle flushes must keep advancing the
+/// window.
+#[test]
+fn windowed_service_empty_window_queries() {
+    let mut c = cfg(2);
+    c.window_slots = 2;
+    let svc = QuantileService::start(c).unwrap();
+
+    // Before the first epoch: empty snapshot, no window, query refused.
+    let snap = svc.snapshot();
+    assert!(snap.is_empty());
+    assert_eq!(snap.window(), None);
+    assert!(snap.quantile(0.5).is_err());
+
+    // One epoch of data.
+    let mut w = svc.writer();
+    w.insert_batch(&[1.0, 2.0, 3.0, 4.0]);
+    w.flush();
+    let snap = svc.flush();
+    assert_eq!(snap.count(), 4.0);
+    assert_eq!(snap.window(), Some((1, 1)));
+
+    // Two idle epochs age the data out of the 2-slot window entirely —
+    // unlike cumulative mode, windowed idle flushes must keep publishing.
+    svc.flush();
+    let snap = svc.flush();
+    assert_eq!(snap.window(), Some((2, 3)));
+    assert_eq!(snap.count(), 0.0, "evicted data survived idle epochs");
+    assert!(
+        snap.quantile(0.5).is_err(),
+        "empty window must refuse queries"
+    );
+    // Lifetime ops still remembers the evicted stream.
+    assert_eq!(snap.ops(), 4);
+    drop(w);
+    svc.shutdown();
+}
+
+/// Ring wrap-around through the service: many more epochs than slots;
+/// every published snapshot agrees with a sequential sketch over the
+/// same K-epoch slice.
+#[test]
+fn windowed_service_agrees_with_sequential_slice_across_wraps() {
+    let master = default_rng(23);
+    let data = peer_dataset(DatasetKind::Uniform, 0, 22_000, &master);
+    let chunks: Vec<&[f64]> = data.chunks(2_000).collect();
+    assert_eq!(chunks.len(), 11);
+    let k = 3usize;
+
+    let mut c = cfg(2);
+    c.window_slots = k;
+    let svc = QuantileService::start(c).unwrap();
+    let mut w = svc.writer();
+    for (e, chunk) in chunks.iter().enumerate() {
+        w.insert_batch(chunk);
+        w.flush();
+        let snap = svc.flush();
+
+        // Sequential sketch over exactly the chunks the window covers.
+        let lo = e.saturating_sub(k - 1);
+        let mut seq: UddSketch = UddSketch::new(0.001, 1024).unwrap();
+        for slice in &chunks[lo..=e] {
+            seq.extend(slice);
+        }
+        assert_eq!(snap.window(), Some((lo as u64 + 1, e as u64 + 1)));
+        assert_eq!(snap.count(), seq.count(), "epoch {}", e + 1);
+        for q in ACCEPT_QS {
+            assert_eq!(
+                snap.quantile(q).unwrap(),
+                seq.quantile(q).unwrap(),
+                "epoch {} q={q}",
+                e + 1
+            );
+        }
+    }
+    drop(w);
     svc.shutdown();
 }
 
