@@ -1,0 +1,73 @@
+//! Cost of one atomic push–pull exchange per transport: the in-process
+//! fast path (direct merge + byte accounting) vs a full loopback-TCP
+//! round trip (connect, framed push, serve, framed reply, adopt) — the
+//! per-exchange overhead a remote fleet pays over a co-located one.
+
+// Plain-data configs are mutated after `default()` on purpose (see lib.rs).
+#![allow(clippy::field_reassign_with_default)]
+
+use duddsketch::config::ServiceConfig;
+use duddsketch::gossip::PeerState;
+use duddsketch::prelude::*;
+use duddsketch::rng::{default_rng, Rng};
+use duddsketch::service::transport::in_process_exchange;
+use duddsketch::util::bench::{black_box, Bencher};
+use std::time::Duration;
+
+fn peer(id: usize, items: usize, seed: u64) -> PeerState {
+    let mut r = default_rng(seed);
+    let data: Vec<f64> = (0..items)
+        .map(|_| 10f64.powf(r.next_f64() * 4.0 - 1.0))
+        .collect();
+    PeerState::init(id, &data, 0.001, 1024).unwrap()
+}
+
+fn main() {
+    let mut b = Bencher::new();
+
+    for items in [10_000usize, 100_000] {
+        let a0 = peer(0, items, 1);
+        let b0 = peer(1, items, 2);
+        b.case(&format!("transport/in-process items={items}"), 1, || {
+            let mut a = a0.clone();
+            let mut bb = b0.clone();
+            black_box(in_process_exchange(&mut a, &mut bb).unwrap());
+        });
+    }
+
+    // Loopback TCP: a 2-node fleet; each measured op is one full framed
+    // push–pull against the serving node's accept loop.
+    let mut cfg = ServiceConfig::default();
+    cfg.shards = 1;
+    cfg.gossip.round_interval_ms = 0;
+    let server = Node::builder()
+        .config(cfg.clone())
+        .self_index(0)
+        .transport(TcpTransport::bind("127.0.0.1:0", Duration::from_millis(1_000)).unwrap())
+        .remote_peer("127.0.0.1:9".parse().unwrap()) // placeholder; server never initiates
+        .build()
+        .unwrap();
+    let addr = server.listen_addr().unwrap();
+    {
+        let mut w = server.writer();
+        w.insert_batch(&(1..=10_000).map(|i| i as f64 * 0.01).collect::<Vec<_>>());
+        w.flush();
+    }
+    server.flush();
+    let _ = server.step(); // seed the fresh epoch into the protocol state
+
+    let transport = TcpTransport::connect_only(Duration::from_millis(1_000)).unwrap();
+    let gen = server.global_view().unwrap().generation();
+    let initiator = peer(1, 10_000, 3);
+    b.case("transport/tcp-loopback items=10000", 1, || {
+        let mut local = initiator.clone();
+        black_box(
+            transport
+                .exchange_remote(&mut local, gen, addr)
+                .expect("loopback exchange"),
+        );
+    });
+
+    server.shutdown();
+    b.finish("transport_exchange");
+}

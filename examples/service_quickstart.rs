@@ -1,27 +1,21 @@
-//! Service quickstart: sharded concurrent ingest, epoch snapshots,
-//! sliding windows, and fronting a gossip peer — in two minutes.
+//! Service quickstart on the `prelude` surface: build a node fluently,
+//! ingest concurrently, query through `QuantileReader`, gossip with a
+//! fleet — and stand up a two-node loopback-TCP fleet — in two minutes.
 //!
 //! ```bash
 //! cargo run --release --example service_quickstart
 //! ```
 
-// Plain-data configs are mutated after `default()` on purpose (see lib.rs).
-#![allow(clippy::field_reassign_with_default)]
-
-use duddsketch::config::{GossipLoopConfig, ServiceConfig};
-use duddsketch::gossip::PeerState;
+use duddsketch::prelude::*;
 use duddsketch::rng::{default_rng, Rng};
-use duddsketch::service::{GossipLoop, GossipMember, QuantileService, ServicePeer};
-use duddsketch::sketch::UddSketch;
 use duddsketch::util::Stopwatch;
+use std::time::Duration;
 
 fn main() -> anyhow::Result<()> {
-    // 1. Start a service: 4 ingest shards, 0.1% relative error.
-    let mut cfg = ServiceConfig::default();
-    cfg.shards = 4;
-    cfg.batch_size = 4096;
-    let svc = QuantileService::start(cfg)?;
-    println!("service up: {} shards", svc.shard_count());
+    // 1. Build a node: every knob is a named method, validated (with the
+    //    key named) before anything spawns. 4 ingest shards, 0.1% error.
+    let node = Node::builder().alpha(0.001).shards(4).batch_size(4096).build()?;
+    println!("node up: {} shards", node.service().shard_count());
 
     // 2. Ingest one million heavy-tailed latencies from 4 concurrent
     //    producers — each gets its own batching writer, no shared state.
@@ -32,14 +26,14 @@ fn main() -> anyhow::Result<()> {
     let sw = Stopwatch::start();
     std::thread::scope(|scope| {
         for part in data.chunks(data.len() / 4 + 1) {
-            let mut w = svc.writer();
+            let mut w = node.writer();
             scope.spawn(move || {
                 w.insert_batch(part);
                 w.flush();
             });
         }
     });
-    let snap = svc.flush();
+    let snap = node.flush();
     println!(
         "ingested {} values in {:.0} ms -> epoch {}, {} buckets, alpha {:.5}",
         snap.count(),
@@ -51,68 +45,63 @@ fn main() -> anyhow::Result<()> {
 
     // 3. Queries hit the published snapshot — lock-free, never blocking
     //    ingest — and answer exactly like one sequential sketch fed the
-    //    same stream (mergeability, Definition 7).
+    //    same stream (mergeability, Definition 7). `QuantileReader` is
+    //    the one interface over both surfaces, so verification code is
+    //    written once.
     let mut seq: UddSketch = UddSketch::new(0.001, 1024).map_err(anyhow::Error::msg)?;
     seq.extend(&data);
-    println!("\n  q      service         sequential");
-    for q in [0.01, 0.5, 0.99] {
-        let a = snap.quantile(q).map_err(anyhow::Error::msg)?;
-        let b = seq.quantile(q).map_err(anyhow::Error::msg)?;
-        println!("  {q:<5}  {a:<14.6e}  {b:<14.6e}");
-        assert_eq!(a, b, "snapshot must equal the sequential sketch");
+    fn report(name: &str, reader: &dyn QuantileReader, qs: &[f64]) -> Vec<f64> {
+        let ests = reader.quantiles(qs).expect("non-empty reader");
+        println!("  {name:<10} n={:<9} p50={:.6e} p99={:.6e}", reader.count(), ests[0], ests[1]);
+        ests
     }
+    println!("\n  surface    count     p50           p99");
+    let a = report("snapshot", snap.as_ref(), &[0.5, 0.99]);
+    let b = report("sequential", &seq, &[0.5, 0.99]);
+    assert_eq!(a, b, "snapshot must equal the sequential sketch");
 
     // 4. Turnstile deletes ride the same sharded path.
-    let mut w = svc.writer();
+    let mut w = node.writer();
     for &x in &data[..100_000] {
         w.delete(x);
     }
     w.flush();
     drop(w);
-    let snap = svc.flush();
+    let snap = node.flush();
     println!(
         "\nafter deleting the first 100k: count = {} (epoch {})",
         snap.count(),
         snap.epoch()
     );
+    node.shutdown();
 
-    // 5. The live snapshot can front a gossip peer (Algorithm 3's local
-    //    sketch, maintained by the service instead of replayed).
-    let peer = ServicePeer::new(0, &svc);
-    let other = PeerState::init(1, &data[..50_000], 0.001, 1024).map_err(anyhow::Error::msg)?;
-    let mut mine = peer.into_state();
-    let mut theirs = other;
-    PeerState::exchange(&mut mine, &mut theirs).map_err(anyhow::Error::msg)?;
-    println!(
-        "gossip exchange done: peer estimates global p99 = {:.6e}",
-        mine.query(0.99).map_err(anyhow::Error::msg)?
-    );
-
-    svc.shutdown();
-    println!("service shut down cleanly");
-
-    // 6. Or let the continuous gossip loop do all of that: a fleet of
-    //    services (here: one live service + two simulated peers) keeps a
-    //    network-converged global view published next to each local
-    //    snapshot — refresh → exchange → serve, every round.
-    let mut cfg = ServiceConfig::default();
-    cfg.shards = 2;
-    let svc = QuantileService::start_shared(cfg)?;
-    let mut w = svc.writer();
+    // 5. A gossiping node: the builder wires the fleet and the loop in
+    //    one expression. Here: one live service + two simulated peers on
+    //    the in-process transport (the default).
+    let node = Node::builder()
+        .alpha(0.001)
+        .shards(2)
+        .peer(GossipMember::from_dataset(
+            &(4001..=8000).map(f64::from).collect::<Vec<_>>(),
+            0.001,
+            1024,
+        )?)
+        .peer(GossipMember::from_dataset(
+            &(8001..=12000).map(f64::from).collect::<Vec<_>>(),
+            0.001,
+            1024,
+        )?)
+        .build()?;
+    let mut w = node.writer();
     w.insert_batch(&(1..=4000).map(f64::from).collect::<Vec<_>>());
     w.flush();
-    svc.flush();
-    let members = vec![
-        GossipMember::service(svc.clone()),
-        GossipMember::from_dataset(&(4001..=8000).map(f64::from).collect::<Vec<_>>(), 0.001, 1024)?,
-        GossipMember::from_dataset(&(8001..=12000).map(f64::from).collect::<Vec<_>>(), 0.001, 1024)?,
-    ];
-    let gl = GossipLoop::start(GossipLoopConfig::default(), members)?;
+    drop(w);
+    node.flush();
     let mut rounds = 0;
-    while !gl.step().converged && rounds < 100 {
+    while !node.step().expect("gossip enabled").converged && rounds < 100 {
         rounds += 1;
     }
-    let view = gl.view();
+    let view = node.global_view().expect("gossip enabled");
     println!(
         "\ngossip loop: {} rounds -> fleet size {}, union length {}, global p50 = {:.6e}",
         view.round(),
@@ -120,6 +109,51 @@ fn main() -> anyhow::Result<()> {
         view.estimated_total(),
         view.query(0.5).map_err(anyhow::Error::msg)?
     );
-    gl.shutdown();
+    node.shutdown();
+
+    // 6. The same loop over real sockets: bind each node's TcpTransport
+    //    first (the address book must exist before any loop starts),
+    //    then list every other node as a remote peer — member order is
+    //    global, `self_index` marks this node's slot. Exchanges ship
+    //    length-prefixed codec frames; failures and timeouts cancel the
+    //    exchange with both sides keeping their pre-round state (§7.2).
+    let deadline = Duration::from_millis(500);
+    let t0 = TcpTransport::bind("127.0.0.1:0", deadline)?;
+    let t1 = TcpTransport::bind("127.0.0.1:0", deadline)?;
+    let (a0, a1) = (t0.listen_addr().unwrap(), t1.listen_addr().unwrap());
+    let node0 = Node::builder()
+        .shards(2)
+        .exchange_deadline_ms(500)
+        .self_index(0)
+        .transport(t0)
+        .remote_peer(a1)
+        .build()?;
+    let node1 = Node::builder()
+        .shards(2)
+        .exchange_deadline_ms(500)
+        .self_index(1)
+        .transport(t1)
+        .remote_peer(a0)
+        .build()?;
+    for (node, lo, hi) in [(&node0, 1, 5000), (&node1, 5001, 10000)] {
+        let mut w = node.writer();
+        w.insert_batch(&(lo..=hi).map(f64::from).collect::<Vec<_>>());
+        w.flush();
+        node.flush();
+    }
+    for _ in 0..6 {
+        node0.step();
+        node1.step();
+    }
+    let v = node1.global_view().expect("gossip enabled");
+    println!(
+        "tcp fleet: node1 sees {} peers, union length {}, global p50 = {:.6e}",
+        v.estimated_peers(),
+        v.estimated_total(),
+        v.query(0.5).map_err(anyhow::Error::msg)?
+    );
+    node0.shutdown();
+    node1.shutdown();
+    println!("fleet shut down cleanly");
     Ok(())
 }

@@ -9,6 +9,9 @@
 //! * `serve-bench` — sharded ingest service throughput vs sequential.
 //! * `serve-gossip` — live ingest + continuous gossip loop, per-round
 //!   convergence metrics, global view verified against the union stream.
+//! * `serve-remote` — a fleet of real nodes gossiping over loopback TCP
+//!   (length-prefixed codec frames, accept loop per node), converging to
+//!   the sequential union sketch while ingest continues.
 //! * `info` — build/runtime/artifact diagnostics.
 
 use crate::config::ExperimentConfig;
@@ -108,6 +111,15 @@ USAGE:
       over the union stream
       keys: serve-bench keys plus gossip_fanout gossip_graph gossip_drift
             gossip_probes gossip_seed
+  duddsketch serve-remote [--dataset NAME] [--items N] [--nodes P]
+            [--rounds R] [--q Q1,Q2,...] [--seed X] [key=value ...]
+      run P real nodes on loopback TCP: every node binds an accept loop,
+      lists the others as remote peers, and gossips framed PeerStates
+      (push–pull with per-exchange deadlines, §7.2 cancellation) while
+      its own ingest continues; every node's global view is verified
+      against a sequential UDDSketch over the union stream
+      keys: serve-gossip keys plus gossip_deadline_ms (shards defaults
+            to 2 per node here)
   duddsketch info
       platform, artifact inventory, defaults
 
@@ -537,6 +549,228 @@ fn cmd_serve_gossip(args: &Args) -> Result<String> {
     Ok(out)
 }
 
+fn cmd_serve_remote(args: &Args) -> Result<String> {
+    use crate::service::{Node, TcpTransport};
+    use std::net::SocketAddr;
+    use std::time::Duration;
+
+    let kind: DatasetKind = args
+        .flag("dataset")
+        .unwrap_or("exponential")
+        .parse()
+        .map_err(anyhow::Error::msg)?;
+    let items: usize = args.flag("items").unwrap_or("8000").parse()?;
+    let nodes: usize = args.flag("nodes").unwrap_or("4").parse()?;
+    let rounds: usize = args.flag("rounds").unwrap_or("40").parse()?;
+    let seed: u64 = args.flag("seed").unwrap_or("42").parse()?;
+    let qs: Vec<f64> = args
+        .flag("q")
+        .unwrap_or("0.5,0.9,0.99")
+        .split(',')
+        .map(|s| s.trim().parse::<f64>())
+        .collect::<Result<_, _>>()?;
+    let mut cfg = crate::config::ServiceConfig::default();
+    // Each node runs its own service; one-shard-per-core per node would
+    // oversubscribe the machine `nodes`-fold. Overridable via shards=.
+    cfg.shards = 2;
+    for (k, v) in &args.overrides {
+        cfg.set(k, v).map_err(anyhow::Error::msg)?;
+    }
+    cfg.validate().map_err(anyhow::Error::msg)?;
+    if nodes < 2 {
+        bail!("serve-remote: need --nodes >= 2");
+    }
+    if items == 0 {
+        bail!("serve-remote: need --items >= 1");
+    }
+    if rounds == 0 {
+        bail!("serve-remote: need --rounds >= 1");
+    }
+    if cfg.window_slots > 0 {
+        bail!(
+            "serve-remote: windowed mode evicts epochs, so the union-stream \
+             verification is undefined — use window=0"
+        );
+    }
+
+    // One local stream per node, as in the paper's per-peer workloads.
+    let master = crate::rng::default_rng(seed);
+    let datasets: Vec<Vec<f64>> = (0..nodes)
+        .map(|i| crate::data::peer_dataset(kind, i, items, &master))
+        .collect();
+
+    // Sequential reference over the union stream — the convergence target.
+    let mut seq: UddSketch =
+        UddSketch::new(cfg.alpha, cfg.max_buckets).map_err(anyhow::Error::msg)?;
+    for d in &datasets {
+        seq.extend(d);
+    }
+
+    // Bind every node's transport first so the full address book exists
+    // before any loop starts, then build the fleet: node k's own service
+    // sits at global member index k, everyone else is a remote peer.
+    let mut gcfg = cfg.gossip.clone();
+    gcfg.round_interval_ms = 0; // the CLI is the clock: one step per row
+    let deadline = Duration::from_millis(gcfg.exchange_deadline_ms);
+    let transports: Vec<TcpTransport> = (0..nodes)
+        .map(|_| TcpTransport::bind("127.0.0.1:0", deadline))
+        .collect::<Result<_>>()?;
+    let addrs: Vec<SocketAddr> = transports
+        .iter()
+        .map(|t| t.listen_addr().expect("bound transport has an address"))
+        .collect();
+    let mut svc_cfg = cfg.clone();
+    svc_cfg.gossip = gcfg.clone();
+    let mut fleet: Vec<Node> = Vec::with_capacity(nodes);
+    for (k, t) in transports.into_iter().enumerate() {
+        let mut b = Node::builder()
+            .config(svc_cfg.clone())
+            .self_index(k)
+            .transport(t);
+        for (j, &addr) in addrs.iter().enumerate() {
+            if j != k {
+                b = b.remote_peer(addr);
+            }
+        }
+        fleet.push(b.build()?);
+    }
+
+    let mut out = format!(
+        "serve-remote: dataset={} items/node={} nodes={} rounds<={} {}\n",
+        kind.name(),
+        items,
+        nodes,
+        rounds,
+        gcfg.summary()
+    );
+    out.push_str(&format!("  service: {}\n", cfg.summary()));
+    for (k, node) in fleet.iter().enumerate() {
+        out.push_str(&format!(
+            "  node {k}: listening on {}\n",
+            node.listen_addr().expect("tcp node listens")
+        ));
+    }
+    out.push_str("  sweep  exchanges  failed  KiB     gen(max)  drift(node0)\n");
+
+    // Live ingest: every node's stream lands in chunks between sweeps, so
+    // nodes reseed (and propagate restart generations) mid-run exactly as
+    // a production fleet would.
+    let chunks: Vec<Vec<&[f64]>> = datasets
+        .iter()
+        .map(|d| d.chunks(items.div_ceil(4).max(1)).collect())
+        .collect();
+    let mut writers: Vec<_> = fleet.iter().map(|n| n.writer()).collect();
+    let mut fed = 0usize;
+    for sweep in 1..=rounds {
+        if fed < 4 {
+            for (k, node) in fleet.iter().enumerate() {
+                if let Some(chunk) = chunks[k].get(fed) {
+                    writers[k].insert_batch(chunk);
+                    writers[k].flush();
+                    node.flush();
+                }
+            }
+            fed += 1;
+        }
+        let mut exchanges = 0usize;
+        let mut failed = 0usize;
+        let mut bytes = 0usize;
+        for node in &fleet {
+            let r = node.step().expect("gossip enabled");
+            exchanges += r.exchanges;
+            failed += r.failed;
+            bytes += r.bytes;
+        }
+        let gen_max = fleet
+            .iter()
+            .map(|n| n.global_view().expect("gossip enabled").generation())
+            .max()
+            .unwrap_or(0);
+        let drift0 = fleet[0].global_view().expect("gossip enabled").drift();
+        out.push_str(&format!(
+            "  {sweep:<5}  {exchanges:<9}  {failed:<6}  {:<6.1}  {gen_max:<8}  {drift0:.3e}\n",
+            bytes as f64 / 1024.0,
+        ));
+    }
+    // Drain any chunks the round budget did not cover.
+    for (k, node) in fleet.iter().enumerate() {
+        for chunk in chunks[k].iter().skip(fed) {
+            writers[k].insert_batch(chunk);
+            writers[k].flush();
+        }
+        node.flush();
+    }
+    drop(writers);
+
+    // Converge on the final epochs (bounded), then verify every node's
+    // global view against the sequential union sketch.
+    let total = (nodes * items) as f64;
+    let mut sweeps = 0usize;
+    let converged = loop {
+        sweeps += 1;
+        for node in &fleet {
+            node.step();
+        }
+        let views: Vec<_> = fleet
+            .iter()
+            .map(|n| n.global_view().expect("gossip enabled"))
+            .collect();
+        let gen0 = views[0].generation();
+        let all = views.iter().all(|v| {
+            v.generation() == gen0 && v.converged() && v.estimated_total() == total
+        });
+        if all {
+            break true;
+        }
+        if sweeps >= 400 {
+            break false;
+        }
+    };
+    let v0 = fleet[0].global_view().expect("gossip enabled");
+    out.push_str(&format!(
+        "  final: +{sweeps} verify sweeps, converged={converged}, \
+         generation={}, p-est={}, N-est={}\n",
+        v0.generation(),
+        v0.estimated_peers(),
+        v0.estimated_total(),
+    ));
+
+    out.push_str("  q       worst-node-view   sequential        rel-diff\n");
+    let alpha_bound = seq.alpha();
+    let mut worst = 0.0f64;
+    for &q in &qs {
+        let truth = seq.quantile(q).map_err(anyhow::Error::msg)?;
+        let mut worst_q = 0.0f64;
+        let mut worst_est = f64::NAN;
+        for node in &fleet {
+            let v = node.global_view().expect("gossip enabled");
+            let est = v.query(q).map_err(anyhow::Error::msg)?;
+            let re = crate::metrics::relative_error(est, truth);
+            if re >= worst_q {
+                worst_q = re;
+                worst_est = est;
+            }
+        }
+        worst = worst.max(worst_q);
+        out.push_str(&format!(
+            "  {q:<6}  {worst_est:<16.8e}  {truth:<16.8e}  {worst_q:.3e}\n"
+        ));
+    }
+    for node in fleet {
+        node.shutdown();
+    }
+    if worst > alpha_bound + 1e-9 {
+        bail!(
+            "remote fleet did not converge to the sequential union sketch: \
+             worst rel-diff {worst:.3e} > alpha {alpha_bound:.3e}"
+        );
+    }
+    out.push_str(&format!(
+        "  OK: worst rel-diff {worst:.3e} <= alpha {alpha_bound:.3e} across {nodes} nodes\n"
+    ));
+    Ok(out)
+}
+
 fn cmd_info() -> Result<String> {
     let mut out = String::new();
     out.push_str(&format!(
@@ -575,6 +809,7 @@ pub fn dispatch(args: &Args) -> Result<String> {
         "quantiles" => cmd_quantiles(args),
         "serve-bench" => cmd_serve_bench(args),
         "serve-gossip" => cmd_serve_gossip(args),
+        "serve-remote" => cmd_serve_remote(args),
         "info" => cmd_info(),
         "help" | "--help" | "-h" => Ok(USAGE.to_string()),
         other => bail!("unknown command '{other}'\n{USAGE}"),
@@ -716,6 +951,42 @@ mod tests {
         assert!(out.contains("OK: worst rel-diff"), "{out}");
         // Live ingest reseeds the fleet at least once mid-run.
         assert!(out.contains("yes"), "no reseed observed:\n{out}");
+    }
+
+    #[test]
+    fn serve_remote_converges_over_loopback_tcp() {
+        let a = args(&[
+            "serve-remote",
+            "--dataset",
+            "uniform",
+            "--items",
+            "1500",
+            "--nodes",
+            "3",
+            "--rounds",
+            "20",
+            "--q",
+            "0.5,0.99",
+            "batch=256",
+            "shards=2",
+        ]);
+        let out = dispatch(&a).unwrap();
+        assert!(out.contains("serve-remote"), "{out}");
+        assert!(out.contains("listening on 127.0.0.1:"), "{out}");
+        assert!(out.contains("worst-node-view"), "{out}");
+        assert!(out.contains("OK: worst rel-diff"), "{out}");
+    }
+
+    #[test]
+    fn serve_remote_rejects_bad_inputs() {
+        let a = args(&["serve-remote", "--nodes", "1"]);
+        assert!(dispatch(&a).is_err());
+        let a = args(&["serve-remote", "--items", "0"]);
+        assert!(dispatch(&a).is_err());
+        let a = args(&["serve-remote", "--items", "100", "window=2"]);
+        assert!(dispatch(&a).is_err());
+        let a = args(&["serve-remote", "--items", "100", "gossip_deadline_ms=0"]);
+        assert!(dispatch(&a).is_err());
     }
 
     #[test]

@@ -236,7 +236,11 @@ pub struct ServiceConfig {
     pub alpha: f64,
     /// Bucket budget m per sketch.
     pub max_buckets: usize,
-    /// Ingest shards (worker threads); 0 = one per available core.
+    /// Ingest shards (worker threads); must be ≥ 1. The default resolves
+    /// to one per available core at construction, so a zero here is
+    /// always an explicit mistake and is rejected by
+    /// [`ServiceConfig::validate`] with a named-key error instead of
+    /// surfacing as a downstream panic.
     pub shards: usize,
     /// Values per ingest message (writer-side batching).
     pub batch_size: usize,
@@ -258,7 +262,9 @@ impl Default for ServiceConfig {
         Self {
             alpha: 0.001,
             max_buckets: 1024,
-            shards: 0,
+            shards: std::thread::available_parallelism()
+                .map(|c| c.get())
+                .unwrap_or(1),
             batch_size: 1024,
             queue_depth: 64,
             epoch_interval_ms: 0,
@@ -269,17 +275,6 @@ impl Default for ServiceConfig {
 }
 
 impl ServiceConfig {
-    /// Shard count with the `0 = all cores` default resolved.
-    pub fn effective_shards(&self) -> usize {
-        if self.shards > 0 {
-            self.shards
-        } else {
-            std::thread::available_parallelism()
-                .map(|c| c.get())
-                .unwrap_or(1)
-        }
-    }
-
     /// Apply one `key=value` assignment (CLI overrides).
     pub fn set(&mut self, key: &str, value: &str) -> Result<(), String> {
         let parse_err = |k: &str, v: &str| format!("bad value '{v}' for key '{k}'");
@@ -310,13 +305,20 @@ impl ServiceConfig {
         Ok(())
     }
 
-    /// Sanity-check parameter ranges.
+    /// Validate every knob at construction time, naming the offending key
+    /// — a bad value must fail here, not as a panic deep in a shard or
+    /// exchange thread.
     pub fn validate(&self) -> Result<(), String> {
         if !(self.alpha > 0.0 && self.alpha < 1.0) {
+            // The range check also rejects NaN/±inf: no non-finite alpha
+            // satisfies 0 < alpha < 1.
             return Err(format!("alpha must be in (0,1), got {}", self.alpha));
         }
         if self.max_buckets < 2 {
             return Err("max_buckets must be >= 2".into());
+        }
+        if self.shards < 1 {
+            return Err("shards must be >= 1 (one ingest worker per shard)".into());
         }
         if self.batch_size < 1 {
             return Err("batch_size must be >= 1".into());
@@ -330,11 +332,10 @@ impl ServiceConfig {
     /// One-line human summary.
     pub fn summary(&self) -> String {
         format!(
-            "alpha={} m={} shards={} (effective {}) batch={} queue={} epoch_ms={} window={}",
+            "alpha={} m={} shards={} batch={} queue={} epoch_ms={} window={}",
             self.alpha,
             self.max_buckets,
             self.shards,
-            self.effective_shards(),
             self.batch_size,
             self.queue_depth,
             self.epoch_interval_ms,
@@ -364,7 +365,17 @@ pub struct GossipLoopConfig {
     /// Quantiles probed for the drift metric.
     pub probe_quantiles: Vec<f64>,
     /// Seed for overlay generation and exchange-partner randomness.
+    /// Remote fleets must share one seed (and one graph kind) so every
+    /// node builds the same overlay.
     pub seed: u64,
+    /// Per-exchange transport deadline in milliseconds (connect, read,
+    /// and write individually), used by remote transports such as
+    /// [`TcpTransport`](crate::service::TcpTransport). An exchange that
+    /// misses the deadline is cancelled: both sides keep their pre-round
+    /// state (§7.2) and the failure is counted in
+    /// [`GossipRoundReport::failed`](crate::service::GossipRoundReport).
+    /// Must be ≥ 1 — a zero deadline would fail every exchange.
+    pub exchange_deadline_ms: u64,
 }
 
 impl Default for GossipLoopConfig {
@@ -376,6 +387,7 @@ impl Default for GossipLoopConfig {
             convergence_rel: 1e-9,
             probe_quantiles: vec![0.5, 0.9, 0.99],
             seed: 42,
+            exchange_deadline_ms: 1_000,
         }
     }
 }
@@ -404,27 +416,39 @@ impl GossipLoopConfig {
                 self.probe_quantiles = qs.map_err(|_| parse_err(key, value))?;
             }
             "seed" => self.seed = value.parse().map_err(|_| parse_err(key, value))?,
+            "exchange_deadline_ms" | "deadline_ms" | "deadline" => {
+                self.exchange_deadline_ms =
+                    value.parse().map_err(|_| parse_err(key, value))?
+            }
             other => return Err(format!("unknown gossip config key '{other}'")),
         }
         Ok(())
     }
 
-    /// Sanity-check parameter ranges.
+    /// Validate every knob at construction time, naming the offending
+    /// key (`gossip_`-prefixed, as on the CLI).
     pub fn validate(&self) -> Result<(), String> {
         if self.fan_out < 1 {
-            return Err("gossip fan_out must be >= 1".into());
+            return Err("gossip_fan_out must be >= 1".into());
         }
         if self.convergence_rel.is_nan() || self.convergence_rel < 0.0 {
             return Err(format!(
-                "gossip convergence_rel must be >= 0, got {}",
+                "gossip_convergence_rel must be >= 0, got {}",
                 self.convergence_rel
             ));
         }
         if self.probe_quantiles.is_empty() {
-            return Err("gossip probe_quantiles must be non-empty".into());
+            return Err("gossip_probe_quantiles must be non-empty".into());
         }
         if self.probe_quantiles.iter().any(|q| !(0.0..=1.0).contains(q)) {
-            return Err("gossip probe_quantiles must lie in [0,1]".into());
+            return Err("gossip_probe_quantiles must lie in [0,1]".into());
+        }
+        if self.exchange_deadline_ms < 1 {
+            return Err(
+                "gossip_exchange_deadline_ms must be >= 1 (a zero deadline \
+                 cancels every remote exchange)"
+                    .into(),
+            );
         }
         Ok(())
     }
@@ -432,13 +456,14 @@ impl GossipLoopConfig {
     /// One-line human summary.
     pub fn summary(&self) -> String {
         format!(
-            "round_ms={} fan_out={} graph={} drift<={:e} probes={:?} seed={}",
+            "round_ms={} fan_out={} graph={} drift<={:e} probes={:?} seed={} deadline_ms={}",
             self.round_interval_ms,
             self.fan_out,
             self.graph.name(),
             self.convergence_rel,
             self.probe_quantiles,
             self.seed,
+            self.exchange_deadline_ms,
         )
     }
 }
@@ -496,8 +521,34 @@ mod tests {
     fn service_config_defaults_validate() {
         let c = ServiceConfig::default();
         c.validate().unwrap();
-        assert!(c.effective_shards() >= 1);
-        assert!(c.summary().contains("shards=0"));
+        assert!(c.shards >= 1, "default shards resolve to the core count");
+        assert!(c.summary().contains("shards="));
+    }
+
+    #[test]
+    fn validation_names_the_offending_key() {
+        // Satellite (ISSUE 3): bad knobs fail at construction with the
+        // key named, never as a downstream panic.
+        let mut c = ServiceConfig::default();
+        c.shards = 0;
+        assert!(c.validate().unwrap_err().contains("shards"));
+
+        let mut c = ServiceConfig::default();
+        c.alpha = f64::NAN;
+        assert!(c.validate().unwrap_err().contains("alpha"));
+        c.alpha = f64::INFINITY;
+        assert!(c.validate().unwrap_err().contains("alpha"));
+
+        let mut c = ServiceConfig::default();
+        c.gossip.fan_out = 0;
+        assert!(c.validate().unwrap_err().contains("gossip_fan_out"));
+
+        let mut c = ServiceConfig::default();
+        c.gossip.exchange_deadline_ms = 0;
+        assert!(c
+            .validate()
+            .unwrap_err()
+            .contains("gossip_exchange_deadline_ms"));
     }
 
     #[test]
@@ -508,7 +559,6 @@ mod tests {
         c.set("window", "8").unwrap();
         c.set("epoch_ms", "250").unwrap();
         assert_eq!(c.shards, 4);
-        assert_eq!(c.effective_shards(), 4);
         assert_eq!(c.batch_size, 512);
         assert_eq!(c.window_slots, 8);
         assert_eq!(c.epoch_interval_ms, 250);
@@ -530,12 +580,14 @@ mod tests {
         c.set("gossip_drift", "1e-6").unwrap();
         c.set("gossip_probes", "0.5, 0.99").unwrap();
         c.set("gossip_seed", "7").unwrap();
+        c.set("gossip_deadline_ms", "250").unwrap();
         assert_eq!(c.gossip.round_interval_ms, 25);
         assert_eq!(c.gossip.fan_out, 2);
         assert_eq!(c.gossip.graph, GraphKind::Complete);
         assert_eq!(c.gossip.convergence_rel, 1e-6);
         assert_eq!(c.gossip.probe_quantiles, vec![0.5, 0.99]);
         assert_eq!(c.gossip.seed, 7);
+        assert_eq!(c.gossip.exchange_deadline_ms, 250);
         c.validate().unwrap();
         assert!(c.set("gossip_bogus", "1").is_err());
 

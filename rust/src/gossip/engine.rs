@@ -285,24 +285,7 @@ pub fn fan_out_round<R: Rng>(
         if !online[l] {
             continue;
         }
-        // Select `fan_out` distinct online neighbours of l.
-        scratch.clear();
-        scratch.extend(
-            graph
-                .neighbours(l)
-                .iter()
-                .copied()
-                .filter(|&j| online[j]),
-        );
-        if scratch.is_empty() {
-            continue;
-        }
-        let k = fan_out.min(scratch.len());
-        // Partial Fisher–Yates: first k entries become the selection.
-        for i in 0..k {
-            let j = i + rng.index(scratch.len() - i);
-            scratch.swap(i, j);
-        }
+        let k = select_exchange_partners(graph, online, l, fan_out, &mut scratch, rng);
         for &j in scratch.iter().take(k) {
             if exchange_drop > 0.0 && rng.chance(exchange_drop) {
                 dropped += 1;
@@ -327,6 +310,44 @@ pub fn fan_out_round<R: Rng>(
         }
     }
     (exchanges, dropped, bytes)
+}
+
+/// Select up to `fan_out` distinct online neighbours of `l` into the
+/// front of `scratch` (a caller-owned buffer, reused across initiators)
+/// and return how many were selected.
+///
+/// This is Algorithm 4's partner draw — a partial Fisher–Yates over the
+/// online neighbourhood — factored out so the simulation round above and
+/// the service layer's transport-driven round
+/// ([`GossipLoop`](crate::service::GossipLoop)) consume rng draws
+/// **identically**: the refactored in-process loop reproduces the PR 2
+/// exchange schedule bit for bit.
+pub fn select_exchange_partners<R: Rng>(
+    graph: &Graph,
+    online: &[bool],
+    l: usize,
+    fan_out: usize,
+    scratch: &mut Vec<usize>,
+    rng: &mut R,
+) -> usize {
+    scratch.clear();
+    scratch.extend(
+        graph
+            .neighbours(l)
+            .iter()
+            .copied()
+            .filter(|&j| online[j]),
+    );
+    if scratch.is_empty() {
+        return 0;
+    }
+    let k = fan_out.min(scratch.len());
+    // Partial Fisher–Yates: first k entries become the selection.
+    for i in 0..k {
+        let j = i + rng.index(scratch.len() - i);
+        scratch.swap(i, j);
+    }
+    k
 }
 
 /// Build all peers' initial states, in parallel across available cores

@@ -201,6 +201,43 @@ impl PeerState {
             })
             .ok_or(SketchError::Empty)
     }
+
+    /// Algorithm 6's count scaling applied to the rank walk: estimated
+    /// CDF of the **union** stream at `x`, counting every bucket whose
+    /// representative is ≤ x with its counter scaled back to a global
+    /// count by `round(B̃_i · p̃)` — the same convention as
+    /// [`PeerState::query`], so a fully converged peer returns exactly
+    /// the sequential estimate. Falls back to the local sketch while no
+    /// global information has arrived (`q̃ = 0`).
+    pub fn cdf(&self, x: f64) -> Result<f64, SketchError> {
+        if x.is_nan() {
+            return Err(SketchError::UnsupportedValue(x));
+        }
+        let p_hat = self.estimated_peers();
+        if !p_hat.is_finite() {
+            return self.sketch.cdf(x);
+        }
+        let n_hat = (p_hat * self.n_tilde).round();
+        if n_hat <= 0.0 {
+            return Err(SketchError::Empty);
+        }
+        let mapping = self.sketch.mapping();
+        let mut acc = 0.0;
+        self.sketch.negative_store().for_each(|i, c| {
+            if -mapping.value(i) <= x {
+                acc += (c * p_hat).round();
+            }
+        });
+        if x >= 0.0 {
+            acc += (self.sketch.zero_weight() * p_hat).round();
+        }
+        self.sketch.positive_store().for_each(|i, c| {
+            if mapping.value(i) <= x {
+                acc += (c * p_hat).round();
+            }
+        });
+        Ok((acc / n_hat).clamp(0.0, 1.0))
+    }
 }
 
 #[cfg(test)]
@@ -279,6 +316,16 @@ mod tests {
             let tru = seq.quantile(q).unwrap();
             assert_eq!(est, tru, "q={q}");
         }
+        for x in [0.5, 1.0, 10.0, 50.0, 99.0, 200.0] {
+            assert_eq!(avg.cdf(x).unwrap(), seq.cdf(x).unwrap(), "cdf x={x}");
+        }
+    }
+
+    #[test]
+    fn cdf_without_global_info_falls_back_to_local() {
+        let s = PeerState::init(3, &[5.0, 6.0, 7.0], 0.01, 64).unwrap();
+        assert_eq!(s.cdf(6.5).unwrap(), s.sketch.cdf(6.5).unwrap());
+        assert!(s.cdf(f64::NAN).is_err());
     }
 
     #[test]

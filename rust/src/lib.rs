@@ -25,9 +25,12 @@
 //!   publication for `quantile`/`quantiles`/`cdf` queries that never
 //!   block ingest, an optional sliding-window mode (ring of per-interval
 //!   sub-sketches merged on demand), adapters fronting a gossip peer
-//!   with the live snapshot, and the continuous gossip loop
-//!   ([`service::GossipLoop`]) that keeps a fleet of services converged
-//!   on a network-wide [`service::GlobalView`] while ingest continues.
+//!   with the live snapshot, the continuous gossip loop
+//!   ([`service::GossipLoop`]) that keeps a fleet converged on a
+//!   network-wide [`service::GlobalView`] while ingest continues, and
+//!   the transport layer ([`service::transport`]) that lets real nodes
+//!   join that fleet over TCP — construction via the fluent
+//!   [`service::Node::builder`].
 //! * [`runtime`] — PJRT execution of AOT-compiled JAX/Pallas artifacts; the
 //!   dense averaging round can run through XLA (`gossip::PjrtExecutor`),
 //!   gated behind the `pjrt` cargo feature.
@@ -45,6 +48,20 @@
 //! for i in 1..=10_000 { s.insert(i as f64); }
 //! let p99 = s.quantile(0.99).unwrap();
 //! assert!((p99 - 9_900.0).abs() / 9_900.0 < 0.01);
+//! ```
+//!
+//! For the serving surface, import the [`prelude`] and build a
+//! [`Node`](service::Node):
+//!
+//! ```
+//! use duddsketch::prelude::*;
+//!
+//! let node = Node::builder().alpha(0.001).shards(2).build().unwrap();
+//! let mut w = node.writer();
+//! w.insert_batch(&[1.0, 2.0, 3.0]);
+//! w.flush();
+//! assert_eq!(node.flush().count(), 3.0);
+//! node.shutdown();
 //! ```
 //!
 //! See `examples/` for the distributed protocol end-to-end, `README.md`
@@ -74,3 +91,25 @@ pub mod util;
 
 /// Crate-wide result alias.
 pub type Result<T> = anyhow::Result<T>;
+
+/// The serving surface in one import: node construction
+/// ([`Node::builder`](service::Node::builder)), the unified query trait
+/// ([`QuantileReader`](sketch::QuantileReader)), the gossip loop, and
+/// the exchange transports.
+///
+/// ```
+/// use duddsketch::prelude::*;
+///
+/// let node = Node::builder().shards(1).build().unwrap();
+/// node.shutdown();
+/// ```
+pub mod prelude {
+    pub use crate::config::{GossipLoopConfig, ServiceConfig};
+    pub use crate::gossip::PeerState;
+    pub use crate::service::{
+        GlobalView, GossipLoop, GossipMember, GossipRoundReport, InProcessTransport, Node,
+        NodeBuilder, QuantileService, ServiceWriter, Snapshot, TcpTransport, Transport,
+        TransportError,
+    };
+    pub use crate::sketch::{QuantileReader, SketchError, UddSketch};
+}

@@ -1,0 +1,434 @@
+//! Fluent construction of a serving node: ingest service + gossip loop +
+//! transport in one expression.
+//!
+//! [`Node::builder()`] is the primary construction path for the service
+//! layer — it replaces the mutate-a-default-[`ServiceConfig`] pattern:
+//! every knob is a named method, validation runs once at
+//! [`NodeBuilder::build`] with the offending key named, and the gossip
+//! loop / transport wiring (member ordering, serve identity, accept
+//! loop) is handled in one place instead of at every call site.
+//!
+//! ```
+//! use duddsketch::prelude::*;
+//!
+//! # fn main() -> anyhow::Result<()> {
+//! // A standalone ingest node (no gossip):
+//! let node = Node::builder().alpha(0.001).shards(2).build()?;
+//! let mut w = node.writer();
+//! w.insert_batch(&[1.0, 2.0, 3.0]);
+//! w.flush();
+//! assert_eq!(node.flush().count(), 3.0);
+//! node.shutdown();
+//!
+//! // A node gossiping with two simulated peers:
+//! let data: Vec<f64> = (1..=1000).map(f64::from).collect();
+//! let node = Node::builder()
+//!     .alpha(0.001)
+//!     .shards(2)
+//!     .window(0)
+//!     .peer(GossipMember::from_dataset(&data[..500], 0.001, 1024)?)
+//!     .peer(GossipMember::from_dataset(&data[500..], 0.001, 1024)?)
+//!     .build()?;
+//! let mut streak = 0;
+//! for _ in 0..500 {
+//!     let report = node.step().expect("gossip enabled");
+//!     streak = if report.converged { streak + 1 } else { 0 };
+//!     if streak >= 3 {
+//!         break;
+//!     }
+//! }
+//! let view = node.global_view().expect("gossip enabled");
+//! assert_eq!(view.estimated_peers(), 3.0);
+//! node.shutdown();
+//! # Ok(())
+//! # }
+//! ```
+//!
+//! For a TCP fleet, bind every node's transport first (so the address
+//! book exists before any loop starts), then build each node with
+//! `.remote_peer(addr)` entries in **global member order** and
+//! `.self_index(k)` marking where this node's own service sits — member
+//! index is the peer id, so all nodes must agree on the ordering (and
+//! share one gossip seed/graph). See the `serve-remote` CLI subcommand
+//! and `rust/tests/integration_remote.rs` for complete fleets.
+
+use super::coordinator::{QuantileService, ServiceWriter};
+use super::gossip_loop::{GlobalView, GossipLoop, GossipMember, GossipRoundReport};
+use super::snapshot::Snapshot;
+use super::transport::{InProcessTransport, Transport};
+use crate::config::{GossipLoopConfig, ServiceConfig};
+use anyhow::{bail, Context, Result};
+use std::net::SocketAddr;
+use std::sync::Arc;
+
+/// A serving node: one [`QuantileService`] plus (optionally) the
+/// [`GossipLoop`] that keeps it converged with a fleet.
+///
+/// Queries pick their surface: [`Node::snapshot`] (this node's stream,
+/// exact epoch fold) or [`Node::global_view`] (the fleet's union stream,
+/// Algorithm 6) — both implement
+/// [`QuantileReader`](crate::sketch::QuantileReader).
+#[derive(Debug)]
+pub struct Node {
+    service: Arc<QuantileService>,
+    gossip: Option<GossipLoop>,
+    self_member: usize,
+}
+
+impl Node {
+    /// Start building a node. See the [module docs](self) for examples.
+    pub fn builder() -> NodeBuilder {
+        NodeBuilder {
+            cfg: ServiceConfig::default(),
+            peers: Vec::new(),
+            self_index: 0,
+            transport: None,
+        }
+    }
+
+    /// The underlying ingest service.
+    pub fn service(&self) -> &Arc<QuantileService> {
+        &self.service
+    }
+
+    /// A new batching ingest handle (one per producer thread).
+    pub fn writer(&self) -> ServiceWriter {
+        self.service.writer()
+    }
+
+    /// The latest published local snapshot. Lock-free.
+    pub fn snapshot(&self) -> Arc<Snapshot> {
+        self.service.snapshot()
+    }
+
+    /// Run one epoch synchronously and return the fresh snapshot.
+    pub fn flush(&self) -> Arc<Snapshot> {
+        self.service.flush()
+    }
+
+    /// The node's gossip loop, when peers were configured.
+    pub fn gossip(&self) -> Option<&GossipLoop> {
+        self.gossip.as_ref()
+    }
+
+    /// Run one gossip round synchronously (None without gossip).
+    pub fn step(&self) -> Option<GossipRoundReport> {
+        self.gossip.as_ref().map(|g| g.step())
+    }
+
+    /// This node's latest [`GlobalView`] (None without gossip). Lock-free.
+    pub fn global_view(&self) -> Option<Arc<GlobalView>> {
+        self.gossip.as_ref().map(|g| g.member_view(self.self_member))
+    }
+
+    /// This node's member index (= peer id) in the fleet.
+    pub fn self_member(&self) -> usize {
+        self.self_member
+    }
+
+    /// The address this node serves inbound exchanges on (None for
+    /// in-process or client-only transports, or without gossip).
+    pub fn listen_addr(&self) -> Option<SocketAddr> {
+        self.gossip.as_ref().and_then(|g| g.listen_addr())
+    }
+
+    /// Stop the gossip loop (if any) and the service; returns the final
+    /// local snapshot.
+    pub fn shutdown(self) -> Arc<Snapshot> {
+        let Node {
+            service, gossip, ..
+        } = self;
+        if let Some(g) = gossip {
+            g.shutdown();
+        }
+        match Arc::try_unwrap(service) {
+            Ok(svc) => svc.shutdown(),
+            // A detached exchange handler can pin the Arc for up to one
+            // transport deadline; the service's Drop retires the shards
+            // once the last handle goes.
+            Err(arc) => {
+                let snap = arc.flush();
+                drop(arc);
+                snap
+            }
+        }
+    }
+}
+
+/// Builder returned by [`Node::builder`]. Every method is a named
+/// configuration knob; [`NodeBuilder::build`] validates the whole
+/// configuration with named-key errors before anything spawns.
+#[derive(Debug)]
+pub struct NodeBuilder {
+    cfg: ServiceConfig,
+    peers: Vec<GossipMember>,
+    self_index: usize,
+    transport: Option<Arc<dyn Transport>>,
+}
+
+impl NodeBuilder {
+    /// Replace the whole service configuration (gossip knobs included).
+    pub fn config(mut self, cfg: ServiceConfig) -> Self {
+        self.cfg = cfg;
+        self
+    }
+
+    /// Sketch accuracy α ∈ (0, 1).
+    pub fn alpha(mut self, alpha: f64) -> Self {
+        self.cfg.alpha = alpha;
+        self
+    }
+
+    /// Bucket budget m per sketch (≥ 2).
+    pub fn max_buckets(mut self, m: usize) -> Self {
+        self.cfg.max_buckets = m;
+        self
+    }
+
+    /// Ingest shards (worker threads, ≥ 1).
+    pub fn shards(mut self, shards: usize) -> Self {
+        self.cfg.shards = shards;
+        self
+    }
+
+    /// Values per ingest message (writer-side batching, ≥ 1).
+    pub fn batch_size(mut self, batch: usize) -> Self {
+        self.cfg.batch_size = batch;
+        self
+    }
+
+    /// Bounded queue depth per shard, in batches (≥ 1).
+    pub fn queue_depth(mut self, depth: usize) -> Self {
+        self.cfg.queue_depth = depth;
+        self
+    }
+
+    /// Background epoch interval in ms (0 = manual `flush` only).
+    pub fn epoch_interval_ms(mut self, ms: u64) -> Self {
+        self.cfg.epoch_interval_ms = ms;
+        self
+    }
+
+    /// Sliding-window ring slots (0 = cumulative all-time serving).
+    pub fn window(mut self, slots: usize) -> Self {
+        self.cfg.window_slots = slots;
+        self
+    }
+
+    /// Replace the whole gossip-loop configuration.
+    pub fn gossip(mut self, gossip: GossipLoopConfig) -> Self {
+        self.cfg.gossip = gossip;
+        self
+    }
+
+    /// Background gossip round interval in ms (0 = manual `step` only).
+    pub fn gossip_interval_ms(mut self, ms: u64) -> Self {
+        self.cfg.gossip.round_interval_ms = ms;
+        self
+    }
+
+    /// Neighbours contacted per gossip round (≥ 1).
+    pub fn fan_out(mut self, fan_out: usize) -> Self {
+        self.cfg.gossip.fan_out = fan_out;
+        self
+    }
+
+    /// Convergence threshold on the probe-quantile drift.
+    pub fn convergence_rel(mut self, rel: f64) -> Self {
+        self.cfg.gossip.convergence_rel = rel;
+        self
+    }
+
+    /// Quantiles probed for the drift metric (non-empty, in [0,1]).
+    pub fn probe_quantiles(mut self, qs: &[f64]) -> Self {
+        self.cfg.gossip.probe_quantiles = qs.to_vec();
+        self
+    }
+
+    /// Seed for overlay and partner randomness (a remote fleet must
+    /// share one seed so every node builds the same overlay).
+    pub fn gossip_seed(mut self, seed: u64) -> Self {
+        self.cfg.gossip.seed = seed;
+        self
+    }
+
+    /// Per-exchange transport deadline in ms (≥ 1; §7.2 cancellation).
+    pub fn exchange_deadline_ms(mut self, ms: u64) -> Self {
+        self.cfg.gossip.exchange_deadline_ms = ms;
+        self
+    }
+
+    /// Add a fleet member (in global member order, this node excluded —
+    /// see [`NodeBuilder::self_index`]).
+    pub fn peer(mut self, member: GossipMember) -> Self {
+        self.peers.push(member);
+        self
+    }
+
+    /// Add a remote node at `addr` as a fleet member.
+    pub fn remote_peer(mut self, addr: SocketAddr) -> Self {
+        self.peers.push(GossipMember::Remote(addr));
+        self
+    }
+
+    /// Where this node's own service sits in the global member order
+    /// (= its peer id; default 0, Algorithm 3's distinguished peer).
+    pub fn self_index(mut self, index: usize) -> Self {
+        self.self_index = index;
+        self
+    }
+
+    /// The transport carrying this node's exchanges (default:
+    /// [`InProcessTransport`]). Pass a bound
+    /// [`TcpTransport`](super::TcpTransport) to serve remote peers.
+    pub fn transport(mut self, transport: impl Transport) -> Self {
+        self.transport = Some(Arc::new(transport));
+        self
+    }
+
+    /// [`NodeBuilder::transport`] for an already-shared transport.
+    pub fn transport_shared(mut self, transport: Arc<dyn Transport>) -> Self {
+        self.transport = Some(transport);
+        self
+    }
+
+    /// Validate the full configuration (named-key errors), start the
+    /// service, and — when peers are configured — the gossip loop with
+    /// this node's service inserted at [`NodeBuilder::self_index`].
+    pub fn build(self) -> Result<Node> {
+        let NodeBuilder {
+            cfg,
+            peers,
+            self_index,
+            transport,
+        } = self;
+        cfg.validate()
+            .map_err(anyhow::Error::msg)
+            .context("node configuration")?;
+        if self_index > peers.len() {
+            bail!(
+                "self_index {} is out of range for a fleet of {} members",
+                self_index,
+                peers.len() + 1
+            );
+        }
+        let service = QuantileService::start_shared(cfg.clone())?;
+        if peers.is_empty() {
+            if transport.is_some() {
+                bail!(
+                    "a transport was configured but no gossip peers were added — \
+                     add .peer(..) / .remote_peer(..) entries"
+                );
+            }
+            return Ok(Node {
+                service,
+                gossip: None,
+                self_member: 0,
+            });
+        }
+        let mut members = peers;
+        members.insert(self_index, GossipMember::service(service.clone()));
+        let transport: Arc<dyn Transport> =
+            transport.unwrap_or_else(|| Arc::new(InProcessTransport));
+        let gossip = GossipLoop::start_with(cfg.gossip.clone(), members, transport)
+            .context("starting node gossip loop")?;
+        Ok(Node {
+            service,
+            gossip: Some(gossip),
+            self_member: self_index,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_validates_with_named_keys() {
+        let err = Node::builder().shards(0).build().unwrap_err();
+        assert!(format!("{err:#}").contains("shards"), "{err:#}");
+        let err = Node::builder().alpha(f64::NAN).build().unwrap_err();
+        assert!(format!("{err:#}").contains("alpha"), "{err:#}");
+        let err = Node::builder().fan_out(0).build().unwrap_err();
+        assert!(format!("{err:#}").contains("gossip_fan_out"), "{err:#}");
+        let err = Node::builder().exchange_deadline_ms(0).build().unwrap_err();
+        assert!(
+            format!("{err:#}").contains("gossip_exchange_deadline_ms"),
+            "{err:#}"
+        );
+    }
+
+    #[test]
+    fn builder_without_peers_serves_locally() {
+        let node = Node::builder().shards(2).batch_size(64).build().unwrap();
+        assert!(node.gossip().is_none());
+        assert!(node.step().is_none());
+        assert!(node.global_view().is_none());
+        assert!(node.listen_addr().is_none());
+        let mut w = node.writer();
+        for i in 1..=100 {
+            w.insert(i as f64);
+        }
+        w.flush();
+        let snap = node.flush();
+        assert_eq!(snap.count(), 100.0);
+        drop(w);
+        let fin = node.shutdown();
+        assert_eq!(fin.count(), 100.0);
+    }
+
+    #[test]
+    fn builder_rejects_transport_without_peers() {
+        let err = Node::builder()
+            .shards(1)
+            .transport(InProcessTransport)
+            .build()
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("no gossip peers"), "{err:#}");
+    }
+
+    #[test]
+    fn builder_rejects_out_of_range_self_index() {
+        let data = [1.0, 2.0];
+        let err = Node::builder()
+            .shards(1)
+            .peer(GossipMember::from_dataset(&data, 0.001, 1024).unwrap())
+            .self_index(5)
+            .build()
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("self_index"), "{err:#}");
+    }
+
+    #[test]
+    fn builder_places_self_at_index() {
+        let a: Vec<f64> = (1..=300).map(f64::from).collect();
+        let b: Vec<f64> = (301..=600).map(f64::from).collect();
+        let node = Node::builder()
+            .shards(2)
+            .peer(GossipMember::from_dataset(&a, 0.001, 1024).unwrap())
+            .peer(GossipMember::from_dataset(&b, 0.001, 1024).unwrap())
+            .self_index(1)
+            .build()
+            .unwrap();
+        assert_eq!(node.self_member(), 1);
+        let mut w = node.writer();
+        w.insert_batch(&(601..=900).map(f64::from).collect::<Vec<_>>());
+        w.flush();
+        node.flush();
+        // Let the loop pick up the fresh epoch and converge.
+        let mut converged = 0;
+        for _ in 0..300 {
+            let r = node.step().unwrap();
+            converged = if r.converged { converged + 1 } else { 0 };
+            if converged >= 3 {
+                break;
+            }
+        }
+        let v = node.global_view().unwrap();
+        assert_eq!(v.estimated_peers(), 3.0);
+        assert_eq!(v.estimated_total(), 900.0);
+        drop(w);
+        node.shutdown();
+    }
+}

@@ -90,7 +90,7 @@ impl QuantileService {
     /// epoch interval is configured) the background epoch ticker.
     pub fn start(cfg: ServiceConfig) -> Result<Self> {
         cfg.validate().map_err(anyhow::Error::msg)?;
-        let n = cfg.effective_shards();
+        let n = cfg.shards;
         let mut shards = Vec::with_capacity(n);
         for id in 0..n {
             shards.push(spawn_shard(id, cfg.alpha, cfg.max_buckets, cfg.queue_depth)?);

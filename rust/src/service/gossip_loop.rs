@@ -2,18 +2,22 @@
 //!
 //! PR 1 connected a [`QuantileService`] to the protocol one shot at a
 //! time ([`ServicePeer`](super::ServicePeer)); this module closes the
-//! paper's full production loop. A [`GossipLoop`] owns a small fleet of
-//! **members** — live services and/or simulated remote peers — and runs
-//! the cycle continuously while ingest keeps flowing:
+//! paper's full production loop. A [`GossipLoop`] owns the node's view of
+//! a fleet of **members** — live services, simulated peers, and (since
+//! the transport redesign) **remote nodes** — and runs the cycle
+//! continuously while ingest keeps flowing:
 //!
 //! ```text
 //!        ┌────────────────────────── every round ─────────────────────────┐
-//!        │ refresh: any service published a newer epoch?                  │
-//!        │   └─ yes → reseed every member's PeerState (protocol restart,  │
+//!        │ refresh: any service published a newer epoch? a partner        │
+//!        │          reported a newer restart generation?                  │
+//!        │   └─ yes → reseed every local PeerState (protocol restart,     │
 //!        │            Prop. 4: averaging re-converges from any states)    │
-//!        │ exchange: one fan-out push–pull round over the overlay         │
-//!        │            (the same Algorithm 4 loop the simulation runs)     │
-//!        │ serve: publish one GlobalView per member through an            │
+//!        │ exchange: one fan-out push–pull round over the overlay,        │
+//!        │           every partner interaction through the Transport      │
+//!        │           trait (in-process or framed TCP; failures cancel     │
+//!        │           the exchange, §7.2)                                  │
+//!        │ serve: publish one GlobalView per local member through an      │
 //!        │        ArcSwapCell — reads never block, never see a torn state │
 //!        └────────────────────────────────────────────────────────────────┘
 //! ```
@@ -26,25 +30,36 @@
 //! drift since the previous round; once the drift falls below
 //! [`GossipLoopConfig::convergence_rel`] the view is flagged converged.
 //!
-//! The reseed-all policy is load-bearing: `q̃` mass must stay exactly 1
-//! across the fleet for the network-size estimate `p̃ = 1/q̃` to be
-//! unbiased, so a newer epoch anywhere restarts *every* member from its
-//! current local summary (the fusion-model restart of the stream-fusion
-//! line of work) rather than patching one peer in place.
+//! **Restart generations.** The reseed-all policy is load-bearing: `q̃`
+//! mass must stay exactly 1 across the fleet for the network-size
+//! estimate `p̃ = 1/q̃` to be unbiased, so a newer epoch anywhere restarts
+//! *every* member rather than patching one peer in place. In-process
+//! fleets restart atomically, as in PR 2. Across machines the restart is
+//! coordinated by a **generation counter** carried in every exchange
+//! frame: a node whose local epoch advances reseeds and bumps its
+//! generation; a node that *hears* a newer generation (in an inbound
+//! push, or in a partner's stale-rejection) reseeds **from its own latest
+//! summary** and adopts that generation before any averaging. States
+//! from different generations never average together, so within each
+//! generation the `q̃` mass is exactly 1 and the fixed point is the union
+//! of the freshest local summaries.
 //!
-//! Members are in-process today; the codec (`sketch::codec`) already
-//! frames `PeerState`s byte-exactly, so a remote-peer transport can slot
-//! in behind [`GossipMember`] without touching the loop.
+//! The serve side of the transport ([`NodeHandle`]) applies inbound
+//! exchanges under the same worker lock rounds use, with §7.2 atomicity:
+//! the averaged state commits only once the reply reaches the wire and
+//! rolls back otherwise.
 
 use super::coordinator::QuantileService;
 use super::swap::ArcSwapCell;
+use super::transport::{InProcessTransport, Transport, TransportError};
 use crate::config::GossipLoopConfig;
-use crate::gossip::{fan_out_round, GossipSketch, PeerState};
+use crate::gossip::{select_exchange_partners, GossipSketch, PeerState};
 use crate::graph::Graph;
 use crate::metrics::relative_error;
 use crate::rng::{default_rng, Xoshiro256pp};
-use crate::sketch::{SketchError, Store, UddSketch};
+use crate::sketch::{QuantileReader, SketchError, Store, UddSketch};
 use anyhow::{bail, Context, Result};
+use std::net::SocketAddr;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -56,9 +71,14 @@ pub enum GossipMember {
     /// A live ingest service: reseeded from its latest published
     /// snapshot whenever a newer epoch appears.
     Service(Arc<QuantileService>),
-    /// A simulated remote peer with a fixed local summary (stands in for
-    /// a codec-framed network peer until a transport lands).
+    /// A simulated remote peer with a fixed local summary.
     Static(GossipSketch),
+    /// A real remote node reached through the loop's
+    /// [`Transport`](super::Transport) (its state lives on that node; the
+    /// member's own loop drives its exchanges). Requires a
+    /// remote-capable transport such as
+    /// [`TcpTransport`](super::TcpTransport).
+    Remote(SocketAddr),
 }
 
 impl GossipMember {
@@ -81,12 +101,23 @@ impl GossipMember {
     pub fn from_sketch<S: Store>(sketch: &UddSketch<S>) -> Self {
         GossipMember::Static(sketch.convert_store())
     }
+
+    /// A remote node at `addr` (see [`GossipMember::Remote`]).
+    pub fn remote(addr: SocketAddr) -> Self {
+        GossipMember::Remote(addr)
+    }
+
+    /// True for members whose state lives in this loop (service/static).
+    pub fn is_local(&self) -> bool {
+        !matches!(self, GossipMember::Remote(_))
+    }
 }
 
 /// The network-converged estimate one member serves after a round.
 ///
 /// Immutable, like [`Snapshot`](super::Snapshot): a handle keeps
-/// answering consistently no matter how far the loop advances.
+/// answering consistently no matter how far the loop advances. Also
+/// queryable through [`QuantileReader`].
 #[derive(Debug, Clone)]
 pub struct GlobalView {
     round: u64,
@@ -103,14 +134,15 @@ impl GlobalView {
         self.round
     }
 
-    /// Reseed generations so far (bumped whenever a service published a
-    /// newer epoch and the protocol restarted).
+    /// Restart generations so far (bumped whenever a service published a
+    /// newer epoch, or a partner node reported a newer generation, and
+    /// the protocol restarted).
     pub fn generation(&self) -> u64 {
         self.generation
     }
 
     /// Service epoch this member's local state was seeded from (0 for
-    /// static members and before the first epoch).
+    /// static/remote members and before the first epoch).
     pub fn epoch(&self) -> u64 {
         self.epoch
     }
@@ -153,18 +185,53 @@ impl GlobalView {
     }
 }
 
+impl QuantileReader for GlobalView {
+    fn quantile(&self, q: f64) -> Result<f64, SketchError> {
+        self.state.query(q)
+    }
+
+    fn cdf(&self, x: f64) -> Result<f64, SketchError> {
+        self.state.cdf(x)
+    }
+
+    /// The estimated union-stream length (∞ before any information from
+    /// the distinguished peer arrives).
+    fn count(&self) -> f64 {
+        self.estimated_total()
+    }
+
+    fn quantiles(&self, qs: &[f64]) -> Result<Vec<f64>, SketchError> {
+        GlobalView::quantiles(self, qs)
+    }
+
+    /// Overridden: `count()` can be ∞ before the distinguished peer's
+    /// mass arrives, so emptiness is judged by the averaged sketch — the
+    /// same condition under which [`GlobalView::query`] returns
+    /// [`SketchError::Empty`].
+    fn is_empty(&self) -> bool {
+        self.state.sketch.is_empty()
+    }
+}
+
 /// Telemetry for one executed loop round.
 #[derive(Debug, Clone, Copy)]
 pub struct GossipRoundReport {
     /// Rounds executed so far (this one included).
     pub round: u64,
-    /// Current reseed generation.
+    /// Current restart generation.
     pub generation: u64,
-    /// True when this round reseeded the fleet from fresh snapshots.
+    /// True when this round reseeded the local members from fresh
+    /// snapshots (local epoch advance, or a newer generation heard from a
+    /// partner node).
     pub reseeded: bool,
     /// Completed push–pull exchanges this round.
     pub exchanges: usize,
-    /// Wire traffic this round (push + pull frames, codec byte-exact).
+    /// Exchanges cancelled this round — transport failures, missed
+    /// deadlines, busy or stale partners. Both sides keep their pre-round
+    /// state on every one of these (§7.2).
+    pub failed: usize,
+    /// Wire traffic this round (push + pull frames, codec byte-exact for
+    /// in-process exchanges; actual socket bytes for remote ones).
     pub bytes: usize,
     /// Largest relative probe drift vs the previous round (∞ if not yet
     /// comparable).
@@ -178,32 +245,133 @@ struct Shared {
     views: Vec<ArcSwapCell<GlobalView>>,
 }
 
-/// Mutable loop state, owned by whichever thread runs the next round.
+/// Mutable loop state, owned by whichever thread runs the next round (or
+/// serves an inbound exchange).
 struct Worker {
     cfg: GossipLoopConfig,
     members: Vec<GossipMember>,
+    /// `true` where the member's state lives in this loop.
+    local: Vec<bool>,
+    /// Index of the member inbound exchanges are served against (the
+    /// first local member — the node's own identity in a remote fleet).
+    serve_member: usize,
+    transport: Arc<dyn Transport>,
     states: Vec<PeerState>,
-    /// Snapshot epoch each member was last seeded from (0 for static).
+    /// Snapshot epoch each member was last seeded from (0 for
+    /// static/remote).
     epochs: Vec<u64>,
     /// Member indices whose probe estimates drive the drift metric:
-    /// every service member, or member 0 in an all-static fleet.
+    /// every local service member, or the serve member in an all-static
+    /// fleet.
     probe_members: Vec<usize>,
     graph: Graph,
     rng: Xoshiro256pp,
     online: Vec<bool>,
     round: u64,
     generation: u64,
+    /// Highest remote generation heard via stale-rejections; adopted at
+    /// the next refresh.
+    pending_generation: u64,
     prev_probes: Option<Vec<f64>>,
     drift: f64,
     converged: bool,
 }
 
-/// A background gossip task over a fleet of services and simulated peers.
+/// Why an inbound exchange was refused (serve side of §7.2 — the
+/// initiator keeps its pre-round state on every variant).
+#[derive(Debug)]
+pub enum ServeReject {
+    /// The node is mid-round or mid-exchange; the initiator retries next
+    /// round.
+    Busy,
+    /// The push carried an older restart generation than ours (the
+    /// payload — the initiator reseeds and catches up).
+    StaleGeneration(u64),
+    /// α₀ lineage mismatch: these nodes can never merge.
+    Lineage,
+    /// The reply could not be delivered; the serve-side state change was
+    /// rolled back (cancelled exchange).
+    Cancelled(String),
+}
+
+impl std::fmt::Display for ServeReject {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeReject::Busy => write!(f, "busy"),
+            ServeReject::StaleGeneration(g) => write!(f, "stale generation (ours is {g})"),
+            ServeReject::Lineage => write!(f, "alpha0 lineage mismatch"),
+            ServeReject::Cancelled(e) => write!(f, "reply delivery failed: {e}"),
+        }
+    }
+}
+
+/// The serve-side handle a [`Transport`] accept loop uses to apply
+/// inbound exchanges to this node's state. Cheap to clone; opaque —
+/// custom transports interact with the loop only through
+/// [`NodeHandle::serve_exchange`] and [`NodeHandle::stopping`].
+#[derive(Clone)]
+pub struct NodeHandle {
+    worker: Arc<Mutex<Worker>>,
+    shared: Arc<Shared>,
+    stop: Arc<AtomicBool>,
+}
+
+impl std::fmt::Debug for NodeHandle {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "NodeHandle(stopping={})", self.stopping())
+    }
+}
+
+impl NodeHandle {
+    /// True once the loop is shutting down; server threads must exit.
+    pub fn stopping(&self) -> bool {
+        self.stop.load(Ordering::SeqCst)
+    }
+
+    /// Apply one inbound push–pull atomically: average `incoming` (sent
+    /// at restart generation `generation`) into the node's serve member
+    /// and hand the averaged reply to `deliver`. The state change
+    /// **commits only if `deliver` returns `Ok`** — the §7.2 contract:
+    /// a reply that never reaches the initiator rolls the serve side
+    /// back, so a cancelled exchange leaves both nodes at their
+    /// pre-round state.
+    ///
+    /// Never blocks: a worker busy with its own round yields
+    /// [`ServeReject::Busy`] instead of queueing (the initiator counts a
+    /// failed exchange and retries next round), which also makes
+    /// cross-node deadlock impossible.
+    pub fn serve_exchange(
+        &self,
+        incoming: PeerState,
+        generation: u64,
+        deliver: impl FnOnce(&PeerState, u64) -> std::io::Result<()>,
+    ) -> Result<(), ServeReject> {
+        let mut w = match self.worker.try_lock() {
+            Ok(w) => w,
+            Err(std::sync::TryLockError::WouldBlock) => return Err(ServeReject::Busy),
+            // A poisoned worker means a round thread panicked: fail loudly
+            // (matching `GossipLoop::step`) instead of masquerading as a
+            // forever-Busy node.
+            Err(std::sync::TryLockError::Poisoned(e)) => {
+                panic!("gossip worker poisoned: {e}")
+            }
+        };
+        w.serve_exchange(&self.shared, incoming, generation, deliver)
+    }
+}
+
+/// A background gossip task over a fleet of services, simulated peers,
+/// and remote nodes.
 ///
 /// With `round_interval_ms > 0` a thread runs one round per interval;
 /// [`GossipLoop::step`] additionally (or, at interval 0, exclusively)
 /// runs rounds on demand — handy for deterministic tests and for the
-/// `serve-gossip` CLI's per-round reporting.
+/// `serve-gossip`/`serve-remote` CLIs' per-round reporting.
+///
+/// [`GossipLoop::start`] runs the fleet in process, exactly as PR 2 did
+/// (the [`InProcessTransport`] reproduces those results bit for bit);
+/// [`GossipLoop::start_with`] accepts any [`Transport`]. The primary
+/// construction path is [`Node::builder()`](super::Node::builder).
 ///
 /// ```
 /// use duddsketch::config::GossipLoopConfig;
@@ -229,6 +397,10 @@ pub struct GossipLoop {
     worker: Arc<Mutex<Worker>>,
     stop: Arc<AtomicBool>,
     thread: Option<JoinHandle<()>>,
+    server: Option<JoinHandle<()>>,
+    transport: Arc<dyn Transport>,
+    /// First local member: the node's own identity (immutable).
+    serve_member: usize,
 }
 
 impl std::fmt::Debug for GossipLoop {
@@ -236,8 +408,9 @@ impl std::fmt::Debug for GossipLoop {
         let v = self.view();
         write!(
             f,
-            "GossipLoop(members={}, round={}, generation={}, converged={})",
+            "GossipLoop(members={}, transport={}, round={}, generation={}, converged={})",
             self.shared.views.len(),
+            self.transport.name(),
             v.round(),
             v.generation(),
             v.converged()
@@ -246,38 +419,89 @@ impl std::fmt::Debug for GossipLoop {
 }
 
 impl GossipLoop {
-    /// Validate, seed every member from its current local summary, build
-    /// the overlay, publish the round-0 views, and (when an interval is
-    /// configured) spawn the background round thread.
+    /// [`GossipLoop::start_with`] on the [`InProcessTransport`] — PR 2's
+    /// in-process fleet, byte-identical results.
+    pub fn start(cfg: GossipLoopConfig, members: Vec<GossipMember>) -> Result<Self> {
+        Self::start_with(cfg, members, Arc::new(InProcessTransport))
+    }
+
+    /// Validate, seed every local member from its current summary, build
+    /// the overlay, publish the round-0 views, spawn the transport's
+    /// accept loop (if it serves one), and (when an interval is
+    /// configured) the background round thread.
     ///
-    /// Member index is the peer id: member 0 plays Algorithm 3's
+    /// Member index is the peer id — **globally**: a remote fleet lists
+    /// every node in the same order everywhere (and shares one gossip
+    /// seed/graph so all overlays agree); the member at the node's own
+    /// position is its local service. Member 0 plays Algorithm 3's
     /// distinguished role (`q̃ = 1`). Small fleets should keep the
     /// default [`GraphKind::Complete`](crate::config::GraphKind::Complete)
-    /// overlay; the simulation
-    /// topologies carry their own minimum-size requirements.
-    pub fn start(cfg: GossipLoopConfig, members: Vec<GossipMember>) -> Result<Self> {
+    /// overlay; the simulation topologies carry their own minimum-size
+    /// requirements.
+    pub fn start_with(
+        cfg: GossipLoopConfig,
+        members: Vec<GossipMember>,
+        transport: Arc<dyn Transport>,
+    ) -> Result<Self> {
         cfg.validate().map_err(anyhow::Error::msg)?;
         if members.len() < 2 {
             bail!("gossip loop needs at least 2 members, got {}", members.len());
         }
+        let local: Vec<bool> = members.iter().map(GossipMember::is_local).collect();
+        let serve_member = local
+            .iter()
+            .position(|&b| b)
+            .context("gossip loop needs at least one local member (service or static)")?;
+        if local.iter().any(|&b| !b) {
+            if !transport.supports_remote() {
+                bail!(
+                    "fleet lists remote members but the {} transport cannot reach \
+                     them — use a remote-capable transport (e.g. TcpTransport)",
+                    transport.name()
+                );
+            }
+            // Inbound exchanges are served against the node's own member
+            // (the push frame carries no target id), and a Static member
+            // listed on several nodes would be independently mutated by
+            // each — either way the generation's q̃ mass breaks. A remote
+            // fleet therefore hosts exactly one local member per node;
+            // simulated Static peers belong to in-process fleets.
+            let locals = local.iter().filter(|&&b| b).count();
+            if locals != 1 {
+                bail!(
+                    "a fleet with remote members must have exactly one local \
+                     member (this node's own identity), found {locals}"
+                );
+            }
+        }
         // Exchanges merge sketches, and merges require one shared α₀
         // lineage — catch a mismatched fleet here instead of panicking
-        // mid-round (possibly inside the background thread).
+        // mid-round. Remote members are checked at exchange time by the
+        // frame protocol.
         let mut alpha0: Option<f64> = None;
+        let mut lineage: Option<(f64, usize)> = None;
         for (i, m) in members.iter().enumerate() {
-            let a = match m {
-                GossipMember::Service(svc) => svc.config().alpha,
-                GossipMember::Static(sketch) => sketch.mapping().alpha0(),
+            let (a, mb) = match m {
+                GossipMember::Service(svc) => (svc.config().alpha, svc.config().max_buckets),
+                GossipMember::Static(sketch) => {
+                    (sketch.mapping().alpha0(), sketch.max_buckets())
+                }
+                GossipMember::Remote(_) => continue,
             };
             match alpha0 {
-                None => alpha0 = Some(a),
+                None => {
+                    alpha0 = Some(a);
+                    lineage = Some((a, mb));
+                }
                 Some(first) if first.to_bits() != a.to_bits() => bail!(
                     "gossip members must share one alpha0 lineage: \
-                     member 0 has {first}, member {i} has {a}"
+                     member {serve_member} has {first}, member {i} has {a}"
                 ),
                 Some(_) => {}
             }
         }
+        let (alpha, max_buckets) = lineage.expect("at least one local member");
+
         let n = members.len();
         let master = default_rng(cfg.seed);
         let mut grng = master.derive(0x6EA4);
@@ -291,27 +515,45 @@ impl GossipLoop {
                 .map(|(i, _)| i)
                 .collect();
             if svc.is_empty() {
-                vec![0]
+                vec![serve_member]
             } else {
                 svc
             }
         };
+        // Placeholder states for every slot (remote slots keep theirs —
+        // their real state lives on the remote node); the reseed below
+        // fills the local ones.
+        let blank: GossipSketch =
+            UddSketch::new(alpha, max_buckets).map_err(anyhow::Error::msg)?;
+        let states: Vec<PeerState> = (0..n)
+            .map(|i| PeerState {
+                id: i,
+                sketch: blank.clone(),
+                n_tilde: 0.0,
+                q_tilde: 0.0,
+            })
+            .collect();
         let mut worker = Worker {
             rng: master.derive(0x1005),
             cfg,
             members,
-            states: Vec::new(),
+            local,
+            serve_member,
+            transport: transport.clone(),
+            states,
             epochs: vec![0; n],
             probe_members,
             graph,
             online: vec![true; n],
             round: 0,
             generation: 0,
+            pending_generation: 0,
             prev_probes: None,
             drift: f64::INFINITY,
             converged: false,
         };
-        worker.reseed();
+        worker.reseed_states();
+        worker.generation = 1;
         let shared = Arc::new(Shared {
             views: (0..n)
                 .map(|i| ArcSwapCell::new(Arc::new(worker.view_of(i))))
@@ -319,6 +561,11 @@ impl GossipLoop {
         });
         let worker = Arc::new(Mutex::new(worker));
         let stop = Arc::new(AtomicBool::new(false));
+        let server = transport.spawn_server(NodeHandle {
+            worker: worker.clone(),
+            shared: shared.clone(),
+            stop: stop.clone(),
+        })?;
         let thread = if interval_ms > 0 {
             let worker = worker.clone();
             let shared = shared.clone();
@@ -338,17 +585,32 @@ impl GossipLoop {
             worker,
             stop,
             thread,
+            server,
+            transport,
+            serve_member,
         })
     }
 
-    /// Number of members in the fleet.
+    /// Number of members in the fleet (local + remote).
     pub fn members(&self) -> usize {
         self.shared.views.len()
     }
 
+    /// The transport carrying this loop's exchanges.
+    pub fn transport(&self) -> &Arc<dyn Transport> {
+        &self.transport
+    }
+
+    /// The address this loop's transport serves inbound exchanges on
+    /// (None for in-process or client-only transports).
+    pub fn listen_addr(&self) -> Option<SocketAddr> {
+        self.transport.listen_addr()
+    }
+
     /// Run one refresh → exchange → serve round synchronously and return
-    /// its telemetry. Safe alongside the background thread (rounds
-    /// serialize on the worker lock).
+    /// its telemetry. Safe alongside the background thread and the
+    /// transport's accept loop (rounds and inbound exchanges serialize on
+    /// the worker lock).
     pub fn step(&self) -> GossipRoundReport {
         let mut w = self.worker.lock().expect("gossip worker poisoned");
         let report = w.run_round();
@@ -356,18 +618,22 @@ impl GossipLoop {
         report
     }
 
-    /// The latest global view of member 0. Lock-free.
+    /// The latest global view of the serve member — the first local
+    /// member, i.e. the node's own identity (member 0 in an all-local
+    /// fleet, as in PR 2). Lock-free.
     pub fn view(&self) -> Arc<GlobalView> {
-        self.member_view(0)
+        self.member_view(self.serve_member)
     }
 
-    /// The latest global view of member `i` (panics when out of range).
+    /// The latest global view of member `i`. Lock-free. For
+    /// [`GossipMember::Remote`] members this node publishes only a
+    /// placeholder (their real views live on their own node).
     pub fn member_view(&self, i: usize) -> Arc<GlobalView> {
         self.shared.views[i].load()
     }
 
-    /// Stop the background thread (if any) and return the final view of
-    /// member 0.
+    /// Stop the background threads (round + accept loop, if any) and
+    /// return the final view of the serve member.
     pub fn shutdown(mut self) -> Arc<GlobalView> {
         self.stop_thread();
         self.view()
@@ -376,6 +642,9 @@ impl GossipLoop {
     fn stop_thread(&mut self) {
         self.stop.store(true, Ordering::SeqCst);
         if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+        if let Some(t) = self.server.take() {
             let _ = t.join();
         }
     }
@@ -416,36 +685,60 @@ fn round_loop(
 }
 
 impl Worker {
-    /// Seed every member's `PeerState` from its current local summary
-    /// and start a new generation. Restarting *all* members keeps the
-    /// averaged `q̃` mass at exactly 1 (see the module docs).
-    fn reseed(&mut self) {
-        let mut states = Vec::with_capacity(self.members.len());
-        for (i, m) in self.members.iter().enumerate() {
-            let state = match m {
+    /// Seed every **local** member's `PeerState` from its current local
+    /// summary and reset the drift bookkeeping. Restarting all local
+    /// members together keeps the generation's `q̃` mass exact (see the
+    /// module docs); remote members restart on their own nodes, carried
+    /// by the generation tags.
+    fn reseed_states(&mut self) {
+        for i in 0..self.members.len() {
+            match &self.members[i] {
                 GossipMember::Service(svc) => {
                     let snap = svc.snapshot();
                     self.epochs[i] = snap.epoch();
-                    PeerState::from_sketch(i, snap.sketch())
+                    self.states[i] = PeerState::from_sketch(i, snap.sketch());
                 }
-                GossipMember::Static(sketch) => PeerState::from_sketch(i, sketch),
-            };
-            states.push(state);
+                GossipMember::Static(sketch) => {
+                    self.states[i] = PeerState::from_sketch(i, sketch);
+                }
+                GossipMember::Remote(_) => {}
+            }
         }
-        self.states = states;
-        self.generation += 1;
         self.prev_probes = None;
         self.drift = f64::INFINITY;
         self.converged = false;
     }
 
-    /// True when any service member has published an epoch newer than
-    /// the one its state was seeded from.
+    /// True when any local service member has published an epoch newer
+    /// than the one its state was seeded from.
     fn stale(&self) -> bool {
         self.members.iter().enumerate().any(|(i, m)| match m {
             GossipMember::Service(svc) => svc.snapshot().epoch() != self.epochs[i],
-            GossipMember::Static(_) => false,
+            _ => false,
         })
+    }
+
+    /// Refresh step: restart the protocol when local data moved (epoch
+    /// advance ⇒ strictly newer generation) or a partner reported a newer
+    /// generation (adopt it). Returns whether a reseed happened.
+    fn refresh(&mut self) -> bool {
+        let wanted = std::mem::take(&mut self.pending_generation);
+        let stale = self.stale();
+        if !stale && wanted <= self.generation {
+            return false;
+        }
+        self.reseed_states();
+        // Saturating: a (hostile or corrupt) partner could have pushed the
+        // generation near u64::MAX — the counter must never overflow-panic
+        // mid-round or wrap back to 0 (which would read as "stale" to the
+        // whole fleet). Frame authentication is the real fix (ROADMAP).
+        let bumped = if stale {
+            self.generation.saturating_add(1)
+        } else {
+            self.generation
+        };
+        self.generation = bumped.max(wanted);
+        true
     }
 
     /// Probe-quantile estimates across the probe members, or `None`
@@ -464,22 +757,73 @@ impl Worker {
         Some(out)
     }
 
+    /// One fan-out push–pull round over the overlay, every partner
+    /// interaction through the transport. Local members initiate
+    /// (Algorithm 4's inner loop, identical partner draws to the
+    /// simulation engine); remote members initiate from their own nodes.
+    /// Returns `(exchanges, failed, bytes)`.
+    fn exchange_round(&mut self) -> (usize, usize, usize) {
+        let p = self.states.len();
+        let mut exchanges = 0;
+        let mut failed = 0;
+        let mut bytes = 0usize;
+        let order = self.rng.permutation(p);
+        let mut scratch: Vec<usize> = Vec::new();
+        for &l in &order {
+            if !self.online[l] || !self.local[l] {
+                continue;
+            }
+            let k = select_exchange_partners(
+                &self.graph,
+                &self.online,
+                l,
+                self.cfg.fan_out,
+                &mut scratch,
+                &mut self.rng,
+            );
+            for &j in scratch.iter().take(k) {
+                let outcome = if self.local[j] {
+                    // Atomic in-process exchange (both slots co-located).
+                    let (lo, hi) = self.states.split_at_mut(l.max(j));
+                    let (a, b) = if l < j {
+                        (&mut lo[l], &mut hi[0])
+                    } else {
+                        (&mut hi[0], &mut lo[j])
+                    };
+                    self.transport.exchange_local(a, b)
+                } else {
+                    let addr = match &self.members[j] {
+                        GossipMember::Remote(addr) => *addr,
+                        _ => unreachable!("non-local member is remote by construction"),
+                    };
+                    self.transport
+                        .exchange_remote(&mut self.states[l], self.generation, addr)
+                };
+                match outcome {
+                    Ok(b) => {
+                        exchanges += 1;
+                        bytes += b;
+                    }
+                    Err(TransportError::StaleGeneration(g)) => {
+                        // We're behind the fleet's restart: catch up at
+                        // the next refresh. The exchange itself was
+                        // cancelled (§7.2).
+                        failed += 1;
+                        self.pending_generation = self.pending_generation.max(g);
+                    }
+                    Err(_) => failed += 1,
+                }
+            }
+        }
+        (exchanges, failed, bytes)
+    }
+
     /// One full refresh → exchange cycle (the serve half is
     /// [`Worker::publish`]).
     fn run_round(&mut self) -> GossipRoundReport {
-        let reseeded = self.stale();
-        if reseeded {
-            self.reseed();
-        }
+        let reseeded = self.refresh();
         self.round += 1;
-        let (exchanges, _dropped, bytes) = fan_out_round(
-            &mut self.states,
-            &self.graph,
-            &self.online,
-            self.cfg.fan_out,
-            0.0,
-            &mut self.rng,
-        );
+        let (exchanges, failed, bytes) = self.exchange_round();
         let cur = self.probes();
         self.drift = match (&self.prev_probes, &cur) {
             (Some(prev), Some(cur)) => prev
@@ -496,9 +840,58 @@ impl Worker {
             generation: self.generation,
             reseeded,
             exchanges,
+            failed,
             bytes,
             drift: self.drift,
             converged: self.converged,
+        }
+    }
+
+    /// Serve one inbound push against the serve member (the body of
+    /// [`NodeHandle::serve_exchange`]; the caller holds the worker lock).
+    fn serve_exchange(
+        &mut self,
+        shared: &Shared,
+        mut incoming: PeerState,
+        generation: u64,
+        deliver: impl FnOnce(&PeerState, u64) -> std::io::Result<()>,
+    ) -> Result<(), ServeReject> {
+        if generation < self.generation {
+            return Err(ServeReject::StaleGeneration(self.generation));
+        }
+        if generation > self.generation {
+            // The fleet restarted ahead of us: join that generation by
+            // reseeding from our own latest summaries *before* averaging
+            // — states from different generations never mix.
+            self.reseed_states();
+            self.generation = generation;
+        }
+        let serve = self.serve_member;
+        if !self.states[serve]
+            .sketch
+            .mapping()
+            .same_lineage(incoming.sketch.mapping())
+        {
+            return Err(ServeReject::Lineage);
+        }
+        let pre = self.states[serve].clone();
+        if PeerState::exchange(&mut self.states[serve], &mut incoming).is_err() {
+            self.states[serve] = pre;
+            return Err(ServeReject::Lineage);
+        }
+        match deliver(&incoming, self.generation) {
+            Ok(()) => {
+                // Inbound progress is served immediately — the node's
+                // published views must not wait for its own next round.
+                self.publish(shared);
+                Ok(())
+            }
+            Err(e) => {
+                // §7.2: the reply never reached the initiator, so the
+                // exchange is cancelled on both sides.
+                self.states[serve] = pre;
+                Err(ServeReject::Cancelled(e.to_string()))
+            }
         }
     }
 
@@ -550,6 +943,48 @@ mod tests {
     }
 
     #[test]
+    fn loop_requires_one_local_member() {
+        let cfg = GossipLoopConfig::default();
+        let a: SocketAddr = "127.0.0.1:9001".parse().unwrap();
+        let b: SocketAddr = "127.0.0.1:9002".parse().unwrap();
+        let err = GossipLoop::start(
+            cfg,
+            vec![GossipMember::remote(a), GossipMember::remote(b)],
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("local member"), "{err}");
+    }
+
+    #[test]
+    fn in_process_transport_rejects_remote_members() {
+        let cfg = GossipLoopConfig::default();
+        let addr: SocketAddr = "127.0.0.1:9001".parse().unwrap();
+        let err = GossipLoop::start(
+            cfg,
+            vec![static_member(&[1.0, 2.0]), GossipMember::remote(addr)],
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("remote-capable"), "{err}");
+    }
+
+    #[test]
+    fn remote_fleets_require_exactly_one_local_member() {
+        let t = crate::service::TcpTransport::connect_only(Duration::from_millis(50)).unwrap();
+        let addr: SocketAddr = "127.0.0.1:9001".parse().unwrap();
+        let err = GossipLoop::start_with(
+            GossipLoopConfig::default(),
+            vec![
+                static_member(&[1.0]),
+                static_member(&[2.0]),
+                GossipMember::remote(addr),
+            ],
+            Arc::new(t),
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("exactly one local"), "{err}");
+    }
+
+    #[test]
     fn loop_rejects_mismatched_alpha_lineages() {
         let a = GossipMember::from_dataset(&[1.0, 2.0], 0.001, 1024).unwrap();
         let b = GossipMember::from_dataset(&[3.0, 4.0], 0.01, 1024).unwrap();
@@ -577,6 +1012,7 @@ mod tests {
         let r1 = gl.step();
         assert_eq!(r1.round, 1);
         assert!(r1.exchanges >= 1);
+        assert_eq!(r1.failed, 0);
         assert!(r1.bytes > 0);
         assert!(!r1.reseeded);
 
@@ -601,6 +1037,36 @@ mod tests {
         assert_eq!(r2.drift, 0.0);
         assert!(r2.converged);
         assert!(gl.view().converged());
+        gl.shutdown();
+    }
+
+    #[test]
+    fn global_view_implements_quantile_reader() {
+        let xs: Vec<f64> = (1..=500).map(f64::from).collect();
+        let ys: Vec<f64> = (501..=1000).map(f64::from).collect();
+        let gl = GossipLoop::start(
+            GossipLoopConfig::default(),
+            vec![static_member(&xs), static_member(&ys)],
+        )
+        .unwrap();
+        gl.step();
+        let v = gl.view();
+        let mut seq: UddSketch = UddSketch::new(0.001, 1024).unwrap();
+        seq.extend(&xs);
+        seq.extend(&ys);
+
+        let reader: &dyn QuantileReader = v.as_ref();
+        assert_eq!(reader.count(), 1000.0);
+        assert!(!reader.is_empty());
+        assert_eq!(
+            reader.quantile(0.5).unwrap(),
+            seq.quantile(0.5).unwrap()
+        );
+        assert_eq!(reader.cdf(250.0).unwrap(), seq.cdf(250.0).unwrap());
+        assert_eq!(
+            reader.quantiles(&[0.1, 0.9]).unwrap(),
+            seq.quantiles(&[0.1, 0.9]).unwrap()
+        );
         gl.shutdown();
     }
 
@@ -685,5 +1151,103 @@ mod tests {
         }
         let v = gl.shutdown();
         assert_eq!(v.estimated_total(), 4.0);
+    }
+
+    /// The serve side's §7.2 contract, exercised without sockets: a
+    /// failing delivery rolls the serve member back bit-for-bit, and
+    /// stale/busy pushes are refused with the state untouched.
+    #[test]
+    fn serve_exchange_commit_and_rollback_semantics() {
+        let xs: Vec<f64> = (1..=400).map(f64::from).collect();
+        let gl = GossipLoop::start(
+            GossipLoopConfig::default(),
+            vec![static_member(&xs), static_member(&[1e4, 2e4])],
+        )
+        .unwrap();
+        let handle = NodeHandle {
+            worker: gl.worker.clone(),
+            shared: gl.shared.clone(),
+            stop: gl.stop.clone(),
+        };
+        let incoming = PeerState::init(7, &[5.0, 6.0, 7.0], 0.001, 1024).unwrap();
+        let before = gl.view().state().clone();
+
+        // Delivery fails → cancelled: serve state identical to before.
+        let err = handle
+            .serve_exchange(incoming.clone(), 1, |_, _| {
+                Err(std::io::Error::new(std::io::ErrorKind::BrokenPipe, "cut"))
+            })
+            .unwrap_err();
+        assert!(matches!(err, ServeReject::Cancelled(_)), "{err}");
+        let after = gl.view().state().clone();
+        assert_eq!(after.n_tilde.to_bits(), before.n_tilde.to_bits());
+        assert_eq!(after.q_tilde.to_bits(), before.q_tilde.to_bits());
+        assert_eq!(
+            after.sketch.positive_store().entries(),
+            before.sketch.positive_store().entries()
+        );
+
+        // Stale generation → refused, untouched.
+        let err = handle
+            .serve_exchange(incoming.clone(), 0, |_, _| Ok(()))
+            .unwrap_err();
+        assert!(matches!(err, ServeReject::StaleGeneration(1)), "{err}");
+
+        // Busy worker → refused.
+        {
+            let _round = gl.worker.lock().unwrap();
+            let err = handle
+                .serve_exchange(incoming.clone(), 1, |_, _| Ok(()))
+                .unwrap_err();
+            assert!(matches!(err, ServeReject::Busy), "{err}");
+        }
+
+        // Lineage mismatch → refused, untouched.
+        let alien = PeerState::init(9, &[1.0], 0.5, 64).unwrap();
+        let err = handle.serve_exchange(alien, 1, |_, _| Ok(())).unwrap_err();
+        assert!(matches!(err, ServeReject::Lineage), "{err}");
+
+        // Successful delivery commits: the averaged reply matches the
+        // adopted serve state (both sides of the exchange agree).
+        let mut delivered: Option<PeerState> = None;
+        handle
+            .serve_exchange(incoming, 1, |reply, gen| {
+                assert_eq!(gen, 1);
+                delivered = Some(reply.clone());
+                Ok(())
+            })
+            .unwrap();
+        let served = gl.view().state().clone();
+        let reply = delivered.expect("delivered");
+        assert_eq!(served.n_tilde.to_bits(), reply.n_tilde.to_bits());
+        assert_eq!(served.q_tilde.to_bits(), reply.q_tilde.to_bits());
+        assert_eq!(reply.id, 7, "reply keeps the initiator's id");
+        gl.shutdown();
+    }
+
+    /// Hearing a newer generation (inbound push) makes the node reseed
+    /// from its own summaries and adopt that generation before averaging.
+    #[test]
+    fn inbound_newer_generation_adopts_and_reseeds() {
+        let gl = GossipLoop::start(
+            GossipLoopConfig::default(),
+            vec![static_member(&[1.0, 2.0]), static_member(&[3.0, 4.0])],
+        )
+        .unwrap();
+        // Mix the fleet first so a reseed is observable.
+        gl.step();
+        let handle = NodeHandle {
+            worker: gl.worker.clone(),
+            shared: gl.shared.clone(),
+            stop: gl.stop.clone(),
+        };
+        let incoming = PeerState::init(5, &[9.0, 10.0], 0.001, 1024).unwrap();
+        handle.serve_exchange(incoming, 6, |_, _| Ok(())).unwrap();
+        let v = gl.view();
+        assert_eq!(v.generation(), 6, "adopted the partner's generation");
+        // Serve member reseeded (q̃ back to 1 for member 0) then averaged
+        // once with the incoming state: q̃ = 0.5.
+        assert_eq!(v.state().q_tilde, 0.5);
+        gl.shutdown();
     }
 }

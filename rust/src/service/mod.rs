@@ -40,27 +40,43 @@
 //!   distributed protocol in [`crate::gossip`].
 //! * **Continuous gossip loop** — [`GossipLoop`] runs the paper's
 //!   refresh → exchange → serve cycle as a background task over a fleet
-//!   of services and simulated peers, publishing a network-converged
-//!   [`GlobalView`] (union-stream quantiles, Algorithm 6) through a
-//!   second [`ArcSwapCell`] next to the local snapshot.
+//!   of services, simulated peers, and remote nodes, publishing a
+//!   network-converged [`GlobalView`] (union-stream quantiles,
+//!   Algorithm 6) through a second [`ArcSwapCell`] next to the local
+//!   snapshot.
+//! * **Transport layer** — every partner interaction goes through the
+//!   [`Transport`] trait ([`transport`] module): [`InProcessTransport`]
+//!   reproduces the in-process fleet bit for bit, [`TcpTransport`] ships
+//!   length-prefixed codec frames over `std::net` with per-exchange
+//!   deadlines and §7.2 cancelled-exchange semantics, so real nodes can
+//!   join across machines.
+//! * **Fluent construction** — [`Node::builder()`] is the primary way to
+//!   stand a node up: service + gossip + transport in one validated
+//!   expression (named-key errors at build time).
 //!
 //! Configuration lives in [`crate::config::ServiceConfig`] (gossip knobs
-//! in [`crate::config::GossipLoopConfig`]); the `serve-bench` and
-//! `serve-gossip` CLI subcommands drive the `data` workloads through a
-//! service end to end.
+//! in [`crate::config::GossipLoopConfig`]); the `serve-bench`,
+//! `serve-gossip`, and `serve-remote` CLI subcommands drive the `data`
+//! workloads through a service (or a loopback-TCP fleet) end to end.
 
+mod builder;
 mod coordinator;
 mod gossip_loop;
 mod peer;
 mod shard;
 mod snapshot;
 mod swap;
+pub mod transport;
 mod window;
 
+pub use builder::{Node, NodeBuilder};
 pub use coordinator::{QuantileService, ServiceWriter};
-pub use gossip_loop::{GlobalView, GossipLoop, GossipMember, GossipRoundReport};
+pub use gossip_loop::{
+    GlobalView, GossipLoop, GossipMember, GossipRoundReport, NodeHandle, ServeReject,
+};
 pub use peer::ServicePeer;
 pub use shard::ShardDelta;
 pub use snapshot::Snapshot;
 pub use swap::ArcSwapCell;
+pub use transport::{InProcessTransport, TcpTransport, Transport, TransportError};
 pub use window::WindowRing;

@@ -7,7 +7,7 @@
 //! stays valid (and answers consistently) no matter how far the service
 //! advances underneath it.
 
-use crate::sketch::{DenseStore, SketchError, UddSketch};
+use crate::sketch::{DenseStore, QuantileReader, SketchError, UddSketch};
 
 /// An immutable service snapshot: the merged sketch as of one epoch.
 #[derive(Debug, Clone)]
@@ -105,6 +105,28 @@ impl Snapshot {
     /// Estimated rank of `x` (items ≤ x).
     pub fn rank(&self, x: f64) -> f64 {
         self.sketch.rank(x)
+    }
+}
+
+impl QuantileReader for Snapshot {
+    fn quantile(&self, q: f64) -> Result<f64, SketchError> {
+        Snapshot::quantile(self, q)
+    }
+
+    fn cdf(&self, x: f64) -> Result<f64, SketchError> {
+        Snapshot::cdf(self, x)
+    }
+
+    fn count(&self) -> f64 {
+        Snapshot::count(self)
+    }
+
+    fn quantiles(&self, qs: &[f64]) -> Result<Vec<f64>, SketchError> {
+        Snapshot::quantiles(self, qs)
+    }
+
+    fn is_empty(&self) -> bool {
+        Snapshot::is_empty(self)
     }
 }
 

@@ -1,0 +1,617 @@
+//! The exchange transport layer: how a gossip member reaches a partner.
+//!
+//! PR 2's [`GossipLoop`](super::GossipLoop) called partner state
+//! directly — every member lived in the same process. This module puts
+//! the paper's **atomic push–pull exchange** (Algorithm 4) behind a
+//! [`Transport`] trait so the same loop drives in-process fleets and
+//! fleets of real nodes on different machines:
+//!
+//! ```text
+//!   initiator                              partner
+//!   ─────────                              ───────
+//!   push  ──[len u32][UDDX push frame]──▶  decode, try-lock state
+//!                                          average (Algorithm 4 UPDATE)
+//!   pull  ◀─[len u32][UDDX reply frame]──  commit iff the reply is on
+//!   adopt reply                            the wire; roll back otherwise
+//! ```
+//!
+//! **Failure semantics (§7.2).** Any failure — connect refusal, a missed
+//! deadline, a malformed frame, a busy or stale partner — cancels the
+//! exchange: the initiator returns an error *without touching its state*,
+//! and the serving side commits its averaged state only after the reply
+//! write succeeds (rolling back when it does not). Both sides therefore
+//! keep their pre-round state, the cancelled-exchange model the paper's
+//! churn analysis assumes; the loop counts these in
+//! [`GossipRoundReport::failed`](super::GossipRoundReport::failed).
+//!
+//! One caveat is fundamental (Two Generals): "the reply write succeeded"
+//! means the bytes entered the kernel's send buffer, not that the
+//! initiator read them. A reply lost *after* that point half-commits the
+//! exchange — the server adopted the average, the initiator kept its
+//! state — skewing the generation's `q̃` mass by the difference. The
+//! window is one in-flight reply against a deadline-long read budget, so
+//! it is rare; and the skew is bounded in time, because the next protocol
+//! restart (epoch advance anywhere → new generation, every node reseeds)
+//! restores the mass to exactly 1.
+//!
+//! **Concurrency model.** Rounds and inbound serves share one worker
+//! lock: a node mid-round rejects inbound pushes as `Busy` (a §7.2
+//! cancellation the initiator retries next round) rather than queueing —
+//! that is what makes cross-node deadlock impossible with blocking
+//! sockets. The cost is that a round stalled on a dead peer (up to
+//! fan-out × deadline) also serves nothing; background fleets should
+//! stagger `round_interval_ms` (or keep intervals ≫ deadline) so rounds
+//! rarely collide. Finer-grained locking is a ROADMAP item.
+//!
+//! Two implementations ship:
+//!
+//! * [`InProcessTransport`] — PR 2's behavior behind the trait: direct
+//!   in-memory exchanges with the codec's byte accounting. Results are
+//!   bit-identical to the pre-trait loop (`rust/tests/integration_remote.rs`
+//!   proves it against the simulation engine).
+//! * [`TcpTransport`] — length-prefixed [`codec`](crate::sketch::codec)
+//!   frames over `std::net`: one accept loop per node serving inbound
+//!   pushes, per-exchange deadlines on connect/read/write, and generation
+//!   tags so nodes that restarted their protocol (new epoch ⇒ reseed)
+//!   never average with states from an older restart.
+//!
+//! Construction normally goes through
+//! [`Node::builder()`](super::Node::builder); see the `serve-remote` CLI
+//! subcommand for a full loopback fleet.
+
+use super::gossip_loop::{NodeHandle, ServeReject};
+use crate::gossip::PeerState;
+use crate::sketch::codec::{
+    decode_exchange, encode_exchange_push, encode_exchange_reject, encode_exchange_reply,
+    peer_state_wire_size, ExchangeFrame, RejectReason,
+};
+use anyhow::Context;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Why an exchange was cancelled (initiator side; §7.2 — the local state
+/// is untouched whenever one of these is returned).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum TransportError {
+    /// Socket-level failure: connect, read, or write failed or missed
+    /// the per-exchange deadline.
+    Io(String),
+    /// The partner's bytes failed to decode.
+    Codec(String),
+    /// The partner is mid-exchange or mid-round; retry next round.
+    Busy,
+    /// Our restart generation is behind the partner's (the payload): the
+    /// loop reseeds and catches up at its next refresh.
+    StaleGeneration(u64),
+    /// A frame decoded but violated the exchange protocol.
+    Protocol(String),
+    /// Sketch α₀ lineages differ; these members can never merge.
+    Lineage(String),
+    /// This transport cannot reach remote members at all.
+    Unreachable(SocketAddr),
+}
+
+impl std::fmt::Display for TransportError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TransportError::Io(e) => write!(f, "exchange i/o failed: {e}"),
+            TransportError::Codec(e) => write!(f, "exchange frame invalid: {e}"),
+            TransportError::Busy => write!(f, "partner busy (exchange cancelled)"),
+            TransportError::StaleGeneration(g) => {
+                write!(f, "partner is at restart generation {g}, ours is older")
+            }
+            TransportError::Protocol(e) => write!(f, "exchange protocol violation: {e}"),
+            TransportError::Lineage(e) => write!(f, "alpha0 lineage mismatch: {e}"),
+            TransportError::Unreachable(addr) => {
+                write!(f, "transport cannot reach remote peer {addr}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for TransportError {}
+
+/// How a [`GossipLoop`](super::GossipLoop) executes the atomic push–pull
+/// exchange with a partner — in process or across the network.
+///
+/// Implementations must uphold §7.2's cancelled-exchange contract: when
+/// any method returns `Err`, every `&mut PeerState` it received is
+/// exactly its pre-call value.
+pub trait Transport: Send + Sync + std::fmt::Debug + 'static {
+    /// Short human name for telemetry and error messages.
+    fn name(&self) -> &'static str;
+
+    /// True when [`Transport::exchange_remote`] can actually reach a
+    /// socket address. The loop refuses to start a fleet containing
+    /// [`GossipMember::Remote`](super::GossipMember::Remote) members on a
+    /// transport that cannot.
+    fn supports_remote(&self) -> bool {
+        false
+    }
+
+    /// Atomic push–pull between two co-located members: both end up with
+    /// the averaged state, or neither changes. Returns the wire bytes the
+    /// exchange *would* move (push + pull frames, codec byte-exact) for
+    /// traffic accounting.
+    fn exchange_local(
+        &self,
+        a: &mut PeerState,
+        b: &mut PeerState,
+    ) -> Result<usize, TransportError>;
+
+    /// Atomic push–pull with a remote node: push `local`'s framed state
+    /// at restart generation `generation`, pull the averaged reply, and
+    /// adopt it. Returns the bytes moved on the wire. On `Err`, `local`
+    /// is exactly its pre-call value (cancelled exchange, §7.2).
+    fn exchange_remote(
+        &self,
+        local: &mut PeerState,
+        generation: u64,
+        peer: SocketAddr,
+    ) -> Result<usize, TransportError> {
+        let _ = (local, generation);
+        Err(TransportError::Unreachable(peer))
+    }
+
+    /// The address this transport's accept loop serves, if it has one.
+    fn listen_addr(&self) -> Option<SocketAddr> {
+        None
+    }
+
+    /// Spawn the serve side (accept loop), if this transport has one.
+    /// Called once by [`GossipLoop`](super::GossipLoop) at start; the
+    /// returned thread must watch [`NodeHandle::stopping`] and exit
+    /// promptly when it turns true.
+    fn spawn_server(&self, node: NodeHandle) -> crate::Result<Option<JoinHandle<()>>> {
+        let _ = node;
+        Ok(None)
+    }
+}
+
+/// The shared in-memory exchange: [`PeerState::exchange`] plus PR 2's
+/// exact byte accounting (push frame sized before the exchange, pull
+/// frame after). Both shipped transports use it for co-located pairs, so
+/// local exchanges are bit-identical across transports.
+pub fn in_process_exchange(
+    a: &mut PeerState,
+    b: &mut PeerState,
+) -> Result<usize, TransportError> {
+    let push = peer_state_wire_size(a);
+    // `exchange` validates the lineage before mutating anything, so an
+    // error here leaves both states untouched (§7.2).
+    PeerState::exchange(a, b).map_err(|e| TransportError::Lineage(e.to_string()))?;
+    Ok(push + peer_state_wire_size(b))
+}
+
+/// PR 2's in-process behavior behind the [`Transport`] trait: members
+/// exchange directly in memory, remote members are unreachable.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct InProcessTransport;
+
+impl Transport for InProcessTransport {
+    fn name(&self) -> &'static str {
+        "in-process"
+    }
+
+    fn exchange_local(
+        &self,
+        a: &mut PeerState,
+        b: &mut PeerState,
+    ) -> Result<usize, TransportError> {
+        in_process_exchange(a, b)
+    }
+}
+
+/// Hard cap on a length-prefixed frame. A peer state is ~16 bytes per
+/// live bucket plus a fixed header (~16 KiB at the default m = 1024);
+/// 4 MiB admits bucket budgets up to ~260k while bounding what a
+/// connection flood can pin to `MAX_INFLIGHT_SERVES × 4 MiB` — and the
+/// incremental read below means even that much is allocated only for
+/// bytes a peer actually sends.
+pub const MAX_FRAME_BYTES: usize = 4 << 20;
+
+/// Write one `[len u32 LE][frame]` record.
+fn write_frame(mut w: impl Write, frame: &[u8]) -> std::io::Result<()> {
+    w.write_all(&(frame.len() as u32).to_le_bytes())?;
+    w.write_all(frame)?;
+    w.flush()
+}
+
+/// Read one `[len u32 LE][frame]` record, rejecting absurd lengths.
+///
+/// The buffer grows with the bytes that actually arrive (via
+/// [`Read::take`]), so a hostile prefix claiming a huge length pins no
+/// memory beyond what the peer really sends within the socket deadline.
+fn read_frame(mut r: impl Read) -> std::io::Result<Vec<u8>> {
+    let mut len = [0u8; 4];
+    r.read_exact(&mut len)?;
+    let len = u32::from_le_bytes(len) as usize;
+    if len > MAX_FRAME_BYTES {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            format!("frame length {len} exceeds the {MAX_FRAME_BYTES}-byte cap"),
+        ));
+    }
+    let mut buf = Vec::with_capacity(len.min(64 << 10));
+    (&mut r).take(len as u64).read_to_end(&mut buf)?;
+    if buf.len() != len {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::UnexpectedEof,
+            format!("frame truncated: got {} of {len} bytes", buf.len()),
+        ));
+    }
+    Ok(buf)
+}
+
+/// Length-prefixed exchange frames over `std::net` TCP.
+///
+/// Bind one per serving node ([`TcpTransport::bind`], address book
+/// built *before* any loop starts so nodes can list each other as
+/// [`GossipMember::Remote`](super::GossipMember::Remote)); pure clients
+/// use [`TcpTransport::connect_only`]. Every socket operation carries the
+/// per-exchange deadline
+/// ([`GossipLoopConfig::exchange_deadline_ms`](crate::config::GossipLoopConfig::exchange_deadline_ms));
+/// a missed deadline cancels the exchange with both sides keeping their
+/// pre-round state (§7.2).
+#[derive(Debug)]
+pub struct TcpTransport {
+    /// Taken (once) by `spawn_server` when the loop starts.
+    listener: Mutex<Option<TcpListener>>,
+    local_addr: Option<SocketAddr>,
+    deadline: Duration,
+}
+
+impl TcpTransport {
+    /// Bind the accept side on `addr` (use port 0 for an OS-assigned
+    /// loopback port) with the given per-exchange deadline.
+    pub fn bind(addr: impl ToSocketAddrs, deadline: Duration) -> crate::Result<Self> {
+        anyhow::ensure!(
+            !deadline.is_zero(),
+            "gossip_exchange_deadline_ms must be >= 1 (a zero deadline \
+             cancels every remote exchange)"
+        );
+        let listener = TcpListener::bind(addr).context("binding gossip transport listener")?;
+        let local_addr = listener
+            .local_addr()
+            .context("resolving transport listen address")?;
+        Ok(Self {
+            listener: Mutex::new(Some(listener)),
+            local_addr: Some(local_addr),
+            deadline,
+        })
+    }
+
+    /// A client-only transport: can initiate exchanges with remote nodes
+    /// but serves no inbound ones (no accept loop).
+    pub fn connect_only(deadline: Duration) -> crate::Result<Self> {
+        anyhow::ensure!(
+            !deadline.is_zero(),
+            "gossip_exchange_deadline_ms must be >= 1 (a zero deadline \
+             cancels every remote exchange)"
+        );
+        Ok(Self {
+            listener: Mutex::new(None),
+            local_addr: None,
+            deadline,
+        })
+    }
+
+    /// The per-exchange deadline.
+    pub fn deadline(&self) -> Duration {
+        self.deadline
+    }
+}
+
+impl Transport for TcpTransport {
+    fn name(&self) -> &'static str {
+        "tcp"
+    }
+
+    fn supports_remote(&self) -> bool {
+        true
+    }
+
+    fn exchange_local(
+        &self,
+        a: &mut PeerState,
+        b: &mut PeerState,
+    ) -> Result<usize, TransportError> {
+        // Co-located members short-circuit the socket: byte-identical to
+        // the in-process transport.
+        in_process_exchange(a, b)
+    }
+
+    fn exchange_remote(
+        &self,
+        local: &mut PeerState,
+        generation: u64,
+        peer: SocketAddr,
+    ) -> Result<usize, TransportError> {
+        let io = |e: std::io::Error| TransportError::Io(e.to_string());
+        let stream = TcpStream::connect_timeout(&peer, self.deadline).map_err(io)?;
+        stream.set_read_timeout(Some(self.deadline)).map_err(io)?;
+        stream.set_write_timeout(Some(self.deadline)).map_err(io)?;
+        let _ = stream.set_nodelay(true);
+
+        let push = encode_exchange_push(generation, local);
+        write_frame(&stream, &push).map_err(io)?;
+        let reply = read_frame(&stream).map_err(io)?;
+        match decode_exchange(&reply).map_err(|e| TransportError::Codec(e.to_string()))? {
+            ExchangeFrame::Reply {
+                generation: gen,
+                state,
+            } => {
+                if gen != generation {
+                    return Err(TransportError::Protocol(format!(
+                        "reply at generation {gen}, push was {generation}"
+                    )));
+                }
+                if state.id != local.id {
+                    return Err(TransportError::Protocol(format!(
+                        "reply carries peer id {}, expected {}",
+                        state.id, local.id
+                    )));
+                }
+                if !state.sketch.mapping().same_lineage(local.sketch.mapping()) {
+                    return Err(TransportError::Lineage(format!(
+                        "reply alpha0 {} vs local {}",
+                        state.sketch.mapping().alpha0(),
+                        local.sketch.mapping().alpha0()
+                    )));
+                }
+                // Commit point: the partner already committed when its
+                // reply write succeeded; adopting completes the exchange.
+                *local = state;
+                Ok(8 + push.len() + reply.len())
+            }
+            ExchangeFrame::Reject {
+                generation: gen,
+                reason,
+            } => Err(match reason {
+                RejectReason::Busy => TransportError::Busy,
+                RejectReason::StaleGeneration => TransportError::StaleGeneration(gen),
+                RejectReason::Lineage => {
+                    TransportError::Lineage("partner rejected: alpha0 lineage mismatch".into())
+                }
+                RejectReason::Malformed => {
+                    TransportError::Protocol("partner rejected the push frame as malformed".into())
+                }
+            }),
+            ExchangeFrame::Push { .. } => {
+                Err(TransportError::Protocol("partner replied with a push frame".into()))
+            }
+        }
+    }
+
+    fn listen_addr(&self) -> Option<SocketAddr> {
+        self.local_addr
+    }
+
+    fn spawn_server(&self, node: NodeHandle) -> crate::Result<Option<JoinHandle<()>>> {
+        let listener = self
+            .listener
+            .lock()
+            .expect("transport listener mutex poisoned")
+            .take();
+        let Some(listener) = listener else {
+            return Ok(None);
+        };
+        listener
+            .set_nonblocking(true)
+            .context("switching the accept loop to non-blocking")?;
+        let deadline = self.deadline;
+        let handle = std::thread::Builder::new()
+            .name("dudd-accept".into())
+            .spawn(move || accept_loop(&listener, &node, deadline))
+            .context("spawning transport accept loop")?;
+        Ok(Some(handle))
+    }
+}
+
+/// Most inbound exchanges served concurrently; connections beyond this
+/// are dropped (the initiator counts a cancelled exchange and retries
+/// next round, §7.2), bounding thread count and memory under a
+/// connection flood.
+const MAX_INFLIGHT_SERVES: usize = 32;
+
+/// Accept loop: non-blocking accept polled against the stop flag (≤5 ms
+/// latency to shut down), one short-lived handler thread per inbound
+/// exchange, capped at [`MAX_INFLIGHT_SERVES`]. Handlers are bounded by
+/// the socket deadlines, so a stuck client can never wedge the node.
+fn accept_loop(listener: &TcpListener, node: &NodeHandle, deadline: Duration) {
+    let inflight = Arc::new(AtomicUsize::new(0));
+    while !node.stopping() {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                if inflight.load(Ordering::SeqCst) >= MAX_INFLIGHT_SERVES {
+                    drop(stream); // overload: cancelled exchange (§7.2)
+                    continue;
+                }
+                inflight.fetch_add(1, Ordering::SeqCst);
+                let node = node.clone();
+                let inflight = inflight.clone();
+                let spawned = std::thread::Builder::new()
+                    .name("dudd-exchange".into())
+                    .spawn(move || {
+                        serve_connection(&stream, &node, deadline);
+                        inflight.fetch_sub(1, Ordering::SeqCst);
+                    });
+                if spawned.is_err() {
+                    inflight.fetch_sub(1, Ordering::SeqCst);
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(5)),
+        }
+    }
+}
+
+/// Serve one inbound exchange on an accepted connection.
+fn serve_connection(stream: &TcpStream, node: &NodeHandle, deadline: Duration) {
+    // The listener is non-blocking; the exchange itself must not be.
+    if stream.set_nonblocking(false).is_err()
+        || stream.set_read_timeout(Some(deadline)).is_err()
+        || stream.set_write_timeout(Some(deadline)).is_err()
+    {
+        return;
+    }
+    let _ = stream.set_nodelay(true);
+    let frame = match read_frame(stream) {
+        Ok(f) => f,
+        Err(_) => return,
+    };
+    let (generation, state) = match decode_exchange(&frame) {
+        Ok(ExchangeFrame::Push { generation, state }) => (generation, state),
+        // Malformed or non-push frames never touch local state (§7.2).
+        _ => {
+            let _ = write_frame(stream, &encode_exchange_reject(0, RejectReason::Malformed));
+            return;
+        }
+    };
+    // The reply write runs inside the commit window: the serve-side state
+    // change lands only once the averaged reply is on the wire and rolls
+    // back when the write fails — a cancelled exchange leaves both sides
+    // at their pre-round state.
+    let served = node.serve_exchange(state, generation, |reply, gen| {
+        write_frame(stream, &encode_exchange_reply(gen, reply))
+    });
+    if let Err(reject) = served {
+        let (gen, reason) = match reject {
+            ServeReject::Busy => (0, RejectReason::Busy),
+            ServeReject::StaleGeneration(g) => (g, RejectReason::StaleGeneration),
+            ServeReject::Lineage => (0, RejectReason::Lineage),
+            // The reply write itself failed; the socket is gone.
+            ServeReject::Cancelled(_) => return,
+        };
+        let _ = write_frame(stream, &encode_exchange_reject(gen, reason));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn state(id: usize, values: &[f64]) -> PeerState {
+        PeerState::init(id, values, 0.01, 64).unwrap()
+    }
+
+    #[test]
+    fn in_process_exchange_matches_peer_state_exchange() {
+        let mut a1 = state(0, &[1.0, 2.0, 3.0]);
+        let mut b1 = state(1, &[10.0, 20.0]);
+        let mut a2 = a1.clone();
+        let mut b2 = b1.clone();
+
+        let expect_push = peer_state_wire_size(&a1);
+        PeerState::exchange(&mut a1, &mut b1).unwrap();
+        let expect = expect_push + peer_state_wire_size(&b1);
+
+        let bytes = in_process_exchange(&mut a2, &mut b2).unwrap();
+        assert_eq!(bytes, expect);
+        assert_eq!(a2.n_tilde.to_bits(), a1.n_tilde.to_bits());
+        assert_eq!(b2.q_tilde.to_bits(), b1.q_tilde.to_bits());
+        assert_eq!(
+            a2.sketch.positive_store().entries(),
+            a1.sketch.positive_store().entries()
+        );
+    }
+
+    #[test]
+    fn lineage_error_cancels_in_process_exchange() {
+        let mut a = state(0, &[1.0, 2.0]);
+        let mut b = PeerState::init(1, &[3.0], 0.05, 64).unwrap();
+        let a_before = a.clone();
+        let b_before = b.clone();
+        assert!(matches!(
+            in_process_exchange(&mut a, &mut b),
+            Err(TransportError::Lineage(_))
+        ));
+        assert_eq!(a.n_tilde.to_bits(), a_before.n_tilde.to_bits());
+        assert_eq!(
+            a.sketch.positive_store().entries(),
+            a_before.sketch.positive_store().entries()
+        );
+        assert_eq!(
+            b.sketch.positive_store().entries(),
+            b_before.sketch.positive_store().entries()
+        );
+    }
+
+    #[test]
+    fn in_process_transport_refuses_remote_peers() {
+        let t = InProcessTransport;
+        assert!(!t.supports_remote());
+        let mut s = state(0, &[1.0]);
+        let before = s.clone();
+        let addr: SocketAddr = "127.0.0.1:9".parse().unwrap();
+        assert!(matches!(
+            t.exchange_remote(&mut s, 1, addr),
+            Err(TransportError::Unreachable(_))
+        ));
+        assert_eq!(s.n_tilde.to_bits(), before.n_tilde.to_bits());
+    }
+
+    #[test]
+    fn frame_io_roundtrips_and_caps_length() {
+        let mut buf: Vec<u8> = Vec::new();
+        write_frame(&mut buf, b"hello").unwrap();
+        assert_eq!(read_frame(&buf[..]).unwrap(), b"hello");
+
+        let mut hostile = Vec::new();
+        hostile.extend_from_slice(&(u32::MAX).to_le_bytes());
+        let err = read_frame(&hostile[..]).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::InvalidData);
+    }
+
+    #[test]
+    fn tcp_transport_requires_nonzero_deadline() {
+        assert!(TcpTransport::bind("127.0.0.1:0", Duration::ZERO).is_err());
+        assert!(TcpTransport::connect_only(Duration::ZERO).is_err());
+        let t = TcpTransport::connect_only(Duration::from_millis(50)).unwrap();
+        assert!(t.supports_remote());
+        assert_eq!(t.listen_addr(), None);
+        assert_eq!(t.deadline(), Duration::from_millis(50));
+    }
+
+    #[test]
+    fn remote_exchange_failure_leaves_initiator_untouched() {
+        // Nothing listens on this freshly bound-then-dropped port.
+        let addr = {
+            let l = TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap()
+        };
+        let t = TcpTransport::connect_only(Duration::from_millis(100)).unwrap();
+        let mut s = state(0, &[1.0, 2.0, 3.0]);
+        let before = s.clone();
+        let err = t.exchange_remote(&mut s, 1, addr).unwrap_err();
+        assert!(matches!(err, TransportError::Io(_)), "{err:?}");
+        assert_eq!(s.n_tilde.to_bits(), before.n_tilde.to_bits());
+        assert_eq!(s.q_tilde.to_bits(), before.q_tilde.to_bits());
+        assert_eq!(
+            s.sketch.positive_store().entries(),
+            before.sketch.positive_store().entries()
+        );
+    }
+
+    #[test]
+    fn local_exchange_is_transport_independent() {
+        let tcp = TcpTransport::connect_only(Duration::from_millis(50)).unwrap();
+        let inp = InProcessTransport;
+        let (mut a1, mut b1) = (state(0, &[1.0, 5.0]), state(1, &[9.0]));
+        let (mut a2, mut b2) = (a1.clone(), b1.clone());
+        let x = inp.exchange_local(&mut a1, &mut b1).unwrap();
+        let y = tcp.exchange_local(&mut a2, &mut b2).unwrap();
+        assert_eq!(x, y);
+        assert_eq!(a1.n_tilde.to_bits(), a2.n_tilde.to_bits());
+        assert_eq!(
+            a1.sketch.positive_store().entries(),
+            a2.sketch.positive_store().entries()
+        );
+    }
+}

@@ -1,7 +1,7 @@
-//! Binary wire format for sketches and peer states.
+//! Binary wire format for sketches, peer states, and exchange frames.
 //!
 //! A real P2P deployment ships the gossip state over the network; this
-//! codec defines that frame (and gives the simulator exact per-message
+//! codec defines those frames (and gives the simulator exact per-message
 //! byte accounting, reported in `RoundStats`). Hand-rolled little-endian
 //! layout (serde is unavailable offline — DESIGN.md §6):
 //!
@@ -13,11 +13,26 @@
 //! ```
 //!
 //! Peer-state frames append `id u64 | n_tilde f64 | q_tilde f64`.
+//!
+//! The transport layer ([`crate::service::transport`]) wraps peer states
+//! in **exchange frames** — the messages of the atomic push–pull
+//! protocol:
+//!
+//! ```text
+//! magic "UDDX" | version u8 | kind u8 | generation u64 | payload
+//! ```
+//!
+//! where `kind` selects [`ExchangeKind`] and the payload is a peer-state
+//! frame (`Push`/`Reply`) or a one-byte [`RejectReason`] (`Reject`).
+//! Every decoder rejects bad magic, unknown versions/kinds, truncation at
+//! any offset, and length fields larger than the remaining buffer (so a
+//! hostile frame can never trigger a huge allocation).
 
 use super::{SketchError, Store, UddSketch};
 use crate::gossip::PeerState;
 
 const MAGIC: &[u8; 4] = b"UDDS";
+const EXCHANGE_MAGIC: &[u8; 4] = b"UDDX";
 const VERSION: u8 = 1;
 
 /// Encoding/decoding errors.
@@ -32,6 +47,8 @@ pub enum CodecError {
     BadMagic,
     /// Unsupported version byte.
     BadVersion(u8),
+    /// Unknown exchange-frame kind byte.
+    BadKind(u8),
     /// Decoded parameters failed sketch validation.
     BadParams(String),
 }
@@ -42,6 +59,7 @@ impl std::fmt::Display for CodecError {
             CodecError::Truncated(pos) => write!(f, "truncated frame at byte {pos}"),
             CodecError::BadMagic => write!(f, "bad magic (not a DUDDSketch frame)"),
             CodecError::BadVersion(v) => write!(f, "unsupported frame version {v}"),
+            CodecError::BadKind(k) => write!(f, "unknown exchange frame kind {k}"),
             CodecError::BadParams(msg) => write!(f, "invalid sketch parameters: {msg}"),
         }
     }
@@ -87,6 +105,22 @@ impl<'a> Reader<'a> {
     fn f64(&mut self) -> Result<f64, CodecError> {
         Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
     }
+
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    /// A length field for `width`-byte records: rejected when the claimed
+    /// count cannot fit in the remaining buffer, so hostile frames are
+    /// refused *before* any allocation sized from the wire.
+    fn len_field(&mut self, width: usize) -> Result<usize, CodecError> {
+        let pos = self.pos;
+        let n = self.u64()?;
+        if n > (self.remaining() / width) as u64 {
+            return Err(CodecError::Truncated(pos));
+        }
+        Ok(n as usize)
+    }
 }
 
 fn encode_sketch_into<S: Store>(s: &UddSketch<S>, out: &mut Vec<u8>) {
@@ -123,12 +157,12 @@ fn decode_sketch_from<S: Store>(
     let mut sketch: UddSketch<S> = UddSketch::new(alpha0, max_buckets)
         .map_err(|e: SketchError| CodecError::BadParams(e.to_string()))?;
     sketch.align_to_collapses(collapses);
-    let pos_len = r.u64()? as usize;
+    let pos_len = r.len_field(16)?;
     let mut pos = Vec::with_capacity(pos_len);
     for _ in 0..pos_len {
         pos.push((r.i64()?, r.f64()?));
     }
-    let neg_len = r.u64()? as usize;
+    let neg_len = r.len_field(16)?;
     let mut neg = Vec::with_capacity(neg_len);
     for _ in 0..neg_len {
         neg.push((r.i64()?, r.f64()?));
@@ -149,19 +183,15 @@ pub fn decode_sketch<S: Store>(buf: &[u8]) -> Result<UddSketch<S>, CodecError> {
     decode_sketch_from(&mut Reader::new(buf))
 }
 
-/// Encode a full peer state (gossip message payload).
-pub fn encode_peer_state(s: &PeerState) -> Vec<u8> {
-    let mut out = encode_sketch(&s.sketch);
+fn encode_peer_state_into(s: &PeerState, out: &mut Vec<u8>) {
+    encode_sketch_into(&s.sketch, out);
     out.extend_from_slice(&(s.id as u64).to_le_bytes());
     out.extend_from_slice(&s.n_tilde.to_le_bytes());
     out.extend_from_slice(&s.q_tilde.to_le_bytes());
-    out
 }
 
-/// Decode a peer-state frame.
-pub fn decode_peer_state(buf: &[u8]) -> Result<PeerState, CodecError> {
-    let mut r = Reader::new(buf);
-    let sketch = decode_sketch_from(&mut r)?;
+fn decode_peer_state_from(r: &mut Reader<'_>) -> Result<PeerState, CodecError> {
+    let sketch = decode_sketch_from(r)?;
     let id = r.u64()? as usize;
     let n_tilde = r.f64()?;
     let q_tilde = r.f64()?;
@@ -171,6 +201,158 @@ pub fn decode_peer_state(buf: &[u8]) -> Result<PeerState, CodecError> {
         n_tilde,
         q_tilde,
     })
+}
+
+/// Encode a full peer state (gossip message payload).
+pub fn encode_peer_state(s: &PeerState) -> Vec<u8> {
+    let mut out = Vec::with_capacity(peer_state_wire_size(s));
+    encode_peer_state_into(s, &mut out);
+    out
+}
+
+/// Decode a peer-state frame.
+pub fn decode_peer_state(buf: &[u8]) -> Result<PeerState, CodecError> {
+    decode_peer_state_from(&mut Reader::new(buf))
+}
+
+/// Message kinds of the push–pull exchange protocol (the `kind` byte of
+/// the frame header).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExchangeKind {
+    /// Initiator → partner: the initiator's framed pre-round state.
+    Push = 1,
+    /// Partner → initiator: the averaged state both sides adopt.
+    Reply = 2,
+    /// Partner → initiator: exchange refused; both sides keep their
+    /// pre-round state (§7.2 cancelled exchange).
+    Reject = 3,
+}
+
+/// Why a partner refused an inbound exchange.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RejectReason {
+    /// The partner is mid-exchange or mid-round; retry next round.
+    Busy,
+    /// The push carried an older restart generation than the partner's
+    /// (the frame's `generation` field reports the partner's).
+    StaleGeneration,
+    /// The sketches' α₀ lineages differ; these peers can never merge.
+    Lineage,
+    /// The push frame failed to decode.
+    Malformed,
+}
+
+impl RejectReason {
+    fn code(self) -> u8 {
+        match self {
+            RejectReason::Busy => 1,
+            RejectReason::StaleGeneration => 2,
+            RejectReason::Lineage => 3,
+            RejectReason::Malformed => 4,
+        }
+    }
+
+    fn from_code(code: u8) -> Result<Self, CodecError> {
+        Ok(match code {
+            1 => RejectReason::Busy,
+            2 => RejectReason::StaleGeneration,
+            3 => RejectReason::Lineage,
+            4 => RejectReason::Malformed,
+            other => {
+                return Err(CodecError::BadParams(format!(
+                    "unknown reject reason {other}"
+                )))
+            }
+        })
+    }
+}
+
+/// A decoded exchange frame (see the module docs for the layout).
+#[derive(Debug, Clone)]
+pub enum ExchangeFrame {
+    /// The initiator's framed state at its restart generation.
+    Push {
+        /// Initiator's restart generation.
+        generation: u64,
+        /// Initiator's pre-round state.
+        state: PeerState,
+    },
+    /// The averaged state (carrying the initiator's id) both sides adopt.
+    Reply {
+        /// The serving node's restart generation (equals the push's after
+        /// a successful exchange).
+        generation: u64,
+        /// The averaged state.
+        state: PeerState,
+    },
+    /// Exchange refused; both sides keep their pre-round state.
+    Reject {
+        /// The serving node's generation (meaningful for
+        /// [`RejectReason::StaleGeneration`]; 0 otherwise).
+        generation: u64,
+        /// Why the exchange was refused.
+        reason: RejectReason,
+    },
+}
+
+fn exchange_header(kind: ExchangeKind, generation: u64, out: &mut Vec<u8>) {
+    out.extend_from_slice(EXCHANGE_MAGIC);
+    out.push(VERSION);
+    out.push(kind as u8);
+    out.extend_from_slice(&generation.to_le_bytes());
+}
+
+/// Encode a push frame (initiator's pre-round state).
+pub fn encode_exchange_push(generation: u64, state: &PeerState) -> Vec<u8> {
+    let mut out = Vec::with_capacity(14 + peer_state_wire_size(state));
+    exchange_header(ExchangeKind::Push, generation, &mut out);
+    encode_peer_state_into(state, &mut out);
+    out
+}
+
+/// Encode a reply frame (the averaged state both sides adopt).
+pub fn encode_exchange_reply(generation: u64, state: &PeerState) -> Vec<u8> {
+    let mut out = Vec::with_capacity(14 + peer_state_wire_size(state));
+    exchange_header(ExchangeKind::Reply, generation, &mut out);
+    encode_peer_state_into(state, &mut out);
+    out
+}
+
+/// Encode a reject frame (cancelled exchange, §7.2).
+pub fn encode_exchange_reject(generation: u64, reason: RejectReason) -> Vec<u8> {
+    let mut out = Vec::with_capacity(15);
+    exchange_header(ExchangeKind::Reject, generation, &mut out);
+    out.push(reason.code());
+    out
+}
+
+/// Decode any exchange frame, validating magic, version, and kind.
+pub fn decode_exchange(buf: &[u8]) -> Result<ExchangeFrame, CodecError> {
+    let mut r = Reader::new(buf);
+    if r.take(4)? != EXCHANGE_MAGIC {
+        return Err(CodecError::BadMagic);
+    }
+    let version = r.u8()?;
+    if version != VERSION {
+        return Err(CodecError::BadVersion(version));
+    }
+    let kind = r.u8()?;
+    let generation = r.u64()?;
+    match kind {
+        1 => Ok(ExchangeFrame::Push {
+            generation,
+            state: decode_peer_state_from(&mut r)?,
+        }),
+        2 => Ok(ExchangeFrame::Reply {
+            generation,
+            state: decode_peer_state_from(&mut r)?,
+        }),
+        3 => Ok(ExchangeFrame::Reject {
+            generation,
+            reason: RejectReason::from_code(r.u8()?)?,
+        }),
+        other => Err(CodecError::BadKind(other)),
+    }
 }
 
 /// Wire size of a peer state without materializing the frame (used for
@@ -274,5 +456,92 @@ mod tests {
             assert!(r.is_err(), "cut at {cut} should fail");
         }
         assert!(decode_peer_state(&buf).is_ok());
+    }
+
+    #[test]
+    fn exchange_push_and_reply_roundtrip() {
+        let st = PeerState::init(3, &[1.0, 2.5, 9.0], 0.01, 32).unwrap();
+        for (buf, want_push) in [
+            (encode_exchange_push(7, &st), true),
+            (encode_exchange_reply(7, &st), false),
+        ] {
+            match decode_exchange(&buf).unwrap() {
+                ExchangeFrame::Push { generation, state } if want_push => {
+                    assert_eq!(generation, 7);
+                    assert_eq!(state.id, 3);
+                    assert_eq!(state.n_tilde, 3.0);
+                }
+                ExchangeFrame::Reply { generation, state } if !want_push => {
+                    assert_eq!(generation, 7);
+                    assert_eq!(
+                        state.sketch.positive_store().entries(),
+                        st.sketch.positive_store().entries()
+                    );
+                }
+                other => panic!("wrong frame decoded: {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn exchange_reject_roundtrip_all_reasons() {
+        for reason in [
+            RejectReason::Busy,
+            RejectReason::StaleGeneration,
+            RejectReason::Lineage,
+            RejectReason::Malformed,
+        ] {
+            let buf = encode_exchange_reject(42, reason);
+            match decode_exchange(&buf).unwrap() {
+                ExchangeFrame::Reject { generation, reason: r } => {
+                    assert_eq!(generation, 42);
+                    assert_eq!(r, reason);
+                }
+                other => panic!("wrong frame: {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn exchange_frame_rejects_bad_inputs() {
+        let st = PeerState::init(0, &[5.0], 0.01, 32).unwrap();
+        let good = encode_exchange_push(1, &st);
+
+        assert_eq!(decode_exchange(b"UDD").unwrap_err(), CodecError::Truncated(0));
+        assert_eq!(
+            decode_exchange(b"UDDSxxxxxxxxxxxxxxxx").unwrap_err(),
+            CodecError::BadMagic,
+            "sketch magic is not exchange magic"
+        );
+        let mut bad = good.clone();
+        bad[4] = 99;
+        assert_eq!(decode_exchange(&bad).unwrap_err(), CodecError::BadVersion(99));
+        let mut bad = good.clone();
+        bad[5] = 17;
+        assert_eq!(decode_exchange(&bad).unwrap_err(), CodecError::BadKind(17));
+        let mut bad = encode_exchange_reject(0, RejectReason::Busy);
+        *bad.last_mut().unwrap() = 200;
+        assert!(matches!(
+            decode_exchange(&bad).unwrap_err(),
+            CodecError::BadParams(_)
+        ));
+        for cut in 0..good.len() {
+            assert!(decode_exchange(&good[..cut]).is_err(), "cut {cut}");
+        }
+    }
+
+    #[test]
+    fn hostile_length_prefix_rejected_before_allocation() {
+        // Patch the positive-store length field of a valid sketch frame to
+        // an absurd count: the decoder must fail fast, not reserve memory.
+        let s = sample_sketch();
+        let mut buf = encode_sketch(&s);
+        // Layout: magic(4) version(1) alpha(8) collapses(4) m(8) zero(8),
+        // then pos_len at offset 33.
+        buf[33..41].copy_from_slice(&u64::MAX.to_le_bytes());
+        assert!(matches!(
+            decode_sketch::<SparseStore>(&buf).unwrap_err(),
+            CodecError::Truncated(_)
+        ));
     }
 }

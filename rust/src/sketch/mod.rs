@@ -18,11 +18,61 @@ mod exact;
 mod store;
 mod uddsketch;
 
-pub use codec::{decode_peer_state, decode_sketch, encode_peer_state, encode_sketch, CodecError};
+pub use codec::{
+    decode_exchange, decode_peer_state, decode_sketch, encode_exchange_push,
+    encode_exchange_reject, encode_exchange_reply, encode_peer_state, encode_sketch,
+    CodecError, ExchangeFrame, ExchangeKind, RejectReason,
+};
 pub use ddsketch::DdSketch;
 pub use exact::ExactQuantiles;
 pub use store::{collapsed_index, DenseStore, SparseStore, Store, VecStore};
 pub use uddsketch::UddSketch;
+
+/// One query interface over every quantile surface the crate serves.
+///
+/// Three read paths answer quantile queries — the sequential
+/// [`UddSketch`], the service's local
+/// [`Snapshot`](crate::service::Snapshot) (exact epoch fold of this
+/// node's stream), and the gossip loop's
+/// [`GlobalView`](crate::service::GlobalView) (network-converged estimate
+/// of the fleet's *union* stream, Algorithm 6). They differ in what
+/// population they describe, not in how they are asked; this trait pins
+/// the shared contract so monitoring and verification code can be written
+/// once.
+///
+/// ```
+/// use duddsketch::sketch::{QuantileReader, UddSketch};
+///
+/// fn p99(reader: &dyn QuantileReader) -> Option<f64> {
+///     reader.quantile(0.99).ok()
+/// }
+///
+/// let mut s: UddSketch = UddSketch::new(0.01, 256).unwrap();
+/// s.extend(&[1.0, 2.0, 3.0]);
+/// assert!(p99(&s).is_some());
+/// ```
+pub trait QuantileReader {
+    /// Estimate the inferior q-quantile (Definition 2) of the summarized
+    /// population.
+    fn quantile(&self, q: f64) -> Result<f64, SketchError>;
+
+    /// Estimated CDF at `x`: the fraction of the population ≤ x.
+    fn cdf(&self, x: f64) -> Result<f64, SketchError>;
+
+    /// Summarized population size (the stream length for insert-only
+    /// workloads; an estimate for network-converged views).
+    fn count(&self) -> f64;
+
+    /// Batch quantile queries.
+    fn quantiles(&self, qs: &[f64]) -> Result<Vec<f64>, SketchError> {
+        qs.iter().map(|&q| self.quantile(q)).collect()
+    }
+
+    /// True when no weight is summarized.
+    fn is_empty(&self) -> bool {
+        self.count() <= 0.0
+    }
+}
 
 /// Errors surfaced by sketch construction and queries.
 ///

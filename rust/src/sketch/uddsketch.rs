@@ -370,6 +370,28 @@ impl<S: Store> UddSketch<S> {
     }
 }
 
+impl<S: Store> super::QuantileReader for UddSketch<S> {
+    fn quantile(&self, q: f64) -> Result<f64, SketchError> {
+        UddSketch::quantile(self, q)
+    }
+
+    fn cdf(&self, x: f64) -> Result<f64, SketchError> {
+        UddSketch::cdf(self, x)
+    }
+
+    fn count(&self) -> f64 {
+        UddSketch::count(self)
+    }
+
+    fn quantiles(&self, qs: &[f64]) -> Result<Vec<f64>, SketchError> {
+        UddSketch::quantiles(self, qs)
+    }
+
+    fn is_empty(&self) -> bool {
+        UddSketch::is_empty(self)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -1,0 +1,490 @@
+//! Integration: the transport-trait redesign (ISSUE 3).
+//!
+//! Acceptance:
+//! * a fleet of ≥ 4 real nodes gossiping over **loopback TCP** — accept
+//!   loop per node, length-prefixed codec frames, per-exchange deadlines
+//!   — converges to the sequential union-stream sketch within α while
+//!   ingest continues;
+//! * the refactored `InProcess` transport reproduces PR 2's `GlobalView`
+//!   results **exactly** (old-vs-new parity against the simulation
+//!   engine's `fan_out_round`, driven with the loop's own rng
+//!   discipline);
+//! * cancelled exchanges (timeouts, malformed frames) leave both sides'
+//!   q̃ mass and averaged state bit-for-bit at their pre-round values
+//!   (§7.2).
+
+// Plain-data configs are mutated after `default()` on purpose (see lib.rs).
+#![allow(clippy::field_reassign_with_default)]
+
+use duddsketch::config::{GossipLoopConfig, ServiceConfig};
+use duddsketch::data::{peer_dataset, DatasetKind};
+use duddsketch::gossip::{fan_out_round, PeerState};
+use duddsketch::metrics::relative_error;
+use duddsketch::prelude::*;
+use duddsketch::rng::default_rng;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::time::Duration;
+
+const ACCEPT_QS: [f64; 3] = [0.5, 0.9, 0.99];
+
+fn service_cfg() -> ServiceConfig {
+    let mut c = ServiceConfig::default();
+    c.shards = 2;
+    c.batch_size = 256;
+    c.gossip.round_interval_ms = 0; // tests are the clock
+    c
+}
+
+/// Bind `n` transports first (address book before any loop starts), then
+/// build the fleet: node k's own service at global member index k,
+/// everyone else a remote peer.
+fn tcp_fleet(n: usize, cfg: &ServiceConfig) -> Vec<Node> {
+    let deadline = Duration::from_millis(cfg.gossip.exchange_deadline_ms);
+    let transports: Vec<TcpTransport> = (0..n)
+        .map(|_| TcpTransport::bind("127.0.0.1:0", deadline).unwrap())
+        .collect();
+    let addrs: Vec<SocketAddr> = transports
+        .iter()
+        .map(|t| t.listen_addr().unwrap())
+        .collect();
+    transports
+        .into_iter()
+        .enumerate()
+        .map(|(k, t)| {
+            let mut b = Node::builder().config(cfg.clone()).self_index(k).transport(t);
+            for (j, &addr) in addrs.iter().enumerate() {
+                if j != k {
+                    b = b.remote_peer(addr);
+                }
+            }
+            b.build().unwrap()
+        })
+        .collect()
+}
+
+/// Sweep all nodes until every node's view is converged on the expected
+/// union total (bounded); returns the sweeps it took.
+fn sweep_to_convergence(fleet: &[Node], total: f64, max_sweeps: usize) -> usize {
+    for sweep in 1..=max_sweeps {
+        for node in fleet {
+            node.step();
+        }
+        let views: Vec<_> = fleet
+            .iter()
+            .map(|n| n.global_view().expect("gossip enabled"))
+            .collect();
+        let gen0 = views[0].generation();
+        let all = views.iter().all(|v| {
+            v.generation() == gen0 && v.converged() && v.estimated_total() == total
+        });
+        if all {
+            return sweep;
+        }
+    }
+    let states: Vec<String> = fleet
+        .iter()
+        .map(|n| {
+            let v = n.global_view().unwrap();
+            format!(
+                "gen={} total={} converged={}",
+                v.generation(),
+                v.estimated_total(),
+                v.converged()
+            )
+        })
+        .collect();
+    panic!("TCP fleet did not converge within {max_sweeps} sweeps: {states:?}");
+}
+
+/// The acceptance test: four real nodes on loopback TCP, ingest landing
+/// in chunks between sweeps (restart generations propagate through the
+/// frames), every node's converged view within α of the sequential union
+/// sketch.
+#[test]
+fn four_tcp_nodes_converge_to_union_while_ingesting() {
+    let nodes = 4;
+    let items = 3_000;
+    let master = default_rng(42);
+    let datasets: Vec<Vec<f64>> = (0..nodes)
+        .map(|i| peer_dataset(DatasetKind::Exponential, i, items, &master))
+        .collect();
+
+    let mut seq: UddSketch = UddSketch::new(0.001, 1024).unwrap();
+    for d in &datasets {
+        seq.extend(d);
+    }
+
+    let cfg = service_cfg();
+    let fleet = tcp_fleet(nodes, &cfg);
+    for (k, node) in fleet.iter().enumerate() {
+        assert!(
+            node.listen_addr().is_some(),
+            "node {k} must serve an accept loop"
+        );
+        assert_eq!(node.self_member(), k);
+        assert_eq!(node.gossip().unwrap().members(), nodes);
+    }
+
+    // Live ingest: every node consumes its stream in 3 chunks with gossip
+    // sweeps interleaved — nodes reseed on their own epochs and drag the
+    // fleet to newer restart generations over the wire.
+    let mut writers: Vec<_> = fleet.iter().map(|n| n.writer()).collect();
+    for step in 0..3 {
+        for (k, node) in fleet.iter().enumerate() {
+            writers[k].insert_batch(&datasets[k][step * 1_000..(step + 1) * 1_000]);
+            writers[k].flush();
+            node.flush();
+        }
+        for node in &fleet {
+            node.step();
+        }
+    }
+    drop(writers);
+
+    let sweeps = sweep_to_convergence(&fleet, (nodes * items) as f64, 400);
+
+    let generations: Vec<u64> = fleet
+        .iter()
+        .map(|n| n.global_view().unwrap().generation())
+        .collect();
+    assert!(
+        generations.iter().all(|&g| g == generations[0]),
+        "every node must settle on one restart generation: {generations:?}"
+    );
+    assert!(
+        generations[0] > 1,
+        "live ingest must have restarted the protocol at least once"
+    );
+
+    for (k, node) in fleet.iter().enumerate() {
+        let v = node.global_view().unwrap();
+        assert_eq!(v.estimated_peers(), nodes as f64, "node {k} fleet size");
+        assert_eq!(
+            v.estimated_total(),
+            (nodes * items) as f64,
+            "node {k} union length"
+        );
+        for q in ACCEPT_QS {
+            let est = v.query(q).unwrap();
+            let truth = seq.quantile(q).unwrap();
+            let re = relative_error(est, truth);
+            assert!(
+                re <= seq.alpha() + 1e-9,
+                "node {k} q={q} after {sweeps} sweeps: view {est} vs \
+                 sequential {truth} (re {re} > alpha {})",
+                seq.alpha()
+            );
+        }
+    }
+    for node in fleet {
+        node.shutdown();
+    }
+}
+
+/// Old-vs-new parity: the refactored loop on the `InProcess` transport
+/// must reproduce PR 2's results **bit for bit**. The reference is the
+/// simulation engine's `fan_out_round` — the exact code PR 2's loop
+/// called — driven with the loop's own rng derivation discipline; every
+/// round must agree on exchange counts, wire bytes, and every member's
+/// full averaged state.
+#[test]
+fn in_process_transport_reproduces_pr2_results_exactly() {
+    let n = 5;
+    let items = 800;
+    let cfg = GossipLoopConfig::default();
+    let master = default_rng(cfg.seed);
+    let datasets: Vec<Vec<f64>> = (0..n)
+        .map(|i| peer_dataset(DatasetKind::Uniform, i, items, &master))
+        .collect();
+
+    let members: Vec<GossipMember> = datasets
+        .iter()
+        .map(|d| GossipMember::from_dataset(d, 0.001, 1024).unwrap())
+        .collect();
+    let gl = GossipLoop::start(cfg.clone(), members).unwrap();
+
+    // PR 2 reference: same member states, same graph derivation
+    // (master.derive(0x6EA4)), same round rng (master.derive(0x1005)),
+    // same engine round.
+    let mut grng = master.derive(0x6EA4);
+    let graph = duddsketch::graph::from_kind(cfg.graph, n, &mut grng);
+    let mut rng = master.derive(0x1005);
+    let mut states: Vec<PeerState> = datasets
+        .iter()
+        .enumerate()
+        .map(|(i, d)| {
+            let mut s: UddSketch = UddSketch::new(0.001, 1024).unwrap();
+            s.extend(d);
+            PeerState::from_sketch(i, &s)
+        })
+        .collect();
+    let online = vec![true; n];
+
+    for round in 1..=8 {
+        let (exchanges, dropped, bytes) =
+            fan_out_round(&mut states, &graph, &online, cfg.fan_out, 0.0, &mut rng);
+        assert_eq!(dropped, 0);
+        let r = gl.step();
+        assert_eq!(r.exchanges, exchanges, "round {round} exchange count");
+        assert_eq!(r.bytes, bytes, "round {round} wire bytes");
+        assert_eq!(r.failed, 0, "round {round} failures");
+        for i in 0..n {
+            let v = gl.member_view(i);
+            let s = &states[i];
+            assert_eq!(
+                v.state().n_tilde.to_bits(),
+                s.n_tilde.to_bits(),
+                "round {round} member {i} n_tilde"
+            );
+            assert_eq!(
+                v.state().q_tilde.to_bits(),
+                s.q_tilde.to_bits(),
+                "round {round} member {i} q_tilde"
+            );
+            assert_eq!(
+                v.state().sketch.positive_store().entries(),
+                s.sketch.positive_store().entries(),
+                "round {round} member {i} buckets"
+            );
+            for q in ACCEPT_QS {
+                assert_eq!(
+                    v.query(q).unwrap().to_bits(),
+                    s.query(q).unwrap().to_bits(),
+                    "round {round} member {i} q={q}"
+                );
+            }
+        }
+    }
+    gl.shutdown();
+}
+
+/// §7.2 on the wire, initiator side: a partner that accepts the push but
+/// never replies burns the deadline; the exchange must be counted failed
+/// and leave the initiator's state bit-for-bit untouched.
+#[test]
+fn timed_out_tcp_exchange_keeps_initiator_pre_round_state() {
+    // Black-hole partner: accepts, reads nothing, never replies.
+    let sink = TcpListener::bind("127.0.0.1:0").unwrap();
+    let sink_addr = sink.local_addr().unwrap();
+    let sink_thread = std::thread::spawn(move || {
+        let mut held = Vec::new();
+        for _ in 0..2 {
+            if let Ok((stream, _)) = sink.accept() {
+                held.push(stream); // keep the socket open, say nothing
+            }
+        }
+        std::thread::sleep(Duration::from_millis(400));
+        drop(held);
+    });
+
+    let mut cfg = service_cfg();
+    cfg.gossip.exchange_deadline_ms = 120;
+    let node = Node::builder()
+        .config(cfg)
+        .self_index(0)
+        .transport(TcpTransport::connect_only(Duration::from_millis(120)).unwrap())
+        .remote_peer(sink_addr)
+        .build()
+        .unwrap();
+    let mut w = node.writer();
+    w.insert_batch(&(1..=500).map(f64::from).collect::<Vec<_>>());
+    w.flush();
+    node.flush();
+
+    // First step reseeds (epoch 1) and then fails its one exchange.
+    let r1 = node.step().unwrap();
+    assert!(r1.reseeded);
+    assert_eq!(r1.exchanges, 0);
+    assert_eq!(r1.failed, 1, "timed-out exchange must be counted");
+    let before = node.global_view().unwrap().state().clone();
+
+    let r2 = node.step().unwrap();
+    assert_eq!(r2.exchanges, 0);
+    assert_eq!(r2.failed, 1);
+    let after = node.global_view().unwrap().state().clone();
+    assert_eq!(after.n_tilde.to_bits(), before.n_tilde.to_bits());
+    assert_eq!(after.q_tilde.to_bits(), before.q_tilde.to_bits());
+    assert_eq!(
+        after.sketch.positive_store().entries(),
+        before.sketch.positive_store().entries(),
+        "cancelled exchange must not move any bucket mass"
+    );
+    assert_eq!(after.sketch.count().to_bits(), before.sketch.count().to_bits());
+
+    drop(w);
+    node.shutdown();
+    sink_thread.join().unwrap();
+}
+
+/// §7.2 on the wire, serve side: malformed, truncated, and wrong-version
+/// frames are rejected by the accept loop without touching the node's
+/// state, and a well-formed push still works afterwards.
+#[test]
+fn malformed_frames_leave_server_state_unchanged() {
+    let mut cfg = service_cfg();
+    cfg.gossip.exchange_deadline_ms = 300;
+    // The remote peer list needs an entry; point it at a port nobody
+    // answers so this node's own exchanges simply fail.
+    let dead_addr = {
+        let l = TcpListener::bind("127.0.0.1:0").unwrap();
+        l.local_addr().unwrap()
+    };
+    let node = Node::builder()
+        .config(cfg)
+        .self_index(0)
+        .transport(TcpTransport::bind("127.0.0.1:0", Duration::from_millis(300)).unwrap())
+        .remote_peer(dead_addr)
+        .build()
+        .unwrap();
+    let addr = node.listen_addr().expect("accept loop bound");
+    let mut w = node.writer();
+    w.insert_batch(&(1..=400).map(f64::from).collect::<Vec<_>>());
+    w.flush();
+    node.flush();
+    node.step(); // seed epoch 1 into the protocol state
+    let before = node.global_view().unwrap().state().clone();
+
+    let talk = |payload: &[u8], truncate_to: Option<usize>| -> Vec<u8> {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.set_read_timeout(Some(Duration::from_millis(500))).unwrap();
+        s.write_all(&(payload.len() as u32).to_le_bytes()).unwrap();
+        match truncate_to {
+            Some(k) => {
+                s.write_all(&payload[..k]).unwrap();
+                drop(s.shutdown(std::net::Shutdown::Write));
+            }
+            None => s.write_all(payload).unwrap(),
+        }
+        let mut reply = Vec::new();
+        let _ = s.read_to_end(&mut reply);
+        reply
+    };
+
+    // Garbage bytes → Malformed reject.
+    let reply = talk(b"this is not an exchange frame at all....", None);
+    assert!(!reply.is_empty(), "server should answer garbage with a reject");
+
+    // A valid push whose version byte is flipped → Malformed reject.
+    let alien = PeerState::init(9, &[1.0, 2.0, 3.0], 0.001, 1024).unwrap();
+    let mut frame = duddsketch::sketch::encode_exchange_push(u64::MAX, &alien);
+    frame[4] = 99;
+    let reply = talk(&frame, None);
+    assert!(!reply.is_empty(), "wrong version should be rejected, not served");
+
+    // A truncated push → connection dies server-side, no state change.
+    let frame = duddsketch::sketch::encode_exchange_push(u64::MAX, &alien);
+    let _ = talk(&frame, Some(frame.len() / 2));
+
+    let after = node.global_view().unwrap().state().clone();
+    assert_eq!(after.n_tilde.to_bits(), before.n_tilde.to_bits());
+    assert_eq!(after.q_tilde.to_bits(), before.q_tilde.to_bits());
+    assert_eq!(
+        after.sketch.positive_store().entries(),
+        before.sketch.positive_store().entries(),
+        "bad frames must never touch the serve state"
+    );
+
+    // A genuine push at the node's generation still works: the reply is
+    // the averaged state and the server adopts it.
+    let gen = node.global_view().unwrap().generation();
+    let peer = PeerState::init(1, &[1_000.0; 100], 0.001, 1024).unwrap();
+    let frame = duddsketch::sketch::encode_exchange_push(gen, &peer);
+    let reply_bytes = talk(&frame, None);
+    assert!(reply_bytes.len() > 4, "expected a framed reply");
+    let reply = duddsketch::sketch::decode_exchange(&reply_bytes[4..]).unwrap();
+    match reply {
+        duddsketch::sketch::ExchangeFrame::Reply { generation, state } => {
+            assert_eq!(generation, gen);
+            assert_eq!(state.id, 1, "reply carries the initiator's id");
+            let served = node.global_view().unwrap().state().clone();
+            assert_eq!(served.n_tilde.to_bits(), state.n_tilde.to_bits());
+            assert_eq!(served.q_tilde.to_bits(), state.q_tilde.to_bits());
+        }
+        other => panic!("expected a reply frame, got {other:?}"),
+    }
+
+    drop(w);
+    node.shutdown();
+}
+
+/// Two real nodes, one with an accept loop and one client-only: the
+/// initiator's push lands on the server's state through the wire, both
+/// sides adopt the same averaged state, and the restart generations
+/// sync end to end. One exchange fully averages a 2-node fleet, so the
+/// estimates are exact.
+#[test]
+fn two_tcp_nodes_sync_generations_and_average_exactly() {
+    let mut cfg = service_cfg();
+    cfg.gossip.exchange_deadline_ms = 2_000;
+    // Node A serves an accept loop; its own remote peer entry (node B)
+    // is client-only, so A's outbound exchanges simply fail — all mixing
+    // flows through B's pushes.
+    let b_placeholder = {
+        let l = TcpListener::bind("127.0.0.1:0").unwrap();
+        l.local_addr().unwrap()
+    };
+    let a = Node::builder()
+        .config(cfg.clone())
+        .self_index(0)
+        .transport(TcpTransport::bind("127.0.0.1:0", Duration::from_millis(2_000)).unwrap())
+        .remote_peer(b_placeholder)
+        .build()
+        .unwrap();
+    let a_addr = a.listen_addr().unwrap();
+    let mut wa = a.writer();
+    wa.insert_batch(&(1..=200).map(f64::from).collect::<Vec<_>>());
+    wa.flush();
+    a.flush();
+    a.step(); // reseed on epoch 1 → generation 2
+
+    // Node B agrees on the member order: A is member 0, B is member 1.
+    let b = Node::builder()
+        .config(cfg)
+        .self_index(1)
+        .transport(TcpTransport::connect_only(Duration::from_millis(2_000)).unwrap())
+        .remote_peer(a_addr)
+        .build()
+        .unwrap();
+    let mut wb = b.writer();
+    wb.insert_batch(&(201..=400).map(f64::from).collect::<Vec<_>>());
+    wb.flush();
+    b.flush();
+
+    let mut completed = 0usize;
+    for _ in 0..8 {
+        let r = b.step().unwrap();
+        completed += r.exchanges;
+        if completed > 0 {
+            break;
+        }
+    }
+    assert!(completed > 0, "B never completed an exchange with A");
+
+    let va = a.global_view().unwrap();
+    let vb = b.global_view().unwrap();
+    assert_eq!(va.generation(), vb.generation(), "generations synced over TCP");
+    assert_eq!(vb.estimated_peers(), 2.0);
+    assert_eq!(vb.estimated_total(), 400.0);
+    // Both sides hold the same averaged state (A committed exactly what
+    // it replied; B adopted exactly that reply).
+    assert_eq!(va.state().q_tilde + vb.state().q_tilde, 1.0);
+    assert_eq!(
+        va.state().n_tilde.to_bits(),
+        vb.state().n_tilde.to_bits()
+    );
+    let mut seq: UddSketch = UddSketch::new(0.001, 1024).unwrap();
+    seq.extend(&(1..=400).map(f64::from).collect::<Vec<_>>());
+    for q in ACCEPT_QS {
+        assert_eq!(
+            vb.query(q).unwrap(),
+            seq.quantile(q).unwrap(),
+            "2-node fleet averages exactly, q={q}"
+        );
+    }
+
+    drop(wa);
+    drop(wb);
+    a.shutdown();
+    b.shutdown();
+}

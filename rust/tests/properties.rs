@@ -5,8 +5,9 @@ use duddsketch::gossip::PeerState;
 use duddsketch::metrics::relative_error;
 use duddsketch::rng::Rng;
 use duddsketch::sketch::{
-    decode_sketch, encode_sketch, theorem2_bound, DdSketch, ExactQuantiles,
-    SparseStore, Store, UddSketch,
+    decode_exchange, decode_sketch, encode_exchange_push, encode_exchange_reply,
+    encode_sketch, theorem2_bound, DdSketch, ExactQuantiles, ExchangeFrame, SparseStore,
+    Store, UddSketch,
 };
 use duddsketch::util::testkit::{forall, forall_vec, gen};
 
@@ -396,6 +397,102 @@ fn prop_merge_weighted_under_turnstile() {
                     .any(|((i, c), (j, d))| i != j || (c - 0.5 * d).abs() > 1e-9)
             {
                 return Err("averaged entries are not half the union".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Invariant (ISSUE 3): exchange frames — the transport's on-wire
+/// messages — roundtrip any turnstile peer state bit-exactly (generation,
+/// id, scalars, every bucket), for both push and reply kinds.
+#[test]
+fn prop_exchange_frame_roundtrip() {
+    forall(
+        "exchange-roundtrip",
+        SEED + 10,
+        24,
+        |r| {
+            let xs = gen::log_uniform_vec(r, 1500, 5.0, 3.0);
+            let id = r.index(64);
+            let generation = r.index(1 << 20) as u64;
+            let n_del = r.index(xs.len() / 2);
+            (xs, id, generation, n_del)
+        },
+        |(xs, id, generation, n_del)| {
+            let mut st = PeerState::init(*id, xs, 0.001, 64).map_err(|e| e.to_string())?;
+            for &x in &xs[..*n_del] {
+                st.sketch.delete(x);
+            }
+            st.n_tilde = xs.len() as f64 - *n_del as f64;
+            for buf in [
+                encode_exchange_push(*generation, &st),
+                encode_exchange_reply(*generation, &st),
+            ] {
+                let frame = decode_exchange(&buf).map_err(|e| e.to_string())?;
+                let (gen_out, out) = match frame {
+                    ExchangeFrame::Push { generation, state } => (generation, state),
+                    ExchangeFrame::Reply { generation, state } => (generation, state),
+                    other => return Err(format!("wrong kind decoded: {other:?}")),
+                };
+                if gen_out != *generation {
+                    return Err(format!("generation {gen_out} != {generation}"));
+                }
+                if out.id != *id {
+                    return Err(format!("id {} != {id}", out.id));
+                }
+                if out.n_tilde.to_bits() != st.n_tilde.to_bits()
+                    || out.q_tilde.to_bits() != st.q_tilde.to_bits()
+                {
+                    return Err("scalars differ".into());
+                }
+                if out.sketch.positive_store().entries()
+                    != st.sketch.positive_store().entries()
+                {
+                    return Err("positive entries differ".into());
+                }
+                if out.sketch.collapses() != st.sketch.collapses() {
+                    return Err("collapse depth differs".into());
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Invariant (ISSUE 3): no corruption of an exchange frame decodes —
+/// truncation at every offset fails, and flipping the magic, version, or
+/// kind byte is rejected. A malformed frame must never be mistaken for a
+/// valid partner state (the transport's §7.2 cancellation depends on it).
+#[test]
+fn prop_exchange_frame_rejects_corruption() {
+    forall(
+        "exchange-corruption",
+        SEED + 11,
+        16,
+        |r| {
+            let xs = gen::uniform_vec(r, 400, 1.0, 1e4);
+            let cut_unit = r.next_f64();
+            (xs, cut_unit)
+        },
+        |(xs, cut_unit)| {
+            let st = PeerState::init(1, xs, 0.01, 64).map_err(|e| e.to_string())?;
+            let buf = encode_exchange_push(3, &st);
+
+            // Truncation at a random offset (and the structural edges).
+            let random_cut = ((buf.len() - 1) as f64 * cut_unit) as usize;
+            for cut in [0usize, 4, 5, 6, 13, random_cut, buf.len() - 1] {
+                if decode_exchange(&buf[..cut]).is_ok() {
+                    return Err(format!("truncation at {cut} decoded"));
+                }
+            }
+            // Header corruption: magic, version, kind.
+            for (pos, val) in [(0usize, b'X'), (4, 77u8), (5, 9u8)] {
+                let mut bad = buf.clone();
+                bad[pos] = val;
+                if decode_exchange(&bad).is_ok() {
+                    return Err(format!("corrupt byte {pos} decoded"));
+                }
             }
             Ok(())
         },
