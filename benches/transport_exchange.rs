@@ -1,7 +1,18 @@
-//! Cost of one atomic push–pull exchange per transport: the in-process
-//! fast path (direct merge + byte accounting) vs a full loopback-TCP
-//! round trip (connect, framed push, serve, framed reply, adopt) — the
-//! per-exchange overhead a remote fleet pays over a co-located one.
+//! Cost of one atomic push–pull exchange per transport configuration:
+//! the in-process fast path (direct merge + byte accounting), a full
+//! loopback-TCP round trip on a **fresh connect** per exchange (the
+//! pre-PR 4 hot path), the same on a **pooled** connection (connection
+//! reuse), and a pooled **delta** exchange on a near-converged pair
+//! (changed buckets only) — the three layers of the ISSUE 4 transport
+//! overhaul, A/B-able against each other.
+//!
+//! Besides latency, the run prints the measured bytes-on-wire of a full
+//! vs a near-converged delta exchange. Refresh the checked-in baseline
+//! with:
+//!
+//! ```text
+//! DUDD_BENCH_JSON=BENCH_transport.json cargo bench --bench transport_exchange
+//! ```
 
 // Plain-data configs are mutated after `default()` on purpose (see lib.rs).
 #![allow(clippy::field_reassign_with_default)]
@@ -22,6 +33,15 @@ fn peer(id: usize, items: usize, seed: u64) -> PeerState {
     PeerState::init(id, &data, 0.001, 1024).unwrap()
 }
 
+fn opts(pool: usize, delta: bool) -> TcpTransportOptions {
+    TcpTransportOptions {
+        deadline: Duration::from_millis(2_000),
+        pool_connections: pool,
+        pool_idle: Duration::from_millis(30_000),
+        delta_exchanges: delta,
+    }
+}
+
 fn main() {
     let mut b = Bencher::new();
 
@@ -35,16 +55,17 @@ fn main() {
         });
     }
 
-    // Loopback TCP: a 2-node fleet; each measured op is one full framed
-    // push–pull against the serving node's accept loop.
+    // Loopback TCP: one serving node; each measured op is one full
+    // framed push–pull against its serve loop. The server's own remote
+    // peer entry is a placeholder (it never initiates).
     let mut cfg = ServiceConfig::default();
     cfg.shards = 1;
     cfg.gossip.round_interval_ms = 0;
     let server = Node::builder()
         .config(cfg.clone())
         .self_index(0)
-        .transport(TcpTransport::bind("127.0.0.1:0", Duration::from_millis(1_000)).unwrap())
-        .remote_peer("127.0.0.1:9".parse().unwrap()) // placeholder; server never initiates
+        .transport(TcpTransport::bind_with("127.0.0.1:0", opts(2, true)).unwrap())
+        .remote_peer("127.0.0.1:9".parse().unwrap())
         .build()
         .unwrap();
     let addr = server.listen_addr().unwrap();
@@ -55,18 +76,66 @@ fn main() {
     }
     server.flush();
     let _ = server.step(); // seed the fresh epoch into the protocol state
-
-    let transport = TcpTransport::connect_only(Duration::from_millis(1_000)).unwrap();
     let gen = server.global_view().unwrap().generation();
     let initiator = peer(1, 10_000, 3);
-    b.case("transport/tcp-loopback items=10000", 1, || {
+
+    // Fresh connect per exchange (pool disabled, full frames): the
+    // pre-PR 4 cost, ~1 RTT of connect on top of every push–pull.
+    let fresh = TcpTransport::connect_only_with(opts(0, false)).unwrap();
+    b.case("transport/tcp-fresh-connect items=10000", 1, || {
         let mut local = initiator.clone();
         black_box(
-            transport
+            fresh
                 .exchange_remote(&mut local, gen, addr)
                 .expect("loopback exchange"),
         );
     });
+
+    // Pooled connection, full frames: connect paid once, then reused.
+    let pooled = TcpTransport::connect_only_with(opts(2, false)).unwrap();
+    {
+        let mut warm = initiator.clone();
+        pooled.exchange_remote(&mut warm, gen, addr).expect("pool warm-up");
+    }
+    b.case("transport/tcp-pooled items=10000", 1, || {
+        let mut local = initiator.clone();
+        black_box(
+            pooled
+                .exchange_remote(&mut local, gen, addr)
+                .expect("loopback exchange"),
+        );
+    });
+
+    // Pooled + delta on a near-converged pair: warm up once so both
+    // sides share a baseline, then keep exchanging the already-averaged
+    // state — each push/reply ships only the (empty) bucket diff.
+    let delta = TcpTransport::connect_only_with(opts(2, true)).unwrap();
+    let mut converged = initiator.clone();
+    let full_bytes = delta
+        .exchange_remote(&mut converged, gen, addr)
+        .expect("baseline warm-up (full frames)");
+    let delta_bytes = delta
+        .exchange_remote(&mut converged.clone(), gen, addr)
+        .expect("near-converged delta exchange");
+    println!(
+        "bench transport/bytes-on-wire full={full_bytes}B near-converged-delta={delta_bytes}B \
+         ({}x smaller)",
+        full_bytes / delta_bytes.max(1)
+    );
+    b.case("transport/tcp-pooled-delta items=10000", 1, || {
+        let mut local = converged.clone();
+        black_box(
+            delta
+                .exchange_remote(&mut local, gen, addr)
+                .expect("loopback exchange"),
+        );
+    });
+
+    let stats = pooled.pool_stats();
+    println!(
+        "bench transport/pool-stats reused={} fresh={} stale={} expired={}",
+        stats.reused, stats.fresh_connects, stats.stale_discarded, stats.expired
+    );
 
     server.shutdown();
     b.finish("transport_exchange");

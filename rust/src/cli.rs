@@ -112,14 +112,19 @@ USAGE:
       keys: serve-bench keys plus gossip_fanout gossip_graph gossip_drift
             gossip_probes gossip_seed
   duddsketch serve-remote [--dataset NAME] [--items N] [--nodes P]
-            [--rounds R] [--q Q1,Q2,...] [--seed X] [key=value ...]
-      run P real nodes on loopback TCP: every node binds an accept loop,
+            [--rounds R] [--q Q1,Q2,...] [--seed X] [--no-delta]
+            [--no-pool] [key=value ...]
+      run P real nodes on loopback TCP: every node binds a serve loop,
       lists the others as remote peers, and gossips framed PeerStates
       (push–pull with per-exchange deadlines, §7.2 cancellation) while
       its own ingest continues; every node's global view is verified
-      against a sequential UDDSketch over the union stream
-      keys: serve-gossip keys plus gossip_deadline_ms (shards defaults
-            to 2 per node here)
+      against a sequential UDDSketch over the union stream. Connection
+      pooling and delta frames (docs/PROTOCOL.md) are on by default;
+      --no-pool forces a fresh connect per exchange and --no-delta
+      forces full frames (handy for A/B-ing the hot-path wins)
+      keys: serve-gossip keys plus gossip_deadline_ms
+            gossip_pool_connections gossip_pool_idle_ms
+            gossip_delta_exchanges (shards defaults to 2 per node here)
   duddsketch info
       platform, artifact inventory, defaults
 
@@ -550,9 +555,8 @@ fn cmd_serve_gossip(args: &Args) -> Result<String> {
 }
 
 fn cmd_serve_remote(args: &Args) -> Result<String> {
-    use crate::service::{Node, TcpTransport};
+    use crate::service::{Node, TcpTransport, TcpTransportOptions};
     use std::net::SocketAddr;
-    use std::time::Duration;
 
     let kind: DatasetKind = args
         .flag("dataset")
@@ -611,9 +615,15 @@ fn cmd_serve_remote(args: &Args) -> Result<String> {
     // sits at global member index k, everyone else is a remote peer.
     let mut gcfg = cfg.gossip.clone();
     gcfg.round_interval_ms = 0; // the CLI is the clock: one step per row
-    let deadline = Duration::from_millis(gcfg.exchange_deadline_ms);
+    if args.has("no-delta") {
+        gcfg.delta_exchanges = false;
+    }
+    if args.has("no-pool") {
+        gcfg.pool_connections = 0;
+    }
+    let opts = TcpTransportOptions::from_gossip(&gcfg);
     let transports: Vec<TcpTransport> = (0..nodes)
-        .map(|_| TcpTransport::bind("127.0.0.1:0", deadline))
+        .map(|_| TcpTransport::bind_with("127.0.0.1:0", opts.clone()))
         .collect::<Result<_>>()?;
     let addrs: Vec<SocketAddr> = transports
         .iter()
@@ -974,6 +984,34 @@ mod tests {
         assert!(out.contains("serve-remote"), "{out}");
         assert!(out.contains("listening on 127.0.0.1:"), "{out}");
         assert!(out.contains("worst-node-view"), "{out}");
+        assert!(out.contains("OK: worst rel-diff"), "{out}");
+    }
+
+    #[test]
+    fn serve_remote_full_frames_and_fresh_connects_still_converge() {
+        // --no-delta/--no-pool A/B the hot-path machinery off; the
+        // protocol result must be identical (full frames, fresh
+        // connects).
+        let a = args(&[
+            "serve-remote",
+            "--dataset",
+            "uniform",
+            "--items",
+            "800",
+            "--nodes",
+            "2",
+            "--rounds",
+            "10",
+            "--q",
+            "0.5",
+            "--no-delta",
+            "--no-pool",
+            "batch=256",
+            "shards=1",
+        ]);
+        let out = dispatch(&a).unwrap();
+        assert!(out.contains("pool=0"), "{out}");
+        assert!(out.contains("delta=false"), "{out}");
         assert!(out.contains("OK: worst rel-diff"), "{out}");
     }
 

@@ -376,6 +376,20 @@ pub struct GossipLoopConfig {
     /// [`GossipRoundReport::failed`](crate::service::GossipRoundReport).
     /// Must be ≥ 1 — a zero deadline would fail every exchange.
     pub exchange_deadline_ms: u64,
+    /// Idle TCP connections kept per remote peer for reuse; 0 disables
+    /// pooling (every exchange pays a fresh connect — roughly one extra
+    /// RTT on the hot path).
+    pub pool_connections: usize,
+    /// Pooled connections idle longer than this many milliseconds are
+    /// discarded at checkout (and the serve side evicts its half on the
+    /// same clock). Must be ≥ 1.
+    pub pool_idle_ms: u64,
+    /// Ship delta exchange frames (changed buckets against the
+    /// per-(peer, generation) baseline of the pair's last completed
+    /// exchange) instead of full ~16 KiB states when possible. Always
+    /// falls back to full frames automatically on a baseline mismatch;
+    /// see `docs/PROTOCOL.md`.
+    pub delta_exchanges: bool,
 }
 
 impl Default for GossipLoopConfig {
@@ -388,6 +402,9 @@ impl Default for GossipLoopConfig {
             probe_quantiles: vec![0.5, 0.9, 0.99],
             seed: 42,
             exchange_deadline_ms: 1_000,
+            pool_connections: 2,
+            pool_idle_ms: 30_000,
+            delta_exchanges: true,
         }
     }
 }
@@ -420,6 +437,15 @@ impl GossipLoopConfig {
                 self.exchange_deadline_ms =
                     value.parse().map_err(|_| parse_err(key, value))?
             }
+            "pool_connections" | "pool" => {
+                self.pool_connections = value.parse().map_err(|_| parse_err(key, value))?
+            }
+            "pool_idle_ms" | "pool_idle" => {
+                self.pool_idle_ms = value.parse().map_err(|_| parse_err(key, value))?
+            }
+            "delta_exchanges" | "delta" => {
+                self.delta_exchanges = parse_bool(value).ok_or_else(|| parse_err(key, value))?
+            }
             other => return Err(format!("unknown gossip config key '{other}'")),
         }
         Ok(())
@@ -450,13 +476,21 @@ impl GossipLoopConfig {
                     .into(),
             );
         }
+        if self.pool_idle_ms < 1 {
+            return Err(
+                "gossip_pool_idle_ms must be >= 1 (a zero idle timeout \
+                 discards every pooled connection)"
+                    .into(),
+            );
+        }
         Ok(())
     }
 
     /// One-line human summary.
     pub fn summary(&self) -> String {
         format!(
-            "round_ms={} fan_out={} graph={} drift<={:e} probes={:?} seed={} deadline_ms={}",
+            "round_ms={} fan_out={} graph={} drift<={:e} probes={:?} seed={} deadline_ms={} \
+             pool={} pool_idle_ms={} delta={}",
             self.round_interval_ms,
             self.fan_out,
             self.graph.name(),
@@ -464,7 +498,20 @@ impl GossipLoopConfig {
             self.probe_quantiles,
             self.seed,
             self.exchange_deadline_ms,
+            self.pool_connections,
+            self.pool_idle_ms,
+            self.delta_exchanges,
         )
+    }
+}
+
+/// Parse a boolean config value (`true/false`, `1/0`, `on/off`,
+/// `yes/no`).
+fn parse_bool(value: &str) -> Option<bool> {
+    match value.to_ascii_lowercase().as_str() {
+        "true" | "1" | "on" | "yes" => Some(true),
+        "false" | "0" | "off" | "no" => Some(false),
+        _ => None,
     }
 }
 
@@ -601,6 +648,33 @@ mod tests {
         g.probe_quantiles.clear();
         assert!(g.validate().is_err());
         assert!(GossipLoopConfig::default().summary().contains("fan_out=1"));
+    }
+
+    #[test]
+    fn gossip_transport_keys_set_and_validate() {
+        let mut c = ServiceConfig::default();
+        c.set("gossip_pool_connections", "4").unwrap();
+        c.set("gossip_pool_idle_ms", "500").unwrap();
+        c.set("gossip_delta_exchanges", "off").unwrap();
+        assert_eq!(c.gossip.pool_connections, 4);
+        assert_eq!(c.gossip.pool_idle_ms, 500);
+        assert!(!c.gossip.delta_exchanges);
+        c.set("gossip_delta", "1").unwrap();
+        assert!(c.gossip.delta_exchanges);
+        c.set("gossip_pool", "0").unwrap();
+        assert_eq!(c.gossip.pool_connections, 0);
+        c.validate().unwrap();
+
+        assert!(c.set("gossip_delta", "maybe").is_err());
+        let mut g = GossipLoopConfig::default();
+        g.pool_idle_ms = 0;
+        assert!(g
+            .validate()
+            .unwrap_err()
+            .contains("gossip_pool_idle_ms"));
+        let s = GossipLoopConfig::default().summary();
+        assert!(s.contains("pool=2"), "{s}");
+        assert!(s.contains("delta=true"), "{s}");
     }
 
     #[test]

@@ -108,8 +108,8 @@ pub mod prelude {
     pub use crate::gossip::PeerState;
     pub use crate::service::{
         GlobalView, GossipLoop, GossipMember, GossipRoundReport, InProcessTransport, Node,
-        NodeBuilder, QuantileService, ServiceWriter, Snapshot, TcpTransport, Transport,
-        TransportError,
+        NodeBuilder, QuantileService, ServiceWriter, Snapshot, TcpTransport,
+        TcpTransportOptions, Transport, TransportError,
     };
     pub use crate::sketch::{QuantileReader, SketchError, UddSketch};
 }

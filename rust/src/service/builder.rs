@@ -258,6 +258,58 @@ impl NodeBuilder {
         self
     }
 
+    /// Idle TCP connections kept per remote peer (0 disables pooling).
+    /// Like the deadline, this knob takes effect through
+    /// [`TcpTransportOptions::from_gossip`](super::TcpTransportOptions::from_gossip)
+    /// when the node's transport is built from this configuration.
+    ///
+    /// ```
+    /// use duddsketch::prelude::*;
+    /// use duddsketch::service::TcpTransportOptions;
+    ///
+    /// let node = Node::builder().shards(1).pool_connections(4).build().unwrap();
+    /// let opts = TcpTransportOptions::from_gossip(&node.service().config().gossip);
+    /// assert_eq!(opts.pool_connections, 4);
+    /// node.shutdown();
+    /// ```
+    pub fn pool_connections(mut self, connections: usize) -> Self {
+        self.cfg.gossip.pool_connections = connections;
+        self
+    }
+
+    /// Idle timeout in ms for pooled connections (≥ 1).
+    ///
+    /// ```
+    /// use duddsketch::prelude::*;
+    ///
+    /// // A zero idle timeout is rejected with the key named.
+    /// let err = Node::builder().shards(1).pool_idle_ms(0).build().unwrap_err();
+    /// assert!(format!("{err:#}").contains("gossip_pool_idle_ms"));
+    /// ```
+    pub fn pool_idle_ms(mut self, ms: u64) -> Self {
+        self.cfg.gossip.pool_idle_ms = ms;
+        self
+    }
+
+    /// Enable or disable delta exchange frames (changed buckets against
+    /// the pair's last completed exchange instead of full states; see
+    /// `docs/PROTOCOL.md`). Default on; full-frame fallback is always
+    /// automatic either way.
+    ///
+    /// ```
+    /// use duddsketch::prelude::*;
+    /// use duddsketch::service::TcpTransportOptions;
+    ///
+    /// let node = Node::builder().shards(1).delta_exchanges(false).build().unwrap();
+    /// let opts = TcpTransportOptions::from_gossip(&node.service().config().gossip);
+    /// assert!(!opts.delta_exchanges);
+    /// node.shutdown();
+    /// ```
+    pub fn delta_exchanges(mut self, enabled: bool) -> Self {
+        self.cfg.gossip.delta_exchanges = enabled;
+        self
+    }
+
     /// Add a fleet member (in global member order, this node excluded —
     /// see [`NodeBuilder::self_index`]).
     pub fn peer(mut self, member: GossipMember) -> Self {
@@ -357,6 +409,27 @@ mod tests {
             format!("{err:#}").contains("gossip_exchange_deadline_ms"),
             "{err:#}"
         );
+        let err = Node::builder().pool_idle_ms(0).build().unwrap_err();
+        assert!(
+            format!("{err:#}").contains("gossip_pool_idle_ms"),
+            "{err:#}"
+        );
+    }
+
+    #[test]
+    fn builder_transport_knobs_reach_the_config() {
+        let node = Node::builder()
+            .shards(1)
+            .pool_connections(7)
+            .pool_idle_ms(123)
+            .delta_exchanges(false)
+            .build()
+            .unwrap();
+        let g = &node.service().config().gossip;
+        assert_eq!(g.pool_connections, 7);
+        assert_eq!(g.pool_idle_ms, 123);
+        assert!(!g.delta_exchanges);
+        node.shutdown();
     }
 
     #[test]

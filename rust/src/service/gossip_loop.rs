@@ -44,10 +44,38 @@
 //! generation the `q̃` mass is exactly 1 and the fixed point is the union
 //! of the freshest local summaries.
 //!
+//! # Locking model (per-member since PR 4)
+//!
+//! PR 3 serialized everything — rounds *and* inbound serves — on one
+//! worker mutex, so a round stalled on a dead peer's connect deadline
+//! served nothing for up to fan-out × deadline. The lock is now split:
+//!
+//! * **One state lock per member slot** (`slots[i]`). An initiator holds
+//!   *only its own slot* across the push–pull socket op; co-located
+//!   pairs lock both slots in ascending index order; inbound serves
+//!   **try**-lock (never block) and answer `Busy` on contention — the
+//!   §7.2 cancellation the initiator retries next round.
+//! * **One control lock** (`ctl`) for round bookkeeping: rng, round and
+//!   generation counters, epochs, drift. It is held only for short
+//!   critical sections, **never across a socket operation**.
+//! * **One round gate** serializing whole rounds (manual
+//!   [`GossipLoop::step`] vs the background thread); serves ignore it.
+//!
+//! *Lock order:* slots in ascending member index, then `ctl`; the gate
+//! is outermost and only on round paths. No path acquires a slot while
+//! holding `ctl`, and serves acquire slots exclusively with `try_lock`,
+//! so the order is acyclic and cross-node deadlock stays impossible.
+//!
+//! The payoff: [`Transport::open_remote`] (where a dead peer's connect
+//! deadline burns) runs with **no lock at all**, so inbound exchanges
+//! keep being served while a round waits out a dead partner — the
+//! serve-availability guarantee PR 3's ROADMAP called for. A node
+//! actually mid-exchange on its own slot still answers `Busy`, which is
+//! the protocol's intended behavior (the slot's state is in flight).
+//!
 //! The serve side of the transport ([`NodeHandle`]) applies inbound
-//! exchanges under the same worker lock rounds use, with §7.2 atomicity:
-//! the averaged state commits only once the reply reaches the wire and
-//! rolls back otherwise.
+//! exchanges with §7.2 atomicity: the averaged state commits only once
+//! the reply reaches the wire and rolls back otherwise.
 
 use super::coordinator::QuantileService;
 use super::swap::ArcSwapCell;
@@ -56,12 +84,12 @@ use crate::config::GossipLoopConfig;
 use crate::gossip::{select_exchange_partners, GossipSketch, PeerState};
 use crate::graph::Graph;
 use crate::metrics::relative_error;
-use crate::rng::{default_rng, Xoshiro256pp};
+use crate::rng::{default_rng, Rng as _, Xoshiro256pp};
 use crate::sketch::{QuantileReader, SketchError, Store, UddSketch};
 use anyhow::{bail, Context, Result};
 use std::net::SocketAddr;
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, MutexGuard, TryLockError};
 use std::thread::JoinHandle;
 use std::time::Duration;
 
@@ -224,14 +252,19 @@ pub struct GossipRoundReport {
     /// snapshots (local epoch advance, or a newer generation heard from a
     /// partner node).
     pub reseeded: bool,
-    /// Completed push–pull exchanges this round.
+    /// Completed push–pull exchanges this round. An exchange that
+    /// recovered from a stale pooled connection by retrying on a fresh
+    /// connect counts here, not in `failed`.
     pub exchanges: usize,
     /// Exchanges cancelled this round — transport failures, missed
     /// deadlines, busy or stale partners. Both sides keep their pre-round
-    /// state on every one of these (§7.2).
+    /// state on every one of these (§7.2). Only *unrecovered* failures
+    /// count: a stale pooled connection followed by a successful
+    /// fresh-connect retry is one successful exchange.
     pub failed: usize,
     /// Wire traffic this round (push + pull frames, codec byte-exact for
-    /// in-process exchanges; actual socket bytes for remote ones).
+    /// in-process exchanges; actual socket bytes for remote ones — delta
+    /// frames make this shrink as the fleet converges).
     pub bytes: usize,
     /// Largest relative probe drift vs the previous round (∞ if not yet
     /// comparable).
@@ -240,33 +273,33 @@ pub struct GossipRoundReport {
     pub converged: bool,
 }
 
-/// Shared read side: one view cell per member.
-struct Shared {
-    views: Vec<ArcSwapCell<GlobalView>>,
-}
-
-/// Mutable loop state, owned by whichever thread runs the next round (or
-/// serves an inbound exchange).
-struct Worker {
+/// Immutable fleet wiring, fixed at [`GossipLoop::start_with`].
+struct Fleet {
     cfg: GossipLoopConfig,
     members: Vec<GossipMember>,
     /// `true` where the member's state lives in this loop.
     local: Vec<bool>,
+    /// Ascending indices of the local members (slot-lock order).
+    local_members: Vec<usize>,
     /// Index of the member inbound exchanges are served against (the
     /// first local member — the node's own identity in a remote fleet).
     serve_member: usize,
-    transport: Arc<dyn Transport>,
-    states: Vec<PeerState>,
-    /// Snapshot epoch each member was last seeded from (0 for
-    /// static/remote).
-    epochs: Vec<u64>,
     /// Member indices whose probe estimates drive the drift metric:
     /// every local service member, or the serve member in an all-static
     /// fleet.
     probe_members: Vec<usize>,
     graph: Graph,
+    transport: Arc<dyn Transport>,
+}
+
+/// Mutable round bookkeeping, behind the control lock. Never held
+/// across a socket operation (see the module docs' lock order).
+struct Ctl {
     rng: Xoshiro256pp,
     online: Vec<bool>,
+    /// Snapshot epoch each member was last seeded from (0 for
+    /// static/remote).
+    epochs: Vec<u64>,
     round: u64,
     generation: u64,
     /// Highest remote generation heard via stale-rejections; adopted at
@@ -277,12 +310,25 @@ struct Worker {
     converged: bool,
 }
 
+/// Everything the loop, its background threads, and the transport's
+/// serve side share. See the module docs for the lock order.
+struct LoopCore {
+    fleet: Fleet,
+    /// Per-member state locks (the PR 4 split of the old worker mutex).
+    slots: Vec<Mutex<PeerState>>,
+    ctl: Mutex<Ctl>,
+    /// Serializes whole rounds; serves never take it.
+    round_gate: Mutex<()>,
+    views: Vec<ArcSwapCell<GlobalView>>,
+    stop: AtomicBool,
+}
+
 /// Why an inbound exchange was refused (serve side of §7.2 — the
 /// initiator keeps its pre-round state on every variant).
 #[derive(Debug)]
 pub enum ServeReject {
-    /// The node is mid-round or mid-exchange; the initiator retries next
-    /// round.
+    /// The node is mid-exchange on the contended slot; the initiator
+    /// retries next round.
     Busy,
     /// The push carried an older restart generation than ours (the
     /// payload — the initiator reseeds and catches up).
@@ -305,15 +351,13 @@ impl std::fmt::Display for ServeReject {
     }
 }
 
-/// The serve-side handle a [`Transport`] accept loop uses to apply
+/// The serve-side handle a [`Transport`] serve loop uses to apply
 /// inbound exchanges to this node's state. Cheap to clone; opaque —
 /// custom transports interact with the loop only through
 /// [`NodeHandle::serve_exchange`] and [`NodeHandle::stopping`].
 #[derive(Clone)]
 pub struct NodeHandle {
-    worker: Arc<Mutex<Worker>>,
-    shared: Arc<Shared>,
-    stop: Arc<AtomicBool>,
+    core: Arc<LoopCore>,
 }
 
 impl std::fmt::Debug for NodeHandle {
@@ -325,7 +369,7 @@ impl std::fmt::Debug for NodeHandle {
 impl NodeHandle {
     /// True once the loop is shutting down; server threads must exit.
     pub fn stopping(&self) -> bool {
-        self.stop.load(Ordering::SeqCst)
+        self.core.stop.load(Ordering::SeqCst)
     }
 
     /// Apply one inbound push–pull atomically: average `incoming` (sent
@@ -336,27 +380,19 @@ impl NodeHandle {
     /// back, so a cancelled exchange leaves both nodes at their
     /// pre-round state.
     ///
-    /// Never blocks: a worker busy with its own round yields
-    /// [`ServeReject::Busy`] instead of queueing (the initiator counts a
-    /// failed exchange and retries next round), which also makes
-    /// cross-node deadlock impossible.
+    /// Never blocks: the local member slots are **try**-locked, so a
+    /// node mid-push–pull on its own slot yields [`ServeReject::Busy`]
+    /// instead of queueing (the initiator counts a failed exchange and
+    /// retries next round), which also makes cross-node deadlock
+    /// impossible. A round merely *waiting on a dead peer's connect
+    /// deadline* holds no slot, so serves keep landing (PR 4).
     pub fn serve_exchange(
         &self,
         incoming: PeerState,
         generation: u64,
         deliver: impl FnOnce(&PeerState, u64) -> std::io::Result<()>,
     ) -> Result<(), ServeReject> {
-        let mut w = match self.worker.try_lock() {
-            Ok(w) => w,
-            Err(std::sync::TryLockError::WouldBlock) => return Err(ServeReject::Busy),
-            // A poisoned worker means a round thread panicked: fail loudly
-            // (matching `GossipLoop::step`) instead of masquerading as a
-            // forever-Busy node.
-            Err(std::sync::TryLockError::Poisoned(e)) => {
-                panic!("gossip worker poisoned: {e}")
-            }
-        };
-        w.serve_exchange(&self.shared, incoming, generation, deliver)
+        self.core.serve_exchange(incoming, generation, deliver)
     }
 }
 
@@ -393,14 +429,9 @@ impl NodeHandle {
 /// gl.shutdown();
 /// ```
 pub struct GossipLoop {
-    shared: Arc<Shared>,
-    worker: Arc<Mutex<Worker>>,
-    stop: Arc<AtomicBool>,
+    core: Arc<LoopCore>,
     thread: Option<JoinHandle<()>>,
     server: Option<JoinHandle<()>>,
-    transport: Arc<dyn Transport>,
-    /// First local member: the node's own identity (immutable).
-    serve_member: usize,
 }
 
 impl std::fmt::Debug for GossipLoop {
@@ -409,8 +440,8 @@ impl std::fmt::Debug for GossipLoop {
         write!(
             f,
             "GossipLoop(members={}, transport={}, round={}, generation={}, converged={})",
-            self.shared.views.len(),
-            self.transport.name(),
+            self.core.slots.len(),
+            self.core.fleet.transport.name(),
             v.round(),
             v.generation(),
             v.converged()
@@ -427,8 +458,8 @@ impl GossipLoop {
 
     /// Validate, seed every local member from its current summary, build
     /// the overlay, publish the round-0 views, spawn the transport's
-    /// accept loop (if it serves one), and (when an interval is
-    /// configured) the background round thread.
+    /// serve loop (if it has one), and (when an interval is configured)
+    /// the background round thread.
     ///
     /// Member index is the peer id — **globally**: a remote fleet lists
     /// every node in the same order everywhere (and shares one gossip
@@ -507,6 +538,12 @@ impl GossipLoop {
         let mut grng = master.derive(0x6EA4);
         let graph = crate::graph::from_kind(cfg.graph, n, &mut grng);
         let interval_ms = cfg.round_interval_ms;
+        let local_members: Vec<usize> = local
+            .iter()
+            .enumerate()
+            .filter(|(_, &b)| b)
+            .map(|(i, _)| i)
+            .collect();
         let probe_members: Vec<usize> = {
             let svc: Vec<usize> = members
                 .iter()
@@ -521,11 +558,11 @@ impl GossipLoop {
             }
         };
         // Placeholder states for every slot (remote slots keep theirs —
-        // their real state lives on the remote node); the reseed below
+        // their real state lives on the remote node); the seed loop below
         // fills the local ones.
         let blank: GossipSketch =
             UddSketch::new(alpha, max_buckets).map_err(anyhow::Error::msg)?;
-        let states: Vec<PeerState> = (0..n)
+        let mut states: Vec<PeerState> = (0..n)
             .map(|i| PeerState {
                 id: i,
                 sketch: blank.clone(),
@@ -533,106 +570,129 @@ impl GossipLoop {
                 q_tilde: 0.0,
             })
             .collect();
-        let mut worker = Worker {
+        let mut epochs = vec![0u64; n];
+        for (i, m) in members.iter().enumerate() {
+            match m {
+                GossipMember::Service(svc) => {
+                    let snap = svc.snapshot();
+                    epochs[i] = snap.epoch();
+                    states[i] = PeerState::from_sketch(i, snap.sketch());
+                }
+                GossipMember::Static(sketch) => {
+                    states[i] = PeerState::from_sketch(i, sketch);
+                }
+                GossipMember::Remote(_) => {}
+            }
+        }
+        let ctl = Ctl {
             rng: master.derive(0x1005),
-            cfg,
-            members,
-            local,
-            serve_member,
-            transport: transport.clone(),
-            states,
-            epochs: vec![0; n],
-            probe_members,
-            graph,
             online: vec![true; n],
+            epochs,
             round: 0,
-            generation: 0,
+            generation: 1,
             pending_generation: 0,
             prev_probes: None,
             drift: f64::INFINITY,
             converged: false,
         };
-        worker.reseed_states();
-        worker.generation = 1;
-        let shared = Arc::new(Shared {
-            views: (0..n)
-                .map(|i| ArcSwapCell::new(Arc::new(worker.view_of(i))))
-                .collect(),
+        let views: Vec<ArcSwapCell<GlobalView>> = states
+            .iter()
+            .enumerate()
+            .map(|(i, s)| {
+                ArcSwapCell::new(Arc::new(GlobalView {
+                    round: 0,
+                    generation: 1,
+                    epoch: ctl.epochs[i],
+                    drift: f64::INFINITY,
+                    converged: false,
+                    state: s.clone(),
+                }))
+            })
+            .collect();
+        let core = Arc::new(LoopCore {
+            fleet: Fleet {
+                cfg,
+                members,
+                local,
+                local_members,
+                serve_member,
+                probe_members,
+                graph,
+                transport: transport.clone(),
+            },
+            slots: states.into_iter().map(Mutex::new).collect(),
+            ctl: Mutex::new(ctl),
+            round_gate: Mutex::new(()),
+            views,
+            stop: AtomicBool::new(false),
         });
-        let worker = Arc::new(Mutex::new(worker));
-        let stop = Arc::new(AtomicBool::new(false));
-        let server = transport.spawn_server(NodeHandle {
-            worker: worker.clone(),
-            shared: shared.clone(),
-            stop: stop.clone(),
-        })?;
+        let server = transport.spawn_server(NodeHandle { core: core.clone() })?;
         let thread = if interval_ms > 0 {
-            let worker = worker.clone();
-            let shared = shared.clone();
-            let stop = stop.clone();
+            let core = core.clone();
             let interval = Duration::from_millis(interval_ms);
             Some(
                 std::thread::Builder::new()
                     .name("dudd-gossip".into())
-                    .spawn(move || round_loop(&worker, &shared, &stop, interval))
+                    .spawn(move || round_loop(&core, interval))
                     .context("spawning gossip loop thread")?,
             )
         } else {
             None
         };
         Ok(Self {
-            shared,
-            worker,
-            stop,
+            core,
             thread,
             server,
-            transport,
-            serve_member,
         })
     }
 
     /// Number of members in the fleet (local + remote).
     pub fn members(&self) -> usize {
-        self.shared.views.len()
+        self.core.slots.len()
     }
 
     /// The transport carrying this loop's exchanges.
     pub fn transport(&self) -> &Arc<dyn Transport> {
-        &self.transport
+        &self.core.fleet.transport
     }
 
     /// The address this loop's transport serves inbound exchanges on
     /// (None for in-process or client-only transports).
     pub fn listen_addr(&self) -> Option<SocketAddr> {
-        self.transport.listen_addr()
+        self.core.fleet.transport.listen_addr()
     }
 
     /// Run one refresh → exchange → serve round synchronously and return
-    /// its telemetry. Safe alongside the background thread and the
-    /// transport's accept loop (rounds and inbound exchanges serialize on
-    /// the worker lock).
+    /// its telemetry. Safe alongside the background thread (rounds
+    /// serialize on the round gate) and the transport's serve loop
+    /// (inbound exchanges contend only on the member slots).
     pub fn step(&self) -> GossipRoundReport {
-        let mut w = self.worker.lock().expect("gossip worker poisoned");
-        let report = w.run_round();
-        w.publish(&self.shared);
-        report
+        self.core.run_round()
     }
 
     /// The latest global view of the serve member — the first local
     /// member, i.e. the node's own identity (member 0 in an all-local
     /// fleet, as in PR 2). Lock-free.
     pub fn view(&self) -> Arc<GlobalView> {
-        self.member_view(self.serve_member)
+        self.member_view(self.core.fleet.serve_member)
     }
 
     /// The latest global view of member `i`. Lock-free. For
     /// [`GossipMember::Remote`] members this node publishes only a
     /// placeholder (their real views live on their own node).
     pub fn member_view(&self, i: usize) -> Arc<GlobalView> {
-        self.shared.views[i].load()
+        self.core.views[i].load()
     }
 
-    /// Stop the background threads (round + accept loop, if any) and
+    /// The serve-side handle (what [`Transport::spawn_server`] receives).
+    #[cfg(test)]
+    fn handle(&self) -> NodeHandle {
+        NodeHandle {
+            core: self.core.clone(),
+        }
+    }
+
+    /// Stop the background threads (round + serve loop, if any) and
     /// return the final view of the serve member.
     pub fn shutdown(mut self) -> Arc<GlobalView> {
         self.stop_thread();
@@ -640,7 +700,7 @@ impl GossipLoop {
     }
 
     fn stop_thread(&mut self) {
-        self.stop.store(true, Ordering::SeqCst);
+        self.core.stop.store(true, Ordering::SeqCst);
         if let Some(t) = self.thread.take() {
             let _ = t.join();
         }
@@ -658,97 +718,125 @@ impl Drop for GossipLoop {
 
 /// Background driver: one round per interval, stop-aware in ≤10 ms
 /// steps so shutdown never waits out a long interval.
-fn round_loop(
-    worker: &Mutex<Worker>,
-    shared: &Shared,
-    stop: &AtomicBool,
-    interval: Duration,
-) {
+fn round_loop(core: &LoopCore, interval: Duration) {
     let step = Duration::from_millis(10).min(interval);
     'outer: loop {
         let mut slept = Duration::ZERO;
         while slept < interval {
-            if stop.load(Ordering::SeqCst) {
+            if core.stop.load(Ordering::SeqCst) {
                 break 'outer;
             }
             let d = step.min(interval - slept);
             std::thread::sleep(d);
             slept += d;
         }
-        if stop.load(Ordering::SeqCst) {
+        if core.stop.load(Ordering::SeqCst) {
             break;
         }
-        let mut w = worker.lock().expect("gossip worker poisoned");
-        w.run_round();
-        w.publish(shared);
+        core.run_round();
     }
 }
 
-impl Worker {
-    /// Seed every **local** member's `PeerState` from its current local
-    /// summary and reset the drift bookkeeping. Restarting all local
-    /// members together keeps the generation's `q̃` mass exact (see the
-    /// module docs); remote members restart on their own nodes, carried
-    /// by the generation tags.
-    fn reseed_states(&mut self) {
-        for i in 0..self.members.len() {
-            match &self.members[i] {
-                GossipMember::Service(svc) => {
-                    let snap = svc.snapshot();
-                    self.epochs[i] = snap.epoch();
-                    self.states[i] = PeerState::from_sketch(i, snap.sketch());
-                }
-                GossipMember::Static(sketch) => {
-                    self.states[i] = PeerState::from_sketch(i, sketch);
-                }
-                GossipMember::Remote(_) => {}
-            }
-        }
-        self.prev_probes = None;
-        self.drift = f64::INFINITY;
-        self.converged = false;
+impl LoopCore {
+    fn lock_slot(&self, i: usize) -> MutexGuard<'_, PeerState> {
+        self.slots[i].lock().expect("gossip member slot poisoned")
+    }
+
+    fn lock_ctl(&self) -> MutexGuard<'_, Ctl> {
+        self.ctl.lock().expect("gossip control state poisoned")
+    }
+
+    /// Lock every local slot in ascending index order (round paths only;
+    /// serves use `try_lock`).
+    fn lock_local_slots(&self) -> Vec<MutexGuard<'_, PeerState>> {
+        self.fleet
+            .local_members
+            .iter()
+            .map(|&i| self.lock_slot(i))
+            .collect()
     }
 
     /// True when any local service member has published an epoch newer
     /// than the one its state was seeded from.
-    fn stale(&self) -> bool {
-        self.members.iter().enumerate().any(|(i, m)| match m {
-            GossipMember::Service(svc) => svc.snapshot().epoch() != self.epochs[i],
+    fn any_stale(&self, ctl: &Ctl) -> bool {
+        self.fleet.members.iter().enumerate().any(|(i, m)| match m {
+            GossipMember::Service(svc) => svc.snapshot().epoch() != ctl.epochs[i],
             _ => false,
         })
+    }
+
+    /// Seed every **local** member's slot from its current local summary
+    /// and reset the drift bookkeeping. The caller holds every local
+    /// slot (ascending) plus `ctl` — restarting all local members
+    /// together keeps the generation's `q̃` mass exact (see the module
+    /// docs); remote members restart on their own nodes, carried by the
+    /// generation tags.
+    fn reseed_locked(&self, ctl: &mut Ctl, guards: &mut [MutexGuard<'_, PeerState>]) {
+        for (k, &i) in self.fleet.local_members.iter().enumerate() {
+            match &self.fleet.members[i] {
+                GossipMember::Service(svc) => {
+                    let snap = svc.snapshot();
+                    ctl.epochs[i] = snap.epoch();
+                    *guards[k] = PeerState::from_sketch(i, snap.sketch());
+                }
+                GossipMember::Static(sketch) => {
+                    *guards[k] = PeerState::from_sketch(i, sketch);
+                }
+                GossipMember::Remote(_) => {
+                    unreachable!("local_members holds only local indices")
+                }
+            }
+        }
+        ctl.prev_probes = None;
+        ctl.drift = f64::INFINITY;
+        ctl.converged = false;
     }
 
     /// Refresh step: restart the protocol when local data moved (epoch
     /// advance ⇒ strictly newer generation) or a partner reported a newer
     /// generation (adopt it). Returns whether a reseed happened.
-    fn refresh(&mut self) -> bool {
-        let wanted = std::mem::take(&mut self.pending_generation);
-        let stale = self.stale();
-        if !stale && wanted <= self.generation {
+    fn refresh(&self) -> bool {
+        // Cheap peek without slot locks; the decisive check repeats
+        // under the full locks (a concurrent serve may have caught the
+        // generation up in between).
+        let needed = {
+            let ctl = self.lock_ctl();
+            self.any_stale(&ctl) || ctl.pending_generation > ctl.generation
+        };
+        if !needed {
             return false;
         }
-        self.reseed_states();
+        let mut guards = self.lock_local_slots();
+        let mut ctl = self.lock_ctl();
+        let wanted = std::mem::take(&mut ctl.pending_generation);
+        let stale = self.any_stale(&ctl);
+        if !stale && wanted <= ctl.generation {
+            return false;
+        }
+        self.reseed_locked(&mut ctl, &mut guards);
         // Saturating: a (hostile or corrupt) partner could have pushed the
         // generation near u64::MAX — the counter must never overflow-panic
         // mid-round or wrap back to 0 (which would read as "stale" to the
         // whole fleet). Frame authentication is the real fix (ROADMAP).
         let bumped = if stale {
-            self.generation.saturating_add(1)
+            ctl.generation.saturating_add(1)
         } else {
-            self.generation
+            ctl.generation
         };
-        self.generation = bumped.max(wanted);
+        ctl.generation = bumped.max(wanted);
         true
     }
 
     /// Probe-quantile estimates across the probe members, or `None`
     /// while any probe member cannot answer yet (empty sketch).
     fn probes(&self) -> Option<Vec<f64>> {
-        let mut out =
-            Vec::with_capacity(self.probe_members.len() * self.cfg.probe_quantiles.len());
-        for &i in &self.probe_members {
-            for &q in &self.cfg.probe_quantiles {
-                match self.states[i].query(q) {
+        let mut out = Vec::with_capacity(
+            self.fleet.probe_members.len() * self.fleet.cfg.probe_quantiles.len(),
+        );
+        for &i in &self.fleet.probe_members {
+            let guard = self.lock_slot(i);
+            for &q in &self.fleet.cfg.probe_quantiles {
+                match guard.query(q) {
                     Ok(v) => out.push(v),
                     Err(_) => return None,
                 }
@@ -757,49 +845,89 @@ impl Worker {
         Some(out)
     }
 
+    /// One push–pull with partner `j`, initiated by local member `l`.
+    /// Remote exchanges run in the transport's two phases so the connect
+    /// deadline burns with no slot held; a stale pooled connection gets
+    /// exactly one fresh-connect retry (only unrecovered failures reach
+    /// the round report).
+    fn one_exchange(&self, l: usize, j: usize) -> Result<usize, TransportError> {
+        if self.fleet.local[j] {
+            // Both slots co-located: lock in ascending index order
+            // (servers only try-lock, so blocking here cannot deadlock).
+            let lo = l.min(j);
+            let hi = l.max(j);
+            let mut g_lo = self.lock_slot(lo);
+            let mut g_hi = self.lock_slot(hi);
+            let (a, b) = if l < j {
+                (&mut *g_lo, &mut *g_hi)
+            } else {
+                (&mut *g_hi, &mut *g_lo)
+            };
+            self.fleet.transport.exchange_local(a, b)
+        } else {
+            let addr = match &self.fleet.members[j] {
+                GossipMember::Remote(addr) => *addr,
+                _ => unreachable!("non-local member is remote by construction"),
+            };
+            // Phase 1 — connect with NO lock held: a dead peer's connect
+            // deadline burns here while inbound serves keep landing.
+            let chan = self.fleet.transport.open_remote(addr)?;
+            // Phase 2 — push–pull holding only our own slot.
+            let mut guard = self.lock_slot(l);
+            let gen = self.lock_ctl().generation;
+            match self.fleet.transport.exchange_on(chan, &mut guard, gen) {
+                Err(TransportError::StaleChannel(_)) => {
+                    // The pooled connection was dead before any reply
+                    // byte (see `TransportError::StaleChannel` for the
+                    // safety argument). Release the slot, open a fresh
+                    // connection, retry once.
+                    drop(guard);
+                    let chan = self.fleet.transport.open_remote(addr)?;
+                    let mut guard = self.lock_slot(l);
+                    let gen = self.lock_ctl().generation;
+                    self.fleet.transport.exchange_on(chan, &mut guard, gen)
+                }
+                r => r,
+            }
+        }
+    }
+
     /// One fan-out push–pull round over the overlay, every partner
-    /// interaction through the transport. Local members initiate
-    /// (Algorithm 4's inner loop, identical partner draws to the
-    /// simulation engine); remote members initiate from their own nodes.
-    /// Returns `(exchanges, failed, bytes)`.
-    fn exchange_round(&mut self) -> (usize, usize, usize) {
-        let p = self.states.len();
+    /// interaction through the transport. All randomness is drawn up
+    /// front under `ctl` — the identical call sequence to the simulation
+    /// engine (permutation, then per-initiator partner draws in
+    /// permutation order), which is what keeps the PR 2 parity test
+    /// bit-exact — then the exchanges execute with per-slot locking.
+    fn exchange_round(&self) -> (usize, usize, usize) {
+        let p = self.slots.len();
+        let plan: Vec<(usize, Vec<usize>)> = {
+            let mut ctl = self.lock_ctl();
+            let ctl = &mut *ctl;
+            let order = ctl.rng.permutation(p);
+            let mut scratch: Vec<usize> = Vec::new();
+            let mut plan = Vec::new();
+            for &l in &order {
+                if !ctl.online[l] || !self.fleet.local[l] {
+                    continue;
+                }
+                let k = select_exchange_partners(
+                    &self.fleet.graph,
+                    &ctl.online,
+                    l,
+                    self.fleet.cfg.fan_out,
+                    &mut scratch,
+                    &mut ctl.rng,
+                );
+                plan.push((l, scratch[..k].to_vec()));
+            }
+            plan
+        };
         let mut exchanges = 0;
         let mut failed = 0;
         let mut bytes = 0usize;
-        let order = self.rng.permutation(p);
-        let mut scratch: Vec<usize> = Vec::new();
-        for &l in &order {
-            if !self.online[l] || !self.local[l] {
-                continue;
-            }
-            let k = select_exchange_partners(
-                &self.graph,
-                &self.online,
-                l,
-                self.cfg.fan_out,
-                &mut scratch,
-                &mut self.rng,
-            );
-            for &j in scratch.iter().take(k) {
-                let outcome = if self.local[j] {
-                    // Atomic in-process exchange (both slots co-located).
-                    let (lo, hi) = self.states.split_at_mut(l.max(j));
-                    let (a, b) = if l < j {
-                        (&mut lo[l], &mut hi[0])
-                    } else {
-                        (&mut hi[0], &mut lo[j])
-                    };
-                    self.transport.exchange_local(a, b)
-                } else {
-                    let addr = match &self.members[j] {
-                        GossipMember::Remote(addr) => *addr,
-                        _ => unreachable!("non-local member is remote by construction"),
-                    };
-                    self.transport
-                        .exchange_remote(&mut self.states[l], self.generation, addr)
-                };
-                match outcome {
+        for (l, partners) in plan {
+            for j in partners {
+                match self.one_exchange(l, j) {
                     Ok(b) => {
                         exchanges += 1;
                         bytes += b;
@@ -809,7 +937,8 @@ impl Worker {
                         // the next refresh. The exchange itself was
                         // cancelled (§7.2).
                         failed += 1;
-                        self.pending_generation = self.pending_generation.max(g);
+                        let mut ctl = self.lock_ctl();
+                        ctl.pending_generation = ctl.pending_generation.max(g);
                     }
                     Err(_) => failed += 1,
                 }
@@ -818,99 +947,145 @@ impl Worker {
         (exchanges, failed, bytes)
     }
 
-    /// One full refresh → exchange cycle (the serve half is
-    /// [`Worker::publish`]).
-    fn run_round(&mut self) -> GossipRoundReport {
+    /// One full refresh → exchange → publish round.
+    fn run_round(&self) -> GossipRoundReport {
+        let _gate = self.round_gate.lock().expect("gossip round gate poisoned");
         let reseeded = self.refresh();
-        self.round += 1;
+        self.lock_ctl().round += 1;
         let (exchanges, failed, bytes) = self.exchange_round();
         let cur = self.probes();
-        self.drift = match (&self.prev_probes, &cur) {
-            (Some(prev), Some(cur)) => prev
-                .iter()
-                .zip(cur)
-                .map(|(&p, &c)| relative_error(c, p))
-                .fold(0.0, f64::max),
-            _ => f64::INFINITY,
+        let report = {
+            let mut ctl = self.lock_ctl();
+            ctl.drift = match (&ctl.prev_probes, &cur) {
+                (Some(prev), Some(cur)) => prev
+                    .iter()
+                    .zip(cur)
+                    .map(|(&p, &c)| relative_error(c, p))
+                    .fold(0.0, f64::max),
+                _ => f64::INFINITY,
+            };
+            ctl.converged = ctl.drift <= self.fleet.cfg.convergence_rel;
+            ctl.prev_probes = cur;
+            GossipRoundReport {
+                round: ctl.round,
+                generation: ctl.generation,
+                reseeded,
+                exchanges,
+                failed,
+                bytes,
+                drift: ctl.drift,
+                converged: ctl.converged,
+            }
         };
-        self.converged = self.drift <= self.cfg.convergence_rel;
-        self.prev_probes = cur;
-        GossipRoundReport {
-            round: self.round,
-            generation: self.generation,
-            reseeded,
-            exchanges,
-            failed,
-            bytes,
-            drift: self.drift,
-            converged: self.converged,
+        self.publish_all();
+        report
+    }
+
+    /// Publish every member's fresh view (round path: clones each slot
+    /// one at a time, then stamps the views under `ctl`).
+    fn publish_all(&self) {
+        let states: Vec<PeerState> =
+            (0..self.slots.len()).map(|i| self.lock_slot(i).clone()).collect();
+        let ctl = self.lock_ctl();
+        for (i, state) in states.into_iter().enumerate() {
+            self.views[i].store(Arc::new(GlobalView {
+                round: ctl.round,
+                generation: ctl.generation,
+                epoch: ctl.epochs[i],
+                drift: ctl.drift,
+                converged: ctl.converged,
+                state,
+            }));
+        }
+    }
+
+    /// Publish the local members' views from the slot guards the caller
+    /// already holds (serve path).
+    fn publish_locked(&self, guards: &[MutexGuard<'_, PeerState>]) {
+        let ctl = self.lock_ctl();
+        for (k, &i) in self.fleet.local_members.iter().enumerate() {
+            self.views[i].store(Arc::new(GlobalView {
+                round: ctl.round,
+                generation: ctl.generation,
+                epoch: ctl.epochs[i],
+                drift: ctl.drift,
+                converged: ctl.converged,
+                state: guards[k].clone(),
+            }));
         }
     }
 
     /// Serve one inbound push against the serve member (the body of
-    /// [`NodeHandle::serve_exchange`]; the caller holds the worker lock).
+    /// [`NodeHandle::serve_exchange`]).
     fn serve_exchange(
-        &mut self,
-        shared: &Shared,
+        &self,
         mut incoming: PeerState,
         generation: u64,
         deliver: impl FnOnce(&PeerState, u64) -> std::io::Result<()>,
     ) -> Result<(), ServeReject> {
-        if generation < self.generation {
-            return Err(ServeReject::StaleGeneration(self.generation));
+        // Try-lock every local slot in ascending order — never blocks.
+        // (A remote fleet has exactly one local slot; holding all of
+        // them is what lets a heard newer generation reseed atomically.)
+        let mut guards = Vec::with_capacity(self.fleet.local_members.len());
+        for &i in &self.fleet.local_members {
+            match self.slots[i].try_lock() {
+                Ok(g) => guards.push(g),
+                Err(TryLockError::WouldBlock) => return Err(ServeReject::Busy),
+                // A poisoned slot means a round thread panicked: fail
+                // loudly instead of masquerading as a forever-Busy node.
+                Err(TryLockError::Poisoned(e)) => {
+                    panic!("gossip member slot poisoned: {e}")
+                }
+            }
         }
-        if generation > self.generation {
-            // The fleet restarted ahead of us: join that generation by
-            // reseeding from our own latest summaries *before* averaging
-            // — states from different generations never mix.
-            self.reseed_states();
-            self.generation = generation;
-        }
-        let serve = self.serve_member;
-        if !self.states[serve]
+        let gen_now = {
+            let mut ctl = self.lock_ctl();
+            if generation < ctl.generation {
+                return Err(ServeReject::StaleGeneration(ctl.generation));
+            }
+            if generation > ctl.generation {
+                // The fleet restarted ahead of us: join that generation
+                // by reseeding from our own latest summaries *before*
+                // averaging — states from different generations never
+                // mix.
+                self.reseed_locked(&mut ctl, &mut guards);
+                ctl.generation = generation;
+            }
+            ctl.generation
+        };
+        let serve_pos = self
+            .fleet
+            .local_members
+            .iter()
+            .position(|&i| i == self.fleet.serve_member)
+            .expect("serve member is local by construction");
+        // Lineage check before the (~16 KiB) rollback clone, so rejected
+        // pushes stay cheap on the serve hot path.
+        if !guards[serve_pos]
             .sketch
             .mapping()
             .same_lineage(incoming.sketch.mapping())
         {
             return Err(ServeReject::Lineage);
         }
-        let pre = self.states[serve].clone();
-        if PeerState::exchange(&mut self.states[serve], &mut incoming).is_err() {
-            self.states[serve] = pre;
+        let pre = guards[serve_pos].clone();
+        if PeerState::exchange(&mut guards[serve_pos], &mut incoming).is_err() {
+            *guards[serve_pos] = pre;
             return Err(ServeReject::Lineage);
         }
-        match deliver(&incoming, self.generation) {
+        match deliver(&incoming, gen_now) {
             Ok(()) => {
                 // Inbound progress is served immediately — the node's
                 // published views must not wait for its own next round.
-                self.publish(shared);
+                self.publish_locked(&guards);
                 Ok(())
             }
             Err(e) => {
                 // §7.2: the reply never reached the initiator, so the
                 // exchange is cancelled on both sides.
-                self.states[serve] = pre;
+                *guards[serve_pos] = pre;
                 Err(ServeReject::Cancelled(e.to_string()))
             }
-        }
-    }
-
-    /// Build the view a round publishes for member `i`.
-    fn view_of(&self, i: usize) -> GlobalView {
-        GlobalView {
-            round: self.round,
-            generation: self.generation,
-            epoch: self.epochs[i],
-            drift: self.drift,
-            converged: self.converged,
-            state: self.states[i].clone(),
-        }
-    }
-
-    /// Serve: publish every member's fresh view.
-    fn publish(&self, shared: &Shared) {
-        for (i, cell) in shared.views.iter().enumerate() {
-            cell.store(Arc::new(self.view_of(i)));
         }
     }
 }
@@ -919,6 +1094,8 @@ impl Worker {
 mod tests {
     use super::*;
     use crate::config::ServiceConfig;
+    use crate::service::transport::{in_process_exchange, RemoteChannel};
+    use std::time::Instant;
 
     fn static_member(values: &[f64]) -> GossipMember {
         GossipMember::from_dataset(values, 0.001, 1024).unwrap()
@@ -1164,11 +1341,7 @@ mod tests {
             vec![static_member(&xs), static_member(&[1e4, 2e4])],
         )
         .unwrap();
-        let handle = NodeHandle {
-            worker: gl.worker.clone(),
-            shared: gl.shared.clone(),
-            stop: gl.stop.clone(),
-        };
+        let handle = gl.handle();
         let incoming = PeerState::init(7, &[5.0, 6.0, 7.0], 0.001, 1024).unwrap();
         let before = gl.view().state().clone();
 
@@ -1193,9 +1366,10 @@ mod tests {
             .unwrap_err();
         assert!(matches!(err, ServeReject::StaleGeneration(1)), "{err}");
 
-        // Busy worker → refused.
+        // A held member slot → Busy (the per-member analogue of PR 3's
+        // busy worker).
         {
-            let _round = gl.worker.lock().unwrap();
+            let _slot = gl.core.slots[0].lock().unwrap();
             let err = handle
                 .serve_exchange(incoming.clone(), 1, |_, _| Ok(()))
                 .unwrap_err();
@@ -1236,11 +1410,7 @@ mod tests {
         .unwrap();
         // Mix the fleet first so a reseed is observable.
         gl.step();
-        let handle = NodeHandle {
-            worker: gl.worker.clone(),
-            shared: gl.shared.clone(),
-            stop: gl.stop.clone(),
-        };
+        let handle = gl.handle();
         let incoming = PeerState::init(5, &[9.0, 10.0], 0.001, 1024).unwrap();
         handle.serve_exchange(incoming, 6, |_, _| Ok(())).unwrap();
         let v = gl.view();
@@ -1248,6 +1418,95 @@ mod tests {
         // Serve member reseeded (q̃ back to 1 for member 0) then averaged
         // once with the incoming state: q̃ = 0.5.
         assert_eq!(v.state().q_tilde, 0.5);
+        gl.shutdown();
+    }
+
+    /// A transport whose connect phase hangs (a dead peer burning the
+    /// connect deadline), instrumented so the test knows when the round
+    /// is parked inside it.
+    #[derive(Debug)]
+    struct HangTransport {
+        entered: Arc<AtomicBool>,
+        release: Arc<AtomicBool>,
+    }
+
+    impl Transport for HangTransport {
+        fn name(&self) -> &'static str {
+            "hang"
+        }
+
+        fn supports_remote(&self) -> bool {
+            true
+        }
+
+        fn exchange_local(
+            &self,
+            a: &mut PeerState,
+            b: &mut PeerState,
+        ) -> Result<usize, TransportError> {
+            in_process_exchange(a, b)
+        }
+
+        fn open_remote(&self, peer: SocketAddr) -> Result<RemoteChannel, TransportError> {
+            self.entered.store(true, Ordering::SeqCst);
+            let deadline = Instant::now() + Duration::from_secs(10);
+            while !self.release.load(Ordering::SeqCst) && Instant::now() < deadline {
+                std::thread::sleep(Duration::from_millis(1));
+            }
+            Err(TransportError::Io(format!("dead peer {peer}")))
+        }
+    }
+
+    /// The PR 4 acceptance property: a round stalled on a dead peer's
+    /// connect deadline holds no member slot, so inbound serves keep
+    /// landing instead of drawing `Busy` for fan-out × deadline.
+    #[test]
+    fn serve_stays_available_while_round_hangs_on_dead_peer() {
+        let entered = Arc::new(AtomicBool::new(false));
+        let release = Arc::new(AtomicBool::new(false));
+        let transport = Arc::new(HangTransport {
+            entered: entered.clone(),
+            release: release.clone(),
+        });
+        let gl = GossipLoop::start_with(
+            GossipLoopConfig::default(),
+            vec![
+                static_member(&[1.0, 2.0]),
+                GossipMember::remote("127.0.0.1:9".parse().unwrap()),
+            ],
+            transport,
+        )
+        .unwrap();
+        let handle = gl.handle();
+        let core = gl.core.clone();
+        let stepper = std::thread::spawn(move || core.run_round());
+        let wait_deadline = Instant::now() + Duration::from_secs(5);
+        while !entered.load(Ordering::SeqCst) {
+            assert!(Instant::now() < wait_deadline, "round never reached connect");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+
+        // The round is parked inside open_remote. Serves must land now.
+        let t0 = Instant::now();
+        let incoming = PeerState::init(5, &[9.0, 10.0], 0.001, 1024).unwrap();
+        handle
+            .serve_exchange(incoming, 1, |_, _| Ok(()))
+            .expect("inbound exchange served while the round hangs");
+        let latency = t0.elapsed();
+        assert!(
+            latency < Duration::from_millis(500),
+            "serve blocked behind the hung round for {latency:?}"
+        );
+        assert_eq!(
+            gl.view().state().q_tilde,
+            0.5,
+            "the serve committed while the round was hung"
+        );
+
+        release.store(true, Ordering::SeqCst);
+        let r = stepper.join().unwrap();
+        assert_eq!(r.exchanges, 0);
+        assert_eq!(r.failed, 1, "the dead-peer exchange is one failure");
         gl.shutdown();
     }
 }

@@ -49,7 +49,10 @@
 //!   reproduces the in-process fleet bit for bit, [`TcpTransport`] ships
 //!   length-prefixed codec frames over `std::net` with per-exchange
 //!   deadlines and §7.2 cancelled-exchange semantics, so real nodes can
-//!   join across machines.
+//!   join across machines. The hot path reuses pooled connections, is
+//!   served by a single poll-driven loop per node, and ships **delta
+//!   frames** (changed buckets only) once a pair has exchanged before —
+//!   see `docs/PROTOCOL.md` for the wire spec.
 //! * **Fluent construction** — [`Node::builder()`] is the primary way to
 //!   stand a node up: service + gossip + transport in one validated
 //!   expression (named-key errors at build time).
@@ -78,5 +81,8 @@ pub use peer::ServicePeer;
 pub use shard::ShardDelta;
 pub use snapshot::Snapshot;
 pub use swap::ArcSwapCell;
-pub use transport::{InProcessTransport, TcpTransport, Transport, TransportError};
+pub use transport::{
+    InProcessTransport, PoolStats, RemoteChannel, TcpTransport, TcpTransportOptions, Transport,
+    TransportError,
+};
 pub use window::WindowRing;

@@ -15,6 +15,11 @@
 //!   adopt reply                            the wire; roll back otherwise
 //! ```
 //!
+//! The normative wire specification — header layout, frame kinds,
+//! restart-generation rules, and the cancelled-exchange state machine —
+//! lives in `docs/PROTOCOL.md`; this module is its reference
+//! implementation.
+//!
 //! **Failure semantics (§7.2).** Any failure — connect refusal, a missed
 //! deadline, a malformed frame, a busy or stale partner — cancels the
 //! exchange: the initiator returns an error *without touching its state*,
@@ -34,14 +39,51 @@
 //! restart (epoch advance anywhere → new generation, every node reseeds)
 //! restores the mass to exactly 1.
 //!
-//! **Concurrency model.** Rounds and inbound serves share one worker
-//! lock: a node mid-round rejects inbound pushes as `Busy` (a §7.2
-//! cancellation the initiator retries next round) rather than queueing —
-//! that is what makes cross-node deadlock impossible with blocking
-//! sockets. The cost is that a round stalled on a dead peer (up to
-//! fan-out × deadline) also serves nothing; background fleets should
-//! stagger `round_interval_ms` (or keep intervals ≫ deadline) so rounds
-//! rarely collide. Finer-grained locking is a ROADMAP item.
+//! # Hot-path machinery (PR 4)
+//!
+//! Three coordinated optimizations take the per-exchange cost from
+//! ~1 RTT of connect + an accept poll + a full ~16 KiB frame pair down
+//! to a frame pair on a warm socket — and a few dozen bytes of it once
+//! the fleet is near convergence:
+//!
+//! * **Connection reuse** — [`TcpTransport`] keeps a small per-peer pool
+//!   of idle connections ([`TcpTransportOptions::pool_connections`],
+//!   [`TcpTransportOptions::pool_idle`]). Checkout health-checks the
+//!   socket (non-blocking 1-byte peek) and falls back to a fresh connect
+//!   on a stale one; a connection that dies mid-exchange *before any
+//!   reply byte arrived* is classified [`TransportError::StaleChannel`]
+//!   so the caller can retry once on a fresh connect without
+//!   double-counting a failure (safe up to the protocol's existing Two
+//!   Generals window — see the variant's docs). Read timeouts are
+//!   **never** classified stale — a merely slow partner may still serve
+//!   the first push, and retrying would double-average (see
+//!   `docs/PROTOCOL.md`).
+//! * **Poll-driven serving** — one `dudd-serve` thread per node runs all
+//!   inbound connections non-blocking (accept + incremental frame
+//!   assembly + per-frame deadline + idle eviction), replacing the
+//!   thread-per-push accept path. Connections stay open across
+//!   exchanges, which is what makes client-side pooling pay off.
+//! * **Delta exchanges** — a completed push–pull leaves both partners
+//!   with the identical averaged state; both cache it (keyed by partner
+//!   and restart generation) as the *baseline* of their next exchange
+//!   and ship only changed buckets
+//!   ([`DeltaPayload`](crate::sketch::codec::DeltaPayload)). Baselines
+//!   are fingerprinted; any mismatch (reseed, eviction, a lost reply)
+//!   draws a `BaselineMismatch` reject and an automatic full-frame
+//!   retry on the same connection. Generation bumps invalidate every
+//!   cached baseline by construction (the generation is part of the
+//!   key).
+//!
+//! **Concurrency model.** Since the per-member locking redesign the
+//! serve path contends only on the *member state slots*, not on the
+//! round bookkeeping: an initiator stalled in a dead peer's connect
+//! deadline ([`Transport::open_remote`] runs **without** any member
+//! lock) no longer blocks inbound serves. A node actually mid-push–pull
+//! on its own slot still rejects inbound pushes as `Busy` (a §7.2
+//! cancellation the initiator retries next round) — that, plus servers
+//! only ever *try*-locking, is what keeps cross-node deadlock
+//! impossible with blocking sockets. See [`GossipLoop`](super::GossipLoop)'s
+//! module for the lock order.
 //!
 //! Two implementations ship:
 //!
@@ -50,28 +92,33 @@
 //!   bit-identical to the pre-trait loop (`rust/tests/integration_remote.rs`
 //!   proves it against the simulation engine).
 //! * [`TcpTransport`] — length-prefixed [`codec`](crate::sketch::codec)
-//!   frames over `std::net`: one accept loop per node serving inbound
-//!   pushes, per-exchange deadlines on connect/read/write, and generation
-//!   tags so nodes that restarted their protocol (new epoch ⇒ reseed)
-//!   never average with states from an older restart.
+//!   frames over `std::net` with the pool/serve-loop/delta machinery
+//!   above, per-exchange deadlines, and generation tags so nodes that
+//!   restarted their protocol (new epoch ⇒ reseed) never average with
+//!   states from an older restart.
 //!
 //! Construction normally goes through
 //! [`Node::builder()`](super::Node::builder); see the `serve-remote` CLI
 //! subcommand for a full loopback fleet.
 
 use super::gossip_loop::{NodeHandle, ServeReject};
+use crate::config::GossipLoopConfig;
 use crate::gossip::PeerState;
 use crate::sketch::codec::{
-    decode_exchange, encode_exchange_push, encode_exchange_reject, encode_exchange_reply,
-    peer_state_wire_size, ExchangeFrame, RejectReason,
+    apply_delta, decode_exchange, delta_payload, delta_wire_size, encode_exchange_delta_push,
+    encode_exchange_delta_reply, encode_exchange_push, encode_exchange_reject,
+    encode_exchange_reply, peer_state_fingerprint, peer_state_wire_size, DeltaPayload,
+    ExchangeFrame, RejectReason,
 };
 use anyhow::Context;
+use std::any::Any;
+use std::collections::HashMap;
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Why an exchange was cancelled (initiator side; §7.2 — the local state
 /// is untouched whenever one of these is returned).
@@ -80,6 +127,19 @@ pub enum TransportError {
     /// Socket-level failure: connect, read, or write failed or missed
     /// the per-exchange deadline.
     Io(String),
+    /// A **reused** (pooled) connection died before a single reply byte
+    /// arrived: in every ordinary failure ordering the push was never
+    /// served (the peer closed the idle socket, so the push drew a
+    /// reset), and the caller may retry once on a fresh connection. The
+    /// one ordering where the partner *did* commit — its reply was
+    /// written and then destroyed in flight by a host failure or
+    /// middlebox reset — is the protocol's existing Two Generals
+    /// window, and a retry there produces exactly the same bounded
+    /// `q̃`-mass skew as the half-commit it replaces while leaving both
+    /// sides *consistent* (see `docs/PROTOCOL.md` §3). Timeouts are
+    /// never classified here. The transport has already discarded every
+    /// pooled connection to that peer.
+    StaleChannel(String),
     /// The partner's bytes failed to decode.
     Codec(String),
     /// The partner is mid-exchange or mid-round; retry next round.
@@ -99,6 +159,9 @@ impl std::fmt::Display for TransportError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
             TransportError::Io(e) => write!(f, "exchange i/o failed: {e}"),
+            TransportError::StaleChannel(e) => {
+                write!(f, "pooled connection was stale (retry on fresh): {e}")
+            }
             TransportError::Codec(e) => write!(f, "exchange frame invalid: {e}"),
             TransportError::Busy => write!(f, "partner busy (exchange cancelled)"),
             TransportError::StaleGeneration(g) => {
@@ -115,18 +178,69 @@ impl std::fmt::Display for TransportError {
 
 impl std::error::Error for TransportError {}
 
+/// An established (but not yet used) connection to a remote peer:
+/// created by [`Transport::open_remote`], consumed by
+/// [`Transport::exchange_on`]. Opaque so the gossip loop can hold the
+/// two phases apart (connect outside the member lock, push–pull inside
+/// it) without knowing the transport's socket type.
+pub struct RemoteChannel {
+    peer: SocketAddr,
+    reused: bool,
+    inner: Box<dyn Any + Send>,
+}
+
+impl RemoteChannel {
+    /// Wrap a transport-specific connection object.
+    pub fn new(peer: SocketAddr, reused: bool, inner: Box<dyn Any + Send>) -> Self {
+        Self {
+            peer,
+            reused,
+            inner,
+        }
+    }
+
+    /// The peer this channel reaches.
+    pub fn peer(&self) -> SocketAddr {
+        self.peer
+    }
+
+    /// True when the connection came out of a pool rather than a fresh
+    /// connect (governs [`TransportError::StaleChannel`] retry rules).
+    pub fn reused(&self) -> bool {
+        self.reused
+    }
+}
+
+impl std::fmt::Debug for RemoteChannel {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "RemoteChannel(peer={}, reused={})",
+            self.peer, self.reused
+        )
+    }
+}
+
 /// How a [`GossipLoop`](super::GossipLoop) executes the atomic push–pull
 /// exchange with a partner — in process or across the network.
 ///
 /// Implementations must uphold §7.2's cancelled-exchange contract: when
 /// any method returns `Err`, every `&mut PeerState` it received is
 /// exactly its pre-call value.
+///
+/// Remote exchanges run in two phases so the loop can scope its member
+/// locks tightly (see [`GossipLoop`](super::GossipLoop)):
+/// [`Transport::open_remote`] establishes the connection and is called
+/// **without** any member lock held — a dead peer's connect deadline
+/// burns here without blocking inbound serves — then
+/// [`Transport::exchange_on`] runs the framed push–pull while the caller
+/// holds only the initiator's own slot.
 pub trait Transport: Send + Sync + std::fmt::Debug + 'static {
     /// Short human name for telemetry and error messages.
     fn name(&self) -> &'static str;
 
-    /// True when [`Transport::exchange_remote`] can actually reach a
-    /// socket address. The loop refuses to start a fleet containing
+    /// True when this transport can actually reach a socket address. The
+    /// loop refuses to start a fleet containing
     /// [`GossipMember::Remote`](super::GossipMember::Remote) members on a
     /// transport that cannot.
     fn supports_remote(&self) -> bool {
@@ -143,29 +257,61 @@ pub trait Transport: Send + Sync + std::fmt::Debug + 'static {
         b: &mut PeerState,
     ) -> Result<usize, TransportError>;
 
-    /// Atomic push–pull with a remote node: push `local`'s framed state
-    /// at restart generation `generation`, pull the averaged reply, and
-    /// adopt it. Returns the bytes moved on the wire. On `Err`, `local`
-    /// is exactly its pre-call value (cancelled exchange, §7.2).
+    /// Phase 1 of a remote exchange: produce a connected channel to
+    /// `peer` (fresh connect or pool checkout). Called by the loop with
+    /// **no member lock held**, so a dead peer's connect deadline never
+    /// blocks inbound serves.
+    fn open_remote(&self, peer: SocketAddr) -> Result<RemoteChannel, TransportError> {
+        Err(TransportError::Unreachable(peer))
+    }
+
+    /// Phase 2 of a remote exchange: push `local`'s framed state at
+    /// restart generation `generation` over `chan`, pull the averaged
+    /// reply, and adopt it. Returns the bytes moved on the wire. On
+    /// `Err`, `local` is exactly its pre-call value (cancelled exchange,
+    /// §7.2). Called with only the initiator's member slot locked.
+    fn exchange_on(
+        &self,
+        chan: RemoteChannel,
+        local: &mut PeerState,
+        generation: u64,
+    ) -> Result<usize, TransportError> {
+        let _ = (local, generation);
+        Err(TransportError::Unreachable(chan.peer()))
+    }
+
+    /// Both phases in one call, with a single
+    /// [`StaleChannel`](TransportError::StaleChannel) retry. Convenience
+    /// for benches and direct API use; the loop calls the phases itself
+    /// to scope its locks.
     fn exchange_remote(
         &self,
         local: &mut PeerState,
         generation: u64,
         peer: SocketAddr,
     ) -> Result<usize, TransportError> {
-        let _ = (local, generation);
-        Err(TransportError::Unreachable(peer))
+        let chan = self.open_remote(peer)?;
+        match self.exchange_on(chan, local, generation) {
+            Err(TransportError::StaleChannel(_)) => {
+                // The pool was invalidated with the error, so this
+                // checkout is a fresh connect.
+                let chan = self.open_remote(peer)?;
+                self.exchange_on(chan, local, generation)
+            }
+            r => r,
+        }
     }
 
-    /// The address this transport's accept loop serves, if it has one.
+    /// The address this transport's serve loop listens on, if it has one.
     fn listen_addr(&self) -> Option<SocketAddr> {
         None
     }
 
-    /// Spawn the serve side (accept loop), if this transport has one.
-    /// Called once by [`GossipLoop`](super::GossipLoop) at start; the
-    /// returned thread must watch [`NodeHandle::stopping`] and exit
-    /// promptly when it turns true.
+    /// Spawn the serve side (accept + frame-pump loop), if this
+    /// transport has one. Called once by
+    /// [`GossipLoop`](super::GossipLoop) at start; the returned thread
+    /// must watch [`NodeHandle::stopping`] and exit promptly when it
+    /// turns true.
     fn spawn_server(&self, node: NodeHandle) -> crate::Result<Option<JoinHandle<()>>> {
         let _ = node;
         Ok(None)
@@ -210,7 +356,7 @@ impl Transport for InProcessTransport {
 /// live bucket plus a fixed header (~16 KiB at the default m = 1024);
 /// 4 MiB admits bucket budgets up to ~260k while bounding what a
 /// connection flood can pin to `MAX_INFLIGHT_SERVES × 4 MiB` — and the
-/// incremental read below means even that much is allocated only for
+/// incremental reads below mean even that much is allocated only for
 /// bytes a peer actually sends.
 pub const MAX_FRAME_BYTES: usize = 4 << 20;
 
@@ -226,54 +372,323 @@ fn write_frame(mut w: impl Write, frame: &[u8]) -> std::io::Result<()> {
 /// The buffer grows with the bytes that actually arrive (via
 /// [`Read::take`]), so a hostile prefix claiming a huge length pins no
 /// memory beyond what the peer really sends within the socket deadline.
-fn read_frame(mut r: impl Read) -> std::io::Result<Vec<u8>> {
+fn read_frame(r: impl Read) -> std::io::Result<Vec<u8>> {
+    read_frame_tracked(r).map_err(|(_, e)| e)
+}
+
+/// [`read_frame`], but reporting whether *any* byte of the record had
+/// arrived when an error struck — the discriminator between "stale
+/// pooled connection, retry-eligible" (zero bytes plus a
+/// connection-death error kind; see
+/// [`TransportError::StaleChannel`] for why the residual ambiguity is
+/// acceptable) and everything else.
+fn read_frame_tracked(mut r: impl Read) -> Result<Vec<u8>, (bool, std::io::Error)> {
     let mut len = [0u8; 4];
-    r.read_exact(&mut len)?;
+    let mut got = 0usize;
+    while got < 4 {
+        match r.read(&mut len[got..]) {
+            Ok(0) => {
+                return Err((
+                    got > 0,
+                    std::io::Error::new(
+                        std::io::ErrorKind::UnexpectedEof,
+                        "connection closed before the reply",
+                    ),
+                ))
+            }
+            Ok(n) => got += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err((got > 0, e)),
+        }
+    }
     let len = u32::from_le_bytes(len) as usize;
     if len > MAX_FRAME_BYTES {
-        return Err(std::io::Error::new(
-            std::io::ErrorKind::InvalidData,
-            format!("frame length {len} exceeds the {MAX_FRAME_BYTES}-byte cap"),
+        return Err((
+            true,
+            std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                format!("frame length {len} exceeds the {MAX_FRAME_BYTES}-byte cap"),
+            ),
         ));
     }
     let mut buf = Vec::with_capacity(len.min(64 << 10));
-    (&mut r).take(len as u64).read_to_end(&mut buf)?;
+    if let Err(e) = (&mut r).take(len as u64).read_to_end(&mut buf) {
+        return Err((true, e));
+    }
     if buf.len() != len {
-        return Err(std::io::Error::new(
-            std::io::ErrorKind::UnexpectedEof,
-            format!("frame truncated: got {} of {len} bytes", buf.len()),
+        return Err((
+            true,
+            std::io::Error::new(
+                std::io::ErrorKind::UnexpectedEof,
+                format!("frame truncated: got {} of {len} bytes", buf.len()),
+            ),
         ));
     }
     Ok(buf)
 }
 
+/// Error kinds that mean "the connection itself is dead" — the only
+/// failures eligible for the stale-pooled-connection retry. Timeouts are
+/// deliberately excluded: a slow partner may still serve the first push,
+/// and a retry would average twice.
+fn connection_died(e: &std::io::Error) -> bool {
+    matches!(
+        e.kind(),
+        std::io::ErrorKind::ConnectionReset
+            | std::io::ErrorKind::ConnectionAborted
+            | std::io::ErrorKind::BrokenPipe
+            | std::io::ErrorKind::NotConnected
+            | std::io::ErrorKind::UnexpectedEof
+            | std::io::ErrorKind::WriteZero
+    )
+}
+
+/// Tuning knobs of a [`TcpTransport`]: the per-exchange deadline plus
+/// the PR 4 hot-path machinery (connection pool, delta exchanges).
+///
+/// ```
+/// use duddsketch::service::TcpTransportOptions;
+/// use std::time::Duration;
+///
+/// let opts = TcpTransportOptions::default();
+/// assert_eq!(opts.deadline, Duration::from_millis(1_000));
+/// assert_eq!(opts.pool_connections, 2);
+/// assert!(opts.delta_exchanges);
+/// ```
+#[derive(Debug, Clone)]
+pub struct TcpTransportOptions {
+    /// Per-exchange socket deadline (connect, read, and write
+    /// individually); an exchange that misses it is cancelled (§7.2).
+    pub deadline: Duration,
+    /// Idle connections kept per peer; 0 disables reuse (every exchange
+    /// pays a fresh connect).
+    pub pool_connections: usize,
+    /// Pooled connections idle longer than this are discarded at
+    /// checkout; the serve loop evicts its side on the same clock, so
+    /// keep the two transports of a fleet on one setting.
+    pub pool_idle: Duration,
+    /// Ship delta frames against the per-(peer, generation) baseline
+    /// cache when one exists (always with automatic full-frame fallback
+    /// on a baseline mismatch).
+    pub delta_exchanges: bool,
+}
+
+impl Default for TcpTransportOptions {
+    fn default() -> Self {
+        Self {
+            deadline: Duration::from_millis(1_000),
+            pool_connections: 2,
+            pool_idle: Duration::from_millis(30_000),
+            delta_exchanges: true,
+        }
+    }
+}
+
+impl TcpTransportOptions {
+    /// Derive the options from the loop configuration's validated keys
+    /// (`gossip_exchange_deadline_ms`, `gossip_pool_connections`,
+    /// `gossip_pool_idle_ms`, `gossip_delta_exchanges`).
+    pub fn from_gossip(cfg: &GossipLoopConfig) -> Self {
+        Self {
+            deadline: Duration::from_millis(cfg.exchange_deadline_ms),
+            pool_connections: cfg.pool_connections,
+            pool_idle: Duration::from_millis(cfg.pool_idle_ms),
+            delta_exchanges: cfg.delta_exchanges,
+        }
+    }
+
+    fn validate(&self) -> crate::Result<()> {
+        anyhow::ensure!(
+            !self.deadline.is_zero(),
+            "gossip_exchange_deadline_ms must be >= 1 (a zero deadline \
+             cancels every remote exchange)"
+        );
+        anyhow::ensure!(
+            !self.pool_idle.is_zero(),
+            "gossip_pool_idle_ms must be >= 1 (a zero idle timeout \
+             discards every pooled connection)"
+        );
+        Ok(())
+    }
+}
+
+/// Counters of the connection pool's behavior (monotonic since
+/// construction). `failed` in the round report only counts *unrecovered*
+/// exchanges; these counters are where the recovery work shows up.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct PoolStats {
+    /// Fresh TCP connects performed.
+    pub fresh_connects: usize,
+    /// Exchanges that ran on a pooled connection.
+    pub reused: usize,
+    /// Pooled connections found dead (at checkout health-check or
+    /// mid-exchange) and discarded.
+    pub stale_discarded: usize,
+    /// Pooled connections discarded for exceeding the idle timeout.
+    pub expired: usize,
+}
+
+#[derive(Debug, Default)]
+struct TransportStats {
+    fresh: AtomicUsize,
+    reused: AtomicUsize,
+    stale: AtomicUsize,
+    expired: AtomicUsize,
+}
+
+/// One idle pooled connection.
+#[derive(Debug)]
+struct PooledConn {
+    stream: TcpStream,
+    idle_since: Instant,
+}
+
+/// Non-blocking 1-byte peek: `WouldBlock` means alive-and-quiet, data or
+/// EOF or any other error means the connection cannot carry a fresh
+/// exchange (closed, reset, or protocol residue).
+fn probe_alive(stream: &TcpStream) -> bool {
+    if stream.set_nonblocking(true).is_err() {
+        return false;
+    }
+    let mut b = [0u8; 1];
+    let alive = matches!(stream.peek(&mut b),
+        Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock);
+    alive && stream.set_nonblocking(false).is_ok()
+}
+
+/// Bounded per-peer pool of idle connections.
+#[derive(Debug, Default)]
+struct Pool {
+    conns: Mutex<HashMap<SocketAddr, Vec<PooledConn>>>,
+}
+
+impl Pool {
+    /// Take a healthy pooled connection, discarding expired/dead ones.
+    fn checkout(
+        &self,
+        peer: SocketAddr,
+        idle: Duration,
+        stats: &TransportStats,
+    ) -> Option<TcpStream> {
+        let mut map = self.conns.lock().expect("transport pool poisoned");
+        let list = map.get_mut(&peer)?;
+        while let Some(c) = list.pop() {
+            if c.idle_since.elapsed() > idle {
+                stats.expired.fetch_add(1, Ordering::Relaxed);
+                continue;
+            }
+            if probe_alive(&c.stream) {
+                stats.reused.fetch_add(1, Ordering::Relaxed);
+                return Some(c.stream);
+            }
+            stats.stale.fetch_add(1, Ordering::Relaxed);
+        }
+        None
+    }
+
+    /// Return a connection after a successful exchange (dropped when the
+    /// per-peer cap is reached or pooling is disabled).
+    fn checkin(&self, peer: SocketAddr, stream: TcpStream, cap: usize) {
+        if cap == 0 {
+            return;
+        }
+        let mut map = self.conns.lock().expect("transport pool poisoned");
+        let list = map.entry(peer).or_default();
+        if list.len() < cap {
+            list.push(PooledConn {
+                stream,
+                idle_since: Instant::now(),
+            });
+        }
+    }
+
+    /// Drop every pooled connection to `peer` (called when one proved
+    /// stale mid-exchange: the peer likely restarted, so its siblings
+    /// are dead too).
+    fn invalidate(&self, peer: SocketAddr, stats: &TransportStats) {
+        let mut map = self.conns.lock().expect("transport pool poisoned");
+        if let Some(list) = map.remove(&peer) {
+            stats.stale.fetch_add(list.len(), Ordering::Relaxed);
+        }
+    }
+}
+
+/// The last mutually-known state of an exchange pair: what both sides
+/// hold after a completed push–pull, cached so the next exchange can
+/// ship a delta. `generation` is part of the identity — a protocol
+/// restart invalidates every baseline without any bookkeeping.
+/// `fingerprint` is supplied by the caller (hashed off the full reply
+/// frame's bytes when one exists, so the steady state pays no ~16 KiB
+/// re-encode); `stored_at` drives same-generation LRU eviction on the
+/// serve side.
+#[derive(Debug, Clone)]
+struct Baseline {
+    generation: u64,
+    fingerprint: u64,
+    state: PeerState,
+    stored_at: Instant,
+}
+
+impl Baseline {
+    fn of(state: &PeerState, generation: u64, fingerprint: u64) -> Self {
+        Self {
+            generation,
+            fingerprint,
+            state: state.clone(),
+            stored_at: Instant::now(),
+        }
+    }
+}
+
+/// Serve-side baseline cache, keyed by initiator peer id. Shared between
+/// the transport (initiator half lives in its own map, keyed by address)
+/// and the serve loop thread.
+type ServeBaselines = Arc<Mutex<HashMap<u64, Baseline>>>;
+
+/// Cap on serve-side cached baselines (hostile peers can mint ids; each
+/// baseline holds a full peer state).
+const MAX_SERVE_BASELINES: usize = 256;
+
 /// Length-prefixed exchange frames over `std::net` TCP.
 ///
-/// Bind one per serving node ([`TcpTransport::bind`], address book
+/// Bind one per serving node ([`TcpTransport::bind_with`], address book
 /// built *before* any loop starts so nodes can list each other as
 /// [`GossipMember::Remote`](super::GossipMember::Remote)); pure clients
-/// use [`TcpTransport::connect_only`]. Every socket operation carries the
-/// per-exchange deadline
-/// ([`GossipLoopConfig::exchange_deadline_ms`](crate::config::GossipLoopConfig::exchange_deadline_ms));
-/// a missed deadline cancels the exchange with both sides keeping their
-/// pre-round state (§7.2).
+/// use [`TcpTransport::connect_only_with`]. Every socket operation
+/// carries the per-exchange deadline; a missed deadline cancels the
+/// exchange with both sides keeping their pre-round state (§7.2).
+///
+/// # Invariants (pool / baselines)
+///
+/// * A connection enters the pool only after a fully completed exchange,
+///   so a pooled socket never carries half a conversation.
+/// * A pooled connection that dies before any reply byte surfaces as
+///   [`TransportError::StaleChannel`] **and** empties that peer's pool —
+///   the immediate retry is guaranteed a fresh connect.
+/// * A baseline is cached only from a committed exchange and only read
+///   back at the same restart generation; the fingerprint in every delta
+///   frame catches any remaining disagreement (e.g. a reply lost after
+///   the server committed) and downgrades that exchange to full frames.
 #[derive(Debug)]
 pub struct TcpTransport {
     /// Taken (once) by `spawn_server` when the loop starts.
     listener: Mutex<Option<TcpListener>>,
     local_addr: Option<SocketAddr>,
-    deadline: Duration,
+    opts: TcpTransportOptions,
+    pool: Pool,
+    stats: TransportStats,
+    /// Initiator-side baselines, one per partner address.
+    baselines: Mutex<HashMap<SocketAddr, Baseline>>,
+    /// Serve-side baselines, one per initiator id (shared with the serve
+    /// loop thread).
+    serve_baselines: ServeBaselines,
 }
 
 impl TcpTransport {
-    /// Bind the accept side on `addr` (use port 0 for an OS-assigned
-    /// loopback port) with the given per-exchange deadline.
-    pub fn bind(addr: impl ToSocketAddrs, deadline: Duration) -> crate::Result<Self> {
-        anyhow::ensure!(
-            !deadline.is_zero(),
-            "gossip_exchange_deadline_ms must be >= 1 (a zero deadline \
-             cancels every remote exchange)"
-        );
+    /// Bind the serve side on `addr` (use port 0 for an OS-assigned
+    /// loopback port) with full options.
+    pub fn bind_with(addr: impl ToSocketAddrs, opts: TcpTransportOptions) -> crate::Result<Self> {
+        opts.validate()?;
         let listener = TcpListener::bind(addr).context("binding gossip transport listener")?;
         let local_addr = listener
             .local_addr()
@@ -281,28 +696,153 @@ impl TcpTransport {
         Ok(Self {
             listener: Mutex::new(Some(listener)),
             local_addr: Some(local_addr),
-            deadline,
+            opts,
+            pool: Pool::default(),
+            stats: TransportStats::default(),
+            baselines: Mutex::new(HashMap::new()),
+            serve_baselines: Arc::new(Mutex::new(HashMap::new())),
         })
     }
 
-    /// A client-only transport: can initiate exchanges with remote nodes
-    /// but serves no inbound ones (no accept loop).
-    pub fn connect_only(deadline: Duration) -> crate::Result<Self> {
-        anyhow::ensure!(
-            !deadline.is_zero(),
-            "gossip_exchange_deadline_ms must be >= 1 (a zero deadline \
-             cancels every remote exchange)"
-        );
+    /// [`TcpTransport::bind_with`] keeping every option at its default
+    /// except the deadline.
+    pub fn bind(addr: impl ToSocketAddrs, deadline: Duration) -> crate::Result<Self> {
+        Self::bind_with(
+            addr,
+            TcpTransportOptions {
+                deadline,
+                ..TcpTransportOptions::default()
+            },
+        )
+    }
+
+    /// A client-only transport with full options: can initiate exchanges
+    /// with remote nodes but serves no inbound ones (no serve loop).
+    pub fn connect_only_with(opts: TcpTransportOptions) -> crate::Result<Self> {
+        opts.validate()?;
         Ok(Self {
             listener: Mutex::new(None),
             local_addr: None,
+            opts,
+            pool: Pool::default(),
+            stats: TransportStats::default(),
+            baselines: Mutex::new(HashMap::new()),
+            serve_baselines: Arc::new(Mutex::new(HashMap::new())),
+        })
+    }
+
+    /// [`TcpTransport::connect_only_with`] keeping every option at its
+    /// default except the deadline.
+    pub fn connect_only(deadline: Duration) -> crate::Result<Self> {
+        Self::connect_only_with(TcpTransportOptions {
             deadline,
+            ..TcpTransportOptions::default()
         })
     }
 
     /// The per-exchange deadline.
     pub fn deadline(&self) -> Duration {
-        self.deadline
+        self.opts.deadline
+    }
+
+    /// The transport's full option set.
+    pub fn options(&self) -> &TcpTransportOptions {
+        &self.opts
+    }
+
+    /// Snapshot of the connection-pool counters.
+    pub fn pool_stats(&self) -> PoolStats {
+        PoolStats {
+            fresh_connects: self.stats.fresh.load(Ordering::Relaxed),
+            reused: self.stats.reused.load(Ordering::Relaxed),
+            stale_discarded: self.stats.stale.load(Ordering::Relaxed),
+            expired: self.stats.expired.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Idle connections currently pooled for `peer` (observability).
+    pub fn pooled_connections(&self, peer: SocketAddr) -> usize {
+        self.pool
+            .conns
+            .lock()
+            .expect("transport pool poisoned")
+            .get(&peer)
+            .map_or(0, Vec::len)
+    }
+
+    /// Classify a mid-exchange i/o failure, invalidating the pool when
+    /// the connection qualifies for a stale retry.
+    fn channel_failure(
+        &self,
+        peer: SocketAddr,
+        reused: bool,
+        phase: &str,
+        reply_started: bool,
+        e: std::io::Error,
+    ) -> TransportError {
+        if reused && !reply_started && connection_died(&e) {
+            self.pool.invalidate(peer, &self.stats);
+            self.stats.stale.fetch_add(1, Ordering::Relaxed);
+            TransportError::StaleChannel(format!("{phase}: {e}"))
+        } else {
+            TransportError::Io(format!("{phase}: {e}"))
+        }
+    }
+
+    /// Validate and adopt a reply, updating the pair baseline.
+    /// `fingerprint` is the adopted state's peer-state fingerprint —
+    /// hashed off the full reply frame when one exists, computed from
+    /// the reconstructed state for delta replies.
+    fn adopt_reply(
+        &self,
+        peer: SocketAddr,
+        local: &mut PeerState,
+        generation: u64,
+        gen: u64,
+        state: PeerState,
+        fingerprint: u64,
+    ) -> Result<(), TransportError> {
+        if gen != generation {
+            return Err(TransportError::Protocol(format!(
+                "reply at generation {gen}, push was {generation}"
+            )));
+        }
+        if state.id != local.id {
+            return Err(TransportError::Protocol(format!(
+                "reply carries peer id {}, expected {}",
+                state.id, local.id
+            )));
+        }
+        if !state.sketch.mapping().same_lineage(local.sketch.mapping()) {
+            return Err(TransportError::Lineage(format!(
+                "reply alpha0 {} vs local {}",
+                state.sketch.mapping().alpha0(),
+                local.sketch.mapping().alpha0()
+            )));
+        }
+        if self.opts.delta_exchanges {
+            self.baselines
+                .lock()
+                .expect("transport baseline cache poisoned")
+                .insert(peer, Baseline::of(&state, generation, fingerprint));
+        }
+        // Commit point: the partner already committed when its reply
+        // write succeeded; adopting completes the exchange.
+        *local = state;
+        Ok(())
+    }
+
+    /// The pair baseline for `peer` at exactly `generation`, if cached.
+    fn baseline_for(&self, peer: SocketAddr, generation: u64) -> Option<Baseline> {
+        if !self.opts.delta_exchanges {
+            return None;
+        }
+        self.baselines
+            .lock()
+            .expect("transport baseline cache poisoned")
+            .get(&peer)
+            .filter(|b| b.generation == generation)
+            .cloned()
     }
 }
 
@@ -325,65 +865,156 @@ impl Transport for TcpTransport {
         in_process_exchange(a, b)
     }
 
-    fn exchange_remote(
+    fn open_remote(&self, peer: SocketAddr) -> Result<RemoteChannel, TransportError> {
+        if self.opts.pool_connections > 0 {
+            if let Some(stream) = self.pool.checkout(peer, self.opts.pool_idle, &self.stats) {
+                return Ok(RemoteChannel::new(peer, true, Box::new(stream)));
+            }
+        }
+        let io = |e: std::io::Error| TransportError::Io(e.to_string());
+        let stream = TcpStream::connect_timeout(&peer, self.opts.deadline).map_err(io)?;
+        self.stats.fresh.fetch_add(1, Ordering::Relaxed);
+        Ok(RemoteChannel::new(peer, false, Box::new(stream)))
+    }
+
+    fn exchange_on(
         &self,
+        chan: RemoteChannel,
         local: &mut PeerState,
         generation: u64,
-        peer: SocketAddr,
     ) -> Result<usize, TransportError> {
+        let RemoteChannel {
+            peer,
+            reused,
+            inner,
+        } = chan;
+        let stream = *inner.downcast::<TcpStream>().map_err(|_| {
+            TransportError::Protocol("channel was opened by a different transport".into())
+        })?;
         let io = |e: std::io::Error| TransportError::Io(e.to_string());
-        let stream = TcpStream::connect_timeout(&peer, self.deadline).map_err(io)?;
-        stream.set_read_timeout(Some(self.deadline)).map_err(io)?;
-        stream.set_write_timeout(Some(self.deadline)).map_err(io)?;
+        stream.set_read_timeout(Some(self.opts.deadline)).map_err(io)?;
+        stream
+            .set_write_timeout(Some(self.opts.deadline))
+            .map_err(io)?;
         let _ = stream.set_nodelay(true);
 
-        let push = encode_exchange_push(generation, local);
-        write_frame(&stream, &push).map_err(io)?;
-        let reply = read_frame(&stream).map_err(io)?;
-        match decode_exchange(&reply).map_err(|e| TransportError::Codec(e.to_string()))? {
+        // Prefer a delta push when the pair baseline exists at this
+        // generation and the delta actually saves bytes.
+        let baseline = self.baseline_for(peer, generation);
+        let push_delta: Option<DeltaPayload> = baseline.as_ref().and_then(|b| {
+            delta_payload(&b.state, b.fingerprint, local)
+                .filter(|d| delta_wire_size(d) < 14 + peer_state_wire_size(local))
+        });
+        let push = match &push_delta {
+            Some(d) => encode_exchange_delta_push(generation, d),
+            None => encode_exchange_push(generation, local),
+        };
+        if let Err(e) = write_frame(&stream, &push) {
+            return Err(self.channel_failure(peer, reused, "push write", false, e));
+        }
+        let reply = match read_frame_tracked(&stream) {
+            Ok(r) => r,
+            Err((started, e)) => {
+                return Err(self.channel_failure(peer, reused, "reply read", started, e))
+            }
+        };
+        let mut wire = 8 + push.len() + reply.len();
+        let decoded =
+            decode_exchange(&reply).map_err(|e| TransportError::Codec(e.to_string()))?;
+        match decoded {
             ExchangeFrame::Reply {
                 generation: gen,
                 state,
             } => {
-                if gen != generation {
-                    return Err(TransportError::Protocol(format!(
-                        "reply at generation {gen}, push was {generation}"
-                    )));
+                let fp = exchange_frame_fingerprint(&reply)
+                    .expect("a decoded reply frame is longer than its header");
+                self.adopt_reply(peer, local, generation, gen, state, fp)?;
+                self.pool.checkin(peer, stream, self.opts.pool_connections);
+                Ok(wire)
+            }
+            ExchangeFrame::DeltaReply {
+                generation: gen,
+                delta,
+            } => {
+                let Some(b) = baseline else {
+                    return Err(TransportError::Protocol(
+                        "delta reply to a full push (no shared baseline)".into(),
+                    ));
+                };
+                if delta.baseline_fingerprint != b.fingerprint {
+                    return Err(TransportError::Protocol(
+                        "delta reply names a baseline we do not hold".into(),
+                    ));
                 }
-                if state.id != local.id {
-                    return Err(TransportError::Protocol(format!(
-                        "reply carries peer id {}, expected {}",
-                        state.id, local.id
-                    )));
+                let state =
+                    apply_delta(&b.state, &delta).map_err(|e| TransportError::Codec(e.to_string()))?;
+                let fp = peer_state_fingerprint(&state);
+                self.adopt_reply(peer, local, generation, gen, state, fp)?;
+                self.pool.checkin(peer, stream, self.opts.pool_connections);
+                Ok(wire)
+            }
+            ExchangeFrame::Reject {
+                reason: RejectReason::BaselineMismatch,
+                ..
+            } if push_delta.is_some() => {
+                // The partner lost (or never had) our baseline: drop ours
+                // and retry with a full frame on this same connection.
+                self.baselines
+                    .lock()
+                    .expect("transport baseline cache poisoned")
+                    .remove(&peer);
+                let push = encode_exchange_push(generation, local);
+                write_frame(&stream, &push).map_err(io)?;
+                let reply = read_frame(&stream).map_err(io)?;
+                wire += 8 + push.len() + reply.len();
+                match decode_exchange(&reply)
+                    .map_err(|e| TransportError::Codec(e.to_string()))?
+                {
+                    ExchangeFrame::Reply {
+                        generation: gen,
+                        state,
+                    } => {
+                        let fp = exchange_frame_fingerprint(&reply)
+                            .expect("a decoded reply frame is longer than its header");
+                        self.adopt_reply(peer, local, generation, gen, state, fp)?;
+                        self.pool.checkin(peer, stream, self.opts.pool_connections);
+                        Ok(wire)
+                    }
+                    ExchangeFrame::Reject {
+                        generation: gen,
+                        reason,
+                    } => {
+                        // Framing is intact after a reject: keep the
+                        // connection warm for the next round.
+                        if matches!(
+                            reason,
+                            RejectReason::Busy | RejectReason::StaleGeneration
+                        ) {
+                            self.pool.checkin(peer, stream, self.opts.pool_connections);
+                        }
+                        Err(reject_error(gen, reason))
+                    }
+                    _ => Err(TransportError::Protocol(
+                        "partner answered the full retry with a non-reply frame".into(),
+                    )),
                 }
-                if !state.sketch.mapping().same_lineage(local.sketch.mapping()) {
-                    return Err(TransportError::Lineage(format!(
-                        "reply alpha0 {} vs local {}",
-                        state.sketch.mapping().alpha0(),
-                        local.sketch.mapping().alpha0()
-                    )));
-                }
-                // Commit point: the partner already committed when its
-                // reply write succeeded; adopting completes the exchange.
-                *local = state;
-                Ok(8 + push.len() + reply.len())
             }
             ExchangeFrame::Reject {
                 generation: gen,
                 reason,
-            } => Err(match reason {
-                RejectReason::Busy => TransportError::Busy,
-                RejectReason::StaleGeneration => TransportError::StaleGeneration(gen),
-                RejectReason::Lineage => {
-                    TransportError::Lineage("partner rejected: alpha0 lineage mismatch".into())
+            } => {
+                // Busy and stale-generation rejects are routine round
+                // collisions on an intact connection (the server keeps
+                // its side open, PROTOCOL.md §3) — pool it so the retry
+                // next round skips the reconnect.
+                if matches!(reason, RejectReason::Busy | RejectReason::StaleGeneration) {
+                    self.pool.checkin(peer, stream, self.opts.pool_connections);
                 }
-                RejectReason::Malformed => {
-                    TransportError::Protocol("partner rejected the push frame as malformed".into())
-                }
-            }),
-            ExchangeFrame::Push { .. } => {
-                Err(TransportError::Protocol("partner replied with a push frame".into()))
+                Err(reject_error(gen, reason))
             }
+            ExchangeFrame::Push { .. } | ExchangeFrame::DeltaPush { .. } => Err(
+                TransportError::Protocol("partner replied with a push frame".into()),
+            ),
         }
     }
 
@@ -402,95 +1033,371 @@ impl Transport for TcpTransport {
         };
         listener
             .set_nonblocking(true)
-            .context("switching the accept loop to non-blocking")?;
-        let deadline = self.deadline;
+            .context("switching the serve loop to non-blocking")?;
+        let params = ServeParams {
+            deadline: self.opts.deadline,
+            idle: self.opts.pool_idle,
+            delta: self.opts.delta_exchanges,
+            baselines: self.serve_baselines.clone(),
+        };
         let handle = std::thread::Builder::new()
-            .name("dudd-accept".into())
-            .spawn(move || accept_loop(&listener, &node, deadline))
-            .context("spawning transport accept loop")?;
+            .name("dudd-serve".into())
+            .spawn(move || serve_loop(&listener, &node, &params))
+            .context("spawning transport serve loop")?;
         Ok(Some(handle))
     }
 }
 
-/// Most inbound exchanges served concurrently; connections beyond this
-/// are dropped (the initiator counts a cancelled exchange and retries
-/// next round, §7.2), bounding thread count and memory under a
-/// connection flood.
-const MAX_INFLIGHT_SERVES: usize = 32;
+/// Map a reject frame to the initiator-side error.
+fn reject_error(gen: u64, reason: RejectReason) -> TransportError {
+    match reason {
+        RejectReason::Busy => TransportError::Busy,
+        RejectReason::StaleGeneration => TransportError::StaleGeneration(gen),
+        RejectReason::Lineage => {
+            TransportError::Lineage("partner rejected: alpha0 lineage mismatch".into())
+        }
+        RejectReason::Malformed => {
+            TransportError::Protocol("partner rejected the push frame as malformed".into())
+        }
+        RejectReason::BaselineMismatch => TransportError::Protocol(
+            "partner rejected a full frame with a baseline mismatch".into(),
+        ),
+    }
+}
 
-/// Accept loop: non-blocking accept polled against the stop flag (≤5 ms
-/// latency to shut down), one short-lived handler thread per inbound
-/// exchange, capped at [`MAX_INFLIGHT_SERVES`]. Handlers are bounded by
-/// the socket deadlines, so a stuck client can never wedge the node.
-fn accept_loop(listener: &TcpListener, node: &NodeHandle, deadline: Duration) {
-    let inflight = Arc::new(AtomicUsize::new(0));
+/// Cap on concurrently held inbound connections. Since connections now
+/// persist across exchanges, hitting the cap evicts the longest-idle
+/// connection (its owner recovers through the stale-pool retry) rather
+/// than refusing the newcomer, so the cap bounds memory
+/// (`MAX_INFLIGHT_SERVES × MAX_FRAME_BYTES` worst case against a flood
+/// of senders that actually ship bytes) without hard-limiting fleet
+/// size. Only when every held connection is mid-frame — genuine
+/// overload — is the new connection dropped (the initiator counts a
+/// cancelled exchange and retries next round, §7.2).
+const MAX_INFLIGHT_SERVES: usize = 64;
+
+/// Serve-loop configuration captured at spawn.
+struct ServeParams {
+    deadline: Duration,
+    idle: Duration,
+    delta: bool,
+    baselines: ServeBaselines,
+}
+
+/// One inbound connection's frame-assembly state.
+struct ServeConn {
+    stream: TcpStream,
+    /// Raw received bytes of the record being assembled
+    /// (`[len u32][frame]`).
+    buf: Vec<u8>,
+    /// When the current partial record started arriving.
+    started: Instant,
+    /// When the last full frame was served (idle eviction clock).
+    last_frame: Instant,
+}
+
+enum ConnState {
+    /// Keep polling; the flag reports whether this pump made progress.
+    Keep(bool),
+    Drop,
+}
+
+/// The poll-driven serve side: one thread accepts and pumps every
+/// inbound connection non-blocking (≤2 ms latency to shut down or to
+/// notice new bytes), assembling length-prefixed records incrementally
+/// and serving each completed frame. Connections persist across
+/// exchanges — the client side pools them — and are evicted on a
+/// per-frame deadline (partial record) or the idle timeout (no record).
+/// No handler threads: thread churn is zero regardless of fleet size.
+fn serve_loop(listener: &TcpListener, node: &NodeHandle, params: &ServeParams) {
+    let mut conns: Vec<ServeConn> = Vec::new();
     while !node.stopping() {
-        match listener.accept() {
-            Ok((stream, _)) => {
-                if inflight.load(Ordering::SeqCst) >= MAX_INFLIGHT_SERVES {
-                    drop(stream); // overload: cancelled exchange (§7.2)
-                    continue;
-                }
-                inflight.fetch_add(1, Ordering::SeqCst);
-                let node = node.clone();
-                let inflight = inflight.clone();
-                let spawned = std::thread::Builder::new()
-                    .name("dudd-exchange".into())
-                    .spawn(move || {
-                        serve_connection(&stream, &node, deadline);
-                        inflight.fetch_sub(1, Ordering::SeqCst);
+        let mut progress = false;
+        loop {
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    if conns.len() >= MAX_INFLIGHT_SERVES && !evict_idlest(&mut conns) {
+                        drop(stream); // genuine overload: cancelled exchange (§7.2)
+                        continue;
+                    }
+                    if stream.set_nonblocking(true).is_err() {
+                        continue;
+                    }
+                    let _ = stream.set_nodelay(true);
+                    let _ = stream.set_write_timeout(Some(params.deadline));
+                    let now = Instant::now();
+                    conns.push(ServeConn {
+                        stream,
+                        buf: Vec::new(),
+                        started: now,
+                        last_frame: now,
                     });
-                if spawned.is_err() {
-                    inflight.fetch_sub(1, Ordering::SeqCst);
+                    progress = true;
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(_) => break,
+            }
+        }
+        let mut i = 0;
+        while i < conns.len() {
+            match pump_conn(&mut conns[i], node, params) {
+                ConnState::Keep(made) => {
+                    progress |= made;
+                    i += 1;
+                }
+                ConnState::Drop => {
+                    conns.swap_remove(i);
+                    progress = true;
                 }
             }
-            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                std::thread::sleep(Duration::from_millis(5));
-            }
-            Err(_) => std::thread::sleep(Duration::from_millis(5)),
+        }
+        if !progress {
+            std::thread::sleep(Duration::from_millis(2));
         }
     }
 }
 
-/// Serve one inbound exchange on an accepted connection.
-fn serve_connection(stream: &TcpStream, node: &NodeHandle, deadline: Duration) {
-    // The listener is non-blocking; the exchange itself must not be.
-    if stream.set_nonblocking(false).is_err()
-        || stream.set_read_timeout(Some(deadline)).is_err()
-        || stream.set_write_timeout(Some(deadline)).is_err()
-    {
-        return;
+/// Make room for a new inbound connection by evicting the one idle the
+/// longest (empty buffer — not mid-frame). Returns false when every
+/// held connection is mid-frame, i.e. the node is genuinely overloaded.
+fn evict_idlest(conns: &mut Vec<ServeConn>) -> bool {
+    let victim = conns
+        .iter()
+        .enumerate()
+        .filter(|(_, c)| c.buf.is_empty())
+        .max_by_key(|(_, c)| c.last_frame.elapsed())
+        .map(|(i, _)| i);
+    match victim {
+        Some(i) => {
+            conns.swap_remove(i);
+            true
+        }
+        None => false,
     }
-    let _ = stream.set_nodelay(true);
-    let frame = match read_frame(stream) {
-        Ok(f) => f,
-        Err(_) => return,
-    };
-    let (generation, state) = match decode_exchange(&frame) {
-        Ok(ExchangeFrame::Push { generation, state }) => (generation, state),
-        // Malformed or non-push frames never touch local state (§7.2).
-        _ => {
-            let _ = write_frame(stream, &encode_exchange_reject(0, RejectReason::Malformed));
-            return;
+}
+
+/// Record-assembly state of a connection's buffer: `Err` for a hostile
+/// length, `Ok(Some(total_record_len))` once a full record is buffered.
+fn buffered_record(buf: &[u8]) -> Result<Option<usize>, ()> {
+    if buf.len() < 4 {
+        return Ok(None);
+    }
+    let len = u32::from_le_bytes(buf[..4].try_into().expect("4-byte slice")) as usize;
+    if len > MAX_FRAME_BYTES {
+        return Err(());
+    }
+    if buf.len() < 4 + len {
+        return Ok(None);
+    }
+    Ok(Some(4 + len))
+}
+
+/// Advance one connection: drain available bytes, enforce deadlines,
+/// serve at most one completed frame.
+fn pump_conn(c: &mut ServeConn, node: &NodeHandle, params: &ServeParams) -> ConnState {
+    let was_empty = c.buf.is_empty();
+    let mut chunk = [0u8; 4096];
+    let mut read_any = false;
+    loop {
+        match buffered_record(&c.buf) {
+            Err(()) => return ConnState::Drop,
+            Ok(Some(_)) => break, // serve before reading further
+            Ok(None) => {}
+        }
+        match c.stream.read(&mut chunk) {
+            Ok(0) => return ConnState::Drop, // peer closed
+            Ok(n) => {
+                c.buf.extend_from_slice(&chunk[..n]);
+                read_any = true;
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(_) => return ConnState::Drop,
+        }
+    }
+    if was_empty && read_any {
+        c.started = Instant::now();
+    }
+    let frame = match buffered_record(&c.buf) {
+        Err(()) => return ConnState::Drop,
+        Ok(None) => {
+            return if c.buf.is_empty() {
+                if c.last_frame.elapsed() > params.idle {
+                    ConnState::Drop
+                } else {
+                    ConnState::Keep(read_any)
+                }
+            } else if c.started.elapsed() > params.deadline {
+                ConnState::Drop // partial record outlived the deadline
+            } else {
+                ConnState::Keep(read_any)
+            };
+        }
+        Ok(Some(total)) => {
+            let frame = c.buf[4..total].to_vec();
+            c.buf.drain(..total);
+            frame
         }
     };
-    // The reply write runs inside the commit window: the serve-side state
-    // change lands only once the averaged reply is on the wire and rolls
-    // back when the write fails — a cancelled exchange leaves both sides
-    // at their pre-round state.
-    let served = node.serve_exchange(state, generation, |reply, gen| {
-        write_frame(stream, &encode_exchange_reply(gen, reply))
-    });
-    if let Err(reject) = served {
-        let (gen, reason) = match reject {
-            ServeReject::Busy => (0, RejectReason::Busy),
-            ServeReject::StaleGeneration(g) => (g, RejectReason::StaleGeneration),
-            ServeReject::Lineage => (0, RejectReason::Lineage),
-            // The reply write itself failed; the socket is gone.
-            ServeReject::Cancelled(_) => return,
-        };
-        let _ = write_frame(stream, &encode_exchange_reject(gen, reason));
+    c.last_frame = Instant::now();
+    c.started = c.last_frame;
+    match serve_frame(&c.stream, &frame, node, params) {
+        Ok(()) => ConnState::Keep(true),
+        Err(()) => ConnState::Drop,
     }
+}
+
+/// Serve one completed frame. The reply write runs in blocking mode with
+/// the exchange deadline — "the reply is on the wire" (accepted by the
+/// kernel) is the §7.2 commit point, exactly as in the thread-per-push
+/// design. `Err(())` drops the connection.
+///
+/// A reply write can therefore stall the (single-threaded) serve loop
+/// for up to one deadline — the commit-on-reply contract forbids
+/// abandoning a half-written reply. The stall is bounded per offender:
+/// a peer that stops draining replies times the write out, which
+/// cancels the exchange (rollback) and **drops its connection**, so a
+/// non-reading client costs at most one deadline before it must
+/// reconnect (and reconnects are capped by [`MAX_INFLIGHT_SERVES`]).
+/// In practice loopback/LAN kernels buffer dozens of ~16 KiB replies,
+/// so honest traffic never blocks here; a worker-pool or epoll serve
+/// side that removes the residual stall is a ROADMAP item.
+fn serve_frame(
+    stream: &TcpStream,
+    frame: &[u8],
+    node: &NodeHandle,
+    params: &ServeParams,
+) -> Result<(), ()> {
+    if stream.set_nonblocking(false).is_err() {
+        return Err(());
+    }
+    let result = serve_frame_blocking(stream, frame, node, params);
+    if stream.set_nonblocking(true).is_err() {
+        return Err(());
+    }
+    result
+}
+
+fn serve_frame_blocking(
+    stream: &TcpStream,
+    frame: &[u8],
+    node: &NodeHandle,
+    params: &ServeParams,
+) -> Result<(), ()> {
+    // Decode; delta pushes are reconstructed against the cached pair
+    // baseline first — a miss or mismatch answers BaselineMismatch and
+    // keeps the connection (the initiator retries full on it).
+    let (generation, incoming, reply_baseline) = match decode_exchange(frame) {
+        Ok(ExchangeFrame::Push { generation, state }) => (generation, state, None),
+        Ok(ExchangeFrame::DeltaPush { generation, delta }) => {
+            let cached = params
+                .baselines
+                .lock()
+                .expect("serve baseline cache poisoned")
+                .get(&(delta.id as u64))
+                .filter(|b| {
+                    b.generation == generation && b.fingerprint == delta.baseline_fingerprint
+                })
+                .cloned();
+            let Some(b) = cached else {
+                return write_frame(
+                    stream,
+                    &encode_exchange_reject(0, RejectReason::BaselineMismatch),
+                )
+                .map_err(|_| ());
+            };
+            match apply_delta(&b.state, &delta) {
+                Ok(state) => (generation, state, Some(b)),
+                Err(_) => {
+                    return write_frame(
+                        stream,
+                        &encode_exchange_reject(0, RejectReason::BaselineMismatch),
+                    )
+                    .map_err(|_| ())
+                }
+            }
+        }
+        // Malformed or non-push frames never touch local state (§7.2);
+        // the framing can no longer be trusted, so the connection goes.
+        _ => {
+            let _ = write_frame(stream, &encode_exchange_reject(0, RejectReason::Malformed));
+            return Err(());
+        }
+    };
+    // The reply mirrors the push: full push → full reply, delta push →
+    // delta reply (the initiator provably holds the baseline) unless the
+    // delta would not save bytes.
+    let mut committed: Option<(PeerState, u64, u64)> = None;
+    let served = node.serve_exchange(incoming, generation, |reply, gen| {
+        // The full frame is always built (it is the delta's size
+        // benchmark), so the baseline fingerprint comes free from its
+        // bytes — no separate ~16 KiB encode.
+        let full = encode_exchange_reply(gen, reply);
+        let fingerprint = exchange_frame_fingerprint(&full)
+            .expect("an encoded reply frame is longer than its header");
+        let frame = match &reply_baseline {
+            Some(b) if params.delta => match delta_payload(&b.state, b.fingerprint, reply) {
+                Some(d) if delta_wire_size(&d) < full.len() => {
+                    encode_exchange_delta_reply(gen, &d)
+                }
+                _ => full,
+            },
+            _ => full,
+        };
+        write_frame(stream, &frame)?;
+        committed = Some((reply.clone(), gen, fingerprint));
+        Ok(())
+    });
+    match served {
+        Ok(()) => {
+            if params.delta {
+                if let Some((state, gen, fingerprint)) = committed {
+                    store_serve_baseline(&params.baselines, state, gen, fingerprint);
+                }
+            }
+            Ok(())
+        }
+        Err(reject) => {
+            let (gen, reason) = match reject {
+                ServeReject::Busy => (0, RejectReason::Busy),
+                ServeReject::StaleGeneration(g) => (g, RejectReason::StaleGeneration),
+                ServeReject::Lineage => (0, RejectReason::Lineage),
+                // The reply write itself failed; the socket is gone.
+                ServeReject::Cancelled(_) => return Err(()),
+            };
+            write_frame(stream, &encode_exchange_reject(gen, reason)).map_err(|_| ())
+        }
+    }
+}
+
+/// Cache the committed averaged state as the pair baseline (serve side,
+/// keyed by initiator id). At capacity, older-generation entries go
+/// first, then the least-recently-stored same-generation entry — never
+/// the incoming one, so active partners keep their delta path even past
+/// [`MAX_SERVE_BASELINES`] total partners (a starved pair would
+/// otherwise pay delta-push → mismatch → full-push every exchange,
+/// worse than delta-off).
+fn store_serve_baseline(
+    cache: &ServeBaselines,
+    state: PeerState,
+    generation: u64,
+    fingerprint: u64,
+) {
+    let mut map = cache.lock().expect("serve baseline cache poisoned");
+    let key = state.id as u64;
+    if map.len() >= MAX_SERVE_BASELINES && !map.contains_key(&key) {
+        map.retain(|_, b| b.generation >= generation);
+        if map.len() >= MAX_SERVE_BASELINES {
+            if let Some(oldest) = map
+                .iter()
+                .min_by_key(|(_, b)| b.stored_at)
+                .map(|(&k, _)| k)
+            {
+                map.remove(&oldest);
+            }
+        }
+    }
+    map.insert(key, Baseline::of(&state, generation, fingerprint));
 }
 
 #[cfg(test)]
@@ -562,11 +1469,22 @@ mod tests {
         let mut buf: Vec<u8> = Vec::new();
         write_frame(&mut buf, b"hello").unwrap();
         assert_eq!(read_frame(&buf[..]).unwrap(), b"hello");
+        assert_eq!(read_frame_tracked(&buf[..]).unwrap(), b"hello");
 
         let mut hostile = Vec::new();
         hostile.extend_from_slice(&(u32::MAX).to_le_bytes());
         let err = read_frame(&hostile[..]).unwrap_err();
         assert_eq!(err.kind(), std::io::ErrorKind::InvalidData);
+        let (started, err) = read_frame_tracked(&hostile[..]).unwrap_err();
+        assert!(started, "the whole prefix arrived");
+        assert_eq!(err.kind(), std::io::ErrorKind::InvalidData);
+
+        // Nothing at all: zero bytes seen.
+        let (started, _) = read_frame_tracked(&[][..]).unwrap_err();
+        assert!(!started);
+        // A partial prefix still counts as "the reply started".
+        let (started, _) = read_frame_tracked(&[7u8][..]).unwrap_err();
+        assert!(started);
     }
 
     #[test]
@@ -577,6 +1495,10 @@ mod tests {
         assert!(t.supports_remote());
         assert_eq!(t.listen_addr(), None);
         assert_eq!(t.deadline(), Duration::from_millis(50));
+
+        let mut opts = TcpTransportOptions::default();
+        opts.pool_idle = Duration::ZERO;
+        assert!(TcpTransport::connect_only_with(opts).is_err());
     }
 
     #[test]
@@ -613,5 +1535,222 @@ mod tests {
             a1.sketch.positive_store().entries(),
             a2.sketch.positive_store().entries()
         );
+    }
+
+    /// A pooled connection whose peer hung up is classified
+    /// [`TransportError::StaleChannel`] (retry-eligible), leaves the
+    /// initiator untouched, and empties the pool for that peer.
+    #[test]
+    fn dead_pooled_channel_classified_stale_and_state_untouched() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let t = TcpTransport::connect_only(Duration::from_millis(300)).unwrap();
+
+        // Connect, then have the "server" close its end immediately.
+        let client = TcpStream::connect(addr).unwrap();
+        let (server_side, _) = listener.accept().unwrap();
+        drop(server_side);
+        // Give the FIN a moment to land so the failure is deterministic.
+        std::thread::sleep(Duration::from_millis(50));
+
+        let chan = RemoteChannel::new(addr, true, Box::new(client));
+        assert!(chan.reused());
+        let mut s = state(0, &[1.0, 2.0]);
+        let before = s.clone();
+        let err = t.exchange_on(chan, &mut s, 1).unwrap_err();
+        assert!(matches!(err, TransportError::StaleChannel(_)), "{err:?}");
+        assert_eq!(s.n_tilde.to_bits(), before.n_tilde.to_bits());
+        assert_eq!(
+            s.sketch.positive_store().entries(),
+            before.sketch.positive_store().entries()
+        );
+        assert_eq!(t.pooled_connections(addr), 0);
+    }
+
+    /// A *fresh* connection dying the same way is a plain Io failure —
+    /// no retry invitation, exactly one failed exchange.
+    #[test]
+    fn dead_fresh_channel_is_not_retryable() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let t = TcpTransport::connect_only(Duration::from_millis(300)).unwrap();
+        let client = TcpStream::connect(addr).unwrap();
+        let (server_side, _) = listener.accept().unwrap();
+        drop(server_side);
+        std::thread::sleep(Duration::from_millis(50));
+
+        let chan = RemoteChannel::new(addr, false, Box::new(client));
+        let mut s = state(0, &[1.0]);
+        let err = t.exchange_on(chan, &mut s, 1).unwrap_err();
+        assert!(matches!(err, TransportError::Io(_)), "{err:?}");
+    }
+
+    #[test]
+    fn pool_checkout_discards_closed_connections() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let t = TcpTransport::connect_only(Duration::from_millis(300)).unwrap();
+
+        let client = TcpStream::connect(addr).unwrap();
+        let (server_side, _) = listener.accept().unwrap();
+        t.pool.checkin(addr, client, t.opts.pool_connections);
+        assert_eq!(t.pooled_connections(addr), 1);
+
+        drop(server_side);
+        std::thread::sleep(Duration::from_millis(50));
+
+        // Checkout health-check notices the close and reports no conn.
+        assert!(t
+            .pool
+            .checkout(addr, t.opts.pool_idle, &t.stats)
+            .is_none());
+        assert_eq!(t.pool_stats().stale_discarded, 1);
+        assert_eq!(t.pooled_connections(addr), 0);
+    }
+
+    #[test]
+    fn pool_checkout_returns_healthy_connection_and_counts_reuse() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let t = TcpTransport::connect_only(Duration::from_millis(300)).unwrap();
+
+        let client = TcpStream::connect(addr).unwrap();
+        let (_server_side, _) = listener.accept().unwrap();
+        t.pool.checkin(addr, client, 2);
+        let got = t.pool.checkout(addr, t.opts.pool_idle, &t.stats);
+        assert!(got.is_some());
+        assert_eq!(t.pool_stats().reused, 1);
+        assert_eq!(t.pool_stats().stale_discarded, 0);
+    }
+
+    #[test]
+    fn pool_respects_cap_and_idle_expiry() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let t = TcpTransport::connect_only_with(TcpTransportOptions {
+            deadline: Duration::from_millis(300),
+            pool_connections: 1,
+            pool_idle: Duration::from_millis(1),
+            delta_exchanges: true,
+        })
+        .unwrap();
+
+        let mut held = Vec::new();
+        for _ in 0..2 {
+            let c = TcpStream::connect(addr).unwrap();
+            held.push(listener.accept().unwrap().0);
+            t.pool.checkin(addr, c, t.opts.pool_connections);
+        }
+        assert_eq!(t.pooled_connections(addr), 1, "cap of 1 enforced");
+
+        std::thread::sleep(Duration::from_millis(30));
+        assert!(
+            t.pool.checkout(addr, t.opts.pool_idle, &t.stats).is_none(),
+            "idle-expired connection must not be reused"
+        );
+        assert_eq!(t.pool_stats().expired, 1);
+    }
+
+    #[test]
+    fn transport_options_from_gossip_config() {
+        let mut cfg = GossipLoopConfig::default();
+        cfg.exchange_deadline_ms = 250;
+        cfg.pool_connections = 0;
+        cfg.pool_idle_ms = 5;
+        cfg.delta_exchanges = false;
+        let opts = TcpTransportOptions::from_gossip(&cfg);
+        assert_eq!(opts.deadline, Duration::from_millis(250));
+        assert_eq!(opts.pool_connections, 0);
+        assert_eq!(opts.pool_idle, Duration::from_millis(5));
+        assert!(!opts.delta_exchanges);
+    }
+
+    #[test]
+    fn evict_idlest_prefers_longest_idle_and_spares_mid_frame() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let mut make = |busy: bool, idle_ms: u64| -> ServeConn {
+            let _client = TcpStream::connect(addr).unwrap();
+            let (stream, _) = listener.accept().unwrap();
+            let now = Instant::now();
+            ServeConn {
+                stream,
+                buf: if busy { vec![1] } else { Vec::new() },
+                started: now,
+                last_frame: now - Duration::from_millis(idle_ms),
+            }
+        };
+        let mut conns = vec![make(false, 50), make(true, 500), make(false, 200)];
+        assert!(evict_idlest(&mut conns), "an idle connection exists");
+        assert_eq!(conns.len(), 2);
+        assert!(
+            conns.iter().any(|c| !c.buf.is_empty()),
+            "the mid-frame connection must survive"
+        );
+        assert!(evict_idlest(&mut conns), "one idle connection left");
+        assert!(
+            !evict_idlest(&mut conns),
+            "all remaining connections are mid-frame: genuine overload"
+        );
+        assert_eq!(conns.len(), 1);
+    }
+
+    #[test]
+    fn serve_baseline_cache_bounded_with_lru_eviction() {
+        let cache: ServeBaselines = Arc::new(Mutex::new(HashMap::new()));
+        for id in 0..MAX_SERVE_BASELINES + 10 {
+            let st = state(id, &[1.0]);
+            let fp = peer_state_fingerprint(&st);
+            store_serve_baseline(&cache, st, 1, fp);
+        }
+        {
+            let map = cache.lock().unwrap();
+            assert!(map.len() <= MAX_SERVE_BASELINES);
+            // The most recent partner is cached (LRU evicted an older
+            // one) — an active pair past the cap must keep its delta
+            // path rather than degrade to mismatch-then-full forever.
+            let newest = (MAX_SERVE_BASELINES + 9) as u64;
+            assert!(map.contains_key(&newest), "newest partner not cached");
+            // The 10 evictions all hit the earliest-stored cohort.
+            assert!(
+                (0..10u64).any(|id| !map.contains_key(&id)),
+                "LRU eviction should have removed early partners"
+            );
+        }
+        // A newer generation evicts the old entries instead of starving.
+        let st = state(3, &[2.0]);
+        let fp = peer_state_fingerprint(&st);
+        store_serve_baseline(&cache, st, 2, fp);
+        let map = cache.lock().unwrap();
+        assert_eq!(map.get(&3).unwrap().generation, 2);
+    }
+
+    /// A `Busy` reject is a routine round collision on an intact
+    /// connection: the socket must go back to the pool, not pay a
+    /// reconnect next round.
+    #[test]
+    fn busy_reject_keeps_the_connection_pooled() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = std::thread::spawn(move || {
+            let (s, _) = listener.accept().unwrap();
+            let _push = read_frame(&s).unwrap();
+            write_frame(&s, &encode_exchange_reject(0, RejectReason::Busy)).unwrap();
+            // Hold the socket open long enough for the checkin.
+            std::thread::sleep(Duration::from_millis(200));
+            drop(s);
+        });
+        let t = TcpTransport::connect_only(Duration::from_millis(1_000)).unwrap();
+        let mut st = state(0, &[1.0, 2.0]);
+        let before = st.clone();
+        let err = t.exchange_remote(&mut st, 1, addr).unwrap_err();
+        assert!(matches!(err, TransportError::Busy), "{err:?}");
+        assert_eq!(st.n_tilde.to_bits(), before.n_tilde.to_bits());
+        assert_eq!(
+            t.pooled_connections(addr),
+            1,
+            "busy reject must return the connection to the pool"
+        );
+        server.join().unwrap();
     }
 }

@@ -23,10 +23,36 @@
 //! ```
 //!
 //! where `kind` selects [`ExchangeKind`] and the payload is a peer-state
-//! frame (`Push`/`Reply`) or a one-byte [`RejectReason`] (`Reject`).
-//! Every decoder rejects bad magic, unknown versions/kinds, truncation at
-//! any offset, and length fields larger than the remaining buffer (so a
-//! hostile frame can never trigger a huge allocation).
+//! frame (`Push`/`Reply`), a **delta** against a cached baseline
+//! (`DeltaPush`/`DeltaReply` — see below), or a one-byte [`RejectReason`]
+//! (`Reject`). Every decoder rejects bad magic, unknown versions/kinds,
+//! truncation at any offset, and length fields larger than the remaining
+//! buffer (so a hostile frame can never trigger a huge allocation).
+//! `docs/PROTOCOL.md` is the normative spec of the whole exchange
+//! protocol; CI greps this file against its frame-kind table.
+//!
+//! # Delta frames
+//!
+//! A completed push–pull leaves **both** partners holding the identical
+//! averaged state, so consecutive exchanges between the same pair can
+//! ship only what changed since that shared state — the *baseline*. A
+//! delta frame carries the sender's scalars in full plus `(index,
+//! counter)` **set** operations against the baseline's bucket stores
+//! (`counter = 0` removes a bucket); set — not add — semantics keep the
+//! reconstruction bit-for-bit exact under floating-point counters.
+//! Near convergence almost no buckets change, so a delta frame is a few
+//! dozen bytes where a full frame is ~16 KiB at m = 1024.
+//!
+//! Correct application needs both sides to agree on the baseline
+//! *exactly*, so the frame names it by a 64-bit FNV-1a fingerprint of
+//! its canonical peer-state encoding ([`peer_state_fingerprint`]); a
+//! receiver whose cached baseline is missing, from another restart
+//! generation, or fingerprint-mismatched answers
+//! [`RejectReason::BaselineMismatch`] and the sender falls back to a
+//! full frame. Collapse depth may have advanced since the baseline was
+//! cached; the frame carries the sender's current depth and both sides
+//! align their baseline copy to it (deterministically) before
+//! diffing/applying, so lineage stays exact.
 
 use super::{SketchError, Store, UddSketch};
 use crate::gossip::PeerState;
@@ -216,7 +242,8 @@ pub fn decode_peer_state(buf: &[u8]) -> Result<PeerState, CodecError> {
 }
 
 /// Message kinds of the push–pull exchange protocol (the `kind` byte of
-/// the frame header).
+/// the frame header). The numeric values are normative (wire bytes);
+/// `docs/PROTOCOL.md` carries the same table and CI checks they agree.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ExchangeKind {
     /// Initiator → partner: the initiator's framed pre-round state.
@@ -226,6 +253,12 @@ pub enum ExchangeKind {
     /// Partner → initiator: exchange refused; both sides keep their
     /// pre-round state (§7.2 cancelled exchange).
     Reject = 3,
+    /// Initiator → partner: the initiator's pre-round state as set-ops
+    /// against the pair's cached baseline (see the module docs).
+    DeltaPush = 4,
+    /// Partner → initiator: the averaged state as set-ops against the
+    /// same baseline the push named.
+    DeltaReply = 5,
 }
 
 /// Why a partner refused an inbound exchange.
@@ -240,6 +273,10 @@ pub enum RejectReason {
     Lineage,
     /// The push frame failed to decode.
     Malformed,
+    /// A delta push named a baseline the partner does not hold (missing,
+    /// older generation, or fingerprint mismatch); the sender retries
+    /// with a full frame.
+    BaselineMismatch,
 }
 
 impl RejectReason {
@@ -249,6 +286,7 @@ impl RejectReason {
             RejectReason::StaleGeneration => 2,
             RejectReason::Lineage => 3,
             RejectReason::Malformed => 4,
+            RejectReason::BaselineMismatch => 5,
         }
     }
 
@@ -258,6 +296,7 @@ impl RejectReason {
             2 => RejectReason::StaleGeneration,
             3 => RejectReason::Lineage,
             4 => RejectReason::Malformed,
+            5 => RejectReason::BaselineMismatch,
             other => {
                 return Err(CodecError::BadParams(format!(
                     "unknown reject reason {other}"
@@ -293,6 +332,232 @@ pub enum ExchangeFrame {
         /// Why the exchange was refused.
         reason: RejectReason,
     },
+    /// The initiator's pre-round state as a delta against the pair's
+    /// cached baseline.
+    DeltaPush {
+        /// Initiator's restart generation.
+        generation: u64,
+        /// The delta payload.
+        delta: DeltaPayload,
+    },
+    /// The averaged state as a delta against the same baseline.
+    DeltaReply {
+        /// The serving node's restart generation (equals the push's
+        /// after a successful exchange).
+        generation: u64,
+        /// The delta payload.
+        delta: DeltaPayload,
+    },
+}
+
+/// Body of a [`ExchangeKind::DeltaPush`]/[`ExchangeKind::DeltaReply`]
+/// frame: the sender's scalars in full plus bucket **set** operations
+/// against a baseline both sides cached after their last completed
+/// exchange (see the module docs).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DeltaPayload {
+    /// FNV-1a fingerprint of the baseline's canonical peer-state frame
+    /// ([`peer_state_fingerprint`]); the receiver refuses the delta
+    /// ([`RejectReason::BaselineMismatch`]) when its cached baseline's
+    /// fingerprint differs.
+    pub baseline_fingerprint: u64,
+    /// The sender's current collapse depth (≥ the baseline's — both
+    /// sides align the baseline to it before diffing/applying).
+    pub collapses: u32,
+    /// The sender's zero-bucket weight (shipped in full — one f64).
+    pub zero_weight: f64,
+    /// The sender's peer id (the reply echoes the initiator's).
+    pub id: usize,
+    /// The sender's `Ñ` scalar, in full.
+    pub n_tilde: f64,
+    /// The sender's `q̃` scalar, in full.
+    pub q_tilde: f64,
+    /// Positive-store set ops: `(index, counter)` pairs in ascending
+    /// index order; a counter of exactly `0.0` removes the bucket.
+    pub pos: Vec<(i64, f64)>,
+    /// Negative-store set ops, same convention.
+    pub neg: Vec<(i64, f64)>,
+}
+
+impl DeltaPayload {
+    /// Total buckets this delta touches (diff cardinality).
+    pub fn changed_buckets(&self) -> usize {
+        self.pos.len() + self.neg.len()
+    }
+}
+
+/// 64-bit FNV-1a over a byte string (baseline fingerprints).
+fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Fingerprint a peer state by hashing its canonical wire frame —
+/// bit-identical states (and only those) agree, so two nodes that cached
+/// the averaged state of the same completed exchange always match.
+pub fn peer_state_fingerprint(s: &PeerState) -> u64 {
+    fnv1a64(&encode_peer_state(s))
+}
+
+/// [`peer_state_fingerprint`] computed from an already-encoded **full**
+/// exchange frame (`Push`/`Reply`): the bytes after the 14-byte header
+/// are exactly the state's canonical encoding, so callers that hold the
+/// frame skip a ~16 KiB re-encode. Returns `None` for a buffer too
+/// short to be a full frame.
+pub fn exchange_frame_fingerprint(frame: &[u8]) -> Option<u64> {
+    if frame.len() <= 14 {
+        return None;
+    }
+    Some(fnv1a64(&frame[14..]))
+}
+
+/// Diff two sorted entry lists into set ops: `(i, c)` where `cur` has a
+/// new or changed counter, `(i, 0.0)` where `base` has a bucket `cur`
+/// dropped. Bit-level counter comparison, so applying the result
+/// reconstructs `cur` exactly.
+fn diff_entries(base: &[(i64, f64)], cur: &[(i64, f64)]) -> Vec<(i64, f64)> {
+    let mut out = Vec::new();
+    let (mut bi, mut ci) = (0usize, 0usize);
+    while bi < base.len() || ci < cur.len() {
+        match (base.get(bi), cur.get(ci)) {
+            (Some(&(ib, _)), Some(&(ic, cc))) if ib == ic => {
+                if base[bi].1.to_bits() != cc.to_bits() {
+                    out.push((ic, cc));
+                }
+                bi += 1;
+                ci += 1;
+            }
+            (Some(&(ib, _)), Some(&(ic, _))) if ib < ic => {
+                out.push((ib, 0.0));
+                bi += 1;
+            }
+            (_, Some(&(ic, cc))) => {
+                out.push((ic, cc));
+                ci += 1;
+            }
+            (Some(&(ib, _)), None) => {
+                out.push((ib, 0.0));
+                bi += 1;
+            }
+            (None, None) => unreachable!("loop condition"),
+        }
+    }
+    out
+}
+
+/// Apply set ops to a sorted entry list (two-pointer merge; delta wins,
+/// zero counters remove).
+fn apply_entry_delta(base: &[(i64, f64)], delta: &[(i64, f64)]) -> Vec<(i64, f64)> {
+    let mut out = Vec::with_capacity(base.len() + delta.len());
+    let (mut bi, mut di) = (0usize, 0usize);
+    while bi < base.len() || di < delta.len() {
+        match (base.get(bi), delta.get(di)) {
+            (Some(&(ib, cb)), Some(&(id, _))) if ib < id => {
+                out.push((ib, cb));
+                bi += 1;
+            }
+            (Some(&(ib, _)), Some(&(id, cd))) if ib == id => {
+                if cd != 0.0 {
+                    out.push((id, cd));
+                }
+                bi += 1;
+                di += 1;
+            }
+            (_, Some(&(id, cd))) => {
+                if cd != 0.0 {
+                    out.push((id, cd));
+                }
+                di += 1;
+            }
+            (Some(&(ib, cb)), None) => {
+                out.push((ib, cb));
+                bi += 1;
+            }
+            (None, None) => unreachable!("loop condition"),
+        }
+    }
+    out
+}
+
+/// Build the delta that turns `baseline` into `current`, or `None` when
+/// no exact delta exists (different α₀ lineage, or a collapse depth that
+/// went *backwards* — impossible within one restart generation, so a
+/// `None` here means the caller's baseline is stale and a full frame
+/// must be sent). `fingerprint` is the cached
+/// [`peer_state_fingerprint`] of `baseline` (cached so the ~16 KiB
+/// re-encode is not paid per exchange).
+pub fn delta_payload(
+    baseline: &PeerState,
+    fingerprint: u64,
+    current: &PeerState,
+) -> Option<DeltaPayload> {
+    if !current
+        .sketch
+        .mapping()
+        .same_lineage(baseline.sketch.mapping())
+        || current.sketch.collapses() < baseline.sketch.collapses()
+        || current.sketch.max_buckets() != baseline.sketch.max_buckets()
+    {
+        return None;
+    }
+    let mut base = baseline.sketch.clone();
+    base.align_to_collapses(current.sketch.collapses());
+    Some(DeltaPayload {
+        baseline_fingerprint: fingerprint,
+        collapses: current.sketch.collapses(),
+        zero_weight: current.sketch.zero_weight(),
+        id: current.id,
+        n_tilde: current.n_tilde,
+        q_tilde: current.q_tilde,
+        pos: diff_entries(
+            &base.positive_store().entries(),
+            &current.sketch.positive_store().entries(),
+        ),
+        neg: diff_entries(
+            &base.negative_store().entries(),
+            &current.sketch.negative_store().entries(),
+        ),
+    })
+}
+
+/// Reconstruct the sender's full state from its delta and the shared
+/// baseline. The caller must already have verified
+/// `delta.baseline_fingerprint` against its cached fingerprint — this
+/// function only checks structural applicability (collapse depth).
+/// Reconstruction is bit-exact: set semantics on bit-compared counters,
+/// deterministic collapse alignment, scalars shipped in full.
+pub fn apply_delta(baseline: &PeerState, delta: &DeltaPayload) -> Result<PeerState, CodecError> {
+    if delta.collapses < baseline.sketch.collapses() {
+        return Err(CodecError::BadParams(format!(
+            "delta collapse depth {} behind the baseline's {}",
+            delta.collapses,
+            baseline.sketch.collapses()
+        )));
+    }
+    let mut sketch = baseline.sketch.clone();
+    sketch.align_to_collapses(delta.collapses);
+    let pos = apply_entry_delta(&sketch.positive_store().entries(), &delta.pos);
+    let neg = apply_entry_delta(&sketch.negative_store().entries(), &delta.neg);
+    sketch.load_raw(delta.zero_weight, &pos, &neg);
+    Ok(PeerState {
+        id: delta.id,
+        sketch,
+        n_tilde: delta.n_tilde,
+        q_tilde: delta.q_tilde,
+    })
+}
+
+/// Wire size of a delta frame without materializing it (the sender picks
+/// delta vs full by comparing this with `14 +`
+/// [`peer_state_wire_size`]).
+pub fn delta_wire_size(delta: &DeltaPayload) -> usize {
+    // header(14) + fingerprint(8) + collapses(4) + zero(8) + id(8)
+    // + n(8) + q(8) + 2 × len(8) + 16/entry
+    74 + 16 * delta.changed_buckets()
 }
 
 fn exchange_header(kind: ExchangeKind, generation: u64, out: &mut Vec<u8>) {
@@ -326,6 +591,64 @@ pub fn encode_exchange_reject(generation: u64, reason: RejectReason) -> Vec<u8> 
     out
 }
 
+fn encode_delta_frame(kind: ExchangeKind, generation: u64, delta: &DeltaPayload) -> Vec<u8> {
+    let mut out = Vec::with_capacity(delta_wire_size(delta));
+    exchange_header(kind, generation, &mut out);
+    out.extend_from_slice(&delta.baseline_fingerprint.to_le_bytes());
+    out.extend_from_slice(&delta.collapses.to_le_bytes());
+    out.extend_from_slice(&delta.zero_weight.to_le_bytes());
+    out.extend_from_slice(&(delta.id as u64).to_le_bytes());
+    out.extend_from_slice(&delta.n_tilde.to_le_bytes());
+    out.extend_from_slice(&delta.q_tilde.to_le_bytes());
+    for ops in [&delta.pos, &delta.neg] {
+        out.extend_from_slice(&(ops.len() as u64).to_le_bytes());
+        for &(i, c) in ops {
+            out.extend_from_slice(&i.to_le_bytes());
+            out.extend_from_slice(&c.to_le_bytes());
+        }
+    }
+    out
+}
+
+/// Encode a delta push frame (initiator's state vs the pair baseline).
+pub fn encode_exchange_delta_push(generation: u64, delta: &DeltaPayload) -> Vec<u8> {
+    encode_delta_frame(ExchangeKind::DeltaPush, generation, delta)
+}
+
+/// Encode a delta reply frame (averaged state vs the same baseline).
+pub fn encode_exchange_delta_reply(generation: u64, delta: &DeltaPayload) -> Vec<u8> {
+    encode_delta_frame(ExchangeKind::DeltaReply, generation, delta)
+}
+
+fn decode_delta_from(r: &mut Reader<'_>) -> Result<DeltaPayload, CodecError> {
+    let baseline_fingerprint = r.u64()?;
+    let collapses = r.u32()?;
+    let zero_weight = r.f64()?;
+    let id = r.u64()? as usize;
+    let n_tilde = r.f64()?;
+    let q_tilde = r.f64()?;
+    let pos_len = r.len_field(16)?;
+    let mut pos = Vec::with_capacity(pos_len);
+    for _ in 0..pos_len {
+        pos.push((r.i64()?, r.f64()?));
+    }
+    let neg_len = r.len_field(16)?;
+    let mut neg = Vec::with_capacity(neg_len);
+    for _ in 0..neg_len {
+        neg.push((r.i64()?, r.f64()?));
+    }
+    Ok(DeltaPayload {
+        baseline_fingerprint,
+        collapses,
+        zero_weight,
+        id,
+        n_tilde,
+        q_tilde,
+        pos,
+        neg,
+    })
+}
+
 /// Decode any exchange frame, validating magic, version, and kind.
 pub fn decode_exchange(buf: &[u8]) -> Result<ExchangeFrame, CodecError> {
     let mut r = Reader::new(buf);
@@ -350,6 +673,14 @@ pub fn decode_exchange(buf: &[u8]) -> Result<ExchangeFrame, CodecError> {
         3 => Ok(ExchangeFrame::Reject {
             generation,
             reason: RejectReason::from_code(r.u8()?)?,
+        }),
+        4 => Ok(ExchangeFrame::DeltaPush {
+            generation,
+            delta: decode_delta_from(&mut r)?,
+        }),
+        5 => Ok(ExchangeFrame::DeltaReply {
+            generation,
+            delta: decode_delta_from(&mut r)?,
         }),
         other => Err(CodecError::BadKind(other)),
     }
@@ -490,6 +821,7 @@ mod tests {
             RejectReason::StaleGeneration,
             RejectReason::Lineage,
             RejectReason::Malformed,
+            RejectReason::BaselineMismatch,
         ] {
             let buf = encode_exchange_reject(42, reason);
             match decode_exchange(&buf).unwrap() {
@@ -528,6 +860,153 @@ mod tests {
         for cut in 0..good.len() {
             assert!(decode_exchange(&good[..cut]).is_err(), "cut {cut}");
         }
+    }
+
+    fn gossip_state(id: usize, values: &[f64]) -> PeerState {
+        PeerState::init(id, values, 0.01, 64).unwrap()
+    }
+
+    fn assert_states_bit_equal(a: &PeerState, b: &PeerState) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(a.n_tilde.to_bits(), b.n_tilde.to_bits());
+        assert_eq!(a.q_tilde.to_bits(), b.q_tilde.to_bits());
+        assert_eq!(a.sketch.collapses(), b.sketch.collapses());
+        assert_eq!(a.sketch.zero_weight().to_bits(), b.sketch.zero_weight().to_bits());
+        assert_eq!(
+            a.sketch.positive_store().entries(),
+            b.sketch.positive_store().entries()
+        );
+        assert_eq!(
+            a.sketch.negative_store().entries(),
+            b.sketch.negative_store().entries()
+        );
+    }
+
+    #[test]
+    fn delta_roundtrip_reconstructs_bit_for_bit() {
+        let baseline = gossip_state(3, &[1.0, 2.0, 3.0, 50.0, -4.0, 0.0]);
+        let fp = peer_state_fingerprint(&baseline);
+
+        // Evolve a copy the way gossip does: average with another state.
+        let mut current = baseline.clone();
+        let mut other = gossip_state(9, &[7.0, 8.0, 900.0]);
+        PeerState::exchange(&mut current, &mut other).unwrap();
+
+        let delta = delta_payload(&baseline, fp, &current).expect("same lineage");
+        assert_eq!(delta.baseline_fingerprint, fp);
+        let frame = encode_exchange_delta_push(11, &delta);
+        assert_eq!(frame.len(), delta_wire_size(&delta));
+        let decoded = match decode_exchange(&frame).unwrap() {
+            ExchangeFrame::DeltaPush { generation, delta } => {
+                assert_eq!(generation, 11);
+                delta
+            }
+            other => panic!("wrong frame: {other:?}"),
+        };
+        assert_eq!(decoded, delta);
+        let rebuilt = apply_delta(&baseline, &decoded).unwrap();
+        assert_states_bit_equal(&rebuilt, &current);
+        assert_eq!(
+            peer_state_fingerprint(&rebuilt),
+            peer_state_fingerprint(&current)
+        );
+    }
+
+    #[test]
+    fn delta_handles_removed_buckets_and_identity() {
+        // Identity delta: zero set ops, reconstruction exact.
+        let s = gossip_state(0, &[1.0, 10.0, 100.0]);
+        let fp = peer_state_fingerprint(&s);
+        let delta = delta_payload(&s, fp, &s).unwrap();
+        assert_eq!(delta.changed_buckets(), 0);
+        assert_states_bit_equal(&apply_delta(&s, &delta).unwrap(), &s);
+
+        // A state that *dropped* buckets (reseed-free shrink is synthetic,
+        // but the wire format must support counter-to-zero set ops).
+        let mut shrunk = s.clone();
+        let entries = shrunk.sketch.positive_store().entries();
+        shrunk
+            .sketch
+            .load_raw(0.0, &entries[..entries.len() - 1], &[]);
+        let delta = delta_payload(&s, fp, &shrunk).unwrap();
+        assert!(delta.pos.iter().any(|&(_, c)| c == 0.0), "{delta:?}");
+        let rebuilt = apply_delta(&s, &delta).unwrap();
+        assert_states_bit_equal(&rebuilt, &shrunk);
+    }
+
+    #[test]
+    fn delta_reply_roundtrips_and_rejects_collapse_regression() {
+        let baseline = gossip_state(1, &[5.0, 6.0]);
+        let fp = peer_state_fingerprint(&baseline);
+        let delta = delta_payload(&baseline, fp, &baseline).unwrap();
+        let frame = encode_exchange_delta_reply(4, &delta);
+        assert!(matches!(
+            decode_exchange(&frame).unwrap(),
+            ExchangeFrame::DeltaReply { generation: 4, .. }
+        ));
+
+        // A delta whose collapse depth is behind the baseline cannot apply.
+        let mut deep = baseline.clone();
+        deep.sketch.force_collapse();
+        let stale = delta_payload(&baseline, fp, &baseline).unwrap();
+        assert!(matches!(
+            apply_delta(&deep, &stale).unwrap_err(),
+            CodecError::BadParams(_)
+        ));
+        // And the sender side refuses to build one against a deeper base.
+        assert!(delta_payload(&deep, fp, &baseline).is_none());
+    }
+
+    #[test]
+    fn delta_aligns_baseline_across_collapses() {
+        // Current state collapsed past the baseline: the delta carries the
+        // new depth and application re-aligns deterministically.
+        let baseline = gossip_state(2, &[1.0, 2.0, 4.0, 8.0, 16.0, 32.0]);
+        let fp = peer_state_fingerprint(&baseline);
+        let mut current = baseline.clone();
+        current.sketch.force_collapse();
+        current.n_tilde += 1.0;
+        let delta = delta_payload(&baseline, fp, &current).unwrap();
+        assert_eq!(delta.collapses, current.sketch.collapses());
+        let rebuilt = apply_delta(&baseline, &delta).unwrap();
+        assert_states_bit_equal(&rebuilt, &current);
+    }
+
+    #[test]
+    fn delta_frame_truncation_detected_everywhere() {
+        let baseline = gossip_state(5, &[1.0, 2.0, 3.0]);
+        let fp = peer_state_fingerprint(&baseline);
+        let mut current = baseline.clone();
+        let mut other = gossip_state(6, &[40.0, 50.0]);
+        PeerState::exchange(&mut current, &mut other).unwrap();
+        let frame =
+            encode_exchange_delta_push(1, &delta_payload(&baseline, fp, &current).unwrap());
+        for cut in 0..frame.len() {
+            assert!(decode_exchange(&frame[..cut]).is_err(), "cut {cut}");
+        }
+        assert!(decode_exchange(&frame).is_ok());
+    }
+
+    #[test]
+    fn fingerprint_tracks_bit_level_changes() {
+        let a = gossip_state(0, &[1.0, 2.0]);
+        let b = gossip_state(0, &[1.0, 2.0]);
+        assert_eq!(peer_state_fingerprint(&a), peer_state_fingerprint(&b));
+        let mut c = b.clone();
+        c.n_tilde += 1e-9;
+        assert_ne!(peer_state_fingerprint(&a), peer_state_fingerprint(&c));
+    }
+
+    #[test]
+    fn frame_fingerprint_matches_state_fingerprint() {
+        let st = gossip_state(3, &[1.0, 2.0, 3.0]);
+        for frame in [encode_exchange_push(9, &st), encode_exchange_reply(9, &st)] {
+            assert_eq!(
+                exchange_frame_fingerprint(&frame),
+                Some(peer_state_fingerprint(&st))
+            );
+        }
+        assert_eq!(exchange_frame_fingerprint(&[0u8; 14]), None);
     }
 
     #[test]

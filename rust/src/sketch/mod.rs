@@ -19,9 +19,11 @@ mod store;
 mod uddsketch;
 
 pub use codec::{
-    decode_exchange, decode_peer_state, decode_sketch, encode_exchange_push,
-    encode_exchange_reject, encode_exchange_reply, encode_peer_state, encode_sketch,
-    CodecError, ExchangeFrame, ExchangeKind, RejectReason,
+    apply_delta, decode_exchange, decode_peer_state, decode_sketch, delta_payload,
+    delta_wire_size, encode_exchange_delta_push, encode_exchange_delta_reply,
+    encode_exchange_push, encode_exchange_reject, encode_exchange_reply, encode_peer_state,
+    encode_sketch, exchange_frame_fingerprint, peer_state_fingerprint, CodecError,
+    DeltaPayload, ExchangeFrame, ExchangeKind, RejectReason,
 };
 pub use ddsketch::DdSketch;
 pub use exact::ExactQuantiles;

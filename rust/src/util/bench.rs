@@ -148,13 +148,47 @@ impl Bencher {
         &self.results
     }
 
-    /// Print the closing summary line expected in bench logs.
+    /// Serialize the collected results as a small hand-rolled JSON
+    /// document (serde is unavailable offline) — the format of the
+    /// `BENCH_*.json` baselines checked into the repository.
+    pub fn to_json(&self, suite: &str) -> String {
+        let mut out = String::from("{\n");
+        out.push_str(&format!("  \"suite\": \"{suite}\",\n"));
+        out.push_str(&format!("  \"samples\": {},\n", self.samples));
+        out.push_str("  \"cases\": [\n");
+        for (k, r) in self.results.iter().enumerate() {
+            out.push_str(&format!(
+                "    {{\"name\": \"{}\", \"median_s\": {:e}, \"mean_s\": {:e}, \
+                 \"p10_s\": {:e}, \"p90_s\": {:e}, \"items_per_iter\": {}}}{}\n",
+                r.name,
+                r.median_s,
+                r.mean_s,
+                r.p10_s,
+                r.p90_s,
+                r.items_per_iter,
+                if k + 1 < self.results.len() { "," } else { "" }
+            ));
+        }
+        out.push_str("  ]\n}\n");
+        out
+    }
+
+    /// Print the closing summary line expected in bench logs; when the
+    /// `DUDD_BENCH_JSON` environment variable names a path, also record
+    /// the results there as JSON (how `BENCH_transport.json` & co. are
+    /// refreshed).
     pub fn finish(&self, suite: &str) {
         println!(
             "suite {suite}: {} case(s), samples={} (set DUDD_BENCH_SAMPLES to change)",
             self.results.len(),
             self.samples
         );
+        if let Ok(path) = std::env::var("DUDD_BENCH_JSON") {
+            match std::fs::write(&path, self.to_json(suite)) {
+                Ok(()) => println!("suite {suite}: json baseline written to {path}"),
+                Err(e) => eprintln!("suite {suite}: json baseline write failed: {e}"),
+            }
+        }
     }
 }
 
@@ -202,6 +236,25 @@ mod tests {
         assert!(b.results().is_empty());
         b.case("does-match-me", 0, || {});
         assert_eq!(b.results().len(), 1);
+    }
+
+    #[test]
+    fn json_serialization_is_well_formed() {
+        let mut b = Bencher {
+            filter: None,
+            warmup: 0,
+            samples: 2,
+            results: Vec::new(),
+        };
+        b.case("alpha", 10, || {});
+        b.case("beta", 0, || {});
+        let json = b.to_json("suite-x");
+        assert!(json.contains("\"suite\": \"suite-x\""), "{json}");
+        assert!(json.contains("\"name\": \"alpha\""), "{json}");
+        assert!(json.contains("\"items_per_iter\": 10"), "{json}");
+        // Exactly one separating comma between the two case objects.
+        assert_eq!(json.matches("},\n").count(), 1, "{json}");
+        assert!(json.trim_end().ends_with('}'), "{json}");
     }
 
     #[test]

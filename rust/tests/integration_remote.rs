@@ -1,17 +1,24 @@
-//! Integration: the transport-trait redesign (ISSUE 3).
+//! Integration: the transport-trait redesign (ISSUE 3) and the hot-path
+//! overhaul (ISSUE 4: connection reuse, per-member locking, delta
+//! exchanges).
 //!
 //! Acceptance:
-//! * a fleet of ≥ 4 real nodes gossiping over **loopback TCP** — accept
-//!   loop per node, length-prefixed codec frames, per-exchange deadlines
-//!   — converges to the sequential union-stream sketch within α while
-//!   ingest continues;
+//! * a fleet of ≥ 4 real nodes gossiping over **loopback TCP** — one
+//!   poll-driven serve loop per node, length-prefixed codec frames,
+//!   per-exchange deadlines, **connection pooling and delta frames
+//!   enabled** — converges to the sequential union-stream sketch within
+//!   α while ingest continues;
 //! * the refactored `InProcess` transport reproduces PR 2's `GlobalView`
 //!   results **exactly** (old-vs-new parity against the simulation
 //!   engine's `fan_out_round`, driven with the loop's own rng
 //!   discipline);
 //! * cancelled exchanges (timeouts, malformed frames) leave both sides'
 //!   q̃ mass and averaged state bit-for-bit at their pre-round values
-//!   (§7.2).
+//!   (§7.2);
+//! * a pooled connection gone stale recovers via a fresh-connect retry
+//!   **without** counting a failed exchange (ISSUE 4 bugfix), and a
+//!   stale delta baseline downgrades to full frames on the same
+//!   connection, leaving the server's state untouched.
 
 // Plain-data configs are mutated after `default()` on purpose (see lib.rs).
 #![allow(clippy::field_reassign_with_default)]
@@ -24,6 +31,7 @@ use duddsketch::prelude::*;
 use duddsketch::rng::default_rng;
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::Arc;
 use std::time::Duration;
 
 const ACCEPT_QS: [f64; 3] = [0.5, 0.9, 0.99];
@@ -38,21 +46,26 @@ fn service_cfg() -> ServiceConfig {
 
 /// Bind `n` transports first (address book before any loop starts), then
 /// build the fleet: node k's own service at global member index k,
-/// everyone else a remote peer.
-fn tcp_fleet(n: usize, cfg: &ServiceConfig) -> Vec<Node> {
-    let deadline = Duration::from_millis(cfg.gossip.exchange_deadline_ms);
-    let transports: Vec<TcpTransport> = (0..n)
-        .map(|_| TcpTransport::bind("127.0.0.1:0", deadline).unwrap())
+/// everyone else a remote peer. Pooling and delta exchanges follow the
+/// config's gossip knobs (both on by default). The transports are
+/// returned alongside the nodes so tests can read pool statistics.
+fn tcp_fleet(n: usize, cfg: &ServiceConfig) -> (Vec<Node>, Vec<Arc<TcpTransport>>) {
+    let opts = TcpTransportOptions::from_gossip(&cfg.gossip);
+    let transports: Vec<Arc<TcpTransport>> = (0..n)
+        .map(|_| Arc::new(TcpTransport::bind_with("127.0.0.1:0", opts.clone()).unwrap()))
         .collect();
     let addrs: Vec<SocketAddr> = transports
         .iter()
         .map(|t| t.listen_addr().unwrap())
         .collect();
-    transports
-        .into_iter()
+    let nodes = transports
+        .iter()
         .enumerate()
         .map(|(k, t)| {
-            let mut b = Node::builder().config(cfg.clone()).self_index(k).transport(t);
+            let mut b = Node::builder()
+                .config(cfg.clone())
+                .self_index(k)
+                .transport_shared(t.clone());
             for (j, &addr) in addrs.iter().enumerate() {
                 if j != k {
                     b = b.remote_peer(addr);
@@ -60,7 +73,8 @@ fn tcp_fleet(n: usize, cfg: &ServiceConfig) -> Vec<Node> {
             }
             b.build().unwrap()
         })
-        .collect()
+        .collect();
+    (nodes, transports)
 }
 
 /// Sweep all nodes until every node's view is converged on the expected
@@ -116,11 +130,13 @@ fn four_tcp_nodes_converge_to_union_while_ingesting() {
     }
 
     let cfg = service_cfg();
-    let fleet = tcp_fleet(nodes, &cfg);
+    assert!(cfg.gossip.delta_exchanges, "delta frames on by default");
+    assert!(cfg.gossip.pool_connections > 0, "pooling on by default");
+    let (fleet, transports) = tcp_fleet(nodes, &cfg);
     for (k, node) in fleet.iter().enumerate() {
         assert!(
             node.listen_addr().is_some(),
-            "node {k} must serve an accept loop"
+            "node {k} must run a serve loop"
         );
         assert_eq!(node.self_member(), k);
         assert_eq!(node.gossip().unwrap().members(), nodes);
@@ -177,6 +193,9 @@ fn four_tcp_nodes_converge_to_union_while_ingesting() {
             );
         }
     }
+    // The hot-path machinery actually engaged across the run.
+    let reused: usize = transports.iter().map(|t| t.pool_stats().reused).sum();
+    assert!(reused > 0, "no exchange ever reused a pooled connection");
     for node in fleet {
         node.shutdown();
     }
@@ -487,4 +506,238 @@ fn two_tcp_nodes_sync_generations_and_average_exactly() {
     drop(wb);
     a.shutdown();
     b.shutdown();
+}
+
+/// ISSUE 4 bugfix regression: a pooled connection whose server went away
+/// must recover through the checkout health-check / stale-retry path and
+/// count **zero** failed exchanges — only unrecovered exchanges belong
+/// in `GossipRoundReport::failed`.
+#[test]
+fn stale_pooled_connection_recovers_without_counting_failed() {
+    let mut cfg = service_cfg();
+    cfg.gossip.exchange_deadline_ms = 2_000;
+    let opts = TcpTransportOptions::from_gossip(&cfg.gossip);
+    assert!(opts.pool_connections > 0);
+
+    // Server S1 at member index 0; its own remote-peer entry is a dead
+    // placeholder (it never initiates — round_interval is 0 and the
+    // test never steps it).
+    let placeholder = {
+        let l = TcpListener::bind("127.0.0.1:0").unwrap();
+        l.local_addr().unwrap()
+    };
+    let s1_transport = TcpTransport::bind_with("127.0.0.1:0", opts.clone()).unwrap();
+    let addr = s1_transport.listen_addr().unwrap();
+    let s1 = Node::builder()
+        .config(cfg.clone())
+        .self_index(0)
+        .transport(s1_transport)
+        .remote_peer(placeholder)
+        .build()
+        .unwrap();
+
+    // Initiator I at member index 1, client-only, transport kept shared
+    // so the test can read its pool counters.
+    let it = Arc::new(TcpTransport::connect_only_with(opts.clone()).unwrap());
+    let i = Node::builder()
+        .config(cfg.clone())
+        .self_index(1)
+        .transport_shared(it.clone())
+        .remote_peer(addr)
+        .build()
+        .unwrap();
+    let mut w = i.writer();
+    w.insert_batch(&(1..=500).map(f64::from).collect::<Vec<_>>());
+    w.flush();
+    i.flush();
+
+    // First exchange: fresh connect, then the connection is pooled.
+    let r1 = i.step().unwrap();
+    assert_eq!(r1.exchanges, 1, "first exchange must complete");
+    assert_eq!(r1.failed, 0);
+    assert_eq!(it.pool_stats().fresh_connects, 1);
+    assert_eq!(it.pooled_connections(addr), 1, "connection was pooled");
+
+    // The server goes away (its serve loop closes every connection) and
+    // a replacement binds the same address.
+    s1.shutdown();
+    let s2 = Node::builder()
+        .config(cfg.clone())
+        .self_index(0)
+        .transport(TcpTransport::bind_with(addr, opts.clone()).unwrap())
+        .remote_peer(placeholder)
+        .build()
+        .unwrap();
+    std::thread::sleep(Duration::from_millis(50)); // let the FINs land
+
+    // Second exchange: the pooled connection is stale; the transport
+    // must fall back to a fresh connect and the round must count one
+    // *successful* exchange and zero failures.
+    let r2 = i.step().unwrap();
+    assert_eq!(
+        r2.failed, 0,
+        "a recovered pool failure must not count as a failed exchange"
+    );
+    assert_eq!(r2.exchanges, 1, "the retry must complete the exchange");
+    let stats = it.pool_stats();
+    assert!(
+        stats.stale_discarded >= 1,
+        "the dead pooled connection was discarded: {stats:?}"
+    );
+    assert_eq!(stats.fresh_connects, 2, "one fresh connect per server");
+
+    drop(w);
+    i.shutdown();
+    s2.shutdown();
+}
+
+/// Near convergence a delta exchange ships a few dozen bytes where full
+/// frames ship ~16 KiB: the second exchange of an unchanged pair must be
+/// over an order of magnitude smaller with deltas on, and roughly the
+/// same size with deltas off.
+#[test]
+fn near_converged_delta_exchanges_shrink_wire_bytes() {
+    let run_pair = |delta: bool| -> (usize, usize) {
+        let mut cfg = service_cfg();
+        cfg.gossip.exchange_deadline_ms = 2_000;
+        cfg.gossip.delta_exchanges = delta;
+        let opts = TcpTransportOptions::from_gossip(&cfg.gossip);
+        let placeholder = {
+            let l = TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap()
+        };
+        let server = Node::builder()
+            .config(cfg.clone())
+            .self_index(0)
+            .transport(TcpTransport::bind_with("127.0.0.1:0", opts.clone()).unwrap())
+            .remote_peer(placeholder)
+            .build()
+            .unwrap();
+        let addr = server.listen_addr().unwrap();
+        let client = Node::builder()
+            .config(cfg.clone())
+            .self_index(1)
+            .transport(TcpTransport::connect_only_with(opts).unwrap())
+            .remote_peer(addr)
+            .build()
+            .unwrap();
+        let mut w = client.writer();
+        w.insert_batch(&(1..=2_000).map(f64::from).collect::<Vec<_>>());
+        w.flush();
+        client.flush();
+
+        let r1 = client.step().unwrap();
+        assert_eq!(r1.exchanges, 1, "first exchange (full frames)");
+        // No new epoch between steps: the pair's states are already the
+        // shared average, so the second exchange changes nothing.
+        let r2 = client.step().unwrap();
+        assert_eq!(r2.exchanges, 1, "second exchange");
+        assert_eq!(r2.failed, 0);
+        drop(w);
+        client.shutdown();
+        server.shutdown();
+        (r1.bytes, r2.bytes)
+    };
+
+    let (full_first, delta_second) = run_pair(true);
+    assert!(
+        delta_second * 10 < full_first,
+        "near-converged delta exchange must be >10x smaller: \
+         first={full_first}B second={delta_second}B"
+    );
+
+    let (_, full_second) = run_pair(false);
+    assert!(
+        full_second * 2 > full_first,
+        "with deltas off the steady-state exchange stays full-size: \
+         first={full_first}B second={full_second}B"
+    );
+    assert!(
+        delta_second * 10 < full_second,
+        "delta steady-state must be >10x below full steady-state: \
+         delta={delta_second}B full={full_second}B"
+    );
+}
+
+/// A delta push naming a baseline the server does not hold draws a
+/// `BaselineMismatch` reject, leaves the server's state bit-for-bit
+/// untouched, and keeps the connection alive so the full-frame fallback
+/// lands on the very same socket — the in-protocol downgrade path.
+#[test]
+fn stale_baseline_delta_push_falls_back_on_same_connection() {
+    use duddsketch::sketch::{
+        decode_exchange, delta_payload, encode_exchange_delta_push, encode_exchange_push,
+        peer_state_fingerprint, ExchangeFrame, RejectReason,
+    };
+
+    let mut cfg = service_cfg();
+    cfg.gossip.exchange_deadline_ms = 2_000;
+    let opts = TcpTransportOptions::from_gossip(&cfg.gossip);
+    let dead_addr = {
+        let l = TcpListener::bind("127.0.0.1:0").unwrap();
+        l.local_addr().unwrap()
+    };
+    let node = Node::builder()
+        .config(cfg)
+        .self_index(0)
+        .transport(TcpTransport::bind_with("127.0.0.1:0", opts).unwrap())
+        .remote_peer(dead_addr)
+        .build()
+        .unwrap();
+    let addr = node.listen_addr().unwrap();
+    let mut w = node.writer();
+    w.insert_batch(&(1..=400).map(f64::from).collect::<Vec<_>>());
+    w.flush();
+    node.flush();
+    node.step(); // seed epoch 1 into the protocol state
+    let gen = node.global_view().unwrap().generation();
+    let before = node.global_view().unwrap().state().clone();
+
+    let read_reply = |s: &mut TcpStream| -> Vec<u8> {
+        let mut len = [0u8; 4];
+        s.read_exact(&mut len).unwrap();
+        let mut buf = vec![0u8; u32::from_le_bytes(len) as usize];
+        s.read_exact(&mut buf).unwrap();
+        buf
+    };
+
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_millis(2_000))).unwrap();
+
+    // A structurally valid delta push against a baseline only we hold.
+    let alien = PeerState::init(9, &[1.0, 2.0, 3.0], 0.001, 1024).unwrap();
+    let fp = peer_state_fingerprint(&alien);
+    let delta = delta_payload(&alien, fp, &alien).unwrap();
+    let frame = encode_exchange_delta_push(gen, &delta);
+    s.write_all(&(frame.len() as u32).to_le_bytes()).unwrap();
+    s.write_all(&frame).unwrap();
+    match decode_exchange(&read_reply(&mut s)).unwrap() {
+        ExchangeFrame::Reject { reason, .. } => {
+            assert_eq!(reason, RejectReason::BaselineMismatch);
+        }
+        other => panic!("expected a baseline-mismatch reject, got {other:?}"),
+    }
+    let after = node.global_view().unwrap().state().clone();
+    assert_eq!(after.n_tilde.to_bits(), before.n_tilde.to_bits());
+    assert_eq!(after.q_tilde.to_bits(), before.q_tilde.to_bits());
+    assert_eq!(
+        after.sketch.positive_store().entries(),
+        before.sketch.positive_store().entries(),
+        "a rejected delta must never touch the serve state"
+    );
+
+    // Same socket, full frame: the exchange completes.
+    let frame = encode_exchange_push(gen, &alien);
+    s.write_all(&(frame.len() as u32).to_le_bytes()).unwrap();
+    s.write_all(&frame).unwrap();
+    match decode_exchange(&read_reply(&mut s)).unwrap() {
+        ExchangeFrame::Reply { generation, state } => {
+            assert_eq!(generation, gen);
+            assert_eq!(state.id, 9, "reply echoes the initiator's id");
+        }
+        other => panic!("expected a reply on the same connection, got {other:?}"),
+    }
+
+    drop(w);
+    node.shutdown();
 }

@@ -5,9 +5,10 @@ use duddsketch::gossip::PeerState;
 use duddsketch::metrics::relative_error;
 use duddsketch::rng::Rng;
 use duddsketch::sketch::{
-    decode_exchange, decode_sketch, encode_exchange_push, encode_exchange_reply,
-    encode_sketch, theorem2_bound, DdSketch, ExactQuantiles, ExchangeFrame, SparseStore,
-    Store, UddSketch,
+    apply_delta, decode_exchange, decode_sketch, delta_payload, delta_wire_size,
+    encode_exchange_delta_push, encode_exchange_push, encode_exchange_reply, encode_sketch,
+    peer_state_fingerprint, theorem2_bound, DdSketch, ExactQuantiles, ExchangeFrame,
+    SparseStore, Store, UddSketch,
 };
 use duddsketch::util::testkit::{forall, forall_vec, gen};
 
@@ -517,6 +518,149 @@ fn prop_ddsketch_high_quantile_guarantee() {
             let re = relative_error(est, tru);
             if re > 0.01 + 1e-9 {
                 return Err(format!("max-quantile re {re}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Invariant (ISSUE 4): the delta codec is bit-exact. For an arbitrary
+/// baseline and an arbitrarily evolved current state (averaging with a
+/// random partner, turnstile deletes, forced collapses), encoding the
+/// delta, decoding it, and applying it to the baseline reconstructs the
+/// current state bit for bit — entries, scalars, zero weight, collapse
+/// depth, and therefore the fingerprint.
+#[test]
+fn prop_delta_roundtrip_bit_exact() {
+    use duddsketch::rng::Xoshiro256pp;
+    forall(
+        "delta-roundtrip",
+        SEED + 20,
+        24,
+        |r: &mut Xoshiro256pp| {
+            let xs = gen::log_uniform_vec(r, 1200, 5.0, 3.0);
+            let ys = gen::log_uniform_vec(r, 900, 4.0, 2.0);
+            let id = r.index(64);
+            let generation = r.index(1 << 16) as u64;
+            let n_del = r.index(xs.len() / 4);
+            let collapse = r.chance(0.3);
+            (xs, ys, id, generation, n_del, collapse)
+        },
+        |(xs, ys, id, generation, n_del, collapse)| {
+            let baseline =
+                PeerState::init(*id, xs, 0.001, 128).map_err(|e| e.to_string())?;
+            let fp = peer_state_fingerprint(&baseline);
+
+            // Evolve a copy the way the protocol does: average with a
+            // partner (fractional counters), delete some values
+            // (turnstile), maybe collapse past the baseline's depth.
+            let mut current = baseline.clone();
+            let mut partner =
+                PeerState::init(id + 1, ys, 0.001, 128).map_err(|e| e.to_string())?;
+            PeerState::exchange(&mut current, &mut partner).map_err(|e| e.to_string())?;
+            for &x in &xs[..*n_del] {
+                current.sketch.delete(x);
+            }
+            if *collapse {
+                current.sketch.force_collapse();
+            }
+
+            let delta = delta_payload(&baseline, fp, &current)
+                .ok_or("delta_payload refused a same-lineage pair")?;
+            if delta.baseline_fingerprint != fp {
+                return Err("payload lost the fingerprint".into());
+            }
+            let frame = encode_exchange_delta_push(*generation, &delta);
+            if frame.len() != delta_wire_size(&delta) {
+                return Err(format!(
+                    "wire-size accounting off: {} != {}",
+                    frame.len(),
+                    delta_wire_size(&delta)
+                ));
+            }
+            let decoded = match decode_exchange(&frame).map_err(|e| e.to_string())? {
+                ExchangeFrame::DeltaPush { generation: g, delta } if g == *generation => delta,
+                other => return Err(format!("wrong frame decoded: {other:?}")),
+            };
+            let rebuilt = apply_delta(&baseline, &decoded).map_err(|e| e.to_string())?;
+            if rebuilt.id != current.id
+                || rebuilt.n_tilde.to_bits() != current.n_tilde.to_bits()
+                || rebuilt.q_tilde.to_bits() != current.q_tilde.to_bits()
+            {
+                return Err("scalars differ after reconstruction".into());
+            }
+            if rebuilt.sketch.collapses() != current.sketch.collapses() {
+                return Err("collapse depth differs".into());
+            }
+            if rebuilt.sketch.zero_weight().to_bits()
+                != current.sketch.zero_weight().to_bits()
+            {
+                return Err("zero weight differs".into());
+            }
+            if rebuilt.sketch.positive_store().entries()
+                != current.sketch.positive_store().entries()
+                || rebuilt.sketch.negative_store().entries()
+                    != current.sketch.negative_store().entries()
+            {
+                return Err("bucket entries differ".into());
+            }
+            if peer_state_fingerprint(&rebuilt) != peer_state_fingerprint(&current) {
+                return Err("fingerprints differ".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Invariant (ISSUE 4): no corrupted or stale-baseline delta frame slips
+/// through. Truncation at any offset fails to decode (so the transport
+/// cancels the exchange, §7.2), and a frame whose baseline fingerprint
+/// was tampered with decodes to a fingerprint that no longer matches the
+/// receiver's cache — exactly the condition that draws the
+/// `BaselineMismatch` reject and the automatic full-frame fallback,
+/// leaving both sides at their pre-round state.
+#[test]
+fn prop_delta_frame_corruption_detected() {
+    use duddsketch::rng::Xoshiro256pp;
+    forall(
+        "delta-corruption",
+        SEED + 21,
+        16,
+        |r: &mut Xoshiro256pp| {
+            let xs = gen::uniform_vec(r, 500, 1.0, 1e4);
+            let ys = gen::uniform_vec(r, 300, 1.0, 1e3);
+            let cut_unit = r.next_f64();
+            let flip = r.index(8);
+            (xs, ys, cut_unit, flip)
+        },
+        |(xs, ys, cut_unit, flip)| {
+            let baseline = PeerState::init(2, xs, 0.01, 64).map_err(|e| e.to_string())?;
+            let fp = peer_state_fingerprint(&baseline);
+            let mut current = baseline.clone();
+            let mut partner = PeerState::init(5, ys, 0.01, 64).map_err(|e| e.to_string())?;
+            PeerState::exchange(&mut current, &mut partner).map_err(|e| e.to_string())?;
+            let delta = delta_payload(&baseline, fp, &current)
+                .ok_or("delta_payload refused a same-lineage pair")?;
+            let buf = encode_exchange_delta_push(7, &delta);
+
+            // Truncation at a random offset and the structural edges.
+            let random_cut = ((buf.len() - 1) as f64 * cut_unit) as usize;
+            for cut in [0usize, 4, 5, 6, 13, 21, random_cut, buf.len() - 1] {
+                if decode_exchange(&buf[..cut]).is_ok() {
+                    return Err(format!("truncation at {cut} decoded"));
+                }
+            }
+            // Tampered fingerprint (bytes 14..22 of the frame): decodes,
+            // but no longer names the receiver's baseline.
+            let mut bad = buf.clone();
+            bad[14 + flip] ^= 0xFF;
+            match decode_exchange(&bad).map_err(|e| e.to_string())? {
+                ExchangeFrame::DeltaPush { delta: d, .. } => {
+                    if d.baseline_fingerprint == fp {
+                        return Err("tampered fingerprint still matched".into());
+                    }
+                }
+                other => return Err(format!("wrong frame decoded: {other:?}")),
             }
             Ok(())
         },

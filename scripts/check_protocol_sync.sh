@@ -1,0 +1,49 @@
+#!/usr/bin/env bash
+# CI guard (ISSUE 4): the normative wire spec in docs/PROTOCOL.md and the
+# codec implementation in rust/src/sketch/codec.rs must agree on the
+# frame-kind byte values, the reject-reason codes, and the frame version.
+# Pure grep/diff — runs without a Rust toolchain.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+codec=rust/src/sketch/codec.rs
+spec=docs/PROTOCOL.md
+fail=0
+
+# Frame kinds: `Push = 1,` style enum discriminants in the codec vs the
+# `| `Push` | 1 |` table rows in the spec.
+code_kinds=$(grep -oE '(Push|Reply|Reject|DeltaPush|DeltaReply) = [0-9]+' "$codec" \
+  | sed -E 's/ = /=/' | sort -u)
+doc_kinds=$(grep -oE '\| `(Push|Reply|Reject|DeltaPush|DeltaReply)` \| [0-9]+ \|' "$spec" \
+  | sed -E 's/^\| `//; s/` \| /=/; s/ \|$//' | sort -u)
+if ! diff <(echo "$code_kinds") <(echo "$doc_kinds") >/dev/null; then
+  echo "FRAME-KIND MISMATCH between $codec and $spec:"
+  diff <(echo "$code_kinds") <(echo "$doc_kinds") || true
+  fail=1
+fi
+
+# Reject reasons: the `RejectReason::X => n,` arms of code() vs the
+# spec's reject table.
+code_reasons=$(grep -oE 'RejectReason::(Busy|StaleGeneration|Lineage|Malformed|BaselineMismatch) => [0-9]+' "$codec" \
+  | sed -E 's/RejectReason:://; s/ => /=/' | sort -u)
+doc_reasons=$(grep -oE '\| `(Busy|StaleGeneration|Lineage|Malformed|BaselineMismatch)` \| [0-9]+ \|' "$spec" \
+  | sed -E 's/^\| `//; s/` \| /=/; s/ \|$//' | sort -u)
+if ! diff <(echo "$code_reasons") <(echo "$doc_reasons") >/dev/null; then
+  echo "REJECT-REASON MISMATCH between $codec and $spec:"
+  diff <(echo "$code_reasons") <(echo "$doc_reasons") || true
+  fail=1
+fi
+
+# Frame version byte.
+code_version=$(grep -oE 'const VERSION: u8 = [0-9]+' "$codec" | grep -oE '[0-9]+$')
+doc_version=$(grep -ioE 'protocol version: \*\*[0-9]+\*\*' "$spec" | grep -oE '[0-9]+')
+if [ "$code_version" != "$doc_version" ]; then
+  echo "VERSION MISMATCH: codec has $code_version, spec has $doc_version"
+  fail=1
+fi
+
+if [ "$fail" -ne 0 ]; then
+  echo "docs/PROTOCOL.md is out of sync with sketch/codec.rs"
+  exit 1
+fi
+echo "protocol spec in sync: kinds [$(echo "$code_kinds" | tr '\n' ' ')], reasons [$(echo "$code_reasons" | tr '\n' ' ')], version $code_version"
