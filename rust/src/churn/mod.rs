@@ -212,6 +212,34 @@ impl ChurnModel {
     pub fn online_count(&self, peers: usize) -> usize {
         (0..peers).filter(|&l| self.is_online(l)).count()
     }
+
+    /// Pre-compute the online mask of the next `rounds` rounds — the
+    /// deterministic **churn schedule** a live-fleet demo replays
+    /// against real TCP nodes (`integration_membership`): row `r` is
+    /// the mask *after* round `r+1`'s churn step. Works on a clone, so
+    /// `self` is not advanced; calling it twice (or stepping a clone by
+    /// hand) yields the identical schedule.
+    pub fn schedule(&self, rounds: usize, peers: usize) -> Vec<Vec<bool>> {
+        let mut model = self.clone();
+        (0..rounds)
+            .map(|_| {
+                model.step();
+                model.online_mask(peers)
+            })
+            .collect()
+    }
+
+    /// The first `(round, peer)` at which the schedule takes a peer
+    /// offline, if any within `rounds` — how a churn demo picks its
+    /// crash point deterministically from the model.
+    pub fn first_failure(&self, rounds: usize, peers: usize) -> Option<(usize, usize)> {
+        for (r, mask) in self.schedule(rounds, peers).into_iter().enumerate() {
+            if let Some(l) = mask.iter().position(|&b| !b) {
+                return Some((r, l));
+            }
+        }
+        None
+    }
 }
 
 #[cfg(test)]
@@ -307,5 +335,71 @@ mod tests {
             b.step();
             assert_eq!(a.online_mask(100), b.online_mask(100));
         }
+    }
+
+    #[test]
+    fn schedule_is_deterministic_and_leaves_model_untouched() {
+        let m = default_rng(7);
+        let c = ChurnModel::new(ChurnKind::YaoPareto, 50, &m);
+        let s1 = c.schedule(30, 50);
+        let s2 = c.schedule(30, 50);
+        assert_eq!(s1, s2, "schedule must be a pure function of the model");
+        assert_eq!(s1.len(), 30);
+        assert_eq!(
+            c.online_count(50),
+            50,
+            "schedule generation must not advance the model"
+        );
+        // Stepping a clone by hand reproduces the schedule row for row.
+        let mut manual = c.clone();
+        for (r, row) in s1.iter().enumerate() {
+            manual.step();
+            assert_eq!(&manual.online_mask(50), row, "round {r}");
+        }
+    }
+
+    #[test]
+    fn schedule_matches_model_semantics_per_kind() {
+        let m = default_rng(8);
+        // No churn: every row all-online, no first failure.
+        let none = ChurnModel::new(ChurnKind::None, 20, &m);
+        assert!(none
+            .schedule(10, 20)
+            .iter()
+            .all(|row| row.iter().all(|&b| b)));
+        assert_eq!(none.first_failure(10, 20), None);
+
+        // Fail&stop: once offline, offline in every later row.
+        let fs = ChurnModel::new(ChurnKind::FailStop, 200, &m);
+        let sched = fs.schedule(40, 200);
+        for l in 0..200 {
+            let mut down = false;
+            for row in &sched {
+                if down {
+                    assert!(!row[l], "fail&stop peer {l} must never rejoin");
+                }
+                down |= !row[l];
+            }
+        }
+        // The paper's p=0.01 over 200 peers × 40 rounds fails someone.
+        let (r, l) = fs.first_failure(40, 200).expect("some peer fails");
+        assert!(!sched[r][l]);
+        assert!(sched[..r].iter().all(|row| row.iter().all(|&b| b)));
+
+        // Yao: someone goes down and comes back within the schedule.
+        let yao = ChurnModel::new(ChurnKind::YaoPareto, 100, &m);
+        let sched = yao.schedule(60, 100);
+        let rejoined = (0..100).any(|l| {
+            let mut was_down = false;
+            sched.iter().any(|row| {
+                if !row[l] {
+                    was_down = true;
+                    false
+                } else {
+                    was_down
+                }
+            })
+        });
+        assert!(rejoined, "yao schedules must contain a rejoin");
     }
 }

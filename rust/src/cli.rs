@@ -125,6 +125,26 @@ USAGE:
       keys: serve-gossip keys plus gossip_deadline_ms
             gossip_pool_connections gossip_pool_idle_ms
             gossip_delta_exchanges (shards defaults to 2 per node here)
+  duddsketch serve-remote --membership [--nodes P] [--rounds R]
+            [--join-after S] [--kill-after S] [key=value ...]
+      live-churn demo on the dynamic membership plane (docs/PROTOCOL.md
+      §9): node 0 bootstraps the fleet (member id 0), the others join it
+      (dudd-join handshake), and partners are drawn from the live member
+      table each round. --join-after S adds one more node mid-run at
+      sweep S; --kill-after S crashes the last initial node at sweep S —
+      no restart anywhere: survivors suspect it, declare it dead, bump
+      the restart generation, and re-converge to the union of the
+      SURVIVING streams; final member tables must be byte-identical
+      keys: serve-remote keys plus gossip_suspect_after_ms
+            gossip_tombstone_ttl_ms
+  duddsketch serve-remote --join SEED_ADDR [--bind HOST:PORT]
+            [--items N] [--rounds R]
+      stand up ONE node that joins a fleet already running elsewhere
+      (any member can be the seed), ingest a workload, and report this
+      node's per-round convergence. The bound address is what the
+      member table advertises, so joining a fleet on other machines
+      needs --bind with an address they can route to (the default
+      127.0.0.1:0 only works for same-host fleets)
   duddsketch info
       platform, artifact inventory, defaults
 
@@ -558,6 +578,16 @@ fn cmd_serve_remote(args: &Args) -> Result<String> {
     use crate::service::{Node, TcpTransport, TcpTransportOptions};
     use std::net::SocketAddr;
 
+    if let Some(addr) = args.flag("join") {
+        let addr: SocketAddr = addr
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--join needs a host:port address, got '{addr}'"))?;
+        return cmd_serve_remote_join(args, addr);
+    }
+    if args.has("membership") || args.has("join-after") || args.has("kill-after") {
+        return cmd_serve_remote_membership(args);
+    }
+
     let kind: DatasetKind = args
         .flag("dataset")
         .unwrap_or("exponential")
@@ -778,6 +808,384 @@ fn cmd_serve_remote(args: &Args) -> Result<String> {
     out.push_str(&format!(
         "  OK: worst rel-diff {worst:.3e} <= alpha {alpha_bound:.3e} across {nodes} nodes\n"
     ));
+    Ok(out)
+}
+
+/// A live-churn fleet demo (`serve-remote --membership`): node 0
+/// bootstraps the membership plane, the others join it, and the
+/// `--join-after`/`--kill-after` flags replay a join and a crash against
+/// the running fleet — no restart, survivors re-converge to the union of
+/// the surviving streams and their member tables settle byte-identical.
+fn cmd_serve_remote_membership(args: &Args) -> Result<String> {
+    use crate::service::{MemberStatus, Node, TcpTransport, TcpTransportOptions};
+    use std::time::Duration;
+
+    let kind: DatasetKind = args
+        .flag("dataset")
+        .unwrap_or("exponential")
+        .parse()
+        .map_err(anyhow::Error::msg)?;
+    let items: usize = args.flag("items").unwrap_or("4000").parse()?;
+    let nodes: usize = args.flag("nodes").unwrap_or("3").parse()?;
+    let rounds: usize = args.flag("rounds").unwrap_or("12").parse()?;
+    let seed: u64 = args.flag("seed").unwrap_or("42").parse()?;
+    let qs: Vec<f64> = args
+        .flag("q")
+        .unwrap_or("0.5,0.9,0.99")
+        .split(',')
+        .map(|s| s.trim().parse::<f64>())
+        .collect::<Result<_, _>>()?;
+    let join_after: Option<usize> = match args.flag("join-after") {
+        Some(v) => Some(v.parse()?),
+        None => None,
+    };
+    let kill_after: Option<usize> = match args.flag("kill-after") {
+        Some(v) => Some(v.parse()?),
+        None => None,
+    };
+    let mut cfg = crate::config::ServiceConfig::default();
+    cfg.shards = 2;
+    // Demo-friendly suspicion clock (a crashed node turns dead within ~1s
+    // of failures); key overrides below still win.
+    cfg.gossip.suspect_after_ms = 400;
+    for (k, v) in &args.overrides {
+        cfg.set(k, v).map_err(anyhow::Error::msg)?;
+    }
+    cfg.validate().map_err(anyhow::Error::msg)?;
+    if nodes < 2 {
+        bail!("serve-remote --membership: need --nodes >= 2");
+    }
+    if items == 0 {
+        bail!("serve-remote --membership: need --items >= 1");
+    }
+    if let Some(s) = kill_after {
+        if s == 0 || s > rounds {
+            bail!("--kill-after must be within 1..=rounds");
+        }
+    }
+    if let Some(s) = join_after {
+        if s == 0 || s > rounds {
+            bail!("--join-after must be within 1..=rounds");
+        }
+    }
+    if cfg.window_slots > 0 {
+        bail!("serve-remote --membership: use window=0 (union verification)");
+    }
+    // The CLI is the clock: one step per row. A background round thread
+    // would race the sweep loop and drain the per-round telemetry
+    // (membership events, pool deltas) out from under the report.
+    cfg.gossip.round_interval_ms = 0;
+
+    let total_nodes = nodes + usize::from(join_after.is_some());
+    let master = crate::rng::default_rng(seed);
+    let datasets: Vec<Vec<f64>> = (0..total_nodes)
+        .map(|i| crate::data::peer_dataset(kind, i, items, &master))
+        .collect();
+
+    let opts = TcpTransportOptions::from_gossip(&cfg.gossip);
+    let build_node = |seed_addr: Option<std::net::SocketAddr>| -> Result<Node> {
+        let t = TcpTransport::bind_with("127.0.0.1:0", opts.clone())?;
+        let mut b = Node::builder().config(cfg.clone()).transport(t);
+        b = match seed_addr {
+            None => b.membership_bootstrap(),
+            Some(a) => b.join(a),
+        };
+        b.build()
+    };
+
+    let mut fleet: Vec<Node> = vec![build_node(None)?];
+    let seed_addr = fleet[0].listen_addr().expect("bootstrap node listens");
+    for _ in 1..nodes {
+        fleet.push(build_node(Some(seed_addr))?);
+    }
+    let mut out = format!(
+        "serve-remote --membership: dataset={} items/node={} nodes={} rounds<={} {}\n",
+        kind.name(),
+        items,
+        nodes,
+        rounds,
+        cfg.gossip.summary()
+    );
+    for (k, node) in fleet.iter().enumerate() {
+        out.push_str(&format!(
+            "  node {k}: member id {} on {}\n",
+            node.membership().expect("membership on").self_id(),
+            node.listen_addr().expect("tcp node listens"),
+        ));
+    }
+    out.push_str(
+        "  sweep  exchanges  failed  KiB     alive/sus/dead  gen(max)  event\n",
+    );
+
+    // Live ingest in chunks, with the join/kill events firing mid-run.
+    let mut writers: Vec<_> = fleet.iter().map(|n| n.writer()).collect();
+    let mut surviving: Vec<usize> = (0..nodes).collect(); // dataset indices
+    let mut fed = 0usize;
+    for sweep in 1..=rounds {
+        let mut event = String::new();
+        if Some(sweep) == join_after {
+            let joiner = build_node(Some(seed_addr))?;
+            let mut w = joiner.writer();
+            w.insert_batch(&datasets[nodes]);
+            w.flush();
+            joiner.flush();
+            event = format!(
+                "node joins (member id {})",
+                joiner.membership().expect("membership on").self_id()
+            );
+            writers.push(w);
+            fleet.push(joiner);
+            surviving.push(nodes);
+        }
+        if Some(sweep) == kill_after {
+            // Kill the last *initial* node: its stream leaves the union.
+            let victim = nodes - 1;
+            writers.remove(victim);
+            let node = fleet.remove(victim);
+            if !event.is_empty() {
+                event.push_str(" + ");
+            }
+            event.push_str(&format!("node killed (member id {victim})"));
+            node.shutdown();
+            surviving.retain(|&d| d != victim);
+        }
+        if fed < 4 {
+            for (slot, &d) in surviving.iter().enumerate() {
+                let chunk = items.div_ceil(4).max(1);
+                if let Some(part) = datasets[d].chunks(chunk).nth(fed) {
+                    if d < nodes {
+                        // Initial nodes stream in; the joiner ingested at join.
+                        writers[slot].insert_batch(part);
+                        writers[slot].flush();
+                        fleet[slot].flush();
+                    }
+                }
+            }
+            fed += 1;
+        }
+        let mut exchanges = 0usize;
+        let mut failed = 0usize;
+        let mut bytes = 0usize;
+        // Worst view across the fleet this sweep: max suspects/tombstones
+        // held anywhere, min alive — the interesting number while a death
+        // is still propagating by anti-entropy.
+        let mut mem = (usize::MAX, 0usize, 0usize);
+        for node in &fleet {
+            let r = node.step().expect("gossip enabled");
+            exchanges += r.exchanges;
+            failed += r.failed;
+            bytes += r.bytes + r.membership.map_or(0, |m| m.bytes);
+            if let Some(m) = r.membership {
+                mem = (mem.0.min(m.alive), mem.1.max(m.suspect), mem.2.max(m.dead));
+            }
+        }
+        if mem.0 == usize::MAX {
+            mem.0 = 0;
+        }
+        let gen_max = fleet
+            .iter()
+            .map(|n| n.global_view().expect("gossip enabled").generation())
+            .max()
+            .unwrap_or(0);
+        out.push_str(&format!(
+            "  {sweep:<5}  {exchanges:<9}  {failed:<6}  {:<6.1}  {}/{}/{:<10}  {gen_max:<8}  {event}\n",
+            bytes as f64 / 1024.0,
+            mem.0,
+            mem.1,
+            mem.2,
+        ));
+        std::thread::sleep(Duration::from_millis(30));
+    }
+    // Drain remaining chunks.
+    for (slot, &d) in surviving.iter().enumerate() {
+        if d < nodes {
+            let chunk = items.div_ceil(4).max(1);
+            for part in datasets[d].chunks(chunk).skip(fed) {
+                writers[slot].insert_batch(part);
+                writers[slot].flush();
+            }
+            fleet[slot].flush();
+        }
+    }
+    drop(writers);
+
+    // Sequential union over the *surviving* streams — the target.
+    let mut seq: UddSketch =
+        UddSketch::new(cfg.alpha, cfg.max_buckets).map_err(anyhow::Error::msg)?;
+    for &d in &surviving {
+        seq.extend(&datasets[d]);
+    }
+    let total: f64 = surviving.iter().map(|&d| datasets[d].len() as f64).sum();
+
+    // Converge (suspicion + anti-entropy need wall time, hence sleeps).
+    let mut sweeps = 0usize;
+    let converged = loop {
+        sweeps += 1;
+        for node in &fleet {
+            node.step();
+        }
+        let views: Vec<_> = fleet
+            .iter()
+            .map(|n| n.global_view().expect("gossip enabled"))
+            .collect();
+        let gen0 = views[0].generation();
+        if views.iter().all(|v| {
+            v.generation() == gen0 && v.converged() && v.estimated_total() == total
+        }) {
+            break true;
+        }
+        if sweeps >= 600 {
+            break false;
+        }
+        std::thread::sleep(Duration::from_millis(25));
+    };
+    let v0 = fleet[0].global_view().expect("gossip enabled");
+    out.push_str(&format!(
+        "  final: +{sweeps} verify sweeps, converged={converged}, generation={}, \
+         p-est={}, N-est={}\n",
+        v0.generation(),
+        v0.estimated_peers(),
+        v0.estimated_total(),
+    ));
+
+    // Member tables must agree byte for byte across the survivors.
+    let tables: Vec<Vec<u8>> = fleet
+        .iter()
+        .map(|n| n.membership().expect("membership on").encoded_table())
+        .collect();
+    let tables_agree = tables.iter().all(|t| t == &tables[0]);
+    out.push_str(&format!("  member tables byte-identical: {tables_agree}\n"));
+    if kill_after.is_some() {
+        let dead = fleet[0]
+            .membership()
+            .expect("membership on")
+            .table()
+            .iter()
+            .filter(|e| e.status == MemberStatus::Dead)
+            .count();
+        out.push_str(&format!("  tombstones held: {dead}\n"));
+    }
+
+    out.push_str("  q       worst-node-view   sequential        rel-diff\n");
+    let alpha_bound = seq.alpha();
+    let mut worst = 0.0f64;
+    for &q in &qs {
+        let truth = seq.quantile(q).map_err(anyhow::Error::msg)?;
+        let mut worst_q = 0.0f64;
+        let mut worst_est = f64::NAN;
+        for node in &fleet {
+            let v = node.global_view().expect("gossip enabled");
+            let est = v.query(q).map_err(anyhow::Error::msg)?;
+            let re = crate::metrics::relative_error(est, truth);
+            if re >= worst_q {
+                worst_q = re;
+                worst_est = est;
+            }
+        }
+        worst = worst.max(worst_q);
+        out.push_str(&format!(
+            "  {q:<6}  {worst_est:<16.8e}  {truth:<16.8e}  {worst_q:.3e}\n"
+        ));
+    }
+    for node in fleet {
+        node.shutdown();
+    }
+    if !tables_agree {
+        bail!("surviving member tables diverged");
+    }
+    if worst > alpha_bound + 1e-9 {
+        bail!(
+            "membership fleet did not converge to the surviving union sketch: \
+             worst rel-diff {worst:.3e} > alpha {alpha_bound:.3e}"
+        );
+    }
+    out.push_str(&format!(
+        "  OK: worst rel-diff {worst:.3e} <= alpha {alpha_bound:.3e} across {} survivors\n",
+        surviving.len(),
+    ));
+    Ok(out)
+}
+
+/// `serve-remote --join <seed-addr>`: stand up ONE node that joins a
+/// fleet already running elsewhere (any member can be the seed), ingest
+/// a workload, and report per-round convergence of this node's global
+/// view. No union verification — the rest of the fleet's streams live
+/// on other machines.
+fn cmd_serve_remote_join(args: &Args, seed_addr: std::net::SocketAddr) -> Result<String> {
+    use crate::service::{Node, TcpTransport, TcpTransportOptions};
+
+    let kind: DatasetKind = args
+        .flag("dataset")
+        .unwrap_or("exponential")
+        .parse()
+        .map_err(anyhow::Error::msg)?;
+    let items: usize = args.flag("items").unwrap_or("8000").parse()?;
+    let rounds: usize = args.flag("rounds").unwrap_or("40").parse()?;
+    let seed: u64 = args.flag("seed").unwrap_or("42").parse()?;
+    let mut cfg = crate::config::ServiceConfig::default();
+    cfg.shards = 2;
+    for (k, v) in &args.overrides {
+        cfg.set(k, v).map_err(anyhow::Error::msg)?;
+    }
+    cfg.validate().map_err(anyhow::Error::msg)?;
+    if rounds == 0 {
+        bail!("serve-remote --join: need --rounds >= 1");
+    }
+    cfg.gossip.round_interval_ms = 0; // the CLI is the clock: one step per row
+
+    let master = crate::rng::default_rng(seed);
+    let data = crate::data::peer_dataset(kind, 0, items, &master);
+    let opts = TcpTransportOptions::from_gossip(&cfg.gossip);
+    // The bound address is what the member table advertises, so a node
+    // joining a fleet on other machines must bind an address those
+    // machines can route to (--bind), not the loopback default.
+    let bind = args.flag("bind").unwrap_or("127.0.0.1:0");
+    let node = Node::builder()
+        .config(cfg)
+        .transport(TcpTransport::bind_with(bind, opts)?)
+        .join(seed_addr)
+        .build()?;
+    let m = node.membership().expect("membership on").clone();
+    let mut out = format!(
+        "serve-remote --join {seed_addr}: assigned member id {} (listening on {})\n",
+        m.self_id(),
+        node.listen_addr().expect("tcp node listens"),
+    );
+    let mut w = node.writer();
+    w.insert_batch(&data);
+    w.flush();
+    node.flush();
+    out.push_str("  round  gen  exchanges  failed  alive/sus/dead  drift       p-est\n");
+    for round in 1..=rounds {
+        let r = node.step().expect("gossip enabled");
+        let v = node.global_view().expect("gossip enabled");
+        let mem = r.membership.unwrap_or_default();
+        out.push_str(&format!(
+            "  {round:<5}  {:<3}  {:<9}  {:<6}  {}/{}/{:<10}  {:<10.3e}  {}\n",
+            r.generation,
+            r.exchanges,
+            r.failed,
+            mem.alive,
+            mem.suspect,
+            mem.dead,
+            r.drift,
+            v.estimated_peers(),
+        ));
+        if r.converged {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(25));
+    }
+    let v = node.global_view().expect("gossip enabled");
+    out.push_str(&format!(
+        "  final: generation={}, p-est={}, N-est={}, converged={}\n",
+        v.generation(),
+        v.estimated_peers(),
+        v.estimated_total(),
+        v.converged(),
+    ));
+    drop(w);
+    node.shutdown();
     Ok(out)
 }
 
@@ -1013,6 +1421,66 @@ mod tests {
         assert!(out.contains("pool=0"), "{out}");
         assert!(out.contains("delta=false"), "{out}");
         assert!(out.contains("OK: worst rel-diff"), "{out}");
+    }
+
+    /// The live-churn demo end to end: bootstrap + joins, one node
+    /// joining mid-run, one crashing mid-run, survivors re-converging
+    /// to the surviving union with byte-identical member tables.
+    #[test]
+    fn serve_remote_membership_churn_demo() {
+        let a = args(&[
+            "serve-remote",
+            "--membership",
+            "--items",
+            "800",
+            "--nodes",
+            "3",
+            "--rounds",
+            "6",
+            "--join-after",
+            "2",
+            "--kill-after",
+            "4",
+            "--q",
+            "0.5,0.99",
+            "batch=256",
+            "shards=1",
+            "gossip_suspect_after_ms=150",
+        ]);
+        let out = dispatch(&a).unwrap();
+        assert!(out.contains("member id 0"), "{out}");
+        assert!(out.contains("node joins"), "{out}");
+        assert!(out.contains("node killed"), "{out}");
+        assert!(out.contains("member tables byte-identical: true"), "{out}");
+        assert!(out.contains("tombstones held: 1"), "{out}");
+        assert!(out.contains("OK: worst rel-diff"), "{out}");
+    }
+
+    #[test]
+    fn serve_remote_membership_rejects_bad_inputs() {
+        let a = args(&["serve-remote", "--membership", "--nodes", "1"]);
+        assert!(dispatch(&a).is_err());
+        let a = args(&["serve-remote", "--membership", "--kill-after", "0"]);
+        assert!(dispatch(&a).is_err());
+        let a = args(&[
+            "serve-remote",
+            "--membership",
+            "--rounds",
+            "5",
+            "--join-after",
+            "9",
+        ]);
+        assert!(dispatch(&a).is_err());
+        let a = args(&["serve-remote", "--join", "not-an-addr"]);
+        assert!(dispatch(&a).is_err());
+        let a = args(&[
+            "serve-remote",
+            "--membership",
+            "--items",
+            "100",
+            "gossip_suspect_after_ms=0",
+        ]);
+        assert!(dispatch(&a).is_err());
     }
 
     #[test]

@@ -3,6 +3,7 @@
 
 use crate::churn::ChurnKind;
 use crate::data::DatasetKind;
+use std::net::SocketAddr;
 use std::path::Path;
 
 /// Overlay topology models of §7.
@@ -390,6 +391,24 @@ pub struct GossipLoopConfig {
     /// falls back to full frames automatically on a baseline mismatch;
     /// see `docs/PROTOCOL.md`.
     pub delta_exchanges: bool,
+    /// Seed addresses for the **dynamic membership** plane
+    /// (`docs/PROTOCOL.md` §9): non-empty means the node joins a running
+    /// fleet by asking each seed in turn for a `dudd-join` handshake
+    /// instead of listing a static member order. An empty list with
+    /// membership bootstrapped makes this node the fleet's first member
+    /// (id 0).
+    pub seed_peers: Vec<SocketAddr>,
+    /// Membership suspicion interval in milliseconds: a member whose
+    /// exchange-failure streak outlives this turns *suspect* (connect
+    /// attempts back off exponentially), and after another such interval
+    /// *dead* (a protocol restart re-anchors the mass on the
+    /// survivors). Must be ≥ 1.
+    pub suspect_after_ms: u64,
+    /// Tombstone TTL in milliseconds: dead entries are kept (and keep
+    /// spreading, so nobody resurrects the member) this long after the
+    /// local node observed the death, then garbage-collected. Keep it
+    /// well above the fleet's anti-entropy spread time. Must be ≥ 1.
+    pub tombstone_ttl_ms: u64,
 }
 
 impl Default for GossipLoopConfig {
@@ -405,6 +424,9 @@ impl Default for GossipLoopConfig {
             pool_connections: 2,
             pool_idle_ms: 30_000,
             delta_exchanges: true,
+            seed_peers: Vec::new(),
+            suspect_after_ms: 5_000,
+            tombstone_ttl_ms: 60_000,
         }
     }
 }
@@ -446,6 +468,21 @@ impl GossipLoopConfig {
             "delta_exchanges" | "delta" => {
                 self.delta_exchanges = parse_bool(value).ok_or_else(|| parse_err(key, value))?
             }
+            "seed_peers" | "seeds" => {
+                let addrs: Result<Vec<SocketAddr>, _> = value
+                    .split(',')
+                    .map(str::trim)
+                    .filter(|s| !s.is_empty())
+                    .map(str::parse)
+                    .collect();
+                self.seed_peers = addrs.map_err(|_| parse_err(key, value))?;
+            }
+            "suspect_after_ms" | "suspect_after" => {
+                self.suspect_after_ms = value.parse().map_err(|_| parse_err(key, value))?
+            }
+            "tombstone_ttl_ms" | "tombstone_ttl" => {
+                self.tombstone_ttl_ms = value.parse().map_err(|_| parse_err(key, value))?
+            }
             other => return Err(format!("unknown gossip config key '{other}'")),
         }
         Ok(())
@@ -483,6 +520,20 @@ impl GossipLoopConfig {
                     .into(),
             );
         }
+        if self.suspect_after_ms < 1 {
+            return Err(
+                "gossip_suspect_after_ms must be >= 1 (a zero suspicion \
+                 interval declares every member dead on its first failure)"
+                    .into(),
+            );
+        }
+        if self.tombstone_ttl_ms < 1 {
+            return Err(
+                "gossip_tombstone_ttl_ms must be >= 1 (a zero TTL collects \
+                 tombstones before they can spread)"
+                    .into(),
+            );
+        }
         Ok(())
     }
 
@@ -490,7 +541,7 @@ impl GossipLoopConfig {
     pub fn summary(&self) -> String {
         format!(
             "round_ms={} fan_out={} graph={} drift<={:e} probes={:?} seed={} deadline_ms={} \
-             pool={} pool_idle_ms={} delta={}",
+             pool={} pool_idle_ms={} delta={} seeds={} suspect_after_ms={} tombstone_ttl_ms={}",
             self.round_interval_ms,
             self.fan_out,
             self.graph.name(),
@@ -501,6 +552,9 @@ impl GossipLoopConfig {
             self.pool_connections,
             self.pool_idle_ms,
             self.delta_exchanges,
+            self.seed_peers.len(),
+            self.suspect_after_ms,
+            self.tombstone_ttl_ms,
         )
     }
 }
@@ -675,6 +729,36 @@ mod tests {
         let s = GossipLoopConfig::default().summary();
         assert!(s.contains("pool=2"), "{s}");
         assert!(s.contains("delta=true"), "{s}");
+    }
+
+    #[test]
+    fn gossip_membership_keys_set_and_validate() {
+        let mut c = ServiceConfig::default();
+        c.set("gossip_seed_peers", "10.0.0.1:7400, 10.0.0.2:7400").unwrap();
+        c.set("gossip_suspect_after_ms", "750").unwrap();
+        c.set("gossip_tombstone_ttl_ms", "90000").unwrap();
+        assert_eq!(c.gossip.seed_peers.len(), 2);
+        assert_eq!(c.gossip.seed_peers[0], "10.0.0.1:7400".parse().unwrap());
+        assert_eq!(c.gossip.suspect_after_ms, 750);
+        assert_eq!(c.gossip.tombstone_ttl_ms, 90000);
+        c.validate().unwrap();
+
+        assert!(c.set("gossip_seed_peers", "not-an-addr").is_err());
+        let mut g = GossipLoopConfig::default();
+        g.suspect_after_ms = 0;
+        assert!(g
+            .validate()
+            .unwrap_err()
+            .contains("gossip_suspect_after_ms"));
+        let mut g = GossipLoopConfig::default();
+        g.tombstone_ttl_ms = 0;
+        assert!(g
+            .validate()
+            .unwrap_err()
+            .contains("gossip_tombstone_ttl_ms"));
+        let s = GossipLoopConfig::default().summary();
+        assert!(s.contains("suspect_after_ms=5000"), "{s}");
+        assert!(s.contains("tombstone_ttl_ms=60000"), "{s}");
     }
 
     #[test]

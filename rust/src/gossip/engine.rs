@@ -338,14 +338,36 @@ pub fn select_exchange_partners<R: Rng>(
             .copied()
             .filter(|&j| online[j]),
     );
-    if scratch.is_empty() {
+    partial_fisher_yates(scratch, fan_out, rng)
+}
+
+/// Draw up to `fan_out` of `count` candidate *positions* into the front
+/// of `scratch` (reset to `0..count` first) and return how many were
+/// drawn — the same partial Fisher–Yates as
+/// [`select_exchange_partners`], for callers whose candidate set is not
+/// a graph neighbourhood (the membership plane's live member view).
+/// Consumes one rng draw per selected partner, like the graph path.
+pub fn draw_fan_out<R: Rng>(
+    count: usize,
+    fan_out: usize,
+    scratch: &mut Vec<usize>,
+    rng: &mut R,
+) -> usize {
+    scratch.clear();
+    scratch.extend(0..count);
+    partial_fisher_yates(scratch, fan_out, rng)
+}
+
+/// Partial Fisher–Yates: the first `min(fan_out, len)` entries of
+/// `pool` become a uniform draw without replacement; returns that count.
+fn partial_fisher_yates<R: Rng>(pool: &mut [usize], fan_out: usize, rng: &mut R) -> usize {
+    if pool.is_empty() {
         return 0;
     }
-    let k = fan_out.min(scratch.len());
-    // Partial Fisher–Yates: first k entries become the selection.
+    let k = fan_out.min(pool.len());
     for i in 0..k {
-        let j = i + rng.index(scratch.len() - i);
-        scratch.swap(i, j);
+        let j = i + rng.index(pool.len() - i);
+        pool.swap(i, j);
     }
     k
 }

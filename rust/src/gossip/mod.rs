@@ -13,7 +13,7 @@ mod engine;
 mod executor;
 mod state;
 
-pub use engine::{fan_out_round, select_exchange_partners, Protocol, RoundMode, RoundStats};
+pub use engine::{draw_fan_out, fan_out_round, select_exchange_partners, Protocol, RoundMode, RoundStats};
 pub use executor::{DenseRound, NativeExecutor, PjrtExecutor, RoundExecutor};
 pub use state::{GossipSketch, PeerState};
 

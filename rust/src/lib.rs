@@ -107,9 +107,9 @@ pub mod prelude {
     pub use crate::config::{GossipLoopConfig, ServiceConfig};
     pub use crate::gossip::PeerState;
     pub use crate::service::{
-        GlobalView, GossipLoop, GossipMember, GossipRoundReport, InProcessTransport, Node,
-        NodeBuilder, QuantileService, ServiceWriter, Snapshot, TcpTransport,
-        TcpTransportOptions, Transport, TransportError,
+        GlobalView, GossipLoop, GossipMember, GossipRoundReport, InProcessTransport,
+        MemberStatus, MemberTable, Membership, Node, NodeBuilder, QuantileService,
+        ServiceWriter, Snapshot, TcpTransport, TcpTransportOptions, Transport, TransportError,
     };
     pub use crate::sketch::{QuantileReader, SketchError, UddSketch};
 }

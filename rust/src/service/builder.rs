@@ -54,6 +54,7 @@
 
 use super::coordinator::{QuantileService, ServiceWriter};
 use super::gossip_loop::{GlobalView, GossipLoop, GossipMember, GossipRoundReport};
+use super::membership::{Membership, MembershipConfig};
 use super::snapshot::Snapshot;
 use super::transport::{InProcessTransport, Transport};
 use crate::config::{GossipLoopConfig, ServiceConfig};
@@ -83,6 +84,7 @@ impl Node {
             peers: Vec::new(),
             self_index: 0,
             transport: None,
+            bootstrap: false,
         }
     }
 
@@ -109,6 +111,12 @@ impl Node {
     /// The node's gossip loop, when peers were configured.
     pub fn gossip(&self) -> Option<&GossipLoop> {
         self.gossip.as_ref()
+    }
+
+    /// The node's membership runtime (dynamic fleets only — see
+    /// [`NodeBuilder::membership_bootstrap`] / [`NodeBuilder::join`]).
+    pub fn membership(&self) -> Option<&Arc<Membership>> {
+        self.gossip.as_ref().and_then(|g| g.membership())
     }
 
     /// Run one gossip round synchronously (None without gossip).
@@ -164,6 +172,8 @@ pub struct NodeBuilder {
     peers: Vec<GossipMember>,
     self_index: usize,
     transport: Option<Arc<dyn Transport>>,
+    /// Dynamic membership: found a new fleet as its first member.
+    bootstrap: bool,
 }
 
 impl NodeBuilder {
@@ -310,6 +320,41 @@ impl NodeBuilder {
         self
     }
 
+    /// Membership suspicion interval in ms (≥ 1; see
+    /// [`GossipLoopConfig::suspect_after_ms`]).
+    pub fn suspect_after_ms(mut self, ms: u64) -> Self {
+        self.cfg.gossip.suspect_after_ms = ms;
+        self
+    }
+
+    /// Membership tombstone TTL in ms (≥ 1; see
+    /// [`GossipLoopConfig::tombstone_ttl_ms`]).
+    pub fn tombstone_ttl_ms(mut self, ms: u64) -> Self {
+        self.cfg.gossip.tombstone_ttl_ms = ms;
+        self
+    }
+
+    /// Found a **new fleet with dynamic membership**: this node becomes
+    /// the bootstrap seed (stable member id 0). Requires a bound,
+    /// remote-capable transport; joiners point
+    /// [`NodeBuilder::join`] at its listen address. Mutually exclusive
+    /// with the static `.peer(..)`/`.remote_peer(..)` member list.
+    pub fn membership_bootstrap(mut self) -> Self {
+        self.bootstrap = true;
+        self
+    }
+
+    /// Join a **running fleet** via `seed` (any existing member): the
+    /// `dudd-join` handshake assigns this node a stable member id and
+    /// hands it the current member table; partners are drawn from the
+    /// live view from then on. May be called repeatedly — seeds are
+    /// tried in order until one answers. Mutually exclusive with the
+    /// static member list.
+    pub fn join(mut self, seed: SocketAddr) -> Self {
+        self.cfg.gossip.seed_peers.push(seed);
+        self
+    }
+
     /// Add a fleet member (in global member order, this node excluded —
     /// see [`NodeBuilder::self_index`]).
     pub fn peer(mut self, member: GossipMember) -> Self {
@@ -353,10 +398,14 @@ impl NodeBuilder {
             peers,
             self_index,
             transport,
+            bootstrap,
         } = self;
         cfg.validate()
             .map_err(anyhow::Error::msg)
             .context("node configuration")?;
+        if bootstrap || !cfg.gossip.seed_peers.is_empty() {
+            return Self::build_membership(cfg, peers, self_index, transport, bootstrap);
+        }
         if self_index > peers.len() {
             bail!(
                 "self_index {} is out of range for a fleet of {} members",
@@ -388,6 +437,87 @@ impl NodeBuilder {
             service,
             gossip: Some(gossip),
             self_member: self_index,
+        })
+    }
+
+    /// The dynamic-membership construction path
+    /// ([`NodeBuilder::membership_bootstrap`] / [`NodeBuilder::join`]):
+    /// bootstrap or join first (so a refused handshake fails before any
+    /// service threads spawn), then start the loop over the live view.
+    fn build_membership(
+        cfg: ServiceConfig,
+        peers: Vec<GossipMember>,
+        self_index: usize,
+        transport: Option<Arc<dyn Transport>>,
+        bootstrap: bool,
+    ) -> Result<Node> {
+        if !peers.is_empty() {
+            bail!(
+                "dynamic membership and a static member list are mutually \
+                 exclusive — drop the .peer(..)/.remote_peer(..) entries \
+                 (the live view replaces the global member order)"
+            );
+        }
+        if self_index != 0 {
+            bail!(
+                "self_index is meaningless with dynamic membership (ids are \
+                 assigned by the join handshake) — remove .self_index({self_index})"
+            );
+        }
+        if bootstrap && !cfg.gossip.seed_peers.is_empty() {
+            bail!(
+                "choose one: .membership_bootstrap() founds a new fleet, \
+                 .join(seed) enters an existing one"
+            );
+        }
+        let transport = transport.context(
+            "dynamic membership needs a bound remote transport — pass \
+             .transport(TcpTransport::bind(..)?)",
+        )?;
+        let listen = transport.listen_addr().context(
+            "dynamic membership needs a *serving* transport (partners must \
+             reach this node) — bind it, connect-only is not enough",
+        )?;
+        let mcfg = MembershipConfig::from_gossip(&cfg.gossip);
+        let (membership, generation) = if bootstrap {
+            (Membership::bootstrap(listen, mcfg), 1)
+        } else {
+            let mut last_err: Option<anyhow::Error> = None;
+            let mut joined = None;
+            for &seed in &cfg.gossip.seed_peers {
+                match transport.join_remote(seed) {
+                    Ok((table, seed_gen)) => {
+                        joined =
+                            Some((Membership::from_join(table, listen, mcfg.clone())?, seed_gen));
+                        break;
+                    }
+                    Err(e) => {
+                        last_err = Some(anyhow::Error::new(e).context(format!("seed {seed}")))
+                    }
+                }
+            }
+            match joined {
+                Some(m) => m,
+                None => {
+                    return Err(last_err
+                        .expect("seed_peers is non-empty")
+                        .context("no seed answered the dudd-join handshake"))
+                }
+            }
+        };
+        let service = QuantileService::start_shared(cfg.clone())?;
+        let gossip = GossipLoop::start_membership(
+            cfg.gossip.clone(),
+            service.clone(),
+            transport,
+            Arc::new(membership),
+            generation,
+        )
+        .context("starting membership gossip loop")?;
+        Ok(Node {
+            service,
+            gossip: Some(gossip),
+            self_member: 0,
         })
     }
 }

@@ -78,8 +78,9 @@
 //! the reply reaches the wire and rolls back otherwise.
 
 use super::coordinator::QuantileService;
+use super::membership::{MemberTable, Membership};
 use super::swap::ArcSwapCell;
-use super::transport::{InProcessTransport, Transport, TransportError};
+use super::transport::{InProcessTransport, PoolStats, Transport, TransportError};
 use crate::config::GossipLoopConfig;
 use crate::gossip::{select_exchange_partners, GossipSketch, PeerState};
 use crate::graph::Graph;
@@ -91,7 +92,7 @@ use std::net::SocketAddr;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex, MutexGuard, TryLockError};
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// One participant in a [`GossipLoop`].
 #[derive(Debug)]
@@ -271,6 +272,43 @@ pub struct GossipRoundReport {
     pub drift: f64,
     /// Whether the drift is at or below the configured threshold.
     pub converged: bool,
+    /// Per-round movement of the transport's connection-pool and
+    /// frame-mix counters (reuse/stale/expiry, delta-vs-full pushes) —
+    /// all zeros for transports without a pool (in-process). Fleet
+    /// dashboards read this instead of pulling
+    /// [`PoolStats`](super::PoolStats) from the transport directly.
+    pub pool: PoolStats,
+    /// Membership-plane telemetry, when this loop runs the dynamic
+    /// member set (`None` for static fleets).
+    pub membership: Option<MembershipRoundStats>,
+}
+
+/// Per-round membership telemetry
+/// ([`GossipRoundReport::membership`]).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct MembershipRoundStats {
+    /// Members currently alive (self included).
+    pub alive: usize,
+    /// Members currently suspect.
+    pub suspect: usize,
+    /// Tombstones currently held.
+    pub dead: usize,
+    /// New member ids learned since the last round (joins observed).
+    pub joined: usize,
+    /// Members that turned suspect since the last round.
+    pub suspected: usize,
+    /// Members that turned dead since the last round.
+    pub died: usize,
+    /// Membership-plane wire traffic this round (anti-entropy push +
+    /// reply frames), not included in
+    /// [`GossipRoundReport::bytes`].
+    pub bytes: usize,
+    /// This node's member id was claimed by a different address (a
+    /// concurrent-join collision lost the merge tie-break); the loop has
+    /// stopped initiating exchanges and the node must be rejoined for a
+    /// fresh id. See
+    /// [`Membership::identity_lost`](super::Membership::identity_lost).
+    pub identity_lost: bool,
 }
 
 /// Immutable fleet wiring, fixed at [`GossipLoop::start_with`].
@@ -290,6 +328,9 @@ struct Fleet {
     probe_members: Vec<usize>,
     graph: Graph,
     transport: Arc<dyn Transport>,
+    /// The dynamic membership plane, when this loop draws partners from
+    /// a live member table instead of the static member list.
+    membership: Option<Arc<Membership>>,
 }
 
 /// Mutable round bookkeeping, behind the control lock. Never held
@@ -308,6 +349,18 @@ struct Ctl {
     prev_probes: Option<Vec<f64>>,
     drift: f64,
     converged: bool,
+    /// Last round's cumulative transport counters (diffed into the
+    /// per-round [`GossipRoundReport::pool`] telemetry).
+    prev_pool: PoolStats,
+}
+
+/// What one exchange round moved (internal accumulator).
+#[derive(Debug, Default, Clone, Copy)]
+struct RoundTotals {
+    exchanges: usize,
+    failed: usize,
+    bytes: usize,
+    membership_bytes: usize,
 }
 
 /// Everything the loop, its background threads, and the transport's
@@ -338,6 +391,9 @@ pub enum ServeReject {
     /// The reply could not be delivered; the serve-side state change was
     /// rolled back (cancelled exchange).
     Cancelled(String),
+    /// A membership or join frame reached a node whose loop runs a
+    /// static member list (no membership plane).
+    NoMembership,
 }
 
 impl std::fmt::Display for ServeReject {
@@ -347,6 +403,7 @@ impl std::fmt::Display for ServeReject {
             ServeReject::StaleGeneration(g) => write!(f, "stale generation (ours is {g})"),
             ServeReject::Lineage => write!(f, "alpha0 lineage mismatch"),
             ServeReject::Cancelled(e) => write!(f, "reply delivery failed: {e}"),
+            ServeReject::NoMembership => write!(f, "membership plane not enabled"),
         }
     }
 }
@@ -393,6 +450,27 @@ impl NodeHandle {
         deliver: impl FnOnce(&PeerState, u64) -> std::io::Result<()>,
     ) -> Result<(), ServeReject> {
         self.core.serve_exchange(incoming, generation, deliver)
+    }
+
+    /// Serve one inbound membership anti-entropy push: merge `incoming`
+    /// into the node's member table and return `(merged table, our
+    /// restart generation)` for the reply. A push tagged with a newer
+    /// generation schedules a catch-up reseed at the loop's next
+    /// refresh. Fails with [`ServeReject::NoMembership`] on a
+    /// static-member-list node. Never blocks on the member slots.
+    pub fn serve_membership(
+        &self,
+        incoming: &MemberTable,
+        generation: u64,
+    ) -> Result<(MemberTable, u64), ServeReject> {
+        self.core.serve_membership(incoming, generation)
+    }
+
+    /// Serve one `dudd-join` handshake: assign `addr` a stable member id
+    /// and return `(full table, our restart generation)` for the reply.
+    /// Fails with [`ServeReject::NoMembership`] on a static node.
+    pub fn serve_join(&self, addr: SocketAddr) -> Result<(MemberTable, u64), ServeReject> {
+        self.core.serve_join(addr)
     }
 }
 
@@ -594,6 +672,7 @@ impl GossipLoop {
             prev_probes: None,
             drift: f64::INFINITY,
             converged: false,
+            prev_pool: PoolStats::default(),
         };
         let views: Vec<ArcSwapCell<GlobalView>> = states
             .iter()
@@ -619,6 +698,7 @@ impl GossipLoop {
                 probe_members,
                 graph,
                 transport: transport.clone(),
+                membership: None,
             },
             slots: states.into_iter().map(Mutex::new).collect(),
             ctl: Mutex::new(ctl),
@@ -626,6 +706,121 @@ impl GossipLoop {
             views,
             stop: AtomicBool::new(false),
         });
+        Self::spawn(core, &transport, interval_ms)
+    }
+
+    /// Start a **dynamic-membership** node: one local service whose
+    /// exchange partners are drawn each round from the live member view
+    /// (`membership`) instead of a static member list. This is the
+    /// churn-first construction path (§7.2 made a runtime scenario):
+    ///
+    /// * partner selection draws from the table's alive members (plus
+    ///   backoff-gated probes of suspects); dead members are skipped
+    ///   entirely;
+    /// * failed exchanges feed the suspicion clocks, replies of any kind
+    ///   clear them;
+    /// * after each data exchange the initiator piggybacks one
+    ///   membership anti-entropy push–pull on the same (pooled)
+    ///   connection;
+    /// * any change of the **non-dead member set** — a join, a death —
+    ///   restarts the protocol exactly like a local epoch advance
+    ///   (generation bump + reseed-from-own-summary), with the
+    ///   *distinguished* `q̃ = 1` role assigned to the lowest non-dead
+    ///   id, so the generation's mass stays exactly 1 across churn.
+    ///
+    /// The transport must be remote-capable and bound on the address the
+    /// membership table advertises for this node. `initial_generation`
+    /// is the restart generation to start at — the seed's, as returned
+    /// by the join handshake, so a joiner's first exchanges are not
+    /// rejected `StaleGeneration` (bootstrap nodes pass 1). Construction
+    /// normally goes through
+    /// [`NodeBuilder::membership_bootstrap`](super::NodeBuilder::membership_bootstrap)
+    /// / [`NodeBuilder::join`](super::NodeBuilder::join).
+    pub fn start_membership(
+        cfg: GossipLoopConfig,
+        service: Arc<QuantileService>,
+        transport: Arc<dyn Transport>,
+        membership: Arc<Membership>,
+        initial_generation: u64,
+    ) -> Result<Self> {
+        cfg.validate().map_err(anyhow::Error::msg)?;
+        if !transport.supports_remote() {
+            bail!(
+                "dynamic membership needs a remote-capable transport, got {}",
+                transport.name()
+            );
+        }
+        match transport.listen_addr() {
+            Some(addr) if addr == membership.self_addr() => {}
+            Some(addr) => bail!(
+                "membership table advertises {} for this node but the \
+                 transport serves on {addr}",
+                membership.self_addr()
+            ),
+            None => bail!(
+                "dynamic membership needs a serving transport (partners must \
+                 be able to exchange back) — bind the transport first"
+            ),
+        }
+        let self_id = membership.self_id();
+        let snap = service.snapshot();
+        let epoch = snap.epoch();
+        let mut state = PeerState::from_sketch(self_id as usize, snap.sketch());
+        state.q_tilde = if membership.is_distinguished() { 1.0 } else { 0.0 };
+        let generation = initial_generation.max(1);
+        let master = default_rng(cfg.seed);
+        let interval_ms = cfg.round_interval_ms;
+        let ctl = Ctl {
+            rng: master.derive(0x1005),
+            online: vec![true],
+            epochs: vec![epoch],
+            round: 0,
+            generation,
+            pending_generation: 0,
+            prev_probes: None,
+            drift: f64::INFINITY,
+            converged: false,
+            prev_pool: PoolStats::default(),
+        };
+        let views = vec![ArcSwapCell::new(Arc::new(GlobalView {
+            round: 0,
+            generation,
+            epoch,
+            drift: f64::INFINITY,
+            converged: false,
+            state: state.clone(),
+        }))];
+        let core = Arc::new(LoopCore {
+            fleet: Fleet {
+                cfg,
+                members: vec![GossipMember::Service(service)],
+                local: vec![true],
+                local_members: vec![0],
+                serve_member: 0,
+                probe_members: vec![0],
+                // Placeholder: dynamic partner selection never consults
+                // the overlay graph (the live view *is* the overlay —
+                // complete over the non-dead members).
+                graph: crate::graph::complete(2),
+                transport: transport.clone(),
+                membership: Some(membership),
+            },
+            slots: vec![Mutex::new(state)],
+            ctl: Mutex::new(ctl),
+            round_gate: Mutex::new(()),
+            views,
+            stop: AtomicBool::new(false),
+        });
+        Self::spawn(core, &transport, interval_ms)
+    }
+
+    /// Spawn the transport's serve loop and (with an interval) the
+    /// background round thread — the shared tail of both constructors.
+    fn spawn(
+        core: Arc<LoopCore>,
+        transport: &Arc<dyn Transport>,
+        interval_ms: u64,
+    ) -> Result<Self> {
         let server = transport.spawn_server(NodeHandle { core: core.clone() })?;
         let thread = if interval_ms > 0 {
             let core = core.clone();
@@ -654,6 +849,12 @@ impl GossipLoop {
     /// The transport carrying this loop's exchanges.
     pub fn transport(&self) -> &Arc<dyn Transport> {
         &self.core.fleet.transport
+    }
+
+    /// The membership runtime, when this loop runs the dynamic member
+    /// set ([`GossipLoop::start_membership`]); `None` for static fleets.
+    pub fn membership(&self) -> Option<&Arc<Membership>> {
+        self.core.fleet.membership.as_ref()
     }
 
     /// The address this loop's transport serves inbound exchanges on
@@ -777,7 +978,20 @@ impl LoopCore {
                 GossipMember::Service(svc) => {
                     let snap = svc.snapshot();
                     ctl.epochs[i] = snap.epoch();
-                    *guards[k] = PeerState::from_sketch(i, snap.sketch());
+                    *guards[k] = match &self.fleet.membership {
+                        // Dynamic member set: the peer id is the stable
+                        // membership id and the distinguished `q̃ = 1`
+                        // role belongs to the lowest non-dead id in the
+                        // current view (not hard-wired to id 0, which
+                        // may have died).
+                        Some(m) => {
+                            let mut st =
+                                PeerState::from_sketch(m.self_id() as usize, snap.sketch());
+                            st.q_tilde = if m.is_distinguished() { 1.0 } else { 0.0 };
+                            st
+                        }
+                        None => PeerState::from_sketch(i, snap.sketch()),
+                    };
                 }
                 GossipMember::Static(sketch) => {
                     *guards[k] = PeerState::from_sketch(i, sketch);
@@ -793,13 +1007,21 @@ impl LoopCore {
     }
 
     /// Refresh step: restart the protocol when local data moved (epoch
-    /// advance ⇒ strictly newer generation) or a partner reported a newer
-    /// generation (adopt it). Returns whether a reseed happened.
+    /// advance ⇒ strictly newer generation), a partner reported a newer
+    /// generation (adopt it), or the membership view's non-dead set
+    /// changed (join/death ⇒ strictly newer generation, so mass
+    /// re-anchors on the surviving members). Returns whether a reseed
+    /// happened.
     fn refresh(&self) -> bool {
         // Cheap peek without slot locks; the decisive check repeats
         // under the full locks (a concurrent serve may have caught the
         // generation up in between).
-        let needed = {
+        let view_peek = self
+            .fleet
+            .membership
+            .as_ref()
+            .is_some_and(|m| m.view_change_pending());
+        let needed = view_peek || {
             let ctl = self.lock_ctl();
             self.any_stale(&ctl) || ctl.pending_generation > ctl.generation
         };
@@ -810,7 +1032,12 @@ impl LoopCore {
         let mut ctl = self.lock_ctl();
         let wanted = std::mem::take(&mut ctl.pending_generation);
         let stale = self.any_stale(&ctl);
-        if !stale && wanted <= ctl.generation {
+        let view_changed = self
+            .fleet
+            .membership
+            .as_ref()
+            .is_some_and(|m| m.take_view_changed());
+        if !stale && !view_changed && wanted <= ctl.generation {
             return false;
         }
         self.reseed_locked(&mut ctl, &mut guards);
@@ -818,7 +1045,7 @@ impl LoopCore {
         // generation near u64::MAX — the counter must never overflow-panic
         // mid-round or wrap back to 0 (which would read as "stale" to the
         // whole fleet). Frame authentication is the real fix (ROADMAP).
-        let bumped = if stale {
+        let bumped = if stale || view_changed {
             ctl.generation.saturating_add(1)
         } else {
             ctl.generation
@@ -869,26 +1096,33 @@ impl LoopCore {
                 GossipMember::Remote(addr) => *addr,
                 _ => unreachable!("non-local member is remote by construction"),
             };
-            // Phase 1 — connect with NO lock held: a dead peer's connect
-            // deadline burns here while inbound serves keep landing.
-            let chan = self.fleet.transport.open_remote(addr)?;
-            // Phase 2 — push–pull holding only our own slot.
-            let mut guard = self.lock_slot(l);
-            let gen = self.lock_ctl().generation;
-            match self.fleet.transport.exchange_on(chan, &mut guard, gen) {
-                Err(TransportError::StaleChannel(_)) => {
-                    // The pooled connection was dead before any reply
-                    // byte (see `TransportError::StaleChannel` for the
-                    // safety argument). Release the slot, open a fresh
-                    // connection, retry once.
-                    drop(guard);
-                    let chan = self.fleet.transport.open_remote(addr)?;
-                    let mut guard = self.lock_slot(l);
-                    let gen = self.lock_ctl().generation;
-                    self.fleet.transport.exchange_on(chan, &mut guard, gen)
-                }
-                r => r,
+            self.remote_exchange(l, addr)
+        }
+    }
+
+    /// The remote half of [`LoopCore::one_exchange`], addressed
+    /// directly — shared by the static member list and the dynamic
+    /// membership round.
+    fn remote_exchange(&self, l: usize, addr: SocketAddr) -> Result<usize, TransportError> {
+        // Phase 1 — connect with NO lock held: a dead peer's connect
+        // deadline burns here while inbound serves keep landing.
+        let chan = self.fleet.transport.open_remote(addr)?;
+        // Phase 2 — push–pull holding only our own slot.
+        let mut guard = self.lock_slot(l);
+        let gen = self.lock_ctl().generation;
+        match self.fleet.transport.exchange_on(chan, &mut guard, gen) {
+            Err(TransportError::StaleChannel(_)) => {
+                // The pooled connection was dead before any reply
+                // byte (see `TransportError::StaleChannel` for the
+                // safety argument). Release the slot, open a fresh
+                // connection, retry once.
+                drop(guard);
+                let chan = self.fleet.transport.open_remote(addr)?;
+                let mut guard = self.lock_slot(l);
+                let gen = self.lock_ctl().generation;
+                self.fleet.transport.exchange_on(chan, &mut guard, gen)
             }
+            r => r,
         }
     }
 
@@ -898,7 +1132,10 @@ impl LoopCore {
     /// engine (permutation, then per-initiator partner draws in
     /// permutation order), which is what keeps the PR 2 parity test
     /// bit-exact — then the exchanges execute with per-slot locking.
-    fn exchange_round(&self) -> (usize, usize, usize) {
+    fn exchange_round(&self) -> RoundTotals {
+        if let Some(m) = self.fleet.membership.clone() {
+            return self.exchange_round_dynamic(&m);
+        }
         let p = self.slots.len();
         let plan: Vec<(usize, Vec<usize>)> = {
             let mut ctl = self.lock_ctl();
@@ -922,29 +1159,126 @@ impl LoopCore {
             }
             plan
         };
-        let mut exchanges = 0;
-        let mut failed = 0;
-        let mut bytes = 0usize;
+        let mut totals = RoundTotals::default();
         for (l, partners) in plan {
             for j in partners {
                 match self.one_exchange(l, j) {
                     Ok(b) => {
-                        exchanges += 1;
-                        bytes += b;
+                        totals.exchanges += 1;
+                        totals.bytes += b;
                     }
                     Err(TransportError::StaleGeneration(g)) => {
                         // We're behind the fleet's restart: catch up at
                         // the next refresh. The exchange itself was
                         // cancelled (§7.2).
-                        failed += 1;
+                        totals.failed += 1;
                         let mut ctl = self.lock_ctl();
                         ctl.pending_generation = ctl.pending_generation.max(g);
                     }
-                    Err(_) => failed += 1,
+                    Err(_) => totals.failed += 1,
                 }
             }
         }
-        (exchanges, failed, bytes)
+        totals
+    }
+
+    /// One round over the **dynamic member set**: partners are drawn
+    /// from the live view (alive members, plus backoff-elapsed probes of
+    /// suspects — dead members never burn a connect deadline again), the
+    /// exchange outcome feeds the suspicion clocks, and each contacted
+    /// partner also gets one membership anti-entropy push–pull on the
+    /// same pooled connection.
+    fn exchange_round_dynamic(&self, m: &Arc<Membership>) -> RoundTotals {
+        // A node whose id was claimed by another address (concurrent
+        // joins through different seeds collided) must stop initiating:
+        // gossiping under a stolen id would silently corrupt the
+        // generation's q̃ mass. The operator rejoins it for a fresh id;
+        // the report's membership section carries the flag.
+        if m.identity_lost() {
+            return RoundTotals::default();
+        }
+        let now = Instant::now();
+        // Wall-clock sweep first: a suspect whose probes are
+        // backoff-gated still turns dead on schedule.
+        m.tick(now);
+        m.gc(now);
+        let candidates = m.eligible_partners(now);
+        let plan: Vec<(u64, SocketAddr)> = {
+            // The engine's partial-Fisher–Yates draw over the
+            // deterministically ordered candidate list.
+            let mut ctl = self.lock_ctl();
+            let mut idx: Vec<usize> = Vec::new();
+            let k = crate::gossip::draw_fan_out(
+                candidates.len(),
+                self.fleet.cfg.fan_out,
+                &mut idx,
+                &mut ctl.rng,
+            );
+            idx[..k].iter().map(|&i| candidates[i]).collect()
+        };
+        let l = self.fleet.serve_member;
+        let mut totals = RoundTotals::default();
+        for (id, addr) in plan {
+            // Any reply at all — including Busy/StaleGeneration rejects
+            // — proves the partner alive; only connection-level failures
+            // feed the suspicion clocks.
+            let spoke = match self.remote_exchange(l, addr) {
+                Ok(b) => {
+                    totals.exchanges += 1;
+                    totals.bytes += b;
+                    true
+                }
+                Err(TransportError::StaleGeneration(g)) => {
+                    totals.failed += 1;
+                    let mut ctl = self.lock_ctl();
+                    ctl.pending_generation = ctl.pending_generation.max(g);
+                    true
+                }
+                Err(
+                    TransportError::Io(_)
+                    | TransportError::StaleChannel(_)
+                    | TransportError::Unreachable(_),
+                ) => {
+                    totals.failed += 1;
+                    false
+                }
+                Err(_) => {
+                    totals.failed += 1;
+                    true
+                }
+            };
+            if spoke {
+                m.record_success(id);
+                // Piggyback the membership plane on the warm connection
+                // — unless this partner already rejected the plane
+                // (static node / pre-plane peer): repeating the push
+                // would burn a frame pair (and, for a Malformed-answering
+                // peer, the pooled connection) every round for nothing.
+                if m.plane_enabled(id) {
+                    let gen = self.lock_ctl().generation;
+                    match self.fleet.transport.exchange_membership(addr, gen, &m.table()) {
+                        Ok((table, peer_gen, b)) => {
+                            totals.membership_bytes += b;
+                            m.merge_remote(&table);
+                            if peer_gen > gen {
+                                let mut ctl = self.lock_ctl();
+                                ctl.pending_generation =
+                                    ctl.pending_generation.max(peer_gen);
+                            }
+                        }
+                        Err(
+                            TransportError::NoMembership | TransportError::Protocol(_),
+                        ) => m.mark_planeless(id),
+                        // Transient failures just wait for the next round
+                        // (the data exchange above already counted).
+                        Err(_) => {}
+                    }
+                }
+            } else {
+                m.record_failure(id);
+            }
+        }
+        totals
     }
 
     /// One full refresh → exchange → publish round.
@@ -952,8 +1286,23 @@ impl LoopCore {
         let _gate = self.round_gate.lock().expect("gossip round gate poisoned");
         let reseeded = self.refresh();
         self.lock_ctl().round += 1;
-        let (exchanges, failed, bytes) = self.exchange_round();
+        let totals = self.exchange_round();
         let cur = self.probes();
+        let pool_now = self.fleet.transport.pool_stats().unwrap_or_default();
+        let membership = self.fleet.membership.as_ref().map(|m| {
+            let (alive, suspect, dead) = m.counts();
+            let ev = m.take_events();
+            MembershipRoundStats {
+                alive,
+                suspect,
+                dead,
+                joined: ev.joined,
+                suspected: ev.suspected,
+                died: ev.died,
+                bytes: totals.membership_bytes,
+                identity_lost: m.identity_lost(),
+            }
+        });
         let report = {
             let mut ctl = self.lock_ctl();
             ctl.drift = match (&ctl.prev_probes, &cur) {
@@ -966,15 +1315,19 @@ impl LoopCore {
             };
             ctl.converged = ctl.drift <= self.fleet.cfg.convergence_rel;
             ctl.prev_probes = cur;
+            let pool = pool_now.delta_since(ctl.prev_pool);
+            ctl.prev_pool = pool_now;
             GossipRoundReport {
                 round: ctl.round,
                 generation: ctl.generation,
                 reseeded,
-                exchanges,
-                failed,
-                bytes,
+                exchanges: totals.exchanges,
+                failed: totals.failed,
+                bytes: totals.bytes,
                 drift: ctl.drift,
                 converged: ctl.converged,
+                pool,
+                membership,
             }
         };
         self.publish_all();
@@ -1023,6 +1376,14 @@ impl LoopCore {
         generation: u64,
         deliver: impl FnOnce(&PeerState, u64) -> std::io::Result<()>,
     ) -> Result<(), ServeReject> {
+        // An inbound push is liveness evidence for its sender even when
+        // the exchange itself ends Busy/stale: without this, a member we
+        // can't dial but that reaches us fine (asymmetric routing) would
+        // be suspected and killed while actively communicating —
+        // dead/refute flapping that churns the whole fleet's generation.
+        if let Some(m) = &self.fleet.membership {
+            m.record_success(incoming.id as u64);
+        }
         // Try-lock every local slot in ascending order — never blocks.
         // (A remote fleet has exactly one local slot; holding all of
         // them is what lets a heard newer generation reseed atomically.)
@@ -1087,6 +1448,43 @@ impl LoopCore {
                 Err(ServeReject::Cancelled(e.to_string()))
             }
         }
+    }
+
+    /// Serve one inbound membership push (the body of
+    /// [`NodeHandle::serve_membership`]). Touches no member slot — the
+    /// table merge and the generation peek are both short lock-free-ish
+    /// critical sections, so membership traffic lands even while a round
+    /// is mid-exchange.
+    fn serve_membership(
+        &self,
+        incoming: &MemberTable,
+        generation: u64,
+    ) -> Result<(MemberTable, u64), ServeReject> {
+        let Some(m) = &self.fleet.membership else {
+            return Err(ServeReject::NoMembership);
+        };
+        m.merge_remote(incoming);
+        let gen = {
+            let mut ctl = self.lock_ctl();
+            if generation > ctl.generation {
+                // The sender's fleet restarted ahead of us: catch up at
+                // the next refresh (states never mix across generations,
+                // so nothing to do on the slots here).
+                ctl.pending_generation = ctl.pending_generation.max(generation);
+            }
+            ctl.generation
+        };
+        Ok((m.table(), gen))
+    }
+
+    /// Serve one `dudd-join` handshake (the body of
+    /// [`NodeHandle::serve_join`]).
+    fn serve_join(&self, addr: SocketAddr) -> Result<(MemberTable, u64), ServeReject> {
+        let Some(m) = &self.fleet.membership else {
+            return Err(ServeReject::NoMembership);
+        };
+        let table = m.serve_join(addr);
+        Ok((table, self.lock_ctl().generation))
     }
 }
 
@@ -1215,6 +1613,64 @@ mod tests {
         assert!(r2.converged);
         assert!(gl.view().converged());
         gl.shutdown();
+    }
+
+    /// ISSUE 5 satellite: the per-round report carries the pool/frame
+    /// telemetry (all zeros for the pool-less in-process transport) and
+    /// no membership section on a static fleet.
+    #[test]
+    fn in_process_report_has_empty_pool_and_no_membership() {
+        let gl = GossipLoop::start(
+            GossipLoopConfig::default(),
+            vec![static_member(&[1.0, 2.0]), static_member(&[3.0, 4.0])],
+        )
+        .unwrap();
+        let r = gl.step();
+        assert_eq!(r.pool, PoolStats::default());
+        assert!(r.membership.is_none());
+        assert!(gl.membership().is_none());
+        gl.shutdown();
+    }
+
+    #[test]
+    fn start_membership_validates_transport() {
+        use crate::service::membership::{Membership, MembershipConfig};
+        use crate::service::TcpTransport;
+
+        let svc = service_with(&[1.0, 2.0]);
+        let cfg = GossipLoopConfig::default();
+        let m = Arc::new(Membership::bootstrap(
+            "127.0.0.1:9100".parse().unwrap(),
+            MembershipConfig::default(),
+        ));
+
+        // In-process transport cannot carry a dynamic fleet.
+        let err = GossipLoop::start_membership(
+            cfg.clone(),
+            svc.clone(),
+            Arc::new(InProcessTransport),
+            m.clone(),
+            1,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("remote-capable"), "{err}");
+
+        // Connect-only transport: nobody could exchange back.
+        let t = TcpTransport::connect_only(Duration::from_millis(50)).unwrap();
+        let err = GossipLoop::start_membership(cfg.clone(), svc.clone(), Arc::new(t), m, 1)
+            .unwrap_err();
+        assert!(err.to_string().contains("serving transport"), "{err}");
+
+        // Advertised address must be the transport's listen address.
+        let t = TcpTransport::bind("127.0.0.1:0", Duration::from_millis(50)).unwrap();
+        let wrong = Arc::new(Membership::bootstrap(
+            "127.0.0.1:9101".parse().unwrap(),
+            MembershipConfig::default(),
+        ));
+        let err = GossipLoop::start_membership(cfg, svc.clone(), Arc::new(t), wrong, 1)
+            .unwrap_err();
+        assert!(err.to_string().contains("advertises"), "{err}");
+        Arc::try_unwrap(svc).unwrap().shutdown();
     }
 
     #[test]

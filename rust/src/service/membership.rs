@@ -1,0 +1,1336 @@
+//! Gossip-based membership: a versioned member table that rides the
+//! `UDDX` exchange traffic, so nodes join and leave a *running* fleet.
+//!
+//! Before this module a fleet was a static address book: every node
+//! listed every other in one global member order, and a single join or
+//! crash meant restarting the whole deployment. The paper's protocol,
+//! though, is defined over an unstructured P2P overlay whose defining
+//! property is churn (§7.2) — P2PTFHH (Pulimeno et al., *Distributed
+//! mining of time-faded heavy hitters*) shows the same gossip machinery
+//! can carry the membership view itself, and Haeupler et al. (*Optimal
+//! Gossip Algorithms for Quantile Computations*) ground why averaging
+//! convergence survives a changing peer set.
+//!
+//! # The member table
+//!
+//! Every node maintains a [`MemberTable`]: one [`MemberEntry`] per known
+//! member — `(id, addr, incarnation, status ∈ {alive, suspect, dead})`.
+//! Tables spread by **anti-entropy**: after a data exchange the
+//! initiator also pushes its table (`MembershipPush` frame) and merges
+//! the partner's reply (`MembershipReply`), so any table change reaches
+//! every node in O(log p) rounds. The merge
+//! ([`MemberTable::merge`]) is deterministic and commutative in the
+//! limit, so all nodes converge to byte-identical tables:
+//!
+//! * a **higher incarnation** wins outright (the member itself is the
+//!   only writer that bumps its incarnation — that is how it refutes a
+//!   false suspicion);
+//! * at **equal incarnation** the worse status wins
+//!   (dead > suspect > alive) — an observation of failure can only be
+//!   overridden by the member's own refutation (next incarnation);
+//! * ties beyond that (same id, incarnation, status, different addr —
+//!   only possible after an id collision) break on the lexicographically
+//!   smaller address, purely so the order of merges cannot matter.
+//!
+//! # Join handshake (`dudd-join`)
+//!
+//! A joining node contacts **any** seed with a `JoinRequest` frame
+//! carrying its listen address; the seed assigns it a stable id (one
+//! above the highest id it has ever seen, so a garbage-collected
+//! tombstone's id is never re-minted — or the *same* id at the next
+//! incarnation when the address is rejoining after a crash) and answers
+//! with the full table. The joiner adopts the table, finds its own entry by address,
+//! and starts gossiping; the new entry spreads by anti-entropy and every
+//! node's next refresh restarts the protocol (see below).
+//!
+//! # Suspicion, refutation, death, tombstones
+//!
+//! Failed exchanges — the observations [`TcpTransport`] already
+//! surfaces (`TransportError::Io`/`StaleChannel`) — drive suspicion
+//! locally: a member whose failure streak outlives
+//! `gossip_suspect_after_ms` turns **suspect**, and after another such
+//! interval **dead**. Any reply at all (including `Busy` and
+//! `StaleGeneration` rejects) is liveness evidence and clears the
+//! streak. A member that learns it is suspected refutes by bumping its
+//! own incarnation (alive again, one table change that spreads). Dead
+//! entries are **tombstones**: they keep spreading (so a node that
+//! missed the death cannot resurrect the member) until
+//! `gossip_tombstone_ttl_ms` after the local node observed the death,
+//! then they are garbage-collected.
+//!
+//! Suspect and dead members also stop burning the exchange deadline:
+//! connect attempts to a **suspect** member back off exponentially
+//! (restarting at the base on the suspect transition, then doubling per
+//! consecutive failure, capped), and **dead** members are never
+//! selected at all. The status transitions themselves are wall-clock
+//! driven — a per-round [`Membership::tick`] sweep — so a suspect whose
+//! probes are backoff-gated (or who is never drawn as a partner) still
+//! turns dead exactly one suspicion interval after turning suspect.
+//!
+//! # Mass accounting under churn
+//!
+//! The protocol's `q̃` mass must sum to exactly 1 per restart generation
+//! for the fleet-size estimate `p̃ = 1/q̃` to be unbiased. Membership
+//! makes the distinguished peer (Algorithm 3's `q̃ = 1`) **dynamic**:
+//! the member with the *lowest non-dead id* is distinguished. Whenever a
+//! node's **non-dead id set** changes — a join, a death, a tombstone
+//! resurrection — *or a live member's incarnation advances* (a
+//! crash-rejoin lost that member's averaged state mid-generation; a
+//! refutation means a suspicion round-trip happened — both re-anchor
+//! safely), its next refresh bumps the restart generation and
+//! reseeds from its own summary ([`Membership::take_view_changed`]); the
+//! generation sync of the exchange frames drags the rest of the fleet
+//! along, and because the *last* node to learn of the change also
+//! bumps, every node's final reseed uses the converged table — mass is
+//! exactly 1 again among the survivors.
+//!
+//! The wire layout of the membership frames is normative in
+//! `docs/PROTOCOL.md` §9; [`crate::sketch::codec`] implements it.
+//!
+//! [`TcpTransport`]: super::TcpTransport
+
+use crate::config::GossipLoopConfig;
+use std::collections::{BTreeMap, HashMap};
+use std::net::SocketAddr;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Liveness status of a member, as recorded in the table.
+///
+/// The numeric codes are wire bytes (normative in `docs/PROTOCOL.md`
+/// §9) *and* the merge precedence at equal incarnation: a larger code
+/// wins, so an observation of failure can only be overridden by the
+/// member's own refutation at the next incarnation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum MemberStatus {
+    /// Exchanges complete (or no contrary evidence yet).
+    Alive,
+    /// A failure streak outlived `gossip_suspect_after_ms`; connect
+    /// attempts back off, the member may refute.
+    Suspect,
+    /// The streak outlived two suspicion intervals; the entry is a
+    /// tombstone that spreads until its TTL, and the member no longer
+    /// participates in partner selection or the distinguished-peer rule.
+    Dead,
+}
+
+impl MemberStatus {
+    /// The wire code (also the equal-incarnation merge precedence).
+    pub fn code(self) -> u8 {
+        match self {
+            MemberStatus::Alive => 0,
+            MemberStatus::Suspect => 1,
+            MemberStatus::Dead => 2,
+        }
+    }
+
+    /// Decode a wire code.
+    pub fn from_code(code: u8) -> Option<Self> {
+        match code {
+            0 => Some(MemberStatus::Alive),
+            1 => Some(MemberStatus::Suspect),
+            2 => Some(MemberStatus::Dead),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for MemberStatus {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            MemberStatus::Alive => write!(f, "alive"),
+            MemberStatus::Suspect => write!(f, "suspect"),
+            MemberStatus::Dead => write!(f, "dead"),
+        }
+    }
+}
+
+/// One member's versioned record.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct MemberEntry {
+    /// Stable member id, assigned once by the join handshake (the
+    /// bootstrap seed is id 0). Doubles as the protocol peer id.
+    pub id: u64,
+    /// The member's exchange listen address.
+    pub addr: SocketAddr,
+    /// Version counter bumped **only by the member itself** (on rejoin
+    /// and on refuting a suspicion). Higher incarnation wins every
+    /// merge.
+    pub incarnation: u64,
+    /// Liveness status at this incarnation.
+    pub status: MemberStatus,
+}
+
+impl MemberEntry {
+    /// A fresh alive entry at incarnation 1.
+    pub fn alive(id: u64, addr: SocketAddr) -> Self {
+        Self {
+            id,
+            addr,
+            incarnation: 1,
+            status: MemberStatus::Alive,
+        }
+    }
+
+    /// Merge precedence: does `other` supersede `self`?
+    ///
+    /// Higher incarnation wins; at equal incarnation the worse status
+    /// wins; remaining ties (an id collision) break on the smaller
+    /// address string so merge order can never matter.
+    fn superseded_by(&self, other: &MemberEntry) -> bool {
+        match other.incarnation.cmp(&self.incarnation) {
+            std::cmp::Ordering::Greater => true,
+            std::cmp::Ordering::Less => false,
+            std::cmp::Ordering::Equal => match other.status.cmp(&self.status) {
+                std::cmp::Ordering::Greater => true,
+                std::cmp::Ordering::Less => false,
+                std::cmp::Ordering::Equal => {
+                    other.addr.to_string() < self.addr.to_string()
+                }
+            },
+        }
+    }
+}
+
+/// What one [`MemberTable::merge`] (or local transition) changed —
+/// accumulated per round into
+/// [`MembershipRoundStats`](super::MembershipRoundStats).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct MergeOutcome {
+    /// Any entry changed (the table must keep spreading).
+    pub changed: bool,
+    /// New member ids learned.
+    pub joined: usize,
+    /// Members that turned suspect.
+    pub suspected: usize,
+    /// Members that turned dead.
+    pub died: usize,
+    /// The **non-dead id set** changed — the trigger for a protocol
+    /// restart (generation bump + reseed), because the distinguished
+    /// peer and the mass denominator both depend on it.
+    pub view_changed: bool,
+}
+
+impl MergeOutcome {
+    fn absorb(&mut self, other: MergeOutcome) {
+        self.changed |= other.changed;
+        self.joined += other.joined;
+        self.suspected += other.suspected;
+        self.died += other.died;
+        self.view_changed |= other.view_changed;
+    }
+}
+
+/// The versioned member table: one entry per known member, ordered by
+/// id (which makes the canonical encoding — and therefore table
+/// comparison across nodes — deterministic).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct MemberTable {
+    entries: BTreeMap<u64, MemberEntry>,
+}
+
+impl MemberTable {
+    /// An empty table.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Entry count (tombstones included).
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// True when no members are known.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// The entry for `id`, if known.
+    pub fn get(&self, id: u64) -> Option<&MemberEntry> {
+        self.entries.get(&id)
+    }
+
+    /// The entry whose listen address is `addr`, if any (lowest id wins
+    /// when an address appears twice after an id collision).
+    pub fn by_addr(&self, addr: SocketAddr) -> Option<&MemberEntry> {
+        self.entries.values().find(|e| e.addr == addr)
+    }
+
+    /// Entries in ascending id order.
+    pub fn iter(&self) -> impl Iterator<Item = &MemberEntry> {
+        self.entries.values()
+    }
+
+    /// Highest assigned id (`None` for an empty table).
+    pub fn max_id(&self) -> Option<u64> {
+        self.entries.keys().next_back().copied()
+    }
+
+    /// The lowest non-dead id — the **distinguished peer** (Algorithm
+    /// 3's `q̃ = 1` role) under churn.
+    pub fn distinguished_id(&self) -> Option<u64> {
+        self.entries
+            .values()
+            .find(|e| e.status != MemberStatus::Dead)
+            .map(|e| e.id)
+    }
+
+    /// `(alive, suspect, dead)` counts.
+    pub fn counts(&self) -> (usize, usize, usize) {
+        let mut c = (0, 0, 0);
+        for e in self.entries.values() {
+            match e.status {
+                MemberStatus::Alive => c.0 += 1,
+                MemberStatus::Suspect => c.1 += 1,
+                MemberStatus::Dead => c.2 += 1,
+            }
+        }
+        c
+    }
+
+    /// Insert or supersede one entry (higher incarnation wins, then the
+    /// worse status, then the smaller address — the module docs' merge
+    /// precedence), reporting what changed.
+    pub fn upsert(&mut self, entry: MemberEntry) -> MergeOutcome {
+        let mut out = MergeOutcome::default();
+        match self.entries.get_mut(&entry.id) {
+            None => {
+                out.changed = true;
+                // A newly learned tombstone is a death, not a join (it
+                // may even be a GC'd tombstone pushed back by a
+                // straggler — the member never re-entered the fleet).
+                match entry.status {
+                    MemberStatus::Alive => out.joined = 1,
+                    MemberStatus::Suspect => {
+                        out.joined = 1;
+                        out.suspected = 1;
+                    }
+                    MemberStatus::Dead => out.died = 1,
+                }
+                out.view_changed = entry.status != MemberStatus::Dead;
+                self.entries.insert(entry.id, entry);
+            }
+            Some(cur) if cur.superseded_by(&entry) => {
+                out.changed = true;
+                let was_dead = cur.status == MemberStatus::Dead;
+                let is_dead = entry.status == MemberStatus::Dead;
+                // The protocol must restart when the non-dead set
+                // changes — AND when a live member's incarnation
+                // advances: that is a rejoin (its averaged state died
+                // with the old process, stranding its q̃ share in the
+                // current generation) or a refutation (a suspicion
+                // round-trip happened). Either way re-anchoring the
+                // mass is the safe direction; a missed restart breaks
+                // `p̃ = 1/q̃` until some unrelated churn fixes it.
+                out.view_changed = was_dead != is_dead
+                    || (entry.incarnation > cur.incarnation && !is_dead);
+                if !was_dead && is_dead {
+                    out.died = 1;
+                }
+                if cur.status != MemberStatus::Suspect
+                    && entry.status == MemberStatus::Suspect
+                {
+                    out.suspected = 1;
+                }
+                *cur = entry;
+            }
+            Some(_) => {}
+        }
+        out
+    }
+
+    /// Merge a remote table in (anti-entropy receive side). Entirely
+    /// deterministic: merging the same set of entries in any order
+    /// yields the same table.
+    pub fn merge(&mut self, incoming: &MemberTable) -> MergeOutcome {
+        let mut out = MergeOutcome::default();
+        for e in incoming.entries.values() {
+            out.absorb(self.upsert(e.clone()));
+        }
+        out
+    }
+
+    /// Remove the tombstone for `id` (tombstone GC).
+    fn remove(&mut self, id: u64) {
+        self.entries.remove(&id);
+    }
+}
+
+/// Timing knobs of the membership runtime, normally derived from the
+/// validated `gossip_*` config keys via [`MembershipConfig::from_gossip`].
+#[derive(Debug, Clone)]
+pub struct MembershipConfig {
+    /// A failure streak older than this turns an alive member suspect;
+    /// a suspect streak older than *another* such interval turns it
+    /// dead (`gossip_suspect_after_ms`).
+    pub suspect_after: Duration,
+    /// Dead entries are garbage-collected this long after the local
+    /// node observed the death (`gossip_tombstone_ttl_ms`). Keep it
+    /// comfortably above the anti-entropy spread time, or a node that
+    /// GC'd early keeps re-learning the tombstone from its peers.
+    pub tombstone_ttl: Duration,
+    /// First retry delay of the suspect-member backoff; doubles per
+    /// consecutive failure up to [`MembershipConfig::backoff_cap`].
+    pub backoff_base: Duration,
+    /// Ceiling of the exponential backoff.
+    pub backoff_cap: Duration,
+}
+
+impl Default for MembershipConfig {
+    fn default() -> Self {
+        Self {
+            suspect_after: Duration::from_millis(5_000),
+            tombstone_ttl: Duration::from_millis(60_000),
+            backoff_base: Duration::from_millis(250),
+            backoff_cap: Duration::from_millis(30_000),
+        }
+    }
+}
+
+impl MembershipConfig {
+    /// Derive the timing knobs from the loop configuration
+    /// (`gossip_suspect_after_ms`, `gossip_tombstone_ttl_ms`; the
+    /// backoff base is a quarter of the suspicion interval, so a crashed
+    /// peer draws at most a handful of full-deadline connects before the
+    /// backoff dominates).
+    pub fn from_gossip(cfg: &GossipLoopConfig) -> Self {
+        let suspect_after = Duration::from_millis(cfg.suspect_after_ms);
+        Self {
+            suspect_after,
+            tombstone_ttl: Duration::from_millis(cfg.tombstone_ttl_ms),
+            backoff_base: (suspect_after / 4).max(Duration::from_millis(1)),
+            backoff_cap: Duration::from_millis(30_000),
+        }
+    }
+}
+
+/// Local (never gossiped) per-member observation clocks.
+#[derive(Debug, Default)]
+struct Obs {
+    /// Start of the current failure streak (`None` = no streak).
+    streak_start: Option<Instant>,
+    /// Consecutive failures in the streak (drives the backoff).
+    failures: u32,
+    /// Earliest next connect attempt (suspect members only).
+    next_attempt: Option<Instant>,
+    /// When this node observed the member turn suspect (the death clock
+    /// starts here, so the refutation window is always one full
+    /// suspicion interval *after* the suspect transition).
+    suspect_since: Option<Instant>,
+    /// The member rejected the membership plane (`NoMembership`, or a
+    /// pre-plane peer answering `Malformed`): stop pushing tables to it.
+    no_plane: bool,
+    /// When this node observed the member dead (tombstone GC clock).
+    dead_since: Option<Instant>,
+}
+
+#[derive(Debug)]
+struct Inner {
+    table: MemberTable,
+    obs: HashMap<u64, Obs>,
+    /// Highest member id ever seen (survives tombstone GC), so
+    /// [`Membership::serve_join`] never re-mints a collected id.
+    assigned_high: u64,
+    /// Accumulated events since the last [`Membership::take_events`].
+    pending: MergeOutcome,
+    /// The non-dead id set changed since the last
+    /// [`Membership::take_view_changed`] — the gossip loop's
+    /// restart-the-protocol trigger. Kept separate from `pending`
+    /// because the refresh step consumes it at a different time than
+    /// the round telemetry.
+    view_dirty: bool,
+    /// This node's id now maps to a *different address* in the table:
+    /// a concurrent join through another seed collided on the id and
+    /// the merge tie-break kept the other node. Set sticky; the loop
+    /// stops initiating (see [`Membership::identity_lost`]).
+    identity_lost: bool,
+}
+
+impl Inner {
+    fn absorb(&mut self, out: MergeOutcome) {
+        self.pending.absorb(out);
+        self.view_dirty |= out.view_changed;
+        self.assigned_high = self.assigned_high.max(self.table.max_id().unwrap_or(0));
+    }
+
+    /// Apply the time-based status transition for one member's failure
+    /// streak (alive → suspect → dead). Shared by the per-failure path
+    /// and the per-round [`Membership::tick`], so a backoff-gated (or
+    /// never-selected) member still dies on schedule.
+    fn streak_transition(
+        &mut self,
+        id: u64,
+        now: Instant,
+        cfg: &MembershipConfig,
+    ) -> MergeOutcome {
+        let Some(started) = self.obs.get(&id).and_then(|o| o.streak_start) else {
+            return MergeOutcome::default();
+        };
+        let Some(cur) = self.table.get(id).cloned() else {
+            return MergeOutcome::default();
+        };
+        let elapsed = now.duration_since(started);
+        let next = match cur.status {
+            MemberStatus::Alive if elapsed >= cfg.suspect_after => MemberStatus::Suspect,
+            MemberStatus::Suspect => {
+                // The death clock runs from when *we* saw the member turn
+                // suspect (set below on our own transition; set here on
+                // first sight of a merged-in suspicion), never from the
+                // streak start — the member always gets one full
+                // suspicion interval to refute, however late the suspect
+                // promotion itself fired.
+                let since = *self
+                    .obs
+                    .entry(id)
+                    .or_default()
+                    .suspect_since
+                    .get_or_insert(now);
+                if now.duration_since(since) >= cfg.suspect_after {
+                    MemberStatus::Dead
+                } else {
+                    return MergeOutcome::default();
+                }
+            }
+            _ => return MergeOutcome::default(),
+        };
+        let out = self.table.upsert(MemberEntry {
+            status: next,
+            ..cur
+        });
+        let o = self.obs.entry(id).or_default();
+        match next {
+            MemberStatus::Suspect => {
+                // The backoff restarts at its base on the suspect
+                // transition: the failures piled up while the member was
+                // still alive (ungated) must not inflate the first
+                // probe's delay to the cap.
+                o.failures = 0;
+                o.next_attempt = Some(now + cfg.backoff_base);
+                o.suspect_since = Some(now);
+            }
+            MemberStatus::Dead => {
+                o.dead_since.get_or_insert(now);
+            }
+            MemberStatus::Alive => {}
+        }
+        self.absorb(out);
+        out
+    }
+}
+
+/// The shared membership runtime of one node: the table plus the local
+/// suspicion/backoff/GC clocks. Cheap to share (`Arc`); every method
+/// takes one short internal lock and never blocks on sockets.
+#[derive(Debug)]
+pub struct Membership {
+    self_id: u64,
+    self_addr: SocketAddr,
+    cfg: MembershipConfig,
+    inner: Mutex<Inner>,
+}
+
+impl Membership {
+    /// Found a new fleet: this node is the bootstrap seed, member id 0.
+    pub fn bootstrap(self_addr: SocketAddr, cfg: MembershipConfig) -> Self {
+        let mut table = MemberTable::new();
+        table.upsert(MemberEntry::alive(0, self_addr));
+        Self {
+            self_id: 0,
+            self_addr,
+            cfg,
+            inner: Mutex::new(Inner {
+                assigned_high: table.max_id().unwrap_or(0),
+                table,
+                obs: HashMap::new(),
+                pending: MergeOutcome::default(),
+                view_dirty: false,
+                identity_lost: false,
+            }),
+        }
+    }
+
+    /// Adopt the table a seed answered the join handshake with; the
+    /// node's own entry is located by its listen address.
+    pub fn from_join(
+        table: MemberTable,
+        self_addr: SocketAddr,
+        cfg: MembershipConfig,
+    ) -> crate::Result<Self> {
+        let me = table.by_addr(self_addr).ok_or_else(|| {
+            anyhow::anyhow!(
+                "join reply table carries no entry for this node's listen \
+                 address {self_addr} — did the seed serve the handshake?"
+            )
+        })?;
+        Ok(Self {
+            self_id: me.id,
+            self_addr,
+            cfg,
+            inner: Mutex::new(Inner {
+                assigned_high: table.max_id().unwrap_or(0),
+                table,
+                obs: HashMap::new(),
+                pending: MergeOutcome::default(),
+                view_dirty: false,
+                identity_lost: false,
+            }),
+        })
+    }
+
+    /// This node's stable member id (the protocol peer id).
+    pub fn self_id(&self) -> u64 {
+        self.self_id
+    }
+
+    /// This node's exchange listen address.
+    pub fn self_addr(&self) -> SocketAddr {
+        self.self_addr
+    }
+
+    /// The timing configuration.
+    pub fn config(&self) -> &MembershipConfig {
+        &self.cfg
+    }
+
+    /// A snapshot of the table.
+    pub fn table(&self) -> MemberTable {
+        self.lock().table.clone()
+    }
+
+    /// True when this node is the distinguished peer (lowest non-dead
+    /// id) in its current view — the member that reseeds with `q̃ = 1`.
+    pub fn is_distinguished(&self) -> bool {
+        self.lock().table.distinguished_id() == Some(self.self_id)
+    }
+
+    /// `(alive, suspect, dead)` counts of the current view.
+    pub fn counts(&self) -> (usize, usize, usize) {
+        self.lock().table.counts()
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, Inner> {
+        self.inner.lock().expect("membership state poisoned")
+    }
+
+    /// Merge a table heard from a partner (anti-entropy receive). If the
+    /// incoming table suspects (or kills) *this* node, the node refutes:
+    /// it re-asserts itself alive at the next incarnation, a table
+    /// change that spreads back out.
+    pub fn merge_remote(&self, incoming: &MemberTable) -> MergeOutcome {
+        let mut inner = self.lock();
+        // Planeless members clear their flag when their entry's
+        // incarnation advances — a rejoin (possibly after an upgrade)
+        // that every node observes through the merge, not just the one
+        // seed that served the handshake.
+        let planeless: Vec<(u64, u64)> = inner
+            .obs
+            .iter()
+            .filter(|(_, o)| o.no_plane)
+            .filter_map(|(&id, _)| inner.table.get(id).map(|e| (id, e.incarnation)))
+            .collect();
+        let mut out = inner.table.merge(incoming);
+        for (id, inc) in planeless {
+            if inner.table.get(id).is_some_and(|e| e.incarnation > inc) {
+                if let Some(o) = inner.obs.get_mut(&id) {
+                    o.no_plane = false;
+                }
+            }
+        }
+        let me = inner.table.get(self.self_id).cloned();
+        if let Some(me) = me {
+            if me.addr != self.self_addr {
+                // Another address won our id (concurrent joins through
+                // different seeds collided and the tie-break kept the
+                // other node). Re-asserting would start an endless
+                // merge war; instead the identity loss is flagged and
+                // the loop stops initiating — the clean failure mode.
+                // Recovery is a rejoin (which assigns a fresh id).
+                inner.identity_lost = true;
+            } else if me.status != MemberStatus::Alive {
+                let refuted = MemberEntry {
+                    id: self.self_id,
+                    addr: self.self_addr,
+                    incarnation: me.incarnation + 1,
+                    status: MemberStatus::Alive,
+                };
+                out.absorb(inner.table.upsert(refuted));
+            }
+        }
+        // Merged-in deaths start their tombstone clock now, locally.
+        let now = Instant::now();
+        let dead: Vec<u64> = inner
+            .table
+            .iter()
+            .filter(|e| e.status == MemberStatus::Dead)
+            .map(|e| e.id)
+            .collect();
+        for id in dead {
+            inner.obs.entry(id).or_default().dead_since.get_or_insert(now);
+        }
+        inner.absorb(out);
+        out
+    }
+
+    /// Serve one `dudd-join` handshake: assign an id to `addr` (a brand
+    /// new one, or the same id at the next incarnation when the address
+    /// is rejoining), insert the alive entry, and return the full table
+    /// for the reply.
+    pub fn serve_join(&self, addr: SocketAddr) -> MemberTable {
+        let mut inner = self.lock();
+        let entry = match inner.table.by_addr(addr) {
+            // Rejoin: the same address re-enters at the next incarnation
+            // and keeps its id (supersedes any suspect/dead record).
+            Some(old) => MemberEntry {
+                id: old.id,
+                addr,
+                incarnation: old.incarnation + 1,
+                status: MemberStatus::Alive,
+            },
+            None => {
+                // High-water mark, not the table max: a GC'd tombstone's
+                // id must never be re-minted for a different node.
+                let id = inner.assigned_high.max(inner.table.max_id().unwrap_or(0)) + 1;
+                MemberEntry::alive(id, addr)
+            }
+        };
+        let id = entry.id;
+        let out = inner.table.upsert(entry);
+        inner.absorb(out);
+        // A rejoin wipes the old failure streak.
+        inner.obs.remove(&id);
+        inner.table.clone()
+    }
+
+    /// Record liveness evidence for `id`: any reply at all — a completed
+    /// exchange, but also `Busy` and `StaleGeneration` rejects — clears
+    /// the failure streak and the backoff.
+    pub fn record_success(&self, id: u64) {
+        let mut inner = self.lock();
+        if let Some(o) = inner.obs.get_mut(&id) {
+            o.streak_start = None;
+            o.failures = 0;
+            o.next_attempt = None;
+            o.suspect_since = None;
+        }
+    }
+
+    /// Record a failed exchange with `id` (connect refused, deadline,
+    /// dead channel): starts/extends the failure streak, advances the
+    /// exponential backoff, and applies the time-based status
+    /// transitions (alive → suspect → dead).
+    pub fn record_failure(&self, id: u64) -> MergeOutcome {
+        let now = Instant::now();
+        let mut inner = self.lock();
+        let cfg = &self.cfg;
+        {
+            let o = inner.obs.entry(id).or_default();
+            o.streak_start.get_or_insert(now);
+            o.failures = o.failures.saturating_add(1);
+            let backoff = cfg
+                .backoff_base
+                .saturating_mul(1u32 << o.failures.min(16))
+                .min(cfg.backoff_cap);
+            o.next_attempt = Some(now + backoff);
+        }
+        inner.streak_transition(id, now, cfg)
+    }
+
+    /// Advance the wall-clock status transitions for every member with
+    /// an active failure streak — called once per round, so a suspect
+    /// whose probes are backoff-gated (or who is simply never drawn as
+    /// a partner) still turns dead exactly one suspicion interval after
+    /// turning suspect, as `docs/PROTOCOL.md` §9 specifies. Returns the
+    /// accumulated outcome.
+    pub fn tick(&self, now: Instant) -> MergeOutcome {
+        let mut inner = self.lock();
+        let streaked: Vec<u64> = inner
+            .obs
+            .iter()
+            .filter(|(_, o)| o.streak_start.is_some())
+            .map(|(&id, _)| id)
+            .collect();
+        let mut out = MergeOutcome::default();
+        for id in streaked {
+            out.absorb(inner.streak_transition(id, now, &self.cfg));
+        }
+        out
+    }
+
+    /// Partner candidates for one round: every non-self member that is
+    /// **alive**, plus **suspect** members whose backoff has elapsed (a
+    /// probe that lets them prove recovery). Dead members are never
+    /// selected. Ascending id order (deterministic).
+    pub fn eligible_partners(&self, now: Instant) -> Vec<(u64, SocketAddr)> {
+        let inner = self.lock();
+        inner
+            .table
+            .iter()
+            .filter(|e| e.id != self.self_id)
+            .filter(|e| match e.status {
+                MemberStatus::Alive => true,
+                MemberStatus::Suspect => match inner.obs.get(&e.id).and_then(|o| o.next_attempt)
+                {
+                    Some(t) => now >= t,
+                    None => true,
+                },
+                MemberStatus::Dead => false,
+            })
+            .map(|e| (e.id, e.addr))
+            .collect()
+    }
+
+    /// Garbage-collect tombstones whose local death observation is older
+    /// than the TTL. Returns how many entries were removed. (GC is
+    /// local-clock driven, so nodes may transiently disagree on a GC'd
+    /// entry; a peer that still holds the tombstone simply pushes it
+    /// back, which is harmless — the member stays dead — and ends once
+    /// every node's TTL has passed.)
+    pub fn gc(&self, now: Instant) -> usize {
+        let ttl = self.cfg.tombstone_ttl;
+        let mut inner = self.lock();
+        let expired: Vec<u64> = inner
+            .table
+            .iter()
+            .filter(|e| e.status == MemberStatus::Dead)
+            .filter(|e| {
+                inner
+                    .obs
+                    .get(&e.id)
+                    .and_then(|o| o.dead_since)
+                    .is_some_and(|t| now.duration_since(t) >= ttl)
+            })
+            .map(|e| e.id)
+            .collect();
+        for id in &expired {
+            inner.table.remove(*id);
+            inner.obs.remove(id);
+        }
+        expired.len()
+    }
+
+    /// True once this node discovered that its member id belongs to a
+    /// *different address* in the converged table — a concurrent join
+    /// through another seed collided on the id and the deterministic
+    /// tie-break kept the other node. A node that lost its identity
+    /// must stop initiating exchanges (the gossip loop checks this
+    /// every round): silently gossiping under a stolen id would break
+    /// the generation's `q̃` mass with no detection anywhere. Recovery
+    /// is operator-driven: restart the node with a fresh join (it will
+    /// be assigned a new id). Sticky once set.
+    pub fn identity_lost(&self) -> bool {
+        self.lock().identity_lost
+    }
+
+    /// The partner rejected the membership plane (a static address-book
+    /// node, or a pre-plane peer answering `Malformed`): per
+    /// `docs/PROTOCOL.md` §8 the sender stops pushing tables there —
+    /// repeating the push every round would also kill the warm pooled
+    /// connection each time a `Malformed`-answering peer closes it. The
+    /// flag clears when the member's incarnation advances (a rejoin,
+    /// observed by every node through the merge) or when this node
+    /// itself serves the member's rejoin handshake.
+    pub fn mark_planeless(&self, id: u64) {
+        self.lock().obs.entry(id).or_default().no_plane = true;
+    }
+
+    /// Whether membership pushes to `id` are still worthwhile (see
+    /// [`Membership::mark_planeless`]).
+    pub fn plane_enabled(&self, id: u64) -> bool {
+        !self.lock().obs.get(&id).is_some_and(|o| o.no_plane)
+    }
+
+    /// Drain the events accumulated since the last call (merges, local
+    /// transitions, joins served) — the per-round membership telemetry.
+    pub fn take_events(&self) -> MergeOutcome {
+        std::mem::take(&mut self.lock().pending)
+    }
+
+    /// Peek: has the non-dead member set changed since the last
+    /// [`Membership::take_view_changed`]? (The gossip loop's cheap
+    /// pre-lock check.)
+    pub fn view_change_pending(&self) -> bool {
+        self.lock().view_dirty
+    }
+
+    /// Consume the view-change flag. The gossip loop calls this under
+    /// its full refresh locks: a `true` here restarts the protocol
+    /// (generation bump + reseed-from-own-summary), which is what keeps
+    /// the `q̃` mass at exactly 1 across joins and deaths.
+    pub fn take_view_changed(&self) -> bool {
+        std::mem::take(&mut self.lock().view_dirty)
+    }
+
+    /// The canonical encoding of the current table (`docs/PROTOCOL.md`
+    /// §9) — byte-identical across nodes whose views have converged,
+    /// which is how the churn acceptance test compares survivors.
+    pub fn encoded_table(&self) -> Vec<u8> {
+        crate::sketch::codec::encode_member_table(&self.lock().table)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn addr(port: u16) -> SocketAddr {
+        format!("127.0.0.1:{port}").parse().unwrap()
+    }
+
+    /// Timings fast enough for unit tests but with enough margin that a
+    /// scheduler stall between consecutive statements (loaded CI runner)
+    /// cannot flip a "transition has NOT happened yet" assertion.
+    fn fast_cfg() -> MembershipConfig {
+        MembershipConfig {
+            suspect_after: Duration::from_millis(150),
+            tombstone_ttl: Duration::from_millis(400),
+            backoff_base: Duration::from_millis(150),
+            backoff_cap: Duration::from_millis(600),
+        }
+    }
+
+    #[test]
+    fn merge_is_order_independent() {
+        let entries = [
+            MemberEntry::alive(0, addr(1)),
+            MemberEntry {
+                id: 1,
+                addr: addr(2),
+                incarnation: 3,
+                status: MemberStatus::Suspect,
+            },
+            MemberEntry {
+                id: 1,
+                addr: addr(2),
+                incarnation: 2,
+                status: MemberStatus::Dead,
+            },
+            MemberEntry {
+                id: 2,
+                addr: addr(3),
+                incarnation: 1,
+                status: MemberStatus::Dead,
+            },
+            MemberEntry {
+                id: 2,
+                addr: addr(3),
+                incarnation: 1,
+                status: MemberStatus::Alive,
+            },
+        ];
+        // Every permutation of upserts converges to the same table.
+        let reference = {
+            let mut t = MemberTable::new();
+            for e in &entries {
+                t.upsert(e.clone());
+            }
+            t
+        };
+        let perms: &[[usize; 5]] = &[
+            [4, 3, 2, 1, 0],
+            [2, 0, 4, 1, 3],
+            [1, 2, 3, 4, 0],
+            [3, 1, 4, 0, 2],
+        ];
+        for p in perms {
+            let mut t = MemberTable::new();
+            for &i in p {
+                t.upsert(entries[i].clone());
+            }
+            assert_eq!(t, reference, "permutation {p:?}");
+        }
+        // Incarnation 3 won for member 1; dead won at equal incarnation
+        // for member 2.
+        assert_eq!(reference.get(1).unwrap().status, MemberStatus::Suspect);
+        assert_eq!(reference.get(1).unwrap().incarnation, 3);
+        assert_eq!(reference.get(2).unwrap().status, MemberStatus::Dead);
+    }
+
+    #[test]
+    fn merge_reports_view_changes() {
+        let mut t = MemberTable::new();
+        let out = t.upsert(MemberEntry::alive(0, addr(1)));
+        assert!(out.changed && out.view_changed);
+        assert_eq!(out.joined, 1);
+
+        // Same entry again: nothing.
+        let out = t.upsert(MemberEntry::alive(0, addr(1)));
+        assert_eq!(out, MergeOutcome::default());
+
+        // Suspect at same incarnation: changed, but the non-dead set is
+        // intact.
+        let out = t.upsert(MemberEntry {
+            id: 0,
+            addr: addr(1),
+            incarnation: 1,
+            status: MemberStatus::Suspect,
+        });
+        assert!(out.changed && !out.view_changed);
+        assert_eq!(out.suspected, 1);
+
+        // Death changes the view.
+        let out = t.upsert(MemberEntry {
+            id: 0,
+            addr: addr(1),
+            incarnation: 1,
+            status: MemberStatus::Dead,
+        });
+        assert!(out.view_changed);
+        assert_eq!(out.died, 1);
+
+        // Refutation (next incarnation, alive) changes it back.
+        let out = t.upsert(MemberEntry {
+            id: 0,
+            addr: addr(1),
+            incarnation: 2,
+            status: MemberStatus::Alive,
+        });
+        assert!(out.changed && out.view_changed);
+
+        // A live member's incarnation advancing (alive → alive) is a
+        // crash-rejoin: the protocol must restart even though the
+        // non-dead id set is unchanged, or the rejoiner's lost q̃ share
+        // breaks the generation's mass.
+        let out = t.upsert(MemberEntry {
+            id: 0,
+            addr: addr(1),
+            incarnation: 3,
+            status: MemberStatus::Alive,
+        });
+        assert!(out.changed && out.view_changed, "{out:?}");
+
+        // A newly learned tombstone is a death, never a join.
+        let out = t.upsert(MemberEntry {
+            id: 9,
+            addr: addr(9),
+            incarnation: 1,
+            status: MemberStatus::Dead,
+        });
+        assert_eq!(out.joined, 0);
+        assert_eq!(out.died, 1);
+        assert!(!out.view_changed);
+    }
+
+    #[test]
+    fn planeless_partners_stop_receiving_pushes_until_rejoin() {
+        let m = Membership::bootstrap(addr(1), fast_cfg());
+        m.serve_join(addr(2));
+        assert!(m.plane_enabled(1));
+        m.mark_planeless(1);
+        assert!(!m.plane_enabled(1));
+        // Liveness evidence alone does not clear the flag…
+        m.record_success(1);
+        assert!(!m.plane_enabled(1));
+        // …but a rejoin through this seed wipes the observation record.
+        m.serve_join(addr(2));
+        assert!(m.plane_enabled(1));
+
+        // Observing the member's incarnation advance in a merge clears
+        // the flag too — the rejoin signal every node sees, not just
+        // the seed that served the handshake.
+        m.mark_planeless(1);
+        assert!(!m.plane_enabled(1));
+        let mut rejoined = MemberTable::new();
+        rejoined.upsert(MemberEntry {
+            id: 1,
+            addr: addr(2),
+            incarnation: 9,
+            status: MemberStatus::Alive,
+        });
+        m.merge_remote(&rejoined);
+        assert!(m.plane_enabled(1), "incarnation advance clears no_plane");
+    }
+
+    #[test]
+    fn distinguished_is_lowest_non_dead_id() {
+        let mut t = MemberTable::new();
+        t.upsert(MemberEntry::alive(0, addr(1)));
+        t.upsert(MemberEntry::alive(1, addr(2)));
+        t.upsert(MemberEntry::alive(2, addr(3)));
+        assert_eq!(t.distinguished_id(), Some(0));
+        t.upsert(MemberEntry {
+            id: 0,
+            addr: addr(1),
+            incarnation: 1,
+            status: MemberStatus::Dead,
+        });
+        assert_eq!(t.distinguished_id(), Some(1));
+    }
+
+    #[test]
+    fn join_assigns_sequential_and_rejoin_keeps_id() {
+        let m = Membership::bootstrap(addr(1), fast_cfg());
+        assert_eq!(m.self_id(), 0);
+        assert!(m.is_distinguished());
+
+        let t = m.serve_join(addr(2));
+        assert_eq!(t.by_addr(addr(2)).unwrap().id, 1);
+        let t = m.serve_join(addr(3));
+        assert_eq!(t.by_addr(addr(3)).unwrap().id, 2);
+
+        // The same address rejoining keeps its id at the next
+        // incarnation (supersedes a dead record).
+        m.merge_remote(&{
+            let mut t = MemberTable::new();
+            t.upsert(MemberEntry {
+                id: 1,
+                addr: addr(2),
+                incarnation: 1,
+                status: MemberStatus::Dead,
+            });
+            t
+        });
+        let t = m.serve_join(addr(2));
+        let e = t.by_addr(addr(2)).unwrap();
+        assert_eq!(e.id, 1);
+        assert_eq!(e.incarnation, 2);
+        assert_eq!(e.status, MemberStatus::Alive);
+        // A fresh address still gets the next id.
+        let t = m.serve_join(addr(4));
+        assert_eq!(t.by_addr(addr(4)).unwrap().id, 3);
+    }
+
+    #[test]
+    fn failure_streak_walks_alive_suspect_dead() {
+        let m = Membership::bootstrap(addr(1), fast_cfg());
+        m.serve_join(addr(2));
+        m.take_events();
+
+        // The streak starts at the first failure; no instant transition.
+        let out = m.record_failure(1);
+        assert_eq!(out, MergeOutcome::default(), "too early to suspect");
+        std::thread::sleep(Duration::from_millis(170));
+        // Streak ≥ suspect_after → suspect.
+        let out = m.record_failure(1);
+        assert_eq!(out.suspected, 1);
+        assert_eq!(m.table().get(1).unwrap().status, MemberStatus::Suspect);
+        assert!(!out.view_changed, "suspicion keeps the non-dead set");
+
+        // Still the same streak: death waits one more full suspicion
+        // interval measured from the suspect transition.
+        let out = m.record_failure(1);
+        assert_eq!(out, MergeOutcome::default(), "needs 2x the interval");
+        std::thread::sleep(Duration::from_millis(170));
+        // Streak ≥ 2 × suspect_after → dead.
+        let out = m.record_failure(1);
+        assert_eq!(out.died, 1);
+        assert!(out.view_changed, "death changes the non-dead set");
+        assert_eq!(m.table().get(1).unwrap().status, MemberStatus::Dead);
+
+        let ev = m.take_events();
+        assert_eq!(ev.suspected, 1);
+        assert_eq!(ev.died, 1);
+        assert_eq!(m.take_events(), MergeOutcome::default(), "drained");
+    }
+
+    #[test]
+    fn success_clears_streak_and_backoff() {
+        let m = Membership::bootstrap(addr(1), fast_cfg());
+        m.serve_join(addr(2));
+        m.record_failure(1);
+        std::thread::sleep(Duration::from_millis(170));
+        m.record_failure(1);
+        assert_eq!(m.table().get(1).unwrap().status, MemberStatus::Suspect);
+        assert!(
+            m.eligible_partners(Instant::now()).is_empty(),
+            "suspect member is backoff-gated right after a failure"
+        );
+
+        // Liveness evidence resets the clocks; the (still suspect)
+        // member becomes immediately probeable again.
+        m.record_success(1);
+        assert_eq!(
+            m.eligible_partners(Instant::now()),
+            vec![(1, addr(2))],
+            "success clears the backoff gate"
+        );
+        // ...and a fresh streak starts from scratch (no instant death).
+        let out = m.record_failure(1);
+        assert_eq!(out, MergeOutcome::default());
+    }
+
+    #[test]
+    fn suspect_backoff_gates_and_doubles() {
+        let cfg = fast_cfg();
+        let m = Membership::bootstrap(addr(1), cfg.clone());
+        m.serve_join(addr(2));
+        m.record_failure(1); // streak starts
+        std::thread::sleep(Duration::from_millis(170));
+        m.record_failure(1); // → suspect, backoff armed
+        assert_eq!(m.table().get(1).unwrap().status, MemberStatus::Suspect);
+        let now = Instant::now();
+        assert!(m.eligible_partners(now).is_empty(), "gated");
+        // After the backoff elapses the suspect is probeable again.
+        assert_eq!(
+            m.eligible_partners(now + Duration::from_millis(500)).len(),
+            1,
+            "probe allowed once the backoff elapses"
+        );
+        // Dead members are never eligible, backoff or not.
+        std::thread::sleep(Duration::from_millis(170));
+        m.record_failure(1);
+        assert_eq!(m.table().get(1).unwrap().status, MemberStatus::Dead);
+        assert!(m
+            .eligible_partners(now + Duration::from_millis(10_000))
+            .is_empty());
+    }
+
+    /// The wall-clock sweep drives suspect → dead even when the member
+    /// is never probed again (its backoff would otherwise gate the only
+    /// event that could declare death).
+    #[test]
+    fn tick_advances_streaks_without_probes() {
+        let m = Membership::bootstrap(addr(1), fast_cfg());
+        m.serve_join(addr(2));
+        m.take_events();
+        m.record_failure(1); // one failure, then never selected again
+        std::thread::sleep(Duration::from_millis(170));
+        let out = m.tick(Instant::now());
+        assert_eq!(out.suspected, 1, "tick promotes alive → suspect");
+        assert_eq!(m.table().get(1).unwrap().status, MemberStatus::Suspect);
+        std::thread::sleep(Duration::from_millis(170));
+        let out = m.tick(Instant::now());
+        assert_eq!(out.died, 1, "tick promotes suspect → dead on schedule");
+        assert!(out.view_changed);
+        assert_eq!(m.table().get(1).unwrap().status, MemberStatus::Dead);
+        // Idle tick: nothing left to advance.
+        assert_eq!(m.tick(Instant::now()), MergeOutcome::default());
+    }
+
+    /// The suspect transition restarts the backoff at its base: failures
+    /// piled up while the member was still alive (ungated probes) must
+    /// not push the first suspect probe out to the cap.
+    #[test]
+    fn suspect_transition_resets_backoff_to_base() {
+        let cfg = fast_cfg();
+        let m = Membership::bootstrap(addr(1), cfg.clone());
+        m.serve_join(addr(2));
+        // Pile up failures while alive: backoff would be base * 2^10.
+        for _ in 0..10 {
+            m.record_failure(1);
+        }
+        std::thread::sleep(Duration::from_millis(170));
+        m.tick(Instant::now());
+        assert_eq!(m.table().get(1).unwrap().status, MemberStatus::Suspect);
+        // The first probe is gated only by the base, not the piled-up cap.
+        let now = Instant::now();
+        assert_eq!(
+            m.eligible_partners(now + cfg.backoff_base + Duration::from_millis(50))
+                .len(),
+            1,
+            "suspect probeable one base-backoff after the transition"
+        );
+    }
+
+    /// A GC'd tombstone's id is never re-minted for a different node:
+    /// the seed keeps an assigned-id high-water mark.
+    #[test]
+    fn gc_never_recycles_ids() {
+        let m = Membership::bootstrap(addr(1), fast_cfg());
+        let t = m.serve_join(addr(2));
+        assert_eq!(t.by_addr(addr(2)).unwrap().id, 1);
+        let mut dead = MemberTable::new();
+        dead.upsert(MemberEntry {
+            id: 1,
+            addr: addr(2),
+            incarnation: 1,
+            status: MemberStatus::Dead,
+        });
+        m.merge_remote(&dead);
+        m.gc(Instant::now() + Duration::from_millis(450));
+        assert!(m.table().get(1).is_none(), "tombstone collected");
+        // A NEW address must get a fresh id, not the collected 1.
+        let t = m.serve_join(addr(3));
+        assert_eq!(t.by_addr(addr(3)).unwrap().id, 2);
+    }
+
+    #[test]
+    fn refutation_bumps_incarnation() {
+        let m = Membership::bootstrap(addr(1), fast_cfg());
+        // Someone suspects us at our incarnation.
+        let mut t = MemberTable::new();
+        t.upsert(MemberEntry {
+            id: 0,
+            addr: addr(1),
+            incarnation: 1,
+            status: MemberStatus::Suspect,
+        });
+        let out = m.merge_remote(&t);
+        assert!(out.changed);
+        let me = m.table().get(0).unwrap().clone();
+        assert_eq!(me.status, MemberStatus::Alive, "refuted");
+        assert_eq!(me.incarnation, 2, "refutation bumps the incarnation");
+        // The refutation beats the suspicion in every other node's merge.
+        let mut other = t.clone();
+        other.merge(&m.table());
+        assert_eq!(other.get(0).unwrap().status, MemberStatus::Alive);
+    }
+
+    /// A node whose id was claimed by another address (concurrent joins
+    /// through different seeds colliding) detects the loss, does NOT
+    /// start a refutation war, and reports it so the loop can stop
+    /// initiating.
+    #[test]
+    fn id_collision_loser_detects_identity_loss() {
+        let mut table = MemberTable::new();
+        table.upsert(MemberEntry::alive(0, addr(1)));
+        table.upsert(MemberEntry::alive(5, addr(2)));
+        let m = Membership::from_join(table, addr(2), fast_cfg()).unwrap();
+        assert_eq!(m.self_id(), 5);
+        assert!(!m.identity_lost());
+
+        // Another seed assigned the same id to a lexicographically
+        // smaller address; the deterministic tie-break keeps that entry
+        // ("127.0.0.1:10" < "127.0.0.1:2" as strings).
+        let mut winner = MemberTable::new();
+        winner.upsert(MemberEntry::alive(5, addr(10)));
+        m.merge_remote(&winner);
+        let me = m.table().get(5).unwrap().clone();
+        assert_eq!(me.addr, addr(10), "tie-break keeps the winner");
+        assert!(m.identity_lost(), "loss must be detected");
+        // No refutation war: the winner's entry is left intact.
+        assert_eq!(me.incarnation, 1);
+        assert_eq!(me.status, MemberStatus::Alive);
+        // Sticky: later merges do not clear it.
+        m.merge_remote(&winner);
+        assert!(m.identity_lost());
+    }
+
+    #[test]
+    fn tombstones_gc_after_ttl() {
+        let m = Membership::bootstrap(addr(1), fast_cfg());
+        m.serve_join(addr(2));
+        let mut dead = MemberTable::new();
+        dead.upsert(MemberEntry {
+            id: 1,
+            addr: addr(2),
+            incarnation: 1,
+            status: MemberStatus::Dead,
+        });
+        m.merge_remote(&dead);
+        assert_eq!(m.table().len(), 2);
+        assert_eq!(m.gc(Instant::now()), 0, "TTL not elapsed");
+        assert_eq!(
+            m.gc(Instant::now() + Duration::from_millis(450)),
+            1,
+            "tombstone collected after the TTL"
+        );
+        assert_eq!(m.table().len(), 1);
+        assert!(m.table().get(1).is_none());
+        // A straggler pushing the tombstone back is harmless: the member
+        // is dead again (and will GC again).
+        let out = m.merge_remote(&dead);
+        assert_eq!(out.died, 1);
+        assert_eq!(m.table().get(1).unwrap().status, MemberStatus::Dead);
+    }
+
+    #[test]
+    fn from_join_requires_own_entry() {
+        let mut t = MemberTable::new();
+        t.upsert(MemberEntry::alive(0, addr(1)));
+        assert!(Membership::from_join(t.clone(), addr(9), fast_cfg()).is_err());
+        t.upsert(MemberEntry::alive(1, addr(9)));
+        let m = Membership::from_join(t, addr(9), fast_cfg()).unwrap();
+        assert_eq!(m.self_id(), 1);
+        assert!(!m.is_distinguished());
+    }
+}

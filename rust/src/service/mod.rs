@@ -53,6 +53,15 @@
 //!   served by a single poll-driven loop per node, and ships **delta
 //!   frames** (changed buckets only) once a pair has exchanged before —
 //!   see `docs/PROTOCOL.md` for the wire spec.
+//! * **Membership plane** — [`membership`] makes the member set itself
+//!   gossiped state: a versioned member table (id, addr, incarnation,
+//!   status) rides the exchange connections by anti-entropy, nodes
+//!   enter a *running* fleet through the `dudd-join` handshake
+//!   ([`NodeBuilder::join`]), crashes are suspected from failed
+//!   exchanges and declared dead (with exponential backoff and
+//!   tombstone GC), and every change of the live view restarts the
+//!   protocol so the union estimate re-anchors on the survivors — no
+//!   static address book, no manual restarts (`docs/PROTOCOL.md` §9).
 //! * **Fluent construction** — [`Node::builder()`] is the primary way to
 //!   stand a node up: service + gossip + transport in one validated
 //!   expression (named-key errors at build time).
@@ -65,6 +74,7 @@
 mod builder;
 mod coordinator;
 mod gossip_loop;
+pub mod membership;
 mod peer;
 mod shard;
 mod snapshot;
@@ -75,7 +85,11 @@ mod window;
 pub use builder::{Node, NodeBuilder};
 pub use coordinator::{QuantileService, ServiceWriter};
 pub use gossip_loop::{
-    GlobalView, GossipLoop, GossipMember, GossipRoundReport, NodeHandle, ServeReject,
+    GlobalView, GossipLoop, GossipMember, GossipRoundReport, MembershipRoundStats, NodeHandle,
+    ServeReject,
+};
+pub use membership::{
+    MemberEntry, MemberStatus, MemberTable, Membership, MembershipConfig,
 };
 pub use peer::ServicePeer;
 pub use shard::ShardDelta;

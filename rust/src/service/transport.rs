@@ -102,12 +102,14 @@
 //! subcommand for a full loopback fleet.
 
 use super::gossip_loop::{NodeHandle, ServeReject};
+use super::membership::MemberTable;
 use crate::config::GossipLoopConfig;
 use crate::gossip::PeerState;
 use crate::sketch::codec::{
     apply_delta, decode_exchange, delta_payload, delta_wire_size, encode_exchange_delta_push,
     encode_exchange_delta_reply, encode_exchange_push, encode_exchange_reject,
-    encode_exchange_reply, peer_state_fingerprint, peer_state_wire_size, DeltaPayload,
+    encode_exchange_reply, encode_join_request, encode_membership_push,
+    encode_membership_reply, peer_state_fingerprint, peer_state_wire_size, DeltaPayload,
     ExchangeFrame, RejectReason,
 };
 use anyhow::Context;
@@ -153,6 +155,9 @@ pub enum TransportError {
     Lineage(String),
     /// This transport cannot reach remote members at all.
     Unreachable(SocketAddr),
+    /// The partner's membership plane is not enabled (static
+    /// address-book fleet) — do not retry membership traffic there.
+    NoMembership,
 }
 
 impl std::fmt::Display for TransportError {
@@ -171,6 +176,9 @@ impl std::fmt::Display for TransportError {
             TransportError::Lineage(e) => write!(f, "alpha0 lineage mismatch: {e}"),
             TransportError::Unreachable(addr) => {
                 write!(f, "transport cannot reach remote peer {addr}")
+            }
+            TransportError::NoMembership => {
+                write!(f, "partner has no membership plane enabled")
             }
         }
     }
@@ -304,6 +312,41 @@ pub trait Transport: Send + Sync + std::fmt::Debug + 'static {
 
     /// The address this transport's serve loop listens on, if it has one.
     fn listen_addr(&self) -> Option<SocketAddr> {
+        None
+    }
+
+    /// One membership anti-entropy conversation with `peer`: push
+    /// `local` (tagged with our restart `generation`), pull the
+    /// partner's merged table. Returns `(partner table, partner
+    /// generation, wire bytes)`. Membership exchanges are idempotent
+    /// (table merge), so transports may retry freely on dead pooled
+    /// connections. Default: membership is unsupported.
+    fn exchange_membership(
+        &self,
+        peer: SocketAddr,
+        generation: u64,
+        local: &MemberTable,
+    ) -> Result<(MemberTable, u64, usize), TransportError> {
+        let _ = (generation, local);
+        Err(TransportError::Unreachable(peer))
+    }
+
+    /// The `dudd-join` handshake: ask `seed` to assign this node's
+    /// listen address a stable member id, returning `(the seed's full
+    /// table, the seed's restart generation)` — the joiner starts at
+    /// that generation so its first exchanges are not rejected
+    /// `StaleGeneration`. Requires a serving transport (the joiner must
+    /// itself be reachable). Default: unsupported.
+    fn join_remote(&self, seed: SocketAddr) -> Result<(MemberTable, u64), TransportError> {
+        Err(TransportError::Unreachable(seed))
+    }
+
+    /// Cumulative connection-pool / frame-mix counters, when this
+    /// transport keeps any ([`TcpTransport`] does). The gossip loop
+    /// diffs consecutive snapshots into the per-round
+    /// [`GossipRoundReport::pool`](super::GossipRoundReport::pool)
+    /// telemetry so dashboards stop pulling from the transport directly.
+    fn pool_stats(&self) -> Option<PoolStats> {
         None
     }
 
@@ -526,6 +569,30 @@ pub struct PoolStats {
     pub stale_discarded: usize,
     /// Pooled connections discarded for exceeding the idle timeout.
     pub expired: usize,
+    /// Push frames shipped as deltas against a shared baseline (the
+    /// delta-hit half of the hit rate).
+    pub delta_pushes: usize,
+    /// Push frames shipped full — no usable baseline, a delta that
+    /// would not save bytes, or the fallback after a
+    /// `BaselineMismatch`.
+    pub full_pushes: usize,
+}
+
+impl PoolStats {
+    /// The counter movement since `prev` (saturating, so a transport
+    /// swap mid-run degrades to zeros instead of wrapping) — how the
+    /// gossip loop turns the cumulative counters into per-round
+    /// telemetry.
+    pub fn delta_since(&self, prev: PoolStats) -> PoolStats {
+        PoolStats {
+            fresh_connects: self.fresh_connects.saturating_sub(prev.fresh_connects),
+            reused: self.reused.saturating_sub(prev.reused),
+            stale_discarded: self.stale_discarded.saturating_sub(prev.stale_discarded),
+            expired: self.expired.saturating_sub(prev.expired),
+            delta_pushes: self.delta_pushes.saturating_sub(prev.delta_pushes),
+            full_pushes: self.full_pushes.saturating_sub(prev.full_pushes),
+        }
+    }
 }
 
 #[derive(Debug, Default)]
@@ -534,6 +601,8 @@ struct TransportStats {
     reused: AtomicUsize,
     stale: AtomicUsize,
     expired: AtomicUsize,
+    delta_pushes: AtomicUsize,
+    full_pushes: AtomicUsize,
 }
 
 /// One idle pooled connection.
@@ -750,13 +819,15 @@ impl TcpTransport {
         &self.opts
     }
 
-    /// Snapshot of the connection-pool counters.
+    /// Snapshot of the connection-pool and frame-mix counters.
     pub fn pool_stats(&self) -> PoolStats {
         PoolStats {
             fresh_connects: self.stats.fresh.load(Ordering::Relaxed),
             reused: self.stats.reused.load(Ordering::Relaxed),
             stale_discarded: self.stats.stale.load(Ordering::Relaxed),
             expired: self.stats.expired.load(Ordering::Relaxed),
+            delta_pushes: self.stats.delta_pushes.load(Ordering::Relaxed),
+            full_pushes: self.stats.full_pushes.load(Ordering::Relaxed),
         }
     }
 
@@ -832,6 +903,71 @@ impl TcpTransport {
         Ok(())
     }
 
+    /// Unwrap a [`RemoteChannel`] back into its TCP stream with the
+    /// per-exchange deadlines armed.
+    fn channel_stream(
+        chan: RemoteChannel,
+        deadline: Duration,
+    ) -> Result<TcpStream, TransportError> {
+        let stream = *chan.inner.downcast::<TcpStream>().map_err(|_| {
+            TransportError::Protocol("channel was opened by a different transport".into())
+        })?;
+        let io = |e: std::io::Error| TransportError::Io(e.to_string());
+        stream.set_read_timeout(Some(deadline)).map_err(io)?;
+        stream.set_write_timeout(Some(deadline)).map_err(io)?;
+        let _ = stream.set_nodelay(true);
+        Ok(stream)
+    }
+
+    /// One membership push–pull (the body of
+    /// [`Transport::exchange_membership`]); classifies a dead pooled
+    /// connection as [`TransportError::StaleChannel`] so the caller can
+    /// retry.
+    fn membership_conversation(
+        &self,
+        peer: SocketAddr,
+        generation: u64,
+        local: &MemberTable,
+    ) -> Result<(MemberTable, u64, usize), TransportError> {
+        let chan = self.open_remote(peer)?;
+        let reused = chan.reused();
+        let stream = Self::channel_stream(chan, self.opts.deadline)?;
+        let push = encode_membership_push(generation, local);
+        if let Err(e) = write_frame(&stream, &push) {
+            return Err(self.channel_failure(peer, reused, "membership push", false, e));
+        }
+        let reply = match read_frame_tracked(&stream) {
+            Ok(r) => r,
+            Err((started, e)) => {
+                return Err(self.channel_failure(
+                    peer,
+                    reused,
+                    "membership reply",
+                    started,
+                    e,
+                ))
+            }
+        };
+        let wire = 8 + push.len() + reply.len();
+        match decode_exchange(&reply).map_err(|e| TransportError::Codec(e.to_string()))? {
+            ExchangeFrame::MembershipReply { generation, table } => {
+                self.pool.checkin(peer, stream, self.opts.pool_connections);
+                Ok((table, generation, wire))
+            }
+            ExchangeFrame::Reject {
+                reason: RejectReason::NoMembership,
+                ..
+            } => {
+                // The framing is intact; keep the connection warm.
+                self.pool.checkin(peer, stream, self.opts.pool_connections);
+                Err(TransportError::NoMembership)
+            }
+            other => Err(TransportError::Protocol(format!(
+                "partner answered a membership push with {other:?}"
+            ))),
+        }
+    }
+
     /// The pair baseline for `peer` at exactly `generation`, if cached.
     fn baseline_for(&self, peer: SocketAddr, generation: u64) -> Option<Baseline> {
         if !self.opts.delta_exchanges {
@@ -883,20 +1019,10 @@ impl Transport for TcpTransport {
         local: &mut PeerState,
         generation: u64,
     ) -> Result<usize, TransportError> {
-        let RemoteChannel {
-            peer,
-            reused,
-            inner,
-        } = chan;
-        let stream = *inner.downcast::<TcpStream>().map_err(|_| {
-            TransportError::Protocol("channel was opened by a different transport".into())
-        })?;
+        let peer = chan.peer();
+        let reused = chan.reused();
+        let stream = Self::channel_stream(chan, self.opts.deadline)?;
         let io = |e: std::io::Error| TransportError::Io(e.to_string());
-        stream.set_read_timeout(Some(self.opts.deadline)).map_err(io)?;
-        stream
-            .set_write_timeout(Some(self.opts.deadline))
-            .map_err(io)?;
-        let _ = stream.set_nodelay(true);
 
         // Prefer a delta push when the pair baseline exists at this
         // generation and the delta actually saves bytes.
@@ -906,8 +1032,14 @@ impl Transport for TcpTransport {
                 .filter(|d| delta_wire_size(d) < 14 + peer_state_wire_size(local))
         });
         let push = match &push_delta {
-            Some(d) => encode_exchange_delta_push(generation, d),
-            None => encode_exchange_push(generation, local),
+            Some(d) => {
+                self.stats.delta_pushes.fetch_add(1, Ordering::Relaxed);
+                encode_exchange_delta_push(generation, d)
+            }
+            None => {
+                self.stats.full_pushes.fetch_add(1, Ordering::Relaxed);
+                encode_exchange_push(generation, local)
+            }
         };
         if let Err(e) = write_frame(&stream, &push) {
             return Err(self.channel_failure(peer, reused, "push write", false, e));
@@ -963,6 +1095,7 @@ impl Transport for TcpTransport {
                     .lock()
                     .expect("transport baseline cache poisoned")
                     .remove(&peer);
+                self.stats.full_pushes.fetch_add(1, Ordering::Relaxed);
                 let push = encode_exchange_push(generation, local);
                 write_frame(&stream, &push).map_err(io)?;
                 let reply = read_frame(&stream).map_err(io)?;
@@ -1015,11 +1148,64 @@ impl Transport for TcpTransport {
             ExchangeFrame::Push { .. } | ExchangeFrame::DeltaPush { .. } => Err(
                 TransportError::Protocol("partner replied with a push frame".into()),
             ),
+            ExchangeFrame::MembershipPush { .. }
+            | ExchangeFrame::MembershipReply { .. }
+            | ExchangeFrame::JoinRequest { .. } => Err(TransportError::Protocol(
+                "partner answered a data push with a membership frame".into(),
+            )),
         }
     }
 
     fn listen_addr(&self) -> Option<SocketAddr> {
         self.local_addr
+    }
+
+    fn exchange_membership(
+        &self,
+        peer: SocketAddr,
+        generation: u64,
+        local: &MemberTable,
+    ) -> Result<(MemberTable, u64, usize), TransportError> {
+        // A table merge is idempotent, so (unlike the data exchange) a
+        // dead pooled connection is always safe to retry on a fresh one.
+        match self.membership_conversation(peer, generation, local) {
+            Err(TransportError::StaleChannel(_)) => {
+                self.membership_conversation(peer, generation, local)
+            }
+            r => r,
+        }
+    }
+
+    fn join_remote(&self, seed: SocketAddr) -> Result<(MemberTable, u64), TransportError> {
+        let addr = self.local_addr.ok_or_else(|| {
+            TransportError::Protocol(
+                "join requires a serving transport (the joiner must be \
+                 reachable) — bind the transport before joining"
+                    .into(),
+            )
+        })?;
+        let chan = self.open_remote(seed)?;
+        let stream = Self::channel_stream(chan, self.opts.deadline)?;
+        let io = |e: std::io::Error| TransportError::Io(e.to_string());
+        write_frame(&stream, &encode_join_request(0, addr)).map_err(io)?;
+        let reply = read_frame(&stream).map_err(io)?;
+        match decode_exchange(&reply).map_err(|e| TransportError::Codec(e.to_string()))? {
+            ExchangeFrame::MembershipReply { table, generation } => {
+                self.pool.checkin(seed, stream, self.opts.pool_connections);
+                Ok((table, generation))
+            }
+            ExchangeFrame::Reject {
+                reason: RejectReason::NoMembership,
+                ..
+            } => Err(TransportError::NoMembership),
+            other => Err(TransportError::Protocol(format!(
+                "seed answered the join with a non-membership frame: {other:?}"
+            ))),
+        }
+    }
+
+    fn pool_stats(&self) -> Option<PoolStats> {
+        Some(TcpTransport::pool_stats(self))
     }
 
     fn spawn_server(&self, node: NodeHandle) -> crate::Result<Option<JoinHandle<()>>> {
@@ -1062,6 +1248,7 @@ fn reject_error(gen: u64, reason: RejectReason) -> TransportError {
         RejectReason::BaselineMismatch => TransportError::Protocol(
             "partner rejected a full frame with a baseline mismatch".into(),
         ),
+        RejectReason::NoMembership => TransportError::NoMembership,
     }
 }
 
@@ -1317,6 +1504,33 @@ fn serve_frame_blocking(
                 }
             }
         }
+        // Membership plane (docs/PROTOCOL.md §9): merge-and-reply, or a
+        // NoMembership reject on a static address-book node. Either way
+        // the framing stays intact, so the connection survives.
+        Ok(ExchangeFrame::MembershipPush { generation, table }) => {
+            return match node.serve_membership(&table, generation) {
+                Ok((merged, gen)) => {
+                    write_frame(stream, &encode_membership_reply(gen, &merged)).map_err(|_| ())
+                }
+                Err(_) => write_frame(
+                    stream,
+                    &encode_exchange_reject(0, RejectReason::NoMembership),
+                )
+                .map_err(|_| ()),
+            };
+        }
+        Ok(ExchangeFrame::JoinRequest { addr, .. }) => {
+            return match node.serve_join(addr) {
+                Ok((table, gen)) => {
+                    write_frame(stream, &encode_membership_reply(gen, &table)).map_err(|_| ())
+                }
+                Err(_) => write_frame(
+                    stream,
+                    &encode_exchange_reject(0, RejectReason::NoMembership),
+                )
+                .map_err(|_| ()),
+            };
+        }
         // Malformed or non-push frames never touch local state (§7.2);
         // the framing can no longer be trusted, so the connection goes.
         _ => {
@@ -1364,6 +1578,9 @@ fn serve_frame_blocking(
                 ServeReject::Lineage => (0, RejectReason::Lineage),
                 // The reply write itself failed; the socket is gone.
                 ServeReject::Cancelled(_) => return Err(()),
+                // serve_exchange never returns this; the membership
+                // frames have their own dispatch above.
+                ServeReject::NoMembership => (0, RejectReason::NoMembership),
             };
             write_frame(stream, &encode_exchange_reject(gen, reason)).map_err(|_| ())
         }

@@ -56,6 +56,13 @@
 
 use super::{SketchError, Store, UddSketch};
 use crate::gossip::PeerState;
+// The member table is a payload type exactly like `PeerState` above: the
+// codec owns the bytes, the owning subsystem owns the semantics. The
+// import runs "upward" into `service` because the ISSUE places the
+// membership data model with its runtime (service/membership.rs) and the
+// frame catalogue here — one crate, so no cycle is possible.
+use crate::service::membership::{MemberEntry, MemberStatus, MemberTable};
+use std::net::{IpAddr, Ipv4Addr, Ipv6Addr, SocketAddr};
 
 const MAGIC: &[u8; 4] = b"UDDS";
 const EXCHANGE_MAGIC: &[u8; 4] = b"UDDX";
@@ -259,6 +266,15 @@ pub enum ExchangeKind {
     /// Partner → initiator: the averaged state as set-ops against the
     /// same baseline the push named.
     DeltaReply = 5,
+    /// Either direction: the sender's membership table (anti-entropy
+    /// push of the membership plane, `docs/PROTOCOL.md` §9).
+    MembershipPush = 6,
+    /// Server → initiator (or seed → joiner): the server's merged
+    /// membership table.
+    MembershipReply = 7,
+    /// Joiner → seed: the `dudd-join` handshake — assign this listen
+    /// address a stable member id and answer with the full table.
+    JoinRequest = 8,
 }
 
 /// Why a partner refused an inbound exchange.
@@ -277,6 +293,10 @@ pub enum RejectReason {
     /// older generation, or fingerprint mismatch); the sender retries
     /// with a full frame.
     BaselineMismatch,
+    /// A membership or join frame reached a node whose membership plane
+    /// is not enabled (static address-book fleet); the sender must not
+    /// retry.
+    NoMembership,
 }
 
 impl RejectReason {
@@ -287,6 +307,7 @@ impl RejectReason {
             RejectReason::Lineage => 3,
             RejectReason::Malformed => 4,
             RejectReason::BaselineMismatch => 5,
+            RejectReason::NoMembership => 6,
         }
     }
 
@@ -297,6 +318,7 @@ impl RejectReason {
             3 => RejectReason::Lineage,
             4 => RejectReason::Malformed,
             5 => RejectReason::BaselineMismatch,
+            6 => RejectReason::NoMembership,
             other => {
                 return Err(CodecError::BadParams(format!(
                     "unknown reject reason {other}"
@@ -347,6 +369,28 @@ pub enum ExchangeFrame {
         generation: u64,
         /// The delta payload.
         delta: DeltaPayload,
+    },
+    /// The sender's membership table (anti-entropy push).
+    MembershipPush {
+        /// Sender's restart generation (a receiver behind it catches up
+        /// at its next refresh).
+        generation: u64,
+        /// The sender's member table.
+        table: MemberTable,
+    },
+    /// The server's merged membership table (reply to a push or a join).
+    MembershipReply {
+        /// The serving node's restart generation.
+        generation: u64,
+        /// The merged member table.
+        table: MemberTable,
+    },
+    /// The `dudd-join` handshake: assign `addr` a stable member id.
+    JoinRequest {
+        /// The joiner's restart generation (0 — it has none yet).
+        generation: u64,
+        /// The joiner's exchange listen address.
+        addr: SocketAddr,
     },
 }
 
@@ -560,6 +604,83 @@ pub fn delta_wire_size(delta: &DeltaPayload) -> usize {
     74 + 16 * delta.changed_buckets()
 }
 
+/// Encode a socket address: `family u8 (4|6) | ip bytes | port u16 LE`.
+fn encode_socket_addr_into(addr: SocketAddr, out: &mut Vec<u8>) {
+    match addr.ip() {
+        IpAddr::V4(ip) => {
+            out.push(4);
+            out.extend_from_slice(&ip.octets());
+        }
+        IpAddr::V6(ip) => {
+            out.push(6);
+            out.extend_from_slice(&ip.octets());
+        }
+    }
+    out.extend_from_slice(&addr.port().to_le_bytes());
+}
+
+fn decode_socket_addr_from(r: &mut Reader<'_>) -> Result<SocketAddr, CodecError> {
+    let ip: IpAddr = match r.u8()? {
+        4 => Ipv4Addr::from(<[u8; 4]>::try_from(r.take(4)?).unwrap()).into(),
+        6 => Ipv6Addr::from(<[u8; 16]>::try_from(r.take(16)?).unwrap()).into(),
+        other => {
+            return Err(CodecError::BadParams(format!(
+                "unknown address family {other}"
+            )))
+        }
+    };
+    let port = u16::from_le_bytes(r.take(2)?.try_into().unwrap());
+    Ok(SocketAddr::new(ip, port))
+}
+
+/// Smallest possible member-entry encoding (IPv4 address): the hostile
+/// length guard of the table decoder.
+const MIN_MEMBER_ENTRY_BYTES: usize = 8 + 8 + 1 + 1 + 4 + 2;
+
+fn encode_member_table_into(t: &MemberTable, out: &mut Vec<u8>) {
+    out.extend_from_slice(&(t.len() as u64).to_le_bytes());
+    for e in t.iter() {
+        out.extend_from_slice(&e.id.to_le_bytes());
+        out.extend_from_slice(&e.incarnation.to_le_bytes());
+        out.push(e.status.code());
+        encode_socket_addr_into(e.addr, out);
+    }
+}
+
+fn decode_member_table_from(r: &mut Reader<'_>) -> Result<MemberTable, CodecError> {
+    let count = r.len_field(MIN_MEMBER_ENTRY_BYTES)?;
+    let mut table = MemberTable::new();
+    for _ in 0..count {
+        let id = r.u64()?;
+        let incarnation = r.u64()?;
+        let status = MemberStatus::from_code(r.u8()?).ok_or_else(|| {
+            CodecError::BadParams("unknown member status code".into())
+        })?;
+        let addr = decode_socket_addr_from(r)?;
+        table.upsert(MemberEntry {
+            id,
+            addr,
+            incarnation,
+            status,
+        });
+    }
+    Ok(table)
+}
+
+/// Canonical encoding of a member table (`docs/PROTOCOL.md` §9):
+/// entries in ascending id order, so two converged nodes' tables are
+/// byte-identical — the churn acceptance test compares these bytes.
+pub fn encode_member_table(t: &MemberTable) -> Vec<u8> {
+    let mut out = Vec::with_capacity(8 + 40 * t.len());
+    encode_member_table_into(t, &mut out);
+    out
+}
+
+/// Decode a canonical member-table payload.
+pub fn decode_member_table(buf: &[u8]) -> Result<MemberTable, CodecError> {
+    decode_member_table_from(&mut Reader::new(buf))
+}
+
 fn exchange_header(kind: ExchangeKind, generation: u64, out: &mut Vec<u8>) {
     out.extend_from_slice(EXCHANGE_MAGIC);
     out.push(VERSION);
@@ -618,6 +739,35 @@ pub fn encode_exchange_delta_push(generation: u64, delta: &DeltaPayload) -> Vec<
 /// Encode a delta reply frame (averaged state vs the same baseline).
 pub fn encode_exchange_delta_reply(generation: u64, delta: &DeltaPayload) -> Vec<u8> {
     encode_delta_frame(ExchangeKind::DeltaReply, generation, delta)
+}
+
+fn encode_membership_frame(
+    kind: ExchangeKind,
+    generation: u64,
+    table: &MemberTable,
+) -> Vec<u8> {
+    let mut out = Vec::with_capacity(22 + 40 * table.len());
+    exchange_header(kind, generation, &mut out);
+    encode_member_table_into(table, &mut out);
+    out
+}
+
+/// Encode a membership anti-entropy push.
+pub fn encode_membership_push(generation: u64, table: &MemberTable) -> Vec<u8> {
+    encode_membership_frame(ExchangeKind::MembershipPush, generation, table)
+}
+
+/// Encode a membership reply (the server's merged table).
+pub fn encode_membership_reply(generation: u64, table: &MemberTable) -> Vec<u8> {
+    encode_membership_frame(ExchangeKind::MembershipReply, generation, table)
+}
+
+/// Encode a `dudd-join` handshake request.
+pub fn encode_join_request(generation: u64, addr: SocketAddr) -> Vec<u8> {
+    let mut out = Vec::with_capacity(14 + 19);
+    exchange_header(ExchangeKind::JoinRequest, generation, &mut out);
+    encode_socket_addr_into(addr, &mut out);
+    out
 }
 
 fn decode_delta_from(r: &mut Reader<'_>) -> Result<DeltaPayload, CodecError> {
@@ -681,6 +831,18 @@ pub fn decode_exchange(buf: &[u8]) -> Result<ExchangeFrame, CodecError> {
         5 => Ok(ExchangeFrame::DeltaReply {
             generation,
             delta: decode_delta_from(&mut r)?,
+        }),
+        6 => Ok(ExchangeFrame::MembershipPush {
+            generation,
+            table: decode_member_table_from(&mut r)?,
+        }),
+        7 => Ok(ExchangeFrame::MembershipReply {
+            generation,
+            table: decode_member_table_from(&mut r)?,
+        }),
+        8 => Ok(ExchangeFrame::JoinRequest {
+            generation,
+            addr: decode_socket_addr_from(&mut r)?,
         }),
         other => Err(CodecError::BadKind(other)),
     }
@@ -822,6 +984,7 @@ mod tests {
             RejectReason::Lineage,
             RejectReason::Malformed,
             RejectReason::BaselineMismatch,
+            RejectReason::NoMembership,
         ] {
             let buf = encode_exchange_reject(42, reason);
             match decode_exchange(&buf).unwrap() {
@@ -1007,6 +1170,106 @@ mod tests {
             );
         }
         assert_eq!(exchange_frame_fingerprint(&[0u8; 14]), None);
+    }
+
+    fn sample_table() -> MemberTable {
+        let mut t = MemberTable::new();
+        t.upsert(MemberEntry::alive(0, "127.0.0.1:7001".parse().unwrap()));
+        t.upsert(MemberEntry {
+            id: 1,
+            addr: "10.0.0.3:7400".parse().unwrap(),
+            incarnation: 4,
+            status: MemberStatus::Suspect,
+        });
+        t.upsert(MemberEntry {
+            id: 7,
+            addr: "[2001:db8::5]:9000".parse().unwrap(),
+            incarnation: 2,
+            status: MemberStatus::Dead,
+        });
+        t
+    }
+
+    #[test]
+    fn member_table_roundtrips_canonically() {
+        let t = sample_table();
+        let buf = encode_member_table(&t);
+        let d = decode_member_table(&buf).unwrap();
+        assert_eq!(d, t);
+        // Canonical: re-encoding the decode is byte-identical, and a
+        // table built in a different insert order encodes the same.
+        assert_eq!(encode_member_table(&d), buf);
+        let mut entries: Vec<MemberEntry> = t.iter().cloned().collect();
+        entries.reverse();
+        let mut reordered = MemberTable::new();
+        for e in entries {
+            reordered.upsert(e);
+        }
+        assert_eq!(encode_member_table(&reordered), buf);
+    }
+
+    #[test]
+    fn membership_frames_roundtrip() {
+        let t = sample_table();
+        for (buf, want_push) in [
+            (encode_membership_push(9, &t), true),
+            (encode_membership_reply(9, &t), false),
+        ] {
+            match decode_exchange(&buf).unwrap() {
+                ExchangeFrame::MembershipPush { generation, table } if want_push => {
+                    assert_eq!(generation, 9);
+                    assert_eq!(table, t);
+                }
+                ExchangeFrame::MembershipReply { generation, table } if !want_push => {
+                    assert_eq!(generation, 9);
+                    assert_eq!(table, t);
+                }
+                other => panic!("wrong frame decoded: {other:?}"),
+            }
+        }
+        let addr: SocketAddr = "192.168.7.4:7400".parse().unwrap();
+        match decode_exchange(&encode_join_request(0, addr)).unwrap() {
+            ExchangeFrame::JoinRequest { generation, addr: a } => {
+                assert_eq!(generation, 0);
+                assert_eq!(a, addr);
+            }
+            other => panic!("wrong frame: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn membership_frames_reject_bad_inputs() {
+        let t = sample_table();
+        let good = encode_membership_push(1, &t);
+        for cut in 0..good.len() {
+            assert!(decode_exchange(&good[..cut]).is_err(), "cut {cut}");
+        }
+        // Unknown status code.
+        let mut bad = good.clone();
+        bad[14 + 8 + 16] = 9; // first entry's status byte
+        assert!(matches!(
+            decode_exchange(&bad).unwrap_err(),
+            CodecError::BadParams(_)
+        ));
+        // Unknown address family.
+        let mut bad = good.clone();
+        bad[14 + 8 + 17] = 5; // first entry's family byte
+        assert!(matches!(
+            decode_exchange(&bad).unwrap_err(),
+            CodecError::BadParams(_)
+        ));
+        // Hostile entry count: refused before any allocation.
+        let mut bad = good;
+        bad[14..22].copy_from_slice(&u64::MAX.to_le_bytes());
+        assert!(matches!(
+            decode_exchange(&bad).unwrap_err(),
+            CodecError::Truncated(_)
+        ));
+        // Truncated join request.
+        let join = encode_join_request(0, "127.0.0.1:1".parse().unwrap());
+        for cut in 0..join.len() {
+            assert!(decode_exchange(&join[..cut]).is_err(), "cut {cut}");
+        }
     }
 
     #[test]

@@ -19,9 +19,10 @@ mod store;
 mod uddsketch;
 
 pub use codec::{
-    apply_delta, decode_exchange, decode_peer_state, decode_sketch, delta_payload,
-    delta_wire_size, encode_exchange_delta_push, encode_exchange_delta_reply,
-    encode_exchange_push, encode_exchange_reject, encode_exchange_reply, encode_peer_state,
+    apply_delta, decode_exchange, decode_member_table, decode_peer_state, decode_sketch,
+    delta_payload, delta_wire_size, encode_exchange_delta_push, encode_exchange_delta_reply,
+    encode_exchange_push, encode_exchange_reject, encode_exchange_reply, encode_join_request,
+    encode_member_table, encode_membership_push, encode_membership_reply, encode_peer_state,
     encode_sketch, exchange_frame_fingerprint, peer_state_fingerprint, CodecError,
     DeltaPayload, ExchangeFrame, ExchangeKind, RejectReason,
 };

@@ -1,0 +1,387 @@
+//! Integration: gossip-based membership & live churn (ISSUE 5).
+//!
+//! Acceptance:
+//! * a loopback-TCP fleet built **without a static address book** —
+//!   node 0 bootstraps the membership plane, everyone else enters
+//!   through the `dudd-join` handshake — converges to the sequential
+//!   union sketch within α while a 4th node **joins after 3 rounds**
+//!   and one member is **killed mid-run**, with no manual restart
+//!   anywhere;
+//! * the survivors' member tables are **byte-identical** at quiescence
+//!   (canonical encoding), with the crashed member held as a dead
+//!   tombstone;
+//! * a simulated churn schedule (`churn::ChurnModel`) **replays against
+//!   a real TCP fleet**: the model decides which member crashes and
+//!   when, including the distinguished member id 0 — the `q̃ = 1` role
+//!   re-anchors on the lowest surviving id and the mass stays exact;
+//! * a static address-book node refuses membership traffic with
+//!   `NoMembership` instead of serving it.
+
+// Plain-data configs are mutated after `default()` on purpose (see lib.rs).
+#![allow(clippy::field_reassign_with_default)]
+
+use duddsketch::churn::{ChurnKind, ChurnModel};
+use duddsketch::config::ServiceConfig;
+use duddsketch::data::{peer_dataset, DatasetKind};
+use duddsketch::metrics::relative_error;
+use duddsketch::prelude::*;
+use duddsketch::rng::default_rng;
+use std::net::SocketAddr;
+use std::time::Duration;
+
+const QS: [f64; 3] = [0.5, 0.9, 0.99];
+
+fn churn_cfg(suspect_ms: u64) -> ServiceConfig {
+    let mut c = ServiceConfig::default();
+    c.shards = 2;
+    c.batch_size = 256;
+    c.gossip.round_interval_ms = 0; // tests are the clock
+    c.gossip.exchange_deadline_ms = 2_000;
+    c.gossip.suspect_after_ms = suspect_ms;
+    c
+}
+
+/// Build one membership node: bootstrap (no seed) or join via `seed`.
+fn membership_node(cfg: &ServiceConfig, seed: Option<SocketAddr>) -> Node {
+    let opts = TcpTransportOptions::from_gossip(&cfg.gossip);
+    let t = TcpTransport::bind_with("127.0.0.1:0", opts).unwrap();
+    let b = Node::builder().config(cfg.clone()).transport(t);
+    let b = match seed {
+        None => b.membership_bootstrap(),
+        Some(a) => b.join(a),
+    };
+    b.build().unwrap()
+}
+
+fn ingest(node: &Node, data: &[f64]) {
+    let mut w = node.writer();
+    w.insert_batch(data);
+    w.flush();
+    node.flush();
+}
+
+/// Sweep all nodes (with short sleeps so the wall-clock suspicion and
+/// anti-entropy clocks advance) until every node's view is converged on
+/// the expected union total at one shared generation.
+fn converge(fleet: &[Node], total: f64, max_sweeps: usize) -> usize {
+    for sweep in 1..=max_sweeps {
+        for n in fleet {
+            n.step();
+        }
+        let views: Vec<_> = fleet
+            .iter()
+            .map(|n| n.global_view().expect("gossip enabled"))
+            .collect();
+        let gen0 = views[0].generation();
+        if views.iter().all(|v| {
+            v.generation() == gen0 && v.converged() && v.estimated_total() == total
+        }) {
+            return sweep;
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    let states: Vec<String> = fleet
+        .iter()
+        .map(|n| {
+            let v = n.global_view().unwrap();
+            let (a, s, d) = n.membership().unwrap().counts();
+            format!(
+                "gen={} total={} converged={} view={a}/{s}/{d}",
+                v.generation(),
+                v.estimated_total(),
+                v.converged()
+            )
+        })
+        .collect();
+    panic!("membership fleet did not converge within {max_sweeps} sweeps: {states:?}");
+}
+
+fn assert_views_match(fleet: &[Node], seq: &UddSketch, peers: f64, total: f64) {
+    for (k, node) in fleet.iter().enumerate() {
+        let v = node.global_view().unwrap();
+        assert_eq!(v.estimated_peers(), peers, "node {k} fleet size");
+        assert_eq!(v.estimated_total(), total, "node {k} union length");
+        for q in QS {
+            let est = v.query(q).unwrap();
+            let truth = seq.quantile(q).unwrap();
+            let re = relative_error(est, truth);
+            assert!(
+                re <= seq.alpha() + 1e-9,
+                "node {k} q={q}: view {est} vs sequential {truth} \
+                 (re {re} > alpha {})",
+                seq.alpha()
+            );
+        }
+    }
+}
+
+/// The acceptance scenario: a 4-node fleet assembled by join handshakes
+/// where the 4th node joins after 3 live rounds and another member is
+/// killed mid-run. The survivors re-converge to the sequential union of
+/// the SURVIVING streams within α, and their member tables are
+/// byte-identical at quiescence.
+#[test]
+fn node_joins_after_three_rounds_and_crash_survivors_reconverge() {
+    let items = 2_000;
+    let master = default_rng(42);
+    let datasets: Vec<Vec<f64>> = (0..4)
+        .map(|i| peer_dataset(DatasetKind::Exponential, i, items, &master))
+        .collect();
+
+    // Bootstrap node 0; nodes 1–2 join through it. Ids are assigned by
+    // the handshake in join order.
+    let cfg = churn_cfg(200);
+    let mut fleet = vec![membership_node(&cfg, None)];
+    let seed_addr = fleet[0].listen_addr().unwrap();
+    for _ in 1..3 {
+        fleet.push(membership_node(&cfg, Some(seed_addr)));
+    }
+    for (k, node) in fleet.iter().enumerate() {
+        let m = node.membership().expect("membership on");
+        assert_eq!(m.self_id(), k as u64, "join handshake assigns sequential ids");
+        ingest(node, &datasets[k]);
+    }
+
+    // Three live rounds before anyone else shows up.
+    for _ in 0..3 {
+        for n in &fleet {
+            n.step();
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+
+    // A 4th node joins the RUNNING fleet — via node 1, not the
+    // bootstrap seed (any member serves the handshake).
+    let joiner = membership_node(&cfg, Some(fleet[1].listen_addr().unwrap()));
+    assert_eq!(joiner.membership().unwrap().self_id(), 3);
+    ingest(&joiner, &datasets[3]);
+    fleet.push(joiner);
+
+    // The whole 4-node fleet converges on the full union: the join
+    // spread by anti-entropy, every node restarted its protocol
+    // (generation bump), and the joiner's stream is in the view.
+    let mut seq_all: UddSketch = UddSketch::new(cfg.alpha, cfg.max_buckets).unwrap();
+    for d in &datasets {
+        seq_all.extend(d);
+    }
+    converge(&fleet, (4 * items) as f64, 400);
+    assert_views_match(&fleet, &seq_all, 4.0, (4 * items) as f64);
+    let gen_joined = fleet[0].global_view().unwrap().generation();
+    assert!(
+        gen_joined > 1,
+        "the join must have restarted the protocol at least once"
+    );
+
+    // Kill member 2 mid-run — no restart anywhere. Survivors suspect it
+    // on failed exchanges, declare it dead, bump the generation, and
+    // re-anchor the union on the surviving streams.
+    let victim = fleet.remove(2);
+    victim.shutdown();
+    let mut seq: UddSketch = UddSketch::new(cfg.alpha, cfg.max_buckets).unwrap();
+    for &d in &[0usize, 1, 3] {
+        seq.extend(&datasets[d]);
+    }
+    converge(&fleet, (3 * items) as f64, 600);
+    assert_views_match(&fleet, &seq, 3.0, (3 * items) as f64);
+    assert!(
+        fleet[0].global_view().unwrap().generation() > gen_joined,
+        "the death must have restarted the protocol"
+    );
+
+    // Membership acceptance: every survivor holds the same 4-entry
+    // table byte for byte, with member 2 a dead tombstone.
+    for (k, node) in fleet.iter().enumerate() {
+        let table = node.membership().unwrap().table();
+        assert_eq!(table.len(), 4, "node {k} table size");
+        assert_eq!(
+            table.get(2).unwrap().status,
+            MemberStatus::Dead,
+            "node {k} must hold member 2's tombstone"
+        );
+        assert_eq!(table.distinguished_id(), Some(0));
+    }
+    let encoded: Vec<Vec<u8>> = fleet
+        .iter()
+        .map(|n| n.membership().unwrap().encoded_table())
+        .collect();
+    assert!(
+        encoded.iter().all(|e| e == &encoded[0]),
+        "surviving member tables must be byte-identical at quiescence"
+    );
+
+    for node in fleet {
+        node.shutdown();
+    }
+}
+
+/// A simulated churn schedule replayed against a real TCP fleet: the
+/// `ChurnModel` (Fail&Stop, §7.2) decides which member crashes and
+/// when; the fleet executes the crash live. The scheduled victim is
+/// whatever the model says — when it is member 0, this also exercises
+/// the dynamic distinguished-peer rule (`q̃ = 1` re-anchors on the
+/// lowest surviving id).
+#[test]
+fn failstop_schedule_replays_against_tcp_fleet() {
+    let items = 1_200;
+    let peers = 3usize;
+    let master = default_rng(7);
+    let datasets: Vec<Vec<f64>> = (0..peers)
+        .map(|i| peer_dataset(DatasetKind::Uniform, i, items, &master))
+        .collect();
+
+    // The schedule is a pure function of the model: the replay below and
+    // any future re-run pick the identical crash point.
+    let model = ChurnModel::new(ChurnKind::FailStop, peers, &master);
+    let (crash_round, victim_id) = model
+        .first_failure(800, peers)
+        .expect("fail&stop over 800 rounds fails someone");
+    assert_eq!(
+        (crash_round, victim_id),
+        model.first_failure(800, peers).unwrap(),
+        "schedule must be deterministic"
+    );
+
+    let cfg = churn_cfg(150);
+    let mut fleet = vec![membership_node(&cfg, None)];
+    let seed_addr = fleet[0].listen_addr().unwrap();
+    for _ in 1..peers {
+        fleet.push(membership_node(&cfg, Some(seed_addr)));
+    }
+    for (k, node) in fleet.iter().enumerate() {
+        ingest(node, &datasets[k]);
+    }
+
+    // Replay: run the schedule's rounds (capped — pre-crash rounds are
+    // all-online, so compressing them changes nothing the fleet can
+    // observe), then crash the scheduled victim.
+    for _ in 0..crash_round.min(5) {
+        for n in &fleet {
+            n.step();
+        }
+    }
+    let victim = fleet.remove(victim_id);
+    victim.shutdown();
+
+    let survivors: Vec<usize> = (0..peers).filter(|&l| l != victim_id).collect();
+    let mut seq: UddSketch = UddSketch::new(cfg.alpha, cfg.max_buckets).unwrap();
+    for &d in &survivors {
+        seq.extend(&datasets[d]);
+    }
+    let total = (survivors.len() * items) as f64;
+    converge(&fleet, total, 600);
+    assert_views_match(&fleet, &seq, survivors.len() as f64, total);
+
+    // The distinguished role sits on the lowest SURVIVING id — the
+    // whole point when the schedule kills member 0.
+    let expect_distinguished = survivors[0] as u64;
+    for node in &fleet {
+        let table = node.membership().unwrap().table();
+        assert_eq!(table.distinguished_id(), Some(expect_distinguished));
+        assert_eq!(
+            table.get(victim_id as u64).unwrap().status,
+            MemberStatus::Dead
+        );
+    }
+    for node in fleet {
+        node.shutdown();
+    }
+}
+
+/// Membership traffic at a static address-book node draws the
+/// `NoMembership` reject (and the static node keeps serving data
+/// exchanges untouched).
+#[test]
+fn static_fleet_rejects_membership_traffic() {
+    let mut cfg = ServiceConfig::default();
+    cfg.shards = 1;
+    cfg.gossip.round_interval_ms = 0;
+    cfg.gossip.exchange_deadline_ms = 1_000;
+    let opts = TcpTransportOptions::from_gossip(&cfg.gossip);
+    // A static node (remote-peer list, no membership plane).
+    let placeholder = {
+        let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        l.local_addr().unwrap()
+    };
+    let static_node = Node::builder()
+        .config(cfg.clone())
+        .self_index(0)
+        .transport(TcpTransport::bind_with("127.0.0.1:0", opts.clone()).unwrap())
+        .remote_peer(placeholder)
+        .build()
+        .unwrap();
+    let addr = static_node.listen_addr().unwrap();
+
+    // A would-be joiner is refused with NoMembership...
+    let client = TcpTransport::bind_with("127.0.0.1:0", opts).unwrap();
+    let err = client.join_remote(addr).unwrap_err();
+    assert!(matches!(err, TransportError::NoMembership), "{err:?}");
+    // ...and a membership push is too.
+    let err = client
+        .exchange_membership(addr, 1, &MemberTable::new())
+        .unwrap_err();
+    assert!(matches!(err, TransportError::NoMembership), "{err:?}");
+
+    static_node.shutdown();
+}
+
+/// Builder guard rails: dynamic membership needs a serving transport and
+/// refuses a mixed static/dynamic configuration.
+#[test]
+fn membership_builder_rejects_bad_wiring() {
+    // Connect-only transport: the joiner would be unreachable.
+    let err = Node::builder()
+        .shards(1)
+        .transport(TcpTransport::connect_only(Duration::from_millis(100)).unwrap())
+        .membership_bootstrap()
+        .build()
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("serving transport"), "{err:#}");
+
+    // No transport at all.
+    let err = Node::builder()
+        .shards(1)
+        .membership_bootstrap()
+        .build()
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("remote transport"), "{err:#}");
+
+    // Static member list + membership: mutually exclusive.
+    let t = TcpTransport::bind("127.0.0.1:0", Duration::from_millis(100)).unwrap();
+    let err = Node::builder()
+        .shards(1)
+        .transport(t)
+        .membership_bootstrap()
+        .remote_peer("127.0.0.1:9".parse().unwrap())
+        .build()
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("mutually exclusive"), "{err:#}");
+
+    // Bootstrap and join at once: ambiguous.
+    let t = TcpTransport::bind("127.0.0.1:0", Duration::from_millis(100)).unwrap();
+    let err = Node::builder()
+        .shards(1)
+        .transport(t)
+        .membership_bootstrap()
+        .join("127.0.0.1:9".parse().unwrap())
+        .build()
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("choose one"), "{err:#}");
+
+    // No seed answering: the join fails with the seed named.
+    let dead = {
+        let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        l.local_addr().unwrap()
+    };
+    let mut cfg = ServiceConfig::default();
+    cfg.shards = 1;
+    cfg.gossip.exchange_deadline_ms = 200;
+    let opts = TcpTransportOptions::from_gossip(&cfg.gossip);
+    let t = TcpTransport::bind_with("127.0.0.1:0", opts).unwrap();
+    let err = Node::builder()
+        .config(cfg)
+        .transport(t)
+        .join(dead)
+        .build()
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("dudd-join"), "{err:#}");
+}

@@ -628,11 +628,24 @@ fn near_converged_delta_exchanges_shrink_wire_bytes() {
 
         let r1 = client.step().unwrap();
         assert_eq!(r1.exchanges, 1, "first exchange (full frames)");
+        assert_eq!(r1.pool.fresh_connects, 1, "{:?}", r1.pool);
+        assert_eq!(r1.pool.full_pushes, 1, "first push is always full");
         // No new epoch between steps: the pair's states are already the
         // shared average, so the second exchange changes nothing.
         let r2 = client.step().unwrap();
         assert_eq!(r2.exchanges, 1, "second exchange");
         assert_eq!(r2.failed, 0);
+        // ISSUE 5 satellite: per-round pool/frame-mix telemetry in the
+        // report — dashboards no longer pull PoolStats off the transport.
+        assert_eq!(r2.pool.reused, 1, "pooled reuse visible per round");
+        assert_eq!(r2.pool.fresh_connects, 0, "{:?}", r2.pool);
+        if delta {
+            assert_eq!(r2.pool.delta_pushes, 1, "{:?}", r2.pool);
+            assert_eq!(r2.pool.full_pushes, 0, "{:?}", r2.pool);
+        } else {
+            assert_eq!(r2.pool.delta_pushes, 0, "{:?}", r2.pool);
+            assert_eq!(r2.pool.full_pushes, 1, "{:?}", r2.pool);
+        }
         drop(w);
         client.shutdown();
         server.shutdown();
