@@ -11,7 +11,7 @@
 
 use duddsketch::config::ServiceConfig;
 use duddsketch::rng::{default_rng, Rng};
-use duddsketch::service::QuantileService;
+use duddsketch::service::{Node, QuantileService};
 use duddsketch::sketch::{DenseStore, UddSketch};
 use duddsketch::util::bench::{black_box, Bencher};
 
@@ -48,6 +48,31 @@ fn run_service(data: &[f64], shards: usize, window_slots: usize) -> f64 {
     c
 }
 
+/// Same lifecycle through a `Node`, whose service books every batch into
+/// the metrics registry (ISSUE 6) — the instrumented twin of
+/// `run_service` for measuring hot-path booking overhead.
+fn run_instrumented(data: &[f64], shards: usize) -> f64 {
+    let mut cfg = ServiceConfig::default();
+    cfg.shards = shards;
+    cfg.batch_size = 4096;
+    let node = Node::builder().config(cfg).build().unwrap();
+    let chunk = data.len().div_ceil(shards);
+    std::thread::scope(|scope| {
+        for part in data.chunks(chunk) {
+            let mut w = node.writer();
+            scope.spawn(move || {
+                w.insert_batch(part);
+                w.flush();
+            });
+        }
+    });
+    let snap = node.flush();
+    assert_eq!(snap.count(), data.len() as f64);
+    let c = snap.count();
+    node.shutdown();
+    c
+}
+
 fn main() {
     let mut b = Bencher::new();
     let narrow = narrow_data();
@@ -71,6 +96,24 @@ fn main() {
             N as u64,
             || {
                 black_box(run_service(&narrow, shards, 0));
+            },
+        );
+    }
+
+    // Registry booking on the ingest hot path (ISSUE 6 acceptance):
+    // three relaxed atomic adds per batch, so at batch_size 4096 the
+    // instrumented node must land within 5% of the bare service case
+    // with the same shard count above.
+    for shards in [1usize, 4] {
+        if shards > cores {
+            eprintln!("skipping instrumented {shards} shards ({cores} cores available)");
+            continue;
+        }
+        b.case(
+            &format!("service/{shards}-shard narrow 1M inserts (instrumented)"),
+            N as u64,
+            || {
+                black_box(run_instrumented(&narrow, shards));
             },
         );
     }

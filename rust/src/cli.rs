@@ -113,7 +113,7 @@ USAGE:
             gossip_probes gossip_seed
   duddsketch serve-remote [--dataset NAME] [--items N] [--nodes P]
             [--rounds R] [--q Q1,Q2,...] [--seed X] [--no-delta]
-            [--no-pool] [key=value ...]
+            [--no-pool] [--metrics-bind HOST:PORT] [key=value ...]
       run P real nodes on loopback TCP: every node binds a serve loop,
       lists the others as remote peers, and gossips framed PeerStates
       (push–pull with per-exchange deadlines, §7.2 cancellation) while
@@ -121,10 +121,14 @@ USAGE:
       against a sequential UDDSketch over the union stream. Connection
       pooling and delta frames (docs/PROTOCOL.md) are on by default;
       --no-pool forces a fresh connect per exchange and --no-delta
-      forces full frames (handy for A/B-ing the hot-path wins)
+      forces full frames (handy for A/B-ing the hot-path wins).
+      --metrics-bind serves every node's Prometheus /metrics endpoint
+      (node k on port+k; port 0 picks an ephemeral port per node — see
+      docs/OBSERVABILITY.md)
       keys: serve-gossip keys plus gossip_deadline_ms
             gossip_pool_connections gossip_pool_idle_ms
-            gossip_delta_exchanges (shards defaults to 2 per node here)
+            gossip_delta_exchanges metrics_bind (shards defaults to 2
+            per node here)
   duddsketch serve-remote --membership [--nodes P] [--rounds R]
             [--join-after S] [--kill-after S] [key=value ...]
       live-churn demo on the dynamic membership plane (docs/PROTOCOL.md
@@ -651,6 +655,15 @@ fn cmd_serve_remote(args: &Args) -> Result<String> {
     if args.has("no-pool") {
         gcfg.pool_connections = 0;
     }
+    // --metrics-bind HOST:PORT serves every node's /metrics: node k
+    // binds port+k, so one flag covers the whole loopback fleet. Port 0
+    // gives each node its own ephemeral port instead.
+    let metrics_bind: Option<SocketAddr> = match args.flag("metrics-bind") {
+        Some(v) => Some(v.parse().map_err(|_| {
+            anyhow::anyhow!("--metrics-bind needs a host:port address, got '{v}'")
+        })?),
+        None => None,
+    };
     let opts = TcpTransportOptions::from_gossip(&gcfg);
     let transports: Vec<TcpTransport> = (0..nodes)
         .map(|_| TcpTransport::bind_with("127.0.0.1:0", opts.clone()))
@@ -667,6 +680,17 @@ fn cmd_serve_remote(args: &Args) -> Result<String> {
             .config(svc_cfg.clone())
             .self_index(k)
             .transport(t);
+        if let Some(base) = metrics_bind {
+            let mut addr = base;
+            if base.port() != 0 {
+                let port = base
+                    .port()
+                    .checked_add(k as u16)
+                    .context("--metrics-bind port + node index overflows")?;
+                addr.set_port(port);
+            }
+            b = b.metrics_bind(addr);
+        }
         for (j, &addr) in addrs.iter().enumerate() {
             if j != k {
                 b = b.remote_peer(addr);
@@ -689,6 +713,9 @@ fn cmd_serve_remote(args: &Args) -> Result<String> {
             "  node {k}: listening on {}\n",
             node.listen_addr().expect("tcp node listens")
         ));
+        if let Some(m) = node.metrics_addr() {
+            out.push_str(&format!("  node {k}: metrics on http://{m}/metrics\n"));
+        }
     }
     out.push_str("  sweep  exchanges  failed  KiB     gen(max)  drift(node0)\n");
 
@@ -1393,6 +1420,35 @@ mod tests {
         assert!(out.contains("listening on 127.0.0.1:"), "{out}");
         assert!(out.contains("worst-node-view"), "{out}");
         assert!(out.contains("OK: worst rel-diff"), "{out}");
+    }
+
+    #[test]
+    fn serve_remote_metrics_bind_prints_a_scrape_address_per_node() {
+        // Port 0 gives each node its own ephemeral /metrics listener;
+        // the run must report one scrape address per node and still
+        // converge as usual.
+        let a = args(&[
+            "serve-remote",
+            "--dataset",
+            "uniform",
+            "--items",
+            "1000",
+            "--nodes",
+            "2",
+            "--rounds",
+            "20",
+            "--metrics-bind",
+            "127.0.0.1:0",
+            "batch=256",
+            "shards=1",
+        ]);
+        let out = dispatch(&a).unwrap();
+        assert!(out.contains("OK: worst rel-diff"), "{out}");
+        assert_eq!(
+            out.matches("metrics on http://127.0.0.1:").count(),
+            2,
+            "{out}"
+        );
     }
 
     #[test]

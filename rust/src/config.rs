@@ -256,6 +256,11 @@ pub struct ServiceConfig {
     /// Continuous gossip-loop knobs (used when the service fronts a
     /// [`GossipLoop`](crate::service::GossipLoop)).
     pub gossip: GossipLoopConfig,
+    /// Address the node's Prometheus `/metrics` endpoint listens on;
+    /// `None` (the default) runs no HTTP listener. Port 0 binds an
+    /// ephemeral port (query it via
+    /// [`Node::metrics_addr`](crate::service::Node::metrics_addr)).
+    pub metrics_bind: Option<SocketAddr>,
 }
 
 impl Default for ServiceConfig {
@@ -271,6 +276,7 @@ impl Default for ServiceConfig {
             epoch_interval_ms: 0,
             window_slots: 0,
             gossip: GossipLoopConfig::default(),
+            metrics_bind: None,
         }
     }
 }
@@ -297,6 +303,12 @@ impl ServiceConfig {
             }
             "window_slots" | "window" => {
                 self.window_slots = value.parse().map_err(|_| parse_err(key, value))?
+            }
+            "metrics_bind" | "metrics" => {
+                self.metrics_bind = match value {
+                    "" | "none" | "off" => None,
+                    addr => Some(addr.parse().map_err(|_| parse_err(key, value))?),
+                }
             }
             _ if key.starts_with("gossip_") => {
                 self.gossip.set(&key["gossip_".len()..], value)?
@@ -333,7 +345,7 @@ impl ServiceConfig {
     /// One-line human summary.
     pub fn summary(&self) -> String {
         format!(
-            "alpha={} m={} shards={} batch={} queue={} epoch_ms={} window={}",
+            "alpha={} m={} shards={} batch={} queue={} epoch_ms={} window={} metrics={}",
             self.alpha,
             self.max_buckets,
             self.shards,
@@ -341,6 +353,8 @@ impl ServiceConfig {
             self.queue_depth,
             self.epoch_interval_ms,
             self.window_slots,
+            self.metrics_bind
+                .map_or_else(|| "off".to_string(), |a| a.to_string()),
         )
     }
 }
@@ -759,6 +773,27 @@ mod tests {
         let s = GossipLoopConfig::default().summary();
         assert!(s.contains("suspect_after_ms=5000"), "{s}");
         assert!(s.contains("tombstone_ttl_ms=60000"), "{s}");
+    }
+
+    #[test]
+    fn metrics_bind_key_sets_clears_and_rejects() {
+        let mut c = ServiceConfig::default();
+        assert!(c.metrics_bind.is_none(), "off by default");
+        assert!(c.summary().contains("metrics=off"));
+
+        c.set("metrics_bind", "127.0.0.1:9464").unwrap();
+        assert_eq!(c.metrics_bind, Some("127.0.0.1:9464".parse().unwrap()));
+        assert!(c.summary().contains("metrics=127.0.0.1:9464"));
+        c.validate().unwrap();
+
+        // `none`/`off` (and the `metrics` alias) clear it again.
+        c.set("metrics", "off").unwrap();
+        assert!(c.metrics_bind.is_none());
+        c.set("metrics_bind", "0.0.0.0:0").unwrap();
+        c.set("metrics_bind", "none").unwrap();
+        assert!(c.metrics_bind.is_none());
+
+        assert!(c.set("metrics_bind", "not-an-addr").is_err());
     }
 
     #[test]

@@ -83,6 +83,7 @@ pub mod experiments;
 pub mod gossip;
 pub mod graph;
 pub mod metrics;
+pub mod obs;
 pub mod rng;
 pub mod runtime;
 pub mod service;
@@ -106,6 +107,7 @@ pub type Result<T> = anyhow::Result<T>;
 pub mod prelude {
     pub use crate::config::{GossipLoopConfig, ServiceConfig};
     pub use crate::gossip::PeerState;
+    pub use crate::obs::{MetricsRegistry, NodeMetrics};
     pub use crate::service::{
         GlobalView, GossipLoop, GossipMember, GossipRoundReport, InProcessTransport,
         MemberStatus, MemberTable, Membership, Node, NodeBuilder, QuantileService,

@@ -1,0 +1,216 @@
+//! The `GET /metrics` exposition endpoint: a tiny hand-rolled HTTP/1.1
+//! listener over `std::net` (no HTTP dependency exists offline, and a
+//! scrape endpoint needs exactly one verb and one path).
+//!
+//! One background thread accepts connections (non-blocking accept +
+//! short sleep, so shutdown never hangs on `accept`), reads the request
+//! head with a read timeout, and answers:
+//!
+//! * `GET /metrics` → `200` with [`MetricsRegistry::render`] output
+//!   (`text/plain; version=0.0.4`),
+//! * any other path → `404`,
+//! * any other method → `405`.
+//!
+//! Every response closes the connection — scrapers poll at multi-second
+//! intervals, so keep-alive buys nothing and connection state costs.
+
+use super::registry::MetricsRegistry;
+use anyhow::{Context, Result};
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Cap on the request head we buffer (a scrape request line is tiny;
+/// anything larger is junk).
+const MAX_REQUEST_HEAD: usize = 4096;
+
+/// A running `/metrics` HTTP listener. Binding happens in
+/// [`MetricsServer::bind`]; dropping (or [`MetricsServer::shutdown`])
+/// stops the accept thread.
+#[derive(Debug)]
+pub struct MetricsServer {
+    local_addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    thread: Option<JoinHandle<()>>,
+}
+
+impl MetricsServer {
+    /// Bind `addr` (port 0 picks an ephemeral port — read it back via
+    /// [`MetricsServer::local_addr`]) and start serving `registry`.
+    pub fn bind(addr: SocketAddr, registry: Arc<MetricsRegistry>) -> Result<Self> {
+        let listener =
+            TcpListener::bind(addr).with_context(|| format!("binding /metrics on {addr}"))?;
+        listener
+            .set_nonblocking(true)
+            .context("metrics listener non-blocking mode")?;
+        let local_addr = listener.local_addr().context("metrics listener address")?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let thread = {
+            let stop = stop.clone();
+            std::thread::Builder::new()
+                .name("dudd-metrics".into())
+                .spawn(move || accept_loop(&listener, &registry, &stop))
+                .context("spawning metrics listener thread")?
+        };
+        Ok(MetricsServer {
+            local_addr,
+            stop,
+            thread: Some(thread),
+        })
+    }
+
+    /// The bound address (resolves port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// Stop the accept thread and release the port.
+    pub fn shutdown(mut self) {
+        self.stop_thread();
+    }
+
+    fn stop_thread(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for MetricsServer {
+    fn drop(&mut self) {
+        self.stop_thread();
+    }
+}
+
+fn accept_loop(listener: &TcpListener, registry: &Arc<MetricsRegistry>, stop: &AtomicBool) {
+    while !stop.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                // Errors on one scrape connection (reset mid-response,
+                // slow client timing out) must not take the endpoint
+                // down.
+                let _ = serve_conn(stream, registry);
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(10)),
+        }
+    }
+}
+
+fn serve_conn(mut stream: TcpStream, registry: &Arc<MetricsRegistry>) -> std::io::Result<()> {
+    stream.set_nonblocking(false)?;
+    stream.set_read_timeout(Some(Duration::from_millis(500)))?;
+    stream.set_write_timeout(Some(Duration::from_secs(2)))?;
+    let head = read_request_head(&mut stream)?;
+    let mut parts = head.lines().next().unwrap_or("").split_whitespace();
+    let method = parts.next().unwrap_or("");
+    let path = parts.next().unwrap_or("");
+    let (status, body) = if method != "GET" {
+        ("405 Method Not Allowed", "method not allowed\n".to_string())
+    } else if path == "/metrics" || path.starts_with("/metrics?") {
+        ("200 OK", registry.render())
+    } else {
+        ("404 Not Found", "not found (try /metrics)\n".to_string())
+    };
+    let response = format!(
+        "HTTP/1.1 {status}\r\n\
+         Content-Type: text/plain; version=0.0.4; charset=utf-8\r\n\
+         Content-Length: {}\r\n\
+         Connection: close\r\n\
+         \r\n{body}",
+        body.len()
+    );
+    stream.write_all(response.as_bytes())?;
+    stream.flush()
+}
+
+/// Read until the blank line ending the request head (or the size cap /
+/// read timeout). The body, if any, is ignored — GET has none.
+fn read_request_head(stream: &mut TcpStream) -> std::io::Result<String> {
+    let mut buf = Vec::with_capacity(256);
+    let mut chunk = [0u8; 512];
+    loop {
+        let n = stream.read(&mut chunk)?;
+        if n == 0 {
+            break;
+        }
+        buf.extend_from_slice(&chunk[..n]);
+        if buf.windows(4).any(|w| w == b"\r\n\r\n") || buf.len() >= MAX_REQUEST_HEAD {
+            break;
+        }
+    }
+    Ok(String::from_utf8_lossy(&buf).into_owned())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn get(addr: SocketAddr, path: &str) -> String {
+        let mut s = TcpStream::connect(addr).unwrap();
+        write!(s, "GET {path} HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+        let mut out = String::new();
+        s.read_to_string(&mut out).unwrap();
+        out
+    }
+
+    #[test]
+    fn serves_metrics_and_404s_elsewhere() {
+        let registry = Arc::new(MetricsRegistry::new());
+        let c = registry.counter("t_http_total", "scrapes").unwrap();
+        c.add(9);
+        let srv =
+            MetricsServer::bind("127.0.0.1:0".parse().unwrap(), registry.clone()).unwrap();
+        let addr = srv.local_addr();
+
+        let ok = get(addr, "/metrics");
+        assert!(ok.starts_with("HTTP/1.1 200 OK\r\n"), "{ok}");
+        assert!(ok.contains("text/plain; version=0.0.4"), "{ok}");
+        assert!(ok.contains("t_http_total 9"), "{ok}");
+        // Content-Length matches the body exactly.
+        let (head, body) = ok.split_once("\r\n\r\n").unwrap();
+        let len: usize = head
+            .lines()
+            .find_map(|l| l.strip_prefix("Content-Length: "))
+            .unwrap()
+            .parse()
+            .unwrap();
+        assert_eq!(len, body.len());
+
+        let missing = get(addr, "/nope");
+        assert!(missing.starts_with("HTTP/1.1 404"), "{missing}");
+
+        // The registry is read live: a later increment shows up.
+        c.add(1);
+        assert!(get(addr, "/metrics").contains("t_http_total 10"));
+        srv.shutdown();
+    }
+
+    #[test]
+    fn rejects_non_get_methods() {
+        let registry = Arc::new(MetricsRegistry::new());
+        let srv = MetricsServer::bind("127.0.0.1:0".parse().unwrap(), registry).unwrap();
+        let mut s = TcpStream::connect(srv.local_addr()).unwrap();
+        write!(s, "POST /metrics HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+        let mut out = String::new();
+        s.read_to_string(&mut out).unwrap();
+        assert!(out.starts_with("HTTP/1.1 405"), "{out}");
+    }
+
+    #[test]
+    fn shutdown_releases_the_port() {
+        let registry = Arc::new(MetricsRegistry::new());
+        let srv = MetricsServer::bind("127.0.0.1:0".parse().unwrap(), registry.clone()).unwrap();
+        let addr = srv.local_addr();
+        srv.shutdown();
+        // Rebinding the exact address succeeds once the thread exits.
+        let srv2 = MetricsServer::bind(addr, registry).unwrap();
+        assert_eq!(srv2.local_addr(), addr);
+    }
+}

@@ -1,0 +1,466 @@
+//! Node-wide observability plane: self-hosted sketch histograms,
+//! structured round tracing, and the `/metrics` exposition endpoint.
+//!
+//! The rest of the crate *distributes* UDDSketch; this module turns the
+//! same instrument on the node itself. Three pieces:
+//!
+//! * **[`MetricsRegistry`]** ([`registry`]) — named families of atomic
+//!   [`Counter`]s / [`Gauge`]s and [`UddSketch`](crate::sketch::UddSketch)-backed
+//!   latency [`Histogram`]s behind cheap `Arc` handles, rendered as
+//!   Prometheus text exposition. The latency quantiles (`p50`/`p99`/
+//!   `p999`) inherit the paper's relative-error guarantee, because they
+//!   *are* the paper's sketch.
+//! * **[`TraceRing`]** ([`trace`]) — a bounded ring of structured
+//!   [`RoundTrace`] spans, one per gossip round, timing the
+//!   refresh → exchange → membership → publish phases.
+//! * **[`MetricsServer`]** ([`http`]) — a tiny `std::net` HTTP listener
+//!   answering `GET /metrics`, wired through
+//!   [`NodeBuilder::metrics_bind`](crate::service::NodeBuilder::metrics_bind)
+//!   or the `metrics_bind` config key.
+//!
+//! [`NodeMetrics`] is the node's pre-registered handle bundle: one
+//! sub-bundle per instrumented layer (ingest service, gossip loop,
+//! transport, membership), all attached to one shared registry so a
+//! single scrape sees the whole node. The full metric-name catalogue
+//! and label conventions live in `docs/OBSERVABILITY.md`.
+//!
+//! ```
+//! use duddsketch::obs::{MetricsRegistry, NodeMetrics};
+//! use std::sync::Arc;
+//!
+//! let registry = Arc::new(MetricsRegistry::new());
+//! let obs = NodeMetrics::register(&registry).unwrap();
+//! obs.gossip.exchanges.inc();
+//! obs.transport.exchange_rtt.observe(0.0012);
+//! let text = registry.render();
+//! assert!(text.contains("dudd_exchanges_total 1"));
+//! assert!(text.contains("dudd_exchange_rtt_seconds_count 1"));
+//! ```
+
+mod http;
+mod registry;
+mod trace;
+
+pub use http::MetricsServer;
+pub use registry::{Counter, Gauge, Histogram, MetricsRegistry, SUMMARY_QUANTILES};
+pub use trace::{RoundPhase, RoundTrace, TraceRing, DEFAULT_TRACE_CAPACITY};
+
+use crate::sketch::RejectReason;
+use anyhow::Result;
+use std::sync::{Arc, OnceLock};
+
+/// Ingest-layer handles (`service/shard.rs` + `coordinator.rs`).
+#[derive(Clone, Debug)]
+pub struct ServiceMetrics {
+    /// `dudd_ingest_values_total` — finite values folded by the shards.
+    pub values: Counter,
+    /// `dudd_ingest_batches_total` — shard batches consumed.
+    pub batches: Counter,
+    /// `dudd_ingest_dropped_total` — non-finite values dropped.
+    pub dropped: Counter,
+    /// `dudd_epochs_total` — epoch folds published.
+    pub epochs: Counter,
+    /// `dudd_epoch_fold_seconds` — drain + fold + publish latency.
+    pub epoch_fold: Histogram,
+}
+
+/// Gossip-loop handles (`service/gossip_loop.rs`). The per-round
+/// [`GossipRoundReport`](crate::service::GossipRoundReport) is derived
+/// from snapshots of these counters — one source of truth.
+#[derive(Clone, Debug)]
+pub struct GossipMetrics {
+    /// `dudd_rounds_total` — gossip rounds executed.
+    pub rounds: Counter,
+    /// `dudd_reseeds_total` — protocol restarts (reseed rounds).
+    pub reseeds: Counter,
+    /// `dudd_exchanges_total` — completed initiated push–pulls.
+    pub exchanges: Counter,
+    /// `dudd_exchanges_failed_total` — cancelled initiated exchanges.
+    pub failed: Counter,
+    /// `dudd_exchange_bytes_total` — data-plane wire bytes moved by
+    /// initiated exchanges.
+    pub exchange_bytes: Counter,
+    /// `dudd_membership_bytes_total` — membership anti-entropy bytes.
+    pub membership_bytes: Counter,
+    /// `dudd_generation` — current restart generation.
+    pub generation: Gauge,
+    /// `dudd_drift` — largest relative probe drift of the last round.
+    pub drift: Gauge,
+    /// `dudd_converged` — 1 once drift fell to the threshold, else 0.
+    pub converged: Gauge,
+    /// `dudd_round_seconds` — whole-round wall clock.
+    pub round_seconds: Histogram,
+    phases: [Histogram; 4],
+}
+
+impl GossipMetrics {
+    /// The `dudd_round_phase_seconds{phase=...}` histogram for `phase`.
+    pub fn phase(&self, phase: RoundPhase) -> &Histogram {
+        let idx = RoundPhase::ALL
+            .iter()
+            .position(|p| *p == phase)
+            .expect("RoundPhase::ALL is exhaustive");
+        &self.phases[idx]
+    }
+}
+
+/// Per-[`RejectReason`] counters (one labeled family).
+#[derive(Clone, Debug)]
+pub struct RejectCounters {
+    /// `reason="busy"` — partner mid-exchange on its slot.
+    pub busy: Counter,
+    /// `reason="stale_generation"` — exchange behind a fleet restart.
+    pub stale_generation: Counter,
+    /// `reason="lineage"` — α₀ lineage mismatch.
+    pub lineage: Counter,
+    /// `reason="malformed"` — undecodable frame.
+    pub malformed: Counter,
+    /// `reason="baseline_mismatch"` — delta frame against a baseline
+    /// the receiver no longer holds.
+    pub baseline_mismatch: Counter,
+    /// `reason="no_membership"` — membership frame at a static node.
+    pub no_membership: Counter,
+}
+
+impl RejectCounters {
+    fn register(registry: &MetricsRegistry, name: &str, help: &str) -> Result<Self> {
+        let c = |reason: &str| registry.counter_with(name, help, &[("reason", reason)]);
+        Ok(RejectCounters {
+            busy: c("busy")?,
+            stale_generation: c("stale_generation")?,
+            lineage: c("lineage")?,
+            malformed: c("malformed")?,
+            baseline_mismatch: c("baseline_mismatch")?,
+            no_membership: c("no_membership")?,
+        })
+    }
+
+    /// The counter for `reason`.
+    pub fn reason(&self, reason: RejectReason) -> &Counter {
+        match reason {
+            RejectReason::Busy => &self.busy,
+            RejectReason::StaleGeneration => &self.stale_generation,
+            RejectReason::Lineage => &self.lineage,
+            RejectReason::Malformed => &self.malformed,
+            RejectReason::BaselineMismatch => &self.baseline_mismatch,
+            RejectReason::NoMembership => &self.no_membership,
+        }
+    }
+}
+
+/// Transport-layer handles (`service/transport.rs`), installed into a
+/// transport via [`Transport::install_metrics`](crate::service::Transport::install_metrics).
+#[derive(Clone, Debug)]
+pub struct TransportMetrics {
+    /// `dudd_pool_fresh_connects_total` — connections dialed fresh.
+    pub pool_fresh_connects: Counter,
+    /// `dudd_pool_reused_total` — pooled connections checked out.
+    pub pool_reused: Counter,
+    /// `dudd_pool_stale_discarded_total` — pooled connections found
+    /// dead and dropped.
+    pub pool_stale_discarded: Counter,
+    /// `dudd_pool_expired_total` — pooled connections idle past the
+    /// configured timeout.
+    pub pool_expired: Counter,
+    /// `dudd_frames_delta_total` — exchanges pushed as delta frames.
+    pub frames_delta: Counter,
+    /// `dudd_frames_full_total` — exchanges pushed as full frames.
+    pub frames_full: Counter,
+    /// `dudd_wire_bytes_total` — socket bytes moved by initiated
+    /// exchanges (push + reply, length prefixes included).
+    pub wire_bytes: Counter,
+    /// `dudd_exchange_rtt_seconds` — initiated-exchange round-trip time
+    /// (push write through reply decode, stale-channel retry included).
+    pub exchange_rtt: Histogram,
+    /// `dudd_rejects_total{reason=...}` — rejects *received* as an
+    /// initiator.
+    pub rejects: RejectCounters,
+    /// `dudd_serve_rejects_total{reason=...}` — rejects *written* while
+    /// serving inbound exchanges.
+    pub serve_rejects: RejectCounters,
+}
+
+/// Membership-plane handles (`service/membership.rs`), installed via
+/// `Membership::install_metrics`.
+#[derive(Clone, Debug)]
+pub struct MembershipMetrics {
+    /// `dudd_members_alive` — members currently alive (self included).
+    pub alive: Gauge,
+    /// `dudd_members_suspect` — members currently suspect.
+    pub suspect: Gauge,
+    /// `dudd_members_dead` — tombstones currently held.
+    pub dead: Gauge,
+    /// `dudd_member_joins_total` — new member ids learned.
+    pub joins: Counter,
+    /// `dudd_member_suspicions_total` — members turned suspect.
+    pub suspicions: Counter,
+    /// `dudd_member_deaths_total` — members declared dead.
+    pub deaths: Counter,
+    /// `dudd_member_refutations_total` — suspicions about *this* node
+    /// refuted by an incarnation bump.
+    pub refutations: Counter,
+}
+
+/// The node's full pre-registered handle bundle: every instrumented
+/// layer's metrics, attached to one shared [`MetricsRegistry`], plus
+/// the round-trace ring. Cloning shares every underlying metric.
+#[derive(Clone, Debug)]
+pub struct NodeMetrics {
+    registry: Arc<MetricsRegistry>,
+    /// Ingest-layer handles.
+    pub service: ServiceMetrics,
+    /// Gossip-loop handles.
+    pub gossip: GossipMetrics,
+    /// Transport-layer handles.
+    pub transport: Arc<TransportMetrics>,
+    /// Membership-plane handles.
+    pub membership: Arc<MembershipMetrics>,
+    /// The bounded round-trace ring the gossip loop writes.
+    pub trace: Arc<TraceRing>,
+}
+
+impl NodeMetrics {
+    /// Register every `dudd_*` family on `registry` and return the
+    /// handle bundle. Idempotent per registry: registering twice hands
+    /// back handles to the same underlying metrics.
+    pub fn register(registry: &Arc<MetricsRegistry>) -> Result<NodeMetrics> {
+        let r = registry.as_ref();
+        let service = ServiceMetrics {
+            values: r.counter(
+                "dudd_ingest_values_total",
+                "Finite values folded by the ingest shards.",
+            )?,
+            batches: r.counter(
+                "dudd_ingest_batches_total",
+                "Ingest/update batches consumed by the shards.",
+            )?,
+            dropped: r.counter(
+                "dudd_ingest_dropped_total",
+                "Non-finite values dropped at the shards.",
+            )?,
+            epochs: r.counter("dudd_epochs_total", "Epoch folds published.")?,
+            epoch_fold: r.histogram(
+                "dudd_epoch_fold_seconds",
+                "Epoch drain + fold + publish latency in seconds.",
+            )?,
+        };
+        let phase_hist = |phase: RoundPhase| {
+            r.histogram_with(
+                "dudd_round_phase_seconds",
+                "Wall clock per gossip-round phase in seconds.",
+                &[("phase", phase.name())],
+            )
+        };
+        let gossip = GossipMetrics {
+            rounds: r.counter("dudd_rounds_total", "Gossip rounds executed.")?,
+            reseeds: r.counter(
+                "dudd_reseeds_total",
+                "Protocol restarts (rounds that reseeded the local members).",
+            )?,
+            exchanges: r.counter(
+                "dudd_exchanges_total",
+                "Completed initiated push-pull exchanges.",
+            )?,
+            failed: r.counter(
+                "dudd_exchanges_failed_total",
+                "Initiated exchanges cancelled (transport failure, busy or stale partner).",
+            )?,
+            exchange_bytes: r.counter(
+                "dudd_exchange_bytes_total",
+                "Data-plane wire bytes moved by initiated exchanges.",
+            )?,
+            membership_bytes: r.counter(
+                "dudd_membership_bytes_total",
+                "Membership anti-entropy wire bytes moved.",
+            )?,
+            generation: r.gauge("dudd_generation", "Current restart generation.")?,
+            drift: r.gauge(
+                "dudd_drift",
+                "Largest relative probe-quantile drift of the last round.",
+            )?,
+            converged: r.gauge(
+                "dudd_converged",
+                "1 once the probe drift fell to the configured threshold, else 0.",
+            )?,
+            round_seconds: r.histogram(
+                "dudd_round_seconds",
+                "Whole gossip-round wall clock in seconds.",
+            )?,
+            phases: [
+                phase_hist(RoundPhase::Refresh)?,
+                phase_hist(RoundPhase::Exchange)?,
+                phase_hist(RoundPhase::Membership)?,
+                phase_hist(RoundPhase::Publish)?,
+            ],
+        };
+        let transport = Arc::new(TransportMetrics {
+            pool_fresh_connects: r.counter(
+                "dudd_pool_fresh_connects_total",
+                "Exchange connections dialed fresh.",
+            )?,
+            pool_reused: r.counter(
+                "dudd_pool_reused_total",
+                "Pooled exchange connections checked out.",
+            )?,
+            pool_stale_discarded: r.counter(
+                "dudd_pool_stale_discarded_total",
+                "Pooled connections found dead and discarded.",
+            )?,
+            pool_expired: r.counter(
+                "dudd_pool_expired_total",
+                "Pooled connections expired idle.",
+            )?,
+            frames_delta: r.counter(
+                "dudd_frames_delta_total",
+                "Initiated exchanges pushed as delta frames.",
+            )?,
+            frames_full: r.counter(
+                "dudd_frames_full_total",
+                "Initiated exchanges pushed as full frames.",
+            )?,
+            wire_bytes: r.counter(
+                "dudd_wire_bytes_total",
+                "Socket bytes moved by initiated exchanges (push + reply).",
+            )?,
+            exchange_rtt: r.histogram(
+                "dudd_exchange_rtt_seconds",
+                "Initiated-exchange round-trip time in seconds.",
+            )?,
+            rejects: RejectCounters::register(
+                r,
+                "dudd_rejects_total",
+                "Exchange rejects received as an initiator, by reason.",
+            )?,
+            serve_rejects: RejectCounters::register(
+                r,
+                "dudd_serve_rejects_total",
+                "Exchange rejects written while serving, by reason.",
+            )?,
+        });
+        let membership = Arc::new(MembershipMetrics {
+            alive: r.gauge("dudd_members_alive", "Members currently alive (self included).")?,
+            suspect: r.gauge("dudd_members_suspect", "Members currently suspect.")?,
+            dead: r.gauge("dudd_members_dead", "Tombstones currently held.")?,
+            joins: r.counter("dudd_member_joins_total", "New member ids learned.")?,
+            suspicions: r.counter(
+                "dudd_member_suspicions_total",
+                "Members turned suspect.",
+            )?,
+            deaths: r.counter("dudd_member_deaths_total", "Members declared dead.")?,
+            refutations: r.counter(
+                "dudd_member_refutations_total",
+                "Suspicions about this node refuted by an incarnation bump.",
+            )?,
+        });
+        Ok(NodeMetrics {
+            registry: registry.clone(),
+            service,
+            gossip,
+            transport,
+            membership,
+            trace: Arc::new(TraceRing::default()),
+        })
+    }
+
+    /// A standalone bundle on its own private registry — what a
+    /// [`GossipLoop`](crate::service::GossipLoop) constructed outside
+    /// [`Node::builder`](crate::service::Node::builder) instruments
+    /// itself with.
+    pub fn standalone() -> NodeMetrics {
+        Self::register(&Arc::new(MetricsRegistry::new()))
+            .expect("dudd_* families are statically valid")
+    }
+
+    /// The registry every handle in this bundle is attached to.
+    pub fn registry(&self) -> &Arc<MetricsRegistry> {
+        &self.registry
+    }
+}
+
+/// A write-once slot a component exposes so the builder can install
+/// metric handles *after* the component was constructed (a
+/// [`TcpTransport`](crate::service::TcpTransport) is bound before the
+/// node that owns it exists). Reads are lock-free; the first install
+/// wins and later installs are ignored.
+#[derive(Debug, Default)]
+pub struct ObsSlot<T>(OnceLock<Arc<T>>);
+
+impl<T> ObsSlot<T> {
+    /// An empty slot.
+    pub fn new() -> Self {
+        ObsSlot(OnceLock::new())
+    }
+
+    /// Install `value`; a no-op if something was installed already.
+    pub fn install(&self, value: Arc<T>) {
+        let _ = self.0.set(value);
+    }
+
+    /// The installed value, if any.
+    #[inline]
+    pub fn get(&self) -> Option<&Arc<T>> {
+        self.0.get()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn node_metrics_register_is_idempotent() {
+        let registry = Arc::new(MetricsRegistry::new());
+        let a = NodeMetrics::register(&registry).unwrap();
+        let b = NodeMetrics::register(&registry).unwrap();
+        a.gossip.exchanges.add(3);
+        b.gossip.exchanges.add(4);
+        assert_eq!(a.gossip.exchanges.get(), 7, "same underlying counter");
+        // One family block despite double registration.
+        let text = registry.render();
+        assert_eq!(text.matches("# TYPE dudd_exchanges_total").count(), 1);
+    }
+
+    #[test]
+    fn reject_counters_map_every_reason() {
+        let registry = MetricsRegistry::new();
+        let rc = RejectCounters::register(&registry, "t_r_total", "x").unwrap();
+        use crate::sketch::RejectReason as R;
+        for reason in [
+            R::Busy,
+            R::StaleGeneration,
+            R::Lineage,
+            R::Malformed,
+            R::BaselineMismatch,
+            R::NoMembership,
+        ] {
+            rc.reason(reason).inc();
+        }
+        for c in [
+            &rc.busy,
+            &rc.stale_generation,
+            &rc.lineage,
+            &rc.malformed,
+            &rc.baseline_mismatch,
+            &rc.no_membership,
+        ] {
+            assert_eq!(c.get(), 1);
+        }
+    }
+
+    #[test]
+    fn obs_slot_first_install_wins() {
+        let slot: ObsSlot<u32> = ObsSlot::new();
+        assert!(slot.get().is_none());
+        slot.install(Arc::new(1));
+        slot.install(Arc::new(2));
+        assert_eq!(**slot.get().unwrap(), 1);
+    }
+
+    #[test]
+    fn phase_histograms_are_distinct() {
+        let obs = NodeMetrics::standalone();
+        obs.gossip.phase(RoundPhase::Refresh).observe(0.5);
+        assert_eq!(obs.gossip.phase(RoundPhase::Refresh).count(), 1);
+        assert_eq!(obs.gossip.phase(RoundPhase::Exchange).count(), 0);
+    }
+}

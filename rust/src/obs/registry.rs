@@ -1,0 +1,650 @@
+//! The metrics registry: atomic counters/gauges, `UddSketch`-backed
+//! latency histograms, and the Prometheus text-format renderer.
+//!
+//! Handles ([`Counter`], [`Gauge`], [`Histogram`]) are cheap `Arc`
+//! clones registered once at node construction and then updated from
+//! the hot paths with no registry involvement at all: a counter update
+//! is one relaxed `fetch_add`, a gauge update one relaxed `store`, and
+//! a histogram observation a short mutex-guarded sketch insert (the
+//! sketch itself is the crate's own [`UddSketch`] — the node dogfoods
+//! the very instrument it serves, so `/metrics` quantiles inherit the
+//! paper's relative-error guarantee).
+//!
+//! [`MetricsRegistry::render`] walks the registered families in
+//! registration order and emits Prometheus exposition text (version
+//! 0.0.4): counters and gauges as single samples, histograms as
+//! *summaries* with `quantile="0.5|0.9|0.99|0.999"` sample lines plus
+//! `_sum`/`_count`.
+
+use crate::sketch::{DenseStore, UddSketch};
+use anyhow::{bail, Result};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Sketch accuracy for latency histograms: 1% relative error is far
+/// below anything a latency dashboard can resolve.
+const HIST_ALPHA: f64 = 0.01;
+/// Bucket budget per latency histogram (~2 KiB resident; spans
+/// nanoseconds to hours at α = 1%).
+const HIST_BUCKETS: usize = 512;
+/// The quantiles a histogram family exposes as summary samples.
+pub const SUMMARY_QUANTILES: [f64; 4] = [0.5, 0.9, 0.99, 0.999];
+
+/// A monotonically increasing `u64` metric handle. Cloning shares the
+/// underlying atomic; updates are relaxed (`/metrics` is a statistical
+/// read, not a synchronization point).
+#[derive(Clone, Debug, Default)]
+pub struct Counter(Arc<AtomicU64>);
+
+impl Counter {
+    /// Add 1.
+    #[inline]
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    /// Add `n`.
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Current value.
+    #[inline]
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// An `f64` gauge handle (value stored as bits in one atomic — set and
+/// read are single relaxed operations, never torn).
+#[derive(Clone, Debug, Default)]
+pub struct Gauge(Arc<AtomicU64>);
+
+impl Gauge {
+    /// Set the gauge.
+    #[inline]
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    /// Set from an integer count (membership gauges and the like).
+    #[inline]
+    pub fn set_usize(&self, v: usize) {
+        self.set(v as f64);
+    }
+
+    /// Current value.
+    #[inline]
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+#[derive(Debug)]
+struct HistState {
+    sketch: UddSketch<DenseStore>,
+    sum: f64,
+    count: u64,
+}
+
+/// A latency histogram handle backed by a [`UddSketch`]: observations
+/// fold into the sketch (relative-error quantiles), exported as a
+/// Prometheus summary. The short internal mutex is held only across one
+/// sketch insert — observation sites are per-batch or per-exchange,
+/// never per-value.
+#[derive(Clone, Debug)]
+pub struct Histogram(Arc<Mutex<HistState>>);
+
+impl Histogram {
+    fn new() -> Self {
+        Histogram(Arc::new(Mutex::new(HistState {
+            sketch: UddSketch::new(HIST_ALPHA, HIST_BUCKETS)
+                .expect("histogram sketch parameters are compile-time constants"),
+            sum: 0.0,
+            count: 0,
+        })))
+    }
+
+    /// Record one observation (seconds, for latency families).
+    /// Non-finite values are dropped — a poisoned timer must not poison
+    /// the histogram.
+    pub fn observe(&self, v: f64) {
+        if !v.is_finite() {
+            return;
+        }
+        let mut h = self.0.lock().expect("histogram poisoned");
+        h.sketch.insert(v);
+        h.sum += v;
+        h.count += 1;
+    }
+
+    /// The q-quantile of everything observed, or `None` while empty.
+    pub fn quantile(&self, q: f64) -> Option<f64> {
+        self.0
+            .lock()
+            .expect("histogram poisoned")
+            .sketch
+            .quantile(q)
+            .ok()
+    }
+
+    /// Observations recorded.
+    pub fn count(&self) -> u64 {
+        self.0.lock().expect("histogram poisoned").count
+    }
+
+    /// Sum of all observations.
+    pub fn sum(&self) -> f64 {
+        self.0.lock().expect("histogram poisoned").sum
+    }
+
+    /// Snapshot `(quantile values for `SUMMARY_QUANTILES`, sum, count)`
+    /// under one lock acquisition (render path).
+    fn summary(&self) -> ([Option<f64>; 4], f64, u64) {
+        let h = self.0.lock().expect("histogram poisoned");
+        let mut qs = [None; 4];
+        for (slot, &q) in qs.iter_mut().zip(SUMMARY_QUANTILES.iter()) {
+            *slot = h.sketch.quantile(q).ok();
+        }
+        (qs, h.sum, h.count)
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum MetricKind {
+    Counter,
+    Gauge,
+    Summary,
+}
+
+impl MetricKind {
+    fn exposition(self) -> &'static str {
+        match self {
+            MetricKind::Counter => "counter",
+            MetricKind::Gauge => "gauge",
+            MetricKind::Summary => "summary",
+        }
+    }
+}
+
+#[derive(Debug)]
+enum SampleValue {
+    Counter(Counter),
+    Gauge(Gauge),
+    Histogram(Histogram),
+}
+
+#[derive(Debug)]
+struct Sample {
+    labels: Vec<(String, String)>,
+    value: SampleValue,
+}
+
+#[derive(Debug)]
+struct Family {
+    name: String,
+    help: String,
+    kind: MetricKind,
+    samples: Vec<Sample>,
+}
+
+/// The node-wide metric registry: named families of counters, gauges,
+/// and histograms, rendered on demand as Prometheus exposition text.
+///
+/// Registration is idempotent: registering a name+label set that
+/// already exists (with the same kind) returns a handle to the
+/// **same** underlying metric, so independently-constructed components
+/// can share families safely. A kind conflict is an error.
+///
+/// ```
+/// use duddsketch::obs::MetricsRegistry;
+///
+/// let reg = MetricsRegistry::new();
+/// let c = reg.counter("demo_ops_total", "operations served").unwrap();
+/// c.add(3);
+/// let text = reg.render();
+/// assert!(text.contains("# TYPE demo_ops_total counter"));
+/// assert!(text.contains("demo_ops_total 3"));
+/// ```
+#[derive(Debug, Default)]
+pub struct MetricsRegistry {
+    families: Mutex<Vec<Family>>,
+}
+
+impl MetricsRegistry {
+    /// An empty registry.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register (or look up) an unlabeled counter.
+    pub fn counter(&self, name: &str, help: &str) -> Result<Counter> {
+        self.counter_with(name, help, &[])
+    }
+
+    /// Register (or look up) a counter with the given labels.
+    pub fn counter_with(
+        &self,
+        name: &str,
+        help: &str,
+        labels: &[(&str, &str)],
+    ) -> Result<Counter> {
+        let v = self.register(name, help, MetricKind::Counter, labels, || {
+            SampleValue::Counter(Counter::default())
+        })?;
+        match v {
+            SampleValue::Counter(c) => Ok(c),
+            _ => unreachable!("kind checked by register"),
+        }
+    }
+
+    /// Register (or look up) an unlabeled gauge.
+    pub fn gauge(&self, name: &str, help: &str) -> Result<Gauge> {
+        self.gauge_with(name, help, &[])
+    }
+
+    /// Register (or look up) a gauge with the given labels.
+    pub fn gauge_with(&self, name: &str, help: &str, labels: &[(&str, &str)]) -> Result<Gauge> {
+        let v = self.register(name, help, MetricKind::Gauge, labels, || {
+            SampleValue::Gauge(Gauge::default())
+        })?;
+        match v {
+            SampleValue::Gauge(g) => Ok(g),
+            _ => unreachable!("kind checked by register"),
+        }
+    }
+
+    /// Register (or look up) an unlabeled latency histogram (exported
+    /// as a summary family).
+    pub fn histogram(&self, name: &str, help: &str) -> Result<Histogram> {
+        self.histogram_with(name, help, &[])
+    }
+
+    /// Register (or look up) a latency histogram with the given labels.
+    pub fn histogram_with(
+        &self,
+        name: &str,
+        help: &str,
+        labels: &[(&str, &str)],
+    ) -> Result<Histogram> {
+        let v = self.register(name, help, MetricKind::Summary, labels, || {
+            SampleValue::Histogram(Histogram::new())
+        })?;
+        match v {
+            SampleValue::Histogram(h) => Ok(h),
+            _ => unreachable!("kind checked by register"),
+        }
+    }
+
+    fn register(
+        &self,
+        name: &str,
+        help: &str,
+        kind: MetricKind,
+        labels: &[(&str, &str)],
+        mk: impl FnOnce() -> SampleValue,
+    ) -> Result<SampleValue> {
+        if !valid_metric_name(name) {
+            bail!("invalid metric name {name:?} (want [a-zA-Z_:][a-zA-Z0-9_:]*)");
+        }
+        for (k, _) in labels {
+            if !valid_label_name(k) {
+                bail!("invalid label name {k:?} on metric {name} (want [a-zA-Z_][a-zA-Z0-9_]*)");
+            }
+            if *k == "quantile" {
+                bail!("label name \"quantile\" on metric {name} is reserved for summaries");
+            }
+        }
+        let labels: Vec<(String, String)> = labels
+            .iter()
+            .map(|(k, v)| (k.to_string(), v.to_string()))
+            .collect();
+        let mut families = self.families.lock().expect("metric registry poisoned");
+        let fam = match families.iter_mut().find(|f| f.name == name) {
+            Some(f) => {
+                if f.kind != kind {
+                    bail!(
+                        "metric {name} already registered as a {}, not a {}",
+                        f.kind.exposition(),
+                        kind.exposition()
+                    );
+                }
+                f
+            }
+            None => {
+                families.push(Family {
+                    name: name.to_string(),
+                    help: help.to_string(),
+                    kind,
+                    samples: Vec::new(),
+                });
+                families.last_mut().expect("just pushed")
+            }
+        };
+        if let Some(existing) = fam.samples.iter().find(|s| s.labels == labels) {
+            return Ok(clone_value(&existing.value));
+        }
+        let value = mk();
+        let out = clone_value(&value);
+        fam.samples.push(Sample { labels, value });
+        Ok(out)
+    }
+
+    /// Render every registered family as Prometheus text exposition
+    /// (content type `text/plain; version=0.0.4`), families in
+    /// registration order.
+    pub fn render(&self) -> String {
+        let families = self.families.lock().expect("metric registry poisoned");
+        let mut out = String::with_capacity(4096);
+        for f in families.iter() {
+            out.push_str("# HELP ");
+            out.push_str(&f.name);
+            out.push(' ');
+            out.push_str(&escape_help(&f.help));
+            out.push('\n');
+            out.push_str("# TYPE ");
+            out.push_str(&f.name);
+            out.push(' ');
+            out.push_str(f.kind.exposition());
+            out.push('\n');
+            for s in &f.samples {
+                match &s.value {
+                    SampleValue::Counter(c) => {
+                        sample_line(&mut out, &f.name, "", &s.labels, None, c.get() as f64);
+                    }
+                    SampleValue::Gauge(g) => {
+                        sample_line(&mut out, &f.name, "", &s.labels, None, g.get());
+                    }
+                    SampleValue::Histogram(h) => {
+                        let (qs, sum, count) = h.summary();
+                        for (q, v) in SUMMARY_QUANTILES.iter().zip(qs.iter()) {
+                            sample_line(
+                                &mut out,
+                                &f.name,
+                                "",
+                                &s.labels,
+                                Some(*q),
+                                v.unwrap_or(f64::NAN),
+                            );
+                        }
+                        sample_line(&mut out, &f.name, "_sum", &s.labels, None, sum);
+                        sample_line(&mut out, &f.name, "_count", &s.labels, None, count as f64);
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+fn clone_value(v: &SampleValue) -> SampleValue {
+    match v {
+        SampleValue::Counter(c) => SampleValue::Counter(c.clone()),
+        SampleValue::Gauge(g) => SampleValue::Gauge(g.clone()),
+        SampleValue::Histogram(h) => SampleValue::Histogram(h.clone()),
+    }
+}
+
+fn valid_metric_name(name: &str) -> bool {
+    let mut chars = name.chars();
+    match chars.next() {
+        Some(c) if c.is_ascii_alphabetic() || c == '_' || c == ':' => {}
+        _ => return false,
+    }
+    chars.all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':')
+}
+
+fn valid_label_name(name: &str) -> bool {
+    let mut chars = name.chars();
+    match chars.next() {
+        Some(c) if c.is_ascii_alphabetic() || c == '_' => {}
+        _ => return false,
+    }
+    chars.all(|c| c.is_ascii_alphanumeric() || c == '_')
+}
+
+fn escape_help(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('\n', "\\n")
+}
+
+fn escape_label_value(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
+
+/// Prometheus text floats: `NaN`, `+Inf`, `-Inf`, plain decimal
+/// otherwise (Rust's `{}` for finite f64 round-trips exactly).
+fn fmt_value(v: f64) -> String {
+    if v.is_nan() {
+        "NaN".to_string()
+    } else if v == f64::INFINITY {
+        "+Inf".to_string()
+    } else if v == f64::NEG_INFINITY {
+        "-Inf".to_string()
+    } else {
+        format!("{v}")
+    }
+}
+
+fn sample_line(
+    out: &mut String,
+    name: &str,
+    suffix: &str,
+    labels: &[(String, String)],
+    quantile: Option<f64>,
+    value: f64,
+) {
+    out.push_str(name);
+    out.push_str(suffix);
+    if !labels.is_empty() || quantile.is_some() {
+        out.push('{');
+        let mut first = true;
+        for (k, v) in labels {
+            if !first {
+                out.push(',');
+            }
+            first = false;
+            out.push_str(k);
+            out.push_str("=\"");
+            out.push_str(&escape_label_value(v));
+            out.push('"');
+        }
+        if let Some(q) = quantile {
+            if !first {
+                out.push(',');
+            }
+            out.push_str("quantile=\"");
+            out.push_str(&fmt_value(q));
+            out.push('"');
+        }
+        out.push('}');
+    }
+    out.push(' ');
+    out.push_str(&fmt_value(value));
+    out.push('\n');
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sketch::ExactQuantiles;
+    use std::collections::HashMap;
+
+    #[test]
+    fn concurrent_counter_and_histogram_updates_are_exact() {
+        let reg = Arc::new(MetricsRegistry::new());
+        let c = reg.counter("t_ops_total", "ops").unwrap();
+        let h = reg.histogram("t_lat_seconds", "latency").unwrap();
+        const THREADS: usize = 8;
+        const PER: u64 = 10_000;
+        let handles: Vec<_> = (0..THREADS)
+            .map(|k| {
+                let c = c.clone();
+                let h = h.clone();
+                std::thread::spawn(move || {
+                    for i in 0..PER {
+                        c.inc();
+                        // Distinct per-thread values keep the sum exact
+                        // in f64 (all values are small integers).
+                        h.observe((k as u64 * PER + i) as f64);
+                    }
+                })
+            })
+            .collect();
+        for t in handles {
+            t.join().unwrap();
+        }
+        assert_eq!(c.get(), THREADS as u64 * PER);
+        assert_eq!(h.count(), THREADS as u64 * PER);
+        let n = THREADS as u64 * PER;
+        assert_eq!(h.sum(), (n * (n - 1) / 2) as f64);
+    }
+
+    #[test]
+    fn histogram_quantiles_match_exact_within_alpha() {
+        let reg = MetricsRegistry::new();
+        let h = reg.histogram("t_q_seconds", "q").unwrap();
+        let data: Vec<f64> = (1..=10_000).map(|i| (i as f64).powf(1.3)).collect();
+        for &x in &data {
+            h.observe(x);
+        }
+        let exact = ExactQuantiles::new(&data);
+        for q in [0.5, 0.9, 0.99, 0.999] {
+            let est = h.quantile(q).unwrap();
+            let want = exact.quantile(q).unwrap();
+            let rel = (est - want).abs() / want.abs();
+            assert!(rel <= HIST_ALPHA + 1e-9, "q={q}: est {est} vs exact {want}");
+        }
+    }
+
+    #[test]
+    fn registration_is_idempotent_and_kind_checked() {
+        let reg = MetricsRegistry::new();
+        let a = reg.counter("t_same_total", "x").unwrap();
+        let b = reg.counter("t_same_total", "x").unwrap();
+        a.inc();
+        b.inc();
+        assert_eq!(a.get(), 2, "same handle behind both registrations");
+        assert!(reg.gauge("t_same_total", "x").is_err(), "kind conflict");
+        assert!(reg.counter("0bad", "x").is_err(), "bad metric name");
+        assert!(
+            reg.counter_with("t_lbl_total", "x", &[("bad-label", "v")])
+                .is_err(),
+            "bad label name"
+        );
+        assert!(
+            reg.counter_with("t_lbl_total", "x", &[("quantile", "v")])
+                .is_err(),
+            "reserved label"
+        );
+    }
+
+    #[test]
+    fn labeled_samples_share_one_family_block() {
+        let reg = MetricsRegistry::new();
+        let busy = reg
+            .counter_with("t_rej_total", "rejects", &[("reason", "busy")])
+            .unwrap();
+        let stale = reg
+            .counter_with("t_rej_total", "rejects", &[("reason", "stale")])
+            .unwrap();
+        busy.add(2);
+        stale.add(5);
+        let text = reg.render();
+        assert_eq!(text.matches("# TYPE t_rej_total counter").count(), 1);
+        assert!(text.contains("t_rej_total{reason=\"busy\"} 2"), "{text}");
+        assert!(text.contains("t_rej_total{reason=\"stale\"} 5"), "{text}");
+    }
+
+    /// Exposition round-trip: every rendered sample line parses back
+    /// into (name, labels, float value), every family has HELP + TYPE
+    /// before its first sample, and the parsed values match the
+    /// handles.
+    #[test]
+    fn exposition_round_trips_through_a_parser() {
+        let reg = MetricsRegistry::new();
+        let c = reg.counter("t_c_total", "counter help").unwrap();
+        let g = reg.gauge("t_g", "gauge \"help\"\nwith newline").unwrap();
+        let h = reg.histogram("t_h_seconds", "hist").unwrap();
+        c.add(42);
+        g.set(-1.5);
+        for i in 1..=100 {
+            h.observe(i as f64 / 100.0);
+        }
+        let text = reg.render();
+
+        let mut typed: HashMap<String, String> = HashMap::new();
+        let mut helped: HashMap<String, String> = HashMap::new();
+        let mut values: HashMap<String, f64> = HashMap::new();
+        for line in text.lines() {
+            assert!(!line.is_empty(), "no blank lines in exposition");
+            if let Some(rest) = line.strip_prefix("# HELP ") {
+                let (name, help) = rest.split_once(' ').expect("HELP has name + text");
+                assert!(
+                    !helped.contains_key(name),
+                    "HELP emitted once per family: {name}"
+                );
+                helped.insert(name.to_string(), help.to_string());
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix("# TYPE ") {
+                let (name, kind) = rest.split_once(' ').expect("TYPE has name + kind");
+                assert!(helped.contains_key(name), "HELP precedes TYPE: {line}");
+                assert!(
+                    matches!(kind, "counter" | "gauge" | "summary"),
+                    "known kind: {line}"
+                );
+                typed.insert(name.to_string(), kind.to_string());
+                continue;
+            }
+            // Sample line: name[{labels}] value
+            let (key, value) = line.rsplit_once(' ').expect("sample has value");
+            let v: f64 = value.parse().unwrap_or_else(|_| {
+                panic!("sample value parses as f64: {line}")
+            });
+            let name = key.split('{').next().unwrap();
+            let family = name
+                .strip_suffix("_sum")
+                .or_else(|| name.strip_suffix("_count"))
+                .filter(|base| typed.get(*base).map(String::as_str) == Some("summary"))
+                .unwrap_or(name);
+            assert!(typed.contains_key(family), "TYPE precedes samples: {line}");
+            values.insert(key.to_string(), v);
+        }
+        assert_eq!(values["t_c_total"], 42.0);
+        assert_eq!(values["t_g"], -1.5);
+        assert_eq!(values["t_h_seconds_count"], 100.0);
+        assert!((values["t_h_seconds_sum"] - 50.5).abs() < 1e-9);
+        let p50 = values["t_h_seconds{quantile=\"0.5\"}"];
+        assert!((p50 - 0.5).abs() / 0.5 <= HIST_ALPHA + 1e-9, "p50 {p50}");
+        assert_eq!(
+            helped["t_g"], "gauge \"help\"\\nwith newline",
+            "help newline escaped"
+        );
+    }
+
+    #[test]
+    fn empty_histogram_renders_nan_quantiles_and_zero_count() {
+        let reg = MetricsRegistry::new();
+        reg.histogram("t_empty_seconds", "no data yet").unwrap();
+        let text = reg.render();
+        assert!(
+            text.contains("t_empty_seconds{quantile=\"0.5\"} NaN"),
+            "{text}"
+        );
+        assert!(text.contains("t_empty_seconds_count 0"), "{text}");
+        // "NaN" is a parseable Prometheus float.
+        assert!("NaN".parse::<f64>().unwrap().is_nan());
+    }
+
+    #[test]
+    fn gauge_stores_any_f64() {
+        let g = Gauge::default();
+        assert_eq!(g.get(), 0.0);
+        g.set(f64::INFINITY);
+        assert_eq!(g.get(), f64::INFINITY);
+        assert_eq!(fmt_value(g.get()), "+Inf");
+        g.set_usize(7);
+        assert_eq!(g.get(), 7.0);
+    }
+}

@@ -1,0 +1,192 @@
+//! Structured round tracing: per-phase wall-clock spans for every
+//! gossip round, kept in a bounded ring buffer.
+//!
+//! The gossip loop times each phase of a round — refresh → exchange
+//! (with the membership anti-entropy share broken out) → probe/publish
+//! — and pushes one [`RoundTrace`] per round. The ring is bounded
+//! ([`TraceRing::capacity`]): a long-running node keeps the most recent
+//! traces only, so memory stays flat no matter how many rounds run.
+//! [`GossipRoundReport`](crate::service::GossipRoundReport) carries the
+//! same durations for the round just executed; the ring is the
+//! look-back window behind it.
+
+use std::collections::VecDeque;
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Default number of round traces a [`TraceRing`] retains.
+pub const DEFAULT_TRACE_CAPACITY: usize = 256;
+
+/// One phase of a gossip round, in execution order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RoundPhase {
+    /// Reseed check + (possibly) protocol restart.
+    Refresh,
+    /// Outbound push–pull exchanges (includes the membership share).
+    Exchange,
+    /// Membership anti-entropy piggybacked on the exchanges — a
+    /// sub-span of [`RoundPhase::Exchange`], broken out separately.
+    Membership,
+    /// Probe quantiles, drift fold, and view publication.
+    Publish,
+}
+
+impl RoundPhase {
+    /// Every phase, in execution order.
+    pub const ALL: [RoundPhase; 4] = [
+        RoundPhase::Refresh,
+        RoundPhase::Exchange,
+        RoundPhase::Membership,
+        RoundPhase::Publish,
+    ];
+
+    /// The phase's label value in the `dudd_round_phase_seconds`
+    /// metric family.
+    pub fn name(self) -> &'static str {
+        match self {
+            RoundPhase::Refresh => "refresh",
+            RoundPhase::Exchange => "exchange",
+            RoundPhase::Membership => "membership",
+            RoundPhase::Publish => "publish",
+        }
+    }
+
+    fn index(self) -> usize {
+        match self {
+            RoundPhase::Refresh => 0,
+            RoundPhase::Exchange => 1,
+            RoundPhase::Membership => 2,
+            RoundPhase::Publish => 3,
+        }
+    }
+}
+
+/// The span record of one executed gossip round.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RoundTrace {
+    /// Round counter when the trace was taken.
+    pub round: u64,
+    /// Restart generation during the round.
+    pub generation: u64,
+    /// Whether the round reseeded the local members.
+    pub reseeded: bool,
+    /// Completed exchanges.
+    pub exchanges: usize,
+    /// Cancelled exchanges.
+    pub failed: usize,
+    /// Data-plane wire bytes moved.
+    pub bytes: usize,
+    /// Whole-round wall clock.
+    pub total: Duration,
+    phases: [Duration; 4],
+}
+
+impl RoundTrace {
+    /// Record a phase duration (builder-style, used by the loop).
+    pub fn with_phase(mut self, phase: RoundPhase, d: Duration) -> Self {
+        self.phases[phase.index()] = d;
+        self
+    }
+
+    /// Wall clock spent in `phase`. [`RoundPhase::Membership`] is a
+    /// sub-span of [`RoundPhase::Exchange`], so the four phases don't
+    /// sum to [`RoundTrace::total`].
+    pub fn phase(&self, phase: RoundPhase) -> Duration {
+        self.phases[phase.index()]
+    }
+}
+
+/// A bounded, thread-safe ring of the most recent [`RoundTrace`]s.
+#[derive(Debug)]
+pub struct TraceRing {
+    inner: Mutex<VecDeque<RoundTrace>>,
+    capacity: usize,
+}
+
+impl Default for TraceRing {
+    fn default() -> Self {
+        Self::new(DEFAULT_TRACE_CAPACITY)
+    }
+}
+
+impl TraceRing {
+    /// A ring retaining at most `capacity` traces (min 1).
+    pub fn new(capacity: usize) -> Self {
+        let capacity = capacity.max(1);
+        TraceRing {
+            inner: Mutex::new(VecDeque::with_capacity(capacity)),
+            capacity,
+        }
+    }
+
+    /// Append a trace, evicting the oldest when full.
+    pub fn push(&self, trace: RoundTrace) {
+        let mut ring = self.inner.lock().expect("trace ring poisoned");
+        if ring.len() == self.capacity {
+            ring.pop_front();
+        }
+        ring.push_back(trace);
+    }
+
+    /// The most recent `n` traces, oldest first.
+    pub fn recent(&self, n: usize) -> Vec<RoundTrace> {
+        let ring = self.inner.lock().expect("trace ring poisoned");
+        let skip = ring.len().saturating_sub(n);
+        ring.iter().skip(skip).copied().collect()
+    }
+
+    /// Traces currently retained.
+    pub fn len(&self) -> usize {
+        self.inner.lock().expect("trace ring poisoned").len()
+    }
+
+    /// True while no trace has been pushed.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The retention bound.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_is_bounded_and_keeps_newest() {
+        let ring = TraceRing::new(4);
+        assert!(ring.is_empty());
+        for round in 1..=10u64 {
+            ring.push(RoundTrace {
+                round,
+                ..RoundTrace::default()
+            });
+        }
+        assert_eq!(ring.len(), 4);
+        assert_eq!(ring.capacity(), 4);
+        let recent = ring.recent(100);
+        let rounds: Vec<u64> = recent.iter().map(|t| t.round).collect();
+        assert_eq!(rounds, vec![7, 8, 9, 10], "oldest evicted first");
+        let last_two: Vec<u64> = ring.recent(2).iter().map(|t| t.round).collect();
+        assert_eq!(last_two, vec![9, 10]);
+    }
+
+    #[test]
+    fn phase_durations_round_trip() {
+        let t = RoundTrace::default()
+            .with_phase(RoundPhase::Refresh, Duration::from_millis(1))
+            .with_phase(RoundPhase::Exchange, Duration::from_millis(20))
+            .with_phase(RoundPhase::Membership, Duration::from_millis(5))
+            .with_phase(RoundPhase::Publish, Duration::from_millis(2));
+        assert_eq!(t.phase(RoundPhase::Refresh), Duration::from_millis(1));
+        assert_eq!(t.phase(RoundPhase::Exchange), Duration::from_millis(20));
+        assert_eq!(t.phase(RoundPhase::Membership), Duration::from_millis(5));
+        assert_eq!(t.phase(RoundPhase::Publish), Duration::from_millis(2));
+        for p in RoundPhase::ALL {
+            assert!(!p.name().is_empty());
+        }
+    }
+}

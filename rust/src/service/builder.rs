@@ -58,6 +58,7 @@ use super::membership::{Membership, MembershipConfig};
 use super::snapshot::Snapshot;
 use super::transport::{InProcessTransport, Transport};
 use crate::config::{GossipLoopConfig, ServiceConfig};
+use crate::obs::{MetricsRegistry, MetricsServer, NodeMetrics};
 use anyhow::{bail, Context, Result};
 use std::net::SocketAddr;
 use std::sync::Arc;
@@ -74,6 +75,11 @@ pub struct Node {
     service: Arc<QuantileService>,
     gossip: Option<GossipLoop>,
     self_member: usize,
+    /// Every layer of this node reports into this bundle's shared
+    /// registry — scrapable when a `/metrics` listener is bound, and
+    /// readable in-process either way.
+    obs: NodeMetrics,
+    metrics_server: Option<MetricsServer>,
 }
 
 impl Node {
@@ -140,12 +146,32 @@ impl Node {
         self.gossip.as_ref().and_then(|g| g.listen_addr())
     }
 
+    /// The node's metric handles. Every instrumented layer (ingest
+    /// shards, gossip loop, transport, membership) reports into this
+    /// bundle's shared registry whether or not a `/metrics` listener is
+    /// bound.
+    pub fn metrics(&self) -> &NodeMetrics {
+        &self.obs
+    }
+
+    /// The bound `GET /metrics` listen address (resolves port 0), or
+    /// `None` when [`NodeBuilder::metrics_bind`] was not configured.
+    pub fn metrics_addr(&self) -> Option<SocketAddr> {
+        self.metrics_server.as_ref().map(MetricsServer::local_addr)
+    }
+
     /// Stop the gossip loop (if any) and the service; returns the final
     /// local snapshot.
     pub fn shutdown(self) -> Arc<Snapshot> {
         let Node {
-            service, gossip, ..
+            service,
+            gossip,
+            metrics_server,
+            ..
         } = self;
+        if let Some(s) = metrics_server {
+            s.shutdown();
+        }
         if let Some(g) = gossip {
             g.shutdown();
         }
@@ -222,6 +248,28 @@ impl NodeBuilder {
     /// Sliding-window ring slots (0 = cumulative all-time serving).
     pub fn window(mut self, slots: usize) -> Self {
         self.cfg.window_slots = slots;
+        self
+    }
+
+    /// Serve Prometheus text exposition at `GET /metrics` on `addr`
+    /// (the `metrics_bind` config key). Port 0 binds an ephemeral port
+    /// — read it back via [`Node::metrics_addr`]. Without this knob the
+    /// node still registers every metric ([`Node::metrics`]); it just
+    /// runs no HTTP listener.
+    ///
+    /// ```
+    /// use duddsketch::prelude::*;
+    ///
+    /// let node = Node::builder()
+    ///     .shards(1)
+    ///     .metrics_bind("127.0.0.1:0".parse().unwrap())
+    ///     .build()
+    ///     .unwrap();
+    /// assert_ne!(node.metrics_addr().expect("listener bound").port(), 0);
+    /// node.shutdown();
+    /// ```
+    pub fn metrics_bind(mut self, addr: SocketAddr) -> Self {
+        self.cfg.metrics_bind = Some(addr);
         self
     }
 
@@ -403,8 +451,26 @@ impl NodeBuilder {
         cfg.validate()
             .map_err(anyhow::Error::msg)
             .context("node configuration")?;
+        // One registry for the whole node: every layer's handles attach
+        // here, so a single scrape sees ingest, gossip, transport and
+        // membership together. The listener binds before any threads
+        // spawn — an unusable metrics_bind fails construction cleanly.
+        let registry = Arc::new(MetricsRegistry::new());
+        let obs = NodeMetrics::register(&registry).context("registering node metrics")?;
+        let metrics_server = match cfg.metrics_bind {
+            Some(addr) => Some(MetricsServer::bind(addr, Arc::clone(&registry))?),
+            None => None,
+        };
         if bootstrap || !cfg.gossip.seed_peers.is_empty() {
-            return Self::build_membership(cfg, peers, self_index, transport, bootstrap);
+            return Self::build_membership(
+                cfg,
+                peers,
+                self_index,
+                transport,
+                bootstrap,
+                obs,
+                metrics_server,
+            );
         }
         if self_index > peers.len() {
             bail!(
@@ -413,7 +479,10 @@ impl NodeBuilder {
                 peers.len() + 1
             );
         }
-        let service = QuantileService::start_shared(cfg.clone())?;
+        let service = Arc::new(QuantileService::start_instrumented(
+            cfg.clone(),
+            Some(obs.service.clone()),
+        )?);
         if peers.is_empty() {
             if transport.is_some() {
                 bail!(
@@ -425,18 +494,23 @@ impl NodeBuilder {
                 service,
                 gossip: None,
                 self_member: 0,
+                obs,
+                metrics_server,
             });
         }
         let mut members = peers;
         members.insert(self_index, GossipMember::service(service.clone()));
         let transport: Arc<dyn Transport> =
             transport.unwrap_or_else(|| Arc::new(InProcessTransport));
-        let gossip = GossipLoop::start_with(cfg.gossip.clone(), members, transport)
-            .context("starting node gossip loop")?;
+        let gossip =
+            GossipLoop::start_with_obs(cfg.gossip.clone(), members, transport, obs.clone())
+                .context("starting node gossip loop")?;
         Ok(Node {
             service,
             gossip: Some(gossip),
             self_member: self_index,
+            obs,
+            metrics_server,
         })
     }
 
@@ -450,6 +524,8 @@ impl NodeBuilder {
         self_index: usize,
         transport: Option<Arc<dyn Transport>>,
         bootstrap: bool,
+        obs: NodeMetrics,
+        metrics_server: Option<MetricsServer>,
     ) -> Result<Node> {
         if !peers.is_empty() {
             bail!(
@@ -505,19 +581,25 @@ impl NodeBuilder {
                 }
             }
         };
-        let service = QuantileService::start_shared(cfg.clone())?;
-        let gossip = GossipLoop::start_membership(
+        let service = Arc::new(QuantileService::start_instrumented(
+            cfg.clone(),
+            Some(obs.service.clone()),
+        )?);
+        let gossip = GossipLoop::start_membership_obs(
             cfg.gossip.clone(),
             service.clone(),
             transport,
             Arc::new(membership),
             generation,
+            obs.clone(),
         )
         .context("starting membership gossip loop")?;
         Ok(Node {
             service,
             gossip: Some(gossip),
             self_member: 0,
+            obs,
+            metrics_server,
         })
     }
 }
@@ -559,6 +641,35 @@ mod tests {
         assert_eq!(g.pool_connections, 7);
         assert_eq!(g.pool_idle_ms, 123);
         assert!(!g.delta_exchanges);
+        node.shutdown();
+    }
+
+    /// The builder's registry spans every layer: ingest counters tick
+    /// on the node's own writers and the bound `/metrics` listener
+    /// serves them.
+    #[test]
+    fn metrics_bind_serves_the_node_registry() {
+        let node = Node::builder()
+            .shards(1)
+            .metrics_bind("127.0.0.1:0".parse().unwrap())
+            .build()
+            .unwrap();
+        let addr = node.metrics_addr().expect("listener bound");
+        let mut w = node.writer();
+        w.insert_batch(&[1.0, 2.0, 3.0]);
+        w.flush();
+        node.flush();
+        assert_eq!(node.metrics().service.values.get(), 3);
+
+        use std::io::{Read, Write};
+        let mut s = std::net::TcpStream::connect(addr).unwrap();
+        write!(s, "GET /metrics HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+        let mut out = String::new();
+        s.read_to_string(&mut out).unwrap();
+        assert!(out.contains("dudd_ingest_values_total 3"), "{out}");
+        assert!(out.contains("dudd_epochs_total 1"), "{out}");
+
+        drop(w);
         node.shutdown();
     }
 

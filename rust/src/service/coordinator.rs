@@ -16,13 +16,14 @@ use super::swap::ArcSwapCell;
 use super::window::WindowRing;
 use crate::config::ServiceConfig;
 use crate::gossip::PeerState;
+use crate::obs::ServiceMetrics;
 use crate::sketch::{DenseStore, UddSketch};
 use anyhow::{Context, Result};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{self, SyncSender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Coordinator state shared with the background ticker.
 struct Inner {
@@ -31,6 +32,9 @@ struct Inner {
     /// Epoch accumulator; the lock serializes concurrent epochs
     /// (ticker vs. `flush`), never readers.
     accum: Mutex<Accum>,
+    /// Installed ingest metrics (`None` on an uninstrumented service —
+    /// the bench baseline and every direct [`QuantileService::start`]).
+    metrics: Option<ServiceMetrics>,
 }
 
 struct Accum {
@@ -89,11 +93,28 @@ impl QuantileService {
     /// Validate the configuration, spawn the ingest shards, and (when an
     /// epoch interval is configured) the background epoch ticker.
     pub fn start(cfg: ServiceConfig) -> Result<Self> {
+        Self::start_instrumented(cfg, None)
+    }
+
+    /// [`QuantileService::start`] with ingest metrics installed —
+    /// [`Node::builder`](super::Node::builder) wires the node's shared
+    /// registry through here. `None` keeps the service entirely
+    /// uninstrumented (the ingest bench's baseline).
+    pub(crate) fn start_instrumented(
+        cfg: ServiceConfig,
+        metrics: Option<ServiceMetrics>,
+    ) -> Result<Self> {
         cfg.validate().map_err(anyhow::Error::msg)?;
         let n = cfg.shards;
         let mut shards = Vec::with_capacity(n);
         for id in 0..n {
-            shards.push(spawn_shard(id, cfg.alpha, cfg.max_buckets, cfg.queue_depth)?);
+            shards.push(spawn_shard(
+                id,
+                cfg.alpha,
+                cfg.max_buckets,
+                cfg.queue_depth,
+                metrics.clone(),
+            )?);
         }
         let ring = if cfg.window_slots > 0 {
             Some(
@@ -116,6 +137,7 @@ impl QuantileService {
                 epoch: 0,
                 ops: 0,
             }),
+            metrics,
         });
         let stop = Arc::new(AtomicBool::new(false));
         let ticker = if cfg.epoch_interval_ms > 0 {
@@ -262,6 +284,7 @@ fn ticker_loop(
 
 /// Drain every shard into the accumulator and publish a fresh snapshot.
 fn run_epoch(senders: &[SyncSender<ShardMsg>], inner: &Inner) -> Arc<Snapshot> {
+    let fold_start = Instant::now();
     // The accumulator lock serializes concurrent epochs end to end.
     let mut guard = inner.accum.lock().expect("accumulator poisoned");
     let accum: &mut Accum = &mut guard;
@@ -317,6 +340,12 @@ fn run_epoch(senders: &[SyncSender<ShardMsg>], inner: &Inner) -> Arc<Snapshot> {
     };
     let snap = Arc::new(Snapshot::new(accum.epoch, sketch, accum.ops, window));
     inner.current.store(snap.clone());
+    // Booked after the idle short-circuit above, so `dudd_epochs_total`
+    // counts published folds, not no-op ticks.
+    if let Some(m) = &inner.metrics {
+        m.epochs.inc();
+        m.epoch_fold.observe(fold_start.elapsed().as_secs_f64());
+    }
     snap
 }
 
@@ -528,6 +557,26 @@ mod tests {
             );
             std::thread::sleep(Duration::from_millis(2));
         }
+        drop(w);
+        svc.shutdown();
+    }
+
+    /// An instrumented service books published epoch folds (and their
+    /// latency) but not idle ticks, which short-circuit.
+    #[test]
+    fn instrumented_service_books_epoch_folds_not_idle_ticks() {
+        let obs = crate::obs::NodeMetrics::standalone();
+        let svc =
+            QuantileService::start_instrumented(cfg(2), Some(obs.service.clone())).unwrap();
+        let mut w = svc.writer();
+        w.insert_batch(&[1.0, 2.0]);
+        w.flush();
+        svc.flush();
+        assert_eq!(obs.service.epochs.get(), 1);
+        assert_eq!(obs.service.epoch_fold.count(), 1);
+        assert_eq!(obs.service.values.get(), 2);
+        svc.flush(); // idle: nothing arrived, no republish
+        assert_eq!(obs.service.epochs.get(), 1, "idle tick must not count");
         drop(w);
         svc.shutdown();
     }

@@ -85,11 +85,12 @@ use crate::config::GossipLoopConfig;
 use crate::gossip::{select_exchange_partners, GossipSketch, PeerState};
 use crate::graph::Graph;
 use crate::metrics::relative_error;
+use crate::obs::{NodeMetrics, RoundPhase, RoundTrace};
 use crate::rng::{default_rng, Rng as _, Xoshiro256pp};
 use crate::sketch::{QuantileReader, SketchError, Store, UddSketch};
 use anyhow::{bail, Context, Result};
 use std::net::SocketAddr;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, MutexGuard, TryLockError};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -281,6 +282,20 @@ pub struct GossipRoundReport {
     /// Membership-plane telemetry, when this loop runs the dynamic
     /// member set (`None` for static fleets).
     pub membership: Option<MembershipRoundStats>,
+    /// Whole-round wall clock (refresh through view publication).
+    pub duration: Duration,
+    /// Wall clock of the refresh phase (epoch/generation check and, on a
+    /// restart, the reseed itself).
+    pub refresh_duration: Duration,
+    /// Wall clock of the exchange phase — every initiated push–pull,
+    /// membership piggyback included.
+    pub exchange_duration: Duration,
+    /// Wall clock spent in membership anti-entropy. A sub-span of
+    /// [`GossipRoundReport::exchange_duration`] (the piggyback runs on
+    /// the exchange connections), zero for static fleets.
+    pub membership_duration: Duration,
+    /// Wall clock of the probe → drift fold → view publication phase.
+    pub publish_duration: Duration,
 }
 
 /// Per-round membership telemetry
@@ -354,19 +369,20 @@ struct Ctl {
     prev_pool: PoolStats,
 }
 
-/// What one exchange round moved (internal accumulator).
-#[derive(Debug, Default, Clone, Copy)]
-struct RoundTotals {
-    exchanges: usize,
-    failed: usize,
-    bytes: usize,
-    membership_bytes: usize,
-}
-
 /// Everything the loop, its background threads, and the transport's
 /// serve side share. See the module docs for the lock order.
 struct LoopCore {
     fleet: Fleet,
+    /// The node's metric handles. What a round moves lands here as it
+    /// happens; [`GossipRoundReport`] is the per-round *diff* of these
+    /// counters (one source of truth — the gate serializes rounds, so
+    /// the diff is exactly one round's work).
+    obs: NodeMetrics,
+    /// Nanoseconds the in-flight round has spent in membership
+    /// anti-entropy, accumulated inside the exchange phase and drained
+    /// by `run_round` (the sub-span can't be timed from outside: it
+    /// interleaves with the data exchanges on the same connections).
+    membership_nanos: AtomicU64,
     /// Per-member state locks (the PR 4 split of the old worker mutex).
     slots: Vec<Mutex<PeerState>>,
     ctl: Mutex<Ctl>,
@@ -552,6 +568,18 @@ impl GossipLoop {
         members: Vec<GossipMember>,
         transport: Arc<dyn Transport>,
     ) -> Result<Self> {
+        Self::start_with_obs(cfg, members, transport, NodeMetrics::standalone())
+    }
+
+    /// [`GossipLoop::start_with`] reporting into `obs` — the
+    /// [`Node::builder`](super::Node::builder) path, where every layer
+    /// of the node shares one registry behind `/metrics`.
+    pub(crate) fn start_with_obs(
+        cfg: GossipLoopConfig,
+        members: Vec<GossipMember>,
+        transport: Arc<dyn Transport>,
+        obs: NodeMetrics,
+    ) -> Result<Self> {
         cfg.validate().map_err(anyhow::Error::msg)?;
         if members.len() < 2 {
             bail!("gossip loop needs at least 2 members, got {}", members.len());
@@ -700,6 +728,8 @@ impl GossipLoop {
                 transport: transport.clone(),
                 membership: None,
             },
+            obs,
+            membership_nanos: AtomicU64::new(0),
             slots: states.into_iter().map(Mutex::new).collect(),
             ctl: Mutex::new(ctl),
             round_gate: Mutex::new(()),
@@ -742,6 +772,26 @@ impl GossipLoop {
         transport: Arc<dyn Transport>,
         membership: Arc<Membership>,
         initial_generation: u64,
+    ) -> Result<Self> {
+        Self::start_membership_obs(
+            cfg,
+            service,
+            transport,
+            membership,
+            initial_generation,
+            NodeMetrics::standalone(),
+        )
+    }
+
+    /// [`GossipLoop::start_membership`] reporting into `obs` (the
+    /// builder path — see [`GossipLoop::start_with_obs`]).
+    pub(crate) fn start_membership_obs(
+        cfg: GossipLoopConfig,
+        service: Arc<QuantileService>,
+        transport: Arc<dyn Transport>,
+        membership: Arc<Membership>,
+        initial_generation: u64,
+        obs: NodeMetrics,
     ) -> Result<Self> {
         cfg.validate().map_err(anyhow::Error::msg)?;
         if !transport.supports_remote() {
@@ -805,6 +855,8 @@ impl GossipLoop {
                 transport: transport.clone(),
                 membership: Some(membership),
             },
+            obs,
+            membership_nanos: AtomicU64::new(0),
             slots: vec![Mutex::new(state)],
             ctl: Mutex::new(ctl),
             round_gate: Mutex::new(()),
@@ -821,6 +873,17 @@ impl GossipLoop {
         transport: &Arc<dyn Transport>,
         interval_ms: u64,
     ) -> Result<Self> {
+        // Hand the lower layers their metric handles before any traffic
+        // flows (both sides hold write-once slots, so a transport shared
+        // across loops keeps the first bundle it was given).
+        transport.install_metrics(core.obs.transport.clone());
+        if let Some(m) = &core.fleet.membership {
+            m.install_metrics(core.obs.membership.clone());
+        }
+        core.obs
+            .gossip
+            .generation
+            .set(core.lock_ctl().generation as f64);
         let server = transport.spawn_server(NodeHandle { core: core.clone() })?;
         let thread = if interval_ms > 0 {
             let core = core.clone();
@@ -861,6 +924,16 @@ impl GossipLoop {
     /// (None for in-process or client-only transports).
     pub fn listen_addr(&self) -> Option<SocketAddr> {
         self.core.fleet.transport.listen_addr()
+    }
+
+    /// The metric-handle bundle this loop reports into: cumulative
+    /// counters, gauges, latency histograms, and the round-trace ring
+    /// ([`NodeMetrics::trace`]). Loops built directly get a standalone
+    /// bundle on a private registry; loops built through
+    /// [`Node::builder`](super::Node::builder) share the node-wide
+    /// registry served at `/metrics`.
+    pub fn metrics(&self) -> &NodeMetrics {
+        &self.core.obs
     }
 
     /// Run one refresh → exchange → serve round synchronously and return
@@ -1132,7 +1205,10 @@ impl LoopCore {
     /// engine (permutation, then per-initiator partner draws in
     /// permutation order), which is what keeps the PR 2 parity test
     /// bit-exact — then the exchanges execute with per-slot locking.
-    fn exchange_round(&self) -> RoundTotals {
+    /// Outcomes land directly on the registry counters
+    /// (`dudd_exchanges_total` & co.); `run_round` diffs them into the
+    /// report.
+    fn exchange_round(&self) {
         if let Some(m) = self.fleet.membership.clone() {
             return self.exchange_round_dynamic(&m);
         }
@@ -1159,27 +1235,26 @@ impl LoopCore {
             }
             plan
         };
-        let mut totals = RoundTotals::default();
+        let g = &self.obs.gossip;
         for (l, partners) in plan {
             for j in partners {
                 match self.one_exchange(l, j) {
                     Ok(b) => {
-                        totals.exchanges += 1;
-                        totals.bytes += b;
+                        g.exchanges.inc();
+                        g.exchange_bytes.add(b as u64);
                     }
-                    Err(TransportError::StaleGeneration(g)) => {
+                    Err(TransportError::StaleGeneration(newer)) => {
                         // We're behind the fleet's restart: catch up at
                         // the next refresh. The exchange itself was
                         // cancelled (§7.2).
-                        totals.failed += 1;
+                        g.failed.inc();
                         let mut ctl = self.lock_ctl();
-                        ctl.pending_generation = ctl.pending_generation.max(g);
+                        ctl.pending_generation = ctl.pending_generation.max(newer);
                     }
-                    Err(_) => totals.failed += 1,
+                    Err(_) => g.failed.inc(),
                 }
             }
         }
-        totals
     }
 
     /// One round over the **dynamic member set**: partners are drawn
@@ -1188,14 +1263,14 @@ impl LoopCore {
     /// exchange outcome feeds the suspicion clocks, and each contacted
     /// partner also gets one membership anti-entropy push–pull on the
     /// same pooled connection.
-    fn exchange_round_dynamic(&self, m: &Arc<Membership>) -> RoundTotals {
+    fn exchange_round_dynamic(&self, m: &Arc<Membership>) {
         // A node whose id was claimed by another address (concurrent
         // joins through different seeds collided) must stop initiating:
         // gossiping under a stolen id would silently corrupt the
         // generation's q̃ mass. The operator rejoins it for a fresh id;
         // the report's membership section carries the flag.
         if m.identity_lost() {
-            return RoundTotals::default();
+            return;
         }
         let now = Instant::now();
         // Wall-clock sweep first: a suspect whose probes are
@@ -1217,21 +1292,21 @@ impl LoopCore {
             idx[..k].iter().map(|&i| candidates[i]).collect()
         };
         let l = self.fleet.serve_member;
-        let mut totals = RoundTotals::default();
+        let g = &self.obs.gossip;
         for (id, addr) in plan {
             // Any reply at all — including Busy/StaleGeneration rejects
             // — proves the partner alive; only connection-level failures
             // feed the suspicion clocks.
             let spoke = match self.remote_exchange(l, addr) {
                 Ok(b) => {
-                    totals.exchanges += 1;
-                    totals.bytes += b;
+                    g.exchanges.inc();
+                    g.exchange_bytes.add(b as u64);
                     true
                 }
-                Err(TransportError::StaleGeneration(g)) => {
-                    totals.failed += 1;
+                Err(TransportError::StaleGeneration(newer)) => {
+                    g.failed.inc();
                     let mut ctl = self.lock_ctl();
-                    ctl.pending_generation = ctl.pending_generation.max(g);
+                    ctl.pending_generation = ctl.pending_generation.max(newer);
                     true
                 }
                 Err(
@@ -1239,11 +1314,11 @@ impl LoopCore {
                     | TransportError::StaleChannel(_)
                     | TransportError::Unreachable(_),
                 ) => {
-                    totals.failed += 1;
+                    g.failed.inc();
                     false
                 }
                 Err(_) => {
-                    totals.failed += 1;
+                    g.failed.inc();
                     true
                 }
             };
@@ -1255,10 +1330,11 @@ impl LoopCore {
                 // would burn a frame pair (and, for a Malformed-answering
                 // peer, the pooled connection) every round for nothing.
                 if m.plane_enabled(id) {
+                    let anti_entropy_start = Instant::now();
                     let gen = self.lock_ctl().generation;
                     match self.fleet.transport.exchange_membership(addr, gen, &m.table()) {
                         Ok((table, peer_gen, b)) => {
-                            totals.membership_bytes += b;
+                            g.membership_bytes.add(b as u64);
                             m.merge_remote(&table);
                             if peer_gen > gen {
                                 let mut ctl = self.lock_ctl();
@@ -1273,20 +1349,48 @@ impl LoopCore {
                         // (the data exchange above already counted).
                         Err(_) => {}
                     }
+                    self.membership_nanos.fetch_add(
+                        anti_entropy_start.elapsed().as_nanos() as u64,
+                        Ordering::Relaxed,
+                    );
                 }
             } else {
                 m.record_failure(id);
             }
         }
-        totals
     }
 
-    /// One full refresh → exchange → publish round.
+    /// One full refresh → exchange → publish round, timed per phase.
+    /// The exchange phase writes the registry counters as it runs; the
+    /// returned report is the *diff* of those counters across the round
+    /// — one source of truth, exact because rounds serialize on the
+    /// gate and serves never touch the gossip counters.
     fn run_round(&self) -> GossipRoundReport {
         let _gate = self.round_gate.lock().expect("gossip round gate poisoned");
+        let g = &self.obs.gossip;
+        let base_exchanges = g.exchanges.get();
+        let base_failed = g.failed.get();
+        let base_bytes = g.exchange_bytes.get();
+        let base_membership_bytes = g.membership_bytes.get();
+        let round_start = Instant::now();
         let reseeded = self.refresh();
+        let refresh_duration = round_start.elapsed();
+        g.rounds.inc();
+        if reseeded {
+            g.reseeds.inc();
+        }
         self.lock_ctl().round += 1;
-        let totals = self.exchange_round();
+        self.membership_nanos.store(0, Ordering::Relaxed);
+        let exchange_start = Instant::now();
+        self.exchange_round();
+        let exchange_duration = exchange_start.elapsed();
+        let membership_duration =
+            Duration::from_nanos(self.membership_nanos.swap(0, Ordering::Relaxed));
+        let publish_start = Instant::now();
+        let exchanges = (g.exchanges.get() - base_exchanges) as usize;
+        let failed = (g.failed.get() - base_failed) as usize;
+        let bytes = (g.exchange_bytes.get() - base_bytes) as usize;
+        let membership_bytes = (g.membership_bytes.get() - base_membership_bytes) as usize;
         let cur = self.probes();
         let pool_now = self.fleet.transport.pool_stats().unwrap_or_default();
         let membership = self.fleet.membership.as_ref().map(|m| {
@@ -1299,11 +1403,11 @@ impl LoopCore {
                 joined: ev.joined,
                 suspected: ev.suspected,
                 died: ev.died,
-                bytes: totals.membership_bytes,
+                bytes: membership_bytes,
                 identity_lost: m.identity_lost(),
             }
         });
-        let report = {
+        let (round, generation, drift, converged, pool) = {
             let mut ctl = self.lock_ctl();
             ctl.drift = match (&ctl.prev_probes, &cur) {
                 (Some(prev), Some(cur)) => prev
@@ -1317,21 +1421,53 @@ impl LoopCore {
             ctl.prev_probes = cur;
             let pool = pool_now.delta_since(ctl.prev_pool);
             ctl.prev_pool = pool_now;
-            GossipRoundReport {
-                round: ctl.round,
-                generation: ctl.generation,
-                reseeded,
-                exchanges: totals.exchanges,
-                failed: totals.failed,
-                bytes: totals.bytes,
-                drift: ctl.drift,
-                converged: ctl.converged,
-                pool,
-                membership,
-            }
+            g.generation.set(ctl.generation as f64);
+            g.drift.set(ctl.drift);
+            g.converged.set(if ctl.converged { 1.0 } else { 0.0 });
+            (ctl.round, ctl.generation, ctl.drift, ctl.converged, pool)
         };
         self.publish_all();
-        report
+        let publish_duration = publish_start.elapsed();
+        let duration = round_start.elapsed();
+        g.round_seconds.observe(duration.as_secs_f64());
+        g.phase(RoundPhase::Refresh)
+            .observe(refresh_duration.as_secs_f64());
+        g.phase(RoundPhase::Exchange)
+            .observe(exchange_duration.as_secs_f64());
+        g.phase(RoundPhase::Membership)
+            .observe(membership_duration.as_secs_f64());
+        g.phase(RoundPhase::Publish)
+            .observe(publish_duration.as_secs_f64());
+        let mut trace = RoundTrace::default()
+            .with_phase(RoundPhase::Refresh, refresh_duration)
+            .with_phase(RoundPhase::Exchange, exchange_duration)
+            .with_phase(RoundPhase::Membership, membership_duration)
+            .with_phase(RoundPhase::Publish, publish_duration);
+        trace.round = round;
+        trace.generation = generation;
+        trace.reseeded = reseeded;
+        trace.exchanges = exchanges;
+        trace.failed = failed;
+        trace.bytes = bytes;
+        trace.total = duration;
+        self.obs.trace.push(trace);
+        GossipRoundReport {
+            round,
+            generation,
+            reseeded,
+            exchanges,
+            failed,
+            bytes,
+            drift,
+            converged,
+            pool,
+            membership,
+            duration,
+            refresh_duration,
+            exchange_duration,
+            membership_duration,
+            publish_duration,
+        }
     }
 
     /// Publish every member's fresh view (round path: clones each slot
@@ -1629,6 +1765,71 @@ mod tests {
         assert_eq!(r.pool, PoolStats::default());
         assert!(r.membership.is_none());
         assert!(gl.membership().is_none());
+        gl.shutdown();
+    }
+
+    /// ISSUE 6 satellite: the per-round report carries the phase
+    /// wall-clocks populated from the span layer, the trace ring mirrors
+    /// them, and the report's counts agree with the registry counters it
+    /// is derived from.
+    #[test]
+    fn round_report_carries_phase_timings_from_the_span_layer() {
+        let xs: Vec<f64> = (1..=600).map(|i| i as f64).collect();
+        let ys: Vec<f64> = (601..=1000).map(|i| i as f64).collect();
+        let gl = GossipLoop::start(
+            GossipLoopConfig::default(),
+            vec![static_member(&xs), static_member(&ys)],
+        )
+        .unwrap();
+        let r1 = gl.step();
+        let r2 = gl.step();
+
+        // An in-process exchange clones multi-hundred-bucket sketches —
+        // the round cannot take zero wall clock.
+        assert!(r1.duration > Duration::ZERO);
+        assert!(r1.refresh_duration <= r1.duration);
+        assert!(r1.exchange_duration <= r1.duration);
+        assert!(r1.publish_duration <= r1.duration);
+        // Static fleet: no membership anti-entropy ran.
+        assert_eq!(r1.membership_duration, Duration::ZERO);
+
+        // The report is a diff of the loop's cumulative counters.
+        let obs = gl.metrics();
+        assert_eq!(obs.gossip.rounds.get(), 2);
+        assert_eq!(
+            obs.gossip.exchanges.get() as usize,
+            r1.exchanges + r2.exchanges
+        );
+        assert_eq!(
+            obs.gossip.exchange_bytes.get() as usize,
+            r1.bytes + r2.bytes
+        );
+        assert_eq!(obs.gossip.round_seconds.count(), 2);
+        assert_eq!(
+            obs.gossip.phase(crate::obs::RoundPhase::Exchange).count(),
+            2
+        );
+
+        // The trace ring holds one span record per round, newest last.
+        assert_eq!(obs.trace.len(), 2);
+        let t = obs.trace.recent(1)[0];
+        assert_eq!(t.round, r2.round);
+        assert_eq!(t.exchanges, r2.exchanges);
+        assert_eq!(t.total, r2.duration);
+        assert_eq!(
+            t.phase(crate::obs::RoundPhase::Exchange),
+            r2.exchange_duration
+        );
+
+        // Gauges follow the round outcome, and the whole plane renders.
+        assert_eq!(obs.gossip.generation.get(), 1.0);
+        assert_eq!(obs.gossip.converged.get(), 1.0, "round 2 drift is 0");
+        let text = obs.registry().render();
+        assert!(text.contains("dudd_rounds_total 2"), "{text}");
+        assert!(
+            text.contains("dudd_round_phase_seconds_count{phase=\"exchange\"} 2"),
+            "{text}"
+        );
         gl.shutdown();
     }
 

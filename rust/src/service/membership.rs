@@ -90,9 +90,10 @@
 //! [`TcpTransport`]: super::TcpTransport
 
 use crate::config::GossipLoopConfig;
+use crate::obs::{MembershipMetrics, ObsSlot};
 use std::collections::{BTreeMap, HashMap};
 use std::net::SocketAddr;
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 /// Liveness status of a member, as recorded in the table.
@@ -527,6 +528,10 @@ pub struct Membership {
     self_addr: SocketAddr,
     cfg: MembershipConfig,
     inner: Mutex<Inner>,
+    /// Observability handles, installed once by the owning gossip loop
+    /// at start; every mutation path mirrors its outcome here. Empty on
+    /// a standalone `Membership` (unit tests, direct construction).
+    metrics: ObsSlot<MembershipMetrics>,
 }
 
 impl Membership {
@@ -546,6 +551,7 @@ impl Membership {
                 view_dirty: false,
                 identity_lost: false,
             }),
+            metrics: ObsSlot::new(),
         }
     }
 
@@ -574,7 +580,31 @@ impl Membership {
                 view_dirty: false,
                 identity_lost: false,
             }),
+            metrics: ObsSlot::new(),
         })
+    }
+
+    /// Install the membership-plane metric handles. The gossip loop
+    /// calls this once at start; the liveness gauges sync to the
+    /// current view immediately and every later mutation keeps them
+    /// current. A second install is ignored (first wins).
+    pub(crate) fn install_metrics(&self, metrics: Arc<MembershipMetrics>) {
+        self.metrics.install(metrics);
+        self.book(self.counts(), MergeOutcome::default());
+    }
+
+    /// Mirror one mutation onto the installed handles: the event
+    /// counters from `out`, the liveness gauges from the post-mutation
+    /// `counts`. A no-op until [`Membership::install_metrics`] runs.
+    fn book(&self, counts: (usize, usize, usize), out: MergeOutcome) {
+        if let Some(m) = self.metrics.get() {
+            m.joins.add(out.joined as u64);
+            m.suspicions.add(out.suspected as u64);
+            m.deaths.add(out.died as u64);
+            m.alive.set_usize(counts.0);
+            m.suspect.set_usize(counts.1);
+            m.dead.set_usize(counts.2);
+        }
     }
 
     /// This node's stable member id (the protocol peer id).
@@ -636,6 +666,7 @@ impl Membership {
                 }
             }
         }
+        let mut refuted = false;
         let me = inner.table.get(self.self_id).cloned();
         if let Some(me) = me {
             if me.addr != self.self_addr {
@@ -647,13 +678,14 @@ impl Membership {
                 // Recovery is a rejoin (which assigns a fresh id).
                 inner.identity_lost = true;
             } else if me.status != MemberStatus::Alive {
-                let refuted = MemberEntry {
+                let reassert = MemberEntry {
                     id: self.self_id,
                     addr: self.self_addr,
                     incarnation: me.incarnation + 1,
                     status: MemberStatus::Alive,
                 };
-                out.absorb(inner.table.upsert(refuted));
+                out.absorb(inner.table.upsert(reassert));
+                refuted = true;
             }
         }
         // Merged-in deaths start their tombstone clock now, locally.
@@ -668,6 +700,12 @@ impl Membership {
             inner.obs.entry(id).or_default().dead_since.get_or_insert(now);
         }
         inner.absorb(out);
+        self.book(inner.table.counts(), out);
+        if refuted {
+            if let Some(m) = self.metrics.get() {
+                m.refutations.inc();
+            }
+        }
         out
     }
 
@@ -698,6 +736,7 @@ impl Membership {
         inner.absorb(out);
         // A rejoin wipes the old failure streak.
         inner.obs.remove(&id);
+        self.book(inner.table.counts(), out);
         inner.table.clone()
     }
 
@@ -732,7 +771,9 @@ impl Membership {
                 .min(cfg.backoff_cap);
             o.next_attempt = Some(now + backoff);
         }
-        inner.streak_transition(id, now, cfg)
+        let out = inner.streak_transition(id, now, cfg);
+        self.book(inner.table.counts(), out);
+        out
     }
 
     /// Advance the wall-clock status transitions for every member with
@@ -753,6 +794,7 @@ impl Membership {
         for id in streaked {
             out.absorb(inner.streak_transition(id, now, &self.cfg));
         }
+        self.book(inner.table.counts(), out);
         out
     }
 
@@ -804,6 +846,9 @@ impl Membership {
         for id in &expired {
             inner.table.remove(*id);
             inner.obs.remove(id);
+        }
+        if !expired.is_empty() {
+            self.book(inner.table.counts(), MergeOutcome::default());
         }
         expired.len()
     }
@@ -1321,6 +1366,52 @@ mod tests {
         let out = m.merge_remote(&dead);
         assert_eq!(out.died, 1);
         assert_eq!(m.table().get(1).unwrap().status, MemberStatus::Dead);
+    }
+
+    /// Installed handles mirror the table: join/suspicion/death
+    /// counters from the events, liveness gauges from the view, the
+    /// refutation counter from the self-suspicion path.
+    #[test]
+    fn installed_metrics_mirror_members_and_events() {
+        let obs = crate::obs::NodeMetrics::standalone();
+        let m = Membership::bootstrap(addr(1), fast_cfg());
+        m.install_metrics(obs.membership.clone());
+        assert_eq!(obs.membership.alive.get(), 1.0, "gauges sync on install");
+
+        m.serve_join(addr(2));
+        assert_eq!(obs.membership.joins.get(), 1);
+        assert_eq!(obs.membership.alive.get(), 2.0);
+
+        // Walk member 1 alive → suspect → dead on the wall clock.
+        m.record_failure(1);
+        std::thread::sleep(Duration::from_millis(170));
+        m.tick(Instant::now());
+        assert_eq!(obs.membership.suspicions.get(), 1);
+        assert_eq!(obs.membership.suspect.get(), 1.0);
+        std::thread::sleep(Duration::from_millis(170));
+        m.tick(Instant::now());
+        assert_eq!(obs.membership.deaths.get(), 1);
+        assert_eq!(obs.membership.dead.get(), 1.0);
+        assert_eq!(obs.membership.alive.get(), 1.0);
+
+        // GC drops the tombstone gauge back to zero.
+        m.gc(Instant::now() + Duration::from_millis(450));
+        assert_eq!(obs.membership.dead.get(), 0.0);
+
+        // A suspicion about *this* node is refuted in the merge — the
+        // suspicion itself still counts (it happened), and so does the
+        // incarnation-bump refutation.
+        let mut t = MemberTable::new();
+        t.upsert(MemberEntry {
+            id: 0,
+            addr: addr(1),
+            incarnation: 1,
+            status: MemberStatus::Suspect,
+        });
+        m.merge_remote(&t);
+        assert_eq!(obs.membership.suspicions.get(), 2);
+        assert_eq!(obs.membership.refutations.get(), 1);
+        assert_eq!(obs.membership.alive.get(), 1.0, "refuted back to alive");
     }
 
     #[test]

@@ -12,6 +12,7 @@
 //! exact: the merged deltas equal one sequential sketch over the union
 //! of everything the shards consumed.
 
+use crate::obs::ServiceMetrics;
 use crate::sketch::{DenseStore, UddSketch};
 use anyhow::{Context, Result};
 use std::sync::mpsc::{Receiver, Sender, SyncSender};
@@ -51,19 +52,23 @@ pub(crate) struct ShardHandle {
 }
 
 /// Spawn shard `id`. Sketch parameters are validated here so service
-/// startup fails fast instead of panicking a worker.
+/// startup fails fast instead of panicking a worker. `metrics`, when
+/// present, receives the shard's ingest counters (values / batches /
+/// dropped) — flushed once per batch, so the per-value hot loop never
+/// touches an atomic.
 pub(crate) fn spawn_shard(
     id: usize,
     alpha: f64,
     max_buckets: usize,
     queue_depth: usize,
+    metrics: Option<ServiceMetrics>,
 ) -> Result<ShardHandle> {
     let sketch: UddSketch<DenseStore> = UddSketch::new(alpha, max_buckets)
         .with_context(|| format!("shard {id}: invalid sketch parameters"))?;
     let (tx, rx) = std::sync::mpsc::sync_channel(queue_depth.max(1));
     let join = std::thread::Builder::new()
         .name(format!("dudd-shard-{id}"))
-        .spawn(move || shard_loop(id, alpha, max_buckets, sketch, rx))
+        .spawn(move || shard_loop(id, alpha, max_buckets, sketch, rx, metrics))
         .with_context(|| format!("spawning shard {id}"))?;
     Ok(ShardHandle { tx, join })
 }
@@ -74,6 +79,7 @@ fn shard_loop(
     max_buckets: usize,
     mut sketch: UddSketch<DenseStore>,
     rx: Receiver<ShardMsg>,
+    metrics: Option<ServiceMetrics>,
 ) {
     let mut ops: u64 = 0;
     while let Ok(msg) = rx.recv() {
@@ -83,19 +89,34 @@ fn shard_loop(
             // be able to panic a worker and silently lose the shard's
             // un-drained data.
             ShardMsg::Ingest(xs) => {
+                let mut kept: u64 = 0;
                 for &x in &xs {
                     if x.is_finite() {
                         sketch.insert(x);
-                        ops += 1;
+                        kept += 1;
                     }
+                }
+                ops += kept;
+                if let Some(m) = &metrics {
+                    m.batches.inc();
+                    m.values.add(kept);
+                    m.dropped.add(xs.len() as u64 - kept);
                 }
             }
             ShardMsg::Update(us) => {
+                let total = us.len() as u64;
+                let mut kept: u64 = 0;
                 for (x, w) in us {
                     if x.is_finite() && w.is_finite() {
                         sketch.update(x, w);
-                        ops += 1;
+                        kept += 1;
                     }
+                }
+                ops += kept;
+                if let Some(m) = &metrics {
+                    m.batches.inc();
+                    m.values.add(kept);
+                    m.dropped.add(total - kept);
                 }
             }
             ShardMsg::Drain(reply) => {
@@ -128,7 +149,7 @@ mod tests {
 
     #[test]
     fn shard_folds_batches_and_drains_delta() {
-        let h = spawn_shard(3, 0.01, 256, 8).unwrap();
+        let h = spawn_shard(3, 0.01, 256, 8, None).unwrap();
         h.tx.send(ShardMsg::Ingest(vec![1.0, 2.0, 3.0])).unwrap();
         h.tx.send(ShardMsg::Update(vec![(4.0, 1.0), (4.0, -1.0)]))
             .unwrap();
@@ -153,7 +174,7 @@ mod tests {
 
     #[test]
     fn non_finite_values_are_dropped_not_fatal() {
-        let h = spawn_shard(0, 0.01, 256, 8).unwrap();
+        let h = spawn_shard(0, 0.01, 256, 8, None).unwrap();
         h.tx.send(ShardMsg::Ingest(vec![1.0, f64::NAN, f64::INFINITY, 2.0]))
             .unwrap();
         h.tx.send(ShardMsg::Update(vec![
@@ -174,7 +195,27 @@ mod tests {
 
     #[test]
     fn spawn_rejects_bad_parameters() {
-        assert!(spawn_shard(0, 2.0, 256, 8).is_err());
-        assert!(spawn_shard(0, 0.01, 1, 8).is_err());
+        assert!(spawn_shard(0, 2.0, 256, 8, None).is_err());
+        assert!(spawn_shard(0, 0.01, 1, 8, None).is_err());
+    }
+
+    /// An instrumented shard books every batch, every folded value, and
+    /// every dropped non-finite on the installed counters.
+    #[test]
+    fn instrumented_shard_counts_values_batches_and_drops() {
+        let obs = crate::obs::NodeMetrics::standalone();
+        let h = spawn_shard(0, 0.01, 256, 8, Some(obs.service.clone())).unwrap();
+        h.tx.send(ShardMsg::Ingest(vec![1.0, f64::NAN, 2.0])).unwrap();
+        h.tx.send(ShardMsg::Update(vec![(3.0, 1.0), (f64::INFINITY, 1.0)]))
+            .unwrap();
+        let (tx, rx) = mpsc::channel();
+        h.tx.send(ShardMsg::Drain(tx)).unwrap();
+        let delta = rx.recv().unwrap();
+        assert_eq!(delta.ops, 3);
+        assert_eq!(obs.service.batches.get(), 2);
+        assert_eq!(obs.service.values.get(), 3);
+        assert_eq!(obs.service.dropped.get(), 2);
+        drop(h.tx);
+        h.join.join().unwrap();
     }
 }

@@ -105,6 +105,7 @@ use super::gossip_loop::{NodeHandle, ServeReject};
 use super::membership::MemberTable;
 use crate::config::GossipLoopConfig;
 use crate::gossip::PeerState;
+use crate::obs::{ObsSlot, TransportMetrics};
 use crate::sketch::codec::{
     apply_delta, decode_exchange, delta_payload, delta_wire_size, encode_exchange_delta_push,
     encode_exchange_delta_reply, encode_exchange_push, encode_exchange_reject,
@@ -348,6 +349,17 @@ pub trait Transport: Send + Sync + std::fmt::Debug + 'static {
     /// telemetry so dashboards stop pulling from the transport directly.
     fn pool_stats(&self) -> Option<PoolStats> {
         None
+    }
+
+    /// Install the transport-layer metric handles
+    /// ([`TransportMetrics`](crate::obs::TransportMetrics)) so the
+    /// transport mirrors its pool, frame-mix, wire-byte, RTT, and reject
+    /// counters into the owning node's shared registry. Called once by
+    /// [`GossipLoop`](super::GossipLoop) at start, *before* the serve
+    /// loop spawns. The default ignores the handles (a transport with
+    /// nothing to count); installing twice keeps the first handles.
+    fn install_metrics(&self, metrics: Arc<TransportMetrics>) {
+        let _ = metrics;
     }
 
     /// Spawn the serve side (accept + frame-pump loop), if this
@@ -638,19 +650,29 @@ impl Pool {
         peer: SocketAddr,
         idle: Duration,
         stats: &TransportStats,
+        metrics: Option<&Arc<TransportMetrics>>,
     ) -> Option<TcpStream> {
         let mut map = self.conns.lock().expect("transport pool poisoned");
         let list = map.get_mut(&peer)?;
         while let Some(c) = list.pop() {
             if c.idle_since.elapsed() > idle {
                 stats.expired.fetch_add(1, Ordering::Relaxed);
+                if let Some(m) = metrics {
+                    m.pool_expired.inc();
+                }
                 continue;
             }
             if probe_alive(&c.stream) {
                 stats.reused.fetch_add(1, Ordering::Relaxed);
+                if let Some(m) = metrics {
+                    m.pool_reused.inc();
+                }
                 return Some(c.stream);
             }
             stats.stale.fetch_add(1, Ordering::Relaxed);
+            if let Some(m) = metrics {
+                m.pool_stale_discarded.inc();
+            }
         }
         None
     }
@@ -674,10 +696,18 @@ impl Pool {
     /// Drop every pooled connection to `peer` (called when one proved
     /// stale mid-exchange: the peer likely restarted, so its siblings
     /// are dead too).
-    fn invalidate(&self, peer: SocketAddr, stats: &TransportStats) {
+    fn invalidate(
+        &self,
+        peer: SocketAddr,
+        stats: &TransportStats,
+        metrics: Option<&Arc<TransportMetrics>>,
+    ) {
         let mut map = self.conns.lock().expect("transport pool poisoned");
         if let Some(list) = map.remove(&peer) {
             stats.stale.fetch_add(list.len(), Ordering::Relaxed);
+            if let Some(m) = metrics {
+                m.pool_stale_discarded.add(list.len() as u64);
+            }
         }
     }
 }
@@ -751,6 +781,11 @@ pub struct TcpTransport {
     /// Serve-side baselines, one per initiator id (shared with the serve
     /// loop thread).
     serve_baselines: ServeBaselines,
+    /// Registry-backed mirrors of [`TransportStats`], installed (once)
+    /// by the owning node via [`Transport::install_metrics`]. Empty on a
+    /// transport used outside a node; every hot-path site checks the
+    /// slot with a lock-free read.
+    metrics: ObsSlot<TransportMetrics>,
 }
 
 impl TcpTransport {
@@ -770,6 +805,7 @@ impl TcpTransport {
             stats: TransportStats::default(),
             baselines: Mutex::new(HashMap::new()),
             serve_baselines: Arc::new(Mutex::new(HashMap::new())),
+            metrics: ObsSlot::new(),
         })
     }
 
@@ -797,6 +833,7 @@ impl TcpTransport {
             stats: TransportStats::default(),
             baselines: Mutex::new(HashMap::new()),
             serve_baselines: Arc::new(Mutex::new(HashMap::new())),
+            metrics: ObsSlot::new(),
         })
     }
 
@@ -852,8 +889,11 @@ impl TcpTransport {
         e: std::io::Error,
     ) -> TransportError {
         if reused && !reply_started && connection_died(&e) {
-            self.pool.invalidate(peer, &self.stats);
+            self.pool.invalidate(peer, &self.stats, self.metrics.get());
             self.stats.stale.fetch_add(1, Ordering::Relaxed);
+            if let Some(m) = self.metrics.get() {
+                m.pool_stale_discarded.inc();
+            }
             TransportError::StaleChannel(format!("{phase}: {e}"))
         } else {
             TransportError::Io(format!("{phase}: {e}"))
@@ -958,6 +998,7 @@ impl TcpTransport {
                 reason: RejectReason::NoMembership,
                 ..
             } => {
+                self.count_reject(RejectReason::NoMembership);
                 // The framing is intact; keep the connection warm.
                 self.pool.checkin(peer, stream, self.opts.pool_connections);
                 Err(TransportError::NoMembership)
@@ -979,6 +1020,25 @@ impl TcpTransport {
             .get(&peer)
             .filter(|b| b.generation == generation)
             .cloned()
+    }
+
+    /// Book a completed initiated exchange on the installed metrics:
+    /// the socket bytes it moved and its round-trip time (`start` is
+    /// taken before the push write, so the RTT spans push write through
+    /// reply adoption, a full-frame retry included).
+    fn finish_exchange(&self, start: Instant, wire: usize) -> Result<usize, TransportError> {
+        if let Some(m) = self.metrics.get() {
+            m.wire_bytes.add(wire as u64);
+            m.exchange_rtt.observe(start.elapsed().as_secs_f64());
+        }
+        Ok(wire)
+    }
+
+    /// Count a reject frame received as an initiator.
+    fn count_reject(&self, reason: RejectReason) {
+        if let Some(m) = self.metrics.get() {
+            m.rejects.reason(reason).inc();
+        }
     }
 }
 
@@ -1003,13 +1063,19 @@ impl Transport for TcpTransport {
 
     fn open_remote(&self, peer: SocketAddr) -> Result<RemoteChannel, TransportError> {
         if self.opts.pool_connections > 0 {
-            if let Some(stream) = self.pool.checkout(peer, self.opts.pool_idle, &self.stats) {
+            if let Some(stream) =
+                self.pool
+                    .checkout(peer, self.opts.pool_idle, &self.stats, self.metrics.get())
+            {
                 return Ok(RemoteChannel::new(peer, true, Box::new(stream)));
             }
         }
         let io = |e: std::io::Error| TransportError::Io(e.to_string());
         let stream = TcpStream::connect_timeout(&peer, self.opts.deadline).map_err(io)?;
         self.stats.fresh.fetch_add(1, Ordering::Relaxed);
+        if let Some(m) = self.metrics.get() {
+            m.pool_fresh_connects.inc();
+        }
         Ok(RemoteChannel::new(peer, false, Box::new(stream)))
     }
 
@@ -1021,6 +1087,7 @@ impl Transport for TcpTransport {
     ) -> Result<usize, TransportError> {
         let peer = chan.peer();
         let reused = chan.reused();
+        let start = Instant::now();
         let stream = Self::channel_stream(chan, self.opts.deadline)?;
         let io = |e: std::io::Error| TransportError::Io(e.to_string());
 
@@ -1034,10 +1101,16 @@ impl Transport for TcpTransport {
         let push = match &push_delta {
             Some(d) => {
                 self.stats.delta_pushes.fetch_add(1, Ordering::Relaxed);
+                if let Some(m) = self.metrics.get() {
+                    m.frames_delta.inc();
+                }
                 encode_exchange_delta_push(generation, d)
             }
             None => {
                 self.stats.full_pushes.fetch_add(1, Ordering::Relaxed);
+                if let Some(m) = self.metrics.get() {
+                    m.frames_full.inc();
+                }
                 encode_exchange_push(generation, local)
             }
         };
@@ -1062,7 +1135,7 @@ impl Transport for TcpTransport {
                     .expect("a decoded reply frame is longer than its header");
                 self.adopt_reply(peer, local, generation, gen, state, fp)?;
                 self.pool.checkin(peer, stream, self.opts.pool_connections);
-                Ok(wire)
+                self.finish_exchange(start, wire)
             }
             ExchangeFrame::DeltaReply {
                 generation: gen,
@@ -1083,7 +1156,7 @@ impl Transport for TcpTransport {
                 let fp = peer_state_fingerprint(&state);
                 self.adopt_reply(peer, local, generation, gen, state, fp)?;
                 self.pool.checkin(peer, stream, self.opts.pool_connections);
-                Ok(wire)
+                self.finish_exchange(start, wire)
             }
             ExchangeFrame::Reject {
                 reason: RejectReason::BaselineMismatch,
@@ -1091,11 +1164,15 @@ impl Transport for TcpTransport {
             } if push_delta.is_some() => {
                 // The partner lost (or never had) our baseline: drop ours
                 // and retry with a full frame on this same connection.
+                self.count_reject(RejectReason::BaselineMismatch);
                 self.baselines
                     .lock()
                     .expect("transport baseline cache poisoned")
                     .remove(&peer);
                 self.stats.full_pushes.fetch_add(1, Ordering::Relaxed);
+                if let Some(m) = self.metrics.get() {
+                    m.frames_full.inc();
+                }
                 let push = encode_exchange_push(generation, local);
                 write_frame(&stream, &push).map_err(io)?;
                 let reply = read_frame(&stream).map_err(io)?;
@@ -1111,7 +1188,7 @@ impl Transport for TcpTransport {
                             .expect("a decoded reply frame is longer than its header");
                         self.adopt_reply(peer, local, generation, gen, state, fp)?;
                         self.pool.checkin(peer, stream, self.opts.pool_connections);
-                        Ok(wire)
+                        self.finish_exchange(start, wire)
                     }
                     ExchangeFrame::Reject {
                         generation: gen,
@@ -1119,6 +1196,7 @@ impl Transport for TcpTransport {
                     } => {
                         // Framing is intact after a reject: keep the
                         // connection warm for the next round.
+                        self.count_reject(reason);
                         if matches!(
                             reason,
                             RejectReason::Busy | RejectReason::StaleGeneration
@@ -1140,6 +1218,7 @@ impl Transport for TcpTransport {
                 // collisions on an intact connection (the server keeps
                 // its side open, PROTOCOL.md §3) — pool it so the retry
                 // next round skips the reconnect.
+                self.count_reject(reason);
                 if matches!(reason, RejectReason::Busy | RejectReason::StaleGeneration) {
                     self.pool.checkin(peer, stream, self.opts.pool_connections);
                 }
@@ -1197,7 +1276,10 @@ impl Transport for TcpTransport {
             ExchangeFrame::Reject {
                 reason: RejectReason::NoMembership,
                 ..
-            } => Err(TransportError::NoMembership),
+            } => {
+                self.count_reject(RejectReason::NoMembership);
+                Err(TransportError::NoMembership)
+            }
             other => Err(TransportError::Protocol(format!(
                 "seed answered the join with a non-membership frame: {other:?}"
             ))),
@@ -1206,6 +1288,10 @@ impl Transport for TcpTransport {
 
     fn pool_stats(&self) -> Option<PoolStats> {
         Some(TcpTransport::pool_stats(self))
+    }
+
+    fn install_metrics(&self, metrics: Arc<TransportMetrics>) {
+        self.metrics.install(metrics);
     }
 
     fn spawn_server(&self, node: NodeHandle) -> crate::Result<Option<JoinHandle<()>>> {
@@ -1225,6 +1311,9 @@ impl Transport for TcpTransport {
             idle: self.opts.pool_idle,
             delta: self.opts.delta_exchanges,
             baselines: self.serve_baselines.clone(),
+            // The loop installs metrics before spawning the server, so
+            // an instrumented node's serve side always sees them.
+            metrics: self.metrics.get().cloned(),
         };
         let handle = std::thread::Builder::new()
             .name("dudd-serve".into())
@@ -1269,6 +1358,16 @@ struct ServeParams {
     idle: Duration,
     delta: bool,
     baselines: ServeBaselines,
+    /// Installed metric handles, if the owning node registered any
+    /// before the serve loop spawned.
+    metrics: Option<Arc<TransportMetrics>>,
+}
+
+/// Count a reject frame written while serving, if metrics are installed.
+fn count_serve_reject(params: &ServeParams, reason: RejectReason) {
+    if let Some(m) = &params.metrics {
+        m.serve_rejects.reason(reason).inc();
+    }
 }
 
 /// One inbound connection's frame-assembly state.
@@ -1487,6 +1586,7 @@ fn serve_frame_blocking(
                 })
                 .cloned();
             let Some(b) = cached else {
+                count_serve_reject(params, RejectReason::BaselineMismatch);
                 return write_frame(
                     stream,
                     &encode_exchange_reject(0, RejectReason::BaselineMismatch),
@@ -1496,6 +1596,7 @@ fn serve_frame_blocking(
             match apply_delta(&b.state, &delta) {
                 Ok(state) => (generation, state, Some(b)),
                 Err(_) => {
+                    count_serve_reject(params, RejectReason::BaselineMismatch);
                     return write_frame(
                         stream,
                         &encode_exchange_reject(0, RejectReason::BaselineMismatch),
@@ -1512,11 +1613,14 @@ fn serve_frame_blocking(
                 Ok((merged, gen)) => {
                     write_frame(stream, &encode_membership_reply(gen, &merged)).map_err(|_| ())
                 }
-                Err(_) => write_frame(
-                    stream,
-                    &encode_exchange_reject(0, RejectReason::NoMembership),
-                )
-                .map_err(|_| ()),
+                Err(_) => {
+                    count_serve_reject(params, RejectReason::NoMembership);
+                    write_frame(
+                        stream,
+                        &encode_exchange_reject(0, RejectReason::NoMembership),
+                    )
+                    .map_err(|_| ())
+                }
             };
         }
         Ok(ExchangeFrame::JoinRequest { addr, .. }) => {
@@ -1524,16 +1628,20 @@ fn serve_frame_blocking(
                 Ok((table, gen)) => {
                     write_frame(stream, &encode_membership_reply(gen, &table)).map_err(|_| ())
                 }
-                Err(_) => write_frame(
-                    stream,
-                    &encode_exchange_reject(0, RejectReason::NoMembership),
-                )
-                .map_err(|_| ()),
+                Err(_) => {
+                    count_serve_reject(params, RejectReason::NoMembership);
+                    write_frame(
+                        stream,
+                        &encode_exchange_reject(0, RejectReason::NoMembership),
+                    )
+                    .map_err(|_| ())
+                }
             };
         }
         // Malformed or non-push frames never touch local state (§7.2);
         // the framing can no longer be trusted, so the connection goes.
         _ => {
+            count_serve_reject(params, RejectReason::Malformed);
             let _ = write_frame(stream, &encode_exchange_reject(0, RejectReason::Malformed));
             return Err(());
         }
@@ -1582,6 +1690,7 @@ fn serve_frame_blocking(
                 // frames have their own dispatch above.
                 ServeReject::NoMembership => (0, RejectReason::NoMembership),
             };
+            count_serve_reject(params, reason);
             write_frame(stream, &encode_exchange_reject(gen, reason)).map_err(|_| ())
         }
     }
@@ -1819,7 +1928,7 @@ mod tests {
         // Checkout health-check notices the close and reports no conn.
         assert!(t
             .pool
-            .checkout(addr, t.opts.pool_idle, &t.stats)
+            .checkout(addr, t.opts.pool_idle, &t.stats, None)
             .is_none());
         assert_eq!(t.pool_stats().stale_discarded, 1);
         assert_eq!(t.pooled_connections(addr), 0);
@@ -1834,7 +1943,7 @@ mod tests {
         let client = TcpStream::connect(addr).unwrap();
         let (_server_side, _) = listener.accept().unwrap();
         t.pool.checkin(addr, client, 2);
-        let got = t.pool.checkout(addr, t.opts.pool_idle, &t.stats);
+        let got = t.pool.checkout(addr, t.opts.pool_idle, &t.stats, None);
         assert!(got.is_some());
         assert_eq!(t.pool_stats().reused, 1);
         assert_eq!(t.pool_stats().stale_discarded, 0);
@@ -1862,7 +1971,9 @@ mod tests {
 
         std::thread::sleep(Duration::from_millis(30));
         assert!(
-            t.pool.checkout(addr, t.opts.pool_idle, &t.stats).is_none(),
+            t.pool
+                .checkout(addr, t.opts.pool_idle, &t.stats, None)
+                .is_none(),
             "idle-expired connection must not be reused"
         );
         assert_eq!(t.pool_stats().expired, 1);
@@ -1969,5 +2080,73 @@ mod tests {
             "busy reject must return the connection to the pool"
         );
         server.join().unwrap();
+    }
+
+    /// Regression: `delta_since` against a *larger* previous snapshot
+    /// (transport swapped mid-run, so the counters restarted) must clamp
+    /// to zero instead of wrapping to huge per-round values.
+    #[test]
+    fn pool_stats_delta_since_saturates_on_counter_reset() {
+        let newer = PoolStats {
+            fresh_connects: 3,
+            reused: 10,
+            delta_pushes: 2,
+            ..PoolStats::default()
+        };
+        let older = PoolStats {
+            fresh_connects: 5,
+            reused: 4,
+            stale_discarded: 7,
+            expired: 1,
+            delta_pushes: 2,
+            full_pushes: 9,
+        };
+        let d = newer.delta_since(older);
+        assert_eq!(d.fresh_connects, 0, "reset counter must clamp, not wrap");
+        assert_eq!(d.reused, 6, "a genuinely advancing counter still diffs");
+        assert_eq!(d.stale_discarded, 0);
+        assert_eq!(d.expired, 0);
+        assert_eq!(d.delta_pushes, 0, "an unchanged counter diffs to zero");
+        assert_eq!(d.full_pushes, 0);
+        assert_eq!(
+            newer.delta_since(PoolStats::default()),
+            newer,
+            "diff against a zero snapshot is the snapshot itself"
+        );
+    }
+
+    /// Installed [`TransportMetrics`] mirror the legacy pool counters
+    /// without replacing them.
+    #[test]
+    fn installed_metrics_mirror_the_pool_counters() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let t = TcpTransport::connect_only(Duration::from_millis(300)).unwrap();
+        let obs = crate::obs::NodeMetrics::standalone();
+        t.install_metrics(obs.transport.clone());
+
+        // A fresh dial books `pool_fresh_connects`.
+        let chan = t.open_remote(addr).unwrap();
+        assert!(!chan.reused());
+        assert_eq!(obs.transport.pool_fresh_connects.get(), 1);
+
+        // A pooled checkout books `pool_reused` and keeps the legacy
+        // counter advancing alongside.
+        let client = TcpStream::connect(addr).unwrap();
+        let (_server_side, _) = listener.accept().unwrap();
+        t.pool.checkin(addr, client, 2);
+        let got = t
+            .pool
+            .checkout(addr, t.opts.pool_idle, &t.stats, t.metrics.get());
+        assert!(got.is_some());
+        assert_eq!(obs.transport.pool_reused.get(), 1);
+        assert_eq!(t.pool_stats().reused, 1, "legacy counters still advance");
+
+        // A second install is ignored (first wins), so the handles stay
+        // attached to the original registry.
+        t.install_metrics(crate::obs::NodeMetrics::standalone().transport.clone());
+        let chan2 = t.open_remote(addr).unwrap();
+        assert!(!chan2.reused());
+        assert_eq!(obs.transport.pool_fresh_connects.get(), 2);
     }
 }

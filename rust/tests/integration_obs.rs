@@ -1,0 +1,272 @@
+//! Integration: the node-wide observability plane (ISSUE 6).
+//!
+//! Acceptance:
+//! * a fleet of 4 real nodes gossiping over **loopback TCP under live
+//!   ingest** serves `GET /metrics` per node — well-formed Prometheus
+//!   text exposition carrying the ingest, gossip, transport, and
+//!   membership families, including the UddSketch-backed exchange-RTT
+//!   summary;
+//! * the scraped `dudd_exchanges_total` equals the sum of
+//!   `GossipRoundReport::exchanges` over every round the node ran — the
+//!   registry and the report are two views of one set of books;
+//! * the endpoint speaks enough HTTP to be scraped by a stock agent:
+//!   200 on `GET /metrics`, 404 elsewhere, `Connection: close`.
+
+// Plain-data configs are mutated after `default()` on purpose (see lib.rs).
+#![allow(clippy::field_reassign_with_default)]
+
+use duddsketch::config::ServiceConfig;
+use duddsketch::data::{peer_dataset, DatasetKind};
+use duddsketch::prelude::*;
+use duddsketch::rng::default_rng;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::Arc;
+use std::time::Duration;
+
+fn service_cfg() -> ServiceConfig {
+    let mut c = ServiceConfig::default();
+    c.shards = 2;
+    c.batch_size = 256;
+    c.gossip.round_interval_ms = 0; // tests are the clock
+    c
+}
+
+/// Bind `n` transports first (address book before any loop starts), then
+/// build the fleet with an ephemeral `/metrics` listener per node.
+fn observed_tcp_fleet(n: usize, cfg: &ServiceConfig) -> Vec<Node> {
+    let opts = TcpTransportOptions::from_gossip(&cfg.gossip);
+    let transports: Vec<Arc<TcpTransport>> = (0..n)
+        .map(|_| Arc::new(TcpTransport::bind_with("127.0.0.1:0", opts.clone()).unwrap()))
+        .collect();
+    let addrs: Vec<SocketAddr> = transports
+        .iter()
+        .map(|t| t.listen_addr().unwrap())
+        .collect();
+    transports
+        .iter()
+        .enumerate()
+        .map(|(k, t)| {
+            let mut b = Node::builder()
+                .config(cfg.clone())
+                .self_index(k)
+                .transport_shared(t.clone())
+                .metrics_bind("127.0.0.1:0".parse().unwrap());
+            for (j, &addr) in addrs.iter().enumerate() {
+                if j != k {
+                    b = b.remote_peer(addr);
+                }
+            }
+            b.build().unwrap()
+        })
+        .collect()
+}
+
+/// One HTTP request against a node's metrics listener; returns
+/// (status line, body).
+fn http_get(addr: SocketAddr, path: &str) -> (String, String) {
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_millis(2_000))).unwrap();
+    write!(s, "GET {path} HTTP/1.1\r\nHost: {addr}\r\nConnection: close\r\n\r\n").unwrap();
+    let mut buf = String::new();
+    s.read_to_string(&mut buf).unwrap();
+    let (head, body) = buf
+        .split_once("\r\n\r\n")
+        .expect("HTTP response has a header block");
+    let status = head.lines().next().unwrap_or_default().to_string();
+    (status, body.to_string())
+}
+
+fn scrape(addr: SocketAddr) -> String {
+    let (status, body) = http_get(addr, "/metrics");
+    assert!(status.starts_with("HTTP/1.1 200"), "{status}");
+    body
+}
+
+/// The value of an **unlabelled** sample line (`<name> <value>`). Exact
+/// name match — `dudd_exchanges_total` does not match the `_failed_`
+/// family or a `{quantile=...}` summary line.
+fn sample(body: &str, name: &str) -> f64 {
+    for line in body.lines() {
+        if let Some(rest) = line.strip_prefix(name) {
+            if let Some(v) = rest.strip_prefix(' ') {
+                return v.trim().parse().unwrap();
+            }
+        }
+    }
+    panic!("metric {name} not found in exposition:\n{body}");
+}
+
+/// Every non-comment line must be `name[{labels}] value` with a numeric
+/// (or NaN) value — the shape a stock Prometheus scraper parses.
+fn assert_well_formed(body: &str) {
+    assert!(!body.is_empty(), "empty exposition");
+    for line in body.lines() {
+        if line.starts_with("# HELP ") || line.starts_with("# TYPE ") {
+            continue;
+        }
+        let (name, value) = line
+            .rsplit_once(' ')
+            .unwrap_or_else(|| panic!("sample line without a value: {line:?}"));
+        assert!(
+            !name.is_empty()
+                && name.starts_with(|c: char| c.is_ascii_alphabetic() || c == '_'),
+            "bad metric name in line {line:?}"
+        );
+        assert!(
+            value.parse::<f64>().is_ok(),
+            "non-numeric sample value in line {line:?}"
+        );
+    }
+}
+
+/// The acceptance test: four real nodes on loopback TCP under live
+/// ingest, each serving its own registry; the scraped books must agree
+/// with the per-round reports the test itself collected.
+#[test]
+fn four_tcp_nodes_serve_metrics_matching_their_round_reports() {
+    let nodes = 4;
+    let items = 2_000;
+    let master = default_rng(42);
+    let datasets: Vec<Vec<f64>> = (0..nodes)
+        .map(|i| peer_dataset(DatasetKind::Exponential, i, items, &master))
+        .collect();
+
+    let cfg = service_cfg();
+    let fleet = observed_tcp_fleet(nodes, &cfg);
+    let metrics_addrs: Vec<SocketAddr> = fleet
+        .iter()
+        .enumerate()
+        .map(|(k, n)| {
+            n.metrics_addr()
+                .unwrap_or_else(|| panic!("node {k} must bind a /metrics listener"))
+        })
+        .collect();
+
+    // Live ingest interleaved with gossip sweeps; the test keeps its own
+    // tally of every round report per node.
+    let mut reported_exchanges = vec![0usize; nodes];
+    let mut writers: Vec<_> = fleet.iter().map(|n| n.writer()).collect();
+    for step in 0..2 {
+        for (k, node) in fleet.iter().enumerate() {
+            writers[k].insert_batch(&datasets[k][step * 1_000..(step + 1) * 1_000]);
+            writers[k].flush();
+            node.flush();
+        }
+        for (k, node) in fleet.iter().enumerate() {
+            let r = node.step().expect("gossip enabled");
+            reported_exchanges[k] += r.exchanges;
+        }
+    }
+    drop(writers);
+    for _ in 0..30 {
+        for (k, node) in fleet.iter().enumerate() {
+            let r = node.step().expect("gossip enabled");
+            reported_exchanges[k] += r.exchanges;
+        }
+    }
+
+    for (k, node) in fleet.iter().enumerate() {
+        let body = scrape(metrics_addrs[k]);
+        assert_well_formed(&body);
+
+        // All four families are present: ingest, gossip, transport,
+        // membership.
+        for family in [
+            "dudd_ingest_values_total",
+            "dudd_epochs_total",
+            "dudd_rounds_total",
+            "dudd_exchanges_total",
+            "dudd_wire_bytes_total",
+            "dudd_pool_fresh_connects_total",
+            "dudd_members_alive",
+        ] {
+            assert!(
+                body.contains(&format!("# TYPE {family} ")),
+                "node {k} exposition lacks {family}:\n{body}"
+            );
+        }
+
+        // The registry's exchange counter and the round reports are two
+        // views of the same books.
+        assert!(reported_exchanges[k] > 0, "node {k} never exchanged");
+        assert_eq!(
+            sample(&body, "dudd_exchanges_total") as usize,
+            reported_exchanges[k],
+            "node {k}: scraped exchanges != summed GossipRoundReport::exchanges"
+        );
+        assert_eq!(
+            sample(&body, "dudd_rounds_total") as usize,
+            32,
+            "node {k}: one rounds tick per step()"
+        );
+        assert_eq!(
+            sample(&body, "dudd_ingest_values_total") as usize,
+            items,
+            "node {k}: every inserted value booked"
+        );
+
+        // The UddSketch-backed exchange-RTT summary carries real
+        // observations: one per completed initiator-side exchange.
+        assert!(
+            body.contains("dudd_exchange_rtt_seconds{quantile=\"0.99\"}"),
+            "node {k} lacks RTT quantile samples:\n{body}"
+        );
+        let rtt_count = sample(&body, "dudd_exchange_rtt_seconds_count");
+        assert!(
+            rtt_count > 0.0,
+            "node {k}: RTT summary never observed an exchange"
+        );
+        assert!(
+            sample(&body, "dudd_exchange_rtt_seconds_sum") >= 0.0,
+            "node {k}: RTT sum must be non-negative"
+        );
+
+        // Transport wire accounting reached the registry.
+        assert!(
+            sample(&body, "dudd_wire_bytes_total") > 0.0,
+            "node {k}: no wire bytes booked"
+        );
+
+        // The same numbers are visible in-process without a scrape.
+        let m = node.metrics();
+        assert_eq!(m.gossip.exchanges.get() as usize, reported_exchanges[k]);
+        assert_eq!(m.service.values.get() as usize, items);
+    }
+
+    for node in fleet {
+        node.shutdown();
+    }
+}
+
+/// The listener speaks enough HTTP for a stock scraper: 404 off-path,
+/// and a second scrape sees counters move monotonically.
+#[test]
+fn metrics_endpoint_serves_404_off_path_and_monotone_counters() {
+    let node = Node::builder()
+        .config(service_cfg())
+        .shards(1)
+        .metrics_bind("127.0.0.1:0".parse().unwrap())
+        .build()
+        .unwrap();
+    let addr = node.metrics_addr().expect("listener bound");
+
+    let (status, _) = http_get(addr, "/definitely-not-metrics");
+    assert!(status.starts_with("HTTP/1.1 404"), "{status}");
+
+    let mut w = node.writer();
+    w.insert_batch(&[1.0, 2.0]);
+    w.flush();
+    node.flush();
+    let first = sample(&scrape(addr), "dudd_ingest_values_total");
+    assert_eq!(first, 2.0);
+
+    w.insert_batch(&[3.0, 4.0, 5.0]);
+    w.flush();
+    node.flush();
+    let second = sample(&scrape(addr), "dudd_ingest_values_total");
+    assert_eq!(second, 5.0, "counters are monotone across scrapes");
+
+    drop(w);
+    node.shutdown();
+}
