@@ -12,6 +12,9 @@
 //! * `serve-remote` — a fleet of real nodes gossiping over loopback TCP
 //!   (length-prefixed codec frames, accept loop per node), converging to
 //!   the sequential union sketch while ingest continues.
+//! * `sim-fleet` — deterministic whole-fleet simulation (1000+ members
+//!   in one process) under scripted faults, verified against the exact
+//!   oracle each virtual round.
 //! * `info` — build/runtime/artifact diagnostics.
 
 use crate::config::ExperimentConfig;
@@ -149,6 +152,20 @@ USAGE:
       member table advertises, so joining a fleet on other machines
       needs --bind with an address they can route to (the default
       127.0.0.1:0 only works for same-host fleets)
+  duddsketch sim-fleet [--scenario NAME|FILE] [--seed X] [--members N]
+            [--rounds R] [--items N] [--alpha A] [--m M] [--fan-out F]
+            [--graph KIND] [--dataset NAME] [--churn KIND]
+            [--drop-prob P] [--json-log FILE] [--trace FILE] [--quiet]
+      run a whole simulated fleet in one process (docs/SIMULATION.md):
+      the production gossip loop + membership plane over simulated
+      links with injectable faults, driven round by round on a virtual
+      clock. --scenario names a built-in (baseline, churn-storm,
+      lossy, partition) or a scenario file; the flags override its
+      knobs. Every round checks the fleet's union estimate against the
+      exact oracle; the run fails unless the fleet converges within
+      the bound by the final round. --json-log writes the per-round
+      JSON log, --trace the deterministic event trace (same seed ⇒
+      byte-identical — diff two runs to prove it)
   duddsketch info
       platform, artifact inventory, defaults
 
@@ -1216,6 +1233,131 @@ fn cmd_serve_remote_join(args: &Args, seed_addr: std::net::SocketAddr) -> Result
     Ok(out)
 }
 
+/// `sim-fleet`: resolve a scenario (built-in or file), apply flag
+/// overrides, run the simulated fleet, and fail the command unless the
+/// union estimate converged within the oracle bound by the final round.
+fn cmd_sim_fleet(args: &Args) -> Result<String> {
+    use crate::sim::{Scenario, SimFleet};
+
+    let name = args.flag("scenario").unwrap_or("baseline");
+    let path = std::path::Path::new(name);
+    let mut scenario = if path.is_file() {
+        Scenario::from_file(path)?
+    } else {
+        Scenario::builtin(name)?
+    };
+    let seed: u64 = args.flag("seed").unwrap_or("42").parse()?;
+    if let Some(v) = args.flag("members") {
+        scenario.members = v.parse().context("--members")?;
+    }
+    if let Some(v) = args.flag("rounds") {
+        scenario.rounds = v.parse().context("--rounds")?;
+    }
+    if let Some(v) = args.flag("items") {
+        scenario.items_per_member = v.parse().context("--items")?;
+    }
+    if let Some(v) = args.flag("alpha") {
+        scenario.alpha = v.parse().context("--alpha")?;
+    }
+    if let Some(v) = args.flag("m") {
+        scenario.max_buckets = v.parse().context("--m")?;
+    }
+    if let Some(v) = args.flag("fan-out") {
+        scenario.fan_out = v.parse().context("--fan-out")?;
+    }
+    if let Some(v) = args.flag("graph") {
+        scenario.graph = v.parse().map_err(anyhow::Error::msg).context("--graph")?;
+    }
+    if let Some(v) = args.flag("dataset") {
+        scenario.dataset = v.parse().map_err(anyhow::Error::msg).context("--dataset")?;
+    }
+    if let Some(v) = args.flag("churn") {
+        scenario.churn = v.parse().map_err(anyhow::Error::msg).context("--churn")?;
+    }
+    if let Some(v) = args.flag("drop-prob") {
+        scenario.faults.drop_prob = v.parse().context("--drop-prob")?;
+    }
+    scenario.validate()?;
+
+    let sw = crate::util::Stopwatch::start();
+    let report = SimFleet::new(scenario.clone(), seed)?.run()?;
+    let wall = sw.secs();
+
+    let mut out = format!(
+        "sim-fleet: scenario={} seed={seed} members={} rounds={} graph={} \
+         dataset={} churn={:?} alpha={} drop={}/{}\n",
+        report.scenario,
+        report.members_initial,
+        scenario.rounds,
+        scenario.graph.name(),
+        scenario.dataset.name(),
+        scenario.churn,
+        scenario.alpha,
+        scenario.faults.drop_prob,
+        scenario.faults.reply_drop_prob,
+    );
+    if !args.has("quiet") {
+        out.push_str(
+            "  round  alive  down  exch   failed  KiB       mem-KiB  gen  rel-err     ok  events\n",
+        );
+        for r in &report.rounds {
+            out.push_str(&format!(
+                "  {:<5}  {:<5}  {:<4}  {:<5}  {:<6}  {:<8.1}  {:<7.1}  {:<3}  {:<9.3e}  {}  {}\n",
+                r.round,
+                r.alive,
+                r.downed,
+                r.exchanges,
+                r.failed,
+                r.bytes as f64 / 1024.0,
+                r.membership_bytes as f64 / 1024.0,
+                r.generation,
+                r.max_rel_err,
+                if r.within_tol { "y " } else { ". " },
+                r.events.join(", "),
+            ));
+        }
+    }
+    out.push_str(&format!(
+        "  net: delivered={} push_lost={} reply_lost={} refused={} wire={:.1} MiB\n",
+        report.net.delivered,
+        report.net.push_lost,
+        report.net.reply_lost,
+        report.net.refused,
+        report.net.bytes as f64 / (1024.0 * 1024.0),
+    ));
+    out.push_str(&format!(
+        "  trace: {} events ({} members peak), wall {wall:.2}s\n",
+        report.trace.len(),
+        report.members_peak,
+    ));
+    if let Some(p) = args.flag("json-log") {
+        std::fs::write(p, report.to_json()).with_context(|| format!("writing {p}"))?;
+        out.push_str(&format!("  json log: {p}\n"));
+    }
+    if let Some(p) = args.flag("trace") {
+        std::fs::write(p, report.trace_text()).with_context(|| format!("writing {p}"))?;
+        out.push_str(&format!("  trace file: {p}\n"));
+    }
+    match report.converged_round {
+        Some(r) => out.push_str(&format!(
+            "  OK: converged from round {r} (err {:.3e} <= tol {:.3e}); \
+             O(log n) reference: {} rounds for n={}\n",
+            report.final_max_rel_err,
+            report.tol,
+            report.reference_rounds,
+            report.members_peak,
+        )),
+        None => bail!(
+            "sim-fleet did not converge: final err {:.3e} > tol {:.3e} \
+             after {} rounds\n{out}",
+            report.final_max_rel_err,
+            report.tol,
+            scenario.rounds,
+        ),
+    }
+    Ok(out)
+}
+
 fn cmd_info() -> Result<String> {
     let mut out = String::new();
     out.push_str(&format!(
@@ -1255,6 +1397,7 @@ pub fn dispatch(args: &Args) -> Result<String> {
         "serve-bench" => cmd_serve_bench(args),
         "serve-gossip" => cmd_serve_gossip(args),
         "serve-remote" => cmd_serve_remote(args),
+        "sim-fleet" => cmd_sim_fleet(args),
         "info" => cmd_info(),
         "help" | "--help" | "-h" => Ok(USAGE.to_string()),
         other => bail!("unknown command '{other}'\n{USAGE}"),
@@ -1564,6 +1707,57 @@ mod tests {
     #[test]
     fn serve_bench_rejects_bad_overrides() {
         let a = args(&["serve-bench", "--items", "100", "bogus_key=1"]);
+        assert!(dispatch(&a).is_err());
+    }
+
+    #[test]
+    fn sim_fleet_converges_and_logs_are_deterministic() {
+        let dir = std::env::temp_dir().join("duddsketch_sim_cli_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let json = dir.join("rounds.json");
+        let trace_a = dir.join("trace_a.txt");
+        let trace_b = dir.join("trace_b.txt");
+        let run = |trace: &std::path::Path| {
+            let a = args(&[
+                "sim-fleet",
+                "--members",
+                "10",
+                "--rounds",
+                "14",
+                "--items",
+                "80",
+                "--alpha",
+                "0.01",
+                "--m",
+                "256",
+                "--seed",
+                "9",
+                "--json-log",
+                json.to_str().unwrap(),
+                "--trace",
+                trace.to_str().unwrap(),
+            ]);
+            dispatch(&a).unwrap()
+        };
+        let out = run(&trace_a);
+        assert!(out.contains("OK: converged from round"), "{out}");
+        assert!(out.contains("O(log n) reference"), "{out}");
+        let log = std::fs::read_to_string(&json).unwrap();
+        assert!(log.contains("\"summary\""), "{log}");
+        run(&trace_b);
+        let a = std::fs::read(&trace_a).unwrap();
+        let b = std::fs::read(&trace_b).unwrap();
+        assert!(!a.is_empty());
+        assert_eq!(a, b, "same seed must produce a byte-identical trace");
+    }
+
+    #[test]
+    fn sim_fleet_rejects_bad_inputs() {
+        let a = args(&["sim-fleet", "--scenario", "no-such-scenario"]);
+        assert!(dispatch(&a).is_err());
+        let a = args(&["sim-fleet", "--members", "1"]);
+        assert!(dispatch(&a).is_err());
+        let a = args(&["sim-fleet", "--rounds", "0"]);
         assert!(dispatch(&a).is_err());
     }
 

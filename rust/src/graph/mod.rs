@@ -448,6 +448,97 @@ mod tests {
         assert_eq!(g2.neighbours(0), &[1]);
     }
 
+    /// Sorted adjacency lists — a structural fingerprint two graphs can
+    /// be compared by (the `Graph` type deliberately has no `PartialEq`).
+    fn fingerprint(g: &Graph) -> Vec<Vec<usize>> {
+        (0..g.len())
+            .map(|v| {
+                let mut ns = g.neighbours(v).to_vec();
+                ns.sort_unstable();
+                ns
+            })
+            .collect()
+    }
+
+    #[test]
+    fn from_kind_is_deterministic_per_seed() {
+        use crate::config::GraphKind;
+        for kind in [GraphKind::BarabasiAlbert, GraphKind::ErdosRenyi] {
+            let a = from_kind(kind, 400, &mut default_rng(41));
+            let b = from_kind(kind, 400, &mut default_rng(41));
+            assert_eq!(
+                fingerprint(&a),
+                fingerprint(&b),
+                "{kind:?}: the same seed must rebuild the identical overlay"
+            );
+            let c = from_kind(kind, 400, &mut default_rng(42));
+            assert_ne!(
+                fingerprint(&a),
+                fingerprint(&c),
+                "{kind:?}: a different seed must produce a different overlay"
+            );
+        }
+    }
+
+    #[test]
+    fn from_kind_ba_connectivity_and_degree_bounds() {
+        use crate::config::GraphKind;
+        let n = 300;
+        for seed in [1u64, 9, 77] {
+            let g = from_kind(GraphKind::BarabasiAlbert, n, &mut default_rng(seed));
+            assert_eq!(g.len(), n);
+            // Connected by construction: the clique seed plus m edges
+            // from every later vertex into the existing component.
+            assert!(g.is_connected(), "seed {seed}");
+            // Exact edge count: C(6,2) clique + 5 per attached vertex.
+            assert_eq!(g.edge_count(), 15 + (n - 6) * 5, "seed {seed}");
+            for v in 0..n {
+                let d = g.degree(v);
+                assert!(
+                    (5..n).contains(&d),
+                    "seed {seed} v={v}: degree {d} outside [m, n)"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn from_kind_er_density_and_giant_component() {
+        use crate::config::GraphKind;
+        let n = 600;
+        for seed in [1u64, 9, 77] {
+            let g = from_kind(GraphKind::ErdosRenyi, n, &mut default_rng(seed));
+            assert_eq!(g.len(), n);
+            // Edge count near the paper's p = 10/n expectation,
+            // E[|E|] = p·C(n,2) = 5(n−1).
+            let expected = 5.0 * (n as f64 - 1.0);
+            let got = g.edge_count() as f64;
+            assert!(
+                (got - expected).abs() < 0.2 * expected,
+                "seed {seed}: {got} edges vs expected {expected}"
+            );
+            // Simple-graph degree bound.
+            for v in 0..n {
+                assert!(g.degree(v) < n, "seed {seed} v={v}");
+            }
+            // At mean degree 10 ≫ ln n the giant component takes
+            // essentially every vertex; a handful of stragglers is the
+            // most randomness can leave behind, so the bound is loose
+            // enough to hold for every seed.
+            let labels = g.components();
+            let mut counts = std::collections::BTreeMap::new();
+            for l in labels {
+                *counts.entry(l).or_insert(0usize) += 1;
+            }
+            let giant = counts.values().copied().max().unwrap();
+            assert!(
+                giant * 100 >= n * 99,
+                "seed {seed}: giant component {giant}/{n}"
+            );
+            assert!(counts.len() <= 4, "seed {seed}: {} components", counts.len());
+        }
+    }
+
     #[test]
     #[should_panic]
     fn complete_rejects_singleton() {

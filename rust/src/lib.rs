@@ -31,6 +31,11 @@
 //!   the transport layer ([`service::transport`]) that lets real nodes
 //!   join that fleet over TCP — construction via the fluent
 //!   [`service::Node::builder`].
+//! * [`sim`] — deterministic discrete-event simulation: whole fleets
+//!   (1000+ members) in one process on a virtual clock, the production
+//!   gossip loop and membership plane running unmodified over simulated
+//!   links with injectable faults (drops, delays, partitions, churn
+//!   schedules); same seed ⇒ byte-identical event trace.
 //! * [`runtime`] — PJRT execution of AOT-compiled JAX/Pallas artifacts; the
 //!   dense averaging round can run through XLA (`gossip::PjrtExecutor`),
 //!   gated behind the `pjrt` cargo feature.
@@ -87,6 +92,7 @@ pub mod obs;
 pub mod rng;
 pub mod runtime;
 pub mod service;
+pub mod sim;
 pub mod sketch;
 pub mod util;
 

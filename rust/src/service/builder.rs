@@ -587,7 +587,7 @@ impl NodeBuilder {
         )?);
         let gossip = GossipLoop::start_membership_obs(
             cfg.gossip.clone(),
-            service.clone(),
+            GossipMember::Service(service.clone()),
             transport,
             Arc::new(membership),
             generation,

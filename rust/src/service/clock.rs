@@ -1,0 +1,111 @@
+//! Time source injection for the membership plane's suspicion, backoff,
+//! and tombstone clocks.
+//!
+//! Production nodes read the monotonic wall clock ([`SystemClock`], the
+//! default everywhere). The discrete-event simulator
+//! ([`sim`](crate::sim)) swaps in a [`VirtualClock`] shared by every
+//! simulated node and advanced explicitly between rounds, which makes
+//! every time-based membership transition (alive → suspect → dead,
+//! backoff gating, tombstone GC) a *deterministic* function of the
+//! scenario instead of a race against the test host's scheduler.
+//!
+//! The abstraction deliberately stays on [`Instant`]: a virtual instant
+//! is a fixed base instant plus an explicitly-advanced offset, so all
+//! existing `Instant + Duration` / `duration_since` arithmetic in the
+//! membership plane works unchanged.
+
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// A monotonic time source the membership plane reads instead of calling
+/// [`Instant::now`] directly.
+pub trait Clock: Send + Sync + std::fmt::Debug {
+    /// The current instant of this time source.
+    fn now(&self) -> Instant;
+}
+
+/// The production clock: [`Instant::now`].
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SystemClock;
+
+impl Clock for SystemClock {
+    fn now(&self) -> Instant {
+        Instant::now()
+    }
+}
+
+/// A simulated clock: a fixed base instant plus an offset that advances
+/// only when [`VirtualClock::advance`] is called. Shared (via `Arc`)
+/// across every node of a simulated fleet so they observe one timeline.
+///
+/// ```
+/// use duddsketch::service::clock::{Clock, VirtualClock};
+/// use std::time::Duration;
+///
+/// let clock = VirtualClock::new();
+/// let t0 = clock.now();
+/// clock.advance(Duration::from_millis(500));
+/// assert_eq!(clock.now().duration_since(t0), Duration::from_millis(500));
+/// assert_eq!(clock.elapsed(), Duration::from_millis(500));
+/// ```
+#[derive(Debug)]
+pub struct VirtualClock {
+    base: Instant,
+    offset: Mutex<Duration>,
+}
+
+impl VirtualClock {
+    /// A virtual clock starting at offset zero.
+    pub fn new() -> Self {
+        Self {
+            base: Instant::now(),
+            offset: Mutex::new(Duration::ZERO),
+        }
+    }
+
+    /// Advance virtual time by `d`.
+    pub fn advance(&self, d: Duration) {
+        let mut o = self.offset.lock().expect("virtual clock poisoned");
+        *o += d;
+    }
+
+    /// Virtual time elapsed since construction.
+    pub fn elapsed(&self) -> Duration {
+        *self.offset.lock().expect("virtual clock poisoned")
+    }
+}
+
+impl Default for VirtualClock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Clock for VirtualClock {
+    fn now(&self) -> Instant {
+        self.base + self.elapsed()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn system_clock_is_monotonic() {
+        let c = SystemClock;
+        let a = c.now();
+        let b = c.now();
+        assert!(b >= a);
+    }
+
+    #[test]
+    fn virtual_clock_only_moves_on_advance() {
+        let c = VirtualClock::new();
+        let a = c.now();
+        assert_eq!(c.now(), a, "virtual time must not flow on its own");
+        c.advance(Duration::from_secs(2));
+        c.advance(Duration::from_millis(250));
+        assert_eq!(c.now().duration_since(a), Duration::from_millis(2_250));
+    }
+}

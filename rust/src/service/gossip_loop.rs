@@ -78,7 +78,7 @@
 //! the reply reaches the wire and rolls back otherwise.
 
 use super::coordinator::QuantileService;
-use super::membership::{MemberTable, Membership};
+use super::membership::{MemberStatus, MemberTable, Membership};
 use super::swap::ArcSwapCell;
 use super::transport::{InProcessTransport, PoolStats, Transport, TransportError};
 use crate::config::GossipLoopConfig;
@@ -388,8 +388,23 @@ struct LoopCore {
     ctl: Mutex<Ctl>,
     /// Serializes whole rounds; serves never take it.
     round_gate: Mutex<()>,
+    /// Cached overlay graph over the live member view (membership nodes
+    /// with a non-complete `GraphKind`; `None` until first built or on
+    /// static fleets). Rebuilt whenever the non-dead id set changes.
+    overlay: Mutex<Option<OverlayCache>>,
     views: Vec<ArcSwapCell<GlobalView>>,
     stop: AtomicBool,
+}
+
+/// One overlay build over a concrete live member set: the sorted
+/// non-dead ids the graph was generated for, and the graph itself
+/// (vertex `i` ↔ `ids[i]`). Every node derives the same generator rng
+/// from `(cfg.seed, id set)`, so all nodes that agree on the view agree
+/// on the overlay — no coordination, same property the static fleet got
+/// from sharing one seed.
+struct OverlayCache {
+    ids: Vec<u64>,
+    graph: Graph,
 }
 
 /// Why an inbound exchange was refused (serve side of §7.2 — the
@@ -733,6 +748,7 @@ impl GossipLoop {
             slots: states.into_iter().map(Mutex::new).collect(),
             ctl: Mutex::new(ctl),
             round_gate: Mutex::new(()),
+            overlay: Mutex::new(None),
             views,
             stop: AtomicBool::new(false),
         });
@@ -775,7 +791,31 @@ impl GossipLoop {
     ) -> Result<Self> {
         Self::start_membership_obs(
             cfg,
-            service,
+            GossipMember::Service(service),
+            transport,
+            membership,
+            initial_generation,
+            NodeMetrics::standalone(),
+        )
+    }
+
+    /// [`GossipLoop::start_membership`] for an arbitrary **local**
+    /// member. A [`GossipMember::Static`] member here is a node whose
+    /// summary is a fixed pre-built sketch instead of a live ingest
+    /// service — the simulator's per-node shape, where a thousand
+    /// members in one process cannot each afford a shard/coordinator
+    /// thread pool. [`GossipMember::Remote`] is rejected (a membership
+    /// node's own member must live on the node).
+    pub fn start_membership_member(
+        cfg: GossipLoopConfig,
+        member: GossipMember,
+        transport: Arc<dyn Transport>,
+        membership: Arc<Membership>,
+        initial_generation: u64,
+    ) -> Result<Self> {
+        Self::start_membership_obs(
+            cfg,
+            member,
             transport,
             membership,
             initial_generation,
@@ -787,13 +827,16 @@ impl GossipLoop {
     /// builder path — see [`GossipLoop::start_with_obs`]).
     pub(crate) fn start_membership_obs(
         cfg: GossipLoopConfig,
-        service: Arc<QuantileService>,
+        member: GossipMember,
         transport: Arc<dyn Transport>,
         membership: Arc<Membership>,
         initial_generation: u64,
         obs: NodeMetrics,
     ) -> Result<Self> {
         cfg.validate().map_err(anyhow::Error::msg)?;
+        if !member.is_local() {
+            bail!("a membership node's own member must be local (service or static)");
+        }
         if !transport.supports_remote() {
             bail!(
                 "dynamic membership needs a remote-capable transport, got {}",
@@ -813,15 +856,29 @@ impl GossipLoop {
             ),
         }
         let self_id = membership.self_id();
-        let snap = service.snapshot();
-        let epoch = snap.epoch();
-        let mut state = PeerState::from_sketch(self_id as usize, snap.sketch());
+        let (mut state, epoch) = match &member {
+            GossipMember::Service(svc) => {
+                let snap = svc.snapshot();
+                (
+                    PeerState::from_sketch(self_id as usize, snap.sketch()),
+                    snap.epoch(),
+                )
+            }
+            GossipMember::Static(sketch) => {
+                (PeerState::from_sketch(self_id as usize, sketch), 0)
+            }
+            GossipMember::Remote(_) => unreachable!("checked local above"),
+        };
         state.q_tilde = if membership.is_distinguished() { 1.0 } else { 0.0 };
         let generation = initial_generation.max(1);
         let master = default_rng(cfg.seed);
         let interval_ms = cfg.round_interval_ms;
         let ctl = Ctl {
-            rng: master.derive(0x1005),
+            // Derived once more by the node's own id: a membership fleet
+            // shares `cfg.seed` (the overlay key), and without this every
+            // node would draw the *same* partner-index stream — correlated
+            // draws that visibly slow mixing at simulator scale.
+            rng: master.derive(0x1005).derive(self_id),
             online: vec![true],
             epochs: vec![epoch],
             round: 0,
@@ -843,14 +900,15 @@ impl GossipLoop {
         let core = Arc::new(LoopCore {
             fleet: Fleet {
                 cfg,
-                members: vec![GossipMember::Service(service)],
+                members: vec![member],
                 local: vec![true],
                 local_members: vec![0],
                 serve_member: 0,
                 probe_members: vec![0],
-                // Placeholder: dynamic partner selection never consults
-                // the overlay graph (the live view *is* the overlay —
-                // complete over the non-dead members).
+                // Placeholder: dynamic partner selection consults the
+                // *overlay cache* (rebuilt over the live member table),
+                // never this static graph. With `GraphKind::Complete`
+                // the live view itself is the overlay.
                 graph: crate::graph::complete(2),
                 transport: transport.clone(),
                 membership: Some(membership),
@@ -860,6 +918,7 @@ impl GossipLoop {
             slots: vec![Mutex::new(state)],
             ctl: Mutex::new(ctl),
             round_gate: Mutex::new(()),
+            overlay: Mutex::new(None),
             views,
             stop: AtomicBool::new(false),
         });
@@ -1067,7 +1126,17 @@ impl LoopCore {
                     };
                 }
                 GossipMember::Static(sketch) => {
-                    *guards[k] = PeerState::from_sketch(i, sketch);
+                    *guards[k] = match &self.fleet.membership {
+                        // Same dynamic identity rules as the Service arm
+                        // (the simulator's nodes are Static members).
+                        Some(m) => {
+                            let mut st =
+                                PeerState::from_sketch(m.self_id() as usize, sketch);
+                            st.q_tilde = if m.is_distinguished() { 1.0 } else { 0.0 };
+                            st
+                        }
+                        None => PeerState::from_sketch(i, sketch),
+                    };
                 }
                 GossipMember::Remote(_) => {
                     unreachable!("local_members holds only local indices")
@@ -1257,12 +1326,83 @@ impl LoopCore {
         }
     }
 
+    /// Restrict a dynamic round's partner candidates to this node's
+    /// neighbours in the configured overlay topology, rebuilt over the
+    /// **live member view**. With `GraphKind::Complete` (the default)
+    /// this is a pass-through — the live view is the overlay. For
+    /// BA/ER/WS/Ring the overlay vertices are the non-dead member ids in
+    /// ascending order, and the generator rng is derived from
+    /// `(cfg.seed, id set)`, so every node that agrees on the view
+    /// builds the identical graph with zero coordination. The build is
+    /// cached until the non-dead id set changes (churn). Views too small
+    /// for the generator's minimum size — and views that do not contain
+    /// this node yet — fall back to the complete view rather than
+    /// stalling the round.
+    fn overlay_restrict(
+        &self,
+        m: &Membership,
+        candidates: Vec<(u64, SocketAddr)>,
+    ) -> Vec<(u64, SocketAddr)> {
+        use crate::config::GraphKind;
+        let kind = self.fleet.cfg.graph;
+        if matches!(kind, GraphKind::Complete) {
+            return candidates;
+        }
+        let table = m.table();
+        let ids: Vec<u64> = table
+            .iter()
+            .filter(|e| e.status != MemberStatus::Dead)
+            .map(|e| e.id)
+            .collect();
+        // Generator minimum sizes (`graph::from_kind` asserts them):
+        // BA needs n > m = 5, WS/Ring need n ≥ 2k + 1 = 11.
+        let min = match kind {
+            GraphKind::Complete => 2,
+            GraphKind::BarabasiAlbert => 6,
+            GraphKind::ErdosRenyi => 2,
+            GraphKind::WattsStrogatz | GraphKind::Ring => 11,
+        };
+        if ids.len() < min {
+            return candidates;
+        }
+        let Ok(self_pos) = ids.binary_search(&m.self_id()) else {
+            return candidates;
+        };
+        let mut overlay = self.overlay.lock().expect("overlay cache poisoned");
+        if overlay.as_ref().map_or(true, |c| c.ids != ids) {
+            // Key the generator stream by the id set: same view ⇒ same
+            // stream ⇒ same graph, on every node.
+            let mut fold: u64 = 0x9E37_79B9_7F4A_7C15;
+            for &id in &ids {
+                fold = fold.rotate_left(5).wrapping_mul(0x1000_0000_01B3) ^ id;
+            }
+            let mut grng = default_rng(self.fleet.cfg.seed).derive(0x6EA4).derive(fold);
+            let graph = crate::graph::from_kind(kind, ids.len(), &mut grng);
+            *overlay = Some(OverlayCache {
+                ids: ids.clone(),
+                graph,
+            });
+        }
+        let cache = overlay.as_ref().expect("cache built above");
+        let allowed: std::collections::HashSet<u64> = cache
+            .graph
+            .neighbours(self_pos)
+            .iter()
+            .map(|&v| cache.ids[v])
+            .collect();
+        candidates
+            .into_iter()
+            .filter(|(id, _)| allowed.contains(id))
+            .collect()
+    }
+
     /// One round over the **dynamic member set**: partners are drawn
     /// from the live view (alive members, plus backoff-elapsed probes of
-    /// suspects — dead members never burn a connect deadline again), the
-    /// exchange outcome feeds the suspicion clocks, and each contacted
-    /// partner also gets one membership anti-entropy push–pull on the
-    /// same pooled connection.
+    /// suspects — dead members never burn a connect deadline again, and
+    /// a non-complete `GraphKind` further restricts draws to overlay
+    /// neighbours), the exchange outcome feeds the suspicion clocks, and
+    /// each contacted partner also gets one membership anti-entropy
+    /// push–pull on the same pooled connection.
     fn exchange_round_dynamic(&self, m: &Arc<Membership>) {
         // A node whose id was claimed by another address (concurrent
         // joins through different seeds collided) must stop initiating:
@@ -1272,12 +1412,15 @@ impl LoopCore {
         if m.identity_lost() {
             return;
         }
-        let now = Instant::now();
+        // The membership's time source, not `Instant::now()`: under
+        // simulation this is the scenario's virtual clock, so suspicion
+        // and tombstone GC advance with virtual rounds.
+        let now = m.now();
         // Wall-clock sweep first: a suspect whose probes are
         // backoff-gated still turns dead on schedule.
         m.tick(now);
         m.gc(now);
-        let candidates = m.eligible_partners(now);
+        let candidates = self.overlay_restrict(m, m.eligible_partners(now));
         let plan: Vec<(u64, SocketAddr)> = {
             // The engine's partial-Fisher–Yates draw over the
             // deterministically ordered candidate list.

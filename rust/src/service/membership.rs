@@ -89,6 +89,7 @@
 //!
 //! [`TcpTransport`]: super::TcpTransport
 
+use super::clock::{Clock, SystemClock};
 use crate::config::GossipLoopConfig;
 use crate::obs::{MembershipMetrics, ObsSlot};
 use std::collections::{BTreeMap, HashMap};
@@ -528,6 +529,10 @@ pub struct Membership {
     self_addr: SocketAddr,
     cfg: MembershipConfig,
     inner: Mutex<Inner>,
+    /// The time source behind the suspicion/backoff/tombstone clocks:
+    /// [`SystemClock`] in production, a shared
+    /// [`VirtualClock`](super::clock::VirtualClock) under simulation.
+    clock: Arc<dyn Clock>,
     /// Observability handles, installed once by the owning gossip loop
     /// at start; every mutation path mirrors its outcome here. Empty on
     /// a standalone `Membership` (unit tests, direct construction).
@@ -537,6 +542,16 @@ pub struct Membership {
 impl Membership {
     /// Found a new fleet: this node is the bootstrap seed, member id 0.
     pub fn bootstrap(self_addr: SocketAddr, cfg: MembershipConfig) -> Self {
+        Self::bootstrap_with_clock(self_addr, cfg, Arc::new(SystemClock))
+    }
+
+    /// [`Membership::bootstrap`] on an explicit time source — the
+    /// simulator injects a shared virtual clock here.
+    pub fn bootstrap_with_clock(
+        self_addr: SocketAddr,
+        cfg: MembershipConfig,
+        clock: Arc<dyn Clock>,
+    ) -> Self {
         let mut table = MemberTable::new();
         table.upsert(MemberEntry::alive(0, self_addr));
         Self {
@@ -551,6 +566,7 @@ impl Membership {
                 view_dirty: false,
                 identity_lost: false,
             }),
+            clock,
             metrics: ObsSlot::new(),
         }
     }
@@ -561,6 +577,17 @@ impl Membership {
         table: MemberTable,
         self_addr: SocketAddr,
         cfg: MembershipConfig,
+    ) -> crate::Result<Self> {
+        Self::from_join_with_clock(table, self_addr, cfg, Arc::new(SystemClock))
+    }
+
+    /// [`Membership::from_join`] on an explicit time source — the
+    /// simulator injects a shared virtual clock here.
+    pub fn from_join_with_clock(
+        table: MemberTable,
+        self_addr: SocketAddr,
+        cfg: MembershipConfig,
+        clock: Arc<dyn Clock>,
     ) -> crate::Result<Self> {
         let me = table.by_addr(self_addr).ok_or_else(|| {
             anyhow::anyhow!(
@@ -580,8 +607,17 @@ impl Membership {
                 view_dirty: false,
                 identity_lost: false,
             }),
+            clock,
             metrics: ObsSlot::new(),
         })
+    }
+
+    /// The current instant of this node's time source (wall clock in
+    /// production, the scenario clock under simulation). The gossip
+    /// loop reads every round's `now` through this so suspicion and GC
+    /// follow the injected timeline.
+    pub fn now(&self) -> Instant {
+        self.clock.now()
     }
 
     /// Install the membership-plane metric handles. The gossip loop
@@ -689,7 +725,7 @@ impl Membership {
             }
         }
         // Merged-in deaths start their tombstone clock now, locally.
-        let now = Instant::now();
+        let now = self.clock.now();
         let dead: Vec<u64> = inner
             .table
             .iter()
@@ -758,7 +794,7 @@ impl Membership {
     /// exponential backoff, and applies the time-based status
     /// transitions (alive → suspect → dead).
     pub fn record_failure(&self, id: u64) -> MergeOutcome {
-        let now = Instant::now();
+        let now = self.clock.now();
         let mut inner = self.lock();
         let cfg = &self.cfg;
         {

@@ -72,6 +72,7 @@
 //! workloads through a service (or a loopback-TCP fleet) end to end.
 
 mod builder;
+pub mod clock;
 mod coordinator;
 mod gossip_loop;
 pub mod membership;
@@ -83,6 +84,7 @@ pub mod transport;
 mod window;
 
 pub use builder::{Node, NodeBuilder};
+pub use clock::{Clock, SystemClock, VirtualClock};
 pub use coordinator::{QuantileService, ServiceWriter};
 pub use gossip_loop::{
     GlobalView, GossipLoop, GossipMember, GossipRoundReport, MembershipRoundStats, NodeHandle,

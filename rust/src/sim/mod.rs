@@ -1,0 +1,40 @@
+//! Deterministic discrete-event simulation of whole gossip fleets in
+//! one process (`docs/SIMULATION.md`).
+//!
+//! The point of this module is that **nothing under test is
+//! simulated**: the production [`GossipLoop`], membership plane, and
+//! wire codec run unmodified. Only the two ambient dependencies are
+//! swapped for deterministic doubles:
+//!
+//! * **time** — every node's [`Membership`] reads a shared
+//!   [`VirtualClock`] that advances only when the fleet says so;
+//! * **the network** — [`SimTransport`] implements the [`Transport`]
+//!   trait over a [`SimNet`], which owns the fault state: per-link
+//!   drop probabilities, delay distributions checked against a
+//!   deadline, crashes, and (asymmetric, directed) partitions.
+//!
+//! A [`Scenario`] describes a run — fleet size, overlay topology,
+//! workload, fault knobs, and scheduled events (joins, crash waves,
+//! partitions that heal, flapping links, churn-model schedules). A
+//! [`SimFleet`] executes it round by round, steps every alive node in
+//! sorted id order from a single thread, and checks the fleet's union
+//! estimate against the exact oracle each virtual round. Because the
+//! stepping order, rng draws, clock, and every iterated collection are
+//! deterministic, the same `(scenario, seed)` pair produces a
+//! **byte-identical event trace** — the property the `sim-fleet` CI
+//! lane asserts by diffing two runs.
+//!
+//! [`GossipLoop`]: crate::service::GossipLoop
+//! [`Membership`]: crate::service::Membership
+//! [`VirtualClock`]: crate::service::VirtualClock
+//! [`Transport`]: crate::service::Transport
+
+mod fleet;
+mod net;
+mod scenario;
+mod transport;
+
+pub use fleet::{RoundLog, SimFleet, SimReport};
+pub use net::{sim_addr, FaultConfig, NetStats, SimNet};
+pub use scenario::{EventAction, Scenario, ScheduledEvent};
+pub use transport::SimTransport;

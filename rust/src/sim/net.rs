@@ -1,0 +1,358 @@
+//! The simulated network: a registry of in-process nodes addressed by
+//! synthetic socket addresses, plus the fault state every conversation
+//! is checked against.
+//!
+//! One [`SimNet`] is shared (`Arc`) by every [`SimTransport`] of a
+//! fleet. All state sits behind one mutex and the fleet steps nodes
+//! one at a time from a single thread, so the fault rng draws in a
+//! deterministic order — the root of the same-seed ⇒ byte-identical
+//! trace guarantee. Collections are `BTreeMap`/`BTreeSet`, never hash
+//! maps, so no iteration ever depends on hasher state.
+//!
+//! [`SimTransport`]: super::SimTransport
+
+use crate::rng::{default_rng, Rng, Xoshiro256pp};
+use crate::service::clock::VirtualClock;
+use crate::service::transport::TransportError;
+use crate::service::NodeHandle;
+use std::collections::{BTreeMap, BTreeSet};
+use std::net::SocketAddr;
+use std::sync::{Arc, Mutex, MutexGuard};
+
+/// Link-fault knobs of a simulated network — the fault vocabulary of
+/// `docs/SIMULATION.md`. All probabilities are per *conversation* (one
+/// framed push–pull), not per byte.
+#[derive(Debug, Clone, Copy)]
+pub struct FaultConfig {
+    /// Probability the push frame is lost in flight: the partner never
+    /// serves, the initiator times out (`TransportError::Io`).
+    pub drop_prob: f64,
+    /// Probability the reply frame is lost *after* the partner served:
+    /// the serve side rolls back (§7.2 cancelled exchange) and the
+    /// initiator times out — the Two-Generals-shaped failure mode the
+    /// protocol's rollback contract exists for.
+    pub reply_drop_prob: f64,
+    /// Base one-way link delay, virtual milliseconds.
+    pub delay_base_ms: f64,
+    /// Uniform jitter added on top of the base delay, per leg.
+    pub delay_jitter_ms: f64,
+    /// Per-conversation deadline, virtual milliseconds: a sampled
+    /// round-trip (push leg + reply leg) above it times the exchange
+    /// out exactly like `gossip_exchange_deadline_ms` does over TCP.
+    /// `0` disables the deadline.
+    pub deadline_ms: f64,
+}
+
+impl Default for FaultConfig {
+    fn default() -> Self {
+        Self {
+            drop_prob: 0.0,
+            reply_drop_prob: 0.0,
+            delay_base_ms: 0.0,
+            delay_jitter_ms: 0.0,
+            deadline_ms: 200.0,
+        }
+    }
+}
+
+/// How the fault state disposed of one conversation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum LinkOutcome {
+    /// Both legs survive: serve, then deliver the reply.
+    Delivered,
+    /// The push leg was lost (drop or push-leg delay past the
+    /// deadline): the partner never hears it.
+    PushLost,
+    /// The reply leg was lost (drop or round-trip past the deadline):
+    /// the partner served but must roll back.
+    ReplyLost,
+}
+
+/// Cumulative conversation counters (all frame kinds).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct NetStats {
+    /// Conversations fully delivered.
+    pub delivered: u64,
+    /// Conversations whose push leg was lost.
+    pub push_lost: u64,
+    /// Conversations whose reply leg was lost (serve side rolled back).
+    pub reply_lost: u64,
+    /// Connect attempts refused (crashed / partitioned / unregistered).
+    pub refused: u64,
+    /// Wire bytes moved by delivered frames (length prefix included,
+    /// matching the TCP transport's accounting).
+    pub bytes: u64,
+}
+
+struct NetInner {
+    nodes: BTreeMap<SocketAddr, NodeHandle>,
+    crashed: BTreeSet<SocketAddr>,
+    /// Directed blocked links `(src, dst)` — an asymmetric partition is
+    /// one direction only.
+    blocked: BTreeSet<(SocketAddr, SocketAddr)>,
+    faults: FaultConfig,
+    rng: Xoshiro256pp,
+    round: u64,
+    trace: Vec<String>,
+    stats: NetStats,
+}
+
+/// The shared simulated network of one fleet: node registry, fault
+/// state, virtual clock, and the deterministic event trace.
+pub struct SimNet {
+    clock: Arc<VirtualClock>,
+    inner: Mutex<NetInner>,
+}
+
+impl std::fmt::Debug for SimNet {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let inner = self.lock();
+        write!(
+            f,
+            "SimNet(nodes={}, crashed={}, blocked_links={}, round={})",
+            inner.nodes.len(),
+            inner.crashed.len(),
+            inner.blocked.len(),
+            inner.round
+        )
+    }
+}
+
+impl SimNet {
+    /// A fresh network: fault rng derived from `seed`, virtual clock at
+    /// zero, no nodes, no faults active beyond `faults`' probabilities.
+    pub fn new(seed: u64, faults: FaultConfig) -> Arc<Self> {
+        Arc::new(Self {
+            clock: Arc::new(VirtualClock::new()),
+            inner: Mutex::new(NetInner {
+                nodes: BTreeMap::new(),
+                crashed: BTreeSet::new(),
+                blocked: BTreeSet::new(),
+                faults,
+                rng: default_rng(seed).derive(0xFA17),
+                round: 0,
+                trace: Vec::new(),
+                stats: NetStats::default(),
+            }),
+        })
+    }
+
+    /// The fleet-wide virtual clock (share it with every node's
+    /// [`Membership`](crate::service::Membership)).
+    pub fn clock(&self) -> Arc<VirtualClock> {
+        self.clock.clone()
+    }
+
+    fn lock(&self) -> MutexGuard<'_, NetInner> {
+        self.inner.lock().expect("sim net poisoned")
+    }
+
+    /// Register (or replace, on rejoin) the serve handle behind `addr`.
+    pub(crate) fn register(&self, addr: SocketAddr, node: NodeHandle) {
+        self.lock().nodes.insert(addr, node);
+    }
+
+    /// Mark `addr` crashed: unreachable in both directions until
+    /// [`SimNet::recover`]. The node object itself is untouched — the
+    /// fleet just stops stepping it.
+    pub fn crash(&self, addr: SocketAddr) {
+        self.lock().crashed.insert(addr);
+    }
+
+    /// Clear `addr`'s crashed flag (fail-recover rejoin).
+    pub fn recover(&self, addr: SocketAddr) {
+        self.lock().crashed.remove(&addr);
+    }
+
+    /// Block the directed link `src → dst` (asymmetric partition half).
+    pub fn block(&self, src: SocketAddr, dst: SocketAddr) {
+        self.lock().blocked.insert((src, dst));
+    }
+
+    /// Unblock the directed link `src → dst`.
+    pub fn unblock(&self, src: SocketAddr, dst: SocketAddr) {
+        self.lock().blocked.remove(&(src, dst));
+    }
+
+    /// Current virtual round (set by the driving fleet; trace prefix).
+    pub fn set_round(&self, round: u64) {
+        self.lock().round = round;
+    }
+
+    /// Append a fleet-level line to the event trace, prefixed like the
+    /// network's own entries (`r=<round> t=<virtual ms>`).
+    pub fn trace_event(&self, line: &str) {
+        let t = self.clock.elapsed().as_millis();
+        let mut inner = self.lock();
+        let r = inner.round;
+        inner.trace.push(format!("r={r} t={t}ms {line}"));
+    }
+
+    /// Drain the accumulated event trace.
+    pub fn take_trace(&self) -> Vec<String> {
+        std::mem::take(&mut self.lock().trace)
+    }
+
+    /// Cumulative conversation counters.
+    pub fn stats(&self) -> NetStats {
+        self.lock().stats
+    }
+
+    fn push_trace(inner: &mut NetInner, t_ms: u128, line: String) {
+        let r = inner.round;
+        inner.trace.push(format!("r={r} t={t_ms}ms {line}"));
+    }
+
+    /// The connect phase: can `src` reach `dst` right now? Checks the
+    /// registry, both crash flags, and the directed partition state
+    /// (a TCP connect needs both directions, so either blocked half
+    /// refuses it). Returns the serve handle on success.
+    pub(crate) fn connect(
+        &self,
+        src: SocketAddr,
+        dst: SocketAddr,
+    ) -> Result<NodeHandle, TransportError> {
+        let t = self.clock.elapsed().as_millis();
+        let mut inner = self.lock();
+        let why = if inner.crashed.contains(&src) {
+            Some("self-crashed")
+        } else if inner.crashed.contains(&dst) {
+            Some("peer-crashed")
+        } else if inner.blocked.contains(&(src, dst)) || inner.blocked.contains(&(dst, src)) {
+            Some("partitioned")
+        } else if !inner.nodes.contains_key(&dst) {
+            Some("unregistered")
+        } else {
+            None
+        };
+        if let Some(why) = why {
+            inner.stats.refused += 1;
+            Self::push_trace(&mut inner, t, format!("connect {src}->{dst} refused={why}"));
+            return Err(TransportError::Io(format!(
+                "sim connect {src} -> {dst} refused ({why})"
+            )));
+        }
+        Ok(inner.nodes.get(&dst).expect("checked above").clone())
+    }
+
+    /// Sample one conversation's fate: drop draws and the two delay
+    /// legs against the deadline. Exactly four rng draws per call, so
+    /// the stream stays aligned whatever the outcome.
+    pub(crate) fn sample_link(&self, kind: &str, src: SocketAddr, dst: SocketAddr) -> LinkOutcome {
+        let t = self.clock.elapsed().as_millis();
+        let mut inner = self.lock();
+        let f = inner.faults;
+        let push_dropped = inner.rng.chance(f.drop_prob);
+        let reply_dropped = inner.rng.chance(f.reply_drop_prob);
+        let push_delay = f.delay_base_ms + inner.rng.next_f64() * f.delay_jitter_ms;
+        let reply_delay = f.delay_base_ms + inner.rng.next_f64() * f.delay_jitter_ms;
+        let deadline = if f.deadline_ms > 0.0 {
+            f.deadline_ms
+        } else {
+            f64::INFINITY
+        };
+        let outcome = if push_dropped || push_delay > deadline {
+            LinkOutcome::PushLost
+        } else if reply_dropped || push_delay + reply_delay > deadline {
+            LinkOutcome::ReplyLost
+        } else {
+            LinkOutcome::Delivered
+        };
+        match outcome {
+            LinkOutcome::PushLost => {
+                inner.stats.push_lost += 1;
+                Self::push_trace(&mut inner, t, format!("{kind} {src}->{dst} lost=push"));
+            }
+            LinkOutcome::ReplyLost => {
+                inner.stats.reply_lost += 1;
+                Self::push_trace(&mut inner, t, format!("{kind} {src}->{dst} lost=reply"));
+            }
+            LinkOutcome::Delivered => {}
+        }
+        outcome
+    }
+
+    /// Book a fully delivered conversation: bytes on the wire and one
+    /// trace line.
+    pub(crate) fn book_delivered(
+        &self,
+        kind: &str,
+        src: SocketAddr,
+        dst: SocketAddr,
+        bytes: usize,
+        detail: &str,
+    ) {
+        let t = self.clock.elapsed().as_millis();
+        let mut inner = self.lock();
+        inner.stats.delivered += 1;
+        inner.stats.bytes += bytes as u64;
+        let sep = if detail.is_empty() { "" } else { " " };
+        Self::push_trace(
+            &mut inner,
+            t,
+            format!("{kind} {src}->{dst} ok bytes={bytes}{sep}{detail}"),
+        );
+    }
+}
+
+/// Synthetic, deterministic listen address for simulated member `id`:
+/// `10.x.y.z:7000` with the id packed into the lower three octets
+/// (unique up to 2²⁴ members, far past any simulation size).
+pub fn sim_addr(id: u64) -> SocketAddr {
+    SocketAddr::from((
+        [
+            10,
+            ((id >> 16) & 0xFF) as u8,
+            ((id >> 8) & 0xFF) as u8,
+            (id & 0xFF) as u8,
+        ],
+        7000,
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sim_addrs_are_unique_and_deterministic() {
+        let mut seen = std::collections::BTreeSet::new();
+        for id in 0..2000 {
+            assert_eq!(sim_addr(id), sim_addr(id));
+            assert!(seen.insert(sim_addr(id)), "collision at id {id}");
+        }
+    }
+
+    #[test]
+    fn link_sampling_is_deterministic_per_seed() {
+        let run = || {
+            let net = SimNet::new(
+                7,
+                FaultConfig {
+                    drop_prob: 0.3,
+                    reply_drop_prob: 0.3,
+                    delay_base_ms: 10.0,
+                    delay_jitter_ms: 50.0,
+                    deadline_ms: 60.0,
+                },
+            );
+            (0..200)
+                .map(|i| net.sample_link("x", sim_addr(i), sim_addr(i + 1)) as u8)
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn partition_refuses_both_directions_until_unblocked() {
+        let net = SimNet::new(1, FaultConfig::default());
+        let (a, b) = (sim_addr(1), sim_addr(2));
+        net.block(a, b);
+        assert!(net.connect(a, b).is_err());
+        assert!(net.connect(b, a).is_err(), "TCP needs both directions");
+        net.unblock(a, b);
+        // Still unregistered, but no longer partitioned.
+        let err = format!("{}", net.connect(a, b).unwrap_err());
+        assert!(err.contains("unregistered"), "{err}");
+    }
+}

@@ -1,0 +1,467 @@
+//! Scenario descriptions: what a simulated fleet run looks like — size,
+//! topology, workload, fault knobs, and the scheduled membership / link
+//! events, all keyed off one seed.
+//!
+//! A scenario comes from one of three places:
+//!
+//! * a **built-in** by name ([`Scenario::builtin`] — `baseline`,
+//!   `churn-storm`, `lossy`, `partition`), used by CI;
+//! * a **scenario file** ([`Scenario::parse`] /
+//!   [`Scenario::from_file`]), the line-based format documented in
+//!   `docs/SIMULATION.md`;
+//! * programmatic construction (the integration tests build them
+//!   directly).
+//!
+//! [`ChurnKind::FailStop`] / the Yao fail-recover models additionally
+//! drive crashes and rejoins from [`ChurnModel`] schedules: the model's
+//! online mask is precomputed per round, and every `online → offline`
+//! transition becomes a crash event (plus a rejoin on the way back for
+//! the Yao variants) — §7.2's churn replayed against the production
+//! membership plane.
+//!
+//! [`ChurnModel`]: crate::churn::ChurnModel
+//! [`ChurnKind::FailStop`]: crate::churn::ChurnKind::FailStop
+
+use super::net::FaultConfig;
+use crate::churn::ChurnKind;
+use crate::config::GraphKind;
+use crate::data::DatasetKind;
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// One scheduled action at a given virtual round.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum EventAction {
+    /// `count` brand-new members join through live seeds.
+    Join(usize),
+    /// `count` currently-alive members crash (fail-stop until a
+    /// matching rejoin).
+    Crash(usize),
+    /// `count` previously crashed members recover and rejoin through
+    /// live seeds (same address ⇒ same id at the next incarnation).
+    Rejoin(usize),
+    /// Partition the fleet: the lowest `frac` fraction of alive members
+    /// is cut from the rest (both directions) until [`EventAction::Heal`].
+    Partition(f64),
+    /// Heal the active partition.
+    Heal,
+    /// Start flapping the partition boundary: the same `frac` cut
+    /// toggles blocked/unblocked every `period` rounds until
+    /// [`EventAction::Unflap`].
+    Flap(f64, u64),
+    /// Stop flapping (links settle unblocked).
+    Unflap,
+}
+
+/// An [`EventAction`] pinned to the virtual round it fires at (applied
+/// before that round's exchanges).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ScheduledEvent {
+    /// The 1-based round the action fires before.
+    pub round: u64,
+    /// What happens.
+    pub action: EventAction,
+}
+
+/// A full simulation scenario. Everything that shapes the run lives
+/// here except the seed (a CLI/test input, so one scenario replays
+/// under many seeds).
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    /// Scenario name (trace header, CI artifact names).
+    pub name: String,
+    /// Initial fleet size (bootstrap seed + joiners at round 0).
+    pub members: usize,
+    /// Virtual rounds to run.
+    pub rounds: u64,
+    /// Sketch α (also the convergence acceptance bound).
+    pub alpha: f64,
+    /// Sketch bucket budget.
+    pub max_buckets: usize,
+    /// Values per member's local dataset.
+    pub items_per_member: usize,
+    /// Exchange fan-out per round.
+    pub fan_out: usize,
+    /// Overlay topology rebuilt over the live view each churn step.
+    pub graph: GraphKind,
+    /// Workload each member draws its local dataset from.
+    pub dataset: DatasetKind,
+    /// Churn model whose schedule drives extra crashes/rejoins.
+    pub churn: ChurnKind,
+    /// Virtual milliseconds the clock advances per round.
+    pub round_ms: u64,
+    /// Membership suspicion interval (virtual ms).
+    pub suspect_after_ms: u64,
+    /// Membership tombstone TTL (virtual ms).
+    pub tombstone_ttl_ms: u64,
+    /// Link-fault knobs.
+    pub faults: FaultConfig,
+    /// Scheduled membership / link events, in firing order.
+    pub events: Vec<ScheduledEvent>,
+}
+
+impl Default for Scenario {
+    fn default() -> Self {
+        Self {
+            name: "baseline".into(),
+            members: 32,
+            rounds: 30,
+            alpha: 0.001,
+            max_buckets: 1024,
+            items_per_member: 500,
+            fan_out: 1,
+            graph: GraphKind::Complete,
+            dataset: DatasetKind::Uniform,
+            churn: ChurnKind::None,
+            round_ms: 500,
+            suspect_after_ms: 2_000,
+            tombstone_ttl_ms: 60_000,
+            faults: FaultConfig::default(),
+            events: Vec::new(),
+        }
+    }
+}
+
+impl Scenario {
+    /// The named built-in scenarios.
+    ///
+    /// * `baseline` — fault-free convergence reference.
+    /// * `churn-storm` — the CI acceptance scenario: joins, a crash
+    ///   wave, a partition that heals, lossy links, and rejoins, all
+    ///   mid-run.
+    /// * `lossy` — heavy frame loss + delay jitter, no membership
+    ///   events (exercises §7.2 cancelled exchanges at volume).
+    /// * `partition` — one long asymmetric-healing partition window.
+    pub fn builtin(name: &str) -> Result<Self> {
+        let mut s = Scenario::default();
+        match name {
+            "baseline" => {}
+            "churn-storm" => {
+                s.name = "churn-storm".into();
+                s.rounds = 80;
+                s.faults.drop_prob = 0.01;
+                s.faults.reply_drop_prob = 0.005;
+                s.events = vec![
+                    ScheduledEvent {
+                        round: 5,
+                        action: EventAction::Join(join_wave(s.members)),
+                    },
+                    ScheduledEvent {
+                        round: 12,
+                        action: EventAction::Crash(crash_wave(s.members)),
+                    },
+                    ScheduledEvent {
+                        round: 20,
+                        action: EventAction::Partition(0.25),
+                    },
+                    ScheduledEvent {
+                        round: 28,
+                        action: EventAction::Heal,
+                    },
+                    ScheduledEvent {
+                        round: 36,
+                        action: EventAction::Rejoin(crash_wave(s.members) / 2),
+                    },
+                ];
+            }
+            "lossy" => {
+                s.name = "lossy".into();
+                s.rounds = 50;
+                s.faults = FaultConfig {
+                    drop_prob: 0.10,
+                    reply_drop_prob: 0.05,
+                    delay_base_ms: 20.0,
+                    delay_jitter_ms: 60.0,
+                    deadline_ms: 120.0,
+                };
+            }
+            "partition" => {
+                s.name = "partition".into();
+                s.rounds = 60;
+                s.events = vec![
+                    ScheduledEvent {
+                        round: 10,
+                        action: EventAction::Partition(0.3),
+                    },
+                    ScheduledEvent {
+                        round: 30,
+                        action: EventAction::Heal,
+                    },
+                ];
+            }
+            other => bail!(
+                "unknown built-in scenario '{other}' \
+                 (expected baseline|churn-storm|lossy|partition)"
+            ),
+        }
+        Ok(s)
+    }
+
+    /// Parse the scenario-file format (see `docs/SIMULATION.md`): one
+    /// directive per line, `#` comments, `at <round> <action> [args]`
+    /// for events.
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut s = Scenario::default();
+        s.name = "file".into();
+        for (ln, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let ctx = || format!("scenario line {}: '{}'", ln + 1, raw.trim());
+            let mut it = line.split_whitespace();
+            let key = it.next().expect("non-empty line");
+            let rest: Vec<&str> = it.collect();
+            let one = |rest: &[&str]| -> Result<String> {
+                match rest {
+                    [v] => Ok((*v).to_string()),
+                    _ => bail!("expected exactly one value"),
+                }
+            };
+            match key {
+                "name" => s.name = one(&rest).with_context(ctx)?,
+                "members" => s.members = one(&rest).with_context(ctx)?.parse().with_context(ctx)?,
+                "rounds" => s.rounds = one(&rest).with_context(ctx)?.parse().with_context(ctx)?,
+                "alpha" => s.alpha = one(&rest).with_context(ctx)?.parse().with_context(ctx)?,
+                "max-buckets" => {
+                    s.max_buckets = one(&rest).with_context(ctx)?.parse().with_context(ctx)?
+                }
+                "items" => {
+                    s.items_per_member =
+                        one(&rest).with_context(ctx)?.parse().with_context(ctx)?
+                }
+                "fan-out" => {
+                    s.fan_out = one(&rest).with_context(ctx)?.parse().with_context(ctx)?
+                }
+                "graph" => {
+                    s.graph = one(&rest)
+                        .with_context(ctx)?
+                        .parse()
+                        .map_err(anyhow::Error::msg)
+                        .with_context(ctx)?
+                }
+                "dataset" => {
+                    s.dataset = one(&rest)
+                        .with_context(ctx)?
+                        .parse()
+                        .map_err(anyhow::Error::msg)
+                        .with_context(ctx)?
+                }
+                "churn" => {
+                    s.churn = one(&rest)
+                        .with_context(ctx)?
+                        .parse()
+                        .map_err(anyhow::Error::msg)
+                        .with_context(ctx)?
+                }
+                "round-ms" => {
+                    s.round_ms = one(&rest).with_context(ctx)?.parse().with_context(ctx)?
+                }
+                "suspect-after-ms" => {
+                    s.suspect_after_ms =
+                        one(&rest).with_context(ctx)?.parse().with_context(ctx)?
+                }
+                "tombstone-ttl-ms" => {
+                    s.tombstone_ttl_ms =
+                        one(&rest).with_context(ctx)?.parse().with_context(ctx)?
+                }
+                "drop-prob" => {
+                    s.faults.drop_prob =
+                        one(&rest).with_context(ctx)?.parse().with_context(ctx)?
+                }
+                "reply-drop-prob" => {
+                    s.faults.reply_drop_prob =
+                        one(&rest).with_context(ctx)?.parse().with_context(ctx)?
+                }
+                "delay-base-ms" => {
+                    s.faults.delay_base_ms =
+                        one(&rest).with_context(ctx)?.parse().with_context(ctx)?
+                }
+                "delay-jitter-ms" => {
+                    s.faults.delay_jitter_ms =
+                        one(&rest).with_context(ctx)?.parse().with_context(ctx)?
+                }
+                "deadline-ms" => {
+                    s.faults.deadline_ms =
+                        one(&rest).with_context(ctx)?.parse().with_context(ctx)?
+                }
+                "at" => {
+                    let ev = Self::parse_event(&rest).with_context(ctx)?;
+                    s.events.push(ev);
+                }
+                other => bail!("{}: unknown directive '{other}'", ctx()),
+            }
+        }
+        s.events.sort_by_key(|e| e.round);
+        Ok(s)
+    }
+
+    /// [`Scenario::parse`] over a file's contents.
+    pub fn from_file(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading scenario file {}", path.display()))?;
+        let mut s = Self::parse(&text)?;
+        if s.name == "file" {
+            if let Some(stem) = path.file_stem().and_then(|s| s.to_str()) {
+                s.name = stem.to_string();
+            }
+        }
+        Ok(s)
+    }
+
+    fn parse_event(rest: &[&str]) -> Result<ScheduledEvent> {
+        let [round, action, args @ ..] = rest else {
+            bail!("expected 'at <round> <action> [args]'");
+        };
+        let round: u64 = round.parse().context("event round")?;
+        let action = match (*action, args) {
+            ("join", [n]) => EventAction::Join(n.parse().context("join count")?),
+            ("crash", [n]) => EventAction::Crash(n.parse().context("crash count")?),
+            ("rejoin", [n]) => EventAction::Rejoin(n.parse().context("rejoin count")?),
+            ("partition", [f]) => {
+                EventAction::Partition(f.parse().context("partition fraction")?)
+            }
+            ("heal", []) => EventAction::Heal,
+            ("flap", [f, p]) => EventAction::Flap(
+                f.parse().context("flap fraction")?,
+                p.parse().context("flap period")?,
+            ),
+            ("unflap", []) => EventAction::Unflap,
+            (other, _) => bail!(
+                "unknown event '{other}' (expected \
+                 join|crash|rejoin|partition|heal|flap|unflap, with its args)"
+            ),
+        };
+        Ok(ScheduledEvent { round, action })
+    }
+
+    /// Basic sanity checks before a run (sizes, probabilities, event
+    /// rounds inside the run).
+    pub fn validate(&self) -> Result<()> {
+        if self.members < 2 {
+            bail!("scenario needs at least 2 members, got {}", self.members);
+        }
+        if self.rounds == 0 {
+            bail!("scenario needs at least 1 round");
+        }
+        if !(self.alpha > 0.0 && self.alpha < 1.0) {
+            bail!("alpha must be in (0, 1), got {}", self.alpha);
+        }
+        if self.fan_out == 0 {
+            bail!("fan-out must be >= 1");
+        }
+        if self.round_ms == 0 {
+            bail!("round-ms must be >= 1");
+        }
+        for p in [self.faults.drop_prob, self.faults.reply_drop_prob] {
+            if !(0.0..=1.0).contains(&p) {
+                bail!("fault probabilities must be in [0, 1], got {p}");
+            }
+        }
+        for e in &self.events {
+            if e.round == 0 || e.round > self.rounds {
+                bail!(
+                    "event at round {} falls outside the run (1..={})",
+                    e.round,
+                    self.rounds
+                );
+            }
+            if let EventAction::Partition(f) | EventAction::Flap(f, _) = e.action {
+                if !(0.0..1.0).contains(&f) || f <= 0.0 {
+                    bail!("partition fraction must be in (0, 1), got {f}");
+                }
+            }
+            if let EventAction::Flap(_, p) = e.action {
+                if p == 0 {
+                    bail!("flap period must be >= 1 round");
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Join-wave size of the churn-storm scenario: 5% of the fleet, at
+/// least 3.
+fn join_wave(members: usize) -> usize {
+    (members / 20).max(3)
+}
+
+/// Crash-wave size of the churn-storm scenario: 10% of the fleet, at
+/// least 4.
+fn crash_wave(members: usize) -> usize {
+    (members / 10).max(4)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtins_validate() {
+        for name in ["baseline", "churn-storm", "lossy", "partition"] {
+            let s = Scenario::builtin(name).unwrap();
+            s.validate().unwrap_or_else(|e| panic!("{name}: {e}"));
+        }
+        assert!(Scenario::builtin("nope").is_err());
+    }
+
+    #[test]
+    fn parse_round_trips_the_documented_format() {
+        let text = "
+# the documented example
+name storm-test
+members 100
+rounds 40
+alpha 0.01
+items 200
+fan-out 2
+graph ba
+dataset exponential
+churn none
+round-ms 250
+suspect-after-ms 1000
+tombstone-ttl-ms 9000
+drop-prob 0.02
+reply-drop-prob 0.01
+delay-base-ms 5
+delay-jitter-ms 15
+deadline-ms 100
+at 5 join 10
+at 12 crash 8        # a comment after an event
+at 15 partition 0.3
+at 20 heal
+at 25 flap 0.2 2
+at 30 unflap
+at 33 rejoin 4
+";
+        let s = Scenario::parse(text).unwrap();
+        s.validate().unwrap();
+        assert_eq!(s.name, "storm-test");
+        assert_eq!(s.members, 100);
+        assert_eq!(s.rounds, 40);
+        assert_eq!(s.graph, GraphKind::BarabasiAlbert);
+        assert_eq!(s.dataset, DatasetKind::Exponential);
+        assert_eq!(s.fan_out, 2);
+        assert_eq!(s.faults.drop_prob, 0.02);
+        assert_eq!(s.events.len(), 7);
+        assert_eq!(
+            s.events[0],
+            ScheduledEvent {
+                round: 5,
+                action: EventAction::Join(10)
+            }
+        );
+        assert_eq!(s.events[4].action, EventAction::Flap(0.2, 2));
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(Scenario::parse("members").is_err());
+        assert!(Scenario::parse("bogus 3").is_err());
+        assert!(Scenario::parse("at 5 explode 1").is_err());
+        assert!(Scenario::parse("graph dodecahedron").is_err());
+        let out_of_run = Scenario::parse("rounds 10\nat 99 heal").unwrap();
+        assert!(out_of_run.validate().is_err());
+    }
+}

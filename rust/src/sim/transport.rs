@@ -1,0 +1,267 @@
+//! [`Transport`] over a [`SimNet`]: the production gossip loop,
+//! membership plane, and wire codec run unmodified — every conversation
+//! is encoded to real `UDDX` frames, passed through the fault state,
+//! decoded on the far side, and served through the same
+//! [`NodeHandle`] entry points the TCP serve loop uses. What TCP pays
+//! in sockets, this transport pays in codec round-trips, so a frame the
+//! real wire would reject is rejected here too.
+
+use super::net::{LinkOutcome, SimNet};
+use crate::gossip::PeerState;
+use crate::service::membership::MemberTable;
+use crate::service::transport::{
+    in_process_exchange, RemoteChannel, Transport, TransportError,
+};
+use crate::service::{NodeHandle, ServeReject};
+use crate::sketch::codec::{
+    decode_exchange, encode_exchange_push, encode_exchange_reply, encode_join_request,
+    encode_membership_push, encode_membership_reply, ExchangeFrame,
+};
+use std::net::SocketAddr;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+/// Each delivered frame costs its encoded length plus the 4-byte length
+/// prefix the TCP framing pays — byte accounting matches the real wire.
+const FRAME_PREFIX: usize = 4;
+
+/// One simulated node's transport endpoint: a synthetic listen address
+/// on a shared [`SimNet`].
+#[derive(Debug)]
+pub struct SimTransport {
+    addr: SocketAddr,
+    net: Arc<SimNet>,
+}
+
+impl SimTransport {
+    /// The endpoint `addr` on `net`. The address only becomes servable
+    /// once a gossip loop starts on this transport (its
+    /// [`Transport::spawn_server`] registers the serve handle).
+    pub fn new(net: Arc<SimNet>, addr: SocketAddr) -> Self {
+        Self { addr, net }
+    }
+
+    /// The shared network this endpoint lives on.
+    pub fn net(&self) -> &Arc<SimNet> {
+        &self.net
+    }
+}
+
+impl Transport for SimTransport {
+    fn name(&self) -> &'static str {
+        "sim"
+    }
+
+    fn supports_remote(&self) -> bool {
+        true
+    }
+
+    fn listen_addr(&self) -> Option<SocketAddr> {
+        Some(self.addr)
+    }
+
+    fn exchange_local(
+        &self,
+        a: &mut PeerState,
+        b: &mut PeerState,
+    ) -> Result<usize, TransportError> {
+        in_process_exchange(a, b)
+    }
+
+    fn spawn_server(&self, node: NodeHandle) -> crate::Result<Option<JoinHandle<()>>> {
+        self.net.register(self.addr, node);
+        Ok(None)
+    }
+
+    fn open_remote(&self, peer: SocketAddr) -> Result<RemoteChannel, TransportError> {
+        // The connect phase: reachability is decided here, like a TCP
+        // connect; the channel itself carries no state.
+        self.net.connect(self.addr, peer)?;
+        Ok(RemoteChannel::new(peer, false, Box::new(())))
+    }
+
+    fn exchange_on(
+        &self,
+        chan: RemoteChannel,
+        local: &mut PeerState,
+        generation: u64,
+    ) -> Result<usize, TransportError> {
+        let peer = chan.peer();
+        // Re-resolve the handle: a crash or partition may have landed
+        // between the two phases of the exchange.
+        let handle = self.net.connect(self.addr, peer)?;
+        let push = encode_exchange_push(generation, local);
+        let outcome = self.net.sample_link("exchange", self.addr, peer);
+        if outcome == LinkOutcome::PushLost {
+            return Err(TransportError::Io(format!(
+                "sim push to {peer} lost (deadline)"
+            )));
+        }
+        // The wire round-trip the real transport pays: what the partner
+        // serves is the *decoded frame*, not our in-memory state.
+        let frame =
+            decode_exchange(&push).map_err(|e| TransportError::Codec(e.to_string()))?;
+        let ExchangeFrame::Push {
+            generation: pushed_gen,
+            state,
+        } = frame
+        else {
+            return Err(TransportError::Protocol(
+                "push frame decoded to a non-push kind".into(),
+            ));
+        };
+        let mut reply_frame: Option<Vec<u8>> = None;
+        let served = handle.serve_exchange(state, pushed_gen, |avg, gen| {
+            if outcome == LinkOutcome::ReplyLost {
+                // The reply never reaches us: the serve side must roll
+                // back (§7.2) — this error is what triggers it.
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::TimedOut,
+                    "sim reply lost (deadline)",
+                ));
+            }
+            reply_frame = Some(encode_exchange_reply(gen, avg));
+            Ok(())
+        });
+        match served {
+            Ok(()) => {
+                let reply = reply_frame.expect("deliver ran on the Ok path");
+                let frame = decode_exchange(&reply)
+                    .map_err(|e| TransportError::Codec(e.to_string()))?;
+                let ExchangeFrame::Reply { state, .. } = frame else {
+                    return Err(TransportError::Protocol(
+                        "reply frame decoded to a non-reply kind".into(),
+                    ));
+                };
+                let bytes = 2 * FRAME_PREFIX + push.len() + reply.len();
+                *local = state;
+                self.net
+                    .book_delivered("exchange", self.addr, peer, bytes, "");
+                Ok(bytes)
+            }
+            Err(ServeReject::Busy) => {
+                self.net
+                    .trace_event(&format!("exchange {}->{peer} reject=busy", self.addr));
+                Err(TransportError::Busy)
+            }
+            Err(ServeReject::StaleGeneration(g)) => {
+                self.net.trace_event(&format!(
+                    "exchange {}->{peer} reject=stale-generation g={g}",
+                    self.addr
+                ));
+                Err(TransportError::StaleGeneration(g))
+            }
+            Err(ServeReject::Lineage) => {
+                Err(TransportError::Lineage("alpha0 lineage mismatch".into()))
+            }
+            // The §7.2 cancelled exchange: the serve side rolled back,
+            // the initiator sees the lost reply as an i/o failure —
+            // exactly TCP's shape for the same fault.
+            Err(ServeReject::Cancelled(e)) => Err(TransportError::Io(e)),
+            Err(ServeReject::NoMembership) => Err(TransportError::NoMembership),
+        }
+    }
+
+    fn exchange_membership(
+        &self,
+        peer: SocketAddr,
+        generation: u64,
+        local: &MemberTable,
+    ) -> Result<(MemberTable, u64, usize), TransportError> {
+        let handle = self.net.connect(self.addr, peer)?;
+        let push = encode_membership_push(generation, local);
+        let outcome = self.net.sample_link("membership", self.addr, peer);
+        if outcome == LinkOutcome::PushLost {
+            return Err(TransportError::Io(format!(
+                "sim membership push to {peer} lost"
+            )));
+        }
+        let frame =
+            decode_exchange(&push).map_err(|e| TransportError::Codec(e.to_string()))?;
+        let ExchangeFrame::MembershipPush {
+            generation: pushed_gen,
+            table,
+        } = frame
+        else {
+            return Err(TransportError::Protocol(
+                "membership push decoded to a different kind".into(),
+            ));
+        };
+        match handle.serve_membership(&table, pushed_gen) {
+            Ok((merged, peer_gen)) => {
+                // Anti-entropy has no rollback: the partner merged even
+                // if our copy of the reply is lost (idempotent merge,
+                // next round repairs us).
+                if outcome == LinkOutcome::ReplyLost {
+                    return Err(TransportError::Io(format!(
+                        "sim membership reply from {peer} lost"
+                    )));
+                }
+                let reply = encode_membership_reply(peer_gen, &merged);
+                let frame = decode_exchange(&reply)
+                    .map_err(|e| TransportError::Codec(e.to_string()))?;
+                let ExchangeFrame::MembershipReply { generation, table } = frame else {
+                    return Err(TransportError::Protocol(
+                        "membership reply decoded to a different kind".into(),
+                    ));
+                };
+                let bytes = 2 * FRAME_PREFIX + push.len() + reply.len();
+                self.net
+                    .book_delivered("membership", self.addr, peer, bytes, "");
+                Ok((table, generation, bytes))
+            }
+            Err(ServeReject::NoMembership) => Err(TransportError::NoMembership),
+            Err(ServeReject::Busy) => Err(TransportError::Busy),
+            Err(other) => Err(TransportError::Protocol(other.to_string())),
+        }
+    }
+
+    fn join_remote(&self, seed: SocketAddr) -> Result<(MemberTable, u64), TransportError> {
+        let handle = self.net.connect(self.addr, seed)?;
+        let req = encode_join_request(0, self.addr);
+        let outcome = self.net.sample_link("join", self.addr, seed);
+        if outcome == LinkOutcome::PushLost {
+            return Err(TransportError::Io(format!(
+                "sim join request to {seed} lost"
+            )));
+        }
+        let frame =
+            decode_exchange(&req).map_err(|e| TransportError::Codec(e.to_string()))?;
+        let ExchangeFrame::JoinRequest { addr, .. } = frame else {
+            return Err(TransportError::Protocol(
+                "join request decoded to a different kind".into(),
+            ));
+        };
+        match handle.serve_join(addr) {
+            Ok((table, gen)) => {
+                // The seed has already inserted us; a lost reply means
+                // we retry and rejoin by address (same id, next
+                // incarnation) — the handshake's idempotence.
+                if outcome == LinkOutcome::ReplyLost {
+                    return Err(TransportError::Io(format!(
+                        "sim join reply from {seed} lost"
+                    )));
+                }
+                let reply = encode_membership_reply(gen, &table);
+                let frame = decode_exchange(&reply)
+                    .map_err(|e| TransportError::Codec(e.to_string()))?;
+                let ExchangeFrame::MembershipReply { generation, table } = frame else {
+                    return Err(TransportError::Protocol(
+                        "join reply decoded to a different kind".into(),
+                    ));
+                };
+                let bytes = 2 * FRAME_PREFIX + req.len() + reply.len();
+                self.net.book_delivered(
+                    "join",
+                    self.addr,
+                    seed,
+                    bytes,
+                    &format!("gen={generation}"),
+                );
+                Ok((table, generation))
+            }
+            Err(ServeReject::NoMembership) => Err(TransportError::NoMembership),
+            Err(other) => Err(TransportError::Protocol(other.to_string())),
+        }
+    }
+}

@@ -1,0 +1,59 @@
+//! Shared helpers for the integration suites.
+//!
+//! The point of this module is de-flaking: wall-clock assertions poll a
+//! condition under a **bounded deadline** instead of sleeping a fixed
+//! interval and asserting once. A fixed sleep is always wrong twice —
+//! too short on a loaded CI machine (flake) and too long everywhere
+//! else (wasted wall time). Polling exits the moment the condition
+//! holds and only pays the full deadline on an actual failure.
+//!
+//! Each suite pulls this in with `mod common;`; helpers unused by a
+//! given test binary are expected.
+#![allow(dead_code)]
+
+use std::net::{SocketAddr, TcpStream};
+use std::time::{Duration, Instant};
+
+/// Pause between condition probes. Short enough that a satisfied
+/// condition is observed almost immediately; long enough that a tight
+/// poll loop cannot starve the threads it is waiting on.
+pub const TICK: Duration = Duration::from_millis(10);
+
+/// Poll `cond` every [`TICK`] until it holds or `deadline` elapses.
+///
+/// Returns `Some(probes)` — how many times `cond` ran — when the
+/// condition held, `None` on timeout. The condition is always probed at
+/// least once, so a zero deadline degrades to a single check.
+pub fn wait_until(deadline: Duration, mut cond: impl FnMut() -> bool) -> Option<usize> {
+    let start = Instant::now();
+    let mut probes = 0usize;
+    loop {
+        probes += 1;
+        if cond() {
+            return Some(probes);
+        }
+        if start.elapsed() >= deadline {
+            return None;
+        }
+        std::thread::sleep(TICK);
+    }
+}
+
+/// [`wait_until`], panicking with `what` on timeout. Use when there is
+/// no richer diagnostic to attach than the condition's name.
+pub fn wait_for(what: &str, deadline: Duration, cond: impl FnMut() -> bool) -> usize {
+    match wait_until(deadline, cond) {
+        Some(probes) => probes,
+        None => panic!("timed out after {deadline:?} waiting for {what}"),
+    }
+}
+
+/// Bounded wait until a TCP connect to `addr` succeeds — i.e. the
+/// remote listener is up and accepting. The probe connections are
+/// dropped immediately; servers must tolerate a connection that closes
+/// without sending a frame (the codec treats it as a truncated read).
+pub fn wait_tcp_ready(addr: SocketAddr, deadline: Duration) {
+    wait_for(&format!("listener at {addr}"), deadline, || {
+        TcpStream::connect_timeout(&addr, TICK.max(Duration::from_millis(50))).is_ok()
+    });
+}

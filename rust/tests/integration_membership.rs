@@ -20,6 +20,8 @@
 // Plain-data configs are mutated after `default()` on purpose (see lib.rs).
 #![allow(clippy::field_reassign_with_default)]
 
+mod common;
+
 use duddsketch::churn::{ChurnKind, ChurnModel};
 use duddsketch::config::ServiceConfig;
 use duddsketch::data::{peer_dataset, DatasetKind};
@@ -60,11 +62,13 @@ fn ingest(node: &Node, data: &[f64]) {
     node.flush();
 }
 
-/// Sweep all nodes (with short sleeps so the wall-clock suspicion and
-/// anti-entropy clocks advance) until every node's view is converged on
-/// the expected union total at one shared generation.
-fn converge(fleet: &[Node], total: f64, max_sweeps: usize) -> usize {
-    for sweep in 1..=max_sweeps {
+/// Sweep all nodes until every node's view is converged on the expected
+/// union total at one shared generation, under a bounded deadline. Each
+/// probe is one full sweep; the polling tick between probes lets the
+/// wall-clock suspicion and anti-entropy clocks advance. Returns the
+/// number of sweeps it took.
+fn converge(fleet: &[Node], total: f64, deadline: Duration) -> usize {
+    let sweeps = common::wait_until(deadline, || {
         for n in fleet {
             n.step();
         }
@@ -73,12 +77,12 @@ fn converge(fleet: &[Node], total: f64, max_sweeps: usize) -> usize {
             .map(|n| n.global_view().expect("gossip enabled"))
             .collect();
         let gen0 = views[0].generation();
-        if views.iter().all(|v| {
+        views.iter().all(|v| {
             v.generation() == gen0 && v.converged() && v.estimated_total() == total
-        }) {
-            return sweep;
-        }
-        std::thread::sleep(Duration::from_millis(20));
+        })
+    });
+    if let Some(sweeps) = sweeps {
+        return sweeps;
     }
     let states: Vec<String> = fleet
         .iter()
@@ -93,7 +97,7 @@ fn converge(fleet: &[Node], total: f64, max_sweeps: usize) -> usize {
             )
         })
         .collect();
-    panic!("membership fleet did not converge within {max_sweeps} sweeps: {states:?}");
+    panic!("membership fleet did not converge within {deadline:?}: {states:?}");
 }
 
 fn assert_views_match(fleet: &[Node], seq: &UddSketch, peers: f64, total: f64) {
@@ -164,7 +168,7 @@ fn node_joins_after_three_rounds_and_crash_survivors_reconverge() {
     for d in &datasets {
         seq_all.extend(d);
     }
-    converge(&fleet, (4 * items) as f64, 400);
+    converge(&fleet, (4 * items) as f64, Duration::from_secs(60));
     assert_views_match(&fleet, &seq_all, 4.0, (4 * items) as f64);
     let gen_joined = fleet[0].global_view().unwrap().generation();
     assert!(
@@ -181,7 +185,7 @@ fn node_joins_after_three_rounds_and_crash_survivors_reconverge() {
     for &d in &[0usize, 1, 3] {
         seq.extend(&datasets[d]);
     }
-    converge(&fleet, (3 * items) as f64, 600);
+    converge(&fleet, (3 * items) as f64, Duration::from_secs(60));
     assert_views_match(&fleet, &seq, 3.0, (3 * items) as f64);
     assert!(
         fleet[0].global_view().unwrap().generation() > gen_joined,
@@ -268,7 +272,7 @@ fn failstop_schedule_replays_against_tcp_fleet() {
         seq.extend(&datasets[d]);
     }
     let total = (survivors.len() * items) as f64;
-    converge(&fleet, total, 600);
+    converge(&fleet, total, Duration::from_secs(60));
     assert_views_match(&fleet, &seq, survivors.len() as f64, total);
 
     // The distinguished role sits on the lowest SURVIVING id — the

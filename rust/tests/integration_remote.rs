@@ -23,6 +23,8 @@
 // Plain-data configs are mutated after `default()` on purpose (see lib.rs).
 #![allow(clippy::field_reassign_with_default)]
 
+mod common;
+
 use duddsketch::config::{GossipLoopConfig, ServiceConfig};
 use duddsketch::data::{peer_dataset, DatasetKind};
 use duddsketch::gossip::{fan_out_round, PeerState};
@@ -283,9 +285,12 @@ fn in_process_transport_reproduces_pr2_results_exactly() {
 /// and leave the initiator's state bit-for-bit untouched.
 #[test]
 fn timed_out_tcp_exchange_keeps_initiator_pre_round_state() {
-    // Black-hole partner: accepts, reads nothing, never replies.
+    // Black-hole partner: accepts, reads nothing, never replies. The
+    // sockets are held open until the test signals it is done asserting
+    // — a fixed sleep here would race the assertions on a slow machine.
     let sink = TcpListener::bind("127.0.0.1:0").unwrap();
     let sink_addr = sink.local_addr().unwrap();
+    let (done_tx, done_rx) = std::sync::mpsc::channel::<()>();
     let sink_thread = std::thread::spawn(move || {
         let mut held = Vec::new();
         for _ in 0..2 {
@@ -293,7 +298,7 @@ fn timed_out_tcp_exchange_keeps_initiator_pre_round_state() {
                 held.push(stream); // keep the socket open, say nothing
             }
         }
-        std::thread::sleep(Duration::from_millis(400));
+        let _ = done_rx.recv_timeout(Duration::from_secs(30));
         drop(held);
     });
 
@@ -333,6 +338,7 @@ fn timed_out_tcp_exchange_keeps_initiator_pre_round_state() {
 
     drop(w);
     node.shutdown();
+    let _ = done_tx.send(());
     sink_thread.join().unwrap();
 }
 
@@ -568,7 +574,13 @@ fn stale_pooled_connection_recovers_without_counting_failed() {
         .remote_peer(placeholder)
         .build()
         .unwrap();
-    std::thread::sleep(Duration::from_millis(50)); // let the FINs land
+    // Bounded-deadline poll instead of a fixed "let the FINs land"
+    // sleep: wait until the replacement server accepts connections. The
+    // old server closed its sockets before s2 could even bind, so by
+    // the time a fresh connect round-trips, the FIN has reached the
+    // pooled socket — and even a FIN that arrives mid-exchange is
+    // classified stale and retried, never counted failed.
+    common::wait_tcp_ready(addr, Duration::from_secs(10));
 
     // Second exchange: the pooled connection is stale; the transport
     // must fall back to a fresh connect and the round must count one

@@ -1,0 +1,136 @@
+//! Integration: the deterministic fleet simulator (ISSUE 7).
+//!
+//! Acceptance (scaled down from the CI `sim-fleet` lane so the suite
+//! stays fast): a simulated fleet running the *production* gossip loop
+//! and membership plane over `SimTransport` converges to the exact
+//! union oracle while members join, crash, rejoin and a partition heals
+//! mid-run — and the same `(scenario, seed)` pair reproduces the event
+//! trace and JSON log byte for byte.
+
+// Plain-data configs are mutated after `default()` on purpose (see lib.rs).
+#![allow(clippy::field_reassign_with_default)]
+
+use duddsketch::sim::{EventAction, Scenario, ScheduledEvent, SimFleet};
+
+/// A fleet small enough to run in well under a second but large enough
+/// that joins, a crash wave, and a partition all have someone to hit.
+fn storm_scenario() -> Scenario {
+    let mut s = Scenario::default();
+    s.name = "integration-storm".into();
+    s.members = 16;
+    s.rounds = 40;
+    s.items_per_member = 120;
+    s.alpha = 0.01;
+    s.max_buckets = 256;
+    // Dead-detection must fit the run: suspicion outlives one round,
+    // death two, leaving plenty of post-churn rounds to re-mix.
+    s.suspect_after_ms = 1_000;
+    s.events = vec![
+        ScheduledEvent {
+            round: 4,
+            action: EventAction::Join(2),
+        },
+        ScheduledEvent {
+            round: 8,
+            action: EventAction::Crash(2),
+        },
+        ScheduledEvent {
+            round: 12,
+            action: EventAction::Partition(0.25),
+        },
+        ScheduledEvent {
+            round: 16,
+            action: EventAction::Heal,
+        },
+    ];
+    s
+}
+
+/// The acceptance scenario end to end: the union estimate lands within
+/// the oracle tolerance and stays there, with every membership event
+/// visible in the per-round log.
+#[test]
+fn churny_fleet_converges_to_union_oracle() {
+    let report = SimFleet::new(storm_scenario(), 33).unwrap().run().unwrap();
+
+    assert_eq!(report.rounds.len(), 40);
+    assert_eq!(report.members_initial, 16);
+    assert_eq!(report.members_peak, 18, "the round-4 join wave must register");
+
+    // Post-event alive counts, straight from the per-round log
+    // (events apply before the round's exchanges).
+    assert_eq!(report.rounds[3].alive, 18, "after the join wave");
+    assert_eq!(report.rounds[7].alive, 16, "after the crash wave");
+    assert!(
+        !report.rounds[3].events.is_empty() && !report.rounds[7].events.is_empty(),
+        "scheduled events must be logged on their round"
+    );
+
+    // The partition must actually refuse traffic, and heal.
+    assert!(report.net.refused > 0, "partition refused no connections");
+
+    let converged = report
+        .converged_round
+        .expect("fleet must converge after the partition heals");
+    assert!(
+        converged > 8,
+        "convergence cannot predate the crash wave (round {converged})"
+    );
+    assert!(report.final_max_rel_err <= report.tol);
+    assert!(report.rounds.last().unwrap().within_tol);
+    assert!(report.reference_rounds > 0);
+}
+
+/// Determinism is the simulator's contract: the same seed reproduces
+/// the trace and the JSON log byte for byte; a different seed diverges.
+#[test]
+fn same_seed_reproduces_trace_and_json_bytes() {
+    let a = SimFleet::new(storm_scenario(), 21).unwrap().run().unwrap();
+    let b = SimFleet::new(storm_scenario(), 21).unwrap().run().unwrap();
+    assert_eq!(a.trace_text(), b.trace_text(), "trace must be byte-identical");
+    assert_eq!(a.to_json(), b.to_json(), "JSON log must be byte-identical");
+
+    let c = SimFleet::new(storm_scenario(), 22).unwrap().run().unwrap();
+    assert_ne!(
+        a.trace_text(),
+        c.trace_text(),
+        "a different seed must produce a different trace"
+    );
+}
+
+/// Fail&Stop-style rejoin through the join handshake: a crashed member
+/// comes back at the same address, re-enters at the next incarnation,
+/// and the fleet re-converges on the full union.
+#[test]
+fn crashed_member_rejoins_and_fleet_reconverges() {
+    let mut s = Scenario::default();
+    s.name = "rejoin".into();
+    s.members = 6;
+    s.rounds = 28;
+    s.items_per_member = 100;
+    s.alpha = 0.01;
+    s.max_buckets = 256;
+    s.suspect_after_ms = 1_000;
+    s.events = vec![
+        ScheduledEvent {
+            round: 3,
+            action: EventAction::Crash(1),
+        },
+        ScheduledEvent {
+            round: 10,
+            action: EventAction::Rejoin(1),
+        },
+    ];
+
+    let report = SimFleet::new(s, 55).unwrap().run().unwrap();
+    assert_eq!(report.rounds[2].alive, 5, "crash takes one member down");
+    assert_eq!(report.rounds[2].downed, 1);
+    assert_eq!(report.rounds[9].alive, 6, "rejoin brings it back");
+    assert_eq!(report.rounds[9].downed, 0);
+    let converged = report.converged_round.expect("fleet must re-converge");
+    assert!(
+        converged >= 10,
+        "final convergence includes the rejoined stream (round {converged})"
+    );
+    assert!(report.final_max_rel_err <= report.tol);
+}

@@ -612,6 +612,157 @@ fn prop_delta_roundtrip_bit_exact() {
     );
 }
 
+// ---------------------------------------------------------------------------
+// Membership: MemberTable::merge is a pointwise max under a total order
+// (incarnation, then status code, then smaller address string), so it must
+// be a commutative, associative, idempotent lattice join — the property
+// anti-entropy relies on for every node to end at the same table no matter
+// the gossip order (ISSUE 7).
+// ---------------------------------------------------------------------------
+
+/// A small id/address pool so random entry streams actually contend on
+/// the same ids (the interesting merge paths) instead of disjointly
+/// unioning.
+fn arb_member_entries(
+    r: &mut duddsketch::rng::Xoshiro256pp,
+    n: usize,
+) -> Vec<duddsketch::service::MemberEntry> {
+    use duddsketch::service::{MemberEntry, MemberStatus};
+    (0..n)
+        .map(|_| MemberEntry {
+            id: r.index(6) as u64,
+            addr: format!("127.0.0.1:{}", 7000 + r.index(4)).parse().unwrap(),
+            incarnation: 1 + r.index(3) as u64,
+            status: MemberStatus::from_code(r.index(3) as u8).unwrap(),
+        })
+        .collect()
+}
+
+/// Fold a stream of entries into a table via the same `upsert` the
+/// production merge path uses.
+fn member_table_of(
+    entries: &[duddsketch::service::MemberEntry],
+) -> duddsketch::service::MemberTable {
+    let mut t = duddsketch::service::MemberTable::new();
+    for e in entries {
+        t.upsert(e.clone());
+    }
+    t
+}
+
+/// Invariant (ISSUE 7): merge is commutative — A ∪ B and B ∪ A are the
+/// same table, even when the streams contend on ids at equal
+/// incarnation and equal status (the address tie-break).
+#[test]
+fn prop_member_table_merge_commutative() {
+    forall(
+        "member-merge-commutative",
+        SEED + 30,
+        48,
+        |r| (arb_member_entries(r, 12), arb_member_entries(r, 12)),
+        |(xs, ys)| {
+            let a = member_table_of(xs);
+            let b = member_table_of(ys);
+            let mut ab = a.clone();
+            ab.merge(&b);
+            let mut ba = b.clone();
+            ba.merge(&a);
+            if ab != ba {
+                return Err(format!("A∪B {ab:?} != B∪A {ba:?}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Invariant (ISSUE 7): merge is associative — (A ∪ B) ∪ C equals
+/// A ∪ (B ∪ C), so anti-entropy may aggregate tables along any tree.
+#[test]
+fn prop_member_table_merge_associative() {
+    forall(
+        "member-merge-associative",
+        SEED + 31,
+        48,
+        |r| {
+            (
+                arb_member_entries(r, 10),
+                arb_member_entries(r, 10),
+                arb_member_entries(r, 10),
+            )
+        },
+        |(xs, ys, zs)| {
+            let (a, b, c) = (member_table_of(xs), member_table_of(ys), member_table_of(zs));
+            let mut left = a.clone();
+            left.merge(&b);
+            left.merge(&c);
+            let mut bc = b.clone();
+            bc.merge(&c);
+            let mut right = a.clone();
+            right.merge(&bc);
+            if left != right {
+                return Err(format!("(A∪B)∪C {left:?} != A∪(B∪C) {right:?}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Invariant (ISSUE 7): merge is idempotent — T ∪ T changes nothing and
+/// reports nothing changed (a re-delivered table must not trigger a
+/// protocol restart).
+#[test]
+fn prop_member_table_merge_idempotent() {
+    forall(
+        "member-merge-idempotent",
+        SEED + 32,
+        48,
+        |r| arb_member_entries(r, 16),
+        |xs| {
+            let t = member_table_of(xs);
+            let mut merged = t.clone();
+            let out = merged.merge(&t);
+            if merged != t {
+                return Err(format!("self-merge changed the table: {merged:?} vs {t:?}"));
+            }
+            if out.changed || out.view_changed || out.joined + out.suspected + out.died != 0 {
+                return Err(format!("self-merge reported changes: {out:?}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Invariant (ISSUE 7): the table is a function of the entry *set* — a
+/// randomly permuted and duplicated replay of the same stream folds to
+/// the identical table (delivery order and re-delivery never matter).
+#[test]
+fn prop_member_table_merge_order_and_duplication_invariant() {
+    forall(
+        "member-merge-permutation",
+        SEED + 33,
+        48,
+        |r| {
+            let xs = arb_member_entries(r, 14);
+            let mut replay = xs.clone();
+            // Duplicate a random half of the stream, then shuffle.
+            for _ in 0..xs.len() / 2 {
+                let pick = replay[r.index(xs.len())].clone();
+                replay.push(pick);
+            }
+            r.shuffle(&mut replay);
+            (xs, replay)
+        },
+        |(xs, replay)| {
+            let t1 = member_table_of(xs);
+            let t2 = member_table_of(replay);
+            if t1 != t2 {
+                return Err(format!("replayed stream diverged: {t1:?} vs {t2:?}"));
+            }
+            Ok(())
+        },
+    );
+}
+
 /// Invariant (ISSUE 4): no corrupted or stale-baseline delta frame slips
 /// through. Truncation at any offset fails to decode (so the transport
 /// cancels the exchange, §7.2), and a frame whose baseline fingerprint
