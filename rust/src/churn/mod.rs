@@ -15,6 +15,8 @@
 //!
 //! Durations are measured in rounds (the protocol's only clock).
 
+#![forbid(unsafe_code)]
+
 use crate::rng::{Exponential, Rng, Sample, ShiftedPareto, Xoshiro256pp};
 
 /// Which churn model a run uses.

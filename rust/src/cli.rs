@@ -17,6 +17,8 @@
 //!   oracle each virtual round.
 //! * `info` — build/runtime/artifact diagnostics.
 
+#![forbid(unsafe_code)]
+
 use crate::config::ExperimentConfig;
 use crate::data::DatasetKind;
 use crate::experiments::{figure_ids, run_figure, run_with_snapshots};

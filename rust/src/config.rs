@@ -1,6 +1,8 @@
 //! Experiment configuration: the paper's Table 2 parameters plus runtime
 //! knobs, with a small `key=value` config-file parser and CLI overrides.
 
+#![forbid(unsafe_code)]
+
 use crate::churn::ChurnKind;
 use crate::data::DatasetKind;
 use std::net::SocketAddr;

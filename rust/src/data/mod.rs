@@ -3,6 +3,8 @@
 //! Consumption — loader for the real file plus a documented surrogate, see
 //! DESIGN.md §6).
 
+#![forbid(unsafe_code)]
+
 mod power;
 mod synthetic;
 

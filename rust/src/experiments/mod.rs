@@ -2,6 +2,8 @@
 //! and figures (§7) and emits the same rows/series (CSV + ASCII box
 //! plots).
 
+#![forbid(unsafe_code)]
+
 mod figures;
 mod runner;
 

@@ -9,6 +9,8 @@
 //! Algorithm 6 reconstructs the *global* sketch via the network-size
 //! estimate `p̃ = ⌈1/q̃⌉` and answers quantile queries.
 
+#![forbid(unsafe_code)]
+
 mod engine;
 mod executor;
 mod state;

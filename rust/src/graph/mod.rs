@@ -7,6 +7,8 @@
 //! the structural queries the simulator needs (neighbour lists, connected
 //! components — churn can disconnect the overlay, §7.2).
 
+#![forbid(unsafe_code)]
+
 use crate::rng::Rng;
 
 /// An undirected graph stored as adjacency lists.

@@ -2,6 +2,8 @@
 //!
 //! See `duddsketch help` (or [`duddsketch::cli::USAGE`]) for subcommands.
 
+#![forbid(unsafe_code)]
+
 use duddsketch::cli;
 
 fn main() {

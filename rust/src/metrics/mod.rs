@@ -1,5 +1,7 @@
 //! Error metrics and summary statistics used by the evaluation (§7).
 
+#![forbid(unsafe_code)]
+
 /// Relative error `|est − truth| / |truth|` (Eq. 10's per-peer term).
 #[inline]
 pub fn relative_error(est: f64, truth: f64) -> f64 {

@@ -37,6 +37,8 @@
 //! assert!(text.contains("dudd_exchange_rtt_seconds_count 1"));
 //! ```
 
+#![forbid(unsafe_code)]
+
 mod http;
 mod registry;
 mod trace;

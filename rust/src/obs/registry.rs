@@ -106,6 +106,10 @@ impl Histogram {
         })))
     }
 
+    fn lock_state(&self) -> std::sync::MutexGuard<'_, HistState> {
+        self.0.lock().expect("histogram poisoned")
+    }
+
     /// Record one observation (seconds, for latency families).
     /// Non-finite values are dropped — a poisoned timer must not poison
     /// the histogram.
@@ -113,7 +117,7 @@ impl Histogram {
         if !v.is_finite() {
             return;
         }
-        let mut h = self.0.lock().expect("histogram poisoned");
+        let mut h = self.lock_state();
         h.sketch.insert(v);
         h.sum += v;
         h.count += 1;
@@ -121,28 +125,23 @@ impl Histogram {
 
     /// The q-quantile of everything observed, or `None` while empty.
     pub fn quantile(&self, q: f64) -> Option<f64> {
-        self.0
-            .lock()
-            .expect("histogram poisoned")
-            .sketch
-            .quantile(q)
-            .ok()
+        self.lock_state().sketch.quantile(q).ok()
     }
 
     /// Observations recorded.
     pub fn count(&self) -> u64 {
-        self.0.lock().expect("histogram poisoned").count
+        self.lock_state().count
     }
 
     /// Sum of all observations.
     pub fn sum(&self) -> f64 {
-        self.0.lock().expect("histogram poisoned").sum
+        self.lock_state().sum
     }
 
     /// Snapshot `(quantile values for `SUMMARY_QUANTILES`, sum, count)`
     /// under one lock acquisition (render path).
     fn summary(&self) -> ([Option<f64>; 4], f64, u64) {
-        let h = self.0.lock().expect("histogram poisoned");
+        let h = self.lock_state();
         let mut qs = [None; 4];
         for (slot, &q) in qs.iter_mut().zip(SUMMARY_QUANTILES.iter()) {
             *slot = h.sketch.quantile(q).ok();
@@ -216,6 +215,10 @@ impl MetricsRegistry {
     /// An empty registry.
     pub fn new() -> Self {
         Self::default()
+    }
+
+    fn lock_families(&self) -> std::sync::MutexGuard<'_, Vec<Family>> {
+        self.families.lock().expect("metric registry poisoned")
     }
 
     /// Register (or look up) an unlabeled counter.
@@ -300,7 +303,7 @@ impl MetricsRegistry {
             .iter()
             .map(|(k, v)| (k.to_string(), v.to_string()))
             .collect();
-        let mut families = self.families.lock().expect("metric registry poisoned");
+        let mut families = self.lock_families();
         let fam = match families.iter_mut().find(|f| f.name == name) {
             Some(f) => {
                 if f.kind != kind {
@@ -335,7 +338,7 @@ impl MetricsRegistry {
     /// (content type `text/plain; version=0.0.4`), families in
     /// registration order.
     pub fn render(&self) -> String {
-        let families = self.families.lock().expect("metric registry poisoned");
+        let families = self.lock_families();
         let mut out = String::with_capacity(4096);
         for f in families.iter() {
             out.push_str("# HELP ");

@@ -119,9 +119,13 @@ impl TraceRing {
         }
     }
 
+    fn lock_ring(&self) -> std::sync::MutexGuard<'_, std::collections::VecDeque<RoundTrace>> {
+        self.inner.lock().expect("trace ring poisoned")
+    }
+
     /// Append a trace, evicting the oldest when full.
     pub fn push(&self, trace: RoundTrace) {
-        let mut ring = self.inner.lock().expect("trace ring poisoned");
+        let mut ring = self.lock_ring();
         if ring.len() == self.capacity {
             ring.pop_front();
         }
@@ -130,14 +134,14 @@ impl TraceRing {
 
     /// The most recent `n` traces, oldest first.
     pub fn recent(&self, n: usize) -> Vec<RoundTrace> {
-        let ring = self.inner.lock().expect("trace ring poisoned");
+        let ring = self.lock_ring();
         let skip = ring.len().saturating_sub(n);
         ring.iter().skip(skip).copied().collect()
     }
 
     /// Traces currently retained.
     pub fn len(&self) -> usize {
-        self.inner.lock().expect("trace ring poisoned").len()
+        self.lock_ring().len()
     }
 
     /// True while no trace has been pushed.

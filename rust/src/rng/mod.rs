@@ -8,6 +8,8 @@
 //! given a seed, which the experiment harness relies on for reproducible
 //! figures.
 
+#![forbid(unsafe_code)]
+
 mod distributions;
 
 pub use distributions::{Exponential, Normal, Sample, ShiftedPareto, Uniform};

@@ -14,6 +14,8 @@
 //! native path; artifact *inventory* ([`artifacts_dir`],
 //! [`list_shaped_artifacts`]) works in every build.
 
+#![forbid(unsafe_code)]
+
 use std::path::PathBuf;
 
 /// Directory holding `*.hlo.txt` artifacts (env `DUDD_ARTIFACTS` wins,

@@ -52,6 +52,8 @@
 //! share one gossip seed/graph). See the `serve-remote` CLI subcommand
 //! and `rust/tests/integration_remote.rs` for complete fleets.
 
+#![forbid(unsafe_code)]
+
 use super::coordinator::{QuantileService, ServiceWriter};
 use super::gossip_loop::{GlobalView, GossipLoop, GossipMember, GossipRoundReport};
 use super::membership::{Membership, MembershipConfig};

@@ -14,6 +14,8 @@
 //! existing `Instant + Duration` / `duration_since` arithmetic in the
 //! membership plane works unchanged.
 
+#![forbid(unsafe_code)]
+
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
@@ -63,15 +65,18 @@ impl VirtualClock {
         }
     }
 
+    fn lock_offset(&self) -> std::sync::MutexGuard<'_, Duration> {
+        self.offset.lock().expect("virtual clock poisoned")
+    }
+
     /// Advance virtual time by `d`.
     pub fn advance(&self, d: Duration) {
-        let mut o = self.offset.lock().expect("virtual clock poisoned");
-        *o += d;
+        *self.lock_offset() += d;
     }
 
     /// Virtual time elapsed since construction.
     pub fn elapsed(&self) -> Duration {
-        *self.offset.lock().expect("virtual clock poisoned")
+        *self.lock_offset()
     }
 }
 

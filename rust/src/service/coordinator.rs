@@ -10,6 +10,8 @@
 //! [`Snapshot`] through an [`ArcSwapCell`] — queries never block ingest
 //! and never take a lock.
 
+#![forbid(unsafe_code)]
+
 use super::shard::{spawn_shard, ShardDelta, ShardHandle, ShardMsg};
 use super::snapshot::Snapshot;
 use super::swap::ArcSwapCell;
@@ -282,11 +284,15 @@ fn ticker_loop(
     }
 }
 
+fn lock_accum(inner: &Inner) -> std::sync::MutexGuard<'_, Accum> {
+    inner.accum.lock().expect("accumulator poisoned")
+}
+
 /// Drain every shard into the accumulator and publish a fresh snapshot.
 fn run_epoch(senders: &[SyncSender<ShardMsg>], inner: &Inner) -> Arc<Snapshot> {
     let fold_start = Instant::now();
     // The accumulator lock serializes concurrent epochs end to end.
-    let mut guard = inner.accum.lock().expect("accumulator poisoned");
+    let mut guard = lock_accum(inner);
     let accum: &mut Accum = &mut guard;
     let (tx, rx) = mpsc::channel::<ShardDelta>();
     let mut expected = 0usize;

@@ -76,6 +76,13 @@
 //! The serve side of the transport ([`NodeHandle`]) applies inbound
 //! exchanges with §7.2 atomicity: the averaged state commits only once
 //! the reply reaches the wire and rolls back otherwise.
+//!
+//! The locking model above is machine-checked: the `lock-order` rule of
+//! `dudd-analyze` (see `docs/ANALYSIS.md`) rejects inverted slot/ctl
+//! acquisitions, slot pairs taken without ascending-order evidence, and
+//! socket I/O reachable under control-plane locks.
+
+#![forbid(unsafe_code)]
 
 use super::coordinator::QuantileService;
 use super::membership::{MemberStatus, MemberTable, Membership};
@@ -1079,6 +1086,16 @@ impl LoopCore {
         self.ctl.lock().expect("gossip control state poisoned")
     }
 
+    /// The round gate is the outermost lock: one guard per round, never
+    /// nested inside any other acquisition.
+    fn lock_gate(&self) -> MutexGuard<'_, ()> {
+        self.round_gate.lock().expect("gossip round gate poisoned")
+    }
+
+    fn lock_overlay(&self) -> MutexGuard<'_, Option<OverlayCache>> {
+        self.overlay.lock().expect("overlay cache poisoned")
+    }
+
     /// Lock every local slot in ascending index order (round paths only;
     /// serves use `try_lock`).
     fn lock_local_slots(&self) -> Vec<MutexGuard<'_, PeerState>> {
@@ -1368,7 +1385,7 @@ impl LoopCore {
         let Ok(self_pos) = ids.binary_search(&m.self_id()) else {
             return candidates;
         };
-        let mut overlay = self.overlay.lock().expect("overlay cache poisoned");
+        let mut overlay = self.lock_overlay();
         if overlay.as_ref().map_or(true, |c| c.ids != ids) {
             // Key the generator stream by the id set: same view ⇒ same
             // stream ⇒ same graph, on every node.
@@ -1384,7 +1401,7 @@ impl LoopCore {
             });
         }
         let cache = overlay.as_ref().expect("cache built above");
-        let allowed: std::collections::HashSet<u64> = cache
+        let allowed: std::collections::BTreeSet<u64> = cache
             .graph
             .neighbours(self_pos)
             .iter()
@@ -1509,7 +1526,7 @@ impl LoopCore {
     /// — one source of truth, exact because rounds serialize on the
     /// gate and serves never touch the gossip counters.
     fn run_round(&self) -> GossipRoundReport {
-        let _gate = self.round_gate.lock().expect("gossip round gate poisoned");
+        let _gate = self.lock_gate();
         let g = &self.obs.gossip;
         let base_exchanges = g.exchanges.get();
         let base_failed = g.failed.get();
@@ -1530,10 +1547,16 @@ impl LoopCore {
         let membership_duration =
             Duration::from_nanos(self.membership_nanos.swap(0, Ordering::Relaxed));
         let publish_start = Instant::now();
-        let exchanges = (g.exchanges.get() - base_exchanges) as usize;
-        let failed = (g.failed.get() - base_failed) as usize;
-        let bytes = (g.exchange_bytes.get() - base_bytes) as usize;
-        let membership_bytes = (g.membership_bytes.get() - base_membership_bytes) as usize;
+        // Saturating diffs: serves never touch these counters and rounds
+        // serialize on the gate, but a reset (or a future concurrent
+        // writer) must degrade to a zero delta, not a u64 wrap.
+        let exchanges = g.exchanges.get().saturating_sub(base_exchanges) as usize;
+        let failed = g.failed.get().saturating_sub(base_failed) as usize;
+        let bytes = g.exchange_bytes.get().saturating_sub(base_bytes) as usize;
+        let membership_bytes = g
+            .membership_bytes
+            .get()
+            .saturating_sub(base_membership_bytes) as usize;
         let cur = self.probes();
         let pool_now = self.fleet.transport.pool_stats().unwrap_or_default();
         let membership = self.fleet.membership.as_ref().map(|m| {

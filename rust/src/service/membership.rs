@@ -87,12 +87,18 @@
 //! The wire layout of the membership frames is normative in
 //! `docs/PROTOCOL.md` §9; [`crate::sketch::codec`] implements it.
 //!
+//! The wire status codes and the BTree-only (data-ordered) state here
+//! are machine-checked by the `spec-sync` and `collections` rules of
+//! `dudd-analyze` (see `docs/ANALYSIS.md`).
+//!
 //! [`TcpTransport`]: super::TcpTransport
+
+#![forbid(unsafe_code)]
 
 use super::clock::{Clock, SystemClock};
 use crate::config::GossipLoopConfig;
 use crate::obs::{MembershipMetrics, ObsSlot};
-use std::collections::{BTreeMap, HashMap};
+use std::collections::BTreeMap;
 use std::net::SocketAddr;
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -429,7 +435,7 @@ struct Obs {
 #[derive(Debug)]
 struct Inner {
     table: MemberTable,
-    obs: HashMap<u64, Obs>,
+    obs: BTreeMap<u64, Obs>,
     /// Highest member id ever seen (survives tombstone GC), so
     /// [`Membership::serve_join`] never re-mints a collected id.
     assigned_high: u64,
@@ -561,7 +567,7 @@ impl Membership {
             inner: Mutex::new(Inner {
                 assigned_high: table.max_id().unwrap_or(0),
                 table,
-                obs: HashMap::new(),
+                obs: BTreeMap::new(),
                 pending: MergeOutcome::default(),
                 view_dirty: false,
                 identity_lost: false,
@@ -602,7 +608,7 @@ impl Membership {
             inner: Mutex::new(Inner {
                 assigned_high: table.max_id().unwrap_or(0),
                 table,
-                obs: HashMap::new(),
+                obs: BTreeMap::new(),
                 pending: MergeOutcome::default(),
                 view_dirty: false,
                 identity_lost: false,

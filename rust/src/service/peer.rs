@@ -12,6 +12,8 @@
 //! exchange → serve cycle over a whole fleet lives in
 //! [`GossipLoop`](super::GossipLoop).
 
+#![forbid(unsafe_code)]
+
 use super::coordinator::QuantileService;
 use crate::gossip::PeerState;
 

@@ -12,6 +12,8 @@
 //! exact: the merged deltas equal one sequential sketch over the union
 //! of everything the shards consumed.
 
+#![forbid(unsafe_code)]
+
 use crate::obs::ServiceMetrics;
 use crate::sketch::{DenseStore, UddSketch};
 use anyhow::{Context, Result};

@@ -7,6 +7,8 @@
 //! stays valid (and answers consistently) no matter how far the service
 //! advances underneath it.
 
+#![forbid(unsafe_code)]
+
 use crate::sketch::{DenseStore, QuantileReader, SketchError, UddSketch};
 
 /// An immutable service snapshot: the merged sketch as of one epoch.

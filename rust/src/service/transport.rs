@@ -101,6 +101,8 @@
 //! [`Node::builder()`](super::Node::builder); see the `serve-remote` CLI
 //! subcommand for a full loopback fleet.
 
+#![forbid(unsafe_code)]
+
 use super::gossip_loop::{NodeHandle, ServeReject};
 use super::membership::MemberTable;
 use crate::config::GossipLoopConfig;
@@ -119,7 +121,7 @@ use std::collections::HashMap;
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, MutexGuard};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -644,7 +646,16 @@ struct Pool {
 }
 
 impl Pool {
+    fn lock_conns(&self) -> MutexGuard<'_, HashMap<SocketAddr, Vec<PooledConn>>> {
+        self.conns.lock().expect("transport pool poisoned")
+    }
+
     /// Take a healthy pooled connection, discarding expired/dead ones.
+    ///
+    /// `probe_alive` is a socket operation, so the candidate list is
+    /// drained under the lock and probed after releasing it — a peer
+    /// with an unresponsive socket must not stall every other caller
+    /// of the pool.
     fn checkout(
         &self,
         peer: SocketAddr,
@@ -652,9 +663,9 @@ impl Pool {
         stats: &TransportStats,
         metrics: Option<&Arc<TransportMetrics>>,
     ) -> Option<TcpStream> {
-        let mut map = self.conns.lock().expect("transport pool poisoned");
-        let list = map.get_mut(&peer)?;
-        while let Some(c) = list.pop() {
+        let mut candidates = self.lock_conns().remove(&peer)?;
+        let mut found = None;
+        while let Some(c) = candidates.pop() {
             if c.idle_since.elapsed() > idle {
                 stats.expired.fetch_add(1, Ordering::Relaxed);
                 if let Some(m) = metrics {
@@ -667,14 +678,24 @@ impl Pool {
                 if let Some(m) = metrics {
                     m.pool_reused.inc();
                 }
-                return Some(c.stream);
+                found = Some(c.stream);
+                break;
             }
             stats.stale.fetch_add(1, Ordering::Relaxed);
             if let Some(m) = metrics {
                 m.pool_stale_discarded.inc();
             }
         }
-        None
+        // Unprobed candidates go back at the front of the LIFO list;
+        // anything checked in while the lock was released stays newer
+        // and is reused first.
+        if !candidates.is_empty() {
+            let mut map = self.lock_conns();
+            let list = map.entry(peer).or_default();
+            candidates.append(list);
+            *list = candidates;
+        }
+        found
     }
 
     /// Return a connection after a successful exchange (dropped when the
@@ -683,7 +704,7 @@ impl Pool {
         if cap == 0 {
             return;
         }
-        let mut map = self.conns.lock().expect("transport pool poisoned");
+        let mut map = self.lock_conns();
         let list = map.entry(peer).or_default();
         if list.len() < cap {
             list.push(PooledConn {
@@ -702,7 +723,7 @@ impl Pool {
         stats: &TransportStats,
         metrics: Option<&Arc<TransportMetrics>>,
     ) {
-        let mut map = self.conns.lock().expect("transport pool poisoned");
+        let mut map = self.lock_conns();
         if let Some(list) = map.remove(&peer) {
             stats.stale.fetch_add(list.len(), Ordering::Relaxed);
             if let Some(m) = metrics {
@@ -743,6 +764,10 @@ impl Baseline {
 /// the transport (initiator half lives in its own map, keyed by address)
 /// and the serve loop thread.
 type ServeBaselines = Arc<Mutex<HashMap<u64, Baseline>>>;
+
+fn lock_serve_baselines(cache: &ServeBaselines) -> MutexGuard<'_, HashMap<u64, Baseline>> {
+    cache.lock().expect("serve baseline cache poisoned")
+}
 
 /// Cap on serve-side cached baselines (hostile peers can mint ids; each
 /// baseline holds a full peer state).
@@ -789,6 +814,14 @@ pub struct TcpTransport {
 }
 
 impl TcpTransport {
+    fn lock_baselines(&self) -> MutexGuard<'_, HashMap<SocketAddr, Baseline>> {
+        self.baselines.lock().expect("transport baseline cache poisoned")
+    }
+
+    fn lock_listener(&self) -> MutexGuard<'_, Option<TcpListener>> {
+        self.listener.lock().expect("transport listener mutex poisoned")
+    }
+
     /// Bind the serve side on `addr` (use port 0 for an OS-assigned
     /// loopback port) with full options.
     pub fn bind_with(addr: impl ToSocketAddrs, opts: TcpTransportOptions) -> crate::Result<Self> {
@@ -870,12 +903,7 @@ impl TcpTransport {
 
     /// Idle connections currently pooled for `peer` (observability).
     pub fn pooled_connections(&self, peer: SocketAddr) -> usize {
-        self.pool
-            .conns
-            .lock()
-            .expect("transport pool poisoned")
-            .get(&peer)
-            .map_or(0, Vec::len)
+        self.pool.lock_conns().get(&peer).map_or(0, Vec::len)
     }
 
     /// Classify a mid-exchange i/o failure, invalidating the pool when
@@ -932,9 +960,7 @@ impl TcpTransport {
             )));
         }
         if self.opts.delta_exchanges {
-            self.baselines
-                .lock()
-                .expect("transport baseline cache poisoned")
+            self.lock_baselines()
                 .insert(peer, Baseline::of(&state, generation, fingerprint));
         }
         // Commit point: the partner already committed when its reply
@@ -1014,9 +1040,7 @@ impl TcpTransport {
         if !self.opts.delta_exchanges {
             return None;
         }
-        self.baselines
-            .lock()
-            .expect("transport baseline cache poisoned")
+        self.lock_baselines()
             .get(&peer)
             .filter(|b| b.generation == generation)
             .cloned()
@@ -1165,10 +1189,7 @@ impl Transport for TcpTransport {
                 // The partner lost (or never had) our baseline: drop ours
                 // and retry with a full frame on this same connection.
                 self.count_reject(RejectReason::BaselineMismatch);
-                self.baselines
-                    .lock()
-                    .expect("transport baseline cache poisoned")
-                    .remove(&peer);
+                self.lock_baselines().remove(&peer);
                 self.stats.full_pushes.fetch_add(1, Ordering::Relaxed);
                 if let Some(m) = self.metrics.get() {
                     m.frames_full.inc();
@@ -1295,11 +1316,7 @@ impl Transport for TcpTransport {
     }
 
     fn spawn_server(&self, node: NodeHandle) -> crate::Result<Option<JoinHandle<()>>> {
-        let listener = self
-            .listener
-            .lock()
-            .expect("transport listener mutex poisoned")
-            .take();
+        let listener = self.lock_listener().take();
         let Some(listener) = listener else {
             return Ok(None);
         };
@@ -1576,10 +1593,7 @@ fn serve_frame_blocking(
     let (generation, incoming, reply_baseline) = match decode_exchange(frame) {
         Ok(ExchangeFrame::Push { generation, state }) => (generation, state, None),
         Ok(ExchangeFrame::DeltaPush { generation, delta }) => {
-            let cached = params
-                .baselines
-                .lock()
-                .expect("serve baseline cache poisoned")
+            let cached = lock_serve_baselines(&params.baselines)
                 .get(&(delta.id as u64))
                 .filter(|b| {
                     b.generation == generation && b.fingerprint == delta.baseline_fingerprint
@@ -1709,7 +1723,7 @@ fn store_serve_baseline(
     generation: u64,
     fingerprint: u64,
 ) {
-    let mut map = cache.lock().expect("serve baseline cache poisoned");
+    let mut map = lock_serve_baselines(cache);
     let key = state.id as u64;
     if map.len() >= MAX_SERVE_BASELINES && !map.contains_key(&key) {
         map.retain(|_, b| b.generation >= generation);

@@ -6,6 +6,8 @@
 //! summarizes exactly the last `k` epoch intervals. Eviction is O(1)
 //! (slot overwrite) and the merge cost is bounded by `k · m` buckets.
 
+#![forbid(unsafe_code)]
+
 use crate::sketch::{DenseStore, SketchError, UddSketch};
 
 /// Ring of per-epoch sub-sketches; epoch `e` (0-based) lands in slot

@@ -24,10 +24,17 @@
 //! **byte-identical event trace** — the property the `sim-fleet` CI
 //! lane asserts by diffing two runs.
 //!
+//! That property is also enforced statically: the `collections` and
+//! `ambient-time` rules of `dudd-analyze` (see `docs/ANALYSIS.md`)
+//! forbid hash-ordered collections and wall-clock reads in this
+//! subtree.
+//!
 //! [`GossipLoop`]: crate::service::GossipLoop
 //! [`Membership`]: crate::service::Membership
 //! [`VirtualClock`]: crate::service::VirtualClock
 //! [`Transport`]: crate::service::Transport
+
+#![forbid(unsafe_code)]
 
 mod fleet;
 mod net;

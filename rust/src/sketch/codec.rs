@@ -53,6 +53,12 @@
 //! cached; the frame carries the sender's current depth and both sides
 //! align their baseline copy to it (deterministically) before
 //! diffing/applying, so lineage stays exact.
+//!
+//! The constants here are normative together with `docs/PROTOCOL.md`:
+//! the `spec-sync` rule of `dudd-analyze` (see `docs/ANALYSIS.md`)
+//! parses the enum discriminants, the `code()`/`from_code()`
+//! bijections, and [`VERSION`] against the spec tables in CI, both
+//! directions.
 
 use super::{SketchError, Store, UddSketch};
 use crate::gossip::PeerState;

@@ -12,6 +12,8 @@
 //! become fractional; the turnstile model admits transiently negative
 //! weights.
 
+#![forbid(unsafe_code)]
+
 pub mod codec;
 mod ddsketch;
 mod exact;

@@ -1,6 +1,8 @@
 //! In-tree utility substrates (the offline registry carries none of the
 //! usual helper crates — DESIGN.md §6).
 
+#![forbid(unsafe_code)]
+
 pub mod bench;
 pub mod csv;
 pub mod plot;

@@ -1,0 +1,143 @@
+//! Loom model of the `ArcSwapCell` reclamation scheme
+//! (`rust/src/service/swap.rs`).
+//!
+//! The real cell cannot run under loom directly — `Arc::into_raw` /
+//! `increment_strong_count` bypass loom's instrumented types — so this
+//! models the algorithm's *shape* with loom atomics over an arena of
+//! slots and checks its central claim under every interleaving:
+//!
+//! > an entry is freed only after the writer observes `readers == 0`
+//! > *after* unpublishing it, therefore no reader between its
+//! > `readers += 1` announcement and its refcount bump can ever
+//! > resurrect a freed entry.
+//!
+//! The model intentionally mirrors the ordering decisions of the real
+//! code (all `SeqCst`, announce-before-pointer-read on the reader side,
+//! swap-before-trim on the writer side). Weakening any of them — e.g.
+//! reading the pointer before bumping `readers` — makes this test fail.
+//!
+//! Run with (loom is a CI-only dev-dependency, absent offline):
+//!
+//! ```text
+//! cargo add loom@0.7 --dev
+//! RUSTFLAGS="--cfg loom" cargo test -p duddsketch --test loom_swap --release
+//! ```
+//!
+//! Without `--cfg loom` the whole target compiles to nothing, so plain
+//! `cargo test` is unaffected.
+#![cfg(loom)]
+
+use loom::sync::atomic::{AtomicUsize, Ordering};
+use loom::sync::{Arc, Mutex};
+use loom::thread;
+
+const SLOTS: usize = 3;
+
+/// Arena model of `ArcSwapCell`: `ptr` holds a slot index instead of a
+/// raw pointer, `strong[i]` models `Arc` strong counts, and `freed[i]`
+/// models actual deallocation (monotonic; resurrecting a freed slot is
+/// the use-after-free the real scheme must exclude).
+struct Model {
+    ptr: AtomicUsize,
+    readers: AtomicUsize,
+    strong: [AtomicUsize; SLOTS],
+    freed: [AtomicUsize; SLOTS],
+    retired: Mutex<Vec<usize>>,
+}
+
+impl Model {
+    fn new() -> Self {
+        Model {
+            ptr: AtomicUsize::new(0),
+            readers: AtomicUsize::new(0),
+            strong: [
+                AtomicUsize::new(1), // slot 0 published at construction
+                AtomicUsize::new(0),
+                AtomicUsize::new(0),
+            ],
+            freed: [
+                AtomicUsize::new(0),
+                AtomicUsize::new(0),
+                AtomicUsize::new(0),
+            ],
+            retired: Mutex::new(vec![0]),
+        }
+    }
+
+    /// `ArcSwapCell::load`: announce, read pointer, resurrect, retreat.
+    fn load(&self) -> usize {
+        self.readers.fetch_add(1, Ordering::SeqCst);
+        let i = self.ptr.load(Ordering::SeqCst);
+        // the "SAFETY" claim of the real load(): the slot the reader
+        // resurrects must still be backed by a strong handle
+        assert_eq!(
+            self.freed[i].load(Ordering::SeqCst),
+            0,
+            "reader resurrected a freed slot — reclamation raced the load window"
+        );
+        self.strong[i].fetch_add(1, Ordering::SeqCst);
+        self.readers.fetch_sub(1, Ordering::SeqCst);
+        // the caller's Arc<T> drops immediately in this model
+        self.strong[i].fetch_sub(1, Ordering::SeqCst);
+        i
+    }
+
+    /// `ArcSwapCell::store`: retain, swap, then quiescent trim. The real
+    /// code spins up to 1024 times waiting for `readers == 0`; one
+    /// attempt is the same decision procedure with fewer interleavings.
+    fn store(&self, new: usize) {
+        let mut retired = self.retired.lock().unwrap();
+        retired.push(new);
+        self.strong[new].fetch_add(1, Ordering::SeqCst);
+        self.ptr.swap(new, Ordering::SeqCst);
+        if self.readers.load(Ordering::SeqCst) == 0 {
+            retired.retain(|&i| {
+                if i == new || self.strong[i].load(Ordering::SeqCst) > 1 {
+                    true
+                } else {
+                    self.strong[i].fetch_sub(1, Ordering::SeqCst);
+                    self.freed[i].store(1, Ordering::SeqCst);
+                    false
+                }
+            });
+        }
+    }
+}
+
+#[test]
+fn reader_never_resurrects_freed_slot() {
+    loom::model(|| {
+        let m = Arc::new(Model::new());
+        let reader = {
+            let m = m.clone();
+            thread::spawn(move || {
+                let a = m.load();
+                let b = m.load();
+                (a, b)
+            })
+        };
+        m.store(1);
+        m.store(2);
+        let (a, b) = reader.join().unwrap();
+        // each load observed some published slot; the assert inside
+        // load() already failed if reclamation raced it
+        assert!(a < SLOTS && b < SLOTS);
+    });
+}
+
+#[test]
+fn quiescent_trim_frees_unreachable_slot() {
+    // Single-threaded sanity inside the model: after two stores with no
+    // concurrent reader, slot 1 must actually be reclaimed (the scheme
+    // is not allowed to leak forever when quiescence is observable).
+    loom::model(|| {
+        let m = Model::new();
+        m.store(1);
+        m.store(2);
+        assert_eq!(m.freed[0].load(Ordering::SeqCst), 1, "slot 0 leaked");
+        assert_eq!(m.freed[1].load(Ordering::SeqCst), 1, "slot 1 leaked");
+        assert_eq!(m.ptr.load(Ordering::SeqCst), 2);
+        // only the currently published slot stays pinned
+        assert_eq!(m.retired.lock().unwrap().len(), 1);
+    });
+}

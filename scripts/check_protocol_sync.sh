@@ -1,66 +1,15 @@
 #!/usr/bin/env bash
-# CI guard (ISSUE 4, extended by ISSUE 5): the normative wire spec in
-# docs/PROTOCOL.md and the implementation must agree on the frame-kind
-# byte values, the reject-reason codes, the membership status codes, and
-# the frame version. Pure grep/diff — runs without a Rust toolchain.
+# CI guard (ISSUE 4, ISSUE 5; rebuilt in ISSUE 8): the normative wire
+# spec in docs/PROTOCOL.md and the implementation must agree on the
+# frame-kind byte values, the reject-reason codes, the membership status
+# codes, the frame version, and the configuration-key table.
+#
+# The grep/diff heuristics that used to live here are now the `spec-sync`
+# rule of the in-tree analyzer (tools/analyze): it parses the codec
+# enums and the spec tables for real, and also checks the code()/
+# from_code() bijections and the config-key tables both ways. This
+# wrapper keeps the script name stable for CI and muscle memory.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
-codec=rust/src/sketch/codec.rs
-membership=rust/src/service/membership.rs
-spec=docs/PROTOCOL.md
-fail=0
-
-# Frame kinds: `Push = 1,` style enum discriminants in the codec vs the
-# `| `Push` | 1 |` table rows in the spec. Longest alternatives first so
-# MembershipPush never half-matches as Push.
-kind_names='MembershipReply|MembershipPush|JoinRequest|DeltaReply|DeltaPush|Reject|Reply|Push'
-code_kinds=$(grep -oE "\b($kind_names) = [0-9]+" "$codec" \
-  | sed -E 's/ = /=/' | sort -u)
-doc_kinds=$(grep -oE "\| \`($kind_names)\` \| [0-9]+ \|" "$spec" \
-  | sed -E 's/^\| `//; s/` \| /=/; s/ \|$//' | sort -u)
-if ! diff <(echo "$code_kinds") <(echo "$doc_kinds") >/dev/null; then
-  echo "FRAME-KIND MISMATCH between $codec and $spec:"
-  diff <(echo "$code_kinds") <(echo "$doc_kinds") || true
-  fail=1
-fi
-
-# Reject reasons: the `RejectReason::X => n,` arms of code() vs the
-# spec's reject table.
-reason_names='BaselineMismatch|StaleGeneration|NoMembership|Malformed|Lineage|Busy'
-code_reasons=$(grep -oE "RejectReason::($reason_names) => [0-9]+" "$codec" \
-  | sed -E 's/RejectReason:://; s/ => /=/' | sort -u)
-doc_reasons=$(grep -oE "\| \`($reason_names)\` \| [0-9]+ \|" "$spec" \
-  | sed -E 's/^\| `//; s/` \| /=/; s/ \|$//' | sort -u)
-if ! diff <(echo "$code_reasons") <(echo "$doc_reasons") >/dev/null; then
-  echo "REJECT-REASON MISMATCH between $codec and $spec:"
-  diff <(echo "$code_reasons") <(echo "$doc_reasons") || true
-  fail=1
-fi
-
-# Membership status codes: the `MemberStatus::X => n,` arms of code()
-# in the membership module vs the spec's status table (ISSUE 5).
-status_names='Suspect|Alive|Dead'
-code_status=$(grep -oE "MemberStatus::($status_names) => [0-9]+" "$membership" \
-  | sed -E 's/MemberStatus:://; s/ => /=/' | sort -u)
-doc_status=$(grep -oE "\| \`($status_names)\` \| [0-9]+ \|" "$spec" \
-  | sed -E 's/^\| `//; s/` \| /=/; s/ \|$//' | sort -u)
-if ! diff <(echo "$code_status") <(echo "$doc_status") >/dev/null; then
-  echo "MEMBER-STATUS MISMATCH between $membership and $spec:"
-  diff <(echo "$code_status") <(echo "$doc_status") || true
-  fail=1
-fi
-
-# Frame version byte.
-code_version=$(grep -oE 'const VERSION: u8 = [0-9]+' "$codec" | grep -oE '[0-9]+$')
-doc_version=$(grep -ioE 'protocol version: \*\*[0-9]+\*\*' "$spec" | grep -oE '[0-9]+')
-if [ "$code_version" != "$doc_version" ]; then
-  echo "VERSION MISMATCH: codec has $code_version, spec has $doc_version"
-  fail=1
-fi
-
-if [ "$fail" -ne 0 ]; then
-  echo "docs/PROTOCOL.md is out of sync with the implementation"
-  exit 1
-fi
-echo "protocol spec in sync: kinds [$(echo "$code_kinds" | tr '\n' ' ')], reasons [$(echo "$code_reasons" | tr '\n' ' ')], statuses [$(echo "$code_status" | tr '\n' ' ')], version $code_version"
+exec cargo run --quiet --release -p dudd-analyze -- spec-sync "$@"

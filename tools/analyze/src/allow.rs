@@ -1,0 +1,53 @@
+//! The allow-list file: `tools/analyze/allowlist.txt`.
+//!
+//! One entry per line: `<rule> <path-prefix> # <reason>`. The reason is
+//! mandatory by convention (reviewed like code); blank lines and `#`
+//! comment lines are skipped. A path entry matches itself and, when it
+//! ends with `/`, everything under it.
+
+#[derive(Debug, Default)]
+pub struct Allowlist {
+    entries: Vec<(String, String)>,
+}
+
+impl Allowlist {
+    pub fn parse(text: &str) -> Self {
+        let mut entries = Vec::new();
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let body = line.split('#').next().unwrap_or("").trim();
+            let mut parts = body.split_whitespace();
+            if let (Some(rule), Some(path)) = (parts.next(), parts.next()) {
+                entries.push((rule.to_string(), path.to_string()));
+            }
+        }
+        Allowlist { entries }
+    }
+
+    pub fn allows(&self, rule: &str, path: &str) -> bool {
+        self.entries.iter().any(|(r, p)| {
+            r == rule && (path == p || (p.ends_with('/') && path.starts_with(p.as_str())))
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prefix_and_exact_matching() {
+        let a = Allowlist::parse(
+            "# comment\n\
+             ambient-time rust/src/util/ # bench timing\n\
+             collections rust/src/service/transport.rs # pool keyed by addr\n",
+        );
+        assert!(a.allows("ambient-time", "rust/src/util/bench.rs"));
+        assert!(a.allows("collections", "rust/src/service/transport.rs"));
+        assert!(!a.allows("ambient-time", "rust/src/sim/net.rs"));
+        assert!(!a.allows("collections", "rust/src/service/transport2.rs"));
+    }
+}

@@ -1,0 +1,100 @@
+//! Counter-underflow audit.
+//!
+//! Monotonic registry counters (`Counter::get()`) are sampled as
+//! baselines and diffed later (`PoolStats`, round reports). A plain
+//! `-` between two samples wraps to ~2^64 the moment anything resets or
+//! races, and the wrapped value then poisons derived gauges. The repo
+//! convention is a `delta_since`-style helper built on
+//! `saturating_sub`; this rule flags `… .get() - …` (and `.load(…) -`)
+//! subtractions anywhere else.
+
+use crate::lexer::{enclosing_fn, functions, strip_tests, tokenize};
+use crate::report::Finding;
+
+/// Helper functions whose whole point is counter differencing; they
+/// must (and do) saturate internally.
+const DELTA_HELPERS: &[&str] = &["delta_since"];
+
+pub fn check_file(path: &str, src: &str) -> Vec<Finding> {
+    let toks = strip_tests(tokenize(src));
+    let fns = functions(&toks);
+    let mut findings = Vec::new();
+    for (i, t) in toks.iter().enumerate() {
+        // `.get() -` and `.load(…) -`, excluding `->`
+        let reader_len = if t.is_ident("get")
+            && i > 0
+            && toks[i - 1].is(".")
+            && i + 2 < toks.len()
+            && toks[i + 1].is("(")
+            && toks[i + 2].is(")")
+        {
+            Some(3usize)
+        } else if t.is_ident("load") && i > 0 && toks[i - 1].is(".") && i + 1 < toks.len() && toks[i + 1].is("(") {
+            let close = crate::lexer::matching(&toks, i + 1, "(", ")");
+            Some(close - i + 1)
+        } else {
+            None
+        };
+        let Some(len) = reader_len else { continue };
+        let minus = i + len;
+        if minus >= toks.len() || !toks[minus].is("-") {
+            continue;
+        }
+        // `->` is a return-type arrow, not a subtraction
+        if minus + 1 < toks.len() && toks[minus + 1].is(">") {
+            continue;
+        }
+        let fn_name = enclosing_fn(&fns, i).unwrap_or("?");
+        if DELTA_HELPERS.contains(&fn_name) {
+            continue;
+        }
+        findings.push(Finding::new(
+            "counter-underflow",
+            path,
+            t.line,
+            format!(
+                "unchecked subtraction on a monotonic counter read in fn \
+                 {fn_name} — use saturating_sub (or a delta_since-style helper)"
+            ),
+        ));
+    }
+    findings
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn raw_get_subtraction_flagged() {
+        let src = "fn report(&self) { let d = g.exchanges.get() - base; }";
+        let f = check_file("x.rs", src);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].rule, "counter-underflow");
+    }
+
+    #[test]
+    fn saturating_sub_passes() {
+        let src = "fn report(&self) { let d = g.exchanges.get().saturating_sub(base); }";
+        assert!(check_file("x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn delta_since_helper_exempt() {
+        let src = "fn delta_since(&self, base: &Self) -> u64 { self.n.get() - base.n }";
+        assert!(check_file("x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn atomic_load_subtraction_flagged() {
+        let src = "fn f(&self) { let d = self.n.load(Ordering::Relaxed) - base; }";
+        let f = check_file("x.rs", src);
+        assert_eq!(f.len(), 1, "{f:?}");
+    }
+
+    #[test]
+    fn arrow_is_not_subtraction() {
+        let src = "impl A { fn get(&self) -> u64 { 1 } }";
+        assert!(check_file("x.rs", src).is_empty());
+    }
+}

@@ -1,0 +1,152 @@
+//! Determinism lint: no ambient time, no hash-ordered collections in
+//! determinism-scoped paths.
+//!
+//! The simulator's byte-identical-trace contract (PR 7) and the wire
+//! codec both depend on iteration order being a function of the data,
+//! never of `RandomState` or the wall clock. Two rules:
+//!
+//! * `ambient-time` — `Instant::now()` / `SystemTime::now()` anywhere
+//!   outside `service/clock.rs` (the `Clock` abstraction) and `obs/`
+//!   (wall-clock timestamps are the point there), unless the file is
+//!   allow-listed with a reason in `tools/analyze/allowlist.txt`.
+//! * `collections` — `HashMap` / `HashSet` inside the determinism
+//!   scope (`sim/`, `sketch/`, `graph/`, `service/membership.rs`,
+//!   `service/gossip_loop.rs`, `obs/trace.rs`): wire-encoded or
+//!   trace-emitting state is BTreeMap/BTreeSet only.
+
+use crate::allow::Allowlist;
+use crate::lexer::{strip_tests, tokenize, Kind};
+use crate::report::Finding;
+
+/// Files where ambient time is part of the design, not a leak.
+const TIME_BUILTIN_ALLOW: &[&str] = &["rust/src/service/clock.rs", "rust/src/obs/"];
+
+/// The BTreeMap-only scope: wire-encoded or trace-emitting state.
+const COLLECTIONS_SCOPE: &[&str] = &[
+    "rust/src/sim/",
+    "rust/src/sketch/",
+    "rust/src/graph/",
+    "rust/src/service/membership.rs",
+    "rust/src/service/gossip_loop.rs",
+    "rust/src/obs/trace.rs",
+];
+
+fn in_scope(path: &str, scope: &[&str]) -> bool {
+    scope.iter().any(|p| path.starts_with(p))
+}
+
+pub fn check_file(path: &str, src: &str, allow: &Allowlist) -> Vec<Finding> {
+    let toks = strip_tests(tokenize(src));
+    let mut findings = Vec::new();
+    let time_allowed =
+        in_scope(path, TIME_BUILTIN_ALLOW) || allow.allows("ambient-time", path);
+    let collections_checked =
+        in_scope(path, COLLECTIONS_SCOPE) && !allow.allows("collections", path);
+    for (i, t) in toks.iter().enumerate() {
+        if t.kind != Kind::Ident {
+            continue;
+        }
+        if !time_allowed
+            && (t.text == "Instant" || t.text == "SystemTime")
+            && i + 3 < toks.len()
+            && toks[i + 1].is(":")
+            && toks[i + 2].is(":")
+            && toks[i + 3].is_ident("now")
+        {
+            findings.push(Finding::new(
+                "ambient-time",
+                path,
+                t.line,
+                format!(
+                    "{}::now() outside the Clock abstraction — inject time \
+                     via service::clock or allow-list with a reason",
+                    t.text
+                ),
+            ));
+        }
+        if collections_checked && (t.text == "HashMap" || t.text == "HashSet") {
+            findings.push(Finding::new(
+                "collections",
+                path,
+                t.line,
+                format!(
+                    "{} in a determinism-scoped path — wire-encoded and \
+                     trace-emitting state is BTreeMap/BTreeSet only",
+                    t.text
+                ),
+            ));
+        }
+    }
+    findings
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn empty_allow() -> Allowlist {
+        Allowlist::parse("")
+    }
+
+    #[test]
+    fn instant_now_in_sim_flagged() {
+        let f = check_file(
+            "rust/src/sim/net.rs",
+            "fn f() { let t = Instant::now(); }",
+            &empty_allow(),
+        );
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].rule, "ambient-time");
+    }
+
+    #[test]
+    fn clock_module_is_exempt() {
+        let f = check_file(
+            "rust/src/service/clock.rs",
+            "fn f() { let t = Instant::now(); }",
+            &empty_allow(),
+        );
+        assert!(f.is_empty());
+    }
+
+    #[test]
+    fn allowlist_suppresses_time() {
+        let allow = Allowlist::parse(
+            "ambient-time rust/src/service/transport.rs # pool idle stamps",
+        );
+        let f = check_file(
+            "rust/src/service/transport.rs",
+            "fn f() { let t = Instant::now(); }",
+            &allow,
+        );
+        assert!(f.is_empty());
+    }
+
+    #[test]
+    fn hashmap_in_codec_flagged() {
+        let f = check_file(
+            "rust/src/sketch/codec.rs",
+            "use std::collections::HashMap;\nfn f() { let m: HashMap<u8, u8> = HashMap::new(); }",
+            &empty_allow(),
+        );
+        assert_eq!(f.len(), 3, "{f:?}");
+        assert!(f.iter().all(|x| x.rule == "collections"));
+    }
+
+    #[test]
+    fn hashmap_outside_scope_ignored() {
+        let f = check_file(
+            "rust/src/service/transport.rs",
+            "use std::collections::HashMap;",
+            &empty_allow(),
+        );
+        assert!(f.is_empty());
+    }
+
+    #[test]
+    fn test_code_is_exempt() {
+        let src = "#[cfg(test)]\nmod tests { fn f() { let t = Instant::now(); } }";
+        let f = check_file("rust/src/sim/net.rs", src, &empty_allow());
+        assert!(f.is_empty());
+    }
+}

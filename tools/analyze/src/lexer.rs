@@ -1,0 +1,417 @@
+//! Token-level Rust scanner.
+//!
+//! Just enough lexing to make the rules in this crate robust against
+//! comments, string literals, raw strings, and `'a` vs `'x'` ambiguity —
+//! no syntax tree, no rustc. Every rule works on the flat token stream
+//! plus brace-depth bookkeeping.
+
+/// Token class. `Str` keeps the literal's unquoted text (the spec
+/// checker reads match-arm key literals); the other literal kinds drop
+/// their payload.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Kind {
+    Ident,
+    Num,
+    Punct,
+    Str,
+    Lifetime,
+    Char,
+}
+
+#[derive(Debug, Clone)]
+pub struct Token {
+    pub kind: Kind,
+    pub text: String,
+    pub line: u32,
+}
+
+impl Token {
+    fn new(kind: Kind, text: impl Into<String>, line: u32) -> Self {
+        Token {
+            kind,
+            text: text.into(),
+            line,
+        }
+    }
+
+    pub fn is(&self, text: &str) -> bool {
+        self.text == text
+    }
+
+    pub fn is_ident(&self, text: &str) -> bool {
+        self.kind == Kind::Ident && self.text == text
+    }
+}
+
+/// Lex `src` into a token stream. Comments (line, nested block) and
+/// whitespace vanish; literals collapse to a single token each.
+pub fn tokenize(src: &str) -> Vec<Token> {
+    let b = src.as_bytes();
+    let n = b.len();
+    let mut toks = Vec::new();
+    let mut i = 0usize;
+    let mut line = 1u32;
+    while i < n {
+        let c = b[i];
+        if c == b'\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c == b' ' || c == b'\t' || c == b'\r' {
+            i += 1;
+            continue;
+        }
+        // line comment (incl. doc comments)
+        if c == b'/' && i + 1 < n && b[i + 1] == b'/' {
+            while i < n && b[i] != b'\n' {
+                i += 1;
+            }
+            continue;
+        }
+        // block comment, nested
+        if c == b'/' && i + 1 < n && b[i + 1] == b'*' {
+            let mut depth = 1usize;
+            i += 2;
+            while i < n && depth > 0 {
+                if b[i] == b'/' && i + 1 < n && b[i + 1] == b'*' {
+                    depth += 1;
+                    i += 2;
+                } else if b[i] == b'*' && i + 1 < n && b[i + 1] == b'/' {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    if b[i] == b'\n' {
+                        line += 1;
+                    }
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        // raw strings: r"..."  r#"..."#  br"..."  br#"..."#
+        if c == b'r' || c == b'b' {
+            let mut k = i;
+            if b[k] == b'b' && k + 1 < n && b[k + 1] == b'r' {
+                k += 1;
+            }
+            if b[k] == b'r' {
+                let mut hashes = 0usize;
+                let mut j = k + 1;
+                while j < n && b[j] == b'#' {
+                    hashes += 1;
+                    j += 1;
+                }
+                if j < n && b[j] == b'"' {
+                    let start = j + 1;
+                    let mut close = String::from("\"");
+                    close.push_str(&"#".repeat(hashes));
+                    let rest = &src[start..];
+                    let end = match rest.find(&close) {
+                        Some(p) => start + p,
+                        None => n,
+                    };
+                    line += src[i..end].matches('\n').count() as u32;
+                    toks.push(Token::new(Kind::Str, &src[start..end], line));
+                    i = (end + close.len()).min(n);
+                    continue;
+                }
+            }
+        }
+        // plain / byte strings
+        if c == b'"' || (c == b'b' && i + 1 < n && b[i + 1] == b'"') {
+            let start = if c == b'b' { i + 2 } else { i + 1 };
+            let mut j = start;
+            while j < n {
+                if b[j] == b'\\' {
+                    j += 2;
+                    continue;
+                }
+                if b[j] == b'"' {
+                    break;
+                }
+                if b[j] == b'\n' {
+                    line += 1;
+                }
+                j += 1;
+            }
+            let end = j.min(n);
+            toks.push(Token::new(Kind::Str, &src[start..end], line));
+            i = end + 1;
+            continue;
+        }
+        // char literal vs lifetime
+        if c == b'\'' {
+            let j = i + 1;
+            if j < n && (b[j].is_ascii_alphabetic() || b[j] == b'_') {
+                let mut k = j;
+                while k < n && (b[k].is_ascii_alphanumeric() || b[k] == b'_') {
+                    k += 1;
+                }
+                if k < n && b[k] == b'\'' {
+                    // 'x' (or 'ab' which is invalid Rust anyway)
+                    toks.push(Token::new(Kind::Char, "", line));
+                    i = k + 1;
+                    continue;
+                }
+                toks.push(Token::new(Kind::Lifetime, &src[j..k], line));
+                i = k;
+                continue;
+            }
+            // '\n', '\'', '(' …
+            if j < n && b[j] == b'\\' {
+                let mut k = j + 2;
+                while k < n && b[k] != b'\'' {
+                    k += 1;
+                }
+                i = k + 1;
+            } else if j + 1 < n && b[j + 1] == b'\'' {
+                i = j + 2;
+            } else {
+                i = j + 1;
+            }
+            toks.push(Token::new(Kind::Char, "", line));
+            continue;
+        }
+        if c.is_ascii_alphabetic() || c == b'_' {
+            let mut j = i;
+            while j < n && (b[j].is_ascii_alphanumeric() || b[j] == b'_') {
+                j += 1;
+            }
+            toks.push(Token::new(Kind::Ident, &src[i..j], line));
+            i = j;
+            continue;
+        }
+        if c.is_ascii_digit() {
+            let mut j = i;
+            while j < n {
+                let d = b[j];
+                if d.is_ascii_alphanumeric() || d == b'_' {
+                    j += 1;
+                    continue;
+                }
+                // `1.5` continues the number; `1..n` and `1.method()` don't
+                if d == b'.' && j + 1 < n && b[j + 1].is_ascii_digit() {
+                    j += 1;
+                    continue;
+                }
+                break;
+            }
+            toks.push(Token::new(Kind::Num, &src[i..j], line));
+            i = j;
+            continue;
+        }
+        toks.push(Token::new(Kind::Punct, &src[i..i + 1], line));
+        i += 1;
+    }
+    toks
+}
+
+/// Index of the `)`/`}`/`]` matching the opener at `open_idx`.
+pub fn matching(toks: &[Token], open_idx: usize, open: &str, close: &str) -> usize {
+    let mut depth = 0usize;
+    let mut i = open_idx;
+    while i < toks.len() {
+        if toks[i].is(open) {
+            depth += 1;
+        } else if toks[i].is(close) {
+            depth -= 1;
+            if depth == 0 {
+                return i;
+            }
+        }
+        i += 1;
+    }
+    toks.len().saturating_sub(1)
+}
+
+/// Token-index spans (inclusive) of `#[cfg(test)] mod …` bodies.
+fn test_mod_spans(toks: &[Token]) -> Vec<(usize, usize)> {
+    let mut spans = Vec::new();
+    let mut i = 0usize;
+    while i + 6 < toks.len() {
+        let is_cfg_test = toks[i].is("#")
+            && toks[i + 1].is("[")
+            && toks[i + 2].is_ident("cfg")
+            && toks[i + 3].is("(")
+            && toks[i + 4].is_ident("test")
+            && toks[i + 5].is(")")
+            && toks[i + 6].is("]");
+        if !is_cfg_test {
+            i += 1;
+            continue;
+        }
+        // skip any further attributes between the cfg and the item
+        let mut j = i + 7;
+        while j < toks.len() && toks[j].is("#") {
+            let open = j + 1;
+            if open < toks.len() && toks[open].is("[") {
+                j = matching(toks, open, "[", "]") + 1;
+            } else {
+                break;
+            }
+        }
+        if j < toks.len() && toks[j].is_ident("mod") {
+            let mut k = j;
+            while k < toks.len() && !toks[k].is("{") {
+                k += 1;
+            }
+            if k < toks.len() {
+                let m = matching(toks, k, "{", "}");
+                spans.push((i, m));
+                i = m + 1;
+                continue;
+            }
+        }
+        i += 1;
+    }
+    spans
+}
+
+/// The token stream with every `#[cfg(test)] mod` body removed — rules
+/// check production code only.
+pub fn strip_tests(toks: Vec<Token>) -> Vec<Token> {
+    let spans = test_mod_spans(&toks);
+    if spans.is_empty() {
+        return toks;
+    }
+    toks.into_iter()
+        .enumerate()
+        .filter(|(idx, _)| !spans.iter().any(|&(a, b)| a <= *idx && *idx <= b))
+        .map(|(_, t)| t)
+        .collect()
+}
+
+/// A function item's name and body span (`{` … `}` token indices).
+#[derive(Debug, Clone)]
+pub struct FnSpan {
+    pub name: String,
+    pub body_start: usize,
+    pub body_end: usize,
+}
+
+/// Every `fn` item (including nested ones) with a body. Trait method
+/// declarations without bodies are skipped.
+pub fn functions(toks: &[Token]) -> Vec<FnSpan> {
+    let mut res = Vec::new();
+    let mut i = 0usize;
+    while i + 1 < toks.len() {
+        if toks[i].is_ident("fn") && toks[i + 1].kind == Kind::Ident {
+            let name = toks[i + 1].text.clone();
+            // the argument list's matching `)` …
+            let mut j = i + 2;
+            while j < toks.len() && !toks[j].is("(") {
+                j += 1;
+            }
+            if j >= toks.len() {
+                break;
+            }
+            let args_end = matching(toks, j, "(", ")");
+            // … then the first `{` (or `;` for a bodyless declaration)
+            let mut k = args_end;
+            while k < toks.len() && !toks[k].is("{") && !toks[k].is(";") {
+                k += 1;
+            }
+            if k >= toks.len() || toks[k].is(";") {
+                i += 2;
+                continue;
+            }
+            let body_end = matching(toks, k, "{", "}");
+            res.push(FnSpan {
+                name,
+                body_start: k,
+                body_end,
+            });
+            i += 2;
+            continue;
+        }
+        i += 1;
+    }
+    res
+}
+
+/// Name of the function span enclosing token `idx`, if any (innermost).
+pub fn enclosing_fn(fns: &[FnSpan], idx: usize) -> Option<&str> {
+    fns.iter()
+        .filter(|f| f.body_start <= idx && idx <= f.body_end)
+        .min_by_key(|f| f.body_end - f.body_start)
+        .map(|f| f.name.as_str())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn comments_and_strings_vanish() {
+        let toks = tokenize("let a = \"// not a comment\"; // real\n/* b */ b");
+        let idents: Vec<&str> = toks
+            .iter()
+            .filter(|t| t.kind == Kind::Ident)
+            .map(|t| t.text.as_str())
+            .collect();
+        assert_eq!(idents, ["let", "a", "b"]);
+        assert_eq!(
+            toks.iter().filter(|t| t.kind == Kind::Str).count(),
+            1,
+            "one string literal"
+        );
+    }
+
+    #[test]
+    fn string_text_is_kept() {
+        let toks = tokenize("match key { \"alpha\" | \"a\" => 1 }");
+        let strs: Vec<&str> = toks
+            .iter()
+            .filter(|t| t.kind == Kind::Str)
+            .map(|t| t.text.as_str())
+            .collect();
+        assert_eq!(strs, ["alpha", "a"]);
+    }
+
+    #[test]
+    fn lifetime_vs_char() {
+        let toks = tokenize("fn f<'a>(x: &'a str) { let c = 'x'; }");
+        assert!(toks.iter().any(|t| t.kind == Kind::Lifetime && t.text == "a"));
+        assert_eq!(toks.iter().filter(|t| t.kind == Kind::Char).count(), 1);
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let toks = tokenize("/* a /* b */ c */ x");
+        assert_eq!(toks.len(), 1);
+        assert!(toks[0].is_ident("x"));
+    }
+
+    #[test]
+    fn raw_strings() {
+        let toks = tokenize("let s = r#\"has \"quotes\" inside\"#; y");
+        assert!(toks.iter().any(|t| t.kind == Kind::Str));
+        assert!(toks.last().unwrap().is_ident("y"));
+    }
+
+    #[test]
+    fn test_mods_are_stripped() {
+        let src = "fn prod() {}\n#[cfg(test)]\nmod tests { fn t() { bad(); } }";
+        let toks = strip_tests(tokenize(src));
+        assert!(!toks.iter().any(|t| t.is_ident("bad")));
+        assert!(toks.iter().any(|t| t.is_ident("prod")));
+    }
+
+    #[test]
+    fn function_spans() {
+        let src = "impl A { fn one(&self) -> usize { 1 } fn two() {} }";
+        let toks = tokenize(src);
+        let fns = functions(&toks);
+        assert_eq!(fns.len(), 2);
+        assert_eq!(fns[0].name, "one");
+        assert_eq!(fns[1].name, "two");
+    }
+
+    #[test]
+    fn line_numbers_track() {
+        let toks = tokenize("a\nb\n\nc");
+        let lines: Vec<u32> = toks.iter().map(|t| t.line).collect();
+        assert_eq!(lines, [1, 2, 4]);
+    }
+}

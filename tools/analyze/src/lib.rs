@@ -1,0 +1,160 @@
+//! `dudd-analyze` — the repo's in-tree static analysis suite.
+//!
+//! A zero-dependency, token-level scanner over `rust/src/` that turns
+//! the invariants written in module docs and `docs/PROTOCOL.md` into
+//! hard CI failures. Rules (see `docs/ANALYSIS.md` for the catalogue):
+//!
+//! * `lock-order` — lock graph acyclicity, slot-pair ordering, no
+//!   socket I/O under control-plane locks ([`locks`]);
+//! * `determinism` — no ambient time outside the `Clock` abstraction,
+//!   no hash-ordered collections in wire/trace paths ([`determinism`]);
+//! * `spec-sync` — codec enums, protocol version, and config keys vs
+//!   the PROTOCOL.md tables, both directions ([`spec`]);
+//! * `unsafe-audit` — `unsafe` pinned to `service/swap.rs`,
+//!   `#![forbid(unsafe_code)]` elsewhere, lock poisoning policy routed
+//!   through `lock_*` helpers ([`unsafe_audit`]);
+//! * `counter-audit` — no unchecked subtraction between monotonic
+//!   counter reads ([`counters`]).
+//!
+//! The scanner is deliberately not a compiler: it lexes real Rust
+//! tokens (strings, raw strings, nested comments, lifetimes) but
+//! resolves nothing. Every rule is written against the idioms this
+//! codebase actually uses, and escape hatches go through
+//! `tools/analyze/allowlist.txt` with a reason, never through silence.
+
+pub mod allow;
+pub mod counters;
+pub mod determinism;
+pub mod lexer;
+pub mod locks;
+pub mod report;
+pub mod spec;
+pub mod unsafe_audit;
+
+use crate::allow::Allowlist;
+use crate::report::Finding;
+use std::fs;
+use std::io;
+use std::path::Path;
+
+/// The rule names accepted on the command line, in run order.
+pub const RULES: &[&str] = &[
+    "lock-order",
+    "determinism",
+    "spec-sync",
+    "unsafe-audit",
+    "counter-audit",
+];
+
+/// A source file addressed by its repo-relative, `/`-separated path.
+pub struct SourceFile {
+    pub rel: String,
+    pub text: String,
+}
+
+/// All `.rs` files under `<root>/rust/src`, sorted by relative path so
+/// reports and JSON output are stable across platforms.
+pub fn collect_sources(root: &Path) -> io::Result<Vec<SourceFile>> {
+    let mut out = Vec::new();
+    walk(&root.join("rust").join("src"), "rust/src", &mut out)?;
+    out.sort_by(|a, b| a.rel.cmp(&b.rel));
+    Ok(out)
+}
+
+fn walk(dir: &Path, rel: &str, out: &mut Vec<SourceFile>) -> io::Result<()> {
+    for entry in fs::read_dir(dir)? {
+        let entry = entry?;
+        let name = entry.file_name();
+        let name = name.to_string_lossy();
+        let child_rel = format!("{rel}/{name}");
+        let path = entry.path();
+        if path.is_dir() {
+            walk(&path, &child_rel, out)?;
+        } else if name.ends_with(".rs") {
+            out.push(SourceFile {
+                rel: child_rel,
+                text: fs::read_to_string(&path)?,
+            });
+        }
+    }
+    Ok(())
+}
+
+fn load_allowlist(root: &Path) -> Allowlist {
+    match fs::read_to_string(root.join("tools").join("analyze").join("allowlist.txt")) {
+        Ok(text) => Allowlist::parse(&text),
+        Err(_) => Allowlist::default(),
+    }
+}
+
+fn read_doc(root: &Path, rel: &str, findings: &mut Vec<Finding>) -> String {
+    match fs::read_to_string(root.join(rel.replace('/', std::path::MAIN_SEPARATOR_STR))) {
+        Ok(text) => text,
+        Err(e) => {
+            findings.push(Finding::new(
+                "spec-sync",
+                rel,
+                0,
+                format!("cannot read: {e}"),
+            ));
+            String::new()
+        }
+    }
+}
+
+/// Run one rule against the repo at `root`.
+pub fn run_rule(rule: &str, root: &Path, sources: &[SourceFile]) -> io::Result<Vec<Finding>> {
+    let mut findings = Vec::new();
+    match rule {
+        "lock-order" => {
+            for f in sources {
+                findings.extend(locks::check_file(&f.rel, &f.text));
+            }
+        }
+        "determinism" => {
+            let allow = load_allowlist(root);
+            for f in sources {
+                findings.extend(determinism::check_file(&f.rel, &f.text, &allow));
+            }
+        }
+        "unsafe-audit" => {
+            for f in sources {
+                findings.extend(unsafe_audit::check_file(&f.rel, &f.text));
+            }
+        }
+        "counter-audit" => {
+            for f in sources {
+                findings.extend(counters::check_file(&f.rel, &f.text));
+            }
+        }
+        "spec-sync" => {
+            let inputs = spec::SpecInputs {
+                codec: read_doc(root, "rust/src/sketch/codec.rs", &mut findings),
+                membership: read_doc(root, "rust/src/service/membership.rs", &mut findings),
+                config: read_doc(root, "rust/src/config.rs", &mut findings),
+                protocol_md: read_doc(root, "docs/PROTOCOL.md", &mut findings),
+                readme_md: read_doc(root, "README.md", &mut findings),
+            };
+            if findings.is_empty() {
+                findings.extend(spec::check(&inputs));
+            }
+        }
+        other => {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidInput,
+                format!("unknown rule '{other}' (expected one of: {})", RULES.join(", ")),
+            ));
+        }
+    }
+    Ok(findings)
+}
+
+/// Run every rule; findings come back grouped in [`RULES`] order.
+pub fn run_rules(rules: &[&str], root: &Path) -> io::Result<Vec<Finding>> {
+    let sources = collect_sources(root)?;
+    let mut findings = Vec::new();
+    for rule in rules {
+        findings.extend(run_rule(rule, root, &sources)?);
+    }
+    Ok(findings)
+}

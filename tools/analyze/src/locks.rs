@@ -1,0 +1,630 @@
+//! Lock-order checker.
+//!
+//! Extracts every lock acquisition (`lock_ctl()`, `lock_slot(i)`,
+//! `lock_*()` helpers, `.lock()` / `.try_lock()` on a field) from each
+//! function, tracks guard liveness by brace depth, and enforces the
+//! locking model written in `service/gossip_loop.rs`:
+//!
+//! * the per-file lock graph must be acyclic, and `ctl` must never be
+//!   taken while already holding it is fine — but a slot acquired under
+//!   `ctl` inverts the documented `slots → ctl` order and is rejected;
+//! * a second slot may only be acquired with ascending-index evidence
+//!   (both literals ordered, or the canonical `let lo = a.min(b)` /
+//!   `let hi = a.max(b)` pair);
+//! * no socket operation (connect/read/write/exchange helpers) may be
+//!   reachable — directly or through an intra-file call chain — while
+//!   holding any lock other than a slot or the round gate.
+//!
+//! Guard liveness is approximated the way the codebase actually writes
+//! guards: `let g = self.lock_x();` lives to the end of its block,
+//! `self.lock_x().field` is statement-transient, `drop(g)` ends a guard
+//! early, and a `match x.try_lock()` head is conservatively held to the
+//! end of the function (the serve path stashes such guards in a `Vec`).
+
+use crate::lexer::{functions, matching, strip_tests, tokenize, Kind, Token};
+use crate::report::Finding;
+use std::collections::{BTreeMap, BTreeSet};
+
+/// Method/function names treated as socket operations.
+const SOCKET_METHODS: &[&str] = &[
+    "connect",
+    "read",
+    "read_exact",
+    "read_to_end",
+    "write",
+    "write_all",
+    "flush",
+    "peek",
+    "accept",
+    "shutdown",
+    "set_read_timeout",
+    "set_write_timeout",
+    "set_nonblocking",
+    "open_remote",
+    "exchange_on",
+    "exchange_membership",
+    "join_remote",
+    "deliver",
+];
+
+/// Lock classes allowed to span a socket operation: the initiator's
+/// own slot (push–pull by design) and the outermost round gate.
+const SOCKET_OK_HOLDERS: &[&str] = &["slot", "slot_all", "gate", "round_gate"];
+
+fn socket_ok(class: &str) -> bool {
+    SOCKET_OK_HOLDERS.contains(&class)
+}
+
+fn is_socket_method(name: &str) -> bool {
+    SOCKET_METHODS.contains(&name)
+}
+
+struct Acq {
+    class: String,
+    blocking: bool,
+    args: Vec<Token>,
+    /// Index of the last token of the acquisition expression (closing
+    /// paren, possibly of a chained `.expect(…)`).
+    end: usize,
+}
+
+/// If `toks[i]` starts a lock acquisition, classify it.
+fn acquisition_at(toks: &[Token], i: usize) -> Option<Acq> {
+    if toks[i].kind != Kind::Ident {
+        return None;
+    }
+    let name = toks[i].text.as_str();
+    if i + 1 >= toks.len() || !toks[i + 1].is("(") {
+        return None;
+    }
+    let mut end = matching(toks, i + 1, "(", ")");
+    let args: Vec<Token> = toks[i + 2..end].to_vec();
+    // a chained `.expect(…)` / `.unwrap()` is still the same guard
+    while end + 2 < toks.len()
+        && toks[end + 1].is(".")
+        && (toks[end + 2].is_ident("expect") || toks[end + 2].is_ident("unwrap"))
+    {
+        end = matching(toks, end + 3, "(", ")");
+    }
+    let prev = if i > 0 { toks[i - 1].text.as_str() } else { "" };
+    let acq = |class: &str, blocking: bool| {
+        Some(Acq {
+            class: class.to_string(),
+            blocking,
+            args: args.clone(),
+            end,
+        })
+    };
+    match name {
+        "lock_slot" => acq("slot", true),
+        "lock_local_slots" => acq("slot_all", true),
+        "lock_ctl" => acq("ctl", true),
+        "lock" if prev == "." => {
+            let recv = receiver_name(toks, i - 1);
+            acq(&recv, true)
+        }
+        "try_lock" if prev == "." => {
+            let recv = receiver_name(toks, i - 1);
+            let class = if recv == "slots" { "slot" } else { &recv };
+            acq(class, false)
+        }
+        _ if name.starts_with("lock_") => acq(&name["lock_".len()..], true),
+        _ => None,
+    }
+}
+
+/// The field a `.lock()` receiver names: `self.inner.lock()` → `inner`,
+/// `self.slots[i].lock()` → `slots`.
+fn receiver_name(toks: &[Token], dot_idx: usize) -> String {
+    let mut j = dot_idx as isize - 1;
+    if j >= 0 && toks[j as usize].is("]") {
+        let mut depth = 0isize;
+        while j >= 0 {
+            let t = &toks[j as usize];
+            if t.is("]") {
+                depth += 1;
+            } else if t.is("[") {
+                depth -= 1;
+                if depth == 0 {
+                    j -= 1;
+                    break;
+                }
+            }
+            j -= 1;
+        }
+    }
+    if j >= 0 && toks[j as usize].kind == Kind::Ident {
+        toks[j as usize].text.clone()
+    } else {
+        "?".to_string()
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Until {
+    /// Guard dies when its enclosing block closes (depth falls below).
+    Depth(i32),
+    /// Transient: dies at the next `;`.
+    Stmt,
+    /// Conservatively held to the end of the function.
+    Fn,
+}
+
+struct Held {
+    class: String,
+    name: Option<String>,
+    args: Vec<Token>,
+    until: Until,
+}
+
+struct FnInfo {
+    name: String,
+    edges: Vec<(String, String, u32)>,
+    /// (line, classes held) at each socket operation.
+    sockets: Vec<(u32, Vec<String>)>,
+    /// (callee, line, classes held) at each intra-file call site.
+    calls: Vec<(String, u32, Vec<String>)>,
+    /// Lines where a slot pair was acquired without ordering evidence.
+    pair_violations: Vec<u32>,
+    /// Blocking classes acquired anywhere in the body.
+    acquired: BTreeSet<String>,
+}
+
+fn analyze_fn(toks: &[Token], name: &str, body_start: usize, body_end: usize) -> FnInfo {
+    let mut info = FnInfo {
+        name: name.to_string(),
+        edges: Vec::new(),
+        sockets: Vec::new(),
+        calls: Vec::new(),
+        pair_violations: Vec::new(),
+        acquired: BTreeSet::new(),
+    };
+    let mut held: Vec<Held> = Vec::new();
+    // `let v = expr.min(…)` / `.max(…)` bindings, the slot-pair evidence
+    let mut bindings: BTreeMap<String, &'static str> = BTreeMap::new();
+    let mut depth = 0i32;
+    let mut stmt_start = body_start + 1;
+    let mut i = body_start;
+    while i <= body_end && i < toks.len() {
+        let t = &toks[i];
+        if t.is("{") {
+            depth += 1;
+            stmt_start = i + 1;
+            i += 1;
+            continue;
+        }
+        if t.is("}") {
+            depth -= 1;
+            held.retain(|h| !matches!(h.until, Until::Depth(d) if d > depth));
+            stmt_start = i + 1;
+            i += 1;
+            continue;
+        }
+        if t.is(";") {
+            held.retain(|h| h.until != Until::Stmt);
+            stmt_start = i + 1;
+            i += 1;
+            continue;
+        }
+        // drop(guard) releases by name
+        if t.is_ident("drop")
+            && i + 2 < toks.len()
+            && toks[i + 1].is("(")
+            && toks[i + 2].kind == Kind::Ident
+        {
+            let dropped = toks[i + 2].text.clone();
+            held.retain(|h| h.name.as_deref() != Some(&dropped));
+        }
+        if let Some(acq) = acquisition_at(toks, i) {
+            let line = t.line;
+            if acq.blocking {
+                for h in &held {
+                    info.edges.push((h.class.clone(), acq.class.clone(), line));
+                }
+                info.acquired.insert(acq.class.clone());
+                if acq.class == "slot" && !name.starts_with("lock") {
+                    if let Some(first) = held.iter().find(|h| h.class == "slot") {
+                        if !pair_ordered(&first.args, &acq.args, &bindings) {
+                            info.pair_violations.push(line);
+                        }
+                    }
+                }
+            }
+            // binding / liveness classification
+            let stmt = &toks[stmt_start..i];
+            let is_let = stmt.first().map(|s| s.is_ident("let")).unwrap_or(false);
+            let after_is_semi = toks
+                .get(acq.end + 1)
+                .map(|s| s.is(";"))
+                .unwrap_or(true);
+            let head_is_branch = stmt
+                .first()
+                .map(|s| s.is_ident("match") || s.is_ident("if") || s.is_ident("while"))
+                .unwrap_or(false);
+            let (guard_name, until) = if is_let && after_is_semi {
+                let mut nm = stmt.get(1).map(|s| s.text.clone());
+                if nm.as_deref() == Some("mut") {
+                    nm = stmt.get(2).map(|s| s.text.clone());
+                }
+                (nm, Until::Depth(depth))
+            } else if !is_let && head_is_branch {
+                (None, Until::Fn)
+            } else {
+                (None, Until::Stmt)
+            };
+            held.push(Held {
+                class: acq.class,
+                name: guard_name,
+                args: acq.args,
+                until,
+            });
+            i = acq.end + 1;
+            continue;
+        }
+        // `let lo = a.min(b);` — ascending-order evidence for slot pairs
+        if (t.is_ident("min") || t.is_ident("max")) && i > 0 && toks[i - 1].is(".") {
+            let stmt = &toks[stmt_start..i];
+            if stmt.first().map(|s| s.is_ident("let")).unwrap_or(false) {
+                let mut nm = stmt.get(1).map(|s| s.text.clone());
+                if nm.as_deref() == Some("mut") {
+                    nm = stmt.get(2).map(|s| s.text.clone());
+                }
+                if let Some(nm) = nm {
+                    bindings.insert(nm, if t.is_ident("min") { "min" } else { "max" });
+                }
+            }
+        }
+        if t.kind == Kind::Ident && i + 1 < toks.len() && toks[i + 1].is("(") {
+            let classes: Vec<String> = held.iter().map(|h| h.class.clone()).collect();
+            if is_socket_method(&t.text) {
+                info.sockets.push((t.line, classes));
+            } else {
+                info.calls.push((t.text.clone(), t.line, classes));
+            }
+        }
+        i += 1;
+    }
+    info
+}
+
+/// Is the second slot provably higher-indexed than the first?
+fn pair_ordered(
+    a1: &[Token],
+    a2: &[Token],
+    bindings: &BTreeMap<String, &'static str>,
+) -> bool {
+    if a1.len() != 1 || a2.len() != 1 {
+        return false;
+    }
+    let (t1, t2) = (&a1[0], &a2[0]);
+    if t1.kind == Kind::Num && t2.kind == Kind::Num {
+        let p1: Option<u64> = t1.text.replace('_', "").parse().ok();
+        let p2: Option<u64> = t2.text.replace('_', "").parse().ok();
+        return matches!((p1, p2), (Some(a), Some(b)) if a < b);
+    }
+    if t1.kind == Kind::Ident && t2.kind == Kind::Ident {
+        return bindings.get(&t1.text) == Some(&"min")
+            && bindings.get(&t2.text) == Some(&"max");
+    }
+    false
+}
+
+/// Run the lock-order rule over one file.
+pub fn check_file(path: &str, src: &str) -> Vec<Finding> {
+    let toks = strip_tests(tokenize(src));
+    let fns = functions(&toks);
+    let infos: Vec<FnInfo> = fns
+        .iter()
+        .map(|f| analyze_fn(&toks, &f.name, f.body_start, f.body_end))
+        .collect();
+    let mut by_name: BTreeMap<&str, &FnInfo> = BTreeMap::new();
+    for info in &infos {
+        by_name.entry(info.name.as_str()).or_insert(info);
+    }
+    // transitive closure: which fns reach a socket op / acquire which locks
+    let mut reaches_socket: BTreeMap<&str, bool> = by_name
+        .iter()
+        .map(|(n, i)| (*n, !i.sockets.is_empty()))
+        .collect();
+    let mut lock_closure: BTreeMap<&str, BTreeSet<String>> = by_name
+        .iter()
+        .map(|(n, i)| (*n, i.acquired.clone()))
+        .collect();
+    loop {
+        let mut changed = false;
+        for (name, info) in &by_name {
+            for (callee, _, _) in &info.calls {
+                if !by_name.contains_key(callee.as_str()) {
+                    continue;
+                }
+                if reaches_socket.get(callee.as_str()) == Some(&true)
+                    && reaches_socket.get(name) == Some(&false)
+                {
+                    reaches_socket.insert(name, true);
+                    changed = true;
+                }
+                let add: Vec<String> = lock_closure
+                    .get(callee.as_str())
+                    .map(|s| s.iter().cloned().collect())
+                    .unwrap_or_default();
+                if let Some(own) = lock_closure.get_mut(name) {
+                    for c in add {
+                        changed |= own.insert(c);
+                    }
+                }
+            }
+        }
+        if !changed {
+            break;
+        }
+    }
+    let mut findings = Vec::new();
+    let mut edges: BTreeSet<(String, String, u32)> = BTreeSet::new();
+    for info in &infos {
+        for (a, b, l) in &info.edges {
+            if a != b {
+                edges.insert((a.clone(), b.clone(), *l));
+            }
+        }
+        for l in &info.pair_violations {
+            findings.push(Finding::new(
+                "lock-order",
+                path,
+                *l,
+                format!(
+                    "second slot lock in fn {} without ascending-order evidence \
+                     (use the `let lo = a.min(b); let hi = a.max(b);` pattern)",
+                    info.name
+                ),
+            ));
+        }
+        for (l, classes) in &info.sockets {
+            let bad: Vec<&str> = classes
+                .iter()
+                .map(|c| c.as_str())
+                .filter(|c| !socket_ok(c))
+                .collect();
+            if !bad.is_empty() {
+                findings.push(Finding::new(
+                    "lock-order",
+                    path,
+                    *l,
+                    format!(
+                        "socket operation in fn {} while holding [{}]",
+                        info.name,
+                        bad.join(", ")
+                    ),
+                ));
+            }
+        }
+        for (callee, l, classes) in &info.calls {
+            if callee == &info.name || !by_name.contains_key(callee.as_str()) {
+                continue;
+            }
+            if reaches_socket.get(callee.as_str()) == Some(&true) {
+                let bad: Vec<&str> = classes
+                    .iter()
+                    .map(|c| c.as_str())
+                    .filter(|c| !socket_ok(c))
+                    .collect();
+                if !bad.is_empty() {
+                    findings.push(Finding::new(
+                        "lock-order",
+                        path,
+                        *l,
+                        format!(
+                            "call to {callee} (reaches a socket op) in fn {} \
+                             while holding [{}]",
+                            info.name,
+                            bad.join(", ")
+                        ),
+                    ));
+                }
+            }
+            for class in classes {
+                if let Some(acq) = lock_closure.get(callee.as_str()) {
+                    for c2 in acq {
+                        if class != c2 {
+                            edges.insert((class.clone(), c2.clone(), *l));
+                        }
+                    }
+                }
+            }
+        }
+    }
+    // the documented order is slots before ctl — never the inverse
+    for (a, b, l) in &edges {
+        if a == "ctl" && (b == "slot" || b == "slot_all") {
+            findings.push(Finding::new(
+                "lock-order",
+                path,
+                *l,
+                "slot acquired while ctl is held (documented order: slots, then ctl)",
+            ));
+        }
+    }
+    findings.extend(cycle_findings(path, &edges));
+    findings
+}
+
+fn cycle_findings(path: &str, edges: &BTreeSet<(String, String, u32)>) -> Vec<Finding> {
+    let mut graph: BTreeMap<&str, BTreeSet<&str>> = BTreeMap::new();
+    for (a, b, _) in edges {
+        graph.entry(a).or_default().insert(b);
+    }
+    let mut findings = Vec::new();
+    let mut done: BTreeSet<&str> = BTreeSet::new();
+    let nodes: Vec<&str> = graph.keys().copied().collect();
+    for start in nodes {
+        if done.contains(start) {
+            continue;
+        }
+        // iterative DFS with an explicit path stack
+        let mut stack: Vec<(&str, Vec<&str>)> = vec![(start, vec![start])];
+        while let Some((node, trail)) = stack.pop() {
+            done.insert(node);
+            if let Some(nexts) = graph.get(node) {
+                for next in nexts {
+                    if trail.contains(next) {
+                        let mut cycle = trail.clone();
+                        cycle.push(next);
+                        findings.push(Finding::new(
+                            "lock-order",
+                            path,
+                            0,
+                            format!("lock-order cycle: {}", cycle.join(" -> ")),
+                        ));
+                    } else if !done.contains(next) {
+                        let mut t = trail.clone();
+                        t.push(next);
+                        stack.push((next, t));
+                    }
+                }
+            }
+        }
+    }
+    findings
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clean_min_max_pair_passes() {
+        let src = r#"
+impl G {
+    fn one_exchange(&self, l: usize, j: usize) {
+        let lo = l.min(j);
+        let hi = l.max(j);
+        let g_lo = self.lock_slot(lo);
+        let g_hi = self.lock_slot(hi);
+    }
+}
+"#;
+        assert!(check_file("x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn unordered_pair_flagged() {
+        let src = r#"
+impl G {
+    fn bad(&self, a: usize, b: usize) {
+        let g1 = self.lock_slot(b);
+        let g2 = self.lock_slot(a);
+    }
+}
+"#;
+        let f = check_file("x.rs", src);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert!(f[0].message.contains("ascending-order"));
+    }
+
+    #[test]
+    fn socket_under_ctl_flagged() {
+        let src = r#"
+impl G {
+    fn bad(&self) {
+        let ctl = self.lock_ctl();
+        self.transport.exchange_on(&mut s, f);
+    }
+}
+"#;
+        let f = check_file("x.rs", src);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert!(f[0].message.contains("socket operation"));
+    }
+
+    #[test]
+    fn transient_ctl_projection_passes() {
+        let src = r#"
+impl G {
+    fn ok(&self) {
+        let gen = self.lock_ctl().generation;
+        self.transport.exchange_on(&mut s, gen);
+    }
+}
+"#;
+        assert!(check_file("x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn dropped_guard_releases() {
+        let src = r#"
+impl G {
+    fn ok(&self) {
+        let ctl = self.lock_ctl();
+        drop(ctl);
+        self.transport.exchange_on(&mut s, f);
+    }
+}
+"#;
+        assert!(check_file("x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn socket_through_call_chain_flagged() {
+        let src = r#"
+impl G {
+    fn probe(&self) -> bool {
+        self.stream.peek(&mut [0u8]).is_ok()
+    }
+    fn bad(&self) {
+        let map = self.conns.lock().expect("pool");
+        self.probe();
+    }
+}
+"#;
+        let f = check_file("x.rs", src);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert!(f[0].message.contains("reaches a socket op"));
+    }
+
+    #[test]
+    fn ctl_then_slot_inversion_flagged() {
+        let src = r#"
+impl G {
+    fn bad(&self) {
+        let c = self.lock_ctl();
+        let s = self.lock_slot(0);
+    }
+}
+"#;
+        let f = check_file("x.rs", src);
+        assert!(f.iter().any(|x| x.message.contains("documented order")), "{f:?}");
+    }
+
+    #[test]
+    fn lock_cycle_flagged() {
+        let src = r#"
+impl G {
+    fn ab(&self) {
+        let a = self.alpha.lock().expect("a");
+        let b = self.beta.lock().expect("b");
+    }
+    fn ba(&self) {
+        let b = self.beta.lock().expect("b");
+        let a = self.alpha.lock().expect("a");
+    }
+}
+"#;
+        let f = check_file("x.rs", src);
+        assert!(f.iter().any(|x| x.message.contains("cycle")), "{f:?}");
+    }
+
+    #[test]
+    fn scoped_block_releases_before_socket() {
+        let src = r#"
+impl G {
+    fn ok(&self) {
+        {
+            let ctl = self.lock_ctl();
+            ctl.round += 1;
+        }
+        self.transport.exchange_on(&mut s, f);
+    }
+}
+"#;
+        assert!(check_file("x.rs", src).is_empty());
+    }
+}

@@ -1,0 +1,81 @@
+//! CLI for the in-tree static analysis suite.
+//!
+//! ```text
+//! dudd-analyze [--root DIR] [--json] [RULE ...]
+//! ```
+//!
+//! With no rule arguments (or `all`) every rule runs. Exit status: 0
+//! when clean, 1 when any finding is reported, 2 on usage or I/O
+//! errors — so CI can distinguish "violations" from "broken run".
+
+use dudd_analyze::{report, run_rules, RULES};
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn usage() -> String {
+    format!(
+        "usage: dudd-analyze [--root DIR] [--json] [RULE ...]\n\
+         rules: all (default), {}",
+        RULES.join(", ")
+    )
+}
+
+fn main() -> ExitCode {
+    let mut root = PathBuf::from(".");
+    let mut json = false;
+    let mut rules: Vec<String> = Vec::new();
+    let mut args = std::env::args().skip(1);
+    while let Some(arg) = args.next() {
+        match arg.as_str() {
+            "--root" => match args.next() {
+                Some(dir) => root = PathBuf::from(dir),
+                None => {
+                    eprintln!("--root requires a directory\n{}", usage());
+                    return ExitCode::from(2);
+                }
+            },
+            "--json" => json = true,
+            "--help" | "-h" => {
+                println!("{}", usage());
+                return ExitCode::SUCCESS;
+            }
+            "all" => rules.extend(RULES.iter().map(|r| r.to_string())),
+            r if RULES.contains(&r) => rules.push(r.to_string()),
+            other => {
+                eprintln!("unknown argument '{other}'\n{}", usage());
+                return ExitCode::from(2);
+            }
+        }
+    }
+    if rules.is_empty() {
+        rules.extend(RULES.iter().map(|r| r.to_string()));
+    }
+    rules.dedup();
+
+    let rule_refs: Vec<&str> = rules.iter().map(String::as_str).collect();
+    let findings = match run_rules(&rule_refs, &root) {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("dudd-analyze: {e}");
+            return ExitCode::from(2);
+        }
+    };
+
+    if json {
+        println!("{}", report::to_json(&findings));
+    } else {
+        for f in &findings {
+            println!("{f}");
+        }
+        if findings.is_empty() {
+            eprintln!("dudd-analyze: {} rule(s) clean", rule_refs.len());
+        } else {
+            eprintln!("dudd-analyze: {} finding(s)", findings.len());
+        }
+    }
+    if findings.is_empty() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::from(1)
+    }
+}

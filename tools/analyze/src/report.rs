@@ -1,0 +1,102 @@
+//! Findings and the machine-readable report.
+
+use std::fmt;
+
+/// One rule violation, anchored to a file/line.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    /// Rule slug (`lock-order`, `ambient-time`, `collections`,
+    /// `unsafe`, `lock-unwrap`, `counter-underflow`, `spec-sync`).
+    pub rule: String,
+    /// Path relative to the repo root.
+    pub path: String,
+    /// 1-based line, or 0 for file/tree-level findings.
+    pub line: u32,
+    pub message: String,
+}
+
+impl Finding {
+    pub fn new(rule: &str, path: &str, line: u32, message: impl Into<String>) -> Self {
+        Finding {
+            rule: rule.to_string(),
+            path: path.to_string(),
+            line,
+            message: message.into(),
+        }
+    }
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{}:{}: [{}] {}",
+            self.path, self.line, self.rule, self.message
+        )
+    }
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Render findings as a JSON report:
+/// `{"findings": […], "count": N, "ok": bool}`.
+pub fn to_json(findings: &[Finding]) -> String {
+    let mut out = String::from("{\n  \"findings\": [");
+    for (i, f) in findings.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!(
+            "\n    {{\"rule\": \"{}\", \"path\": \"{}\", \"line\": {}, \"message\": \"{}\"}}",
+            json_escape(&f.rule),
+            json_escape(&f.path),
+            f.line,
+            json_escape(&f.message)
+        ));
+    }
+    if !findings.is_empty() {
+        out.push_str("\n  ");
+    }
+    out.push_str(&format!(
+        "],\n  \"count\": {},\n  \"ok\": {}\n}}\n",
+        findings.len(),
+        findings.is_empty()
+    ));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_round_shape() {
+        let fs = vec![Finding::new("lock-order", "a/b.rs", 7, "bad \"stuff\"")];
+        let j = to_json(&fs);
+        assert!(j.contains("\"rule\": \"lock-order\""));
+        assert!(j.contains("\\\"stuff\\\""));
+        assert!(j.contains("\"count\": 1"));
+        assert!(j.contains("\"ok\": false"));
+    }
+
+    #[test]
+    fn empty_report_is_ok() {
+        let j = to_json(&[]);
+        assert!(j.contains("\"count\": 0"));
+        assert!(j.contains("\"ok\": true"));
+    }
+}

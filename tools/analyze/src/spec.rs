@@ -1,0 +1,793 @@
+//! Wire-spec cross-checker (`spec-sync`).
+//!
+//! Replaces the regex heart of the old `scripts/check_protocol_sync.sh`
+//! with real parsing of both sides:
+//!
+//! * `sketch/codec.rs` — `ExchangeKind` discriminants, the
+//!   `RejectReason` `code()`/`from_code()` pair (checked for bijection),
+//!   and `const VERSION`;
+//! * `service/membership.rs` — the `MemberStatus` wire codes;
+//! * `config.rs` — the canonical `ServiceConfig::set` /
+//!   `GossipLoopConfig::set` keys (first literal of each match arm);
+//! * `docs/PROTOCOL.md` — the kind/reason/status tables, the protocol
+//!   version line, and the configuration-key table;
+//! * `README.md` + `docs/PROTOCOL.md` prose — every backticked
+//!   `gossip_*` mention must name a real config key.
+//!
+//! Every comparison runs both directions: code without spec is as much
+//! drift as spec without code.
+
+use crate::lexer::{matching, tokenize, Kind, Token};
+use crate::report::Finding;
+use std::collections::BTreeMap;
+
+/// The five documents the checker cross-references.
+pub struct SpecInputs {
+    pub codec: String,
+    pub membership: String,
+    pub config: String,
+    pub protocol_md: String,
+    pub readme_md: String,
+}
+
+/// `enum <name> { Variant = N, … }` discriminants.
+fn enum_discriminants(toks: &[Token], name: &str) -> BTreeMap<String, u64> {
+    let mut out = BTreeMap::new();
+    for i in 0..toks.len() {
+        if !(toks[i].is_ident(name) && i > 0 && toks[i - 1].is_ident("enum")) {
+            continue;
+        }
+        let mut j = i + 1;
+        while j < toks.len() && !toks[j].is("{") {
+            j += 1;
+        }
+        if j >= toks.len() {
+            break;
+        }
+        let end = matching(toks, j, "{", "}");
+        let mut depth = 0i32;
+        let mut k = j;
+        while k <= end {
+            if toks[k].is("{") {
+                depth += 1;
+            } else if toks[k].is("}") {
+                depth -= 1;
+            } else if depth == 1
+                && toks[k].kind == Kind::Ident
+                && k + 2 < toks.len()
+                && toks[k + 1].is("=")
+                && toks[k + 2].kind == Kind::Num
+            {
+                if let Ok(v) = toks[k + 2].text.replace('_', "").parse() {
+                    out.insert(toks[k].text.clone(), v);
+                }
+                k += 3;
+                continue;
+            }
+            k += 1;
+        }
+        break;
+    }
+    out
+}
+
+/// `Type::Variant => N` arms (the `code()` direction).
+fn variant_to_code(toks: &[Token], ty: &str) -> BTreeMap<String, u64> {
+    let mut out = BTreeMap::new();
+    for i in 0..toks.len() {
+        if toks[i].is_ident(ty)
+            && i + 6 < toks.len()
+            && toks[i + 1].is(":")
+            && toks[i + 2].is(":")
+            && toks[i + 3].kind == Kind::Ident
+            && toks[i + 4].is("=")
+            && toks[i + 5].is(">")
+            && toks[i + 6].kind == Kind::Num
+        {
+            if let Ok(v) = toks[i + 6].text.replace('_', "").parse() {
+                out.entry(toks[i + 3].text.clone()).or_insert(v);
+            }
+        }
+    }
+    out
+}
+
+/// `N => Type::Variant` and `N => Some(Type::Variant)` arms (the
+/// `from_code` direction).
+fn code_to_variant(toks: &[Token], ty: &str) -> BTreeMap<u64, String> {
+    let mut out = BTreeMap::new();
+    for i in 0..toks.len() {
+        if !(toks[i].is_ident(ty)
+            && i + 3 < toks.len()
+            && toks[i + 1].is(":")
+            && toks[i + 2].is(":")
+            && toks[i + 3].kind == Kind::Ident)
+        {
+            continue;
+        }
+        // walk back over an optional `Some(` / `Ok(` wrapper
+        let mut j = i as isize - 1;
+        if j >= 1 && toks[j as usize].is("(") {
+            let wrap = &toks[(j - 1) as usize];
+            if wrap.is_ident("Some") || wrap.is_ident("Ok") {
+                j -= 2;
+            }
+        }
+        if j >= 2
+            && toks[j as usize].is(">")
+            && toks[(j - 1) as usize].is("=")
+            && toks[(j - 2) as usize].kind == Kind::Num
+        {
+            if let Ok(v) = toks[(j - 2) as usize].text.replace('_', "").parse() {
+                out.entry(v).or_insert(toks[i + 3].text.clone());
+            }
+        }
+    }
+    out
+}
+
+fn const_u64(toks: &[Token], name: &str) -> Option<u64> {
+    for i in 0..toks.len() {
+        if toks[i].is_ident(name) && i > 0 && toks[i - 1].is_ident("const") {
+            for j in i..toks.len().min(i + 10) {
+                if toks[j].is("=") && j + 1 < toks.len() && toks[j + 1].kind == Kind::Num {
+                    return toks[j + 1].text.replace('_', "").parse().ok();
+                }
+            }
+        }
+    }
+    None
+}
+
+/// The canonical key of each arm of `match key { … }` inside
+/// `impl <ty> { fn set … }`: the first string literal of the pattern.
+/// Guarded arms (`_ if key.starts_with(…)`) are skipped.
+fn config_keys(toks: &[Token], ty: &str) -> Vec<String> {
+    let mut keys = Vec::new();
+    let Some((impl_start, impl_end)) = impl_span(toks, ty) else {
+        return keys;
+    };
+    let mut i = impl_start;
+    while i < impl_end {
+        if toks[i].is_ident("match")
+            && i + 2 < toks.len()
+            && toks[i + 1].is_ident("key")
+            && toks[i + 2].is("{")
+        {
+            let end = matching(toks, i + 2, "{", "}");
+            let mut depth = 0i32;
+            let mut pattern: Vec<String> = Vec::new();
+            let mut guarded = false;
+            let mut k = i + 2;
+            while k <= end {
+                let t = &toks[k];
+                if t.is("{") {
+                    depth += 1;
+                } else if t.is("}") {
+                    depth -= 1;
+                } else if depth == 1 {
+                    if t.kind == Kind::Str {
+                        pattern.push(t.text.clone());
+                    } else if t.is_ident("if") {
+                        guarded = true;
+                    } else if t.is("=") && k + 1 <= end && toks[k + 1].is(">") {
+                        if !guarded {
+                            if let Some(first) = pattern.first() {
+                                keys.push(first.clone());
+                            }
+                        }
+                        pattern.clear();
+                        guarded = false;
+                        k += 2;
+                        continue;
+                    } else if t.is(",") {
+                        // arm-body terminator: drop any literals a
+                        // braceless body contributed
+                        pattern.clear();
+                    }
+                }
+                k += 1;
+            }
+            i = end + 1;
+            continue;
+        }
+        i += 1;
+    }
+    keys
+}
+
+/// Every string literal in the `match key` arms (canonical + aliases).
+fn config_keys_with_aliases(toks: &[Token], ty: &str) -> Vec<String> {
+    let mut keys = Vec::new();
+    let Some((impl_start, impl_end)) = impl_span(toks, ty) else {
+        return keys;
+    };
+    let mut i = impl_start;
+    while i < impl_end {
+        if toks[i].is_ident("match")
+            && i + 2 < toks.len()
+            && toks[i + 1].is_ident("key")
+            && toks[i + 2].is("{")
+        {
+            let end = matching(toks, i + 2, "{", "}");
+            let mut depth = 0i32;
+            let mut k = i + 2;
+            let mut in_body = false;
+            while k <= end {
+                let t = &toks[k];
+                if t.is("{") {
+                    depth += 1;
+                } else if t.is("}") {
+                    depth -= 1;
+                    if depth == 1 {
+                        // a braced arm body just closed (no comma follows)
+                        in_body = false;
+                    }
+                } else if depth == 1 {
+                    if t.is("=") && k + 1 <= end && toks[k + 1].is(">") {
+                        in_body = true;
+                        k += 2;
+                        continue;
+                    }
+                    if t.is(",") {
+                        in_body = false;
+                    }
+                    if !in_body && t.kind == Kind::Str {
+                        keys.push(t.text.clone());
+                    }
+                }
+                k += 1;
+            }
+            i = end + 1;
+            continue;
+        }
+        i += 1;
+    }
+    keys
+}
+
+/// Span of `impl <name> { … }` (not `impl Trait for <name>`).
+fn impl_span(toks: &[Token], name: &str) -> Option<(usize, usize)> {
+    for i in 0..toks.len() {
+        if toks[i].is_ident("impl")
+            && i + 2 < toks.len()
+            && toks[i + 1].is_ident(name)
+            && toks[i + 2].is("{")
+        {
+            return Some((i + 2, matching(toks, i + 2, "{", "}")));
+        }
+    }
+    None
+}
+
+/// Rows of the first markdown table whose first two header cells are
+/// `h0` and `h1` (case-insensitive): (backticked-name, numeric-value).
+fn md_code_table(md: &str, h0: &str, h1: &str) -> Vec<(String, u64)> {
+    let mut rows = Vec::new();
+    let mut grab = false;
+    for line in md.lines() {
+        let line = line.trim();
+        if !line.starts_with('|') {
+            if grab {
+                break;
+            }
+            continue;
+        }
+        let cells: Vec<&str> = line
+            .trim_matches('|')
+            .split('|')
+            .map(str::trim)
+            .collect();
+        if cells.len() >= 2
+            && cells[0].eq_ignore_ascii_case(h0)
+            && cells[1].eq_ignore_ascii_case(h1)
+        {
+            grab = true;
+            continue;
+        }
+        if !grab {
+            continue;
+        }
+        if cells
+            .first()
+            .map(|c| c.chars().all(|ch| "-: ".contains(ch)))
+            .unwrap_or(true)
+        {
+            continue;
+        }
+        if let (Some(name), Some(value)) = (
+            backticked(cells[0]),
+            cells.get(1).and_then(|c| c.parse::<u64>().ok()),
+        ) {
+            rows.push((name, value));
+        }
+    }
+    rows
+}
+
+/// Backticked names from the first cell of the table headed `key | …`.
+fn md_key_table(md: &str) -> Vec<String> {
+    let mut keys = Vec::new();
+    let mut grab = false;
+    for line in md.lines() {
+        let line = line.trim();
+        if !line.starts_with('|') {
+            if grab {
+                break;
+            }
+            continue;
+        }
+        let cells: Vec<&str> = line
+            .trim_matches('|')
+            .split('|')
+            .map(str::trim)
+            .collect();
+        if cells
+            .first()
+            .map(|c| c.eq_ignore_ascii_case("key"))
+            .unwrap_or(false)
+        {
+            grab = true;
+            continue;
+        }
+        if !grab {
+            continue;
+        }
+        if cells
+            .first()
+            .map(|c| c.chars().all(|ch| "-: ".contains(ch)))
+            .unwrap_or(true)
+        {
+            continue;
+        }
+        if let Some(name) = backticked(cells[0]) {
+            keys.push(name);
+        }
+    }
+    keys
+}
+
+fn backticked(cell: &str) -> Option<String> {
+    let start = cell.find('`')? + 1;
+    let end = start + cell[start..].find('`')?;
+    Some(cell[start..end].to_string())
+}
+
+/// The `**N**` protocol version stated in PROTOCOL.md.
+fn md_version(md: &str) -> Option<u64> {
+    for line in md.lines() {
+        let lower = line.to_ascii_lowercase();
+        if !lower.contains("protocol version") {
+            continue;
+        }
+        let start = line.find("**")? + 2;
+        let end = start + line[start..].find("**")?;
+        return line[start..end].trim().parse().ok();
+    }
+    None
+}
+
+/// Backticked `gossip_*` identifiers mentioned anywhere in `md`.
+fn gossip_mentions(md: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut rest = md;
+    while let Some(open) = rest.find('`') {
+        let after = &rest[open + 1..];
+        let Some(close) = after.find('`') else { break };
+        let inner = &after[..close];
+        if inner.starts_with("gossip_")
+            && inner
+                .chars()
+                .all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '_')
+        {
+            out.push(inner.to_string());
+        }
+        rest = &after[close + 1..];
+    }
+    out.sort();
+    out.dedup();
+    out
+}
+
+fn diff_maps(
+    findings: &mut Vec<Finding>,
+    what: &str,
+    code_path: &str,
+    code: &BTreeMap<String, u64>,
+    doc: &BTreeMap<String, u64>,
+) {
+    for (name, value) in code {
+        match doc.get(name) {
+            None => findings.push(Finding::new(
+                "spec-sync",
+                "docs/PROTOCOL.md",
+                0,
+                format!("{what} `{name}` (= {value}) is implemented but missing from the spec table"),
+            )),
+            Some(dv) if dv != value => findings.push(Finding::new(
+                "spec-sync",
+                "docs/PROTOCOL.md",
+                0,
+                format!("{what} `{name}`: code says {value}, spec table says {dv}"),
+            )),
+            _ => {}
+        }
+    }
+    for name in doc.keys() {
+        if !code.contains_key(name) {
+            findings.push(Finding::new(
+                "spec-sync",
+                code_path,
+                0,
+                format!("{what} `{name}` is in the spec table but not implemented"),
+            ));
+        }
+    }
+}
+
+pub fn check(inputs: &SpecInputs) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    let codec = tokenize(&inputs.codec);
+    let membership = tokenize(&inputs.membership);
+    let config = tokenize(&inputs.config);
+
+    // 1. ExchangeKind ↔ kind table
+    let kinds = enum_discriminants(&codec, "ExchangeKind");
+    if kinds.is_empty() {
+        findings.push(Finding::new(
+            "spec-sync",
+            "rust/src/sketch/codec.rs",
+            0,
+            "could not extract ExchangeKind discriminants",
+        ));
+    }
+    let doc_kinds: BTreeMap<String, u64> =
+        md_code_table(&inputs.protocol_md, "kind", "value").into_iter().collect();
+    diff_maps(
+        &mut findings,
+        "frame kind",
+        "rust/src/sketch/codec.rs",
+        &kinds,
+        &doc_kinds,
+    );
+
+    // 2. RejectReason: code()/from_code() bijection, then ↔ reason table
+    let to_code = variant_to_code(&codec, "RejectReason");
+    let from_code = code_to_variant(&codec, "RejectReason");
+    for (name, v) in &to_code {
+        if from_code.get(v) != Some(name) {
+            findings.push(Finding::new(
+                "spec-sync",
+                "rust/src/sketch/codec.rs",
+                0,
+                format!(
+                    "RejectReason::{name} encodes to {v} but from_code({v}) \
+                     does not decode back to it"
+                ),
+            ));
+        }
+    }
+    for (v, name) in &from_code {
+        if !to_code.contains_key(name) {
+            findings.push(Finding::new(
+                "spec-sync",
+                "rust/src/sketch/codec.rs",
+                0,
+                format!("from_code({v}) yields RejectReason::{name}, which code() never emits"),
+            ));
+        }
+    }
+    let doc_reasons: BTreeMap<String, u64> =
+        md_code_table(&inputs.protocol_md, "reason", "code").into_iter().collect();
+    diff_maps(
+        &mut findings,
+        "reject reason",
+        "rust/src/sketch/codec.rs",
+        &to_code,
+        &doc_reasons,
+    );
+
+    // 3. MemberStatus ↔ status table
+    let status_to = variant_to_code(&membership, "MemberStatus");
+    let status_from = code_to_variant(&membership, "MemberStatus");
+    for (name, v) in &status_to {
+        if status_from.get(v) != Some(name) {
+            findings.push(Finding::new(
+                "spec-sync",
+                "rust/src/service/membership.rs",
+                0,
+                format!(
+                    "MemberStatus::{name} encodes to {v} but from_code({v}) \
+                     does not decode back to it"
+                ),
+            ));
+        }
+    }
+    let doc_statuses: BTreeMap<String, u64> =
+        md_code_table(&inputs.protocol_md, "status", "code").into_iter().collect();
+    diff_maps(
+        &mut findings,
+        "member status",
+        "rust/src/service/membership.rs",
+        &status_to,
+        &doc_statuses,
+    );
+
+    // 4. VERSION ↔ "Protocol version: **N**"
+    match (const_u64(&codec, "VERSION"), md_version(&inputs.protocol_md)) {
+        (Some(c), Some(d)) if c != d => findings.push(Finding::new(
+            "spec-sync",
+            "docs/PROTOCOL.md",
+            0,
+            format!("codec VERSION is {c} but the spec states protocol version {d}"),
+        )),
+        (None, _) => findings.push(Finding::new(
+            "spec-sync",
+            "rust/src/sketch/codec.rs",
+            0,
+            "could not extract const VERSION",
+        )),
+        (_, None) => findings.push(Finding::new(
+            "spec-sync",
+            "docs/PROTOCOL.md",
+            0,
+            "could not find the `Protocol version: **N**` statement",
+        )),
+        _ => {}
+    }
+
+    // 5. Config keys ↔ the configuration-key table
+    let mut implemented: Vec<String> = config_keys(&config, "ServiceConfig");
+    implemented.extend(
+        config_keys(&config, "GossipLoopConfig")
+            .into_iter()
+            .map(|k| format!("gossip_{k}")),
+    );
+    if implemented.is_empty() {
+        findings.push(Finding::new(
+            "spec-sync",
+            "rust/src/config.rs",
+            0,
+            "could not extract any ServiceConfig/GossipLoopConfig keys",
+        ));
+    }
+    let documented = md_key_table(&inputs.protocol_md);
+    for key in &implemented {
+        if !documented.contains(key) {
+            findings.push(Finding::new(
+                "spec-sync",
+                "docs/PROTOCOL.md",
+                0,
+                format!("config key `{key}` is implemented but missing from the key table"),
+            ));
+        }
+    }
+    for key in &documented {
+        if !implemented.contains(key) {
+            findings.push(Finding::new(
+                "spec-sync",
+                "rust/src/config.rs",
+                0,
+                format!("config key `{key}` is documented but not implemented"),
+            ));
+        }
+    }
+
+    // 6. Prose `gossip_*` mentions must name real keys (canonical or alias)
+    let mut known: Vec<String> = config_keys_with_aliases(&config, "GossipLoopConfig")
+        .into_iter()
+        .map(|k| format!("gossip_{k}"))
+        .collect();
+    known.push("gossip_".to_string()); // the CLI prefix itself
+    for (doc, md) in [
+        ("docs/PROTOCOL.md", &inputs.protocol_md),
+        ("README.md", &inputs.readme_md),
+    ] {
+        for mention in gossip_mentions(md) {
+            if !known.contains(&mention) {
+                findings.push(Finding::new(
+                    "spec-sync",
+                    doc,
+                    0,
+                    format!("`{mention}` is mentioned but is not a gossip config key"),
+                ));
+            }
+        }
+    }
+    findings
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn codec_src() -> String {
+        r#"
+const VERSION: u8 = 1;
+pub enum ExchangeKind { Push = 1, Reply = 2 }
+impl RejectReason {
+    fn code(self) -> u8 {
+        match self { RejectReason::Busy => 1, RejectReason::Malformed => 4 }
+    }
+    fn from_code(code: u8) -> Result<Self, CodecError> {
+        Ok(match code { 1 => RejectReason::Busy, 4 => RejectReason::Malformed,
+            other => return Err(err(other)) })
+    }
+}
+"#
+        .to_string()
+    }
+
+    fn membership_src() -> String {
+        r#"
+impl MemberStatus {
+    pub fn code(self) -> u8 {
+        match self { MemberStatus::Alive => 0, MemberStatus::Dead => 2 }
+    }
+    pub fn from_code(code: u8) -> Option<Self> {
+        match code { 0 => Some(MemberStatus::Alive), 2 => Some(MemberStatus::Dead), _ => None }
+    }
+}
+"#
+        .to_string()
+    }
+
+    fn config_src() -> String {
+        r#"
+impl ServiceConfig {
+    pub fn set(&mut self, key: &str, value: &str) -> Result<(), String> {
+        match key {
+            "alpha" => self.alpha = value.parse()?,
+            "max_buckets" | "buckets" => self.max_buckets = value.parse()?,
+            _ if key.starts_with("gossip_") => self.gossip.set(&key[7..], value)?,
+            other => return Err(format!("unknown key '{other}'")),
+        }
+        Ok(())
+    }
+}
+impl GossipLoopConfig {
+    pub fn set(&mut self, key: &str, value: &str) -> Result<(), String> {
+        match key {
+            "fan_out" | "fanout" => self.fan_out = value.parse()?,
+            other => return Err(format!("unknown key '{other}'")),
+        }
+        Ok(())
+    }
+}
+"#
+        .to_string()
+    }
+
+    fn protocol_md() -> String {
+        r#"
+Protocol version: **1**.
+
+| kind | value | direction |
+|---|---|---|
+| `Push` | 1 | a |
+| `Reply` | 2 | b |
+
+| reason | code | meaning |
+|---|---|---|
+| `Busy` | 1 | x |
+| `Malformed` | 4 | y |
+
+| status | code | meaning |
+|---|---|---|
+| `Alive` | 0 | x |
+| `Dead` | 2 | y |
+
+| key | meaning |
+|---|---|
+| `alpha` | sketch accuracy |
+| `max_buckets` | collapse bound |
+| `gossip_fan_out` | partners per round |
+"#
+        .to_string()
+    }
+
+    fn inputs() -> SpecInputs {
+        SpecInputs {
+            codec: codec_src(),
+            membership: membership_src(),
+            config: config_src(),
+            protocol_md: protocol_md(),
+            readme_md: "uses `gossip_fan_out` for fanout".to_string(),
+        }
+    }
+
+    #[test]
+    fn in_sync_spec_passes() {
+        let f = check(&inputs());
+        assert!(f.is_empty(), "{f:?}");
+    }
+
+    #[test]
+    fn drifted_kind_value_flagged() {
+        let mut inp = inputs();
+        inp.codec = inp.codec.replace("Reply = 2", "Reply = 9");
+        let f = check(&inp);
+        assert!(
+            f.iter().any(|x| x.message.contains("code says 9")),
+            "{f:?}"
+        );
+    }
+
+    #[test]
+    fn missing_doc_row_flagged() {
+        let mut inp = inputs();
+        inp.protocol_md = inp.protocol_md.replace("| `Reply` | 2 | b |\n", "");
+        let f = check(&inp);
+        assert!(
+            f.iter().any(|x| x.message.contains("missing from the spec table")),
+            "{f:?}"
+        );
+    }
+
+    #[test]
+    fn from_code_asymmetry_flagged() {
+        let mut inp = inputs();
+        inp.codec = inp.codec.replace("1 => RejectReason::Busy,", "");
+        let f = check(&inp);
+        assert!(
+            f.iter().any(|x| x.message.contains("does not decode back")),
+            "{f:?}"
+        );
+    }
+
+    #[test]
+    fn undocumented_config_key_flagged() {
+        let mut inp = inputs();
+        inp.protocol_md = inp.protocol_md.replace("| `alpha` | sketch accuracy |\n", "");
+        let f = check(&inp);
+        assert!(
+            f.iter()
+                .any(|x| x.message.contains("`alpha` is implemented but missing")),
+            "{f:?}"
+        );
+    }
+
+    #[test]
+    fn phantom_doc_key_flagged() {
+        let mut inp = inputs();
+        inp.protocol_md = inp
+            .protocol_md
+            .replace("| `alpha` | sketch accuracy |", "| `alpha` | x |\n| `betamax` | y |");
+        let f = check(&inp);
+        assert!(
+            f.iter()
+                .any(|x| x.message.contains("`betamax` is documented but not implemented")),
+            "{f:?}"
+        );
+    }
+
+    #[test]
+    fn stale_gossip_mention_flagged() {
+        let mut inp = inputs();
+        inp.readme_md = "tune `gossip_retired_knob` for speed".to_string();
+        let f = check(&inp);
+        assert!(
+            f.iter().any(|x| x.message.contains("gossip_retired_knob")),
+            "{f:?}"
+        );
+    }
+
+    #[test]
+    fn version_drift_flagged() {
+        let mut inp = inputs();
+        inp.codec = inp.codec.replace("VERSION: u8 = 1", "VERSION: u8 = 2");
+        let f = check(&inp);
+        assert!(
+            f.iter().any(|x| x.message.contains("VERSION is 2")),
+            "{f:?}"
+        );
+    }
+
+    #[test]
+    fn alias_keys_need_no_doc_row() {
+        // `buckets` and `fanout` are aliases; only canonical keys are
+        // required in the table.
+        let f = check(&inputs());
+        assert!(f.is_empty(), "{f:?}");
+    }
+}

@@ -1,0 +1,166 @@
+//! Unsafe/panic audit.
+//!
+//! * `unsafe` — the only module allowed to contain `unsafe` code is
+//!   `service/swap.rs` (the [`ArcSwapCell`] reclamation scheme, which
+//!   the loom model and the Miri lane cover dynamically). Everything
+//!   else must carry `#![forbid(unsafe_code)]` at its module root so
+//!   the compiler enforces the same pin.
+//! * `lock-unwrap` — `.lock().expect(…)` / `.unwrap()` outside a named
+//!   `lock_*` helper. Poisoning policy lives in exactly one place per
+//!   mutex; ad-hoc unwraps drift and hide the policy from review.
+//!
+//! [`ArcSwapCell`]: ../../rust/src/service/swap.rs
+
+use crate::lexer::{enclosing_fn, functions, strip_tests, tokenize, Kind};
+use crate::report::Finding;
+
+/// The single file allowed to contain `unsafe`.
+const UNSAFE_ALLOWED: &str = "rust/src/service/swap.rs";
+
+/// Module roots that must carry `#![forbid(unsafe_code)]`. `lib.rs` and
+/// `service/mod.rs` cannot: a crate- or service-level forbid would
+/// cascade into `swap.rs`.
+pub fn requires_forbid(path: &str) -> bool {
+    let Some(rel) = path.strip_prefix("rust/src/") else {
+        return false;
+    };
+    match rel {
+        "lib.rs" => false,
+        "cli.rs" | "config.rs" | "main.rs" => true,
+        _ => {
+            if let Some(service_file) = rel.strip_prefix("service/") {
+                !service_file.contains('/')
+                    && service_file != "mod.rs"
+                    && service_file != "swap.rs"
+            } else {
+                // other subtrees: the mod.rs root covers the subtree
+                rel.ends_with("/mod.rs")
+            }
+        }
+    }
+}
+
+fn has_forbid(src: &str) -> bool {
+    let toks = tokenize(src);
+    toks.windows(6).any(|w| {
+        w[0].is("#")
+            && w[1].is("!")
+            && w[2].is("[")
+            && w[3].is_ident("forbid")
+            && w[4].is("(")
+            && w[5].is_ident("unsafe_code")
+    })
+}
+
+pub fn check_file(path: &str, src: &str) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    let toks = strip_tests(tokenize(src));
+    if path != UNSAFE_ALLOWED {
+        for t in &toks {
+            if t.is_ident("unsafe") {
+                findings.push(Finding::new(
+                    "unsafe",
+                    path,
+                    t.line,
+                    "unsafe outside service/swap.rs — the audit pins all \
+                     unsafe code to the ArcSwapCell reclamation scheme",
+                ));
+            }
+        }
+    }
+    if requires_forbid(path) && !has_forbid(src) {
+        findings.push(Finding::new(
+            "unsafe",
+            path,
+            0,
+            "missing #![forbid(unsafe_code)] at this module root",
+        ));
+    }
+    // lock-unwrap: `.lock().expect(…)` outside a named lock_* helper
+    let fns = functions(&toks);
+    for (i, t) in toks.iter().enumerate() {
+        let is_lock_call = t.kind == Kind::Ident
+            && (t.text == "lock" || t.text == "try_lock")
+            && i > 0
+            && toks[i - 1].is(".")
+            && i + 4 < toks.len()
+            && toks[i + 1].is("(")
+            && toks[i + 2].is(")")
+            && toks[i + 3].is(".")
+            && (toks[i + 4].is_ident("unwrap") || toks[i + 4].is_ident("expect"));
+        if !is_lock_call {
+            continue;
+        }
+        let fn_name = enclosing_fn(&fns, i).unwrap_or("?");
+        if fn_name != "lock" && !fn_name.starts_with("lock_") {
+            findings.push(Finding::new(
+                "lock-unwrap",
+                path,
+                t.line,
+                format!(
+                    "{} on a {}() result in fn {fn_name} — route through a \
+                     named lock_* helper so the poisoning policy has one home",
+                    toks[i + 4].text, t.text
+                ),
+            ));
+        }
+    }
+    findings
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unsafe_outside_swap_flagged() {
+        let f = check_file(
+            "rust/src/sketch/codec.rs",
+            "#![forbid(unsafe_code)]\nfn f() { unsafe { std::hint::unreachable_unchecked() } }",
+        );
+        // (contradictory file, but the scanner sees the token)
+        assert!(f.iter().any(|x| x.rule == "unsafe"), "{f:?}");
+    }
+
+    #[test]
+    fn unsafe_in_swap_allowed() {
+        let f = check_file(
+            "rust/src/service/swap.rs",
+            "fn f() { unsafe { core::ptr::null::<u8>(); } }",
+        );
+        assert!(f.is_empty(), "{f:?}");
+    }
+
+    #[test]
+    fn missing_forbid_flagged() {
+        let f = check_file("rust/src/sketch/mod.rs", "pub mod codec;");
+        assert_eq!(f.len(), 1);
+        assert!(f[0].message.contains("forbid"));
+    }
+
+    #[test]
+    fn forbid_requirement_scope() {
+        assert!(requires_forbid("rust/src/sketch/mod.rs"));
+        assert!(requires_forbid("rust/src/service/transport.rs"));
+        assert!(requires_forbid("rust/src/config.rs"));
+        assert!(!requires_forbid("rust/src/lib.rs"));
+        assert!(!requires_forbid("rust/src/service/mod.rs"));
+        assert!(!requires_forbid("rust/src/service/swap.rs"));
+        assert!(!requires_forbid("rust/src/sketch/codec.rs"));
+    }
+
+    #[test]
+    fn lock_expect_outside_helper_flagged() {
+        let src = "#![forbid(unsafe_code)]\nimpl A { fn work(&self) { let g = self.state.lock().expect(\"poisoned\"); } }";
+        let f = check_file("rust/src/obs/registry.rs", src);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].rule, "lock-unwrap");
+    }
+
+    #[test]
+    fn lock_expect_inside_helper_allowed() {
+        let src = "#![forbid(unsafe_code)]\nimpl A { fn lock_state(&self) -> G { self.state.lock().expect(\"poisoned\") } }";
+        let f = check_file("rust/src/obs/registry.rs", src);
+        assert!(f.is_empty(), "{f:?}");
+    }
+}

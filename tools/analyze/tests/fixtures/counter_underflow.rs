@@ -1,0 +1,19 @@
+// FAIL fixture: raw subtraction between monotonic counter samples. The
+// delta_since helper and the saturating form must both pass.
+#![forbid(unsafe_code)]
+
+impl PoolStats {
+    fn delta_since(&self, base: &Self) -> u64 {
+        self.hits.get() - base.hits
+    }
+
+    fn report(&self, base: u64) -> u64 {
+        let ok = self.hits.get().saturating_sub(base);
+        let bad = self.misses.get() - base;
+        ok + bad
+    }
+
+    fn atomic_report(&self, base: u64) -> u64 {
+        self.inflight.load(Ordering::Relaxed) - base
+    }
+}

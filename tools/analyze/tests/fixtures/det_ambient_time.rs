@@ -1,0 +1,16 @@
+// FAIL fixture (when presented under a non-exempt path): ambient time
+// read outside the Clock abstraction. The #[cfg(test)] module at the
+// bottom must NOT be flagged.
+fn pace_round(&self) {
+    let started = Instant::now();
+    let stamp = SystemTime::now();
+    self.trace.push(started, stamp);
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn timing_in_tests_is_fine() {
+        let _t = Instant::now();
+    }
+}

@@ -1,0 +1,10 @@
+// FAIL fixture (when presented under a determinism-scoped path such as
+// rust/src/sketch/): hash-ordered state in a wire-encoding path.
+use std::collections::HashMap;
+
+fn encode_buckets(buckets: &HashMap<i32, u64>, out: &mut Vec<u8>) {
+    for (k, v) in buckets {
+        out.extend_from_slice(&k.to_be_bytes());
+        out.extend_from_slice(&v.to_be_bytes());
+    }
+}

@@ -1,0 +1,31 @@
+// PASS fixture: the idioms the lock-order rule must accept.
+impl Gossip {
+    fn one_exchange(&self, local: usize, peer: usize) {
+        let lo = local.min(peer);
+        let hi = local.max(peer);
+        let g_lo = self.lock_slot(lo);
+        let g_hi = self.lock_slot(hi);
+        merge(g_lo, g_hi);
+    }
+
+    fn round(&self) {
+        let _gate = self.lock_gate();
+        let generation = self.lock_ctl().generation;
+        self.transport.exchange_on(&mut stream, generation);
+    }
+
+    fn scoped(&self) {
+        {
+            let mut ctl = self.lock_ctl();
+            ctl.round += 1;
+        }
+        self.transport.exchange_on(&mut stream, 0);
+    }
+
+    fn explicit_drop(&self) {
+        let ctl = self.lock_ctl();
+        let gen = ctl.generation;
+        drop(ctl);
+        self.transport.exchange_membership(&mut stream, gen);
+    }
+}

@@ -1,0 +1,15 @@
+// FAIL fixture: two functions acquire the same two mutexes in opposite
+// orders — a classic AB/BA deadlock the per-file lock graph must reject.
+impl Registry {
+    fn publish(&self) {
+        let families = self.families.lock().expect("families");
+        let ring = self.ring.lock().expect("ring");
+        families.push(ring.snapshot());
+    }
+
+    fn render(&self) {
+        let ring = self.ring.lock().expect("ring");
+        let families = self.families.lock().expect("families");
+        ring.extend(families.iter());
+    }
+}

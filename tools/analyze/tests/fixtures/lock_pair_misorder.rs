@@ -1,0 +1,15 @@
+// FAIL fixture: a second slot acquired with no ascending-order
+// evidence, plus an explicit ctl-then-slot inversion.
+impl Gossip {
+    fn unordered_pair(&self, a: usize, b: usize) {
+        let g1 = self.lock_slot(b);
+        let g2 = self.lock_slot(a);
+        merge(g1, g2);
+    }
+
+    fn inverted(&self) {
+        let ctl = self.lock_ctl();
+        let slot = self.lock_slot(0);
+        slot.absorb(ctl.pending);
+    }
+}

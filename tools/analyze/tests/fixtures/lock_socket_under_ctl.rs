@@ -1,0 +1,17 @@
+// FAIL fixture: blocking socket I/O while holding the control-plane
+// lock, both directly and through an intra-file call chain.
+impl Gossip {
+    fn direct(&self) {
+        let ctl = self.lock_ctl();
+        self.transport.exchange_on(&mut stream, ctl.generation);
+    }
+
+    fn probe(&self) -> bool {
+        self.stream.peek(&mut [0u8]).is_ok()
+    }
+
+    fn via_call(&self) {
+        let conns = self.conns.lock().expect("pool");
+        self.probe();
+    }
+}

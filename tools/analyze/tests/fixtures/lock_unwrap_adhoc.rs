@@ -1,0 +1,14 @@
+// FAIL fixture: ad-hoc poisoning policy. The lock_state helper is the
+// accepted home for .lock().expect(); the inline one in refresh is not.
+#![forbid(unsafe_code)]
+
+impl Cache {
+    fn lock_state(&self) -> MutexGuard<'_, State> {
+        self.state.lock().expect("cache state poisoned")
+    }
+
+    fn refresh(&self) {
+        let mut state = self.state.lock().unwrap();
+        state.generation += 1;
+    }
+}

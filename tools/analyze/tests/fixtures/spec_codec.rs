@@ -1,0 +1,27 @@
+// Spec fixture: a miniature codec in the same shape as
+// rust/src/sketch/codec.rs.
+pub const VERSION: u8 = 3;
+
+#[derive(Clone, Copy)]
+pub enum ExchangeKind {
+    Push = 1,
+    PushReply = 2,
+    Probe = 7,
+}
+
+impl RejectReason {
+    pub fn code(self) -> u8 {
+        match self {
+            RejectReason::Busy => 1,
+            RejectReason::Malformed => 4,
+        }
+    }
+
+    pub fn from_code(code: u8) -> Result<Self, CodecError> {
+        Ok(match code {
+            1 => RejectReason::Busy,
+            4 => RejectReason::Malformed,
+            other => return Err(CodecError::BadReason(other)),
+        })
+    }
+}

@@ -1,0 +1,24 @@
+// Spec fixture: config key dispatch in the same shape as
+// rust/src/config.rs.
+impl ServiceConfig {
+    pub fn set(&mut self, key: &str, value: &str) -> Result<(), String> {
+        match key {
+            "alpha" => self.alpha = value.parse().map_err(|_| bad(key))?,
+            "max_buckets" | "buckets" => self.max_buckets = value.parse().map_err(|_| bad(key))?,
+            _ if key.starts_with("gossip_") => self.gossip.set(&key["gossip_".len()..], value)?,
+            other => return Err(format!("unknown config key '{other}'")),
+        }
+        Ok(())
+    }
+}
+
+impl GossipLoopConfig {
+    pub fn set(&mut self, key: &str, value: &str) -> Result<(), String> {
+        match key {
+            "fan_out" | "fanout" => self.fan_out = value.parse().map_err(|_| bad(key))?,
+            "round_interval_ms" => self.round_interval_ms = value.parse().map_err(|_| bad(key))?,
+            other => return Err(format!("unknown gossip key '{other}'")),
+        }
+        Ok(())
+    }
+}

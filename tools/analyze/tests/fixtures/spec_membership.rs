@@ -1,0 +1,20 @@
+// Spec fixture: MemberStatus wire codes in the same shape as
+// rust/src/service/membership.rs.
+impl MemberStatus {
+    pub fn code(self) -> u8 {
+        match self {
+            MemberStatus::Alive => 0,
+            MemberStatus::Suspect => 1,
+            MemberStatus::Dead => 2,
+        }
+    }
+
+    pub fn from_code(code: u8) -> Option<Self> {
+        match code {
+            0 => Some(MemberStatus::Alive),
+            1 => Some(MemberStatus::Suspect),
+            2 => Some(MemberStatus::Dead),
+            _ => None,
+        }
+    }
+}

@@ -1,0 +1,7 @@
+// FAIL fixture (when presented under any path other than
+// rust/src/service/swap.rs): unsafe outside the pinned module.
+#![forbid(unsafe_code)]
+
+fn read_unchecked(xs: &[u64], i: usize) -> u64 {
+    unsafe { *xs.get_unchecked(i) }
+}

@@ -1,0 +1,199 @@
+//! Fixture-driven integration tests: every rule must accept its pass
+//! fixture, flag its fail fixture, and — the self-check — report the
+//! real `rust/src/` tree as clean.
+
+use dudd_analyze::allow::Allowlist;
+use dudd_analyze::{counters, determinism, locks, report, spec, unsafe_audit};
+use dudd_analyze::{run_rules, RULES};
+use std::path::Path;
+
+fn no_allow() -> Allowlist {
+    Allowlist::parse("")
+}
+
+// ---- lock-order ----
+
+#[test]
+fn lock_clean_fixture_passes() {
+    let f = locks::check_file("fixture.rs", include_str!("fixtures/lock_clean.rs"));
+    assert!(f.is_empty(), "{f:?}");
+}
+
+#[test]
+fn lock_cycle_fixture_flagged() {
+    let f = locks::check_file("fixture.rs", include_str!("fixtures/lock_cycle.rs"));
+    assert!(
+        f.iter().any(|x| x.message.contains("lock-order cycle")),
+        "{f:?}"
+    );
+}
+
+#[test]
+fn socket_under_ctl_fixture_flagged() {
+    let f = locks::check_file(
+        "fixture.rs",
+        include_str!("fixtures/lock_socket_under_ctl.rs"),
+    );
+    assert!(
+        f.iter()
+            .any(|x| x.message.contains("socket operation") && x.message.contains("ctl")),
+        "{f:?}"
+    );
+    assert!(
+        f.iter().any(|x| x.message.contains("reaches a socket op")),
+        "{f:?}"
+    );
+}
+
+#[test]
+fn slot_pair_misorder_fixture_flagged() {
+    let f = locks::check_file(
+        "fixture.rs",
+        include_str!("fixtures/lock_pair_misorder.rs"),
+    );
+    assert!(
+        f.iter().any(|x| x.message.contains("ascending-order")),
+        "{f:?}"
+    );
+    assert!(
+        f.iter().any(|x| x.message.contains("documented order")),
+        "{f:?}"
+    );
+}
+
+// ---- determinism ----
+
+#[test]
+fn ambient_time_fixture_flagged_outside_clock() {
+    let src = include_str!("fixtures/det_ambient_time.rs");
+    let f = determinism::check_file("rust/src/sim/fixture.rs", src, &no_allow());
+    assert_eq!(f.len(), 2, "{f:?}");
+    assert!(f.iter().all(|x| x.rule == "ambient-time"));
+}
+
+#[test]
+fn ambient_time_fixture_allowed_in_clock_module() {
+    let src = include_str!("fixtures/det_ambient_time.rs");
+    let f = determinism::check_file("rust/src/service/clock.rs", src, &no_allow());
+    assert!(f.is_empty(), "{f:?}");
+}
+
+#[test]
+fn hashmap_fixture_flagged_in_wire_scope() {
+    let src = include_str!("fixtures/det_hashmap_wire.rs");
+    let f = determinism::check_file("rust/src/sketch/fixture.rs", src, &no_allow());
+    assert!(!f.is_empty());
+    assert!(f.iter().all(|x| x.rule == "collections"), "{f:?}");
+}
+
+#[test]
+fn hashmap_fixture_ignored_outside_scope() {
+    let src = include_str!("fixtures/det_hashmap_wire.rs");
+    let f = determinism::check_file("rust/src/runtime/fixture.rs", src, &no_allow());
+    assert!(f.is_empty(), "{f:?}");
+}
+
+// ---- unsafe / lock-unwrap ----
+
+#[test]
+fn unsafe_fixture_flagged_outside_swap() {
+    let src = include_str!("fixtures/unsafe_outside_swap.rs");
+    let f = unsafe_audit::check_file("rust/src/graph/fixture.rs", src);
+    assert!(f.iter().any(|x| x.rule == "unsafe"), "{f:?}");
+}
+
+#[test]
+fn unsafe_fixture_allowed_in_swap() {
+    let src = include_str!("fixtures/unsafe_outside_swap.rs");
+    let f = unsafe_audit::check_file("rust/src/service/swap.rs", src);
+    assert!(f.is_empty(), "{f:?}");
+}
+
+#[test]
+fn adhoc_lock_unwrap_fixture_flagged() {
+    let src = include_str!("fixtures/lock_unwrap_adhoc.rs");
+    let f = unsafe_audit::check_file("rust/src/obs/fixture.rs", src);
+    assert_eq!(f.len(), 1, "{f:?}");
+    assert_eq!(f[0].rule, "lock-unwrap");
+    assert!(f[0].message.contains("refresh"));
+}
+
+// ---- counter-underflow ----
+
+#[test]
+fn counter_fixture_flags_raw_subtractions_only() {
+    let src = include_str!("fixtures/counter_underflow.rs");
+    let f = counters::check_file("rust/src/obs/fixture.rs", src);
+    assert_eq!(f.len(), 2, "{f:?}");
+    assert!(f.iter().all(|x| x.rule == "counter-underflow"));
+}
+
+// ---- spec-sync ----
+
+fn fixture_spec(protocol_md: &str) -> spec::SpecInputs {
+    spec::SpecInputs {
+        codec: include_str!("fixtures/spec_codec.rs").to_string(),
+        membership: include_str!("fixtures/spec_membership.rs").to_string(),
+        config: include_str!("fixtures/spec_config.rs").to_string(),
+        protocol_md: protocol_md.to_string(),
+        readme_md: "Pass `gossip_fan_out` (alias `gossip_fanout`) on the CLI.".to_string(),
+    }
+}
+
+#[test]
+fn spec_fixture_in_sync_passes() {
+    let f = spec::check(&fixture_spec(include_str!("fixtures/spec_protocol.md")));
+    assert!(f.is_empty(), "{f:?}");
+}
+
+#[test]
+fn spec_fixture_drift_flagged() {
+    let f = spec::check(&fixture_spec(include_str!(
+        "fixtures/spec_protocol_drift.md"
+    )));
+    // seeded drift 1: PushReply value disagrees
+    assert!(
+        f.iter()
+            .any(|x| x.message.contains("PushReply") && x.message.contains("spec table says 9")),
+        "{f:?}"
+    );
+    // seeded drift 2: phantom config key
+    assert!(
+        f.iter()
+            .any(|x| x.message.contains("`gossip_retry_budget` is documented but not implemented")),
+        "{f:?}"
+    );
+    // seeded drift 3: stale prose mention
+    assert!(
+        f.iter()
+            .any(|x| x.message.contains("gossip_fanout_bias")),
+        "{f:?}"
+    );
+}
+
+// ---- report shape ----
+
+#[test]
+fn json_report_is_stable_shape() {
+    let f = locks::check_file("fixture.rs", include_str!("fixtures/lock_cycle.rs"));
+    let j = report::to_json(&f);
+    assert!(j.contains("\"ok\": false"));
+    assert!(j.contains("\"rule\": \"lock-order\""));
+}
+
+// ---- self-check: the real tree is clean ----
+
+#[test]
+fn real_tree_is_clean() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join("..");
+    let findings = run_rules(RULES, &root).expect("walk rust/src");
+    assert!(
+        findings.is_empty(),
+        "rules fired on the real tree:\n{}",
+        findings
+            .iter()
+            .map(|f| f.to_string())
+            .collect::<Vec<_>>()
+            .join("\n")
+    );
+}
