@@ -1,0 +1,143 @@
+//! Churn cost A/B (ISSUE 9): what a join, a death, and an epoch advance
+//! cost a fleet in wall-clock and wire bytes, under the restart-free
+//! rules (`gossip_restart_free = true`, the default — `docs/PROTOCOL.md`
+//! §10) versus the PR 5 restart-everything rules (`= false`).
+//!
+//! Three churn kinds, each as a matched A/B pair:
+//!
+//! * **join / death / quiet** — whole deterministic simulator runs (the
+//!   production loop + membership plane over `SimTransport`, virtual
+//!   clock) with one scheduled churn wave mid-run; `quiet` is the
+//!   no-churn floor both arms share. Wall-clock lands in the timed
+//!   cases; the wire-byte and generation A/B — which the timer cannot
+//!   see — is printed as `churn-bytes …` lines from one reference run
+//!   of each arm (same seed, so the lines are reproducible).
+//! * **epoch-carry / epoch-reseed** — the live `GossipLoop` stepping
+//!   through an epoch advance per iteration: carried in place as an
+//!   additive delta (restart-free) versus a full snapshot → `PeerState`
+//!   rebuild of the whole fleet (PR 5 rules).
+//!
+//! `DUDD_BENCH_JSON=BENCH_churn.json cargo bench --bench churn_cost`
+//! refreshes the committed baseline.
+
+// Plain-data configs are mutated after `default()` on purpose (see lib.rs).
+#![allow(clippy::field_reassign_with_default)]
+
+use duddsketch::config::{GossipLoopConfig, ServiceConfig};
+use duddsketch::data::{peer_dataset, DatasetKind};
+use duddsketch::rng::default_rng;
+use duddsketch::service::{GossipLoop, GossipMember, QuantileService};
+use duddsketch::sim::{EventAction, Scenario, ScheduledEvent, SimFleet};
+use duddsketch::util::bench::{black_box, Bencher};
+use std::sync::Arc;
+
+/// Fleet size for the simulator arms — big enough that a fleet-wide
+/// reseed visibly outweighs one member's churn, small enough that a
+/// whole run fits a bench iteration.
+const MEMBERS: usize = 24;
+const ROUNDS: u64 = 20;
+const SEED: u64 = 7;
+
+fn churn_scenario(name: &str, restart_free: bool, action: Option<EventAction>) -> Scenario {
+    let mut s = Scenario::default();
+    s.name = name.into();
+    s.members = MEMBERS;
+    s.rounds = ROUNDS;
+    s.items_per_member = 100;
+    s.alpha = 0.01;
+    s.max_buckets = 256;
+    // Dead-detection fits the run: suspicion outlives one virtual
+    // round, death two (as in the integration scenarios).
+    s.suspect_after_ms = 1_000;
+    s.restart_free = restart_free;
+    if let Some(action) = action {
+        s.events = vec![ScheduledEvent { round: 8, action }];
+    }
+    s
+}
+
+/// One timed case per A/B arm, plus a reference run whose byte and
+/// generation totals are printed (the part a wall-clock sample can't
+/// carry). `mk` rebuilds the churn wave per run so the scenario needs
+/// no `Clone`.
+fn sim_case(b: &mut Bencher, label: &str, mk: impl Fn() -> Option<EventAction>) {
+    for restart_free in [true, false] {
+        let report = SimFleet::new(churn_scenario(label, restart_free, mk()), SEED)
+            .unwrap()
+            .run()
+            .unwrap();
+        let exchange_bytes: usize = report.rounds.iter().map(|r| r.bytes).sum();
+        let membership_bytes: usize = report.rounds.iter().map(|r| r.membership_bytes).sum();
+        let final_generation = report.rounds.iter().map(|r| r.generation).max().unwrap_or(1);
+        println!(
+            "churn-bytes {label} restart-free={restart_free}: wire_bytes={} \
+             exchange_bytes={exchange_bytes} membership_bytes={membership_bytes} \
+             final_generation={final_generation}",
+            report.net.bytes
+        );
+        b.case(
+            &format!("churn/{label} restart-free={restart_free}"),
+            MEMBERS as u64,
+            || {
+                black_box(
+                    SimFleet::new(churn_scenario(label, restart_free, mk()), SEED)
+                        .unwrap()
+                        .run()
+                        .unwrap(),
+                );
+            },
+        );
+    }
+}
+
+/// A live-loop fleet (one real service + static peers) for the epoch
+/// arm, mirroring the `gossip_loop` bench fixture.
+fn epoch_fleet(nodes: usize, restart_free: bool) -> (GossipLoop, Arc<QuantileService>) {
+    let master = default_rng(42);
+    let mut cfg = ServiceConfig::default();
+    cfg.shards = 2;
+    let svc = QuantileService::start_shared(cfg).unwrap();
+    let mut w = svc.writer();
+    w.insert_batch(&peer_dataset(DatasetKind::Exponential, 0, 20_000, &master));
+    w.flush();
+    svc.flush();
+    let mut members = vec![GossipMember::service(svc.clone())];
+    for i in 1..nodes {
+        let data = peer_dataset(DatasetKind::Exponential, i, 20_000, &master);
+        members.push(GossipMember::from_dataset(&data, 0.001, 1024).unwrap());
+    }
+    let mut gcfg = GossipLoopConfig::default();
+    gcfg.restart_free = restart_free;
+    let gl = GossipLoop::start(gcfg, members).unwrap();
+    (gl, svc)
+}
+
+fn main() {
+    let mut b = Bencher::new();
+
+    sim_case(&mut b, "join", || Some(EventAction::Join(4)));
+    sim_case(&mut b, "death", || Some(EventAction::Crash(4)));
+    sim_case(&mut b, "quiet", || None);
+
+    // Epoch advance: each iteration publishes a fresh epoch, then steps.
+    // Restart-free folds the additive delta into the averaged slot in
+    // place; the PR 5 arm rebuilds every PeerState from snapshots.
+    for restart_free in [true, false] {
+        let (gl, svc) = epoch_fleet(16, restart_free);
+        let mut w = svc.writer();
+        let mode = if restart_free { "carry" } else { "reseed" };
+        b.case(&format!("churn/epoch-{mode} nodes=16"), 16, || {
+            w.insert(1.0);
+            w.flush();
+            svc.flush();
+            black_box(gl.step());
+        });
+        drop(w);
+        drop(gl);
+        if let Ok(s) = Arc::try_unwrap(svc) {
+            s.shutdown();
+        }
+    }
+
+    b.finish("churn_cost");
+}

@@ -20,7 +20,7 @@ const ITEMS: usize = 20_000;
 
 /// A fleet of one live service plus `nodes - 1` static peers, seeded and
 /// ready to step.
-fn fleet(nodes: usize) -> (GossipLoop, Arc<QuantileService>) {
+fn fleet(nodes: usize, restart_free: bool) -> (GossipLoop, Arc<QuantileService>) {
     let master = default_rng(42);
     let mut cfg = ServiceConfig::default();
     cfg.shards = 2;
@@ -34,7 +34,9 @@ fn fleet(nodes: usize) -> (GossipLoop, Arc<QuantileService>) {
         let data = peer_dataset(DatasetKind::Exponential, i, ITEMS, &master);
         members.push(GossipMember::from_dataset(&data, 0.001, 1024).unwrap());
     }
-    let gl = GossipLoop::start(GossipLoopConfig::default(), members).unwrap();
+    let mut gcfg = GossipLoopConfig::default();
+    gcfg.restart_free = restart_free;
+    let gl = GossipLoop::start(gcfg, members).unwrap();
     (gl, svc)
 }
 
@@ -42,7 +44,7 @@ fn main() {
     let mut b = Bencher::new();
 
     for nodes in [4usize, 16, 64] {
-        let (gl, svc) = fleet(nodes);
+        let (gl, svc) = fleet(nodes, true);
         b.case(&format!("loop/steady-round nodes={nodes}"), nodes as u64, || {
             black_box(gl.step());
         });
@@ -54,8 +56,11 @@ fn main() {
 
     // Reseed path: every case iteration publishes a fresh epoch first, so
     // each step pays the full snapshot → PeerState rebuild for the fleet.
+    // Pinned to `restart_free = false` — under the restart-free default an
+    // epoch advance is carried in place instead; the carry-vs-reseed A/B
+    // lives in the `churn_cost` bench.
     for nodes in [4usize, 16] {
-        let (gl, svc) = fleet(nodes);
+        let (gl, svc) = fleet(nodes, false);
         let mut w = svc.writer();
         b.case(&format!("loop/reseed-round nodes={nodes}"), nodes as u64, || {
             w.insert(1.0);

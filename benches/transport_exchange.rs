@@ -39,6 +39,7 @@ fn opts(pool: usize, delta: bool) -> TcpTransportOptions {
         pool_connections: pool,
         pool_idle: Duration::from_millis(30_000),
         delta_exchanges: delta,
+        ..TcpTransportOptions::default()
     }
 }
 

@@ -157,13 +157,14 @@ USAGE:
   duddsketch sim-fleet [--scenario NAME|FILE] [--seed X] [--members N]
             [--rounds R] [--items N] [--alpha A] [--m M] [--fan-out F]
             [--graph KIND] [--dataset NAME] [--churn KIND]
-            [--drop-prob P] [--json-log FILE] [--trace FILE] [--quiet]
+            [--drop-prob P] [--restart-free BOOL] [--json-log FILE]
+            [--trace FILE] [--quiet]
       run a whole simulated fleet in one process (docs/SIMULATION.md):
       the production gossip loop + membership plane over simulated
       links with injectable faults, driven round by round on a virtual
       clock. --scenario names a built-in (baseline, churn-storm,
-      lossy, partition) or a scenario file; the flags override its
-      knobs. Every round checks the fleet's union estimate against the
+      join-storm, lossy, partition) or a scenario file; the flags
+      override its knobs. Every round checks the fleet's union estimate against the
       exact oracle; the run fails unless the fleet converges within
       the bound by the final round. --json-log writes the per-round
       JSON log, --trace the deterministic event trace (same seed ⇒
@@ -1278,6 +1279,9 @@ fn cmd_sim_fleet(args: &Args) -> Result<String> {
     }
     if let Some(v) = args.flag("drop-prob") {
         scenario.faults.drop_prob = v.parse().context("--drop-prob")?;
+    }
+    if let Some(v) = args.flag("restart-free") {
+        scenario.restart_free = v.parse().context("--restart-free")?;
     }
     scenario.validate()?;
 

@@ -425,6 +425,17 @@ pub struct GossipLoopConfig {
     /// local node observed the death, then garbage-collected. Keep it
     /// well above the fleet's anti-entropy spread time. Must be ≥ 1.
     pub tombstone_ttl_ms: u64,
+    /// Restart-free churn and epochs (`docs/PROTOCOL.md` §10): joins
+    /// and incarnation advances are admitted into the **current**
+    /// restart generation (a joiner enters with `q̃ = 0`, which is
+    /// mass-conserving by construction), additive epoch advances are
+    /// folded in as a carry delta instead of a reseed, and delta
+    /// baselines survive generation bumps (fingerprint-authenticated
+    /// baseline carry). Only dead ↔ non-dead flips of the member set
+    /// still re-anchor the generation. `false` restores the PR 5
+    /// bump-on-every-view-change behaviour (the A/B arm of the churn
+    /// bench).
+    pub restart_free: bool,
 }
 
 impl Default for GossipLoopConfig {
@@ -443,6 +454,7 @@ impl Default for GossipLoopConfig {
             seed_peers: Vec::new(),
             suspect_after_ms: 5_000,
             tombstone_ttl_ms: 60_000,
+            restart_free: true,
         }
     }
 }
@@ -498,6 +510,9 @@ impl GossipLoopConfig {
             }
             "tombstone_ttl_ms" | "tombstone_ttl" => {
                 self.tombstone_ttl_ms = value.parse().map_err(|_| parse_err(key, value))?
+            }
+            "restart_free" => {
+                self.restart_free = parse_bool(value).ok_or_else(|| parse_err(key, value))?
             }
             other => return Err(format!("unknown gossip config key '{other}'")),
         }
@@ -557,7 +572,8 @@ impl GossipLoopConfig {
     pub fn summary(&self) -> String {
         format!(
             "round_ms={} fan_out={} graph={} drift<={:e} probes={:?} seed={} deadline_ms={} \
-             pool={} pool_idle_ms={} delta={} seeds={} suspect_after_ms={} tombstone_ttl_ms={}",
+             pool={} pool_idle_ms={} delta={} seeds={} suspect_after_ms={} tombstone_ttl_ms={} \
+             restart_free={}",
             self.round_interval_ms,
             self.fan_out,
             self.graph.name(),
@@ -571,6 +587,7 @@ impl GossipLoopConfig {
             self.seed_peers.len(),
             self.suspect_after_ms,
             self.tombstone_ttl_ms,
+            self.restart_free,
         )
     }
 }
@@ -775,6 +792,19 @@ mod tests {
         let s = GossipLoopConfig::default().summary();
         assert!(s.contains("suspect_after_ms=5000"), "{s}");
         assert!(s.contains("tombstone_ttl_ms=60000"), "{s}");
+    }
+
+    #[test]
+    fn gossip_restart_free_key_sets_and_defaults_on() {
+        let mut c = ServiceConfig::default();
+        assert!(c.gossip.restart_free, "restart-free churn is the default");
+        c.set("gossip_restart_free", "off").unwrap();
+        assert!(!c.gossip.restart_free);
+        c.set("gossip_restart_free", "1").unwrap();
+        assert!(c.gossip.restart_free);
+        assert!(c.set("gossip_restart_free", "maybe").is_err());
+        let s = GossipLoopConfig::default().summary();
+        assert!(s.contains("restart_free=true"), "{s}");
     }
 
     #[test]

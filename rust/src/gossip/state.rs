@@ -102,6 +102,31 @@ impl PeerState {
         Ok(())
     }
 
+    /// Epoch-carry correction (`docs/PROTOCOL.md` §10): fold an
+    /// insert-only extension of the *local* summary into this
+    /// already-averaged slot, so an epoch advance needs no protocol
+    /// restart. `delta` is the bucketwise difference between the new
+    /// local snapshot and the summary this slot was last seeded from
+    /// ([`UddSketch::additive_delta`]).
+    ///
+    /// Correction algebra: the averaged quantities are conserved as
+    /// *fleet sums* (`Σ n_tilde = Σ N_l`, `Σ B̃_i = Σ B_i`). Growing the
+    /// local stream by the delta grows each sum by exactly the delta's
+    /// contribution, so adding the full delta to this one slot — sketch
+    /// merged at weight (1, 1), `n_tilde += delta.count()` — keeps every
+    /// sum exact; subsequent exchanges re-spread the new mass at the
+    /// usual variance-contraction rate. `q̃` carries mass about the
+    /// *membership*, not the stream, and is untouched: the generation's
+    /// `q̃` total stays exactly 1.
+    pub fn carry_epoch_delta<S: Store>(
+        &mut self,
+        delta: &UddSketch<S>,
+    ) -> Result<(), SketchError> {
+        self.sketch.merge_weighted(&delta.convert_store(), 1.0, 1.0)?;
+        self.n_tilde += delta.count();
+        Ok(())
+    }
+
     /// Estimated network size `p̃ = round(1/q̃)` (∞ while `q̃` is still 0,
     /// i.e. before any information from peer 0 reached this peer).
     ///
@@ -319,6 +344,34 @@ mod tests {
         for x in [0.5, 1.0, 10.0, 50.0, 99.0, 200.0] {
             assert_eq!(avg.cdf(x).unwrap(), seq.cdf(x).unwrap(), "cdf x={x}");
         }
+    }
+
+    #[test]
+    fn carry_epoch_delta_conserves_fleet_sums() {
+        // Peer 1's local stream grows by an epoch mid-gossip; the carry
+        // keeps every fleet sum equal to the new global totals without
+        // touching the generation's q̃ mass.
+        let mut local: UddSketch = UddSketch::new(0.01, 64).unwrap();
+        local.extend(&[10.0, 20.0]);
+        let mut a = PeerState::init(0, &[1.0, 2.0], 0.01, 64).unwrap();
+        let mut b = PeerState::from_sketch(1, &local);
+        PeerState::exchange(&mut a, &mut b).unwrap();
+
+        let seed = local.clone();
+        local.extend(&[30.0, 40.0, 50.0]);
+        let delta = local.additive_delta(&seed).unwrap();
+        b.carry_epoch_delta(&delta).unwrap();
+
+        assert_eq!(a.n_tilde + b.n_tilde, 7.0, "Σ n_tilde == Σ N_l");
+        assert_eq!(a.q_tilde + b.q_tilde, 1.0, "q̃ mass untouched");
+        assert!(
+            (a.sketch.count() + b.sketch.count() - 7.0).abs() < 1e-12,
+            "Σ averaged counters == global count"
+        );
+        // Another exchange keeps re-spreading the carried mass.
+        PeerState::exchange(&mut a, &mut b).unwrap();
+        assert_eq!(a.n_tilde + b.n_tilde, 7.0);
+        assert_eq!(a.q_tilde + b.q_tilde, 1.0);
     }
 
     #[test]

@@ -117,7 +117,8 @@ pub mod prelude {
     pub use crate::service::{
         GlobalView, GossipLoop, GossipMember, GossipRoundReport, InProcessTransport,
         MemberStatus, MemberTable, Membership, Node, NodeBuilder, QuantileService,
-        ServiceWriter, Snapshot, TcpTransport, TcpTransportOptions, Transport, TransportError,
+        RestartCause, ServiceWriter, Snapshot, TcpTransport, TcpTransportOptions, Transport,
+        TransportError,
     };
     pub use crate::sketch::{QuantileReader, SketchError, UddSketch};
 }

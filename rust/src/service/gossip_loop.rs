@@ -10,8 +10,11 @@
 //! ```text
 //!        ┌────────────────────────── every round ─────────────────────────┐
 //!        │ refresh: any service published a newer epoch? a partner        │
-//!        │          reported a newer restart generation?                  │
-//!        │   └─ yes → reseed every local PeerState (protocol restart,     │
+//!        │          reported a newer restart generation? the member       │
+//!        │          view re-anchored?                                     │
+//!        │   ├─ epoch only → fold the snapshot's additive delta into     │
+//!        │   │   the averaged slot in place (restart-free carry, §10)    │
+//!        │   └─ else → reseed every local PeerState (protocol restart,    │
 //!        │            Prop. 4: averaging re-converges from any states)    │
 //!        │ exchange: one fan-out push–pull round over the overlay,        │
 //!        │           every partner interaction through the Transport      │
@@ -30,19 +33,35 @@
 //! drift since the previous round; once the drift falls below
 //! [`GossipLoopConfig::convergence_rel`] the view is flagged converged.
 //!
-//! **Restart generations.** The reseed-all policy is load-bearing: `q̃`
-//! mass must stay exactly 1 across the fleet for the network-size
-//! estimate `p̃ = 1/q̃` to be unbiased, so a newer epoch anywhere restarts
-//! *every* member rather than patching one peer in place. In-process
-//! fleets restart atomically, as in PR 2. Across machines the restart is
-//! coordinated by a **generation counter** carried in every exchange
-//! frame: a node whose local epoch advances reseeds and bumps its
-//! generation; a node that *hears* a newer generation (in an inbound
-//! push, or in a partner's stale-rejection) reseeds **from its own latest
-//! summary** and adopts that generation before any averaging. States
-//! from different generations never average together, so within each
-//! generation the `q̃` mass is exactly 1 and the fixed point is the union
-//! of the freshest local summaries.
+//! **Restarts and restart-free churn.** `q̃` mass must stay exactly 1
+//! across the fleet for the network-size estimate `p̃ = 1/q̃` to be
+//! unbiased. PR 5 guarded that invariant with a blunt rule — *any*
+//! churn or epoch advance restarted every member — which turned a
+//! large fleet's steady trickle of joins and ingest into a generation
+//! storm that never let averaging converge. The rules are now sharper
+//! (normative statement: `docs/PROTOCOL.md` §10), on by default via
+//! [`GossipLoopConfig::restart_free`](crate::config::GossipLoopConfig::restart_free):
+//!
+//! * **Joins are free.** A joiner enters the *current* generation with
+//!   `q̃ = 0`: zero mass in, zero mass moved, Σ`q̃` is untouched — the
+//!   invariant holds by construction, no coordination round needed.
+//! * **Epoch advances carry.** A local epoch advance folds the
+//!   snapshot's additive delta (new summary − seed summary) into the
+//!   averaged slot in place; the fleet sums move exactly as if the new
+//!   items had been present at the last restart. Only when the delta
+//!   is undefined — the summary is not an insert-only extension of the
+//!   seed (window eviction, lineage reset) — does the node fall back
+//!   to a restart ([`RestartCause::EpochFallback`]).
+//! * **Only deaths re-anchor.** A dead ↔ non-dead flip of the member
+//!   view is the one churn event that still restarts the protocol: a
+//!   dead node's in-memory mass share is unrecoverable, so survivors
+//!   bump the **generation counter** carried in every exchange frame
+//!   and reseed from their own latest summaries. A node that *hears* a
+//!   newer generation (in an inbound push, or in a partner's
+//!   stale-rejection) reseeds and adopts it before any averaging —
+//!   states from different generations never average together, so
+//!   within each generation the `q̃` mass is exactly 1 and the fixed
+//!   point is the union of the freshest local summaries.
 //!
 //! # Locking model (per-member since PR 4)
 //!
@@ -261,6 +280,14 @@ pub struct GossipRoundReport {
     /// snapshots (local epoch advance, or a newer generation heard from a
     /// partner node).
     pub reseeded: bool,
+    /// Why this round restarted the protocol; `None` whenever
+    /// [`GossipRoundReport::reseeded`] is false. See [`RestartCause`].
+    pub restart_cause: Option<RestartCause>,
+    /// True when a local epoch advance was absorbed **in place** by the
+    /// restart-free epoch carry — the stale services' additive deltas
+    /// were folded into their averaged slots with no reseed and no
+    /// generation bump (`docs/PROTOCOL.md` §10).
+    pub epoch_carried: bool,
     /// Completed push–pull exchanges this round. An exchange that
     /// recovered from a stale pooled connection by retrying on a fresh
     /// connect counts here, not in `failed`.
@@ -303,6 +330,44 @@ pub struct GossipRoundReport {
     pub membership_duration: Duration,
     /// Wall clock of the probe → drift fold → view publication phase.
     pub publish_duration: Duration,
+}
+
+/// Why a refresh restarted the protocol (reseed + generation
+/// handling), reported in [`GossipRoundReport::restart_cause`]. The
+/// discriminants are stable diagnostic codes, machine-checked by
+/// `dudd-analyze spec-sync` against the cause table in
+/// `docs/PROTOCOL.md` §10.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum RestartCause {
+    /// A local service published a newer epoch while restart-free
+    /// carry is disabled (`gossip_restart_free = false`): the classic
+    /// PR 5 epoch-advance restart.
+    EpochAdvance = 1,
+    /// The membership view re-anchored — under restart-free rules a
+    /// dead ↔ non-dead flip (death or resurrection); with restart-free
+    /// off, any change of the non-dead member set.
+    ViewChange = 2,
+    /// A partner reported a newer restart generation (stale-rejection
+    /// or inbound frame) and this node adopted it.
+    GenerationCatchUp = 3,
+    /// A local epoch advance whose additive delta was undefined — the
+    /// new summary is not an insert-only extension of the seed (window
+    /// eviction, lineage reset) — so the restart-free carry fell back
+    /// to a full restart.
+    EpochFallback = 4,
+}
+
+/// Outcome of the refresh phase (internal to the round path).
+enum RefreshOutcome {
+    /// Nothing moved: no restart, no carry.
+    Idle,
+    /// A pure local epoch advance was absorbed in place by the
+    /// restart-free carry.
+    Carried,
+    /// The protocol restarted: reseed, plus generation handling per
+    /// the cause.
+    Restarted(RestartCause),
 }
 
 /// Per-round membership telemetry
@@ -363,6 +428,10 @@ struct Ctl {
     /// Snapshot epoch each member was last seeded from (0 for
     /// static/remote).
     epochs: Vec<u64>,
+    /// The summary each local **service** slot was last reseeded from
+    /// or carried to — the baseline the restart-free epoch carry diffs
+    /// the next snapshot against (`None` for static/remote members).
+    seeds: Vec<Option<GossipSketch>>,
     round: u64,
     generation: u64,
     /// Highest remote generation heard via stale-rejections; adopted at
@@ -699,12 +768,15 @@ impl GossipLoop {
             })
             .collect();
         let mut epochs = vec![0u64; n];
+        let mut seeds: Vec<Option<GossipSketch>> = vec![None; n];
         for (i, m) in members.iter().enumerate() {
             match m {
                 GossipMember::Service(svc) => {
                     let snap = svc.snapshot();
                     epochs[i] = snap.epoch();
-                    states[i] = PeerState::from_sketch(i, snap.sketch());
+                    let seed: GossipSketch = snap.sketch().convert_store();
+                    states[i] = PeerState::from_sketch(i, &seed);
+                    seeds[i] = Some(seed);
                 }
                 GossipMember::Static(sketch) => {
                     states[i] = PeerState::from_sketch(i, sketch);
@@ -716,6 +788,7 @@ impl GossipLoop {
             rng: master.derive(0x1005),
             online: vec![true; n],
             epochs,
+            seeds,
             round: 0,
             generation: 1,
             pending_generation: 0,
@@ -775,11 +848,16 @@ impl GossipLoop {
     /// * after each data exchange the initiator piggybacks one
     ///   membership anti-entropy push–pull on the same (pooled)
     ///   connection;
-    /// * any change of the **non-dead member set** — a join, a death —
-    ///   restarts the protocol exactly like a local epoch advance
-    ///   (generation bump + reseed-from-own-summary), with the
-    ///   *distinguished* `q̃ = 1` role assigned to the lowest non-dead
-    ///   id, so the generation's mass stays exactly 1 across churn.
+    /// * under restart-free churn (the default), a **join** admits the
+    ///   new member into the *current* generation with `q̃ = 0` — no
+    ///   restart — and only a **dead ↔ non-dead flip** restarts the
+    ///   protocol (generation bump + reseed-from-own-summary), with the
+    ///   *distinguished* `q̃ = 1` role re-anchored on the lowest
+    ///   non-dead id, so the generation's mass stays exactly 1 across
+    ///   churn; with
+    ///   [`GossipLoopConfig::restart_free`](crate::config::GossipLoopConfig::restart_free)
+    ///   off, any change of the non-dead member set restarts (PR 5
+    ///   rule).
     ///
     /// The transport must be remote-capable and bound on the address the
     /// membership table advertises for this node. `initial_generation`
@@ -863,20 +941,38 @@ impl GossipLoop {
             ),
         }
         let self_id = membership.self_id();
-        let (mut state, epoch) = match &member {
+        let (mut state, epoch, seed) = match &member {
             GossipMember::Service(svc) => {
                 let snap = svc.snapshot();
-                (
-                    PeerState::from_sketch(self_id as usize, snap.sketch()),
-                    snap.epoch(),
-                )
+                let seed: GossipSketch = snap.sketch().convert_store();
+                let st = PeerState::from_sketch(self_id as usize, &seed);
+                (st, snap.epoch(), Some(seed))
             }
             GossipMember::Static(sketch) => {
-                (PeerState::from_sketch(self_id as usize, sketch), 0)
+                (PeerState::from_sketch(self_id as usize, sketch), 0, None)
             }
             GossipMember::Remote(_) => unreachable!("checked local above"),
         };
-        state.q_tilde = if membership.is_distinguished() { 1.0 } else { 0.0 };
+        // Joiner rule (PROTOCOL §10): under restart-free churn a node
+        // entering an existing fleet starts with `q̃ = 0` — zero mass
+        // in, zero mass moved, so the running generation's Σq̃ = 1
+        // invariant holds with no restart at all. Only a true bootstrap
+        // (sole non-dead member in its own table) anchors the
+        // distinguished `q̃ = 1`. This also covers a low-id node
+        // rejoining fast enough to still be Alive in the survivors'
+        // tables: it may be *distinguished*, but the generation's mass
+        // anchor already lives with the survivors, so it must not bring
+        // a second unit in. With restart-free off the PR 5 rule stands
+        // (distinguished ⇒ `q̃ = 1`): the join itself restarts the
+        // fleet, so a transient double anchor cannot survive a round.
+        let (alive, suspect, _) = membership.counts();
+        state.q_tilde = if membership.is_distinguished()
+            && (!cfg.restart_free || alive + suspect <= 1)
+        {
+            1.0
+        } else {
+            0.0
+        };
         let generation = initial_generation.max(1);
         let master = default_rng(cfg.seed);
         let interval_ms = cfg.round_interval_ms;
@@ -888,6 +984,7 @@ impl GossipLoop {
             rng: master.derive(0x1005).derive(self_id),
             online: vec![true],
             epochs: vec![epoch],
+            seeds: vec![seed],
             round: 0,
             generation,
             pending_generation: 0,
@@ -1127,6 +1224,7 @@ impl LoopCore {
                 GossipMember::Service(svc) => {
                     let snap = svc.snapshot();
                     ctl.epochs[i] = snap.epoch();
+                    let seed: GossipSketch = snap.sketch().convert_store();
                     *guards[k] = match &self.fleet.membership {
                         // Dynamic member set: the peer id is the stable
                         // membership id and the distinguished `q̃ = 1`
@@ -1135,12 +1233,13 @@ impl LoopCore {
                         // may have died).
                         Some(m) => {
                             let mut st =
-                                PeerState::from_sketch(m.self_id() as usize, snap.sketch());
+                                PeerState::from_sketch(m.self_id() as usize, &seed);
                             st.q_tilde = if m.is_distinguished() { 1.0 } else { 0.0 };
                             st
                         }
-                        None => PeerState::from_sketch(i, snap.sketch()),
+                        None => PeerState::from_sketch(i, &seed),
                     };
+                    ctl.seeds[i] = Some(seed);
                 }
                 GossipMember::Static(sketch) => {
                     *guards[k] = match &self.fleet.membership {
@@ -1165,13 +1264,18 @@ impl LoopCore {
         ctl.converged = false;
     }
 
-    /// Refresh step: restart the protocol when local data moved (epoch
-    /// advance ⇒ strictly newer generation), a partner reported a newer
-    /// generation (adopt it), or the membership view's non-dead set
-    /// changed (join/death ⇒ strictly newer generation, so mass
-    /// re-anchors on the surviving members). Returns whether a reseed
-    /// happened.
-    fn refresh(&self) -> bool {
+    /// Refresh step: decide between doing nothing, the restart-free
+    /// epoch carry, and a full protocol restart.
+    ///
+    /// A restart happens when a partner reported a newer generation
+    /// (adopt it), the membership view re-anchored (under restart-free
+    /// rules a dead ↔ non-dead flip; any non-dead-set change
+    /// otherwise), or local data moved while restart-free carry is off
+    /// or inapplicable. A *pure* local epoch advance under restart-free
+    /// rules instead folds each stale service's additive delta into its
+    /// averaged slot in place — no reseed, no generation bump
+    /// (`docs/PROTOCOL.md` §10).
+    fn refresh(&self) -> RefreshOutcome {
         // Cheap peek without slot locks; the decisive check repeats
         // under the full locks (a concurrent serve may have caught the
         // generation up in between).
@@ -1185,7 +1289,7 @@ impl LoopCore {
             self.any_stale(&ctl) || ctl.pending_generation > ctl.generation
         };
         if !needed {
-            return false;
+            return RefreshOutcome::Idle;
         }
         let mut guards = self.lock_local_slots();
         let mut ctl = self.lock_ctl();
@@ -1197,8 +1301,32 @@ impl LoopCore {
             .as_ref()
             .is_some_and(|m| m.take_view_changed());
         if !stale && !view_changed && wanted <= ctl.generation {
-            return false;
+            return RefreshOutcome::Idle;
         }
+        if self.fleet.cfg.restart_free
+            && stale
+            && !view_changed
+            && wanted <= ctl.generation
+        {
+            // Pure epoch advance: carry instead of restarting.
+            if self.try_epoch_carry(&mut ctl, &mut guards) {
+                return RefreshOutcome::Carried;
+            }
+            // Some delta was undefined (window eviction, lineage
+            // reset, …): fall back to the full restart. The reseed
+            // below also repairs any partially applied carry — it
+            // overwrites every local slot from fresh snapshots.
+            self.reseed_locked(&mut ctl, &mut guards);
+            ctl.generation = ctl.generation.saturating_add(1).max(wanted);
+            return RefreshOutcome::Restarted(RestartCause::EpochFallback);
+        }
+        let cause = if view_changed {
+            RestartCause::ViewChange
+        } else if stale && !self.fleet.cfg.restart_free {
+            RestartCause::EpochAdvance
+        } else {
+            RestartCause::GenerationCatchUp
+        };
         self.reseed_locked(&mut ctl, &mut guards);
         // Saturating: a (hostile or corrupt) partner could have pushed the
         // generation near u64::MAX — the counter must never overflow-panic
@@ -1210,6 +1338,44 @@ impl LoopCore {
             ctl.generation
         };
         ctl.generation = bumped.max(wanted);
+        RefreshOutcome::Restarted(cause)
+    }
+
+    /// Attempt the restart-free epoch carry: for every local service
+    /// whose published epoch moved past the one its slot was seeded
+    /// from, diff the new snapshot against the seed summary retained in
+    /// [`Ctl::seeds`] ([`UddSketch::additive_delta`]) and fold the
+    /// delta into the averaged slot
+    /// ([`PeerState::carry_epoch_delta`]). Returns `false` when any
+    /// seed is missing or any delta is undefined — the caller then
+    /// falls back to a full reseed + generation bump, which overwrites
+    /// every local slot and thereby also repairs a partially applied
+    /// carry.
+    fn try_epoch_carry(
+        &self,
+        ctl: &mut Ctl,
+        guards: &mut [MutexGuard<'_, PeerState>],
+    ) -> bool {
+        for (k, &i) in self.fleet.local_members.iter().enumerate() {
+            let svc = match &self.fleet.members[i] {
+                GossipMember::Service(svc) => svc,
+                _ => continue,
+            };
+            let snap = svc.snapshot();
+            if snap.epoch() == ctl.epochs[i] {
+                continue;
+            }
+            let new: GossipSketch = snap.sketch().convert_store();
+            let delta = match ctl.seeds[i].as_ref().and_then(|s| new.additive_delta(s)) {
+                Some(d) => d,
+                None => return false,
+            };
+            if guards[k].carry_epoch_delta(&delta).is_err() {
+                return false;
+            }
+            ctl.epochs[i] = snap.epoch();
+            ctl.seeds[i] = Some(new);
+        }
         true
     }
 
@@ -1533,9 +1699,15 @@ impl LoopCore {
         let base_bytes = g.exchange_bytes.get();
         let base_membership_bytes = g.membership_bytes.get();
         let round_start = Instant::now();
-        let reseeded = self.refresh();
+        let outcome = self.refresh();
         let refresh_duration = round_start.elapsed();
         g.rounds.inc();
+        let restart_cause = match outcome {
+            RefreshOutcome::Restarted(cause) => Some(cause),
+            RefreshOutcome::Idle | RefreshOutcome::Carried => None,
+        };
+        let reseeded = restart_cause.is_some();
+        let epoch_carried = matches!(outcome, RefreshOutcome::Carried);
         if reseeded {
             g.reseeds.inc();
         }
@@ -1621,6 +1793,8 @@ impl LoopCore {
             round,
             generation,
             reseeded,
+            restart_cause,
+            epoch_carried,
             exchanges,
             failed,
             bytes,
@@ -2070,8 +2244,11 @@ mod tests {
         gl.shutdown();
     }
 
+    /// Restart-free (default): a pure epoch advance is absorbed by the
+    /// epoch carry — no reseed, no generation bump, and the union
+    /// estimate still lands on the extended stream.
     #[test]
-    fn service_epoch_advance_triggers_reseed() {
+    fn service_epoch_advance_carries_without_restart() {
         let svc = service_with(&[1.0, 2.0, 3.0, 4.0]);
         let gl = GossipLoop::start(
             GossipLoopConfig::default(),
@@ -2084,6 +2261,53 @@ mod tests {
         assert_eq!(gl.view().epoch(), 1);
         let r1 = gl.step();
         assert!(!r1.reseeded);
+        assert!(!r1.epoch_carried);
+        assert!(r1.restart_cause.is_none());
+        let r2 = gl.step();
+        assert!(r2.converged, "tiny fleet converges immediately");
+        assert_eq!(r2.generation, 1);
+
+        // New data, new epoch: the carry folds the one-item delta into
+        // the averaged slot in place — the round is NOT a restart.
+        let mut w = svc.writer();
+        w.insert(5.0);
+        w.flush();
+        svc.flush();
+        let r3 = gl.step();
+        assert!(!r3.reseeded, "epoch advance must not reseed");
+        assert!(r3.epoch_carried);
+        assert!(r3.restart_cause.is_none());
+        assert_eq!(r3.generation, 1, "no generation bump on carry");
+        let v = gl.view();
+        assert_eq!(v.epoch(), 2, "the view still tracks the new epoch");
+        assert_eq!(v.generation(), 1);
+
+        // The carried mass re-averages onto the union of 5+2 items.
+        gl.step();
+        let v = gl.view();
+        assert_eq!(v.estimated_total(), 7.0);
+        gl.shutdown();
+        Arc::try_unwrap(svc).unwrap().shutdown();
+    }
+
+    /// A/B of the above with `restart_free` off: the PR 5 behavior —
+    /// every epoch advance restarts the protocol with a generation
+    /// bump — is still available behind the flag.
+    #[test]
+    fn service_epoch_advance_triggers_reseed_with_restart_free_off() {
+        let svc = service_with(&[1.0, 2.0, 3.0, 4.0]);
+        let mut cfg = GossipLoopConfig::default();
+        cfg.restart_free = false;
+        let gl = GossipLoop::start(
+            cfg,
+            vec![
+                GossipMember::service(svc.clone()),
+                static_member(&[10.0, 20.0]),
+            ],
+        )
+        .unwrap();
+        assert_eq!(gl.view().epoch(), 1);
+        gl.step();
         let r2 = gl.step();
         assert!(r2.converged, "tiny fleet converges immediately");
         assert_eq!(r2.generation, 1);
@@ -2095,6 +2319,8 @@ mod tests {
         svc.flush();
         let r3 = gl.step();
         assert!(r3.reseeded);
+        assert!(!r3.epoch_carried);
+        assert_eq!(r3.restart_cause, Some(RestartCause::EpochAdvance));
         assert_eq!(r3.generation, 2);
         assert!(!r3.converged, "drift resets on reseed");
         let v = gl.view();

@@ -72,17 +72,35 @@
 //! The protocol's `q̃` mass must sum to exactly 1 per restart generation
 //! for the fleet-size estimate `p̃ = 1/q̃` to be unbiased. Membership
 //! makes the distinguished peer (Algorithm 3's `q̃ = 1`) **dynamic**:
-//! the member with the *lowest non-dead id* is distinguished. Whenever a
-//! node's **non-dead id set** changes — a join, a death, a tombstone
-//! resurrection — *or a live member's incarnation advances* (a
-//! crash-rejoin lost that member's averaged state mid-generation; a
-//! refutation means a suspicion round-trip happened — both re-anchor
-//! safely), its next refresh bumps the restart generation and
-//! reseeds from its own summary ([`Membership::take_view_changed`]); the
-//! generation sync of the exchange frames drags the rest of the fleet
-//! along, and because the *last* node to learn of the change also
-//! bumps, every node's final reseed uses the converged table — mass is
-//! exactly 1 again among the survivors.
+//! the member with the *lowest non-dead id* is distinguished.
+//!
+//! Under the default **restart-free** rules (`gossip_restart_free`,
+//! `docs/PROTOCOL.md` §10), only a **dead ↔ non-dead flip** of some
+//! member re-anchors the generation ([`MergeOutcome::reanchor`]): a
+//! death removes that member's share of the averaged mass, and a
+//! tombstone resurrection would double-count the rejoiner's, so both
+//! reseed from the local summary and bump. A plain **join is not a
+//! restart**: the joiner enters the *current* generation with `q̃ = 0`
+//! (and, as the fleet's sole member, `q̃ = 1` only when it bootstraps),
+//! which leaves the generation's total `q̃` mass at exactly 1 — the
+//! fixed-point argument is spelled out in `docs/PROTOCOL.md` §10. An
+//! incarnation advance of a live member likewise does not re-anchor:
+//! the crash-rejoin it records biased `Ñ`/`p̃` at most transiently, the
+//! quantile query cancels a uniform `p̃` factor, and exactness returns
+//! at the next death re-anchor.
+//!
+//! With `gossip_restart_free = false` (the A/B arm of the churn
+//! bench), the PR 5 rules apply instead: whenever a node's non-dead id
+//! set changes — a join, a death, a tombstone resurrection — *or a
+//! live member's incarnation advances*, its next refresh bumps the
+//! restart generation and reseeds from its own summary
+//! ([`Membership::take_view_changed`]); the generation sync of the
+//! exchange frames drags the rest of the fleet along, and because the
+//! *last* node to learn of the change also bumps, every node's final
+//! reseed uses the converged table — mass is exactly 1 again among the
+//! survivors. The re-anchor-on-death path of the restart-free rules is
+//! this same mechanism, restricted to the flips that actually move
+//! mass.
 //!
 //! The wire layout of the membership frames is normative in
 //! `docs/PROTOCOL.md` §9; [`crate::sketch::codec`] implements it.
@@ -214,9 +232,17 @@ pub struct MergeOutcome {
     /// Members that turned dead.
     pub died: usize,
     /// The **non-dead id set** changed — the trigger for a protocol
-    /// restart (generation bump + reseed), because the distinguished
-    /// peer and the mass denominator both depend on it.
+    /// restart (generation bump + reseed) under the PR 5
+    /// bump-on-every-view-change rules (`gossip_restart_free = false`),
+    /// because the distinguished peer and the mass denominator both
+    /// depend on it.
     pub view_changed: bool,
+    /// Some member flipped **dead ↔ non-dead** — the only merge events
+    /// that move averaged mass, and therefore the only restart trigger
+    /// under the restart-free rules (`docs/PROTOCOL.md` §10). A plain
+    /// join (`q̃ = 0` entry) and a live incarnation advance set
+    /// [`MergeOutcome::view_changed`] but not this.
+    pub reanchor: bool,
 }
 
 impl MergeOutcome {
@@ -226,6 +252,7 @@ impl MergeOutcome {
         self.suspected += other.suspected;
         self.died += other.died;
         self.view_changed |= other.view_changed;
+        self.reanchor |= other.reanchor;
     }
 }
 
@@ -316,22 +343,37 @@ impl MemberTable {
                     MemberStatus::Dead => out.died = 1,
                 }
                 out.view_changed = entry.status != MemberStatus::Dead;
+                // A fresh entry never re-anchors. A freshly learned
+                // live member is a join — `q̃ = 0` entry, no mass
+                // moved. A freshly learned tombstone records a flip
+                // some *other* node witnessed (any member whose mass
+                // entered the averages was in somebody's table as
+                // alive): that witness bumps, and the bump reaches us
+                // through generation adoption. Re-anchoring here would
+                // turn every tombstone in a joiner's first table pull —
+                // and every GC'd-tombstone push-back — into a
+                // fleet-wide reseed.
                 self.entries.insert(entry.id, entry);
             }
             Some(cur) if cur.superseded_by(&entry) => {
                 out.changed = true;
                 let was_dead = cur.status == MemberStatus::Dead;
                 let is_dead = entry.status == MemberStatus::Dead;
-                // The protocol must restart when the non-dead set
-                // changes — AND when a live member's incarnation
-                // advances: that is a rejoin (its averaged state died
-                // with the old process, stranding its q̃ share in the
-                // current generation) or a refutation (a suspicion
-                // round-trip happened). Either way re-anchoring the
-                // mass is the safe direction; a missed restart breaks
-                // `p̃ = 1/q̃` until some unrelated churn fixes it.
+                // `view_changed` keeps the PR 5 trigger set: the
+                // non-dead set changed, OR a live member's incarnation
+                // advanced (a rejoin stranded its q̃ share, or a
+                // refutation recorded a suspicion round-trip).
+                // `reanchor` is the restart-free subset: only the
+                // dead ↔ non-dead flips actually move averaged mass —
+                // a death strands the victim's share, and a tombstone
+                // resurrection would re-enter mass the survivors
+                // already re-anchored away (or hand a low-id rejoiner
+                // a second `q̃ = 1`). An incarnation advance alone
+                // biases `Ñ`/`p̃` at most transiently and cancels out
+                // of quantile queries (`docs/PROTOCOL.md` §10).
                 out.view_changed = was_dead != is_dead
                     || (entry.incarnation > cur.incarnation && !is_dead);
+                out.reanchor = was_dead != is_dead;
                 if !was_dead && is_dead {
                     out.died = 1;
                 }
@@ -382,6 +424,11 @@ pub struct MembershipConfig {
     pub backoff_base: Duration,
     /// Ceiling of the exponential backoff.
     pub backoff_cap: Duration,
+    /// Restart-free churn (`gossip_restart_free`): only dead ↔ non-dead
+    /// flips mark the view dirty for a generation re-anchor; joins and
+    /// incarnation advances spread through the table without a restart
+    /// (see the module docs' mass-accounting section).
+    pub restart_free: bool,
 }
 
 impl Default for MembershipConfig {
@@ -391,6 +438,7 @@ impl Default for MembershipConfig {
             tombstone_ttl: Duration::from_millis(60_000),
             backoff_base: Duration::from_millis(250),
             backoff_cap: Duration::from_millis(30_000),
+            restart_free: true,
         }
     }
 }
@@ -408,6 +456,7 @@ impl MembershipConfig {
             tombstone_ttl: Duration::from_millis(cfg.tombstone_ttl_ms),
             backoff_base: (suspect_after / 4).max(Duration::from_millis(1)),
             backoff_cap: Duration::from_millis(30_000),
+            restart_free: cfg.restart_free,
         }
     }
 }
@@ -441,12 +490,19 @@ struct Inner {
     assigned_high: u64,
     /// Accumulated events since the last [`Membership::take_events`].
     pending: MergeOutcome,
-    /// The non-dead id set changed since the last
-    /// [`Membership::take_view_changed`] — the gossip loop's
-    /// restart-the-protocol trigger. Kept separate from `pending`
-    /// because the refresh step consumes it at a different time than
-    /// the round telemetry.
+    /// The view changed since the last
+    /// [`Membership::take_view_changed`] in a way that requires a
+    /// protocol restart — the gossip loop's re-anchor trigger. Under
+    /// `restart_free` only dead ↔ non-dead flips
+    /// ([`MergeOutcome::reanchor`]) set this; otherwise any non-dead id
+    /// set change or live incarnation advance
+    /// ([`MergeOutcome::view_changed`]) does. Kept separate from
+    /// `pending` because the refresh step consumes it at a different
+    /// time than the round telemetry.
     view_dirty: bool,
+    /// Copy of [`MembershipConfig::restart_free`] — selects which
+    /// [`MergeOutcome`] flag feeds `view_dirty`.
+    restart_free: bool,
     /// This node's id now maps to a *different address* in the table:
     /// a concurrent join through another seed collided on the id and
     /// the merge tie-break kept the other node. Set sticky; the loop
@@ -457,7 +513,11 @@ struct Inner {
 impl Inner {
     fn absorb(&mut self, out: MergeOutcome) {
         self.pending.absorb(out);
-        self.view_dirty |= out.view_changed;
+        self.view_dirty |= if self.restart_free {
+            out.reanchor
+        } else {
+            out.view_changed
+        };
         self.assigned_high = self.assigned_high.max(self.table.max_id().unwrap_or(0));
     }
 
@@ -560,6 +620,7 @@ impl Membership {
     ) -> Self {
         let mut table = MemberTable::new();
         table.upsert(MemberEntry::alive(0, self_addr));
+        let restart_free = cfg.restart_free;
         Self {
             self_id: 0,
             self_addr,
@@ -570,6 +631,7 @@ impl Membership {
                 obs: BTreeMap::new(),
                 pending: MergeOutcome::default(),
                 view_dirty: false,
+                restart_free,
                 identity_lost: false,
             }),
             clock,
@@ -601,6 +663,7 @@ impl Membership {
                  address {self_addr} — did the seed serve the handshake?"
             )
         })?;
+        let restart_free = cfg.restart_free;
         Ok(Self {
             self_id: me.id,
             self_addr,
@@ -611,6 +674,7 @@ impl Membership {
                 obs: BTreeMap::new(),
                 pending: MergeOutcome::default(),
                 view_dirty: false,
+                restart_free,
                 identity_lost: false,
             }),
             clock,
@@ -972,6 +1036,7 @@ mod tests {
             tombstone_ttl: Duration::from_millis(400),
             backoff_base: Duration::from_millis(150),
             backoff_cap: Duration::from_millis(600),
+            restart_free: true,
         }
     }
 
@@ -1037,6 +1102,7 @@ mod tests {
         let mut t = MemberTable::new();
         let out = t.upsert(MemberEntry::alive(0, addr(1)));
         assert!(out.changed && out.view_changed);
+        assert!(!out.reanchor, "a join must not re-anchor");
         assert_eq!(out.joined, 1);
 
         // Same entry again: nothing.
@@ -1052,31 +1118,33 @@ mod tests {
             status: MemberStatus::Suspect,
         });
         assert!(out.changed && !out.view_changed);
+        assert!(!out.reanchor);
         assert_eq!(out.suspected, 1);
 
-        // Death changes the view.
+        // Death changes the view — and moves mass, so it re-anchors.
         let out = t.upsert(MemberEntry {
             id: 0,
             addr: addr(1),
             incarnation: 1,
             status: MemberStatus::Dead,
         });
-        assert!(out.view_changed);
+        assert!(out.view_changed && out.reanchor);
         assert_eq!(out.died, 1);
 
-        // Refutation (next incarnation, alive) changes it back.
+        // Refutation (next incarnation, alive) changes it back: a
+        // dead → non-dead flip, so it re-anchors too.
         let out = t.upsert(MemberEntry {
             id: 0,
             addr: addr(1),
             incarnation: 2,
             status: MemberStatus::Alive,
         });
-        assert!(out.changed && out.view_changed);
+        assert!(out.changed && out.view_changed && out.reanchor);
 
         // A live member's incarnation advancing (alive → alive) is a
-        // crash-rejoin: the protocol must restart even though the
-        // non-dead id set is unchanged, or the rejoiner's lost q̃ share
-        // breaks the generation's mass.
+        // crash-rejoin: under the PR 5 rules (`view_changed`) the
+        // protocol restarts, but under restart-free rules it does not —
+        // the rejoiner re-enters with `q̃ = 0`, so no mass moved.
         let out = t.upsert(MemberEntry {
             id: 0,
             addr: addr(1),
@@ -1084,8 +1152,12 @@ mod tests {
             status: MemberStatus::Alive,
         });
         assert!(out.changed && out.view_changed, "{out:?}");
+        assert!(!out.reanchor, "live incarnation advance must not re-anchor");
 
-        // A newly learned tombstone is a death, never a join.
+        // A newly learned tombstone is a death, never a join — and it
+        // never re-anchors (the node that witnessed the flip bumps; a
+        // fresh tombstone here is a joiner's first table pull or a
+        // GC'd-tombstone push-back).
         let out = t.upsert(MemberEntry {
             id: 9,
             addr: addr(9),
@@ -1095,6 +1167,71 @@ mod tests {
         assert_eq!(out.joined, 0);
         assert_eq!(out.died, 1);
         assert!(!out.view_changed);
+        assert!(!out.reanchor);
+    }
+
+    /// The restart trigger (`view_dirty`, consumed by the gossip
+    /// loop's refresh) fires only on dead ↔ non-dead flips under the
+    /// default restart-free rules, and on every non-dead-set change
+    /// under the PR 5 rules (`restart_free: false`).
+    #[test]
+    fn view_dirty_gating_depends_on_restart_free() {
+        // Restart-free: joins and incarnation advances don't restart.
+        let m = Membership::bootstrap(addr(1), fast_cfg());
+        m.take_view_changed(); // drain the bootstrap self-join
+        m.serve_join(addr(2));
+        assert!(
+            !m.take_view_changed(),
+            "a served join must not restart the protocol"
+        );
+        let mut rejoined = MemberTable::new();
+        rejoined.upsert(MemberEntry {
+            id: 1,
+            addr: addr(2),
+            incarnation: 5,
+            status: MemberStatus::Alive,
+        });
+        m.merge_remote(&rejoined);
+        assert!(
+            !m.take_view_changed(),
+            "a live incarnation advance must not restart the protocol"
+        );
+        // A merged death is a dead ↔ non-dead flip: restart.
+        let mut dead = MemberTable::new();
+        dead.upsert(MemberEntry {
+            id: 1,
+            addr: addr(2),
+            incarnation: 5,
+            status: MemberStatus::Dead,
+        });
+        m.merge_remote(&dead);
+        assert!(m.take_view_changed(), "a death must restart the protocol");
+        // A tombstone resurrection flips back: restart again.
+        let mut back = MemberTable::new();
+        back.upsert(MemberEntry {
+            id: 1,
+            addr: addr(2),
+            incarnation: 6,
+            status: MemberStatus::Alive,
+        });
+        m.merge_remote(&back);
+        assert!(
+            m.take_view_changed(),
+            "a tombstone resurrection must restart the protocol"
+        );
+
+        // PR 5 rules: any non-dead-set change restarts, joins included.
+        let cfg = MembershipConfig {
+            restart_free: false,
+            ..fast_cfg()
+        };
+        let m = Membership::bootstrap(addr(1), cfg);
+        m.take_view_changed();
+        m.serve_join(addr(2));
+        assert!(
+            m.take_view_changed(),
+            "with gossip_restart_free=false a join restarts the protocol"
+        );
     }
 
     #[test]

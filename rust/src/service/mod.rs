@@ -88,7 +88,7 @@ pub use clock::{Clock, SystemClock, VirtualClock};
 pub use coordinator::{QuantileService, ServiceWriter};
 pub use gossip_loop::{
     GlobalView, GossipLoop, GossipMember, GossipRoundReport, MembershipRoundStats, NodeHandle,
-    ServeReject,
+    RestartCause, ServeReject,
 };
 pub use membership::{
     MemberEntry, MemberStatus, MemberTable, Membership, MembershipConfig,

@@ -36,8 +36,8 @@
 //! state — skewing the generation's `q̃` mass by the difference. The
 //! window is one in-flight reply against a deadline-long read budget, so
 //! it is rare; and the skew is bounded in time, because the next protocol
-//! restart (epoch advance anywhere → new generation, every node reseeds)
-//! restores the mass to exactly 1.
+//! restart (a death re-anchor, or an epoch-carry fallback → new
+//! generation, every node reseeds) restores the mass to exactly 1.
 //!
 //! # Hot-path machinery (PR 4)
 //!
@@ -64,15 +64,21 @@
 //!   thread-per-push accept path. Connections stay open across
 //!   exchanges, which is what makes client-side pooling pay off.
 //! * **Delta exchanges** — a completed push–pull leaves both partners
-//!   with the identical averaged state; both cache it (keyed by partner
-//!   and restart generation) as the *baseline* of their next exchange
-//!   and ship only changed buckets
+//!   with the identical averaged state; both cache it (keyed by
+//!   partner) as the *baseline* of their next exchange and ship only
+//!   changed buckets
 //!   ([`DeltaPayload`](crate::sketch::codec::DeltaPayload)). Baselines
-//!   are fingerprinted; any mismatch (reseed, eviction, a lost reply)
-//!   draws a `BaselineMismatch` reject and an automatic full-frame
-//!   retry on the same connection. Generation bumps invalidate every
-//!   cached baseline by construction (the generation is part of the
-//!   key).
+//!   are fingerprinted; any mismatch (eviction, a lost reply) draws a
+//!   `BaselineMismatch` reject and an automatic full-frame retry on
+//!   the same connection. Under **baseline carry**
+//!   ([`TcpTransportOptions::baseline_carry`], the restart-free
+//!   default) a baseline survives restart generations: the fingerprint
+//!   alone authenticates it, so even a post-reseed state ships as a
+//!   delta against the pre-reseed baseline — a required reseed (death
+//!   re-anchor, epoch-carry fallback) costs O(changed buckets), not a
+//!   full frame per peer. With carry off, the generation is part of
+//!   the baseline key and every bump invalidates the cache (PR 5
+//!   behavior).
 //!
 //! **Concurrency model.** Since the per-member locking redesign the
 //! serve path contends only on the *member state slots*, not on the
@@ -511,6 +517,7 @@ fn connection_died(e: &std::io::Error) -> bool {
 /// assert_eq!(opts.deadline, Duration::from_millis(1_000));
 /// assert_eq!(opts.pool_connections, 2);
 /// assert!(opts.delta_exchanges);
+/// assert!(opts.baseline_carry);
 /// ```
 #[derive(Debug, Clone)]
 pub struct TcpTransportOptions {
@@ -524,10 +531,21 @@ pub struct TcpTransportOptions {
     /// checkout; the serve loop evicts its side on the same clock, so
     /// keep the two transports of a fleet on one setting.
     pub pool_idle: Duration,
-    /// Ship delta frames against the per-(peer, generation) baseline
-    /// cache when one exists (always with automatic full-frame fallback
-    /// on a baseline mismatch).
+    /// Ship delta frames against the per-peer baseline cache when one
+    /// exists (always with automatic full-frame fallback on a baseline
+    /// mismatch).
     pub delta_exchanges: bool,
+    /// Keep delta baselines valid **across restart generations**. The
+    /// fingerprint in every delta frame authenticates the baseline
+    /// bit-for-bit, so a baseline cached before a reseed still composes
+    /// exactly — required reseeds (a death re-anchor, an epoch-carry
+    /// fallback) then ship as deltas against the pre-reseed baseline
+    /// instead of paying a full frame per peer (`docs/PROTOCOL.md`
+    /// §10). Off, a baseline is only used at the exact generation it
+    /// was cached at (the PR 5 rule). Follows
+    /// [`GossipLoopConfig::restart_free`](crate::config::GossipLoopConfig::restart_free)
+    /// in [`TcpTransportOptions::from_gossip`].
+    pub baseline_carry: bool,
 }
 
 impl Default for TcpTransportOptions {
@@ -537,6 +555,7 @@ impl Default for TcpTransportOptions {
             pool_connections: 2,
             pool_idle: Duration::from_millis(30_000),
             delta_exchanges: true,
+            baseline_carry: true,
         }
     }
 }
@@ -544,13 +563,15 @@ impl Default for TcpTransportOptions {
 impl TcpTransportOptions {
     /// Derive the options from the loop configuration's validated keys
     /// (`gossip_exchange_deadline_ms`, `gossip_pool_connections`,
-    /// `gossip_pool_idle_ms`, `gossip_delta_exchanges`).
+    /// `gossip_pool_idle_ms`, `gossip_delta_exchanges`,
+    /// `gossip_restart_free`).
     pub fn from_gossip(cfg: &GossipLoopConfig) -> Self {
         Self {
             deadline: Duration::from_millis(cfg.exchange_deadline_ms),
             pool_connections: cfg.pool_connections,
             pool_idle: Duration::from_millis(cfg.pool_idle_ms),
             delta_exchanges: cfg.delta_exchanges,
+            baseline_carry: cfg.restart_free,
         }
     }
 
@@ -735,12 +756,14 @@ impl Pool {
 
 /// The last mutually-known state of an exchange pair: what both sides
 /// hold after a completed push–pull, cached so the next exchange can
-/// ship a delta. `generation` is part of the identity — a protocol
+/// ship a delta. `fingerprint` (supplied by the caller, hashed off the
+/// full reply frame's bytes when one exists, so the steady state pays
+/// no ~16 KiB re-encode) is what authenticates the baseline bit-for-
+/// bit; under baseline carry it is the *only* validity check, so
+/// baselines compose across restart generations. With carry off,
+/// `generation` is additionally part of the identity and a protocol
 /// restart invalidates every baseline without any bookkeeping.
-/// `fingerprint` is supplied by the caller (hashed off the full reply
-/// frame's bytes when one exists, so the steady state pays no ~16 KiB
-/// re-encode); `stored_at` drives same-generation LRU eviction on the
-/// serve side.
+/// `stored_at` drives LRU eviction on the serve side.
 #[derive(Debug, Clone)]
 struct Baseline {
     generation: u64,
@@ -789,10 +812,11 @@ const MAX_SERVE_BASELINES: usize = 256;
 /// * A pooled connection that dies before any reply byte surfaces as
 ///   [`TransportError::StaleChannel`] **and** empties that peer's pool —
 ///   the immediate retry is guaranteed a fresh connect.
-/// * A baseline is cached only from a committed exchange and only read
-///   back at the same restart generation; the fingerprint in every delta
-///   frame catches any remaining disagreement (e.g. a reply lost after
-///   the server committed) and downgrades that exchange to full frames.
+/// * A baseline is cached only from a committed exchange and read back
+///   at any generation under baseline carry (at the same restart
+///   generation otherwise); the fingerprint in every delta frame
+///   catches any disagreement (e.g. a reply lost after the server
+///   committed) and downgrades that exchange to full frames.
 #[derive(Debug)]
 pub struct TcpTransport {
     /// Taken (once) by `spawn_server` when the loop starts.
@@ -1035,14 +1059,17 @@ impl TcpTransport {
         }
     }
 
-    /// The pair baseline for `peer` at exactly `generation`, if cached.
+    /// The pair baseline for `peer`, if cached and usable: any cached
+    /// baseline under baseline carry (the frame fingerprint
+    /// authenticates it regardless of the generation it was cached
+    /// at), or one cached at exactly `generation` otherwise.
     fn baseline_for(&self, peer: SocketAddr, generation: u64) -> Option<Baseline> {
         if !self.opts.delta_exchanges {
             return None;
         }
         self.lock_baselines()
             .get(&peer)
-            .filter(|b| b.generation == generation)
+            .filter(|b| self.opts.baseline_carry || b.generation == generation)
             .cloned()
     }
 
@@ -1327,6 +1354,7 @@ impl Transport for TcpTransport {
             deadline: self.opts.deadline,
             idle: self.opts.pool_idle,
             delta: self.opts.delta_exchanges,
+            carry: self.opts.baseline_carry,
             baselines: self.serve_baselines.clone(),
             // The loop installs metrics before spawning the server, so
             // an instrumented node's serve side always sees them.
@@ -1374,6 +1402,10 @@ struct ServeParams {
     deadline: Duration,
     idle: Duration,
     delta: bool,
+    /// Serve-side mirror of [`TcpTransportOptions::baseline_carry`]:
+    /// accept delta pushes against a baseline cached at any generation
+    /// (the fingerprint authenticates it), not just the current one.
+    carry: bool,
     baselines: ServeBaselines,
     /// Installed metric handles, if the owning node registered any
     /// before the serve loop spawned.
@@ -1596,7 +1628,8 @@ fn serve_frame_blocking(
             let cached = lock_serve_baselines(&params.baselines)
                 .get(&(delta.id as u64))
                 .filter(|b| {
-                    b.generation == generation && b.fingerprint == delta.baseline_fingerprint
+                    (params.carry || b.generation == generation)
+                        && b.fingerprint == delta.baseline_fingerprint
                 })
                 .cloned();
             let Some(b) = cached else {
@@ -1971,7 +2004,7 @@ mod tests {
             deadline: Duration::from_millis(300),
             pool_connections: 1,
             pool_idle: Duration::from_millis(1),
-            delta_exchanges: true,
+            ..TcpTransportOptions::default()
         })
         .unwrap();
 
@@ -2065,6 +2098,39 @@ mod tests {
         store_serve_baseline(&cache, st, 2, fp);
         let map = cache.lock().unwrap();
         assert_eq!(map.get(&3).unwrap().generation, 2);
+    }
+
+    /// ISSUE 9: under baseline carry (the default) a cached pair
+    /// baseline survives a generation bump — a required reseed ships
+    /// as a delta against the pre-reseed baseline — while carry-off
+    /// restores the PR 5 generation-keyed invalidation.
+    #[test]
+    fn initiator_baseline_survives_generation_bump_only_with_carry() {
+        let peer: SocketAddr = "127.0.0.1:9009".parse().unwrap();
+        let st = state(1, &[1.0, 2.0]);
+        let fp = peer_state_fingerprint(&st);
+
+        let t = TcpTransport::connect_only(Duration::from_millis(100)).unwrap();
+        assert!(t.options().baseline_carry, "carry is the default");
+        t.lock_baselines().insert(peer, Baseline::of(&st, 3, fp));
+        assert!(t.baseline_for(peer, 3).is_some());
+        assert!(
+            t.baseline_for(peer, 4).is_some(),
+            "carry: a baseline cached at generation 3 must serve generation 4"
+        );
+
+        let t = TcpTransport::connect_only_with(TcpTransportOptions {
+            deadline: Duration::from_millis(100),
+            baseline_carry: false,
+            ..TcpTransportOptions::default()
+        })
+        .unwrap();
+        t.lock_baselines().insert(peer, Baseline::of(&st, 3, fp));
+        assert!(t.baseline_for(peer, 3).is_some());
+        assert!(
+            t.baseline_for(peer, 4).is_none(),
+            "carry off: the generation is part of the baseline key"
+        );
     }
 
     /// A `Busy` reject is a routine round collision on an intact

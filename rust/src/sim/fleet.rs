@@ -802,6 +802,7 @@ fn gossip_cfg(s: &Scenario, seed: u64) -> GossipLoopConfig {
         // transport always ships full frames, so the flag is moot —
         // kept off for honesty in the byte accounting.
         delta_exchanges: false,
+        restart_free: s.restart_free,
         suspect_after_ms: s.suspect_after_ms,
         tombstone_ttl_ms: s.tombstone_ttl_ms,
         ..GossipLoopConfig::default()

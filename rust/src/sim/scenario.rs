@@ -5,7 +5,7 @@
 //! A scenario comes from one of three places:
 //!
 //! * a **built-in** by name ([`Scenario::builtin`] — `baseline`,
-//!   `churn-storm`, `lossy`, `partition`), used by CI;
+//!   `churn-storm`, `join-storm`, `lossy`, `partition`), used by CI;
 //! * a **scenario file** ([`Scenario::parse`] /
 //!   [`Scenario::from_file`]), the line-based format documented in
 //!   `docs/SIMULATION.md`;
@@ -96,6 +96,12 @@ pub struct Scenario {
     pub tombstone_ttl_ms: u64,
     /// Link-fault knobs.
     pub faults: FaultConfig,
+    /// Run the fleet restart-free (`gossip_restart_free`,
+    /// `docs/PROTOCOL.md` §10): joins are admitted into the current
+    /// generation and epoch advances carry, so only deaths re-anchor.
+    /// `false` replays the PR 5 restart-everything rules — the A/B knob
+    /// the churn-cost bench and the join-storm tests flip.
+    pub restart_free: bool,
     /// Scheduled membership / link events, in firing order.
     pub events: Vec<ScheduledEvent>,
 }
@@ -117,6 +123,7 @@ impl Default for Scenario {
             suspect_after_ms: 2_000,
             tombstone_ttl_ms: 60_000,
             faults: FaultConfig::default(),
+            restart_free: true,
             events: Vec::new(),
         }
     }
@@ -129,6 +136,10 @@ impl Scenario {
     /// * `churn-storm` — the CI acceptance scenario: joins, a crash
     ///   wave, a partition that heals, lossy links, and rejoins, all
     ///   mid-run.
+    /// * `join-storm` — the restart-free churn-cost scenario (ISSUE 9):
+    ///   a 1000-member fleet absorbing 120 staggered joins over 50
+    ///   rounds on clean links; its CI lane pins each join to O(1)
+    ///   extra wire bytes and a never-bumping generation.
     /// * `lossy` — heavy frame loss + delay jitter, no membership
     ///   events (exercises §7.2 cancelled exchanges at volume).
     /// * `partition` — one long asymmetric-healing partition window.
@@ -164,6 +175,24 @@ impl Scenario {
                     },
                 ];
             }
+            "join-storm" => {
+                s.name = "join-storm".into();
+                s.members = 1000;
+                s.rounds = 50;
+                s.alpha = 0.01;
+                s.max_buckets = 256;
+                s.items_per_member = 50;
+                // Three joins before each of rounds 6..=45: 120 joins
+                // staggered over the run, with a settle tail. Links
+                // stay clean so the per-round byte accounting isolates
+                // the cost of the joins themselves.
+                s.events = (6..=45)
+                    .map(|round| ScheduledEvent {
+                        round,
+                        action: EventAction::Join(3),
+                    })
+                    .collect();
+            }
             "lossy" => {
                 s.name = "lossy".into();
                 s.rounds = 50;
@@ -191,7 +220,7 @@ impl Scenario {
             }
             other => bail!(
                 "unknown built-in scenario '{other}' \
-                 (expected baseline|churn-storm|lossy|partition)"
+                 (expected baseline|churn-storm|join-storm|lossy|partition)"
             ),
         }
         Ok(s)
@@ -283,6 +312,10 @@ impl Scenario {
                 }
                 "deadline-ms" => {
                     s.faults.deadline_ms =
+                        one(&rest).with_context(ctx)?.parse().with_context(ctx)?
+                }
+                "restart-free" => {
+                    s.restart_free =
                         one(&rest).with_context(ctx)?.parse().with_context(ctx)?
                 }
                 "at" => {
@@ -399,11 +432,26 @@ mod tests {
 
     #[test]
     fn builtins_validate() {
-        for name in ["baseline", "churn-storm", "lossy", "partition"] {
+        for name in ["baseline", "churn-storm", "join-storm", "lossy", "partition"] {
             let s = Scenario::builtin(name).unwrap();
             s.validate().unwrap_or_else(|e| panic!("{name}: {e}"));
         }
         assert!(Scenario::builtin("nope").is_err());
+
+        // join-storm is the ISSUE 9 churn-cost scenario: at least 100
+        // staggered joins, restart-free, clean links.
+        let js = Scenario::builtin("join-storm").unwrap();
+        assert!(js.restart_free);
+        assert_eq!(js.faults.drop_prob, 0.0);
+        let joins: usize = js
+            .events
+            .iter()
+            .map(|e| match e.action {
+                EventAction::Join(n) => n,
+                _ => panic!("join-storm schedules only joins"),
+            })
+            .sum();
+        assert!(joins >= 100, "join-storm must stagger >= 100 joins ({joins})");
     }
 
     #[test]
@@ -427,6 +475,7 @@ reply-drop-prob 0.01
 delay-base-ms 5
 delay-jitter-ms 15
 deadline-ms 100
+restart-free false
 at 5 join 10
 at 12 crash 8        # a comment after an event
 at 15 partition 0.3
@@ -444,6 +493,7 @@ at 33 rejoin 4
         assert_eq!(s.dataset, DatasetKind::Exponential);
         assert_eq!(s.fan_out, 2);
         assert_eq!(s.faults.drop_prob, 0.02);
+        assert!(!s.restart_free, "restart-free false must parse");
         assert_eq!(s.events.len(), 7);
         assert_eq!(
             s.events[0],

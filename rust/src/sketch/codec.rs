@@ -46,13 +46,18 @@
 //! Correct application needs both sides to agree on the baseline
 //! *exactly*, so the frame names it by a 64-bit FNV-1a fingerprint of
 //! its canonical peer-state encoding ([`peer_state_fingerprint`]); a
-//! receiver whose cached baseline is missing, from another restart
-//! generation, or fingerprint-mismatched answers
-//! [`RejectReason::BaselineMismatch`] and the sender falls back to a
-//! full frame. Collapse depth may have advanced since the baseline was
-//! cached; the frame carries the sender's current depth and both sides
-//! align their baseline copy to it (deterministically) before
-//! diffing/applying, so lineage stays exact.
+//! receiver whose cached baseline is missing or fingerprint-mismatched
+//! (or, with baseline carry disabled, from another restart generation)
+//! answers [`RejectReason::BaselineMismatch`] and the sender falls
+//! back to a full frame. The fingerprint authenticates the baseline
+//! bit-for-bit on its own, which is what lets the transport's
+//! **baseline-carry** rule (`docs/PROTOCOL.md` §10) compose deltas
+//! across restart generations: a reseeded state is just another state
+//! to diff against the last mutually-held one. Collapse depth may have
+//! advanced since the baseline was cached; the frame carries the
+//! sender's current depth and both sides align their baseline copy to
+//! it (deterministically) before diffing/applying, so lineage stays
+//! exact.
 //!
 //! The constants here are normative together with `docs/PROTOCOL.md`:
 //! the `spec-sync` rule of `dudd-analyze` (see `docs/ANALYSIS.md`)
@@ -295,9 +300,9 @@ pub enum RejectReason {
     Lineage,
     /// The push frame failed to decode.
     Malformed,
-    /// A delta push named a baseline the partner does not hold (missing,
-    /// older generation, or fingerprint mismatch); the sender retries
-    /// with a full frame.
+    /// A delta push named a baseline the partner does not hold
+    /// (missing, fingerprint-mismatched, or — with baseline carry off —
+    /// from another generation); the sender retries with a full frame.
     BaselineMismatch,
     /// A membership or join frame reached a node whose membership plane
     /// is not enabled (static address-book fleet); the sender must not

@@ -298,6 +298,66 @@ impl<S: Store> UddSketch<S> {
         self.merge_weighted(other, 1.0, 1.0)
     }
 
+    /// The bucketwise difference `self − old` as a sketch in `self`'s
+    /// lineage — defined exactly when `self` is reachable from `old` by
+    /// inserts alone (an epoch extending a window, `docs/PROTOCOL.md`
+    /// §10): after aligning `old` to `self`'s collapse depth, every
+    /// bucket counter and the zero counter of `self` must dominate
+    /// `old`'s. Returns `None` when the lineages differ (α₀ or bucket
+    /// budget), when `old` has collapsed *further* than `self`, or when
+    /// any counter regressed (a window evicted items) — the caller must
+    /// fall back to a full reseed.
+    ///
+    /// Exactness: the uniform collapse is linear (bucket pairs sum), so
+    /// aligning `old` up commutes with the subtraction; with
+    /// integer-valued counters (unit-weight inserts, which is what the
+    /// local epoch summaries hold) every sum and difference below 2⁵³
+    /// is exact in f64, so `old ⊎ additive_delta` reproduces `self`
+    /// bit-exactly.
+    pub fn additive_delta(&self, old: &Self) -> Option<Self> {
+        if !self.mapping.same_lineage(&old.mapping)
+            || self.max_buckets != old.max_buckets
+            || old.mapping.collapses() > self.mapping.collapses()
+        {
+            return None;
+        }
+        let mut aligned = old.clone();
+        aligned.align_to_collapses(self.mapping.collapses());
+        let zero_weight = self.zero_weight - aligned.zero_weight;
+        if zero_weight < 0.0 {
+            return None;
+        }
+        fn diff<S: Store>(new: &S, base: &S) -> Option<S> {
+            let mut d = S::empty();
+            let mut ok = true;
+            new.for_each(|i, c| {
+                let b = base.get(i);
+                if c < b {
+                    ok = false;
+                } else if c > b {
+                    d.add(i, c - b);
+                }
+            });
+            // A bucket present in `base` but gone from (or shrunk in)
+            // `new` is a regression; buckets in both were checked above.
+            base.for_each(|i, c| {
+                if c > new.get(i) {
+                    ok = false;
+                }
+            });
+            ok.then_some(d)
+        }
+        let pos = diff(&self.pos, &aligned.pos)?;
+        let neg = diff(&self.neg, &aligned.neg)?;
+        Some(UddSketch {
+            mapping: self.mapping,
+            max_buckets: self.max_buckets,
+            pos,
+            neg,
+            zero_weight,
+        })
+    }
+
     /// Estimate the inferior q-quantile (Definition 2) of the summarized
     /// multiset: the estimate is within relative error [`UddSketch::alpha`]
     /// of the true inferior quantile for every q ∈ [0, 1].
@@ -634,6 +694,77 @@ mod tests {
             assert!(c >= prev);
             prev = c;
         }
+    }
+
+    /// Epoch-carry algebra: `old ⊎ additive_delta(new, old)` rebuilds
+    /// `new` bit-exactly, including across a collapse-depth gap.
+    #[test]
+    fn additive_delta_roundtrips_bit_exact() {
+        let mut r = default_rng(9);
+        let mut old: UddSketch = UddSketch::new(0.001, 64).unwrap();
+        for _ in 0..5_000 {
+            old.insert(10f64.powf(r.next_f64() * 6.0 - 3.0));
+        }
+        let mut new = old.clone();
+        for _ in 0..5_000 {
+            // A wider span than old's: the extension forces extra
+            // collapses, exercising the alignment path.
+            new.insert(10f64.powf(r.next_f64() * 9.0 - 3.0));
+        }
+        new.insert(0.0);
+        new.insert(-3.5);
+        // Guarantee a collapse-depth gap regardless of the sampled
+        // spans: the delta must re-fold `old` up to `new`'s depth.
+        new.force_collapse();
+        assert!(new.collapses() > old.collapses());
+
+        let delta = new.additive_delta(&old).expect("insert-only extension");
+        assert_eq!(delta.collapses(), new.collapses());
+        assert_eq!(delta.count(), new.count() - old.count());
+
+        let mut rebuilt = old.clone();
+        rebuilt.merge(&delta).unwrap();
+        assert_eq!(rebuilt.collapses(), new.collapses());
+        assert_eq!(rebuilt.zero_weight(), new.zero_weight());
+        assert_eq!(
+            rebuilt.positive_store().entries(),
+            new.positive_store().entries()
+        );
+        assert_eq!(
+            rebuilt.negative_store().entries(),
+            new.negative_store().entries()
+        );
+    }
+
+    #[test]
+    fn additive_delta_rejects_non_extensions() {
+        let mut old: UddSketch = UddSketch::new(0.01, 64).unwrap();
+        old.extend(&[1.0, 2.0, 3.0]);
+
+        // A window eviction (turnstile delete) regresses a bucket.
+        let mut evicted = old.clone();
+        evicted.delete(2.0);
+        evicted.insert(50.0);
+        assert!(evicted.additive_delta(&old).is_none());
+
+        // A dropped zero counter regresses too.
+        let mut z = old.clone();
+        z.insert(0.0);
+        assert!(old.additive_delta(&z).is_none());
+
+        // Different α₀ lineage.
+        let other: UddSketch = UddSketch::new(0.02, 64).unwrap();
+        assert!(other.additive_delta(&old).is_none());
+
+        // `old` collapsed past `new`: the subtraction is undefined.
+        let mut deeper = old.clone();
+        deeper.force_collapse();
+        assert!(old.additive_delta(&deeper).is_none());
+
+        // Identity extension: an all-zero delta, still mergeable.
+        let delta = old.additive_delta(&old).expect("x − x is defined");
+        assert_eq!(delta.count(), 0.0);
+        assert!(delta.is_empty());
     }
 
     #[test]

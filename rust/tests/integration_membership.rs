@@ -6,7 +6,12 @@
 //!   through the `dudd-join` handshake — converges to the sequential
 //!   union sketch within α while a 4th node **joins after 3 rounds**
 //!   and one member is **killed mid-run**, with no manual restart
-//!   anywhere;
+//!   anywhere; under the restart-free churn rules (ISSUE 9,
+//!   `docs/PROTOCOL.md` §10) the join leaves the generation at 1 and
+//!   only the death re-anchors;
+//! * a node **rejoins at its own address mid-run** (same member id,
+//!   incarnation + 1): the fleet converges within α and no survivor's
+//!   `GossipRoundReport` ever bumps the generation;
 //! * the survivors' member tables are **byte-identical** at quiescence
 //!   (canonical encoding), with the crashed member held as a dead
 //!   tombstone;
@@ -162,8 +167,9 @@ fn node_joins_after_three_rounds_and_crash_survivors_reconverge() {
     fleet.push(joiner);
 
     // The whole 4-node fleet converges on the full union: the join
-    // spread by anti-entropy, every node restarted its protocol
-    // (generation bump), and the joiner's stream is in the view.
+    // spread by anti-entropy and the joiner's stream entered the view
+    // WITHOUT a protocol restart — restart-free joins are admitted into
+    // the current generation with q̃ = 0 (docs/PROTOCOL.md §10).
     let mut seq_all: UddSketch = UddSketch::new(cfg.alpha, cfg.max_buckets).unwrap();
     for d in &datasets {
         seq_all.extend(d);
@@ -171,9 +177,9 @@ fn node_joins_after_three_rounds_and_crash_survivors_reconverge() {
     converge(&fleet, (4 * items) as f64, Duration::from_secs(60));
     assert_views_match(&fleet, &seq_all, 4.0, (4 * items) as f64);
     let gen_joined = fleet[0].global_view().unwrap().generation();
-    assert!(
-        gen_joined > 1,
-        "the join must have restarted the protocol at least once"
+    assert_eq!(
+        gen_joined, 1,
+        "restart-free: the join must not have restarted the protocol"
     );
 
     // Kill member 2 mid-run — no restart anywhere. Survivors suspect it
@@ -285,6 +291,124 @@ fn failstop_schedule_replays_against_tcp_fleet() {
             table.get(victim_id as u64).unwrap().status,
             MemberStatus::Dead
         );
+    }
+    for node in fleet {
+        node.shutdown();
+    }
+}
+
+/// Restart-free same-address rejoin (ISSUE 9): a node joins a running
+/// fleet, goes down, and comes back at the SAME socket address before
+/// anyone suspects it. The `dudd-join` handshake hands its member id
+/// back at the next incarnation instead of minting a new id, the fleet
+/// converges on the full union within α, and — the tentpole contract —
+/// no node's `GossipRoundReport` ever leaves generation 1: a live
+/// incarnation advance is not a view change (`docs/PROTOCOL.md` §10).
+///
+/// The first incarnation is shut down before any survivor runs a round,
+/// so nothing ever connects TO its listener: `TcpTransport` binds
+/// without `SO_REUSEADDR`, and a served connection's TIME_WAIT would
+/// make the same-port rebind flaky. A never-accepted listener leaves no
+/// socket state behind, so the second bind is deterministic. The fast
+/// crash also loses no mass — a restart-free joiner enters with
+/// q̃ = 0, so the union totals below stay exact.
+#[test]
+fn same_address_rejoin_bumps_incarnation_not_generation() {
+    let items = 1_500;
+    let master = default_rng(93);
+    let datasets: Vec<Vec<f64>> = (0..3)
+        .map(|i| peer_dataset(DatasetKind::Uniform, i, items, &master))
+        .collect();
+
+    // Suspicion is deliberately slack: the blink between shutdown and
+    // rejoin must never be long enough to declare the victim dead — a
+    // death WOULD re-anchor, and this test pins the path that must not.
+    let cfg = churn_cfg(60_000);
+    let mut fleet = vec![membership_node(&cfg, None)];
+    let seed_addr = fleet[0].listen_addr().unwrap();
+    fleet.push(membership_node(&cfg, Some(seed_addr)));
+    for (k, node) in fleet.iter().enumerate() {
+        ingest(node, &datasets[k]);
+    }
+    converge(&fleet, (2 * items) as f64, Duration::from_secs(60));
+
+    // First incarnation: join the running fleet at an OS-assigned
+    // address, then go down immediately (a fast restart, e.g. a process
+    // respawn under a supervisor).
+    let opts = TcpTransportOptions::from_gossip(&cfg.gossip);
+    let first = Node::builder()
+        .config(cfg.clone())
+        .transport(TcpTransport::bind_with("127.0.0.1:0", opts.clone()).unwrap())
+        .join(seed_addr)
+        .build()
+        .unwrap();
+    let victim_addr = first.listen_addr().unwrap();
+    assert_eq!(first.membership().unwrap().self_id(), 2);
+    first.shutdown();
+
+    // Second incarnation: the same address, so the handshake hands back
+    // member id 2 at incarnation 2 instead of minting id 3.
+    let rejoined = Node::builder()
+        .config(cfg.clone())
+        .transport(TcpTransport::bind_with(victim_addr, opts).unwrap())
+        .join(seed_addr)
+        .build()
+        .unwrap();
+    {
+        let m = rejoined.membership().unwrap();
+        assert_eq!(m.self_id(), 2, "same address must hand the member id back");
+        let table = m.table();
+        let entry = table.get(2).unwrap();
+        assert_eq!(entry.incarnation, 2, "rejoin advances the incarnation");
+        assert_eq!(entry.status, MemberStatus::Alive);
+    }
+    ingest(&rejoined, &datasets[2]);
+    fleet.push(rejoined);
+
+    // Converge on the full 3-stream union, inspecting every round
+    // report on the way: the rejoin must never bump the generation or
+    // restart the protocol on ANY node — the epoch advance from the
+    // rejoined node's ingest is carried in place, not reseeded.
+    let total = (3 * items) as f64;
+    let sweeps = common::wait_until(Duration::from_secs(60), || {
+        for (k, n) in fleet.iter().enumerate() {
+            let r = n.step().expect("gossip enabled");
+            assert_eq!(
+                r.generation, 1,
+                "node {k}: a same-address rejoin must not bump the generation"
+            );
+            assert!(
+                r.restart_cause.is_none(),
+                "node {k}: no round may restart the protocol: {:?}",
+                r.restart_cause
+            );
+        }
+        let views_ok = fleet.iter().all(|n| {
+            let v = n.global_view().unwrap();
+            v.generation() == 1 && v.converged() && v.estimated_total() == total
+        });
+        let tables_ok = fleet.iter().all(|n| {
+            let table = n.membership().unwrap().table();
+            table.len() == 3
+                && table
+                    .get(2)
+                    .is_some_and(|e| e.incarnation == 2 && e.status == MemberStatus::Alive)
+        });
+        views_ok && tables_ok
+    });
+    assert!(
+        sweeps.is_some(),
+        "fleet did not converge after the same-address rejoin"
+    );
+
+    let mut seq_all: UddSketch = UddSketch::new(cfg.alpha, cfg.max_buckets).unwrap();
+    for d in &datasets {
+        seq_all.extend(d);
+    }
+    assert_views_match(&fleet, &seq_all, 3.0, total);
+    for node in &fleet {
+        let table = node.membership().unwrap().table();
+        assert_eq!(table.distinguished_id(), Some(0));
     }
     for node in fleet {
         node.shutdown();

@@ -98,6 +98,100 @@ fn same_seed_reproduces_trace_and_json_bytes() {
     );
 }
 
+/// The ISSUE 9 join-storm, scaled down from the 1000-member CI lane: a
+/// staggered join storm on clean links, against the same-seed no-churn
+/// fleet already at the final size.
+fn join_storm_scaled(restart_free: bool) -> Scenario {
+    let mut s = Scenario::default();
+    s.name = "join-storm-scaled".into();
+    s.members = 20;
+    s.rounds = 32;
+    s.items_per_member = 100;
+    s.alpha = 0.01;
+    s.max_buckets = 256;
+    s.restart_free = restart_free;
+    // Ten joins, one before every other round, done by round 23 so the
+    // tail can settle.
+    s.events = (0..10)
+        .map(|k| ScheduledEvent {
+            round: 5 + 2 * k,
+            action: EventAction::Join(1),
+        })
+        .collect();
+    s
+}
+
+/// Restart-free churn acceptance (ISSUE 9): under the join storm the
+/// protocol generation never bumps, each join costs O(1) extra wire
+/// bytes — no round's exchange-plane bytes exceed the same-seed
+/// no-churn baseline's by more than two full frames — and the fleet
+/// still converges to the union-of-alive oracle within
+/// `max(2·theorem2_bound, α)`.
+#[test]
+fn join_storm_is_generation_quiet_and_costs_o1_bytes_per_join() {
+    let storm = SimFleet::new(join_storm_scaled(true), 77).unwrap().run().unwrap();
+
+    // (a) Joins are free: no node ever leaves generation 1.
+    for r in &storm.rounds {
+        assert_eq!(
+            r.generation, 1,
+            "restart-free joins must not bump the generation (round {})",
+            r.round
+        );
+    }
+    assert_eq!(storm.members_peak, 30, "all ten joiners must register");
+
+    // (b) O(1) bytes per join: compare round for round against the
+    // no-churn fleet already at the final size, under the same seed
+    // (identical per-ordinal datasets). The slack is two of the
+    // baseline's largest full frames — the join handshake itself plus
+    // one first exchange, never a fleet-wide anything.
+    let mut base_scenario = join_storm_scaled(true);
+    base_scenario.name = "join-storm-base".into();
+    base_scenario.members = 30;
+    base_scenario.events.clear();
+    let base = SimFleet::new(base_scenario, 77).unwrap().run().unwrap();
+    let frame = base
+        .rounds
+        .iter()
+        .map(|r| r.bytes / r.exchanges.max(1))
+        .max()
+        .unwrap();
+    for (s_r, b_r) in storm.rounds.iter().zip(&base.rounds) {
+        assert!(
+            s_r.bytes <= b_r.bytes + 2 * frame,
+            "round {}: storm bytes {} exceed no-churn baseline {} + 2 frames ({frame}B each)",
+            s_r.round,
+            s_r.bytes,
+            b_r.bytes,
+        );
+    }
+
+    // (c) Correctness is not traded away: the sampled union estimates
+    // converge within the oracle bound and stay there.
+    let converged = storm.converged_round.expect("join storm must converge");
+    assert!(converged <= 32, "converged_round {converged} out of range");
+    assert!(storm.final_max_rel_err <= storm.tol);
+    assert!(storm.rounds.last().unwrap().within_tol);
+
+    // Determinism holds under the storm too (the CI lane re-asserts
+    // this at 1000 members by byte-diffing two full traces).
+    let again = SimFleet::new(join_storm_scaled(true), 77).unwrap().run().unwrap();
+    assert_eq!(storm.trace_text(), again.trace_text());
+}
+
+/// The A/B contrast pinning what restart-free buys: the identical join
+/// storm under the PR 5 restart-everything rules bumps the generation
+/// mid-run (every join re-anchors the whole fleet).
+#[test]
+fn join_storm_with_restart_free_off_bumps_generations() {
+    let report = SimFleet::new(join_storm_scaled(false), 77).unwrap().run().unwrap();
+    assert!(
+        report.rounds.iter().any(|r| r.generation > 1),
+        "with restart_free off, joins must restart the protocol"
+    );
+}
+
 /// Fail&Stop-style rejoin through the join handshake: a crashed member
 /// comes back at the same address, re-enters at the next incarnation,
 /// and the fleet re-converges on the full union.

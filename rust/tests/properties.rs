@@ -763,6 +763,181 @@ fn prop_member_table_merge_order_and_duplication_invariant() {
     );
 }
 
+/// Invariant (ISSUE 9): reseeds ship as deltas, bit-exactly, *composed
+/// across the reseed boundary*. A partner's cached baseline survives
+/// the generation bump (baseline carry authenticates by fingerprint
+/// alone), so the pre-reseed evolution and the reseed itself travel as
+/// two successive `DeltaPush` frames against the rolling baseline — and
+/// the receiver's reconstruction equals the reseeded state bit for bit.
+/// The only allowed refusal is the protocol's legitimate full-frame
+/// fallback: a fresh seed shallower than the baseline's collapse depth.
+#[test]
+fn prop_reseed_delta_bit_exact() {
+    use duddsketch::rng::Xoshiro256pp;
+    forall(
+        "reseed-delta",
+        SEED + 22,
+        24,
+        |r: &mut Xoshiro256pp| {
+            let xs = gen::uniform_vec(r, 900, 1.0, 1e3);
+            let ys = gen::uniform_vec(r, 600, 1.0, 1e3);
+            let zs = gen::uniform_vec(r, 700, 1.0, 1e3);
+            let id = r.index(64);
+            let generation = 1 + r.index(1 << 16) as u64;
+            let collapse = r.chance(0.3);
+            let distinguished = r.chance(0.5);
+            (xs, ys, zs, id, generation, collapse, distinguished)
+        },
+        |(xs, ys, zs, id, generation, collapse, distinguished)| {
+            // Leg 1 — ordinary pre-reseed evolution: the partner cached
+            // this node's state and receives the averaged update as a
+            // delta, advancing its rolling baseline.
+            let cached = PeerState::init(*id, xs, 0.01, 1024).map_err(|e| e.to_string())?;
+            let fp = peer_state_fingerprint(&cached);
+            let mut current = cached.clone();
+            let mut partner =
+                PeerState::init(id + 1, ys, 0.01, 1024).map_err(|e| e.to_string())?;
+            PeerState::exchange(&mut current, &mut partner).map_err(|e| e.to_string())?;
+            let d1 = delta_payload(&cached, fp, &current).ok_or("leg-1 delta refused")?;
+            let carried = apply_delta(&cached, &d1).map_err(|e| e.to_string())?;
+            if peer_state_fingerprint(&carried) != peer_state_fingerprint(&current) {
+                return Err("leg-1 reconstruction diverged".into());
+            }
+
+            // The reseed (epoch fallback or death re-anchor): the local
+            // state is *replaced*, not evolved — same α₀ lineage, fresh
+            // counters, q̃ re-anchored by the distinguished rule.
+            let mut reseeded =
+                PeerState::init(*id, zs, 0.01, 1024).map_err(|e| e.to_string())?;
+            reseeded.q_tilde = if *distinguished { 1.0 } else { 0.0 };
+            if *collapse {
+                reseeded.sketch.force_collapse();
+            }
+
+            // Leg 2 — the reseed ships against the *carried* (post-leg-1)
+            // baseline even though the generation bumped in between.
+            let fp2 = peer_state_fingerprint(&carried);
+            let Some(d2) = delta_payload(&carried, fp2, &reseeded) else {
+                return if reseeded.sketch.collapses() < carried.sketch.collapses() {
+                    Ok(()) // legitimate full-frame fallback
+                } else {
+                    Err("leg-2 delta refused without cause".into())
+                };
+            };
+            let frame = encode_exchange_delta_push(*generation, &d2);
+            let decoded = match decode_exchange(&frame).map_err(|e| e.to_string())? {
+                ExchangeFrame::DeltaPush { generation: g, delta } if g == *generation => delta,
+                other => return Err(format!("wrong frame decoded: {other:?}")),
+            };
+            let rebuilt = apply_delta(&carried, &decoded).map_err(|e| e.to_string())?;
+            if rebuilt.n_tilde.to_bits() != reseeded.n_tilde.to_bits()
+                || rebuilt.q_tilde.to_bits() != reseeded.q_tilde.to_bits()
+                || rebuilt.sketch.collapses() != reseeded.sketch.collapses()
+                || rebuilt.sketch.zero_weight().to_bits()
+                    != reseeded.sketch.zero_weight().to_bits()
+                || rebuilt.sketch.positive_store().entries()
+                    != reseeded.sketch.positive_store().entries()
+                || rebuilt.sketch.negative_store().entries()
+                    != reseeded.sketch.negative_store().entries()
+            {
+                return Err("reseed delta reconstruction not bit-exact".into());
+            }
+            if peer_state_fingerprint(&rebuilt) != peer_state_fingerprint(&reseeded) {
+                return Err("fingerprints differ after the reseed".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Invariant (ISSUE 9): the q̃ mass sums to *exactly* 1.0 per generation
+/// under arbitrary interleavings of restart-free joins (q̃ = 0
+/// admission), push–pull exchanges (halving is exact in f64 for dyadic
+/// masses), epoch carries (q̃ untouched by construction), and death
+/// re-anchors (reseed: the distinguished peer takes 1, everyone else 0).
+/// This is the fixed point that makes join-without-restart sound
+/// (`docs/PROTOCOL.md` §10) — the comparison is on bits, not within an
+/// epsilon.
+#[test]
+fn prop_q_mass_exactly_one_under_churn() {
+    use duddsketch::rng::Xoshiro256pp;
+    forall(
+        "q-mass-churn",
+        SEED + 23,
+        32,
+        |r: &mut Xoshiro256pp| {
+            (0..40)
+                .map(|_| (r.index(8) as u8, r.index(1 << 16), r.index(1 << 16)))
+                .collect::<Vec<(u8, usize, usize)>>()
+        },
+        |ops| {
+            let dataset =
+                |id: usize| -> Vec<f64> { (0..20).map(|i| 1.0 + (id * 20 + i) as f64).collect() };
+            let spawn = |id: usize, q: f64| -> Result<PeerState, String> {
+                let mut p =
+                    PeerState::init(id, &dataset(id), 0.01, 1024).map_err(|e| e.to_string())?;
+                p.q_tilde = q;
+                Ok(p)
+            };
+            // A freshly re-anchored 3-peer fleet: slot 0 is distinguished.
+            let mut peers = vec![spawn(0, 1.0)?, spawn(1, 0.0)?, spawn(2, 0.0)?];
+            let mut next_id = 3usize;
+            for (i, (op, pa, pb)) in ops.iter().enumerate() {
+                match op {
+                    // Join without restart: q̃ = 0 admission is
+                    // mass-conserving by construction.
+                    0 => {
+                        peers.push(spawn(next_id, 0.0)?);
+                        next_id += 1;
+                    }
+                    // Death re-anchors (and ONLY deaths): drop a peer,
+                    // reseed every survivor, distinguished takes 1.
+                    1 => {
+                        if peers.len() > 2 {
+                            peers.remove(pa % peers.len());
+                            for (k, p) in peers.iter_mut().enumerate() {
+                                let id = p.id;
+                                *p = spawn(id, if k == 0 { 1.0 } else { 0.0 })?;
+                            }
+                        }
+                    }
+                    // Epoch carry: fold an additive ingest delta into
+                    // the averaged slot in place — q̃ untouched.
+                    6 | 7 => {
+                        let mut delta: UddSketch = UddSketch::new(0.01, 1024).unwrap();
+                        delta.extend(&dataset(1000 + i));
+                        peers[pa % peers.len()]
+                            .carry_epoch_delta(&delta)
+                            .map_err(|e| e.to_string())?;
+                    }
+                    // Push–pull exchange between two distinct peers.
+                    _ => {
+                        let n = peers.len();
+                        let a = pa % n;
+                        let mut b = pb % (n - 1);
+                        if b >= a {
+                            b += 1;
+                        }
+                        let (lo, hi) = (a.min(b), a.max(b));
+                        let (left, right) = peers.split_at_mut(hi);
+                        PeerState::exchange(&mut left[lo], &mut right[0])
+                            .map_err(|e| e.to_string())?;
+                    }
+                }
+                let sum: f64 = peers.iter().map(|p| p.q_tilde).sum();
+                if sum.to_bits() != 1.0f64.to_bits() {
+                    return Err(format!(
+                        "after op {i} ({op}): Σq̃ = {sum:?} is not exactly 1 \
+                         over {} peers",
+                        peers.len()
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
 /// Invariant (ISSUE 4): no corrupted or stale-baseline delta frame slips
 /// through. Truncation at any offset fails to decode (so the transport
 /// cancels the exchange, §7.2), and a frame whose baseline fingerprint

@@ -8,8 +8,9 @@
 //!   socket I/O under control-plane locks ([`locks`]);
 //! * `determinism` — no ambient time outside the `Clock` abstraction,
 //!   no hash-ordered collections in wire/trace paths ([`determinism`]);
-//! * `spec-sync` — codec enums, protocol version, and config keys vs
-//!   the PROTOCOL.md tables, both directions ([`spec`]);
+//! * `spec-sync` — codec enums, protocol version, restart-cause codes,
+//!   and config keys vs the PROTOCOL.md tables, both directions
+//!   ([`spec`]);
 //! * `unsafe-audit` — `unsafe` pinned to `service/swap.rs`,
 //!   `#![forbid(unsafe_code)]` elsewhere, lock poisoning policy routed
 //!   through `lock_*` helpers ([`unsafe_audit`]);
@@ -131,6 +132,7 @@ pub fn run_rule(rule: &str, root: &Path, sources: &[SourceFile]) -> io::Result<V
             let inputs = spec::SpecInputs {
                 codec: read_doc(root, "rust/src/sketch/codec.rs", &mut findings),
                 membership: read_doc(root, "rust/src/service/membership.rs", &mut findings),
+                gossip_loop: read_doc(root, "rust/src/service/gossip_loop.rs", &mut findings),
                 config: read_doc(root, "rust/src/config.rs", &mut findings),
                 protocol_md: read_doc(root, "docs/PROTOCOL.md", &mut findings),
                 readme_md: read_doc(root, "README.md", &mut findings),

@@ -7,10 +7,12 @@
 //!   `RejectReason` `code()`/`from_code()` pair (checked for bijection),
 //!   and `const VERSION`;
 //! * `service/membership.rs` — the `MemberStatus` wire codes;
+//! * `service/gossip_loop.rs` — the `RestartCause` diagnostic
+//!   discriminants (PR 9);
 //! * `config.rs` — the canonical `ServiceConfig::set` /
 //!   `GossipLoopConfig::set` keys (first literal of each match arm);
-//! * `docs/PROTOCOL.md` — the kind/reason/status tables, the protocol
-//!   version line, and the configuration-key table;
+//! * `docs/PROTOCOL.md` — the kind/reason/status/cause tables, the
+//!   protocol version line, and the configuration-key table;
 //! * `README.md` + `docs/PROTOCOL.md` prose — every backticked
 //!   `gossip_*` mention must name a real config key.
 //!
@@ -21,10 +23,11 @@ use crate::lexer::{matching, tokenize, Kind, Token};
 use crate::report::Finding;
 use std::collections::BTreeMap;
 
-/// The five documents the checker cross-references.
+/// The six documents the checker cross-references.
 pub struct SpecInputs {
     pub codec: String,
     pub membership: String,
+    pub gossip_loop: String,
     pub config: String,
     pub protocol_md: String,
     pub readme_md: String,
@@ -513,6 +516,29 @@ pub fn check(inputs: &SpecInputs) -> Vec<Finding> {
         &doc_statuses,
     );
 
+    // 3b. RestartCause ↔ the §10.4 cause table (PR 9): the restart
+    // diagnostic codes are stable identifiers, kept in lockstep with
+    // the spec exactly like the wire enums.
+    let gossip_loop = tokenize(&inputs.gossip_loop);
+    let causes = enum_discriminants(&gossip_loop, "RestartCause");
+    if causes.is_empty() {
+        findings.push(Finding::new(
+            "spec-sync",
+            "rust/src/service/gossip_loop.rs",
+            0,
+            "could not extract RestartCause discriminants",
+        ));
+    }
+    let doc_causes: BTreeMap<String, u64> =
+        md_code_table(&inputs.protocol_md, "cause", "value").into_iter().collect();
+    diff_maps(
+        &mut findings,
+        "restart cause",
+        "rust/src/service/gossip_loop.rs",
+        &causes,
+        &doc_causes,
+    );
+
     // 4. VERSION ↔ "Protocol version: **N**"
     match (const_u64(&codec, "VERSION"), md_version(&inputs.protocol_md)) {
         (Some(c), Some(d)) if c != d => findings.push(Finding::new(
@@ -632,6 +658,17 @@ impl MemberStatus {
         .to_string()
     }
 
+    fn gossip_loop_src() -> String {
+        r#"
+#[repr(u8)]
+pub enum RestartCause {
+    EpochAdvance = 1,
+    ViewChange = 2,
+}
+"#
+        .to_string()
+    }
+
     fn config_src() -> String {
         r#"
 impl ServiceConfig {
@@ -677,6 +714,11 @@ Protocol version: **1**.
 | `Alive` | 0 | x |
 | `Dead` | 2 | y |
 
+| cause | value | meaning |
+|---|---|---|
+| `EpochAdvance` | 1 | x |
+| `ViewChange` | 2 | y |
+
 | key | meaning |
 |---|---|
 | `alpha` | sketch accuracy |
@@ -690,6 +732,7 @@ Protocol version: **1**.
         SpecInputs {
             codec: codec_src(),
             membership: membership_src(),
+            gossip_loop: gossip_loop_src(),
             config: config_src(),
             protocol_md: protocol_md(),
             readme_md: "uses `gossip_fan_out` for fanout".to_string(),
@@ -768,6 +811,30 @@ Protocol version: **1**.
         let f = check(&inp);
         assert!(
             f.iter().any(|x| x.message.contains("gossip_retired_knob")),
+            "{f:?}"
+        );
+    }
+
+    #[test]
+    fn restart_cause_drift_flagged() {
+        let mut inp = inputs();
+        inp.gossip_loop = inp.gossip_loop.replace("ViewChange = 2", "ViewChange = 7");
+        let f = check(&inp);
+        assert!(
+            f.iter()
+                .any(|x| x.message.contains("restart cause `ViewChange`")),
+            "{f:?}"
+        );
+
+        // A cause present in code but missing from the spec table.
+        let mut inp = inputs();
+        inp.protocol_md = inp.protocol_md.replace("| `ViewChange` | 2 | y |\n", "");
+        let f = check(&inp);
+        assert!(
+            f.iter().any(|x| {
+                x.message
+                    .contains("restart cause `ViewChange` (= 2) is implemented but missing")
+            }),
             "{f:?}"
         );
     }

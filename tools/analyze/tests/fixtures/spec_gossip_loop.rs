@@ -1,0 +1,12 @@
+//! Fixture gossip-loop source for the spec-sync tests: a `RestartCause`
+//! enum with stable diagnostic discriminants, as in the real
+//! `rust/src/service/gossip_loop.rs`.
+
+/// Why a refresh restarted the protocol.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum RestartCause {
+    EpochAdvance = 1,
+    ViewChange = 2,
+    GenerationCatchUp = 3,
+}

@@ -134,6 +134,7 @@ fn fixture_spec(protocol_md: &str) -> spec::SpecInputs {
     spec::SpecInputs {
         codec: include_str!("fixtures/spec_codec.rs").to_string(),
         membership: include_str!("fixtures/spec_membership.rs").to_string(),
+        gossip_loop: include_str!("fixtures/spec_gossip_loop.rs").to_string(),
         config: include_str!("fixtures/spec_config.rs").to_string(),
         protocol_md: protocol_md.to_string(),
         readme_md: "Pass `gossip_fan_out` (alias `gossip_fanout`) on the CLI.".to_string(),
@@ -167,6 +168,14 @@ fn spec_fixture_drift_flagged() {
     assert!(
         f.iter()
             .any(|x| x.message.contains("gossip_fanout_bias")),
+        "{f:?}"
+    );
+    // seeded drift 4: restart cause implemented but undocumented
+    assert!(
+        f.iter().any(|x| {
+            x.message
+                .contains("restart cause `GenerationCatchUp` (= 3) is implemented but missing")
+        }),
         "{f:?}"
     );
 }
