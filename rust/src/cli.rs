@@ -15,6 +15,9 @@
 //! * `sim-fleet` — deterministic whole-fleet simulation (1000+ members
 //!   in one process) under scripted faults, verified against the exact
 //!   oracle each virtual round.
+//! * `observe` (alias `dudd-observe`) — the convergence observatory:
+//!   scrape a running fleet's `/metrics` + `/members` endpoints and
+//!   render a fleet-wide convergence report (docs/OBSERVABILITY.md).
 //! * `info` — build/runtime/artifact diagnostics.
 
 #![forbid(unsafe_code)]
@@ -158,7 +161,7 @@ USAGE:
             [--rounds R] [--items N] [--alpha A] [--m M] [--fan-out F]
             [--graph KIND] [--dataset NAME] [--churn KIND]
             [--drop-prob P] [--restart-free BOOL] [--json-log FILE]
-            [--trace FILE] [--quiet]
+            [--trace FILE] [--events FILE] [--quiet]
       run a whole simulated fleet in one process (docs/SIMULATION.md):
       the production gossip loop + membership plane over simulated
       links with injectable faults, driven round by round on a virtual
@@ -168,7 +171,22 @@ USAGE:
       exact oracle; the run fails unless the fleet converges within
       the bound by the final round. --json-log writes the per-round
       JSON log, --trace the deterministic event trace (same seed ⇒
-      byte-identical — diff two runs to prove it)
+      byte-identical — diff two runs to prove it), --events the
+      structured JSONL event log in the production schema
+      (docs/OBSERVABILITY.md), also byte-identical per seed
+  duddsketch observe --scrape HOST:PORT[,HOST:PORT...] [--json]
+            [--watch [SECS]] [--iterations N] [--timeout-ms MS]
+      the convergence observatory (alias: dudd-observe): scrape every
+      listed node's Prometheus /metrics endpoint (plus the gossiped
+      member table from the first node answering /members), merge the
+      per-node summaries, and print a fleet table — rounds, restart
+      generation, drift vs the live Theorem 2 bound, exchange RTT
+      p50/p99, restart causes — with a one-word fleet verdict
+      (converged / converging / degraded / no-data). --json emits the
+      same report as one machine-readable JSON object; --watch
+      re-scrapes every SECS seconds (default 2) until interrupted or
+      --iterations N reports have been printed. --self-test runs the
+      observatory's built-in end-to-end check and exits
   duddsketch info
       platform, artifact inventory, defaults
 
@@ -1286,7 +1304,11 @@ fn cmd_sim_fleet(args: &Args) -> Result<String> {
     scenario.validate()?;
 
     let sw = crate::util::Stopwatch::start();
-    let report = SimFleet::new(scenario.clone(), seed)?.run()?;
+    let mut fleet = SimFleet::new(scenario.clone(), seed)?;
+    if args.flag("events").is_some() {
+        fleet = fleet.with_event_export();
+    }
+    let report = fleet.run()?;
     let wall = sw.secs();
 
     let mut out = format!(
@@ -1344,6 +1366,13 @@ fn cmd_sim_fleet(args: &Args) -> Result<String> {
         std::fs::write(p, report.trace_text()).with_context(|| format!("writing {p}"))?;
         out.push_str(&format!("  trace file: {p}\n"));
     }
+    if let Some(p) = args.flag("events") {
+        std::fs::write(p, report.events_text()).with_context(|| format!("writing {p}"))?;
+        out.push_str(&format!(
+            "  event log: {p} ({} lines)\n",
+            report.events_jsonl.len()
+        ));
+    }
     match report.converged_round {
         Some(r) => out.push_str(&format!(
             "  OK: converged from round {r} (err {:.3e} <= tol {:.3e}); \
@@ -1362,6 +1391,76 @@ fn cmd_sim_fleet(args: &Args) -> Result<String> {
         ),
     }
     Ok(out)
+}
+
+fn cmd_observe(args: &Args) -> Result<String> {
+    use crate::obs::observe::{observe_fleet, self_test, FleetReport};
+    use std::time::Duration;
+
+    if args.has("self-test") {
+        self_test().map_err(anyhow::Error::msg)?;
+        return Ok("observe self-test: OK\n".to_string());
+    }
+    let scrape = args
+        .flag("scrape")
+        .context("observe needs --scrape HOST:PORT[,HOST:PORT...] (or --self-test)")?;
+    let targets: Vec<String> = scrape
+        .split(',')
+        .map(|t| t.trim().to_string())
+        .filter(|t| !t.is_empty())
+        .collect();
+    if targets.is_empty() {
+        bail!("--scrape lists no targets");
+    }
+    let timeout_ms: u64 = args
+        .flag("timeout-ms")
+        .unwrap_or("2000")
+        .parse()
+        .context("--timeout-ms wants a positive integer")?;
+    if timeout_ms == 0 {
+        bail!("--timeout-ms must be positive");
+    }
+    let timeout = Duration::from_millis(timeout_ms);
+    let as_json = args.has("json");
+    let render = |report: &FleetReport| {
+        if as_json {
+            let mut line = report.render_json();
+            line.push('\n');
+            line
+        } else {
+            report.render_table()
+        }
+    };
+    let Some(watch) = args.flag("watch") else {
+        return Ok(render(&observe_fleet(&targets, timeout)));
+    };
+    // `--watch` alone re-scrapes every 2 s; `--watch SECS` picks the
+    // cadence. `--iterations N` bounds the loop (0 = until killed);
+    // each report is printed as it lands, not buffered to the end.
+    let every_s: u64 = if watch == "true" {
+        2
+    } else {
+        watch.parse().context("--watch wants whole seconds")?
+    };
+    if every_s == 0 {
+        bail!("--watch interval must be positive");
+    }
+    let iterations: u64 = args
+        .flag("iterations")
+        .unwrap_or("0")
+        .parse()
+        .context("--iterations wants an integer")?;
+    let mut printed = 0u64;
+    loop {
+        print!("{}", render(&observe_fleet(&targets, timeout)));
+        use std::io::Write as _;
+        let _ = std::io::stdout().flush();
+        printed += 1;
+        if iterations != 0 && printed >= iterations {
+            return Ok(String::new());
+        }
+        std::thread::sleep(Duration::from_secs(every_s));
+    }
 }
 
 fn cmd_info() -> Result<String> {
@@ -1404,6 +1503,7 @@ pub fn dispatch(args: &Args) -> Result<String> {
         "serve-gossip" => cmd_serve_gossip(args),
         "serve-remote" => cmd_serve_remote(args),
         "sim-fleet" => cmd_sim_fleet(args),
+        "observe" | "dudd-observe" => cmd_observe(args),
         "info" => cmd_info(),
         "help" | "--help" | "-h" => Ok(USAGE.to_string()),
         other => bail!("unknown command '{other}'\n{USAGE}"),
@@ -1723,7 +1823,9 @@ mod tests {
         let json = dir.join("rounds.json");
         let trace_a = dir.join("trace_a.txt");
         let trace_b = dir.join("trace_b.txt");
-        let run = |trace: &std::path::Path| {
+        let events_a = dir.join("events_a.jsonl");
+        let events_b = dir.join("events_b.jsonl");
+        let run = |trace: &std::path::Path, events: &std::path::Path| {
             let a = args(&[
                 "sim-fleet",
                 "--members",
@@ -1742,19 +1844,30 @@ mod tests {
                 json.to_str().unwrap(),
                 "--trace",
                 trace.to_str().unwrap(),
+                "--events",
+                events.to_str().unwrap(),
             ]);
             dispatch(&a).unwrap()
         };
-        let out = run(&trace_a);
+        let out = run(&trace_a, &events_a);
         assert!(out.contains("OK: converged from round"), "{out}");
         assert!(out.contains("O(log n) reference"), "{out}");
+        assert!(out.contains("event log:"), "{out}");
         let log = std::fs::read_to_string(&json).unwrap();
         assert!(log.contains("\"summary\""), "{log}");
-        run(&trace_b);
+        run(&trace_b, &events_b);
         let a = std::fs::read(&trace_a).unwrap();
         let b = std::fs::read(&trace_b).unwrap();
         assert!(!a.is_empty());
         assert_eq!(a, b, "same seed must produce a byte-identical trace");
+        let ea = std::fs::read_to_string(&events_a).unwrap();
+        let eb = std::fs::read_to_string(&events_b).unwrap();
+        assert!(ea.lines().count() > 0, "event log must not be empty");
+        assert!(
+            ea.lines().all(|l| l.starts_with("{\"event\":")),
+            "every event line is a flat JSON object"
+        );
+        assert_eq!(ea, eb, "same seed must produce a byte-identical event log");
     }
 
     #[test]
@@ -1772,5 +1885,66 @@ mod tests {
         let a = args(&["figure", "--list"]);
         let out = dispatch(&a).unwrap();
         assert!(out.contains("fig12"));
+    }
+
+    #[test]
+    fn observe_self_test_passes() {
+        let a = args(&["observe", "--self-test"]);
+        let out = dispatch(&a).unwrap();
+        assert!(out.contains("OK"), "{out}");
+        // The binary-style alias dispatches to the same command.
+        let a = args(&["dudd-observe", "--self-test"]);
+        assert!(dispatch(&a).unwrap().contains("OK"));
+    }
+
+    #[test]
+    fn observe_rejects_bad_inputs() {
+        let a = args(&["observe"]);
+        assert!(dispatch(&a).is_err(), "missing --scrape must fail");
+        let a = args(&["observe", "--scrape", ","]);
+        assert!(dispatch(&a).is_err(), "empty target list must fail");
+        let a = args(&["observe", "--scrape", "x:1", "--timeout-ms", "0"]);
+        assert!(dispatch(&a).is_err());
+        let a = args(&["observe", "--scrape", "x:1", "--watch", "0"]);
+        assert!(dispatch(&a).is_err());
+    }
+
+    /// End to end over a real socket: bind a metrics endpoint, point
+    /// `observe --json` at it, and check the machine-readable report
+    /// carries the verdict and per-node fields the CI smoke asserts on.
+    #[test]
+    fn observe_scrapes_a_live_endpoint_and_emits_the_json_verdict() {
+        use crate::obs::{MetricsRegistry, MetricsServer};
+        use std::sync::Arc;
+
+        let registry = Arc::new(MetricsRegistry::new());
+        registry
+            .counter("dudd_rounds_total", "gossip rounds driven")
+            .unwrap()
+            .add(7);
+        registry
+            .gauge("dudd_converged", "node convergence flag")
+            .unwrap()
+            .set(1.0);
+        registry
+            .gauge("dudd_drift", "round-over-round drift")
+            .unwrap()
+            .set(1e-4);
+        let server = MetricsServer::bind("127.0.0.1:0", Arc::clone(&registry)).unwrap();
+        let target = server.local_addr().to_string();
+
+        let a = args(&["observe", "--scrape", &target, "--json"]);
+        let out = dispatch(&a).unwrap();
+        assert!(out.contains("\"verdict\":"), "{out}");
+        assert!(out.contains("\"rounds\":7"), "{out}");
+        assert!(out.contains("\"converged\":true"), "{out}");
+
+        // Table mode reports the same fleet, plus an unreachable row
+        // for a dead target.
+        let a = args(&["observe", "--scrape", &format!("{target},127.0.0.1:1")]);
+        let out = dispatch(&a).unwrap();
+        assert!(out.contains("verdict"), "{out}");
+        assert!(out.contains(&target), "{out}");
+        assert!(out.contains("UNREACHABLE"), "{out}");
     }
 }

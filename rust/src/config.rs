@@ -263,6 +263,12 @@ pub struct ServiceConfig {
     /// ephemeral port (query it via
     /// [`Node::metrics_addr`](crate::service::Node::metrics_addr)).
     pub metrics_bind: Option<SocketAddr>,
+    /// Path of the structured event log (JSONL, `docs/OBSERVABILITY.md`):
+    /// one line per gossip round, exchange span, and membership change.
+    /// `None` (the default) disables export. The sink is bounded and
+    /// non-blocking — when the writer lags, events are dropped and
+    /// counted in `dudd_events_dropped_total`, never stalling a round.
+    pub obs_event_log: Option<std::path::PathBuf>,
 }
 
 impl Default for ServiceConfig {
@@ -279,6 +285,7 @@ impl Default for ServiceConfig {
             window_slots: 0,
             gossip: GossipLoopConfig::default(),
             metrics_bind: None,
+            obs_event_log: None,
         }
     }
 }
@@ -310,6 +317,12 @@ impl ServiceConfig {
                 self.metrics_bind = match value {
                     "" | "none" | "off" => None,
                     addr => Some(addr.parse().map_err(|_| parse_err(key, value))?),
+                }
+            }
+            "obs_event_log" | "event_log" => {
+                self.obs_event_log = match value {
+                    "" | "none" | "off" => None,
+                    path => Some(std::path::PathBuf::from(path)),
                 }
             }
             _ if key.starts_with("gossip_") => {
@@ -347,7 +360,7 @@ impl ServiceConfig {
     /// One-line human summary.
     pub fn summary(&self) -> String {
         format!(
-            "alpha={} m={} shards={} batch={} queue={} epoch_ms={} window={} metrics={}",
+            "alpha={} m={} shards={} batch={} queue={} epoch_ms={} window={} metrics={} event_log={}",
             self.alpha,
             self.max_buckets,
             self.shards,
@@ -357,6 +370,9 @@ impl ServiceConfig {
             self.window_slots,
             self.metrics_bind
                 .map_or_else(|| "off".to_string(), |a| a.to_string()),
+            self.obs_event_log
+                .as_ref()
+                .map_or_else(|| "off".to_string(), |p| p.display().to_string()),
         )
     }
 }
@@ -826,6 +842,28 @@ mod tests {
         assert!(c.metrics_bind.is_none());
 
         assert!(c.set("metrics_bind", "not-an-addr").is_err());
+    }
+
+    #[test]
+    fn obs_event_log_key_sets_clears_and_rides_summary() {
+        let mut c = ServiceConfig::default();
+        assert!(c.obs_event_log.is_none(), "off by default");
+        assert!(c.summary().contains("event_log=off"));
+
+        c.set("obs_event_log", "/tmp/dudd-events.jsonl").unwrap();
+        assert_eq!(
+            c.obs_event_log.as_deref(),
+            Some(std::path::Path::new("/tmp/dudd-events.jsonl"))
+        );
+        assert!(c.summary().contains("event_log=/tmp/dudd-events.jsonl"));
+        c.validate().unwrap();
+
+        // `none`/`off` (and the `event_log` alias) clear it again.
+        c.set("event_log", "off").unwrap();
+        assert!(c.obs_event_log.is_none());
+        c.set("obs_event_log", "logs/a.jsonl").unwrap();
+        c.set("obs_event_log", "none").unwrap();
+        assert!(c.obs_event_log.is_none());
     }
 
     #[test]

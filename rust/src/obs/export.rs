@@ -1,0 +1,558 @@
+//! Structured event-log export: a bounded, non-blocking JSONL sink.
+//!
+//! The gossip loop emits one JSON object per line — round spans,
+//! per-exchange child spans ([`ExchangeSpan`]), and membership deltas —
+//! into an [`EventSink`]. The sink is a bounded channel in front of a
+//! dedicated writer thread: the hot path does one `try_send` and **never
+//! blocks**; when the writer lags behind, events are dropped and counted
+//! (`dudd_events_dropped_total`) instead of stalling a gossip round.
+//!
+//! The encoder is hand-rolled (the crate carries no serialization
+//! dependency, same as `sim/`'s report writer), and [`parse_flat_json`]
+//! is the matching hand-rolled reader — `dudd-observe` and the property
+//! tests both consume logs through it. The simulator emits the *same*
+//! schema from its virtual clock (`sim/fleet.rs`), so production logs
+//! and deterministic sim traces are diffable with one toolchain.
+//!
+//! ## Event schema
+//!
+//! Every line is one flat JSON object with an `"event"` discriminator:
+//!
+//! * `round` — `node`, `t_ms`, `round`, `generation`, `reseeded`,
+//!   `restart_cause` (string or `null`), `exchanges`, `failed`,
+//!   `bytes`, `total_us`, and the four phase spans
+//!   `refresh_us`/`exchange_us`/`membership_us`/`publish_us`.
+//! * `exchange` — `node`, `t_ms`, `round`, `trace_id` (decimal
+//!   **string** — 64-bit ids exceed JSON's interoperable integer
+//!   range), `role` (`initiator`/`server`), `peer`, `generation`,
+//!   `kind`, `bytes`, `outcome`, and
+//!   `connect_us`/`push_us`/`reply_us`/`commit_us`.
+//! * `membership` — `node`, `t_ms`, `round`, `joined`, `suspected`,
+//!   `died`.
+//!
+//! `t_ms` is milliseconds since the sink was created (production) or
+//! since simulation start (sim) — a per-node monotonic offset, not a
+//! cross-node clock; cross-node joining uses `trace_id`
+//! (`docs/PROTOCOL.md` §2), never timestamps.
+
+use super::registry::Counter;
+use super::trace::{ExchangeSpan, RoundPhase, RoundTrace};
+use std::collections::BTreeMap;
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TryRecvError};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+/// Bounded queue depth between the gossip hot path and the writer
+/// thread. At ~200 bytes per event this is under 1 MiB of backlog; a
+/// writer stalled longer than that loses events (counted) rather than
+/// stalling rounds.
+const EVENT_QUEUE_DEPTH: usize = 4096;
+
+/// A bounded, non-blocking JSONL event writer. Construct with
+/// [`EventSink::create`]; emit with the typed `emit_*` methods (or raw
+/// [`EventSink::emit`]). Dropping the sink closes the channel and joins
+/// the writer thread, flushing everything still queued.
+#[derive(Debug)]
+pub struct EventSink {
+    tx: Option<SyncSender<String>>,
+    writer: Option<JoinHandle<()>>,
+    dropped: Counter,
+    node: String,
+    born: Instant,
+}
+
+impl EventSink {
+    /// Open (truncating) `path` and start the writer thread. `node` is
+    /// the label stamped on every event (the node's serve address);
+    /// `dropped` is incremented once per event lost to a lagging
+    /// writer.
+    pub fn create(path: &Path, node: &str, dropped: Counter) -> std::io::Result<EventSink> {
+        let file = File::create(path)?;
+        let (tx, rx) = sync_channel::<String>(EVENT_QUEUE_DEPTH);
+        let writer = std::thread::Builder::new()
+            .name("dudd-event-log".into())
+            .spawn(move || write_loop(rx, file))?;
+        Ok(EventSink {
+            tx: Some(tx),
+            writer: Some(writer),
+            dropped,
+            node: node.to_string(),
+            born: Instant::now(),
+        })
+    }
+
+    /// Events dropped so far because the writer lagged.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.get()
+    }
+
+    /// Queue one pre-encoded JSON line. Non-blocking: a full queue (or
+    /// a dead writer) drops the event and bumps the drop counter.
+    pub fn emit(&self, line: String) {
+        let Some(tx) = self.tx.as_ref() else {
+            self.dropped.inc();
+            return;
+        };
+        if tx.try_send(line).is_err() {
+            self.dropped.inc();
+        }
+    }
+
+    fn t_ms(&self) -> u64 {
+        self.born.elapsed().as_millis() as u64
+    }
+
+    /// Emit one `round` event from a completed round's trace.
+    pub fn emit_round(&self, trace: &RoundTrace) {
+        self.emit(encode_round_event(&self.node, self.t_ms(), trace));
+    }
+
+    /// Emit one `exchange` event. `round` is the initiating (or
+    /// serving) node's round counter at emission.
+    pub fn emit_exchange(&self, round: u64, span: &ExchangeSpan) {
+        self.emit(encode_exchange_event(&self.node, self.t_ms(), round, span));
+    }
+
+    /// Emit one `membership` event (only called on rounds where the
+    /// member table actually changed).
+    pub fn emit_membership(&self, round: u64, joined: u64, suspected: u64, died: u64) {
+        self.emit(encode_membership_event(
+            &self.node,
+            self.t_ms(),
+            round,
+            joined,
+            suspected,
+            died,
+        ));
+    }
+}
+
+impl Drop for EventSink {
+    fn drop(&mut self) {
+        drop(self.tx.take()); // close the channel: writer drains + exits
+        if let Some(w) = self.writer.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+fn write_loop(rx: Receiver<String>, file: File) {
+    let mut out = BufWriter::new(file);
+    // Block for the next event, then opportunistically drain whatever
+    // else is queued before flushing — one syscall per burst, and the
+    // file is line-complete whenever the queue is empty.
+    while let Ok(line) = rx.recv() {
+        if out.write_all(line.as_bytes()).is_err() {
+            return; // disk gone; senders see a closed channel and count drops
+        }
+        let _ = out.write_all(b"\n");
+        loop {
+            match rx.try_recv() {
+                Ok(line) => {
+                    let _ = out.write_all(line.as_bytes());
+                    let _ = out.write_all(b"\n");
+                }
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => {
+                    let _ = out.flush();
+                    return;
+                }
+            }
+        }
+        let _ = out.flush();
+    }
+    let _ = out.flush();
+}
+
+// ---- encoding (also used by the simulator for schema parity) ----
+
+/// Encode one `round` event line (no trailing newline).
+pub fn encode_round_event(node: &str, t_ms: u64, trace: &RoundTrace) -> String {
+    let mut out = String::with_capacity(256);
+    out.push_str("{\"event\":\"round\",\"node\":");
+    push_json_str(&mut out, node);
+    out.push_str(&format!(
+        ",\"t_ms\":{},\"round\":{},\"generation\":{},\"reseeded\":{}",
+        t_ms, trace.round, trace.generation, trace.reseeded
+    ));
+    out.push_str(",\"restart_cause\":");
+    match trace.restart_cause {
+        Some(cause) => push_json_str(&mut out, cause),
+        None => out.push_str("null"),
+    }
+    out.push_str(&format!(
+        ",\"exchanges\":{},\"failed\":{},\"bytes\":{},\"total_us\":{}",
+        trace.exchanges,
+        trace.failed,
+        trace.bytes,
+        trace.total.as_micros()
+    ));
+    out.push_str(&format!(
+        ",\"refresh_us\":{},\"exchange_us\":{},\"membership_us\":{},\"publish_us\":{}}}",
+        trace.phase(RoundPhase::Refresh).as_micros(),
+        trace.phase(RoundPhase::Exchange).as_micros(),
+        trace.phase(RoundPhase::Membership).as_micros(),
+        trace.phase(RoundPhase::Publish).as_micros()
+    ));
+    out
+}
+
+/// Encode one `exchange` event line (no trailing newline).
+pub fn encode_exchange_event(node: &str, t_ms: u64, round: u64, span: &ExchangeSpan) -> String {
+    let mut out = String::with_capacity(256);
+    out.push_str("{\"event\":\"exchange\",\"node\":");
+    push_json_str(&mut out, node);
+    out.push_str(&format!(",\"t_ms\":{t_ms},\"round\":{round},\"trace_id\":"));
+    push_json_str(&mut out, &span.trace_id.to_string());
+    out.push_str(",\"role\":");
+    push_json_str(&mut out, if span.initiator { "initiator" } else { "server" });
+    out.push_str(",\"peer\":");
+    push_json_str(&mut out, &span.peer);
+    out.push_str(&format!(",\"generation\":{},\"kind\":", span.generation));
+    push_json_str(&mut out, span.kind);
+    out.push_str(&format!(",\"bytes\":{},\"outcome\":", span.bytes));
+    push_json_str(&mut out, span.outcome);
+    out.push_str(&format!(
+        ",\"connect_us\":{},\"push_us\":{},\"reply_us\":{},\"commit_us\":{}}}",
+        span.connect.as_micros(),
+        span.push.as_micros(),
+        span.reply.as_micros(),
+        span.commit.as_micros()
+    ));
+    out
+}
+
+/// Encode one `membership` event line (no trailing newline).
+pub fn encode_membership_event(
+    node: &str,
+    t_ms: u64,
+    round: u64,
+    joined: u64,
+    suspected: u64,
+    died: u64,
+) -> String {
+    let mut out = String::with_capacity(128);
+    out.push_str("{\"event\":\"membership\",\"node\":");
+    push_json_str(&mut out, node);
+    out.push_str(&format!(
+        ",\"t_ms\":{t_ms},\"round\":{round},\"joined\":{joined},\
+         \"suspected\":{suspected},\"died\":{died}}}"
+    ));
+    out
+}
+
+/// Append `s` as a JSON string literal (shared with `obs::observe`'s
+/// report renderer).
+pub(crate) fn push_json_str(out: &mut String, s: &str) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+// ---- decoding (dudd-observe + property tests) ----
+
+/// A parsed flat-JSON value — the whole vocabulary the event schema
+/// uses.
+#[derive(Debug, Clone, PartialEq)]
+pub enum JsonValue {
+    /// `null`.
+    Null,
+    /// `true` / `false`.
+    Bool(bool),
+    /// Any JSON number (the schema emits integers only, but they are
+    /// parsed through `f64` like every interoperable JSON reader).
+    Num(f64),
+    /// A string literal, unescaped.
+    Str(String),
+}
+
+impl JsonValue {
+    /// The value as a string, if it is one.
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            JsonValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// The value as a number, if it is one.
+    pub fn as_num(&self) -> Option<f64> {
+        match self {
+            JsonValue::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    /// The value as a u64 (numbers only, truncating).
+    pub fn as_u64(&self) -> Option<u64> {
+        self.as_num().map(|n| n as u64)
+    }
+}
+
+/// Parse one flat JSON object line (`{"k":v,...}`, no nesting — the
+/// event schema is flat by design) into its key → value map. Returns
+/// `None` on anything malformed, including trailing garbage.
+pub fn parse_flat_json(line: &str) -> Option<BTreeMap<String, JsonValue>> {
+    let mut p = Parser {
+        b: line.as_bytes(),
+        i: 0,
+    };
+    p.ws();
+    p.expect(b'{')?;
+    let mut map = BTreeMap::new();
+    p.ws();
+    if p.peek() == Some(b'}') {
+        p.i += 1;
+    } else {
+        loop {
+            p.ws();
+            let key = p.string()?;
+            p.ws();
+            p.expect(b':')?;
+            p.ws();
+            let value = p.value()?;
+            map.insert(key, value);
+            p.ws();
+            match p.next()? {
+                b',' => continue,
+                b'}' => break,
+                _ => return None,
+            }
+        }
+    }
+    p.ws();
+    if p.i != p.b.len() {
+        return None; // trailing garbage
+    }
+    Some(map)
+}
+
+struct Parser<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl Parser<'_> {
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.i).copied()
+    }
+
+    fn next(&mut self) -> Option<u8> {
+        let c = self.peek()?;
+        self.i += 1;
+        Some(c)
+    }
+
+    fn expect(&mut self, want: u8) -> Option<()> {
+        (self.next()? == want).then_some(())
+    }
+
+    fn ws(&mut self) {
+        while matches!(self.peek(), Some(b' ' | b'\t' | b'\r' | b'\n')) {
+            self.i += 1;
+        }
+    }
+
+    fn value(&mut self) -> Option<JsonValue> {
+        match self.peek()? {
+            b'"' => Some(JsonValue::Str(self.string()?)),
+            b'n' => self.literal("null", JsonValue::Null),
+            b't' => self.literal("true", JsonValue::Bool(true)),
+            b'f' => self.literal("false", JsonValue::Bool(false)),
+            _ => self.number(),
+        }
+    }
+
+    fn literal(&mut self, word: &str, v: JsonValue) -> Option<JsonValue> {
+        if self.b[self.i..].starts_with(word.as_bytes()) {
+            self.i += word.len();
+            Some(v)
+        } else {
+            None
+        }
+    }
+
+    fn number(&mut self) -> Option<JsonValue> {
+        let start = self.i;
+        if self.peek() == Some(b'-') {
+            self.i += 1;
+        }
+        while matches!(self.peek(), Some(b'0'..=b'9' | b'.' | b'e' | b'E' | b'+' | b'-')) {
+            self.i += 1;
+        }
+        std::str::from_utf8(&self.b[start..self.i])
+            .ok()?
+            .parse::<f64>()
+            .ok()
+            .map(JsonValue::Num)
+    }
+
+    fn string(&mut self) -> Option<String> {
+        self.expect(b'"')?;
+        // Collect raw bytes to the closing quote, then decode escapes
+        // on chars (the input is a &str, so the bytes are valid UTF-8).
+        let start = self.i;
+        loop {
+            match self.next()? {
+                b'"' => break,
+                b'\\' => {
+                    self.next()?; // skip the escaped byte (incl. \")
+                }
+                _ => {}
+            }
+        }
+        let raw = std::str::from_utf8(&self.b[start..self.i - 1]).ok()?;
+        let mut out = String::with_capacity(raw.len());
+        let mut chars = raw.chars();
+        while let Some(c) = chars.next() {
+            if c != '\\' {
+                out.push(c);
+                continue;
+            }
+            match chars.next()? {
+                '"' => out.push('"'),
+                '\\' => out.push('\\'),
+                '/' => out.push('/'),
+                'n' => out.push('\n'),
+                't' => out.push('\t'),
+                'r' => out.push('\r'),
+                'b' => out.push('\u{0008}'),
+                'f' => out.push('\u{000C}'),
+                'u' => {
+                    let hex: String = (&mut chars).take(4).collect();
+                    if hex.len() != 4 {
+                        return None;
+                    }
+                    let code = u32::from_str_radix(&hex, 16).ok()?;
+                    out.push(char::from_u32(code)?);
+                }
+                _ => return None,
+            }
+        }
+        Some(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    fn span(trace_id: u64) -> ExchangeSpan {
+        ExchangeSpan {
+            trace_id,
+            initiator: true,
+            peer: "127.0.0.1:7401".into(),
+            generation: 3,
+            kind: "delta",
+            bytes: 98,
+            outcome: "ok",
+            connect: Duration::from_micros(120),
+            push: Duration::from_micros(80),
+            reply: Duration::from_micros(400),
+            commit: Duration::from_micros(15),
+        }
+    }
+
+    #[test]
+    fn exchange_event_round_trips_through_the_parser() {
+        let line = encode_exchange_event("n1", 42, 7, &span(u64::MAX));
+        let obj = parse_flat_json(&line).expect("parses");
+        assert_eq!(obj["event"].as_str(), Some("exchange"));
+        assert_eq!(obj["node"].as_str(), Some("n1"));
+        assert_eq!(obj["t_ms"].as_u64(), Some(42));
+        assert_eq!(obj["round"].as_u64(), Some(7));
+        // u64::MAX survives because trace ids travel as strings.
+        assert_eq!(obj["trace_id"].as_str(), Some("18446744073709551615"));
+        assert_eq!(obj["role"].as_str(), Some("initiator"));
+        assert_eq!(obj["kind"].as_str(), Some("delta"));
+        assert_eq!(obj["outcome"].as_str(), Some("ok"));
+        assert_eq!(obj["bytes"].as_u64(), Some(98));
+        assert_eq!(obj["reply_us"].as_u64(), Some(400));
+    }
+
+    #[test]
+    fn round_event_carries_cause_and_phases() {
+        let mut t =
+            RoundTrace::default().with_phase(RoundPhase::Exchange, Duration::from_micros(900));
+        t.round = 9;
+        t.generation = 2;
+        t.reseeded = true;
+        t.restart_cause = Some("view_change");
+        t.exchanges = 3;
+        t.failed = 1;
+        t.bytes = 4096;
+        t.total = Duration::from_micros(1500);
+        let obj = parse_flat_json(&encode_round_event("n2", 10, &t)).unwrap();
+        assert_eq!(obj["event"].as_str(), Some("round"));
+        assert_eq!(obj["restart_cause"].as_str(), Some("view_change"));
+        assert_eq!(obj["exchange_us"].as_u64(), Some(900));
+        assert_eq!(obj["reseeded"], JsonValue::Bool(true));
+        let no_cause = RoundTrace::default();
+        let obj = parse_flat_json(&encode_round_event("n2", 0, &no_cause)).unwrap();
+        assert_eq!(obj["restart_cause"], JsonValue::Null);
+    }
+
+    #[test]
+    fn hostile_strings_survive_the_encode_decode_pair() {
+        let mut s = span(1);
+        s.peer = "quote\" back\\slash \nnewline \u{0001}ctl".into();
+        let obj = parse_flat_json(&encode_exchange_event("node\"x\"", 0, 0, &s)).unwrap();
+        assert_eq!(obj["peer"].as_str(), Some(s.peer.as_str()));
+        assert_eq!(obj["node"].as_str(), Some("node\"x\""));
+    }
+
+    #[test]
+    fn parser_rejects_malformed_lines() {
+        for bad in [
+            "",
+            "{",
+            "{\"a\":}",
+            "{\"a\":1,}",
+            "{\"a\":1} trailing",
+            "{\"a\" 1}",
+            "{\"a\":\"unterminated}",
+            "[1,2]",
+        ] {
+            assert!(parse_flat_json(bad).is_none(), "{bad:?}");
+        }
+    }
+
+    #[test]
+    fn sink_writes_lines_and_drop_counter_stays_zero_when_keeping_up() {
+        let dir = std::env::temp_dir().join(format!(
+            "dudd-export-test-{}",
+            std::process::id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("events.jsonl");
+        let dropped = Counter::default();
+        {
+            let sink = EventSink::create(&path, "n1", dropped.clone()).unwrap();
+            for round in 0..100u64 {
+                sink.emit_exchange(round, &span(round + 1));
+            }
+            sink.emit_membership(100, 1, 0, 0);
+            assert_eq!(sink.dropped(), 0);
+        } // drop: closes + joins, flushing everything
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 101);
+        for line in &lines {
+            assert!(parse_flat_json(line).is_some(), "{line}");
+        }
+        assert_eq!(dropped.get(), 0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

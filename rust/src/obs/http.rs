@@ -1,18 +1,31 @@
 //! The `GET /metrics` exposition endpoint: a tiny hand-rolled HTTP/1.1
 //! listener over `std::net` (no HTTP dependency exists offline, and a
-//! scrape endpoint needs exactly one verb and one path).
+//! scrape endpoint needs exactly two verbs-worth of routing).
 //!
 //! One background thread accepts connections (non-blocking accept +
 //! short sleep, so shutdown never hangs on `accept`), reads the request
-//! head with a read timeout, and answers:
+//! head under a **whole-request deadline**, and answers:
 //!
 //! * `GET /metrics` → `200` with [`MetricsRegistry::render`] output
 //!   (`text/plain; version=0.0.4`),
+//! * `GET /members` → `200` with the node's gossiped member table as
+//!   JSON lines (one flat object per member), when a
+//!   [`MembersSource`] was installed at bind time — `404` otherwise,
 //! * any other path → `404`,
 //! * any other method → `405`.
 //!
 //! Every response closes the connection — scrapers poll at multi-second
 //! intervals, so keep-alive buys nothing and connection state costs.
+//!
+//! **Slow-client hardening.** Connections are served inline on the
+//! accept thread, so one stalled client would head-of-line-block every
+//! scrape. Per-`read` timeouts alone don't bound that: a slow-loris
+//! client dripping one header byte per interval resets the timeout on
+//! each byte and can hold the thread indefinitely. Both directions are
+//! therefore capped by absolute deadlines — [`REQUEST_DEADLINE`] from
+//! accept to end-of-head, [`RESPONSE_DEADLINE`] for writing the
+//! response — enforced by re-arming the socket timeout with the time
+//! *remaining* before every read/write.
 
 use super::registry::MetricsRegistry;
 use anyhow::{Context, Result};
@@ -21,11 +34,27 @@ use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Cap on the request head we buffer (a scrape request line is tiny;
 /// anything larger is junk).
 const MAX_REQUEST_HEAD: usize = 4096;
+
+/// Absolute budget from accept to the end of the request head. A client
+/// that hasn't produced a complete head by then — silent *or* dripping
+/// bytes — is disconnected.
+const REQUEST_DEADLINE: Duration = Duration::from_secs(2);
+
+/// Absolute budget for writing one response to a (possibly slow)
+/// reader.
+const RESPONSE_DEADLINE: Duration = Duration::from_secs(5);
+
+/// Provider of the `GET /members` body: returns the node's current
+/// member table as JSON lines, one flat object per member (see
+/// `docs/OBSERVABILITY.md` for the schema). Installed by
+/// [`MetricsServer::bind_with_members`]; called per request, so the
+/// body always reflects the live gossiped view.
+pub type MembersSource = Arc<dyn Fn() -> String + Send + Sync>;
 
 /// A running `/metrics` HTTP listener. Binding happens in
 /// [`MetricsServer::bind`]; dropping (or [`MetricsServer::shutdown`])
@@ -40,7 +69,20 @@ pub struct MetricsServer {
 impl MetricsServer {
     /// Bind `addr` (port 0 picks an ephemeral port — read it back via
     /// [`MetricsServer::local_addr`]) and start serving `registry`.
+    /// `GET /members` answers `404` on a server bound this way; use
+    /// [`MetricsServer::bind_with_members`] to install a source.
     pub fn bind(addr: SocketAddr, registry: Arc<MetricsRegistry>) -> Result<Self> {
+        Self::bind_with_members(addr, registry, None)
+    }
+
+    /// [`MetricsServer::bind`] plus a [`MembersSource`] answering
+    /// `GET /members` with the node's gossiped member table (fleet
+    /// discovery for `dudd-observe`).
+    pub fn bind_with_members(
+        addr: SocketAddr,
+        registry: Arc<MetricsRegistry>,
+        members: Option<MembersSource>,
+    ) -> Result<Self> {
         let listener =
             TcpListener::bind(addr).with_context(|| format!("binding /metrics on {addr}"))?;
         listener
@@ -52,7 +94,7 @@ impl MetricsServer {
             let stop = stop.clone();
             std::thread::Builder::new()
                 .name("dudd-metrics".into())
-                .spawn(move || accept_loop(&listener, &registry, &stop))
+                .spawn(move || accept_loop(&listener, &registry, members.as_ref(), &stop))
                 .context("spawning metrics listener thread")?
         };
         Ok(MetricsServer {
@@ -86,14 +128,19 @@ impl Drop for MetricsServer {
     }
 }
 
-fn accept_loop(listener: &TcpListener, registry: &Arc<MetricsRegistry>, stop: &AtomicBool) {
+fn accept_loop(
+    listener: &TcpListener,
+    registry: &Arc<MetricsRegistry>,
+    members: Option<&MembersSource>,
+    stop: &AtomicBool,
+) {
     while !stop.load(Ordering::SeqCst) {
         match listener.accept() {
             Ok((stream, _)) => {
                 // Errors on one scrape connection (reset mid-response,
                 // slow client timing out) must not take the endpoint
                 // down.
-                let _ = serve_conn(stream, registry);
+                let _ = serve_conn(stream, registry, members);
             }
             Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                 std::thread::sleep(Duration::from_millis(10));
@@ -103,39 +150,64 @@ fn accept_loop(listener: &TcpListener, registry: &Arc<MetricsRegistry>, stop: &A
     }
 }
 
-fn serve_conn(mut stream: TcpStream, registry: &Arc<MetricsRegistry>) -> std::io::Result<()> {
+fn serve_conn(
+    mut stream: TcpStream,
+    registry: &Arc<MetricsRegistry>,
+    members: Option<&MembersSource>,
+) -> std::io::Result<()> {
     stream.set_nonblocking(false)?;
-    stream.set_read_timeout(Some(Duration::from_millis(500)))?;
-    stream.set_write_timeout(Some(Duration::from_secs(2)))?;
-    let head = read_request_head(&mut stream)?;
+    let head = read_request_head(&mut stream, Instant::now() + REQUEST_DEADLINE)?;
     let mut parts = head.lines().next().unwrap_or("").split_whitespace();
     let method = parts.next().unwrap_or("");
     let path = parts.next().unwrap_or("");
+    let mut content_type = "text/plain; version=0.0.4; charset=utf-8";
     let (status, body) = if method != "GET" {
         ("405 Method Not Allowed", "method not allowed\n".to_string())
     } else if path == "/metrics" || path.starts_with("/metrics?") {
         ("200 OK", registry.render())
+    } else if path == "/members" {
+        match members {
+            Some(source) => {
+                content_type = "application/x-ndjson";
+                ("200 OK", source())
+            }
+            None => (
+                "404 Not Found",
+                "no member table on this node (static fleet?)\n".to_string(),
+            ),
+        }
     } else {
         ("404 Not Found", "not found (try /metrics)\n".to_string())
     };
     let response = format!(
         "HTTP/1.1 {status}\r\n\
-         Content-Type: text/plain; version=0.0.4; charset=utf-8\r\n\
+         Content-Type: {content_type}\r\n\
          Content-Length: {}\r\n\
          Connection: close\r\n\
          \r\n{body}",
         body.len()
     );
-    stream.write_all(response.as_bytes())?;
+    write_deadlined(&mut stream, response.as_bytes(), Instant::now() + RESPONSE_DEADLINE)?;
     stream.flush()
 }
 
-/// Read until the blank line ending the request head (or the size cap /
-/// read timeout). The body, if any, is ignored — GET has none.
-fn read_request_head(stream: &mut TcpStream) -> std::io::Result<String> {
+/// Read until the blank line ending the request head, the size cap, or
+/// `deadline` — whichever comes first. The socket read timeout is
+/// re-armed with the *remaining* budget before every read, so a client
+/// dripping single bytes cannot extend its stay (the slow-loris fix).
+/// The body, if any, is ignored — GET has none.
+fn read_request_head(stream: &mut TcpStream, deadline: Instant) -> std::io::Result<String> {
     let mut buf = Vec::with_capacity(256);
     let mut chunk = [0u8; 512];
     loop {
+        let remaining = deadline.saturating_duration_since(Instant::now());
+        if remaining.is_zero() {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::TimedOut,
+                "request head deadline exceeded",
+            ));
+        }
+        stream.set_read_timeout(Some(remaining))?;
         let n = stream.read(&mut chunk)?;
         if n == 0 {
             break;
@@ -146,6 +218,39 @@ fn read_request_head(stream: &mut TcpStream) -> std::io::Result<String> {
         }
     }
     Ok(String::from_utf8_lossy(&buf).into_owned())
+}
+
+/// `write_all` under an absolute deadline: the write timeout is
+/// re-armed with the remaining budget before every partial write, so a
+/// client draining the response one byte at a time is bounded by
+/// `deadline` overall, not per write.
+fn write_deadlined(
+    stream: &mut TcpStream,
+    mut bytes: &[u8],
+    deadline: Instant,
+) -> std::io::Result<()> {
+    while !bytes.is_empty() {
+        let remaining = deadline.saturating_duration_since(Instant::now());
+        if remaining.is_zero() {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::TimedOut,
+                "response write deadline exceeded",
+            ));
+        }
+        stream.set_write_timeout(Some(remaining))?;
+        match stream.write(bytes) {
+            Ok(0) => {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::WriteZero,
+                    "connection closed mid-response",
+                ))
+            }
+            Ok(n) => bytes = &bytes[n..],
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(())
 }
 
 #[cfg(test)]
@@ -201,6 +306,80 @@ mod tests {
         let mut out = String::new();
         s.read_to_string(&mut out).unwrap();
         assert!(out.starts_with("HTTP/1.1 405"), "{out}");
+    }
+
+    #[test]
+    fn members_endpoint_serves_installed_source_and_404s_without_one() {
+        let registry = Arc::new(MetricsRegistry::new());
+        let source: MembersSource = Arc::new(|| {
+            "{\"id\":0,\"addr\":\"10.0.0.1:7400\",\"status\":\"alive\"}\n\
+             {\"id\":1,\"addr\":\"10.0.0.2:7400\",\"status\":\"suspect\"}\n"
+                .to_string()
+        });
+        let srv = MetricsServer::bind_with_members(
+            "127.0.0.1:0".parse().unwrap(),
+            registry.clone(),
+            Some(source),
+        )
+        .unwrap();
+        let out = get(srv.local_addr(), "/members");
+        assert!(out.starts_with("HTTP/1.1 200 OK\r\n"), "{out}");
+        assert!(out.contains("application/x-ndjson"), "{out}");
+        assert!(out.contains("\"addr\":\"10.0.0.2:7400\""), "{out}");
+        // /metrics still serves next to it.
+        assert!(get(srv.local_addr(), "/metrics").starts_with("HTTP/1.1 200"));
+        srv.shutdown();
+
+        let srv = MetricsServer::bind("127.0.0.1:0".parse().unwrap(), registry).unwrap();
+        let out = get(srv.local_addr(), "/members");
+        assert!(out.starts_with("HTTP/1.1 404"), "{out}");
+        srv.shutdown();
+    }
+
+    /// Slow-loris regression: a client dripping header bytes (each
+    /// arriving well inside any per-read timeout) is disconnected once
+    /// the whole-request deadline expires, and the endpoint serves the
+    /// next scrape normally afterwards.
+    #[test]
+    fn drip_fed_request_head_is_cut_at_the_deadline() {
+        let registry = Arc::new(MetricsRegistry::new());
+        let srv = MetricsServer::bind("127.0.0.1:0".parse().unwrap(), registry).unwrap();
+        let addr = srv.local_addr();
+
+        let started = std::time::Instant::now();
+        let mut s = TcpStream::connect(addr).unwrap();
+        let mut out = Vec::new();
+        // Drip one byte per 100 ms, never completing the head. Without
+        // an absolute deadline each byte re-arms the read timeout and
+        // the connection (and with it the single accept thread) hangs
+        // until the head cap — minutes, not seconds.
+        for b in b"GET /metrics HTTP/1.1\r\nHost: x\r\nX-Drip: ".iter().cycle() {
+            if s.write_all(std::slice::from_ref(b)).is_err() {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(100));
+            s.set_read_timeout(Some(Duration::from_millis(1))).unwrap();
+            match s.read_to_end(&mut out) {
+                Ok(_) => break, // server closed the connection
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {}
+                Err(e) if e.kind() == std::io::ErrorKind::TimedOut => {}
+                Err(_) => break, // reset also counts as disconnection
+            }
+            assert!(
+                started.elapsed() < REQUEST_DEADLINE + Duration::from_secs(3),
+                "server kept a dripping client past the request deadline"
+            );
+        }
+        assert!(
+            started.elapsed() >= Duration::from_millis(300),
+            "client was cut before it even started dripping"
+        );
+        assert!(out.is_empty(), "no response owed to a timed-out request");
+
+        // The endpoint is healthy again for the next scrape.
+        let ok = get(addr, "/metrics");
+        assert!(ok.starts_with("HTTP/1.1 200 OK\r\n"), "{ok}");
+        srv.shutdown();
     }
 
     #[test]

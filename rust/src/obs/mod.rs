@@ -39,14 +39,21 @@
 
 #![forbid(unsafe_code)]
 
+mod export;
 mod http;
+pub mod observe;
 mod registry;
 mod trace;
 
-pub use http::MetricsServer;
+pub use export::{
+    encode_exchange_event, encode_membership_event, encode_round_event, parse_flat_json,
+    EventSink, JsonValue,
+};
+pub use http::{MembersSource, MetricsServer};
 pub use registry::{Counter, Gauge, Histogram, MetricsRegistry, SUMMARY_QUANTILES};
-pub use trace::{RoundPhase, RoundTrace, TraceRing, DEFAULT_TRACE_CAPACITY};
+pub use trace::{ExchangeSpan, RoundPhase, RoundTrace, TraceRing, DEFAULT_TRACE_CAPACITY};
 
+use crate::service::RestartCause;
 use crate::sketch::RejectReason;
 use anyhow::Result;
 use std::sync::{Arc, OnceLock};
@@ -90,6 +97,15 @@ pub struct GossipMetrics {
     pub drift: Gauge,
     /// `dudd_converged` — 1 once drift fell to the threshold, else 0.
     pub converged: Gauge,
+    /// `dudd_union_rel_err_bound` — the live Theorem 2 relative-error
+    /// bound of the union estimate (`theorem2_bound(α₀, collapses)`).
+    pub union_bound: Gauge,
+    /// `dudd_restarts_total{cause=...}` — protocol restarts by
+    /// [`RestartCause`].
+    pub restarts: RestartCounters,
+    /// `dudd_events_dropped_total` — event-log lines lost to a lagging
+    /// writer ([`EventSink`] is non-blocking by contract).
+    pub events_dropped: Counter,
     /// `dudd_round_seconds` — whole-round wall clock.
     pub round_seconds: Histogram,
     phases: [Histogram; 4],
@@ -146,6 +162,45 @@ impl RejectCounters {
             RejectReason::Malformed => &self.malformed,
             RejectReason::BaselineMismatch => &self.baseline_mismatch,
             RejectReason::NoMembership => &self.no_membership,
+        }
+    }
+}
+
+/// Per-[`RestartCause`] counters (one labeled family,
+/// `dudd_restarts_total{cause=...}`).
+#[derive(Clone, Debug)]
+pub struct RestartCounters {
+    /// `cause="epoch_advance"` — epoch advance with restart-free carry
+    /// disabled.
+    pub epoch_advance: Counter,
+    /// `cause="view_change"` — the membership view re-anchored.
+    pub view_change: Counter,
+    /// `cause="generation_catch_up"` — a partner was heard at a newer
+    /// generation.
+    pub generation_catch_up: Counter,
+    /// `cause="epoch_fallback"` — restart-free epoch carry was
+    /// undefined and fell back to a restart.
+    pub epoch_fallback: Counter,
+}
+
+impl RestartCounters {
+    fn register(registry: &MetricsRegistry, name: &str, help: &str) -> Result<Self> {
+        let c = |cause: &str| registry.counter_with(name, help, &[("cause", cause)]);
+        Ok(RestartCounters {
+            epoch_advance: c("epoch_advance")?,
+            view_change: c("view_change")?,
+            generation_catch_up: c("generation_catch_up")?,
+            epoch_fallback: c("epoch_fallback")?,
+        })
+    }
+
+    /// The counter for `cause`.
+    pub fn cause(&self, cause: RestartCause) -> &Counter {
+        match cause {
+            RestartCause::EpochAdvance => &self.epoch_advance,
+            RestartCause::ViewChange => &self.view_change,
+            RestartCause::GenerationCatchUp => &self.generation_catch_up,
+            RestartCause::EpochFallback => &self.epoch_fallback,
         }
     }
 }
@@ -219,6 +274,9 @@ pub struct NodeMetrics {
     pub membership: Arc<MembershipMetrics>,
     /// The bounded round-trace ring the gossip loop writes.
     pub trace: Arc<TraceRing>,
+    /// The JSONL event-log sink, installed by the builder when
+    /// `obs_event_log` is configured (empty slot = export disabled).
+    pub export: Arc<ObsSlot<EventSink>>,
 }
 
 impl NodeMetrics {
@@ -283,6 +341,19 @@ impl NodeMetrics {
             converged: r.gauge(
                 "dudd_converged",
                 "1 once the probe drift fell to the configured threshold, else 0.",
+            )?,
+            union_bound: r.gauge(
+                "dudd_union_rel_err_bound",
+                "Theorem 2 relative-error bound of the union estimate.",
+            )?,
+            restarts: RestartCounters::register(
+                r,
+                "dudd_restarts_total",
+                "Protocol restarts by cause.",
+            )?,
+            events_dropped: r.counter(
+                "dudd_events_dropped_total",
+                "Event-log lines dropped because the writer lagged.",
             )?,
             round_seconds: r.histogram(
                 "dudd_round_seconds",
@@ -361,6 +432,7 @@ impl NodeMetrics {
             transport,
             membership,
             trace: Arc::new(TraceRing::default()),
+            export: Arc::new(ObsSlot::new()),
         })
     }
 
@@ -444,6 +516,29 @@ mod tests {
             &rc.malformed,
             &rc.baseline_mismatch,
             &rc.no_membership,
+        ] {
+            assert_eq!(c.get(), 1);
+        }
+    }
+
+    #[test]
+    fn restart_counters_map_every_cause() {
+        let registry = MetricsRegistry::new();
+        let rc = RestartCounters::register(&registry, "t_restarts_total", "x").unwrap();
+        use crate::service::RestartCause as C;
+        for cause in [
+            C::EpochAdvance,
+            C::ViewChange,
+            C::GenerationCatchUp,
+            C::EpochFallback,
+        ] {
+            rc.cause(cause).inc();
+        }
+        for c in [
+            &rc.epoch_advance,
+            &rc.view_change,
+            &rc.generation_catch_up,
+            &rc.epoch_fallback,
         ] {
             assert_eq!(c.get(), 1);
         }

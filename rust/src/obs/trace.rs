@@ -61,8 +61,49 @@ impl RoundPhase {
     }
 }
 
+/// The span record of one exchange attempt — the per-exchange child
+/// span of a [`RoundTrace`]. Both ends of a traced exchange record one:
+/// the initiator's span lands in its round trace (and event log), the
+/// server's span goes to its event log with the *same*
+/// [`trace_id`](ExchangeSpan::trace_id) echoed off the wire
+/// (`docs/PROTOCOL.md` §2), so the two sides join into one causal
+/// record without any clock agreement.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ExchangeSpan {
+    /// The 64-bit wire correlator; 0 on untraced (version-1) exchanges.
+    pub trace_id: u64,
+    /// True on the node that initiated the push–pull.
+    pub initiator: bool,
+    /// The remote partner (`addr:port`, or a member id for local
+    /// in-process exchanges).
+    pub peer: String,
+    /// Restart generation the exchange ran under.
+    pub generation: u64,
+    /// Push frame kind actually sent/served: `"full"`, `"delta"`,
+    /// `"local"` for in-process pair averaging, or `"unknown"` on
+    /// failure spans synthesized outside the transport (the attempted
+    /// frame kind never became visible).
+    pub kind: &'static str,
+    /// Wire bytes moved by this exchange (push + reply, both ends).
+    pub bytes: usize,
+    /// `"ok"`, `"reject:<reason>"`, or an error class
+    /// (`"error:<kind>"`) for cancelled exchanges.
+    pub outcome: &'static str,
+    /// Time acquiring a channel (pool checkout or fresh connect);
+    /// zero on the serving side.
+    pub connect: Duration,
+    /// Time writing (initiator) or reading + averaging (server) the
+    /// push.
+    pub push: Duration,
+    /// Time waiting for / writing the reply.
+    pub reply: Duration,
+    /// Time adopting (initiator) or committing (server) the averaged
+    /// state.
+    pub commit: Duration,
+}
+
 /// The span record of one executed gossip round.
-#[derive(Debug, Clone, Copy, Default)]
+#[derive(Debug, Clone, Default)]
 pub struct RoundTrace {
     /// Round counter when the trace was taken.
     pub round: u64,
@@ -70,6 +111,9 @@ pub struct RoundTrace {
     pub generation: u64,
     /// Whether the round reseeded the local members.
     pub reseeded: bool,
+    /// Why the round restarted ([`RestartCause`](crate::service::RestartCause)
+    /// name), when it did.
+    pub restart_cause: Option<&'static str>,
     /// Completed exchanges.
     pub exchanges: usize,
     /// Cancelled exchanges.
@@ -78,6 +122,8 @@ pub struct RoundTrace {
     pub bytes: usize,
     /// Whole-round wall clock.
     pub total: Duration,
+    /// Per-exchange child spans, in initiation order.
+    pub exchange_spans: Vec<ExchangeSpan>,
     phases: [Duration; 4],
 }
 
@@ -93,6 +139,26 @@ impl RoundTrace {
     /// sum to [`RoundTrace::total`].
     pub fn phase(&self, phase: RoundPhase) -> Duration {
         self.phases[phase.index()]
+    }
+
+    /// A copy of this trace with every wall-clock span zeroed:
+    /// identity, counters, and exchange spans survive, while
+    /// [`RoundTrace::total`], the phase spans, and the per-exchange
+    /// timings go to zero. The simulator's event export runs the trace
+    /// through this before encoding — virtual time is deterministic
+    /// but the `Instant`-measured spans are not, and same-seed sim
+    /// runs must stay byte-identical (`docs/SIMULATION.md`).
+    pub fn without_timings(&self) -> RoundTrace {
+        let mut out = self.clone();
+        out.total = Duration::ZERO;
+        out.phases = [Duration::ZERO; 4];
+        for span in &mut out.exchange_spans {
+            span.connect = Duration::ZERO;
+            span.push = Duration::ZERO;
+            span.reply = Duration::ZERO;
+            span.commit = Duration::ZERO;
+        }
+        out
     }
 }
 
@@ -136,7 +202,7 @@ impl TraceRing {
     pub fn recent(&self, n: usize) -> Vec<RoundTrace> {
         let ring = self.lock_ring();
         let skip = ring.len().saturating_sub(n);
-        ring.iter().skip(skip).copied().collect()
+        ring.iter().skip(skip).cloned().collect()
     }
 
     /// Traces currently retained.
@@ -176,6 +242,56 @@ mod tests {
         assert_eq!(rounds, vec![7, 8, 9, 10], "oldest evicted first");
         let last_two: Vec<u64> = ring.recent(2).iter().map(|t| t.round).collect();
         assert_eq!(last_two, vec![9, 10]);
+    }
+
+    #[test]
+    fn exchange_spans_and_restart_cause_ride_the_trace() {
+        let mut t = RoundTrace::default();
+        t.exchange_spans.push(ExchangeSpan {
+            trace_id: 7,
+            initiator: true,
+            peer: "127.0.0.1:9".into(),
+            kind: "delta",
+            outcome: "ok",
+            ..ExchangeSpan::default()
+        });
+        t.restart_cause = Some("view_change");
+        let ring = TraceRing::new(2);
+        ring.push(t);
+        let got = ring.recent(1);
+        assert_eq!(got[0].exchange_spans.len(), 1);
+        assert_eq!(got[0].exchange_spans[0].trace_id, 7);
+        assert!(got[0].exchange_spans[0].initiator);
+        assert_eq!(got[0].restart_cause, Some("view_change"));
+    }
+
+    #[test]
+    fn without_timings_zeroes_spans_but_keeps_identity() {
+        let mut t = RoundTrace::default()
+            .with_phase(RoundPhase::Exchange, Duration::from_millis(9));
+        t.round = 4;
+        t.generation = 2;
+        t.bytes = 512;
+        t.total = Duration::from_millis(11);
+        t.exchange_spans.push(ExchangeSpan {
+            trace_id: 99,
+            peer: "10.0.0.1:7".into(),
+            kind: "full",
+            outcome: "ok",
+            connect: Duration::from_micros(33),
+            reply: Duration::from_micros(44),
+            ..ExchangeSpan::default()
+        });
+        let clean = t.without_timings();
+        assert_eq!(clean.round, 4);
+        assert_eq!(clean.generation, 2);
+        assert_eq!(clean.bytes, 512);
+        assert_eq!(clean.total, Duration::ZERO);
+        assert_eq!(clean.phase(RoundPhase::Exchange), Duration::ZERO);
+        assert_eq!(clean.exchange_spans[0].trace_id, 99);
+        assert_eq!(clean.exchange_spans[0].peer, "10.0.0.1:7");
+        assert_eq!(clean.exchange_spans[0].connect, Duration::ZERO);
+        assert_eq!(clean.exchange_spans[0].reply, Duration::ZERO);
     }
 
     #[test]

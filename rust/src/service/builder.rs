@@ -56,13 +56,14 @@
 
 use super::coordinator::{QuantileService, ServiceWriter};
 use super::gossip_loop::{GlobalView, GossipLoop, GossipMember, GossipRoundReport};
-use super::membership::{Membership, MembershipConfig};
+use super::membership::{MemberStatus, MemberTable, Membership, MembershipConfig};
 use super::snapshot::Snapshot;
 use super::transport::{InProcessTransport, Transport};
 use crate::config::{GossipLoopConfig, ServiceConfig};
-use crate::obs::{MetricsRegistry, MetricsServer, NodeMetrics};
+use crate::obs::{EventSink, MembersSource, MetricsRegistry, MetricsServer, NodeMetrics};
 use anyhow::{bail, Context, Result};
 use std::net::SocketAddr;
+use std::path::PathBuf;
 use std::sync::Arc;
 
 /// A serving node: one [`QuantileService`] plus (optionally) the
@@ -275,6 +276,28 @@ impl NodeBuilder {
         self
     }
 
+    /// Export the node's structured event log to `path` (the
+    /// `obs_event_log` config key): one JSON line per gossip round,
+    /// per-exchange span, and membership change — the schema in
+    /// `docs/OBSERVABILITY.md`. The sink is bounded and non-blocking;
+    /// a lagging writer drops events (counted in
+    /// `dudd_events_dropped_total`) instead of stalling rounds.
+    ///
+    /// ```
+    /// use duddsketch::prelude::*;
+    ///
+    /// let dir = std::env::temp_dir();
+    /// let path = dir.join(format!("dudd-doc-events-{}.jsonl", std::process::id()));
+    /// let node = Node::builder().shards(1).event_log(&path).build().unwrap();
+    /// node.shutdown();
+    /// assert!(path.exists());
+    /// std::fs::remove_file(&path).ok();
+    /// ```
+    pub fn event_log(mut self, path: impl Into<PathBuf>) -> Self {
+        self.cfg.obs_event_log = Some(path.into());
+        self
+    }
+
     /// Replace the whole gossip-loop configuration.
     pub fn gossip(mut self, gossip: GossipLoopConfig) -> Self {
         self.cfg.gossip = gossip;
@@ -459,11 +482,24 @@ impl NodeBuilder {
         // spawn — an unusable metrics_bind fails construction cleanly.
         let registry = Arc::new(MetricsRegistry::new());
         let obs = NodeMetrics::register(&registry).context("registering node metrics")?;
-        let metrics_server = match cfg.metrics_bind {
-            Some(addr) => Some(MetricsServer::bind(addr, Arc::clone(&registry))?),
-            None => None,
-        };
+        // The event sink installs before any layer spawns, so the very
+        // first round (and serve) can log. The node label is the serve
+        // address when the transport has one — the cross-node joinable
+        // identity — and the member index otherwise.
+        if let Some(path) = &cfg.obs_event_log {
+            let label = transport
+                .as_ref()
+                .and_then(|t| t.listen_addr())
+                .map(|a| a.to_string())
+                .unwrap_or_else(|| format!("member:{self_index}"));
+            let sink = EventSink::create(path, &label, obs.gossip.events_dropped.clone())
+                .with_context(|| format!("creating event log {}", path.display()))?;
+            obs.export.install(Arc::new(sink));
+        }
         if bootstrap || !cfg.gossip.seed_peers.is_empty() {
+            // The /metrics listener binds inside the membership path,
+            // after the member table exists, so GET /members can serve
+            // the gossiped view.
             return Self::build_membership(
                 cfg,
                 peers,
@@ -471,9 +507,13 @@ impl NodeBuilder {
                 transport,
                 bootstrap,
                 obs,
-                metrics_server,
+                registry,
             );
         }
+        let metrics_server = match cfg.metrics_bind {
+            Some(addr) => Some(MetricsServer::bind(addr, Arc::clone(&registry))?),
+            None => None,
+        };
         if self_index > peers.len() {
             bail!(
                 "self_index {} is out of range for a fleet of {} members",
@@ -520,6 +560,8 @@ impl NodeBuilder {
     /// ([`NodeBuilder::membership_bootstrap`] / [`NodeBuilder::join`]):
     /// bootstrap or join first (so a refused handshake fails before any
     /// service threads spawn), then start the loop over the live view.
+    /// The `/metrics` listener binds here — after the member table
+    /// exists — so `GET /members` serves the gossiped view.
     fn build_membership(
         cfg: ServiceConfig,
         peers: Vec<GossipMember>,
@@ -527,7 +569,7 @@ impl NodeBuilder {
         transport: Option<Arc<dyn Transport>>,
         bootstrap: bool,
         obs: NodeMetrics,
-        metrics_server: Option<MetricsServer>,
+        registry: Arc<MetricsRegistry>,
     ) -> Result<Node> {
         if !peers.is_empty() {
             bail!(
@@ -583,6 +625,20 @@ impl NodeBuilder {
                 }
             }
         };
+        let membership = Arc::new(membership);
+        let metrics_server = match cfg.metrics_bind {
+            Some(addr) => {
+                let table_source = Arc::clone(&membership);
+                let source: MembersSource =
+                    Arc::new(move || render_members_jsonl(&table_source.table()));
+                Some(MetricsServer::bind_with_members(
+                    addr,
+                    Arc::clone(&registry),
+                    Some(source),
+                )?)
+            }
+            None => None,
+        };
         let service = Arc::new(QuantileService::start_instrumented(
             cfg.clone(),
             Some(obs.service.clone()),
@@ -591,7 +647,7 @@ impl NodeBuilder {
             cfg.gossip.clone(),
             GossipMember::Service(service.clone()),
             transport,
-            Arc::new(membership),
+            membership,
             generation,
             obs.clone(),
         )
@@ -604,6 +660,26 @@ impl NodeBuilder {
             metrics_server,
         })
     }
+}
+
+/// Render a member table as the `GET /members` NDJSON body: one flat
+/// JSON object per entry (tombstones included — a dead member is fleet
+/// state worth seeing). `SocketAddr` display and the status names need
+/// no JSON escaping.
+fn render_members_jsonl(table: &MemberTable) -> String {
+    let mut out = String::new();
+    for e in table.iter() {
+        let status = match e.status {
+            MemberStatus::Alive => "alive",
+            MemberStatus::Suspect => "suspect",
+            MemberStatus::Dead => "dead",
+        };
+        out.push_str(&format!(
+            "{{\"id\":{},\"addr\":\"{}\",\"incarnation\":{},\"status\":\"{}\"}}\n",
+            e.id, e.addr, e.incarnation, status
+        ));
+    }
+    out
 }
 
 #[cfg(test)]
@@ -672,6 +748,92 @@ mod tests {
         assert!(out.contains("dudd_epochs_total 1"), "{out}");
 
         drop(w);
+        node.shutdown();
+    }
+
+    /// The `event_log` knob wires an [`EventSink`] through the whole
+    /// stack: stepped rounds land as parseable JSONL lines labeled with
+    /// this node's member identity, without dropping anything.
+    #[test]
+    fn event_log_knob_exports_rounds_as_jsonl() {
+        let dir = std::env::temp_dir().join(format!("dudd-builder-events-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("node.jsonl");
+        let data: Vec<f64> = (1..=600).map(f64::from).collect();
+        let node = Node::builder()
+            .shards(1)
+            .peer(GossipMember::from_dataset(&data, 0.001, 1024).unwrap())
+            .event_log(&path)
+            .build()
+            .unwrap();
+        assert_eq!(
+            node.service().config().obs_event_log.as_deref(),
+            Some(path.as_path())
+        );
+        let mut exchanges = 0;
+        for _ in 0..3 {
+            let r = node.step().unwrap();
+            exchanges += r.exchanges + r.failed;
+        }
+        // 3 round lines + one exchange line per attempt; the writer
+        // thread flushes per burst, so poll briefly.
+        let want = 3 + exchanges;
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
+        let text = loop {
+            let text = std::fs::read_to_string(&path).unwrap_or_default();
+            if text.lines().count() >= want || std::time::Instant::now() > deadline {
+                break text;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(20));
+        };
+        let lines: Vec<&str> = text.lines().collect();
+        assert!(lines.len() >= want, "want >= {want} lines, got {}", lines.len());
+        let mut rounds = 0;
+        for line in &lines {
+            let obj = crate::obs::parse_flat_json(line).unwrap_or_else(|| panic!("{line}"));
+            assert_eq!(obj["node"].as_str(), Some("member:0"), "{line}");
+            if obj["event"].as_str() == Some("round") {
+                rounds += 1;
+            }
+        }
+        assert_eq!(rounds, 3);
+        assert_eq!(node.metrics().gossip.events_dropped.get(), 0);
+        node.shutdown();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// A dynamic-membership node serves its gossiped member table at
+    /// `GET /members`, next to `/metrics`.
+    #[test]
+    fn members_endpoint_serves_the_gossiped_table() {
+        use super::super::transport::TcpTransport;
+        let transport = TcpTransport::bind(
+            "127.0.0.1:0",
+            std::time::Duration::from_millis(500),
+        )
+        .unwrap();
+        let node = Node::builder()
+            .shards(1)
+            .transport(transport)
+            .membership_bootstrap()
+            .metrics_bind("127.0.0.1:0".parse().unwrap())
+            .build()
+            .unwrap();
+        let listen = node.listen_addr().expect("serving transport");
+        let addr = node.metrics_addr().expect("listener bound");
+
+        use std::io::{Read, Write};
+        let mut s = std::net::TcpStream::connect(addr).unwrap();
+        write!(s, "GET /members HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+        let mut out = String::new();
+        s.read_to_string(&mut out).unwrap();
+        assert!(out.starts_with("HTTP/1.1 200 OK\r\n"), "{out}");
+        let body = out.split_once("\r\n\r\n").unwrap().1;
+        let members = crate::obs::observe::parse_members(body);
+        assert_eq!(members.len(), 1, "bootstrap node alone: {body}");
+        assert_eq!(members[0].id, 0);
+        assert_eq!(members[0].addr, listen.to_string());
+        assert_eq!(members[0].status, "alive");
         node.shutdown();
     }
 

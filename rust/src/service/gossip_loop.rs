@@ -111,9 +111,9 @@ use crate::config::GossipLoopConfig;
 use crate::gossip::{select_exchange_partners, GossipSketch, PeerState};
 use crate::graph::Graph;
 use crate::metrics::relative_error;
-use crate::obs::{NodeMetrics, RoundPhase, RoundTrace};
+use crate::obs::{ExchangeSpan, NodeMetrics, RoundPhase, RoundTrace};
 use crate::rng::{default_rng, Rng as _, Xoshiro256pp};
-use crate::sketch::{QuantileReader, SketchError, Store, UddSketch};
+use crate::sketch::{theorem2_bound, QuantileReader, SketchError, Store, UddSketch};
 use anyhow::{bail, Context, Result};
 use std::net::SocketAddr;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -358,6 +358,20 @@ pub enum RestartCause {
     EpochFallback = 4,
 }
 
+impl RestartCause {
+    /// The cause's stable label value — the `cause` label of the
+    /// `dudd_restarts_total` metric family and the `restart_cause`
+    /// field of `round` event-log lines.
+    pub fn name(self) -> &'static str {
+        match self {
+            RestartCause::EpochAdvance => "epoch_advance",
+            RestartCause::ViewChange => "view_change",
+            RestartCause::GenerationCatchUp => "generation_catch_up",
+            RestartCause::EpochFallback => "epoch_fallback",
+        }
+    }
+}
+
 /// Outcome of the refresh phase (internal to the round path).
 enum RefreshOutcome {
     /// Nothing moved: no restart, no carry.
@@ -424,6 +438,11 @@ struct Fleet {
 /// across a socket operation (see the module docs' lock order).
 struct Ctl {
     rng: Xoshiro256pp,
+    /// Trace-id stream for exchange correlation (`docs/PROTOCOL.md`
+    /// §2). A **separate** stream from `rng`: drawing ids from the
+    /// partner-selection stream would shift its draw sequence and
+    /// break bit-exact parity with the simulation engine.
+    trace_rng: Xoshiro256pp,
     online: Vec<bool>,
     /// Snapshot epoch each member was last seeded from (0 for
     /// static/remote).
@@ -459,6 +478,11 @@ struct LoopCore {
     /// by `run_round` (the sub-span can't be timed from outside: it
     /// interleaves with the data exchanges on the same connections).
     membership_nanos: AtomicU64,
+    /// Initiator-side exchange spans recorded by the in-flight round
+    /// (one per attempted exchange, failures included) and drained into
+    /// the round's [`RoundTrace`] by `run_round`. Leaf lock: taken with
+    /// no other lock held, never nested.
+    round_spans: Mutex<Vec<ExchangeSpan>>,
     /// Per-member state locks (the PR 4 split of the old worker mutex).
     slots: Vec<Mutex<PeerState>>,
     ctl: Mutex<Ctl>,
@@ -578,6 +602,22 @@ impl NodeHandle {
     /// Fails with [`ServeReject::NoMembership`] on a static node.
     pub fn serve_join(&self, addr: SocketAddr) -> Result<(MemberTable, u64), ServeReject> {
         self.core.serve_join(addr)
+    }
+
+    /// True when this node exports an event log — the transport's serve
+    /// path only assembles serve-side [`ExchangeSpan`]s when something
+    /// consumes them.
+    pub(crate) fn serve_tracing(&self) -> bool {
+        self.core.obs.export.get().is_some()
+    }
+
+    /// Record one serve-side exchange span into the node's event log
+    /// (no-op without one). Lock-free — the serve hot path reads only
+    /// the rounds counter, never `ctl`.
+    pub(crate) fn record_serve_span(&self, span: ExchangeSpan) {
+        if let Some(sink) = self.core.obs.export.get() {
+            sink.emit_exchange(self.core.obs.gossip.rounds.get(), &span);
+        }
     }
 }
 
@@ -786,6 +826,7 @@ impl GossipLoop {
         }
         let ctl = Ctl {
             rng: master.derive(0x1005),
+            trace_rng: master.derive(0x7ACE),
             online: vec![true; n],
             epochs,
             seeds,
@@ -825,6 +866,7 @@ impl GossipLoop {
             },
             obs,
             membership_nanos: AtomicU64::new(0),
+            round_spans: Mutex::new(Vec::new()),
             slots: states.into_iter().map(Mutex::new).collect(),
             ctl: Mutex::new(ctl),
             round_gate: Mutex::new(()),
@@ -982,6 +1024,9 @@ impl GossipLoop {
             // node would draw the *same* partner-index stream — correlated
             // draws that visibly slow mixing at simulator scale.
             rng: master.derive(0x1005).derive(self_id),
+            // Same per-node derivation as `rng` — shared `cfg.seed`
+            // with distinct id streams per node.
+            trace_rng: master.derive(0x7ACE).derive(self_id),
             online: vec![true],
             epochs: vec![epoch],
             seeds: vec![seed],
@@ -1019,6 +1064,7 @@ impl GossipLoop {
             },
             obs,
             membership_nanos: AtomicU64::new(0),
+            round_spans: Mutex::new(Vec::new()),
             slots: vec![Mutex::new(state)],
             ctl: Mutex::new(ctl),
             round_gate: Mutex::new(()),
@@ -1171,6 +1217,23 @@ fn round_loop(core: &LoopCore, interval: Duration) {
             break;
         }
         core.run_round();
+    }
+}
+
+/// The span outcome label of a failed initiated exchange: protocol
+/// refusals map to `reject:<reason>` (mirroring the serve side's
+/// labels), everything else to an `error:<kind>` class.
+fn failure_outcome(e: &TransportError) -> &'static str {
+    match e {
+        TransportError::Io(_) => "error:io",
+        TransportError::StaleChannel(_) => "error:stale_channel",
+        TransportError::Codec(_) => "error:codec",
+        TransportError::Busy => "reject:busy",
+        TransportError::StaleGeneration(_) => "reject:stale_generation",
+        TransportError::Protocol(_) => "error:protocol",
+        TransportError::Lineage(_) => "reject:lineage",
+        TransportError::Unreachable(_) => "error:unreachable",
+        TransportError::NoMembership => "reject:no_membership",
     }
 }
 
@@ -1397,25 +1460,73 @@ impl LoopCore {
         Some(out)
     }
 
+    /// Draw the next nonzero exchange trace id (`docs/PROTOCOL.md` §2:
+    /// 0 on the wire means *untraced*). Dedicated rng stream — see
+    /// [`Ctl::trace_rng`].
+    fn next_trace_id(&self) -> u64 {
+        let mut ctl = self.lock_ctl();
+        loop {
+            let id = ctl.trace_rng.next_u64();
+            if id != 0 {
+                return id;
+            }
+        }
+    }
+
+    /// Record one initiator-side span of the in-flight round (drained
+    /// into the [`RoundTrace`] by `run_round`). Called with no other
+    /// lock held.
+    fn record_span(&self, span: ExchangeSpan) {
+        self.round_spans
+            .lock()
+            .expect("round span buffer poisoned")
+            .push(span);
+    }
+
     /// One push–pull with partner `j`, initiated by local member `l`.
     /// Remote exchanges run in the transport's two phases so the connect
     /// deadline burns with no slot held; a stale pooled connection gets
     /// exactly one fresh-connect retry (only unrecovered failures reach
-    /// the round report).
+    /// the round report). Every attempt — local, remote, failed —
+    /// records one [`ExchangeSpan`] for the round trace.
     fn one_exchange(&self, l: usize, j: usize) -> Result<usize, TransportError> {
         if self.fleet.local[j] {
+            let trace_id = self.next_trace_id();
             // Both slots co-located: lock in ascending index order
             // (servers only try-lock, so blocking here cannot deadlock).
             let lo = l.min(j);
             let hi = l.max(j);
-            let mut g_lo = self.lock_slot(lo);
-            let mut g_hi = self.lock_slot(hi);
-            let (a, b) = if l < j {
-                (&mut *g_lo, &mut *g_hi)
-            } else {
-                (&mut *g_hi, &mut *g_lo)
+            let started = Instant::now();
+            let result = {
+                let mut g_lo = self.lock_slot(lo);
+                let mut g_hi = self.lock_slot(hi);
+                let (a, b) = if l < j {
+                    (&mut *g_lo, &mut *g_hi)
+                } else {
+                    (&mut *g_hi, &mut *g_lo)
+                };
+                self.fleet.transport.exchange_local(a, b)
             };
-            self.fleet.transport.exchange_local(a, b)
+            let push = started.elapsed();
+            let generation = self.lock_ctl().generation;
+            let (bytes, outcome) = match &result {
+                Ok(b) => (*b, "ok"),
+                Err(e) => (0, failure_outcome(e)),
+            };
+            self.record_span(ExchangeSpan {
+                trace_id,
+                initiator: true,
+                peer: format!("member:{j}"),
+                generation,
+                kind: "local",
+                bytes,
+                outcome,
+                connect: Duration::ZERO,
+                push,
+                reply: Duration::ZERO,
+                commit: Duration::ZERO,
+            });
+            result
         } else {
             let addr = match &self.fleet.members[j] {
                 GossipMember::Remote(addr) => *addr,
@@ -1427,28 +1538,96 @@ impl LoopCore {
 
     /// The remote half of [`LoopCore::one_exchange`], addressed
     /// directly — shared by the static member list and the dynamic
-    /// membership round.
+    /// membership round. The trace id drawn here rides the push frame,
+    /// the partner echoes it in its answer and stamps it on its own
+    /// serve-side span, so both ends' event logs join into one causal
+    /// record (`docs/PROTOCOL.md` §2).
     fn remote_exchange(&self, l: usize, addr: SocketAddr) -> Result<usize, TransportError> {
+        let trace_id = self.next_trace_id();
         // Phase 1 — connect with NO lock held: a dead peer's connect
         // deadline burns here while inbound serves keep landing.
-        let chan = self.fleet.transport.open_remote(addr)?;
-        // Phase 2 — push–pull holding only our own slot.
-        let mut guard = self.lock_slot(l);
-        let gen = self.lock_ctl().generation;
-        match self.fleet.transport.exchange_on(chan, &mut guard, gen) {
-            Err(TransportError::StaleChannel(_)) => {
-                // The pooled connection was dead before any reply
-                // byte (see `TransportError::StaleChannel` for the
-                // safety argument). Release the slot, open a fresh
-                // connection, retry once.
-                drop(guard);
-                let chan = self.fleet.transport.open_remote(addr)?;
-                let mut guard = self.lock_slot(l);
-                let gen = self.lock_ctl().generation;
-                self.fleet.transport.exchange_on(chan, &mut guard, gen)
+        let connect_start = Instant::now();
+        let chan = match self.fleet.transport.open_remote(addr) {
+            Ok(chan) => chan,
+            Err(e) => {
+                self.record_remote_failure(trace_id, addr, connect_start.elapsed(), &e);
+                return Err(e);
             }
-            r => r,
+        };
+        let connect = connect_start.elapsed();
+        // Phase 2 — push–pull holding only our own slot.
+        let result = {
+            let mut guard = self.lock_slot(l);
+            let gen = self.lock_ctl().generation;
+            let first = self
+                .fleet
+                .transport
+                .exchange_traced(chan, &mut guard, gen, trace_id);
+            match first {
+                Err(TransportError::StaleChannel(_)) => {
+                    // The pooled connection was dead before any reply
+                    // byte (see `TransportError::StaleChannel` for the
+                    // safety argument). Release the slot, open a fresh
+                    // connection, retry once.
+                    drop(guard);
+                    let retry_start = Instant::now();
+                    match self.fleet.transport.open_remote(addr) {
+                        Ok(chan) => {
+                            let retry_connect = connect + retry_start.elapsed();
+                            let mut guard = self.lock_slot(l);
+                            let gen = self.lock_ctl().generation;
+                            self.fleet
+                                .transport
+                                .exchange_traced(chan, &mut guard, gen, trace_id)
+                                .map(|o| (o, retry_connect))
+                        }
+                        Err(e) => Err(e),
+                    }
+                }
+                r => r.map(|o| (o, connect)),
+            }
+        };
+        match result {
+            Ok((outcome, connect)) => {
+                if let Some(mut span) = outcome.span {
+                    // The transport cannot see the pre-exchange connect
+                    // phase; the loop measured it.
+                    span.connect = connect;
+                    self.record_span(span);
+                }
+                Ok(outcome.bytes)
+            }
+            Err(e) => {
+                self.record_remote_failure(trace_id, addr, connect, &e);
+                Err(e)
+            }
         }
+    }
+
+    /// Synthesize and record the initiator-side span of a remote
+    /// exchange the transport could not complete (the transport
+    /// returns spans only for committed push–pulls).
+    fn record_remote_failure(
+        &self,
+        trace_id: u64,
+        addr: SocketAddr,
+        connect: Duration,
+        e: &TransportError,
+    ) {
+        let generation = self.lock_ctl().generation;
+        self.record_span(ExchangeSpan {
+            trace_id,
+            initiator: true,
+            peer: addr.to_string(),
+            generation,
+            kind: "unknown",
+            bytes: 0,
+            outcome: failure_outcome(e),
+            connect,
+            push: Duration::ZERO,
+            reply: Duration::ZERO,
+            commit: Duration::ZERO,
+        });
     }
 
     /// One fan-out push–pull round over the overlay, every partner
@@ -1708,14 +1887,20 @@ impl LoopCore {
         };
         let reseeded = restart_cause.is_some();
         let epoch_carried = matches!(outcome, RefreshOutcome::Carried);
-        if reseeded {
+        if let Some(cause) = restart_cause {
             g.reseeds.inc();
+            g.restarts.cause(cause).inc();
         }
         self.lock_ctl().round += 1;
         self.membership_nanos.store(0, Ordering::Relaxed);
         let exchange_start = Instant::now();
         self.exchange_round();
         let exchange_duration = exchange_start.elapsed();
+        // Rounds serialize on the gate and serves never write the span
+        // buffer, so this drain is exactly the round's exchanges.
+        let exchange_spans: Vec<ExchangeSpan> = std::mem::take(
+            &mut *self.round_spans.lock().expect("round span buffer poisoned"),
+        );
         let membership_duration =
             Duration::from_nanos(self.membership_nanos.swap(0, Ordering::Relaxed));
         let publish_start = Instant::now();
@@ -1765,6 +1950,7 @@ impl LoopCore {
             (ctl.round, ctl.generation, ctl.drift, ctl.converged, pool)
         };
         self.publish_all();
+        g.union_bound.set(self.union_bound());
         let publish_duration = publish_start.elapsed();
         let duration = round_start.elapsed();
         g.round_seconds.observe(duration.as_secs_f64());
@@ -1784,10 +1970,28 @@ impl LoopCore {
         trace.round = round;
         trace.generation = generation;
         trace.reseeded = reseeded;
+        trace.restart_cause = restart_cause.map(RestartCause::name);
         trace.exchanges = exchanges;
         trace.failed = failed;
         trace.bytes = bytes;
         trace.total = duration;
+        trace.exchange_spans = exchange_spans;
+        if let Some(sink) = self.obs.export.get() {
+            for span in &trace.exchange_spans {
+                sink.emit_exchange(round, span);
+            }
+            sink.emit_round(&trace);
+            if let Some(ms) = &membership {
+                if ms.joined + ms.suspected + ms.died > 0 {
+                    sink.emit_membership(
+                        round,
+                        ms.joined as u64,
+                        ms.suspected as u64,
+                        ms.died as u64,
+                    );
+                }
+            }
+        }
         self.obs.trace.push(trace);
         GossipRoundReport {
             round,
@@ -1841,6 +2045,26 @@ impl LoopCore {
                 converged: ctl.converged,
                 state: guards[k].clone(),
             }));
+        }
+    }
+
+    /// The live Theorem 2 relative-error bound of this node's union
+    /// estimate (`dudd_union_rel_err_bound`): `theorem2_bound` over the
+    /// averaged serve-member sketch's estimated value range and bucket
+    /// budget. NaN while undefined — empty sketch, or a value range
+    /// reaching zero/negative values (the paper's relative-value-error
+    /// guarantee covers positive streams).
+    fn union_bound(&self) -> f64 {
+        let (range, m) = {
+            let guard = self.lock_slot(self.fleet.serve_member);
+            (
+                guard.query(0.0).and_then(|mn| guard.query(1.0).map(|mx| (mn, mx))),
+                guard.sketch.max_buckets(),
+            )
+        };
+        match range {
+            Ok((mn, mx)) if mn > 0.0 && mx >= mn && m >= 2 => theorem2_bound(mn, mx, m),
+            _ => f64::NAN,
         }
     }
 
@@ -2152,7 +2376,8 @@ mod tests {
 
         // The trace ring holds one span record per round, newest last.
         assert_eq!(obs.trace.len(), 2);
-        let t = obs.trace.recent(1)[0];
+        let traces = obs.trace.recent(1);
+        let t = &traces[0];
         assert_eq!(t.round, r2.round);
         assert_eq!(t.exchanges, r2.exchanges);
         assert_eq!(t.total, r2.duration);
@@ -2160,6 +2385,21 @@ mod tests {
             t.phase(crate::obs::RoundPhase::Exchange),
             r2.exchange_duration
         );
+
+        // ISSUE 10 tentpole: every attempted exchange left one child
+        // span on the round trace, with a nonzero correlator.
+        assert_eq!(t.exchange_spans.len(), r2.exchanges + r2.failed);
+        let s = &t.exchange_spans[0];
+        assert_ne!(s.trace_id, 0);
+        assert!(s.initiator);
+        assert_eq!(s.kind, "local", "in-process pair averaging");
+        assert_eq!(s.outcome, "ok");
+        assert_eq!(s.generation, 1);
+        assert!(t.restart_cause.is_none());
+
+        // The live Theorem 2 bound gauge is defined on positive data.
+        let bound = obs.gossip.union_bound.get();
+        assert!(bound > 0.0 && bound < 1.0, "bound = {bound}");
 
         // Gauges follow the round outcome, and the whole plane renders.
         assert_eq!(obs.gossip.generation.get(), 1.0);
@@ -2326,6 +2566,20 @@ mod tests {
         let v = gl.view();
         assert_eq!(v.epoch(), 2);
         assert_eq!(v.generation(), 2);
+
+        // ISSUE 10 satellite: the restart is counted by cause and the
+        // cause name rides the round trace (and the event schema).
+        let obs = gl.metrics();
+        assert_eq!(obs.gossip.restarts.epoch_advance.get(), 1);
+        assert_eq!(obs.gossip.reseeds.get(), 1);
+        let traces = obs.trace.recent(1);
+        assert_eq!(traces[0].restart_cause, Some("epoch_advance"));
+        assert_eq!(RestartCause::EpochAdvance.name(), "epoch_advance");
+        let text = obs.registry().render();
+        assert!(
+            text.contains("dudd_restarts_total{cause=\"epoch_advance\"} 1"),
+            "{text}"
+        );
 
         // Steps without new epochs re-converge on the union of 5+2 items.
         gl.step();
@@ -2556,6 +2810,89 @@ mod tests {
         let r = stepper.join().unwrap();
         assert_eq!(r.exchanges, 0);
         assert_eq!(r.failed, 1, "the dead-peer exchange is one failure");
+
+        // ISSUE 10: the cancelled attempt still left a failure span
+        // with the connect phase (where the deadline burned) timed.
+        let traces = gl.metrics().trace.recent(1);
+        assert_eq!(traces[0].exchange_spans.len(), 1);
+        let s = &traces[0].exchange_spans[0];
+        assert_eq!(s.outcome, "error:io");
+        assert_eq!(s.kind, "unknown");
+        assert_ne!(s.trace_id, 0);
+        assert!(s.connect > Duration::ZERO);
         gl.shutdown();
+    }
+
+    /// ISSUE 10: with an event sink installed, every round emits one
+    /// `round` line plus one `exchange` line per attempted exchange,
+    /// all parseable by the schema's own reader.
+    #[test]
+    fn rounds_emit_event_log_lines_when_sink_installed() {
+        use crate::obs::{parse_flat_json, EventSink};
+
+        let dir = std::env::temp_dir().join(format!(
+            "dudd-loop-events-{}",
+            std::process::id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("events.jsonl");
+        let gl = GossipLoop::start(
+            GossipLoopConfig::default(),
+            vec![static_member(&[1.0, 2.0]), static_member(&[3.0, 4.0])],
+        )
+        .unwrap();
+        let obs = gl.metrics();
+        let sink =
+            EventSink::create(&path, "n0", obs.gossip.events_dropped.clone()).unwrap();
+        obs.export.install(Arc::new(sink));
+        let r1 = gl.step();
+        let expected = 1 + r1.exchanges + r1.failed;
+
+        // The sink's writer thread is asynchronous by contract: poll
+        // until the lines land (they flush per burst).
+        let deadline = Instant::now() + Duration::from_secs(5);
+        let lines: Vec<String> = loop {
+            let text = std::fs::read_to_string(&path).unwrap_or_default();
+            let lines: Vec<String> = text.lines().map(str::to_string).collect();
+            if lines.len() >= expected {
+                break lines;
+            }
+            assert!(
+                Instant::now() < deadline,
+                "writer never flushed: {} of {expected} lines",
+                lines.len()
+            );
+            std::thread::sleep(Duration::from_millis(5));
+        };
+        let mut rounds = 0;
+        let mut exchanges = 0;
+        for line in &lines {
+            let obj = parse_flat_json(line).expect("schema-valid line");
+            assert_eq!(obj["node"].as_str(), Some("n0"));
+            match obj["event"].as_str() {
+                Some("round") => {
+                    rounds += 1;
+                    assert_eq!(obj["round"].as_u64(), Some(1));
+                    assert_eq!(obj["exchanges"].as_u64(), Some(r1.exchanges as u64));
+                }
+                Some("exchange") => {
+                    exchanges += 1;
+                    assert_eq!(obj["role"].as_str(), Some("initiator"));
+                    assert_eq!(obj["kind"].as_str(), Some("local"));
+                    let id: u64 = obj["trace_id"]
+                        .as_str()
+                        .expect("trace ids travel as strings")
+                        .parse()
+                        .expect("decimal trace id");
+                    assert_ne!(id, 0);
+                }
+                other => panic!("unexpected event {other:?}"),
+            }
+        }
+        assert_eq!(rounds, 1);
+        assert_eq!(exchanges, r1.exchanges + r1.failed);
+        assert_eq!(gl.metrics().gossip.events_dropped.get(), 0);
+        gl.shutdown();
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

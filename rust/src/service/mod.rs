@@ -98,7 +98,7 @@ pub use shard::ShardDelta;
 pub use snapshot::Snapshot;
 pub use swap::ArcSwapCell;
 pub use transport::{
-    InProcessTransport, PoolStats, RemoteChannel, TcpTransport, TcpTransportOptions, Transport,
-    TransportError,
+    ExchangeOutcome, InProcessTransport, PoolStats, RemoteChannel, TcpTransport,
+    TcpTransportOptions, Transport, TransportError,
 };
 pub use window::WindowRing;

@@ -113,13 +113,14 @@ use super::gossip_loop::{NodeHandle, ServeReject};
 use super::membership::MemberTable;
 use crate::config::GossipLoopConfig;
 use crate::gossip::PeerState;
-use crate::obs::{ObsSlot, TransportMetrics};
+use crate::obs::{ExchangeSpan, ObsSlot, TransportMetrics};
 use crate::sketch::codec::{
-    apply_delta, decode_exchange, delta_payload, delta_wire_size, encode_exchange_delta_push,
-    encode_exchange_delta_reply, encode_exchange_push, encode_exchange_reject,
-    encode_exchange_reply, encode_join_request, encode_membership_push,
-    encode_membership_reply, peer_state_fingerprint, peer_state_wire_size, DeltaPayload,
-    ExchangeFrame, RejectReason,
+    apply_delta, decode_exchange, decode_exchange_traced, delta_payload, delta_wire_size,
+    encode_exchange_delta_push_traced, encode_exchange_delta_reply_traced,
+    encode_exchange_push_traced, encode_exchange_reject, encode_exchange_reject_traced,
+    encode_exchange_reply_traced, encode_join_request, encode_membership_push,
+    encode_membership_reply, exchange_frame_fingerprint, peer_state_fingerprint,
+    peer_state_wire_size, DeltaPayload, ExchangeFrame, RejectReason,
 };
 use anyhow::Context;
 use std::any::Any;
@@ -238,6 +239,20 @@ impl std::fmt::Debug for RemoteChannel {
     }
 }
 
+/// What a traced remote exchange reports back: the wire bytes it moved
+/// plus, on transports that time their phases ([`TcpTransport`] does),
+/// the initiator-side [`ExchangeSpan`]. Returned by
+/// [`Transport::exchange_traced`].
+#[derive(Debug)]
+pub struct ExchangeOutcome {
+    /// Wire bytes moved (push + reply records, length prefixes
+    /// included) — identical to [`Transport::exchange_on`]'s return.
+    pub bytes: usize,
+    /// The phase-timed span of the exchange, when the transport records
+    /// one; `None` on transports without per-exchange instrumentation.
+    pub span: Option<ExchangeSpan>,
+}
+
 /// How a [`GossipLoop`](super::GossipLoop) executes the atomic push–pull
 /// exchange with a partner — in process or across the network.
 ///
@@ -295,6 +310,25 @@ pub trait Transport: Send + Sync + std::fmt::Debug + 'static {
     ) -> Result<usize, TransportError> {
         let _ = (local, generation);
         Err(TransportError::Unreachable(chan.peer()))
+    }
+
+    /// [`Transport::exchange_on`], additionally stamping `trace_id` into
+    /// the push frame's header so the serving side echoes it and both
+    /// ends log the same correlator (`docs/PROTOCOL.md` §2), and
+    /// reporting an [`ExchangeOutcome`] carrying the transport's phase
+    /// timings when it records them. The default ignores the id and
+    /// wraps [`Transport::exchange_on`], so transports without wire
+    /// tracing need not implement anything.
+    fn exchange_traced(
+        &self,
+        chan: RemoteChannel,
+        local: &mut PeerState,
+        generation: u64,
+        trace_id: u64,
+    ) -> Result<ExchangeOutcome, TransportError> {
+        let _ = trace_id;
+        let bytes = self.exchange_on(chan, local, generation)?;
+        Ok(ExchangeOutcome { bytes, span: None })
     }
 
     /// Both phases in one call, with a single
@@ -1136,18 +1170,52 @@ impl Transport for TcpTransport {
         local: &mut PeerState,
         generation: u64,
     ) -> Result<usize, TransportError> {
+        // Untraced entry point: trace id 0 ("no trace", PROTOCOL.md §2)
+        // on the wire, span discarded.
+        self.exchange_traced(chan, local, generation, 0)
+            .map(|o| o.bytes)
+    }
+
+    fn exchange_traced(
+        &self,
+        chan: RemoteChannel,
+        local: &mut PeerState,
+        generation: u64,
+        trace_id: u64,
+    ) -> Result<ExchangeOutcome, TransportError> {
         let peer = chan.peer();
         let reused = chan.reused();
         let start = Instant::now();
         let stream = Self::channel_stream(chan, self.opts.deadline)?;
         let io = |e: std::io::Error| TransportError::Io(e.to_string());
+        // Span constructor for the success paths; failures return `Err`
+        // and the caller synthesizes the failure span. `connect` is left
+        // zero — the channel was opened before this call, and the loop
+        // fills in the time it measured around `open_remote`.
+        let make_span = |kind: &'static str,
+                         bytes: usize,
+                         push: Duration,
+                         reply: Duration,
+                         commit: Duration| ExchangeSpan {
+            trace_id,
+            initiator: true,
+            peer: peer.to_string(),
+            generation,
+            kind,
+            bytes,
+            outcome: "ok",
+            connect: Duration::ZERO,
+            push,
+            reply,
+            commit,
+        };
 
         // Prefer a delta push when the pair baseline exists at this
         // generation and the delta actually saves bytes.
         let baseline = self.baseline_for(peer, generation);
         let push_delta: Option<DeltaPayload> = baseline.as_ref().and_then(|b| {
             delta_payload(&b.state, b.fingerprint, local)
-                .filter(|d| delta_wire_size(d) < 14 + peer_state_wire_size(local))
+                .filter(|d| delta_wire_size(d) < 22 + peer_state_wire_size(local))
         });
         let push = match &push_delta {
             Some(d) => {
@@ -1155,43 +1223,57 @@ impl Transport for TcpTransport {
                 if let Some(m) = self.metrics.get() {
                     m.frames_delta.inc();
                 }
-                encode_exchange_delta_push(generation, d)
+                encode_exchange_delta_push_traced(generation, trace_id, d)
             }
             None => {
                 self.stats.full_pushes.fetch_add(1, Ordering::Relaxed);
                 if let Some(m) = self.metrics.get() {
                     m.frames_full.inc();
                 }
-                encode_exchange_push(generation, local)
+                encode_exchange_push_traced(generation, trace_id, local)
             }
         };
+        let mut kind: &'static str = if push_delta.is_some() { "delta" } else { "full" };
+        let push_started = Instant::now();
         if let Err(e) = write_frame(&stream, &push) {
             return Err(self.channel_failure(peer, reused, "push write", false, e));
         }
+        let mut phase_push = push_started.elapsed();
+        let read_started = Instant::now();
         let reply = match read_frame_tracked(&stream) {
             Ok(r) => r,
             Err((started, e)) => {
                 return Err(self.channel_failure(peer, reused, "reply read", started, e))
             }
         };
+        let mut phase_reply = read_started.elapsed();
         let mut wire = 8 + push.len() + reply.len();
-        let decoded =
-            decode_exchange(&reply).map_err(|e| TransportError::Codec(e.to_string()))?;
+        // The echoed id is diagnostic only (§2): a reply is never
+        // rejected over it.
+        let (decoded, _echoed) =
+            decode_exchange_traced(&reply).map_err(|e| TransportError::Codec(e.to_string()))?;
         match decoded {
             ExchangeFrame::Reply {
                 generation: gen,
                 state,
             } => {
+                let commit_started = Instant::now();
                 let fp = exchange_frame_fingerprint(&reply)
                     .expect("a decoded reply frame is longer than its header");
                 self.adopt_reply(peer, local, generation, gen, state, fp)?;
                 self.pool.checkin(peer, stream, self.opts.pool_connections);
-                self.finish_exchange(start, wire)
+                let bytes = self.finish_exchange(start, wire)?;
+                let span = make_span(kind, bytes, phase_push, phase_reply, commit_started.elapsed());
+                Ok(ExchangeOutcome {
+                    bytes,
+                    span: Some(span),
+                })
             }
             ExchangeFrame::DeltaReply {
                 generation: gen,
                 delta,
             } => {
+                let commit_started = Instant::now();
                 let Some(b) = baseline else {
                     return Err(TransportError::Protocol(
                         "delta reply to a full push (no shared baseline)".into(),
@@ -1207,7 +1289,12 @@ impl Transport for TcpTransport {
                 let fp = peer_state_fingerprint(&state);
                 self.adopt_reply(peer, local, generation, gen, state, fp)?;
                 self.pool.checkin(peer, stream, self.opts.pool_connections);
-                self.finish_exchange(start, wire)
+                let bytes = self.finish_exchange(start, wire)?;
+                let span = make_span(kind, bytes, phase_push, phase_reply, commit_started.elapsed());
+                Ok(ExchangeOutcome {
+                    bytes,
+                    span: Some(span),
+                })
             }
             ExchangeFrame::Reject {
                 reason: RejectReason::BaselineMismatch,
@@ -1221,9 +1308,14 @@ impl Transport for TcpTransport {
                 if let Some(m) = self.metrics.get() {
                     m.frames_full.inc();
                 }
-                let push = encode_exchange_push(generation, local);
+                kind = "full";
+                let push = encode_exchange_push_traced(generation, trace_id, local);
+                let retry_write = Instant::now();
                 write_frame(&stream, &push).map_err(io)?;
+                phase_push += retry_write.elapsed();
+                let retry_read = Instant::now();
                 let reply = read_frame(&stream).map_err(io)?;
+                phase_reply += retry_read.elapsed();
                 wire += 8 + push.len() + reply.len();
                 match decode_exchange(&reply)
                     .map_err(|e| TransportError::Codec(e.to_string()))?
@@ -1232,11 +1324,23 @@ impl Transport for TcpTransport {
                         generation: gen,
                         state,
                     } => {
+                        let commit_started = Instant::now();
                         let fp = exchange_frame_fingerprint(&reply)
                             .expect("a decoded reply frame is longer than its header");
                         self.adopt_reply(peer, local, generation, gen, state, fp)?;
                         self.pool.checkin(peer, stream, self.opts.pool_connections);
-                        self.finish_exchange(start, wire)
+                        let bytes = self.finish_exchange(start, wire)?;
+                        let span = make_span(
+                            kind,
+                            bytes,
+                            phase_push,
+                            phase_reply,
+                            commit_started.elapsed(),
+                        );
+                        Ok(ExchangeOutcome {
+                            bytes,
+                            span: Some(span),
+                        })
                     }
                     ExchangeFrame::Reject {
                         generation: gen,
@@ -1619,12 +1723,17 @@ fn serve_frame_blocking(
     node: &NodeHandle,
     params: &ServeParams,
 ) -> Result<(), ()> {
+    let serve_started = Instant::now();
     // Decode; delta pushes are reconstructed against the cached pair
     // baseline first — a miss or mismatch answers BaselineMismatch and
-    // keeps the connection (the initiator retries full on it).
-    let (generation, incoming, reply_baseline) = match decode_exchange(frame) {
-        Ok(ExchangeFrame::Push { generation, state }) => (generation, state, None),
-        Ok(ExchangeFrame::DeltaPush { generation, delta }) => {
+    // keeps the connection (the initiator retries full on it). The
+    // push's trace id is echoed in every data-plane answer (§2).
+    let (generation, incoming, reply_baseline, trace_id, kind) = match decode_exchange_traced(frame)
+    {
+        Ok((ExchangeFrame::Push { generation, state }, tid)) => {
+            (generation, state, None, tid, "full")
+        }
+        Ok((ExchangeFrame::DeltaPush { generation, delta }, tid)) => {
             let cached = lock_serve_baselines(&params.baselines)
                 .get(&(delta.id as u64))
                 .filter(|b| {
@@ -1633,29 +1742,37 @@ fn serve_frame_blocking(
                 })
                 .cloned();
             let Some(b) = cached else {
-                count_serve_reject(params, RejectReason::BaselineMismatch);
-                return write_frame(
+                return reject_baseline_mismatch(
                     stream,
-                    &encode_exchange_reject(0, RejectReason::BaselineMismatch),
-                )
-                .map_err(|_| ());
+                    node,
+                    params,
+                    tid,
+                    generation,
+                    frame.len(),
+                    serve_started,
+                );
             };
             match apply_delta(&b.state, &delta) {
-                Ok(state) => (generation, state, Some(b)),
+                Ok(state) => (generation, state, Some(b), tid, "delta"),
                 Err(_) => {
-                    count_serve_reject(params, RejectReason::BaselineMismatch);
-                    return write_frame(
+                    return reject_baseline_mismatch(
                         stream,
-                        &encode_exchange_reject(0, RejectReason::BaselineMismatch),
+                        node,
+                        params,
+                        tid,
+                        generation,
+                        frame.len(),
+                        serve_started,
                     )
-                    .map_err(|_| ())
                 }
             }
         }
         // Membership plane (docs/PROTOCOL.md §9): merge-and-reply, or a
         // NoMembership reject on a static address-book node. Either way
         // the framing stays intact, so the connection survives.
-        Ok(ExchangeFrame::MembershipPush { generation, table }) => {
+        // Membership frames are untraced (§2), so the answers carry
+        // trace id 0.
+        Ok((ExchangeFrame::MembershipPush { generation, table }, _)) => {
             return match node.serve_membership(&table, generation) {
                 Ok((merged, gen)) => {
                     write_frame(stream, &encode_membership_reply(gen, &merged)).map_err(|_| ())
@@ -1670,7 +1787,7 @@ fn serve_frame_blocking(
                 }
             };
         }
-        Ok(ExchangeFrame::JoinRequest { addr, .. }) => {
+        Ok((ExchangeFrame::JoinRequest { addr, .. }, _)) => {
             return match node.serve_join(addr) {
                 Ok((table, gen)) => {
                     write_frame(stream, &encode_membership_reply(gen, &table)).map_err(|_| ())
@@ -1697,33 +1814,60 @@ fn serve_frame_blocking(
     // delta reply (the initiator provably holds the baseline) unless the
     // delta would not save bytes.
     let mut committed: Option<(PeerState, u64, u64)> = None;
+    let mut phase_push = Duration::ZERO;
+    let mut phase_reply = Duration::ZERO;
+    let mut reply_len = 0usize;
     let served = node.serve_exchange(incoming, generation, |reply, gen| {
+        // Everything up to here — decode, delta reconstruction, and the
+        // Algorithm 4 averaging inside `serve_exchange` — is the serve
+        // side's "push" phase.
+        phase_push = serve_started.elapsed();
         // The full frame is always built (it is the delta's size
         // benchmark), so the baseline fingerprint comes free from its
         // bytes — no separate ~16 KiB encode.
-        let full = encode_exchange_reply(gen, reply);
+        let full = encode_exchange_reply_traced(gen, trace_id, reply);
         let fingerprint = exchange_frame_fingerprint(&full)
             .expect("an encoded reply frame is longer than its header");
         let frame = match &reply_baseline {
             Some(b) if params.delta => match delta_payload(&b.state, b.fingerprint, reply) {
                 Some(d) if delta_wire_size(&d) < full.len() => {
-                    encode_exchange_delta_reply(gen, &d)
+                    encode_exchange_delta_reply_traced(gen, trace_id, &d)
                 }
                 _ => full,
             },
             _ => full,
         };
         write_frame(stream, &frame)?;
+        phase_reply = serve_started.elapsed() - phase_push;
+        reply_len = frame.len();
         committed = Some((reply.clone(), gen, fingerprint));
         Ok(())
     });
     match served {
         Ok(()) => {
+            let commit_started = Instant::now();
             if params.delta {
                 if let Some((state, gen, fingerprint)) = committed {
                     store_serve_baseline(&params.baselines, state, gen, fingerprint);
                 }
             }
+            emit_serve_span(
+                node,
+                stream,
+                ExchangeSpan {
+                    trace_id,
+                    initiator: false,
+                    peer: String::new(),
+                    generation,
+                    kind,
+                    bytes: 8 + frame.len() + reply_len,
+                    outcome: "ok",
+                    connect: Duration::ZERO,
+                    push: phase_push,
+                    reply: phase_reply,
+                    commit: commit_started.elapsed(),
+                },
+            );
             Ok(())
         }
         Err(reject) => {
@@ -1738,9 +1882,93 @@ fn serve_frame_blocking(
                 ServeReject::NoMembership => (0, RejectReason::NoMembership),
             };
             count_serve_reject(params, reason);
-            write_frame(stream, &encode_exchange_reject(gen, reason)).map_err(|_| ())
+            let answer = encode_exchange_reject_traced(gen, trace_id, reason);
+            let wrote = write_frame(stream, &answer);
+            emit_serve_span(
+                node,
+                stream,
+                ExchangeSpan {
+                    trace_id,
+                    initiator: false,
+                    peer: String::new(),
+                    generation,
+                    kind,
+                    bytes: 8 + frame.len() + answer.len(),
+                    outcome: reject_outcome(reason),
+                    connect: Duration::ZERO,
+                    push: serve_started.elapsed(),
+                    reply: Duration::ZERO,
+                    commit: Duration::ZERO,
+                },
+            );
+            wrote.map_err(|_| ())
         }
     }
+}
+
+/// Answer a delta push whose baseline this node does not hold (or could
+/// not apply): a `BaselineMismatch` reject echoing the push's trace id,
+/// plus the serve-side span so the initiator's automatic full-frame
+/// retry shows up as a causal pair in the event logs.
+fn reject_baseline_mismatch(
+    stream: &TcpStream,
+    node: &NodeHandle,
+    params: &ServeParams,
+    trace_id: u64,
+    generation: u64,
+    frame_len: usize,
+    started: Instant,
+) -> Result<(), ()> {
+    count_serve_reject(params, RejectReason::BaselineMismatch);
+    let push = started.elapsed();
+    let answer = encode_exchange_reject_traced(0, trace_id, RejectReason::BaselineMismatch);
+    let wrote = write_frame(stream, &answer);
+    emit_serve_span(
+        node,
+        stream,
+        ExchangeSpan {
+            trace_id,
+            initiator: false,
+            peer: String::new(),
+            generation,
+            kind: "delta",
+            bytes: 8 + frame_len + answer.len(),
+            outcome: reject_outcome(RejectReason::BaselineMismatch),
+            connect: Duration::ZERO,
+            push,
+            reply: started.elapsed() - push,
+            commit: Duration::ZERO,
+        },
+    );
+    wrote.map_err(|_| ())
+}
+
+/// The span `outcome` label of a reject answer (`"reject:<reason>"`;
+/// the reason names match the `dudd_serve_rejects_total` label values).
+fn reject_outcome(reason: RejectReason) -> &'static str {
+    match reason {
+        RejectReason::Busy => "reject:busy",
+        RejectReason::StaleGeneration => "reject:stale_generation",
+        RejectReason::Lineage => "reject:lineage",
+        RejectReason::Malformed => "reject:malformed",
+        RejectReason::BaselineMismatch => "reject:baseline_mismatch",
+        RejectReason::NoMembership => "reject:no_membership",
+    }
+}
+
+/// Ship a serve-side [`ExchangeSpan`] to the owning node's event log,
+/// filling in the remote peer address. A node without an installed
+/// event sink skips the peer-address lookup entirely, keeping the
+/// serve hot path unchanged.
+fn emit_serve_span(node: &NodeHandle, stream: &TcpStream, mut span: ExchangeSpan) {
+    if !node.serve_tracing() {
+        return;
+    }
+    span.peer = stream
+        .peer_addr()
+        .map(|a| a.to_string())
+        .unwrap_or_else(|_| "unknown".into());
+    node.record_serve_span(span);
 }
 
 /// Cache the committed averaged state as the pair baseline (serve side,

@@ -20,8 +20,11 @@ use super::transport::SimTransport;
 use crate::churn::{ChurnKind, ChurnModel};
 use crate::config::GossipLoopConfig;
 use crate::data::peer_dataset;
+use crate::obs::{encode_exchange_event, encode_membership_event, encode_round_event};
 use crate::rng::default_rng;
-use crate::service::{GossipLoop, GossipMember, Membership, MembershipConfig, Transport};
+use crate::service::{
+    GossipLoop, GossipMember, GossipRoundReport, Membership, MembershipConfig, Transport,
+};
 use crate::sketch::{theorem2_bound, ExactQuantiles};
 use anyhow::{Context, Result};
 use std::collections::BTreeMap;
@@ -139,6 +142,11 @@ pub struct SimReport {
     pub net: NetStats,
     /// The deterministic event trace (same seed ⇒ byte-identical).
     pub trace: Vec<String>,
+    /// Structured JSONL event lines in the production event-log schema
+    /// (`docs/OBSERVABILITY.md`), timestamped off the virtual clock.
+    /// Empty unless the run was built with
+    /// [`SimFleet::with_event_export`]. Same seed ⇒ byte-identical.
+    pub events_jsonl: Vec<String>,
 }
 
 impl SimReport {
@@ -147,6 +155,19 @@ impl SimReport {
     pub fn trace_text(&self) -> String {
         let mut out = String::new();
         for line in &self.trace {
+            out.push_str(line);
+            out.push('\n');
+        }
+        out
+    }
+
+    /// The structured event log as one newline-terminated JSONL block —
+    /// the same schema a production node's `obs_event_log` file uses,
+    /// so `dudd-observe`'s trace join and the property tests consume
+    /// sim logs and production logs through one parser.
+    pub fn events_text(&self) -> String {
+        let mut out = String::new();
+        for line in &self.events_jsonl {
             out.push_str(line);
             out.push('\n');
         }
@@ -265,6 +286,10 @@ pub struct SimFleet {
     flap: Option<FlapState>,
     oracle: Option<OracleCache>,
     members_peak: usize,
+    /// When set, every stepped round also lands in
+    /// [`SimFleet::event_lines`] as production-schema JSONL.
+    export_events: bool,
+    event_lines: Vec<String>,
 }
 
 impl SimFleet {
@@ -296,6 +321,8 @@ impl SimFleet {
             flap: None,
             oracle: None,
             members_peak: 0,
+            export_events: false,
+            event_lines: Vec::new(),
         };
         fleet.boot_seed_node().context("booting the seed node")?;
         for ordinal in 1..members as u64 {
@@ -315,6 +342,18 @@ impl SimFleet {
     /// Number of alive nodes.
     pub fn alive(&self) -> usize {
         self.nodes.len()
+    }
+
+    /// Turn on structured event export: every stepped round emits
+    /// `round`/`exchange`/`membership` JSONL lines in the production
+    /// event-log schema into [`SimReport::events_jsonl`], timestamped
+    /// off the virtual clock with the wall-clock spans zeroed — the
+    /// export is part of the deterministic surface (same seed ⇒
+    /// byte-identical lines).
+    pub fn with_event_export(mut self) -> Self {
+        self.export_events = true;
+        self.net.enable_event_export();
+        self
     }
 
     /// The shared simulated network (tests inject extra faults here).
@@ -718,6 +757,48 @@ impl SimFleet {
         (worst, oracle.tol)
     }
 
+    /// Emit node `id`'s structured event lines for the round it just
+    /// stepped: the server-role spans its partners recorded while it
+    /// stepped (drained from the net's buffer), its own initiator
+    /// spans, the round summary, and a membership event when the
+    /// member table moved. The lines reuse the production encoders
+    /// (`obs::export`) with the wall-clock spans stripped
+    /// ([`crate::obs::RoundTrace::without_timings`]) and the virtual
+    /// clock as `t_ms`, so the export is deterministic.
+    fn export_round_events(&mut self, id: u64, report: &GossipRoundReport) {
+        if !self.export_events {
+            return;
+        }
+        // Serve-side spans recorded while this node stepped (its
+        // partners' `server`-role lines, buffered by the net).
+        self.event_lines.extend(self.net.take_serve_events());
+        let node = &self.nodes[&id];
+        let label = node.addr.to_string();
+        let t_ms = self.net.clock().elapsed().as_millis() as u64;
+        let recent = node.gossip.metrics().trace.recent(1);
+        if let Some(trace) = recent.last() {
+            let clean = trace.without_timings();
+            for span in &clean.exchange_spans {
+                self.event_lines
+                    .push(encode_exchange_event(&label, t_ms, clean.round, span));
+            }
+            self.event_lines
+                .push(encode_round_event(&label, t_ms, &clean));
+        }
+        if let Some(m) = &report.membership {
+            if m.joined + m.suspected + m.died > 0 {
+                self.event_lines.push(encode_membership_event(
+                    &label,
+                    t_ms,
+                    report.round,
+                    m.joined as u64,
+                    m.suspected as u64,
+                    m.died as u64,
+                ));
+            }
+        }
+    }
+
     /// Run the whole scenario and collapse it into a [`SimReport`].
     pub fn run(mut self) -> Result<SimReport> {
         let round_ms = Duration::from_millis(self.scenario.round_ms);
@@ -735,8 +816,9 @@ impl SimFleet {
                 exchanges += report.exchanges;
                 failed += report.failed;
                 bytes += report.bytes;
-                mbytes += report.membership.map_or(0, |m| m.bytes);
+                mbytes += report.membership.as_ref().map_or(0, |m| m.bytes);
                 generation = generation.max(report.generation);
+                self.export_round_events(*id, &report);
             }
             let (max_rel_err, tol) = self.round_error();
             let within_tol = max_rel_err <= tol;
@@ -785,6 +867,7 @@ impl SimFleet {
             final_max_rel_err,
             net: self.net.stats(),
             trace: self.net.take_trace(),
+            events_jsonl: self.event_lines,
         })
     }
 }
@@ -896,6 +979,74 @@ mod tests {
             report.final_max_rel_err,
             report.tol
         );
+    }
+
+    #[test]
+    fn event_export_is_deterministic_and_joins_across_nodes() {
+        use crate::obs::observe::join_event_lines;
+        use crate::obs::parse_flat_json;
+
+        let run = || {
+            SimFleet::new(tiny_scenario(), 5)
+                .unwrap()
+                .with_event_export()
+                .run()
+                .unwrap()
+        };
+        let a = run();
+        let b = run();
+        assert!(!a.events_jsonl.is_empty());
+        assert_eq!(
+            a.events_text(),
+            b.events_text(),
+            "same seed must export byte-identical event logs"
+        );
+
+        // Every line is schema-valid flat JSON; round events appear
+        // once per alive node per round (8 members × 12 rounds, no
+        // churn in the tiny scenario).
+        let mut rounds = 0usize;
+        let mut exchanges = 0usize;
+        for line in &a.events_jsonl {
+            let obj = parse_flat_json(line).unwrap_or_else(|| panic!("bad line: {line}"));
+            match obj["event"].as_str().unwrap() {
+                "round" => {
+                    rounds += 1;
+                    assert!(obj.contains_key("restart_cause"), "{line}");
+                    // Wall-clock spans are stripped for determinism.
+                    assert_eq!(obj["total_us"].as_u64(), Some(0), "{line}");
+                }
+                "exchange" => {
+                    exchanges += 1;
+                    assert!(obj["trace_id"].as_str().is_some(), "{line}");
+                    assert!(
+                        matches!(obj["role"].as_str(), Some("initiator" | "server")),
+                        "{line}"
+                    );
+                }
+                "membership" => {}
+                other => panic!("unexpected event kind {other}"),
+            }
+        }
+        assert_eq!(rounds, 8 * 12, "one round event per node per round");
+        assert!(exchanges > 0);
+
+        // The tentpole property, in simulation: initiator and server
+        // lines carry the same wire trace id and join into consistent
+        // causal records.
+        let joined = join_event_lines(a.events_jsonl.iter().map(|s| s.as_str()));
+        assert!(!joined.is_empty());
+        let consistent = joined.iter().filter(|c| c.consistent()).count();
+        assert!(
+            consistent > 0,
+            "no exchange joined across both ends out of {}",
+            joined.len()
+        );
+
+        // Without the opt-in, the export stays empty (and costs
+        // nothing).
+        let plain = SimFleet::new(tiny_scenario(), 5).unwrap().run().unwrap();
+        assert!(plain.events_jsonl.is_empty());
     }
 
     #[test]

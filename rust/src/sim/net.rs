@@ -11,6 +11,7 @@
 //!
 //! [`SimTransport`]: super::SimTransport
 
+use crate::obs::{encode_exchange_event, ExchangeSpan};
 use crate::rng::{default_rng, Rng, Xoshiro256pp};
 use crate::service::clock::VirtualClock;
 use crate::service::transport::TransportError;
@@ -95,6 +96,11 @@ struct NetInner {
     round: u64,
     trace: Vec<String>,
     stats: NetStats,
+    /// When set, served exchanges also land in `serve_events` as
+    /// production-schema JSONL (the sim's server-side half of the
+    /// cross-node trace join — there is no per-node `EventSink` here).
+    export_events: bool,
+    serve_events: Vec<String>,
 }
 
 /// The shared simulated network of one fleet: node registry, fault
@@ -133,6 +139,8 @@ impl SimNet {
                 round: 0,
                 trace: Vec::new(),
                 stats: NetStats::default(),
+                export_events: false,
+                serve_events: Vec::new(),
             }),
         })
     }
@@ -196,6 +204,37 @@ impl SimNet {
     /// Cumulative conversation counters.
     pub fn stats(&self) -> NetStats {
         self.lock().stats
+    }
+
+    /// Turn on server-side exchange-span export: every exchange a node
+    /// serves is encoded as one production-schema `exchange` JSONL line
+    /// (role `server`, the push's trace id echoed) into an internal
+    /// buffer, drained with [`SimNet::take_serve_events`]. Off by
+    /// default — [`SimFleet`](super::SimFleet) enables it for
+    /// event-exporting runs only.
+    pub fn enable_event_export(&self) {
+        self.lock().export_events = true;
+    }
+
+    /// Record a server-side exchange span for the node at `addr`, when
+    /// export is enabled. Timestamped off the virtual clock; the round
+    /// is the fleet's current virtual round.
+    pub(crate) fn export_serve_event(&self, addr: SocketAddr, span: &ExchangeSpan) {
+        let t = self.clock.elapsed().as_millis() as u64;
+        let mut inner = self.lock();
+        if !inner.export_events {
+            return;
+        }
+        let round = inner.round;
+        inner
+            .serve_events
+            .push(encode_exchange_event(&addr.to_string(), t, round, span));
+    }
+
+    /// Drain the server-side event lines accumulated since the last
+    /// call (empty unless [`SimNet::enable_event_export`] ran).
+    pub fn take_serve_events(&self) -> Vec<String> {
+        std::mem::take(&mut self.lock().serve_events)
     }
 
     fn push_trace(inner: &mut NetInner, t_ms: u128, line: String) {

@@ -8,14 +8,16 @@
 
 use super::net::{LinkOutcome, SimNet};
 use crate::gossip::PeerState;
+use crate::obs::ExchangeSpan;
 use crate::service::membership::MemberTable;
 use crate::service::transport::{
-    in_process_exchange, RemoteChannel, Transport, TransportError,
+    in_process_exchange, ExchangeOutcome, RemoteChannel, Transport, TransportError,
 };
 use crate::service::{NodeHandle, ServeReject};
 use crate::sketch::codec::{
-    decode_exchange, encode_exchange_push, encode_exchange_reply, encode_join_request,
-    encode_membership_push, encode_membership_reply, ExchangeFrame,
+    decode_exchange, decode_exchange_traced, encode_exchange_push_traced,
+    encode_exchange_reply_traced, encode_join_request, encode_membership_push,
+    encode_membership_reply, ExchangeFrame,
 };
 use std::net::SocketAddr;
 use std::sync::Arc;
@@ -86,11 +88,22 @@ impl Transport for SimTransport {
         local: &mut PeerState,
         generation: u64,
     ) -> Result<usize, TransportError> {
+        self.exchange_traced(chan, local, generation, 0)
+            .map(|o| o.bytes)
+    }
+
+    fn exchange_traced(
+        &self,
+        chan: RemoteChannel,
+        local: &mut PeerState,
+        generation: u64,
+        trace_id: u64,
+    ) -> Result<ExchangeOutcome, TransportError> {
         let peer = chan.peer();
         // Re-resolve the handle: a crash or partition may have landed
         // between the two phases of the exchange.
         let handle = self.net.connect(self.addr, peer)?;
-        let push = encode_exchange_push(generation, local);
+        let push = encode_exchange_push_traced(generation, trace_id, local);
         let outcome = self.net.sample_link("exchange", self.addr, peer);
         if outcome == LinkOutcome::PushLost {
             return Err(TransportError::Io(format!(
@@ -98,9 +111,10 @@ impl Transport for SimTransport {
             )));
         }
         // The wire round-trip the real transport pays: what the partner
-        // serves is the *decoded frame*, not our in-memory state.
-        let frame =
-            decode_exchange(&push).map_err(|e| TransportError::Codec(e.to_string()))?;
+        // serves is the *decoded frame*, not our in-memory state — and
+        // the trace id the serve side echoes is the one off the wire.
+        let (frame, echoed_id) =
+            decode_exchange_traced(&push).map_err(|e| TransportError::Codec(e.to_string()))?;
         let ExchangeFrame::Push {
             generation: pushed_gen,
             state,
@@ -111,6 +125,7 @@ impl Transport for SimTransport {
             ));
         };
         let mut reply_frame: Option<Vec<u8>> = None;
+        let mut reply_gen = 0u64;
         let served = handle.serve_exchange(state, pushed_gen, |avg, gen| {
             if outcome == LinkOutcome::ReplyLost {
                 // The reply never reaches us: the serve side must roll
@@ -120,7 +135,8 @@ impl Transport for SimTransport {
                     "sim reply lost (deadline)",
                 ));
             }
-            reply_frame = Some(encode_exchange_reply(gen, avg));
+            reply_gen = gen;
+            reply_frame = Some(encode_exchange_reply_traced(gen, echoed_id, avg));
             Ok(())
         });
         match served {
@@ -137,7 +153,39 @@ impl Transport for SimTransport {
                 *local = state;
                 self.net
                     .book_delivered("exchange", self.addr, peer, bytes, "");
-                Ok(bytes)
+                // Both halves of the causal record: the serve side's
+                // span (echoed id, role `server`) goes to the net's
+                // export buffer — sim nodes run no `EventSink` — and
+                // the initiator's rides the outcome into its round
+                // trace. Wall-clock spans stay zero: virtual time is
+                // the only deterministic clock here.
+                self.net.export_serve_event(
+                    peer,
+                    &ExchangeSpan {
+                        trace_id: echoed_id,
+                        initiator: false,
+                        peer: self.addr.to_string(),
+                        generation: reply_gen,
+                        kind: "full",
+                        bytes,
+                        outcome: "ok",
+                        ..ExchangeSpan::default()
+                    },
+                );
+                let span = ExchangeSpan {
+                    trace_id,
+                    initiator: true,
+                    peer: peer.to_string(),
+                    generation,
+                    kind: "full",
+                    bytes,
+                    outcome: "ok",
+                    ..ExchangeSpan::default()
+                };
+                Ok(ExchangeOutcome {
+                    bytes,
+                    span: Some(span),
+                })
             }
             Err(ServeReject::Busy) => {
                 self.net

@@ -19,7 +19,7 @@
 //! protocol:
 //!
 //! ```text
-//! magic "UDDX" | version u8 | kind u8 | generation u64 | payload
+//! magic "UDDX" | version u8 | kind u8 | generation u64 | trace_id u64 | payload
 //! ```
 //!
 //! where `kind` selects [`ExchangeKind`] and the payload is a peer-state
@@ -30,6 +30,16 @@
 //! buffer (so a hostile frame can never trigger a huge allocation).
 //! `docs/PROTOCOL.md` is the normative spec of the whole exchange
 //! protocol; CI greps this file against its frame-kind table.
+//!
+//! `trace_id` (version 2) is the cross-node exchange-tracing correlator:
+//! the initiator stamps every frame of one logical exchange with one
+//! nonzero id and the server **echoes it** in the reply or reject, so
+//! the two nodes' span records join into a single causal timeline with
+//! no clock agreement. A zero id means "untraced". Version-1 frames
+//! (14-byte header, no trace field) still decode with an implied id of
+//! 0, so a mixed fleet keeps exchanging during a rolling upgrade; v1
+//! *decoders* reject v2 frames as `BadVersion`, which cancels the
+//! exchange (§7.2) but corrupts nothing.
 //!
 //! # Delta frames
 //!
@@ -77,7 +87,22 @@ use std::net::{IpAddr, Ipv4Addr, Ipv6Addr, SocketAddr};
 
 const MAGIC: &[u8; 4] = b"UDDS";
 const EXCHANGE_MAGIC: &[u8; 4] = b"UDDX";
-const VERSION: u8 = 1;
+/// Exchange-protocol version (the `version` byte of every `UDDX`
+/// frame). Version 2 added the `trace_id` field to the header;
+/// `decode_exchange` still accepts version-1 frames (trace id 0).
+/// Normative together with `docs/PROTOCOL.md` (spec-sync checks both).
+const VERSION: u8 = 2;
+/// The pre-tracing exchange header (no `trace_id`): still decoded, so a
+/// v2 node keeps serving v1 peers mid-rolling-upgrade.
+const LEGACY_VERSION: u8 = 1;
+/// Sketch-payload (`UDDS`) format version — independent of the exchange
+/// protocol version: the embedded sketch bytes did not change in v2.
+const SKETCH_VERSION: u8 = 1;
+/// Byte length of a version-2 exchange header
+/// (`magic 4 | version 1 | kind 1 | generation 8 | trace_id 8`).
+const EXCHANGE_HEADER_BYTES: usize = 22;
+/// Byte length of a version-1 exchange header (no trace id).
+const LEGACY_HEADER_BYTES: usize = 14;
 
 /// Encoding/decoding errors.
 ///
@@ -169,7 +194,7 @@ impl<'a> Reader<'a> {
 
 fn encode_sketch_into<S: Store>(s: &UddSketch<S>, out: &mut Vec<u8>) {
     out.extend_from_slice(MAGIC);
-    out.push(VERSION);
+    out.push(SKETCH_VERSION);
     out.extend_from_slice(&s.mapping().alpha0().to_le_bytes());
     out.extend_from_slice(&s.mapping().collapses().to_le_bytes());
     out.extend_from_slice(&(s.max_buckets() as u64).to_le_bytes());
@@ -191,7 +216,7 @@ fn decode_sketch_from<S: Store>(
         return Err(CodecError::BadMagic);
     }
     let version = r.u8()?;
-    if version != VERSION {
+    if version != SKETCH_VERSION {
         return Err(CodecError::BadVersion(version));
     }
     let alpha0 = r.f64()?;
@@ -459,15 +484,22 @@ pub fn peer_state_fingerprint(s: &PeerState) -> u64 {
 }
 
 /// [`peer_state_fingerprint`] computed from an already-encoded **full**
-/// exchange frame (`Push`/`Reply`): the bytes after the 14-byte header
-/// are exactly the state's canonical encoding, so callers that hold the
-/// frame skip a ~16 KiB re-encode. Returns `None` for a buffer too
-/// short to be a full frame.
+/// exchange frame (`Push`/`Reply`): the bytes after the header are
+/// exactly the state's canonical encoding, so callers that hold the
+/// frame skip a ~16 KiB re-encode. Version-aware — the header is 22
+/// bytes for v2 frames and 14 for legacy v1 ones. Returns `None` for a
+/// buffer too short to be a full frame (or an unknown version, whose
+/// payload offset cannot be known).
 pub fn exchange_frame_fingerprint(frame: &[u8]) -> Option<u64> {
-    if frame.len() <= 14 {
+    let header = match frame.get(4) {
+        Some(&VERSION) => EXCHANGE_HEADER_BYTES,
+        Some(&LEGACY_VERSION) => LEGACY_HEADER_BYTES,
+        _ => return None,
+    };
+    if frame.len() <= header {
         return None;
     }
-    Some(fnv1a64(&frame[14..]))
+    Some(fnv1a64(&frame[header..]))
 }
 
 /// Diff two sorted entry lists into set ops: `(i, c)` where `cur` has a
@@ -607,12 +639,12 @@ pub fn apply_delta(baseline: &PeerState, delta: &DeltaPayload) -> Result<PeerSta
 }
 
 /// Wire size of a delta frame without materializing it (the sender picks
-/// delta vs full by comparing this with `14 +`
+/// delta vs full by comparing this with `22 +`
 /// [`peer_state_wire_size`]).
 pub fn delta_wire_size(delta: &DeltaPayload) -> usize {
-    // header(14) + fingerprint(8) + collapses(4) + zero(8) + id(8)
+    // header(22) + fingerprint(8) + collapses(4) + zero(8) + id(8)
     // + n(8) + q(8) + 2 × len(8) + 16/entry
-    74 + 16 * delta.changed_buckets()
+    82 + 16 * delta.changed_buckets()
 }
 
 /// Encode a socket address: `family u8 (4|6) | ip bytes | port u16 LE`.
@@ -692,40 +724,78 @@ pub fn decode_member_table(buf: &[u8]) -> Result<MemberTable, CodecError> {
     decode_member_table_from(&mut Reader::new(buf))
 }
 
-fn exchange_header(kind: ExchangeKind, generation: u64, out: &mut Vec<u8>) {
+fn exchange_header(kind: ExchangeKind, generation: u64, trace_id: u64, out: &mut Vec<u8>) {
     out.extend_from_slice(EXCHANGE_MAGIC);
     out.push(VERSION);
     out.push(kind as u8);
     out.extend_from_slice(&generation.to_le_bytes());
+    out.extend_from_slice(&trace_id.to_le_bytes());
 }
 
-/// Encode a push frame (initiator's pre-round state).
+/// Encode a push frame (initiator's pre-round state), untraced
+/// (trace id 0).
 pub fn encode_exchange_push(generation: u64, state: &PeerState) -> Vec<u8> {
-    let mut out = Vec::with_capacity(14 + peer_state_wire_size(state));
-    exchange_header(ExchangeKind::Push, generation, &mut out);
+    encode_exchange_push_traced(generation, 0, state)
+}
+
+/// [`encode_exchange_push`] stamped with the initiator's exchange
+/// trace id.
+pub fn encode_exchange_push_traced(
+    generation: u64,
+    trace_id: u64,
+    state: &PeerState,
+) -> Vec<u8> {
+    let mut out = Vec::with_capacity(EXCHANGE_HEADER_BYTES + peer_state_wire_size(state));
+    exchange_header(ExchangeKind::Push, generation, trace_id, &mut out);
     encode_peer_state_into(state, &mut out);
     out
 }
 
-/// Encode a reply frame (the averaged state both sides adopt).
+/// Encode a reply frame (the averaged state both sides adopt),
+/// untraced (trace id 0).
 pub fn encode_exchange_reply(generation: u64, state: &PeerState) -> Vec<u8> {
-    let mut out = Vec::with_capacity(14 + peer_state_wire_size(state));
-    exchange_header(ExchangeKind::Reply, generation, &mut out);
+    encode_exchange_reply_traced(generation, 0, state)
+}
+
+/// [`encode_exchange_reply`] echoing the push's trace id — the serve
+/// side's half of the cross-node span join.
+pub fn encode_exchange_reply_traced(
+    generation: u64,
+    trace_id: u64,
+    state: &PeerState,
+) -> Vec<u8> {
+    let mut out = Vec::with_capacity(EXCHANGE_HEADER_BYTES + peer_state_wire_size(state));
+    exchange_header(ExchangeKind::Reply, generation, trace_id, &mut out);
     encode_peer_state_into(state, &mut out);
     out
 }
 
-/// Encode a reject frame (cancelled exchange, §7.2).
+/// Encode a reject frame (cancelled exchange, §7.2), untraced.
 pub fn encode_exchange_reject(generation: u64, reason: RejectReason) -> Vec<u8> {
-    let mut out = Vec::with_capacity(15);
-    exchange_header(ExchangeKind::Reject, generation, &mut out);
+    encode_exchange_reject_traced(generation, 0, reason)
+}
+
+/// [`encode_exchange_reject`] echoing the refused push's trace id, so
+/// cancelled exchanges join into causal timelines too.
+pub fn encode_exchange_reject_traced(
+    generation: u64,
+    trace_id: u64,
+    reason: RejectReason,
+) -> Vec<u8> {
+    let mut out = Vec::with_capacity(EXCHANGE_HEADER_BYTES + 1);
+    exchange_header(ExchangeKind::Reject, generation, trace_id, &mut out);
     out.push(reason.code());
     out
 }
 
-fn encode_delta_frame(kind: ExchangeKind, generation: u64, delta: &DeltaPayload) -> Vec<u8> {
+fn encode_delta_frame(
+    kind: ExchangeKind,
+    generation: u64,
+    trace_id: u64,
+    delta: &DeltaPayload,
+) -> Vec<u8> {
     let mut out = Vec::with_capacity(delta_wire_size(delta));
-    exchange_header(kind, generation, &mut out);
+    exchange_header(kind, generation, trace_id, &mut out);
     out.extend_from_slice(&delta.baseline_fingerprint.to_le_bytes());
     out.extend_from_slice(&delta.collapses.to_le_bytes());
     out.extend_from_slice(&delta.zero_weight.to_le_bytes());
@@ -742,14 +812,35 @@ fn encode_delta_frame(kind: ExchangeKind, generation: u64, delta: &DeltaPayload)
     out
 }
 
-/// Encode a delta push frame (initiator's state vs the pair baseline).
+/// Encode a delta push frame (initiator's state vs the pair baseline),
+/// untraced (trace id 0).
 pub fn encode_exchange_delta_push(generation: u64, delta: &DeltaPayload) -> Vec<u8> {
-    encode_delta_frame(ExchangeKind::DeltaPush, generation, delta)
+    encode_delta_frame(ExchangeKind::DeltaPush, generation, 0, delta)
 }
 
-/// Encode a delta reply frame (averaged state vs the same baseline).
+/// [`encode_exchange_delta_push`] stamped with the initiator's
+/// exchange trace id.
+pub fn encode_exchange_delta_push_traced(
+    generation: u64,
+    trace_id: u64,
+    delta: &DeltaPayload,
+) -> Vec<u8> {
+    encode_delta_frame(ExchangeKind::DeltaPush, generation, trace_id, delta)
+}
+
+/// Encode a delta reply frame (averaged state vs the same baseline),
+/// untraced (trace id 0).
 pub fn encode_exchange_delta_reply(generation: u64, delta: &DeltaPayload) -> Vec<u8> {
-    encode_delta_frame(ExchangeKind::DeltaReply, generation, delta)
+    encode_delta_frame(ExchangeKind::DeltaReply, generation, 0, delta)
+}
+
+/// [`encode_exchange_delta_reply`] echoing the push's trace id.
+pub fn encode_exchange_delta_reply_traced(
+    generation: u64,
+    trace_id: u64,
+    delta: &DeltaPayload,
+) -> Vec<u8> {
+    encode_delta_frame(ExchangeKind::DeltaReply, generation, trace_id, delta)
 }
 
 fn encode_membership_frame(
@@ -757,8 +848,8 @@ fn encode_membership_frame(
     generation: u64,
     table: &MemberTable,
 ) -> Vec<u8> {
-    let mut out = Vec::with_capacity(22 + 40 * table.len());
-    exchange_header(kind, generation, &mut out);
+    let mut out = Vec::with_capacity(EXCHANGE_HEADER_BYTES + 8 + 40 * table.len());
+    exchange_header(kind, generation, 0, &mut out);
     encode_member_table_into(table, &mut out);
     out
 }
@@ -775,8 +866,8 @@ pub fn encode_membership_reply(generation: u64, table: &MemberTable) -> Vec<u8> 
 
 /// Encode a `dudd-join` handshake request.
 pub fn encode_join_request(generation: u64, addr: SocketAddr) -> Vec<u8> {
-    let mut out = Vec::with_capacity(14 + 19);
-    exchange_header(ExchangeKind::JoinRequest, generation, &mut out);
+    let mut out = Vec::with_capacity(EXCHANGE_HEADER_BYTES + 19);
+    exchange_header(ExchangeKind::JoinRequest, generation, 0, &mut out);
     encode_socket_addr_into(addr, &mut out);
     out
 }
@@ -811,18 +902,28 @@ fn decode_delta_from(r: &mut Reader<'_>) -> Result<DeltaPayload, CodecError> {
 }
 
 /// Decode any exchange frame, validating magic, version, and kind.
+/// Accepts both the current version-2 header and the legacy version-1
+/// one; callers that care about the trace id use
+/// [`decode_exchange_traced`].
 pub fn decode_exchange(buf: &[u8]) -> Result<ExchangeFrame, CodecError> {
+    decode_exchange_traced(buf).map(|(frame, _)| frame)
+}
+
+/// [`decode_exchange`] that also returns the header's exchange trace
+/// id (0 for untraced and for legacy version-1 frames).
+pub fn decode_exchange_traced(buf: &[u8]) -> Result<(ExchangeFrame, u64), CodecError> {
     let mut r = Reader::new(buf);
     if r.take(4)? != EXCHANGE_MAGIC {
         return Err(CodecError::BadMagic);
     }
     let version = r.u8()?;
-    if version != VERSION {
+    if version != VERSION && version != LEGACY_VERSION {
         return Err(CodecError::BadVersion(version));
     }
     let kind = r.u8()?;
     let generation = r.u64()?;
-    match kind {
+    let trace_id = if version == VERSION { r.u64()? } else { 0 };
+    let frame = match kind {
         1 => Ok(ExchangeFrame::Push {
             generation,
             state: decode_peer_state_from(&mut r)?,
@@ -856,7 +957,8 @@ pub fn decode_exchange(buf: &[u8]) -> Result<ExchangeFrame, CodecError> {
             addr: decode_socket_addr_from(&mut r)?,
         }),
         other => Err(CodecError::BadKind(other)),
-    }
+    }?;
+    Ok((frame, trace_id))
 }
 
 /// Wire size of a peer state without materializing the frame (used for
@@ -1179,8 +1281,95 @@ mod tests {
                 exchange_frame_fingerprint(&frame),
                 Some(peer_state_fingerprint(&st))
             );
+            // The fingerprint covers the payload only, so tracing the
+            // frame must not move it (deltas stay applicable across
+            // traced/untraced pairs).
+            let traced = encode_exchange_push_traced(9, 0xDEAD_BEEF, &st);
+            assert_eq!(
+                exchange_frame_fingerprint(&traced),
+                Some(peer_state_fingerprint(&st))
+            );
+            // And a *legacy* v1 frame of the same state agrees too —
+            // the 14-byte header is skipped via the version byte.
+            let legacy = legacy_frame(&frame);
+            assert_eq!(
+                exchange_frame_fingerprint(&legacy),
+                Some(peer_state_fingerprint(&st))
+            );
         }
-        assert_eq!(exchange_frame_fingerprint(&[0u8; 14]), None);
+        // Headers with no payload — and unknown versions, whose payload
+        // offset cannot be known — have no fingerprint.
+        assert_eq!(exchange_frame_fingerprint(&[0u8; 22]), None);
+        let mut empty = [0u8; 22];
+        empty[4] = VERSION;
+        assert_eq!(exchange_frame_fingerprint(&empty), None);
+        let mut empty = [0u8; 14];
+        empty[4] = LEGACY_VERSION;
+        assert_eq!(exchange_frame_fingerprint(&empty), None);
+    }
+
+    /// Rebuild a v2 exchange frame as its version-1 equivalent: same
+    /// magic/kind/generation, no trace-id field.
+    fn legacy_frame(v2: &[u8]) -> Vec<u8> {
+        assert_eq!(v2[4], VERSION);
+        let mut out = Vec::with_capacity(v2.len() - 8);
+        out.extend_from_slice(&v2[..4]);
+        out.push(LEGACY_VERSION);
+        out.extend_from_slice(&v2[5..14]); // kind + generation
+        out.extend_from_slice(&v2[22..]); // payload (trace id dropped)
+        out
+    }
+
+    #[test]
+    fn traced_frames_roundtrip_and_legacy_v1_still_decodes() {
+        let st = PeerState::init(3, &[1.0, 2.5, 9.0], 0.01, 32).unwrap();
+        let push = encode_exchange_push_traced(7, 0x1234_5678_9ABC_DEF0, &st);
+        let (frame, tid) = decode_exchange_traced(&push).unwrap();
+        assert_eq!(tid, 0x1234_5678_9ABC_DEF0);
+        assert!(matches!(frame, ExchangeFrame::Push { generation: 7, .. }));
+
+        // Reply and reject echo the push's id.
+        let reply = encode_exchange_reply_traced(7, tid, &st);
+        assert_eq!(decode_exchange_traced(&reply).unwrap().1, tid);
+        let reject =
+            encode_exchange_reject_traced(7, tid, RejectReason::Busy);
+        let (frame, echoed) = decode_exchange_traced(&reject).unwrap();
+        assert_eq!(echoed, tid);
+        assert!(matches!(frame, ExchangeFrame::Reject { .. }));
+
+        // Delta frames carry the id too.
+        let fp = peer_state_fingerprint(&st);
+        let delta = delta_payload(&st, fp, &st).unwrap();
+        for buf in [
+            encode_exchange_delta_push_traced(7, tid, &delta),
+            encode_exchange_delta_reply_traced(7, tid, &delta),
+        ] {
+            assert_eq!(decode_exchange_traced(&buf).unwrap().1, tid);
+        }
+
+        // Untraced encoders stamp 0.
+        assert_eq!(
+            decode_exchange_traced(&encode_exchange_push(7, &st)).unwrap().1,
+            0
+        );
+
+        // A version-1 peer's frame still decodes, with an implied id of
+        // 0 — rolling upgrades keep exchanging.
+        let legacy = legacy_frame(&push);
+        let (frame, tid) = decode_exchange_traced(&legacy).unwrap();
+        assert_eq!(tid, 0);
+        match frame {
+            ExchangeFrame::Push { generation, state } => {
+                assert_eq!(generation, 7);
+                assert_eq!(state.id, 3);
+                assert_eq!(state.n_tilde, 3.0);
+            }
+            other => panic!("wrong frame decoded: {other:?}"),
+        }
+        // Truncation still lands everywhere on the legacy layout.
+        for cut in 0..legacy.len() {
+            assert!(decode_exchange(&legacy[..cut]).is_err(), "cut {cut}");
+        }
     }
 
     fn sample_table() -> MemberTable {
@@ -1257,21 +1446,21 @@ mod tests {
         }
         // Unknown status code.
         let mut bad = good.clone();
-        bad[14 + 8 + 16] = 9; // first entry's status byte
+        bad[22 + 8 + 16] = 9; // first entry's status byte
         assert!(matches!(
             decode_exchange(&bad).unwrap_err(),
             CodecError::BadParams(_)
         ));
         // Unknown address family.
         let mut bad = good.clone();
-        bad[14 + 8 + 17] = 5; // first entry's family byte
+        bad[22 + 8 + 17] = 5; // first entry's family byte
         assert!(matches!(
             decode_exchange(&bad).unwrap_err(),
             CodecError::BadParams(_)
         ));
         // Hostile entry count: refused before any allocation.
         let mut bad = good;
-        bad[14..22].copy_from_slice(&u64::MAX.to_le_bytes());
+        bad[22..30].copy_from_slice(&u64::MAX.to_le_bytes());
         assert!(matches!(
             decode_exchange(&bad).unwrap_err(),
             CodecError::Truncated(_)

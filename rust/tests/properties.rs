@@ -938,6 +938,237 @@ fn prop_q_mass_exactly_one_under_churn() {
     );
 }
 
+/// A short string over a hostile alphabet — quotes, backslashes,
+/// newlines, a C0 control, multi-byte UTF-8, and JSON/Prometheus
+/// structural characters — for the encoder/escaping properties below.
+fn nasty_string(r: &mut duddsketch::rng::Xoshiro256pp) -> String {
+    const POOL: [char; 14] = [
+        'a', 'Z', '7', '"', '\\', '\n', '\t', '\u{1}', 'µ', ':', '=', ',', '{', '}',
+    ];
+    (0..r.index(12)).map(|_| POOL[r.index(POOL.len())]).collect()
+}
+
+/// Invariant (ISSUE 10): the hand-rolled JSONL event encoder
+/// round-trips through the crate's own flat-JSON parser for arbitrary
+/// field values — including node/peer strings full of quotes,
+/// backslashes, newlines, and control characters — and every encoded
+/// event is exactly one line. `dudd-observe` joins event logs through
+/// exactly this parser, so encoder/parser drift would silently break
+/// causal joins.
+#[test]
+#[allow(clippy::field_reassign_with_default)]
+fn prop_event_log_encoder_roundtrips() {
+    use duddsketch::obs::{
+        encode_exchange_event, encode_membership_event, encode_round_event, parse_flat_json,
+        ExchangeSpan, RoundPhase, RoundTrace,
+    };
+    use duddsketch::rng::Xoshiro256pp;
+    use std::time::Duration;
+
+    const KINDS: [&str; 4] = ["full", "delta", "local", "unknown"];
+    const OUTCOMES: [&str; 4] = ["ok", "reject:busy", "reject:stale_generation", "error:io"];
+    const CAUSES: [Option<&'static str>; 4] = [
+        None,
+        Some("epoch_advance"),
+        Some("view_change"),
+        Some("generation_catch_up"),
+    ];
+
+    forall(
+        "event-log-roundtrip",
+        SEED + 40,
+        64,
+        |r: &mut Xoshiro256pp| {
+            let node = nasty_string(r);
+            let peer = nasty_string(r);
+            let nums: Vec<u64> = (0..12).map(|_| r.index(1 << 30) as u64).collect();
+            let picks = (r.index(KINDS.len()), r.index(OUTCOMES.len()), r.index(CAUSES.len()));
+            let trace_id = 1 + ((nums[0] << 33) | (nums[1] << 2));
+            (node, peer, nums, picks, trace_id, r.chance(0.5))
+        },
+        |(node, peer, nums, (ki, oi, ci), trace_id, reseeded)| {
+            let expect_str = |m: &std::collections::BTreeMap<String, duddsketch::obs::JsonValue>,
+                              key: &str,
+                              want: &str|
+             -> Result<(), String> {
+                match m.get(key).and_then(|v| v.as_str()) {
+                    Some(got) if got == want => Ok(()),
+                    other => Err(format!("{key}: {other:?} != {want:?}")),
+                }
+            };
+            let expect_num = |m: &std::collections::BTreeMap<String, duddsketch::obs::JsonValue>,
+                              key: &str,
+                              want: u64|
+             -> Result<(), String> {
+                match m.get(key).and_then(|v| v.as_u64()) {
+                    Some(got) if got == want => Ok(()),
+                    other => Err(format!("{key}: {other:?} != {want}")),
+                }
+            };
+
+            // -- exchange event: the causal-join record --------------------
+            let span = ExchangeSpan {
+                trace_id: *trace_id,
+                initiator: *reseeded,
+                peer: peer.clone(),
+                generation: nums[2],
+                kind: KINDS[*ki],
+                bytes: nums[3] as usize,
+                outcome: OUTCOMES[*oi],
+                connect: Duration::from_micros(nums[4]),
+                push: Duration::from_micros(nums[5]),
+                reply: Duration::from_micros(nums[6]),
+                commit: Duration::from_micros(nums[7]),
+            };
+            let line = encode_exchange_event(node, nums[8], nums[9], &span);
+            if line.contains('\n') {
+                return Err(format!("exchange event is not one line: {line:?}"));
+            }
+            let m = parse_flat_json(&line).ok_or_else(|| format!("unparseable: {line:?}"))?;
+            expect_str(&m, "event", "exchange")?;
+            expect_str(&m, "node", node)?;
+            expect_str(&m, "peer", peer)?;
+            expect_str(&m, "trace_id", &trace_id.to_string())?;
+            expect_str(&m, "role", if *reseeded { "initiator" } else { "server" })?;
+            expect_str(&m, "kind", KINDS[*ki])?;
+            expect_str(&m, "outcome", OUTCOMES[*oi])?;
+            expect_num(&m, "t_ms", nums[8])?;
+            expect_num(&m, "round", nums[9])?;
+            expect_num(&m, "generation", nums[2])?;
+            expect_num(&m, "bytes", nums[3])?;
+            expect_num(&m, "connect_us", nums[4])?;
+            expect_num(&m, "push_us", nums[5])?;
+            expect_num(&m, "reply_us", nums[6])?;
+            expect_num(&m, "commit_us", nums[7])?;
+            if trace_id.to_string().parse::<u64>() != Ok(*trace_id) {
+                return Err("trace id does not survive the decimal string".into());
+            }
+
+            // -- round event -----------------------------------------------
+            let mut trace = RoundTrace::default();
+            trace.round = nums[9];
+            trace.generation = nums[2];
+            trace.reseeded = *reseeded;
+            trace.restart_cause = CAUSES[*ci];
+            trace.exchanges = nums[10] as usize;
+            trace.failed = nums[11] as usize;
+            trace.bytes = nums[3] as usize;
+            trace.total = Duration::from_micros(nums[4]);
+            let trace = trace
+                .with_phase(RoundPhase::Refresh, Duration::from_micros(nums[5]))
+                .with_phase(RoundPhase::Exchange, Duration::from_micros(nums[6]));
+            let line = encode_round_event(node, nums[8], &trace);
+            if line.contains('\n') {
+                return Err(format!("round event is not one line: {line:?}"));
+            }
+            let m = parse_flat_json(&line).ok_or_else(|| format!("unparseable: {line:?}"))?;
+            expect_str(&m, "event", "round")?;
+            expect_str(&m, "node", node)?;
+            match (CAUSES[*ci], m.get("restart_cause")) {
+                (Some(c), Some(v)) if v.as_str() == Some(c) => {}
+                (None, Some(duddsketch::obs::JsonValue::Null)) => {}
+                (want, got) => return Err(format!("restart_cause: {got:?} != {want:?}")),
+            }
+            expect_num(&m, "round", nums[9])?;
+            expect_num(&m, "generation", nums[2])?;
+            expect_num(&m, "exchanges", nums[10])?;
+            expect_num(&m, "failed", nums[11])?;
+            expect_num(&m, "bytes", nums[3])?;
+            expect_num(&m, "total_us", nums[4])?;
+            expect_num(&m, "refresh_us", nums[5])?;
+            expect_num(&m, "exchange_us", nums[6])?;
+            expect_num(&m, "membership_us", 0)?;
+            match m.get("reseeded") {
+                Some(duddsketch::obs::JsonValue::Bool(b)) if b == reseeded => {}
+                other => return Err(format!("reseeded: {other:?} != {reseeded}")),
+            }
+
+            // -- membership event ------------------------------------------
+            let line = encode_membership_event(node, nums[8], nums[9], nums[10], nums[11], nums[2]);
+            if line.contains('\n') {
+                return Err(format!("membership event is not one line: {line:?}"));
+            }
+            let m = parse_flat_json(&line).ok_or_else(|| format!("unparseable: {line:?}"))?;
+            expect_str(&m, "event", "membership")?;
+            expect_str(&m, "node", node)?;
+            expect_num(&m, "joined", nums[10])?;
+            expect_num(&m, "suspected", nums[11])?;
+            expect_num(&m, "died", nums[2])?;
+            Ok(())
+        },
+    );
+}
+
+/// Invariant (ISSUE 10): Prometheus label values render escaped per the
+/// text-exposition spec — backslash → `\\`, double quote → `\"`,
+/// newline → `\n` — so a hostile value never splits a sample line or
+/// unbalances its quotes, and the spec unescape recovers the original
+/// value exactly.
+#[test]
+fn prop_prometheus_label_values_escape_per_spec() {
+    use duddsketch::obs::MetricsRegistry;
+
+    forall(
+        "label-escape",
+        SEED + 41,
+        64,
+        nasty_string,
+        |value| {
+            let reg = MetricsRegistry::new();
+            let c = reg
+                .counter_with(
+                    "t_escape_total",
+                    "label escape fixture",
+                    &[("path", value.as_str())],
+                )
+                .map_err(|e| e.to_string())?;
+            c.inc();
+            let text = reg.render();
+
+            // However hostile the value, the family renders exactly one
+            // sample line (newlines must not split it).
+            let samples: Vec<&str> = text
+                .lines()
+                .filter(|l| l.starts_with("t_escape_total"))
+                .collect();
+            if samples.len() != 1 {
+                return Err(format!("expected 1 sample line, got {samples:?}"));
+            }
+            let inner = samples[0]
+                .strip_prefix("t_escape_total{path=\"")
+                .ok_or_else(|| format!("malformed sample line: {:?}", samples[0]))?;
+            let end = inner
+                .rfind("\"} ")
+                .ok_or_else(|| format!("unterminated label value: {inner:?}"))?;
+            let escaped = &inner[..end];
+
+            // Spec unescape: \\, \", \n are the only escapes; a raw
+            // quote or newline inside the value is a rendering bug.
+            let mut un = String::new();
+            let mut it = escaped.chars();
+            while let Some(ch) = it.next() {
+                if ch == '\\' {
+                    match it.next() {
+                        Some('\\') => un.push('\\'),
+                        Some('"') => un.push('"'),
+                        Some('n') => un.push('\n'),
+                        other => return Err(format!("stray escape \\{other:?} in {escaped:?}")),
+                    }
+                } else {
+                    if ch == '"' || ch == '\n' {
+                        return Err(format!("unescaped {ch:?} in {escaped:?}"));
+                    }
+                    un.push(ch);
+                }
+            }
+            if un != **value {
+                return Err(format!("unescape mismatch: {un:?} != {value:?}"));
+            }
+            Ok(())
+        },
+    );
+}
+
 /// Invariant (ISSUE 4): no corrupted or stale-baseline delta frame slips
 /// through. Truncation at any offset fails to decode (so the transport
 /// cancels the exchange, §7.2), and a frame whose baseline fingerprint

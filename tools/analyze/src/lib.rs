@@ -11,6 +11,9 @@
 //! * `spec-sync` — codec enums, protocol version, restart-cause codes,
 //!   and config keys vs the PROTOCOL.md tables, both directions
 //!   ([`spec`]);
+//! * `metrics-sync` — `dudd_*` metric families referenced in
+//!   `rust/src/obs/` vs the OBSERVABILITY.md catalogue tables, both
+//!   directions ([`metrics`]);
 //! * `unsafe-audit` — `unsafe` pinned to `service/swap.rs`,
 //!   `#![forbid(unsafe_code)]` elsewhere, lock poisoning policy routed
 //!   through `lock_*` helpers ([`unsafe_audit`]);
@@ -28,6 +31,7 @@ pub mod counters;
 pub mod determinism;
 pub mod lexer;
 pub mod locks;
+pub mod metrics;
 pub mod report;
 pub mod spec;
 pub mod unsafe_audit;
@@ -43,6 +47,7 @@ pub const RULES: &[&str] = &[
     "lock-order",
     "determinism",
     "spec-sync",
+    "metrics-sync",
     "unsafe-audit",
     "counter-audit",
 ];
@@ -88,16 +93,11 @@ fn load_allowlist(root: &Path) -> Allowlist {
     }
 }
 
-fn read_doc(root: &Path, rel: &str, findings: &mut Vec<Finding>) -> String {
+fn read_doc(root: &Path, rel: &str, rule: &str, findings: &mut Vec<Finding>) -> String {
     match fs::read_to_string(root.join(rel.replace('/', std::path::MAIN_SEPARATOR_STR))) {
         Ok(text) => text,
         Err(e) => {
-            findings.push(Finding::new(
-                "spec-sync",
-                rel,
-                0,
-                format!("cannot read: {e}"),
-            ));
+            findings.push(Finding::new(rule, rel, 0, format!("cannot read: {e}")));
             String::new()
         }
     }
@@ -130,15 +130,26 @@ pub fn run_rule(rule: &str, root: &Path, sources: &[SourceFile]) -> io::Result<V
         }
         "spec-sync" => {
             let inputs = spec::SpecInputs {
-                codec: read_doc(root, "rust/src/sketch/codec.rs", &mut findings),
-                membership: read_doc(root, "rust/src/service/membership.rs", &mut findings),
-                gossip_loop: read_doc(root, "rust/src/service/gossip_loop.rs", &mut findings),
-                config: read_doc(root, "rust/src/config.rs", &mut findings),
-                protocol_md: read_doc(root, "docs/PROTOCOL.md", &mut findings),
-                readme_md: read_doc(root, "README.md", &mut findings),
+                codec: read_doc(root, "rust/src/sketch/codec.rs", rule, &mut findings),
+                membership: read_doc(root, "rust/src/service/membership.rs", rule, &mut findings),
+                gossip_loop: read_doc(root, "rust/src/service/gossip_loop.rs", rule, &mut findings),
+                config: read_doc(root, "rust/src/config.rs", rule, &mut findings),
+                protocol_md: read_doc(root, "docs/PROTOCOL.md", rule, &mut findings),
+                readme_md: read_doc(root, "README.md", rule, &mut findings),
             };
             if findings.is_empty() {
                 findings.extend(spec::check(&inputs));
+            }
+        }
+        "metrics-sync" => {
+            let md = read_doc(root, "docs/OBSERVABILITY.md", rule, &mut findings);
+            if findings.is_empty() {
+                let obs: Vec<(String, String)> = sources
+                    .iter()
+                    .filter(|f| f.rel.starts_with("rust/src/obs/"))
+                    .map(|f| (f.rel.clone(), f.text.clone()))
+                    .collect();
+                findings.extend(metrics::check(&obs, &md));
             }
         }
         other => {

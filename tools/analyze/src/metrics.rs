@@ -1,0 +1,269 @@
+//! Metric-catalogue cross-checker (`metrics-sync`).
+//!
+//! The observability plane registers every `dudd_*` family in
+//! `rust/src/obs/` (the `NodeMetrics` constructor plus the labelled
+//! `RejectCounters`/`RestartCounters` bundles), and
+//! `docs/OBSERVABILITY.md` carries the operator-facing catalogue as
+//! `| Metric | Kind | Meaning |` tables. Both sides drift silently: a
+//! family added without a catalogue row is invisible to operators, and
+//! a row whose family was renamed documents a ghost. This rule parses
+//! both sides and diffs them bidirectionally, exactly as `spec-sync`
+//! does for the wire tables:
+//!
+//! * **code side** — every string literal naming a `dudd_*` family in
+//!   production (non-test) code under `rust/src/obs/`. That covers the
+//!   registry registration calls, the labelled counter bundles, and the
+//!   `dudd-observe` scraper's reads — a retired family the observatory
+//!   still looks for is drift too. Label selectors are stripped
+//!   (`dudd_rejects_total{reason="busy"}` → `dudd_rejects_total`) and
+//!   strings that are not well-formed family names (help text, `expect`
+//!   messages) are ignored.
+//! * **doc side** — backticked names from the first cell of every
+//!   markdown table whose first header cell is `Metric`.
+
+use crate::lexer::{strip_tests, tokenize, Kind};
+use crate::report::Finding;
+use std::collections::BTreeMap;
+
+/// True for a well-formed Prometheus family name in this crate's
+/// convention: `dudd_` plus at least one `[a-z0-9_]` character.
+fn is_family_name(name: &str) -> bool {
+    name.len() > "dudd_".len()
+        && name
+            .chars()
+            .all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '_')
+}
+
+/// `dudd_*` family names referenced by production code in `text`,
+/// mapped to the first line each appears on.
+pub fn code_metrics(text: &str) -> BTreeMap<String, u32> {
+    let mut out = BTreeMap::new();
+    for tok in strip_tests(tokenize(text)) {
+        if tok.kind != Kind::Str || !tok.text.starts_with("dudd_") {
+            continue;
+        }
+        let name = tok.text.split('{').next().unwrap_or("");
+        if is_family_name(name) {
+            out.entry(name.to_string()).or_insert(tok.line);
+        }
+    }
+    out
+}
+
+/// Catalogue rows of `md`: backticked first-cell names of every table
+/// headed `Metric | …`, label selectors stripped, mapped to their
+/// 1-based line.
+pub fn doc_metrics(md: &str) -> BTreeMap<String, u32> {
+    let mut out = BTreeMap::new();
+    let mut grab = false;
+    for (idx, raw) in md.lines().enumerate() {
+        let line = raw.trim();
+        if !line.starts_with('|') {
+            grab = false;
+            continue;
+        }
+        let cells: Vec<&str> = line.trim_matches('|').split('|').map(str::trim).collect();
+        let first = cells.first().copied().unwrap_or("");
+        if first.eq_ignore_ascii_case("metric") {
+            grab = true;
+            continue;
+        }
+        if !grab || first.chars().all(|c| "-: ".contains(c)) {
+            continue;
+        }
+        let Some(ticked) = backticked(first) else {
+            continue;
+        };
+        let name = ticked.split('{').next().unwrap_or("").to_string();
+        if name.starts_with("dudd_") {
+            out.entry(name).or_insert(idx as u32 + 1);
+        }
+    }
+    out
+}
+
+fn backticked(cell: &str) -> Option<String> {
+    let start = cell.find('`')? + 1;
+    let end = start + cell[start..].find('`')?;
+    Some(cell[start..end].to_string())
+}
+
+/// Diff both directions. `sources` are the `rust/src/obs/` files as
+/// (repo-relative path, text); `md` is `docs/OBSERVABILITY.md`.
+pub fn check(sources: &[(String, String)], md: &str) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    let mut code: BTreeMap<String, (&str, u32)> = BTreeMap::new();
+    for (rel, text) in sources {
+        for (name, line) in code_metrics(text) {
+            code.entry(name).or_insert((rel.as_str(), line));
+        }
+    }
+    let doc = doc_metrics(md);
+    // An empty side means the extraction idiom broke, not that the
+    // catalogue emptied — fail loudly instead of passing vacuously.
+    if code.is_empty() {
+        findings.push(Finding::new(
+            "metrics-sync",
+            "rust/src/obs/mod.rs",
+            0,
+            "could not extract any `dudd_*` family references from rust/src/obs/",
+        ));
+    }
+    if doc.is_empty() {
+        findings.push(Finding::new(
+            "metrics-sync",
+            "docs/OBSERVABILITY.md",
+            0,
+            "could not find any `Metric | …` catalogue table rows",
+        ));
+    }
+    if !findings.is_empty() {
+        return findings;
+    }
+    for (name, (rel, line)) in &code {
+        if !doc.contains_key(name) {
+            findings.push(Finding::new(
+                "metrics-sync",
+                rel,
+                *line,
+                format!(
+                    "metric family `{name}` is referenced in code but missing \
+                     from the docs/OBSERVABILITY.md catalogue"
+                ),
+            ));
+        }
+    }
+    for (name, line) in &doc {
+        if !code.contains_key(name) {
+            findings.push(Finding::new(
+                "metrics-sync",
+                "docs/OBSERVABILITY.md",
+                *line,
+                format!(
+                    "metric family `{name}` is in the catalogue but never \
+                     referenced in rust/src/obs/"
+                ),
+            ));
+        }
+    }
+    findings
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const OBS_SRC: &str = r#"
+pub fn register(r: &Registry) -> Result<()> {
+    r.counter("dudd_rounds_total", "Gossip rounds executed.")?;
+    r.gauge("dudd_drift", "Largest relative probe drift.")?;
+    r.histogram_with(
+        "dudd_round_phase_seconds",
+        "Wall clock per phase.",
+        &[("phase", "exchange")],
+    )?;
+    let c = |cause: &str| r.counter_with("dudd_restarts_total", "Restarts.", &[("cause", cause)]);
+    c("view_change").expect("dudd_* families are statically valid");
+    Ok(())
+}
+
+pub fn read(m: &Map) -> f64 {
+    m.get("dudd_exchange_rtt_seconds{quantile=\"0.99\"}")
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn t() {
+        let _ = "dudd_test_only_total";
+    }
+}
+"#;
+
+    const CATALOG_MD: &str = r#"
+## Catalogue
+
+| Metric | Kind | Meaning |
+|---|---|---|
+| `dudd_rounds_total` | counter | Rounds executed |
+| `dudd_drift` | gauge | Probe drift |
+| `dudd_round_phase_seconds{phase=…}` | summary | Per-phase wall clock |
+
+### More
+
+| Metric | Kind | Meaning |
+|---|---|---|
+| `dudd_restarts_total{cause=…}` | counter | Restarts by cause |
+| `dudd_exchange_rtt_seconds` | summary | Exchange RTT |
+"#;
+
+    fn sources() -> Vec<(String, String)> {
+        vec![("rust/src/obs/fixture.rs".to_string(), OBS_SRC.to_string())]
+    }
+
+    #[test]
+    fn code_extraction_strips_labels_and_skips_tests_and_prose() {
+        let code = code_metrics(OBS_SRC);
+        let names: Vec<&str> = code.keys().map(String::as_str).collect();
+        assert_eq!(
+            names,
+            [
+                "dudd_drift",
+                "dudd_exchange_rtt_seconds",
+                "dudd_restarts_total",
+                "dudd_round_phase_seconds",
+                "dudd_rounds_total",
+            ]
+        );
+    }
+
+    #[test]
+    fn doc_extraction_reads_every_metric_table() {
+        let doc = doc_metrics(CATALOG_MD);
+        assert_eq!(doc.len(), 5);
+        assert!(doc.contains_key("dudd_restarts_total"));
+        assert!(doc.contains_key("dudd_round_phase_seconds"));
+    }
+
+    #[test]
+    fn in_sync_catalogue_passes() {
+        let f = check(&sources(), CATALOG_MD);
+        assert!(f.is_empty(), "{f:?}");
+    }
+
+    #[test]
+    fn both_drift_directions_flagged() {
+        let md = CATALOG_MD
+            .replace("| `dudd_drift` | gauge | Probe drift |\n", "")
+            .replace(
+                "| `dudd_exchange_rtt_seconds` | summary | Exchange RTT |",
+                "| `dudd_exchange_rtt_seconds` | summary | Exchange RTT |\n\
+                 | `dudd_ghost_total` | counter | Removed long ago |",
+            );
+        let f = check(&sources(), &md);
+        assert!(
+            f.iter()
+                .any(|x| x.message.contains("`dudd_drift` is referenced in code")),
+            "{f:?}"
+        );
+        assert!(
+            f.iter()
+                .any(|x| x.message.contains("`dudd_ghost_total` is in the catalogue")),
+            "{f:?}"
+        );
+    }
+
+    #[test]
+    fn empty_sides_fail_loudly() {
+        let f = check(&[], CATALOG_MD);
+        assert!(
+            f.iter().any(|x| x.message.contains("could not extract")),
+            "{f:?}"
+        );
+        let f = check(&sources(), "no tables here");
+        assert!(
+            f.iter().any(|x| x.message.contains("could not find")),
+            "{f:?}"
+        );
+    }
+}

@@ -1,0 +1,31 @@
+//! `metrics-sync` code-side fixture: a miniature obs layer exercising
+//! every reference shape the rule must understand — plain registrations,
+//! labelled registrations, a labelled-bundle helper whose family name
+//! arrives as a parameter at the call site, a scraper-style read with a
+//! label selector baked into the literal, and a test-only family that
+//! must never reach the catalogue.
+
+pub fn register(r: &Registry) -> Result<()> {
+    r.counter("dudd_rounds_total", "Gossip rounds executed.")?;
+    r.gauge("dudd_drift", "Largest relative probe drift.")?;
+    r.histogram_with(
+        "dudd_round_phase_seconds",
+        "Wall clock per gossip-round phase.",
+        &[("phase", "exchange")],
+    )?;
+    RestartCounters::register(r, "dudd_restarts_total", "Protocol restarts by cause.")?;
+    Ok(())
+}
+
+pub fn read_rtt(m: &Exposition) -> f64 {
+    m.get("dudd_exchange_rtt_seconds{quantile=\"0.99\"}")
+        .expect("dudd_* families are statically valid")
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn test_only_families_are_ignored() {
+        let _ = "dudd_test_only_total";
+    }
+}

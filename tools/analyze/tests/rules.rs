@@ -3,7 +3,7 @@
 //! real `rust/src/` tree as clean.
 
 use dudd_analyze::allow::Allowlist;
-use dudd_analyze::{counters, determinism, locks, report, spec, unsafe_audit};
+use dudd_analyze::{counters, determinism, locks, metrics, report, spec, unsafe_audit};
 use dudd_analyze::{run_rules, RULES};
 use std::path::Path;
 
@@ -175,6 +175,44 @@ fn spec_fixture_drift_flagged() {
         f.iter().any(|x| {
             x.message
                 .contains("restart cause `GenerationCatchUp` (= 3) is implemented but missing")
+        }),
+        "{f:?}"
+    );
+}
+
+// ---- metrics-sync ----
+
+fn fixture_metrics(md: &str) -> Vec<dudd_analyze::report::Finding> {
+    let sources = vec![(
+        "rust/src/obs/fixture.rs".to_string(),
+        include_str!("fixtures/metrics_obs.rs").to_string(),
+    )];
+    metrics::check(&sources, md)
+}
+
+#[test]
+fn metrics_fixture_in_sync_passes() {
+    let f = fixture_metrics(include_str!("fixtures/metrics_catalog.md"));
+    assert!(f.is_empty(), "{f:?}");
+}
+
+#[test]
+fn metrics_fixture_drift_flagged_both_directions() {
+    let f = fixture_metrics(include_str!("fixtures/metrics_catalog_drift.md"));
+    assert_eq!(f.len(), 2, "{f:?}");
+    // seeded drift 1: referenced in code, no catalogue row
+    assert!(
+        f.iter().any(|x| {
+            x.path == "rust/src/obs/fixture.rs"
+                && x.message.contains("`dudd_drift` is referenced in code")
+        }),
+        "{f:?}"
+    );
+    // seeded drift 2: catalogue row, no code reference
+    assert!(
+        f.iter().any(|x| {
+            x.path == "docs/OBSERVABILITY.md"
+                && x.message.contains("`dudd_ghost_total` is in the catalogue")
         }),
         "{f:?}"
     );
